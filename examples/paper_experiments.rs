@@ -1,0 +1,35 @@
+//! Regenerate every figure and table in the paper's evaluation section and
+//! print paper-vs-measured shape checks.
+//!
+//! Run with: `cargo run --release --example paper_experiments [-- <id>]`
+
+fn main() {
+    let arg = std::env::args().nth(1);
+    let ids: Vec<&str> = match arg.as_deref() {
+        Some(id) => vec![spotcloud::experiments::ALL
+            .iter()
+            .copied()
+            .find(|&x| x == id)
+            .unwrap_or_else(|| {
+                eprintln!(
+                    "unknown experiment {id:?}; available: {}",
+                    spotcloud::experiments::ALL.join(", ")
+                );
+                std::process::exit(2);
+            })],
+        None => spotcloud::experiments::ALL.to_vec(),
+    };
+
+    let mut all_ok = true;
+    for id in ids {
+        let report = spotcloud::experiments::run_by_id(id, 1).expect("known id");
+        println!("{}", report.render());
+        all_ok &= report.check();
+    }
+    if all_ok {
+        println!("ALL PAPER-SHAPE CHECKS PASSED");
+    } else {
+        println!("SOME PAPER-SHAPE CHECKS FAILED");
+        std::process::exit(1);
+    }
+}

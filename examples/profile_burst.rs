@@ -1,0 +1,25 @@
+//! Profiling driver for the heaviest simulation workload (the 4096-job
+//! individual burst from Fig 2c), used by the perf pass (EXPERIMENTS.md):
+//!
+//! ```text
+//! cargo build --release --example profile_burst
+//! perf record -g --call-graph dwarf ./target/release/examples/profile_burst
+//! perf report --stdio --no-children
+//! ```
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::job::{JobSpec, JobType, UserId};
+use spotcloud::sched::{Scheduler, SchedulerConfig};
+use spotcloud::sim::{SchedCosts, SimTime};
+fn main() {
+    for _ in 0..200 {
+        let mut s = Scheduler::new(
+            topology::txgreen_reservation(),
+            SchedulerConfig::baseline(SchedCosts::production(), PartitionLayout::Dual),
+        );
+        let ids = s.submit_burst(
+            (0..4096).map(|_| JobSpec::interactive(UserId(1), JobType::Individual, 1)).collect(),
+        );
+        s.run_until_dispatched(&ids, SimTime::from_secs(7200));
+        std::hint::black_box(s.stats().dispatches);
+    }
+}

@@ -1,0 +1,67 @@
+"""AOT pipeline: lower the L2 model to HLO **text** for the Rust runtime.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage (from the Makefile):  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(out_dir: str) -> dict:
+    """Lower sched_step and write the artifact + shape metadata.
+
+    Returns a manifest dict {filename: path}.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    lowered = jax.jit(model.sched_step).lower(*model.example_args())
+    hlo = to_hlo_text(lowered)
+    manifest = {}
+
+    hlo_path = os.path.join(out_dir, "sched_step.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    manifest["sched_step.hlo.txt"] = hlo_path
+
+    # Shape contract consumed by rust/src/runtime/accel.rs at load time.
+    meta_path = os.path.join(out_dir, "sched_step.meta")
+    with open(meta_path, "w") as f:
+        f.write(
+            "jobs={}\nfactors={}\nspots={}\nnodes={}\n".format(
+                model.JOBS, model.FACTORS, model.SPOTS, model.NODES
+            )
+        )
+    manifest["sched_step.meta"] = meta_path
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    manifest = build_artifacts(args.out)
+    for name, path in sorted(manifest.items()):
+        print(f"wrote {name} -> {path} ({os.path.getsize(path)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: job x node feasibility counting.
+
+For each pending job, count the nodes whose free cores satisfy the job's
+per-node requirement:
+
+    counts[j] = sum_m (free[m] >= req[j])
+
+The scheduler uses the counts to short-circuit allocation attempts for jobs
+with zero feasible nodes. Tiled over the job axis; the free-core vector
+stays resident in VMEM across grid steps (1024 x 4B = 4 KiB), and each grid
+step materializes a (BLOCK_JOBS, NODES) compare block (256 x 1024 = 256 KiB
+as i1/f32 intermediates) — comfortably inside a TPU core's ~16 MiB VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_JOBS = 256
+
+
+def _fit_kernel(free_ref, req_ref, out_ref):
+    free = free_ref[...]  # (M,)
+    req = req_ref[...]  # (B,)
+    out_ref[...] = jnp.sum(
+        (free[None, :] >= req[:, None]).astype(jnp.int32), axis=1
+    )
+
+
+@jax.jit
+def fit_counts(free, reqs):
+    """Count feasible nodes per job.
+
+    Args:
+      free: f32[M] free cores per node (0 for busy/padding nodes).
+      reqs: f32[N] per-node core requirement per job (padding jobs should
+        carry a requirement larger than any node, e.g. 1e9, so their count
+        is 0).
+
+    Returns:
+      i32[N] feasible-node counts.
+    """
+    (m,) = free.shape
+    (n,) = reqs.shape
+    block = min(BLOCK_JOBS, n)
+    pad = (-n) % block
+    if pad:
+        reqs = jnp.pad(reqs, (0, pad), constant_values=jnp.float32(1e18))
+    padded_n = n + pad
+    grid = (padded_n // block,)
+    out = pl.pallas_call(
+        _fit_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded_n,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(free.astype(jnp.float32), reqs.astype(jnp.float32))
+    return out[:n]

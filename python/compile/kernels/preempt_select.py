@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: LIFO preemption victim selection.
+
+Given running spot jobs ordered **youngest-first** (the paper's
+"last-in, first-out" / Slurm ``preempt_youngest_first`` order) with their
+core counts, select the minimal prefix whose cumulative cores cover the
+demand:
+
+    mask[i] = (exclusive_cumsum(cores)[i] < demand) AND (cores[i] > 0)
+
+Padding entries carry ``cores == 0`` and are never selected. The whole
+vector fits one VMEM block (1024 x 4B = 4 KiB), so the kernel is a single
+grid step doing a scan + compare — on TPU this is a VPU prefix-sum.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _select_kernel(cores_ref, demand_ref, mask_ref):
+    cores = cores_ref[...]
+    demand = demand_ref[0]
+    cum = jnp.cumsum(cores)
+    exclusive = cum - cores
+    mask_ref[...] = ((exclusive < demand) & (cores > 0)).astype(jnp.int32)
+
+
+@jax.jit
+def select_victims(cores_youngest_first, demand):
+    """LIFO victim mask.
+
+    Args:
+      cores_youngest_first: f32[N] core counts of running spot jobs, ordered
+        youngest-first; zero entries are padding.
+      demand: f32[1] cores that must be freed.
+
+    Returns:
+      i32[N] 0/1 mask over the input order (1 = preempt).
+    """
+    (n,) = cores_youngest_first.shape
+    return pl.pallas_call(
+        _select_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(cores_youngest_first.astype(jnp.float32), demand.astype(jnp.float32))

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: batched multifactor priority scoring.
+
+Computes ``scores = sum(factors * weights, axis=1)`` over a padded
+``(JOBS, FACTORS)`` factor matrix — the per-cycle computation Slurm's
+priority/multifactor plugin does per pending job, batched.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the factor matrix tiles into
+VMEM as ``(BLOCK, FACTORS)`` f32 blocks (256x8x4B = 8 KiB per block) with the
+weight vector resident; the reduction is a VPU-friendly multiply-add. Pallas
+runs in ``interpret=True`` everywhere in this repo because the CPU PJRT
+client cannot execute Mosaic custom-calls; on a real TPU the same kernel
+lowers to Mosaic unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 256 keeps the block in VMEM with generous headroom.
+BLOCK_JOBS = 256
+
+
+def _priority_kernel(f_ref, w_ref, o_ref):
+    """One block: (B, F) factors x (F,) weights -> (B,) scores."""
+    f = f_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jnp.sum(f * w[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def priority_scores(factors, weights):
+    """Score every job: ``factors @ weights``.
+
+    Args:
+      factors: f32[N, F] factor matrix (N padded to a multiple of BLOCK_JOBS
+        by the caller or handled here by an internal pad).
+      weights: f32[F] weight vector.
+
+    Returns:
+      f32[N] scores.
+    """
+    n, f = factors.shape
+    block = min(BLOCK_JOBS, n)
+    pad = (-n) % block
+    if pad:
+        factors = jnp.pad(factors, ((0, pad), (0, 0)))
+    padded_n = n + pad
+    grid = (padded_n // block,)
+    out = pl.pallas_call(
+        _priority_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded_n,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(factors.astype(jnp.float32), weights.astype(jnp.float32))
+    return out[:n]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest (and hypothesis sweeps) assert
+``assert_allclose(kernel(x), ref(x))`` for every kernel over randomized
+shapes and values. They are also the semantic contract the Rust fallback
+(`rust/src/runtime/fallback.rs`) implements — the cargo equivalence test
+closes the loop.
+"""
+
+import jax.numpy as jnp
+
+
+def priority_scores_ref(factors, weights):
+    """scores = factors @ weights."""
+    return jnp.asarray(factors, jnp.float32) @ jnp.asarray(weights, jnp.float32)
+
+
+def select_victims_ref(cores_youngest_first, demand):
+    """Minimal LIFO prefix covering the demand (see preempt_select.py)."""
+    cores = jnp.asarray(cores_youngest_first, jnp.float32)
+    demand = jnp.asarray(demand, jnp.float32)
+    cum = jnp.cumsum(cores)
+    exclusive = cum - cores
+    return ((exclusive < demand[0]) & (cores > 0)).astype(jnp.int32)
+
+
+def fit_counts_ref(free, reqs):
+    """counts[j] = #{m : free[m] >= reqs[j]}."""
+    free = jnp.asarray(free, jnp.float32)
+    reqs = jnp.asarray(reqs, jnp.float32)
+    return jnp.sum(free[None, :] >= reqs[:, None], axis=1).astype(jnp.int32)

@@ -1,0 +1,63 @@
+"""L2 JAX model: the batched scheduling decision step.
+
+``sched_step`` composes the three L1 Pallas kernels into the computation the
+Rust scheduler offloads per cycle:
+
+  1. multifactor priority scores for the pending queue,
+  2. LIFO preemption victim selection over running spot jobs,
+  3. job x node feasibility counts.
+
+The function is jitted and AOT-lowered once (``aot.py``) to HLO text with
+**fixed shapes** (XLA requires static shapes); the Rust side pads its
+batches to these sizes. Keep the constants in sync with
+``rust/src/sched/priority.rs`` and ``rust/src/runtime/accel.rs``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fit, preempt_select, priority
+
+# ---- AOT shape contract (mirrored in rust/src/runtime/accel.rs) ----------
+JOBS = 1024  # max pending jobs scored per cycle
+FACTORS = 8  # priority factor width (rust sched::priority::N_FACTORS)
+SPOTS = 1024  # max running spot jobs considered for preemption
+NODES = 1024  # max nodes in the fit computation
+
+# Weight vector — must match rust sched::priority::WEIGHTS.
+# [qos, age, size, requeue, partition, fairshare, reserved, reserved]
+WEIGHTS = jnp.array([1000.0, 1.0, 0.1, 5.0, 10.0, -50.0, 0.0, 0.0], jnp.float32)
+
+
+def sched_step(factors, weights, spot_cores, demand, free, reqs):
+    """One batched scheduling decision step.
+
+    Args:
+      factors: f32[JOBS, FACTORS] priority factors (zero rows = padding).
+      weights: f32[FACTORS] priority weights.
+      spot_cores: f32[SPOTS] cores of running spot jobs, youngest-first
+        (zeros = padding).
+      demand: f32[1] cores the preemption must free (0 = no preemption).
+      free: f32[NODES] free cores per node (zeros = busy/padding).
+      reqs: f32[JOBS] per-node core requirement per job (1e18 = padding).
+
+    Returns:
+      (scores f32[JOBS], preempt_mask i32[SPOTS], fit_counts i32[JOBS])
+    """
+    scores = priority.priority_scores(factors, weights)
+    mask = preempt_select.select_victims(spot_cores, demand)
+    counts = fit.fit_counts(free, reqs)
+    return scores, mask, counts
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((JOBS, FACTORS), f32),
+        jax.ShapeDtypeStruct((FACTORS,), f32),
+        jax.ShapeDtypeStruct((SPOTS,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((NODES,), f32),
+        jax.ShapeDtypeStruct((JOBS,), f32),
+    )

@@ -1,0 +1,28 @@
+"""AOT pipeline smoke tests: HLO text artifact generation."""
+
+import os
+
+from compile import aot, model
+
+
+def test_build_artifacts(tmp_path):
+    manifest = aot.build_artifacts(str(tmp_path))
+    hlo_path = manifest["sched_step.hlo.txt"]
+    assert os.path.exists(hlo_path)
+    text = open(hlo_path).read()
+    # HLO text format, not a serialized proto.
+    assert text.lstrip().startswith("HloModule")
+    # The three outputs come back as one tuple.
+    assert "f32[%d,%d]" % (model.JOBS, model.FACTORS) in text
+
+    meta = open(manifest["sched_step.meta"]).read()
+    assert f"jobs={model.JOBS}" in meta
+    assert f"factors={model.FACTORS}" in meta
+
+
+def test_artifacts_are_deterministic(tmp_path):
+    a = aot.build_artifacts(str(tmp_path / "a"))
+    b = aot.build_artifacts(str(tmp_path / "b"))
+    ta = open(a["sched_step.hlo.txt"]).read()
+    tb = open(b["sched_step.hlo.txt"]).read()
+    assert ta == tb

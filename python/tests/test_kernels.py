@@ -1,0 +1,155 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Each Pallas kernel is checked against its pure-jnp oracle (ref.py) over
+hypothesis-swept shapes and values, plus directed edge cases.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import fit, preempt_select, priority, ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=30, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+# ---- priority -------------------------------------------------------------
+
+
+@hypothesis.given(
+    n=st.integers(1, 700),
+    f=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_priority_matches_ref(n, f, seed):
+    rng = np.random.default_rng(seed)
+    factors = rng.normal(size=(n, f)).astype(np.float32)
+    weights = rng.normal(size=(f,)).astype(np.float32)
+    got = priority.priority_scores(jnp.asarray(factors), jnp.asarray(weights))
+    want = ref.priority_scores_ref(factors, weights)
+    assert got.shape == (n,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_priority_block_boundary_shapes():
+    # Exactly one block, one block + 1, multiple of block.
+    for n in [priority.BLOCK_JOBS, priority.BLOCK_JOBS + 1, 4 * priority.BLOCK_JOBS]:
+        factors = np.ones((n, 8), np.float32)
+        weights = np.arange(8, dtype=np.float32)
+        got = priority.priority_scores(jnp.asarray(factors), jnp.asarray(weights))
+        assert_allclose(np.asarray(got), np.full(n, weights.sum()), rtol=1e-6)
+
+
+def test_priority_zero_rows_score_zero():
+    factors = np.zeros((10, 8), np.float32)
+    weights = np.ones(8, np.float32)
+    got = priority.priority_scores(jnp.asarray(factors), jnp.asarray(weights))
+    assert_allclose(np.asarray(got), np.zeros(10), atol=0)
+
+
+# ---- preempt_select --------------------------------------------------------
+
+
+@hypothesis.given(
+    n=st.integers(1, 600),
+    demand_frac=st.floats(0.0, 1.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_select_matches_ref(n, demand_frac, seed):
+    rng = np.random.default_rng(seed)
+    cores = rng.integers(0, 512, size=n).astype(np.float32)
+    demand = np.array([demand_frac * cores.sum()], np.float32)
+    got = preempt_select.select_victims(jnp.asarray(cores), jnp.asarray(demand))
+    want = ref.select_victims_ref(cores, demand)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@hypothesis.given(
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_select_is_minimal_lifo_prefix(n, seed):
+    """Property: the mask is a prefix of the non-padding entries, it covers
+    the demand, and dropping its last selected job would not."""
+    rng = np.random.default_rng(seed)
+    cores = rng.integers(1, 512, size=n).astype(np.float32)  # no padding here
+    demand_val = float(rng.integers(1, int(cores.sum()) + 1))
+    demand = np.array([demand_val], np.float32)
+    mask = np.asarray(
+        preempt_select.select_victims(jnp.asarray(cores), jnp.asarray(demand))
+    )
+    # Prefix property.
+    selected = np.flatnonzero(mask)
+    assert selected.size > 0
+    assert np.array_equal(selected, np.arange(selected.size))
+    # Coverage.
+    assert cores[mask == 1].sum() >= demand_val
+    # Minimality: without the last selected job, coverage fails.
+    assert cores[mask == 1][:-1].sum() < demand_val
+
+
+def test_select_zero_demand_selects_nothing():
+    cores = np.array([4, 4, 4], np.float32)
+    mask = preempt_select.select_victims(
+        jnp.asarray(cores), jnp.asarray(np.array([0.0], np.float32))
+    )
+    assert np.asarray(mask).sum() == 0
+
+
+def test_select_ignores_padding():
+    cores = np.array([8, 0, 0, 8], np.float32)  # zeros = padding
+    mask = np.asarray(
+        preempt_select.select_victims(
+            jnp.asarray(cores), jnp.asarray(np.array([16.0], np.float32))
+        )
+    )
+    np.testing.assert_array_equal(mask, [1, 0, 0, 1])
+
+
+# ---- fit -------------------------------------------------------------------
+
+
+@hypothesis.given(
+    m=st.integers(1, 600),
+    n=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fit_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    free = rng.integers(0, 64, size=m).astype(np.float32)
+    reqs = rng.integers(1, 64, size=n).astype(np.float32)
+    got = fit.fit_counts(jnp.asarray(free), jnp.asarray(reqs))
+    want = ref.fit_counts_ref(free, reqs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fit_padding_requirement_counts_zero():
+    free = np.full(16, 64.0, np.float32)
+    reqs = np.array([1.0, 1e18], np.float32)
+    got = np.asarray(fit.fit_counts(jnp.asarray(free), jnp.asarray(reqs)))
+    np.testing.assert_array_equal(got, [16, 0])
+
+
+def test_fit_busy_nodes_dont_count():
+    free = np.array([0.0, 0.0, 32.0], np.float32)
+    reqs = np.array([16.0], np.float32)
+    got = np.asarray(fit.fit_counts(jnp.asarray(free), jnp.asarray(reqs)))
+    np.testing.assert_array_equal(got, [1])
+
+
+# ---- dtype robustness -------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+def test_kernels_accept_other_dtypes(dtype):
+    factors = np.ones((4, 3), dtype)
+    weights = np.ones(3, dtype)
+    got = priority.priority_scores(jnp.asarray(factors), jnp.asarray(weights))
+    assert got.dtype == jnp.float32
+    assert_allclose(np.asarray(got), np.full(4, 3.0))

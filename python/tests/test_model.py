@@ -1,0 +1,79 @@
+"""L2 model tests: composed sched_step semantics and the AOT shape contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def _padded_inputs():
+    rng = np.random.default_rng(7)
+    factors = np.zeros((model.JOBS, model.FACTORS), np.float32)
+    factors[:10] = rng.normal(size=(10, model.FACTORS))
+    spot = np.zeros(model.SPOTS, np.float32)
+    spot[:5] = [256, 128, 512, 64, 64]
+    demand = np.array([300.0], np.float32)
+    free = np.zeros(model.NODES, np.float32)
+    free[:19] = 32.0
+    reqs = np.full(model.JOBS, 1e18, np.float32)
+    reqs[:10] = rng.integers(1, 40, size=10)
+    return factors, spot, demand, free, reqs
+
+
+def test_sched_step_shapes_and_dtypes():
+    factors, spot, demand, free, reqs = _padded_inputs()
+    scores, mask, counts = model.sched_step(
+        jnp.asarray(factors),
+        model.WEIGHTS,
+        jnp.asarray(spot),
+        jnp.asarray(demand),
+        jnp.asarray(free),
+        jnp.asarray(reqs),
+    )
+    assert scores.shape == (model.JOBS,) and scores.dtype == jnp.float32
+    assert mask.shape == (model.SPOTS,) and mask.dtype == jnp.int32
+    assert counts.shape == (model.JOBS,) and counts.dtype == jnp.int32
+
+
+def test_sched_step_matches_refs():
+    factors, spot, demand, free, reqs = _padded_inputs()
+    scores, mask, counts = model.sched_step(
+        jnp.asarray(factors),
+        model.WEIGHTS,
+        jnp.asarray(spot),
+        jnp.asarray(demand),
+        jnp.asarray(free),
+        jnp.asarray(reqs),
+    )
+    assert_allclose(
+        np.asarray(scores),
+        np.asarray(ref.priority_scores_ref(factors, np.asarray(model.WEIGHTS))),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(mask), np.asarray(ref.select_victims_ref(spot, demand))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(counts), np.asarray(ref.fit_counts_ref(free, reqs))
+    )
+    # Semantic spot-check: demand 300 youngest-first over [256,128,...] takes
+    # the first two jobs.
+    np.testing.assert_array_equal(np.asarray(mask)[:5], [1, 1, 0, 0, 0])
+
+
+def test_weights_match_rust_constants():
+    # rust/src/sched/priority.rs WEIGHTS — keep in sync.
+    np.testing.assert_array_equal(
+        np.asarray(model.WEIGHTS),
+        np.array([1000.0, 1.0, 0.1, 5.0, 10.0, -50.0, 0.0, 0.0], np.float32),
+    )
+
+
+def test_model_lowers_with_static_shapes():
+    lowered = jax.jit(model.sched_step).lower(*model.example_args())
+    text = str(lowered.compiler_ir("stablehlo"))
+    assert f"{model.JOBS}x{model.FACTORS}" in text

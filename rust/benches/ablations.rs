@@ -1,0 +1,6 @@
+//! Bench: regenerate paper ablations and time it.
+mod common;
+
+fn main() {
+    common::bench_experiment("ablations");
+}

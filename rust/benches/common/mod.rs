@@ -1,0 +1,20 @@
+//! Shared bench plumbing: run a paper experiment, print its report (the
+//! figure's rows), and benchmark the regeneration wall time.
+
+use spotcloud::benchkit::{BenchConfig, BenchGroup};
+
+/// Run experiment `id`: print the figure once (with shape checks), then
+/// benchmark regeneration time.
+pub fn bench_experiment(id: &str) {
+    let report = spotcloud::experiments::run_by_id(id, 1).expect("known experiment");
+    println!("{}", report.render());
+    assert!(report.check(), "paper-shape checks failed for {id}");
+
+    let mut g = BenchGroup::new(&format!("{id} regeneration")).config(BenchConfig::heavy());
+    let mut seed = 0u64;
+    g.bench(&format!("{id}::run"), move || {
+        seed += 1;
+        spotcloud::experiments::run_by_id(id, seed).expect("known experiment")
+    });
+    g.finish();
+}

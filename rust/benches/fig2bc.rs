@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Fig 2b and Fig 2c (production auto-preemption
+//! panels at 2048 and 4096 cores) and time them.
+mod common;
+
+fn main() {
+    common::bench_experiment("fig2b");
+    common::bench_experiment("fig2c");
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Fig 2d and Fig 2e (REQUEUE vs CANCEL panels)
+//! and time them.
+mod common;
+
+fn main() {
+    common::bench_experiment("fig2d");
+    common::bench_experiment("fig2e");
+}

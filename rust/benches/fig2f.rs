@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Fig 2f (manual preemption panel) and time it.
+mod common;
+
+fn main() {
+    common::bench_experiment("fig2f");
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate paper fig2g and time it.
+mod common;
+
+fn main() {
+    common::bench_experiment("fig2g");
+}

@@ -1,0 +1,64 @@
+//! Micro-benchmarks of the scheduling decision step: XLA-compiled kernel vs
+//! native Rust fallback, across batch sizes. The crossover tells the
+//! scheduler when offloading pays (see EXPERIMENTS.md §Perf).
+
+use spotcloud::benchkit::{BenchConfig, BenchGroup};
+use spotcloud::runtime::{fallback, SchedAccel};
+use spotcloud::sched::priority::{JobFactors, PriorityScorer, N_FACTORS, WEIGHTS};
+use spotcloud::util::rng::Xoshiro256;
+
+fn random_factors(n: usize, seed: u64) -> Vec<JobFactors> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut f = [0.0f32; N_FACTORS];
+            for x in f.iter_mut() {
+                *x = rng.uniform(0.0, 10.0) as f32;
+            }
+            JobFactors(f)
+        })
+        .collect()
+}
+
+fn main() {
+    let accel = SchedAccel::load_default();
+    if accel.is_none() {
+        println!("artifacts not built (run `make artifacts`); benchmarking fallback only");
+    }
+    let mut g = BenchGroup::new("decision step: XLA accel vs native fallback")
+        .config(BenchConfig::default());
+
+    for n in [64usize, 256, 1024] {
+        let factors = random_factors(n, 42);
+        let f2 = factors.clone();
+        g.bench_with_items(&format!("native scores n={n}"), n as f64, move || {
+            fallback::priority_scores(&f2, &WEIGHTS)
+        });
+        if let Some(a) = &accel {
+            let f3 = factors.clone();
+            g.bench_with_items(&format!("xla scores n={n}"), n as f64, || a.scores(&f3));
+        }
+    }
+
+    // The full fused decision step (scores + preempt mask + fit counts).
+    if let Some(a) = &accel {
+        let factors = random_factors(1024, 7);
+        let mut rng = Xoshiro256::new(9);
+        let spot: Vec<f32> = (0..1024).map(|_| rng.gen_range(0, 512) as f32).collect();
+        let free: Vec<f32> = (0..1024).map(|_| rng.gen_range(0, 65) as f32).collect();
+        let reqs: Vec<f32> = (0..1024).map(|_| rng.gen_range(1, 64) as f32).collect();
+        let (s2, f2, r2) = (spot.clone(), free.clone(), reqs.clone());
+        g.bench("xla full sched_step (1024 jobs, 1024 spots, 1024 nodes)", move || {
+            a.sched_step(&factors, &s2, 100_000.0, &f2, &r2).expect("step")
+        });
+        g.bench("native full step equivalent", move || {
+            let factors = random_factors(1024, 7);
+            let scores = fallback::priority_scores(&factors, &WEIGHTS);
+            let mask = fallback::select_victims(&spot, 100_000.0);
+            let counts = fallback::fit_counts(&free, &reqs);
+            (scores, mask, counts)
+        });
+    }
+
+    g.finish();
+}

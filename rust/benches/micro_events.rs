@@ -1,0 +1,55 @@
+//! Micro-benchmarks of the simulation substrates: event queue throughput,
+//! histogram recording, RNG, and the DES engine loop.
+
+use spotcloud::benchkit::{BenchConfig, BenchGroup};
+use spotcloud::metrics::LogHistogram;
+use spotcloud::sim::{Engine, EventQueue, SimTime};
+use spotcloud::util::rng::Xoshiro256;
+
+fn main() {
+    let mut g = BenchGroup::new("simulation substrates").config(BenchConfig::default());
+
+    g.bench_with_items("event queue push+pop x10k", 10_000.0, || {
+        let mut q = EventQueue::new();
+        let mut rng = Xoshiro256::new(1);
+        for i in 0..10_000u64 {
+            q.push(SimTime(rng.gen_range(0, 1_000_000_000)), i);
+        }
+        let mut sum = 0u64;
+        while let Some((_, v)) = q.pop() {
+            sum += v;
+        }
+        sum
+    });
+
+    g.bench_with_items("DES engine self-scheduling x10k", 10_000.0, || {
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule_at(SimTime(1), 0);
+        eng.run_to_completion(|eng, _, n| {
+            if n < 10_000 {
+                eng.schedule_in(SimTime(1_000), n + 1);
+            }
+        });
+        eng.processed()
+    });
+
+    g.bench_with_items("histogram record x100k", 100_000.0, || {
+        let mut h = LogHistogram::new();
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..100_000 {
+            h.record(rng.gen_range(1, 10_000_000_000));
+        }
+        h.p99()
+    });
+
+    g.bench_with_items("xoshiro256** u64 x1M", 1_000_000.0, || {
+        let mut rng = Xoshiro256::new(3);
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        acc
+    });
+
+    g.finish();
+}

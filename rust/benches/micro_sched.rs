@@ -1,0 +1,90 @@
+//! Micro-benchmarks of the L3 scheduler hot paths (wall-clock):
+//! submission+dispatch throughput, scheduling-pass cost vs queue depth, and
+//! whole-figure simulation speed. These are the §Perf targets in
+//! EXPERIMENTS.md.
+
+use spotcloud::benchkit::{BenchConfig, BenchGroup};
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::job::{JobSpec, JobType, UserId};
+use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
+use spotcloud::sched::{Scheduler, SchedulerConfig};
+use spotcloud::sim::{SchedCosts, SimTime};
+
+fn main() {
+    let mut g = BenchGroup::new("L3 scheduler hot paths").config(BenchConfig::default());
+
+    // Submission → dispatch, small triple-mode job on an idle cluster.
+    g.bench_with_items("submit+dispatch triple-mode (TX-2500)", 1.0, || {
+        let mut s = Scheduler::new(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        );
+        let id = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        s.run_until_dispatched(&[id], SimTime::from_secs(60));
+        s
+    });
+
+    // A full 4096-job individual burst (the heaviest figure workload).
+    g.bench_with_items("individual burst x4096 (TX-Green)", 4096.0, || {
+        let mut s = Scheduler::new(
+            topology::txgreen_reservation(),
+            SchedulerConfig::baseline(SchedCosts::production(), PartitionLayout::Dual),
+        );
+        let ids = s.submit_burst(
+            (0..4096)
+                .map(|_| JobSpec::interactive(UserId(1), JobType::Individual, 1))
+                .collect(),
+        );
+        s.run_until_dispatched(&ids, SimTime::from_secs(7200));
+        s
+    });
+
+    // Scheduling pass cost with a deep pending queue (scoring dominated).
+    for depth in [64u32, 512, 2048] {
+        g.bench_with_items(
+            &format!("pass with {depth}-deep blocked queue"),
+            depth as f64,
+            move || {
+                let mut s = Scheduler::new(
+                    topology::tx2500(),
+                    SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+                        .with_user_limit(1_000_000),
+                );
+                // Occupy the cluster so the queue stays pending.
+                let big = s.submit(
+                    JobSpec::interactive(UserId(2), JobType::Array, 608)
+                        .with_run_time(SimTime::from_secs(1_000_000)),
+                );
+                s.run_until_dispatched(&[big], SimTime::from_secs(60));
+                let _q: Vec<_> = (0..depth)
+                    .map(|_| s.submit(JobSpec::interactive(UserId(1), JobType::Array, 32)))
+                    .collect();
+                // Run long enough for several periodic passes over the queue.
+                s.run_for(SimTime::from_secs(120));
+                s
+            },
+        );
+    }
+
+    // Cron-agent pass on a loaded cluster.
+    g.bench("cron agent pass (loaded TX-Green)", || {
+        let mut s = Scheduler::new(
+            topology::txgreen_reservation(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+                .with_user_limit(512)
+                .with_approach(PreemptApproach::CronAgent {
+                    mode: PreemptMode::Requeue,
+                    cfg: CronAgentConfig { reserve_nodes: 8 },
+                }),
+        );
+        let ids = s.submit_burst(spotcloud::workload::spot_fill(UserId(9), 3584, 8));
+        s.run_until_dispatched(&ids, SimTime::from_secs(600));
+        // Interactive takes the reserve; the next cron pass must preempt.
+        let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 512));
+        s.run_until_dispatched(&[j], SimTime::from_secs(60));
+        s.run_for(SimTime::from_secs(120));
+        s
+    });
+
+    g.finish();
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate paper table1 and time it.
+mod common;
+
+fn main() {
+    common::bench_experiment("table1");
+}

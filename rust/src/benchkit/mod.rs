@@ -1,0 +1,229 @@
+//! Micro-benchmark harness (criterion substitute, std-only).
+//!
+//! Used by the `[[bench]] harness = false` targets under `rust/benches/`.
+//! Provides warmup, adaptive iteration counts targeting a wall-clock budget,
+//! exact percentile reporting via [`crate::metrics::Summary`], and a simple
+//! group/report API so each paper figure gets one bench binary printing the
+//! same rows the paper plots.
+
+use crate::metrics::stats::Summary;
+use crate::util::fmt::{fmt_seconds, Table};
+use std::time::Instant;
+
+/// Configuration for a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget in seconds.
+    pub warmup_secs: f64,
+    /// Measurement wall-clock budget in seconds.
+    pub measure_secs: f64,
+    /// Minimum measured iterations regardless of budget.
+    pub min_iters: u32,
+    /// Maximum measured iterations (caps very fast benchmarks).
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_secs: 0.2,
+            measure_secs: 1.0,
+            min_iters: 5,
+            max_iters: 1_000,
+        }
+    }
+}
+
+/// Quick config for expensive end-to-end benches (fewer iterations).
+impl BenchConfig {
+    /// Config tuned for heavier benchmarks (whole-simulation runs).
+    pub fn heavy() -> Self {
+        Self {
+            warmup_secs: 0.0,
+            measure_secs: 2.0,
+            min_iters: 3,
+            max_iters: 30,
+        }
+    }
+
+    /// Honor `SPOTCLOUD_BENCH_FAST=1` to cut budgets (CI smoke mode).
+    pub fn from_env(mut self) -> Self {
+        if std::env::var("SPOTCLOUD_BENCH_FAST").as_deref() == Ok("1") {
+            self.warmup_secs = 0.0;
+            self.measure_secs = self.measure_secs.min(0.2);
+            self.min_iters = 2;
+            self.max_iters = self.max_iters.min(10);
+        }
+        self
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Per-iteration wall time summary (seconds).
+    pub summary: Summary,
+    /// Optional throughput denominator ("items" per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Items per second, when a throughput denominator was attached.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.summary.mean)
+    }
+}
+
+/// Run one benchmark: calls `f` repeatedly, timing each call.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    let warm_start = Instant::now();
+    while warm_start.elapsed().as_secs_f64() < cfg.warmup_secs {
+        std::hint::black_box(f());
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let measure_start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        let done_budget = measure_start.elapsed().as_secs_f64() >= cfg.measure_secs;
+        if (done_budget && samples.len() as u32 >= cfg.min_iters)
+            || samples.len() as u32 >= cfg.max_iters
+        {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples).expect("at least one sample"),
+        items_per_iter: None,
+    }
+}
+
+/// A named group of benchmarks that prints a report table on `finish`.
+pub struct BenchGroup {
+    title: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    /// Create a group with the default config (honoring env overrides).
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            cfg: BenchConfig::default().from_env(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the config.
+    pub fn config(mut self, cfg: BenchConfig) -> Self {
+        self.cfg = cfg.from_env();
+        self
+    }
+
+    /// Run and record one benchmark.
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) -> &mut Self {
+        let r = bench(name, &self.cfg, f);
+        eprintln!(
+            "  {:<40} mean {:>12}  p50 {:>12}  n={}",
+            r.name,
+            fmt_seconds(r.summary.mean),
+            fmt_seconds(r.summary.p50),
+            r.summary.n
+        );
+        self.results.push(r);
+        self
+    }
+
+    /// Run and record one benchmark with a throughput denominator.
+    pub fn bench_with_items<T>(&mut self, name: &str, items: f64, f: impl FnMut() -> T) -> &mut Self {
+        let mut r = bench(name, &self.cfg, f);
+        r.items_per_iter = Some(items);
+        eprintln!(
+            "  {:<40} mean {:>12}  {:>14.0} items/s  n={}",
+            r.name,
+            fmt_seconds(r.summary.mean),
+            r.throughput().unwrap_or(0.0),
+            r.summary.n
+        );
+        self.results.push(r);
+        self
+    }
+
+    /// Access results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the final report table and return the results.
+    pub fn finish(self) -> Vec<BenchResult> {
+        let mut t = Table::new(vec!["benchmark", "mean", "p50", "p90", "min", "iters", "throughput"])
+            .with_title(format!("== {} ==", self.title));
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                fmt_seconds(r.summary.mean),
+                fmt_seconds(r.summary.p50),
+                fmt_seconds(r.summary.p90),
+                fmt_seconds(r.summary.min),
+                r.summary.n.to_string(),
+                r.throughput()
+                    .map(|t| format!("{t:.0}/s"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        println!("{}", t.render());
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let cfg = BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.05,
+            min_iters: 3,
+            max_iters: 10,
+        };
+        let r = bench("sleep", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(r.summary.mean >= 0.002, "mean {}", r.summary.mean);
+        assert!(r.summary.n >= 3);
+    }
+
+    #[test]
+    fn max_iters_caps() {
+        let cfg = BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 10.0,
+            min_iters: 1,
+            max_iters: 7,
+        };
+        let r = bench("fast", &cfg, || 1 + 1);
+        assert_eq!(r.summary.n, 7);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let cfg = BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.01,
+            min_iters: 2,
+            max_iters: 5,
+        };
+        let mut r = bench("t", &cfg, || std::hint::black_box(42));
+        r.items_per_iter = Some(100.0);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+}

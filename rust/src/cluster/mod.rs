@@ -1,0 +1,328 @@
+//! Cluster substrate: nodes, partitions, topologies, and core allocation.
+//!
+//! Models the hardware side of the paper's systems: the TX-2500 development
+//! cluster (19 nodes × 32 cores = 608 cores) and the TX-Green production
+//! reservation (64 Intel Xeon Phi nodes × 64 cores = 4096 cores), plus the
+//! full TX-Green for scale tests.
+
+pub mod node;
+pub mod partition;
+pub mod topology;
+
+pub use node::{Node, NodeId, NodeState};
+pub use partition::{Partition, PartitionId, PartitionLayout};
+
+use crate::job::JobId;
+use std::collections::BTreeMap;
+
+/// A concrete allocation: cores taken on specific nodes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    /// (node, cores taken on that node) pairs.
+    pub slices: Vec<(NodeId, u32)>,
+}
+
+impl Allocation {
+    /// Total cores in the allocation.
+    pub fn cores(&self) -> u32 {
+        self.slices.iter().map(|(_, c)| c).sum()
+    }
+
+    /// Number of distinct nodes.
+    pub fn node_count(&self) -> usize {
+        self.slices.len()
+    }
+}
+
+/// What a job asks the cluster for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocRequest {
+    /// `cores` anywhere (packed onto nodes first-fit). Used by individual
+    /// and array jobs (core-based scheduling).
+    Cores(u32),
+    /// `nodes` whole nodes (node-based scheduling, used by triple-mode
+    /// jobs: every core of each node is taken).
+    WholeNodes(u32),
+}
+
+impl AllocRequest {
+    /// Cores this request will consume on the given cluster (whole-node
+    /// requests depend on the node size).
+    pub fn cores_on(&self, cluster: &Cluster) -> u32 {
+        match *self {
+            AllocRequest::Cores(c) => c,
+            AllocRequest::WholeNodes(n) => n * cluster.cores_per_node(),
+        }
+    }
+}
+
+/// The cluster: a set of nodes plus the job→allocation table.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    nodes: Vec<Node>,
+    allocations: BTreeMap<JobId, Allocation>,
+    /// First-fit scan hint: every node below this index had zero free cores
+    /// the last time it was examined. Purely an optimization — releases and
+    /// cleanup transitions move it back down.
+    scan_hint: usize,
+}
+
+impl Cluster {
+    /// Build a homogeneous cluster of `n_nodes` nodes with `cores` each.
+    pub fn homogeneous(n_nodes: u32, cores: u32) -> Self {
+        let nodes = (0..n_nodes).map(|i| Node::new(NodeId(i), cores)).collect();
+        Self {
+            nodes,
+            allocations: BTreeMap::new(),
+            scan_hint: 0,
+        }
+    }
+
+    /// All nodes.
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Mutable access to one node (scheduler-internal: cleanup/drain).
+    pub(crate) fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    /// Mutable node access for failure-injection tests (drain/undrain).
+    pub fn node_mut_for_tests(&mut self, idx: u32) -> &mut Node {
+        &mut self.nodes[idx as usize]
+    }
+
+    /// Node count.
+    pub fn node_count(&self) -> u32 {
+        self.nodes.len() as u32
+    }
+
+    /// Cores per node (panics on heterogeneous clusters; the paper's test
+    /// systems are homogeneous within a partition).
+    pub fn cores_per_node(&self) -> u32 {
+        let c = self.nodes.first().map(|n| n.cores).unwrap_or(0);
+        debug_assert!(self.nodes.iter().all(|n| n.cores == c));
+        c
+    }
+
+    /// Total cores.
+    pub fn total_cores(&self) -> u32 {
+        self.nodes.iter().map(|n| n.cores).sum()
+    }
+
+    /// Currently idle cores.
+    pub fn idle_cores(&self) -> u32 {
+        self.nodes.iter().map(|n| n.free_cores()).sum()
+    }
+
+    /// Number of *fully idle* nodes (the cron agent's reserve is measured in
+    /// whole nodes, matching the paper).
+    pub fn idle_node_count(&self) -> u32 {
+        self.nodes.iter().filter(|n| n.is_idle()).count() as u32
+    }
+
+    /// Utilization in [0,1].
+    pub fn utilization(&self) -> f64 {
+        let total = self.total_cores();
+        if total == 0 {
+            0.0
+        } else {
+            1.0 - self.idle_cores() as f64 / total as f64
+        }
+    }
+
+    /// Whether `req` could be satisfied right now (without preemption).
+    pub fn can_allocate(&self, req: AllocRequest) -> bool {
+        match req {
+            AllocRequest::Cores(c) => self.idle_cores() >= c,
+            AllocRequest::WholeNodes(n) => self.idle_node_count() >= n,
+        }
+    }
+
+    /// Try to allocate for `job`. First-fit over nodes in id order (matches
+    /// Slurm's default weighting for a homogeneous partition). Returns the
+    /// allocation or None if resources are insufficient.
+    pub fn allocate(&mut self, job: JobId, req: AllocRequest) -> Option<Allocation> {
+        assert!(
+            !self.allocations.contains_key(&job),
+            "job {job:?} already has an allocation"
+        );
+        if !self.can_allocate(req) {
+            return None;
+        }
+        let mut slices = Vec::new();
+        // Advance the first-fit hint past allocation-exhausted nodes. Only
+        // fullness caused by allocations counts: those nodes free cores only
+        // through `release`, which rewinds the hint. (Cleanup/drained nodes
+        // regain capacity without a release, so they never advance it.)
+        while self.scan_hint < self.nodes.len()
+            && self.nodes[self.scan_hint].used_cores() == self.nodes[self.scan_hint].cores
+        {
+            self.scan_hint += 1;
+        }
+        match req {
+            AllocRequest::Cores(mut need) => {
+                if need == 0 {
+                    return None;
+                }
+                for node in &mut self.nodes[self.scan_hint..] {
+                    if need == 0 {
+                        break;
+                    }
+                    let take = node.free_cores().min(need);
+                    if take > 0 {
+                        node.take(job, take);
+                        slices.push((node.id, take));
+                        need -= take;
+                    }
+                }
+                debug_assert_eq!(need, 0, "can_allocate said yes");
+            }
+            AllocRequest::WholeNodes(mut need) => {
+                if need == 0 {
+                    return None;
+                }
+                for node in &mut self.nodes[self.scan_hint..] {
+                    if need == 0 {
+                        break;
+                    }
+                    if node.is_idle() {
+                        let c = node.cores;
+                        node.take(job, c);
+                        slices.push((node.id, c));
+                        need -= 1;
+                    }
+                }
+                debug_assert_eq!(need, 0, "can_allocate said yes");
+            }
+        }
+        let alloc = Allocation { slices };
+        self.allocations.insert(job, alloc.clone());
+        Some(alloc)
+    }
+
+    /// Release a job's allocation. Returns the freed allocation.
+    pub fn release(&mut self, job: JobId) -> Option<Allocation> {
+        let alloc = self.allocations.remove(&job)?;
+        for &(nid, cores) in &alloc.slices {
+            self.nodes[nid.0 as usize].give_back(job, cores);
+            self.scan_hint = self.scan_hint.min(nid.0 as usize);
+        }
+        Some(alloc)
+    }
+
+    /// The allocation currently held by a job, if any.
+    pub fn allocation_of(&self, job: JobId) -> Option<&Allocation> {
+        self.allocations.get(&job)
+    }
+
+    /// Jobs currently holding allocations.
+    pub fn allocated_jobs(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.allocations.keys().copied()
+    }
+
+    /// Invariant check (used by property tests): per-node accounting matches
+    /// the allocation table and no node is oversubscribed.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut per_node: BTreeMap<NodeId, u32> = BTreeMap::new();
+        for alloc in self.allocations.values() {
+            for &(nid, c) in &alloc.slices {
+                *per_node.entry(nid).or_default() += c;
+            }
+        }
+        for node in &self.nodes {
+            let used = per_node.get(&node.id).copied().unwrap_or(0);
+            if used != node.used_cores() {
+                return Err(format!(
+                    "node {:?}: allocation table says {} cores used, node says {}",
+                    node.id,
+                    used,
+                    node.used_cores()
+                ));
+            }
+            if node.used_cores() > node.cores {
+                return Err(format!("node {:?} oversubscribed", node.id));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jid(n: u64) -> JobId {
+        JobId(n)
+    }
+
+    #[test]
+    fn homogeneous_accounting() {
+        let c = Cluster::homogeneous(19, 32);
+        assert_eq!(c.node_count(), 19);
+        assert_eq!(c.total_cores(), 608);
+        assert_eq!(c.idle_cores(), 608);
+        assert_eq!(c.idle_node_count(), 19);
+        assert_eq!(c.utilization(), 0.0);
+    }
+
+    #[test]
+    fn core_allocation_first_fit() {
+        let mut c = Cluster::homogeneous(4, 8);
+        let a = c.allocate(jid(1), AllocRequest::Cores(10)).unwrap();
+        assert_eq!(a.cores(), 10);
+        assert_eq!(a.node_count(), 2); // 8 + 2
+        assert_eq!(c.idle_cores(), 22);
+        assert_eq!(c.idle_node_count(), 2); // node 1 is mixed
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn whole_node_allocation_skips_mixed_nodes() {
+        let mut c = Cluster::homogeneous(4, 8);
+        c.allocate(jid(1), AllocRequest::Cores(1)).unwrap(); // dirties node 0
+        let a = c.allocate(jid(2), AllocRequest::WholeNodes(3)).unwrap();
+        assert_eq!(a.node_count(), 3);
+        assert!(a.slices.iter().all(|&(nid, cores)| nid != NodeId(0) && cores == 8));
+        assert!(!c.can_allocate(AllocRequest::WholeNodes(1)));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_restores_capacity() {
+        let mut c = Cluster::homogeneous(2, 4);
+        c.allocate(jid(1), AllocRequest::Cores(8)).unwrap();
+        assert_eq!(c.idle_cores(), 0);
+        assert!(c.allocate(jid(2), AllocRequest::Cores(1)).is_none());
+        c.release(jid(1)).unwrap();
+        assert_eq!(c.idle_cores(), 8);
+        assert_eq!(c.idle_node_count(), 2);
+        assert!(c.release(jid(1)).is_none(), "double release returns None");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn insufficient_resources_refused() {
+        let mut c = Cluster::homogeneous(2, 4);
+        assert!(c.allocate(jid(1), AllocRequest::Cores(9)).is_none());
+        assert!(c.allocate(jid(1), AllocRequest::WholeNodes(3)).is_none());
+        assert_eq!(c.idle_cores(), 8, "failed allocation must not leak");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "already has an allocation")]
+    fn double_allocate_panics() {
+        let mut c = Cluster::homogeneous(2, 4);
+        c.allocate(jid(1), AllocRequest::Cores(1)).unwrap();
+        let _ = c.allocate(jid(1), AllocRequest::Cores(1));
+    }
+
+    #[test]
+    fn zero_requests_refused() {
+        let mut c = Cluster::homogeneous(2, 4);
+        assert!(c.allocate(jid(1), AllocRequest::Cores(0)).is_none());
+        assert!(c.allocate(jid(2), AllocRequest::WholeNodes(0)).is_none());
+    }
+}

@@ -1,0 +1,191 @@
+//! A compute node: core accounting and lifecycle state.
+
+use crate::job::JobId;
+use std::collections::BTreeMap;
+
+/// Node identifier (index into the cluster's node table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+/// Node lifecycle state (subset of Slurm's node states that matter here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// No cores allocated.
+    Idle,
+    /// Some but not all cores allocated.
+    Mixed,
+    /// All cores allocated.
+    Allocated,
+    /// Undergoing epilog/cleanup after a job was preempted or completed;
+    /// cannot accept work until cleanup finishes.
+    Cleanup,
+    /// Administratively removed from service.
+    Drained,
+}
+
+/// A compute node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Identifier.
+    pub id: NodeId,
+    /// Total cores.
+    pub cores: u32,
+    used: u32,
+    /// Per-job core usage on this node.
+    jobs: BTreeMap<JobId, u32>,
+    drained: bool,
+    in_cleanup: bool,
+}
+
+impl Node {
+    /// A fresh idle node.
+    pub fn new(id: NodeId, cores: u32) -> Self {
+        assert!(cores > 0, "node must have at least one core");
+        Self {
+            id,
+            cores,
+            used: 0,
+            jobs: BTreeMap::new(),
+            drained: false,
+            in_cleanup: false,
+        }
+    }
+
+    /// Free cores (0 when drained or in cleanup).
+    pub fn free_cores(&self) -> u32 {
+        if self.drained || self.in_cleanup {
+            0
+        } else {
+            self.cores - self.used
+        }
+    }
+
+    /// Cores currently allocated.
+    pub fn used_cores(&self) -> u32 {
+        self.used
+    }
+
+    /// True when fully idle and schedulable.
+    pub fn is_idle(&self) -> bool {
+        self.used == 0 && !self.drained && !self.in_cleanup
+    }
+
+    /// Current state.
+    pub fn state(&self) -> NodeState {
+        if self.drained {
+            NodeState::Drained
+        } else if self.in_cleanup {
+            NodeState::Cleanup
+        } else if self.used == 0 {
+            NodeState::Idle
+        } else if self.used == self.cores {
+            NodeState::Allocated
+        } else {
+            NodeState::Mixed
+        }
+    }
+
+    /// Jobs running (or holding cores) on this node.
+    pub fn jobs(&self) -> impl Iterator<Item = (JobId, u32)> + '_ {
+        self.jobs.iter().map(|(&j, &c)| (j, c))
+    }
+
+    /// Allocate `cores` to `job`. Panics on oversubscription — the cluster
+    /// checks capacity first, so reaching that is a scheduler bug.
+    pub(crate) fn take(&mut self, job: JobId, cores: u32) {
+        assert!(
+            cores <= self.free_cores(),
+            "node {:?}: taking {} cores with only {} free",
+            self.id,
+            cores,
+            self.free_cores()
+        );
+        self.used += cores;
+        *self.jobs.entry(job).or_insert(0) += cores;
+    }
+
+    /// Return `cores` previously taken by `job`.
+    pub(crate) fn give_back(&mut self, job: JobId, cores: u32) {
+        let held = self.jobs.get_mut(&job).expect("job not on node");
+        assert!(*held >= cores, "returning more cores than held");
+        *held -= cores;
+        if *held == 0 {
+            self.jobs.remove(&job);
+        }
+        self.used -= cores;
+    }
+
+    /// Enter cleanup (epilog running). Remaining allocations stay until
+    /// released, but no new work lands.
+    pub fn begin_cleanup(&mut self) {
+        self.in_cleanup = true;
+    }
+
+    /// Cleanup done; node schedulable again.
+    pub fn end_cleanup(&mut self) {
+        self.in_cleanup = false;
+    }
+
+    /// Drain / undrain (admin operations; used in failure-injection tests).
+    pub fn set_drained(&mut self, drained: bool) {
+        self.drained = drained;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_transitions() {
+        let mut n = Node::new(NodeId(0), 4);
+        assert_eq!(n.state(), NodeState::Idle);
+        n.take(JobId(1), 2);
+        assert_eq!(n.state(), NodeState::Mixed);
+        n.take(JobId(2), 2);
+        assert_eq!(n.state(), NodeState::Allocated);
+        n.give_back(JobId(1), 2);
+        assert_eq!(n.state(), NodeState::Mixed);
+        n.give_back(JobId(2), 2);
+        assert_eq!(n.state(), NodeState::Idle);
+    }
+
+    #[test]
+    fn cleanup_blocks_scheduling() {
+        let mut n = Node::new(NodeId(0), 4);
+        n.begin_cleanup();
+        assert_eq!(n.free_cores(), 0);
+        assert!(!n.is_idle());
+        assert_eq!(n.state(), NodeState::Cleanup);
+        n.end_cleanup();
+        assert_eq!(n.free_cores(), 4);
+        assert!(n.is_idle());
+    }
+
+    #[test]
+    fn drained_blocks_scheduling() {
+        let mut n = Node::new(NodeId(0), 4);
+        n.set_drained(true);
+        assert_eq!(n.free_cores(), 0);
+        assert_eq!(n.state(), NodeState::Drained);
+    }
+
+    #[test]
+    #[should_panic(expected = "cores with only")]
+    fn oversubscription_panics() {
+        // free_cores is 4; taking 5 must panic with a helpful message.
+        let mut n = Node::new(NodeId(0), 4);
+        n.take(JobId(1), 5);
+    }
+
+    #[test]
+    fn per_job_tracking() {
+        let mut n = Node::new(NodeId(0), 8);
+        n.take(JobId(1), 3);
+        n.take(JobId(1), 2); // same job takes more
+        let jobs: Vec<_> = n.jobs().collect();
+        assert_eq!(jobs, vec![(JobId(1), 5)]);
+        n.give_back(JobId(1), 5);
+        assert_eq!(n.jobs().count(), 0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Partitions: the paper's single vs dual partition configurations.
+//!
+//! In the paper, Slurm is configured either with one partition serving both
+//! normal (interactive) and spot jobs, or with two partitions — one for
+//! interactive jobs, one for spot jobs — covering the same nodes. The
+//! partition layout does not change the hardware; it changes which pending
+//! queue(s) the scheduler walks and how expensive the preemption candidate
+//! scan is (see `sim::costs::single_partition_scan_penalty`).
+
+use crate::job::QosClass;
+
+/// Partition identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PartitionId(pub u8);
+
+/// A partition: a named queue admitting certain QoS classes.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Identifier.
+    pub id: PartitionId,
+    /// Human-readable name (`interactive`, `spot`, `shared`).
+    pub name: &'static str,
+    /// QoS classes admitted to this partition's queue.
+    pub admits: Vec<QosClass>,
+}
+
+impl Partition {
+    /// Whether a QoS class may be queued here.
+    pub fn admits(&self, qos: QosClass) -> bool {
+        self.admits.contains(&qos)
+    }
+}
+
+/// The paper's two cluster configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionLayout {
+    /// One partition serves both interactive and spot jobs.
+    Single,
+    /// Separate partitions for interactive and spot jobs (same nodes).
+    Dual,
+}
+
+impl PartitionLayout {
+    /// Materialize the partition set for this layout.
+    pub fn partitions(self) -> Vec<Partition> {
+        match self {
+            PartitionLayout::Single => vec![Partition {
+                id: PartitionId(0),
+                name: "shared",
+                admits: vec![QosClass::Normal, QosClass::Spot],
+            }],
+            PartitionLayout::Dual => vec![
+                Partition {
+                    id: PartitionId(0),
+                    name: "interactive",
+                    admits: vec![QosClass::Normal],
+                },
+                Partition {
+                    id: PartitionId(1),
+                    name: "spot",
+                    admits: vec![QosClass::Spot],
+                },
+            ],
+        }
+    }
+
+    /// The partition a job of the given QoS is routed to.
+    pub fn route(self, qos: QosClass) -> PartitionId {
+        match (self, qos) {
+            (PartitionLayout::Single, _) => PartitionId(0),
+            (PartitionLayout::Dual, QosClass::Normal) => PartitionId(0),
+            (PartitionLayout::Dual, QosClass::Spot) => PartitionId(1),
+        }
+    }
+
+    /// Short label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            PartitionLayout::Single => "single",
+            PartitionLayout::Dual => "dual",
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_layout_shares_one_queue() {
+        let ps = PartitionLayout::Single.partitions();
+        assert_eq!(ps.len(), 1);
+        assert!(ps[0].admits(QosClass::Normal));
+        assert!(ps[0].admits(QosClass::Spot));
+        assert_eq!(PartitionLayout::Single.route(QosClass::Spot), PartitionId(0));
+    }
+
+    #[test]
+    fn dual_layout_separates_queues() {
+        let ps = PartitionLayout::Dual.partitions();
+        assert_eq!(ps.len(), 2);
+        assert!(ps[0].admits(QosClass::Normal));
+        assert!(!ps[0].admits(QosClass::Spot));
+        assert!(ps[1].admits(QosClass::Spot));
+        assert_eq!(PartitionLayout::Dual.route(QosClass::Normal), PartitionId(0));
+        assert_eq!(PartitionLayout::Dual.route(QosClass::Spot), PartitionId(1));
+    }
+}

@@ -1,0 +1,41 @@
+//! Cluster topology presets matching the paper's test systems.
+
+use super::Cluster;
+
+/// TX-2500 development cluster: 19 nodes × 32 cores = 608 cores (paper
+/// Section III.A: "a total of 608 cores, 32 cores per node with 19 nodes").
+pub fn tx2500() -> Cluster {
+    Cluster::homogeneous(19, 32)
+}
+
+/// The TX-Green production experiment reservation: 64 Intel Xeon Phi 7210
+/// nodes × 64 cores = 4096 cores, matching the per-user resource limit on
+/// that partition (paper Section III.C).
+pub fn txgreen_reservation() -> Cluster {
+    Cluster::homogeneous(64, 64)
+}
+
+/// Full TX-Green KNL partition: 648 nodes × 64 cores = 41,472 cores. Used by
+/// scale benchmarks, not by the paper's figures (those ran in the 64-node
+/// reservation).
+pub fn txgreen_full() -> Cluster {
+    Cluster::homogeneous(648, 64)
+}
+
+/// The Xeon Gold addition: 225 nodes × 40 cores = 9,000 cores.
+pub fn txgreen_gold() -> Cluster {
+    Cluster::homogeneous(225, 40)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_core_counts() {
+        assert_eq!(tx2500().total_cores(), 608);
+        assert_eq!(txgreen_reservation().total_cores(), 4096);
+        assert_eq!(txgreen_full().total_cores(), 41_472);
+        assert_eq!(txgreen_gold().total_cores(), 9_000);
+    }
+}

@@ -1,0 +1,243 @@
+//! The daemon's line-based text protocol.
+//!
+//! Requests are single lines; responses are one or more lines terminated by
+//! a blank line. Grammar:
+//!
+//! ```text
+//! SUBMIT <normal|spot> <individual|array|triple> <tasks> <user> [run_secs]
+//! SQUEUE
+//! SCANCEL <job_id>
+//! STATS
+//! UTIL
+//! PING
+//! SHUTDOWN
+//! ```
+
+use crate::job::{JobType, QosClass};
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Submit a job burst.
+    Submit {
+        /// QoS class.
+        qos: QosClass,
+        /// Launch type.
+        job_type: JobType,
+        /// Total tasks.
+        tasks: u32,
+        /// User id.
+        user: u32,
+        /// Run time in (virtual) seconds.
+        run_secs: f64,
+    },
+    /// List pending + running jobs.
+    Squeue,
+    /// Cancel a job.
+    Scancel(u64),
+    /// Daemon + scheduler counters.
+    Stats,
+    /// Cluster utilization snapshot.
+    Util,
+    /// Liveness check.
+    Ping,
+    /// Stop the daemon.
+    Shutdown,
+}
+
+/// Protocol-level errors.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ApiError {
+    #[error("empty request")]
+    Empty,
+    #[error("unknown command {0:?}")]
+    UnknownCommand(String),
+    #[error("{cmd}: expected {expected}")]
+    BadArity {
+        /// Command name.
+        cmd: &'static str,
+        /// Human-readable expectation.
+        expected: &'static str,
+    },
+    #[error("invalid {what}: {value:?}")]
+    BadValue {
+        /// What failed to parse.
+        what: &'static str,
+        /// Offending token.
+        value: String,
+    },
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, ApiError> {
+    let mut it = line.split_whitespace();
+    let cmd = it.next().ok_or(ApiError::Empty)?;
+    let rest: Vec<&str> = it.collect();
+    match cmd.to_ascii_uppercase().as_str() {
+        "SUBMIT" => {
+            if rest.len() < 4 || rest.len() > 5 {
+                return Err(ApiError::BadArity {
+                    cmd: "SUBMIT",
+                    expected: "<qos> <type> <tasks> <user> [run_secs]",
+                });
+            }
+            let qos = match rest[0].to_ascii_lowercase().as_str() {
+                "normal" => QosClass::Normal,
+                "spot" => QosClass::Spot,
+                other => {
+                    return Err(ApiError::BadValue {
+                        what: "qos",
+                        value: other.to_string(),
+                    })
+                }
+            };
+            let job_type = match rest[1].to_ascii_lowercase().as_str() {
+                "individual" => JobType::Individual,
+                "array" => JobType::Array,
+                "triple" => JobType::TripleMode,
+                other => {
+                    return Err(ApiError::BadValue {
+                        what: "job type",
+                        value: other.to_string(),
+                    })
+                }
+            };
+            let tasks: u32 = rest[2].parse().map_err(|_| ApiError::BadValue {
+                what: "tasks",
+                value: rest[2].to_string(),
+            })?;
+            if tasks == 0 {
+                return Err(ApiError::BadValue {
+                    what: "tasks",
+                    value: "0".into(),
+                });
+            }
+            let user: u32 = rest[3].parse().map_err(|_| ApiError::BadValue {
+                what: "user",
+                value: rest[3].to_string(),
+            })?;
+            let run_secs: f64 = match rest.get(4) {
+                Some(s) => s.parse().map_err(|_| ApiError::BadValue {
+                    what: "run_secs",
+                    value: s.to_string(),
+                })?,
+                None => 3600.0,
+            };
+            Ok(Request::Submit {
+                qos,
+                job_type,
+                tasks,
+                user,
+                run_secs,
+            })
+        }
+        "SQUEUE" => Ok(Request::Squeue),
+        "SCANCEL" => {
+            let id: u64 = rest
+                .first()
+                .ok_or(ApiError::BadArity {
+                    cmd: "SCANCEL",
+                    expected: "<job_id>",
+                })?
+                .parse()
+                .map_err(|_| ApiError::BadValue {
+                    what: "job id",
+                    value: rest.first().unwrap_or(&"").to_string(),
+                })?;
+            Ok(Request::Scancel(id))
+        }
+        "STATS" => Ok(Request::Stats),
+        "UTIL" => Ok(Request::Util),
+        "PING" => Ok(Request::Ping),
+        "SHUTDOWN" => Ok(Request::Shutdown),
+        other => Err(ApiError::UnknownCommand(other.to_string())),
+    }
+}
+
+/// Render a successful response body (without the terminating blank line).
+pub fn ok(body: impl AsRef<str>) -> String {
+    let body = body.as_ref();
+    if body.is_empty() {
+        "OK".to_string()
+    } else {
+        format!("OK {body}")
+    }
+}
+
+/// Render an error response.
+pub fn err(e: &ApiError) -> String {
+    format!("ERR {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_submit() {
+        let r = parse_request("SUBMIT normal triple 4096 1 600").unwrap();
+        assert_eq!(
+            r,
+            Request::Submit {
+                qos: QosClass::Normal,
+                job_type: JobType::TripleMode,
+                tasks: 4096,
+                user: 1,
+                run_secs: 600.0,
+            }
+        );
+    }
+
+    #[test]
+    fn parse_submit_default_runtime() {
+        match parse_request("submit spot array 128 9").unwrap() {
+            Request::Submit { run_secs, qos, .. } => {
+                assert_eq!(run_secs, 3600.0);
+                assert_eq!(qos, QosClass::Spot);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_simple_commands() {
+        assert_eq!(parse_request("SQUEUE").unwrap(), Request::Squeue);
+        assert_eq!(parse_request("ping").unwrap(), Request::Ping);
+        assert_eq!(parse_request("SCANCEL 42").unwrap(), Request::Scancel(42));
+        assert_eq!(parse_request("STATS").unwrap(), Request::Stats);
+        assert_eq!(parse_request("UTIL").unwrap(), Request::Util);
+        assert_eq!(parse_request("SHUTDOWN").unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(parse_request("").unwrap_err(), ApiError::Empty);
+        assert!(matches!(
+            parse_request("FROBNICATE").unwrap_err(),
+            ApiError::UnknownCommand(_)
+        ));
+        assert!(matches!(
+            parse_request("SUBMIT normal").unwrap_err(),
+            ApiError::BadArity { cmd: "SUBMIT", .. }
+        ));
+        assert!(matches!(
+            parse_request("SUBMIT normal warp 1 1").unwrap_err(),
+            ApiError::BadValue { what: "job type", .. }
+        ));
+        assert!(matches!(
+            parse_request("SUBMIT normal array 0 1").unwrap_err(),
+            ApiError::BadValue { what: "tasks", .. }
+        ));
+        assert!(matches!(
+            parse_request("SCANCEL x").unwrap_err(),
+            ApiError::BadValue { what: "job id", .. }
+        ));
+    }
+
+    #[test]
+    fn response_rendering() {
+        assert_eq!(ok(""), "OK");
+        assert_eq!(ok("job=3"), "OK job=3");
+        assert!(err(&ApiError::Empty).starts_with("ERR "));
+    }
+}

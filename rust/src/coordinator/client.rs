@@ -1,0 +1,47 @@
+//! Blocking client for the daemon's TCP protocol.
+
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// A connected client.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to `host:port`.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .context("read timeout")?;
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Self {
+            writer: stream,
+            reader,
+        })
+    }
+
+    /// Send one request line, read the response (terminated by a blank
+    /// line). Returns the response without the terminator.
+    pub fn request(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut out = String::new();
+        loop {
+            let mut buf = String::new();
+            let n = self.reader.read_line(&mut buf)?;
+            anyhow::ensure!(n > 0, "server closed the connection");
+            if buf == "\n" {
+                break;
+            }
+            out.push_str(&buf);
+        }
+        Ok(out.trim_end_matches('\n').to_string())
+    }
+}

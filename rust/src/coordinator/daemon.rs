@@ -1,0 +1,346 @@
+//! The daemon core: the scheduler as a long-running, thread-safe service.
+//!
+//! Virtual time advances against the wall clock via a **pacer** thread: every
+//! tick it runs the scheduler's event loop up to `elapsed_wall × speedup`.
+//! API requests (submit, queue, cancel, stats) lock the scheduler, act, and
+//! return. Interactive jobs' virtual scheduling latencies (the paper's
+//! metric) are harvested from the event log into the daemon metrics.
+
+use super::api::{self, ApiError, Request};
+use super::metrics::DaemonMetrics;
+use crate::cluster::Cluster;
+use crate::job::{JobId, JobSpec, JobState, QosClass, UserId};
+use crate::sched::{LogKind, Scheduler, SchedulerConfig};
+use crate::sim::SimTime;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Daemon parameters.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Virtual seconds advanced per wall-clock second (the simulation keeps
+    /// up with real submissions at any speedup; 1.0 = real time).
+    pub speedup: f64,
+    /// Pacer tick in milliseconds.
+    pub pacer_tick_ms: u64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            speedup: 60.0,
+            pacer_tick_ms: 5,
+        }
+    }
+}
+
+/// The daemon: shared scheduler + metrics + lifecycle flag.
+pub struct Daemon {
+    sched: Mutex<Scheduler>,
+    /// Daemon metrics (public for the e2e driver's reporting).
+    pub metrics: DaemonMetrics,
+    running: AtomicBool,
+    start: Instant,
+    cfg: DaemonConfig,
+    tracked: Mutex<BTreeSet<JobId>>,
+}
+
+impl Daemon {
+    /// Create a daemon over a fresh scheduler.
+    pub fn new(cluster: Cluster, sched_cfg: SchedulerConfig, cfg: DaemonConfig) -> Arc<Self> {
+        Arc::new(Self {
+            sched: Mutex::new(Scheduler::new(cluster, sched_cfg)),
+            metrics: DaemonMetrics::default(),
+            running: AtomicBool::new(true),
+            start: Instant::now(),
+            cfg,
+            tracked: Mutex::new(BTreeSet::new()),
+        })
+    }
+
+    /// Still serving?
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+
+    /// Request shutdown.
+    pub fn shutdown(&self) {
+        self.running.store(false, Ordering::SeqCst);
+    }
+
+    /// Target virtual time for the current wall clock.
+    fn target_now(&self) -> SimTime {
+        SimTime::from_secs_f64(self.start.elapsed().as_secs_f64() * self.cfg.speedup)
+    }
+
+    /// Advance the scheduler to the current wall-paced virtual time and
+    /// harvest newly dispatched tracked jobs into the metrics.
+    pub fn pace(&self) {
+        let target = self.target_now();
+        let mut sched = self.sched.lock().expect("scheduler poisoned");
+        if target > sched.now() {
+            sched.run_until(target);
+        }
+        let mut tracked = self.tracked.lock().expect("tracked poisoned");
+        let done: Vec<JobId> = tracked
+            .iter()
+            .copied()
+            .filter(|&j| sched.log().last(j, LogKind::DispatchDone).is_some())
+            .collect();
+        for j in done {
+            tracked.remove(&j);
+            let rec = sched.log().first(j, LogKind::Recognized).expect("recognized");
+            let dis = sched.log().last(j, LogKind::DispatchDone).expect("dispatched");
+            self.metrics.record_sched_latency(dis.saturating_sub(rec).as_nanos());
+        }
+    }
+
+    /// Spawn the pacer thread. Returns its join handle; the thread exits on
+    /// shutdown.
+    pub fn spawn_pacer(self: &Arc<Self>) -> std::thread::JoinHandle<()> {
+        let daemon = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("spotcloud-pacer".into())
+            .spawn(move || {
+                while daemon.is_running() {
+                    daemon.pace();
+                    std::thread::sleep(std::time::Duration::from_millis(daemon.cfg.pacer_tick_ms));
+                }
+            })
+            .expect("spawning pacer")
+    }
+
+    /// Handle one request line; returns the response body.
+    pub fn handle_line(&self, line: &str) -> String {
+        let t0 = Instant::now();
+        let result = api::parse_request(line).map(|req| self.handle(req));
+        let ok = result.is_ok();
+        let resp = match result {
+            Ok(r) => r,
+            Err(e) => api::err(&e),
+        };
+        self.metrics.record_request(ok, t0.elapsed().as_nanos() as u64);
+        resp
+    }
+
+    fn handle(&self, req: Request) -> String {
+        match req {
+            Request::Ping => api::ok("pong"),
+            Request::Shutdown => {
+                self.shutdown();
+                api::ok("shutting down")
+            }
+            Request::Submit {
+                qos,
+                job_type,
+                tasks,
+                user,
+                run_secs,
+            } => self.handle_submit(qos, job_type, tasks, user, run_secs),
+            Request::Scancel(id) => {
+                let mut sched = self.sched.lock().expect("scheduler poisoned");
+                if sched.cancel(JobId(id)) {
+                    api::ok(format!("cancelled {id}"))
+                } else {
+                    api::err(&ApiError::BadValue {
+                        what: "job id",
+                        value: id.to_string(),
+                    })
+                }
+            }
+            Request::Squeue => {
+                let sched = self.sched.lock().expect("scheduler poisoned");
+                let mut body = String::from("JOBID TYPE TASKS USER QOS STATE\n");
+                let mut shown = 0;
+                for st in [JobState::Pending, JobState::Running, JobState::Requeued] {
+                    for id in sched.jobs_in_state(st) {
+                        let j = sched.job(id).expect("listed job");
+                        body.push_str(&format!(
+                            "{} {} {} {} {} {:?}\n",
+                            id.0,
+                            j.spec.job_type.label(),
+                            j.spec.tasks,
+                            j.spec.user,
+                            j.spec.qos,
+                            j.state
+                        ));
+                        shown += 1;
+                    }
+                }
+                body.push_str(&format!("({shown} jobs)"));
+                api::ok(format!("\n{body}"))
+            }
+            Request::Stats => {
+                let sched = self.sched.lock().expect("scheduler poisoned");
+                let st = sched.stats();
+                api::ok(format!(
+                    "\nvirtual_now={} dispatches={} preemptions={} requeues={} cron_passes={} \
+                     main_passes={} backfill_passes={} triggered_passes={} score_batches={} jobs_scored={} scorer={}\n{}",
+                    sched.now(),
+                    st.dispatches,
+                    st.preemptions,
+                    st.requeues,
+                    st.cron_passes,
+                    st.main_passes,
+                    st.backfill_passes,
+                    st.triggered_passes,
+                    st.score_batches,
+                    st.jobs_scored,
+                    sched.config().scorer.name(),
+                    self.metrics.summary()
+                ))
+            }
+            Request::Util => {
+                let sched = self.sched.lock().expect("scheduler poisoned");
+                let c = sched.cluster();
+                api::ok(format!(
+                    "utilization={:.4} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
+                    c.utilization(),
+                    c.idle_cores(),
+                    c.idle_node_count(),
+                    c.total_cores(),
+                    sched.jobs_in_state(JobState::Pending).len(),
+                    sched.jobs_in_state(JobState::Running).len(),
+                ))
+            }
+        }
+    }
+
+    fn handle_submit(
+        &self,
+        qos: QosClass,
+        job_type: crate::job::JobType,
+        tasks: u32,
+        user: u32,
+        run_secs: f64,
+    ) -> String {
+        let specs: Vec<JobSpec> = match qos {
+            QosClass::Normal => crate::workload::interactive_burst(UserId(user), job_type, tasks),
+            QosClass::Spot => vec![JobSpec::spot(UserId(user), job_type, tasks)],
+        }
+        .into_iter()
+        .map(|s| s.with_run_time(SimTime::from_secs_f64(run_secs)))
+        .collect();
+
+        let mut sched = self.sched.lock().expect("scheduler poisoned");
+        // Keep the virtual clock caught up so submissions land "now".
+        let target = self.target_now();
+        if target > sched.now() {
+            sched.run_until(target);
+        }
+        let ids = sched.submit_burst(specs);
+        self.metrics
+            .jobs_submitted
+            .fetch_add(ids.len() as u64, Ordering::Relaxed);
+        if qos == QosClass::Normal {
+            let mut tracked = self.tracked.lock().expect("tracked poisoned");
+            tracked.extend(ids.iter().copied());
+        }
+        let first = ids.first().map(|j| j.0).unwrap_or(0);
+        let last = ids.last().map(|j| j.0).unwrap_or(0);
+        api::ok(format!("jobs={first}-{last} count={}", ids.len()))
+    }
+
+    /// Lock and inspect the scheduler (tests + e2e reporting).
+    pub fn with_scheduler<T>(&self, f: impl FnOnce(&Scheduler) -> T) -> T {
+        let sched = self.sched.lock().expect("scheduler poisoned");
+        f(&sched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{topology, PartitionLayout};
+    use crate::sim::SchedCosts;
+
+    fn daemon() -> Arc<Daemon> {
+        Daemon::new(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+            DaemonConfig {
+                speedup: 10_000.0, // tests shouldn't wait on the wall clock
+                pacer_tick_ms: 1,
+            },
+        )
+    }
+
+    #[test]
+    fn ping_and_stats() {
+        let d = daemon();
+        assert_eq!(d.handle_line("PING"), "OK pong");
+        assert!(d.handle_line("STATS").contains("virtual_now"));
+    }
+
+    #[test]
+    fn submit_runs_to_dispatch() {
+        let d = daemon();
+        let resp = d.handle_line("SUBMIT normal triple 608 1 60");
+        assert!(resp.starts_with("OK jobs="), "{resp}");
+        // Pace until dispatch shows up in metrics.
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        while d.metrics.sched_latency().count() == 0 {
+            assert!(Instant::now() < deadline, "job never dispatched");
+            d.pace();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let h = d.metrics.sched_latency();
+        assert_eq!(h.count(), 1);
+        // Baseline triple-mode latency is sub-second of *virtual* time.
+        assert!(h.max() < 2_000_000_000, "virtual latency {}ns", h.max());
+    }
+
+    #[test]
+    fn squeue_lists_jobs() {
+        let d = daemon();
+        d.handle_line("SUBMIT spot triple 320 9 600");
+        let out = d.handle_line("SQUEUE");
+        assert!(out.contains("triple-mode 320 user9 spot"), "{out}");
+    }
+
+    #[test]
+    fn scancel_pending_job() {
+        let d = daemon();
+        let resp = d.handle_line("SUBMIT normal array 64 1 600");
+        let id: u64 = resp
+            .split("jobs=")
+            .nth(1)
+            .unwrap()
+            .split('-')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        let out = d.handle_line(&format!("SCANCEL {id}"));
+        assert!(out.starts_with("OK cancelled"), "{out}");
+        // Cancelling again fails gracefully.
+        let out2 = d.handle_line(&format!("SCANCEL {id}"));
+        assert!(out2.starts_with("ERR"), "{out2}");
+    }
+
+    #[test]
+    fn bad_request_counts_as_error() {
+        let d = daemon();
+        let out = d.handle_line("SUBMIT nope nope nope nope");
+        assert!(out.starts_with("ERR"));
+        assert_eq!(d.metrics.requests_err.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn util_reports_cluster() {
+        let d = daemon();
+        let out = d.handle_line("UTIL");
+        assert!(out.contains("total_cores=608"), "{out}");
+        assert!(out.contains("utilization=0.0000"), "{out}");
+    }
+
+    #[test]
+    fn shutdown_flips_flag() {
+        let d = daemon();
+        assert!(d.is_running());
+        assert!(d.handle_line("SHUTDOWN").starts_with("OK"));
+        assert!(!d.is_running());
+    }
+}

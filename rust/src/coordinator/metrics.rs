@@ -1,0 +1,86 @@
+//! Daemon metrics: request counters and latency histograms.
+
+use crate::metrics::LogHistogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe daemon metrics.
+#[derive(Default)]
+pub struct DaemonMetrics {
+    /// Requests served, by outcome.
+    pub requests_ok: AtomicU64,
+    /// Requests that failed to parse or execute.
+    pub requests_err: AtomicU64,
+    /// Jobs submitted through the API.
+    pub jobs_submitted: AtomicU64,
+    /// Wall-clock latency of request handling (ns).
+    request_latency: Mutex<LogHistogram>,
+    /// *Virtual* scheduling latency of interactive jobs (recognized →
+    /// dispatched, ns of sim time) — the paper's metric, live.
+    sched_latency: Mutex<LogHistogram>,
+}
+
+impl DaemonMetrics {
+    /// Record one request outcome + wall latency.
+    pub fn record_request(&self, ok: bool, wall_ns: u64) {
+        if ok {
+            self.requests_ok.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.requests_err.fetch_add(1, Ordering::Relaxed);
+        }
+        self.request_latency
+            .lock()
+            .expect("metrics poisoned")
+            .record(wall_ns);
+    }
+
+    /// Record a job's virtual scheduling latency.
+    pub fn record_sched_latency(&self, sim_ns: u64) {
+        self.sched_latency
+            .lock()
+            .expect("metrics poisoned")
+            .record(sim_ns);
+    }
+
+    /// Snapshot of the request-latency histogram.
+    pub fn request_latency(&self) -> LogHistogram {
+        self.request_latency.lock().expect("metrics poisoned").clone()
+    }
+
+    /// Snapshot of the scheduling-latency histogram.
+    pub fn sched_latency(&self) -> LogHistogram {
+        self.sched_latency.lock().expect("metrics poisoned").clone()
+    }
+
+    /// One-line textual summary for the STATS command.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests_ok={} requests_err={} jobs_submitted={} | request_wall: {} | sched_virtual: {}",
+            self.requests_ok.load(Ordering::Relaxed),
+            self.requests_err.load(Ordering::Relaxed),
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.request_latency().summary_ns(),
+            self.sched_latency().summary_ns(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = DaemonMetrics::default();
+        m.record_request(true, 1_000_000);
+        m.record_request(false, 2_000_000);
+        m.record_sched_latency(500_000_000);
+        m.jobs_submitted.fetch_add(3, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("requests_ok=1"));
+        assert!(s.contains("requests_err=1"));
+        assert!(s.contains("jobs_submitted=3"));
+        assert_eq!(m.request_latency().count(), 2);
+        assert_eq!(m.sched_latency().count(), 1);
+    }
+}

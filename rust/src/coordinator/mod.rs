@@ -1,0 +1,24 @@
+//! The runnable coordinator daemon.
+//!
+//! Wraps the [`crate::sched::Scheduler`] in a thread-safe service with a
+//! line-based TCP API (tokio is unavailable offline, so the connection
+//! handling runs on our own [`threadpool`]):
+//!
+//! * [`daemon`] — the service core: scheduler behind a mutex, a pacer thread
+//!   that advances virtual time against the wall clock at a configurable
+//!   speedup, and per-request latency metrics.
+//! * [`api`] — the text protocol (SUBMIT/SQUEUE/SCANCEL/STATS/...).
+//! * [`server`] — TCP listener + connection loop.
+//! * [`client`] — a blocking client for the CLI and examples.
+//! * [`metrics`] — daemon counters and latency histograms.
+//! * [`threadpool`] — fixed worker pool substrate.
+
+pub mod api;
+pub mod client;
+pub mod daemon;
+pub mod metrics;
+pub mod server;
+pub mod threadpool;
+
+pub use daemon::{Daemon, DaemonConfig};
+pub use server::Server;

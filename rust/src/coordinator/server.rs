@@ -1,0 +1,177 @@
+//! TCP server: line-based request/response over a worker pool.
+//!
+//! Responses may span multiple lines and are terminated by one blank line.
+
+use super::daemon::Daemon;
+use super::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The TCP front-end.
+pub struct Server {
+    listener: TcpListener,
+    daemon: Arc<Daemon>,
+    pool: ThreadPool,
+}
+
+impl Server {
+    /// Bind to an address (use port 0 for an ephemeral port).
+    pub fn bind(daemon: Arc<Daemon>, addr: &str, workers: usize) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        // Non-blocking accept so the loop can observe shutdown.
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        Ok(Self {
+            listener,
+            daemon,
+            pool: ThreadPool::new(workers.max(1)),
+        })
+    }
+
+    /// The bound address.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until the daemon shuts down.
+    pub fn serve(&self) {
+        while self.daemon.is_running() {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let daemon = Arc::clone(&self.daemon);
+                    self.pool.execute(move || {
+                        if let Err(e) = handle_connection(stream, &daemon) {
+                            eprintln!("connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    eprintln!("accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, daemon: &Arc<Daemon>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Short poll timeout so idle connections observe daemon shutdown
+    // promptly (a long blocking read would stall worker-pool teardown).
+    stream
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .context("read timeout")?;
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        // Note: on a poll timeout, any partially-read bytes stay in `line`
+        // and the next read_line continues appending — no data loss.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // peer closed
+            Ok(_) => {
+                let trimmed = line.trim_end_matches(['\n', '\r']).to_string();
+                line.clear();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let resp = daemon.handle_line(&trimmed);
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n\n")?;
+                writer.flush()?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Idle poll tick: keep waiting unless shutting down.
+            }
+            Err(_) => break, // peer gone
+        }
+        if !daemon.is_running() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{topology, PartitionLayout};
+    use crate::coordinator::client::Client;
+    use crate::coordinator::daemon::DaemonConfig;
+    use crate::sched::SchedulerConfig;
+    use crate::sim::SchedCosts;
+
+    fn spawn_server() -> (Arc<Daemon>, SocketAddr, std::thread::JoinHandle<()>) {
+        let daemon = Daemon::new(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+            DaemonConfig {
+                speedup: 10_000.0,
+                pacer_tick_ms: 1,
+            },
+        );
+        let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || server.serve());
+        (daemon, addr, handle)
+    }
+
+    #[test]
+    fn ping_over_tcp() {
+        let (daemon, addr, handle) = spawn_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        assert_eq!(c.request("PING").unwrap(), "OK pong");
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn submit_and_squeue_over_tcp() {
+        let (daemon, addr, handle) = spawn_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let resp = c.request("SUBMIT spot triple 320 9 600").unwrap();
+        assert!(resp.starts_with("OK jobs="), "{resp}");
+        let q = c.request("SQUEUE").unwrap();
+        assert!(q.contains("triple-mode 320"), "{q}");
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (daemon, addr, handle) = spawn_server();
+        let addr_s = addr.to_string();
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let a = addr_s.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&a).unwrap();
+                    for _ in 0..10 {
+                        assert_eq!(c.request("PING").unwrap(), "OK pong");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_over_tcp_stops_server() {
+        let (_daemon, addr, handle) = spawn_server();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        assert!(c.request("SHUTDOWN").unwrap().starts_with("OK"));
+        handle.join().unwrap(); // server loop must exit
+    }
+}

@@ -1,0 +1,110 @@
+//! A fixed-size worker thread pool (tokio substitute for connection
+//! handling).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A pool of worker threads consuming tasks from a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (≥1).
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0, "pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("spotcloud-worker-{i}"))
+                    .spawn(move || loop {
+                        let task = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(task) => task(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawning worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Submit a task. Panics if the pool is shut down.
+    pub fn execute(&self, task: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(task))
+            .expect("workers gone");
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel, then join the workers.
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn tasks_run_concurrently() {
+        let pool = ThreadPool::new(4);
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let b = Arc::clone(&barrier);
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                // Deadlocks unless all 4 run in parallel.
+                b.wait();
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn zero_workers_panics() {
+        let _ = ThreadPool::new(0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Ablations on the paper's design choices (DESIGN.md §7):
+//!
+//! 1. **Reserve size** — the paper pins the idle reserve to the per-user
+//!    limit; smaller reserves delay back-to-back jobs, larger reserves cost
+//!    spot capacity.
+//! 2. **Cron interval** — the 1-minute crontab bounds the wait of a second
+//!    job arriving inside one interval.
+//! 3. **LIFO vs FIFO victim order** — youngest-first preserves old spot
+//!    jobs' progress.
+
+use super::{ExpReport, ExpRow, Expectation};
+use crate::cluster::{topology, PartitionLayout};
+use crate::job::{JobState, JobType, UserId};
+use crate::preempt::lifo::{self, Demand, Order};
+use crate::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
+use crate::sched::{Scheduler, SchedulerConfig};
+use crate::sim::{SchedCosts, SimTime};
+use crate::workload::{interactive_burst, spot_fill};
+
+/// Run all three ablations.
+pub fn run(seed: u64) -> ExpReport {
+    let mut rows = Vec::new();
+    let mut expectations = Vec::new();
+
+    // ---- 1. reserve size sweep -------------------------------------------
+    let mut waits = Vec::new();
+    for reserve in [1u32, 2, 5, 10] {
+        let (second_wait, spot_nodes) = back_to_back(reserve, 5, SimTime::from_secs(60), seed);
+        waits.push((reserve, second_wait, spot_nodes));
+        rows.push(ExpRow {
+            series: format!("reserve={reserve} nodes (spot capacity {spot_nodes} nodes)"),
+            job_type: JobType::TripleMode,
+            tasks: 160,
+            total_secs: second_wait,
+            per_task_secs: second_wait / 160.0,
+        });
+    }
+    expectations.push(Expectation {
+        claim: "a reserve >= the job size makes back-to-back waits small; smaller reserves pay the cron delay",
+        holds: {
+            let small = waits.iter().find(|w| w.0 == 1).unwrap().1;
+            let big = waits.iter().find(|w| w.0 == 10).unwrap().1;
+            big < small
+        },
+        detail: waits
+            .iter()
+            .map(|(r, w, _)| format!("reserve {r}: {w:.1}s"))
+            .collect::<Vec<_>>()
+            .join(", "),
+    });
+    expectations.push(Expectation {
+        claim: "larger reserves cost spot capacity (the utilization trade-off)",
+        holds: {
+            let cap_small = waits.iter().find(|w| w.0 == 1).unwrap().2;
+            let cap_big = waits.iter().find(|w| w.0 == 10).unwrap().2;
+            cap_big < cap_small
+        },
+        detail: waits
+            .iter()
+            .map(|(r, _, c)| format!("reserve {r}: {c} spot nodes"))
+            .collect::<Vec<_>>()
+            .join(", "),
+    });
+
+    // ---- 2. cron interval sweep --------------------------------------------
+    let mut interval_rows = Vec::new();
+    for interval in [30u64, 60, 300] {
+        let (second_wait, _) = back_to_back(5, 5, SimTime::from_secs(interval), seed);
+        interval_rows.push((interval, second_wait));
+        rows.push(ExpRow {
+            series: format!("cron interval={interval}s"),
+            job_type: JobType::TripleMode,
+            tasks: 160,
+            total_secs: second_wait,
+            per_task_secs: second_wait / 160.0,
+        });
+    }
+    expectations.push(Expectation {
+        claim: "a longer cron interval lengthens the second job's worst-case wait",
+        holds: {
+            let w30 = interval_rows.iter().find(|x| x.0 == 30).unwrap().1;
+            let w300 = interval_rows.iter().find(|x| x.0 == 300).unwrap().1;
+            w300 > w30
+        },
+        detail: interval_rows
+            .iter()
+            .map(|(i, w)| format!("{i}s: {w:.1}s"))
+            .collect::<Vec<_>>()
+            .join(", "),
+    });
+
+    // ---- 3. LIFO vs FIFO victim order ---------------------------------------
+    let victims = [
+        lifo::Victim {
+            job: crate::job::JobId(1),
+            queue_time: SimTime::from_secs(100), // oldest
+            cores: 64,
+            whole_nodes: 1,
+        },
+        lifo::Victim {
+            job: crate::job::JobId(2),
+            queue_time: SimTime::from_secs(500),
+            cores: 64,
+            whole_nodes: 1,
+        },
+        lifo::Victim {
+            job: crate::job::JobId(3),
+            queue_time: SimTime::from_secs(900), // youngest
+            cores: 64,
+            whole_nodes: 1,
+        },
+    ];
+    let lifo_sel = lifo::select_victims(&victims, Demand::Cores(100), Order::YoungestFirst).unwrap();
+    let fifo_sel = lifo::select_victims(&victims, Demand::Cores(100), Order::OldestFirst).unwrap();
+    expectations.push(Expectation {
+        claim: "LIFO spares the oldest spot job; FIFO kills it first",
+        holds: !lifo_sel.contains(&crate::job::JobId(1)) && fifo_sel.contains(&crate::job::JobId(1)),
+        detail: format!("LIFO selects {lifo_sel:?}, FIFO selects {fifo_sel:?}"),
+    });
+
+    ExpReport {
+        id: "ablations",
+        title: "Design-choice ablations: reserve size, cron interval, victim order",
+        rows,
+        expectations,
+    }
+}
+
+/// Submit two 5-node interactive jobs back-to-back (1 s apart) on a
+/// spot-loaded TX-2500 with the given reserve and cron interval. Returns
+/// (second job scheduling time in seconds, spot capacity in nodes).
+fn back_to_back(reserve_nodes: u32, job_nodes: u32, cron_interval: SimTime, seed: u64) -> (f64, u32) {
+    let mut costs = SchedCosts::dedicated();
+    costs.cron_interval = cron_interval;
+    let cfg = SchedulerConfig::baseline(costs, PartitionLayout::Dual)
+        .with_user_limit(job_nodes * 32)
+        .with_phase_seed(seed)
+        .with_approach(PreemptApproach::CronAgent {
+            mode: PreemptMode::Requeue,
+            cfg: CronAgentConfig { reserve_nodes },
+        });
+    let mut sched = Scheduler::new(topology::tx2500(), cfg);
+    let horizon = SimTime::from_secs(4 * 3600);
+
+    // Fill spot to the ceiling.
+    let fill = spot_fill(UserId(900), 19 * 32, 6);
+    let ids = sched.submit_burst(fill.clone());
+    let _ = sched.run_until_dispatched(&ids, SimTime::from_secs(600));
+    sched.run_for(SimTime::from_secs(400)); // settle to steady state
+    let spot_nodes: u32 = ids
+        .iter()
+        .filter(|&&id| sched.job(id).map(|j| j.state) == Some(JobState::Running))
+        .map(|&id| {
+            sched
+                .cluster()
+                .allocation_of(id)
+                .map(|a| a.node_count() as u32)
+                .unwrap_or(0)
+        })
+        .sum();
+
+    let tasks = job_nodes * 32;
+    let j1 = sched.submit_burst(interactive_burst(UserId(1), JobType::TripleMode, tasks));
+    assert!(sched.run_until_dispatched(&j1, horizon));
+    let j2 = sched.submit_burst(interactive_burst(UserId(2), JobType::TripleMode, tasks));
+    assert!(sched.run_until_dispatched(&j2, horizon), "second job stuck");
+    let m = sched.log().measure(&j2).expect("measured");
+    (m.total_secs, spot_nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ablation_shapes_hold() {
+        let report = super::run(1);
+        assert!(report.check(), "\n{}", report.render());
+    }
+}

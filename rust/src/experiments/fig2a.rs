@@ -1,0 +1,112 @@
+//! Fig 2a: TX-2500 development cluster (608 tasks), baseline vs automatic
+//! scheduler preemption (REQUEUE), single and dual partition configurations,
+//! three job types.
+
+use super::{ratio, Case, ExpReport, ExpRow, Expectation};
+use crate::cluster::{topology, PartitionLayout};
+use crate::job::JobType;
+use crate::preempt::{PreemptApproach, PreemptMode};
+use crate::sim::SchedCosts;
+
+const TASKS: u32 = 608;
+
+/// Run the experiment.
+pub fn run(seed: u64) -> ExpReport {
+    let mut rows = Vec::new();
+    for jt in JobType::all() {
+        for (series, layout, fill) in [
+            ("baseline", PartitionLayout::Dual, 0u32),
+            ("auto/REQUEUE/single", PartitionLayout::Single, TASKS),
+            ("auto/REQUEUE/dual", PartitionLayout::Dual, TASKS),
+        ] {
+            let mut case = Case::baseline(
+                SchedCosts::dedicated(),
+                topology::tx2500,
+                layout,
+                jt,
+                TASKS,
+            )
+            .with_seed(seed);
+            if fill > 0 {
+                case = case.with_preemption(
+                    PreemptApproach::AutoScheduler {
+                        mode: PreemptMode::Requeue,
+                    },
+                    fill,
+                    1,
+                );
+            }
+            let r = super::run_case(&case);
+            rows.push(ExpRow {
+                series: series.to_string(),
+                job_type: jt,
+                tasks: TASKS,
+                total_secs: r.total_secs,
+                per_task_secs: r.per_task_secs,
+            });
+        }
+    }
+
+    let report = ExpReport {
+        id: "fig2a",
+        title: "TX-2500: baseline vs scheduler auto-preemption (REQUEUE), single/dual partition",
+        expectations: expectations(&rows),
+        rows,
+    };
+    report
+}
+
+fn expectations(rows: &[ExpRow]) -> Vec<Expectation> {
+    let get = |series: &str, jt: JobType| {
+        rows.iter()
+            .find(|r| r.series == series && r.job_type == jt)
+            .expect("row")
+    };
+    let base_tri = get("baseline", JobType::TripleMode);
+    let base_ind = get("baseline", JobType::Individual);
+    let base_arr = get("baseline", JobType::Array);
+    let tri_single = get("auto/REQUEUE/single", JobType::TripleMode);
+    let tri_dual = get("auto/REQUEUE/dual", JobType::TripleMode);
+
+    let tri_speedup = ratio(base_ind, base_tri).min(ratio(base_arr, base_tri));
+    let mut out = vec![Expectation {
+        claim: "triple-mode baseline dispatches ≥50x faster per task than individual/array",
+        holds: tri_speedup >= 50.0,
+        detail: format!("measured {:.0}x", tri_speedup),
+    }];
+    out.push(Expectation {
+        claim: "auto preemption is slower than baseline (triple-mode, both layouts)",
+        holds: tri_single.per_task_secs > base_tri.per_task_secs
+            && tri_dual.per_task_secs > base_tri.per_task_secs,
+        detail: format!(
+            "single {:.1}x, dual {:.1}x baseline",
+            ratio(tri_single, base_tri),
+            ratio(tri_dual, base_tri)
+        ),
+    });
+    out.push(Expectation {
+        claim: "single partition is slower than dual (preemption path)",
+        holds: tri_single.per_task_secs > tri_dual.per_task_secs,
+        detail: format!("single/dual = {:.2}x", ratio(tri_single, tri_dual)),
+    });
+    out.push(Expectation {
+        claim: "preemption effect is most significant for triple-mode jobs",
+        holds: {
+            let tri_deg = ratio(tri_dual, base_tri);
+            let ind_deg = ratio(get("auto/REQUEUE/dual", JobType::Individual), base_ind);
+            let arr_deg = ratio(get("auto/REQUEUE/dual", JobType::Array), base_arr);
+            tri_deg > ind_deg && tri_deg > arr_deg
+        },
+        detail: "degradation ratio comparison".to_string(),
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shape_matches_paper() {
+        let report = super::run(1);
+        assert!(report.check(), "\n{}", report.render());
+    }
+}

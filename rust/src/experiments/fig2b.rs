@@ -1,0 +1,24 @@
+//! Fig 2b: TX-Green production (64-node reservation), **2048-core (medium)**
+//! interactive jobs with automatic preemption (REQUEUE), single/dual
+//! partitions, vs baseline.
+
+use super::{production_preempt_panel, ExpReport};
+
+/// Run the experiment.
+pub fn run(seed: u64) -> ExpReport {
+    production_preempt_panel(
+        "fig2b",
+        "TX-Green production: 2048-core jobs, auto-preemption (REQUEUE), single/dual",
+        2048,
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shape_matches_paper() {
+        let report = super::run(1);
+        assert!(report.check(), "\n{}", report.render());
+    }
+}

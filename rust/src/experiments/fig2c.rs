@@ -1,0 +1,39 @@
+//! Fig 2c: TX-Green production (64-node reservation), **4096-core (large)**
+//! interactive jobs with automatic preemption (REQUEUE), single/dual
+//! partitions, vs baseline.
+
+use super::{production_preempt_panel, ExpReport};
+
+/// Run the experiment.
+pub fn run(seed: u64) -> ExpReport {
+    production_preempt_panel(
+        "fig2c",
+        "TX-Green production: 4096-core jobs, auto-preemption (REQUEUE), single/dual",
+        4096,
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::job::JobType;
+
+    #[test]
+    fn shape_matches_paper() {
+        let report = super::run(1);
+        assert!(report.check(), "\n{}", report.render());
+    }
+
+    #[test]
+    fn triple_mode_degradation_is_orders_of_magnitude() {
+        let report = super::run(1);
+        let base = report.row("baseline", JobType::TripleMode).unwrap();
+        let single = report.row("auto/REQUEUE/single", JobType::TripleMode).unwrap();
+        let deg = single.per_task_secs / base.per_task_secs;
+        // Paper: "almost three orders of magnitude".
+        assert!(
+            deg >= 100.0,
+            "triple-mode degradation {deg:.0}x should be >= 2 orders of magnitude"
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Fig 2e: REQUEUE vs CANCEL preemption modes, **dual** partition, 4096
+//! cores on the production reservation.
+
+use super::{mode_comparison_panel, ExpReport};
+use crate::cluster::PartitionLayout;
+
+/// Run the experiment.
+pub fn run(seed: u64) -> ExpReport {
+    mode_comparison_panel(
+        "fig2e",
+        "TX-Green production: REQUEUE vs CANCEL, dual partition, 4096 cores",
+        PartitionLayout::Dual,
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shape_matches_paper() {
+        let report = super::run(1);
+        assert!(report.check(), "\n{}", report.render());
+    }
+}

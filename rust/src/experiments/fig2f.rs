@@ -1,0 +1,109 @@
+//! Fig 2f: manual preemption (modified sbatch: requeue-then-submit), dual
+//! partition, 4096 cores on the production reservation, vs baseline.
+//! Scheduling time measured **from preemption start**.
+
+use super::{ratio, Case, ExpReport, ExpRow, Expectation};
+use crate::cluster::{topology, PartitionLayout};
+use crate::job::JobType;
+use crate::preempt::{PreemptApproach, PreemptMode};
+use crate::sim::SchedCosts;
+
+const TASKS: u32 = 4096;
+
+/// Run the experiment.
+pub fn run(seed: u64) -> ExpReport {
+    let mut rows = Vec::new();
+    for jt in JobType::all() {
+        for (series, fill) in [("baseline", 0u32), ("manual/REQUEUE/dual", TASKS)] {
+            let mut case = Case::baseline(
+                SchedCosts::production(),
+                topology::txgreen_reservation,
+                PartitionLayout::Dual,
+                jt,
+                TASKS,
+            )
+            .with_seed(seed);
+            if fill > 0 {
+                case = case.with_preemption(
+                    PreemptApproach::Manual {
+                        mode: PreemptMode::Requeue,
+                    },
+                    fill,
+                    1,
+                );
+            }
+            let r = super::run_case(&case);
+            rows.push(ExpRow {
+                series: series.to_string(),
+                job_type: jt,
+                tasks: TASKS,
+                total_secs: r.total_secs,
+                per_task_secs: r.per_task_secs,
+            });
+        }
+    }
+
+    let get = |series: &str, jt: JobType| {
+        rows.iter()
+            .find(|r| r.series == series && r.job_type == jt)
+            .expect("row")
+            .clone()
+    };
+    let base_tri = get("baseline", JobType::TripleMode);
+    let man_tri = get("manual/REQUEUE/dual", JobType::TripleMode);
+    let man_ind = get("manual/REQUEUE/dual", JobType::Individual);
+    let man_arr = get("manual/REQUEUE/dual", JobType::Array);
+
+    let expectations = vec![
+        Expectation {
+            claim: "individual/array with manual preemption are on par with baseline (<2x)",
+            holds: ratio(&man_ind, &get("baseline", JobType::Individual)) < 2.0
+                && ratio(&man_arr, &get("baseline", JobType::Array)) < 2.0,
+            detail: format!(
+                "individual {:.2}x, array {:.2}x baseline",
+                ratio(&man_ind, &get("baseline", JobType::Individual)),
+                ratio(&man_arr, &get("baseline", JobType::Array))
+            ),
+        },
+        Expectation {
+            claim: "triple-mode manual preemption ~10x its baseline but single-digit seconds",
+            holds: {
+                let deg = ratio(&man_tri, &base_tri);
+                (2.0..60.0).contains(&deg) && man_tri.total_secs < 30.0
+            },
+            detail: format!(
+                "{:.1}x baseline, total {:.2}s",
+                ratio(&man_tri, &base_tri),
+                man_tri.total_secs
+            ),
+        },
+        Expectation {
+            claim: "triple-mode manual is ~7-11x faster than individual/array with preemption",
+            holds: {
+                let vs_ind = man_ind.total_secs / man_tri.total_secs;
+                let vs_arr = man_arr.total_secs / man_tri.total_secs;
+                vs_ind >= 3.0 && vs_arr >= 3.0
+            },
+            detail: format!(
+                "vs individual {:.1}x, vs array {:.1}x",
+                man_ind.total_secs / man_tri.total_secs,
+                man_arr.total_secs / man_tri.total_secs
+            ),
+        },
+    ];
+    ExpReport {
+        id: "fig2f",
+        title: "TX-Green production: manual (sbatch-requeue) preemption vs baseline, 4096 cores",
+        rows,
+        expectations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shape_matches_paper() {
+        let report = super::run(1);
+        assert!(report.check(), "\n{}", report.render());
+    }
+}

@@ -1,0 +1,312 @@
+//! The paper-reproduction harness: one module per figure/table.
+//!
+//! Every module exposes `run(seed) -> ExpReport`; the report prints the same
+//! rows/series the paper plots (scheduling time per task, log scale) plus
+//! the paper's expected shape so terminal output reads as a side-by-side.
+//! `benches/` wraps these, and `spotcloud experiment <id>` runs them from
+//! the CLI.
+
+pub mod ablations;
+pub mod fig2a;
+pub mod fig2b;
+pub mod fig2c;
+pub mod fig2d;
+pub mod fig2e;
+pub mod fig2f;
+pub mod fig2g;
+pub mod runner;
+pub mod table1;
+
+pub use runner::{run_case, Case, CaseResult};
+
+use crate::job::JobType;
+use crate::util::fmt::{fmt_sci, fmt_seconds, Table};
+
+/// One measured row of a figure.
+#[derive(Debug, Clone)]
+pub struct ExpRow {
+    /// Series label (e.g. "baseline", "preempt/REQUEUE/single").
+    pub series: String,
+    /// Job launch type.
+    pub job_type: JobType,
+    /// Tasks in the burst.
+    pub tasks: u32,
+    /// Total scheduling time (s).
+    pub total_secs: f64,
+    /// Scheduling time per task (s) — the paper's y-axis.
+    pub per_task_secs: f64,
+}
+
+/// A rendered experiment.
+#[derive(Debug, Clone)]
+pub struct ExpReport {
+    /// Identifier ("fig2a", "table1", ...).
+    pub id: &'static str,
+    /// Figure caption (what the paper's panel shows).
+    pub title: &'static str,
+    /// Measured rows.
+    pub rows: Vec<ExpRow>,
+    /// The paper's expected shape, asserted by `check()`.
+    pub expectations: Vec<Expectation>,
+}
+
+/// A checkable shape expectation (who wins, by what factor).
+#[derive(Debug, Clone)]
+pub struct Expectation {
+    /// Human-readable claim (from the paper).
+    pub claim: &'static str,
+    /// Whether the measured rows satisfy it.
+    pub holds: bool,
+    /// Supporting detail (measured ratio etc).
+    pub detail: String,
+}
+
+impl ExpReport {
+    /// Render the report as an ASCII table plus the expectation checklist.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "series",
+            "job type",
+            "tasks",
+            "total",
+            "sec/task (log-scale axis)",
+        ])
+        .with_title(format!("== {} — {} ==", self.id, self.title));
+        for r in &self.rows {
+            t.row(vec![
+                r.series.clone(),
+                r.job_type.label().to_string(),
+                r.tasks.to_string(),
+                fmt_seconds(r.total_secs),
+                fmt_sci(r.per_task_secs),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str("paper-shape checks:\n");
+        for e in &self.expectations {
+            out.push_str(&format!(
+                "  [{}] {} ({})\n",
+                if e.holds { "PASS" } else { "FAIL" },
+                e.claim,
+                e.detail
+            ));
+        }
+        out
+    }
+
+    /// All expectations hold?
+    pub fn check(&self) -> bool {
+        self.expectations.iter().all(|e| e.holds)
+    }
+
+    /// Find a row.
+    pub fn row(&self, series: &str, job_type: JobType) -> Option<&ExpRow> {
+        self.rows
+            .iter()
+            .find(|r| r.series == series && r.job_type == job_type)
+    }
+
+    /// CSV of the rows.
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(vec!["series", "job_type", "tasks", "total_secs", "per_task_secs"]);
+        for r in &self.rows {
+            t.row(vec![
+                r.series.clone(),
+                r.job_type.label().to_string(),
+                r.tasks.to_string(),
+                format!("{:.6}", r.total_secs),
+                format!("{:.6e}", r.per_task_secs),
+            ]);
+        }
+        t.to_csv()
+    }
+}
+
+/// Helper: ratio of two rows' per-task times.
+pub fn ratio(a: &ExpRow, b: &ExpRow) -> f64 {
+    a.per_task_secs / b.per_task_secs
+}
+
+/// Shared panel for Fig 2b/2c: production reservation, auto-preemption
+/// (REQUEUE) with single/dual partitions vs baseline, at a given job size.
+pub(crate) fn production_preempt_panel(
+    id: &'static str,
+    title: &'static str,
+    tasks: u32,
+    seed: u64,
+) -> ExpReport {
+    use crate::cluster::{topology, PartitionLayout};
+    use crate::preempt::{PreemptApproach, PreemptMode};
+    use crate::sim::SchedCosts;
+
+    const FILL: u32 = 4096; // the reservation is filled with triple-mode spot
+    let mut rows = Vec::new();
+    for jt in JobType::all() {
+        for (series, layout, fill) in [
+            ("baseline", PartitionLayout::Dual, 0u32),
+            ("auto/REQUEUE/single", PartitionLayout::Single, FILL),
+            ("auto/REQUEUE/dual", PartitionLayout::Dual, FILL),
+        ] {
+            let mut case = Case::baseline(
+                SchedCosts::production(),
+                topology::txgreen_reservation,
+                layout,
+                jt,
+                tasks,
+            )
+            .with_seed(seed);
+            if fill > 0 {
+                case = case.with_preemption(
+                    PreemptApproach::AutoScheduler {
+                        mode: PreemptMode::Requeue,
+                    },
+                    fill,
+                    1,
+                );
+            }
+            let r = run_case(&case);
+            rows.push(ExpRow {
+                series: series.to_string(),
+                job_type: jt,
+                tasks,
+                total_secs: r.total_secs,
+                per_task_secs: r.per_task_secs,
+            });
+        }
+    }
+
+    let get = |series: &str, jt: JobType| {
+        rows.iter()
+            .find(|r| r.series == series && r.job_type == jt)
+            .expect("row")
+            .clone()
+    };
+    let base_tri = get("baseline", JobType::TripleMode);
+    let tri_single = get("auto/REQUEUE/single", JobType::TripleMode);
+    let tri_dual = get("auto/REQUEUE/dual", JobType::TripleMode);
+    let expectations = vec![
+        Expectation {
+            claim: "preemption degrades every job type vs baseline",
+            holds: JobType::all().iter().all(|&jt| {
+                get("auto/REQUEUE/single", jt).per_task_secs > get("baseline", jt).per_task_secs
+                    && get("auto/REQUEUE/dual", jt).per_task_secs
+                        > get("baseline", jt).per_task_secs
+            }),
+            detail: "all six preemption rows above baseline".into(),
+        },
+        Expectation {
+            claim: "triple-mode degradation is ~2-3 orders of magnitude",
+            holds: ratio(&tri_single, &base_tri) >= 100.0 && ratio(&tri_dual, &base_tri) >= 100.0,
+            detail: format!(
+                "single {:.0}x, dual {:.0}x",
+                ratio(&tri_single, &base_tri),
+                ratio(&tri_dual, &base_tri)
+            ),
+        },
+        Expectation {
+            claim: "dual partition slightly better than single for all job types",
+            holds: JobType::all().iter().all(|&jt| {
+                get("auto/REQUEUE/dual", jt).per_task_secs
+                    <= get("auto/REQUEUE/single", jt).per_task_secs
+            }),
+            detail: format!("triple: single/dual = {:.2}x", ratio(&tri_single, &tri_dual)),
+        },
+    ];
+    ExpReport {
+        id,
+        title,
+        rows,
+        expectations,
+    }
+}
+
+/// Shared panel for Fig 2d/2e: REQUEUE vs CANCEL preemption modes at 4096
+/// cores on the production reservation.
+pub(crate) fn mode_comparison_panel(
+    id: &'static str,
+    title: &'static str,
+    layout: crate::cluster::PartitionLayout,
+    seed: u64,
+) -> ExpReport {
+    use crate::cluster::topology;
+    use crate::preempt::{PreemptApproach, PreemptMode};
+    use crate::sim::SchedCosts;
+
+    const TASKS: u32 = 4096;
+    let mut rows = Vec::new();
+    for jt in JobType::all() {
+        for (series, mode) in [
+            ("auto/REQUEUE", PreemptMode::Requeue),
+            ("auto/CANCEL", PreemptMode::Cancel),
+        ] {
+            let case = Case::baseline(
+                SchedCosts::production(),
+                topology::txgreen_reservation,
+                layout,
+                jt,
+                TASKS,
+            )
+            .with_seed(seed)
+            .with_preemption(PreemptApproach::AutoScheduler { mode }, TASKS, 1);
+            let r = run_case(&case);
+            rows.push(ExpRow {
+                series: series.to_string(),
+                job_type: jt,
+                tasks: TASKS,
+                total_secs: r.total_secs,
+                per_task_secs: r.per_task_secs,
+            });
+        }
+    }
+    let get = |series: &str, jt: JobType| {
+        rows.iter()
+            .find(|r| r.series == series && r.job_type == jt)
+            .expect("row")
+            .clone()
+    };
+    let expectations = vec![Expectation {
+        claim: "no meaningful difference between REQUEUE and CANCEL",
+        holds: JobType::all().iter().all(|&jt| {
+            let r = ratio(&get("auto/REQUEUE", jt), &get("auto/CANCEL", jt));
+            (0.5..=2.0).contains(&r)
+        }),
+        detail: JobType::all()
+            .iter()
+            .map(|&jt| {
+                format!(
+                    "{}: {:.2}x",
+                    jt.label(),
+                    ratio(&get("auto/REQUEUE", jt), &get("auto/CANCEL", jt))
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", "),
+    }];
+    ExpReport {
+        id,
+        title,
+        rows,
+        expectations,
+    }
+}
+
+/// All experiment ids, for the CLI.
+pub const ALL: &[&str] = &[
+    "fig2a", "fig2b", "fig2c", "fig2d", "fig2e", "fig2f", "fig2g", "table1", "ablations",
+];
+
+/// Run an experiment by id.
+pub fn run_by_id(id: &str, seed: u64) -> Option<ExpReport> {
+    match id {
+        "fig2a" => Some(fig2a::run(seed)),
+        "fig2b" => Some(fig2b::run(seed)),
+        "fig2c" => Some(fig2c::run(seed)),
+        "fig2d" => Some(fig2d::run(seed)),
+        "fig2e" => Some(fig2e::run(seed)),
+        "fig2f" => Some(fig2f::run(seed)),
+        "fig2g" => Some(fig2g::run(seed)),
+        "table1" => Some(table1::run(seed)),
+        "ablations" => Some(ablations::run(seed)),
+        _ => None,
+    }
+}

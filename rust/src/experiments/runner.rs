@@ -1,0 +1,211 @@
+//! The shared experiment runner: set up a cluster, optionally fill it with
+//! spot work, submit one interactive burst, and measure its scheduling time
+//! exactly as the paper does (first recognition → last dispatch; for manual
+//! preemption, from preemption start).
+
+use crate::cluster::{Cluster, PartitionLayout};
+use crate::job::{JobType, UserId};
+use crate::preempt::{manual, PreemptApproach};
+use crate::sched::{Scheduler, SchedulerConfig};
+use crate::sim::{SchedCosts, SimTime};
+use crate::workload::{interactive_burst, spot_fill};
+
+/// One experiment case.
+#[derive(Clone)]
+pub struct Case {
+    /// Latency preset.
+    pub costs: SchedCosts,
+    /// Cluster construction.
+    pub cluster: fn() -> Cluster,
+    /// Partition layout.
+    pub layout: PartitionLayout,
+    /// Preemption machinery.
+    pub approach: PreemptApproach,
+    /// Interactive launch type.
+    pub job_type: JobType,
+    /// Interactive burst size (tasks).
+    pub tasks: u32,
+    /// Tasks of triple-mode spot fill before the burst (0 = idle cluster).
+    pub spot_fill_tasks: u32,
+    /// Number of spot jobs the fill is split into.
+    pub spot_fill_jobs: u32,
+    /// Per-user interactive core limit.
+    pub user_limit: u32,
+    /// Cycle-phase seed (run-to-run variance).
+    pub phase_seed: u64,
+}
+
+impl Case {
+    /// A baseline case (idle cluster, no preemption).
+    pub fn baseline(
+        costs: SchedCosts,
+        cluster: fn() -> Cluster,
+        layout: PartitionLayout,
+        job_type: JobType,
+        tasks: u32,
+    ) -> Self {
+        Self {
+            costs,
+            cluster,
+            layout,
+            approach: PreemptApproach::None,
+            job_type,
+            tasks,
+            spot_fill_tasks: 0,
+            spot_fill_jobs: 1,
+            user_limit: 4096,
+            phase_seed: 1,
+        }
+    }
+
+    /// Builder: set the preemption approach + spot fill.
+    pub fn with_preemption(mut self, approach: PreemptApproach, fill_tasks: u32, fill_jobs: u32) -> Self {
+        self.approach = approach;
+        self.spot_fill_tasks = fill_tasks;
+        self.spot_fill_jobs = fill_jobs;
+        self
+    }
+
+    /// Builder: phase seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.phase_seed = seed;
+        self
+    }
+
+    /// Builder: user limit.
+    pub fn with_user_limit(mut self, cores: u32) -> Self {
+        self.user_limit = cores;
+        self
+    }
+}
+
+/// Measured outcome of one case.
+#[derive(Debug, Clone, Copy)]
+pub struct CaseResult {
+    /// Total scheduling time (s).
+    pub total_secs: f64,
+    /// Per-task scheduling time (s).
+    pub per_task_secs: f64,
+    /// Preemption victims during the measurement.
+    pub preemptions: u64,
+}
+
+/// Horizon generously above any expected scheduling time.
+const HORIZON: SimTime = SimTime::from_secs(4 * 3600);
+
+/// Run one case to completion and measure.
+pub fn run_case(case: &Case) -> CaseResult {
+    let cfg = SchedulerConfig::baseline(case.costs.clone(), case.layout)
+        .with_approach(case.approach.clone())
+        .with_user_limit(case.user_limit)
+        .with_phase_seed(case.phase_seed);
+    let mut sched = Scheduler::new((case.cluster)(), cfg);
+
+    // Fill with spot work first, as the paper does.
+    if case.spot_fill_tasks > 0 {
+        let fill = spot_fill(UserId(900), case.spot_fill_tasks, case.spot_fill_jobs);
+        let ids = sched.submit_burst(fill);
+        assert!(
+            sched.run_until_dispatched(&ids, HORIZON),
+            "spot fill failed to dispatch"
+        );
+        // Let the system settle (cron agents run, queues drain).
+        sched.run_for(SimTime::from_secs(90));
+    }
+
+    let preempt_before = sched.stats().preemptions;
+    let user = UserId(1);
+    let burst = interactive_burst(user, case.job_type, case.tasks);
+
+    let measurement = if let PreemptApproach::Manual { mode } = case.approach {
+        // The modified-sbatch path: requeue first, then submit; measured
+        // from preemption start.
+        let sub = manual::manual_submit(&mut sched, burst, mode);
+        assert!(
+            sched.run_until_dispatched(&sub.jobs, HORIZON),
+            "manual-preempted burst failed to dispatch"
+        );
+        sched
+            .log()
+            .measure_from(sub.preempt_start, &sub.jobs)
+            .expect("measured")
+    } else {
+        let ids = sched.submit_burst(burst);
+        assert!(
+            sched.run_until_dispatched(&ids, HORIZON),
+            "burst failed to dispatch (approach {:?}, type {}, tasks {})",
+            case.approach.label(),
+            case.job_type,
+            case.tasks
+        );
+        sched.log().measure(&ids).expect("measured")
+    };
+
+    CaseResult {
+        total_secs: measurement.total_secs,
+        per_task_secs: measurement.total_secs / case.tasks as f64,
+        preemptions: sched.stats().preemptions - preempt_before,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology;
+    use crate::preempt::PreemptMode;
+
+    #[test]
+    fn baseline_case_runs() {
+        let r = run_case(&Case::baseline(
+            SchedCosts::dedicated(),
+            topology::tx2500,
+            PartitionLayout::Dual,
+            JobType::TripleMode,
+            608,
+        ));
+        assert!(r.total_secs > 0.0 && r.total_secs < 2.0, "{r:?}");
+        assert_eq!(r.preemptions, 0);
+    }
+
+    #[test]
+    fn preemption_case_counts_victims() {
+        let case = Case::baseline(
+            SchedCosts::dedicated(),
+            topology::tx2500,
+            PartitionLayout::Dual,
+            JobType::TripleMode,
+            608,
+        )
+        .with_preemption(
+            PreemptApproach::AutoScheduler {
+                mode: PreemptMode::Requeue,
+            },
+            608,
+            1,
+        );
+        let r = run_case(&case);
+        assert!(r.preemptions >= 1, "{r:?}");
+        assert!(r.total_secs > 5.0, "{r:?}");
+    }
+
+    #[test]
+    fn manual_case_measures_from_preempt_start() {
+        let case = Case::baseline(
+            SchedCosts::dedicated(),
+            topology::tx2500,
+            PartitionLayout::Dual,
+            JobType::TripleMode,
+            608,
+        )
+        .with_preemption(
+            PreemptApproach::Manual {
+                mode: PreemptMode::Requeue,
+            },
+            608,
+            1,
+        );
+        let r = run_case(&case);
+        assert!(r.preemptions >= 1);
+        assert!((0.5..30.0).contains(&r.total_secs), "{r:?}");
+    }
+}

@@ -1,0 +1,199 @@
+//! Job substrate: specs, lifecycle state machine, QoS, per-user accounting.
+
+pub mod qos;
+pub mod spec;
+pub mod user;
+
+pub use qos::{QosClass, QosConfig, QosTable};
+pub use spec::{JobSpec, JobType};
+pub use user::{UserAccounting, UserId, UserLimits};
+
+use crate::cluster::AllocRequest;
+use crate::sim::SimTime;
+
+/// Job identifier (monotonically assigned by the scheduler).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job#{}", self.0)
+    }
+}
+
+/// Job lifecycle states (subset of Slurm's with the preemption states the
+/// paper exercises).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobState {
+    /// In the pending queue, not yet allocated.
+    Pending,
+    /// Dispatched and running.
+    Running,
+    /// Ran to completion.
+    Completed,
+    /// Preempted with REQUEUE: back in the pending queue (keeps a new
+    /// submit time for LIFO ordering purposes the paper relies on).
+    Requeued,
+    /// Preempted with CANCEL (or user scancel): terminal.
+    Cancelled,
+    /// Preempted with SUSPEND: frozen in memory on its nodes.
+    Suspended,
+}
+
+impl JobState {
+    /// Terminal states never transition again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Completed | JobState::Cancelled)
+    }
+
+    /// States in which the job occupies (at least memory on) its nodes.
+    pub fn holds_resources(self) -> bool {
+        matches!(self, JobState::Running | JobState::Suspended)
+    }
+
+    /// Whether `self -> next` is a legal transition.
+    pub fn can_transition_to(self, next: JobState) -> bool {
+        use JobState::*;
+        matches!(
+            (self, next),
+            (Pending, Running)
+                | (Pending, Cancelled)
+                | (Running, Completed)
+                | (Running, Requeued)
+                | (Running, Cancelled)
+                | (Running, Suspended)
+                | (Suspended, Running)
+                | (Suspended, Cancelled)
+                | (Requeued, Pending)
+                | (Requeued, Cancelled)
+        )
+    }
+}
+
+/// A job record owned by the scheduler.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Identifier.
+    pub id: JobId,
+    /// Immutable submission spec.
+    pub spec: JobSpec,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// Original submission time.
+    pub submit_time: SimTime,
+    /// Time the job (re-)entered the pending queue — requeue resets this,
+    /// which is what makes "preempt youngest first" LIFO meaningful.
+    pub queue_time: SimTime,
+    /// Time the job started running (last start for requeued jobs).
+    pub start_time: Option<SimTime>,
+    /// Time the job reached a terminal state.
+    pub end_time: Option<SimTime>,
+    /// How many times this job has been preempted+requeued.
+    pub requeue_count: u32,
+}
+
+impl Job {
+    /// Create a pending job record.
+    pub fn new(id: JobId, spec: JobSpec, now: SimTime) -> Self {
+        Self {
+            id,
+            spec,
+            state: JobState::Pending,
+            submit_time: now,
+            queue_time: now,
+            start_time: None,
+            end_time: None,
+            requeue_count: 0,
+        }
+    }
+
+    /// Validated state transition. Panics on an illegal transition — these
+    /// indicate scheduler bugs and must fail loudly in simulation.
+    pub fn transition(&mut self, next: JobState, now: SimTime) {
+        assert!(
+            self.state.can_transition_to(next),
+            "{}: illegal transition {:?} -> {:?}",
+            self.id,
+            self.state,
+            next
+        );
+        match next {
+            JobState::Running => self.start_time = Some(now),
+            JobState::Completed | JobState::Cancelled => self.end_time = Some(now),
+            JobState::Requeued => self.requeue_count += 1,
+            JobState::Pending => self.queue_time = now,
+            JobState::Suspended => {}
+        }
+        self.state = next;
+    }
+
+    /// The allocation request this job makes.
+    pub fn alloc_request(&self, cores_per_node: u32) -> AllocRequest {
+        self.spec.alloc_request(cores_per_node)
+    }
+
+    /// True for spot (preemptable) jobs.
+    pub fn is_spot(&self) -> bool {
+        self.spec.qos == QosClass::Spot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec::interactive(UserId(1), JobType::Array, 64)
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut j = Job::new(JobId(1), spec(), SimTime::ZERO);
+        assert_eq!(j.state, JobState::Pending);
+        j.transition(JobState::Running, SimTime::from_secs(1));
+        assert_eq!(j.start_time, Some(SimTime::from_secs(1)));
+        j.transition(JobState::Completed, SimTime::from_secs(10));
+        assert_eq!(j.end_time, Some(SimTime::from_secs(10)));
+        assert!(j.state.is_terminal());
+    }
+
+    #[test]
+    fn requeue_cycle_updates_queue_time_and_count() {
+        let mut j = Job::new(JobId(1), spec(), SimTime::ZERO);
+        j.transition(JobState::Running, SimTime::from_secs(1));
+        j.transition(JobState::Requeued, SimTime::from_secs(5));
+        assert_eq!(j.requeue_count, 1);
+        j.transition(JobState::Pending, SimTime::from_secs(6));
+        assert_eq!(j.queue_time, SimTime::from_secs(6));
+        assert_eq!(j.submit_time, SimTime::ZERO, "submit time is immutable");
+        j.transition(JobState::Running, SimTime::from_secs(7));
+        assert_eq!(j.start_time, Some(SimTime::from_secs(7)));
+    }
+
+    #[test]
+    fn suspend_resume() {
+        let mut j = Job::new(JobId(1), spec(), SimTime::ZERO);
+        j.transition(JobState::Running, SimTime::from_secs(1));
+        j.transition(JobState::Suspended, SimTime::from_secs(2));
+        assert!(j.state.holds_resources());
+        j.transition(JobState::Running, SimTime::from_secs(3));
+        assert_eq!(j.state, JobState::Running);
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal transition")]
+    fn illegal_transition_panics() {
+        let mut j = Job::new(JobId(1), spec(), SimTime::ZERO);
+        j.transition(JobState::Completed, SimTime::from_secs(1));
+    }
+
+    #[test]
+    fn terminal_states_have_no_exits() {
+        use JobState::*;
+        for terminal in [Completed, Cancelled] {
+            for next in [Pending, Running, Completed, Requeued, Cancelled, Suspended] {
+                assert!(!terminal.can_transition_to(next));
+            }
+        }
+    }
+}

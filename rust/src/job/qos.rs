@@ -1,0 +1,207 @@
+//! Quality-of-Service classes and the QoS table.
+//!
+//! The paper's setup uses QoS-based preemption: spot jobs carry a dedicated
+//! low-priority QoS that (a) marks them preemptable by Normal-QoS jobs and
+//! (b) carries a `MaxTRESPerUser` cap the cron agent adjusts dynamically to
+//! keep the idle-node reserve free (paper Section II.B).
+
+use super::user::UserId;
+use std::collections::BTreeMap;
+
+/// QoS classes relevant to the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QosClass {
+    /// Regular interactive jobs.
+    Normal,
+    /// Preemptable spot jobs.
+    Spot,
+}
+
+impl QosClass {
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            QosClass::Normal => "normal",
+            QosClass::Spot => "spot",
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Per-class QoS configuration.
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// Scheduling priority contribution (higher = earlier).
+    pub priority: u32,
+    /// May jobs of this class be preempted by Normal jobs?
+    pub preemptable: bool,
+    /// `MaxTRESPerUser` (cores) — cap on concurrently-used cores per user in
+    /// this QoS. `None` = unlimited. The cron agent updates the Spot cap at
+    /// runtime.
+    pub max_tres_per_user: Option<u32>,
+    /// Cap on total cores used by this QoS across all users (the cron agent
+    /// uses this as the global spot ceiling protecting the reserve).
+    pub max_tres_total: Option<u32>,
+}
+
+/// The QoS table: configuration plus per-user usage accounting.
+#[derive(Debug, Clone)]
+pub struct QosTable {
+    normal: QosConfig,
+    spot: QosConfig,
+    usage: BTreeMap<(QosClass, UserId), u32>,
+    total_usage: BTreeMap<QosClass, u32>,
+}
+
+impl Default for QosTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QosTable {
+    /// The paper's configuration: Normal outranks Spot; spot preemptable;
+    /// no static caps (the cron agent installs dynamic ones).
+    pub fn new() -> Self {
+        Self {
+            normal: QosConfig {
+                priority: 1000,
+                preemptable: false,
+                max_tres_per_user: None,
+                max_tres_total: None,
+            },
+            spot: QosConfig {
+                priority: 10,
+                preemptable: true,
+                max_tres_per_user: None,
+                max_tres_total: None,
+            },
+            usage: BTreeMap::new(),
+            total_usage: BTreeMap::new(),
+        }
+    }
+
+    /// Config for a class.
+    pub fn config(&self, class: QosClass) -> &QosConfig {
+        match class {
+            QosClass::Normal => &self.normal,
+            QosClass::Spot => &self.spot,
+        }
+    }
+
+    /// Mutable config (cron agent updates `max_tres_*`).
+    pub fn config_mut(&mut self, class: QosClass) -> &mut QosConfig {
+        match class {
+            QosClass::Normal => &mut self.normal,
+            QosClass::Spot => &mut self.spot,
+        }
+    }
+
+    /// Cores currently in use by `user` under `class`.
+    pub fn usage(&self, class: QosClass, user: UserId) -> u32 {
+        self.usage.get(&(class, user)).copied().unwrap_or(0)
+    }
+
+    /// Cores currently in use by all users under `class`.
+    pub fn total_usage(&self, class: QosClass) -> u32 {
+        self.total_usage.get(&class).copied().unwrap_or(0)
+    }
+
+    /// Would starting a job of `cores` for `user` under `class` violate the
+    /// QoS limits?
+    pub fn admits(&self, class: QosClass, user: UserId, cores: u32) -> bool {
+        let cfg = self.config(class);
+        if let Some(cap) = cfg.max_tres_per_user {
+            if self.usage(class, user) + cores > cap {
+                return false;
+            }
+        }
+        if let Some(cap) = cfg.max_tres_total {
+            if self.total_usage(class) + cores > cap {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Record a job start.
+    pub fn charge(&mut self, class: QosClass, user: UserId, cores: u32) {
+        *self.usage.entry((class, user)).or_default() += cores;
+        *self.total_usage.entry(class).or_default() += cores;
+    }
+
+    /// Record a job end/preemption.
+    pub fn credit(&mut self, class: QosClass, user: UserId, cores: u32) {
+        let u = self.usage.get_mut(&(class, user)).expect("credit without charge");
+        assert!(*u >= cores, "crediting more than charged");
+        *u -= cores;
+        let t = self.total_usage.get_mut(&class).expect("credit without charge");
+        *t -= cores;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_ordering() {
+        let t = QosTable::new();
+        assert!(t.config(QosClass::Normal).priority > t.config(QosClass::Spot).priority);
+        assert!(t.config(QosClass::Spot).preemptable);
+        assert!(!t.config(QosClass::Normal).preemptable);
+    }
+
+    #[test]
+    fn per_user_cap_enforced() {
+        let mut t = QosTable::new();
+        t.config_mut(QosClass::Spot).max_tres_per_user = Some(100);
+        let u = UserId(1);
+        assert!(t.admits(QosClass::Spot, u, 100));
+        t.charge(QosClass::Spot, u, 60);
+        assert!(t.admits(QosClass::Spot, u, 40));
+        assert!(!t.admits(QosClass::Spot, u, 41));
+        // Another user has their own budget.
+        assert!(t.admits(QosClass::Spot, UserId(2), 100));
+    }
+
+    #[test]
+    fn total_cap_enforced_across_users() {
+        let mut t = QosTable::new();
+        t.config_mut(QosClass::Spot).max_tres_total = Some(100);
+        t.charge(QosClass::Spot, UserId(1), 80);
+        assert!(!t.admits(QosClass::Spot, UserId(2), 30));
+        assert!(t.admits(QosClass::Spot, UserId(2), 20));
+    }
+
+    #[test]
+    fn charge_credit_roundtrip() {
+        let mut t = QosTable::new();
+        let u = UserId(3);
+        t.charge(QosClass::Normal, u, 64);
+        assert_eq!(t.usage(QosClass::Normal, u), 64);
+        assert_eq!(t.total_usage(QosClass::Normal), 64);
+        t.credit(QosClass::Normal, u, 64);
+        assert_eq!(t.usage(QosClass::Normal, u), 0);
+        assert_eq!(t.total_usage(QosClass::Normal), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "crediting more than charged")]
+    fn over_credit_panics() {
+        let mut t = QosTable::new();
+        t.charge(QosClass::Spot, UserId(1), 10);
+        t.credit(QosClass::Spot, UserId(1), 11);
+    }
+
+    #[test]
+    fn unlimited_by_default() {
+        let t = QosTable::new();
+        assert!(t.admits(QosClass::Spot, UserId(1), u32::MAX / 2));
+    }
+}

@@ -1,0 +1,179 @@
+//! Job specifications: the paper's three launch types.
+//!
+//! * **Individual** — N tasks submitted as N separate single-task jobs; each
+//!   pays a full per-job scheduling transaction.
+//! * **Array** — one job with N array tasks; one scheduling transaction,
+//!   N per-task dispatches.
+//! * **Triple-mode** — the MIT SuperCloud launch (gridMatlab/LLMapReduce):
+//!   node-based scheduling with all tasks on a node consolidated under a
+//!   single execution script, so a 4096-task job on 64-core nodes needs only
+//!   64 dispatches. This is what makes interactive launch fast, and what
+//!   makes any added latency so visible (paper Fig 2).
+
+use super::qos::QosClass;
+use super::user::UserId;
+use crate::cluster::AllocRequest;
+use crate::sim::SimTime;
+
+/// The launch type of a submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobType {
+    /// Independent single-task jobs.
+    Individual,
+    /// One array job with per-task dispatch.
+    Array,
+    /// Consolidated node-based launch.
+    TripleMode,
+}
+
+impl JobType {
+    /// Label used in reports (matches the paper's figure legends).
+    pub fn label(self) -> &'static str {
+        match self {
+            JobType::Individual => "individual",
+            JobType::Array => "array",
+            JobType::TripleMode => "triple-mode",
+        }
+    }
+
+    /// All three, in the paper's presentation order.
+    pub fn all() -> [JobType; 3] {
+        [JobType::Individual, JobType::Array, JobType::TripleMode]
+    }
+}
+
+impl std::fmt::Display for JobType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Immutable description of one job as the scheduler sees it.
+///
+/// Note an *Individual* submission of N tasks materializes as N `JobSpec`s
+/// of one task each (see [`crate::workload`]); `Array`/`TripleMode`
+/// submissions materialize as a single spec with `tasks = N`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Submitting user.
+    pub user: UserId,
+    /// Launch type.
+    pub job_type: JobType,
+    /// Total tasks in this job (1 for individual jobs).
+    pub tasks: u32,
+    /// Cores per task (1 throughout the paper's experiments).
+    pub cores_per_task: u32,
+    /// QoS class: Normal (interactive) or Spot (preemptable).
+    pub qos: QosClass,
+    /// How long the job runs once started (simulation only; the paper
+    /// measures scheduling time, not run time).
+    pub run_time: SimTime,
+    /// Optional human-readable tag for traces and reports.
+    pub tag: &'static str,
+}
+
+impl JobSpec {
+    /// An interactive (Normal QoS) job.
+    pub fn interactive(user: UserId, job_type: JobType, tasks: u32) -> Self {
+        Self {
+            user,
+            job_type,
+            tasks,
+            cores_per_task: 1,
+            qos: QosClass::Normal,
+            run_time: SimTime::from_secs(3600),
+            tag: "interactive",
+        }
+    }
+
+    /// A spot (preemptable) job.
+    pub fn spot(user: UserId, job_type: JobType, tasks: u32) -> Self {
+        Self {
+            user,
+            job_type,
+            tasks,
+            cores_per_task: 1,
+            qos: QosClass::Spot,
+            run_time: SimTime::from_secs(24 * 3600),
+            tag: "spot",
+        }
+    }
+
+    /// Builder: set run time.
+    pub fn with_run_time(mut self, t: SimTime) -> Self {
+        self.run_time = t;
+        self
+    }
+
+    /// Builder: set tag.
+    pub fn with_tag(mut self, tag: &'static str) -> Self {
+        self.tag = tag;
+        self
+    }
+
+    /// Total cores required.
+    pub fn cores(&self) -> u32 {
+        self.tasks * self.cores_per_task
+    }
+
+    /// The allocation request: triple-mode jobs use node-based scheduling
+    /// (whole nodes), others use core-based scheduling.
+    pub fn alloc_request(&self, cores_per_node: u32) -> AllocRequest {
+        match self.job_type {
+            JobType::TripleMode => {
+                AllocRequest::WholeNodes(self.cores().div_ceil(cores_per_node))
+            }
+            _ => AllocRequest::Cores(self.cores()),
+        }
+    }
+
+    /// Number of dispatch RPCs the controller must issue to launch this job:
+    /// per task for individual/array, per node script for triple-mode.
+    pub fn dispatch_count(&self, cores_per_node: u32) -> u64 {
+        match self.job_type {
+            JobType::TripleMode => self.cores().div_ceil(cores_per_node) as u64,
+            _ => self.tasks as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triple_mode_consolidates_dispatches() {
+        let s = JobSpec::interactive(UserId(1), JobType::TripleMode, 4096);
+        assert_eq!(s.dispatch_count(64), 64);
+        assert_eq!(s.alloc_request(64), AllocRequest::WholeNodes(64));
+    }
+
+    #[test]
+    fn array_dispatches_per_task() {
+        let s = JobSpec::interactive(UserId(1), JobType::Array, 4096);
+        assert_eq!(s.dispatch_count(64), 4096);
+        assert_eq!(s.alloc_request(64), AllocRequest::Cores(4096));
+    }
+
+    #[test]
+    fn triple_mode_rounds_nodes_up() {
+        let s = JobSpec::interactive(UserId(1), JobType::TripleMode, 100);
+        assert_eq!(s.alloc_request(64), AllocRequest::WholeNodes(2));
+        assert_eq!(s.dispatch_count(64), 2);
+    }
+
+    #[test]
+    fn consolidation_ratio_is_paper_example() {
+        // Paper: "from 4096 to 64, if 64 array tasks are consolidated"
+        let s = JobSpec::interactive(UserId(1), JobType::TripleMode, 4096);
+        let ratio = 4096 / s.dispatch_count(64);
+        assert_eq!(ratio, 64);
+    }
+
+    #[test]
+    fn spot_defaults() {
+        let s = JobSpec::spot(UserId(2), JobType::TripleMode, 512);
+        assert_eq!(s.qos, QosClass::Spot);
+        assert_eq!(s.cores(), 512);
+    }
+}

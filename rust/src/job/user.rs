@@ -1,0 +1,114 @@
+//! Per-user resource limits and accounting.
+//!
+//! The MIT SuperCloud enforces per-user core limits on the interactive
+//! partition (4096 cores on the partition used in the paper's production
+//! experiments). The cron-agent approach sizes the idle-node reserve to this
+//! limit so *any* single user's next interactive job fits without preemption
+//! on the submit path.
+
+use std::collections::BTreeMap;
+
+/// User identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct UserId(pub u32);
+
+impl std::fmt::Display for UserId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "user{}", self.0)
+    }
+}
+
+/// Per-user limits (normal QoS; spot limits live in the QoS table).
+#[derive(Debug, Clone, Copy)]
+pub struct UserLimits {
+    /// Maximum concurrently allocated cores for interactive jobs.
+    pub max_cores: u32,
+}
+
+impl Default for UserLimits {
+    fn default() -> Self {
+        // The paper's production partition enforces 4096 cores/user.
+        Self { max_cores: 4096 }
+    }
+}
+
+/// Tracks interactive-core usage per user against limits.
+#[derive(Debug, Clone, Default)]
+pub struct UserAccounting {
+    limits: BTreeMap<UserId, UserLimits>,
+    default_limits: UserLimits,
+    usage: BTreeMap<UserId, u32>,
+}
+
+impl UserAccounting {
+    /// Create with the given default limit.
+    pub fn with_default_limit(max_cores: u32) -> Self {
+        Self {
+            default_limits: UserLimits { max_cores },
+            ..Default::default()
+        }
+    }
+
+    /// Set a user-specific limit.
+    pub fn set_limit(&mut self, user: UserId, limits: UserLimits) {
+        self.limits.insert(user, limits);
+    }
+
+    /// Effective limit for a user.
+    pub fn limit(&self, user: UserId) -> UserLimits {
+        self.limits.get(&user).copied().unwrap_or(self.default_limits)
+    }
+
+    /// Cores currently charged to the user.
+    pub fn usage(&self, user: UserId) -> u32 {
+        self.usage.get(&user).copied().unwrap_or(0)
+    }
+
+    /// Whether the user may start a job of `cores` more.
+    pub fn admits(&self, user: UserId, cores: u32) -> bool {
+        self.usage(user) + cores <= self.limit(user).max_cores
+    }
+
+    /// Charge usage at job start.
+    pub fn charge(&mut self, user: UserId, cores: u32) {
+        *self.usage.entry(user).or_default() += cores;
+    }
+
+    /// Credit usage at job end.
+    pub fn credit(&mut self, user: UserId, cores: u32) {
+        let u = self.usage.get_mut(&user).expect("credit without charge");
+        assert!(*u >= cores, "crediting more than charged");
+        *u -= cores;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_limit_is_papers() {
+        let acc = UserAccounting::default();
+        assert_eq!(acc.limit(UserId(9)).max_cores, 4096);
+    }
+
+    #[test]
+    fn admits_until_limit() {
+        let mut acc = UserAccounting::with_default_limit(100);
+        let u = UserId(1);
+        assert!(acc.admits(u, 100));
+        acc.charge(u, 70);
+        assert!(acc.admits(u, 30));
+        assert!(!acc.admits(u, 31));
+        acc.credit(u, 70);
+        assert!(acc.admits(u, 100));
+    }
+
+    #[test]
+    fn per_user_override() {
+        let mut acc = UserAccounting::with_default_limit(100);
+        acc.set_limit(UserId(2), UserLimits { max_cores: 10 });
+        assert!(acc.admits(UserId(1), 100));
+        assert!(!acc.admits(UserId(2), 11));
+    }
+}

@@ -1,0 +1,54 @@
+//! # SpotCloud
+//!
+//! A reproduction of *"Best of Both Worlds: High Performance Interactive and
+//! Batch Launching"* (Byun et al., IEEE HPEC 2020): a Slurm-like cluster
+//! scheduler (`slurmlite`) with **spot jobs** implemented four ways —
+//! scheduler-automatic QoS preemption, a Lua submit-plugin (the paper's
+//! negative result), manual requeue-before-submit, and the paper's
+//! contribution: a privileged **cron agent** that separates preemption from
+//! scheduling and keeps a pre-defined reserve of idle nodes so interactive
+//! jobs always launch at baseline speed.
+//!
+//! The crate is organized as:
+//!
+//! * [`sim`] — discrete-event simulation core (virtual clock, event queue,
+//!   calibrated scheduler latency cost model).
+//! * [`cluster`] / [`job`] — the cluster and job substrates (nodes,
+//!   partitions, QoS, per-user limits, individual/array/triple-mode jobs).
+//! * [`sched`] — the scheduler: main cycle, backfill cycle, multifactor
+//!   priority, node selection, per-task dispatch, event log.
+//! * [`preempt`] — the four preemption engines from the paper.
+//! * [`runtime`] — the PJRT/XLA bridge: loads the AOT-compiled scheduling
+//!   decision kernels (JAX + Pallas, built once by `make artifacts`) and
+//!   exposes them to the scheduler hot path with a pure-Rust fallback.
+//! * [`coordinator`] — the runnable daemon: thread pool, TCP text API,
+//!   metrics.
+//! * [`workload`] / [`experiments`] — synthetic workload generators and the
+//!   harness that regenerates every figure and table in the paper.
+//! * [`util`], [`metrics`], [`testkit`], [`benchkit`] — std-only substrates
+//!   (PRNG, CLI parsing, config files, histograms, property testing,
+//!   micro-benchmarking) built from scratch for the offline environment.
+
+pub mod benchkit;
+pub mod cluster;
+pub mod coordinator;
+pub mod experiments;
+pub mod job;
+pub mod metrics;
+pub mod preempt;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+/// Convenient re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::cluster::{topology, Cluster, NodeId, PartitionLayout};
+    pub use crate::job::{JobId, JobSpec, JobState, JobType, QosClass};
+    pub use crate::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
+    pub use crate::sched::{Scheduler, SchedulerConfig};
+    pub use crate::sim::{Clock, Engine, SimTime};
+    pub use crate::workload::Scenario;
+}

@@ -1,0 +1,276 @@
+//! `spotcloud` — the command-line launcher.
+//!
+//! Subcommands:
+//!
+//! * `experiment <id|all>` — regenerate a paper figure/table (fig2a..fig2g,
+//!   table1, ablations).
+//! * `simulate` — run a mixed interactive+spot workload on a simulated
+//!   cluster and print a utilization/latency report.
+//! * `daemon` — start the coordinator daemon (TCP service).
+//! * `submit | squeue | scancel | stats | util | shutdown` — client commands
+//!   against a running daemon.
+
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::coordinator::{client::Client, Daemon, DaemonConfig, Server};
+use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
+use spotcloud::sched::SchedulerConfig;
+use spotcloud::sim::SchedCosts;
+use spotcloud::util::cli::{CliError, Command};
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("experiment") => cmd_experiment(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("daemon") => cmd_daemon(&args[1..]),
+        Some(c @ ("submit" | "squeue" | "scancel" | "stats" | "util" | "shutdown" | "ping")) => {
+            cmd_client(c, &args[1..])
+        }
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "spotcloud — Slurm-like scheduler with spot jobs via cron-agent preemption\n\
+         (reproduction of Byun et al., HPEC 2020)\n\n\
+         usage: spotcloud <subcommand> [options]\n\n\
+         subcommands:\n\
+           experiment <id|all>   regenerate a paper figure ({})\n\
+           simulate              run a mixed workload simulation\n\
+           daemon                start the coordinator daemon\n\
+           submit|squeue|scancel|stats|util|ping|shutdown   client commands\n\n\
+         run `spotcloud <subcommand> --help` for options",
+        spotcloud::experiments::ALL.join(", ")
+    );
+}
+
+fn handle_help(cmd: &Command, err: CliError) -> i32 {
+    match err {
+        CliError::HelpRequested => {
+            println!("{}", cmd.help());
+            0
+        }
+        e => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_experiment(args: &[String]) -> i32 {
+    let cmd = Command::new("spotcloud experiment", "regenerate a paper figure/table")
+        .positional("id", "experiment id (fig2a..fig2g, table1, ablations, all)")
+        .opt("seed", "phase seed", Some("1"))
+        .switch("csv", "also print CSV rows");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_help(&cmd, e),
+    };
+    let seed: u64 = parsed.value("seed").unwrap_or(1);
+    let id = parsed
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let ids: Vec<&str> = if id == "all" {
+        spotcloud::experiments::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    let mut ok = true;
+    for id in ids {
+        match spotcloud::experiments::run_by_id(id, seed) {
+            Some(report) => {
+                println!("{}", report.render());
+                if parsed.flag("csv") {
+                    println!("{}", report.to_csv());
+                }
+                ok &= report.check();
+            }
+            None => {
+                eprintln!(
+                    "unknown experiment {id:?}; available: {}",
+                    spotcloud::experiments::ALL.join(", ")
+                );
+                return 2;
+            }
+        }
+    }
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let cmd = Command::new("spotcloud simulate", "mixed interactive+spot workload simulation")
+        .opt("seed", "workload seed", Some("7"))
+        .opt("hours", "virtual hours to simulate", Some("2"))
+        .opt("arrivals", "interactive submissions", Some("100"))
+        .opt("reserve", "idle-node reserve for the cron agent", Some("5"))
+        .switch("no-spot", "disable the spot backlog (baseline utilization)");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_help(&cmd, e),
+    };
+    let seed: u64 = parsed.value("seed").unwrap();
+    let hours: u64 = parsed.value("hours").unwrap();
+    let arrivals: usize = parsed.value("arrivals").unwrap();
+    let reserve: u32 = parsed.value("reserve").unwrap();
+    let spot = !parsed.flag("no-spot");
+    let report = spotcloud::workload::simulate_mixed(seed, hours, arrivals, reserve, spot);
+    println!("{report}");
+    0
+}
+
+fn cmd_daemon(args: &[String]) -> i32 {
+    let cmd = Command::new("spotcloud daemon", "start the coordinator daemon")
+        .opt("addr", "bind address", Some("127.0.0.1:7461"))
+        .opt("workers", "connection worker threads", Some("4"))
+        .opt("speedup", "virtual seconds per wall second", Some("60"))
+        .opt("reserve", "idle-node reserve (cron agent)", Some("5"))
+        .opt("topology", "tx2500 | txgreen | txgreen-full", Some("tx2500"))
+        .opt("config", "slurm.conf-style deployment file (overrides the above)", None)
+        .switch("xla", "use the XLA-compiled priority scorer (needs artifacts)");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_help(&cmd, e),
+    };
+    let addr: String = parsed.get("addr").unwrap().to_string();
+    let workers: usize = parsed.value("workers").unwrap();
+    let speedup: f64 = parsed.value("speedup").unwrap();
+    let reserve: u32 = parsed.value("reserve").unwrap();
+    let (cluster, mut sched_cfg) = if let Some(path) = parsed.get("config") {
+        match spotcloud::sched::deployment_from_file(std::path::Path::new(path)) {
+            Ok(d) => {
+                println!("loaded deployment {:?} from {path}", d.name);
+                (d.cluster, d.config)
+            }
+            Err(e) => {
+                eprintln!("failed to load {path}: {e:#}");
+                return 2;
+            }
+        }
+    } else {
+        let cluster = match parsed.get("topology").unwrap() {
+            "tx2500" => topology::tx2500(),
+            "txgreen" => topology::txgreen_reservation(),
+            "txgreen-full" => topology::txgreen_full(),
+            other => {
+                eprintln!("unknown topology {other:?}");
+                return 2;
+            }
+        };
+        let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+            .with_user_limit(reserve * cluster.cores_per_node())
+            .with_approach(PreemptApproach::CronAgent {
+                mode: PreemptMode::Requeue,
+                cfg: CronAgentConfig {
+                    reserve_nodes: reserve,
+                },
+            });
+        (cluster, cfg)
+    };
+    if parsed.flag("xla") {
+        match spotcloud::runtime::SchedAccel::load_default() {
+            Some(accel) => {
+                println!("loaded XLA decision kernel (platform: cpu)");
+                sched_cfg = sched_cfg.with_scorer(Arc::new(accel));
+            }
+            None => {
+                eprintln!("warning: artifacts not found, using native scorer (run `make artifacts`)");
+            }
+        }
+    }
+    let daemon = Daemon::new(
+        cluster,
+        sched_cfg,
+        DaemonConfig {
+            speedup,
+            ..Default::default()
+        },
+    );
+    let pacer = daemon.spawn_pacer();
+    let server = match Server::bind(Arc::clone(&daemon), &addr, workers) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to bind {addr}: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "spotcloud daemon listening on {} (speedup {speedup}x, reserve {reserve} nodes)",
+        server.local_addr().map(|a| a.to_string()).unwrap_or(addr)
+    );
+    server.serve();
+    pacer.join().ok();
+    println!("daemon stopped");
+    0
+}
+
+fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
+    let cmd = Command::new("spotcloud client", "send a command to a running daemon")
+        .opt("addr", "daemon address", Some("127.0.0.1:7461"))
+        .opt("qos", "normal | spot (submit)", Some("normal"))
+        .opt("type", "individual | array | triple (submit)", Some("triple"))
+        .opt("tasks", "task count (submit)", Some("64"))
+        .opt("user", "user id (submit)", Some("1"))
+        .opt("run-secs", "job run time (submit)", Some("600"))
+        .positional("arg", "job id for scancel");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(e) => return handle_help(&cmd, e),
+    };
+    let addr = parsed.get("addr").unwrap();
+    let mut client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot reach daemon at {addr}: {e:#}");
+            return 1;
+        }
+    };
+    let line = match subcmd {
+        "submit" => format!(
+            "SUBMIT {} {} {} {} {}",
+            parsed.get("qos").unwrap(),
+            parsed.get("type").unwrap(),
+            parsed.get("tasks").unwrap(),
+            parsed.get("user").unwrap(),
+            parsed.get("run-secs").unwrap()
+        ),
+        "scancel" => match parsed.positionals.first() {
+            Some(id) => format!("SCANCEL {id}"),
+            None => {
+                eprintln!("scancel needs a job id");
+                return 2;
+            }
+        },
+        other => other.to_ascii_uppercase(),
+    };
+    match client.request(&line) {
+        Ok(resp) => {
+            println!("{resp}");
+            if resp.starts_with("ERR") {
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("request failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, std-only).
+//!
+//! Values are recorded in nanoseconds into buckets of geometrically growing
+//! width (each bucket spans ×2^(1/8), i.e. ~9% relative error), which is
+//! plenty for scheduling-latency percentiles spanning microseconds to
+//! minutes.
+
+/// Sub-bucket resolution: buckets per octave. 8 → ≤ ~9% quantile error.
+const SUBBUCKETS_PER_OCTAVE: usize = 8;
+/// Supported range: 1 ns .. ~2^63 ns.
+const OCTAVES: usize = 63;
+const NBUCKETS: usize = OCTAVES * SUBBUCKETS_PER_OCTAVE + 1;
+
+/// A histogram of `u64` values (typically nanoseconds).
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// Create an empty histogram.
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; NBUCKETS],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    fn bucket_of(value: u64) -> usize {
+        if value == 0 {
+            return 0;
+        }
+        // Position = octave * SUB + sub-octave index from the bits below the
+        // leading one.
+        let lz = 63 - value.leading_zeros() as usize; // floor(log2(value))
+        let frac = if lz == 0 {
+            0
+        } else {
+            // Top SUB bits after the leading bit.
+            let shift = lz.saturating_sub(3); // log2(SUBBUCKETS_PER_OCTAVE)=3
+            ((value >> shift) & (SUBBUCKETS_PER_OCTAVE as u64 - 1)) as usize
+        };
+        (lz * SUBBUCKETS_PER_OCTAVE + frac).min(NBUCKETS - 1)
+    }
+
+    /// Lower edge of a bucket (inverse of `bucket_of`, approximate).
+    fn bucket_low(bucket: usize) -> u64 {
+        if bucket == 0 {
+            return 0;
+        }
+        let octave = bucket / SUBBUCKETS_PER_OCTAVE;
+        let sub = bucket % SUBBUCKETS_PER_OCTAVE;
+        if octave >= 63 {
+            return u64::MAX;
+        }
+        let base = 1u64 << octave;
+        if octave < 3 {
+            base
+        } else {
+            base + ((sub as u64) << (octave - 3))
+        }
+    }
+
+    /// Record one value.
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::bucket_of(value)] += 1;
+        self.total += 1;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+        self.sum += value as u128;
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Arithmetic mean of recorded values.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Approximate quantile (`q` in `[0,1]`). Returns the lower edge of the
+    /// bucket containing the q-th value, clamped to observed min/max.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_low(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// p50 shorthand.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// p90 shorthand.
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+
+    /// p99 shorthand.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        if other.total > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
+    /// One-line human summary, treating values as nanoseconds.
+    pub fn summary_ns(&self) -> String {
+        use crate::util::fmt::fmt_seconds;
+        let s = |ns: u64| fmt_seconds(ns as f64 / 1e9);
+        format!(
+            "n={} min={} p50={} p90={} p99={} max={} mean={}",
+            self.total,
+            s(self.min()),
+            s(self.p50()),
+            s(self.p90()),
+            s(self.p99()),
+            s(self.max()),
+            s(self.mean() as u64)
+        )
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LogHistogram({})", self.summary_ns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = LogHistogram::new();
+        h.record(1000);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 1000);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.p50(), 1000); // clamped to min..max
+    }
+
+    #[test]
+    fn quantiles_bounded_relative_error() {
+        let mut h = LogHistogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, expect) in [(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - expect).abs() / expect;
+            assert!(rel < 0.15, "q={q}: got {got}, want ~{expect} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = LogHistogram::new();
+        for v in [10, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 20.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(100);
+        b.record(10_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 100);
+        assert_eq!(a.max(), 10_000);
+    }
+
+    #[test]
+    fn monotone_quantiles() {
+        let mut h = LogHistogram::new();
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        for _ in 0..10_000 {
+            h.record(rng.gen_range(1, 1_000_000));
+        }
+        let qs: Vec<u64> = [0.1, 0.25, 0.5, 0.75, 0.9, 0.99]
+            .iter()
+            .map(|&q| h.quantile(q))
+            .collect();
+        assert!(qs.windows(2).all(|w| w[0] <= w[1]), "{qs:?}");
+    }
+
+    #[test]
+    fn extreme_values_do_not_panic() {
+        let mut h = LogHistogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), u64::MAX);
+    }
+}

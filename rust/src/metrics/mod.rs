@@ -1,0 +1,9 @@
+//! Measurement substrates: latency histograms, summary statistics, timers.
+
+pub mod histogram;
+pub mod stats;
+pub mod timer;
+
+pub use histogram::LogHistogram;
+pub use stats::Summary;
+pub use timer::ScopedTimer;

@@ -1,0 +1,137 @@
+//! Exact summary statistics over small sample sets.
+//!
+//! The benchmark harness keeps raw samples (iterations are bounded), so we
+//! can report exact percentiles; the [`super::histogram::LogHistogram`] is
+//! for unbounded streams (the daemon).
+
+/// Exact summary of a sample set of f64 values (seconds, ratios, …).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    /// Sample count.
+    pub n: usize,
+    /// Minimum.
+    pub min: f64,
+    /// Maximum.
+    pub max: f64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Sample standard deviation (n-1 denominator; 0 for n<2).
+    pub stdev: f64,
+    /// Median (p50, linear interpolation).
+    pub p50: f64,
+    /// p90.
+    pub p90: f64,
+    /// p99.
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty slice.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = if n < 2 {
+            0.0
+        } else {
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        };
+        Some(Summary {
+            n,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mean,
+            stdev: var.sqrt(),
+            p50: percentile(&sorted, 0.50),
+            p90: percentile(&sorted, 0.90),
+            p99: percentile(&sorted, 0.99),
+        })
+    }
+
+    /// Coefficient of variation (stdev/mean); 0 when mean is 0.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stdev / self.mean
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a **sorted** slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Geometric mean; ignores non-positive entries (returns None if none valid).
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    let logs: Vec<f64> = xs.iter().filter(|&&x| x > 0.0).map(|x| x.ln()).collect();
+    if logs.is_empty() {
+        None
+    } else {
+        Some((logs.iter().sum::<f64>() / logs.len() as f64).exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[3.0]).unwrap();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.min, 3.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.stdev, 0.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.stdev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [10.0, 20.0];
+        assert_eq!(percentile(&sorted, 0.5), 15.0);
+        assert_eq!(percentile(&sorted, 0.0), 10.0);
+        assert_eq!(percentile(&sorted, 1.0), 20.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 100.0]).unwrap() - 10.0).abs() < 1e-9);
+        assert!(geomean(&[0.0, -1.0]).is_none());
+    }
+
+    #[test]
+    fn order_invariant() {
+        let a = Summary::of(&[5.0, 1.0, 3.0]).unwrap();
+        let b = Summary::of(&[1.0, 3.0, 5.0]).unwrap();
+        assert_eq!(a, b);
+    }
+}

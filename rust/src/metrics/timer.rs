@@ -1,0 +1,63 @@
+//! Wall-clock timing helpers for the daemon and benchmarks.
+
+use std::time::Instant;
+
+/// Measures wall-clock time from construction and reports on drop via a
+/// callback. Useful for instrumenting scheduler hot paths without littering
+/// them with explicit start/stop pairs.
+pub struct ScopedTimer<F: FnMut(u64)> {
+    start: Instant,
+    on_done: F,
+}
+
+impl<F: FnMut(u64)> ScopedTimer<F> {
+    /// Start timing; `on_done` receives elapsed nanoseconds at drop.
+    pub fn new(on_done: F) -> Self {
+        Self {
+            start: Instant::now(),
+            on_done,
+        }
+    }
+
+    /// Elapsed nanoseconds so far.
+    pub fn elapsed_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+}
+
+impl<F: FnMut(u64)> Drop for ScopedTimer<F> {
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos() as u64;
+        (self.on_done)(ns);
+    }
+}
+
+/// Time a closure, returning (result, elapsed seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    #[test]
+    fn scoped_timer_fires_on_drop() {
+        let recorded = Cell::new(0u64);
+        {
+            let _t = ScopedTimer::new(|ns| recorded.set(ns));
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(recorded.get() >= 1_000_000, "recorded {}", recorded.get());
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, secs) = time_it(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Scheduler-driven automatic QoS preemption (paper Section II.A).
+//!
+//! This is Slurm's `PreemptType=preempt/qos` behavior: when an interactive
+//! (Normal QoS) job cannot be allocated, the scheduling cycle — *inside the
+//! allocation path* — scans preemption candidates, issues one requeue/cancel
+//! transaction per victim, and then **defers the preemptor**: the job is
+//! only re-examined on a later scheduling cycle, after node cleanup. The
+//! cycle waits are what produce the paper's 2–3 orders-of-magnitude
+//! scheduling-time degradation; single-partition configurations pay an
+//! extra mixed-queue scan penalty and retry cycle on top.
+
+use crate::cluster::{AllocRequest, PartitionLayout};
+use crate::job::JobId;
+use crate::preempt::lifo::{self, Demand, Order};
+use crate::preempt::PreemptMode;
+use crate::sched::Scheduler;
+use crate::sim::SimTime;
+
+impl Scheduler {
+    /// Attempt automatic preemption on behalf of blocked job `id`.
+    ///
+    /// Charges the candidate scan and requeue transactions to the cycle
+    /// cursor, issues the preemption, and defers the job for the configured
+    /// number of retry cycles. Returns the advanced cursor.
+    pub(crate) fn auto_preempt_for(
+        &mut self,
+        id: JobId,
+        req: AllocRequest,
+        mode: PreemptMode,
+        mut cursor: SimTime,
+    ) -> SimTime {
+        let costs = self.costs().clone();
+        let single = self.config().layout == PartitionLayout::Single;
+
+        // 1. Candidate scan (QoS dependency walk). Single-partition setups
+        //    rescan the mixed queue under the partition lock.
+        let victims = self.spot_victims();
+        cursor += costs.preempt_scan_base;
+        cursor += SimTime(costs.preempt_scan_per_job.0 * victims.len() as u64);
+        if single {
+            cursor += costs.single_partition_scan_penalty;
+        }
+
+        let demand = match req {
+            AllocRequest::Cores(c) => Demand::Cores(c),
+            AllocRequest::WholeNodes(n) => Demand::WholeNodes(n),
+        };
+        let Some(selected) = lifo::select_victims(&victims, demand, Order::YoungestFirst) else {
+            // Even preempting every spot job would not free enough: the job
+            // just stays blocked (no preemption storm).
+            return cursor;
+        };
+        if selected.is_empty() {
+            return cursor;
+        }
+
+        // 2. Requeue transactions, serialized inside the cycle.
+        cursor = self.issue_preemption(&selected, mode, cursor, /* by_cron = */ false);
+
+        // 3. Defer the preemptor: Slurm re-attempts allocation for the
+        //    preempting job only on a later scheduling cycle (and only after
+        //    the victims' nodes clear their epilog).
+        let mut retry_cycles = costs.auto_preempt_retry_cycles;
+        if single {
+            retry_cycles += 1;
+        }
+        let epilog_done = cursor + costs.node_epilog;
+        let cycle_retry = SimTime(self.now().0 + costs.main_cycle_period.0 * retry_cycles as u64);
+        let earliest = epilog_done.max(cycle_retry);
+        self.defer_until(id, earliest);
+        // Guard the freed resources against requeued spot jobs restarting
+        // before the preemptor's retry cycle.
+        let cores_per_node = self.cluster().cores_per_node();
+        let need_cores = match req {
+            AllocRequest::Cores(c) => c,
+            AllocRequest::WholeNodes(n) => n * cores_per_node,
+        };
+        self.reserve_for(id, need_cores);
+        self.preempt_requested.insert(id);
+        if self.config().event_driven {
+            // Even event-driven controllers only pick the deferred job up at
+            // its retry time.
+            self.request_trigger(earliest);
+        }
+        cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::{topology, PartitionLayout};
+    use crate::job::{JobSpec, JobState, JobType, UserId};
+    use crate::preempt::{PreemptApproach, PreemptMode};
+    use crate::sched::{LogKind, Scheduler, SchedulerConfig};
+    use crate::sim::{SchedCosts, SimTime};
+
+    fn sched(layout: PartitionLayout, mode: PreemptMode) -> Scheduler {
+        let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), layout)
+            .with_approach(PreemptApproach::AutoScheduler { mode });
+        Scheduler::new(topology::tx2500(), cfg)
+    }
+
+    /// Fill the cluster with a triple-mode spot job, as the paper does.
+    fn fill_with_spot(s: &mut Scheduler) -> crate::job::JobId {
+        let spot = s.submit(JobSpec::spot(UserId(99), JobType::TripleMode, 608));
+        assert!(s.run_until_dispatched(&[spot], SimTime::from_secs(60)));
+        assert_eq!(s.cluster().idle_cores(), 0);
+        spot
+    }
+
+    #[test]
+    fn requeue_mode_preempts_and_dispatches() {
+        let mut s = sched(PartitionLayout::Dual, PreemptMode::Requeue);
+        let spot = fill_with_spot(&mut s);
+        let inter = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        assert!(
+            s.run_until_dispatched(&[inter], SimTime::from_secs(600)),
+            "interactive job must eventually dispatch via preemption"
+        );
+        // The spot job was requeued, not cancelled.
+        let st = s.job(spot).unwrap().state;
+        assert!(
+            matches!(st, JobState::Requeued | JobState::Pending),
+            "spot state {st:?}"
+        );
+        assert!(s.log().count(LogKind::Preempted) >= 1);
+        assert_eq!(s.job(inter).unwrap().state, JobState::Running);
+        s.cluster().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cancel_mode_kills_the_spot_job() {
+        let mut s = sched(PartitionLayout::Dual, PreemptMode::Cancel);
+        let spot = fill_with_spot(&mut s);
+        let inter = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        assert!(s.run_until_dispatched(&[inter], SimTime::from_secs(600)));
+        assert_eq!(s.job(spot).unwrap().state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn preemption_is_much_slower_than_baseline() {
+        // Baseline triple-mode on an idle cluster.
+        let mut b = Scheduler::new(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        );
+        let jb = b.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        assert!(b.run_until_dispatched(&[jb], SimTime::from_secs(60)));
+        let base = b.log().measure(&[jb]).unwrap().total_secs;
+
+        // Same job, but the cluster is full of spot work.
+        let mut s = sched(PartitionLayout::Dual, PreemptMode::Requeue);
+        fill_with_spot(&mut s);
+        let ji = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        assert!(s.run_until_dispatched(&[ji], SimTime::from_secs(600)));
+        let with_preempt = s.log().measure(&[ji]).unwrap().total_secs;
+
+        assert!(
+            with_preempt > 10.0 * base,
+            "auto preemption ({with_preempt}s) must be ≫ baseline ({base}s)"
+        );
+    }
+
+    #[test]
+    fn single_partition_slower_than_dual() {
+        let run = |layout| {
+            let mut s = sched(layout, PreemptMode::Requeue);
+            fill_with_spot(&mut s);
+            let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+            assert!(s.run_until_dispatched(&[j], SimTime::from_secs(1200)));
+            s.log().measure(&[j]).unwrap().total_secs
+        };
+        let single = run(PartitionLayout::Single);
+        let dual = run(PartitionLayout::Dual);
+        assert!(
+            single > dual,
+            "single partition ({single}s) must be slower than dual ({dual}s)"
+        );
+    }
+
+    #[test]
+    fn requeued_spot_job_runs_again_after_interactive_leaves() {
+        let mut s = sched(PartitionLayout::Dual, PreemptMode::Requeue);
+        let spot = fill_with_spot(&mut s);
+        let inter = s.submit(
+            JobSpec::interactive(UserId(1), JobType::TripleMode, 608)
+                .with_run_time(SimTime::from_secs(30)),
+        );
+        assert!(s.run_until_dispatched(&[inter], SimTime::from_secs(600)));
+        // Interactive ends after 30s of run time; the requeued spot job
+        // should eventually be dispatched again.
+        let horizon = s.now() + SimTime::from_secs(3600);
+        s.run_until(horizon);
+        assert_eq!(
+            s.job(spot).unwrap().state,
+            JobState::Running,
+            "requeued spot job must restart once resources free up"
+        );
+        assert!(s.job(spot).unwrap().requeue_count >= 1);
+    }
+
+    #[test]
+    fn insufficient_spot_resources_leave_job_pending() {
+        // Spot covers only 5 nodes; interactive wants all 19 — even full
+        // preemption cannot help, so no preemption storm should occur.
+        let mut s = sched(PartitionLayout::Dual, PreemptMode::Requeue);
+        let spot = s.submit(JobSpec::spot(UserId(99), JobType::TripleMode, 160));
+        assert!(s.run_until_dispatched(&[spot], SimTime::from_secs(60)));
+        // Occupy the rest with a long interactive job.
+        let filler = s.submit(
+            JobSpec::interactive(UserId(2), JobType::Array, 448)
+                .with_run_time(SimTime::from_secs(100_000)),
+        );
+        assert!(s.run_until_dispatched(&[filler], SimTime::from_secs(120)));
+        let inter = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        s.run_for(SimTime::from_secs(300));
+        assert_eq!(s.job(inter).unwrap().state, JobState::Pending);
+        assert_eq!(
+            s.job(spot).unwrap().state,
+            JobState::Running,
+            "spot must NOT be preempted when preemption cannot satisfy the job"
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! Preemption victim selection.
+//!
+//! The paper preempts spot jobs in "last-in, first-out" order — youngest
+//! first — "in order to increase the chance that older spot jobs will finish
+//! execution" (Slurm's `preempt_youngest_first`). The selection stops as
+//! soon as the freed resources cover the demand.
+
+use crate::job::JobId;
+use crate::sim::SimTime;
+
+/// A preemption candidate: a running spot job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Victim {
+    /// Job id.
+    pub job: JobId,
+    /// When it (last) entered the queue — LIFO key.
+    pub queue_time: SimTime,
+    /// Cores its allocation holds.
+    pub cores: u32,
+    /// Whole nodes its allocation holds exclusively (0 for core-packed
+    /// jobs sharing nodes).
+    pub whole_nodes: u32,
+}
+
+/// What the preemptor needs freed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Demand {
+    /// At least this many cores.
+    Cores(u32),
+    /// At least this many whole nodes.
+    WholeNodes(u32),
+}
+
+/// Selection order policy. The paper (and Slurm's `preempt_youngest_first`)
+/// uses LIFO; FIFO is implemented for the ablation benchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Order {
+    /// Youngest (largest queue_time) first — the paper's choice.
+    YoungestFirst,
+    /// Oldest first (ablation).
+    OldestFirst,
+}
+
+/// Select the minimal prefix of victims (in the given order) whose combined
+/// resources cover `demand`. Returns `None` when even preempting everyone
+/// would not satisfy the demand (the preemptor simply cannot fit).
+pub fn select_victims(candidates: &[Victim], demand: Demand, order: Order) -> Option<Vec<JobId>> {
+    let mut sorted: Vec<&Victim> = candidates.iter().collect();
+    // Tie-break by job id for determinism.
+    match order {
+        Order::YoungestFirst => sorted.sort_by_key(|v| (std::cmp::Reverse(v.queue_time), v.job)),
+        Order::OldestFirst => sorted.sort_by_key(|v| (v.queue_time, v.job)),
+    }
+    let mut chosen = Vec::new();
+    let (mut freed_cores, mut freed_nodes) = (0u64, 0u64);
+    let satisfied = |cores: u64, nodes: u64| match demand {
+        Demand::Cores(c) => cores >= c as u64,
+        Demand::WholeNodes(n) => nodes >= n as u64,
+    };
+    if satisfied(0, 0) {
+        return Some(Vec::new());
+    }
+    for v in sorted {
+        chosen.push(v.job);
+        freed_cores += v.cores as u64;
+        freed_nodes += v.whole_nodes as u64;
+        if satisfied(freed_cores, freed_nodes) {
+            return Some(chosen);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(id: u64, qt: u64, cores: u32, nodes: u32) -> Victim {
+        Victim {
+            job: JobId(id),
+            queue_time: SimTime::from_secs(qt),
+            cores,
+            whole_nodes: nodes,
+        }
+    }
+
+    #[test]
+    fn youngest_first_minimal_prefix() {
+        let cands = [v(1, 10, 100, 0), v(2, 30, 100, 0), v(3, 20, 100, 0)];
+        let got = select_victims(&cands, Demand::Cores(150), Order::YoungestFirst).unwrap();
+        // Youngest is job 2 (qt=30), then job 3 (qt=20).
+        assert_eq!(got, vec![JobId(2), JobId(3)]);
+    }
+
+    #[test]
+    fn oldest_first_ablation() {
+        let cands = [v(1, 10, 100, 0), v(2, 30, 100, 0)];
+        let got = select_victims(&cands, Demand::Cores(50), Order::OldestFirst).unwrap();
+        assert_eq!(got, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn whole_node_demand_counts_nodes_not_cores() {
+        // Job 1 holds 64 cores but spread (0 whole nodes); job 2 holds 2
+        // whole nodes.
+        let cands = [v(1, 50, 64, 0), v(2, 40, 128, 2)];
+        let got = select_victims(&cands, Demand::WholeNodes(1), Order::YoungestFirst).unwrap();
+        // Youngest (job 1) frees no whole node; must continue to job 2.
+        assert_eq!(got, vec![JobId(1), JobId(2)]);
+    }
+
+    #[test]
+    fn insufficient_returns_none() {
+        let cands = [v(1, 10, 100, 1)];
+        assert_eq!(select_victims(&cands, Demand::Cores(200), Order::YoungestFirst), None);
+        assert_eq!(
+            select_victims(&cands, Demand::WholeNodes(2), Order::YoungestFirst),
+            None
+        );
+    }
+
+    #[test]
+    fn zero_demand_selects_nothing() {
+        let cands = [v(1, 10, 100, 1)];
+        assert_eq!(
+            select_victims(&cands, Demand::Cores(0), Order::YoungestFirst).unwrap(),
+            Vec::<JobId>::new()
+        );
+    }
+
+    #[test]
+    fn tie_broken_by_job_id() {
+        let cands = [v(9, 10, 10, 0), v(3, 10, 10, 0)];
+        let got = select_victims(&cands, Demand::Cores(10), Order::YoungestFirst).unwrap();
+        assert_eq!(got, vec![JobId(3)]);
+    }
+}

@@ -1,0 +1,114 @@
+//! The Lua job-submit plugin approach — the paper's negative result.
+//!
+//! "We first used the Lua job submission script feature available with Slurm
+//! to detect a job submission and to preempt a spot job if needed. But this
+//! attempt did not work because, although it could detect the job
+//! submission, it failed to execute any Slurm commands under the Lua job
+//! submission script environment."
+//!
+//! We model the constraint structurally: the plugin receives the job record
+//! (detection works) and a [`SchedCommandGate`] that represents what the
+//! plugin environment lets it call — which, for scheduler commands, is
+//! nothing. The plugin's preemption attempt therefore always returns
+//! [`LuaError::SchedulerCallUnavailable`], and the scheduler proceeds as if
+//! no preemption had been requested — exactly the paper's observation.
+
+use crate::job::Job;
+
+/// Errors a job-submit plugin can hit.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum LuaError {
+    /// Scheduler commands (scontrol/squeue/...) cannot be executed from the
+    /// job-submit plugin environment. This is the paper's failure mode.
+    #[error("scheduler commands are unavailable in the job_submit plugin environment")]
+    SchedulerCallUnavailable,
+}
+
+/// The command surface a submit plugin *wishes* it had. Implementations
+/// decide what is actually callable.
+pub trait SchedCommandGate {
+    /// Request a requeue of a running job (as `scontrol requeue` would).
+    fn requeue(&mut self, job: crate::job::JobId) -> Result<(), LuaError>;
+}
+
+/// The real plugin environment: detection works, commands do not.
+pub struct DenyAllGate;
+
+impl SchedCommandGate for DenyAllGate {
+    fn requeue(&mut self, _job: crate::job::JobId) -> Result<(), LuaError> {
+        Err(LuaError::SchedulerCallUnavailable)
+    }
+}
+
+/// Outcome of the plugin run for one submission.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubmitOutcome {
+    /// The plugin observed the submission (detection always works).
+    pub observed_job_cores: u32,
+    /// Result of the attempted preemption call.
+    pub preempt_attempt: Result<(), LuaError>,
+}
+
+/// The job-submit plugin, as the paper attempted it.
+pub struct LuaSubmitPlugin;
+
+impl LuaSubmitPlugin {
+    /// Invoked by the scheduler at job arrival. Observes the job and tries
+    /// to preempt a spot job through the gate.
+    pub fn job_submit(&self, job: &Job, gate: &mut dyn SchedCommandGate) -> SubmitOutcome {
+        // Detection: the plugin can read the submission just fine.
+        let observed_job_cores = job.spec.cores();
+        // Action: any scheduler command fails in this environment.
+        let preempt_attempt = gate.requeue(job.id);
+        SubmitOutcome {
+            observed_job_cores,
+            preempt_attempt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobId, JobSpec, JobType, UserId};
+    use crate::sim::SimTime;
+
+    #[test]
+    fn plugin_detects_but_cannot_act() {
+        let job = Job::new(
+            JobId(7),
+            JobSpec::interactive(UserId(1), JobType::Array, 4096),
+            SimTime::ZERO,
+        );
+        let mut gate = DenyAllGate;
+        let out = LuaSubmitPlugin.job_submit(&job, &mut gate);
+        assert_eq!(out.observed_job_cores, 4096, "detection works");
+        assert_eq!(
+            out.preempt_attempt,
+            Err(LuaError::SchedulerCallUnavailable),
+            "scheduler commands must fail — the paper's negative result"
+        );
+    }
+
+    #[test]
+    fn a_permissive_gate_would_work() {
+        // Counterfactual: the approach itself is sound if the environment
+        // allowed commands; the limitation is the plugin sandbox.
+        struct AllowAll(Vec<JobId>);
+        impl SchedCommandGate for AllowAll {
+            fn requeue(&mut self, job: JobId) -> Result<(), LuaError> {
+                self.0.push(job);
+                Ok(())
+            }
+        }
+        let job = Job::new(
+            JobId(3),
+            JobSpec::interactive(UserId(1), JobType::TripleMode, 64),
+            SimTime::ZERO,
+        );
+        let mut gate = AllowAll(Vec::new());
+        let out = LuaSubmitPlugin.job_submit(&job, &mut gate);
+        assert!(out.preempt_attempt.is_ok());
+        assert_eq!(gate.0, vec![JobId(3)]);
+    }
+}

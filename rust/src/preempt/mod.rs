@@ -1,0 +1,125 @@
+//! The four spot-job preemption approaches from the paper.
+//!
+//! | Approach | Where it runs | Paper verdict |
+//! |---|---|---|
+//! | [`PreemptApproach::AutoScheduler`] | inside the scheduler's allocation path ("Resource Allocation Policies" in Fig 1) | 2–3 orders of magnitude scheduling-time degradation |
+//! | [`lua`] submit plugin | queue management hook at submission | **fails** — cannot execute scheduler commands |
+//! | [`PreemptApproach::Manual`] (modified `sbatch`) | synchronously before submission | ≈ baseline for individual/array; ~10× for triple-mode |
+//! | [`PreemptApproach::CronAgent`] | an independent privileged process | ≈ baseline for everything (the contribution) |
+//!
+//! The engines themselves are implemented as `impl Scheduler` extensions in
+//! [`auto`], [`manual`], and [`cron`]; victim selection is in [`lifo`].
+
+pub mod auto;
+pub mod cron;
+pub mod lifo;
+pub mod lua;
+pub mod manual;
+
+pub use cron::CronAgentConfig;
+
+/// Slurm preemption modes (paper Section II.A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PreemptMode {
+    /// Preempted job is cancelled and automatically resubmitted. The mode
+    /// the paper selects.
+    Requeue,
+    /// Preempted job is cancelled outright (owner must notice + resubmit).
+    Cancel,
+    /// Preempted job is frozen in memory on its nodes. Rejected by the
+    /// paper: the interactive job does not get the node's full memory.
+    Suspend,
+    /// Timeshare with the preemptor. Rejected by the paper: resources are
+    /// shared between the jobs.
+    Gang,
+}
+
+impl PreemptMode {
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            PreemptMode::Requeue => "REQUEUE",
+            PreemptMode::Cancel => "CANCEL",
+            PreemptMode::Suspend => "SUSPEND",
+            PreemptMode::Gang => "GANG",
+        }
+    }
+
+    /// Does this mode free the victim's cores for the preemptor?
+    /// SUSPEND keeps memory (and in our model the node) occupied; GANG
+    /// timeshares. That is exactly why the paper rejects them.
+    pub fn frees_resources(self) -> bool {
+        matches!(self, PreemptMode::Requeue | PreemptMode::Cancel)
+    }
+}
+
+impl std::fmt::Display for PreemptMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Which preemption machinery the scheduler is configured with.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PreemptApproach {
+    /// No preemption: interactive jobs wait for resources (baseline).
+    None,
+    /// Scheduler-driven automatic QoS preemption inside the allocation path.
+    AutoScheduler {
+        /// What happens to victims.
+        mode: PreemptMode,
+    },
+    /// Modified-`sbatch` manual preemption: the submit wrapper requeues spot
+    /// jobs synchronously, then submits (`manual::manual_submit`).
+    Manual {
+        /// What happens to victims.
+        mode: PreemptMode,
+    },
+    /// The paper's contribution: an independent privileged cron agent
+    /// requeues spot jobs LIFO and maintains an idle-node reserve.
+    CronAgent {
+        /// What happens to victims.
+        mode: PreemptMode,
+        /// Agent parameters.
+        cfg: CronAgentConfig,
+    },
+}
+
+impl PreemptApproach {
+    /// Short label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PreemptApproach::None => "baseline",
+            PreemptApproach::AutoScheduler { .. } => "auto-scheduler",
+            PreemptApproach::Manual { .. } => "manual-sbatch",
+            PreemptApproach::CronAgent { .. } => "cron-agent",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_resource_semantics() {
+        assert!(PreemptMode::Requeue.frees_resources());
+        assert!(PreemptMode::Cancel.frees_resources());
+        assert!(!PreemptMode::Suspend.frees_resources());
+        assert!(!PreemptMode::Gang.frees_resources());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(PreemptMode::Requeue.label(), "REQUEUE");
+        assert_eq!(PreemptApproach::None.label(), "baseline");
+        assert_eq!(
+            PreemptApproach::CronAgent {
+                mode: PreemptMode::Requeue,
+                cfg: CronAgentConfig::default()
+            }
+            .label(),
+            "cron-agent"
+        );
+    }
+}

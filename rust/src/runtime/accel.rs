@@ -1,0 +1,300 @@
+//! `SchedAccel`: the XLA-compiled scheduling decision step on the scheduler
+//! hot path.
+//!
+//! Pads the scheduler's batches to the AOT shape contract
+//! (`artifacts/sched_step.meta`), executes the compiled module, and unpads.
+//! Implements [`PriorityScorer`] so `SchedulerConfig::with_scorer` can drop
+//! it into the scheduling cycle. When the artifact is missing the caller
+//! falls back to [`crate::runtime::fallback`] / [`NativeScorer`].
+
+use super::client::{literal_f32, XlaModule};
+use crate::sched::priority::{JobFactors, PriorityScorer, N_FACTORS, WEIGHTS};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// The static shapes the artifact was compiled for (python/compile/model.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeContract {
+    /// Max pending jobs per batch.
+    pub jobs: usize,
+    /// Priority factor width.
+    pub factors: usize,
+    /// Max running spot jobs.
+    pub spots: usize,
+    /// Max nodes.
+    pub nodes: usize,
+}
+
+impl ShapeContract {
+    /// Parse the `key=value` meta file written by `aot.py`.
+    pub fn from_meta(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut jobs = None;
+        let mut factors = None;
+        let mut spots = None;
+        let mut nodes = None;
+        for line in text.lines() {
+            let Some((k, v)) = line.split_once('=') else { continue };
+            let v: usize = v.trim().parse().with_context(|| format!("bad meta line {line:?}"))?;
+            match k.trim() {
+                "jobs" => jobs = Some(v),
+                "factors" => factors = Some(v),
+                "spots" => spots = Some(v),
+                "nodes" => nodes = Some(v),
+                _ => {}
+            }
+        }
+        Ok(Self {
+            jobs: jobs.context("meta missing jobs")?,
+            factors: factors.context("meta missing factors")?,
+            spots: spots.context("meta missing spots")?,
+            nodes: nodes.context("meta missing nodes")?,
+        })
+    }
+}
+
+/// Output of one accelerated decision step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccelOut {
+    /// Priority scores, one per input job.
+    pub scores: Vec<f32>,
+    /// LIFO preemption mask over the (youngest-first) spot jobs.
+    pub preempt_mask: Vec<bool>,
+    /// Feasible-node counts, one per input job.
+    pub fit_counts: Vec<i32>,
+}
+
+/// The compiled decision module plus its shape contract.
+///
+/// Execution is serialized behind a mutex: PJRT executables are not
+/// documented thread-safe through this binding, and the scheduler issues one
+/// batch per cycle anyway.
+pub struct SchedAccel {
+    module: Mutex<XlaModule>,
+    contract: ShapeContract,
+}
+
+// SAFETY: all access to the inner `XlaModule` goes through the `Mutex`,
+// which serializes the non-atomic `Rc` refcount updates inside the xla
+// binding (see the Send rationale on `XlaModule`).
+unsafe impl Sync for SchedAccel {}
+
+impl SchedAccel {
+    /// Load from an artifact directory (`artifacts/`). Errors if the
+    /// artifact or its meta file is missing or malformed.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let contract = ShapeContract::from_meta(&dir.join("sched_step.meta"))?;
+        anyhow::ensure!(
+            contract.factors == N_FACTORS,
+            "artifact factor width {} != crate N_FACTORS {} — rebuild artifacts",
+            contract.factors,
+            N_FACTORS
+        );
+        let module = XlaModule::load(&dir.join("sched_step.hlo.txt"))?;
+        Ok(Self {
+            module: Mutex::new(module),
+            contract,
+        })
+    }
+
+    /// Load from the conventional location (`$CARGO_MANIFEST_DIR/artifacts`
+    /// or `./artifacts`), returning `None` (not an error) when absent.
+    pub fn load_default() -> Option<Self> {
+        let candidates = [
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            std::path::PathBuf::from("artifacts"),
+        ];
+        for dir in candidates {
+            if dir.join("sched_step.hlo.txt").exists() {
+                match Self::load(&dir) {
+                    Ok(a) => return Some(a),
+                    Err(e) => {
+                        eprintln!("warning: failed to load XLA artifact in {}: {e:#}", dir.display());
+                        return None;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// The shape contract.
+    pub fn contract(&self) -> ShapeContract {
+        self.contract
+    }
+
+    /// Run one decision step. Inputs longer than the contract are rejected
+    /// (the scheduler chunks its batches).
+    pub fn sched_step(
+        &self,
+        factors: &[JobFactors],
+        spot_cores_youngest_first: &[f32],
+        demand: f32,
+        free: &[f32],
+        reqs: &[f32],
+    ) -> Result<AccelOut> {
+        let c = self.contract;
+        anyhow::ensure!(factors.len() <= c.jobs, "too many jobs: {} > {}", factors.len(), c.jobs);
+        anyhow::ensure!(reqs.len() == factors.len(), "reqs/factors length mismatch");
+        anyhow::ensure!(
+            spot_cores_youngest_first.len() <= c.spots,
+            "too many spot jobs: {} > {}",
+            spot_cores_youngest_first.len(),
+            c.spots
+        );
+        anyhow::ensure!(free.len() <= c.nodes, "too many nodes: {} > {}", free.len(), c.nodes);
+
+        // Pad to the contract.
+        let mut f = vec![0.0f32; c.jobs * c.factors];
+        for (i, jf) in factors.iter().enumerate() {
+            f[i * c.factors..(i + 1) * c.factors].copy_from_slice(&jf.0);
+        }
+        let mut spot = spot_cores_youngest_first.to_vec();
+        spot.resize(c.spots, 0.0);
+        let mut fr = free.to_vec();
+        fr.resize(c.nodes, 0.0);
+        let mut rq = reqs.to_vec();
+        rq.resize(c.jobs, 1e18);
+
+        let inputs = [
+            literal_f32(&f, &[c.jobs as i64, c.factors as i64])?,
+            literal_f32(&WEIGHTS, &[c.factors as i64])?,
+            literal_f32(&spot, &[c.spots as i64])?,
+            literal_f32(&[demand], &[1])?,
+            literal_f32(&fr, &[c.nodes as i64])?,
+            literal_f32(&rq, &[c.jobs as i64])?,
+        ];
+        let outs = self
+            .module
+            .lock()
+            .expect("accel mutex poisoned")
+            .execute(&inputs)?;
+        anyhow::ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
+        let scores_full = outs[0].to_vec::<f32>()?;
+        let mask_full = outs[1].to_vec::<i32>()?;
+        let counts_full = outs[2].to_vec::<i32>()?;
+        Ok(AccelOut {
+            scores: scores_full[..factors.len()].to_vec(),
+            preempt_mask: mask_full[..spot_cores_youngest_first.len()]
+                .iter()
+                .map(|&m| m != 0)
+                .collect(),
+            fit_counts: counts_full[..factors.len()].to_vec(),
+        })
+    }
+}
+
+impl PriorityScorer for SchedAccel {
+    fn scores(&self, factors: &[JobFactors]) -> Vec<f32> {
+        if factors.is_empty() {
+            return Vec::new();
+        }
+        // Chunk oversized queues to the contract.
+        let c = self.contract;
+        let mut out = Vec::with_capacity(factors.len());
+        for chunk in factors.chunks(c.jobs) {
+            let reqs = vec![1e18f32; chunk.len()];
+            match self.sched_step(chunk, &[], 0.0, &[], &reqs) {
+                Ok(r) => out.extend(r.scores),
+                Err(e) => {
+                    // Hot path must not fail: fall back to native scoring.
+                    eprintln!("warning: accel scoring failed ({e:#}); using native fallback");
+                    out.extend(super::fallback::priority_scores(chunk, &WEIGHTS));
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-accel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::fallback;
+    use crate::util::rng::Xoshiro256;
+
+    fn accel_or_skip() -> Option<SchedAccel> {
+        match SchedAccel::load_default() {
+            Some(a) => Some(a),
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                None
+            }
+        }
+    }
+
+    fn random_factors(rng: &mut Xoshiro256, n: usize) -> Vec<JobFactors> {
+        (0..n)
+            .map(|_| {
+                let mut f = [0.0f32; N_FACTORS];
+                for x in f.iter_mut() {
+                    *x = rng.uniform(0.0, 10.0) as f32;
+                }
+                JobFactors(f)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn contract_matches_crate() {
+        let Some(a) = accel_or_skip() else { return };
+        assert_eq!(a.contract().factors, N_FACTORS);
+        assert!(a.contract().jobs >= 512);
+    }
+
+    #[test]
+    fn scores_match_fallback() {
+        let Some(a) = accel_or_skip() else { return };
+        let mut rng = Xoshiro256::new(42);
+        let factors = random_factors(&mut rng, 300);
+        let got = a.scores(&factors);
+        let want = fallback::priority_scores(&factors, &WEIGHTS);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-2 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn full_step_matches_fallback() {
+        let Some(a) = accel_or_skip() else { return };
+        let mut rng = Xoshiro256::new(7);
+        let factors = random_factors(&mut rng, 50);
+        let spot: Vec<f32> = (0..20).map(|_| rng.gen_range(0, 512) as f32).collect();
+        let demand = 700.0f32;
+        let free: Vec<f32> = (0..64).map(|_| rng.gen_range(0, 65) as f32).collect();
+        let reqs: Vec<f32> = (0..50).map(|_| rng.gen_range(1, 64) as f32).collect();
+        let out = a.sched_step(&factors, &spot, demand, &free, &reqs).unwrap();
+        assert_eq!(out.preempt_mask, fallback::select_victims(&spot, demand));
+        assert_eq!(out.fit_counts, fallback::fit_counts(&free, &reqs));
+    }
+
+    #[test]
+    fn oversized_batch_chunks() {
+        let Some(a) = accel_or_skip() else { return };
+        let n = a.contract().jobs + 100;
+        let mut rng = Xoshiro256::new(9);
+        let factors = random_factors(&mut rng, n);
+        let got = a.scores(&factors);
+        assert_eq!(got.len(), n);
+        let want = fallback::priority_scores(&factors, &WEIGHTS);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-2 * w.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let Some(a) = accel_or_skip() else { return };
+        assert!(a.scores(&[]).is_empty());
+        let out = a.sched_step(&[], &[], 0.0, &[], &[]).unwrap();
+        assert!(out.scores.is_empty());
+        assert!(out.preempt_mask.is_empty());
+    }
+}

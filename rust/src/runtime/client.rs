@@ -1,0 +1,114 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange format is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, which sidesteps xla_extension 0.5.1's rejection of
+//! jax ≥ 0.5's 64-bit-id protos.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled, executable XLA module on the PJRT CPU client.
+pub struct XlaModule {
+    exe: xla::PjRtLoadedExecutable,
+    platform: String,
+}
+
+// SAFETY: the PJRT C++ client and loaded executable are thread-safe; the
+// only thread-affine state in the Rust binding is the non-atomic `Rc`
+// refcount inside `PjRtClient`. `XlaModule` owns the sole client handle and
+// never hands out clones: refcount mutations happen only inside `execute`
+// (buffers cloned and dropped before it returns) and at drop. Callers that
+// share an `XlaModule` across threads must serialize access (SchedAccel
+// wraps it in a `Mutex`), which also serializes those refcount updates.
+unsafe impl Send for XlaModule {}
+
+impl XlaModule {
+    /// Load HLO text from `path`, compile it on a fresh CPU client.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Self { exe, platform })
+    }
+
+    /// PJRT platform name ("cpu" here; "tpu" with a TPU plugin).
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Execute with literal inputs; returns the flattened tuple elements.
+    /// The AOT pipeline lowers with `return_tuple=True`, so the single
+    /// output buffer is a tuple literal we decompose.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self.exe.execute::<xla::Literal>(inputs).context("executing module")?;
+        let first = outs
+            .first()
+            .and_then(|d| d.first())
+            .context("executable produced no output buffer")?;
+        let lit = first.to_literal_sync().context("fetching output literal")?;
+        Ok(lit.to_tuple().context("decomposing output tuple")?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_path() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/sched_step.hlo.txt")
+    }
+
+    /// These tests require `make artifacts`; they skip (pass vacuously) when
+    /// the artifact is absent so `cargo test` works on a fresh checkout.
+    fn load_or_skip() -> Option<XlaModule> {
+        let p = artifact_path();
+        if !p.exists() {
+            eprintln!("skipping: {} not built (run `make artifacts`)", p.display());
+            return None;
+        }
+        Some(XlaModule::load(&p).expect("artifact should compile"))
+    }
+
+    #[test]
+    fn loads_and_reports_platform() {
+        let Some(m) = load_or_skip() else { return };
+        assert_eq!(m.platform(), "cpu");
+    }
+
+    #[test]
+    fn executes_with_correct_arity() {
+        let Some(m) = load_or_skip() else { return };
+        let jobs = 1024usize;
+        let factors = literal_f32(&vec![0.0; jobs * 8], &[jobs as i64, 8]).unwrap();
+        let weights = literal_f32(&[1.0; 8], &[8]).unwrap();
+        let spot = literal_f32(&vec![0.0; 1024], &[1024]).unwrap();
+        let demand = literal_f32(&[0.0], &[1]).unwrap();
+        let free = literal_f32(&vec![0.0; 1024], &[1024]).unwrap();
+        let reqs = literal_f32(&vec![1e18; 1024], &[1024]).unwrap();
+        let outs = m
+            .execute(&[factors, weights, spot, demand, free, reqs])
+            .unwrap();
+        assert_eq!(outs.len(), 3, "sched_step returns a 3-tuple");
+        let scores = outs[0].to_vec::<f32>().unwrap();
+        assert_eq!(scores.len(), jobs);
+        assert!(scores.iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let err = XlaModule::load(std::path::Path::new("/nonexistent/x.hlo.txt"));
+        assert!(err.is_err());
+    }
+}

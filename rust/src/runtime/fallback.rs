@@ -1,0 +1,77 @@
+//! Pure-Rust implementation of the scheduling decision step.
+//!
+//! Semantically identical to the Pallas kernels (the pytest oracle in
+//! `python/compile/kernels/ref.py` defines the contract). Used when the AOT
+//! artifact is absent, and as the oracle for the accel equivalence tests.
+
+use crate::sched::priority::{JobFactors, N_FACTORS};
+
+/// `scores[j] = dot(factors[j], weights)`.
+pub fn priority_scores(factors: &[JobFactors], weights: &[f32; N_FACTORS]) -> Vec<f32> {
+    factors
+        .iter()
+        .map(|f| f.0.iter().zip(weights.iter()).map(|(x, w)| x * w).sum())
+        .collect()
+}
+
+/// LIFO victim mask: minimal prefix of youngest-first `cores` covering
+/// `demand`; zero entries are padding and never selected.
+pub fn select_victims(cores_youngest_first: &[f32], demand: f32) -> Vec<bool> {
+    let mut exclusive = 0.0f32;
+    cores_youngest_first
+        .iter()
+        .map(|&c| {
+            let selected = exclusive < demand && c > 0.0;
+            exclusive += c;
+            selected
+        })
+        .collect()
+}
+
+/// `counts[j] = #{m : free[m] >= reqs[j]}`.
+pub fn fit_counts(free: &[f32], reqs: &[f32]) -> Vec<i32> {
+    reqs.iter()
+        .map(|&r| free.iter().filter(|&&f| f >= r).count() as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scores_dot_product() {
+        let mut f = [0.0f32; N_FACTORS];
+        f[0] = 2.0;
+        f[1] = 3.0;
+        let mut w = [0.0f32; N_FACTORS];
+        w[0] = 10.0;
+        w[1] = 1.0;
+        let s = priority_scores(&[JobFactors(f)], &w);
+        assert_eq!(s, vec![23.0]);
+    }
+
+    #[test]
+    fn select_minimal_prefix() {
+        let mask = select_victims(&[256.0, 128.0, 512.0], 300.0);
+        assert_eq!(mask, vec![true, true, false]);
+    }
+
+    #[test]
+    fn select_skips_padding_zeros() {
+        let mask = select_victims(&[8.0, 0.0, 8.0], 16.0);
+        assert_eq!(mask, vec![true, false, true]);
+    }
+
+    #[test]
+    fn select_zero_demand() {
+        let mask = select_victims(&[8.0, 8.0], 0.0);
+        assert_eq!(mask, vec![false, false]);
+    }
+
+    #[test]
+    fn fit_counts_basic() {
+        let counts = fit_counts(&[0.0, 16.0, 32.0], &[16.0, 1e18]);
+        assert_eq!(counts, vec![2, 0]);
+    }
+}

@@ -1,0 +1,22 @@
+//! The PJRT/XLA runtime bridge.
+//!
+//! Loads the AOT-compiled scheduling decision module
+//! (`artifacts/sched_step.hlo.txt`, built once by `make artifacts`) into the
+//! PJRT CPU client and exposes it to the L3 scheduler hot path:
+//!
+//! * [`client`] — thin wrapper over the `xla` crate: HLO text → compile →
+//!   execute.
+//! * [`accel`] — [`accel::SchedAccel`]: the batched scheduling decision step
+//!   (priority scores, LIFO preemption mask, fit counts) with padding to the
+//!   AOT shape contract; implements [`crate::sched::PriorityScorer`].
+//! * [`fallback`] — the pure-Rust implementation of the same math, used when
+//!   artifacts are absent and as the equivalence oracle in tests.
+//!
+//! Python never runs at runtime: the artifact is self-contained HLO text.
+
+pub mod accel;
+pub mod client;
+pub mod fallback;
+
+pub use accel::{AccelOut, SchedAccel, ShapeContract};
+pub use client::XlaModule;

@@ -1,0 +1,117 @@
+//! Scheduler configuration.
+
+use crate::cluster::PartitionLayout;
+use crate::preempt::PreemptApproach;
+use crate::sched::priority::{NativeScorer, PriorityScorer};
+use crate::sim::{SchedCosts, SimTime};
+use std::sync::Arc;
+
+/// Configuration for a [`super::Scheduler`].
+#[derive(Clone)]
+pub struct SchedulerConfig {
+    /// Calibrated latency model.
+    pub costs: SchedCosts,
+    /// Single vs dual partition configuration (paper Table I).
+    pub layout: PartitionLayout,
+    /// Preemption machinery.
+    pub approach: PreemptApproach,
+    /// Trigger a scheduling pass when resources free up (node epilog done,
+    /// job ended). Slurm does this on both presets; the *auto-preemption*
+    /// slowness comes from the preemptor job's deferral, not from missing
+    /// triggers.
+    pub event_driven: bool,
+    /// Hold time before a requeued spot job becomes eligible again.
+    pub requeue_hold: SimTime,
+    /// Per-user interactive core limit (paper: 4096 on the production
+    /// partition).
+    pub user_core_limit: u32,
+    /// Seed for scheduler-cycle phase jitter (run-to-run variance of which
+    /// cycle picks a job up — the source of the paper's Fig 2g outliers).
+    pub phase_seed: u64,
+    /// Run the Lua job-submit plugin hook at job arrival (the paper's
+    /// negative result; observational only).
+    pub lua_plugin: bool,
+    /// Batched priority scoring backend: native Rust or the AOT-compiled
+    /// XLA kernel (`runtime::accel::SchedAccel`).
+    pub scorer: Arc<dyn PriorityScorer + Send + Sync>,
+}
+
+impl std::fmt::Debug for SchedulerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SchedulerConfig")
+            .field("layout", &self.layout)
+            .field("approach", &self.approach.label())
+            .field("event_driven", &self.event_driven)
+            .field("requeue_hold", &self.requeue_hold)
+            .field("user_core_limit", &self.user_core_limit)
+            .field("phase_seed", &self.phase_seed)
+            .field("lua_plugin", &self.lua_plugin)
+            .field("scorer", &self.scorer.name())
+            .finish()
+    }
+}
+
+impl SchedulerConfig {
+    /// Baseline configuration (no preemption) with the given cost preset and
+    /// partition layout.
+    pub fn baseline(costs: SchedCosts, layout: PartitionLayout) -> Self {
+        Self {
+            costs,
+            layout,
+            approach: PreemptApproach::None,
+            event_driven: true,
+            requeue_hold: SimTime::from_secs(60),
+            user_core_limit: 4096,
+            phase_seed: 0x5107_c10d,
+            lua_plugin: false,
+            scorer: Arc::new(NativeScorer),
+        }
+    }
+
+    /// Builder: set the preemption approach.
+    pub fn with_approach(mut self, approach: PreemptApproach) -> Self {
+        self.approach = approach;
+        self
+    }
+
+    /// Builder: set the phase seed (experiments vary this between runs).
+    pub fn with_phase_seed(mut self, seed: u64) -> Self {
+        self.phase_seed = seed;
+        self
+    }
+
+    /// Builder: set the per-user interactive core limit.
+    pub fn with_user_limit(mut self, cores: u32) -> Self {
+        self.user_core_limit = cores;
+        self
+    }
+
+    /// Builder: set the scoring backend.
+    pub fn with_scorer(mut self, scorer: Arc<dyn PriorityScorer + Send + Sync>) -> Self {
+        self.scorer = scorer;
+        self
+    }
+
+    /// Builder: enable the Lua submit-plugin hook.
+    pub fn with_lua_plugin(mut self, on: bool) -> Self {
+        self.lua_plugin = on;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_chain() {
+        let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+            .with_phase_seed(7)
+            .with_user_limit(608)
+            .with_lua_plugin(true);
+        assert_eq!(cfg.phase_seed, 7);
+        assert_eq!(cfg.user_core_limit, 608);
+        assert!(cfg.lua_plugin);
+        assert_eq!(cfg.scorer.name(), "native");
+    }
+}

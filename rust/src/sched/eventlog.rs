@@ -1,0 +1,212 @@
+//! The scheduler event log — the measurement source.
+//!
+//! The paper measures scheduling time "from the moment the scheduler
+//! recognized the job submission to the moment when its last job was
+//! dispatched to the cluster for execution", read from the scheduler event
+//! log. This module is that log plus the measurement helpers.
+
+use crate::job::JobId;
+use crate::sim::SimTime;
+// FxHashMap: the index lookups sit on the simulator hot path and SipHash
+// was 28% of burst-experiment time (EXPERIMENTS.md §Perf).
+use rustc_hash::FxHashMap as HashMap;
+
+/// Log entry kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LogKind {
+    /// Scheduler recognized the submission (job entered the pending queue).
+    Recognized,
+    /// Last task/node-script dispatch RPC for the job completed.
+    DispatchDone,
+    /// Job was selected as a preemption victim.
+    Preempted,
+    /// Requeue transaction completed (job back to pending).
+    Requeued,
+    /// Job reached a terminal state.
+    Ended,
+    /// A cron-agent pass preempted this job.
+    CronPreempted,
+}
+
+/// One log entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LogEntry {
+    /// Virtual timestamp.
+    pub time: SimTime,
+    /// Subject job.
+    pub job: JobId,
+    /// What happened.
+    pub kind: LogKind,
+}
+
+/// Append-only scheduler event log.
+///
+/// Keeps O(1) first/last indexes per (job, kind): the measurement helpers
+/// are called on the simulator's hot path (`run_until_dispatched` polls
+/// them), and a linear scan of the log made large-burst experiments
+/// quadratic (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    entries: Vec<LogEntry>,
+    first_idx: HashMap<(JobId, LogKind), SimTime>,
+    last_idx: HashMap<(JobId, LogKind), SimTime>,
+    kind_counts: HashMap<LogKind, usize>,
+}
+
+/// A scheduling-time measurement over a set of jobs (one submission burst).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedMeasurement {
+    /// First `Recognized` among the jobs.
+    pub first_recognized: SimTime,
+    /// Last `DispatchDone` among the jobs.
+    pub last_dispatched: SimTime,
+    /// `last_dispatched - first_recognized` in seconds.
+    pub total_secs: f64,
+    /// Jobs that were recognized.
+    pub jobs_recognized: usize,
+    /// Jobs that completed dispatch.
+    pub jobs_dispatched: usize,
+}
+
+impl SchedMeasurement {
+    /// Seconds per task given the total task count of the burst.
+    pub fn per_task(&self, tasks: u64) -> f64 {
+        assert!(tasks > 0);
+        self.total_secs / tasks as f64
+    }
+}
+
+impl EventLog {
+    /// Append an entry. Timestamps must be non-decreasing per job for the
+    /// same kind; globally the log is in emission order.
+    pub fn push(&mut self, time: SimTime, job: JobId, kind: LogKind) {
+        self.entries.push(LogEntry { time, job, kind });
+        self.first_idx.entry((job, kind)).or_insert(time);
+        self.last_idx.insert((job, kind), time);
+        *self.kind_counts.entry(kind).or_insert(0) += 1;
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[LogEntry] {
+        &self.entries
+    }
+
+    /// Entries about one job.
+    pub fn for_job(&self, job: JobId) -> impl Iterator<Item = &LogEntry> {
+        self.entries.iter().filter(move |e| e.job == job)
+    }
+
+    /// First entry of a kind for a job (O(1)).
+    pub fn first(&self, job: JobId, kind: LogKind) -> Option<SimTime> {
+        self.first_idx.get(&(job, kind)).copied()
+    }
+
+    /// Last entry of a kind for a job (O(1)).
+    pub fn last(&self, job: JobId, kind: LogKind) -> Option<SimTime> {
+        self.last_idx.get(&(job, kind)).copied()
+    }
+
+    /// Count of entries of a kind (across all jobs, O(1)).
+    pub fn count(&self, kind: LogKind) -> usize {
+        self.kind_counts.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Measure the scheduling time of a burst of jobs, per the paper's
+    /// definition. Returns `None` if none of the jobs were recognized or
+    /// dispatched.
+    pub fn measure(&self, jobs: &[JobId]) -> Option<SchedMeasurement> {
+        let mut first_recognized: Option<SimTime> = None;
+        let mut last_dispatched: Option<SimTime> = None;
+        let mut nrec = 0usize;
+        let mut ndis = 0usize;
+        for &j in jobs {
+            if let Some(t) = self.first(j, LogKind::Recognized) {
+                nrec += 1;
+                first_recognized = Some(first_recognized.map_or(t, |c: SimTime| c.min(t)));
+            }
+            if let Some(t) = self.last(j, LogKind::DispatchDone) {
+                ndis += 1;
+                last_dispatched = Some(last_dispatched.map_or(t, |c: SimTime| c.max(t)));
+            }
+        }
+        let (fr, ld) = (first_recognized?, last_dispatched?);
+        Some(SchedMeasurement {
+            first_recognized: fr,
+            last_dispatched: ld,
+            total_secs: ld.saturating_sub(fr).as_secs_f64(),
+            jobs_recognized: nrec,
+            jobs_dispatched: ndis,
+        })
+    }
+
+    /// Measure from an explicit start time (the paper's manual-preemption
+    /// experiment measures "from the time when the preemption had started").
+    pub fn measure_from(&self, start: SimTime, jobs: &[JobId]) -> Option<SchedMeasurement> {
+        let m = self.measure(jobs)?;
+        Some(SchedMeasurement {
+            first_recognized: start,
+            total_secs: m.last_dispatched.saturating_sub(start).as_secs_f64(),
+            ..m
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_burst() {
+        let mut log = EventLog::default();
+        let (a, b) = (JobId(1), JobId(2));
+        log.push(SimTime::from_secs(10), a, LogKind::Recognized);
+        log.push(SimTime::from_secs(11), b, LogKind::Recognized);
+        log.push(SimTime::from_secs(12), a, LogKind::DispatchDone);
+        log.push(SimTime::from_secs(15), b, LogKind::DispatchDone);
+        let m = log.measure(&[a, b]).unwrap();
+        assert_eq!(m.first_recognized, SimTime::from_secs(10));
+        assert_eq!(m.last_dispatched, SimTime::from_secs(15));
+        assert_eq!(m.total_secs, 5.0);
+        assert_eq!(m.jobs_dispatched, 2);
+        assert_eq!(m.per_task(100), 0.05);
+    }
+
+    #[test]
+    fn measure_missing_jobs_is_none() {
+        let log = EventLog::default();
+        assert!(log.measure(&[JobId(1)]).is_none());
+    }
+
+    #[test]
+    fn requeued_job_uses_last_dispatch() {
+        let mut log = EventLog::default();
+        let j = JobId(1);
+        log.push(SimTime::from_secs(1), j, LogKind::Recognized);
+        log.push(SimTime::from_secs(2), j, LogKind::DispatchDone);
+        log.push(SimTime::from_secs(3), j, LogKind::Preempted);
+        log.push(SimTime::from_secs(9), j, LogKind::DispatchDone);
+        let m = log.measure(&[j]).unwrap();
+        assert_eq!(m.last_dispatched, SimTime::from_secs(9));
+    }
+
+    #[test]
+    fn measure_from_start_overrides() {
+        let mut log = EventLog::default();
+        let j = JobId(1);
+        log.push(SimTime::from_secs(5), j, LogKind::Recognized);
+        log.push(SimTime::from_secs(8), j, LogKind::DispatchDone);
+        let m = log.measure_from(SimTime::from_secs(2), &[j]).unwrap();
+        assert_eq!(m.total_secs, 6.0);
+    }
+
+    #[test]
+    fn counts_by_kind() {
+        let mut log = EventLog::default();
+        log.push(SimTime::ZERO, JobId(1), LogKind::Preempted);
+        log.push(SimTime::ZERO, JobId(2), LogKind::Preempted);
+        log.push(SimTime::ZERO, JobId(1), LogKind::Requeued);
+        assert_eq!(log.count(LogKind::Preempted), 2);
+        assert_eq!(log.count(LogKind::Requeued), 1);
+        assert_eq!(log.count(LogKind::Ended), 0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Build a cluster + scheduler configuration from a `slurm.conf`-style file
+//! (see [`crate::util::config`]), so deployments are file-describable like
+//! the real system the paper modifies.
+//!
+//! Recognized keys (case-insensitive, `Key=Value`, `#` comments):
+//!
+//! ```text
+//! ClusterName=tx-2500          # label only
+//! Nodes=19                     # node count
+//! CoresPerNode=32
+//! CostPreset=dedicated         # dedicated | production
+//! PartitionLayout=dual         # single | dual
+//! PreemptApproach=cron         # none | auto | manual | cron
+//! PreemptMode=REQUEUE          # REQUEUE | CANCEL | SUSPEND | GANG
+//! ReserveNodes=5               # cron agent reserve
+//! UserCoreLimit=160
+//! CronIntervalSecs=60
+//! RequeueHoldSecs=60
+//! PhaseSeed=1
+//! SchedulerParameters=preempt_youngest_first,bf_interval=30
+//! ```
+
+use crate::cluster::{Cluster, PartitionLayout};
+use crate::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
+use crate::sched::SchedulerConfig;
+use crate::sim::{SchedCosts, SimTime};
+use crate::util::config::ConfigFile;
+use anyhow::{bail, Context, Result};
+
+/// A fully-described deployment: cluster + scheduler config.
+pub struct Deployment {
+    /// Cluster label from `ClusterName`.
+    pub name: String,
+    /// The hardware.
+    pub cluster: Cluster,
+    /// The scheduler configuration.
+    pub config: SchedulerConfig,
+}
+
+/// Parse a deployment from config text.
+pub fn deployment_from_text(text: &str) -> Result<Deployment> {
+    let cfg = ConfigFile::parse(text).context("parsing config")?;
+    deployment_from_config(&cfg)
+}
+
+/// Parse a deployment from a config file on disk.
+pub fn deployment_from_file(path: &std::path::Path) -> Result<Deployment> {
+    let cfg = ConfigFile::load(path)?;
+    deployment_from_config(&cfg)
+}
+
+/// Build from a parsed [`ConfigFile`].
+pub fn deployment_from_config(cfg: &ConfigFile) -> Result<Deployment> {
+    let name = cfg.get("ClusterName").unwrap_or("spotcloud").to_string();
+    let nodes: u32 = cfg.get_parsed_or("Nodes", 19)?;
+    let cores: u32 = cfg.get_parsed_or("CoresPerNode", 32)?;
+    anyhow::ensure!(nodes > 0 && cores > 0, "Nodes and CoresPerNode must be positive");
+    let cluster = Cluster::homogeneous(nodes, cores);
+
+    let mut costs = match cfg.get("CostPreset").unwrap_or("dedicated") {
+        "dedicated" => SchedCosts::dedicated(),
+        "production" => SchedCosts::production(),
+        other => bail!("unknown CostPreset {other:?} (dedicated | production)"),
+    };
+    costs.cron_interval = SimTime::from_secs(cfg.get_parsed_or("CronIntervalSecs", 60u64)?);
+    // Honor Slurm-style SchedulerParameters where we model them.
+    let (_flags, kvs) = cfg.option_list("SchedulerParameters");
+    if let Some(bf) = kvs.get("bf_interval") {
+        costs.backfill_cycle_period =
+            SimTime::from_secs(bf.parse::<u64>().context("bf_interval")?);
+    }
+    if let Some(si) = kvs.get("sched_interval") {
+        costs.main_cycle_period = SimTime::from_secs(si.parse::<u64>().context("sched_interval")?);
+    }
+
+    let layout = match cfg.get("PartitionLayout").unwrap_or("dual") {
+        "single" => PartitionLayout::Single,
+        "dual" => PartitionLayout::Dual,
+        other => bail!("unknown PartitionLayout {other:?} (single | dual)"),
+    };
+
+    let mode = match cfg.get("PreemptMode").unwrap_or("REQUEUE").to_ascii_uppercase().as_str() {
+        "REQUEUE" => PreemptMode::Requeue,
+        "CANCEL" => PreemptMode::Cancel,
+        "SUSPEND" => PreemptMode::Suspend,
+        "GANG" => PreemptMode::Gang,
+        other => bail!("unknown PreemptMode {other:?}"),
+    };
+    let reserve_nodes: u32 = cfg.get_parsed_or("ReserveNodes", 5)?;
+    let approach = match cfg.get("PreemptApproach").unwrap_or("none") {
+        "none" => PreemptApproach::None,
+        "auto" => PreemptApproach::AutoScheduler { mode },
+        "manual" => PreemptApproach::Manual { mode },
+        "cron" => PreemptApproach::CronAgent {
+            mode,
+            cfg: CronAgentConfig { reserve_nodes },
+        },
+        other => bail!("unknown PreemptApproach {other:?} (none | auto | manual | cron)"),
+    };
+
+    let mut sched_cfg = SchedulerConfig::baseline(costs, layout)
+        .with_approach(approach)
+        .with_user_limit(cfg.get_parsed_or("UserCoreLimit", 4096)?)
+        .with_phase_seed(cfg.get_parsed_or("PhaseSeed", 0x5107_c10du64)?)
+        .with_lua_plugin(cfg.get_bool_or("LuaPlugin", false)?);
+    sched_cfg.requeue_hold = SimTime::from_secs(cfg.get_parsed_or("RequeueHoldSecs", 60u64)?);
+    sched_cfg.event_driven = cfg.get_bool_or("EventDriven", true)?;
+
+    Ok(Deployment {
+        name,
+        cluster,
+        config: sched_cfg,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# the paper's dev cluster with the cron-agent approach
+ClusterName=tx-2500
+Nodes=19
+CoresPerNode=32
+CostPreset=dedicated
+PartitionLayout=dual
+PreemptApproach=cron
+PreemptMode=REQUEUE
+ReserveNodes=5
+UserCoreLimit=160
+CronIntervalSecs=60
+SchedulerParameters=preempt_youngest_first,bf_interval=45,sched_interval=20
+"#;
+
+    #[test]
+    fn parses_the_sample() {
+        let d = deployment_from_text(SAMPLE).unwrap();
+        assert_eq!(d.name, "tx-2500");
+        assert_eq!(d.cluster.total_cores(), 608);
+        assert_eq!(d.config.user_core_limit, 160);
+        assert!(matches!(
+            d.config.approach,
+            PreemptApproach::CronAgent {
+                mode: PreemptMode::Requeue,
+                cfg: CronAgentConfig { reserve_nodes: 5 }
+            }
+        ));
+        assert_eq!(d.config.costs.backfill_cycle_period, SimTime::from_secs(45));
+        assert_eq!(d.config.costs.main_cycle_period, SimTime::from_secs(20));
+    }
+
+    #[test]
+    fn defaults_give_a_baseline_tx2500() {
+        let d = deployment_from_text("").unwrap();
+        assert_eq!(d.cluster.total_cores(), 608);
+        assert!(matches!(d.config.approach, PreemptApproach::None));
+    }
+
+    #[test]
+    fn deployment_actually_schedules() {
+        use crate::job::{JobSpec, JobType, UserId};
+        let d = deployment_from_text(SAMPLE).unwrap();
+        let mut s = crate::sched::Scheduler::new(d.cluster, d.config);
+        let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 448));
+        assert!(s.run_until_dispatched(&[spot], SimTime::from_secs(300)));
+        let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 160));
+        assert!(s.run_until_dispatched(&[j], SimTime::from_secs(60)));
+        assert!(s.log().measure(&[j]).unwrap().total_secs < 1.0);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(deployment_from_text("Nodes=0").is_err());
+        assert!(deployment_from_text("CostPreset=warp").is_err());
+        assert!(deployment_from_text("PreemptApproach=psychic").is_err());
+        assert!(deployment_from_text("PreemptMode=HARDER").is_err());
+        assert!(deployment_from_text("PartitionLayout=triple").is_err());
+    }
+}

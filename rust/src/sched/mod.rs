@@ -1,0 +1,1037 @@
+//! The `slurmlite` scheduler: pending queues, main + backfill scheduling
+//! cycles, per-task dispatch, preemption hooks, and the event log the
+//! paper's measurements read.
+//!
+//! The scheduler is a discrete-event model of a Slurm-class controller. The
+//! control flow — *where preemption happens relative to allocation* — is
+//! what the paper is about, and is modeled faithfully:
+//!
+//! * **Baseline**: a submission triggers a scheduling pass; jobs dispatch at
+//!   per-task RPC cost (triple-mode jobs at per-node-script cost).
+//! * **Auto preemption** ([`crate::preempt::auto`]): a blocked interactive
+//!   job triggers candidate scan + requeue transactions *inside* the pass,
+//!   and the job is then **deferred** for `auto_preempt_retry_cycles`
+//!   scheduling cycles (Slurm re-examines preemptor jobs on later cycles) —
+//!   this deferral is the 2–3 orders-of-magnitude degradation.
+//! * **Manual / cron preemption**: the requeues happen *outside* the
+//!   scheduler; an arriving interactive job finds idle nodes and dispatches
+//!   at baseline cost.
+
+pub mod config;
+pub mod eventlog;
+pub mod from_config;
+pub mod priority;
+
+pub use config::SchedulerConfig;
+pub use from_config::{deployment_from_file, deployment_from_text, Deployment};
+pub use eventlog::{EventLog, LogKind, SchedMeasurement};
+pub use priority::{JobFactors, NativeScorer, PriorityScorer, N_FACTORS, WEIGHTS};
+
+use crate::cluster::{AllocRequest, Cluster, NodeId, Partition, PartitionId};
+use crate::job::{Job, JobId, JobSpec, JobState, QosClass, QosTable, UserAccounting};
+use crate::preempt::{lua, PreemptApproach, PreemptMode};
+use crate::sim::{EventQueue, SimTime};
+use crate::util::rng::Xoshiro256;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Scheduler events.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// A submitted job reaches the controller.
+    JobArrival(JobId),
+    /// Periodic main scheduling cycle.
+    MainCycle,
+    /// Periodic backfill cycle.
+    BackfillCycle,
+    /// Submit-/resource-triggered scheduling pass.
+    Triggered,
+    /// A requeue transaction finished; the victim re-enters the queue.
+    RequeueFinish(JobId),
+    /// Node epilog/cleanup finished; nodes become schedulable.
+    EpilogDone(Vec<NodeId>),
+    /// A running job completed.
+    JobEnd(JobId),
+    /// Cron-agent wake-up.
+    CronTick,
+}
+
+/// Which flavor of scheduling pass is running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CycleKind {
+    /// Periodic main cycle (FIFO semantics: head-of-line blocking).
+    Main,
+    /// Periodic backfill cycle (scans past blocked jobs; heavier per-job).
+    Backfill,
+    /// Submit-/event-triggered pass (main-cycle semantics).
+    Triggered,
+}
+
+/// Aggregate counters.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    /// Main passes run.
+    pub main_passes: u64,
+    /// Backfill passes run.
+    pub backfill_passes: u64,
+    /// Triggered passes run.
+    pub triggered_passes: u64,
+    /// Jobs dispatched.
+    pub dispatches: u64,
+    /// Preemption victims (all approaches).
+    pub preemptions: u64,
+    /// Requeue transactions.
+    pub requeues: u64,
+    /// Cron agent passes.
+    pub cron_passes: u64,
+    /// Priority batches scored.
+    pub score_batches: u64,
+    /// Jobs scored across all batches.
+    pub jobs_scored: u64,
+}
+
+/// The scheduler.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    cluster: Cluster,
+    partitions: Vec<Partition>,
+    jobs: BTreeMap<JobId, Job>,
+    pending: BTreeMap<PartitionId, Vec<JobId>>,
+    /// Jobs deferred until a given time (auto-preempt retry, requeue hold).
+    earliest_start: BTreeMap<JobId, SimTime>,
+    /// Jobs for which auto-preemption was already requested.
+    pub(crate) preempt_requested: BTreeSet<JobId>,
+    /// Resources reserved for deferred preemptor jobs (cores). Spot jobs may
+    /// not allocate into reserved headroom — Slurm guards the resources it
+    /// freed by preemption for the preempting job the same way.
+    reservations: BTreeMap<JobId, u32>,
+    qos: QosTable,
+    users: UserAccounting,
+    clock: SimTime,
+    events: EventQueue<Event>,
+    log: EventLog,
+    next_id: u64,
+    /// Controller busy window (end of the last pass's virtual work).
+    busy_until: SimTime,
+    trigger_pending: bool,
+    stats: SchedStats,
+    /// Cached priority order per partition. Valid until the queue's
+    /// contents change: with a shared age weight, every pending job's score
+    /// grows at the same rate, so relative order is time-invariant between
+    /// queue mutations (Slurm's priority caching makes the same argument).
+    order_cache: BTreeMap<PartitionId, Vec<JobId>>,
+}
+
+impl Scheduler {
+    /// Create a scheduler over `cluster` with the given configuration.
+    /// Periodic cycles (and the cron agent, when configured) start at a
+    /// seed-dependent phase within their periods.
+    pub fn new(cluster: Cluster, cfg: SchedulerConfig) -> Self {
+        let partitions = cfg.layout.partitions();
+        let mut pending = BTreeMap::new();
+        for p in &partitions {
+            pending.insert(p.id, Vec::new());
+        }
+        let mut rng = Xoshiro256::new(cfg.phase_seed);
+        let mut events = EventQueue::new();
+        let main_phase = SimTime(rng.gen_range(1, cfg.costs.main_cycle_period.0.max(2)));
+        let bf_phase = SimTime(rng.gen_range(1, cfg.costs.backfill_cycle_period.0.max(2)));
+        events.push(main_phase, Event::MainCycle);
+        events.push(bf_phase, Event::BackfillCycle);
+
+        let mut qos = QosTable::new();
+        let users = UserAccounting::with_default_limit(cfg.user_core_limit);
+
+        if let PreemptApproach::CronAgent { cfg: ccfg, .. } = &cfg.approach {
+            // The agent installs the initial spot ceiling at deployment so
+            // spot jobs can never consume the reserve.
+            let reserve_cores = ccfg.reserve_nodes * cluster.cores_per_node();
+            let cap = cluster.total_cores().saturating_sub(reserve_cores);
+            qos.config_mut(QosClass::Spot).max_tres_total = Some(cap);
+            qos.config_mut(QosClass::Spot).max_tres_per_user = Some(cap);
+            let cron_phase = SimTime(rng.gen_range(1, cfg.costs.cron_interval.0.max(2)));
+            events.push(cron_phase, Event::CronTick);
+        }
+
+        Self {
+            cfg,
+            cluster,
+            partitions,
+            jobs: BTreeMap::new(),
+            pending,
+            earliest_start: BTreeMap::new(),
+            preempt_requested: BTreeSet::new(),
+            reservations: BTreeMap::new(),
+            qos,
+            users,
+            clock: SimTime::ZERO,
+            events,
+            log: EventLog::default(),
+            next_id: 1,
+            busy_until: SimTime::ZERO,
+            trigger_pending: false,
+            stats: SchedStats::default(),
+            order_cache: BTreeMap::new(),
+        }
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.clock
+    }
+
+    /// The cluster.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Mutate the cluster for failure-injection tests (e.g. drain a node).
+    pub fn cluster_mut_for_tests(&mut self, f: impl FnOnce(&mut Cluster)) {
+        f(&mut self.cluster)
+    }
+
+    /// The event log.
+    pub fn log(&self) -> &EventLog {
+        &self.log
+    }
+
+    /// Counters.
+    pub fn stats(&self) -> &SchedStats {
+        &self.stats
+    }
+
+    /// Configuration.
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Job record.
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    /// All jobs in a given state.
+    pub fn jobs_in_state(&self, state: JobState) -> Vec<JobId> {
+        self.jobs
+            .iter()
+            .filter(|(_, j)| j.state == state)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Running spot jobs (preemption candidates), as LIFO victim records.
+    pub fn spot_victims(&self) -> Vec<crate::preempt::lifo::Victim> {
+        let cores_per_node = self.cluster.cores_per_node();
+        self.jobs
+            .values()
+            .filter(|j| j.is_spot() && j.state == JobState::Running)
+            .filter_map(|j| {
+                let alloc = self.cluster.allocation_of(j.id)?;
+                let whole_nodes = alloc
+                    .slices
+                    .iter()
+                    .filter(|&&(_, c)| c == cores_per_node)
+                    .count() as u32;
+                Some(crate::preempt::lifo::Victim {
+                    job: j.id,
+                    queue_time: j.queue_time,
+                    cores: alloc.cores(),
+                    whole_nodes,
+                })
+            })
+            .collect()
+    }
+
+    /// QoS table (read access for tests and the experiments harness).
+    pub fn qos(&self) -> &QosTable {
+        &self.qos
+    }
+
+    // ---- submission --------------------------------------------------------
+
+    /// Submit one job now. The scheduler recognizes it after the submit RPC.
+    pub fn submit(&mut self, spec: JobSpec) -> JobId {
+        self.submit_after(spec, SimTime::ZERO)
+    }
+
+    /// Submit one job with an extra client-side delay before the RPC lands.
+    pub fn submit_after(&mut self, spec: JobSpec, delay: SimTime) -> JobId {
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        let arrive = self.clock + delay + self.cfg.costs.submit_rpc;
+        let job = Job::new(id, spec, arrive);
+        self.jobs.insert(id, job);
+        self.events.push(arrive, Event::JobArrival(id));
+        id
+    }
+
+    /// Submit a burst of jobs from one client loop: submissions serialize on
+    /// the client side, one `submit_rpc` apart (how the paper's launcher
+    /// fills a cluster with individual jobs).
+    pub fn submit_burst(&mut self, specs: Vec<JobSpec>) -> Vec<JobId> {
+        specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| self.submit_after(s, SimTime(self.cfg.costs.submit_rpc.0 * i as u64)))
+            .collect()
+    }
+
+    // ---- event loop --------------------------------------------------------
+
+    /// Process events up to and including `until`, then advance the clock to
+    /// `until`.
+    pub fn run_until(&mut self, until: SimTime) {
+        while let Some(t) = self.events.peek_time() {
+            if t > until {
+                break;
+            }
+            let (t, ev) = self.events.pop().expect("peeked");
+            debug_assert!(t >= self.clock);
+            self.clock = t;
+            self.handle(ev);
+        }
+        if until > self.clock {
+            self.clock = until;
+        }
+    }
+
+    /// Run for a duration from now.
+    pub fn run_for(&mut self, d: SimTime) {
+        self.run_until(self.clock + d);
+    }
+
+    /// Run until every job in `jobs` has dispatched or `timeout` elapses
+    /// (relative to now). Returns true when all dispatched.
+    pub fn run_until_dispatched(&mut self, jobs: &[JobId], timeout: SimTime) -> bool {
+        let horizon = self.clock + timeout;
+        let step = SimTime::from_secs(1);
+        // Only poll jobs not yet seen dispatched (keeps large bursts linear).
+        let mut remaining: Vec<JobId> = jobs.to_vec();
+        while self.clock < horizon {
+            remaining.retain(|&j| self.log.last(j, LogKind::DispatchDone).is_none());
+            if remaining.is_empty() {
+                return true;
+            }
+            let next = (self.clock + step).min(horizon);
+            self.run_until(next);
+        }
+        remaining.retain(|&j| self.log.last(j, LogKind::DispatchDone).is_none());
+        remaining.is_empty()
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::JobArrival(id) => self.on_arrival(id),
+            Event::MainCycle => self.on_periodic(CycleKind::Main),
+            Event::BackfillCycle => self.on_periodic(CycleKind::Backfill),
+            Event::Triggered => {
+                self.trigger_pending = false;
+                if self.clock < self.busy_until {
+                    // Controller busy; re-run when it frees up.
+                    self.request_trigger(self.busy_until);
+                } else {
+                    self.stats.triggered_passes += 1;
+                    self.run_pass(CycleKind::Triggered);
+                }
+            }
+            Event::RequeueFinish(id) => self.on_requeue_finish(id),
+            Event::EpilogDone(nodes) => self.on_epilog_done(nodes),
+            Event::JobEnd(id) => self.on_job_end(id),
+            Event::CronTick => self.on_cron_tick(),
+        }
+    }
+
+    fn on_arrival(&mut self, id: JobId) {
+        self.log.push(self.clock, id, LogKind::Recognized);
+        if self.cfg.lua_plugin {
+            // The paper's Lua job_submit attempt: the plugin observes the
+            // submission but cannot execute scheduler commands.
+            let mut gate = lua::DenyAllGate;
+            let outcome = lua::LuaSubmitPlugin.job_submit(
+                self.jobs.get(&id).expect("arrival for unknown job"),
+                &mut gate,
+            );
+            debug_assert!(outcome.preempt_attempt.is_err());
+        }
+        let job = self.jobs.get(&id).expect("arrival for unknown job");
+        let pid = self.cfg.layout.route(job.spec.qos);
+        self.push_pending(pid, id);
+        // Submit-triggered scheduling pass.
+        let at = (self.clock + self.cfg.costs.submit_trigger_delay).max(self.busy_until);
+        self.request_trigger(at);
+    }
+
+    fn on_periodic(&mut self, kind: CycleKind) {
+        let period = match kind {
+            CycleKind::Main => self.cfg.costs.main_cycle_period,
+            CycleKind::Backfill => self.cfg.costs.backfill_cycle_period,
+            CycleKind::Triggered => unreachable!(),
+        };
+        // Re-arm first so an overrunning pass cannot cancel the cycle.
+        let next = self.clock.next_boundary(period);
+        self.events.push(
+            next,
+            match kind {
+                CycleKind::Main => Event::MainCycle,
+                CycleKind::Backfill => Event::BackfillCycle,
+                CycleKind::Triggered => unreachable!(),
+            },
+        );
+        if self.clock < self.busy_until {
+            // Controller still busy with a previous pass: skip (Slurm defers
+            // overlapping cycles).
+            return;
+        }
+        match kind {
+            CycleKind::Main => self.stats.main_passes += 1,
+            CycleKind::Backfill => self.stats.backfill_passes += 1,
+            CycleKind::Triggered => unreachable!(),
+        }
+        self.run_pass(kind);
+    }
+
+    /// Request a triggered pass at time `at` (coalesced).
+    pub(crate) fn request_trigger(&mut self, at: SimTime) {
+        if self.trigger_pending {
+            return;
+        }
+        self.trigger_pending = true;
+        self.events.push(at.max(self.clock), Event::Triggered);
+    }
+
+    // ---- the scheduling pass ----------------------------------------------
+
+    fn pass_base_cost(&self, kind: CycleKind) -> SimTime {
+        let c = &self.cfg.costs;
+        match kind {
+            CycleKind::Main | CycleKind::Triggered => {
+                SimTime(c.main_per_job.0 * c.background_queue_depth as u64)
+            }
+            CycleKind::Backfill => SimTime(
+                c.backfill_pass_base.0 + c.backfill_per_job.0 * c.background_queue_depth as u64,
+            ),
+        }
+    }
+
+    /// EASY-backfill shadow time: the earliest time the blocked head job
+    /// could start, assuming currently-running jobs end on schedule
+    /// (start + run_time) and release their cores. `None` = never (the job
+    /// cannot be satisfied by waiting — e.g. it is larger than the
+    /// cluster), in which case backfill is unrestricted.
+    fn shadow_start_for(&self, head: JobId) -> Option<SimTime> {
+        let cores_per_node = self.cluster.cores_per_node();
+        let need = self.jobs[&head]
+            .spec
+            .alloc_request(cores_per_node)
+            .cores_on(&self.cluster) as u64;
+        let mut avail = self.cluster.idle_cores() as u64;
+        if avail >= need {
+            return Some(self.clock);
+        }
+        let mut ends: Vec<(SimTime, u64)> = self
+            .cluster
+            .allocated_jobs()
+            .filter_map(|id| {
+                let j = self.jobs.get(&id)?;
+                let start = j.start_time?;
+                let cores = self.cluster.allocation_of(id)?.cores() as u64;
+                Some((start + j.spec.run_time, cores))
+            })
+            .collect();
+        ends.sort();
+        for (t, c) in ends {
+            avail += c;
+            if avail >= need {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn run_pass(&mut self, kind: CycleKind) {
+        let mut cursor = self.clock + self.pass_base_cost(kind);
+        let per_job_cost = match kind {
+            CycleKind::Main | CycleKind::Triggered => self.cfg.costs.main_per_job,
+            CycleKind::Backfill => self.cfg.costs.backfill_per_job,
+        };
+        let partition_ids: Vec<PartitionId> = self.partitions.iter().map(|p| p.id).collect();
+        for pid in partition_ids {
+            // EASY backfill: once a Normal job blocks, later candidates may
+            // only start if they finish before the head's shadow time.
+            let mut shadow: Option<Option<SimTime>> = None; // Some(reservation) once a head blocked
+            // Score and sort this partition's queue (batched — this is the
+            // computation the XLA kernel accelerates).
+            let order = self.scored_order(pid);
+            for id in order {
+                cursor += per_job_cost;
+                // Deferred jobs (requeue hold / auto-preempt retry) are
+                // ineligible: skipped, not blocking.
+                if self.earliest_start.get(&id).is_some_and(|&t| t > self.clock) {
+                    continue;
+                }
+                let job = &self.jobs[&id];
+                let spec = job.spec.clone();
+                let req = spec.alloc_request(self.cluster.cores_per_node());
+                let need_cores = req.cores_on(&self.cluster);
+                // Admission: per-user interactive limit / spot QoS caps.
+                let admitted = match spec.qos {
+                    QosClass::Normal => self.users.admits(spec.user, need_cores),
+                    QosClass::Spot => self.qos.admits(QosClass::Spot, spec.user, need_cores),
+                };
+                if !admitted {
+                    continue;
+                }
+                // Spot jobs may not consume headroom reserved for deferred
+                // preemptor jobs.
+                if spec.qos == QosClass::Spot {
+                    let reserved: u32 = self
+                        .reservations
+                        .iter()
+                        .filter(|(j, _)| self.jobs.get(j).is_some_and(|jj| jj.state == JobState::Pending))
+                        .map(|(_, &c)| c)
+                        .sum();
+                    if reserved > 0
+                        && self.cluster.idle_cores() < need_cores.saturating_add(reserved)
+                    {
+                        continue;
+                    }
+                }
+                if self.cluster.can_allocate(req) {
+                    // Backfill candidates must not delay the blocked head
+                    // job's reserved start (EASY backfill).
+                    if kind == CycleKind::Backfill {
+                        if let Some(Some(resv)) = shadow {
+                            let ends_at = cursor + self.jobs[&id].spec.run_time;
+                            if ends_at > resv {
+                                continue;
+                            }
+                        }
+                    }
+                    cursor = self.dispatch(id, req, cursor);
+                } else {
+                    // Blocked. Auto preemption (if configured) fires here —
+                    // inside the allocation path, exactly where Slurm's
+                    // QoS preemption sits.
+                    if spec.qos == QosClass::Normal {
+                        if let PreemptApproach::AutoScheduler { mode } = self.cfg.approach {
+                            if !self.preempt_requested.contains(&id)
+                                && kind != CycleKind::Backfill
+                            {
+                                cursor = self.auto_preempt_for(id, req, mode, cursor);
+                            }
+                        }
+                        if matches!(kind, CycleKind::Main | CycleKind::Triggered) {
+                            // FIFO head-of-line: the main cycle stops at the
+                            // first blocked normal job in a partition.
+                            break;
+                        }
+                        // Backfill: the first blocked Normal job becomes the
+                        // head; compute its shadow reservation once.
+                        if shadow.is_none() {
+                            shadow = Some(self.shadow_start_for(id));
+                        }
+                    }
+                    // Backfill continues past blocked jobs.
+                }
+            }
+        }
+        // Resume suspended spot jobs once no interactive demand is pending
+        // (their allocations were never released — SUSPEND holds memory).
+        if self.jobs.values().any(|j| j.state == JobState::Suspended) {
+            let any_pending_normal = self
+                .pending
+                .values()
+                .flatten()
+                .any(|id| self.jobs[id].spec.qos == QosClass::Normal);
+            if !any_pending_normal {
+                let suspended: Vec<JobId> = self
+                    .jobs
+                    .iter()
+                    .filter(|(_, j)| j.state == JobState::Suspended)
+                    .map(|(&i, _)| i)
+                    .collect();
+                for id in suspended {
+                    cursor += self.cfg.costs.requeue_transaction; // resume RPC
+                    let job = self.jobs.get_mut(&id).expect("suspended job");
+                    job.transition(JobState::Running, cursor);
+                    let run = job.spec.run_time;
+                    self.events.push(cursor + run, Event::JobEnd(id));
+                }
+            }
+        }
+        self.busy_until = self.busy_until.max(cursor);
+    }
+
+    /// Compute the priority-sorted order of a partition's pending queue
+    /// (cached between queue mutations).
+    fn scored_order(&mut self, pid: PartitionId) -> Vec<JobId> {
+        if let Some(cached) = self.order_cache.get(&pid) {
+            return cached.clone();
+        }
+        let queue = self.pending.get(&pid).expect("partition").clone();
+        if queue.len() <= 1 {
+            self.order_cache.insert(pid, queue.clone());
+            return queue;
+        }
+        let total_cores = self.cluster.total_cores().max(1) as f32;
+        let factors: Vec<JobFactors> = queue
+            .iter()
+            .map(|id| {
+                let j = &self.jobs[id];
+                let qp = self.qos.config(j.spec.qos).priority;
+                // Fairshare: the user's share of currently-allocated cores.
+                let share = match j.spec.qos {
+                    QosClass::Normal => self.users.usage(j.spec.user) as f32 / total_cores,
+                    QosClass::Spot => {
+                        self.qos.usage(QosClass::Spot, j.spec.user) as f32 / total_cores
+                    }
+                };
+                JobFactors::of(j, qp, 0, share, self.clock)
+            })
+            .collect();
+        let scores = self.cfg.scorer.scores(&factors);
+        self.stats.score_batches += 1;
+        self.stats.jobs_scored += queue.len() as u64;
+        let mut idx: Vec<usize> = (0..queue.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(queue[a].cmp(&queue[b]))
+        });
+        let order: Vec<JobId> = idx.into_iter().map(|i| queue[i]).collect();
+        self.order_cache.insert(pid, order.clone());
+        order
+    }
+
+    /// Dispatch a pending job: allocate, charge accounting, emit dispatch
+    /// RPCs (advancing `cursor` by the per-task cost), log, schedule its end.
+    fn dispatch(&mut self, id: JobId, req: AllocRequest, mut cursor: SimTime) -> SimTime {
+        let alloc = self
+            .cluster
+            .allocate(id, req)
+            .expect("dispatch called after can_allocate");
+        let cores = alloc.cores();
+        let (user, qos, run_time, dispatches, is_triple) = {
+            let j = &self.jobs[&id];
+            (
+                j.spec.user,
+                j.spec.qos,
+                j.spec.run_time,
+                j.spec.dispatch_count(self.cluster.cores_per_node()),
+                j.spec.job_type == crate::job::JobType::TripleMode,
+            )
+        };
+        match qos {
+            QosClass::Normal => self.users.charge(user, cores),
+            QosClass::Spot => self.qos.charge(QosClass::Spot, user, cores),
+        }
+        // Usage changed: fairshare scores (and hence cached orders) are stale.
+        self.order_cache.clear();
+        cursor += self.cfg.costs.dispatch_cost(dispatches, is_triple);
+        if is_triple {
+            cursor += self.cfg.costs.triple_mode_setup;
+        }
+        let job = self.jobs.get_mut(&id).expect("dispatching unknown job");
+        job.transition(JobState::Running, cursor);
+        self.log.push(cursor, id, LogKind::DispatchDone);
+        self.remove_from_pending(id);
+        self.earliest_start.remove(&id);
+        self.preempt_requested.remove(&id);
+        self.reservations.remove(&id);
+        self.events.push(cursor + run_time, Event::JobEnd(id));
+        self.stats.dispatches += 1;
+        cursor
+    }
+
+    fn remove_from_pending(&mut self, id: JobId) {
+        for (&pid, q) in self.pending.iter_mut() {
+            if let Some(pos) = q.iter().position(|&j| j == id) {
+                q.remove(pos);
+                self.order_cache.remove(&pid);
+                return;
+            }
+        }
+    }
+
+    /// Queue a job into its partition's pending queue (invalidates the
+    /// cached priority order).
+    fn push_pending(&mut self, pid: PartitionId, id: JobId) {
+        self.pending.get_mut(&pid).expect("partition").push(id);
+        self.order_cache.remove(&pid);
+    }
+
+    // ---- preemption plumbing (shared by auto / manual / cron) -------------
+
+    /// Issue preemption of `victims` (in order) starting at `start`,
+    /// serializing one requeue transaction per victim. Returns the time the
+    /// last transaction completed. Resources are released immediately but
+    /// nodes stay in cleanup until the epilog completes.
+    pub(crate) fn issue_preemption(
+        &mut self,
+        victims: &[JobId],
+        mode: PreemptMode,
+        start: SimTime,
+        by_cron: bool,
+    ) -> SimTime {
+        let mut cursor = start.max(self.clock);
+        for &v in victims {
+            cursor += self.cfg.costs.requeue_transaction;
+            self.stats.preemptions += 1;
+            self.log.push(
+                cursor,
+                v,
+                if by_cron {
+                    LogKind::CronPreempted
+                } else {
+                    LogKind::Preempted
+                },
+            );
+            let (user, qos) = {
+                let j = &self.jobs[&v];
+                (j.spec.user, j.spec.qos)
+            };
+            match mode {
+                PreemptMode::Requeue | PreemptMode::Cancel => {
+                    let alloc = self
+                        .cluster
+                        .release(v)
+                        .expect("preempting a job without an allocation");
+                    match qos {
+                        QosClass::Normal => self.users.credit(user, alloc.cores()),
+                        QosClass::Spot => self.qos.credit(QosClass::Spot, user, alloc.cores()),
+                    }
+                    self.order_cache.clear(); // fairshare changed
+                    let nodes: Vec<NodeId> = alloc.slices.iter().map(|&(n, _)| n).collect();
+                    for &n in &nodes {
+                        self.cluster_node_mut(n).begin_cleanup();
+                    }
+                    self.events
+                        .push(cursor + self.cfg.costs.node_epilog, Event::EpilogDone(nodes));
+                    let job = self.jobs.get_mut(&v).expect("victim");
+                    if mode == PreemptMode::Requeue {
+                        job.transition(JobState::Requeued, cursor);
+                        self.stats.requeues += 1;
+                        self.events.push(cursor, Event::RequeueFinish(v));
+                    } else {
+                        job.transition(JobState::Cancelled, cursor);
+                        self.log.push(cursor, v, LogKind::Ended);
+                    }
+                }
+                PreemptMode::Suspend => {
+                    // Memory is NOT freed: the allocation stays, so the node
+                    // cannot serve an interactive job that needs full memory.
+                    // This is exactly why the paper rejects SUSPEND.
+                    let job = self.jobs.get_mut(&v).expect("victim");
+                    job.transition(JobState::Suspended, cursor);
+                }
+                PreemptMode::Gang => {
+                    panic!(
+                        "GANG preemption timeshares resources and is rejected by the \
+                         paper's requirements; the engine does not implement it"
+                    );
+                }
+            }
+        }
+        cursor
+    }
+
+    fn cluster_node_mut(&mut self, id: NodeId) -> &mut crate::cluster::Node {
+        self.cluster.node_mut(id)
+    }
+
+    /// Defer a job until `at` (auto-preempt retry / requeue hold).
+    pub(crate) fn defer_until(&mut self, id: JobId, at: SimTime) {
+        self.earliest_start.insert(id, at);
+    }
+
+    /// Reserve `cores` of headroom for a deferred preemptor job: spot jobs
+    /// cannot allocate into it until the job dispatches or is cancelled.
+    pub(crate) fn reserve_for(&mut self, id: JobId, cores: u32) {
+        self.reservations.insert(id, cores);
+    }
+
+    fn on_requeue_finish(&mut self, id: JobId) {
+        let hold = self.cfg.requeue_hold;
+        let job = self.jobs.get_mut(&id).expect("requeue of unknown job");
+        if job.state != JobState::Requeued {
+            return; // cancelled in between
+        }
+        job.transition(JobState::Pending, self.clock);
+        self.log.push(self.clock, id, LogKind::Requeued);
+        let qos = self.jobs[&id].spec.qos;
+        let pid = self.cfg.layout.route(qos);
+        self.push_pending(pid, id);
+        self.defer_until(id, self.clock + hold);
+    }
+
+    fn on_epilog_done(&mut self, nodes: Vec<NodeId>) {
+        for n in nodes {
+            self.cluster_node_mut(n).end_cleanup();
+        }
+        if self.cfg.event_driven {
+            let at = self.clock.max(self.busy_until);
+            self.request_trigger(at);
+        }
+    }
+
+    fn on_job_end(&mut self, id: JobId) {
+        let job = self.jobs.get_mut(&id).expect("end of unknown job");
+        if job.state != JobState::Running {
+            return; // was preempted before its natural end
+        }
+        // Stale-event guard: a suspended/requeued-and-restarted job carries
+        // the JobEnd of its *previous* run; only the run that has actually
+        // elapsed completes the job.
+        if let Some(start) = job.start_time {
+            if self.clock < start + job.spec.run_time {
+                return;
+            }
+        }
+        job.transition(JobState::Completed, self.clock);
+        let (user, qos) = (job.spec.user, job.spec.qos);
+        self.log.push(self.clock, id, LogKind::Ended);
+        if let Some(alloc) = self.cluster.release(id) {
+            match qos {
+                QosClass::Normal => self.users.credit(user, alloc.cores()),
+                QosClass::Spot => self.qos.credit(QosClass::Spot, user, alloc.cores()),
+            }
+            self.order_cache.clear(); // fairshare changed
+        }
+        if self.cfg.event_driven {
+            let at = self.clock.max(self.busy_until);
+            self.request_trigger(at);
+        }
+    }
+
+    /// Cancel a job (user `scancel`). Pending jobs leave the queue; running
+    /// jobs release their allocation immediately (no epilog modeling for
+    /// voluntary cancels); requeued jobs die before re-entering the queue.
+    /// Returns false when the job is unknown or already terminal.
+    pub fn cancel(&mut self, id: JobId) -> bool {
+        let Some(job) = self.jobs.get_mut(&id) else {
+            return false;
+        };
+        match job.state {
+            JobState::Pending => {
+                job.transition(JobState::Cancelled, self.clock);
+                self.log.push(self.clock, id, LogKind::Ended);
+                self.remove_from_pending(id);
+                self.earliest_start.remove(&id);
+                self.reservations.remove(&id);
+                true
+            }
+            JobState::Running => {
+                job.transition(JobState::Cancelled, self.clock);
+                let (user, qos) = (job.spec.user, job.spec.qos);
+                self.log.push(self.clock, id, LogKind::Ended);
+                if let Some(alloc) = self.cluster.release(id) {
+                    match qos {
+                        QosClass::Normal => self.users.credit(user, alloc.cores()),
+                        QosClass::Spot => self.qos.credit(QosClass::Spot, user, alloc.cores()),
+                    }
+                    self.order_cache.clear(); // fairshare changed
+                }
+                if self.cfg.event_driven {
+                    let at = self.clock.max(self.busy_until);
+                    self.request_trigger(at);
+                }
+                true
+            }
+            JobState::Requeued => {
+                job.transition(JobState::Cancelled, self.clock);
+                self.log.push(self.clock, id, LogKind::Ended);
+                true
+            }
+            JobState::Suspended => {
+                job.transition(JobState::Cancelled, self.clock);
+                let (user, qos) = (job.spec.user, job.spec.qos);
+                self.log.push(self.clock, id, LogKind::Ended);
+                if let Some(alloc) = self.cluster.release(id) {
+                    match qos {
+                        QosClass::Normal => self.users.credit(user, alloc.cores()),
+                        QosClass::Spot => self.qos.credit(QosClass::Spot, user, alloc.cores()),
+                    }
+                    self.order_cache.clear(); // fairshare changed
+                }
+                true
+            }
+            JobState::Completed | JobState::Cancelled => false,
+        }
+    }
+
+    fn on_cron_tick(&mut self) {
+        if let PreemptApproach::CronAgent { mode, cfg } = self.cfg.approach.clone() {
+            self.stats.cron_passes += 1;
+            crate::preempt::cron::cron_pass(self, mode, &cfg);
+            self.events
+                .push(self.clock + self.cfg.costs.cron_interval, Event::CronTick);
+        }
+    }
+
+    /// Whole-scheduler invariant check (used by property tests):
+    /// cluster-node accounting, QoS/user usage vs actual allocations, and
+    /// state/allocation consistency.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.cluster.check_invariants()?;
+        let mut normal_by_user: BTreeMap<crate::job::UserId, u32> = BTreeMap::new();
+        let mut spot_total = 0u32;
+        let mut spot_by_user: BTreeMap<crate::job::UserId, u32> = BTreeMap::new();
+        for id in self.cluster.allocated_jobs() {
+            let job = self
+                .jobs
+                .get(&id)
+                .ok_or_else(|| format!("allocation for unknown job {id}"))?;
+            if !job.state.holds_resources() {
+                return Err(format!("{id} holds an allocation in state {:?}", job.state));
+            }
+            let cores = self.cluster.allocation_of(id).expect("listed").cores();
+            match job.spec.qos {
+                QosClass::Normal => *normal_by_user.entry(job.spec.user).or_default() += cores,
+                QosClass::Spot => {
+                    spot_total += cores;
+                    *spot_by_user.entry(job.spec.user).or_default() += cores;
+                }
+            }
+        }
+        for (&user, &cores) in &normal_by_user {
+            if self.users.usage(user) != cores {
+                return Err(format!(
+                    "user accounting mismatch for {user}: charged {} vs allocated {cores}",
+                    self.users.usage(user)
+                ));
+            }
+        }
+        if self.qos.total_usage(QosClass::Spot) != spot_total {
+            return Err(format!(
+                "spot QoS accounting mismatch: charged {} vs allocated {spot_total}",
+                self.qos.total_usage(QosClass::Spot)
+            ));
+        }
+        for (&user, &cores) in &spot_by_user {
+            if self.qos.usage(QosClass::Spot, user) != cores {
+                return Err(format!("spot user accounting mismatch for {user}"));
+            }
+        }
+        // Pending queues only contain pending jobs, each exactly once.
+        let mut seen = BTreeSet::new();
+        for q in self.pending.values() {
+            for &id in q {
+                if !seen.insert(id) {
+                    return Err(format!("{id} queued twice"));
+                }
+                let st = self.jobs[&id].state;
+                if st != JobState::Pending {
+                    return Err(format!("{id} in pending queue with state {st:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- internals used by the preempt engines -----------------------------
+
+    pub(crate) fn qos_mut(&mut self) -> &mut QosTable {
+        &mut self.qos
+    }
+
+    pub(crate) fn costs(&self) -> &crate::sim::SchedCosts {
+        &self.cfg.costs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology;
+    use crate::job::{JobType, UserId};
+    use crate::sim::SchedCosts;
+
+    fn baseline_sched() -> Scheduler {
+        Scheduler::new(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), crate::cluster::PartitionLayout::Dual),
+        )
+    }
+
+    #[test]
+    fn baseline_triple_dispatches_fast() {
+        let mut s = baseline_sched();
+        let id = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        assert!(s.run_until_dispatched(&[id], SimTime::from_secs(60)));
+        let m = s.log().measure(&[id]).unwrap();
+        // 19 node scripts at ~10ms + overheads: well under a second.
+        assert!(m.total_secs < 1.0, "triple-mode took {}s", m.total_secs);
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn baseline_array_costs_per_task() {
+        let mut s = baseline_sched();
+        let id = s.submit(JobSpec::interactive(UserId(1), JobType::Array, 608));
+        assert!(s.run_until_dispatched(&[id], SimTime::from_secs(120)));
+        let m = s.log().measure(&[id]).unwrap();
+        let per_task = m.per_task(608);
+        assert!(
+            (0.005..0.05).contains(&per_task),
+            "array per-task {per_task}s"
+        );
+    }
+
+    #[test]
+    fn individual_burst_fills_cluster() {
+        let mut s = baseline_sched();
+        let specs = (0..608)
+            .map(|_| JobSpec::interactive(UserId(1), JobType::Individual, 1))
+            .collect();
+        let ids = s.submit_burst(specs);
+        assert!(s.run_until_dispatched(&ids, SimTime::from_secs(300)));
+        assert_eq!(s.cluster().idle_cores(), 0);
+        let m = s.log().measure(&ids).unwrap();
+        assert_eq!(m.jobs_dispatched, 608);
+    }
+
+    #[test]
+    fn blocked_job_waits_for_resources() {
+        let mut s = baseline_sched();
+        let big = s.submit(
+            JobSpec::interactive(UserId(1), JobType::Array, 608)
+                .with_run_time(SimTime::from_secs(100)),
+        );
+        assert!(s.run_until_dispatched(&[big], SimTime::from_secs(60)));
+        let second = s.submit(JobSpec::interactive(UserId(2), JobType::Array, 32));
+        s.run_until(SimTime::from_secs(50));
+        assert_eq!(s.job(second).unwrap().state, JobState::Pending);
+        // After the first job ends, the second dispatches (event-driven).
+        assert!(s.run_until_dispatched(&[second], SimTime::from_secs(400)));
+        assert_eq!(s.job(big).unwrap().state, JobState::Completed);
+    }
+
+    #[test]
+    fn user_limit_blocks_oversized() {
+        let cfg = SchedulerConfig::baseline(
+            SchedCosts::dedicated(),
+            crate::cluster::PartitionLayout::Dual,
+        )
+        .with_user_limit(100);
+        let mut s = Scheduler::new(topology::tx2500(), cfg);
+        let id = s.submit(JobSpec::interactive(UserId(1), JobType::Array, 200));
+        s.run_until(SimTime::from_secs(120));
+        assert_eq!(s.job(id).unwrap().state, JobState::Pending, "over-limit job must wait");
+        // A job within the limit passes.
+        let ok = s.submit(JobSpec::interactive(UserId(1), JobType::Array, 100));
+        assert!(s.run_until_dispatched(&[ok], SimTime::from_secs(240)));
+    }
+
+    #[test]
+    fn spot_and_interactive_coexist_dual() {
+        let mut s = baseline_sched();
+        let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 320));
+        assert!(s.run_until_dispatched(&[spot], SimTime::from_secs(60)));
+        let inter = s.submit(JobSpec::interactive(UserId(1), JobType::Array, 288));
+        assert!(s.run_until_dispatched(&[inter], SimTime::from_secs(120)));
+        assert_eq!(s.cluster().idle_cores(), 0);
+        s.cluster().check_invariants().unwrap();
+    }
+}

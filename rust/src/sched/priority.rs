@@ -1,0 +1,164 @@
+//! Multifactor job priority (Slurm's priority/multifactor plugin, reduced
+//! to the factors that matter for the paper's experiments) and the
+//! [`PriorityScorer`] abstraction that lets the scheduler's batched scoring
+//! run either natively or on the AOT-compiled XLA kernel
+//! (`runtime::accel::SchedAccel`).
+
+use crate::job::Job;
+use crate::sim::SimTime;
+
+/// Number of priority factors. Must match `python/compile/model.py`'s
+/// `N_FACTORS` — the AOT kernel is compiled for exactly this width.
+pub const N_FACTORS: usize = 8;
+
+/// Factor vector for one pending job, normalized to comparable magnitudes.
+///
+/// Layout (index → meaning) — keep in sync with `python/compile/model.py`:
+/// 0: QoS priority (normalized by 1000)
+/// 1: queue age in hours (caps at ~100h)
+/// 2: job size in cores / 1024 (Slurm's smallest-first would negate this;
+///    MIT SuperCloud favors neither, weight is small)
+/// 3: requeue count (preempted jobs age faster so they eventually run)
+/// 4: partition priority
+/// 5: fairshare — the user's current share of allocated cores in [0,1]
+///    (negative weight: heavy users sort later within a QoS class)
+/// 6-7: reserved (zero) — padding for the XLA kernel's fixed width.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobFactors(pub [f32; N_FACTORS]);
+
+impl JobFactors {
+    /// Extract factors from a job record at virtual time `now`.
+    pub fn of(
+        job: &Job,
+        qos_priority: u32,
+        partition_priority: u32,
+        user_usage_share: f32,
+        now: SimTime,
+    ) -> Self {
+        let age_hours = now.saturating_sub(job.queue_time).as_secs_f64() / 3600.0;
+        let mut f = [0.0f32; N_FACTORS];
+        f[0] = qos_priority as f32 / 1000.0;
+        f[1] = (age_hours as f32).min(100.0);
+        f[2] = job.spec.cores() as f32 / 1024.0;
+        f[3] = job.requeue_count as f32;
+        f[4] = partition_priority as f32 / 1000.0;
+        f[5] = user_usage_share.clamp(0.0, 1.0);
+        JobFactors(f)
+    }
+}
+
+/// The weight vector. Must match `python/compile/model.py`'s `WEIGHTS`.
+pub const WEIGHTS: [f32; N_FACTORS] = [
+    1000.0, // qos dominates: Normal always outranks Spot
+    1.0,    // age
+    0.1,    // size
+    5.0,    // requeue bonus
+    10.0,   // partition
+    -50.0,  // fairshare (heavier current usage sorts later)
+    0.0, 0.0,
+];
+
+/// Batched priority scoring. The scheduler calls this once per cycle for the
+/// whole pending queue; implementations are the native fallback below and
+/// the XLA-compiled kernel in `runtime::accel`.
+pub trait PriorityScorer {
+    /// Score each factor row; higher = schedule earlier.
+    fn scores(&self, factors: &[JobFactors]) -> Vec<f32>;
+
+    /// Human-readable backend name (for reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference implementation: `score = dot(factors, WEIGHTS)`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeScorer;
+
+impl PriorityScorer for NativeScorer {
+    fn scores(&self, factors: &[JobFactors]) -> Vec<f32> {
+        factors
+            .iter()
+            .map(|f| f.0.iter().zip(WEIGHTS.iter()).map(|(x, w)| x * w).sum())
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobId, JobSpec, JobType, UserId};
+
+    fn job(tasks: u32, queue_at: u64) -> Job {
+        Job::new(
+            JobId(1),
+            JobSpec::interactive(UserId(1), JobType::Array, tasks),
+            SimTime::from_secs(queue_at),
+        )
+    }
+
+    #[test]
+    fn qos_dominates_age() {
+        let now = SimTime::from_secs(100 * 3600);
+        let old_spot = JobFactors::of(&job(64, 0), 10, 0, 0.0, now);
+        let new_normal = JobFactors::of(&job(64, 100 * 3600 - 1), 1000, 0, 0.0, now);
+        let s = NativeScorer.scores(&[old_spot, new_normal]);
+        assert!(
+            s[1] > s[0],
+            "fresh normal job must outrank a spot job aged 100h: {s:?}"
+        );
+    }
+
+    #[test]
+    fn age_breaks_ties_within_qos() {
+        let now = SimTime::from_secs(7200);
+        let older = JobFactors::of(&job(64, 0), 1000, 0, 0.0, now);
+        let newer = JobFactors::of(&job(64, 3600), 1000, 0, 0.0, now);
+        let s = NativeScorer.scores(&[older, newer]);
+        assert!(s[0] > s[1]);
+    }
+
+    #[test]
+    fn requeue_count_boosts() {
+        let now = SimTime::from_secs(60);
+        let mut j = job(64, 0);
+        let fresh = JobFactors::of(&j, 10, 0, 0.0, now);
+        j.requeue_count = 3;
+        let requeued = JobFactors::of(&j, 10, 0, 0.0, now);
+        let s = NativeScorer.scores(&[fresh, requeued]);
+        assert!(s[1] > s[0]);
+    }
+
+    #[test]
+    fn factor_extraction_caps_age() {
+        let j = job(64, 0);
+        let f = JobFactors::of(&j, 1000, 0, 0.0, SimTime::from_secs(1000 * 3600));
+        assert_eq!(f.0[1], 100.0);
+    }
+
+    #[test]
+    fn fairshare_deprioritizes_heavy_users() {
+        let now = SimTime::from_secs(60);
+        let light = JobFactors::of(&job(64, 0), 1000, 0, 0.0, now);
+        let heavy = JobFactors::of(&job(64, 0), 1000, 0, 0.8, now);
+        let s = NativeScorer.scores(&[light, heavy]);
+        assert!(s[0] > s[1], "heavy user must sort later: {s:?}");
+    }
+
+    #[test]
+    fn fairshare_never_overrides_qos() {
+        // Even a user hogging the whole cluster outranks any spot job.
+        let now = SimTime::from_secs(60);
+        let hog_normal = JobFactors::of(&job(64, 0), 1000, 0, 1.0, now);
+        let idle_spot = JobFactors::of(&job(64, 0), 10, 0, 0.0, now);
+        let s = NativeScorer.scores(&[hog_normal, idle_spot]);
+        assert!(s[0] > s[1]);
+    }
+
+    #[test]
+    fn empty_batch() {
+        assert!(NativeScorer.scores(&[]).is_empty());
+    }
+}

@@ -1,0 +1,214 @@
+//! The calibrated scheduler latency cost model.
+//!
+//! Every latency the simulated scheduler charges is a named constant here,
+//! with the rationale recorded. Two presets are provided:
+//!
+//! * [`SchedCosts::dedicated`] — an idle development cluster (the paper's
+//!   TX-2500, and TX-Green during the monthly maintenance window used for
+//!   the Fig 2g runs): short cycle periods, no background queue.
+//! * [`SchedCosts::production`] — the loaded TX-Green production system:
+//!   longer effective cycle periods, a background pending queue that the
+//!   main/backfill cycles must walk, and slower node cleanup.
+//!
+//! Calibration anchors (paper, Section III):
+//!
+//! * Baseline triple-mode 4096-task job dispatches in ~0.5 s
+//!   (≈1.2e-4 s/task); individual/array are ≥100× slower per task
+//!   (≈1e-2 s/task) — anchored by `dispatch_per_task` and
+//!   `per_job_overhead`.
+//! * Automatic QoS preemption degrades triple-mode scheduling by ~3 orders
+//!   of magnitude on production (0.5 s → ~minutes) — anchored by the cycle
+//!   waits (`main_cycle_period`, `backfill_cycle_period`), `requeue
+//!   transaction`, and `node_epilog` charged on the preemption path.
+//! * Manual (requeue-before-submit) preemption: individual/array ≈ baseline;
+//!   triple-mode ≈ 5 s total — anchored by `requeue_transaction` +
+//!   `node_epilog` being the only added terms.
+//! * Slurm operational magnitudes: `sched_interval` default 60 s,
+//!   `bf_interval` default 30 s, RPC round-trips in the low milliseconds,
+//!   epilog cleanup seconds to tens of seconds on busy KNL nodes.
+
+use super::time::SimTime;
+
+/// Calibrated latency constants for the simulated scheduler.
+#[derive(Debug, Clone)]
+pub struct SchedCosts {
+    // ---- submission path -------------------------------------------------
+    /// `sbatch` → controller RPC + job-record creation. Charged once per
+    /// submitted job before the scheduler can see it.
+    pub submit_rpc: SimTime,
+
+    // ---- scheduling cycles ----------------------------------------------
+    /// Period of the *periodic* main scheduling cycle (Slurm
+    /// `sched_interval`). A submit also triggers an immediate main-cycle
+    /// attempt after `submit_trigger_delay`.
+    pub main_cycle_period: SimTime,
+    /// Delay between a submission and the submit-triggered main cycle pass
+    /// (controller lock acquisition + queue insertion).
+    pub submit_trigger_delay: SimTime,
+    /// Period of the backfill cycle (Slurm `bf_interval`).
+    pub backfill_cycle_period: SimTime,
+    /// Cost charged per pending job examined by the main cycle.
+    pub main_per_job: SimTime,
+    /// Cost charged per candidate examined by the backfill cycle (shadow
+    /// reservation computation makes this much heavier than the main cycle).
+    pub backfill_per_job: SimTime,
+    /// Fixed cost of one backfill pass (shadow map construction), even with
+    /// an empty queue.
+    pub backfill_pass_base: SimTime,
+    /// Number of unrelated pending jobs ahead of ours in the production
+    /// queue (background load). Zero on a dedicated system.
+    pub background_queue_depth: u32,
+
+    // ---- dispatch path ---------------------------------------------------
+    /// Fixed per-job scheduling/allocation transaction (allocation record,
+    /// credential minting, prolog kick-off). Individual jobs pay this per
+    /// job; array jobs pay it once per array.
+    pub per_job_overhead: SimTime,
+    /// Per-task dispatch RPC (controller → slurmd launch). Array tasks and
+    /// individual jobs pay this per task — each array task materializes a
+    /// full job record when scheduled, which is why this is expensive.
+    pub dispatch_per_task: SimTime,
+    /// Per-node-script dispatch for triple-mode jobs: one node-level launch
+    /// RPC per consolidated script, much lighter than a per-task job-record
+    /// transaction. This asymmetry (plus the 64:1 consolidation) produces
+    /// the paper's ≥100× triple-mode launch advantage.
+    pub dispatch_per_node_script: SimTime,
+    /// Extra fixed cost for a triple-mode launch (the consolidation wrapper
+    /// script setup by gridMatlab/LLMapReduce tooling).
+    pub triple_mode_setup: SimTime,
+
+    // ---- preemption path -------------------------------------------------
+    /// Scanning QoS preemption candidates: fixed base cost.
+    pub preempt_scan_base: SimTime,
+    /// Scanning QoS preemption candidates: cost per running spot job
+    /// examined.
+    pub preempt_scan_per_job: SimTime,
+    /// A requeue/cancel transaction for one preempted job (state save,
+    /// signal fan-out to its nodes, re-queue bookkeeping).
+    pub requeue_transaction: SimTime,
+    /// Node cleanup (epilog + health check) before a preempted node can be
+    /// reallocated.
+    pub node_epilog: SimTime,
+    /// Extra queue-scan penalty charged per scheduling cycle when interactive
+    /// and spot jobs share a single partition (the scheduler re-examines the
+    /// mixed queue under one partition lock). Explains single > dual cost.
+    pub single_partition_scan_penalty: SimTime,
+    /// Number of *additional* scheduling cycles the scheduler-driven
+    /// automatic preemption path waits before the preempting job is
+    /// re-examined after its preemption request (Slurm defers the job and
+    /// only retries allocation on a later cycle; on production the retry is
+    /// regularly pushed to the backfill cycle).
+    pub auto_preempt_retry_cycles: u32,
+
+    // ---- cron agent (the paper's contribution) ---------------------------
+    /// Cron agent wake-up period (the paper uses a 1-minute crontab).
+    pub cron_interval: SimTime,
+    /// Cost of one cron-agent pass: querying the scheduler state (squeue /
+    /// sinfo equivalents) and updating the spot QoS MaxTRESPerUser.
+    pub cron_pass_overhead: SimTime,
+}
+
+impl SchedCosts {
+    /// Idle/dedicated cluster (paper's TX-2500 development system and the
+    /// maintenance-window TX-Green runs).
+    pub fn dedicated() -> Self {
+        Self {
+            submit_rpc: SimTime::from_millis(5),
+            main_cycle_period: SimTime::from_secs(15),
+            submit_trigger_delay: SimTime::from_millis(20),
+            backfill_cycle_period: SimTime::from_secs(30),
+            main_per_job: SimTime::from_micros(500),
+            backfill_per_job: SimTime::from_millis(5),
+            backfill_pass_base: SimTime::from_millis(300),
+            background_queue_depth: 0,
+            per_job_overhead: SimTime::from_millis(2),
+            dispatch_per_task: SimTime::from_millis(10),
+            dispatch_per_node_script: SimTime::from_millis(2),
+            triple_mode_setup: SimTime::from_millis(10),
+            preempt_scan_base: SimTime::from_millis(20),
+            preempt_scan_per_job: SimTime::from_millis(2),
+            requeue_transaction: SimTime::from_millis(300),
+            node_epilog: SimTime::from_secs(2),
+            single_partition_scan_penalty: SimTime::from_millis(200),
+            auto_preempt_retry_cycles: 1,
+            cron_interval: SimTime::from_secs(60),
+            cron_pass_overhead: SimTime::from_millis(150),
+        }
+    }
+
+    /// Loaded production cluster (paper's TX-Green).
+    pub fn production() -> Self {
+        Self {
+            submit_rpc: SimTime::from_millis(15),
+            // On production, the effective period between cycles that will
+            // actually pick our job back up is dominated by Slurm's default
+            // sched_interval=60s plus controller contention.
+            main_cycle_period: SimTime::from_secs(60),
+            submit_trigger_delay: SimTime::from_millis(50),
+            backfill_cycle_period: SimTime::from_secs(30),
+            main_per_job: SimTime::from_millis(1),
+            backfill_per_job: SimTime::from_millis(20),
+            backfill_pass_base: SimTime::from_secs(1),
+            background_queue_depth: 200,
+            per_job_overhead: SimTime::from_millis(2),
+            dispatch_per_task: SimTime::from_millis(10),
+            dispatch_per_node_script: SimTime::from_millis(5),
+            triple_mode_setup: SimTime::from_millis(20),
+            preempt_scan_base: SimTime::from_millis(100),
+            preempt_scan_per_job: SimTime::from_millis(5),
+            requeue_transaction: SimTime::from_millis(500),
+            node_epilog: SimTime::from_secs(4),
+            single_partition_scan_penalty: SimTime::from_secs(2),
+            auto_preempt_retry_cycles: 5,
+            cron_interval: SimTime::from_secs(60),
+            cron_pass_overhead: SimTime::from_millis(300),
+        }
+    }
+
+    /// Dispatch cost for `n_dispatches` launch RPCs plus per-job overhead.
+    /// Triple-mode launches use the lighter per-node-script RPC.
+    pub fn dispatch_cost(&self, n_dispatches: u64, triple_mode: bool) -> SimTime {
+        let per = if triple_mode {
+            self.dispatch_per_node_script.0
+        } else {
+            self.dispatch_per_task.0
+        };
+        SimTime(self.per_job_overhead.0 + per * n_dispatches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_triple_mode_anchor() {
+        // 4096 tasks at 64/node = 64 node scripts. Baseline triple-mode total
+        // should be ~0.5s per the paper.
+        let c = SchedCosts::production();
+        let total = c.dispatch_cost(64, true) + c.triple_mode_setup;
+        let secs = total.as_secs_f64();
+        assert!((0.1..1.5).contains(&secs), "triple-mode anchor: {secs}");
+    }
+
+    #[test]
+    fn baseline_array_anchor() {
+        // 4096-task array: ~1e-2 s/task → ~41s total; must be ≥100× the
+        // per-task cost of triple mode.
+        let c = SchedCosts::production();
+        let array_total = c.dispatch_cost(4096, false).as_secs_f64();
+        let triple_total = (c.dispatch_cost(64, true) + c.triple_mode_setup).as_secs_f64();
+        let per_task_ratio = (array_total / 4096.0) / (triple_total / 4096.0);
+        assert!(per_task_ratio >= 100.0, "ratio {per_task_ratio}");
+        assert!((20.0..120.0).contains(&array_total), "array total {array_total}");
+    }
+
+    #[test]
+    fn production_slower_than_dedicated() {
+        let d = SchedCosts::dedicated();
+        let p = SchedCosts::production();
+        assert!(p.node_epilog > d.node_epilog);
+        assert!(p.background_queue_depth > d.background_queue_depth);
+        assert!(p.main_cycle_period >= d.main_cycle_period);
+    }
+}

@@ -1,0 +1,173 @@
+//! The discrete-event simulation loop.
+//!
+//! [`Engine`] owns the virtual [`Clock`] and an [`EventQueue`]; the caller
+//! provides a handler that receives each event along with `&mut Engine` so it
+//! can schedule follow-up events. Time only moves forward; handlers may not
+//! schedule events in the past.
+
+use super::event::EventQueue;
+use super::time::SimTime;
+
+/// The virtual clock. Monotonically non-decreasing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Clock {
+    now: SimTime,
+}
+
+impl Clock {
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+}
+
+/// A discrete-event engine over event payloads of type `E`.
+pub struct Engine<E> {
+    clock: Clock,
+    queue: EventQueue<E>,
+    processed: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    /// New engine at t=0 with an empty queue.
+    pub fn new() -> Self {
+        Self {
+            clock: Clock::default(),
+            queue: EventQueue::new(),
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.clock.now()
+    }
+
+    /// Total events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule an event at an absolute time. Panics if `at` is in the past.
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        assert!(
+            at >= self.clock.now,
+            "cannot schedule into the past: {:?} < {:?}",
+            at,
+            self.clock.now
+        );
+        self.queue.push(at, event);
+    }
+
+    /// Schedule an event `delay` after now.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        self.schedule_at(self.clock.now + delay, event);
+    }
+
+    /// Run until the queue drains or `until` is reached (events at exactly
+    /// `until` ARE processed). The handler gets `(&mut Engine, SimTime, E)`.
+    ///
+    /// Returns the number of events processed by this call.
+    pub fn run_until(&mut self, until: SimTime, mut handler: impl FnMut(&mut Engine<E>, SimTime, E)) -> u64 {
+        let start_count = self.processed;
+        while let Some(t) = self.queue.peek_time() {
+            if t > until {
+                break;
+            }
+            let (t, ev) = self.queue.pop().expect("peeked");
+            debug_assert!(t >= self.clock.now, "event queue went backwards");
+            self.clock.now = t;
+            self.processed += 1;
+            handler(self, t, ev);
+        }
+        // Advance the clock to `until` so subsequent scheduling is relative
+        // to the end of the window (but never move backwards).
+        if until > self.clock.now && until != SimTime::MAX {
+            self.clock.now = until;
+        }
+        self.processed - start_count
+    }
+
+    /// Run until the queue fully drains.
+    pub fn run_to_completion(&mut self, handler: impl FnMut(&mut Engine<E>, SimTime, E)) -> u64 {
+        self.run_until(SimTime::MAX, handler)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        Ping(u32),
+        Pong(u32),
+    }
+
+    #[test]
+    fn processes_in_order_and_advances_clock() {
+        let mut eng = Engine::new();
+        eng.schedule_at(SimTime::from_secs(2), Ev::Ping(2));
+        eng.schedule_at(SimTime::from_secs(1), Ev::Ping(1));
+        let mut seen = Vec::new();
+        eng.run_to_completion(|eng, t, ev| {
+            seen.push((t, format!("{ev:?}")));
+            assert_eq!(eng.now(), t);
+        });
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[0].0, SimTime::from_secs(1));
+        assert_eq!(seen[1].0, SimTime::from_secs(2));
+    }
+
+    #[test]
+    fn handler_can_schedule_followups() {
+        let mut eng = Engine::new();
+        eng.schedule_at(SimTime::from_secs(1), Ev::Ping(0));
+        let mut pongs = 0;
+        eng.run_to_completion(|eng, _, ev| match ev {
+            Ev::Ping(n) if n < 3 => {
+                eng.schedule_in(SimTime::from_secs(1), Ev::Ping(n + 1));
+                eng.schedule_in(SimTime::from_millis(1), Ev::Pong(n));
+            }
+            Ev::Ping(_) => {}
+            Ev::Pong(_) => pongs += 1,
+        });
+        assert_eq!(pongs, 3);
+        assert_eq!(eng.processed(), 7); // 4 pings + 3 pongs
+    }
+
+    #[test]
+    fn run_until_stops_and_clock_lands_on_boundary() {
+        let mut eng = Engine::new();
+        eng.schedule_at(SimTime::from_secs(1), Ev::Ping(1));
+        eng.schedule_at(SimTime::from_secs(5), Ev::Ping(5));
+        let n = eng.run_until(SimTime::from_secs(3), |_, _, _| {});
+        assert_eq!(n, 1);
+        assert_eq!(eng.now(), SimTime::from_secs(3));
+        assert_eq!(eng.pending(), 1);
+        // Event exactly at `until` is processed.
+        let n = eng.run_until(SimTime::from_secs(5), |_, _, _| {});
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule into the past")]
+    fn scheduling_into_past_panics() {
+        let mut eng = Engine::new();
+        eng.schedule_at(SimTime::from_secs(10), Ev::Ping(0));
+        eng.run_to_completion(|eng, _, _| {
+            eng.schedule_at(SimTime::from_secs(1), Ev::Ping(1));
+        });
+    }
+}

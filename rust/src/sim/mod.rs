@@ -1,0 +1,22 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's results are *latency* phenomena inside a cluster scheduler.
+//! Reproducing them without a 41,472-core Slurm installation requires a
+//! faithful discrete-event model of the scheduler's control flow driven by a
+//! calibrated cost model. This module provides the domain-agnostic pieces:
+//!
+//! * [`time`] — [`SimTime`]: virtual time as integer nanoseconds.
+//! * [`event`] — a deterministic timed event queue (`EventQueue<E>`).
+//! * [`engine`] — the DES loop ([`Engine`]) plus the virtual [`Clock`].
+//! * [`costs`] — the calibrated latency constants ([`SchedCosts`]) with the
+//!   rationale for each value (see also DESIGN.md §6).
+
+pub mod costs;
+pub mod engine;
+pub mod event;
+pub mod time;
+
+pub use costs::SchedCosts;
+pub use engine::{Clock, Engine};
+pub use event::EventQueue;
+pub use time::SimTime;

@@ -1,0 +1,138 @@
+//! Virtual time: integer nanoseconds since simulation start.
+//!
+//! Integer time keeps the event queue totally ordered and the simulation
+//! bit-reproducible across platforms (no float drift over long runs).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time (nanoseconds since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    /// t = 0.
+    pub const ZERO: SimTime = SimTime(0);
+    /// The end of time (useful as an "infinity" sentinel).
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    /// From whole seconds.
+    pub const fn from_secs(s: u64) -> Self {
+        SimTime(s * 1_000_000_000)
+    }
+
+    /// From milliseconds.
+    pub const fn from_millis(ms: u64) -> Self {
+        SimTime(ms * 1_000_000)
+    }
+
+    /// From microseconds.
+    pub const fn from_micros(us: u64) -> Self {
+        SimTime(us * 1_000)
+    }
+
+    /// From fractional seconds (rounds to nearest ns; saturates at MAX).
+    pub fn from_secs_f64(s: f64) -> Self {
+        assert!(s >= 0.0, "negative duration");
+        if s >= u64::MAX as f64 / 1e9 {
+            SimTime::MAX
+        } else {
+            SimTime((s * 1e9).round() as u64)
+        }
+    }
+
+    /// As fractional seconds.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    /// Raw nanoseconds.
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    /// Saturating subtraction (durations never go negative).
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Round **up** to the next multiple of `period` strictly after `self`.
+    /// Models "wait for the next scheduler cycle boundary".
+    pub fn next_boundary(self, period: SimTime) -> SimTime {
+        assert!(period.0 > 0, "zero period");
+        let k = self.0 / period.0 + 1;
+        SimTime(k * period.0)
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_add(rhs.0).expect("SimTime overflow"))
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_sub(rhs.0).expect("SimTime underflow"))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::util::fmt::fmt_seconds(self.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(SimTime::from_secs(3).as_secs_f64(), 3.0);
+        assert_eq!(SimTime::from_millis(1500), SimTime::from_micros(1_500_000));
+        assert_eq!(SimTime::from_secs_f64(0.25).as_nanos(), 250_000_000);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = SimTime::from_secs(2);
+        let b = SimTime::from_secs(1);
+        assert_eq!(a + b, SimTime::from_secs(3));
+        assert_eq!(a - b, SimTime::from_secs(1));
+        assert_eq!(b.saturating_sub(a), SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        let _ = SimTime::from_secs(1) - SimTime::from_secs(2);
+    }
+
+    #[test]
+    fn next_boundary_strictly_after() {
+        let period = SimTime::from_secs(60);
+        // exactly on a boundary moves to the NEXT one
+        assert_eq!(SimTime::from_secs(60).next_boundary(period), SimTime::from_secs(120));
+        assert_eq!(SimTime::from_secs(61).next_boundary(period), SimTime::from_secs(120));
+        assert_eq!(SimTime::ZERO.next_boundary(period), SimTime::from_secs(60));
+    }
+
+    #[test]
+    fn display_uses_units() {
+        assert_eq!(format!("{}", SimTime::from_millis(12)), "12.000 ms");
+    }
+
+    #[test]
+    fn from_secs_f64_saturates() {
+        assert_eq!(SimTime::from_secs_f64(1e30), SimTime::MAX);
+    }
+}

@@ -1,0 +1,7 @@
+//! Testing substrates: a minimal property-based testing harness.
+//!
+//! `proptest` is unavailable offline, so [`prop`] provides the subset the
+//! invariant tests need: seeded generators, a configurable case count, and
+//! greedy input shrinking on failure.
+
+pub mod prop;

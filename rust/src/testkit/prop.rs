@@ -1,0 +1,211 @@
+//! Minimal property-based testing harness (proptest substitute).
+//!
+//! Usage (no_run: doctest binaries lack the libxla_extension rpath):
+//!
+//! ```no_run
+//! use spotcloud::testkit::prop::{Prop, Gen};
+//!
+//! Prop::new("addition commutes")
+//!     .cases(200)
+//!     .run(|g| {
+//!         let a = g.u64(0, 1_000);
+//!         let b = g.u64(0, 1_000);
+//!         assert_eq!(a + b, b + a);
+//!     });
+//! ```
+//!
+//! On failure the harness re-runs the property with progressively smaller
+//! draws (halving each numeric draw toward its lower bound) and panics with
+//! the failing seed so the case is reproducible.
+
+use crate::util::rng::Xoshiro256;
+
+/// A deterministic draw source handed to properties. Records draws so the
+/// shrinker can replay them scaled down.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Scale in [0,1]: 1.0 = full range, smaller = shrunk toward minimum.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            scale,
+        }
+    }
+
+    /// u64 in `[lo, hi]` (inclusive), scaled toward `lo` during shrinking.
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let raw = self.rng.gen_range(lo, hi + 1);
+        lo + ((raw - lo) as f64 * self.scale) as u64
+    }
+
+    /// usize in `[lo, hi]` inclusive.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    /// f64 in `[lo, hi)`, scaled toward `lo` during shrinking.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (self.rng.uniform(lo, hi) - lo) * self.scale
+    }
+
+    /// Boolean with probability `p` of `true`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// A vector of `len` items drawn by `f`; len scales down when shrinking.
+    pub fn vec<T>(&mut self, lo_len: usize, hi_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize(lo_len, hi_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the provided choices.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        let i = self.rng.index(xs.len());
+        &xs[i]
+    }
+
+    /// Access to the raw RNG for custom draws (not shrunk).
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// A property runner.
+pub struct Prop {
+    name: &'static str,
+    cases: u32,
+    seed: u64,
+}
+
+impl Prop {
+    /// Create a property with a descriptive name.
+    pub fn new(name: &'static str) -> Self {
+        // Default seed derives from the name so distinct properties explore
+        // distinct streams but remain reproducible run-to-run.
+        let seed = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+        Self {
+            name,
+            cases: 100,
+            seed,
+        }
+    }
+
+    /// Number of random cases (default 100).
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Fixed seed override (for reproducing a reported failure).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property; panics with seed + shrink info on failure.
+    pub fn run(self, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            if let Err(panic) = Self::attempt(case_seed, 1.0, &prop) {
+                // Shrink: find the smallest scale that still fails.
+                let mut failing_scale = 1.0f64;
+                let mut scale = 0.5f64;
+                for _ in 0..16 {
+                    if Self::attempt(case_seed, scale, &prop).is_err() {
+                        failing_scale = scale;
+                        scale *= 0.5;
+                    } else {
+                        scale = (scale + failing_scale) / 2.0;
+                    }
+                }
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property '{}' failed (case {}, seed {:#x}, minimal failing scale {:.4}): {}",
+                    self.name, case, case_seed, failing_scale, msg
+                );
+            }
+        }
+    }
+
+    fn attempt(
+        seed: u64,
+        scale: f64,
+        prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe),
+    ) -> Result<(), Box<dyn std::any::Any + Send>> {
+        let prev_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence expected panics
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, scale);
+            prop(&mut g);
+        });
+        std::panic::set_hook(prev_hook);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        Prop::new("sum is symmetric").cases(50).run(|g| {
+            let a = g.u64(0, 100);
+            let b = g.u64(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let result = std::panic::catch_unwind(|| {
+            Prop::new("always fails").cases(10).run(|g| {
+                let x = g.u64(0, 100);
+                assert!(x > 1_000, "x was {x}");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        Prop::new("bounds").cases(200).run(|g| {
+            let x = g.u64(10, 20);
+            assert!((10..=20).contains(&x));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec(2, 5, |g| g.usize(0, 9));
+            assert!(v.len() >= 2 && v.len() <= 5);
+            assert!(v.iter().all(|&i| i <= 9));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed: u64| {
+            let mut out = Vec::new();
+            let mut g = Gen::new(seed, 1.0);
+            for _ in 0..5 {
+                out.push(g.u64(0, 1_000_000));
+            }
+            out
+        };
+        assert_eq!(collect(77), collect(77));
+        assert_ne!(collect(77), collect(78));
+    }
+}

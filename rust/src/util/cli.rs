@@ -1,0 +1,305 @@
+//! A small declarative command-line parser (clap is unavailable offline).
+//!
+//! Supports the patterns the `spotcloud` binary needs:
+//!
+//! * subcommands (`spotcloud experiment fig2a --seed 7`),
+//! * long flags with values (`--seed 7`, `--seed=7`),
+//! * boolean switches (`--verbose`),
+//! * positional arguments, and
+//! * auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without the leading `--`.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// If true the option is a boolean switch and takes no value.
+    pub switch: bool,
+    /// Default value rendered in help (switches ignore this).
+    pub default: Option<&'static str>,
+}
+
+/// Declarative command description used to parse an argument vector.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    /// Command name (for help output).
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Option specifications.
+    pub opts: Vec<OptSpec>,
+    /// Names of expected positional arguments, for help.
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parse result: options and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    opts: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    /// Positional arguments in order.
+    pub positionals: Vec<String>,
+}
+
+/// Errors produced while parsing.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{name}: {value}: {reason}")]
+    InvalidValue {
+        name: String,
+        value: String,
+        reason: String,
+    },
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Command {
+    /// Create a command with a name and description.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Add a value-taking option.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            switch: false,
+            default,
+        });
+        self
+    }
+
+    /// Add a boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            switch: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Document a positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render `--help` output.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = write!(s, "\nusage: {}", self.name);
+        for (p, _) in &self.positionals {
+            let _ = write!(s, " <{p}>");
+        }
+        if !self.opts.is_empty() {
+            let _ = write!(s, " [options]");
+        }
+        let _ = writeln!(s);
+        if !self.positionals.is_empty() {
+            let _ = writeln!(s, "\narguments:");
+            for (p, h) in &self.positionals {
+                let _ = writeln!(s, "  {p:<18} {h}");
+            }
+        }
+        if !self.opts.is_empty() {
+            let _ = writeln!(s, "\noptions:");
+            for o in &self.opts {
+                let name = if o.switch {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let def = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                let _ = writeln!(s, "  {name:<18} {}{def}", o.help);
+            }
+        }
+        s
+    }
+
+    /// Parse an argument vector (not including the command name itself).
+    pub fn parse<I, S>(&self, args: I) -> Result<Parsed, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut out = Parsed::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                out.opts.insert(o.name.to_string(), d.to_string());
+            }
+            if o.switch {
+                out.switches.insert(o.name.to_string(), false);
+            }
+        }
+        let args: Vec<String> = args.into_iter().map(|s| s.as_ref().to_string()).collect();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::UnknownOption(name.clone()))?;
+                if spec.switch {
+                    out.switches.insert(name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    out.opts.insert(name, val);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    /// Raw string value of an option (default applies).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Boolean switch state.
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// Parse an option value into any `FromStr` type.
+    pub fn value<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name).ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        raw.parse::<T>().map_err(|e| CliError::InvalidValue {
+            name: name.to_string(),
+            value: raw.to_string(),
+            reason: e.to_string(),
+        })
+    }
+
+    /// Like [`Parsed::value`] but returns `None` when the option was never
+    /// given and has no default.
+    pub fn value_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| CliError::InvalidValue {
+                    name: name.to_string(),
+                    value: raw.to_string(),
+                    reason: e.to_string(),
+                }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "test command")
+            .opt("seed", "rng seed", Some("42"))
+            .opt("nodes", "node count", None)
+            .switch("verbose", "chatty output")
+            .positional("target", "what to run")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(Vec::<String>::new()).unwrap();
+        assert_eq!(p.value::<u64>("seed").unwrap(), 42);
+        assert!(!p.flag("verbose"));
+        assert!(p.get("nodes").is_none());
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = cmd().parse(["--seed", "7", "--nodes=19"]).unwrap();
+        assert_eq!(p.value::<u64>("seed").unwrap(), 7);
+        assert_eq!(p.value::<u32>("nodes").unwrap(), 19);
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let p = cmd().parse(["fig2a", "--verbose", "extra"]).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals, vec!["fig2a", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert_eq!(
+            cmd().parse(["--bogus"]).unwrap_err(),
+            CliError::UnknownOption("bogus".into())
+        );
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert_eq!(
+            cmd().parse(["--nodes"]).unwrap_err(),
+            CliError::MissingValue("nodes".into())
+        );
+    }
+
+    #[test]
+    fn bad_value_reported() {
+        let err = cmd().parse(["--seed", "banana"]).unwrap().value::<u64>("seed");
+        assert!(matches!(err, Err(CliError::InvalidValue { .. })));
+    }
+
+    #[test]
+    fn help_flag() {
+        assert_eq!(cmd().parse(["--help"]).unwrap_err(), CliError::HelpRequested);
+        let h = cmd().help();
+        assert!(h.contains("--seed"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("<target>"));
+    }
+}

@@ -1,0 +1,209 @@
+//! `slurm.conf`-style configuration file parser.
+//!
+//! The paper configures preemption via `slurm.conf` parameters
+//! (`PreemptMode`, `PreemptType`, `SchedulerParameters=preempt_youngest_first`,
+//! QoS `MaxTRESPerUser`, …). We mirror that: a simple line-oriented
+//! `Key=Value` format with `#` comments, repeated keys collected in order,
+//! and typed accessors. Used by the daemon and the experiment harness so
+//! cluster setups are file-describable like the real system.
+
+use std::collections::BTreeMap;
+
+/// Parsed configuration: ordered multimap of keys to values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConfigFile {
+    entries: Vec<(String, String)>,
+    index: BTreeMap<String, Vec<usize>>,
+}
+
+/// Errors produced while parsing or reading values.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {line}: expected Key=Value, got {text:?}")]
+    Malformed { line: usize, text: String },
+    #[error("missing required key {0:?}")]
+    Missing(String),
+    #[error("key {key:?}: cannot parse {value:?} as {ty}")]
+    BadValue {
+        key: String,
+        value: String,
+        ty: &'static str,
+    },
+}
+
+impl ConfigFile {
+    /// Parse the text of a config file.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = ConfigFile::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(pos) => &raw[..pos],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(ConfigError::Malformed {
+                line: lineno + 1,
+                text: raw.to_string(),
+            })?;
+            cfg.push(k.trim(), v.trim());
+        }
+        Ok(cfg)
+    }
+
+    /// Load and parse a file from disk.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    /// Append a key/value pair (keys are case-insensitive, stored lowered).
+    pub fn push(&mut self, key: &str, value: &str) {
+        let k = key.to_ascii_lowercase();
+        let idx = self.entries.len();
+        self.entries.push((k.clone(), value.to_string()));
+        self.index.entry(k).or_default().push(idx);
+    }
+
+    /// Last value for a key (slurm semantics: later wins), if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        let k = key.to_ascii_lowercase();
+        self.index
+            .get(&k)
+            .and_then(|v| v.last())
+            .map(|&i| self.entries[i].1.as_str())
+    }
+
+    /// All values for a repeated key, in file order.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        let k = key.to_ascii_lowercase();
+        self.index
+            .get(&k)
+            .map(|v| v.iter().map(|&i| self.entries[i].1.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Required string value.
+    pub fn require(&self, key: &str) -> Result<&str, ConfigError> {
+        self.get(key).ok_or_else(|| ConfigError::Missing(key.to_string()))
+    }
+
+    /// Typed value with a default when the key is absent.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse::<T>().map_err(|_| ConfigError::BadValue {
+                key: key.to_string(),
+                value: raw.to_string(),
+                ty: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Boolean value: yes/no/true/false/1/0 (case-insensitive).
+    pub fn get_bool_or(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => match raw.to_ascii_lowercase().as_str() {
+                "yes" | "true" | "1" => Ok(true),
+                "no" | "false" | "0" => Ok(false),
+                _ => Err(ConfigError::BadValue {
+                    key: key.to_string(),
+                    value: raw.to_string(),
+                    ty: "bool",
+                }),
+            },
+        }
+    }
+
+    /// Parse a `SchedulerParameters`-style comma-separated option list.
+    /// Returns the set of bare flags and `opt=value` pairs.
+    pub fn option_list(&self, key: &str) -> (Vec<String>, BTreeMap<String, String>) {
+        let mut flags = Vec::new();
+        let mut kvs = BTreeMap::new();
+        if let Some(raw) = self.get(key) {
+            for part in raw.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                match part.split_once('=') {
+                    Some((k, v)) => {
+                        kvs.insert(k.to_ascii_lowercase(), v.to_string());
+                    }
+                    None => flags.push(part.to_ascii_lowercase()),
+                }
+            }
+        }
+        (flags, kvs)
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entries were parsed.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster definition
+ClusterName=tx-2500
+PreemptType=preempt/qos     # QoS based
+PreemptMode=REQUEUE
+SchedulerParameters=preempt_youngest_first,bf_interval=30
+NodeName=n[01-19]
+PartitionName=interactive
+PartitionName=spot
+"#;
+
+    #[test]
+    fn parses_and_reads() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get("clustername"), Some("tx-2500"));
+        assert_eq!(cfg.get("PreemptMode"), Some("REQUEUE"));
+        assert_eq!(cfg.get_all("PartitionName"), vec!["interactive", "spot"]);
+    }
+
+    #[test]
+    fn comments_stripped_and_case_insensitive() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get("preempttype"), Some("preempt/qos"));
+    }
+
+    #[test]
+    fn option_list_parses_flags_and_kvs() {
+        let cfg = ConfigFile::parse(SAMPLE).unwrap();
+        let (flags, kvs) = cfg.option_list("SchedulerParameters");
+        assert!(flags.contains(&"preempt_youngest_first".to_string()));
+        assert_eq!(kvs.get("bf_interval").map(String::as_str), Some("30"));
+    }
+
+    #[test]
+    fn later_key_wins() {
+        let cfg = ConfigFile::parse("A=1\nA=2\n").unwrap();
+        assert_eq!(cfg.get("a"), Some("2"));
+        assert_eq!(cfg.get_all("a"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        let err = ConfigFile::parse("no equals sign here").unwrap_err();
+        assert!(matches!(err, ConfigError::Malformed { line: 1, .. }));
+    }
+
+    #[test]
+    fn typed_and_bool_accessors() {
+        let cfg = ConfigFile::parse("Count=17\nEnable=yes\n").unwrap();
+        assert_eq!(cfg.get_parsed_or::<u32>("Count", 0).unwrap(), 17);
+        assert_eq!(cfg.get_parsed_or::<u32>("Absent", 5).unwrap(), 5);
+        assert!(cfg.get_bool_or("Enable", false).unwrap());
+        assert!(cfg.get_bool_or("Absent", true).unwrap());
+        assert!(cfg.get_parsed_or::<u32>("Enable", 0).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! ASCII table and number formatting for experiment reports.
+//!
+//! The benchmark harness prints the same rows/series the paper's figures
+//! plot; this module renders them as aligned tables so the shape comparison
+//! (who wins, by what factor) is readable in a terminal and in
+//! EXPERIMENTS.md.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    /// Attach a title printed above the table.
+    pub fn with_title<S: Into<String>>(mut self, title: S) -> Self {
+        self.title = Some(title.into());
+        self
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(widths[i] - c.chars().count() + 1));
+                s.push('|');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render as CSV (for plotting outside the terminal).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds with an adaptive unit (ns/µs/ms/s), 3 significant digits.
+pub fn fmt_seconds(s: f64) -> String {
+    let a = s.abs();
+    if a == 0.0 {
+        "0 s".into()
+    } else if a < 1e-6 {
+        format!("{:.3} ns", s * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.3} µs", s * 1e6)
+    } else if a < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Format a ratio like `123x` / `0.5x` with sensible precision.
+pub fn fmt_ratio(r: f64) -> String {
+    if r >= 100.0 {
+        format!("{r:.0}x")
+    } else if r >= 10.0 {
+        format!("{r:.1}x")
+    } else {
+        format!("{r:.2}x")
+    }
+}
+
+/// Format a float in scientific notation with 2 decimals (like the paper's
+/// log-scale axis labels).
+pub fn fmt_sci(x: f64) -> String {
+    format!("{x:.2e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["job type", "sec/task"]).with_title("Fig 2a");
+        t.row(vec!["individual", "1.2e-2"]);
+        t.row(vec!["triple-mode", "1.2e-4"]);
+        let s = t.render();
+        assert!(s.contains("Fig 2a"));
+        assert!(s.contains("| job type    |"));
+        // Every data line has the same width.
+        let widths: Vec<usize> = s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only one"]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(vec!["k", "v"]);
+        t.row(vec!["has,comma", "has\"quote"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn second_formatting_units() {
+        assert_eq!(fmt_seconds(0.0), "0 s");
+        assert!(fmt_seconds(3.2e-9).ends_with("ns"));
+        assert!(fmt_seconds(4.5e-5).ends_with("µs"));
+        assert!(fmt_seconds(1.2e-2).ends_with("ms"));
+        assert!(fmt_seconds(2.0).ends_with(" s"));
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(fmt_ratio(123.4), "123x");
+        assert_eq!(fmt_ratio(12.34), "12.3x");
+        assert_eq!(fmt_ratio(1.234), "1.23x");
+    }
+}

@@ -1,0 +1,18 @@
+//! Std-only utility substrates.
+//!
+//! The offline build environment vendors only the crates needed by the XLA
+//! bridge, so the usual ecosystem crates (`rand`, `clap`, `serde`, …) are not
+//! available. These modules provide the subsets we need, built from scratch
+//! and unit-tested:
+//!
+//! * [`rng`] — deterministic SplitMix64 / xoshiro256** PRNG with the
+//!   distributions the workload generators need (uniform, exponential,
+//!   log-normal, Poisson).
+//! * [`cli`] — a declarative command-line parser for the `spotcloud` binary.
+//! * [`config`] — a `slurm.conf`-style `Key=Value` config-file parser.
+//! * [`fmt`] — ASCII table / aligned-series rendering for experiment reports.
+
+pub mod cli;
+pub mod config;
+pub mod fmt;
+pub mod rng;

@@ -1,0 +1,188 @@
+//! Stochastic workload generation for the daemon driver and scale tests.
+//!
+//! Interactive arrivals follow a Poisson process (exponential inter-arrival
+//! times); job sizes are drawn from a discrete distribution over the
+//! paper's typical interactive sizes; run times are log-normal. Spot
+//! backlog jobs are long-running triple-mode jobs. Everything is
+//! deterministic given the seed.
+
+use crate::job::{JobSpec, JobType, UserId};
+use crate::sim::SimTime;
+use crate::util::rng::Xoshiro256;
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadGenConfig {
+    /// RNG seed.
+    pub seed: u64,
+    /// Mean interactive arrivals per second.
+    pub arrival_rate: f64,
+    /// Candidate interactive job sizes (tasks) with weights.
+    pub sizes: Vec<(u32, f64)>,
+    /// Job-type mix (weights for Individual/Array/TripleMode submissions).
+    pub type_weights: [f64; 3],
+    /// Log-normal run-time parameters (mu, sigma) in log-seconds.
+    pub run_time_lognorm: (f64, f64),
+    /// Number of distinct interactive users.
+    pub n_users: u32,
+}
+
+impl Default for WorkloadGenConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xC0FFEE,
+            arrival_rate: 0.05, // one interactive submission every ~20s
+            sizes: vec![(64, 0.4), (128, 0.25), (256, 0.2), (512, 0.1), (1024, 0.05)],
+            type_weights: [0.1, 0.3, 0.6], // MIT SuperCloud launches are mostly triple-mode
+            run_time_lognorm: (6.0, 1.0),  // median ~400s
+            n_users: 16,
+        }
+    }
+}
+
+/// A generated submission.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    /// When the client submits.
+    pub at: SimTime,
+    /// The burst of specs (individual submissions expand to many specs).
+    pub specs: Vec<JobSpec>,
+    /// Launch type of the burst.
+    pub job_type: JobType,
+    /// Total tasks.
+    pub tasks: u32,
+}
+
+/// The generator.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    cfg: WorkloadGenConfig,
+    rng: Xoshiro256,
+    now: f64,
+}
+
+impl WorkloadGen {
+    /// Create from a config.
+    pub fn new(cfg: WorkloadGenConfig) -> Self {
+        let rng = Xoshiro256::new(cfg.seed);
+        Self { cfg, rng, now: 0.0 }
+    }
+
+    fn pick_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.rng.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+
+    /// Next interactive submission.
+    pub fn next_interactive(&mut self) -> Submission {
+        self.now += self.rng.exponential(self.cfg.arrival_rate);
+        let at = SimTime::from_secs_f64(self.now);
+        let sizes: Vec<f64> = self.cfg.sizes.iter().map(|&(_, w)| w).collect();
+        let size_idx = self.pick_weighted(&sizes);
+        let tasks = self.cfg.sizes[size_idx].0;
+        let ty = match self.pick_weighted(&self.cfg.type_weights.clone()) {
+            0 => JobType::Individual,
+            1 => JobType::Array,
+            _ => JobType::TripleMode,
+        };
+        let user = UserId(1 + self.rng.gen_range(0, self.cfg.n_users as u64) as u32);
+        let (mu, sigma) = self.cfg.run_time_lognorm;
+        let run_secs = self.rng.log_normal(mu, sigma).clamp(10.0, 86_400.0);
+        let specs = crate::workload::scenarios::interactive_burst(user, ty, tasks)
+            .into_iter()
+            .map(|s| s.with_run_time(SimTime::from_secs_f64(run_secs)))
+            .collect();
+        Submission {
+            at,
+            specs,
+            job_type: ty,
+            tasks,
+        }
+    }
+
+    /// Generate `n` interactive submissions in arrival order.
+    pub fn interactive_stream(&mut self, n: usize) -> Vec<Submission> {
+        (0..n).map(|_| self.next_interactive()).collect()
+    }
+
+    /// A spot backlog of `n` triple-mode jobs of `tasks` each.
+    pub fn spot_backlog(&mut self, n: usize, tasks: u32) -> Vec<JobSpec> {
+        (0..n)
+            .map(|_| {
+                let user = UserId(100 + self.rng.gen_range(0, 4) as u32);
+                JobSpec::spot(user, JobType::TripleMode, tasks)
+                    .with_run_time(SimTime::from_secs(7 * 24 * 3600))
+                    .with_tag("spot-backlog")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut g = WorkloadGen::new(WorkloadGenConfig::default());
+            g.interactive_stream(20)
+                .iter()
+                .map(|s| (s.at, s.tasks))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_plausible() {
+        let mut g = WorkloadGen::new(WorkloadGenConfig {
+            arrival_rate: 1.0,
+            ..Default::default()
+        });
+        let subs = g.interactive_stream(500);
+        for w in subs.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        let span = subs.last().unwrap().at.as_secs_f64();
+        assert!(
+            (300.0..800.0).contains(&span),
+            "500 arrivals at rate 1/s spanned {span}s"
+        );
+    }
+
+    #[test]
+    fn sizes_come_from_catalog() {
+        let cfg = WorkloadGenConfig::default();
+        let catalog: Vec<u32> = cfg.sizes.iter().map(|&(s, _)| s).collect();
+        let mut g = WorkloadGen::new(cfg);
+        for s in g.interactive_stream(100) {
+            assert!(catalog.contains(&s.tasks));
+        }
+    }
+
+    #[test]
+    fn individual_submissions_expand() {
+        let mut g = WorkloadGen::new(WorkloadGenConfig {
+            type_weights: [1.0, 0.0, 0.0],
+            ..Default::default()
+        });
+        let s = g.next_interactive();
+        assert_eq!(s.specs.len() as u32, s.tasks);
+    }
+
+    #[test]
+    fn spot_backlog_is_spot() {
+        let mut g = WorkloadGen::new(WorkloadGenConfig::default());
+        let backlog = g.spot_backlog(5, 512);
+        assert_eq!(backlog.len(), 5);
+        assert!(backlog.iter().all(|s| s.qos == crate::job::QosClass::Spot));
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload synthesis: the paper's experiment scenarios plus stochastic
+//! generators for the end-to-end daemon driver.
+
+pub mod gen;
+pub mod scenarios;
+pub mod sim_mixed;
+pub mod trace;
+
+pub use gen::{WorkloadGen, WorkloadGenConfig};
+pub use scenarios::{interactive_burst, spot_fill, Scenario};
+pub use sim_mixed::{simulate_mixed, MixedReport};
+pub use trace::{Trace, TraceRecord};

@@ -1,0 +1,103 @@
+//! The paper's experiment scenarios as reusable builders.
+
+use crate::job::{JobSpec, JobType, UserId};
+use crate::sim::SimTime;
+
+/// A named scenario (used by the CLI and the experiment harness).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Idle cluster, one interactive submission (baseline measurement).
+    Baseline,
+    /// Cluster pre-filled with triple-mode spot work, then an interactive
+    /// submission that must preempt.
+    PreemptFill,
+    /// Spot backlog + Poisson interactive arrivals (daemon driver).
+    MixedLoad,
+}
+
+impl Scenario {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "baseline" => Some(Scenario::Baseline),
+            "preempt-fill" => Some(Scenario::PreemptFill),
+            "mixed-load" => Some(Scenario::MixedLoad),
+            _ => None,
+        }
+    }
+}
+
+/// Build the interactive submission burst for a job type and task count,
+/// exactly as the paper submits them:
+///
+/// * Individual → `tasks` one-task jobs (separate sbatch invocations),
+/// * Array / TripleMode → one job of `tasks` tasks.
+pub fn interactive_burst(user: UserId, job_type: JobType, tasks: u32) -> Vec<JobSpec> {
+    match job_type {
+        JobType::Individual => (0..tasks)
+            .map(|_| JobSpec::interactive(user, JobType::Individual, 1))
+            .collect(),
+        _ => vec![JobSpec::interactive(user, job_type, tasks)],
+    }
+}
+
+/// Build the spot fill: `n_jobs` triple-mode spot jobs covering `total_tasks`
+/// tasks in aggregate (the paper fills with one large spot job for Fig 2a–f
+/// and "several triple mode spot jobs" for Fig 2g). Spot jobs are long
+/// (effectively infinite for the experiment horizon).
+pub fn spot_fill(user: UserId, total_tasks: u32, n_jobs: u32) -> Vec<JobSpec> {
+    assert!(n_jobs > 0);
+    let per = total_tasks / n_jobs;
+    let mut out = Vec::with_capacity(n_jobs as usize);
+    let mut remaining = total_tasks;
+    for i in 0..n_jobs {
+        let t = if i + 1 == n_jobs { remaining } else { per };
+        remaining -= t;
+        if t > 0 {
+            out.push(
+                JobSpec::spot(user, JobType::TripleMode, t)
+                    .with_run_time(SimTime::from_secs(30 * 24 * 3600))
+                    .with_tag("spot-fill"),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn individual_burst_expands() {
+        let b = interactive_burst(UserId(1), JobType::Individual, 10);
+        assert_eq!(b.len(), 10);
+        assert!(b.iter().all(|s| s.tasks == 1));
+    }
+
+    #[test]
+    fn array_burst_is_single_job() {
+        let b = interactive_burst(UserId(1), JobType::Array, 4096);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].tasks, 4096);
+    }
+
+    #[test]
+    fn spot_fill_covers_total() {
+        let fill = spot_fill(UserId(9), 4096, 8);
+        assert_eq!(fill.len(), 8);
+        assert_eq!(fill.iter().map(|s| s.tasks).sum::<u32>(), 4096);
+    }
+
+    #[test]
+    fn spot_fill_uneven_split() {
+        let fill = spot_fill(UserId(9), 100, 3);
+        assert_eq!(fill.iter().map(|s| s.tasks).sum::<u32>(), 100);
+    }
+
+    #[test]
+    fn scenario_parse() {
+        assert_eq!(Scenario::parse("baseline"), Some(Scenario::Baseline));
+        assert_eq!(Scenario::parse("nope"), None);
+    }
+}

@@ -1,0 +1,174 @@
+//! Submission traces: CSV record/replay.
+//!
+//! Lets the daemon record live workloads and lets experiments replay
+//! identical submission sequences across configurations.
+
+use crate::job::{JobSpec, JobType, QosClass, UserId};
+use crate::sim::SimTime;
+
+/// One trace line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Submission time (seconds from trace start).
+    pub at_secs: f64,
+    /// Submitting user.
+    pub user: u32,
+    /// Launch type.
+    pub job_type: JobType,
+    /// Total tasks.
+    pub tasks: u32,
+    /// QoS class.
+    pub qos: QosClass,
+    /// Run time in seconds.
+    pub run_secs: f64,
+}
+
+impl TraceRecord {
+    /// Convert to a JobSpec (individual records stay single-task; expansion
+    /// happens at submission time).
+    pub fn to_spec(&self) -> JobSpec {
+        let base = match self.qos {
+            QosClass::Normal => JobSpec::interactive(UserId(self.user), self.job_type, self.tasks),
+            QosClass::Spot => JobSpec::spot(UserId(self.user), self.job_type, self.tasks),
+        };
+        base.with_run_time(SimTime::from_secs_f64(self.run_secs))
+    }
+}
+
+/// A submission trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// Records in time order.
+    pub records: Vec<TraceRecord>,
+}
+
+fn type_label(t: JobType) -> &'static str {
+    match t {
+        JobType::Individual => "individual",
+        JobType::Array => "array",
+        JobType::TripleMode => "triple",
+    }
+}
+
+fn parse_type(s: &str) -> Option<JobType> {
+    match s {
+        "individual" => Some(JobType::Individual),
+        "array" => Some(JobType::Array),
+        "triple" => Some(JobType::TripleMode),
+        _ => None,
+    }
+}
+
+impl Trace {
+    /// Serialize to CSV (with header).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("at_secs,user,job_type,tasks,qos,run_secs\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.at_secs,
+                r.user,
+                type_label(r.job_type),
+                r.tasks,
+                r.qos.label(),
+                r.run_secs
+            ));
+        }
+        out
+    }
+
+    /// Parse from CSV text.
+    pub fn from_csv(text: &str) -> anyhow::Result<Self> {
+        let mut records = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header / blanks
+            }
+            let cols: Vec<&str> = line.split(',').collect();
+            anyhow::ensure!(cols.len() == 6, "line {}: expected 6 columns", i + 1);
+            records.push(TraceRecord {
+                at_secs: cols[0].parse()?,
+                user: cols[1].parse()?,
+                job_type: parse_type(cols[2])
+                    .ok_or_else(|| anyhow::anyhow!("line {}: bad job type {:?}", i + 1, cols[2]))?,
+                tasks: cols[3].parse()?,
+                qos: match cols[4] {
+                    "normal" => QosClass::Normal,
+                    "spot" => QosClass::Spot,
+                    other => anyhow::bail!("line {}: bad qos {other:?}", i + 1),
+                },
+                run_secs: cols[5].parse()?,
+            });
+        }
+        Ok(Trace { records })
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_csv(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            records: vec![
+                TraceRecord {
+                    at_secs: 0.5,
+                    user: 1,
+                    job_type: JobType::TripleMode,
+                    tasks: 4096,
+                    qos: QosClass::Normal,
+                    run_secs: 600.0,
+                },
+                TraceRecord {
+                    at_secs: 2.0,
+                    user: 9,
+                    job_type: JobType::Array,
+                    tasks: 128,
+                    qos: QosClass::Spot,
+                    run_secs: 86400.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = sample();
+        let parsed = Trace::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(t, parsed);
+    }
+
+    #[test]
+    fn to_spec_maps_qos() {
+        let t = sample();
+        assert_eq!(t.records[0].to_spec().qos, QosClass::Normal);
+        assert_eq!(t.records[1].to_spec().qos, QosClass::Spot);
+    }
+
+    #[test]
+    fn bad_csv_rejected() {
+        assert!(Trace::from_csv("h\n1,2,3\n").is_err());
+        assert!(Trace::from_csv("h\n1,1,warp,64,normal,5\n").is_err());
+        assert!(Trace::from_csv("h\n1,1,array,64,superfast,5\n").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample();
+        let path = std::env::temp_dir().join("spotcloud_trace_test.csv");
+        t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,93 @@
+//! End-to-end daemon tests over real TCP: the coordinator stack as the e2e
+//! example drives it, in miniature.
+
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::coordinator::{client::Client, Daemon, DaemonConfig, Server};
+use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
+use spotcloud::sched::SchedulerConfig;
+use spotcloud::sim::SchedCosts;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn spawn_cron_daemon() -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_user_limit(160)
+        .with_approach(PreemptApproach::CronAgent {
+            mode: PreemptMode::Requeue,
+            cfg: CronAgentConfig { reserve_nodes: 5 },
+        });
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        cfg,
+        DaemonConfig {
+            speedup: 5_000.0,
+            pacer_tick_ms: 1,
+        },
+    );
+    let pacer_daemon = Arc::clone(&daemon);
+    pacer_daemon.spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve());
+    (daemon, addr, handle)
+}
+
+#[test]
+fn spot_then_interactive_over_tcp() {
+    let (daemon, addr, server) = spawn_cron_daemon();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Load spot work up to the agent's ceiling.
+    for _ in 0..4 {
+        let r = c.request("SUBMIT spot triple 96 9 86400").unwrap();
+        assert!(r.starts_with("OK"), "{r}");
+    }
+    // Interactive lands on the reserve.
+    let r = c.request("SUBMIT normal triple 160 1 120").unwrap();
+    assert!(r.starts_with("OK"), "{r}");
+
+    // Wait until the interactive job's scheduling latency is harvested.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while daemon.metrics.sched_latency().count() == 0 {
+        assert!(Instant::now() < deadline, "interactive job never dispatched");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let lat = daemon.metrics.sched_latency();
+    assert!(
+        lat.max() < 5_000_000_000,
+        "interactive latency {}ns should be ~baseline",
+        lat.max()
+    );
+
+    let util = c.request("UTIL").unwrap();
+    assert!(util.contains("total_cores=608"), "{util}");
+
+    let _ = c.request("SHUTDOWN");
+    server.join().unwrap();
+}
+
+#[test]
+fn stats_reflect_scheduler_activity() {
+    let (_daemon, addr, server) = spawn_cron_daemon();
+    let mut c = Client::connect(&addr).unwrap();
+    c.request("SUBMIT spot triple 96 9 600").unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let stats = c.request("STATS").unwrap();
+    assert!(stats.contains("dispatches="), "{stats}");
+    assert!(stats.contains("cron_passes="), "{stats}");
+    assert!(stats.contains("scorer=native"), "{stats}");
+    let _ = c.request("SHUTDOWN");
+    server.join().unwrap();
+}
+
+#[test]
+fn malformed_requests_do_not_kill_the_connection() {
+    let (_daemon, addr, server) = spawn_cron_daemon();
+    let mut c = Client::connect(&addr).unwrap();
+    assert!(c.request("GARBAGE").unwrap().starts_with("ERR"));
+    assert!(c.request("SUBMIT bad args here x").unwrap().starts_with("ERR"));
+    // Connection still works.
+    assert_eq!(c.request("PING").unwrap(), "OK pong");
+    let _ = c.request("SHUTDOWN");
+    server.join().unwrap();
+}

@@ -1,0 +1,144 @@
+//! Failure injection: drained nodes, cancellations at every lifecycle stage,
+//! rejected preemption modes, and pathological workloads.
+
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::job::{JobSpec, JobState, JobType, UserId};
+use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
+use spotcloud::sched::{Scheduler, SchedulerConfig};
+use spotcloud::sim::{SchedCosts, SimTime};
+
+fn sched() -> Scheduler {
+    Scheduler::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+    )
+}
+
+#[test]
+fn cancel_pending_running_and_requeued_jobs() {
+    let mut s = sched();
+    // Pending cancel.
+    let filler = s.submit(
+        JobSpec::interactive(UserId(2), JobType::Array, 608).with_run_time(SimTime::from_secs(500)),
+    );
+    assert!(s.run_until_dispatched(&[filler], SimTime::from_secs(120)));
+    let blocked = s.submit(JobSpec::interactive(UserId(1), JobType::Array, 64));
+    s.run_for(SimTime::from_secs(30));
+    assert_eq!(s.job(blocked).unwrap().state, JobState::Pending);
+    assert!(s.cancel(blocked));
+    assert_eq!(s.job(blocked).unwrap().state, JobState::Cancelled);
+
+    // Running cancel frees resources.
+    assert!(s.cancel(filler));
+    assert_eq!(s.cluster().idle_cores(), 608);
+    s.check_invariants().unwrap();
+
+    // Double cancel fails gracefully.
+    assert!(!s.cancel(filler));
+    // Unknown job id fails gracefully.
+    assert!(!s.cancel(spotcloud::job::JobId(999_999)));
+}
+
+#[test]
+fn cancel_requeued_spot_job_before_it_restarts() {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_approach(PreemptApproach::AutoScheduler {
+            mode: PreemptMode::Requeue,
+        });
+    let mut s = Scheduler::new(topology::tx2500(), cfg);
+    let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 608));
+    assert!(s.run_until_dispatched(&[spot], SimTime::from_secs(60)));
+    let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+    assert!(s.run_until_dispatched(&[j], SimTime::from_secs(600)));
+    // The spot job is requeued (pending, held). Cancel it before restart.
+    let st = s.job(spot).unwrap().state;
+    assert!(matches!(st, JobState::Requeued | JobState::Pending), "{st:?}");
+    assert!(s.cancel(spot));
+    assert_eq!(s.job(spot).unwrap().state, JobState::Cancelled);
+    s.run_for(SimTime::from_secs(7200));
+    assert_eq!(
+        s.job(spot).unwrap().state,
+        JobState::Cancelled,
+        "cancelled job must never restart"
+    );
+    s.check_invariants().unwrap();
+}
+
+#[test]
+#[should_panic(expected = "GANG")]
+fn gang_mode_is_rejected_by_the_engine() {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_approach(PreemptApproach::AutoScheduler {
+            mode: PreemptMode::Gang,
+        });
+    let mut s = Scheduler::new(topology::tx2500(), cfg);
+    let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 608));
+    assert!(s.run_until_dispatched(&[spot], SimTime::from_secs(60)));
+    let _j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+    s.run_for(SimTime::from_secs(600));
+}
+
+#[test]
+fn zero_spot_cluster_cron_agent_is_a_noop() {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_user_limit(160)
+        .with_approach(PreemptApproach::CronAgent {
+            mode: PreemptMode::Requeue,
+            cfg: CronAgentConfig { reserve_nodes: 5 },
+        });
+    let mut s = Scheduler::new(topology::tx2500(), cfg);
+    s.run_for(SimTime::from_secs(600));
+    assert!(s.stats().cron_passes >= 9, "agent keeps ticking");
+    assert_eq!(s.stats().preemptions, 0);
+    assert_eq!(s.cluster().idle_cores(), 608);
+}
+
+#[test]
+fn burst_larger_than_cluster_dispatches_in_waves() {
+    let mut s = sched();
+    // 1216 one-core jobs on a 608-core cluster with short run times.
+    let ids = s.submit_burst(
+        (0..1216)
+            .map(|_| {
+                JobSpec::interactive(UserId(1), JobType::Individual, 1)
+                    .with_run_time(SimTime::from_secs(60))
+            })
+            .collect(),
+    );
+    assert!(
+        s.run_until_dispatched(&ids, SimTime::from_secs(4 * 3600)),
+        "all waves must eventually dispatch"
+    );
+    s.check_invariants().unwrap();
+}
+
+#[test]
+fn impossible_job_stays_pending_forever() {
+    let mut s = sched();
+    // 20 whole nodes on a 19-node cluster (within the user core limit of
+    // 4096): the scheduler must neither dispatch nor wedge.
+    let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 640));
+    s.run_for(SimTime::from_secs(7200));
+    assert_eq!(s.job(j).unwrap().state, JobState::Pending);
+    // Other work continues to flow around it (backfill semantics).
+    let ok = s.submit(JobSpec::interactive(UserId(2), JobType::Array, 32));
+    assert!(
+        s.run_until_dispatched(&[ok], SimTime::from_secs(7200)),
+        "a blocked head-of-line job must not starve backfillable work forever"
+    );
+}
+
+#[test]
+fn drained_node_is_never_scheduled() {
+    let mut s = sched();
+    // Drain node 0 via the cluster API, then fill the cluster.
+    s.cluster_mut_for_tests(|c| c.node_mut_for_tests(0).set_drained(true));
+    let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+    s.run_for(SimTime::from_secs(600));
+    // 19 nodes needed, 18 available: must stay pending.
+    assert_eq!(s.job(j).unwrap().state, JobState::Pending);
+    // An 18-node job fits.
+    let ok = s.submit(JobSpec::interactive(UserId(2), JobType::TripleMode, 576));
+    assert!(s.run_until_dispatched(&[ok], SimTime::from_secs(600)));
+    s.check_invariants().unwrap();
+}

@@ -1,0 +1,349 @@
+//! Cross-module integration tests: scheduler + preemption engines + runtime
+//! + workload generators composing as the paper's system does.
+
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::job::{JobSpec, JobState, JobType, UserId};
+use spotcloud::preempt::{manual, CronAgentConfig, PreemptApproach, PreemptMode};
+use spotcloud::sched::{LogKind, Scheduler, SchedulerConfig};
+use spotcloud::sim::{SchedCosts, SimTime};
+use spotcloud::workload::{interactive_burst, spot_fill};
+
+fn horizon() -> SimTime {
+    SimTime::from_secs(4 * 3600)
+}
+
+/// The paper's headline, end to end: on the same spot-saturated cluster, the
+/// cron-agent approach schedules an interactive job orders of magnitude
+/// faster than scheduler-automatic preemption, and close to baseline.
+#[test]
+fn headline_cron_beats_auto_by_orders_of_magnitude() {
+    // Baseline.
+    let mut b = Scheduler::new(
+        topology::txgreen_reservation(),
+        SchedulerConfig::baseline(SchedCosts::production(), PartitionLayout::Dual),
+    );
+    let jb = b.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 2048));
+    assert!(b.run_until_dispatched(&[jb], horizon()));
+    let baseline = b.log().measure(&[jb]).unwrap().total_secs;
+
+    // Auto preemption on a full cluster.
+    let mut a = Scheduler::new(
+        topology::txgreen_reservation(),
+        SchedulerConfig::baseline(SchedCosts::production(), PartitionLayout::Dual).with_approach(
+            PreemptApproach::AutoScheduler {
+                mode: PreemptMode::Requeue,
+            },
+        ),
+    );
+    let ids = a.submit_burst(spot_fill(UserId(9), 4096, 1));
+    assert!(a.run_until_dispatched(&ids, horizon()));
+    let ja = a.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 2048));
+    assert!(a.run_until_dispatched(&[ja], horizon()));
+    let auto = a.log().measure(&[ja]).unwrap().total_secs;
+
+    // Cron agent with a reserve covering the job.
+    let mut c = Scheduler::new(
+        topology::txgreen_reservation(),
+        SchedulerConfig::baseline(SchedCosts::production(), PartitionLayout::Dual)
+            .with_user_limit(2048)
+            .with_approach(PreemptApproach::CronAgent {
+                mode: PreemptMode::Requeue,
+                cfg: CronAgentConfig { reserve_nodes: 32 },
+            }),
+    );
+    let ids = c.submit_burst(spot_fill(UserId(9), 2048, 4));
+    assert!(c.run_until_dispatched(&ids, horizon()));
+    c.run_for(SimTime::from_secs(120));
+    let jc = c.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 2048));
+    assert!(c.run_until_dispatched(&[jc], horizon()));
+    let cron = c.log().measure(&[jc]).unwrap().total_secs;
+
+    // The paper's claim: "100 times faster performance in the scheduling of
+    // a job with preemption" vs scheduler-automatic preemption.
+    assert!(
+        auto / cron >= 100.0,
+        "cron ({cron:.2}s) must be >=100x faster than auto ({auto:.2}s)"
+    );
+    assert!(
+        cron <= baseline * 3.0,
+        "cron ({cron:.2}s) must be comparable to baseline ({baseline:.2}s)"
+    );
+}
+
+/// All three approaches leave the scheduler in a consistent state, and the
+/// spot job survives (requeued → running again) under REQUEUE.
+#[test]
+fn spot_job_lifecycle_through_all_approaches() {
+    for approach in [
+        PreemptApproach::AutoScheduler {
+            mode: PreemptMode::Requeue,
+        },
+        PreemptApproach::Manual {
+            mode: PreemptMode::Requeue,
+        },
+        PreemptApproach::CronAgent {
+            mode: PreemptMode::Requeue,
+            cfg: CronAgentConfig { reserve_nodes: 5 },
+        },
+    ] {
+        let is_cron = matches!(approach, PreemptApproach::CronAgent { .. });
+        let is_manual = matches!(approach, PreemptApproach::Manual { .. });
+        let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+            .with_user_limit(160)
+            .with_approach(approach.clone());
+        let mut s = Scheduler::new(topology::tx2500(), cfg);
+        let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, if is_cron { 448 } else { 608 }));
+        assert!(s.run_until_dispatched(&[spot], horizon()), "{approach:?}");
+
+        let burst = interactive_burst(UserId(1), JobType::TripleMode, 160);
+        let jobs = if is_manual {
+            manual::manual_submit(&mut s, burst, PreemptMode::Requeue).jobs
+        } else {
+            s.submit_burst(burst)
+        };
+        assert!(s.run_until_dispatched(&jobs, horizon()), "{approach:?}");
+        s.check_invariants().unwrap();
+
+        // After the interactive job completes, the spot job must end up
+        // running again (requeue semantics) — possibly after the hold.
+        s.run_for(SimTime::from_secs(3 * 3600 + 1800));
+        assert_eq!(
+            s.job(spot).unwrap().state,
+            JobState::Running,
+            "spot must recover under {}",
+            approach.label()
+        );
+        s.check_invariants().unwrap();
+    }
+}
+
+/// CANCEL mode kills the spot job for good — the usability reason the paper
+/// picks REQUEUE.
+#[test]
+fn cancel_mode_loses_spot_work() {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_approach(PreemptApproach::AutoScheduler {
+            mode: PreemptMode::Cancel,
+        });
+    let mut s = Scheduler::new(topology::tx2500(), cfg);
+    let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 608));
+    assert!(s.run_until_dispatched(&[spot], horizon()));
+    let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+    assert!(s.run_until_dispatched(&[j], horizon()));
+    s.run_for(SimTime::from_secs(24 * 3600));
+    assert_eq!(s.job(spot).unwrap().state, JobState::Cancelled);
+    assert_eq!(s.job(spot).unwrap().requeue_count, 0);
+}
+
+/// SUSPEND does not free memory: the interactive job stays blocked — why the
+/// paper rejects SUSPEND.
+#[test]
+fn suspend_mode_blocks_interactive() {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_approach(PreemptApproach::AutoScheduler {
+            mode: PreemptMode::Suspend,
+        });
+    let mut s = Scheduler::new(topology::tx2500(), cfg);
+    let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 608));
+    assert!(s.run_until_dispatched(&[spot], horizon()));
+    let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+    s.run_for(SimTime::from_secs(1800));
+    assert_eq!(s.job(spot).unwrap().state, JobState::Suspended);
+    assert_eq!(
+        s.job(j).unwrap().state,
+        JobState::Pending,
+        "whole-memory interactive job cannot use suspended nodes"
+    );
+    s.check_invariants().unwrap();
+}
+
+/// Suspended spot jobs resume automatically once interactive demand clears
+/// (the allocation was never released; only the state flips back).
+#[test]
+fn suspended_spot_resumes_when_demand_clears() {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_approach(PreemptApproach::AutoScheduler {
+            mode: PreemptMode::Suspend,
+        });
+    let mut s = Scheduler::new(topology::tx2500(), cfg);
+    let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 608));
+    assert!(s.run_until_dispatched(&[spot], horizon()));
+    let j = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+    s.run_for(SimTime::from_secs(600));
+    assert_eq!(s.job(spot).unwrap().state, JobState::Suspended);
+    assert_eq!(s.job(j).unwrap().state, JobState::Pending);
+    // Cancel the interactive demand: the suspended job must resume on a
+    // later pass, and must NOT be completed early by its stale JobEnd.
+    assert!(s.cancel(j));
+    s.run_for(SimTime::from_secs(120));
+    assert_eq!(
+        s.job(spot).unwrap().state,
+        JobState::Running,
+        "suspended spot job must resume once demand clears"
+    );
+    s.check_invariants().unwrap();
+}
+
+/// Fairshare: with equal-priority pending jobs, the user already holding
+/// cores sorts after the idle user.
+#[test]
+fn fairshare_orders_heavy_user_later() {
+    let mut s = Scheduler::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+            .with_user_limit(1_000_000),
+    );
+    // User 1 grabs most of the cluster.
+    let hog = s.submit(
+        JobSpec::interactive(UserId(1), JobType::Array, 576).with_run_time(SimTime::from_secs(600)),
+    );
+    assert!(s.run_until_dispatched(&[hog], horizon()));
+    // Fill the rest so the next two jobs queue up.
+    let filler = s.submit(
+        JobSpec::interactive(UserId(3), JobType::Array, 32).with_run_time(SimTime::from_secs(120)),
+    );
+    assert!(s.run_until_dispatched(&[filler], horizon()));
+    // Two identical 32-core jobs: heavy user 1 first, light user 2 second.
+    let heavy = s.submit(JobSpec::interactive(UserId(1), JobType::Array, 32));
+    let light = s.submit(JobSpec::interactive(UserId(2), JobType::Array, 32));
+    assert!(s.run_until_dispatched(&[heavy, light], horizon()));
+    let t_heavy = s.log().last(heavy, LogKind::DispatchDone).unwrap();
+    let t_light = s.log().last(light, LogKind::DispatchDone).unwrap();
+    assert!(
+        t_light < t_heavy,
+        "light user ({t_light:?}) must dispatch before the hog ({t_heavy:?}) despite submitting later"
+    );
+}
+
+/// The XLA scorer and the native scorer produce identical scheduling
+/// decisions end to end (same dispatch order on a contended queue).
+#[test]
+fn xla_scorer_matches_native_end_to_end() {
+    let Some(accel) = spotcloud::runtime::SchedAccel::load_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run = |cfg: SchedulerConfig| {
+        let mut s = Scheduler::new(topology::tx2500(), cfg);
+        // Occupy the cluster, then queue a contended mix.
+        let big = s.submit(
+            JobSpec::interactive(UserId(7), JobType::Array, 608)
+                .with_run_time(SimTime::from_secs(600)),
+        );
+        assert!(s.run_until_dispatched(&[big], horizon()));
+        let mut ids = Vec::new();
+        for i in 0..20u32 {
+            let user = UserId(1 + i % 4);
+            let spec = if i % 3 == 0 {
+                JobSpec::spot(user, JobType::Array, 32 + i)
+            } else {
+                JobSpec::interactive(user, JobType::Array, 16 + i)
+            };
+            ids.push(s.submit(spec));
+        }
+        s.run_for(SimTime::from_secs(3600));
+        // Record dispatch order.
+        let mut order: Vec<(SimTime, u64)> = ids
+            .iter()
+            .filter_map(|&id| s.log().first(id, LogKind::DispatchDone).map(|t| (t, id.0)))
+            .collect();
+        order.sort();
+        order
+    };
+    let base = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_user_limit(1_000_000);
+    let native_order = run(base.clone());
+    let xla_order = run(base.with_scorer(std::sync::Arc::new(accel)));
+    assert_eq!(native_order, xla_order, "scorers must agree on dispatch order");
+}
+
+/// EASY backfill: a short job may leapfrog the blocked head; a long job
+/// that would delay the head's shadow-reserved start may not.
+#[test]
+fn backfill_respects_shadow_reservation() {
+    let mut s = Scheduler::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+            .with_user_limit(1_000_000),
+    );
+    // Occupy 18 of 19 nodes until t≈1000s.
+    let long = s.submit(
+        JobSpec::interactive(UserId(1), JobType::TripleMode, 576)
+            .with_run_time(SimTime::from_secs(1000)),
+    );
+    assert!(s.run_until_dispatched(&[long], horizon()));
+    // Head job needs all 19 nodes: blocked, shadow ≈ t=1000s.
+    let head = s.submit(JobSpec::interactive(UserId(2), JobType::TripleMode, 608));
+    s.run_for(SimTime::from_secs(40));
+    assert_eq!(s.job(head).unwrap().state, JobState::Pending);
+    // Short filler (60s) fits before the shadow: backfill may run it.
+    let short = s.submit(
+        JobSpec::interactive(UserId(3), JobType::TripleMode, 32)
+            .with_run_time(SimTime::from_secs(60)),
+    );
+    // Long filler (5000s) would push the head past its reservation: must wait.
+    let hog = s.submit(
+        JobSpec::interactive(UserId(4), JobType::TripleMode, 32)
+            .with_run_time(SimTime::from_secs(5000)),
+    );
+    s.run_for(SimTime::from_secs(200));
+    assert!(
+        matches!(
+            s.job(short).unwrap().state,
+            JobState::Running | JobState::Completed
+        ),
+        "short filler must backfill into the idle node (got {:?})",
+        s.job(short).unwrap().state
+    );
+    assert_eq!(
+        s.job(hog).unwrap().state,
+        JobState::Pending,
+        "long filler would delay the reserved head start"
+    );
+    // The head eventually runs when the long job ends.
+    assert!(s.run_until_dispatched(&[head], horizon()));
+    s.check_invariants().unwrap();
+}
+
+/// Workload trace roundtrip drives the scheduler identically.
+#[test]
+fn trace_replay_is_deterministic() {
+    use spotcloud::workload::{Trace, TraceRecord};
+    let trace = Trace {
+        records: vec![
+            TraceRecord {
+                at_secs: 1.0,
+                user: 1,
+                job_type: JobType::TripleMode,
+                tasks: 320,
+                qos: spotcloud::job::QosClass::Normal,
+                run_secs: 300.0,
+            },
+            TraceRecord {
+                at_secs: 30.0,
+                user: 2,
+                job_type: JobType::Array,
+                tasks: 128,
+                qos: spotcloud::job::QosClass::Spot,
+                run_secs: 86_400.0,
+            },
+        ],
+    };
+    let replay = |t: &Trace| {
+        let mut s = Scheduler::new(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        );
+        let mut ids = Vec::new();
+        for r in &t.records {
+            s.run_until(SimTime::from_secs_f64(r.at_secs));
+            ids.push(s.submit(r.to_spec()));
+        }
+        s.run_for(SimTime::from_secs(3600));
+        ids.iter()
+            .map(|&id| s.log().last(id, LogKind::DispatchDone))
+            .collect::<Vec<_>>()
+    };
+    let roundtripped = Trace::from_csv(&trace.to_csv()).unwrap();
+    assert_eq!(replay(&trace), replay(&roundtripped));
+}

@@ -1,0 +1,207 @@
+//! Property-based invariant tests over the whole scheduler stack, using the
+//! in-crate `testkit::prop` harness (proptest is unavailable offline).
+
+use spotcloud::cluster::{AllocRequest, Cluster, PartitionLayout};
+use spotcloud::job::{JobId, JobSpec, JobState, JobType, UserId};
+use spotcloud::preempt::lifo::{self, Demand, Order, Victim};
+use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
+use spotcloud::sched::{Scheduler, SchedulerConfig};
+use spotcloud::sim::{SchedCosts, SimTime};
+use spotcloud::testkit::prop::Prop;
+
+#[test]
+fn prop_cluster_never_oversubscribes() {
+    Prop::new("cluster alloc/release keeps invariants").cases(100).run(|g| {
+        let nodes = g.u64(1, 32) as u32;
+        let cores = g.u64(1, 64) as u32;
+        let mut cluster = Cluster::homogeneous(nodes, cores);
+        let mut live: Vec<JobId> = Vec::new();
+        let mut next = 1u64;
+        for _ in 0..g.usize(1, 60) {
+            if g.bool(0.6) || live.is_empty() {
+                let req = if g.bool(0.5) {
+                    AllocRequest::Cores(g.u64(1, (nodes * cores) as u64 * 2) as u32)
+                } else {
+                    AllocRequest::WholeNodes(g.u64(1, nodes as u64 * 2) as u32)
+                };
+                let id = JobId(next);
+                next += 1;
+                if cluster.allocate(id, req).is_some() {
+                    live.push(id);
+                }
+            } else {
+                let idx = g.usize(0, live.len() - 1);
+                let id = live.swap_remove(idx);
+                assert!(cluster.release(id).is_some());
+            }
+            cluster.check_invariants().expect("cluster invariants");
+            assert!(cluster.idle_cores() <= cluster.total_cores());
+        }
+        // Release everything: back to fully idle.
+        for id in live {
+            cluster.release(id).unwrap();
+        }
+        assert_eq!(cluster.idle_cores(), cluster.total_cores());
+    });
+}
+
+#[test]
+fn prop_lifo_selection_minimal_and_covering() {
+    Prop::new("victim selection covers demand minimally").cases(150).run(|g| {
+        let victims: Vec<Victim> = (0..g.usize(1, 40))
+            .map(|i| Victim {
+                job: JobId(i as u64 + 1),
+                queue_time: SimTime(g.u64(0, 1_000_000_000)),
+                cores: g.u64(1, 512) as u32,
+                whole_nodes: g.u64(0, 8) as u32,
+            })
+            .collect();
+        let total: u64 = victims.iter().map(|v| v.cores as u64).sum();
+        let demand = g.u64(1, total);
+        let order = if g.bool(0.5) {
+            Order::YoungestFirst
+        } else {
+            Order::OldestFirst
+        };
+        let selected = lifo::select_victims(&victims, Demand::Cores(demand as u32), order)
+            .expect("demand <= total must be satisfiable");
+        let freed: u64 = selected
+            .iter()
+            .map(|id| victims.iter().find(|v| v.job == *id).unwrap().cores as u64)
+            .sum();
+        assert!(freed >= demand, "freed {freed} < demand {demand}");
+        // Minimality: dropping the last victim breaks coverage.
+        let without_last: u64 = selected[..selected.len() - 1]
+            .iter()
+            .map(|id| victims.iter().find(|v| v.job == *id).unwrap().cores as u64)
+            .sum();
+        assert!(without_last < demand, "selection not minimal");
+        // Order property: selections follow the requested order strictly.
+        let times: Vec<SimTime> = selected
+            .iter()
+            .map(|id| victims.iter().find(|v| v.job == *id).unwrap().queue_time)
+            .collect();
+        match order {
+            Order::YoungestFirst => assert!(times.windows(2).all(|w| w[0] >= w[1])),
+            Order::OldestFirst => assert!(times.windows(2).all(|w| w[0] <= w[1])),
+        }
+    });
+}
+
+#[test]
+fn prop_fallback_select_matches_lifo_semantics() {
+    Prop::new("rust fallback mask == minimal prefix").cases(150).run(|g| {
+        let cores: Vec<f32> = (0..g.usize(1, 100))
+            .map(|_| if g.bool(0.1) { 0.0 } else { g.u64(1, 512) as f32 })
+            .collect();
+        let total: f32 = cores.iter().sum();
+        let demand = g.f64(0.0, (total as f64) * 1.2) as f32;
+        let mask = spotcloud::runtime::fallback::select_victims(&cores, demand);
+        // Mask covers demand if satisfiable, is a prefix over non-zero
+        // entries, and is minimal.
+        let freed: f32 = cores
+            .iter()
+            .zip(&mask)
+            .filter(|(_, &m)| m)
+            .map(|(&c, _)| c)
+            .sum();
+        if demand <= total && demand > 0.0 {
+            assert!(freed >= demand, "freed {freed} < demand {demand}");
+        }
+        // Prefix over nonzero entries: once a nonzero entry is unselected,
+        // no later entry is selected.
+        let mut blocked = false;
+        for (&c, &m) in cores.iter().zip(&mask) {
+            if c > 0.0 {
+                if blocked {
+                    assert!(!m, "non-prefix selection");
+                }
+                if !m {
+                    blocked = true;
+                }
+            } else {
+                assert!(!m, "padding selected");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_invariants_under_random_mixed_load() {
+    Prop::new("scheduler invariants under random workloads").cases(25).run(|g| {
+        let layout = if g.bool(0.5) {
+            PartitionLayout::Single
+        } else {
+            PartitionLayout::Dual
+        };
+        let approach = match g.usize(0, 2) {
+            0 => PreemptApproach::None,
+            1 => PreemptApproach::AutoScheduler {
+                mode: if g.bool(0.5) {
+                    PreemptMode::Requeue
+                } else {
+                    PreemptMode::Cancel
+                },
+            },
+            _ => PreemptApproach::CronAgent {
+                mode: PreemptMode::Requeue,
+                cfg: CronAgentConfig {
+                    reserve_nodes: g.u64(1, 8) as u32,
+                },
+            },
+        };
+        let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), layout)
+            .with_user_limit(g.u64(64, 608) as u32)
+            .with_phase_seed(g.u64(0, u64::MAX / 2))
+            .with_approach(approach);
+        let mut sched = Scheduler::new(spotcloud::cluster::topology::tx2500(), cfg);
+
+        for _ in 0..g.usize(1, 25) {
+            let user = UserId(g.u64(1, 6) as u32);
+            let ty = *g.pick(&[JobType::Individual, JobType::Array, JobType::TripleMode]);
+            let tasks = g.u64(1, 608) as u32;
+            let run = SimTime::from_secs(g.u64(10, 5_000));
+            let spec = if g.bool(0.4) {
+                JobSpec::spot(user, ty, tasks).with_run_time(run)
+            } else {
+                JobSpec::interactive(user, ty, tasks).with_run_time(run)
+            };
+            sched.submit(spec);
+            sched.run_for(SimTime::from_secs(g.u64(1, 300)));
+            sched.check_invariants().expect("scheduler invariants");
+        }
+        // Drain a long time: everything terminal or pending, never stuck in
+        // transient states.
+        sched.run_for(SimTime::from_secs(48 * 3600));
+        sched.check_invariants().expect("scheduler invariants after drain");
+        assert!(
+            sched.jobs_in_state(JobState::Requeued).is_empty(),
+            "requeued jobs must re-enter the queue"
+        );
+    });
+}
+
+#[test]
+fn prop_event_log_times_monotone_per_kind() {
+    Prop::new("dispatch happens after recognition").cases(20).run(|g| {
+        let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual);
+        let mut sched = Scheduler::new(spotcloud::cluster::topology::tx2500(), cfg);
+        let ids: Vec<JobId> = (0..g.usize(1, 30))
+            .map(|_| {
+                sched.submit(JobSpec::interactive(
+                    UserId(1),
+                    JobType::Array,
+                    g.u64(1, 64) as u32,
+                ))
+            })
+            .collect();
+        sched.run_for(SimTime::from_secs(3600));
+        for id in ids {
+            let rec = sched.log().first(id, spotcloud::sched::LogKind::Recognized);
+            let dis = sched.log().last(id, spotcloud::sched::LogKind::DispatchDone);
+            if let (Some(r), Some(d)) = (rec, dis) {
+                assert!(d >= r, "{id}: dispatched before recognized");
+            }
+        }
+    });
+}
