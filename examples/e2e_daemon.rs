@@ -6,17 +6,21 @@
 //!     scheduler's priority path (falls back to native scoring when
 //!     `make artifacts` hasn't run),
 //!   * L3: the coordinator daemon — threaded TCP service over the
-//!     `slurmlite` scheduler with the cron agent managing spot jobs.
+//!     `slurmlite` scheduler with the cron agent managing spot jobs,
+//!     spoken through the typed v2 protocol client.
 //!
-//! The driver starts the daemon on a loopback port, loads a spot backlog,
-//! replays a Poisson interactive workload through real TCP clients, and
-//! reports scheduling latency (virtual), request latency (wall), throughput,
-//! and utilization. Results are recorded in EXPERIMENTS.md §End-to-end.
+//! The driver starts the daemon on a loopback port, loads a spot backlog
+//! with one batched SUBMIT, replays a Poisson interactive workload through a
+//! real TCP client, measures one burst's launch latency remotely with WAIT,
+//! and reports scheduling latency (virtual), request latency (wall),
+//! throughput, and utilization. Results are recorded in EXPERIMENTS.md
+//! §End-to-end.
 //!
 //! Run with: `cargo run --release --example e2e_daemon`
 
 use spotcloud::cluster::{topology, PartitionLayout};
-use spotcloud::coordinator::{client::Client, Daemon, DaemonConfig, Server};
+use spotcloud::coordinator::{Client, Daemon, DaemonConfig, Server, SubmitSpec};
+use spotcloud::job::{JobType, QosClass};
 use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
 use spotcloud::sched::SchedulerConfig;
 use spotcloud::sim::SchedCosts;
@@ -68,37 +72,51 @@ fn main() {
         let _ = &server_daemon; // keep alive
         server.serve();
     });
-    println!("daemon listening on {addr} (speedup {SPEEDUP}x)\n");
+    println!("daemon listening on {addr} (speedup {SPEEDUP}x, protocol v2)\n");
 
-    // --- spot backlog --------------------------------------------------------
-    let mut c = Client::connect(&addr).expect("connect");
-    for _ in 0..10 {
-        let resp = c
-            .request("SUBMIT spot triple 448 900 86400") // 7 nodes each
-            .expect("submit spot");
-        assert!(resp.starts_with("OK"), "{resp}");
-    }
+    // --- spot backlog: one batched RPC --------------------------------------
+    let mut c = Client::connect_v2(&addr).expect("connect");
+    let spot_ack = c
+        .submit(
+            &SubmitSpec::new(QosClass::Spot, JobType::TripleMode, 448, 900) // 7 nodes each
+                .with_run_secs(86_400.0)
+                .with_count(10),
+        )
+        .expect("submit spot backlog");
     std::thread::sleep(Duration::from_millis(500)); // let spot land
-    println!("spot backlog loaded: {}", c.request("UTIL").unwrap());
+    println!(
+        "spot backlog loaded in one RPC ({spot_ack}): {}",
+        c.util().expect("util")
+    );
 
     // --- interactive workload over TCP --------------------------------------
     let mut rng = Xoshiro256::new(2026);
     let t0 = Instant::now();
     let mut submitted = 0usize;
+    let mut last_burst = Vec::new();
     for i in 0..INTERACTIVE_SUBMISSIONS {
         // Poisson arrivals: mean 30 virtual seconds apart = 50ms wall at 600x.
         let wall_gap = rng.exponential(1.0 / 30.0) / SPEEDUP;
         std::thread::sleep(Duration::from_secs_f64(wall_gap.min(0.5)));
         let tasks = *rng.choose(&[64u32, 128, 256, 512]);
-        let ty = *rng.choose(&["triple", "triple", "array"]); // SuperCloud mix
-        let user = 1 + (i % 8);
-        let resp = c
-            .request(&format!("SUBMIT normal {ty} {tasks} {user} 120"))
+        let ty = *rng.choose(&[JobType::TripleMode, JobType::TripleMode, JobType::Array]); // SuperCloud mix
+        let user = 1 + (i as u32 % 8);
+        let ack = c
+            .submit(
+                &SubmitSpec::new(QosClass::Normal, ty, tasks, user).with_run_secs(120.0),
+            )
             .expect("submit");
-        assert!(resp.starts_with("OK"), "{resp}");
+        last_burst = ack.ids().collect();
         submitted += 1;
     }
     let submit_wall = t0.elapsed();
+
+    // --- the paper's metric, measured remotely -------------------------------
+    let final_wait = c.wait(&last_burst, 30.0).expect("wait");
+    println!(
+        "remote WAIT on the last submission: {final_wait} \
+         (virtual latency via the daemon's event log)"
+    );
 
     // --- drain ---------------------------------------------------------------
     let deadline = Instant::now() + Duration::from_secs(60);
@@ -113,8 +131,8 @@ fn main() {
     // --- report ----------------------------------------------------------------
     let sched_hist = daemon.metrics.sched_latency();
     let req_hist = daemon.metrics.request_latency();
-    let stats = c.request("STATS").unwrap();
-    let util = c.request("UTIL").unwrap();
+    let stats = c.stats().expect("stats");
+    let util = c.util().expect("util");
     println!("\n===== END-TO-END REPORT =====");
     println!("interactive submissions     : {submitted} (over {:.1}s wall)", submit_wall.as_secs_f64());
     println!(
@@ -125,7 +143,20 @@ fn main() {
     println!("virtual sched latency       : {}", sched_hist.summary_ns());
     println!("wall request latency        : {}", req_hist.summary_ns());
     println!("final cluster state         : {util}");
-    println!("scheduler stats             : {stats}");
+    println!(
+        "scheduler stats             : dispatches={} preemptions={} requeues={} cron_passes={} scorer={}",
+        stats.dispatches, stats.preemptions, stats.requeues, stats.cron_passes, stats.scorer
+    );
+    println!(
+        "requests by command         : {}",
+        stats
+            .commands
+            .iter()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(cmd, n)| format!("{cmd}={n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
 
     let p50_virtual_secs = sched_hist.p50() as f64 / 1e9;
     println!(
@@ -134,7 +165,7 @@ fn main() {
     );
 
     // --- shutdown -------------------------------------------------------------
-    let _ = c.request("SHUTDOWN");
+    let _ = c.shutdown();
     server_thread.join().ok();
     pacer.join().ok();
 
@@ -143,5 +174,6 @@ fn main() {
         p50_virtual_secs < 60.0,
         "p50 {p50_virtual_secs}s should be far below the cron interval"
     );
+    assert!(!final_wait.timed_out, "remote WAIT must observe the dispatch");
     println!("\ne2e driver completed OK");
 }

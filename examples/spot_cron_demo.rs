@@ -70,4 +70,57 @@ fn main() {
         "idle nodes restored: {} (reserve = 5) — oldest spot jobs kept running",
         sched.cluster().idle_node_count()
     );
+
+    // The same close-up, measured remotely: daemon + typed v2 client, with
+    // WAIT reporting the interactive job's virtual launch latency over TCP.
+    use spotcloud::coordinator::{Client, Daemon, DaemonConfig, Server, SqueueFilter, SubmitSpec};
+    use spotcloud::job::QosClass;
+    use std::sync::Arc;
+
+    println!("\n--- remote close-up: the same measurement over the typed v2 protocol ---");
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_user_limit(5 * 32)
+        .with_approach(PreemptApproach::CronAgent {
+            mode: PreemptMode::Requeue,
+            cfg: CronAgentConfig { reserve_nodes: 5 },
+        });
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        cfg,
+        DaemonConfig {
+            speedup: 5_000.0,
+            pacer_tick_ms: 1,
+        },
+    );
+    let pacer = daemon.spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    let mut c = Client::connect_v2(&addr).expect("connect");
+    let spots = c
+        .submit(
+            &SubmitSpec::new(QosClass::Spot, JobType::TripleMode, 96, 9)
+                .with_run_secs(86_400.0)
+                .with_count(4),
+        )
+        .expect("spot backlog");
+    c.wait(&spots.ids().collect::<Vec<_>>(), 20.0).expect("spot fill");
+    let inter = c
+        .submit(&SubmitSpec::new(QosClass::Normal, JobType::TripleMode, 160, 1).with_run_secs(120.0))
+        .expect("interactive");
+    let w = c
+        .wait(&inter.ids().collect::<Vec<_>>(), 20.0)
+        .expect("wait");
+    println!("interactive launch latency over TCP: {w}");
+    let spot_rows = c
+        .squeue(&SqueueFilter {
+            qos: Some(QosClass::Spot),
+            ..Default::default()
+        })
+        .expect("squeue");
+    println!("spot jobs still active (filtered SQUEUE): {}", spot_rows.len());
+    let _ = c.shutdown();
+    server_thread.join().ok();
+    pacer.join().ok();
 }

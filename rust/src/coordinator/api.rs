@@ -1,40 +1,253 @@
-//! The daemon's line-based text protocol.
+//! The typed protocol core: versioned requests, responses, payloads, and
+//! error codes.
 //!
-//! Requests are single lines; responses are one or more lines terminated by
-//! a blank line. Grammar:
+//! This module defines *what* can be said between a client and the daemon;
+//! [`super::codec`] owns *how* it is said on the wire (the v1 line grammar
+//! kept byte-compatible with the original daemon, and the v2 tagged
+//! `key=value` grammar negotiated via `HELLO`). The daemon core works purely
+//! in these types — [`super::daemon::Daemon::handle`] is
+//! `fn(&self, Request) -> Response` — and the typed [`super::client::Client`]
+//! returns the payload structs below instead of raw strings.
 //!
-//! ```text
-//! SUBMIT <normal|spot> <individual|array|triple> <tasks> <user> [run_secs]
-//! SQUEUE
-//! SCANCEL <job_id>
-//! STATS
-//! UTIL
-//! PING
-//! SHUTDOWN
-//! ```
+//! See `PROTOCOL.md` at the repository root for the full wire grammar.
 
-use crate::job::{JobType, QosClass};
+use crate::job::{JobState, JobType, QosClass};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Wire protocol versions a connection can speak.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProtocolVersion {
+    /// The original line grammar (`SUBMIT normal triple 4096 1 600`,
+    /// free-form `OK ...` responses). Every connection starts here.
+    #[default]
+    V1,
+    /// Tagged `key=value` records with typed, self-describing responses.
+    V2,
+}
+
+impl ProtocolVersion {
+    /// Wire token ("v1" / "v2").
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ProtocolVersion::V1 => "v1",
+            ProtocolVersion::V2 => "v2",
+        }
+    }
+
+    /// Parse a wire token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "v1" | "1" => Some(ProtocolVersion::V1),
+            "v2" | "2" => Some(ProtocolVersion::V2),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ProtocolVersion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Machine-readable error classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Empty request line.
+    Empty,
+    /// Unrecognized command verb.
+    UnknownCommand,
+    /// Wrong number / shape of arguments.
+    BadArity,
+    /// An argument failed validation.
+    BadArg,
+    /// The referenced entity does not exist (e.g. cancel of an unknown job).
+    NotFound,
+    /// The operation is not supported in this protocol version or build.
+    Unsupported,
+    /// The daemon failed internally.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Wire token.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Empty => "empty",
+            ErrorCode::UnknownCommand => "unknown_command",
+            ErrorCode::BadArity => "bad_arity",
+            ErrorCode::BadArg => "bad_arg",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::Unsupported => "unsupported",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Parse a wire token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "empty" => Some(ErrorCode::Empty),
+            "unknown_command" => Some(ErrorCode::UnknownCommand),
+            "bad_arity" => Some(ErrorCode::BadArity),
+            "bad_arg" => Some(ErrorCode::BadArg),
+            "not_found" => Some(ErrorCode::NotFound),
+            "unsupported" => Some(ErrorCode::Unsupported),
+            "internal" => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A protocol-level error: a typed code plus a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ApiError {
+    /// Machine-readable class.
+    pub code: ErrorCode,
+    /// Single-line human-readable detail.
+    pub message: String,
+}
+
+impl ApiError {
+    /// Build from a code and message.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        ApiError {
+            code,
+            message: message.into(),
+        }
+    }
+
+    /// Empty request line.
+    pub fn empty() -> Self {
+        Self::new(ErrorCode::Empty, "empty request")
+    }
+
+    /// Unknown command verb.
+    pub fn unknown_command(cmd: &str) -> Self {
+        Self::new(ErrorCode::UnknownCommand, format!("unknown command {cmd:?}"))
+    }
+
+    /// Wrong argument shape for a command.
+    pub fn bad_arity(cmd: &str, expected: &str) -> Self {
+        Self::new(ErrorCode::BadArity, format!("{cmd}: expected {expected}"))
+    }
+
+    /// Invalid argument value.
+    pub fn bad_arg(what: &str, value: &str) -> Self {
+        Self::new(ErrorCode::BadArg, format!("invalid {what}: {value:?}"))
+    }
+
+    /// Missing entity.
+    pub fn not_found(what: impl Into<String>) -> Self {
+        Self::new(ErrorCode::NotFound, what)
+    }
+
+    /// Unsupported operation.
+    pub fn unsupported(what: impl Into<String>) -> Self {
+        Self::new(ErrorCode::Unsupported, what)
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// A submission: one spec, optionally repeated `count` times so a whole
+/// burst (e.g. 10,000 individual jobs) lands in a single RPC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitSpec {
+    /// QoS class.
+    pub qos: QosClass,
+    /// Launch type.
+    pub job_type: JobType,
+    /// Tasks per submission.
+    pub tasks: u32,
+    /// Submitting user id.
+    pub user: u32,
+    /// Per-job run time in virtual seconds.
+    pub run_secs: f64,
+    /// How many copies of the spec to submit atomically (batch submit).
+    pub count: u32,
+}
+
+impl SubmitSpec {
+    /// A single submission with the default one-hour run time.
+    pub fn new(qos: QosClass, job_type: JobType, tasks: u32, user: u32) -> Self {
+        SubmitSpec {
+            qos,
+            job_type,
+            tasks,
+            user,
+            run_secs: 3600.0,
+            count: 1,
+        }
+    }
+
+    /// Builder: per-job run time (virtual seconds).
+    pub fn with_run_secs(mut self, run_secs: f64) -> Self {
+        self.run_secs = run_secs;
+        self
+    }
+
+    /// Builder: batch count.
+    pub fn with_count(mut self, count: u32) -> Self {
+        self.count = count;
+        self
+    }
+}
+
+/// Server-side `SQUEUE` filters. All fields are conjunctive; `None` matches
+/// everything.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SqueueFilter {
+    /// Only this user's jobs.
+    pub user: Option<u32>,
+    /// Only this QoS class.
+    pub qos: Option<QosClass>,
+    /// Only this state (default: pending + running + requeued).
+    pub state: Option<JobState>,
+    /// Truncate the listing to this many rows.
+    pub limit: Option<usize>,
+}
+
+impl SqueueFilter {
+    /// True when no filter is set (the v1 default listing).
+    pub fn is_empty(&self) -> bool {
+        *self == SqueueFilter::default()
+    }
+}
 
 /// A parsed request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// Submit a job burst.
-    Submit {
-        /// QoS class.
-        qos: QosClass,
-        /// Launch type.
-        job_type: JobType,
-        /// Total tasks.
-        tasks: u32,
-        /// User id.
-        user: u32,
-        /// Run time in (virtual) seconds.
-        run_secs: f64,
-    },
-    /// List pending + running jobs.
-    Squeue,
+    /// Negotiate the protocol version for this connection.
+    Hello(ProtocolVersion),
+    /// Submit a burst of jobs (batch-first: `count` copies of the spec).
+    Submit(SubmitSpec),
+    /// List jobs, optionally filtered.
+    Squeue(SqueueFilter),
+    /// Detail query for one job.
+    Sjob(u64),
     /// Cancel a job.
     Scancel(u64),
+    /// Block until the jobs' `DispatchDone` log records land (or timeout,
+    /// in wall seconds) and report the virtual scheduling latency.
+    Wait {
+        /// Job ids to wait on.
+        jobs: Vec<u64>,
+        /// Wall-clock timeout in seconds.
+        timeout_secs: f64,
+    },
     /// Daemon + scheduler counters.
     Stats,
     /// Cluster utilization snapshot.
@@ -45,128 +258,290 @@ pub enum Request {
     Shutdown,
 }
 
-/// Protocol-level errors.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-pub enum ApiError {
-    #[error("empty request")]
-    Empty,
-    #[error("unknown command {0:?}")]
-    UnknownCommand(String),
-    #[error("{cmd}: expected {expected}")]
-    BadArity {
-        /// Command name.
-        cmd: &'static str,
-        /// Human-readable expectation.
-        expected: &'static str,
-    },
-    #[error("invalid {what}: {value:?}")]
-    BadValue {
-        /// What failed to parse.
-        what: &'static str,
-        /// Offending token.
-        value: String,
-    },
-}
+/// Every command verb, in wire order (per-command metrics index off this).
+pub const COMMANDS: [&str; 10] = [
+    "HELLO", "SUBMIT", "SQUEUE", "SJOB", "SCANCEL", "WAIT", "STATS", "UTIL", "PING", "SHUTDOWN",
+];
 
-/// Parse one request line.
-pub fn parse_request(line: &str) -> Result<Request, ApiError> {
-    let mut it = line.split_whitespace();
-    let cmd = it.next().ok_or(ApiError::Empty)?;
-    let rest: Vec<&str> = it.collect();
-    match cmd.to_ascii_uppercase().as_str() {
-        "SUBMIT" => {
-            if rest.len() < 4 || rest.len() > 5 {
-                return Err(ApiError::BadArity {
-                    cmd: "SUBMIT",
-                    expected: "<qos> <type> <tasks> <user> [run_secs]",
-                });
-            }
-            let qos = match rest[0].to_ascii_lowercase().as_str() {
-                "normal" => QosClass::Normal,
-                "spot" => QosClass::Spot,
-                other => {
-                    return Err(ApiError::BadValue {
-                        what: "qos",
-                        value: other.to_string(),
-                    })
-                }
-            };
-            let job_type = match rest[1].to_ascii_lowercase().as_str() {
-                "individual" => JobType::Individual,
-                "array" => JobType::Array,
-                "triple" => JobType::TripleMode,
-                other => {
-                    return Err(ApiError::BadValue {
-                        what: "job type",
-                        value: other.to_string(),
-                    })
-                }
-            };
-            let tasks: u32 = rest[2].parse().map_err(|_| ApiError::BadValue {
-                what: "tasks",
-                value: rest[2].to_string(),
-            })?;
-            if tasks == 0 {
-                return Err(ApiError::BadValue {
-                    what: "tasks",
-                    value: "0".into(),
-                });
-            }
-            let user: u32 = rest[3].parse().map_err(|_| ApiError::BadValue {
-                what: "user",
-                value: rest[3].to_string(),
-            })?;
-            let run_secs: f64 = match rest.get(4) {
-                Some(s) => s.parse().map_err(|_| ApiError::BadValue {
-                    what: "run_secs",
-                    value: s.to_string(),
-                })?,
-                None => 3600.0,
-            };
-            Ok(Request::Submit {
-                qos,
-                job_type,
-                tasks,
-                user,
-                run_secs,
-            })
+impl Request {
+    /// The command verb (stable, uppercase; indexes [`COMMANDS`]).
+    pub fn command_name(&self) -> &'static str {
+        match self {
+            Request::Hello(_) => "HELLO",
+            Request::Submit(_) => "SUBMIT",
+            Request::Squeue(_) => "SQUEUE",
+            Request::Sjob(_) => "SJOB",
+            Request::Scancel(_) => "SCANCEL",
+            Request::Wait { .. } => "WAIT",
+            Request::Stats => "STATS",
+            Request::Util => "UTIL",
+            Request::Ping => "PING",
+            Request::Shutdown => "SHUTDOWN",
         }
-        "SQUEUE" => Ok(Request::Squeue),
-        "SCANCEL" => {
-            let id: u64 = rest
-                .first()
-                .ok_or(ApiError::BadArity {
-                    cmd: "SCANCEL",
-                    expected: "<job_id>",
-                })?
-                .parse()
-                .map_err(|_| ApiError::BadValue {
-                    what: "job id",
-                    value: rest.first().unwrap_or(&"").to_string(),
-                })?;
-            Ok(Request::Scancel(id))
-        }
-        "STATS" => Ok(Request::Stats),
-        "UTIL" => Ok(Request::Util),
-        "PING" => Ok(Request::Ping),
-        "SHUTDOWN" => Ok(Request::Shutdown),
-        other => Err(ApiError::UnknownCommand(other.to_string())),
     }
 }
 
-/// Render a successful response body (without the terminating blank line).
-pub fn ok(body: impl AsRef<str>) -> String {
-    let body = body.as_ref();
-    if body.is_empty() {
-        "OK".to_string()
-    } else {
-        format!("OK {body}")
+/// Acknowledgement of a (possibly batched) submission: the contiguous id
+/// range the scheduler assigned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitAck {
+    /// First assigned job id.
+    pub first: u64,
+    /// Last assigned job id.
+    pub last: u64,
+    /// Number of jobs created.
+    pub count: u64,
+}
+
+impl SubmitAck {
+    /// The assigned ids (the scheduler assigns them contiguously per RPC).
+    pub fn ids(&self) -> impl Iterator<Item = u64> {
+        let empty = self.count == 0;
+        let (first, last) = (self.first, self.last);
+        (first..=last).filter(move |_| !empty)
     }
 }
 
-/// Render an error response.
-pub fn err(e: &ApiError) -> String {
-    format!("ERR {e}")
+impl fmt::Display for SubmitAck {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "jobs={}-{} count={}", self.first, self.last, self.count)
+    }
+}
+
+/// One `SQUEUE` row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobSummary {
+    /// Job id.
+    pub id: u64,
+    /// Launch type.
+    pub job_type: JobType,
+    /// Task count.
+    pub tasks: u32,
+    /// Owning user.
+    pub user: u32,
+    /// QoS class.
+    pub qos: QosClass,
+    /// Lifecycle state.
+    pub state: JobState,
+}
+
+/// Full per-job detail (`SJOB`). Times are virtual seconds since daemon
+/// start; optional fields are absent until the event happens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobDetail {
+    /// Job id.
+    pub id: u64,
+    /// Launch type.
+    pub job_type: JobType,
+    /// Task count.
+    pub tasks: u32,
+    /// Owning user.
+    pub user: u32,
+    /// QoS class.
+    pub qos: QosClass,
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Submission time.
+    pub submit_secs: f64,
+    /// Last time the job (re-)entered the pending queue.
+    pub queue_secs: f64,
+    /// Last start time.
+    pub start_secs: Option<f64>,
+    /// Terminal time.
+    pub end_secs: Option<f64>,
+    /// Preempt+requeue count.
+    pub requeues: u32,
+    /// Scheduler-recognized time (event log).
+    pub recognized_secs: Option<f64>,
+    /// Last dispatch-complete time (event log).
+    pub dispatched_secs: Option<f64>,
+    /// Virtual scheduling latency in ns (recognized → dispatched), the
+    /// paper's per-job metric.
+    pub latency_ns: Option<u64>,
+}
+
+/// Result of a `WAIT`: how many of the requested jobs dispatched, and the
+/// burst's virtual scheduling latency (first recognized → last dispatched),
+/// i.e. the paper's Figure-2 measurement, observable remotely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitResult {
+    /// Jobs the client asked about.
+    pub requested: u32,
+    /// Jobs whose `DispatchDone` record exists.
+    pub dispatched: u32,
+    /// True when the wall-clock timeout expired first.
+    pub timed_out: bool,
+    /// Virtual scheduling latency of the dispatched set in nanoseconds
+    /// (0 until at least one job dispatched).
+    pub latency_ns: u64,
+}
+
+impl fmt::Display for WaitResult {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "dispatched {}/{} latency={:.3}s{}",
+            self.dispatched,
+            self.requested,
+            self.latency_ns as f64 / 1e9,
+            if self.timed_out { " (timed out)" } else { "" }
+        )
+    }
+}
+
+/// Daemon + scheduler counters (`STATS`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsSnapshot {
+    /// Current virtual time (seconds).
+    pub virtual_now_secs: f64,
+    /// Jobs dispatched.
+    pub dispatches: u64,
+    /// Preemption victims.
+    pub preemptions: u64,
+    /// Requeue transactions.
+    pub requeues: u64,
+    /// Cron agent passes.
+    pub cron_passes: u64,
+    /// Main scheduling passes.
+    pub main_passes: u64,
+    /// Backfill passes.
+    pub backfill_passes: u64,
+    /// Triggered passes.
+    pub triggered_passes: u64,
+    /// Priority batches scored.
+    pub score_batches: u64,
+    /// Jobs scored across batches.
+    pub jobs_scored: u64,
+    /// Priority scorer backend name.
+    pub scorer: String,
+    /// Requests served OK.
+    pub requests_ok: u64,
+    /// Requests that errored.
+    pub requests_err: u64,
+    /// Jobs submitted through the API.
+    pub jobs_submitted: u64,
+    /// Count of harvested interactive scheduling latencies.
+    pub sched_latency_count: u64,
+    /// p50 of the virtual scheduling latency histogram (ns).
+    pub sched_latency_p50_ns: u64,
+    /// Per-command request counts (lowercase verb → count).
+    pub commands: BTreeMap<String, u64>,
+}
+
+/// Cluster utilization snapshot (`UTIL`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UtilSnapshot {
+    /// Allocated-core fraction.
+    pub utilization: f64,
+    /// Idle cores.
+    pub idle_cores: u32,
+    /// Fully-idle nodes.
+    pub idle_nodes: u32,
+    /// Total cores.
+    pub total_cores: u32,
+    /// Pending jobs.
+    pub pending: usize,
+    /// Running jobs.
+    pub running: usize,
+}
+
+impl fmt::Display for UtilSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "utilization={:.4} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
+            self.utilization,
+            self.idle_cores,
+            self.idle_nodes,
+            self.total_cores,
+            self.pending,
+            self.running
+        )
+    }
+}
+
+/// A typed response. Errors are a first-class variant so
+/// `Daemon::handle(Request) -> Response` is total.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// `PING` reply.
+    Pong,
+    /// `HELLO` reply: the version this connection now speaks.
+    Hello(ProtocolVersion),
+    /// `SHUTDOWN` acknowledged.
+    ShuttingDown,
+    /// Submission acknowledged.
+    SubmitAck(SubmitAck),
+    /// `SQUEUE` listing.
+    Jobs(Vec<JobSummary>),
+    /// `SJOB` detail.
+    Job(JobDetail),
+    /// `SCANCEL` acknowledged.
+    Cancelled(u64),
+    /// `WAIT` outcome.
+    Wait(WaitResult),
+    /// `STATS` snapshot.
+    Stats(StatsSnapshot),
+    /// `UTIL` snapshot.
+    Util(UtilSnapshot),
+    /// Any failure.
+    Error(ApiError),
+}
+
+// ---- token helpers shared by both codec versions ---------------------------
+
+/// Parse a QoS argument ("normal" / "spot").
+pub fn parse_qos(s: &str) -> Option<QosClass> {
+    match s.to_ascii_lowercase().as_str() {
+        "normal" => Some(QosClass::Normal),
+        "spot" => Some(QosClass::Spot),
+        _ => None,
+    }
+}
+
+/// Parse a job-type argument ("individual" / "array" / "triple").
+pub fn parse_job_type(s: &str) -> Option<JobType> {
+    match s.to_ascii_lowercase().as_str() {
+        "individual" => Some(JobType::Individual),
+        "array" => Some(JobType::Array),
+        "triple" | "triple-mode" => Some(JobType::TripleMode),
+        _ => None,
+    }
+}
+
+/// The submit-argument token for a job type (inverse of [`parse_job_type`]).
+pub fn job_type_arg(t: JobType) -> &'static str {
+    match t {
+        JobType::Individual => "individual",
+        JobType::Array => "array",
+        JobType::TripleMode => "triple",
+    }
+}
+
+/// Lowercase wire token for a job state.
+pub fn state_token(s: JobState) -> &'static str {
+    match s {
+        JobState::Pending => "pending",
+        JobState::Running => "running",
+        JobState::Completed => "completed",
+        JobState::Requeued => "requeued",
+        JobState::Cancelled => "cancelled",
+        JobState::Suspended => "suspended",
+    }
+}
+
+/// Parse a job-state token (case-insensitive, so the v1 `{:?}` table
+/// rendering round-trips too).
+pub fn parse_state(s: &str) -> Option<JobState> {
+    match s.to_ascii_lowercase().as_str() {
+        "pending" => Some(JobState::Pending),
+        "running" => Some(JobState::Running),
+        "completed" => Some(JobState::Completed),
+        "requeued" => Some(JobState::Requeued),
+        "cancelled" => Some(JobState::Cancelled),
+        "suspended" => Some(JobState::Suspended),
+        _ => None,
+    }
 }
 
 #[cfg(test)]
@@ -174,70 +549,79 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_submit() {
-        let r = parse_request("SUBMIT normal triple 4096 1 600").unwrap();
-        assert_eq!(
-            r,
-            Request::Submit {
-                qos: QosClass::Normal,
-                job_type: JobType::TripleMode,
-                tasks: 4096,
-                user: 1,
-                run_secs: 600.0,
-            }
-        );
-    }
-
-    #[test]
-    fn parse_submit_default_runtime() {
-        match parse_request("submit spot array 128 9").unwrap() {
-            Request::Submit { run_secs, qos, .. } => {
-                assert_eq!(run_secs, 3600.0);
-                assert_eq!(qos, QosClass::Spot);
-            }
-            other => panic!("{other:?}"),
+    fn version_and_code_tokens_roundtrip() {
+        for v in [ProtocolVersion::V1, ProtocolVersion::V2] {
+            assert_eq!(ProtocolVersion::parse(v.as_str()), Some(v));
+        }
+        for c in [
+            ErrorCode::Empty,
+            ErrorCode::UnknownCommand,
+            ErrorCode::BadArity,
+            ErrorCode::BadArg,
+            ErrorCode::NotFound,
+            ErrorCode::Unsupported,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(c.as_str()), Some(c));
         }
     }
 
     #[test]
-    fn parse_simple_commands() {
-        assert_eq!(parse_request("SQUEUE").unwrap(), Request::Squeue);
-        assert_eq!(parse_request("ping").unwrap(), Request::Ping);
-        assert_eq!(parse_request("SCANCEL 42").unwrap(), Request::Scancel(42));
-        assert_eq!(parse_request("STATS").unwrap(), Request::Stats);
-        assert_eq!(parse_request("UTIL").unwrap(), Request::Util);
-        assert_eq!(parse_request("SHUTDOWN").unwrap(), Request::Shutdown);
+    fn state_tokens_roundtrip() {
+        for s in [
+            JobState::Pending,
+            JobState::Running,
+            JobState::Completed,
+            JobState::Requeued,
+            JobState::Cancelled,
+            JobState::Suspended,
+        ] {
+            assert_eq!(parse_state(state_token(s)), Some(s));
+            // The v1 table renders `{:?}`; that must parse too.
+            assert_eq!(parse_state(&format!("{s:?}")), Some(s));
+        }
     }
 
     #[test]
-    fn errors() {
-        assert_eq!(parse_request("").unwrap_err(), ApiError::Empty);
-        assert!(matches!(
-            parse_request("FROBNICATE").unwrap_err(),
-            ApiError::UnknownCommand(_)
-        ));
-        assert!(matches!(
-            parse_request("SUBMIT normal").unwrap_err(),
-            ApiError::BadArity { cmd: "SUBMIT", .. }
-        ));
-        assert!(matches!(
-            parse_request("SUBMIT normal warp 1 1").unwrap_err(),
-            ApiError::BadValue { what: "job type", .. }
-        ));
-        assert!(matches!(
-            parse_request("SUBMIT normal array 0 1").unwrap_err(),
-            ApiError::BadValue { what: "tasks", .. }
-        ));
-        assert!(matches!(
-            parse_request("SCANCEL x").unwrap_err(),
-            ApiError::BadValue { what: "job id", .. }
-        ));
+    fn submit_spec_builder() {
+        let s = SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, 7)
+            .with_run_secs(60.0)
+            .with_count(10_000);
+        assert_eq!(s.count, 10_000);
+        assert_eq!(s.run_secs, 60.0);
+        assert_eq!(Request::Submit(s).command_name(), "SUBMIT");
     }
 
     #[test]
-    fn response_rendering() {
-        assert_eq!(ok(""), "OK");
-        assert_eq!(ok("job=3"), "OK job=3");
-        assert!(err(&ApiError::Empty).starts_with("ERR "));
+    fn submit_ack_ids() {
+        let ack = SubmitAck {
+            first: 5,
+            last: 8,
+            count: 4,
+        };
+        assert_eq!(ack.ids().collect::<Vec<_>>(), vec![5, 6, 7, 8]);
+        assert_eq!(ack.to_string(), "jobs=5-8 count=4");
+    }
+
+    #[test]
+    fn command_names_match_table() {
+        let reqs = [
+            Request::Hello(ProtocolVersion::V2),
+            Request::Submit(SubmitSpec::new(QosClass::Spot, JobType::Array, 4, 1)),
+            Request::Squeue(SqueueFilter::default()),
+            Request::Sjob(1),
+            Request::Scancel(1),
+            Request::Wait {
+                jobs: vec![1],
+                timeout_secs: 1.0,
+            },
+            Request::Stats,
+            Request::Util,
+            Request::Ping,
+            Request::Shutdown,
+        ];
+        for (r, name) in reqs.iter().zip(COMMANDS) {
+            assert_eq!(r.command_name(), name);
+        }
     }
 }

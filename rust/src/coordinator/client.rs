@@ -1,42 +1,124 @@
-//! Blocking client for the daemon's TCP protocol.
+//! Blocking typed client for the daemon's TCP protocol.
+//!
+//! [`Client::connect`] starts a v1 session (wire-compatible with the seed
+//! daemon); [`Client::connect_v2`] negotiates the v2 tagged grammar with
+//! `HELLO v2`. The typed methods ([`Client::submit`], [`Client::squeue`],
+//! [`Client::wait`], …) render requests and parse responses through
+//! [`super::codec`], returning the payload structs from [`super::api`] —
+//! `ERR` responses surface as [`ClientError::Api`] with a typed
+//! [`ErrorCode`](super::api::ErrorCode), never as `Ok(String)`.
 
-use anyhow::{Context, Result};
+use super::api::{
+    ApiError, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
+    StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+};
+use super::codec;
+use std::fmt;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
+
+/// Default socket read/write timeout.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Client-side failures.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport failure.
+    Io(std::io::Error),
+    /// The daemon answered with a typed protocol error.
+    Api(ApiError),
+    /// The daemon answered something this client could not interpret.
+    Protocol(String),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Api(e) => write!(f, "{e}"),
+            ClientError::Protocol(msg) => write!(f, "protocol: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            ClientError::Api(e) => Some(e),
+            ClientError::Protocol(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// `Result` specialized to [`ClientError`].
+pub type ClientResult<T> = Result<T, ClientError>;
 
 /// A connected client.
 pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+    version: ProtocolVersion,
 }
 
 impl Client {
-    /// Connect to `host:port`.
-    pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    /// Connect to `host:port`, speaking protocol v1 (upgrade with
+    /// [`Client::hello`]).
+    pub fn connect(addr: &str) -> ClientResult<Self> {
+        let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        stream
-            .set_read_timeout(Some(Duration::from_secs(30)))
-            .context("read timeout")?;
-        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        stream.set_read_timeout(Some(DEFAULT_IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(DEFAULT_IO_TIMEOUT))?;
+        let reader = BufReader::new(stream.try_clone()?);
         Ok(Self {
             writer: stream,
             reader,
+            version: ProtocolVersion::V1,
         })
     }
 
-    /// Send one request line, read the response (terminated by a blank
-    /// line). Returns the response without the terminator.
-    pub fn request(&mut self, line: &str) -> Result<String> {
+    /// Connect and negotiate protocol v2.
+    pub fn connect_v2(addr: &str) -> ClientResult<Self> {
+        let mut c = Self::connect(addr)?;
+        c.hello(ProtocolVersion::V2)?;
+        Ok(c)
+    }
+
+    /// The protocol version this session speaks.
+    pub fn version(&self) -> ProtocolVersion {
+        self.version
+    }
+
+    /// Send one raw request line, read the raw response (terminated by a
+    /// blank line). Returns the response body without the terminator.
+    /// Escape hatch for ad-hoc lines; the typed methods below are preferred.
+    pub fn request(&mut self, line: &str) -> ClientResult<String> {
+        self.send_line(line)?;
+        self.read_response()
+    }
+
+    fn send_line(&mut self, line: &str) -> ClientResult<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_response(&mut self) -> ClientResult<String> {
         let mut out = String::new();
         loop {
             let mut buf = String::new();
             let n = self.reader.read_line(&mut buf)?;
-            anyhow::ensure!(n > 0, "server closed the connection");
+            if n == 0 {
+                return Err(ClientError::Protocol("server closed the connection".into()));
+            }
             if buf == "\n" {
                 break;
             }
@@ -44,4 +126,121 @@ impl Client {
         }
         Ok(out.trim_end_matches('\n').to_string())
     }
+
+    /// One typed round trip. `ERR` responses come back as
+    /// [`ClientError::Api`].
+    fn roundtrip(&mut self, req: &Request) -> ClientResult<Response> {
+        let line = codec::render_request(req, self.version);
+        self.send_line(&line)?;
+        let raw = self.read_response()?;
+        // A HELLO response is rendered in the *negotiated* version.
+        let parse_version = match req {
+            Request::Hello(v) => *v,
+            _ => self.version,
+        };
+        match codec::parse_response(&raw, parse_version) {
+            Ok(Response::Error(e)) => Err(ClientError::Api(e)),
+            Ok(resp) => Ok(resp),
+            Err(e) => Err(ClientError::Protocol(format!(
+                "unparseable response {raw:?}: {e}"
+            ))),
+        }
+    }
+
+    /// Negotiate the protocol version for this connection.
+    pub fn hello(&mut self, version: ProtocolVersion) -> ClientResult<ProtocolVersion> {
+        match self.roundtrip(&Request::Hello(version))? {
+            Response::Hello(v) => {
+                self.version = v;
+                Ok(v)
+            }
+            other => Err(unexpected("HELLO", &other)),
+        }
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> ClientResult<()> {
+        match self.roundtrip(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(unexpected("PING", &other)),
+        }
+    }
+
+    /// Submit a (possibly batched) spec; returns the assigned id range.
+    pub fn submit(&mut self, spec: &SubmitSpec) -> ClientResult<SubmitAck> {
+        match self.roundtrip(&Request::Submit(spec.clone()))? {
+            Response::SubmitAck(ack) => Ok(ack),
+            other => Err(unexpected("SUBMIT", &other)),
+        }
+    }
+
+    /// List jobs matching `filter`.
+    pub fn squeue(&mut self, filter: &SqueueFilter) -> ClientResult<Vec<JobSummary>> {
+        match self.roundtrip(&Request::Squeue(filter.clone()))? {
+            Response::Jobs(rows) => Ok(rows),
+            other => Err(unexpected("SQUEUE", &other)),
+        }
+    }
+
+    /// Detail for one job.
+    pub fn job(&mut self, id: u64) -> ClientResult<JobDetail> {
+        match self.roundtrip(&Request::Sjob(id))? {
+            Response::Job(d) => Ok(d),
+            other => Err(unexpected("SJOB", &other)),
+        }
+    }
+
+    /// Cancel a job; `Err(ClientError::Api)` with `NotFound` when unknown.
+    pub fn cancel(&mut self, id: u64) -> ClientResult<u64> {
+        match self.roundtrip(&Request::Scancel(id))? {
+            Response::Cancelled(id) => Ok(id),
+            other => Err(unexpected("SCANCEL", &other)),
+        }
+    }
+
+    /// Block until `jobs` have all dispatched (or `timeout_secs` of wall
+    /// time elapse) and return the burst's virtual scheduling latency — the
+    /// paper's launch-latency measurement, end to end from a remote client.
+    pub fn wait(&mut self, jobs: &[u64], timeout_secs: f64) -> ClientResult<WaitResult> {
+        // The daemon blocks up to timeout_secs; give the socket headroom.
+        let io_timeout = Duration::from_secs_f64(timeout_secs.max(0.0) + 30.0);
+        self.writer.set_read_timeout(Some(io_timeout))?;
+        let result = self.roundtrip(&Request::Wait {
+            jobs: jobs.to_vec(),
+            timeout_secs,
+        });
+        self.writer.set_read_timeout(Some(DEFAULT_IO_TIMEOUT))?;
+        match result? {
+            Response::Wait(w) => Ok(w),
+            other => Err(unexpected("WAIT", &other)),
+        }
+    }
+
+    /// Daemon + scheduler counters.
+    pub fn stats(&mut self) -> ClientResult<StatsSnapshot> {
+        match self.roundtrip(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(unexpected("STATS", &other)),
+        }
+    }
+
+    /// Cluster utilization snapshot.
+    pub fn util(&mut self) -> ClientResult<UtilSnapshot> {
+        match self.roundtrip(&Request::Util)? {
+            Response::Util(u) => Ok(u),
+            other => Err(unexpected("UTIL", &other)),
+        }
+    }
+
+    /// Ask the daemon to stop.
+    pub fn shutdown(&mut self) -> ClientResult<()> {
+        match self.roundtrip(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            other => Err(unexpected("SHUTDOWN", &other)),
+        }
+    }
+}
+
+fn unexpected(cmd: &str, resp: &Response) -> ClientError {
+    ClientError::Protocol(format!("unexpected response to {cmd}: {resp:?}"))
 }

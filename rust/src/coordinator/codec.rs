@@ -1,0 +1,1031 @@
+//! Wire codec: renders and parses [`Request`]s and [`Response`]s for both
+//! protocol versions.
+//!
+//! * **v1** is the original line grammar. Every request line the seed
+//!   daemon accepted still parses unchanged, and the `SUBMIT` / `SQUEUE` /
+//!   `SCANCEL` / `PING` response shapes are byte-compatible; the `STATS`
+//!   response is now a parseable single-line `key=value` record (the seed's
+//!   free-form multi-line summary had no stable grammar to preserve). v1 has
+//!   grown strictly additive extensions: an optional `[count]` on `SUBMIT`,
+//!   `key=value` filters on `SQUEUE`, and the `SJOB` / `WAIT` / `HELLO`
+//!   verbs.
+//! * **v2** is a tagged `key=value` grammar with self-describing responses
+//!   (`OK kind=submit_ack first=1 last=10000 count=10000`), negotiated per
+//!   connection by sending `HELLO v2`.
+//!
+//! Rendering and parsing are exact inverses for canonical forms:
+//! `render_request(parse_request(line)) == line` and
+//! `parse_response(render_response(resp)) == resp` — the round-trip tests
+//! below pin both versions, including the seed grammar verbatim.
+
+use super::api::{
+    job_type_arg, parse_job_type, parse_qos, parse_state, state_token, ApiError, ErrorCode,
+    JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter, StatsSnapshot,
+    SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+};
+use crate::job::{JobState, JobType, QosClass};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+// ---- shared token helpers --------------------------------------------------
+
+/// Render an `f64` with Rust's shortest round-trip formatting (`600` for
+/// `600.0`, `0.5` for `0.5`), so canonical lines re-parse exactly.
+fn fmt_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+fn parse_u32(what: &str, tok: &str) -> Result<u32, ApiError> {
+    tok.parse().map_err(|_| ApiError::bad_arg(what, tok))
+}
+
+fn parse_u64(what: &str, tok: &str) -> Result<u64, ApiError> {
+    tok.parse().map_err(|_| ApiError::bad_arg(what, tok))
+}
+
+fn parse_usize(what: &str, tok: &str) -> Result<usize, ApiError> {
+    tok.parse().map_err(|_| ApiError::bad_arg(what, tok))
+}
+
+fn parse_f64(what: &str, tok: &str) -> Result<f64, ApiError> {
+    tok.parse().map_err(|_| ApiError::bad_arg(what, tok))
+}
+
+/// Split `key=value` tokens; any bare token is a `BadArg` for `what`.
+fn kv_pairs<'a>(tokens: &[&'a str], what: &str) -> Result<Vec<(&'a str, &'a str)>, ApiError> {
+    tokens
+        .iter()
+        .map(|tok| {
+            tok.split_once('=')
+                .ok_or_else(|| ApiError::bad_arg(what, tok))
+        })
+        .collect()
+}
+
+/// `key=value` tokens of one payload line → map (later keys win).
+fn kv_map(line: &str) -> BTreeMap<&str, &str> {
+    line.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .collect()
+}
+
+fn take<'a>(map: &BTreeMap<&'a str, &'a str>, key: &str) -> Result<&'a str, ApiError> {
+    map.get(key)
+        .copied()
+        .ok_or_else(|| ApiError::new(ErrorCode::Internal, format!("response missing {key}=")))
+}
+
+fn take_u32(map: &BTreeMap<&str, &str>, key: &str) -> Result<u32, ApiError> {
+    parse_u32(key, take(map, key)?)
+}
+
+fn take_u64(map: &BTreeMap<&str, &str>, key: &str) -> Result<u64, ApiError> {
+    parse_u64(key, take(map, key)?)
+}
+
+fn take_usize(map: &BTreeMap<&str, &str>, key: &str) -> Result<usize, ApiError> {
+    parse_usize(key, take(map, key)?)
+}
+
+fn take_f64(map: &BTreeMap<&str, &str>, key: &str) -> Result<f64, ApiError> {
+    parse_f64(key, take(map, key)?)
+}
+
+fn take_bool(map: &BTreeMap<&str, &str>, key: &str) -> Result<bool, ApiError> {
+    match take(map, key)? {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => Err(ApiError::bad_arg(key, other)),
+    }
+}
+
+fn take_opt_f64(map: &BTreeMap<&str, &str>, key: &str) -> Result<Option<f64>, ApiError> {
+    match take(map, key)? {
+        "-" => Ok(None),
+        tok => parse_f64(key, tok).map(Some),
+    }
+}
+
+fn take_opt_u64(map: &BTreeMap<&str, &str>, key: &str) -> Result<Option<u64>, ApiError> {
+    match take(map, key)? {
+        "-" => Ok(None),
+        tok => parse_u64(key, tok).map(Some),
+    }
+}
+
+fn take_qos(map: &BTreeMap<&str, &str>, key: &str) -> Result<QosClass, ApiError> {
+    let tok = take(map, key)?;
+    parse_qos(tok).ok_or_else(|| ApiError::bad_arg("qos", tok))
+}
+
+fn take_job_type(map: &BTreeMap<&str, &str>, key: &str) -> Result<JobType, ApiError> {
+    let tok = take(map, key)?;
+    parse_job_type(tok).ok_or_else(|| ApiError::bad_arg("job type", tok))
+}
+
+fn take_state(map: &BTreeMap<&str, &str>, key: &str) -> Result<JobState, ApiError> {
+    let tok = take(map, key)?;
+    parse_state(tok).ok_or_else(|| ApiError::bad_arg("state", tok))
+}
+
+fn opt_f64_token(v: Option<f64>) -> String {
+    v.map(fmt_f64).unwrap_or_else(|| "-".to_string())
+}
+
+fn opt_u64_token(v: Option<u64>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_else(|| "-".to_string())
+}
+
+// ---- request parsing -------------------------------------------------------
+
+/// Parse one request line under the given protocol version.
+pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, ApiError> {
+    let tokens: Vec<&str> = line.split_whitespace().collect();
+    let Some(&cmd) = tokens.first() else {
+        return Err(ApiError::empty());
+    };
+    let rest = &tokens[1..];
+    match cmd.to_ascii_uppercase().as_str() {
+        "PING" => Ok(Request::Ping),
+        "STATS" => Ok(Request::Stats),
+        "UTIL" => Ok(Request::Util),
+        "SHUTDOWN" => Ok(Request::Shutdown),
+        "HELLO" => {
+            let tok = rest
+                .first()
+                .ok_or_else(|| ApiError::bad_arity("HELLO", "<v1|v2>"))?;
+            let v = ProtocolVersion::parse(tok)
+                .ok_or_else(|| ApiError::bad_arg("protocol version", tok))?;
+            Ok(Request::Hello(v))
+        }
+        // The SQUEUE filter grammar is `key=value` in both versions (v1 had
+        // a bare SQUEUE; filters are an additive extension).
+        "SQUEUE" => parse_squeue(rest),
+        "SUBMIT" => match version {
+            ProtocolVersion::V1 => parse_submit_v1(rest),
+            ProtocolVersion::V2 => parse_submit_v2(rest),
+        },
+        "SJOB" => match version {
+            ProtocolVersion::V1 => {
+                let tok = rest
+                    .first()
+                    .ok_or_else(|| ApiError::bad_arity("SJOB", "<job_id>"))?;
+                Ok(Request::Sjob(parse_u64("job id", tok)?))
+            }
+            ProtocolVersion::V2 => {
+                let map: BTreeMap<&str, &str> = kv_pairs(rest, "SJOB option")?.into_iter().collect();
+                Ok(Request::Sjob(take_u64(&map, "id")?))
+            }
+        },
+        "SCANCEL" => match version {
+            ProtocolVersion::V1 => {
+                let tok = rest
+                    .first()
+                    .ok_or_else(|| ApiError::bad_arity("SCANCEL", "<job_id>"))?;
+                Ok(Request::Scancel(parse_u64("job id", tok)?))
+            }
+            ProtocolVersion::V2 => {
+                let map: BTreeMap<&str, &str> =
+                    kv_pairs(rest, "SCANCEL option")?.into_iter().collect();
+                Ok(Request::Scancel(take_u64(&map, "id")?))
+            }
+        },
+        "WAIT" => match version {
+            ProtocolVersion::V1 => {
+                if rest.len() < 2 {
+                    return Err(ApiError::bad_arity("WAIT", "<job_id..> <timeout_secs>"));
+                }
+                let jobs = rest[..rest.len() - 1]
+                    .iter()
+                    .map(|tok| parse_u64("job id", tok))
+                    .collect::<Result<Vec<u64>, ApiError>>()?;
+                let timeout_secs = parse_f64("timeout", rest[rest.len() - 1])?;
+                Ok(Request::Wait { jobs, timeout_secs })
+            }
+            ProtocolVersion::V2 => {
+                let map: BTreeMap<&str, &str> = kv_pairs(rest, "WAIT option")?.into_iter().collect();
+                let jobs_tok = take(&map, "jobs")
+                    .map_err(|_| ApiError::bad_arity("WAIT", "jobs=<id,..> timeout=<secs>"))?;
+                let jobs = jobs_tok
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|tok| parse_u64("job id", tok))
+                    .collect::<Result<Vec<u64>, ApiError>>()?;
+                if jobs.is_empty() {
+                    return Err(ApiError::bad_arg("jobs", jobs_tok));
+                }
+                let timeout_secs = match map.get("timeout") {
+                    Some(tok) => parse_f64("timeout", tok)?,
+                    None => 30.0,
+                };
+                Ok(Request::Wait { jobs, timeout_secs })
+            }
+        },
+        _ => Err(ApiError::unknown_command(cmd)),
+    }
+}
+
+fn parse_squeue(rest: &[&str]) -> Result<Request, ApiError> {
+    let mut filter = SqueueFilter::default();
+    for (k, v) in kv_pairs(rest, "SQUEUE filter")? {
+        match k {
+            "user" => filter.user = Some(parse_u32("user", v)?),
+            "qos" => filter.qos = Some(parse_qos(v).ok_or_else(|| ApiError::bad_arg("qos", v))?),
+            "state" => {
+                filter.state = Some(parse_state(v).ok_or_else(|| ApiError::bad_arg("state", v))?)
+            }
+            "limit" => filter.limit = Some(parse_usize("limit", v)?),
+            _ => return Err(ApiError::bad_arg("SQUEUE filter", k)),
+        }
+    }
+    Ok(Request::Squeue(filter))
+}
+
+fn parse_submit_common(
+    qos: &str,
+    job_type: &str,
+    tasks: &str,
+    user: &str,
+    run_secs: Option<&str>,
+    count: Option<&str>,
+) -> Result<Request, ApiError> {
+    let qos = parse_qos(qos).ok_or_else(|| ApiError::bad_arg("qos", qos))?;
+    let job_type = parse_job_type(job_type).ok_or_else(|| ApiError::bad_arg("job type", job_type))?;
+    let tasks = parse_u32("tasks", tasks)?;
+    if tasks == 0 {
+        return Err(ApiError::bad_arg("tasks", "0"));
+    }
+    let user = parse_u32("user", user)?;
+    let run_secs = match run_secs {
+        Some(tok) => {
+            let v = parse_f64("run_secs", tok)?;
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(ApiError::bad_arg("run_secs", tok));
+            }
+            v
+        }
+        None => 3600.0,
+    };
+    let count = match count {
+        Some(tok) => parse_u32("count", tok)?,
+        None => 1,
+    };
+    if count == 0 {
+        return Err(ApiError::bad_arg("count", "0"));
+    }
+    Ok(Request::Submit(SubmitSpec {
+        qos,
+        job_type,
+        tasks,
+        user,
+        run_secs,
+        count,
+    }))
+}
+
+fn parse_submit_v1(rest: &[&str]) -> Result<Request, ApiError> {
+    if rest.len() < 4 || rest.len() > 6 {
+        return Err(ApiError::bad_arity(
+            "SUBMIT",
+            "<qos> <type> <tasks> <user> [run_secs] [count]",
+        ));
+    }
+    parse_submit_common(
+        rest[0],
+        rest[1],
+        rest[2],
+        rest[3],
+        rest.get(4).copied(),
+        rest.get(5).copied(),
+    )
+}
+
+fn parse_submit_v2(rest: &[&str]) -> Result<Request, ApiError> {
+    let map: BTreeMap<&str, &str> = kv_pairs(rest, "SUBMIT option")?.into_iter().collect();
+    for key in map.keys() {
+        if !["qos", "type", "tasks", "user", "run_secs", "count"].contains(key) {
+            return Err(ApiError::bad_arg("SUBMIT option", key));
+        }
+    }
+    let missing = || ApiError::bad_arity("SUBMIT", "qos= type= tasks= user= [run_secs=] [count=]");
+    parse_submit_common(
+        map.get("qos").copied().ok_or_else(missing)?,
+        map.get("type").copied().ok_or_else(missing)?,
+        map.get("tasks").copied().ok_or_else(missing)?,
+        map.get("user").copied().ok_or_else(missing)?,
+        map.get("run_secs").copied(),
+        map.get("count").copied(),
+    )
+}
+
+// ---- request rendering -----------------------------------------------------
+
+/// Render a request canonically for the given protocol version.
+pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
+    match req {
+        Request::Ping => "PING".into(),
+        Request::Stats => "STATS".into(),
+        Request::Util => "UTIL".into(),
+        Request::Shutdown => "SHUTDOWN".into(),
+        Request::Hello(v) => format!("HELLO {v}"),
+        Request::Squeue(f) => {
+            let mut s = String::from("SQUEUE");
+            if let Some(u) = f.user {
+                let _ = write!(s, " user={u}");
+            }
+            if let Some(q) = f.qos {
+                let _ = write!(s, " qos={q}");
+            }
+            if let Some(st) = f.state {
+                let _ = write!(s, " state={}", state_token(st));
+            }
+            if let Some(l) = f.limit {
+                let _ = write!(s, " limit={l}");
+            }
+            s
+        }
+        Request::Sjob(id) => match version {
+            ProtocolVersion::V1 => format!("SJOB {id}"),
+            ProtocolVersion::V2 => format!("SJOB id={id}"),
+        },
+        Request::Scancel(id) => match version {
+            ProtocolVersion::V1 => format!("SCANCEL {id}"),
+            ProtocolVersion::V2 => format!("SCANCEL id={id}"),
+        },
+        Request::Wait { jobs, timeout_secs } => {
+            let ids: Vec<String> = jobs.iter().map(|j| j.to_string()).collect();
+            match version {
+                ProtocolVersion::V1 => {
+                    format!("WAIT {} {}", ids.join(" "), fmt_f64(*timeout_secs))
+                }
+                ProtocolVersion::V2 => {
+                    format!("WAIT jobs={} timeout={}", ids.join(","), fmt_f64(*timeout_secs))
+                }
+            }
+        }
+        Request::Submit(s) => match version {
+            ProtocolVersion::V1 => {
+                let mut line = format!(
+                    "SUBMIT {} {} {} {} {}",
+                    s.qos,
+                    job_type_arg(s.job_type),
+                    s.tasks,
+                    s.user,
+                    fmt_f64(s.run_secs)
+                );
+                if s.count != 1 {
+                    let _ = write!(line, " {}", s.count);
+                }
+                line
+            }
+            ProtocolVersion::V2 => format!(
+                "SUBMIT qos={} type={} tasks={} user={} run_secs={} count={}",
+                s.qos,
+                job_type_arg(s.job_type),
+                s.tasks,
+                s.user,
+                fmt_f64(s.run_secs),
+                s.count
+            ),
+        },
+    }
+}
+
+// ---- response rendering ----------------------------------------------------
+
+fn detail_kv(d: &JobDetail) -> String {
+    format!(
+        "id={} type={} tasks={} user={} qos={} state={} submit_secs={} queue_secs={} \
+         start_secs={} end_secs={} requeues={} recognized_secs={} dispatched_secs={} latency_ns={}",
+        d.id,
+        job_type_arg(d.job_type),
+        d.tasks,
+        d.user,
+        d.qos,
+        state_token(d.state),
+        fmt_f64(d.submit_secs),
+        fmt_f64(d.queue_secs),
+        opt_f64_token(d.start_secs),
+        opt_f64_token(d.end_secs),
+        d.requeues,
+        opt_f64_token(d.recognized_secs),
+        opt_f64_token(d.dispatched_secs),
+        opt_u64_token(d.latency_ns),
+    )
+}
+
+fn wait_kv(w: &WaitResult) -> String {
+    format!(
+        "requested={} dispatched={} timed_out={} latency_ns={}",
+        w.requested, w.dispatched, w.timed_out, w.latency_ns
+    )
+}
+
+fn stats_kv(s: &StatsSnapshot) -> String {
+    let mut out = format!(
+        "virtual_now_secs={} dispatches={} preemptions={} requeues={} cron_passes={} \
+         main_passes={} backfill_passes={} triggered_passes={} score_batches={} jobs_scored={} \
+         scorer={} requests_ok={} requests_err={} jobs_submitted={} sched_latency_count={} \
+         sched_latency_p50_ns={}",
+        fmt_f64(s.virtual_now_secs),
+        s.dispatches,
+        s.preemptions,
+        s.requeues,
+        s.cron_passes,
+        s.main_passes,
+        s.backfill_passes,
+        s.triggered_passes,
+        s.score_batches,
+        s.jobs_scored,
+        s.scorer,
+        s.requests_ok,
+        s.requests_err,
+        s.jobs_submitted,
+        s.sched_latency_count,
+        s.sched_latency_p50_ns,
+    );
+    for (cmd, n) in &s.commands {
+        let _ = write!(out, " cmd_{cmd}={n}");
+    }
+    out
+}
+
+/// Render a response for the given protocol version. The result is the body
+/// only — the transport appends the blank-line terminator.
+pub fn render_response(resp: &Response, version: ProtocolVersion) -> String {
+    match version {
+        ProtocolVersion::V1 => render_response_v1(resp),
+        ProtocolVersion::V2 => render_response_v2(resp),
+    }
+}
+
+fn render_response_v1(resp: &Response) -> String {
+    match resp {
+        Response::Pong => "OK pong".into(),
+        Response::Hello(v) => format!("OK proto={v}"),
+        Response::ShuttingDown => "OK shutting down".into(),
+        Response::SubmitAck(a) => format!("OK jobs={}-{} count={}", a.first, a.last, a.count),
+        Response::Cancelled(id) => format!("OK cancelled {id}"),
+        Response::Jobs(rows) => {
+            // Byte-compatible with the seed SQUEUE table.
+            let mut body = String::from("OK \nJOBID TYPE TASKS USER QOS STATE\n");
+            for r in rows {
+                let _ = writeln!(
+                    body,
+                    "{} {} {} user{} {} {:?}",
+                    r.id,
+                    r.job_type.label(),
+                    r.tasks,
+                    r.user,
+                    r.qos,
+                    r.state
+                );
+            }
+            let _ = write!(body, "({} jobs)", rows.len());
+            body
+        }
+        Response::Job(d) => format!("OK {}", detail_kv(d)),
+        Response::Wait(w) => format!("OK {}", wait_kv(w)),
+        Response::Stats(s) => format!("OK {}", stats_kv(s)),
+        Response::Util(u) => format!(
+            "OK utilization={:.4} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
+            u.utilization, u.idle_cores, u.idle_nodes, u.total_cores, u.pending, u.running
+        ),
+        Response::Error(e) => format!("ERR {}: {}", e.code, e.message),
+    }
+}
+
+fn render_response_v2(resp: &Response) -> String {
+    match resp {
+        Response::Pong => "OK kind=pong".into(),
+        Response::Hello(v) => format!("OK kind=hello proto={v}"),
+        Response::ShuttingDown => "OK kind=shutdown".into(),
+        Response::SubmitAck(a) => format!(
+            "OK kind=submit_ack first={} last={} count={}",
+            a.first, a.last, a.count
+        ),
+        Response::Cancelled(id) => format!("OK kind=cancelled id={id}"),
+        Response::Jobs(rows) => {
+            let mut body = format!("OK kind=jobs count={}", rows.len());
+            for r in rows {
+                let _ = write!(
+                    body,
+                    "\njob id={} type={} tasks={} user={} qos={} state={}",
+                    r.id,
+                    job_type_arg(r.job_type),
+                    r.tasks,
+                    r.user,
+                    r.qos,
+                    state_token(r.state)
+                );
+            }
+            body
+        }
+        Response::Job(d) => format!("OK kind=job {}", detail_kv(d)),
+        Response::Wait(w) => format!("OK kind=wait {}", wait_kv(w)),
+        Response::Stats(s) => format!("OK kind=stats {}", stats_kv(s)),
+        Response::Util(u) => format!(
+            "OK kind=util utilization={} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
+            fmt_f64(u.utilization), u.idle_cores, u.idle_nodes, u.total_cores, u.pending, u.running
+        ),
+        Response::Error(e) => format!("ERR code={} msg={}", e.code, e.message),
+    }
+}
+
+// ---- response parsing ------------------------------------------------------
+
+/// Parse a response body (as returned by the transport, terminator already
+/// stripped) for the given protocol version.
+pub fn parse_response(text: &str, version: ProtocolVersion) -> Result<Response, ApiError> {
+    if let Some(rest) = text.strip_prefix("ERR") {
+        return Ok(Response::Error(parse_error_body(rest.trim_start(), version)));
+    }
+    let Some(rest) = text.strip_prefix("OK") else {
+        return Err(ApiError::new(
+            ErrorCode::Internal,
+            format!("response is neither OK nor ERR: {text:?}"),
+        ));
+    };
+    let rest = rest.strip_prefix(' ').unwrap_or(rest);
+    match version {
+        ProtocolVersion::V1 => parse_ok_v1(rest),
+        ProtocolVersion::V2 => parse_ok_v2(rest),
+    }
+}
+
+fn parse_error_body(body: &str, version: ProtocolVersion) -> ApiError {
+    match version {
+        ProtocolVersion::V1 => match body.split_once(": ") {
+            Some((code_tok, msg)) => match ErrorCode::parse(code_tok) {
+                Some(code) => ApiError::new(code, msg),
+                None => ApiError::new(ErrorCode::Internal, body),
+            },
+            None => ApiError::new(ErrorCode::Internal, body),
+        },
+        ProtocolVersion::V2 => {
+            let (head, msg) = match body.split_once(" msg=") {
+                Some((head, msg)) => (head, msg),
+                None => (body, ""),
+            };
+            let map = kv_map(head);
+            let code = map
+                .get("code")
+                .and_then(|c| ErrorCode::parse(c))
+                .unwrap_or(ErrorCode::Internal);
+            ApiError::new(code, msg)
+        }
+    }
+}
+
+fn parse_jobs_row_v1(line: &str) -> Result<JobSummary, ApiError> {
+    let bad = || ApiError::new(ErrorCode::Internal, format!("bad SQUEUE row: {line:?}"));
+    let tok: Vec<&str> = line.split_whitespace().collect();
+    if tok.len() != 6 {
+        return Err(bad());
+    }
+    Ok(JobSummary {
+        id: tok[0].parse().map_err(|_| bad())?,
+        job_type: parse_job_type(tok[1]).ok_or_else(bad)?,
+        tasks: tok[2].parse().map_err(|_| bad())?,
+        user: tok[3]
+            .strip_prefix("user")
+            .and_then(|u| u.parse().ok())
+            .ok_or_else(bad)?,
+        qos: parse_qos(tok[4]).ok_or_else(bad)?,
+        state: parse_state(tok[5]).ok_or_else(bad)?,
+    })
+}
+
+fn parse_detail(map: &BTreeMap<&str, &str>) -> Result<JobDetail, ApiError> {
+    Ok(JobDetail {
+        id: take_u64(map, "id")?,
+        job_type: take_job_type(map, "type")?,
+        tasks: take_u32(map, "tasks")?,
+        user: take_u32(map, "user")?,
+        qos: take_qos(map, "qos")?,
+        state: take_state(map, "state")?,
+        submit_secs: take_f64(map, "submit_secs")?,
+        queue_secs: take_f64(map, "queue_secs")?,
+        start_secs: take_opt_f64(map, "start_secs")?,
+        end_secs: take_opt_f64(map, "end_secs")?,
+        requeues: take_u32(map, "requeues")?,
+        recognized_secs: take_opt_f64(map, "recognized_secs")?,
+        dispatched_secs: take_opt_f64(map, "dispatched_secs")?,
+        latency_ns: take_opt_u64(map, "latency_ns")?,
+    })
+}
+
+fn parse_wait(map: &BTreeMap<&str, &str>) -> Result<WaitResult, ApiError> {
+    Ok(WaitResult {
+        requested: take_u32(map, "requested")?,
+        dispatched: take_u32(map, "dispatched")?,
+        timed_out: take_bool(map, "timed_out")?,
+        latency_ns: take_u64(map, "latency_ns")?,
+    })
+}
+
+fn parse_stats(map: &BTreeMap<&str, &str>) -> Result<StatsSnapshot, ApiError> {
+    let mut commands = BTreeMap::new();
+    for (k, v) in map {
+        if let Some(cmd) = k.strip_prefix("cmd_") {
+            commands.insert(cmd.to_string(), parse_u64(k, v)?);
+        }
+    }
+    Ok(StatsSnapshot {
+        virtual_now_secs: take_f64(map, "virtual_now_secs")?,
+        dispatches: take_u64(map, "dispatches")?,
+        preemptions: take_u64(map, "preemptions")?,
+        requeues: take_u64(map, "requeues")?,
+        cron_passes: take_u64(map, "cron_passes")?,
+        main_passes: take_u64(map, "main_passes")?,
+        backfill_passes: take_u64(map, "backfill_passes")?,
+        triggered_passes: take_u64(map, "triggered_passes")?,
+        score_batches: take_u64(map, "score_batches")?,
+        jobs_scored: take_u64(map, "jobs_scored")?,
+        scorer: take(map, "scorer")?.to_string(),
+        requests_ok: take_u64(map, "requests_ok")?,
+        requests_err: take_u64(map, "requests_err")?,
+        jobs_submitted: take_u64(map, "jobs_submitted")?,
+        sched_latency_count: take_u64(map, "sched_latency_count")?,
+        sched_latency_p50_ns: take_u64(map, "sched_latency_p50_ns")?,
+        commands,
+    })
+}
+
+fn parse_util(map: &BTreeMap<&str, &str>) -> Result<UtilSnapshot, ApiError> {
+    Ok(UtilSnapshot {
+        utilization: take_f64(map, "utilization")?,
+        idle_cores: take_u32(map, "idle_cores")?,
+        idle_nodes: take_u32(map, "idle_nodes")?,
+        total_cores: take_u32(map, "total_cores")?,
+        pending: take_usize(map, "pending")?,
+        running: take_usize(map, "running")?,
+    })
+}
+
+fn parse_submit_ack_v1(line: &str) -> Result<Response, ApiError> {
+    // "jobs=<first>-<last> count=<n>"
+    let map = kv_map(line);
+    let range = take(&map, "jobs")?;
+    let (first, last) = range
+        .split_once('-')
+        .ok_or_else(|| ApiError::new(ErrorCode::Internal, format!("bad id range {range:?}")))?;
+    Ok(Response::SubmitAck(SubmitAck {
+        first: parse_u64("first", first)?,
+        last: parse_u64("last", last)?,
+        count: take_u64(&map, "count")?,
+    }))
+}
+
+fn parse_ok_v1(rest: &str) -> Result<Response, ApiError> {
+    if rest.starts_with('\n') {
+        // The SQUEUE table: header, rows, "(N jobs)".
+        let lines: Vec<&str> = rest.trim_start_matches('\n').lines().collect();
+        let mut rows = Vec::new();
+        for line in lines.iter().skip(1) {
+            if line.starts_with('(') {
+                break;
+            }
+            rows.push(parse_jobs_row_v1(line)?);
+        }
+        return Ok(Response::Jobs(rows));
+    }
+    let first = rest.split_whitespace().next().unwrap_or("");
+    match first {
+        "pong" => Ok(Response::Pong),
+        "shutting" => Ok(Response::ShuttingDown),
+        "cancelled" => {
+            let tok = rest.split_whitespace().nth(1).unwrap_or("");
+            Ok(Response::Cancelled(parse_u64("job id", tok)?))
+        }
+        _ if first.starts_with("proto=") => {
+            let v = first.trim_start_matches("proto=");
+            ProtocolVersion::parse(v)
+                .map(Response::Hello)
+                .ok_or_else(|| ApiError::bad_arg("protocol version", v))
+        }
+        _ if first.starts_with("jobs=") => parse_submit_ack_v1(rest),
+        _ if first.starts_with("virtual_now_secs=") => {
+            Ok(Response::Stats(parse_stats(&kv_map(rest))?))
+        }
+        _ if first.starts_with("utilization=") => Ok(Response::Util(parse_util(&kv_map(rest))?)),
+        _ if first.starts_with("requested=") => Ok(Response::Wait(parse_wait(&kv_map(rest))?)),
+        _ if first.starts_with("id=") => Ok(Response::Job(parse_detail(&kv_map(rest))?)),
+        _ => Err(ApiError::new(
+            ErrorCode::Internal,
+            format!("unrecognized v1 response: {rest:?}"),
+        )),
+    }
+}
+
+fn parse_ok_v2(rest: &str) -> Result<Response, ApiError> {
+    let (head, tail) = match rest.split_once('\n') {
+        Some((h, t)) => (h, t),
+        None => (rest, ""),
+    };
+    let map = kv_map(head);
+    match take(&map, "kind")? {
+        "pong" => Ok(Response::Pong),
+        "shutdown" => Ok(Response::ShuttingDown),
+        "hello" => {
+            let v = take(&map, "proto")?;
+            ProtocolVersion::parse(v)
+                .map(Response::Hello)
+                .ok_or_else(|| ApiError::bad_arg("protocol version", v))
+        }
+        "submit_ack" => Ok(Response::SubmitAck(SubmitAck {
+            first: take_u64(&map, "first")?,
+            last: take_u64(&map, "last")?,
+            count: take_u64(&map, "count")?,
+        })),
+        "cancelled" => Ok(Response::Cancelled(take_u64(&map, "id")?)),
+        "job" => Ok(Response::Job(parse_detail(&map)?)),
+        "wait" => Ok(Response::Wait(parse_wait(&map)?)),
+        "stats" => Ok(Response::Stats(parse_stats(&map)?)),
+        "util" => Ok(Response::Util(parse_util(&map)?)),
+        "jobs" => {
+            let mut rows = Vec::new();
+            for line in tail.lines() {
+                let Some(body) = line.strip_prefix("job ") else {
+                    continue;
+                };
+                let m = kv_map(body);
+                rows.push(JobSummary {
+                    id: take_u64(&m, "id")?,
+                    job_type: take_job_type(&m, "type")?,
+                    tasks: take_u32(&m, "tasks")?,
+                    user: take_u32(&m, "user")?,
+                    qos: take_qos(&m, "qos")?,
+                    state: take_state(&m, "state")?,
+                });
+            }
+            Ok(Response::Jobs(rows))
+        }
+        other => Err(ApiError::new(
+            ErrorCode::Internal,
+            format!("unrecognized v2 response kind {other:?}"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ProtocolVersion::{V1, V2};
+
+    // ---- backward compatibility: the seed grammar, verbatim ----------------
+
+    #[test]
+    fn seed_v1_requests_still_parse() {
+        // Every line here was accepted by the seed daemon.
+        let r = parse_request("SUBMIT normal triple 4096 1 600", V1).unwrap();
+        assert_eq!(
+            r,
+            Request::Submit(SubmitSpec {
+                qos: QosClass::Normal,
+                job_type: JobType::TripleMode,
+                tasks: 4096,
+                user: 1,
+                run_secs: 600.0,
+                count: 1,
+            })
+        );
+        match parse_request("submit spot array 128 9", V1).unwrap() {
+            Request::Submit(s) => {
+                assert_eq!(s.run_secs, 3600.0);
+                assert_eq!(s.qos, QosClass::Spot);
+                assert_eq!(s.count, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            parse_request("SQUEUE", V1).unwrap(),
+            Request::Squeue(SqueueFilter::default())
+        );
+        assert_eq!(parse_request("ping", V1).unwrap(), Request::Ping);
+        assert_eq!(parse_request("SCANCEL 42", V1).unwrap(), Request::Scancel(42));
+        assert_eq!(parse_request("STATS", V1).unwrap(), Request::Stats);
+        assert_eq!(parse_request("UTIL", V1).unwrap(), Request::Util);
+        assert_eq!(parse_request("SHUTDOWN", V1).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn seed_v1_errors_keep_their_classes() {
+        let code = |line: &str| parse_request(line, V1).unwrap_err().code;
+        assert_eq!(code(""), ErrorCode::Empty);
+        assert_eq!(code("FROBNICATE"), ErrorCode::UnknownCommand);
+        assert_eq!(code("SUBMIT normal"), ErrorCode::BadArity);
+        assert_eq!(code("SUBMIT normal warp 1 1"), ErrorCode::BadArg);
+        assert_eq!(code("SUBMIT normal array 0 1"), ErrorCode::BadArg);
+        assert_eq!(code("SCANCEL x"), ErrorCode::BadArg);
+    }
+
+    // ---- request round-trips ----------------------------------------------
+
+    #[test]
+    fn v1_requests_roundtrip() {
+        for line in [
+            "SUBMIT normal triple 4096 1 600",
+            "SUBMIT spot array 128 9 3600",
+            "SUBMIT normal individual 1 7 60 10000",
+            "SQUEUE",
+            "SQUEUE user=1 qos=spot state=pending limit=10",
+            "SJOB 7",
+            "SCANCEL 42",
+            "WAIT 1 2 3 30",
+            "WAIT 9 0.5",
+            "STATS",
+            "UTIL",
+            "PING",
+            "SHUTDOWN",
+            "HELLO v2",
+        ] {
+            let req = parse_request(line, V1).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(render_request(&req, V1), line, "round-trip of {line:?}");
+        }
+    }
+
+    #[test]
+    fn v2_requests_roundtrip() {
+        for line in [
+            "SUBMIT qos=normal type=triple tasks=4096 user=1 run_secs=600 count=1",
+            "SUBMIT qos=spot type=individual tasks=1 user=9 run_secs=3600 count=10000",
+            "SQUEUE",
+            "SQUEUE user=1 qos=spot state=pending limit=10",
+            "SJOB id=7",
+            "SCANCEL id=42",
+            "WAIT jobs=1,2,3 timeout=30",
+            "STATS",
+            "UTIL",
+            "PING",
+            "SHUTDOWN",
+            "HELLO v2",
+        ] {
+            let req = parse_request(line, V2).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(render_request(&req, V2), line, "round-trip of {line:?}");
+        }
+    }
+
+    #[test]
+    fn v2_submit_requires_core_keys() {
+        assert_eq!(
+            parse_request("SUBMIT qos=normal type=triple tasks=64", V2)
+                .unwrap_err()
+                .code,
+            ErrorCode::BadArity
+        );
+        assert_eq!(
+            parse_request("SUBMIT qos=normal type=triple tasks=64 user=1 bogus=3", V2)
+                .unwrap_err()
+                .code,
+            ErrorCode::BadArg
+        );
+    }
+
+    #[test]
+    fn hello_negotiation_parses_in_both_versions() {
+        for v in [V1, V2] {
+            assert_eq!(
+                parse_request("HELLO v2", v).unwrap(),
+                Request::Hello(ProtocolVersion::V2)
+            );
+            assert_eq!(
+                parse_request("HELLO v1", v).unwrap(),
+                Request::Hello(ProtocolVersion::V1)
+            );
+        }
+        assert_eq!(
+            parse_request("HELLO v9", V1).unwrap_err().code,
+            ErrorCode::BadArg
+        );
+    }
+
+    // ---- response round-trips ---------------------------------------------
+
+    fn sample_responses() -> Vec<Response> {
+        vec![
+            Response::Pong,
+            Response::Hello(ProtocolVersion::V2),
+            Response::ShuttingDown,
+            Response::SubmitAck(SubmitAck {
+                first: 1,
+                last: 10_000,
+                count: 10_000,
+            }),
+            Response::Cancelled(42),
+            Response::Jobs(vec![
+                JobSummary {
+                    id: 3,
+                    job_type: JobType::TripleMode,
+                    tasks: 320,
+                    user: 9,
+                    qos: QosClass::Spot,
+                    state: JobState::Running,
+                },
+                JobSummary {
+                    id: 4,
+                    job_type: JobType::Array,
+                    tasks: 64,
+                    user: 1,
+                    qos: QosClass::Normal,
+                    state: JobState::Pending,
+                },
+            ]),
+            Response::Jobs(Vec::new()),
+            Response::Job(JobDetail {
+                id: 7,
+                job_type: JobType::Individual,
+                tasks: 1,
+                user: 4,
+                qos: QosClass::Normal,
+                state: JobState::Running,
+                submit_secs: 1.5,
+                queue_secs: 1.5,
+                start_secs: Some(2.25),
+                end_secs: None,
+                requeues: 0,
+                recognized_secs: Some(1.5),
+                dispatched_secs: Some(2.25),
+                latency_ns: Some(750_000_000),
+            }),
+            Response::Wait(WaitResult {
+                requested: 3,
+                dispatched: 3,
+                timed_out: false,
+                latency_ns: 123_456_789,
+            }),
+            Response::Stats(StatsSnapshot {
+                virtual_now_secs: 12.5,
+                dispatches: 10,
+                preemptions: 2,
+                requeues: 2,
+                cron_passes: 1,
+                main_passes: 3,
+                backfill_passes: 1,
+                triggered_passes: 4,
+                score_batches: 5,
+                jobs_scored: 50,
+                scorer: "native".into(),
+                requests_ok: 20,
+                requests_err: 1,
+                jobs_submitted: 12,
+                sched_latency_count: 8,
+                sched_latency_p50_ns: 420_000_000,
+                commands: [("submit".to_string(), 12u64), ("squeue".to_string(), 3u64)]
+                    .into_iter()
+                    .collect(),
+            }),
+            Response::Util(UtilSnapshot {
+                utilization: 0.25,
+                idle_cores: 456,
+                idle_nodes: 14,
+                total_cores: 608,
+                pending: 3,
+                running: 2,
+            }),
+            Response::Error(ApiError::not_found("unknown job 42")),
+            Response::Error(ApiError::bad_arg("tasks", "0")),
+        ]
+    }
+
+    #[test]
+    fn responses_roundtrip_v1() {
+        for resp in sample_responses() {
+            let wire = render_response(&resp, V1);
+            let back = parse_response(&wire, V1).unwrap_or_else(|e| panic!("{wire:?}: {e}"));
+            assert_eq!(back, resp, "v1 wire: {wire:?}");
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip_v2() {
+        for resp in sample_responses() {
+            let wire = render_response(&resp, V2);
+            let back = parse_response(&wire, V2).unwrap_or_else(|e| panic!("{wire:?}: {e}"));
+            assert_eq!(back, resp, "v2 wire: {wire:?}");
+        }
+    }
+
+    #[test]
+    fn v1_squeue_table_is_byte_compatible_with_seed() {
+        let resp = Response::Jobs(vec![JobSummary {
+            id: 1,
+            job_type: JobType::TripleMode,
+            tasks: 320,
+            user: 9,
+            qos: QosClass::Spot,
+            state: JobState::Pending,
+        }]);
+        assert_eq!(
+            render_response(&resp, V1),
+            "OK \nJOBID TYPE TASKS USER QOS STATE\n1 triple-mode 320 user9 spot Pending\n(1 jobs)"
+        );
+    }
+
+    #[test]
+    fn v1_error_rendering_keeps_err_prefix() {
+        let wire = render_response(&Response::Error(ApiError::unknown_command("FROB")), V1);
+        assert!(wire.starts_with("ERR "), "{wire}");
+        assert!(wire.contains("unknown_command"), "{wire}");
+    }
+}

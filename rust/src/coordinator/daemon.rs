@@ -5,8 +5,16 @@
 //! API requests (submit, queue, cancel, stats) lock the scheduler, act, and
 //! return. Interactive jobs' virtual scheduling latencies (the paper's
 //! metric) are harvested from the event log into the daemon metrics.
+//!
+//! The daemon works entirely in the typed protocol: [`Daemon::handle`] is
+//! `fn(&self, Request) -> Response`; wire rendering lives in
+//! [`super::codec`] and is reached through [`Daemon::handle_line_versioned`].
 
-use super::api::{self, ApiError, Request};
+use super::api::{
+    ApiError, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
+    StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+};
+use super::codec;
 use super::metrics::DaemonMetrics;
 use crate::cluster::Cluster;
 use crate::job::{JobId, JobSpec, JobState, QosClass, UserId};
@@ -15,7 +23,14 @@ use crate::sim::SimTime;
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Upper bound on jobs created by one batched `SUBMIT` (keeps a typo'd
+/// `count=` from allocating unbounded scheduler state in one RPC).
+pub const MAX_BATCH_JOBS: u64 = 1_000_000;
+
+/// Upper bound on a `WAIT` timeout (wall seconds).
+pub const MAX_WAIT_SECS: f64 = 3600.0;
 
 /// Daemon parameters.
 #[derive(Debug, Clone)]
@@ -112,117 +127,104 @@ impl Daemon {
             .expect("spawning pacer")
     }
 
-    /// Handle one request line; returns the response body.
+    /// Handle one v1 request line; returns the rendered response body.
+    /// (Compatibility surface — the transport uses
+    /// [`Daemon::handle_line_versioned`].)
     pub fn handle_line(&self, line: &str) -> String {
-        let t0 = Instant::now();
-        let result = api::parse_request(line).map(|req| self.handle(req));
-        let ok = result.is_ok();
-        let resp = match result {
-            Ok(r) => r,
-            Err(e) => api::err(&e),
-        };
-        self.metrics.record_request(ok, t0.elapsed().as_nanos() as u64);
-        resp
+        self.handle_line_versioned(line, ProtocolVersion::V1).0
     }
 
-    fn handle(&self, req: Request) -> String {
+    /// Handle one request line under `version`. Returns the rendered
+    /// response and, for a successful `HELLO`, the version the connection
+    /// speaks from the next request on (the `HELLO` response itself is
+    /// already rendered in the negotiated version).
+    pub fn handle_line_versioned(
+        &self,
+        line: &str,
+        version: ProtocolVersion,
+    ) -> (String, Option<ProtocolVersion>) {
+        let t0 = Instant::now();
+        let (resp, render_version, negotiated) = match codec::parse_request(line, version) {
+            Ok(req) => {
+                self.metrics.record_command(req.command_name());
+                let negotiated = match &req {
+                    Request::Hello(v) => Some(*v),
+                    _ => None,
+                };
+                let resp = self.handle(req);
+                (resp, negotiated.unwrap_or(version), negotiated)
+            }
+            Err(e) => (Response::Error(e), version, None),
+        };
+        let ok = !matches!(resp, Response::Error(_));
+        self.metrics.record_request(ok, t0.elapsed().as_nanos() as u64);
+        (codec::render_response(&resp, render_version), negotiated)
+    }
+
+    /// Handle one typed request. Total: failures come back as
+    /// [`Response::Error`].
+    pub fn handle(&self, req: Request) -> Response {
         match req {
-            Request::Ping => api::ok("pong"),
+            Request::Ping => Response::Pong,
+            Request::Hello(v) => Response::Hello(v),
             Request::Shutdown => {
                 self.shutdown();
-                api::ok("shutting down")
+                Response::ShuttingDown
             }
-            Request::Submit {
-                qos,
-                job_type,
-                tasks,
-                user,
-                run_secs,
-            } => self.handle_submit(qos, job_type, tasks, user, run_secs),
+            Request::Submit(spec) => self.handle_submit(&spec),
             Request::Scancel(id) => {
                 let mut sched = self.sched.lock().expect("scheduler poisoned");
                 if sched.cancel(JobId(id)) {
-                    api::ok(format!("cancelled {id}"))
+                    Response::Cancelled(id)
                 } else {
-                    api::err(&ApiError::BadValue {
-                        what: "job id",
-                        value: id.to_string(),
-                    })
+                    Response::Error(ApiError::not_found(format!("unknown or finished job {id}")))
                 }
             }
-            Request::Squeue => {
-                let sched = self.sched.lock().expect("scheduler poisoned");
-                let mut body = String::from("JOBID TYPE TASKS USER QOS STATE\n");
-                let mut shown = 0;
-                for st in [JobState::Pending, JobState::Running, JobState::Requeued] {
-                    for id in sched.jobs_in_state(st) {
-                        let j = sched.job(id).expect("listed job");
-                        body.push_str(&format!(
-                            "{} {} {} {} {} {:?}\n",
-                            id.0,
-                            j.spec.job_type.label(),
-                            j.spec.tasks,
-                            j.spec.user,
-                            j.spec.qos,
-                            j.state
-                        ));
-                        shown += 1;
-                    }
-                }
-                body.push_str(&format!("({shown} jobs)"));
-                api::ok(format!("\n{body}"))
-            }
-            Request::Stats => {
-                let sched = self.sched.lock().expect("scheduler poisoned");
-                let st = sched.stats();
-                api::ok(format!(
-                    "\nvirtual_now={} dispatches={} preemptions={} requeues={} cron_passes={} \
-                     main_passes={} backfill_passes={} triggered_passes={} score_batches={} jobs_scored={} scorer={}\n{}",
-                    sched.now(),
-                    st.dispatches,
-                    st.preemptions,
-                    st.requeues,
-                    st.cron_passes,
-                    st.main_passes,
-                    st.backfill_passes,
-                    st.triggered_passes,
-                    st.score_batches,
-                    st.jobs_scored,
-                    sched.config().scorer.name(),
-                    self.metrics.summary()
-                ))
-            }
-            Request::Util => {
-                let sched = self.sched.lock().expect("scheduler poisoned");
-                let c = sched.cluster();
-                api::ok(format!(
-                    "utilization={:.4} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
-                    c.utilization(),
-                    c.idle_cores(),
-                    c.idle_node_count(),
-                    c.total_cores(),
-                    sched.jobs_in_state(JobState::Pending).len(),
-                    sched.jobs_in_state(JobState::Running).len(),
-                ))
-            }
+            Request::Squeue(filter) => self.handle_squeue(&filter),
+            Request::Sjob(id) => self.handle_sjob(id),
+            Request::Wait { jobs, timeout_secs } => self.handle_wait(&jobs, timeout_secs),
+            Request::Stats => Response::Stats(self.stats_snapshot()),
+            Request::Util => Response::Util(self.util_snapshot()),
         }
     }
 
-    fn handle_submit(
-        &self,
-        qos: QosClass,
-        job_type: crate::job::JobType,
-        tasks: u32,
-        user: u32,
-        run_secs: f64,
-    ) -> String {
-        let specs: Vec<JobSpec> = match qos {
-            QosClass::Normal => crate::workload::interactive_burst(UserId(user), job_type, tasks),
-            QosClass::Spot => vec![JobSpec::spot(UserId(user), job_type, tasks)],
+    /// Materialize the specs a submission creates: `count` repetitions of
+    /// the paper's per-type expansion (individual → one spec per task).
+    fn materialize(spec: &SubmitSpec) -> Vec<JobSpec> {
+        let mut specs = Vec::new();
+        for _ in 0..spec.count {
+            let batch = match spec.qos {
+                QosClass::Normal => crate::workload::interactive_burst(
+                    UserId(spec.user),
+                    spec.job_type,
+                    spec.tasks,
+                ),
+                QosClass::Spot => vec![JobSpec::spot(UserId(spec.user), spec.job_type, spec.tasks)],
+            };
+            specs.extend(
+                batch
+                    .into_iter()
+                    .map(|s| s.with_run_time(SimTime::from_secs_f64(spec.run_secs))),
+            );
         }
-        .into_iter()
-        .map(|s| s.with_run_time(SimTime::from_secs_f64(run_secs)))
-        .collect();
+        specs
+    }
+
+    fn handle_submit(&self, spec: &SubmitSpec) -> Response {
+        let expansion = match spec.qos {
+            // Individual submissions expand to one job per task.
+            QosClass::Normal if spec.job_type == crate::job::JobType::Individual => {
+                spec.tasks as u64
+            }
+            _ => 1,
+        };
+        if spec.count as u64 * expansion > MAX_BATCH_JOBS {
+            return Response::Error(ApiError::bad_arg(
+                "count",
+                &format!("{} (batch exceeds {MAX_BATCH_JOBS} jobs)", spec.count),
+            ));
+        }
+        let specs = Self::materialize(spec);
 
         let mut sched = self.sched.lock().expect("scheduler poisoned");
         // Keep the virtual clock caught up so submissions land "now".
@@ -230,17 +232,199 @@ impl Daemon {
         if target > sched.now() {
             sched.run_until(target);
         }
-        let ids = sched.submit_burst(specs);
+        let ids = if spec.count > 1 {
+            // Batched: the whole burst arrives in this one RPC.
+            sched.submit_batch(specs)
+        } else {
+            // Single spec: client-side serialization, as the paper's
+            // launcher loop submits (one submit RPC apart).
+            sched.submit_burst(specs)
+        };
         self.metrics
             .jobs_submitted
             .fetch_add(ids.len() as u64, Ordering::Relaxed);
-        if qos == QosClass::Normal {
+        if spec.qos == QosClass::Normal {
             let mut tracked = self.tracked.lock().expect("tracked poisoned");
             tracked.extend(ids.iter().copied());
         }
         let first = ids.first().map(|j| j.0).unwrap_or(0);
         let last = ids.last().map(|j| j.0).unwrap_or(0);
-        api::ok(format!("jobs={first}-{last} count={}", ids.len()))
+        Response::SubmitAck(SubmitAck {
+            first,
+            last,
+            count: ids.len() as u64,
+        })
+    }
+
+    fn handle_squeue(&self, filter: &SqueueFilter) -> Response {
+        let sched = self.sched.lock().expect("scheduler poisoned");
+        let states: Vec<JobState> = match filter.state {
+            Some(s) => vec![s],
+            None => vec![JobState::Pending, JobState::Running, JobState::Requeued],
+        };
+        let limit = filter.limit.unwrap_or(usize::MAX);
+        let mut rows = Vec::new();
+        'outer: for st in states {
+            for id in sched.jobs_in_state(st) {
+                let j = sched.job(id).expect("listed job");
+                if filter.user.is_some_and(|u| j.spec.user.0 != u) {
+                    continue;
+                }
+                if filter.qos.is_some_and(|q| j.spec.qos != q) {
+                    continue;
+                }
+                rows.push(JobSummary {
+                    id: id.0,
+                    job_type: j.spec.job_type,
+                    tasks: j.spec.tasks,
+                    user: j.spec.user.0,
+                    qos: j.spec.qos,
+                    state: j.state,
+                });
+                if rows.len() >= limit {
+                    break 'outer;
+                }
+            }
+        }
+        Response::Jobs(rows)
+    }
+
+    fn handle_sjob(&self, id: u64) -> Response {
+        let sched = self.sched.lock().expect("scheduler poisoned");
+        let Some(j) = sched.job(JobId(id)) else {
+            return Response::Error(ApiError::not_found(format!("unknown job {id}")));
+        };
+        let recognized = sched.log().first(JobId(id), LogKind::Recognized);
+        let dispatched = sched.log().last(JobId(id), LogKind::DispatchDone);
+        let latency_ns = match (recognized, dispatched) {
+            (Some(r), Some(d)) => Some(d.saturating_sub(r).as_nanos()),
+            _ => None,
+        };
+        Response::Job(JobDetail {
+            id,
+            job_type: j.spec.job_type,
+            tasks: j.spec.tasks,
+            user: j.spec.user.0,
+            qos: j.spec.qos,
+            state: j.state,
+            submit_secs: j.submit_time.as_secs_f64(),
+            queue_secs: j.queue_time.as_secs_f64(),
+            start_secs: j.start_time.map(SimTime::as_secs_f64),
+            end_secs: j.end_time.map(SimTime::as_secs_f64),
+            requeues: j.requeue_count,
+            recognized_secs: recognized.map(SimTime::as_secs_f64),
+            dispatched_secs: dispatched.map(SimTime::as_secs_f64),
+            latency_ns,
+        })
+    }
+
+    /// Block until every job in `jobs` has a `DispatchDone` log record, a
+    /// terminal state makes dispatch impossible, or the wall timeout
+    /// expires. Paces the scheduler itself, so it works with or without the
+    /// pacer thread. Reports the burst's virtual scheduling latency (first
+    /// `Recognized` → last `DispatchDone`), the paper's Figure-2 metric.
+    fn handle_wait(&self, jobs: &[u64], timeout_secs: f64) -> Response {
+        if jobs.is_empty() {
+            return Response::Error(ApiError::bad_arg("jobs", "(empty)"));
+        }
+        if !(timeout_secs.is_finite() && (0.0..=MAX_WAIT_SECS).contains(&timeout_secs)) {
+            return Response::Error(ApiError::bad_arg("timeout", &format!("{timeout_secs}")));
+        }
+        let ids: Vec<JobId> = jobs.iter().map(|&j| JobId(j)).collect();
+        {
+            let sched = self.sched.lock().expect("scheduler poisoned");
+            for &id in &ids {
+                if sched.job(id).is_none() {
+                    return Response::Error(ApiError::not_found(format!("unknown job {}", id.0)));
+                }
+            }
+        }
+        let deadline = Instant::now() + Duration::from_secs_f64(timeout_secs);
+        loop {
+            self.pace();
+            let mut timed_out = false;
+            {
+                let sched = self.sched.lock().expect("scheduler poisoned");
+                let dispatched = ids
+                    .iter()
+                    .filter(|&&id| sched.log().last(id, LogKind::DispatchDone).is_some())
+                    .count();
+                // A job that reached a terminal state without ever
+                // dispatching (e.g. cancelled while pending) can never
+                // dispatch: don't hold the client hostage for it.
+                let settled = ids.iter().all(|&id| {
+                    sched.log().last(id, LogKind::DispatchDone).is_some()
+                        || sched.job(id).map_or(true, |j| j.state.is_terminal())
+                });
+                if settled || Instant::now() >= deadline {
+                    if !settled {
+                        timed_out = true;
+                    }
+                    let latency_ns = sched
+                        .log()
+                        .measure(&ids)
+                        .map(|m| {
+                            m.last_dispatched
+                                .saturating_sub(m.first_recognized)
+                                .as_nanos()
+                        })
+                        .unwrap_or(0);
+                    return Response::Wait(WaitResult {
+                        requested: ids.len() as u32,
+                        dispatched: dispatched as u32,
+                        timed_out,
+                        latency_ns,
+                    });
+                }
+            }
+            if !self.is_running() {
+                return Response::Error(ApiError::unsupported("daemon is shutting down"));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    fn stats_snapshot(&self) -> StatsSnapshot {
+        let sched = self.sched.lock().expect("scheduler poisoned");
+        let st = sched.stats();
+        let hist = self.metrics.sched_latency();
+        StatsSnapshot {
+            virtual_now_secs: sched.now().as_secs_f64(),
+            dispatches: st.dispatches,
+            preemptions: st.preemptions,
+            requeues: st.requeues,
+            cron_passes: st.cron_passes,
+            main_passes: st.main_passes,
+            backfill_passes: st.backfill_passes,
+            triggered_passes: st.triggered_passes,
+            score_batches: st.score_batches,
+            jobs_scored: st.jobs_scored,
+            scorer: sched.config().scorer.name().to_string(),
+            requests_ok: self.metrics.requests_ok.load(Ordering::Relaxed),
+            requests_err: self.metrics.requests_err.load(Ordering::Relaxed),
+            jobs_submitted: self.metrics.jobs_submitted.load(Ordering::Relaxed),
+            sched_latency_count: hist.count(),
+            sched_latency_p50_ns: hist.p50(),
+            commands: self
+                .metrics
+                .command_counts()
+                .into_iter()
+                .map(|(cmd, n)| (cmd.to_ascii_lowercase(), n))
+                .collect(),
+        }
+    }
+
+    fn util_snapshot(&self) -> UtilSnapshot {
+        let sched = self.sched.lock().expect("scheduler poisoned");
+        let c = sched.cluster();
+        UtilSnapshot {
+            utilization: c.utilization(),
+            idle_cores: c.idle_cores(),
+            idle_nodes: c.idle_node_count(),
+            total_cores: c.total_cores(),
+            pending: sched.jobs_in_state(JobState::Pending).len(),
+            running: sched.jobs_in_state(JobState::Running).len(),
+        }
     }
 
     /// Lock and inspect the scheduler (tests + e2e reporting).
@@ -254,6 +438,7 @@ impl Daemon {
 mod tests {
     use super::*;
     use crate::cluster::{topology, PartitionLayout};
+    use crate::job::JobType;
     use crate::sim::SchedCosts;
 
     fn daemon() -> Arc<Daemon> {
@@ -272,6 +457,12 @@ mod tests {
         let d = daemon();
         assert_eq!(d.handle_line("PING"), "OK pong");
         assert!(d.handle_line("STATS").contains("virtual_now"));
+        // Typed path.
+        assert_eq!(d.handle(Request::Ping), Response::Pong);
+        match d.handle(Request::Stats) {
+            Response::Stats(s) => assert_eq!(s.scorer, "native"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -301,6 +492,69 @@ mod tests {
     }
 
     #[test]
+    fn squeue_filters_apply() {
+        let d = daemon();
+        d.handle(Request::Submit(SubmitSpec::new(
+            QosClass::Spot,
+            JobType::TripleMode,
+            320,
+            9,
+        )));
+        d.handle(Request::Submit(SubmitSpec::new(
+            QosClass::Normal,
+            JobType::Array,
+            16,
+            1,
+        )));
+        let all = match d.handle(Request::Squeue(SqueueFilter::default())) {
+            Response::Jobs(rows) => rows,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(all.len(), 2);
+        let spot_only = match d.handle(Request::Squeue(SqueueFilter {
+            qos: Some(QosClass::Spot),
+            ..Default::default()
+        })) {
+            Response::Jobs(rows) => rows,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(spot_only.len(), 1);
+        assert_eq!(spot_only[0].user, 9);
+        let limited = match d.handle(Request::Squeue(SqueueFilter {
+            limit: Some(1),
+            ..Default::default()
+        })) {
+            Response::Jobs(rows) => rows,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(limited.len(), 1);
+    }
+
+    #[test]
+    fn batch_submit_creates_count_jobs_in_one_request() {
+        let d = daemon();
+        let resp = d.handle(Request::Submit(
+            SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, 3)
+                .with_run_secs(60.0)
+                .with_count(10_000),
+        ));
+        match resp {
+            Response::SubmitAck(ack) => {
+                assert_eq!(ack.count, 10_000);
+                assert_eq!(ack.last - ack.first + 1, 10_000);
+            }
+            other => panic!("{other:?}"),
+        }
+        // An oversized batch is rejected with a typed error.
+        match d.handle(Request::Submit(
+            SubmitSpec::new(QosClass::Normal, JobType::Individual, 100, 3).with_count(100_000),
+        )) {
+            Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::BadArg),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn scancel_pending_job() {
         let d = daemon();
         let resp = d.handle_line("SUBMIT normal array 64 1 600");
@@ -315,9 +569,106 @@ mod tests {
             .unwrap();
         let out = d.handle_line(&format!("SCANCEL {id}"));
         assert!(out.starts_with("OK cancelled"), "{out}");
-        // Cancelling again fails gracefully.
+        // Cancelling again fails gracefully with a typed NotFound.
+        match d.handle(Request::Scancel(id)) {
+            Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::NotFound),
+            other => panic!("{other:?}"),
+        }
         let out2 = d.handle_line(&format!("SCANCEL {id}"));
         assert!(out2.starts_with("ERR"), "{out2}");
+    }
+
+    #[test]
+    fn sjob_reports_detail_and_latency() {
+        let d = daemon();
+        let ack = match d.handle(Request::Submit(
+            SubmitSpec::new(QosClass::Normal, JobType::TripleMode, 608, 1).with_run_secs(60.0),
+        )) {
+            Response::SubmitAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let wait = match d.handle(Request::Wait {
+            jobs: vec![ack.first],
+            timeout_secs: 10.0,
+        }) {
+            Response::Wait(w) => w,
+            other => panic!("{other:?}"),
+        };
+        assert!(!wait.timed_out);
+        assert_eq!(wait.dispatched, 1);
+        match d.handle(Request::Sjob(ack.first)) {
+            Response::Job(detail) => {
+                assert_eq!(detail.id, ack.first);
+                assert_eq!(detail.latency_ns, Some(wait.latency_ns));
+                assert!(detail.dispatched_secs.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+        match d.handle(Request::Sjob(999_999)) {
+            Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::NotFound),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_latency_matches_metrics_histogram() {
+        let d = daemon();
+        let ack = match d.handle(Request::Submit(
+            SubmitSpec::new(QosClass::Normal, JobType::TripleMode, 608, 1).with_run_secs(60.0),
+        )) {
+            Response::SubmitAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let wait = match d.handle(Request::Wait {
+            jobs: vec![ack.first],
+            timeout_secs: 10.0,
+        }) {
+            Response::Wait(w) => w,
+            other => panic!("{other:?}"),
+        };
+        assert!(!wait.timed_out);
+        // WAIT paces the daemon itself, so the histogram harvest happened.
+        let h = d.metrics.sched_latency();
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), wait.latency_ns, "WAIT must report the histogram's value");
+    }
+
+    #[test]
+    fn wait_on_unknown_job_is_not_found() {
+        let d = daemon();
+        match d.handle(Request::Wait {
+            jobs: vec![12345],
+            timeout_secs: 1.0,
+        }) {
+            Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::NotFound),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_on_cancelled_job_returns_without_timeout() {
+        let d = daemon();
+        // A job too large for the user limit would pend forever; cancel it
+        // and WAIT must return promptly with dispatched=0.
+        let ack = match d.handle(Request::Submit(
+            SubmitSpec::new(QosClass::Normal, JobType::Array, 64, 1).with_run_secs(600.0),
+        )) {
+            Response::SubmitAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(
+            d.handle(Request::Scancel(ack.first)),
+            Response::Cancelled(_)
+        ));
+        let wait = match d.handle(Request::Wait {
+            jobs: vec![ack.first],
+            timeout_secs: 5.0,
+        }) {
+            Response::Wait(w) => w,
+            other => panic!("{other:?}"),
+        };
+        assert!(!wait.timed_out);
+        assert_eq!(wait.dispatched, 0);
     }
 
     #[test]
@@ -326,6 +677,31 @@ mod tests {
         let out = d.handle_line("SUBMIT nope nope nope nope");
         assert!(out.starts_with("ERR"));
         assert_eq!(d.metrics.requests_err.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn per_command_counters_accumulate() {
+        let d = daemon();
+        d.handle_line("PING");
+        d.handle_line("PING");
+        d.handle_line("SQUEUE");
+        match d.handle(Request::Stats) {
+            Response::Stats(s) => {
+                assert_eq!(s.commands.get("ping").copied(), Some(2));
+                assert_eq!(s.commands.get("squeue").copied(), Some(1));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_negotiates_v2_rendering() {
+        let d = daemon();
+        let (resp, negotiated) = d.handle_line_versioned("HELLO v2", ProtocolVersion::V1);
+        assert_eq!(resp, "OK kind=hello proto=v2");
+        assert_eq!(negotiated, Some(ProtocolVersion::V2));
+        let (resp, _) = d.handle_line_versioned("PING", ProtocolVersion::V2);
+        assert_eq!(resp, "OK kind=pong");
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Daemon metrics: request counters and latency histograms.
+//! Daemon metrics: request counters (total and per-command) and latency
+//! histograms.
 
+use super::api::COMMANDS;
 use crate::metrics::LogHistogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -13,6 +15,8 @@ pub struct DaemonMetrics {
     pub requests_err: AtomicU64,
     /// Jobs submitted through the API.
     pub jobs_submitted: AtomicU64,
+    /// Per-command request counts, indexed like [`COMMANDS`].
+    per_command: [AtomicU64; COMMANDS.len()],
     /// Wall-clock latency of request handling (ns).
     request_latency: Mutex<LogHistogram>,
     /// *Virtual* scheduling latency of interactive jobs (recognized →
@@ -34,6 +38,22 @@ impl DaemonMetrics {
             .record(wall_ns);
     }
 
+    /// Count one parsed request by its command verb (a [`COMMANDS`] entry).
+    pub fn record_command(&self, command: &str) {
+        if let Some(i) = COMMANDS.iter().position(|&c| c == command) {
+            self.per_command[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot of the per-command counters, in [`COMMANDS`] order.
+    pub fn command_counts(&self) -> Vec<(&'static str, u64)> {
+        COMMANDS
+            .iter()
+            .zip(&self.per_command)
+            .map(|(&cmd, n)| (cmd, n.load(Ordering::Relaxed)))
+            .collect()
+    }
+
     /// Record a job's virtual scheduling latency.
     pub fn record_sched_latency(&self, sim_ns: u64) {
         self.sched_latency
@@ -52,7 +72,7 @@ impl DaemonMetrics {
         self.sched_latency.lock().expect("metrics poisoned").clone()
     }
 
-    /// One-line textual summary for the STATS command.
+    /// One-line textual summary (e2e reporting).
     pub fn summary(&self) -> String {
         format!(
             "requests_ok={} requests_err={} jobs_submitted={} | request_wall: {} | sched_virtual: {}",
@@ -82,5 +102,19 @@ mod tests {
         assert!(s.contains("jobs_submitted=3"));
         assert_eq!(m.request_latency().count(), 2);
         assert_eq!(m.sched_latency().count(), 1);
+    }
+
+    #[test]
+    fn per_command_counts() {
+        let m = DaemonMetrics::default();
+        m.record_command("SUBMIT");
+        m.record_command("SUBMIT");
+        m.record_command("WAIT");
+        m.record_command("NO_SUCH_COMMAND"); // silently ignored
+        let counts: std::collections::BTreeMap<&str, u64> =
+            m.command_counts().into_iter().collect();
+        assert_eq!(counts["SUBMIT"], 2);
+        assert_eq!(counts["WAIT"], 1);
+        assert_eq!(counts["PING"], 0);
     }
 }

@@ -1,24 +1,38 @@
 //! The runnable coordinator daemon.
 //!
 //! Wraps the [`crate::sched::Scheduler`] in a thread-safe service with a
-//! line-based TCP API (tokio is unavailable offline, so the connection
-//! handling runs on our own [`threadpool`]):
+//! versioned, typed TCP API (tokio is unavailable offline, so the
+//! connection handling runs on our own [`threadpool`]):
 //!
+//! * [`api`] — the typed protocol core: `Request` / `Response` enums,
+//!   payload structs (`SubmitAck`, `JobSummary`, `StatsSnapshot`, …), and
+//!   typed `ErrorCode`s.
+//! * [`codec`] — wire rendering/parsing for both protocol versions: v1 (the
+//!   original line grammar, byte-compatible) and v2 (tagged `key=value`
+//!   records), negotiated per connection via `HELLO v2`. See `PROTOCOL.md`.
 //! * [`daemon`] — the service core: scheduler behind a mutex, a pacer thread
 //!   that advances virtual time against the wall clock at a configurable
-//!   speedup, and per-request latency metrics.
-//! * [`api`] — the text protocol (SUBMIT/SQUEUE/SCANCEL/STATS/...).
-//! * [`server`] — TCP listener + connection loop.
-//! * [`client`] — a blocking client for the CLI and examples.
-//! * [`metrics`] — daemon counters and latency histograms.
+//!   speedup, batched `SUBMIT`, blocking `WAIT`, and per-request metrics.
+//! * [`server`] — TCP listener + connection loop (per-connection protocol
+//!   version, idle-connection expiry).
+//! * [`client`] — the blocking typed client for the CLI, examples, and
+//!   tests.
+//! * [`metrics`] — daemon counters (total and per-command) and latency
+//!   histograms.
 //! * [`threadpool`] — fixed worker pool substrate.
 
 pub mod api;
 pub mod client;
+pub mod codec;
 pub mod daemon;
 pub mod metrics;
 pub mod server;
 pub mod threadpool;
 
+pub use api::{
+    ApiError, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
+    StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+};
+pub use client::{Client, ClientError};
 pub use daemon::{Daemon, DaemonConfig};
 pub use server::Server;

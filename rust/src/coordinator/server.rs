@@ -1,24 +1,34 @@
 //! TCP server: line-based request/response over a worker pool.
 //!
 //! Responses may span multiple lines and are terminated by one blank line.
+//! Each connection starts in protocol v1 and may upgrade with `HELLO v2`;
+//! the negotiated version is per-connection state held here. Idle
+//! connections are expired after [`Server::idle_timeout`] so a silent client
+//! cannot pin a worker thread forever.
 
+use super::api::ProtocolVersion;
 use super::daemon::Daemon;
 use super::threadpool::ThreadPool;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Default idle-connection expiry.
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// The TCP front-end.
 pub struct Server {
     listener: TcpListener,
     daemon: Arc<Daemon>,
     pool: ThreadPool,
+    idle_timeout: Duration,
 }
 
 impl Server {
-    /// Bind to an address (use port 0 for an ephemeral port).
+    /// Bind to an address (use port 0 for an ephemeral port) with the
+    /// default idle timeout.
     pub fn bind(daemon: Arc<Daemon>, addr: &str, workers: usize) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         // Non-blocking accept so the loop can observe shutdown.
@@ -27,7 +37,15 @@ impl Server {
             listener,
             daemon,
             pool: ThreadPool::new(workers.max(1)),
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
         })
+    }
+
+    /// Builder: expire connections with no complete request for `d`,
+    /// recycling their worker back into the pool.
+    pub fn with_idle_timeout(mut self, d: Duration) -> Self {
+        self.idle_timeout = d;
+        self
     }
 
     /// The bound address.
@@ -41,8 +59,9 @@ impl Server {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
                     let daemon = Arc::clone(&self.daemon);
+                    let idle_timeout = self.idle_timeout;
                     self.pool.execute(move || {
-                        if let Err(e) = handle_connection(stream, &daemon) {
+                        if let Err(e) = handle_connection(stream, &daemon, idle_timeout) {
                             eprintln!("connection error: {e:#}");
                         }
                     });
@@ -59,37 +78,51 @@ impl Server {
     }
 }
 
-fn handle_connection(stream: TcpStream, daemon: &Arc<Daemon>) -> Result<()> {
+fn handle_connection(stream: TcpStream, daemon: &Arc<Daemon>, idle_timeout: Duration) -> Result<()> {
     stream.set_nodelay(true).ok();
-    // Short poll timeout so idle connections observe daemon shutdown
-    // promptly (a long blocking read would stall worker-pool teardown).
+    // Short poll timeout so idle connections observe daemon shutdown (and
+    // their own idle expiry) promptly — a long blocking read would stall
+    // worker-pool teardown.
     stream
         .set_read_timeout(Some(Duration::from_millis(200)))
         .context("read timeout")?;
     let mut writer = stream.try_clone().context("cloning stream")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    // Every connection starts in v1; HELLO upgrades it.
+    let mut version = ProtocolVersion::V1;
+    let mut last_activity = Instant::now();
     loop {
         // Note: on a poll timeout, any partially-read bytes stay in `line`
         // and the next read_line continues appending — no data loss.
         match reader.read_line(&mut line) {
             Ok(0) => break, // peer closed
             Ok(_) => {
+                last_activity = Instant::now();
                 let trimmed = line.trim_end_matches(['\n', '\r']).to_string();
                 line.clear();
                 if trimmed.is_empty() {
                     continue;
                 }
-                let resp = daemon.handle_line(&trimmed);
+                let (resp, negotiated) = daemon.handle_line_versioned(&trimmed, version);
+                if let Some(v) = negotiated {
+                    version = v;
+                }
                 writer.write_all(resp.as_bytes())?;
                 writer.write_all(b"\n\n")?;
                 writer.flush()?;
+                // Handling time (e.g. a long WAIT) must not count as idle.
+                last_activity = Instant::now();
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // Idle poll tick: keep waiting unless shutting down.
+                // Idle poll tick: expire silent connections so the worker
+                // goes back to serving the accept queue.
+                if last_activity.elapsed() >= idle_timeout {
+                    break;
+                }
             }
             Err(_) => break, // peer gone
         }
@@ -104,12 +137,20 @@ fn handle_connection(stream: TcpStream, daemon: &Arc<Daemon>) -> Result<()> {
 mod tests {
     use super::*;
     use crate::cluster::{topology, PartitionLayout};
+    use crate::coordinator::api::{SqueueFilter, SubmitSpec};
     use crate::coordinator::client::Client;
     use crate::coordinator::daemon::DaemonConfig;
+    use crate::job::{JobType, QosClass};
     use crate::sched::SchedulerConfig;
     use crate::sim::SchedCosts;
 
     fn spawn_server() -> (Arc<Daemon>, SocketAddr, std::thread::JoinHandle<()>) {
+        spawn_server_with(DEFAULT_IDLE_TIMEOUT)
+    }
+
+    fn spawn_server_with(
+        idle: Duration,
+    ) -> (Arc<Daemon>, SocketAddr, std::thread::JoinHandle<()>) {
         let daemon = Daemon::new(
             topology::tx2500(),
             SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
@@ -118,7 +159,9 @@ mod tests {
                 pacer_tick_ms: 1,
             },
         );
-        let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
+        let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2)
+            .unwrap()
+            .with_idle_timeout(idle);
         let addr = server.local_addr().unwrap();
         let handle = std::thread::spawn(move || server.serve());
         (daemon, addr, handle)
@@ -146,6 +189,23 @@ mod tests {
     }
 
     #[test]
+    fn typed_v2_session_over_tcp() {
+        let (daemon, addr, handle) = spawn_server();
+        let mut c = Client::connect_v2(&addr.to_string()).unwrap();
+        let ack = c
+            .submit(&SubmitSpec::new(QosClass::Spot, JobType::TripleMode, 320, 9))
+            .unwrap();
+        assert_eq!(ack.count, 1);
+        let rows = c.squeue(&SqueueFilter::default()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].tasks, 320);
+        let util = c.util().unwrap();
+        assert_eq!(util.total_cores, 608);
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
     fn concurrent_clients() {
         let (daemon, addr, handle) = spawn_server();
         let addr_s = addr.to_string();
@@ -163,6 +223,21 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn idle_connection_is_recycled() {
+        let (daemon, addr, handle) = spawn_server_with(Duration::from_millis(300));
+        let mut idle = Client::connect(&addr.to_string()).unwrap();
+        assert_eq!(idle.request("PING").unwrap(), "OK pong");
+        // Go silent past the idle timeout: the server must close us.
+        std::thread::sleep(Duration::from_millis(900));
+        assert!(idle.request("PING").is_err(), "idle connection must expire");
+        // The recycled worker serves a fresh connection fine.
+        let mut fresh = Client::connect(&addr.to_string()).unwrap();
+        assert_eq!(fresh.request("PING").unwrap(), "OK pong");
         daemon.shutdown();
         handle.join().unwrap();
     }

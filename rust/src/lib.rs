@@ -21,8 +21,9 @@
 //! * [`runtime`] — the PJRT/XLA bridge: loads the AOT-compiled scheduling
 //!   decision kernels (JAX + Pallas, built once by `make artifacts`) and
 //!   exposes them to the scheduler hot path with a pure-Rust fallback.
-//! * [`coordinator`] — the runnable daemon: thread pool, TCP text API,
-//!   metrics.
+//! * [`coordinator`] — the runnable daemon: thread pool, versioned typed
+//!   TCP protocol (v1 line grammar / v2 tagged records, see PROTOCOL.md),
+//!   batch submit, remote launch-latency measurement (`WAIT`), metrics.
 //! * [`workload`] / [`experiments`] — synthetic workload generators and the
 //!   harness that regenerates every figure and table in the paper.
 //! * [`util`], [`metrics`], [`testkit`], [`benchkit`] — std-only substrates

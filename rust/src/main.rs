@@ -7,11 +7,14 @@
 //! * `simulate` — run a mixed interactive+spot workload on a simulated
 //!   cluster and print a utilization/latency report.
 //! * `daemon` — start the coordinator daemon (TCP service).
-//! * `submit | squeue | scancel | stats | util | shutdown` — client commands
-//!   against a running daemon.
+//! * `submit | squeue | sjob | scancel | wait | stats | util | shutdown` —
+//!   typed client commands against a running daemon (protocol v2, negotiated
+//!   with `HELLO`; falls back to v1 output parsing transparently).
 
 use spotcloud::cluster::{topology, PartitionLayout};
-use spotcloud::coordinator::{client::Client, Daemon, DaemonConfig, Server};
+use spotcloud::coordinator::{
+    api, Client, Daemon, DaemonConfig, Server, SqueueFilter, SubmitSpec,
+};
 use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
 use spotcloud::sched::SchedulerConfig;
 use spotcloud::sim::SchedCosts;
@@ -24,9 +27,10 @@ fn main() {
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("daemon") => cmd_daemon(&args[1..]),
-        Some(c @ ("submit" | "squeue" | "scancel" | "stats" | "util" | "shutdown" | "ping")) => {
-            cmd_client(c, &args[1..])
-        }
+        Some(
+            c @ ("submit" | "squeue" | "sjob" | "scancel" | "wait" | "stats" | "util"
+            | "shutdown" | "ping"),
+        ) => cmd_client(c, &args[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
             0
@@ -49,7 +53,7 @@ fn print_usage() {
            experiment <id|all>   regenerate a paper figure ({})\n\
            simulate              run a mixed workload simulation\n\
            daemon                start the coordinator daemon\n\
-           submit|squeue|scancel|stats|util|ping|shutdown   client commands\n\n\
+           submit|squeue|sjob|scancel|wait|stats|util|ping|shutdown   client commands\n\n\
          run `spotcloud <subcommand> --help` for options",
         spotcloud::experiments::ALL.join(", ")
     );
@@ -221,56 +225,222 @@ fn cmd_daemon(args: &[String]) -> i32 {
 }
 
 fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
-    let cmd = Command::new("spotcloud client", "send a command to a running daemon")
+    let cmd = Command::new("spotcloud client", "send a typed command to a running daemon")
         .opt("addr", "daemon address", Some("127.0.0.1:7461"))
-        .opt("qos", "normal | spot (submit)", Some("normal"))
+        .opt("qos", "normal | spot (submit, squeue filter)", None)
         .opt("type", "individual | array | triple (submit)", Some("triple"))
         .opt("tasks", "task count (submit)", Some("64"))
-        .opt("user", "user id (submit)", Some("1"))
+        .opt("user", "user id (submit, squeue filter)", None)
         .opt("run-secs", "job run time (submit)", Some("600"))
-        .positional("arg", "job id for scancel");
+        .opt("count", "batch count: copies of the spec in one RPC (submit)", Some("1"))
+        .opt("state", "state filter (squeue)", None)
+        .opt("limit", "row limit (squeue)", None)
+        .opt("timeout", "wall timeout in seconds (wait)", Some("30"))
+        .positional("arg", "job id(s) for scancel / sjob / wait");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_help(&cmd, e),
     };
     let addr = parsed.get("addr").unwrap();
-    let mut client = match Client::connect(addr) {
+    let mut client = match Client::connect_v2(addr) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("cannot reach daemon at {addr}: {e:#}");
             return 1;
         }
     };
-    let line = match subcmd {
-        "submit" => format!(
-            "SUBMIT {} {} {} {} {}",
-            parsed.get("qos").unwrap(),
-            parsed.get("type").unwrap(),
-            parsed.get("tasks").unwrap(),
-            parsed.get("user").unwrap(),
-            parsed.get("run-secs").unwrap()
-        ),
-        "scancel" => match parsed.positionals.first() {
-            Some(id) => format!("SCANCEL {id}"),
-            None => {
-                eprintln!("scancel needs a job id");
+    let job_ids = || -> Result<Vec<u64>, String> {
+        let ids: Result<Vec<u64>, _> = parsed
+            .positionals
+            .iter()
+            .map(|p| p.parse::<u64>().map_err(|_| format!("bad job id {p:?}")))
+            .collect();
+        let ids = ids?;
+        if ids.is_empty() {
+            return Err(format!("{subcmd} needs at least one job id"));
+        }
+        Ok(ids)
+    };
+    let outcome: Result<String, spotcloud::coordinator::ClientError> = match subcmd {
+        "ping" => client.ping().map(|()| "pong".to_string()),
+        "shutdown" => client.shutdown().map(|()| "shutting down".to_string()),
+        "stats" => client.stats().map(render_stats),
+        "util" => client.util().map(|u| u.to_string()),
+        "submit" => {
+            let qos = parsed.get("qos").unwrap_or("normal");
+            let Some(qos) = api::parse_qos(qos) else {
+                eprintln!("bad --qos {qos:?}");
+                return 2;
+            };
+            let ty = parsed.get("type").unwrap();
+            let Some(job_type) = api::parse_job_type(ty) else {
+                eprintln!("bad --type {ty:?}");
+                return 2;
+            };
+            let (Ok(tasks), Ok(user), Ok(run_secs), Ok(count)) = (
+                parsed.value::<u32>("tasks"),
+                parsed.value_opt::<u32>("user").map(|u| u.unwrap_or(1)),
+                parsed.value::<f64>("run-secs"),
+                parsed.value::<u32>("count"),
+            ) else {
+                eprintln!("bad numeric option");
+                return 2;
+            };
+            client
+                .submit(
+                    &SubmitSpec::new(qos, job_type, tasks, user)
+                        .with_run_secs(run_secs)
+                        .with_count(count),
+                )
+                .map(|ack| ack.to_string())
+        }
+        "squeue" => {
+            let mut filter = SqueueFilter::default();
+            match parsed.value_opt::<u32>("user") {
+                Ok(u) => filter.user = u,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+            if let Some(q) = parsed.get("qos") {
+                match api::parse_qos(q) {
+                    Some(q) => filter.qos = Some(q),
+                    None => {
+                        eprintln!("bad --qos {q:?}");
+                        return 2;
+                    }
+                }
+            }
+            if let Some(s) = parsed.get("state") {
+                match api::parse_state(s) {
+                    Some(s) => filter.state = Some(s),
+                    None => {
+                        eprintln!("bad --state {s:?}");
+                        return 2;
+                    }
+                }
+            }
+            match parsed.value_opt::<usize>("limit") {
+                Ok(l) => filter.limit = l,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+            client.squeue(&filter).map(render_squeue)
+        }
+        "sjob" => match job_ids() {
+            Ok(ids) => client.job(ids[0]).map(render_job),
+            Err(msg) => {
+                eprintln!("{msg}");
                 return 2;
             }
         },
-        other => other.to_ascii_uppercase(),
-    };
-    match client.request(&line) {
-        Ok(resp) => {
-            println!("{resp}");
-            if resp.starts_with("ERR") {
-                1
-            } else {
-                0
+        "scancel" => match job_ids() {
+            Ok(ids) => client.cancel(ids[0]).map(|id| format!("cancelled {id}")),
+            Err(msg) => {
+                eprintln!("{msg}");
+                return 2;
             }
+        },
+        "wait" => match job_ids() {
+            Ok(ids) => {
+                let timeout: f64 = match parsed.value("timeout") {
+                    Ok(t) => t,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                };
+                client.wait(&ids, timeout).map(|w| w.to_string())
+            }
+            Err(msg) => {
+                eprintln!("{msg}");
+                return 2;
+            }
+        },
+        other => {
+            eprintln!("unknown client command {other:?}");
+            return 2;
+        }
+    };
+    match outcome {
+        Ok(text) => {
+            println!("{text}");
+            0
         }
         Err(e) => {
-            eprintln!("request failed: {e:#}");
+            eprintln!("request failed: {e}");
             1
         }
     }
+}
+
+fn render_squeue(rows: Vec<spotcloud::coordinator::JobSummary>) -> String {
+    let mut out = String::from("JOBID TYPE TASKS USER QOS STATE");
+    for r in &rows {
+        out.push_str(&format!(
+            "\n{} {} {} user{} {} {}",
+            r.id,
+            r.job_type.label(),
+            r.tasks,
+            r.user,
+            r.qos,
+            api::state_token(r.state)
+        ));
+    }
+    out.push_str(&format!("\n({} jobs)", rows.len()));
+    out
+}
+
+fn render_job(d: spotcloud::coordinator::JobDetail) -> String {
+    let opt = |v: Option<f64>| v.map(|x| format!("{x:.3}s")).unwrap_or_else(|| "-".into());
+    format!(
+        "job {} {} tasks={} user{} qos={} state={} submitted={:.3}s started={} ended={} \
+         requeues={} sched_latency={}",
+        d.id,
+        d.job_type.label(),
+        d.tasks,
+        d.user,
+        d.qos,
+        api::state_token(d.state),
+        d.submit_secs,
+        opt(d.start_secs),
+        opt(d.end_secs),
+        d.requeues,
+        d.latency_ns
+            .map(|ns| format!("{:.3}s", ns as f64 / 1e9))
+            .unwrap_or_else(|| "-".into()),
+    )
+}
+
+fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
+    let commands = s
+        .commands
+        .iter()
+        .filter(|&(_, &n)| n > 0)
+        .map(|(cmd, n)| format!("{cmd}={n}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    format!(
+        "virtual_now={:.1}s dispatches={} preemptions={} requeues={} cron_passes={} \
+         main_passes={} backfill_passes={} triggered_passes={} scorer={}\n\
+         requests: ok={} err={} jobs_submitted={} | sched latency: n={} p50={:.3}s\n\
+         commands: {commands}",
+        s.virtual_now_secs,
+        s.dispatches,
+        s.preemptions,
+        s.requeues,
+        s.cron_passes,
+        s.main_passes,
+        s.backfill_passes,
+        s.triggered_passes,
+        s.scorer,
+        s.requests_ok,
+        s.requests_err,
+        s.jobs_submitted,
+        s.sched_latency_count,
+        s.sched_latency_p50_ns as f64 / 1e9,
+    )
 }

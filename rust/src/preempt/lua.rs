@@ -16,13 +16,27 @@
 use crate::job::Job;
 
 /// Errors a job-submit plugin can hit.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LuaError {
     /// Scheduler commands (scontrol/squeue/...) cannot be executed from the
     /// job-submit plugin environment. This is the paper's failure mode.
-    #[error("scheduler commands are unavailable in the job_submit plugin environment")]
     SchedulerCallUnavailable,
 }
+
+impl std::fmt::Display for LuaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LuaError::SchedulerCallUnavailable => {
+                write!(
+                    f,
+                    "scheduler commands are unavailable in the job_submit plugin environment"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for LuaError {}
 
 /// The command surface a submit plugin *wishes* it had. Implementations
 /// decide what is actually callable.

@@ -8,8 +8,9 @@
 //! falls back to [`crate::runtime::fallback`] / [`NativeScorer`].
 
 use super::client::{literal_f32, XlaModule};
+use crate::ensure;
 use crate::sched::priority::{JobFactors, PriorityScorer, N_FACTORS, WEIGHTS};
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 use std::sync::Mutex;
 
@@ -86,7 +87,7 @@ impl SchedAccel {
     /// artifact or its meta file is missing or malformed.
     pub fn load(dir: &Path) -> Result<Self> {
         let contract = ShapeContract::from_meta(&dir.join("sched_step.meta"))?;
-        anyhow::ensure!(
+        ensure!(
             contract.factors == N_FACTORS,
             "artifact factor width {} != crate N_FACTORS {} — rebuild artifacts",
             contract.factors,
@@ -136,15 +137,15 @@ impl SchedAccel {
         reqs: &[f32],
     ) -> Result<AccelOut> {
         let c = self.contract;
-        anyhow::ensure!(factors.len() <= c.jobs, "too many jobs: {} > {}", factors.len(), c.jobs);
-        anyhow::ensure!(reqs.len() == factors.len(), "reqs/factors length mismatch");
-        anyhow::ensure!(
+        ensure!(factors.len() <= c.jobs, "too many jobs: {} > {}", factors.len(), c.jobs);
+        ensure!(reqs.len() == factors.len(), "reqs/factors length mismatch");
+        ensure!(
             spot_cores_youngest_first.len() <= c.spots,
             "too many spot jobs: {} > {}",
             spot_cores_youngest_first.len(),
             c.spots
         );
-        anyhow::ensure!(free.len() <= c.nodes, "too many nodes: {} > {}", free.len(), c.nodes);
+        ensure!(free.len() <= c.nodes, "too many nodes: {} > {}", free.len(), c.nodes);
 
         // Pad to the contract.
         let mut f = vec![0.0f32; c.jobs * c.factors];
@@ -171,7 +172,7 @@ impl SchedAccel {
             .lock()
             .expect("accel mutex poisoned")
             .execute(&inputs)?;
-        anyhow::ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
+        ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
         let scores_full = outs[0].to_vec::<f32>()?;
         let mask_full = outs[1].to_vec::<i32>()?;
         let counts_full = outs[2].to_vec::<i32>()?;

@@ -5,7 +5,7 @@
 //! instruction ids, which sidesteps xla_extension 0.5.1's rejection of
 //! jax ≥ 0.5's 64-bit-id protos.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// A compiled, executable XLA module on the PJRT CPU client.

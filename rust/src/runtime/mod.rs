@@ -5,18 +5,90 @@
 //! PJRT CPU client and exposes it to the L3 scheduler hot path:
 //!
 //! * [`client`] — thin wrapper over the `xla` crate: HLO text → compile →
-//!   execute.
-//! * [`accel`] — [`accel::SchedAccel`]: the batched scheduling decision step
+//!   execute (requires the `xla` cargo feature).
+//! * [`accel`] — `SchedAccel`: the batched scheduling decision step
 //!   (priority scores, LIFO preemption mask, fit counts) with padding to the
-//!   AOT shape contract; implements [`crate::sched::PriorityScorer`].
+//!   AOT shape contract; implements [`crate::sched::PriorityScorer`]
+//!   (requires the `xla` cargo feature).
 //! * [`fallback`] — the pure-Rust implementation of the same math, used when
 //!   artifacts are absent and as the equivalence oracle in tests.
 //!
 //! Python never runs at runtime: the artifact is self-contained HLO text.
+//!
+//! The `xla` binding crate is not vendored in this offline tree, so the
+//! default build compiles a stub [`SchedAccel`] whose `load_default()`
+//! always returns `None` — every caller already falls back to the native
+//! scorer on that path. Enable the `xla` feature (and supply the binding
+//! crate) to compile the real bridge.
 
+#[cfg(feature = "xla")]
 pub mod accel;
+#[cfg(feature = "xla")]
 pub mod client;
 pub mod fallback;
 
+#[cfg(feature = "xla")]
 pub use accel::{AccelOut, SchedAccel, ShapeContract};
+#[cfg(feature = "xla")]
 pub use client::XlaModule;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::sched::priority::{JobFactors, PriorityScorer, WEIGHTS};
+
+    /// Output of one decision step — mirrors `accel::AccelOut` so callers
+    /// typecheck identically with or without the `xla` feature.
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct AccelOut {
+        /// Priority scores, one per input job.
+        pub scores: Vec<f32>,
+        /// LIFO preemption mask over the (youngest-first) spot jobs.
+        pub preempt_mask: Vec<bool>,
+        /// Feasible-node counts, one per input job.
+        pub fit_counts: Vec<i32>,
+    }
+
+    /// Stub accelerator for builds without the `xla` feature: never loads,
+    /// so callers always take their native-scorer fallback path. If a stub
+    /// instance is ever constructed anyway (it cannot be, publicly), the
+    /// methods degrade gracefully to the pure-Rust fallback math.
+    pub struct SchedAccel {
+        _private: (),
+    }
+
+    impl SchedAccel {
+        /// Artifacts cannot be loaded without the `xla` feature.
+        pub fn load_default() -> Option<Self> {
+            None
+        }
+
+        /// Fallback-math equivalent of the compiled decision step.
+        pub fn sched_step(
+            &self,
+            factors: &[JobFactors],
+            spot_cores_youngest_first: &[f32],
+            demand: f32,
+            free: &[f32],
+            reqs: &[f32],
+        ) -> crate::util::error::Result<AccelOut> {
+            Ok(AccelOut {
+                scores: super::fallback::priority_scores(factors, &WEIGHTS),
+                preempt_mask: super::fallback::select_victims(spot_cores_youngest_first, demand),
+                fit_counts: super::fallback::fit_counts(free, reqs),
+            })
+        }
+    }
+
+    impl PriorityScorer for SchedAccel {
+        fn scores(&self, factors: &[JobFactors]) -> Vec<f32> {
+            super::fallback::priority_scores(factors, &WEIGHTS)
+        }
+
+        fn name(&self) -> &'static str {
+            "xla-accel-stub"
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{AccelOut, SchedAccel};

@@ -9,7 +9,7 @@ use crate::job::JobId;
 use crate::sim::SimTime;
 // FxHashMap: the index lookups sit on the simulator hot path and SipHash
 // was 28% of burst-experiment time (EXPERIMENTS.md §Perf).
-use rustc_hash::FxHashMap as HashMap;
+use crate::util::fxhash::FxHashMap as HashMap;
 
 /// Log entry kinds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

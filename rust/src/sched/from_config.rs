@@ -24,8 +24,10 @@ use crate::cluster::{Cluster, PartitionLayout};
 use crate::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
 use crate::sched::SchedulerConfig;
 use crate::sim::{SchedCosts, SimTime};
+use crate::bail;
+use crate::ensure;
 use crate::util::config::ConfigFile;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
 /// A fully-described deployment: cluster + scheduler config.
 pub struct Deployment {
@@ -54,7 +56,7 @@ pub fn deployment_from_config(cfg: &ConfigFile) -> Result<Deployment> {
     let name = cfg.get("ClusterName").unwrap_or("spotcloud").to_string();
     let nodes: u32 = cfg.get_parsed_or("Nodes", 19)?;
     let cores: u32 = cfg.get_parsed_or("CoresPerNode", 32)?;
-    anyhow::ensure!(nodes > 0 && cores > 0, "Nodes and CoresPerNode must be positive");
+    ensure!(nodes > 0 && cores > 0, "Nodes and CoresPerNode must be positive");
     let cluster = Cluster::homogeneous(nodes, cores);
 
     let mut costs = match cfg.get("CostPreset").unwrap_or("dedicated") {

@@ -277,6 +277,18 @@ impl Scheduler {
             .collect()
     }
 
+    /// Submit many jobs arriving in **one** batched RPC: the whole set pays
+    /// a single `submit_rpc` and reaches the controller at the same virtual
+    /// instant. This is the batch-manifest submission path the coordinator's
+    /// `SUBMIT ... count=N` exposes (vs. [`Scheduler::submit_burst`], which
+    /// models a client loop issuing one RPC per job).
+    pub fn submit_batch(&mut self, specs: Vec<JobSpec>) -> Vec<JobId> {
+        specs
+            .into_iter()
+            .map(|s| self.submit_after(s, SimTime::ZERO))
+            .collect()
+    }
+
     // ---- event loop --------------------------------------------------------
 
     /// Process events up to and including `until`, then advance the clock to
@@ -303,19 +315,29 @@ impl Scheduler {
 
     /// Run until every job in `jobs` has dispatched or `timeout` elapses
     /// (relative to now). Returns true when all dispatched.
+    ///
+    /// Event-driven: steps the clock to the next queued event time instead
+    /// of fixed 1-second increments, so a large burst pays one pass per
+    /// event batch rather than a wall of empty polls.
     pub fn run_until_dispatched(&mut self, jobs: &[JobId], timeout: SimTime) -> bool {
         let horizon = self.clock + timeout;
-        let step = SimTime::from_secs(1);
         // Only poll jobs not yet seen dispatched (keeps large bursts linear).
         let mut remaining: Vec<JobId> = jobs.to_vec();
-        while self.clock < horizon {
+        loop {
             remaining.retain(|&j| self.log.last(j, LogKind::DispatchDone).is_none());
             if remaining.is_empty() {
                 return true;
             }
-            let next = (self.clock + step).min(horizon);
-            self.run_until(next);
+            match self.events.peek_time() {
+                // Process the whole event batch at the next event time (plus
+                // anything it schedules at that same instant).
+                Some(t) if t <= horizon => self.run_until(t),
+                // No more events before the horizon: nothing left can
+                // dispatch within the timeout.
+                _ => break,
+            }
         }
+        self.run_until(horizon);
         remaining.retain(|&j| self.log.last(j, LogKind::DispatchDone).is_none());
         remaining.is_empty()
     }
@@ -343,6 +365,11 @@ impl Scheduler {
     }
 
     fn on_arrival(&mut self, id: JobId) {
+        // The job may have been cancelled between the submit RPC and the
+        // controller recognizing it; a stale arrival must not re-queue it.
+        if self.jobs.get(&id).expect("arrival for unknown job").state != JobState::Pending {
+            return;
+        }
         self.log.push(self.clock, id, LogKind::Recognized);
         if self.cfg.lua_plugin {
             // The paper's Lua job_submit attempt: the plugin observes the

@@ -47,21 +47,41 @@ pub struct Parsed {
 }
 
 /// Errors produced while parsing.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
+    /// An option not in the command's spec.
     UnknownOption(String),
-    #[error("option --{0} requires a value")]
+    /// A value-taking option with no value.
     MissingValue(String),
-    #[error("invalid value for --{name}: {value}: {reason}")]
+    /// A value that failed to parse.
     InvalidValue {
+        /// Option name.
         name: String,
+        /// Raw value.
         value: String,
+        /// Parse failure description.
         reason: String,
     },
-    #[error("help requested")]
+    /// `--help` / `-h` was given.
     HelpRequested,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            CliError::InvalidValue {
+                name,
+                value,
+                reason,
+            } => write!(f, "invalid value for --{name}: {value}: {reason}"),
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Command {
     /// Create a command with a name and description.

@@ -17,19 +17,43 @@ pub struct ConfigFile {
 }
 
 /// Errors produced while parsing or reading values.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {line}: expected Key=Value, got {text:?}")]
-    Malformed { line: usize, text: String },
-    #[error("missing required key {0:?}")]
+    /// A line without `Key=Value` shape.
+    Malformed {
+        /// 1-based line number.
+        line: usize,
+        /// The offending raw line.
+        text: String,
+    },
+    /// A required key was absent.
     Missing(String),
-    #[error("key {key:?}: cannot parse {value:?} as {ty}")]
+    /// A value failed to parse as the requested type.
     BadValue {
+        /// The key whose value failed.
         key: String,
+        /// The raw value.
         value: String,
+        /// Target type name.
         ty: &'static str,
     },
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Malformed { line, text } => {
+                write!(f, "line {line}: expected Key=Value, got {text:?}")
+            }
+            ConfigError::Missing(key) => write!(f, "missing required key {key:?}"),
+            ConfigError::BadValue { key, value, ty } => {
+                write!(f, "key {key:?}: cannot parse {value:?} as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl ConfigFile {
     /// Parse the text of a config file.
@@ -54,7 +78,7 @@ impl ConfigFile {
     }
 
     /// Load and parse a file from disk.
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+    pub fn load(path: &std::path::Path) -> crate::util::error::Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Ok(Self::parse(&text)?)
     }

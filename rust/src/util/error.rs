@@ -1,0 +1,223 @@
+//! Minimal `anyhow`-style dynamic error (std-only; the offline build vendors
+//! no ecosystem crates).
+//!
+//! Provides the small subset the crate uses: an opaque [`Error`] with a
+//! context chain, a [`Result`] alias, a [`Context`] extension trait for
+//! `Result`/`Option`, and the [`crate::ensure!`] / [`crate::bail!`] /
+//! [`crate::err_msg!`] macros.
+//!
+//! [`Error`] deliberately does **not** implement `std::error::Error`: that is
+//! what makes the blanket `From<E: std::error::Error>` impl coherent (the
+//! same trick `anyhow` uses), so `?` converts any standard error into it.
+
+use std::fmt;
+
+/// An opaque error: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// `Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error {
+            msg: msg.into(),
+            cause: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn wrap(self, msg: impl Into<String>) -> Self {
+        Error {
+            msg: msg.into(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message.
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the chain from outermost to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.cause.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, like anyhow.
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                first = false;
+                write!(f, "{msg}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.cause.as_deref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {}", c.msg)?;
+            cause = c.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs: Vec<String> = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error {
+                msg,
+                cause: err.map(Box::new),
+            });
+        }
+        err.expect("error chain has at least one message")
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option` (anyhow-style).
+pub trait Context<T> {
+    /// Attach a context message, converting the error into [`Error`].
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Attach a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Return an [`Error`] built from a format string unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err(
+                $crate::util::error::Error::msg(::std::format!($($arg)+)).into(),
+            );
+        }
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err(
+            $crate::util::error::Error::msg(::std::format!($($arg)+)).into(),
+        )
+    };
+}
+
+/// Build an [`Error`] from a format string (expression form).
+#[macro_export]
+macro_rules! err_msg {
+    ($($arg:tt)+) => {
+        $crate::util::error::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e: Error = io_err().into();
+        assert_eq!(e.message(), "missing file");
+        let wrapped: Result<()> = Err::<(), _>(io_err()).context("opening config");
+        let err = wrapped.unwrap_err();
+        assert_eq!(err.message(), "opening config");
+        assert_eq!(err.chain().count(), 2);
+        assert_eq!(format!("{err:#}"), "opening config: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("missing value").unwrap_err();
+        assert_eq!(err.message(), "missing value");
+        assert_eq!(Some(3).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(12).unwrap_err().message(), "x too big: 12");
+        assert_eq!(check(7).unwrap_err().message(), "unlucky 7");
+        let e = err_msg!("code {}", 42);
+        assert_eq!(e.message(), "code 42");
+    }
+
+    #[test]
+    fn debug_prints_chain() {
+        let err = Err::<(), _>(io_err())
+            .context("layer one")
+            .context("layer two")
+            .unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("layer two"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing file"));
+    }
+}

@@ -1,0 +1,118 @@
+//! FxHash (the rustc hasher), std-only.
+//!
+//! A fast, non-cryptographic, multiply-rotate hash for small keys. The
+//! scheduler event-log indexes sit on the simulator hot path and SipHash was
+//! 28% of burst-experiment time (EXPERIMENTS.md §Perf); this is the same
+//! algorithm the `rustc-hash` crate ships, reimplemented here because the
+//! offline build vendors no ecosystem crates.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// 64-bit Fx multiplier (from rustc / firefox).
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// The Fx hasher state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Word-at-a-time over the tail-padded input.
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_ne_bytes(c.try_into().expect("8-byte chunk")));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_ne_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add_to_hash(n as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.add_to_hash(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add_to_hash(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add_to_hash(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add_to_hash(n as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`].
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` keyed with Fx hashing (drop-in for `rustc_hash::FxHashMap`).
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+/// `HashSet` keyed with Fx hashing.
+pub type FxHashSet<T> = std::collections::HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = FxHasher::default();
+        let mut b = FxHasher::default();
+        a.write_u64(0xdead_beef);
+        b.write_u64(0xdead_beef);
+        assert_eq!(a.finish(), b.finish());
+        assert_ne!(a.finish(), 0);
+    }
+
+    #[test]
+    fn byte_slices_hash_by_content() {
+        let mut a = FxHasher::default();
+        let mut b = FxHasher::default();
+        a.write(b"hello world, this is long enough to cross a chunk");
+        b.write(b"hello world, this is long enough to cross a chunk");
+        assert_eq!(a.finish(), b.finish());
+        let mut c = FxHasher::default();
+        c.write(b"hello world, this is long enough to cross a chunk!");
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn map_basics() {
+        let mut m: FxHashMap<(u64, u8), u64> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert((i, (i % 7) as u8), i * 2);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.get(&(500, (500 % 7) as u8)), Some(&1000));
+    }
+}

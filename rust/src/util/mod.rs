@@ -11,8 +11,12 @@
 //! * [`cli`] — a declarative command-line parser for the `spotcloud` binary.
 //! * [`config`] — a `slurm.conf`-style `Key=Value` config-file parser.
 //! * [`fmt`] — ASCII table / aligned-series rendering for experiment reports.
+//! * [`error`] — an `anyhow`-style opaque error with context chaining.
+//! * [`fxhash`] — the rustc Fx hasher for hot-path hash maps.
 
 pub mod cli;
 pub mod config;
+pub mod error;
 pub mod fmt;
+pub mod fxhash;
 pub mod rng;

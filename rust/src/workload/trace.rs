@@ -5,6 +5,8 @@
 
 use crate::job::{JobSpec, JobType, QosClass, UserId};
 use crate::sim::SimTime;
+use crate::util::error::Result;
+use crate::{bail, ensure, err_msg};
 
 /// One trace line.
 #[derive(Debug, Clone, PartialEq)]
@@ -78,24 +80,24 @@ impl Trace {
     }
 
     /// Parse from CSV text.
-    pub fn from_csv(text: &str) -> anyhow::Result<Self> {
+    pub fn from_csv(text: &str) -> Result<Self> {
         let mut records = Vec::new();
         for (i, line) in text.lines().enumerate() {
             if i == 0 || line.trim().is_empty() {
                 continue; // header / blanks
             }
             let cols: Vec<&str> = line.split(',').collect();
-            anyhow::ensure!(cols.len() == 6, "line {}: expected 6 columns", i + 1);
+            ensure!(cols.len() == 6, "line {}: expected 6 columns", i + 1);
             records.push(TraceRecord {
                 at_secs: cols[0].parse()?,
                 user: cols[1].parse()?,
                 job_type: parse_type(cols[2])
-                    .ok_or_else(|| anyhow::anyhow!("line {}: bad job type {:?}", i + 1, cols[2]))?,
+                    .ok_or_else(|| err_msg!("line {}: bad job type {:?}", i + 1, cols[2]))?,
                 tasks: cols[3].parse()?,
                 qos: match cols[4] {
                     "normal" => QosClass::Normal,
                     "spot" => QosClass::Spot,
-                    other => anyhow::bail!("line {}: bad qos {other:?}", i + 1),
+                    other => bail!("line {}: bad qos {other:?}", i + 1),
                 },
                 run_secs: cols[5].parse()?,
             });
@@ -104,13 +106,13 @@ impl Trace {
     }
 
     /// Write to a file.
-    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
         std::fs::write(path, self.to_csv())?;
         Ok(())
     }
 
     /// Load from a file.
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+    pub fn load(path: &std::path::Path) -> Result<Self> {
         Self::from_csv(&std::fs::read_to_string(path)?)
     }
 }

@@ -1,0 +1,162 @@
+//! Integration tests for the versioned coordinator protocol: concurrent
+//! v1/v2 clients against one server, atomic batch submission, and the
+//! remote launch-latency measurement (`WAIT`).
+
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::coordinator::{
+    Client, Daemon, DaemonConfig, ErrorCode, Server, SqueueFilter, SubmitSpec,
+};
+use spotcloud::coordinator::{ClientError, ProtocolVersion};
+use spotcloud::job::{JobType, QosClass};
+use spotcloud::sched::SchedulerConfig;
+use spotcloud::sim::SchedCosts;
+use std::sync::Arc;
+
+fn spawn_server(workers: usize) -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        DaemonConfig {
+            speedup: 10_000.0,
+            pacer_tick_ms: 1,
+        },
+    );
+    daemon.spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", workers).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve());
+    (daemon, addr, handle)
+}
+
+/// ≥4 simultaneous connections, mixed v1/v2, doing submits + cancels +
+/// waits; scheduler invariants must hold afterwards.
+#[test]
+fn concurrent_mixed_protocol_clients() {
+    let (daemon, addr, server) = spawn_server(8);
+    let mut threads = Vec::new();
+    // Three typed v2 clients.
+    for t in 0..3u32 {
+        let a = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect_v2(&a).unwrap();
+            assert_eq!(c.version(), ProtocolVersion::V2);
+            let user = 1 + t;
+            let ack = c
+                .submit(
+                    &SubmitSpec::new(QosClass::Normal, JobType::Array, 32, user)
+                        .with_run_secs(30.0),
+                )
+                .unwrap();
+            let ids: Vec<u64> = ack.ids().collect();
+            let w = c.wait(&ids, 30.0).unwrap();
+            assert!(!w.timed_out, "jobs never dispatched: {w:?}");
+            assert!(w.latency_ns > 0);
+            // A second submission, cancelled while (possibly) pending: both
+            // outcomes are legal, but the error must be typed if it fails.
+            let ack2 = c
+                .submit(
+                    &SubmitSpec::new(QosClass::Normal, JobType::Array, 16, user)
+                        .with_run_secs(600.0),
+                )
+                .unwrap();
+            match c.cancel(ack2.first) {
+                Ok(id) => assert_eq!(id, ack2.first),
+                Err(ClientError::Api(e)) => assert_eq!(e.code, ErrorCode::NotFound),
+                Err(other) => panic!("unexpected cancel failure: {other}"),
+            }
+            c.ping().unwrap();
+        }));
+    }
+    // Three raw v1 clients exercising the seed grammar verbatim.
+    for t in 0..3u32 {
+        let a = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&a).unwrap();
+            let user = 10 + t;
+            let r = c.request(&format!("SUBMIT spot triple 96 {user} 600")).unwrap();
+            assert!(r.starts_with("OK jobs="), "{r}");
+            assert_eq!(c.request("PING").unwrap(), "OK pong");
+            let q = c.request("SQUEUE").unwrap();
+            assert!(q.contains("JOBID"), "{q}");
+            let id: u64 = r
+                .split("jobs=")
+                .nth(1)
+                .unwrap()
+                .split('-')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap();
+            let out = c.request(&format!("SCANCEL {id}")).unwrap();
+            assert!(out.starts_with("OK") || out.starts_with("ERR"), "{out}");
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    daemon.with_scheduler(|s| s.check_invariants().expect("scheduler invariants"));
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+/// A batched SUBMIT of 10,000 individual jobs completes in ONE RPC round
+/// trip, and WAIT observes the launch latency remotely.
+#[test]
+fn batch_submit_10k_jobs_one_rpc() {
+    let (daemon, addr, server) = spawn_server(2);
+    let mut c = Client::connect_v2(&addr).unwrap();
+    let ack = c
+        .submit(
+            &SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, 7)
+                .with_run_secs(30.0)
+                .with_count(10_000),
+        )
+        .expect("one round trip must create the whole batch");
+    assert_eq!(ack.count, 10_000);
+    assert_eq!(ack.last - ack.first + 1, 10_000);
+    // The daemon saw exactly one SUBMIT request.
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.commands.get("submit").copied(), Some(1));
+    assert_eq!(stats.jobs_submitted, 10_000);
+    // SQUEUE truncation keeps the listing bounded.
+    let rows = c
+        .squeue(&SqueueFilter {
+            limit: Some(100),
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(rows.len(), 100);
+    // Remote launch-latency measurement on a sample of the burst.
+    let sample = [ack.first, ack.first + 4_999, ack.last];
+    let w = c.wait(&sample, 120.0).unwrap();
+    assert!(!w.timed_out, "batch never fully dispatched: {w:?}");
+    assert_eq!(w.dispatched, 3);
+    assert!(w.latency_ns > 0);
+    daemon.with_scheduler(|s| s.check_invariants().expect("scheduler invariants"));
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+/// A v1 session can upgrade mid-connection and keep working, and v1 lines
+/// accepted at seed still work verbatim over TCP.
+#[test]
+fn mid_session_upgrade_and_seed_grammar() {
+    let (daemon, addr, server) = spawn_server(2);
+    let mut c = Client::connect(&addr).unwrap();
+    // Seed grammar, verbatim.
+    let r = c.request("SUBMIT normal triple 608 1 60").unwrap();
+    assert!(r.starts_with("OK jobs="), "{r}");
+    let u = c.request("UTIL").unwrap();
+    assert!(u.contains("total_cores=608"), "{u}");
+    // Upgrade the same connection.
+    assert_eq!(c.hello(ProtocolVersion::V2).unwrap(), ProtocolVersion::V2);
+    let util = c.util().unwrap();
+    assert_eq!(util.total_cores, 608);
+    // Typed error surfaces as Err, not Ok(String).
+    match c.job(999_999) {
+        Err(ClientError::Api(e)) => assert_eq!(e.code, ErrorCode::NotFound),
+        other => panic!("expected typed NotFound, got {other:?}"),
+    }
+    daemon.shutdown();
+    server.join().unwrap();
+}
