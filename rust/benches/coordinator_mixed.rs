@@ -1,0 +1,53 @@
+//! CI bench gate: the mixed readers+writers+waiters contention scenario
+//! against the coordinator core (see `benchkit::coordinator`).
+//!
+//! Emits `BENCH_coordinator.json` (override with `SPOTCLOUD_BENCH_JSON`)
+//! with requests/sec and the p99 virtual scheduling latency — the paper's
+//! Figure-2 metric under contention — so the perf trajectory has a
+//! machine-readable data point per CI run. Exits non-zero on panic or if
+//! the run produced a degenerate result (readers serialized to zero, or
+//! waits timing out), which is what the CI job fails on.
+//!
+//! `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke configuration.
+
+use spotcloud::benchkit::coordinator::{run_mixed_load, MixedLoadConfig};
+
+fn main() {
+    let fast = std::env::var("SPOTCLOUD_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = if fast {
+        MixedLoadConfig::quick()
+    } else {
+        MixedLoadConfig::default()
+    };
+    eprintln!(
+        "coordinator_mixed: {} readers / {} writers / {} waiters for {:?}",
+        cfg.readers, cfg.writers, cfg.waiters, cfg.duration
+    );
+    let report = run_mixed_load(&cfg);
+    eprintln!("{}", report.summary());
+
+    let path = std::env::var("SPOTCLOUD_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_coordinator.json".into());
+    std::fs::write(&path, report.to_json()).expect("writing bench json");
+    println!("wrote {path}");
+
+    // Gate: the contention run must be healthy, not merely finish.
+    assert!(report.read_ops > 0, "readers made no progress");
+    assert!(report.write_ops > 0, "writers made no progress");
+    assert!(report.wait_ops > 0, "waiters made no progress");
+    assert_eq!(
+        report.timed_out_waits, 0,
+        "interactive launches timed out under contention"
+    );
+    assert_eq!(
+        report.waits_parked, report.waits_resumed,
+        "a parked WAIT was lost or woken twice"
+    );
+    // Readers are snapshot-served: a reader stuck behind a writer burst for
+    // a full second would mean the read path re-acquired the write lock.
+    assert!(
+        report.read_wall.p99() < 1_000_000_000,
+        "read p99 {}ns — readers serialized behind writers",
+        report.read_wall.p99()
+    );
+}

@@ -1,0 +1,375 @@
+//! Mixed read/write/wait contention scenario against an in-process daemon —
+//! the CI bench gate's workload.
+//!
+//! N reader threads hammer `SQUEUE`/`STATS`/`UTIL`/`SJOB`, M writer threads
+//! submit and cancel bursts, and K waiter threads block in `WAIT` for their
+//! own submissions — the traffic shape of thousands of interactive users
+//! sharing one controller (the regime the companion MIT SuperCloud paper
+//! measures). The report carries the two numbers the paper's Figure 2
+//! plots plus the ones the concurrency refactor is accountable for:
+//! requests/sec under contention, read-path wall percentiles (readers must
+//! not serialize behind a writer burst), p99 *virtual* scheduling latency,
+//! and the scheduler write-lock hold-time percentiles.
+//!
+//! The `coordinator_mixed` bench target runs this and emits
+//! `BENCH_coordinator.json` for the CI artifact trail.
+
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::api::{Request, Response, SqueueFilter, SubmitSpec};
+use crate::coordinator::{Daemon, DaemonConfig};
+use crate::job::{JobType, QosClass};
+use crate::metrics::LogHistogram;
+use crate::sched::SchedulerConfig;
+use crate::sim::SchedCosts;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shape of the mixed contention load.
+#[derive(Debug, Clone)]
+pub struct MixedLoadConfig {
+    /// Read-only threads (SQUEUE/STATS/UTIL/SJOB round-robin).
+    pub readers: usize,
+    /// Mutating threads (burst submit + cancel).
+    pub writers: usize,
+    /// Threads that submit one interactive job and block in WAIT for it.
+    pub waiters: usize,
+    /// Wall-clock run length.
+    pub duration: Duration,
+    /// Jobs per writer submit burst.
+    pub submit_batch: u32,
+    /// Pause between writer bursts (bounds total job-table growth).
+    pub writer_pause: Duration,
+    /// Virtual seconds per wall second for the daemon under test.
+    pub speedup: f64,
+}
+
+impl Default for MixedLoadConfig {
+    fn default() -> Self {
+        Self {
+            readers: 8,
+            writers: 2,
+            waiters: 4,
+            duration: Duration::from_secs(2),
+            submit_batch: 16,
+            writer_pause: Duration::from_millis(5),
+            speedup: 2_000.0,
+        }
+    }
+}
+
+impl MixedLoadConfig {
+    /// A sub-second smoke configuration (unit tests, `SPOTCLOUD_BENCH_FAST`).
+    pub fn quick() -> Self {
+        Self {
+            readers: 4,
+            writers: 1,
+            waiters: 2,
+            duration: Duration::from_millis(300),
+            submit_batch: 8,
+            writer_pause: Duration::from_millis(5),
+            speedup: 5_000.0,
+        }
+    }
+}
+
+/// What one mixed-load run measured.
+#[derive(Debug, Clone)]
+pub struct MixedLoadReport {
+    /// Wall-clock run length actually spent.
+    pub duration_secs: f64,
+    /// Read-only requests completed.
+    pub read_ops: u64,
+    /// Mutating requests completed (submits + cancels).
+    pub write_ops: u64,
+    /// WAIT round trips completed.
+    pub wait_ops: u64,
+    /// WAITs that hit their timeout (should be 0 in a healthy run).
+    pub timed_out_waits: u64,
+    /// All requests per wall second.
+    pub reqs_per_sec: f64,
+    /// Wall latency of read-path requests (ns).
+    pub read_wall: LogHistogram,
+    /// Wall latency of write-path requests (ns).
+    pub write_wall: LogHistogram,
+    /// p50 of the daemon's virtual scheduling latency histogram (ns).
+    pub sched_latency_p50_ns: u64,
+    /// p99 of the daemon's virtual scheduling latency histogram (ns) —
+    /// the paper's Figure-2 metric under contention.
+    pub sched_latency_p99_ns: u64,
+    /// p99 wall time the scheduler write mutex was held (ns).
+    pub lock_hold_p99_ns: u64,
+    /// Snapshot-served requests, from the daemon's lock-path counters.
+    pub read_path_ops: u64,
+    /// Scheduler-mutex acquisitions, from the daemon's lock-path counters.
+    pub write_locks: u64,
+    /// WAITs that parked on the completion hub.
+    pub waits_parked: u64,
+    /// Parked WAITs that resolved. Equal to `waits_parked` after a clean
+    /// run: every waiter wakes exactly once.
+    pub waits_resumed: u64,
+}
+
+impl MixedLoadReport {
+    /// The machine-readable record CI uploads (`BENCH_coordinator.json`).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"coordinator_mixed\",\n",
+                "  \"duration_secs\": {:.3},\n",
+                "  \"read_ops\": {},\n",
+                "  \"write_ops\": {},\n",
+                "  \"wait_ops\": {},\n",
+                "  \"timed_out_waits\": {},\n",
+                "  \"reqs_per_sec\": {:.1},\n",
+                "  \"read_wall_p50_ns\": {},\n",
+                "  \"read_wall_p99_ns\": {},\n",
+                "  \"write_wall_p50_ns\": {},\n",
+                "  \"write_wall_p99_ns\": {},\n",
+                "  \"sched_latency_p50_ns\": {},\n",
+                "  \"sched_latency_p99_ns\": {},\n",
+                "  \"lock_hold_p99_ns\": {},\n",
+                "  \"read_path_ops\": {},\n",
+                "  \"write_locks\": {},\n",
+                "  \"waits_parked\": {},\n",
+                "  \"waits_resumed\": {}\n",
+                "}}\n",
+            ),
+            self.duration_secs,
+            self.read_ops,
+            self.write_ops,
+            self.wait_ops,
+            self.timed_out_waits,
+            self.reqs_per_sec,
+            self.read_wall.p50(),
+            self.read_wall.p99(),
+            self.write_wall.p50(),
+            self.write_wall.p99(),
+            self.sched_latency_p50_ns,
+            self.sched_latency_p99_ns,
+            self.lock_hold_p99_ns,
+            self.read_path_ops,
+            self.write_locks,
+            self.waits_parked,
+            self.waits_resumed,
+        )
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "coordinator_mixed: {:.0} req/s over {:.2}s (reads={} writes={} waits={} \
+             timed_out={}) read_p99={}ns write_p99={}ns sched_p99={}ns lock_hold_p99={}ns",
+            self.reqs_per_sec,
+            self.duration_secs,
+            self.read_ops,
+            self.write_ops,
+            self.wait_ops,
+            self.timed_out_waits,
+            self.read_wall.p99(),
+            self.write_wall.p99(),
+            self.sched_latency_p99_ns,
+            self.lock_hold_p99_ns,
+        )
+    }
+}
+
+struct SharedCounters {
+    stop: AtomicBool,
+    read_ops: AtomicU64,
+    write_ops: AtomicU64,
+    wait_ops: AtomicU64,
+    timed_out_waits: AtomicU64,
+    read_wall: Mutex<LogHistogram>,
+    write_wall: Mutex<LogHistogram>,
+}
+
+/// Run the mixed contention scenario against a fresh daemon (its own pacer
+/// thread, typed in-process requests — the transport is exercised by the
+/// TCP tests; this measures the coordinator core).
+pub fn run_mixed_load(cfg: &MixedLoadConfig) -> MixedLoadReport {
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        DaemonConfig {
+            speedup: cfg.speedup,
+            pacer_tick_ms: 1,
+        },
+    );
+    let pacer = daemon.spawn_pacer();
+    let shared = Arc::new(SharedCounters {
+        stop: AtomicBool::new(false),
+        read_ops: AtomicU64::new(0),
+        write_ops: AtomicU64::new(0),
+        wait_ops: AtomicU64::new(0),
+        timed_out_waits: AtomicU64::new(0),
+        read_wall: Mutex::new(LogHistogram::new()),
+        write_wall: Mutex::new(LogHistogram::new()),
+    });
+
+    let mut threads = Vec::new();
+    for r in 0..cfg.readers {
+        let d = Arc::clone(&daemon);
+        let s = Arc::clone(&shared);
+        threads.push(std::thread::spawn(move || {
+            let mut local = LogHistogram::new();
+            let mut i = r as u64;
+            while !s.stop.load(Ordering::Relaxed) {
+                let req = match i % 4 {
+                    0 => Request::Squeue(SqueueFilter {
+                        limit: Some(32),
+                        ..Default::default()
+                    }),
+                    1 => Request::Stats,
+                    2 => Request::Util,
+                    _ => Request::Sjob(1 + i % 64),
+                };
+                let t0 = Instant::now();
+                let resp = d.handle(req);
+                // SJOB of a not-yet-submitted id is a legal NotFound; any
+                // other error under pure read load is a bug.
+                debug_assert!(
+                    !matches!(&resp, Response::Error(e)
+                        if e.code != crate::coordinator::api::ErrorCode::NotFound),
+                    "read path errored: {resp:?}"
+                );
+                local.record(t0.elapsed().as_nanos() as u64);
+                s.read_ops.fetch_add(1, Ordering::Relaxed);
+                i += 1;
+            }
+            s.read_wall.lock().expect("bench hist").merge(&local);
+        }));
+    }
+    for w in 0..cfg.writers {
+        let d = Arc::clone(&daemon);
+        let s = Arc::clone(&shared);
+        let batch = cfg.submit_batch;
+        let pause = cfg.writer_pause;
+        threads.push(std::thread::spawn(move || {
+            let mut local = LogHistogram::new();
+            let user = 100 + w as u32;
+            let mut last_first = 0u64;
+            let mut i = 0u64;
+            while !s.stop.load(Ordering::Relaxed) {
+                let t0 = Instant::now();
+                let resp = d.handle(Request::Submit(
+                    SubmitSpec::new(QosClass::Spot, JobType::Individual, 1, user)
+                        .with_run_secs(20.0)
+                        .with_count(batch),
+                ));
+                local.record(t0.elapsed().as_nanos() as u64);
+                s.write_ops.fetch_add(1, Ordering::Relaxed);
+                if let Response::SubmitAck(ack) = resp {
+                    // Cancel one job of the *previous* burst: exercises the
+                    // cancel write path against mostly-dispatched state.
+                    if i % 2 == 1 && last_first != 0 {
+                        let t1 = Instant::now();
+                        let _ = d.handle(Request::Scancel(last_first));
+                        local.record(t1.elapsed().as_nanos() as u64);
+                        s.write_ops.fetch_add(1, Ordering::Relaxed);
+                    }
+                    last_first = ack.first;
+                }
+                i += 1;
+                std::thread::sleep(pause);
+            }
+            s.write_wall.lock().expect("bench hist").merge(&local);
+        }));
+    }
+    for k in 0..cfg.waiters {
+        let d = Arc::clone(&daemon);
+        let s = Arc::clone(&shared);
+        threads.push(std::thread::spawn(move || {
+            let user = 1 + k as u32;
+            while !s.stop.load(Ordering::Relaxed) {
+                let ack = match d.handle(Request::Submit(
+                    SubmitSpec::new(QosClass::Normal, JobType::TripleMode, 32, user)
+                        .with_run_secs(15.0),
+                )) {
+                    Response::SubmitAck(a) => a,
+                    other => panic!("waiter submit failed: {other:?}"),
+                };
+                match d.handle(Request::Wait {
+                    jobs: vec![ack.first],
+                    timeout_secs: 10.0,
+                }) {
+                    Response::Wait(wr) => {
+                        if wr.timed_out {
+                            s.timed_out_waits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    other => panic!("wait failed: {other:?}"),
+                }
+                s.wait_ops.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }));
+    }
+
+    let t0 = Instant::now();
+    std::thread::sleep(cfg.duration);
+    shared.stop.store(true, Ordering::Relaxed);
+    for t in threads {
+        t.join().expect("bench thread panicked");
+    }
+    let duration_secs = t0.elapsed().as_secs_f64();
+    daemon.shutdown();
+    pacer.join().expect("pacer");
+
+    daemon.with_scheduler(|sched| {
+        sched
+            .check_invariants()
+            .expect("scheduler invariants violated under contention");
+    });
+
+    let read_ops = shared.read_ops.load(Ordering::Relaxed);
+    let write_ops = shared.write_ops.load(Ordering::Relaxed);
+    let wait_ops = shared.wait_ops.load(Ordering::Relaxed);
+    let sched_hist = daemon.metrics.sched_latency();
+    let read_wall = shared.read_wall.lock().expect("bench hist").clone();
+    let write_wall = shared.write_wall.lock().expect("bench hist").clone();
+    MixedLoadReport {
+        duration_secs,
+        read_ops,
+        write_ops,
+        wait_ops,
+        timed_out_waits: shared.timed_out_waits.load(Ordering::Relaxed),
+        reqs_per_sec: (read_ops + write_ops + wait_ops) as f64 / duration_secs.max(1e-9),
+        read_wall,
+        write_wall,
+        sched_latency_p50_ns: sched_hist.p50(),
+        sched_latency_p99_ns: sched_hist.p99(),
+        lock_hold_p99_ns: daemon.metrics.lock_hold().p99(),
+        read_path_ops: daemon.metrics.read_path_ops.load(Ordering::Relaxed),
+        write_locks: daemon.metrics.write_locks.load(Ordering::Relaxed),
+        waits_parked: daemon.metrics.waits_parked.load(Ordering::Relaxed),
+        waits_resumed: daemon.metrics.waits_resumed.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_mixed_load_runs_and_reports() {
+        let r = run_mixed_load(&MixedLoadConfig::quick());
+        assert!(r.read_ops > 0, "{r:?}");
+        assert!(r.write_ops > 0, "{r:?}");
+        assert!(r.wait_ops > 0, "{r:?}");
+        assert!(r.reqs_per_sec > 0.0);
+        assert!(r.read_path_ops >= r.read_ops, "reads must be snapshot-served");
+        assert_eq!(r.waits_parked, r.waits_resumed, "exactly-once wake broken");
+        let json = r.to_json();
+        for key in [
+            "\"reqs_per_sec\"",
+            "\"read_wall_p99_ns\"",
+            "\"sched_latency_p99_ns\"",
+            "\"lock_hold_p99_ns\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(r.summary().contains("coordinator_mixed"));
+    }
+}

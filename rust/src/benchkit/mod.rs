@@ -6,6 +6,8 @@
 //! group/report API so each paper figure gets one bench binary printing the
 //! same rows the paper plots.
 
+pub mod coordinator;
+
 use crate::metrics::stats::Summary;
 use crate::util::fmt::{fmt_seconds, Table};
 use std::time::Instant;

@@ -202,6 +202,16 @@ impl Client {
     /// time elapse) and return the burst's virtual scheduling latency — the
     /// paper's launch-latency measurement, end to end from a remote client.
     pub fn wait(&mut self, jobs: &[u64], timeout_secs: f64) -> ClientResult<WaitResult> {
+        // An empty set is settled by definition, and the v1 grammar cannot
+        // even express it — short-circuit without a round trip.
+        if jobs.is_empty() {
+            return Ok(WaitResult {
+                requested: 0,
+                dispatched: 0,
+                timed_out: false,
+                latency_ns: 0,
+            });
+        }
         // The daemon blocks up to timeout_secs; give the socket headroom.
         let io_timeout = Duration::from_secs_f64(timeout_secs.max(0.0) + 30.0);
         self.writer.set_read_timeout(Some(io_timeout))?;

@@ -206,14 +206,13 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
                 let map: BTreeMap<&str, &str> = kv_pairs(rest, "WAIT option")?.into_iter().collect();
                 let jobs_tok = take(&map, "jobs")
                     .map_err(|_| ApiError::bad_arity("WAIT", "jobs=<id,..> timeout=<secs>"))?;
+                // An empty `jobs=` is legal: WAIT returns immediately with
+                // dispatched=0 (nothing to wait for).
                 let jobs = jobs_tok
                     .split(',')
                     .filter(|s| !s.is_empty())
                     .map(|tok| parse_u64("job id", tok))
                     .collect::<Result<Vec<u64>, ApiError>>()?;
-                if jobs.is_empty() {
-                    return Err(ApiError::bad_arg("jobs", jobs_tok));
-                }
                 let timeout_secs = match map.get("timeout") {
                     Some(tok) => parse_f64("timeout", tok)?,
                     None => 30.0,
@@ -864,6 +863,19 @@ mod tests {
             let req = parse_request(line, V2).unwrap_or_else(|e| panic!("{line}: {e}"));
             assert_eq!(render_request(&req, V2), line, "round-trip of {line:?}");
         }
+    }
+
+    #[test]
+    fn v2_wait_empty_jobs_roundtrips() {
+        // Regression: an empty jobs list is a legal WAIT (returns
+        // immediately with dispatched=0) and must survive the wire.
+        let req = Request::Wait {
+            jobs: vec![],
+            timeout_secs: 5.0,
+        };
+        let line = render_request(&req, V2);
+        assert_eq!(line, "WAIT jobs= timeout=5");
+        assert_eq!(parse_request(&line, V2).unwrap(), req);
     }
 
     #[test]

@@ -2,9 +2,25 @@
 //!
 //! Virtual time advances against the wall clock via a **pacer** thread: every
 //! tick it runs the scheduler's event loop up to `elapsed_wall × speedup`.
-//! API requests (submit, queue, cancel, stats) lock the scheduler, act, and
-//! return. Interactive jobs' virtual scheduling latencies (the paper's
-//! metric) are harvested from the event log into the daemon metrics.
+//! Interactive jobs' virtual scheduling latencies (the paper's metric) are
+//! harvested from the event log into the daemon metrics.
+//!
+//! Requests split into two paths:
+//!
+//! * **Write path** (`SUBMIT` / `SCANCEL` / pacing) — takes the scheduler
+//!   mutex, mutates, then publishes an immutable [`SchedSnapshot`] behind an
+//!   `Arc` swap before releasing it.
+//! * **Read path** (`SQUEUE` / `SJOB` / `STATS` / `UTIL`) — clones the
+//!   published snapshot `Arc` and never touches the scheduler mutex, so
+//!   status queries from thousands of clients cannot serialize behind a
+//!   dispatch burst. [`super::metrics::DaemonMetrics`] counts both paths
+//!   and histograms the write-lock hold time so a regression is observable.
+//!
+//! `WAIT` is subscription-based: a request that cannot complete immediately
+//! becomes a [`WaitTicket`] parked on the [`WaitHub`] completion generation.
+//! In-process callers block on the hub; the TCP server instead detaches the
+//! whole connection into its waiter registry (see [`super::server`]), so
+//! hundreds of concurrent `WAIT`s ride on a handful of worker threads.
 //!
 //! The daemon works entirely in the typed protocol: [`Daemon::handle`] is
 //! `fn(&self, Request) -> Response`; wire rendering lives in
@@ -16,13 +32,14 @@ use super::api::{
 };
 use super::codec;
 use super::metrics::DaemonMetrics;
+use super::snapshot::{SchedSnapshot, WaitHub, WaitView};
 use crate::cluster::Cluster;
 use crate::job::{JobId, JobSpec, JobState, QosClass, UserId};
 use crate::sched::{LogKind, Scheduler, SchedulerConfig};
 use crate::sim::SimTime;
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Upper bound on jobs created by one batched `SUBMIT` (keeps a typo'd
@@ -31,6 +48,10 @@ pub const MAX_BATCH_JOBS: u64 = 1_000_000;
 
 /// Upper bound on a `WAIT` timeout (wall seconds).
 pub const MAX_WAIT_SECS: f64 = 3600.0;
+
+/// How long a parked in-process `WAIT` sleeps between self-pace polls when
+/// no completion notify arrives (the hub wakes it earlier on progress).
+const WAIT_POLL: Duration = Duration::from_millis(2);
 
 /// Daemon parameters.
 #[derive(Debug, Clone)]
@@ -51,9 +72,53 @@ impl Default for DaemonConfig {
     }
 }
 
-/// The daemon: shared scheduler + metrics + lifecycle flag.
+/// A blocked `WAIT`, waiting for its jobs' completion events.
+#[derive(Debug, Clone)]
+pub struct WaitTicket {
+    /// Job ids the client asked about.
+    pub jobs: Vec<u64>,
+    /// Wall deadline.
+    pub deadline: Instant,
+    /// When the request arrived (metrics).
+    pub started: Instant,
+}
+
+/// Outcome of admitting a `WAIT`: either an immediate response or a parked
+/// ticket to poll on completion notifies.
+pub enum WaitStart {
+    /// Settled (or rejected) without blocking.
+    Done(Response),
+    /// Parked: poll [`Daemon::poll_wait`] after each completion notify.
+    Parked(WaitTicket),
+}
+
+/// A parked `WAIT` plus the protocol version its eventual response renders
+/// in (what the server's waiter registry holds per connection).
+pub struct ParkedWait {
+    /// The parked wait.
+    pub ticket: WaitTicket,
+    /// Render version for the deferred response.
+    pub version: ProtocolVersion,
+}
+
+/// Outcome of one request line when the caller cannot block (the server's
+/// connection loop).
+pub enum LineOutcome {
+    /// Rendered response and, after a successful `HELLO`, the version the
+    /// connection speaks from the next request on.
+    Done(String, Option<ProtocolVersion>),
+    /// A `WAIT` parked; respond later via [`Daemon::poll_wait`] +
+    /// [`Daemon::finish_wait`].
+    Parked(ParkedWait),
+}
+
+/// The daemon: scheduler write path + published read snapshot + WAIT hub.
 pub struct Daemon {
     sched: Mutex<Scheduler>,
+    /// The published read view (see [`SchedSnapshot`]). Swapped, never
+    /// mutated: readers clone the `Arc` under a momentary read lock.
+    snapshot: RwLock<Arc<SchedSnapshot>>,
+    hub: WaitHub,
     /// Daemon metrics (public for the e2e driver's reporting).
     pub metrics: DaemonMetrics,
     running: AtomicBool,
@@ -65,8 +130,12 @@ pub struct Daemon {
 impl Daemon {
     /// Create a daemon over a fresh scheduler.
     pub fn new(cluster: Cluster, sched_cfg: SchedulerConfig, cfg: DaemonConfig) -> Arc<Self> {
+        let sched = Scheduler::new(cluster, sched_cfg);
+        let snapshot = Arc::new(SchedSnapshot::capture(&sched, None));
         Arc::new(Self {
-            sched: Mutex::new(Scheduler::new(cluster, sched_cfg)),
+            sched: Mutex::new(sched),
+            snapshot: RwLock::new(snapshot),
+            hub: WaitHub::default(),
             metrics: DaemonMetrics::default(),
             running: AtomicBool::new(true),
             start: Instant::now(),
@@ -83,6 +152,8 @@ impl Daemon {
     /// Request shutdown.
     pub fn shutdown(&self) {
         self.running.store(false, Ordering::SeqCst);
+        // Parked waiters must observe the flag and fail their waits.
+        self.hub.notify();
     }
 
     /// Target virtual time for the current wall clock.
@@ -90,26 +161,61 @@ impl Daemon {
         SimTime::from_secs_f64(self.start.elapsed().as_secs_f64() * self.cfg.speedup)
     }
 
-    /// Advance the scheduler to the current wall-paced virtual time and
-    /// harvest newly dispatched tracked jobs into the metrics.
-    pub fn pace(&self) {
-        let target = self.target_now();
+    // ---- write path --------------------------------------------------------
+
+    /// Run a mutating operation under the scheduler mutex, publish a fresh
+    /// snapshot before releasing it, and account the lock hold time. Every
+    /// scheduler write goes through here or [`Daemon::pace`]; the read path
+    /// never takes this lock.
+    fn with_sched_mut<T>(&self, f: impl FnOnce(&mut Scheduler) -> T) -> T {
         let mut sched = self.sched.lock().expect("scheduler poisoned");
-        if target > sched.now() {
-            sched.run_until(target);
+        let t0 = Instant::now(); // hold time, not acquisition wait
+        let out = f(&mut sched);
+        self.publish_locked(&sched);
+        let hold_ns = t0.elapsed().as_nanos() as u64;
+        drop(sched);
+        self.metrics.record_write_lock(hold_ns);
+        out
+    }
+
+    /// Capture + swap the published snapshot. Must be called with the
+    /// scheduler mutex held (that is what serializes publishes). Bumps the
+    /// WAIT completion generation when dispatch or terminal progress landed.
+    fn publish_locked(&self, sched: &Scheduler) {
+        let prev = Arc::clone(&self.snapshot.read().expect("snapshot poisoned"));
+        if prev.version == sched.change_version() && prev.virtual_now == sched.now() {
+            return; // nothing moved, not even the clock
         }
-        let mut tracked = self.tracked.lock().expect("tracked poisoned");
-        let done: Vec<JobId> = tracked
-            .iter()
-            .copied()
-            .filter(|&j| sched.log().last(j, LogKind::DispatchDone).is_some())
-            .collect();
-        for j in done {
-            tracked.remove(&j);
-            let rec = sched.log().first(j, LogKind::Recognized).expect("recognized");
-            let dis = sched.log().last(j, LogKind::DispatchDone).expect("dispatched");
-            self.metrics.record_sched_latency(dis.saturating_sub(rec).as_nanos());
+        let next = Arc::new(SchedSnapshot::capture(sched, Some(&prev)));
+        let progressed =
+            next.stats.dispatches != prev.stats.dispatches || next.ended != prev.ended;
+        *self.snapshot.write().expect("snapshot poisoned") = next;
+        if progressed {
+            self.hub.notify();
         }
+    }
+
+    /// Advance the scheduler to the current wall-paced virtual time, harvest
+    /// newly dispatched tracked jobs into the metrics, and publish.
+    pub fn pace(&self) {
+        self.with_sched_mut(|sched| {
+            let target = self.target_now();
+            if target > sched.now() {
+                sched.run_until(target);
+            }
+            let mut tracked = self.tracked.lock().expect("tracked poisoned");
+            let done: Vec<JobId> = tracked
+                .iter()
+                .copied()
+                .filter(|&j| sched.log().last(j, LogKind::DispatchDone).is_some())
+                .collect();
+            for j in done {
+                tracked.remove(&j);
+                let rec = sched.log().first(j, LogKind::Recognized).expect("recognized");
+                let dis = sched.log().last(j, LogKind::DispatchDone).expect("dispatched");
+                self.metrics.record_sched_latency(dis.saturating_sub(rec).as_nanos());
+            }
+        });
     }
 
     /// Spawn the pacer thread. Returns its join handle; the thread exits on
@@ -127,6 +233,24 @@ impl Daemon {
             .expect("spawning pacer")
     }
 
+    // ---- read path ---------------------------------------------------------
+
+    /// The published read view (lock-free with respect to the scheduler:
+    /// only the snapshot `RwLock` is touched, and only to clone an `Arc`).
+    /// Counts toward the read-path metric — client-request use only.
+    pub fn read_snapshot(&self) -> Arc<SchedSnapshot> {
+        self.metrics.record_read_path();
+        self.snapshot()
+    }
+
+    /// Unmetered snapshot access for internal machinery (WAIT admission and
+    /// polling), so waiter polling doesn't pollute the read-path counter.
+    fn snapshot(&self) -> Arc<SchedSnapshot> {
+        Arc::clone(&self.snapshot.read().expect("snapshot poisoned"))
+    }
+
+    // ---- wire front door ---------------------------------------------------
+
     /// Handle one v1 request line; returns the rendered response body.
     /// (Compatibility surface — the transport uses
     /// [`Daemon::handle_line_versioned`].)
@@ -134,35 +258,67 @@ impl Daemon {
         self.handle_line_versioned(line, ProtocolVersion::V1).0
     }
 
-    /// Handle one request line under `version`. Returns the rendered
-    /// response and, for a successful `HELLO`, the version the connection
-    /// speaks from the next request on (the `HELLO` response itself is
-    /// already rendered in the negotiated version).
+    /// Handle one request line under `version`, blocking for `WAIT`.
+    /// Returns the rendered response and, for a successful `HELLO`, the
+    /// version the connection speaks from the next request on (the `HELLO`
+    /// response itself is already rendered in the negotiated version).
     pub fn handle_line_versioned(
         &self,
         line: &str,
         version: ProtocolVersion,
     ) -> (String, Option<ProtocolVersion>) {
+        match self.handle_line_nonblocking(line, version) {
+            LineOutcome::Done(resp, negotiated) => (resp, negotiated),
+            LineOutcome::Parked(parked) => {
+                let resp = self.block_on_wait(&parked.ticket);
+                (self.finish_wait(&parked, resp), None)
+            }
+        }
+    }
+
+    /// Handle one request line without ever blocking the caller: a `WAIT`
+    /// that cannot complete immediately comes back as
+    /// [`LineOutcome::Parked`] for the transport to resume later.
+    pub fn handle_line_nonblocking(&self, line: &str, version: ProtocolVersion) -> LineOutcome {
         let t0 = Instant::now();
         let (resp, render_version, negotiated) = match codec::parse_request(line, version) {
             Ok(req) => {
                 self.metrics.record_command(req.command_name());
-                let negotiated = match &req {
-                    Request::Hello(v) => Some(*v),
-                    _ => None,
-                };
-                let resp = self.handle(req);
-                (resp, negotiated.unwrap_or(version), negotiated)
+                if let Request::Wait { jobs, timeout_secs } = &req {
+                    match self.begin_wait(jobs, *timeout_secs) {
+                        WaitStart::Done(resp) => (resp, version, None),
+                        WaitStart::Parked(ticket) => {
+                            return LineOutcome::Parked(ParkedWait { ticket, version });
+                        }
+                    }
+                } else {
+                    let negotiated = match &req {
+                        Request::Hello(v) => Some(*v),
+                        _ => None,
+                    };
+                    let resp = self.handle(req);
+                    (resp, negotiated.unwrap_or(version), negotiated)
+                }
             }
             Err(e) => (Response::Error(e), version, None),
         };
         let ok = !matches!(resp, Response::Error(_));
         self.metrics.record_request(ok, t0.elapsed().as_nanos() as u64);
-        (codec::render_response(&resp, render_version), negotiated)
+        LineOutcome::Done(codec::render_response(&resp, render_version), negotiated)
+    }
+
+    /// Render a parked `WAIT`'s final response and account the request
+    /// (wall latency measured from arrival, not resume).
+    pub fn finish_wait(&self, parked: &ParkedWait, resp: Response) -> String {
+        let ok = !matches!(resp, Response::Error(_));
+        self.metrics
+            .record_request(ok, parked.ticket.started.elapsed().as_nanos() as u64);
+        codec::render_response(&resp, parked.version)
     }
 
     /// Handle one typed request. Total: failures come back as
-    /// [`Response::Error`].
+    /// [`Response::Error`]. `WAIT` blocks (the transport-level
+    /// [`Daemon::handle_line_nonblocking`] parks instead).
     pub fn handle(&self, req: Request) -> Response {
         match req {
             Request::Ping => Response::Pong,
@@ -173,8 +329,7 @@ impl Daemon {
             }
             Request::Submit(spec) => self.handle_submit(&spec),
             Request::Scancel(id) => {
-                let mut sched = self.sched.lock().expect("scheduler poisoned");
-                if sched.cancel(JobId(id)) {
+                if self.with_sched_mut(|sched| sched.cancel(JobId(id))) {
                     Response::Cancelled(id)
                 } else {
                     Response::Error(ApiError::not_found(format!("unknown or finished job {id}")))
@@ -182,7 +337,10 @@ impl Daemon {
             }
             Request::Squeue(filter) => self.handle_squeue(&filter),
             Request::Sjob(id) => self.handle_sjob(id),
-            Request::Wait { jobs, timeout_secs } => self.handle_wait(&jobs, timeout_secs),
+            Request::Wait { jobs, timeout_secs } => match self.begin_wait(&jobs, timeout_secs) {
+                WaitStart::Done(resp) => resp,
+                WaitStart::Parked(ticket) => self.block_on_wait(&ticket),
+            },
             Request::Stats => Response::Stats(self.stats_snapshot()),
             Request::Util => Response::Util(self.util_snapshot()),
         }
@@ -225,21 +383,24 @@ impl Daemon {
             ));
         }
         let specs = Self::materialize(spec);
-
-        let mut sched = self.sched.lock().expect("scheduler poisoned");
-        // Keep the virtual clock caught up so submissions land "now".
-        let target = self.target_now();
-        if target > sched.now() {
-            sched.run_until(target);
-        }
-        let ids = if spec.count > 1 {
-            // Batched: the whole burst arrives in this one RPC.
-            sched.submit_batch(specs)
-        } else {
-            // Single spec: client-side serialization, as the paper's
-            // launcher loop submits (one submit RPC apart).
-            sched.submit_burst(specs)
-        };
+        let batched = spec.count > 1;
+        let ids = self.with_sched_mut(|sched| {
+            // Keep the virtual clock caught up so submissions land "now"
+            // (computed under the lock: a stale target would backdate the
+            // submission by the lock-wait time × speedup).
+            let target = self.target_now();
+            if target > sched.now() {
+                sched.run_until(target);
+            }
+            if batched {
+                // Batched: the whole burst arrives in this one RPC.
+                sched.submit_batch(specs)
+            } else {
+                // Single spec: client-side serialization, as the paper's
+                // launcher loop submits (one submit RPC apart).
+                sched.submit_burst(specs)
+            }
+        });
         self.metrics
             .jobs_submitted
             .fetch_add(ids.len() as u64, Ordering::Relaxed);
@@ -257,7 +418,7 @@ impl Daemon {
     }
 
     fn handle_squeue(&self, filter: &SqueueFilter) -> Response {
-        let sched = self.sched.lock().expect("scheduler poisoned");
+        let snap = self.read_snapshot();
         let states: Vec<JobState> = match filter.state {
             Some(s) => vec![s],
             None => vec![JobState::Pending, JobState::Running, JobState::Requeued],
@@ -265,21 +426,20 @@ impl Daemon {
         let limit = filter.limit.unwrap_or(usize::MAX);
         let mut rows = Vec::new();
         'outer: for st in states {
-            for id in sched.jobs_in_state(st) {
-                let j = sched.job(id).expect("listed job");
-                if filter.user.is_some_and(|u| j.spec.user.0 != u) {
+            for v in snap.jobs_in_state(st) {
+                if filter.user.is_some_and(|u| v.user != u) {
                     continue;
                 }
-                if filter.qos.is_some_and(|q| j.spec.qos != q) {
+                if filter.qos.is_some_and(|q| v.qos != q) {
                     continue;
                 }
                 rows.push(JobSummary {
-                    id: id.0,
-                    job_type: j.spec.job_type,
-                    tasks: j.spec.tasks,
-                    user: j.spec.user.0,
-                    qos: j.spec.qos,
-                    state: j.state,
+                    id: v.id,
+                    job_type: v.job_type,
+                    tasks: v.tasks,
+                    user: v.user,
+                    qos: v.qos,
+                    state: v.state,
                 });
                 if rows.len() >= limit {
                     break 'outer;
@@ -290,106 +450,138 @@ impl Daemon {
     }
 
     fn handle_sjob(&self, id: u64) -> Response {
-        let sched = self.sched.lock().expect("scheduler poisoned");
-        let Some(j) = sched.job(JobId(id)) else {
+        let snap = self.read_snapshot();
+        let Some(v) = snap.job(id) else {
             return Response::Error(ApiError::not_found(format!("unknown job {id}")));
-        };
-        let recognized = sched.log().first(JobId(id), LogKind::Recognized);
-        let dispatched = sched.log().last(JobId(id), LogKind::DispatchDone);
-        let latency_ns = match (recognized, dispatched) {
-            (Some(r), Some(d)) => Some(d.saturating_sub(r).as_nanos()),
-            _ => None,
         };
         Response::Job(JobDetail {
             id,
-            job_type: j.spec.job_type,
-            tasks: j.spec.tasks,
-            user: j.spec.user.0,
-            qos: j.spec.qos,
-            state: j.state,
-            submit_secs: j.submit_time.as_secs_f64(),
-            queue_secs: j.queue_time.as_secs_f64(),
-            start_secs: j.start_time.map(SimTime::as_secs_f64),
-            end_secs: j.end_time.map(SimTime::as_secs_f64),
-            requeues: j.requeue_count,
-            recognized_secs: recognized.map(SimTime::as_secs_f64),
-            dispatched_secs: dispatched.map(SimTime::as_secs_f64),
-            latency_ns,
+            job_type: v.job_type,
+            tasks: v.tasks,
+            user: v.user,
+            qos: v.qos,
+            state: v.state,
+            submit_secs: v.submit_secs,
+            queue_secs: v.queue_secs,
+            start_secs: v.start_secs,
+            end_secs: v.end_secs,
+            requeues: v.requeues,
+            recognized_secs: v.recognized.map(SimTime::as_secs_f64),
+            dispatched_secs: v.dispatched.map(SimTime::as_secs_f64),
+            latency_ns: v.latency_ns(),
         })
     }
 
-    /// Block until every job in `jobs` has a `DispatchDone` log record, a
-    /// terminal state makes dispatch impossible, or the wall timeout
-    /// expires. Paces the scheduler itself, so it works with or without the
-    /// pacer thread. Reports the burst's virtual scheduling latency (first
-    /// `Recognized` → last `DispatchDone`), the paper's Figure-2 metric.
-    fn handle_wait(&self, jobs: &[u64], timeout_secs: f64) -> Response {
-        if jobs.is_empty() {
-            return Response::Error(ApiError::bad_arg("jobs", "(empty)"));
-        }
+    // ---- WAIT: subscription model -----------------------------------------
+
+    /// Admit a `WAIT`: validate, and either answer immediately (invalid
+    /// timeout, unknown job, empty list, already settled) or park a ticket
+    /// on the completion hub.
+    pub fn begin_wait(&self, jobs: &[u64], timeout_secs: f64) -> WaitStart {
         if !(timeout_secs.is_finite() && (0.0..=MAX_WAIT_SECS).contains(&timeout_secs)) {
-            return Response::Error(ApiError::bad_arg("timeout", &format!("{timeout_secs}")));
+            return WaitStart::Done(Response::Error(ApiError::bad_arg(
+                "timeout",
+                &format!("{timeout_secs}"),
+            )));
         }
-        let ids: Vec<JobId> = jobs.iter().map(|&j| JobId(j)).collect();
-        {
-            let sched = self.sched.lock().expect("scheduler poisoned");
-            for &id in &ids {
-                if sched.job(id).is_none() {
-                    return Response::Error(ApiError::not_found(format!("unknown job {}", id.0)));
-                }
+        // Nothing to wait for: return immediately instead of blocking until
+        // the timeout (regression: empty `jobs` used to hang/err).
+        if jobs.is_empty() {
+            return WaitStart::Done(Response::Wait(WaitResult {
+                requested: 0,
+                dispatched: 0,
+                timed_out: false,
+                latency_ns: 0,
+            }));
+        }
+        let snap = self.snapshot();
+        for &id in jobs {
+            if snap.job(id).is_none() {
+                return WaitStart::Done(Response::Error(ApiError::not_found(format!(
+                    "unknown job {id}"
+                ))));
             }
         }
-        let deadline = Instant::now() + Duration::from_secs_f64(timeout_secs);
+        let wv = snap.wait_view(jobs);
+        if wv.settled {
+            return WaitStart::Done(wait_response(jobs.len(), wv, false));
+        }
+        self.metrics.waits_parked.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        WaitStart::Parked(WaitTicket {
+            jobs: jobs.to_vec(),
+            deadline: now + Duration::from_secs_f64(timeout_secs),
+            started: now,
+        })
+    }
+
+    /// Poll a parked `WAIT` against the current snapshot: `Some` exactly
+    /// once — when it settled, timed out, or the daemon is shutting down.
+    pub fn poll_wait(&self, ticket: &WaitTicket) -> Option<Response> {
+        let snap = self.snapshot();
+        let wv = snap.wait_view(&ticket.jobs);
+        let resp = if wv.settled {
+            wait_response(ticket.jobs.len(), wv, false)
+        } else if Instant::now() >= ticket.deadline {
+            wait_response(ticket.jobs.len(), wv, true)
+        } else if !self.is_running() {
+            Response::Error(ApiError::unsupported("daemon is shutting down"))
+        } else {
+            return None;
+        };
+        self.metrics.waits_resumed.fetch_add(1, Ordering::Relaxed);
+        Some(resp)
+    }
+
+    /// Block the calling thread on a parked `WAIT`. Paces the scheduler
+    /// itself between hub wakes, so it works with or without the pacer
+    /// thread (exactly like the old polling `WAIT`, minus the busy loop:
+    /// a `DispatchDone` notify ends the sleep early).
+    fn block_on_wait(&self, ticket: &WaitTicket) -> Response {
         loop {
             self.pace();
-            let mut timed_out = false;
-            {
-                let sched = self.sched.lock().expect("scheduler poisoned");
-                let dispatched = ids
-                    .iter()
-                    .filter(|&&id| sched.log().last(id, LogKind::DispatchDone).is_some())
-                    .count();
-                // A job that reached a terminal state without ever
-                // dispatching (e.g. cancelled while pending) can never
-                // dispatch: don't hold the client hostage for it.
-                let settled = ids.iter().all(|&id| {
-                    sched.log().last(id, LogKind::DispatchDone).is_some()
-                        || sched.job(id).map_or(true, |j| j.state.is_terminal())
-                });
-                if settled || Instant::now() >= deadline {
-                    if !settled {
-                        timed_out = true;
-                    }
-                    let latency_ns = sched
-                        .log()
-                        .measure(&ids)
-                        .map(|m| {
-                            m.last_dispatched
-                                .saturating_sub(m.first_recognized)
-                                .as_nanos()
-                        })
-                        .unwrap_or(0);
-                    return Response::Wait(WaitResult {
-                        requested: ids.len() as u32,
-                        dispatched: dispatched as u32,
-                        timed_out,
-                        latency_ns,
-                    });
-                }
+            // Read the generation *after* pacing so our own publish cannot
+            // spuriously end the sleep, but any concurrent publish can.
+            let gen = self.hub.generation();
+            if let Some(resp) = self.poll_wait(ticket) {
+                return resp;
             }
-            if !self.is_running() {
-                return Response::Error(ApiError::unsupported("daemon is shutting down"));
-            }
-            std::thread::sleep(Duration::from_millis(2));
+            let remaining = ticket.deadline.saturating_duration_since(Instant::now());
+            self.hub.wait_change(gen, remaining.min(WAIT_POLL));
         }
     }
 
+    /// Current completion generation (server waiter thread).
+    pub fn completion_generation(&self) -> u64 {
+        self.hub.generation()
+    }
+
+    /// Park until the completion generation moves past `seen` or `timeout`
+    /// elapses; returns the observed generation (server waiter thread).
+    pub fn wait_completion(&self, seen: u64, timeout: Duration) -> u64 {
+        self.hub.wait_change(seen, timeout)
+    }
+
+    /// Wake the waiter machinery without claiming progress (the server
+    /// kicks this when it parks a new connection so its waiter thread
+    /// re-computes the nearest deadline).
+    pub fn kick_waiters(&self) {
+        self.hub.notify();
+    }
+
+    /// Fail a parked wait without waiting (waiter-registry overflow or a
+    /// park/shutdown race). Counts as its one resolution.
+    pub fn reject_wait(&self, _ticket: &WaitTicket, why: &str) -> Response {
+        self.metrics.waits_resumed.fetch_add(1, Ordering::Relaxed);
+        Response::Error(ApiError::unsupported(why))
+    }
+
     fn stats_snapshot(&self) -> StatsSnapshot {
-        let sched = self.sched.lock().expect("scheduler poisoned");
-        let st = sched.stats();
+        let snap = self.read_snapshot();
+        let st = &snap.stats;
         let hist = self.metrics.sched_latency();
         StatsSnapshot {
-            virtual_now_secs: sched.now().as_secs_f64(),
+            virtual_now_secs: snap.virtual_now.as_secs_f64(),
             dispatches: st.dispatches,
             preemptions: st.preemptions,
             requeues: st.requeues,
@@ -399,7 +591,7 @@ impl Daemon {
             triggered_passes: st.triggered_passes,
             score_batches: st.score_batches,
             jobs_scored: st.jobs_scored,
-            scorer: sched.config().scorer.name().to_string(),
+            scorer: snap.scorer.to_string(),
             requests_ok: self.metrics.requests_ok.load(Ordering::Relaxed),
             requests_err: self.metrics.requests_err.load(Ordering::Relaxed),
             jobs_submitted: self.metrics.jobs_submitted.load(Ordering::Relaxed),
@@ -415,15 +607,14 @@ impl Daemon {
     }
 
     fn util_snapshot(&self) -> UtilSnapshot {
-        let sched = self.sched.lock().expect("scheduler poisoned");
-        let c = sched.cluster();
+        let snap = self.read_snapshot();
         UtilSnapshot {
-            utilization: c.utilization(),
-            idle_cores: c.idle_cores(),
-            idle_nodes: c.idle_node_count(),
-            total_cores: c.total_cores(),
-            pending: sched.jobs_in_state(JobState::Pending).len(),
-            running: sched.jobs_in_state(JobState::Running).len(),
+            utilization: snap.cluster.utilization,
+            idle_cores: snap.cluster.idle_cores,
+            idle_nodes: snap.cluster.idle_nodes,
+            total_cores: snap.cluster.total_cores,
+            pending: snap.pending,
+            running: snap.running,
         }
     }
 
@@ -432,6 +623,16 @@ impl Daemon {
         let sched = self.sched.lock().expect("scheduler poisoned");
         f(&sched)
     }
+}
+
+/// Build the `WAIT` response for a settled/timed-out view.
+fn wait_response(requested: usize, wv: WaitView, timed_out: bool) -> Response {
+    Response::Wait(WaitResult {
+        requested: requested as u32,
+        dispatched: wv.dispatched,
+        timed_out,
+        latency_ns: wv.latency_ns,
+    })
 }
 
 #[cfg(test)]
@@ -669,6 +870,58 @@ mod tests {
         };
         assert!(!wait.timed_out);
         assert_eq!(wait.dispatched, 0);
+    }
+
+    #[test]
+    fn wait_on_empty_job_list_returns_immediately() {
+        // Regression: WAIT with an empty jobs list must not block until the
+        // timeout (or error) — there is nothing to wait for.
+        let d = daemon();
+        let t0 = Instant::now();
+        match d.handle(Request::Wait {
+            jobs: vec![],
+            timeout_secs: 30.0,
+        }) {
+            Response::Wait(w) => {
+                assert_eq!(w.requested, 0);
+                assert_eq!(w.dispatched, 0);
+                assert!(!w.timed_out);
+                assert_eq!(w.latency_ns, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "empty WAIT must not block"
+        );
+    }
+
+    #[test]
+    fn read_requests_never_take_the_scheduler_lock() {
+        let d = daemon();
+        d.handle(Request::Submit(SubmitSpec::new(
+            QosClass::Spot,
+            JobType::TripleMode,
+            320,
+            9,
+        )));
+        let writes_before = d.metrics.write_locks.load(Ordering::Relaxed);
+        let reads_before = d.metrics.read_path_ops.load(Ordering::Relaxed);
+        for _ in 0..50 {
+            assert!(matches!(
+                d.handle(Request::Squeue(SqueueFilter::default())),
+                Response::Jobs(_)
+            ));
+            assert!(matches!(d.handle(Request::Stats), Response::Stats(_)));
+            assert!(matches!(d.handle(Request::Util), Response::Util(_)));
+            assert!(matches!(d.handle(Request::Sjob(1)), Response::Job(_)));
+        }
+        assert_eq!(
+            d.metrics.write_locks.load(Ordering::Relaxed),
+            writes_before,
+            "a read-only request acquired the scheduler write mutex"
+        );
+        assert!(d.metrics.read_path_ops.load(Ordering::Relaxed) >= reads_before + 200);
     }
 
     #[test]

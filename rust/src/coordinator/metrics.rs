@@ -1,5 +1,12 @@
-//! Daemon metrics: request counters (total and per-command) and latency
-//! histograms.
+//! Daemon metrics: request counters (total, per-command, and per lock
+//! path) and latency histograms.
+//!
+//! The read/write-path counters make the daemon's concurrency contract
+//! observable: `read_path_ops` counts requests served from the published
+//! snapshot, `write_locks` counts scheduler-mutex acquisitions, and
+//! `lock_hold` histograms how long each write held the mutex — a read-only
+//! request that grows `write_locks` is a regression the tests assert
+//! against.
 
 use super::api::COMMANDS;
 use crate::metrics::LogHistogram;
@@ -15,6 +22,16 @@ pub struct DaemonMetrics {
     pub requests_err: AtomicU64,
     /// Jobs submitted through the API.
     pub jobs_submitted: AtomicU64,
+    /// Requests served from the published snapshot (no scheduler lock).
+    pub read_path_ops: AtomicU64,
+    /// Scheduler-mutex acquisitions (mutating requests + pacing).
+    pub write_locks: AtomicU64,
+    /// `WAIT`s that could not complete immediately and parked.
+    pub waits_parked: AtomicU64,
+    /// Parked `WAIT`s that resolved (settled, timed out, or shutdown).
+    /// Equal to [`DaemonMetrics::waits_parked`] once quiescent: every
+    /// waiter wakes exactly once.
+    pub waits_resumed: AtomicU64,
     /// Per-command request counts, indexed like [`COMMANDS`].
     per_command: [AtomicU64; COMMANDS.len()],
     /// Wall-clock latency of request handling (ns).
@@ -22,6 +39,8 @@ pub struct DaemonMetrics {
     /// *Virtual* scheduling latency of interactive jobs (recognized →
     /// dispatched, ns of sim time) — the paper's metric, live.
     sched_latency: Mutex<LogHistogram>,
+    /// Wall time the scheduler write mutex was held per acquisition (ns).
+    lock_hold: Mutex<LogHistogram>,
 }
 
 impl DaemonMetrics {
@@ -54,6 +73,25 @@ impl DaemonMetrics {
             .collect()
     }
 
+    /// Count one snapshot-served (lock-free) request.
+    pub fn record_read_path(&self) {
+        self.read_path_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one scheduler-mutex acquisition and its hold time.
+    pub fn record_write_lock(&self, hold_ns: u64) {
+        self.write_locks.fetch_add(1, Ordering::Relaxed);
+        self.lock_hold
+            .lock()
+            .expect("metrics poisoned")
+            .record(hold_ns);
+    }
+
+    /// Snapshot of the write-lock hold-time histogram.
+    pub fn lock_hold(&self) -> LogHistogram {
+        self.lock_hold.lock().expect("metrics poisoned").clone()
+    }
+
     /// Record a job's virtual scheduling latency.
     pub fn record_sched_latency(&self, sim_ns: u64) {
         self.sched_latency
@@ -75,12 +113,18 @@ impl DaemonMetrics {
     /// One-line textual summary (e2e reporting).
     pub fn summary(&self) -> String {
         format!(
-            "requests_ok={} requests_err={} jobs_submitted={} | request_wall: {} | sched_virtual: {}",
+            "requests_ok={} requests_err={} jobs_submitted={} read_path={} write_locks={} \
+             waits={}/{} | request_wall: {} | sched_virtual: {} | lock_hold: {}",
             self.requests_ok.load(Ordering::Relaxed),
             self.requests_err.load(Ordering::Relaxed),
             self.jobs_submitted.load(Ordering::Relaxed),
+            self.read_path_ops.load(Ordering::Relaxed),
+            self.write_locks.load(Ordering::Relaxed),
+            self.waits_resumed.load(Ordering::Relaxed),
+            self.waits_parked.load(Ordering::Relaxed),
             self.request_latency().summary_ns(),
             self.sched_latency().summary_ns(),
+            self.lock_hold().summary_ns(),
         )
     }
 }
@@ -102,6 +146,19 @@ mod tests {
         assert!(s.contains("jobs_submitted=3"));
         assert_eq!(m.request_latency().count(), 2);
         assert_eq!(m.sched_latency().count(), 1);
+    }
+
+    #[test]
+    fn lock_path_counters() {
+        let m = DaemonMetrics::default();
+        m.record_read_path();
+        m.record_read_path();
+        m.record_write_lock(5_000);
+        assert_eq!(m.read_path_ops.load(Ordering::Relaxed), 2);
+        assert_eq!(m.write_locks.load(Ordering::Relaxed), 1);
+        assert_eq!(m.lock_hold().count(), 1);
+        assert!(m.summary().contains("read_path=2"));
+        assert!(m.summary().contains("write_locks=1"));
     }
 
     #[test]

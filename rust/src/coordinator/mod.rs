@@ -10,15 +10,21 @@
 //! * [`codec`] — wire rendering/parsing for both protocol versions: v1 (the
 //!   original line grammar, byte-compatible) and v2 (tagged `key=value`
 //!   records), negotiated per connection via `HELLO v2`. See `PROTOCOL.md`.
-//! * [`daemon`] — the service core: scheduler behind a mutex, a pacer thread
-//!   that advances virtual time against the wall clock at a configurable
-//!   speedup, batched `SUBMIT`, blocking `WAIT`, and per-request metrics.
+//! * [`daemon`] — the service core: a **write path** (SUBMIT/SCANCEL/
+//!   pacing) behind the scheduler mutex that publishes an immutable
+//!   [`snapshot::SchedSnapshot`] after every mutation, and a **read path**
+//!   (SQUEUE/SJOB/STATS/UTIL) served from the published snapshot without
+//!   the scheduler lock; batched `SUBMIT`; subscription-based `WAIT`;
+//!   per-request and per-lock-path metrics.
+//! * [`snapshot`] — the published read view and the `WAIT` completion hub
+//!   (condvar keyed by a dispatch/terminal generation).
 //! * [`server`] — TCP listener + connection loop (per-connection protocol
-//!   version, idle-connection expiry).
+//!   version, idle-connection expiry, parked-`WAIT` registry so blocked
+//!   waits never pin pool workers).
 //! * [`client`] — the blocking typed client for the CLI, examples, and
 //!   tests.
-//! * [`metrics`] — daemon counters (total and per-command) and latency
-//!   histograms.
+//! * [`metrics`] — daemon counters (total, per-command, per lock path) and
+//!   latency histograms.
 //! * [`threadpool`] — fixed worker pool substrate.
 
 pub mod api;
@@ -27,6 +33,7 @@ pub mod codec;
 pub mod daemon;
 pub mod metrics;
 pub mod server;
+pub mod snapshot;
 pub mod threadpool;
 
 pub use api::{
@@ -36,3 +43,4 @@ pub use api::{
 pub use client::{Client, ClientError};
 pub use daemon::{Daemon, DaemonConfig};
 pub use server::Server;
+pub use snapshot::{JobView, SchedSnapshot, WaitHub};

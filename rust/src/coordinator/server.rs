@@ -5,25 +5,46 @@
 //! the negotiated version is per-connection state held here. Idle
 //! connections are expired after [`Server::idle_timeout`] so a silent client
 //! cannot pin a worker thread forever.
+//!
+//! **Blocked `WAIT`s do not pin workers either.** When a `WAIT` cannot
+//! complete immediately the daemon parks it
+//! ([`crate::coordinator::daemon::LineOutcome::Parked`]) and the whole
+//! connection moves into the server's waiter registry; the worker goes back
+//! to the accept queue. A single notifier thread subscribes to the daemon's
+//! completion generation, resolves parked waits as their jobs dispatch
+//! (or their deadlines pass), writes the deferred responses, and hands the
+//! connections back to the pool to keep serving. Hundreds of concurrent
+//! `WAIT`s therefore ride on a pool of two.
 
-use super::api::ProtocolVersion;
-use super::daemon::Daemon;
+use super::api::{ProtocolVersion, Response};
+use super::daemon::{Daemon, LineOutcome, ParkedWait};
 use super::threadpool::ThreadPool;
 use crate::util::error::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Default idle-connection expiry.
 pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
+/// Longest the notifier thread sleeps between deadline sweeps (a
+/// completion notify ends the sleep early).
+const WAITER_TICK: Duration = Duration::from_millis(20);
+
+/// Cap on concurrently parked `WAIT`s. Detaching waits from the worker
+/// pool removed the pool-size back-pressure; without a cap a client could
+/// park an unbounded number of sockets for up to `MAX_WAIT_SECS` each.
+/// Past the cap a `WAIT` fails fast with an `unsupported` error.
+const MAX_PARKED_WAITS: usize = 4096;
+
 /// The TCP front-end.
 pub struct Server {
     listener: TcpListener,
     daemon: Arc<Daemon>,
-    pool: ThreadPool,
+    pool: Arc<ThreadPool>,
     idle_timeout: Duration,
+    parked: Arc<ParkedWaits>,
 }
 
 impl Server {
@@ -36,8 +57,9 @@ impl Server {
         Ok(Self {
             listener,
             daemon,
-            pool: ThreadPool::new(workers.max(1)),
+            pool: Arc::new(ThreadPool::new(workers.max(1))),
             idle_timeout: DEFAULT_IDLE_TIMEOUT,
+            parked: Arc::new(ParkedWaits::default()),
         })
     }
 
@@ -53,19 +75,24 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
+    /// Connections currently parked in a blocked `WAIT` (tests/ops).
+    pub fn parked_waits(&self) -> usize {
+        self.parked.len()
+    }
+
     /// Serve until the daemon shuts down.
     pub fn serve(&self) {
+        let waiter = self.spawn_waiter();
         while self.daemon.is_running() {
             match self.listener.accept() {
-                Ok((stream, _peer)) => {
-                    let daemon = Arc::clone(&self.daemon);
-                    let idle_timeout = self.idle_timeout;
-                    self.pool.execute(move || {
-                        if let Err(e) = handle_connection(stream, &daemon, idle_timeout) {
-                            eprintln!("connection error: {e:#}");
-                        }
-                    });
-                }
+                Ok((stream, _peer)) => match Conn::new(stream, self.idle_timeout) {
+                    Ok(conn) => {
+                        let daemon = Arc::clone(&self.daemon);
+                        let parked = Arc::clone(&self.parked);
+                        self.pool.execute(move || drive_connection(conn, daemon, parked));
+                    }
+                    Err(e) => eprintln!("connection setup error: {e:#}"),
+                },
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(10));
                 }
@@ -75,62 +102,271 @@ impl Server {
                 }
             }
         }
+        let _ = waiter.join();
+    }
+
+    /// Spawn the waiter/notifier thread: resolves parked `WAIT`s on
+    /// completion notifies and deadline sweeps, then recycles their
+    /// connections into the worker pool.
+    fn spawn_waiter(&self) -> std::thread::JoinHandle<()> {
+        let daemon = Arc::clone(&self.daemon);
+        let parked = Arc::clone(&self.parked);
+        let pool = Arc::clone(&self.pool);
+        std::thread::Builder::new()
+            .name("spotcloud-waiter".into())
+            .spawn(move || {
+                while daemon.is_running() {
+                    // Parked waits must make virtual-time progress even when
+                    // no pacer thread runs (the old WAIT loop paced from the
+                    // blocked request thread). With nothing parked there is
+                    // nothing to advance for — don't duplicate the pacer.
+                    if !parked.is_empty() {
+                        daemon.pace();
+                    }
+                    // Read the generation *after* pacing so our own publish
+                    // cannot spin the loop, but a concurrent one wakes it.
+                    let gen = daemon.completion_generation();
+                    for (mut session, resp) in parked.take_resolved(&daemon) {
+                        let rendered = daemon.finish_wait(&session.wait, resp);
+                        if session.conn.write_response(&rendered).is_ok() {
+                            session.conn.last_activity = Instant::now();
+                            let daemon = Arc::clone(&daemon);
+                            let parked = Arc::clone(&parked);
+                            pool.execute(move || drive_connection(session.conn, daemon, parked));
+                        }
+                    }
+                    let timeout = parked
+                        .nearest_deadline()
+                        .map(|d| d.saturating_duration_since(Instant::now()))
+                        .unwrap_or(WAITER_TICK)
+                        .clamp(Duration::from_millis(1), WAITER_TICK);
+                    daemon.wait_completion(gen, timeout);
+                }
+                // Shutdown: close the registry (a racing park now resolves
+                // inline on its worker instead of landing in a registry no
+                // one polls) and fail any still-parked waits so clients are
+                // not left hanging on a dead socket.
+                for (mut session, resp) in parked.close_and_resolve(&daemon) {
+                    let rendered = daemon.finish_wait(&session.wait, resp);
+                    let _ = session.conn.write_response(&rendered);
+                }
+            })
+            .expect("spawning waiter")
     }
 }
 
-fn handle_connection(stream: TcpStream, daemon: &Arc<Daemon>, idle_timeout: Duration) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // Short poll timeout so idle connections observe daemon shutdown (and
-    // their own idle expiry) promptly — a long blocking read would stall
-    // worker-pool teardown.
-    stream
-        .set_read_timeout(Some(Duration::from_millis(200)))
-        .context("read timeout")?;
-    let mut writer = stream.try_clone().context("cloning stream")?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    // Every connection starts in v1; HELLO upgrades it.
-    let mut version = ProtocolVersion::V1;
-    let mut last_activity = Instant::now();
-    loop {
-        // Note: on a poll timeout, any partially-read bytes stay in `line`
-        // and the next read_line continues appending — no data loss.
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // peer closed
-            Ok(_) => {
-                last_activity = Instant::now();
-                let trimmed = line.trim_end_matches(['\n', '\r']).to_string();
-                line.clear();
-                if trimmed.is_empty() {
-                    continue;
-                }
-                let (resp, negotiated) = daemon.handle_line_versioned(&trimmed, version);
-                if let Some(v) = negotiated {
-                    version = v;
-                }
-                writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n\n")?;
-                writer.flush()?;
-                // Handling time (e.g. a long WAIT) must not count as idle.
-                last_activity = Instant::now();
-            }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                // Idle poll tick: expire silent connections so the worker
-                // goes back to serving the accept queue.
-                if last_activity.elapsed() >= idle_timeout {
-                    break;
-                }
-            }
-            Err(_) => break, // peer gone
+/// The registry of connections blocked in `WAIT`.
+#[derive(Default)]
+struct ParkedWaits {
+    inner: Mutex<ParkedInner>,
+}
+
+#[derive(Default)]
+struct ParkedInner {
+    sessions: Vec<ParkedSession>,
+    /// Set by the waiter thread on its way out: no one polls the registry
+    /// anymore, so parks must resolve inline on their worker.
+    closed: bool,
+}
+
+/// One parked connection: the socket state plus the wait it blocks on.
+struct ParkedSession {
+    conn: Conn,
+    wait: ParkedWait,
+}
+
+impl ParkedWaits {
+    fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .expect("parked registry poisoned")
+            .sessions
+            .len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Try to park; gives the session back when the registry is closed
+    /// (shutdown raced the park) or full (back-pressure).
+    fn push(&self, session: ParkedSession) -> std::result::Result<(), ParkedSession> {
+        let mut inner = self.inner.lock().expect("parked registry poisoned");
+        if inner.closed || inner.sessions.len() >= MAX_PARKED_WAITS {
+            return Err(session);
         }
-        if !daemon.is_running() {
-            break;
+        inner.sessions.push(session);
+        Ok(())
+    }
+
+    /// Remove and return every parked wait the daemon can answer now
+    /// (settled, timed out, or shutting down), with its response.
+    fn take_resolved(&self, daemon: &Daemon) -> Vec<(ParkedSession, Response)> {
+        let mut inner = self.inner.lock().expect("parked registry poisoned");
+        let mut resolved = Vec::new();
+        let mut i = 0;
+        while i < inner.sessions.len() {
+            match daemon.poll_wait(&inner.sessions[i].wait.ticket) {
+                Some(resp) => resolved.push((inner.sessions.swap_remove(i), resp)),
+                None => i += 1,
+            }
+        }
+        resolved
+    }
+
+    /// Earliest deadline among parked waits.
+    fn nearest_deadline(&self) -> Option<Instant> {
+        self.inner
+            .lock()
+            .expect("parked registry poisoned")
+            .sessions
+            .iter()
+            .map(|s| s.wait.ticket.deadline)
+            .min()
+    }
+
+    /// Close the registry and drain it, answering each wait one final time
+    /// (`poll_wait` always resolves once the daemon stopped).
+    fn close_and_resolve(&self, daemon: &Daemon) -> Vec<(ParkedSession, Response)> {
+        let mut inner = self.inner.lock().expect("parked registry poisoned");
+        inner.closed = true;
+        inner
+            .sessions
+            .drain(..)
+            .map(|s| {
+                let resp = daemon
+                    .poll_wait(&s.wait.ticket)
+                    .unwrap_or_else(|| daemon.reject_wait(&s.wait.ticket, "daemon is shutting down"));
+                (s, resp)
+            })
+            .collect()
+    }
+}
+
+/// Per-connection socket state, detachable from its worker thread.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    version: ProtocolVersion,
+    line: String,
+    idle_timeout: Duration,
+    last_activity: Instant,
+}
+
+/// Why a connection left its serve loop.
+enum ConnExit {
+    /// Peer gone, idle-expired, or daemon stopped: drop the connection.
+    Closed,
+    /// A `WAIT` parked: move the connection into the waiter registry.
+    Parked(ParkedWait),
+}
+
+impl Conn {
+    fn new(stream: TcpStream, idle_timeout: Duration) -> Result<Self> {
+        stream.set_nodelay(true).ok();
+        // Short poll timeout so idle connections observe daemon shutdown
+        // (and their own idle expiry) promptly — a long blocking read would
+        // stall worker-pool teardown.
+        stream
+            .set_read_timeout(Some(Duration::from_millis(200)))
+            .context("read timeout")?;
+        let writer = stream.try_clone().context("cloning stream")?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+            // Every connection starts in v1; HELLO upgrades it.
+            version: ProtocolVersion::V1,
+            line: String::new(),
+            idle_timeout,
+            last_activity: Instant::now(),
+        })
+    }
+
+    /// Serve requests until the peer closes, the connection idles out, the
+    /// daemon stops, or a `WAIT` parks the connection.
+    fn serve(&mut self, daemon: &Daemon) -> ConnExit {
+        loop {
+            // Note: on a poll timeout, any partially-read bytes stay in
+            // `self.line` and the next read_line continues appending — no
+            // data loss.
+            match self.reader.read_line(&mut self.line) {
+                Ok(0) => return ConnExit::Closed, // peer closed
+                Ok(_) => {
+                    self.last_activity = Instant::now();
+                    let trimmed = self.line.trim_end_matches(['\n', '\r']).to_string();
+                    self.line.clear();
+                    if trimmed.is_empty() {
+                        continue;
+                    }
+                    match daemon.handle_line_nonblocking(&trimmed, self.version) {
+                        LineOutcome::Done(resp, negotiated) => {
+                            if let Some(v) = negotiated {
+                                self.version = v;
+                            }
+                            if self.write_response(&resp).is_err() {
+                                return ConnExit::Closed; // peer gone
+                            }
+                            // Handling time must not count as idle.
+                            self.last_activity = Instant::now();
+                        }
+                        LineOutcome::Parked(wait) => return ConnExit::Parked(wait),
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // Idle poll tick: expire silent connections so the
+                    // worker goes back to serving the accept queue.
+                    if self.last_activity.elapsed() >= self.idle_timeout {
+                        return ConnExit::Closed;
+                    }
+                }
+                Err(_) => return ConnExit::Closed, // peer gone
+            }
+            if !daemon.is_running() {
+                return ConnExit::Closed;
+            }
         }
     }
-    Ok(())
+
+    fn write_response(&mut self, resp: &str) -> std::io::Result<()> {
+        self.writer.write_all(resp.as_bytes())?;
+        self.writer.write_all(b"\n\n")?;
+        self.writer.flush()
+    }
+}
+
+/// Run a connection's serve loop on a pool worker; a parked `WAIT` hands
+/// the connection to the waiter registry and frees the worker.
+fn drive_connection(mut conn: Conn, daemon: Arc<Daemon>, parked: Arc<ParkedWaits>) {
+    loop {
+        match conn.serve(&daemon) {
+            ConnExit::Closed => return,
+            ConnExit::Parked(wait) => match parked.push(ParkedSession { conn, wait }) {
+                Ok(()) => {
+                    // Wake the waiter thread so it re-computes the nearest
+                    // deadline.
+                    daemon.kick_waiters();
+                    return;
+                }
+                Err(mut session) => {
+                    // Registry closed (shutdown raced the park) or full:
+                    // resolve inline on this worker — exactly once, like any
+                    // other wait — then keep serving the connection.
+                    let resp = daemon.poll_wait(&session.wait.ticket).unwrap_or_else(|| {
+                        daemon.reject_wait(&session.wait.ticket, "too many concurrent WAITs")
+                    });
+                    let rendered = daemon.finish_wait(&session.wait, resp);
+                    if session.conn.write_response(&rendered).is_err() || !daemon.is_running() {
+                        return;
+                    }
+                    session.conn.last_activity = Instant::now();
+                    conn = session.conn;
+                }
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -145,21 +381,24 @@ mod tests {
     use crate::sim::SchedCosts;
 
     fn spawn_server() -> (Arc<Daemon>, SocketAddr, std::thread::JoinHandle<()>) {
-        spawn_server_with(DEFAULT_IDLE_TIMEOUT)
+        spawn_server_with(DEFAULT_IDLE_TIMEOUT, 2, 4096)
     }
 
     fn spawn_server_with(
         idle: Duration,
+        workers: usize,
+        user_limit: u32,
     ) -> (Arc<Daemon>, SocketAddr, std::thread::JoinHandle<()>) {
         let daemon = Daemon::new(
             topology::tx2500(),
-            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+                .with_user_limit(user_limit),
             DaemonConfig {
                 speedup: 10_000.0,
                 pacer_tick_ms: 1,
             },
         );
-        let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2)
+        let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", workers)
             .unwrap()
             .with_idle_timeout(idle);
         let addr = server.local_addr().unwrap();
@@ -229,7 +468,7 @@ mod tests {
 
     #[test]
     fn idle_connection_is_recycled() {
-        let (daemon, addr, handle) = spawn_server_with(Duration::from_millis(300));
+        let (daemon, addr, handle) = spawn_server_with(Duration::from_millis(300), 2, 4096);
         let mut idle = Client::connect(&addr.to_string()).unwrap();
         assert_eq!(idle.request("PING").unwrap(), "OK pong");
         // Go silent past the idle timeout: the server must close us.
@@ -238,6 +477,98 @@ mod tests {
         // The recycled worker serves a fresh connection fine.
         let mut fresh = Client::connect(&addr.to_string()).unwrap();
         assert_eq!(fresh.request("PING").unwrap(), "OK pong");
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn parked_waits_do_not_pin_workers() {
+        // A 2-worker pool holds 4 concurrent blocked WAITs *and* keeps
+        // serving: blocked waits park in the waiter registry instead of
+        // pinning workers. The waited-on job exceeds the 100-core user
+        // limit, so only the timeout can resolve the waits.
+        let (daemon, addr, handle) = spawn_server_with(DEFAULT_IDLE_TIMEOUT, 2, 100);
+        let addr_s = addr.to_string();
+        // Scope the submitter so its (idle) connection does not pin a
+        // worker for the rest of the test.
+        let ack = {
+            let mut submitter = Client::connect_v2(&addr_s).unwrap();
+            submitter
+                .submit(
+                    &SubmitSpec::new(QosClass::Normal, JobType::Array, 200, 1).with_run_secs(60.0),
+                )
+                .unwrap()
+        };
+        let waiters: Vec<_> = (0..4)
+            .map(|_| {
+                let a = addr_s.clone();
+                let id = ack.first;
+                std::thread::spawn(move || {
+                    let mut c = Client::connect_v2(&a).unwrap();
+                    let w = c.wait(&[id], 3.0).unwrap();
+                    // The connection keeps serving after its wait resumes.
+                    let util = c.util().unwrap();
+                    assert_eq!(util.total_cores, 608);
+                    w
+                })
+            })
+            .collect();
+        // Give the waits time to park, then prove the pool still serves
+        // (probe scoped too: resumed connections need the workers back).
+        std::thread::sleep(Duration::from_millis(500));
+        let t0 = Instant::now();
+        {
+            let mut probe = Client::connect(&addr_s).unwrap();
+            assert_eq!(probe.request("PING").unwrap(), "OK pong");
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "blocked WAITs pinned the worker pool"
+        );
+        for t in waiters {
+            let w = t.join().unwrap();
+            assert!(w.timed_out, "{w:?}");
+            assert_eq!(w.dispatched, 0);
+        }
+        // Exactly-once: every parked wait resolved exactly once.
+        use std::sync::atomic::Ordering;
+        assert_eq!(
+            daemon.metrics.waits_parked.load(Ordering::Relaxed),
+            daemon.metrics.waits_resumed.load(Ordering::Relaxed)
+        );
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn parked_wait_wakes_on_terminal_progress() {
+        // A WAIT on a job that can never dispatch resolves as soon as the
+        // job is cancelled — the completion notify, not the timeout.
+        let (daemon, addr, handle) = spawn_server_with(DEFAULT_IDLE_TIMEOUT, 2, 100);
+        let addr_s = addr.to_string();
+        let mut submitter = Client::connect_v2(&addr_s).unwrap();
+        let ack = submitter
+            .submit(&SubmitSpec::new(QosClass::Normal, JobType::Array, 200, 1).with_run_secs(60.0))
+            .unwrap();
+        let waiter = {
+            let a = addr_s.clone();
+            let id = ack.first;
+            std::thread::spawn(move || {
+                let mut c = Client::connect_v2(&a).unwrap();
+                let t0 = Instant::now();
+                let w = c.wait(&[id], 30.0).unwrap();
+                (w, t0.elapsed())
+            })
+        };
+        std::thread::sleep(Duration::from_millis(300));
+        submitter.cancel(ack.first).unwrap();
+        let (w, waited) = waiter.join().unwrap();
+        assert!(!w.timed_out, "{w:?}");
+        assert_eq!(w.dispatched, 0);
+        assert!(
+            waited < Duration::from_secs(10),
+            "cancel did not wake the parked wait ({waited:?})"
+        );
         daemon.shutdown();
         handle.join().unwrap();
     }

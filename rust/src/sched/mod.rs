@@ -114,6 +114,13 @@ pub struct Scheduler {
     busy_until: SimTime,
     trigger_pending: bool,
     stats: SchedStats,
+    /// Monotone change tick: bumped by every externally visible mutation
+    /// (submission, event processing, cancel). The coordinator's published
+    /// read snapshot uses it to skip re-capturing an unchanged scheduler.
+    version: u64,
+    /// Job-state mutations not reflected in job count or log length
+    /// (suspend-resume); part of [`Scheduler::jobs_signature`].
+    resumes: u64,
     /// Cached priority order per partition. Valid until the queue's
     /// contents change: with a shared age weight, every pending job's score
     /// grows at the same rate, so relative order is time-invariant between
@@ -170,6 +177,8 @@ impl Scheduler {
             busy_until: SimTime::ZERO,
             trigger_pending: false,
             stats: SchedStats::default(),
+            version: 0,
+            resumes: 0,
             order_cache: BTreeMap::new(),
         }
     }
@@ -188,7 +197,31 @@ impl Scheduler {
 
     /// Mutate the cluster for failure-injection tests (e.g. drain a node).
     pub fn cluster_mut_for_tests(&mut self, f: impl FnOnce(&mut Cluster)) {
+        self.version += 1;
         f(&mut self.cluster)
+    }
+
+    /// Monotone change tick (see the `version` field): equal ticks guarantee
+    /// an identical job table, queue contents, counters, and cluster
+    /// occupancy. The clock may still have advanced.
+    pub fn change_version(&self) -> u64 {
+        self.version
+    }
+
+    /// O(1) signature of the externally visible **job table**: job states,
+    /// membership, and event-log-derived fields cannot change without it
+    /// moving (every transition either logs an entry, adds a job, or bumps
+    /// the resume counter). Counters and cluster occupancy are *not*
+    /// covered — equal signatures across e.g. an empty scheduling pass let
+    /// the coordinator share the previous snapshot's job table instead of
+    /// rebuilding it.
+    pub fn jobs_signature(&self) -> (usize, usize, u64) {
+        (self.jobs.len(), self.log.entries().len(), self.resumes)
+    }
+
+    /// All job records, in ascending id order.
+    pub fn jobs(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values()
     }
 
     /// The event log.
@@ -257,6 +290,7 @@ impl Scheduler {
 
     /// Submit one job with an extra client-side delay before the RPC lands.
     pub fn submit_after(&mut self, spec: JobSpec, delay: SimTime) -> JobId {
+        self.version += 1;
         let id = JobId(self.next_id);
         self.next_id += 1;
         let arrive = self.clock + delay + self.cfg.costs.submit_rpc;
@@ -343,6 +377,7 @@ impl Scheduler {
     }
 
     fn handle(&mut self, ev: Event) {
+        self.version += 1;
         match ev {
             Event::JobArrival(id) => self.on_arrival(id),
             Event::MainCycle => self.on_periodic(CycleKind::Main),
@@ -580,6 +615,7 @@ impl Scheduler {
                     .collect();
                 for id in suspended {
                     cursor += self.cfg.costs.requeue_transaction; // resume RPC
+                    self.resumes += 1; // not logged: keep jobs_signature honest
                     let job = self.jobs.get_mut(&id).expect("suspended job");
                     job.transition(JobState::Running, cursor);
                     let run = job.spec.run_time;
@@ -837,6 +873,14 @@ impl Scheduler {
     /// voluntary cancels); requeued jobs die before re-entering the queue.
     /// Returns false when the job is unknown or already terminal.
     pub fn cancel(&mut self, id: JobId) -> bool {
+        let ok = self.cancel_inner(id);
+        if ok {
+            self.version += 1;
+        }
+        ok
+    }
+
+    fn cancel_inner(&mut self, id: JobId) -> bool {
         let Some(job) = self.jobs.get_mut(&id) else {
             return false;
         };

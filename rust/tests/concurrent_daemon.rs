@@ -1,0 +1,102 @@
+//! Concurrency stress for the coordinator core: reader threads hammer the
+//! snapshot read path while writer threads submit/cancel bursts and waiter
+//! threads block in `WAIT` — the contention regime the sharded-state
+//! refactor exists for. The load itself is the shared
+//! `benchkit::coordinator` harness (also the CI bench gate), so there is
+//! one contention workload to maintain; the assertions here are the
+//! correctness ones: scheduler invariants under fire (checked inside
+//! `run_mixed_load`), every parked waiter waking exactly once (no lost
+//! notify, no double-wake), no wait timeouts, and read-your-writes
+//! visibility on the snapshot path.
+
+use spotcloud::benchkit::coordinator::{run_mixed_load, MixedLoadConfig};
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::coordinator::{Daemon, DaemonConfig, ProtocolVersion, Request, Response, SubmitSpec};
+use spotcloud::job::{JobType, QosClass};
+use spotcloud::sched::SchedulerConfig;
+use spotcloud::sim::SchedCosts;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn daemon() -> Arc<Daemon> {
+    Daemon::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        DaemonConfig {
+            speedup: 10_000.0,
+            pacer_tick_ms: 1,
+        },
+    )
+}
+
+/// N readers × M writers × K waiters against one daemon (the benchkit
+/// mixed-load harness at a stress shape). `run_mixed_load` panics on any
+/// ill-typed response and asserts `check_invariants()` after the run; on
+/// top of that, the report must show real progress on all three thread
+/// classes, zero wait timeouts, and balanced parked/resumed counters —
+/// the exactly-once wake contract.
+#[test]
+fn readers_writers_waiters_stress() {
+    let report = run_mixed_load(&MixedLoadConfig {
+        readers: 6,
+        writers: 3,
+        waiters: 4,
+        duration: Duration::from_millis(600),
+        submit_batch: 16,
+        writer_pause: Duration::from_millis(2),
+        speedup: 10_000.0,
+    });
+    assert!(report.read_ops > 0, "{report:?}");
+    assert!(report.write_ops > 0, "{report:?}");
+    assert!(report.wait_ops > 0, "{report:?}");
+    assert_eq!(report.timed_out_waits, 0, "wait timed out under stress");
+    assert_eq!(
+        report.waits_parked, report.waits_resumed,
+        "parked/resumed imbalance: a waiter was lost or woken twice"
+    );
+    // Client reads are snapshot-served; the daemon-level counter includes
+    // them all (internal WAIT polling is unmetered).
+    assert!(report.read_path_ops >= report.read_ops);
+}
+
+/// Reads observe a mutation as soon as the mutating request returns: the
+/// snapshot is published before the scheduler mutex is released.
+#[test]
+fn reads_observe_writes_immediately() {
+    let d = daemon();
+    let ack = match d.handle(Request::Submit(
+        SubmitSpec::new(QosClass::Spot, JobType::Array, 8, 3).with_run_secs(600.0),
+    )) {
+        Response::SubmitAck(a) => a,
+        other => panic!("{other:?}"),
+    };
+    // Same-thread read-your-writes.
+    match d.handle(Request::Sjob(ack.first)) {
+        Response::Job(detail) => assert_eq!(detail.user, 3),
+        other => panic!("submitted job invisible to the read path: {other:?}"),
+    }
+    match d.handle(Request::Scancel(ack.first)) {
+        Response::Cancelled(_) => {}
+        other => panic!("{other:?}"),
+    }
+    match d.handle(Request::Sjob(ack.first)) {
+        Response::Job(detail) => {
+            assert!(detail.state.is_terminal(), "cancel invisible: {detail:?}")
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Empty WAIT regression over the wire (v2 `jobs=`): returns immediately
+/// with dispatched=0 instead of blocking until the timeout.
+#[test]
+fn empty_wait_returns_immediately_over_the_wire() {
+    let d = daemon();
+    let t0 = Instant::now();
+    let (resp, _) = d.handle_line_versioned("WAIT jobs= timeout=30", ProtocolVersion::V2);
+    assert_eq!(
+        resp,
+        "OK kind=wait requested=0 dispatched=0 timed_out=false latency_ns=0"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(5), "empty WAIT blocked");
+}
