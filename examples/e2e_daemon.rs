@@ -62,6 +62,7 @@ fn main() {
         DaemonConfig {
             speedup: SPEEDUP,
             pacer_tick_ms: 2,
+            ..DaemonConfig::default()
         },
     );
     let pacer = daemon.spawn_pacer();

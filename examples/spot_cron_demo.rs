@@ -90,6 +90,7 @@ fn main() {
         DaemonConfig {
             speedup: 5_000.0,
             pacer_tick_ms: 1,
+            ..DaemonConfig::default()
         },
     );
     let pacer = daemon.spawn_pacer();

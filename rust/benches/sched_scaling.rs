@@ -1,0 +1,66 @@
+//! CI bench gate: scheduler burst-scaling scenario (see
+//! `benchkit::sched_scaling`).
+//!
+//! Emits `BENCH_sched_scaling.json` (override with
+//! `SPOTCLOUD_BENCH_JSON`) with the wall-clock scheduling cost per job for
+//! individual bursts of growing size, plus the mixed-preemption scenario
+//! and snapshot capture costs. The JSON is written **before** the health
+//! asserts run, so a regressed run still surfaces its numbers in the CI
+//! artifact.
+//!
+//! Gate: near-linear burst scaling — per-job cost at the largest size must
+//! stay within 2× of the smallest (quadratic hot paths showed up as 30–100×
+//! here before the incremental queue layer).
+//!
+//! `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke configuration.
+
+use spotcloud::benchkit::sched_scaling::{run_sched_scaling, ScalingConfig};
+
+fn main() {
+    let fast = std::env::var("SPOTCLOUD_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = if fast {
+        ScalingConfig::quick()
+    } else {
+        ScalingConfig::default()
+    };
+    eprintln!(
+        "sched_scaling: individual bursts of {:?}, mixed preemption with {} jobs",
+        cfg.sizes, cfg.mixed_jobs
+    );
+    let report = run_sched_scaling(&cfg);
+    eprintln!("{}", report.summary());
+
+    let path = std::env::var("SPOTCLOUD_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_sched_scaling.json".into());
+    std::fs::write(&path, report.to_json()).expect("writing bench json");
+    println!("wrote {path}");
+
+    // Gates run AFTER the JSON write so a regressed run still surfaces its
+    // numbers in the CI artifact.
+    // Every scenario must have fully dispatched within its horizon.
+    assert!(
+        report.sizes.iter().all(|s| s.completed),
+        "a burst failed to dispatch within its horizon: {:?}",
+        report.sizes,
+    );
+    assert!(report.mixed.completed, "mixed scenario stalled: {:?}", report.mixed);
+    // Gate: dispatch cost per job stays flat across three orders of
+    // magnitude of burst size.
+    assert!(
+        report.per_job_ratio <= 2.0,
+        "per-job scheduling cost is not flat: {:.2}x from {} to {} jobs",
+        report.per_job_ratio,
+        report.sizes.first().map(|s| s.jobs).unwrap_or(0),
+        report.sizes.last().map(|s| s.jobs).unwrap_or(0),
+    );
+    // The preemption path must have been exercised, not skipped.
+    assert!(report.mixed.preemptions > 0, "mixed scenario never preempted");
+    // Delta capture must beat the cold full-table capture decisively on a
+    // large table (it re-uses every unchanged JobView allocation).
+    assert!(
+        report.capture_delta_us < report.capture_full_us,
+        "delta capture ({:.0}us) is not cheaper than full capture ({:.0}us)",
+        report.capture_delta_us,
+        report.capture_full_us,
+    );
+}

@@ -195,6 +195,7 @@ pub fn run_mixed_load(cfg: &MixedLoadConfig) -> MixedLoadReport {
         DaemonConfig {
             speedup: cfg.speedup,
             pacer_tick_ms: 1,
+            ..DaemonConfig::default()
         },
     );
     let pacer = daemon.spawn_pacer();

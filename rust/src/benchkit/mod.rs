@@ -7,6 +7,7 @@
 //! same rows the paper plots.
 
 pub mod coordinator;
+pub mod sched_scaling;
 
 use crate::metrics::stats::Summary;
 use crate::util::fmt::{fmt_seconds, Table};

@@ -1,0 +1,317 @@
+//! Burst-scaling scenario: wall-clock cost of scheduling large bursts of
+//! *individual* jobs — the workload the paper fills clusters with, and the
+//! one the scheduler's old queue layer went quadratic on.
+//!
+//! For each burst size N the scenario submits N one-core individual jobs
+//! (client-loop style, one submit RPC apart), runs the simulation until
+//! every job has dispatched, and reports the wall time per job. With the
+//! incremental queue layer the per-job cost must stay near-flat as N grows
+//! three orders of magnitude; the `sched_scaling` bench binary gates CI on
+//! `per_job_ratio` (largest vs smallest size) staying ≤ 2×.
+//!
+//! A second scenario drives a mixed spot + interactive workload through
+//! scheduler-automatic preemption (requeue churn, reservations, deferral) to
+//! prove the data-structure layer holds up under the messy path too — it is
+//! reported, invariant-checked, but not part of the flatness gate (preempt
+//! deferral is intentionally O(cycles), per the paper).
+//!
+//! Snapshot capture cost rides along: for the largest burst the scenario
+//! also measures a cold (full-table) capture and a delta capture after one
+//! job mutation, demonstrating the bounded publish path.
+
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::snapshot::SchedSnapshot;
+use crate::job::{JobSpec, JobType, UserId};
+use crate::preempt::{PreemptApproach, PreemptMode};
+use crate::sched::{Scheduler, SchedulerConfig};
+use crate::sim::{SchedCosts, SimTime};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Shape of the scaling run.
+#[derive(Debug, Clone)]
+pub struct ScalingConfig {
+    /// Individual-burst sizes, ascending (the gate compares last vs first).
+    pub sizes: Vec<usize>,
+    /// Per-job virtual run time in seconds (short: jobs must cycle through
+    /// the 608-core cluster so the queue drains).
+    pub run_secs: u64,
+    /// Interactive-job count for the mixed preemption scenario.
+    pub mixed_jobs: usize,
+}
+
+impl Default for ScalingConfig {
+    fn default() -> Self {
+        Self {
+            sizes: vec![1_000, 10_000, 100_000],
+            run_secs: 2,
+            mixed_jobs: 2_000,
+        }
+    }
+}
+
+impl ScalingConfig {
+    /// Sub-second smoke configuration (unit tests, `SPOTCLOUD_BENCH_FAST`).
+    pub fn quick() -> Self {
+        Self {
+            sizes: vec![500, 2_000],
+            run_secs: 2,
+            mixed_jobs: 300,
+        }
+    }
+}
+
+/// One burst size's measurement.
+#[derive(Debug, Clone)]
+pub struct SizeResult {
+    /// Jobs in the burst.
+    pub jobs: usize,
+    /// Wall seconds from first submit to last dispatch.
+    pub wall_secs: f64,
+    /// Wall microseconds of scheduling cost per job.
+    pub per_job_us: f64,
+    /// Virtual seconds the simulation covered.
+    pub virtual_secs: f64,
+    /// Dispatches performed (equals `jobs` on a healthy run).
+    pub dispatches: u64,
+    /// Every job dispatched within the horizon. Recorded, not asserted,
+    /// so a regressed run still writes its JSON; the bench binary gates
+    /// on it after the write.
+    pub completed: bool,
+}
+
+/// The mixed preemption scenario's measurement.
+#[derive(Debug, Clone)]
+pub struct MixedResult {
+    /// Interactive jobs pushed through the preemption path.
+    pub jobs: usize,
+    /// Wall seconds to dispatch them all.
+    pub wall_secs: f64,
+    /// Preemption victims over the run.
+    pub preemptions: u64,
+    /// Requeue transactions over the run.
+    pub requeues: u64,
+    /// Every interactive job dispatched within the horizon (recorded, not
+    /// asserted — see [`SizeResult::completed`]).
+    pub completed: bool,
+}
+
+/// What one scaling run measured.
+#[derive(Debug, Clone)]
+pub struct ScalingReport {
+    /// Per-size results, ascending size.
+    pub sizes: Vec<SizeResult>,
+    /// Largest-size per-job cost over smallest-size per-job cost — the CI
+    /// flatness gate.
+    pub per_job_ratio: f64,
+    /// Mixed spot/interactive preemption scenario.
+    pub mixed: MixedResult,
+    /// Cold full-table snapshot capture of the largest burst (µs).
+    pub capture_full_us: f64,
+    /// Delta capture after one job mutation, against the cold one (µs).
+    pub capture_delta_us: f64,
+}
+
+impl ScalingReport {
+    /// The machine-readable record CI uploads (`BENCH_sched_scaling.json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"bench\": \"sched_scaling\",\n  \"sizes\": [");
+        for (i, s) in self.sizes.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let _ = write!(
+                out,
+                "{sep}\n    {{\"jobs\": {}, \"wall_secs\": {:.4}, \"per_job_us\": {:.3}, \
+                 \"virtual_secs\": {:.1}, \"dispatches\": {}, \"completed\": {}}}",
+                s.jobs, s.wall_secs, s.per_job_us, s.virtual_secs, s.dispatches, s.completed,
+            );
+        }
+        let _ = write!(
+            out,
+            "\n  ],\n  \"per_job_ratio\": {:.3},\n  \"mixed\": {{\"jobs\": {}, \
+             \"wall_secs\": {:.4}, \"preemptions\": {}, \"requeues\": {}, \
+             \"completed\": {}}},\n  \
+             \"capture_full_us\": {:.1},\n  \"capture_delta_us\": {:.1}\n}}",
+            self.per_job_ratio,
+            self.mixed.jobs,
+            self.mixed.wall_secs,
+            self.mixed.preemptions,
+            self.mixed.requeues,
+            self.mixed.completed,
+            self.capture_full_us,
+            self.capture_delta_us,
+        );
+        out.push('\n');
+        out
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let per_size: Vec<String> = self
+            .sizes
+            .iter()
+            .map(|s| format!("{}j={:.2}us/job", s.jobs, s.per_job_us))
+            .collect();
+        format!(
+            "sched_scaling: {} ratio={:.2} | mixed {}j {:.2}s ({} preemptions) | \
+             capture full={:.0}us delta={:.0}us",
+            per_size.join(" "),
+            self.per_job_ratio,
+            self.mixed.jobs,
+            self.mixed.wall_secs,
+            self.mixed.preemptions,
+            self.capture_full_us,
+            self.capture_delta_us,
+        )
+    }
+}
+
+fn burst_sched() -> Scheduler {
+    Scheduler::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+    )
+}
+
+/// Run one individual burst of `n` jobs; returns (result, drained scheduler).
+fn run_burst(n: usize, run_secs: u64) -> (SizeResult, Scheduler) {
+    let mut s = burst_sched();
+    let specs: Vec<JobSpec> = (0..n)
+        .map(|i| {
+            // Eight submitting users: exercises the per-user fairshare
+            // buckets without tripping per-user core limits.
+            JobSpec::interactive(UserId(1 + (i % 8) as u32), JobType::Individual, 1)
+                .with_run_time(SimTime::from_secs(run_secs))
+        })
+        .collect();
+    // Generous horizon: drain is controller-serialized at ~12ms of virtual
+    // time per dispatch plus cycle overheads.
+    let horizon = SimTime::from_secs(n as u64 / 10 + 7_200);
+    let t0 = Instant::now();
+    let ids = s.submit_burst(specs);
+    let completed = s.run_until_dispatched(&ids, horizon);
+    let wall_secs = t0.elapsed().as_secs_f64();
+    s.check_invariants().expect("invariants after burst");
+    (
+        SizeResult {
+            jobs: n,
+            wall_secs,
+            per_job_us: wall_secs * 1e6 / n as f64,
+            virtual_secs: s.now().as_secs_f64(),
+            dispatches: s.stats().dispatches,
+            completed,
+        },
+        s,
+    )
+}
+
+/// Mixed spot + interactive with scheduler-automatic preemption: spot fills
+/// the cluster, then an interactive individual burst must preempt its way
+/// in job by job.
+fn run_mixed(jobs: usize) -> MixedResult {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_user_limit(1_000_000)
+        .with_approach(PreemptApproach::AutoScheduler {
+            mode: PreemptMode::Requeue,
+        });
+    let mut s = Scheduler::new(topology::tx2500(), cfg);
+    // 608 one-core spot jobs: every interactive arrival finds a full
+    // cluster and preempts exactly what it needs.
+    let spot: Vec<JobSpec> = (0..608)
+        .map(|i| {
+            JobSpec::spot(UserId(100 + (i % 4) as u32), JobType::Individual, 1)
+                .with_run_time(SimTime::from_secs(30 * 24 * 3600))
+        })
+        .collect();
+    let spot_ids = s.submit_burst(spot);
+    assert!(s.run_until_dispatched(&spot_ids, SimTime::from_secs(3_600)));
+    let inter: Vec<JobSpec> = (0..jobs)
+        .map(|i| {
+            JobSpec::interactive(UserId(1 + (i % 8) as u32), JobType::Individual, 1)
+                .with_run_time(SimTime::from_secs(5))
+        })
+        .collect();
+    let horizon = SimTime::from_secs(jobs as u64 * 40 + 7_200);
+    let t0 = Instant::now();
+    let ids = s.submit_burst(inter);
+    let completed = s.run_until_dispatched(&ids, horizon);
+    let wall_secs = t0.elapsed().as_secs_f64();
+    s.check_invariants().expect("invariants after mixed preemption");
+    MixedResult {
+        jobs,
+        wall_secs,
+        preemptions: s.stats().preemptions,
+        requeues: s.stats().requeues,
+        completed,
+    }
+}
+
+/// Run the full scaling scenario.
+pub fn run_sched_scaling(cfg: &ScalingConfig) -> ScalingReport {
+    assert!(!cfg.sizes.is_empty());
+    // Warm the allocator with a tiny untimed burst so the smallest timed
+    // size is not dominated by first-touch costs.
+    let _ = run_burst(64, cfg.run_secs);
+    let mut sizes = Vec::new();
+    let mut last_sched = None;
+    for &n in &cfg.sizes {
+        let (r, s) = run_burst(n, cfg.run_secs);
+        eprintln!(
+            "  burst {:>7} jobs: {:>8.3}s wall, {:>7.2}us/job, {:.0}s virtual",
+            r.jobs, r.wall_secs, r.per_job_us, r.virtual_secs
+        );
+        sizes.push(r);
+        last_sched = Some(s);
+    }
+    let per_job_ratio = sizes.last().unwrap().per_job_us / sizes.first().unwrap().per_job_us;
+
+    // Snapshot capture cost on the largest table: cold vs delta.
+    let mut s = last_sched.expect("at least one size ran");
+    let t0 = Instant::now();
+    let cold = SchedSnapshot::capture(&s, None);
+    let capture_full_us = t0.elapsed().as_secs_f64() * 1e6;
+    // One mutation: a fresh submission. The delta capture rebuilds one view
+    // and shares every other allocation.
+    s.submit(JobSpec::interactive(UserId(1), JobType::Individual, 1));
+    let t1 = Instant::now();
+    let delta = SchedSnapshot::capture(&s, Some(&cold));
+    let capture_delta_us = t1.elapsed().as_secs_f64() * 1e6;
+    assert_eq!(delta.jobs().len(), cold.jobs().len() + 1);
+
+    let mixed = run_mixed(cfg.mixed_jobs);
+    eprintln!(
+        "  mixed {:>7} jobs: {:>8.3}s wall, {} preemptions, {} requeues",
+        mixed.jobs, mixed.wall_secs, mixed.preemptions, mixed.requeues
+    );
+    ScalingReport {
+        sizes,
+        per_job_ratio,
+        mixed,
+        capture_full_us,
+        capture_delta_us,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_scaling_runs_and_reports() {
+        let r = run_sched_scaling(&ScalingConfig::quick());
+        assert_eq!(r.sizes.len(), 2);
+        assert!(r.sizes.iter().all(|s| s.completed), "{:?}", r.sizes);
+        assert!(r.per_job_ratio > 0.0);
+        assert!(r.mixed.completed, "{:?}", r.mixed);
+        assert!(r.mixed.preemptions > 0);
+        let json = r.to_json();
+        for key in [
+            "\"per_job_ratio\"",
+            "\"capture_delta_us\"",
+            "\"preemptions\"",
+            "\"per_job_us\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(r.summary().contains("sched_scaling"));
+    }
+}

@@ -389,6 +389,31 @@ impl fmt::Display for WaitResult {
     }
 }
 
+/// Read/write-path contention counters and the write-lock hold-time
+/// histogram summary — the daemon's concurrency contract, observable by
+/// remote clients. Carried by `STATS` as a **v2 wire extension**: v2
+/// responses append these keys, v1 responses omit them (and v2 parsers
+/// accept their absence), so old clients and servers interoperate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ContentionStats {
+    /// Requests served from the published snapshot (no scheduler lock).
+    pub read_path_ops: u64,
+    /// Scheduler-mutex acquisitions (mutating requests + pacing).
+    pub write_locks: u64,
+    /// `WAIT`s that parked on the completion hub.
+    pub waits_parked: u64,
+    /// Parked `WAIT`s that resolved (equal to `waits_parked` when quiescent).
+    pub waits_resumed: u64,
+    /// Write-lock hold-time samples recorded.
+    pub lock_hold_count: u64,
+    /// p50 wall time the scheduler write mutex was held (ns).
+    pub lock_hold_p50_ns: u64,
+    /// p99 wall time the scheduler write mutex was held (ns).
+    pub lock_hold_p99_ns: u64,
+    /// Longest wall time the scheduler write mutex was held (ns).
+    pub lock_hold_max_ns: u64,
+}
+
 /// Daemon + scheduler counters (`STATS`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StatsSnapshot {
@@ -426,6 +451,9 @@ pub struct StatsSnapshot {
     pub sched_latency_p50_ns: u64,
     /// Per-command request counts (lowercase verb → count).
     pub commands: BTreeMap<String, u64>,
+    /// Lock-path contention counters (v2 wire extension; `None` when the
+    /// peer spoke v1 or predates the extension).
+    pub contention: Option<ContentionStats>,
 }
 
 /// Cluster utilization snapshot (`UTIL`).

@@ -19,9 +19,9 @@
 //! below pin both versions, including the seed grammar verbatim.
 
 use super::api::{
-    job_type_arg, parse_job_type, parse_qos, parse_state, state_token, ApiError, ErrorCode,
-    JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter, StatsSnapshot,
-    SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    job_type_arg, parse_job_type, parse_qos, parse_state, state_token, ApiError, ContentionStats,
+    ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
+    StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use crate::job::{JobState, JobType, QosClass};
 use std::collections::BTreeMap;
@@ -420,7 +420,10 @@ fn wait_kv(w: &WaitResult) -> String {
     )
 }
 
-fn stats_kv(s: &StatsSnapshot) -> String {
+/// Render the STATS body. `with_contention` appends the v2-only contention
+/// extension keys (v1 keeps the original key set byte-compatible; v2
+/// parsers treat the keys as optional, so mixed versions interoperate).
+fn stats_kv(s: &StatsSnapshot, with_contention: bool) -> String {
     let mut out = format!(
         "virtual_now_secs={} dispatches={} preemptions={} requeues={} cron_passes={} \
          main_passes={} backfill_passes={} triggered_passes={} score_batches={} jobs_scored={} \
@@ -443,6 +446,23 @@ fn stats_kv(s: &StatsSnapshot) -> String {
         s.sched_latency_count,
         s.sched_latency_p50_ns,
     );
+    if with_contention {
+        if let Some(c) = &s.contention {
+            let _ = write!(
+                out,
+                " read_path_ops={} write_locks={} waits_parked={} waits_resumed={} \
+                 lock_hold_count={} lock_hold_p50_ns={} lock_hold_p99_ns={} lock_hold_max_ns={}",
+                c.read_path_ops,
+                c.write_locks,
+                c.waits_parked,
+                c.waits_resumed,
+                c.lock_hold_count,
+                c.lock_hold_p50_ns,
+                c.lock_hold_p99_ns,
+                c.lock_hold_max_ns,
+            );
+        }
+    }
     for (cmd, n) in &s.commands {
         let _ = write!(out, " cmd_{cmd}={n}");
     }
@@ -485,7 +505,7 @@ fn render_response_v1(resp: &Response) -> String {
         }
         Response::Job(d) => format!("OK {}", detail_kv(d)),
         Response::Wait(w) => format!("OK {}", wait_kv(w)),
-        Response::Stats(s) => format!("OK {}", stats_kv(s)),
+        Response::Stats(s) => format!("OK {}", stats_kv(s, false)),
         Response::Util(u) => format!(
             "OK utilization={:.4} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
             u.utilization, u.idle_cores, u.idle_nodes, u.total_cores, u.pending, u.running
@@ -522,7 +542,7 @@ fn render_response_v2(resp: &Response) -> String {
         }
         Response::Job(d) => format!("OK kind=job {}", detail_kv(d)),
         Response::Wait(w) => format!("OK kind=wait {}", wait_kv(w)),
-        Response::Stats(s) => format!("OK kind=stats {}", stats_kv(s)),
+        Response::Stats(s) => format!("OK kind=stats {}", stats_kv(s, true)),
         Response::Util(u) => format!(
             "OK kind=util utilization={} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
             fmt_f64(u.utilization), u.idle_cores, u.idle_nodes, u.total_cores, u.pending, u.running
@@ -630,6 +650,22 @@ fn parse_stats(map: &BTreeMap<&str, &str>) -> Result<StatsSnapshot, ApiError> {
             commands.insert(cmd.to_string(), parse_u64(k, v)?);
         }
     }
+    // Contention keys are a v2 extension: optional as a block (keyed on the
+    // first field) so responses from pre-extension servers still parse.
+    let contention = if map.contains_key("read_path_ops") {
+        Some(ContentionStats {
+            read_path_ops: take_u64(map, "read_path_ops")?,
+            write_locks: take_u64(map, "write_locks")?,
+            waits_parked: take_u64(map, "waits_parked")?,
+            waits_resumed: take_u64(map, "waits_resumed")?,
+            lock_hold_count: take_u64(map, "lock_hold_count")?,
+            lock_hold_p50_ns: take_u64(map, "lock_hold_p50_ns")?,
+            lock_hold_p99_ns: take_u64(map, "lock_hold_p99_ns")?,
+            lock_hold_max_ns: take_u64(map, "lock_hold_max_ns")?,
+        })
+    } else {
+        None
+    };
     Ok(StatsSnapshot {
         virtual_now_secs: take_f64(map, "virtual_now_secs")?,
         dispatches: take_u64(map, "dispatches")?,
@@ -648,6 +684,7 @@ fn parse_stats(map: &BTreeMap<&str, &str>) -> Result<StatsSnapshot, ApiError> {
         sched_latency_count: take_u64(map, "sched_latency_count")?,
         sched_latency_p50_ns: take_u64(map, "sched_latency_p50_ns")?,
         commands,
+        contention,
     })
 }
 
@@ -986,6 +1023,10 @@ mod tests {
                 commands: [("submit".to_string(), 12u64), ("squeue".to_string(), 3u64)]
                     .into_iter()
                     .collect(),
+                // None here: the contention block is a v2-only extension,
+                // so the shared samples (round-tripped under BOTH versions)
+                // must omit it. Dedicated tests below cover Some(_).
+                contention: None,
             }),
             Response::Util(UtilSnapshot {
                 utilization: 0.25,
@@ -1015,6 +1056,70 @@ mod tests {
             let wire = render_response(&resp, V2);
             let back = parse_response(&wire, V2).unwrap_or_else(|e| panic!("{wire:?}: {e}"));
             assert_eq!(back, resp, "v2 wire: {wire:?}");
+        }
+    }
+
+    fn stats_with_contention() -> StatsSnapshot {
+        let mut s = match sample_responses().remove(9) {
+            Response::Stats(s) => s,
+            other => panic!("sample 9 is stats, got {other:?}"),
+        };
+        s.contention = Some(ContentionStats {
+            read_path_ops: 123,
+            write_locks: 45,
+            waits_parked: 6,
+            waits_resumed: 6,
+            lock_hold_count: 45,
+            lock_hold_p50_ns: 12_000,
+            lock_hold_p99_ns: 98_000,
+            lock_hold_max_ns: 250_000,
+        });
+        s
+    }
+
+    #[test]
+    fn stats_contention_extension_roundtrips_v2() {
+        let resp = Response::Stats(stats_with_contention());
+        let wire = render_response(&resp, V2);
+        for key in [
+            "read_path_ops=123",
+            "write_locks=45",
+            "waits_parked=6",
+            "waits_resumed=6",
+            "lock_hold_count=45",
+            "lock_hold_p50_ns=12000",
+            "lock_hold_p99_ns=98000",
+            "lock_hold_max_ns=250000",
+        ] {
+            assert!(wire.contains(key), "missing {key} in {wire}");
+        }
+        assert_eq!(parse_response(&wire, V2).unwrap(), resp);
+    }
+
+    #[test]
+    fn stats_contention_extension_is_dropped_on_v1() {
+        // v1 keeps its original key set byte-compatible: the extension is
+        // not rendered, and a v1 parse naturally yields None.
+        let resp = Response::Stats(stats_with_contention());
+        let wire = render_response(&resp, V1);
+        assert!(!wire.contains("read_path_ops="), "{wire}");
+        assert!(!wire.contains("lock_hold_p99_ns="), "{wire}");
+        match parse_response(&wire, V1).unwrap() {
+            Response::Stats(s) => assert_eq!(s.contention, None),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_stats_without_contention_keys_still_parses() {
+        // Forward compatibility: a v2 response from a pre-extension server
+        // lacks the keys entirely — the block parses as None.
+        let mut s = stats_with_contention();
+        s.contention = None;
+        let wire = render_response(&Response::Stats(s.clone()), V2);
+        match parse_response(&wire, V2).unwrap() {
+            Response::Stats(back) => assert_eq!(back, s),
+            other => panic!("{other:?}"),
         }
     }
 

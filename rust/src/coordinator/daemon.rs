@@ -27,16 +27,17 @@
 //! [`super::codec`] and is reached through [`Daemon::handle_line_versioned`].
 
 use super::api::{
-    ApiError, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
-    StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    ApiError, ContentionStats, JobDetail, JobSummary, ProtocolVersion, Request, Response,
+    SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::codec;
 use super::metrics::DaemonMetrics;
-use super::snapshot::{SchedSnapshot, WaitHub, WaitView};
+use super::snapshot::{wait_view_of, JobView, SchedSnapshot, WaitHub, WaitView};
 use crate::cluster::Cluster;
 use crate::job::{JobId, JobSpec, JobState, QosClass, UserId};
 use crate::sched::{LogKind, Scheduler, SchedulerConfig};
 use crate::sim::SimTime;
+use crate::util::fxhash::FxHashMap;
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -61,6 +62,12 @@ pub struct DaemonConfig {
     pub speedup: f64,
     /// Pacer tick in milliseconds.
     pub pacer_tick_ms: u64,
+    /// Grace period (virtual seconds) a terminal job stays in the
+    /// published table before it is retired into the history side-table.
+    /// Bounds snapshot publish cost for long-lived daemons: `SQUEUE` stops
+    /// listing retired jobs, `SJOB` still answers from history. `None`
+    /// never retires.
+    pub retire_grace_secs: Option<f64>,
 }
 
 impl Default for DaemonConfig {
@@ -68,6 +75,7 @@ impl Default for DaemonConfig {
         Self {
             speedup: 60.0,
             pacer_tick_ms: 5,
+            retire_grace_secs: Some(3600.0),
         }
     }
 }
@@ -125,6 +133,11 @@ pub struct Daemon {
     start: Instant,
     cfg: DaemonConfig,
     tracked: Mutex<BTreeSet<JobId>>,
+    /// Retired terminal jobs: frozen views written once at retirement (the
+    /// write path, amortized O(1) per job over its lifetime) and read by
+    /// `SJOB`/`WAIT` after the job left the published table. Never takes
+    /// the scheduler mutex on the read side.
+    history: RwLock<FxHashMap<u64, Arc<JobView>>>,
 }
 
 impl Daemon {
@@ -141,6 +154,7 @@ impl Daemon {
             start: Instant::now(),
             cfg,
             tracked: Mutex::new(BTreeSet::new()),
+            history: RwLock::new(FxHashMap::default()),
         })
     }
 
@@ -196,7 +210,8 @@ impl Daemon {
     }
 
     /// Advance the scheduler to the current wall-paced virtual time, harvest
-    /// newly dispatched tracked jobs into the metrics, and publish.
+    /// newly dispatched tracked jobs into the metrics, retire old terminal
+    /// jobs into the history side-table, and publish.
     pub fn pace(&self) {
         self.with_sched_mut(|sched| {
             let target = self.target_now();
@@ -214,6 +229,16 @@ impl Daemon {
                 let rec = sched.log().first(j, LogKind::Recognized).expect("recognized");
                 let dis = sched.log().last(j, LogKind::DispatchDone).expect("dispatched");
                 self.metrics.record_sched_latency(dis.saturating_sub(rec).as_nanos());
+            }
+            drop(tracked);
+            if let Some(grace) = self.cfg.retire_grace_secs {
+                let retired = sched.retire_terminal(SimTime::from_secs_f64(grace));
+                if !retired.is_empty() {
+                    let mut history = self.history.write().expect("history poisoned");
+                    for j in &retired {
+                        history.insert(j.id.0, Arc::new(JobView::of(j, sched.log())));
+                    }
+                }
             }
         });
     }
@@ -451,11 +476,20 @@ impl Daemon {
 
     fn handle_sjob(&self, id: u64) -> Response {
         let snap = self.read_snapshot();
-        let Some(v) = snap.job(id) else {
-            return Response::Error(ApiError::not_found(format!("unknown job {id}")));
-        };
-        Response::Job(JobDetail {
-            id,
+        if let Some(v) = snap.job(id) {
+            return Response::Job(Self::detail_of(v));
+        }
+        // Retired terminal jobs answer from the history side-table, so a
+        // bounded published table does not break `SJOB` for old ids.
+        if let Some(v) = self.history.read().expect("history poisoned").get(&id) {
+            return Response::Job(Self::detail_of(v));
+        }
+        Response::Error(ApiError::not_found(format!("unknown job {id}")))
+    }
+
+    fn detail_of(v: &JobView) -> JobDetail {
+        JobDetail {
+            id: v.id,
             job_type: v.job_type,
             tasks: v.tasks,
             user: v.user,
@@ -469,7 +503,7 @@ impl Daemon {
             recognized_secs: v.recognized.map(SimTime::as_secs_f64),
             dispatched_secs: v.dispatched.map(SimTime::as_secs_f64),
             latency_ns: v.latency_ns(),
-        })
+        }
     }
 
     // ---- WAIT: subscription model -----------------------------------------
@@ -495,14 +529,19 @@ impl Daemon {
             }));
         }
         let snap = self.snapshot();
-        for &id in jobs {
-            if snap.job(id).is_none() {
-                return WaitStart::Done(Response::Error(ApiError::not_found(format!(
-                    "unknown job {id}"
-                ))));
+        {
+            let history = self.history.read().expect("history poisoned");
+            for &id in jobs {
+                // Retired jobs are terminal (settled), answered from
+                // history below — only a never-seen id is unknown.
+                if snap.job(id).is_none() && !history.contains_key(&id) {
+                    return WaitStart::Done(Response::Error(ApiError::not_found(format!(
+                        "unknown job {id}"
+                    ))));
+                }
             }
         }
-        let wv = snap.wait_view(jobs);
+        let wv = self.wait_view(&snap, jobs);
         if wv.settled {
             return WaitStart::Done(wait_response(jobs.len(), wv, false));
         }
@@ -515,11 +554,23 @@ impl Daemon {
         })
     }
 
+    /// Evaluate a `WAIT` over the published snapshot **with the history
+    /// side-table folded in**, so a job retired mid-wait (or before the
+    /// request) still reports its dispatch and true latency instead of
+    /// silently dropping to `dispatched=0`.
+    fn wait_view(&self, snap: &SchedSnapshot, ids: &[u64]) -> WaitView {
+        let history = self.history.read().expect("history poisoned");
+        wait_view_of(
+            ids.iter()
+                .map(|&id| snap.job(id).or_else(|| history.get(&id).map(Arc::as_ref))),
+        )
+    }
+
     /// Poll a parked `WAIT` against the current snapshot: `Some` exactly
     /// once — when it settled, timed out, or the daemon is shutting down.
     pub fn poll_wait(&self, ticket: &WaitTicket) -> Option<Response> {
         let snap = self.snapshot();
-        let wv = snap.wait_view(&ticket.jobs);
+        let wv = self.wait_view(&snap, &ticket.jobs);
         let resp = if wv.settled {
             wait_response(ticket.jobs.len(), wv, false)
         } else if Instant::now() >= ticket.deadline {
@@ -603,6 +654,22 @@ impl Daemon {
                 .into_iter()
                 .map(|(cmd, n)| (cmd.to_ascii_lowercase(), n))
                 .collect(),
+            contention: Some(self.contention_stats()),
+        }
+    }
+
+    /// Lock-path contention counters for the STATS v2 extension.
+    fn contention_stats(&self) -> ContentionStats {
+        let lock_hold = self.metrics.lock_hold();
+        ContentionStats {
+            read_path_ops: self.metrics.read_path_ops.load(Ordering::Relaxed),
+            write_locks: self.metrics.write_locks.load(Ordering::Relaxed),
+            waits_parked: self.metrics.waits_parked.load(Ordering::Relaxed),
+            waits_resumed: self.metrics.waits_resumed.load(Ordering::Relaxed),
+            lock_hold_count: lock_hold.count(),
+            lock_hold_p50_ns: lock_hold.p50(),
+            lock_hold_p99_ns: lock_hold.p99(),
+            lock_hold_max_ns: lock_hold.max(),
         }
     }
 
@@ -643,13 +710,18 @@ mod tests {
     use crate::sim::SchedCosts;
 
     fn daemon() -> Arc<Daemon> {
+        daemon_with(DaemonConfig {
+            speedup: 10_000.0, // tests shouldn't wait on the wall clock
+            pacer_tick_ms: 1,
+            ..DaemonConfig::default()
+        })
+    }
+
+    fn daemon_with(cfg: DaemonConfig) -> Arc<Daemon> {
         Daemon::new(
             topology::tx2500(),
             SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
-            DaemonConfig {
-                speedup: 10_000.0, // tests shouldn't wait on the wall clock
-                pacer_tick_ms: 1,
-            },
+            cfg,
         )
     }
 
@@ -971,5 +1043,110 @@ mod tests {
         assert!(d.is_running());
         assert!(d.handle_line("SHUTDOWN").starts_with("OK"));
         assert!(!d.is_running());
+    }
+
+    #[test]
+    fn stats_v2_exposes_contention_counters() {
+        let d = daemon();
+        d.handle(Request::Submit(SubmitSpec::new(
+            QosClass::Spot,
+            JobType::TripleMode,
+            320,
+            9,
+        )));
+        d.handle(Request::Squeue(SqueueFilter::default()));
+        // Typed: the block is populated and consistent with the metrics.
+        match d.handle(Request::Stats) {
+            Response::Stats(s) => {
+                let c = s.contention.expect("daemon always fills contention");
+                assert!(c.write_locks >= 1, "{c:?}");
+                assert!(c.read_path_ops >= 1, "{c:?}");
+                assert_eq!(c.lock_hold_count, c.write_locks, "{c:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Wire: v2 carries the extension keys and round-trips; v1 stays on
+        // the original key set.
+        let (v2, _) = d.handle_line_versioned("STATS", super::ProtocolVersion::V2);
+        assert!(v2.contains("read_path_ops="), "{v2}");
+        assert!(v2.contains("lock_hold_p99_ns="), "{v2}");
+        match codec::parse_response(&v2, super::ProtocolVersion::V2).unwrap() {
+            Response::Stats(s) => assert!(s.contention.is_some()),
+            other => panic!("{other:?}"),
+        }
+        let v1 = d.handle_line("STATS");
+        assert!(!v1.contains("read_path_ops="), "{v1}");
+    }
+
+    #[test]
+    fn retired_jobs_leave_squeue_but_sjob_answers_from_history() {
+        // Aggressive retirement: 5 virtual seconds of grace at 10k×
+        // speedup. The job completes after 1 virtual second and must leave
+        // the published table shortly after.
+        let d = daemon_with(DaemonConfig {
+            speedup: 10_000.0,
+            pacer_tick_ms: 1,
+            retire_grace_secs: Some(5.0),
+        });
+        let ack = match d.handle(Request::Submit(
+            SubmitSpec::new(QosClass::Normal, JobType::TripleMode, 608, 1).with_run_secs(1.0),
+        )) {
+            Response::SubmitAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let wait = match d.handle(Request::Wait {
+            jobs: vec![ack.first],
+            timeout_secs: 10.0,
+        }) {
+            Response::Wait(w) => w,
+            other => panic!("{other:?}"),
+        };
+        assert!(!wait.timed_out);
+        // Pace until the job is retired from the snapshot.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            d.pace();
+            if d.read_snapshot().job(ack.first).is_none() {
+                break;
+            }
+            assert!(Instant::now() < deadline, "job was never retired");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Gone from every SQUEUE listing, including state=completed.
+        match d.handle(Request::Squeue(SqueueFilter {
+            state: Some(JobState::Completed),
+            ..Default::default()
+        })) {
+            Response::Jobs(rows) => assert!(rows.is_empty(), "{rows:?}"),
+            other => panic!("{other:?}"),
+        }
+        // SJOB still answers, from history, with terminal detail intact.
+        match d.handle(Request::Sjob(ack.first)) {
+            Response::Job(detail) => {
+                assert_eq!(detail.id, ack.first);
+                assert_eq!(detail.state, JobState::Completed);
+                assert!(detail.end_secs.is_some());
+                assert_eq!(detail.latency_ns, Some(wait.latency_ns));
+            }
+            other => panic!("{other:?}"),
+        }
+        // WAIT on the retired job settles from history with the real
+        // dispatch count and latency (not a silent dispatched=0).
+        match d.handle(Request::Wait {
+            jobs: vec![ack.first],
+            timeout_secs: 5.0,
+        }) {
+            Response::Wait(w) => {
+                assert!(!w.timed_out);
+                assert_eq!(w.dispatched, 1, "retired job lost its dispatch: {w:?}");
+                assert_eq!(w.latency_ns, wait.latency_ns);
+            }
+            other => panic!("{other:?}"),
+        }
+        // A genuinely unknown id is still NotFound.
+        match d.handle(Request::Sjob(999_999)) {
+            Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::NotFound),
+            other => panic!("{other:?}"),
+        }
     }
 }

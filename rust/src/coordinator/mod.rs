@@ -37,8 +37,8 @@ pub mod snapshot;
 pub mod threadpool;
 
 pub use api::{
-    ApiError, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
-    StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request,
+    Response, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 pub use client::{Client, ClientError};
 pub use daemon::{Daemon, DaemonConfig};

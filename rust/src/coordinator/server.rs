@@ -396,6 +396,9 @@ mod tests {
             DaemonConfig {
                 speedup: 10_000.0,
                 pacer_tick_ms: 1,
+                // Keep retirement out of the server tests (wall-timing
+                // coupling at high speedup).
+                retire_grace_secs: Some(86_400.0),
             },
         );
         let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", workers)

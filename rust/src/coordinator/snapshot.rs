@@ -8,11 +8,19 @@
 //! second cannot serialize behind the dispatch path (the contention the
 //! companion MIT SuperCloud paper calls out for interactive launch).
 //!
-//! Capture is incremental in the common case: the scheduler's
+//! Capture is incremental at two levels. The scheduler's
 //! [`crate::sched::Scheduler::change_version`] tick tells the daemon whether
 //! anything externally visible changed since the previous snapshot; when it
 //! didn't, the new snapshot shares the previous job table `Arc` and only the
-//! virtual clock is refreshed.
+//! virtual clock is refreshed. When the job table *did* move, capture is
+//! **delta-based**: each [`JobView`] carries the job's per-record transition
+//! counter ([`crate::job::Job::revision`]), and a merge walk over the
+//! id-sorted tables re-uses the previous snapshot's `Arc<JobView>` for every
+//! job whose revision is unchanged — only actually-mutated jobs pay the
+//! event-log lookups and view construction. Combined with terminal-job
+//! retirement ([`crate::sched::Scheduler::retire_terminal`], driven by the
+//! daemon's grace period), publish cost is bounded by the *live* job set,
+//! not the daemon's full history.
 //!
 //! [`WaitHub`] is the blocked-`WAIT` subscription registry: waiters park on
 //! a `Condvar` keyed by a completion generation that the publish path bumps
@@ -20,8 +28,8 @@
 //! `Ended` deltas), so a waiter wakes promptly on the event it cares about
 //! instead of polling the scheduler lock.
 
-use crate::job::{JobState, JobType, QosClass};
-use crate::sched::{LogKind, SchedStats, Scheduler};
+use crate::job::{Job, JobState, JobType, QosClass};
+use crate::sched::{EventLog, LogKind, SchedStats, Scheduler};
 use crate::sim::SimTime;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -56,9 +64,33 @@ pub struct JobView {
     pub recognized: Option<SimTime>,
     /// Last `DispatchDone` event-log time.
     pub dispatched: Option<SimTime>,
+    /// The job's transition counter at capture: delta capture re-uses the
+    /// previous snapshot's view whenever this is unchanged.
+    pub revision: u64,
 }
 
 impl JobView {
+    /// Build the view of one job record (shared by snapshot capture and the
+    /// daemon's retirement path).
+    pub(crate) fn of(j: &Job, log: &EventLog) -> JobView {
+        JobView {
+            id: j.id.0,
+            job_type: j.spec.job_type,
+            tasks: j.spec.tasks,
+            user: j.spec.user.0,
+            qos: j.spec.qos,
+            state: j.state,
+            submit_secs: j.submit_time.as_secs_f64(),
+            queue_secs: j.queue_time.as_secs_f64(),
+            start_secs: j.start_time.map(SimTime::as_secs_f64),
+            end_secs: j.end_time.map(SimTime::as_secs_f64),
+            requeues: j.requeue_count,
+            recognized: log.first(j.id, LogKind::Recognized),
+            dispatched: log.last(j.id, LogKind::DispatchDone),
+            revision: j.revision(),
+        }
+    }
+
     /// Virtual scheduling latency (recognized → dispatched) in ns.
     pub fn latency_ns(&self) -> Option<u64> {
         match (self.recognized, self.dispatched) {
@@ -107,7 +139,7 @@ pub struct SchedSnapshot {
     /// The scheduler change tick this snapshot reflects.
     pub version: u64,
     /// The job-table signature the `jobs` table reflects (gates rebuilds).
-    jobs_sig: (usize, usize, u64),
+    jobs_sig: (usize, u64, usize, u64),
     /// Scheduler counters.
     pub stats: SchedStats,
     /// Priority scorer backend name.
@@ -121,18 +153,21 @@ pub struct SchedSnapshot {
     /// Terminal transitions so far (`Ended` log records) — with
     /// `stats.dispatches`, the completion generation WAIT subscribers key on.
     pub ended: usize,
-    /// Job table, ascending id order (shared with the previous snapshot
-    /// whenever [`Scheduler::jobs_signature`] says no job changed).
-    jobs: Arc<Vec<JobView>>,
+    /// Job table, ascending id order. The outer `Arc` is shared with the
+    /// previous snapshot whenever [`Scheduler::jobs_signature`] says no job
+    /// changed; the per-job `Arc<JobView>`s are shared for every job whose
+    /// revision is unchanged (delta capture).
+    jobs: Arc<Vec<Arc<JobView>>>,
 }
 
 impl SchedSnapshot {
     /// Capture the scheduler's externally visible state. Pass the previous
     /// snapshot so unchanged parts are shared, not rebuilt: the clock,
-    /// counters, and cluster occupancy refresh on every capture (cheap),
-    /// but the O(jobs) table and its derived counts are rebuilt only when
-    /// the job-table signature moved — a no-op scheduling pass or a pure
-    /// counter change shares the previous table `Arc`.
+    /// counters, and cluster occupancy refresh on every capture (cheap);
+    /// the whole table `Arc` is shared when the job-table signature is
+    /// unmoved; and when it did move, a merge walk re-uses every previous
+    /// `Arc<JobView>` whose per-job revision is unchanged — only mutated
+    /// jobs pay event-log lookups and view construction.
     pub fn capture(sched: &Scheduler, prev: Option<&SchedSnapshot>) -> SchedSnapshot {
         let version = sched.change_version();
         if let Some(p) = prev {
@@ -167,26 +202,31 @@ impl SchedSnapshot {
             }
         }
         let log = sched.log();
-        let jobs: Vec<JobView> = sched
-            .jobs()
-            .map(|j| JobView {
-                id: j.id.0,
-                job_type: j.spec.job_type,
-                tasks: j.spec.tasks,
-                user: j.spec.user.0,
-                qos: j.spec.qos,
-                state: j.state,
-                submit_secs: j.submit_time.as_secs_f64(),
-                queue_secs: j.queue_time.as_secs_f64(),
-                start_secs: j.start_time.map(SimTime::as_secs_f64),
-                end_secs: j.end_time.map(SimTime::as_secs_f64),
-                requeues: j.requeue_count,
-                recognized: log.first(j.id, LogKind::Recognized),
-                dispatched: log.last(j.id, LogKind::DispatchDone),
-            })
-            .collect();
-        let pending = jobs.iter().filter(|v| v.state == JobState::Pending).count();
-        let running = jobs.iter().filter(|v| v.state == JobState::Running).count();
+        // Delta merge: both tables are id-sorted; ids present in prev but
+        // not in the scheduler were retired and simply drop out.
+        let prev_jobs: &[Arc<JobView>] = prev.map_or(&[], |p| p.jobs.as_slice());
+        let mut pi = 0usize;
+        let mut jobs: Vec<Arc<JobView>> = Vec::with_capacity(prev_jobs.len() + 8);
+        let (mut pending, mut running) = (0usize, 0usize);
+        for j in sched.jobs() {
+            while pi < prev_jobs.len() && prev_jobs[pi].id < j.id.0 {
+                pi += 1;
+            }
+            let v = if pi < prev_jobs.len()
+                && prev_jobs[pi].id == j.id.0
+                && prev_jobs[pi].revision == j.revision()
+            {
+                Arc::clone(&prev_jobs[pi])
+            } else {
+                Arc::new(JobView::of(j, log))
+            };
+            match v.state {
+                JobState::Pending => pending += 1,
+                JobState::Running => running += 1,
+                _ => {}
+            }
+            jobs.push(v);
+        }
         SchedSnapshot {
             virtual_now: sched.now(),
             version,
@@ -202,7 +242,7 @@ impl SchedSnapshot {
     }
 
     /// The job table, ascending id order.
-    pub fn jobs(&self) -> &[JobView] {
+    pub fn jobs(&self) -> &[Arc<JobView>] {
         &self.jobs
     }
 
@@ -211,43 +251,55 @@ impl SchedSnapshot {
         self.jobs
             .binary_search_by_key(&id, |v| v.id)
             .ok()
-            .map(|i| &self.jobs[i])
+            .map(|i| self.jobs[i].as_ref())
     }
 
     /// Jobs in one state, ascending id order.
     pub fn jobs_in_state(&self, state: JobState) -> impl Iterator<Item = &JobView> {
-        self.jobs.iter().filter(move |v| v.state == state)
+        self.jobs
+            .iter()
+            .map(Arc::as_ref)
+            .filter(move |v| v.state == state)
     }
 
     /// Evaluate a `WAIT` against this snapshot. Unknown ids count as
     /// settled (they can never dispatch); existence is checked once at
-    /// `WAIT` admission, not here.
+    /// `WAIT` admission, not here. The daemon evaluates through
+    /// [`wait_view_of`] with its history side-table folded in, so retired
+    /// jobs keep reporting their dispatch.
     pub fn wait_view(&self, ids: &[u64]) -> WaitView {
-        let mut first_recognized: Option<SimTime> = None;
-        let mut last_dispatched: Option<SimTime> = None;
-        let mut dispatched = 0u32;
-        let mut settled = true;
-        for &id in ids {
-            let Some(v) = self.job(id) else { continue };
-            if let Some(r) = v.recognized {
-                first_recognized = Some(first_recognized.map_or(r, |c| c.min(r)));
-            }
-            if let Some(d) = v.dispatched {
-                dispatched += 1;
-                last_dispatched = Some(last_dispatched.map_or(d, |c| c.max(d)));
-            } else if !v.state.is_terminal() {
-                settled = false;
-            }
+        wait_view_of(ids.iter().map(|&id| self.job(id)))
+    }
+}
+
+/// Aggregate a `WAIT` view over per-id view lookups (`None` = unknown,
+/// counted as settled). Shared by the snapshot-only evaluation above and
+/// the daemon's snapshot+history evaluation.
+pub(crate) fn wait_view_of<'a>(views: impl Iterator<Item = Option<&'a JobView>>) -> WaitView {
+    let mut first_recognized: Option<SimTime> = None;
+    let mut last_dispatched: Option<SimTime> = None;
+    let mut dispatched = 0u32;
+    let mut settled = true;
+    for view in views {
+        let Some(v) = view else { continue };
+        if let Some(r) = v.recognized {
+            first_recognized = Some(first_recognized.map_or(r, |c| c.min(r)));
         }
-        let latency_ns = match (first_recognized, last_dispatched) {
-            (Some(r), Some(d)) => d.saturating_sub(r).as_nanos(),
-            _ => 0,
-        };
-        WaitView {
-            dispatched,
-            settled,
-            latency_ns,
+        if let Some(d) = v.dispatched {
+            dispatched += 1;
+            last_dispatched = Some(last_dispatched.map_or(d, |c| c.max(d)));
+        } else if !v.state.is_terminal() {
+            settled = false;
         }
+    }
+    let latency_ns = match (first_recognized, last_dispatched) {
+        (Some(r), Some(d)) => d.saturating_sub(r).as_nanos(),
+        _ => 0,
+    };
+    WaitView {
+        dispatched,
+        settled,
+        latency_ns,
     }
 }
 
@@ -357,6 +409,81 @@ mod tests {
         assert!(b.stats.main_passes > a.stats.main_passes, "{:?}", b.stats);
         assert_ne!(a.version, b.version);
         assert!(Arc::ptr_eq(&a.jobs, &b.jobs), "empty table was rebuilt");
+    }
+
+    #[test]
+    fn delta_capture_shares_unchanged_job_views() {
+        let mut s = sched();
+        let a = s.submit(JobSpec::spot(UserId(9), JobType::Array, 16));
+        let b = s.submit(JobSpec::spot(UserId(9), JobType::Array, 16));
+        assert!(s.run_until_dispatched(&[a, b], SimTime::from_secs(60)));
+        let snap1 = SchedSnapshot::capture(&s, None);
+        // Cancel only b: the rebuilt table must re-use a's view allocation
+        // and rebuild b's.
+        assert!(s.cancel(JobId(b.0)));
+        let snap2 = SchedSnapshot::capture(&s, Some(&snap1));
+        assert!(!Arc::ptr_eq(&snap1.jobs, &snap2.jobs), "table must rebuild");
+        let va1 = &snap1.jobs()[0];
+        let va2 = &snap2.jobs()[0];
+        assert_eq!(va1.id, a.0);
+        assert!(Arc::ptr_eq(va1, va2), "unchanged job must share its JobView");
+        let vb1 = &snap1.jobs()[1];
+        let vb2 = &snap2.jobs()[1];
+        assert!(!Arc::ptr_eq(vb1, vb2), "cancelled job must get a fresh view");
+        assert_eq!(vb2.state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn retired_jobs_drop_out_of_the_delta_merge() {
+        let mut s = sched();
+        let a = s.submit(
+            JobSpec::interactive(UserId(1), JobType::Individual, 1)
+                .with_run_time(SimTime::from_secs(1)),
+        );
+        let b = s.submit(JobSpec::spot(UserId(9), JobType::Array, 16));
+        assert!(s.run_until_dispatched(&[a, b], SimTime::from_secs(60)));
+        s.run_for(SimTime::from_secs(120)); // a completes; b keeps running
+        let snap1 = SchedSnapshot::capture(&s, None);
+        assert!(snap1.job(a.0).is_some());
+        assert_eq!(s.retire_terminal(SimTime::from_secs(10)).len(), 1);
+        let snap2 = SchedSnapshot::capture(&s, Some(&snap1));
+        assert!(snap2.job(a.0).is_none(), "retired job leaves the table");
+        let vb = snap2.job(b.0).expect("running job stays");
+        // The survivor's view is still the shared allocation from snap1.
+        assert!(Arc::ptr_eq(&snap1.jobs()[1], &snap2.jobs()[0]));
+        assert_eq!(vb.state, JobState::Running);
+    }
+
+    #[test]
+    fn jobs_signature_honest_under_suspend_resume() {
+        use crate::preempt::{PreemptApproach, PreemptMode};
+        let cfg = crate::sched::SchedulerConfig::baseline(
+            SchedCosts::dedicated(),
+            PartitionLayout::Dual,
+        )
+        .with_approach(PreemptApproach::AutoScheduler {
+            mode: PreemptMode::Suspend,
+        });
+        let mut s = Scheduler::new(topology::tx2500(), cfg);
+        let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 608));
+        assert!(s.run_until_dispatched(&[spot], SimTime::from_secs(60)));
+        let snap_running = SchedSnapshot::capture(&s, None);
+        // Suspend via auto preemption.
+        let inter = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        s.run_for(SimTime::from_secs(60));
+        assert_eq!(s.job(spot).unwrap().state, JobState::Suspended);
+        let sig_suspended = s.jobs_signature();
+        let snap_suspended = SchedSnapshot::capture(&s, Some(&snap_running));
+        assert_eq!(snap_suspended.job(spot.0).unwrap().state, JobState::Suspended);
+        // Resume (cancel the interactive demand): the signature must move
+        // even though no log entry or membership change happens, and the
+        // suspended job's view must be rebuilt, not shared.
+        assert!(s.cancel(inter));
+        s.run_for(SimTime::from_secs(120));
+        assert_eq!(s.job(spot).unwrap().state, JobState::Running);
+        assert_ne!(s.jobs_signature(), sig_suspended, "resume must move the signature");
+        let snap_resumed = SchedSnapshot::capture(&s, Some(&snap_suspended));
+        assert_eq!(snap_resumed.job(spot.0).unwrap().state, JobState::Running);
     }
 
     #[test]

@@ -90,6 +90,11 @@ pub struct Job {
     pub end_time: Option<SimTime>,
     /// How many times this job has been preempted+requeued.
     pub requeue_count: u32,
+    /// Monotone per-job change counter: bumped on every externally visible
+    /// mutation (state transitions; the scheduler also bumps it when a log
+    /// record changes a derived field, e.g. `Recognized`). Snapshot capture
+    /// keys its per-job delta reuse on this.
+    revision: u64,
 }
 
 impl Job {
@@ -104,7 +109,21 @@ impl Job {
             start_time: None,
             end_time: None,
             requeue_count: 0,
+            revision: 0,
         }
+    }
+
+    /// Per-job change counter (see the field doc). Equal revisions for the
+    /// same job id guarantee an identical externally visible record.
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Bump the change counter for a mutation that does not go through
+    /// [`Job::transition`] (scheduler-internal; e.g. the `Recognized` log
+    /// record materializing the job's recognized time).
+    pub(crate) fn touch(&mut self) {
+        self.revision += 1;
     }
 
     /// Validated state transition. Panics on an illegal transition — these
@@ -117,6 +136,7 @@ impl Job {
             self.state,
             next
         );
+        self.revision += 1;
         match next {
             JobState::Running => self.start_time = Some(now),
             JobState::Completed | JobState::Cancelled => self.end_time = Some(now),
@@ -185,6 +205,19 @@ mod tests {
     fn illegal_transition_panics() {
         let mut j = Job::new(JobId(1), spec(), SimTime::ZERO);
         j.transition(JobState::Completed, SimTime::from_secs(1));
+    }
+
+    #[test]
+    fn revision_moves_with_every_transition() {
+        let mut j = Job::new(JobId(1), spec(), SimTime::ZERO);
+        assert_eq!(j.revision(), 0);
+        j.transition(JobState::Running, SimTime::from_secs(1));
+        assert_eq!(j.revision(), 1);
+        j.transition(JobState::Suspended, SimTime::from_secs(2));
+        j.transition(JobState::Running, SimTime::from_secs(3));
+        assert_eq!(j.revision(), 3, "suspend/resume must move the revision");
+        j.touch();
+        assert_eq!(j.revision(), 4);
     }
 
     #[test]

@@ -423,11 +423,28 @@ fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
         .map(|(cmd, n)| format!("{cmd}={n}"))
         .collect::<Vec<_>>()
         .join(" ");
+    let contention = s
+        .contention
+        .map(|c| {
+            format!(
+                "\ncontention: reads={} write_locks={} waits={}/{} | lock hold: n={} \
+                 p50={}ns p99={}ns max={}ns",
+                c.read_path_ops,
+                c.write_locks,
+                c.waits_resumed,
+                c.waits_parked,
+                c.lock_hold_count,
+                c.lock_hold_p50_ns,
+                c.lock_hold_p99_ns,
+                c.lock_hold_max_ns,
+            )
+        })
+        .unwrap_or_default();
     format!(
         "virtual_now={:.1}s dispatches={} preemptions={} requeues={} cron_passes={} \
          main_passes={} backfill_passes={} triggered_passes={} scorer={}\n\
          requests: ok={} err={} jobs_submitted={} | sched latency: n={} p50={:.3}s\n\
-         commands: {commands}",
+         commands: {commands}{contention}",
         s.virtual_now_secs,
         s.dispatches,
         s.preemptions,

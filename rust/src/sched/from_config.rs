@@ -74,6 +74,9 @@ pub fn deployment_from_config(cfg: &ConfigFile) -> Result<Deployment> {
     if let Some(si) = kvs.get("sched_interval") {
         costs.main_cycle_period = SimTime::from_secs(si.parse::<u64>().context("sched_interval")?);
     }
+    if let Some(bt) = kvs.get("bf_max_job_test") {
+        costs.bf_max_job_test = bt.parse::<usize>().context("bf_max_job_test")?;
+    }
 
     let layout = match cfg.get("PartitionLayout").unwrap_or("dual") {
         "single" => PartitionLayout::Single,
@@ -131,7 +134,7 @@ PreemptMode=REQUEUE
 ReserveNodes=5
 UserCoreLimit=160
 CronIntervalSecs=60
-SchedulerParameters=preempt_youngest_first,bf_interval=45,sched_interval=20
+SchedulerParameters=preempt_youngest_first,bf_interval=45,sched_interval=20,bf_max_job_test=250
 "#;
 
     #[test]
@@ -149,6 +152,7 @@ SchedulerParameters=preempt_youngest_first,bf_interval=45,sched_interval=20
         ));
         assert_eq!(d.config.costs.backfill_cycle_period, SimTime::from_secs(45));
         assert_eq!(d.config.costs.main_cycle_period, SimTime::from_secs(20));
+        assert_eq!(d.config.costs.bf_max_job_test, 250);
     }
 
     #[test]

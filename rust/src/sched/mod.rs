@@ -21,6 +21,7 @@ pub mod config;
 pub mod eventlog;
 pub mod from_config;
 pub mod priority;
+pub mod queue;
 
 pub use config::SchedulerConfig;
 pub use from_config::{deployment_from_file, deployment_from_text, Deployment};
@@ -31,8 +32,17 @@ use crate::cluster::{AllocRequest, Cluster, NodeId, Partition, PartitionId};
 use crate::job::{Job, JobId, JobSpec, JobState, QosClass, QosTable, UserAccounting};
 use crate::preempt::{lua, PreemptApproach, PreemptMode};
 use crate::sim::{EventQueue, SimTime};
+use crate::util::fxhash::FxHashMap;
 use crate::util::rng::Xoshiro256;
-use std::collections::{BTreeMap, BTreeSet};
+use queue::{OrderKey, PassOrder, PendingQueue};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+/// Memoized EASY-backfill end profile: the dispatch count it was built at
+/// plus the sorted (end time, cores) release schedule of running jobs.
+/// Shared across partitions within one scheduling pass and rebuilt only
+/// when a dispatch changed the running set.
+type EndProfile = Option<(u64, Vec<(SimTime, u64)>)>;
 
 /// Scheduler events.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -83,9 +93,11 @@ pub struct SchedStats {
     pub requeues: u64,
     /// Cron agent passes.
     pub cron_passes: u64,
-    /// Priority batches scored.
+    /// Priority-scorer invocations (keys are computed incrementally at
+    /// enqueue time, so this counts enqueue/requeue scorings, not per-pass
+    /// whole-queue rescores).
     pub score_batches: u64,
-    /// Jobs scored across all batches.
+    /// Factor rows scored across all scorer invocations.
     pub jobs_scored: u64,
 }
 
@@ -95,7 +107,13 @@ pub struct Scheduler {
     cluster: Cluster,
     partitions: Vec<Partition>,
     jobs: BTreeMap<JobId, Job>,
-    pending: BTreeMap<PartitionId, Vec<JobId>>,
+    /// Per-partition pending queues: incrementally maintained priority
+    /// order (per-user buckets of static keys merged under live fairshare
+    /// offsets at pass time — see [`queue`]). O(log n) insert/remove,
+    /// no global invalidation on fairshare changes.
+    queues: BTreeMap<PartitionId, PendingQueue>,
+    /// job → partition for O(1) queue removal (no per-partition scan).
+    job_partition: FxHashMap<JobId, PartitionId>,
     /// Jobs deferred until a given time (auto-preempt retry, requeue hold).
     earliest_start: BTreeMap<JobId, SimTime>,
     /// Jobs for which auto-preemption was already requested.
@@ -104,6 +122,13 @@ pub struct Scheduler {
     /// not allocate into reserved headroom — Slurm guards the resources it
     /// freed by preemption for the preempting job the same way.
     reservations: BTreeMap<JobId, u32>,
+    /// Aggregate of [`Scheduler::reservations`], maintained at
+    /// reserve/dispatch/cancel so the pass loop reads it in O(1) instead of
+    /// re-summing the table per examined spot job.
+    reserved_pending_cores: u32,
+    /// Currently suspended jobs (the resume path reads this instead of
+    /// scanning the whole job table every pass).
+    suspended: BTreeSet<JobId>,
     qos: QosTable,
     users: UserAccounting,
     clock: SimTime,
@@ -121,11 +146,21 @@ pub struct Scheduler {
     /// Job-state mutations not reflected in job count or log length
     /// (suspend-resume); part of [`Scheduler::jobs_signature`].
     resumes: u64,
-    /// Cached priority order per partition. Valid until the queue's
-    /// contents change: with a shared age weight, every pending job's score
-    /// grows at the same rate, so relative order is time-invariant between
-    /// queue mutations (Slurm's priority caching makes the same argument).
-    order_cache: BTreeMap<PartitionId, Vec<JobId>>,
+    /// Score gained per hour of queue age (probed from the scorer once at
+    /// construction; see [`queue`] for why age folds into a static key).
+    age_slope: f64,
+    /// Score delta per unit of fairshare (probed once; applied as a
+    /// per-user offset at pass time).
+    share_slope: f64,
+    /// Terminal jobs awaiting retirement, keyed by end time (min-heap).
+    retire_heap: BinaryHeap<Reverse<(SimTime, JobId)>>,
+    /// Terminal jobs removed by [`Scheduler::retire_terminal`] so far.
+    retired_total: u64,
+    /// Memo of the age-0/share-0 score per (qos, cores, requeue_count) —
+    /// the only inputs the static factor row depends on. A burst of N
+    /// identical individual jobs costs one scorer invocation, not N, which
+    /// keeps the batched XLA scorer viable on the enqueue path.
+    key_score_cache: FxHashMap<(QosClass, u32, u32), f32>,
 }
 
 impl Scheduler {
@@ -134,10 +169,26 @@ impl Scheduler {
     /// seed-dependent phase within their periods.
     pub fn new(cluster: Cluster, cfg: SchedulerConfig) -> Self {
         let partitions = cfg.layout.partitions();
-        let mut pending = BTreeMap::new();
+        let mut queues = BTreeMap::new();
         for p in &partitions {
-            pending.insert(p.id, Vec::new());
+            queues.insert(p.id, PendingQueue::default());
         }
+        // Probe the scorer's age and fairshare slopes once: the incremental
+        // queue assumes the score is affine in both factors (true for the
+        // native dot product and the XLA matvec kernel), which lets age
+        // fold into a time-invariant static key and fairshare into a
+        // per-user offset.
+        let mut age_row = [0.0f32; N_FACTORS];
+        age_row[1] = 1.0;
+        let mut share_row = [0.0f32; N_FACTORS];
+        share_row[5] = 1.0;
+        let probes = cfg.scorer.scores(&[
+            JobFactors([0.0f32; N_FACTORS]),
+            JobFactors(age_row),
+            JobFactors(share_row),
+        ]);
+        let age_slope = (probes[1] - probes[0]) as f64;
+        let share_slope = (probes[2] - probes[0]) as f64;
         let mut rng = Xoshiro256::new(cfg.phase_seed);
         let mut events = EventQueue::new();
         let main_phase = SimTime(rng.gen_range(1, cfg.costs.main_cycle_period.0.max(2)));
@@ -164,10 +215,13 @@ impl Scheduler {
             cluster,
             partitions,
             jobs: BTreeMap::new(),
-            pending,
+            queues,
+            job_partition: FxHashMap::default(),
             earliest_start: BTreeMap::new(),
             preempt_requested: BTreeSet::new(),
             reservations: BTreeMap::new(),
+            reserved_pending_cores: 0,
+            suspended: BTreeSet::new(),
             qos,
             users,
             clock: SimTime::ZERO,
@@ -179,7 +233,11 @@ impl Scheduler {
             stats: SchedStats::default(),
             version: 0,
             resumes: 0,
-            order_cache: BTreeMap::new(),
+            age_slope,
+            share_slope,
+            retire_heap: BinaryHeap::new(),
+            retired_total: 0,
+            key_score_cache: FxHashMap::default(),
         }
     }
 
@@ -209,14 +267,15 @@ impl Scheduler {
     }
 
     /// O(1) signature of the externally visible **job table**: job states,
-    /// membership, and event-log-derived fields cannot change without it
-    /// moving (every transition either logs an entry, adds a job, or bumps
-    /// the resume counter). Counters and cluster occupancy are *not*
-    /// covered — equal signatures across e.g. an empty scheduling pass let
-    /// the coordinator share the previous snapshot's job table instead of
-    /// rebuilding it.
-    pub fn jobs_signature(&self) -> (usize, usize, u64) {
-        (self.jobs.len(), self.log.entries().len(), self.resumes)
+    /// membership (including retirement — `next_id` covers additions, the
+    /// table length covers removals), and event-log-derived fields cannot
+    /// change without it moving (every transition either logs an entry,
+    /// adds a job, or bumps the resume counter). Counters and cluster
+    /// occupancy are *not* covered — equal signatures across e.g. an empty
+    /// scheduling pass let the coordinator share the previous snapshot's
+    /// job table instead of rebuilding it.
+    pub fn jobs_signature(&self) -> (usize, u64, usize, u64) {
+        (self.jobs.len(), self.next_id, self.log.entries().len(), self.resumes)
     }
 
     /// All job records, in ascending id order.
@@ -254,13 +313,17 @@ impl Scheduler {
     }
 
     /// Running spot jobs (preemption candidates), as LIFO victim records.
+    /// Walks the cluster's allocation table — bounded by what actually
+    /// runs — instead of the whole job history.
     pub fn spot_victims(&self) -> Vec<crate::preempt::lifo::Victim> {
         let cores_per_node = self.cluster.cores_per_node();
-        self.jobs
-            .values()
-            .filter(|j| j.is_spot() && j.state == JobState::Running)
-            .filter_map(|j| {
-                let alloc = self.cluster.allocation_of(j.id)?;
+        self.cluster
+            .allocations()
+            .filter_map(|(id, alloc)| {
+                let j = self.jobs.get(&id)?;
+                if !j.is_spot() || j.state != JobState::Running {
+                    return None;
+                }
                 let whole_nodes = alloc
                     .slices
                     .iter()
@@ -274,6 +337,34 @@ impl Scheduler {
                 })
             })
             .collect()
+    }
+
+    /// Terminal jobs removed from the job table by
+    /// [`Scheduler::retire_terminal`] so far.
+    pub fn retired_total(&self) -> u64 {
+        self.retired_total
+    }
+
+    /// Remove terminal jobs whose end time lies more than `grace` in the
+    /// past and return their records (the coordinator moves them into its
+    /// history side-table). Bounds the job table — and with it snapshot
+    /// capture — for long-lived daemons. O(retired · log pending-retires).
+    pub fn retire_terminal(&mut self, grace: SimTime) -> Vec<Job> {
+        let mut out = Vec::new();
+        while let Some(&Reverse((end, id))) = self.retire_heap.peek() {
+            if SimTime(end.0.saturating_add(grace.0)) > self.clock {
+                break;
+            }
+            self.retire_heap.pop();
+            let job = self.jobs.remove(&id).expect("retire heap holds live terminal jobs");
+            debug_assert!(job.state.is_terminal());
+            out.push(job);
+        }
+        if !out.is_empty() {
+            self.version += 1;
+            self.retired_total += out.len() as u64;
+        }
+        out
     }
 
     /// QoS table (read access for tests and the experiments harness).
@@ -355,10 +446,19 @@ impl Scheduler {
     /// event batch rather than a wall of empty polls.
     pub fn run_until_dispatched(&mut self, jobs: &[JobId], timeout: SimTime) -> bool {
         let horizon = self.clock + timeout;
-        // Only poll jobs not yet seen dispatched (keeps large bursts linear).
-        let mut remaining: Vec<JobId> = jobs.to_vec();
+        // Keep the set of jobs not yet seen dispatched, and settle it by
+        // consuming *newly appended* `DispatchDone` log entries after each
+        // event batch. Total polling cost is O(jobs · log jobs + new log
+        // entries) — a per-batch rescan of the remaining set was quadratic
+        // on a 100k burst (and stayed quadratic under trickle dispatches
+        // even when gated on the dispatch counter).
+        let mut remaining: BTreeSet<JobId> = jobs
+            .iter()
+            .copied()
+            .filter(|&j| self.log.last(j, LogKind::DispatchDone).is_none())
+            .collect();
+        let mut log_pos = self.log.entries().len();
         loop {
-            remaining.retain(|&j| self.log.last(j, LogKind::DispatchDone).is_none());
             if remaining.is_empty() {
                 return true;
             }
@@ -370,9 +470,20 @@ impl Scheduler {
                 // dispatch within the timeout.
                 _ => break,
             }
+            let entries = self.log.entries();
+            for e in &entries[log_pos..] {
+                if e.kind == LogKind::DispatchDone {
+                    remaining.remove(&e.job);
+                }
+            }
+            log_pos = entries.len();
         }
         self.run_until(horizon);
-        remaining.retain(|&j| self.log.last(j, LogKind::DispatchDone).is_none());
+        for e in &self.log.entries()[log_pos..] {
+            if e.kind == LogKind::DispatchDone {
+                remaining.remove(&e.job);
+            }
+        }
         remaining.is_empty()
     }
 
@@ -401,11 +512,22 @@ impl Scheduler {
 
     fn on_arrival(&mut self, id: JobId) {
         // The job may have been cancelled between the submit RPC and the
-        // controller recognizing it; a stale arrival must not re-queue it.
-        if self.jobs.get(&id).expect("arrival for unknown job").state != JobState::Pending {
+        // controller recognizing it (and, under an aggressive retirement
+        // grace, even retired already); a stale arrival must not re-queue
+        // it or assume the record still exists. An unknown id with no
+        // retirement in play is a scheduler bug and must stay loud.
+        let Some(job) = self.jobs.get(&id) else {
+            debug_assert!(self.retired_total > 0, "arrival for unknown job {id}");
+            return;
+        };
+        if job.state != JobState::Pending {
             return;
         }
         self.log.push(self.clock, id, LogKind::Recognized);
+        // The Recognized record materializes a job-view field without a
+        // state transition: bump the per-job revision by hand so snapshot
+        // delta capture rebuilds this job's view.
+        self.jobs.get_mut(&id).expect("arrival for unknown job").touch();
         if self.cfg.lua_plugin {
             // The paper's Lua job_submit attempt: the plugin observes the
             // submission but cannot execute scheduler commands.
@@ -481,7 +603,11 @@ impl Scheduler {
     /// (start + run_time) and release their cores. `None` = never (the job
     /// cannot be satisfied by waiting — e.g. it is larger than the
     /// cluster), in which case backfill is unrestricted.
-    fn shadow_start_for(&self, head: JobId) -> Option<SimTime> {
+    ///
+    /// The sorted release schedule (`memo`) is memoized across the whole
+    /// pass — both partitions reuse it — and rebuilt only when a dispatch
+    /// changed the running set, the only in-pass allocation mutation.
+    fn shadow_start_for(&self, head: JobId, memo: &mut EndProfile) -> Option<SimTime> {
         let cores_per_node = self.cluster.cores_per_node();
         let need = self.jobs[&head]
             .spec
@@ -491,18 +617,21 @@ impl Scheduler {
         if avail >= need {
             return Some(self.clock);
         }
-        let mut ends: Vec<(SimTime, u64)> = self
-            .cluster
-            .allocated_jobs()
-            .filter_map(|id| {
-                let j = self.jobs.get(&id)?;
-                let start = j.start_time?;
-                let cores = self.cluster.allocation_of(id)?.cores() as u64;
-                Some((start + j.spec.run_time, cores))
-            })
-            .collect();
-        ends.sort();
-        for (t, c) in ends {
+        let fresh = matches!(memo, Some((d, _)) if *d == self.stats.dispatches);
+        if !fresh {
+            let mut ends: Vec<(SimTime, u64)> = self
+                .cluster
+                .allocations()
+                .filter_map(|(id, alloc)| {
+                    let j = self.jobs.get(&id)?;
+                    let start = j.start_time?;
+                    Some((start + j.spec.run_time, alloc.cores() as u64))
+                })
+                .collect();
+            ends.sort();
+            *memo = Some((self.stats.dispatches, ends));
+        }
+        for &(t, c) in &memo.as_ref().expect("just built").1 {
             avail += c;
             if avail >= need {
                 return Some(t);
@@ -517,15 +646,51 @@ impl Scheduler {
             CycleKind::Main | CycleKind::Triggered => self.cfg.costs.main_per_job,
             CycleKind::Backfill => self.cfg.costs.backfill_per_job,
         };
+        // Backfill examines at most bf_max_job_test candidates per pass
+        // (Slurm's knob of the same name) — an unbounded scan over a
+        // 100k-deep queue would dominate both virtual and wall time.
+        let scan_limit = match kind {
+            CycleKind::Backfill => self.cfg.costs.bf_max_job_test,
+            CycleKind::Main | CycleKind::Triggered => usize::MAX,
+        };
+        // EASY shadow release schedule, shared across partitions this pass.
+        let mut end_profile: EndProfile = None;
+        // The backfill candidate budget is per *pass*, shared across
+        // partitions (matching the SchedCosts::bf_max_job_test contract).
+        let mut examined = 0usize;
         let partition_ids: Vec<PartitionId> = self.partitions.iter().map(|p| p.id).collect();
         for pid in partition_ids {
             // EASY backfill: once a Normal job blocks, later candidates may
             // only start if they finish before the head's shadow time.
             let mut shadow: Option<Option<SimTime>> = None; // Some(reservation) once a head blocked
-            // Score and sort this partition's queue (batched — this is the
-            // computation the XLA kernel accelerates).
-            let order = self.scored_order(pid);
-            for id in order {
+            // The frozen pass order: a lazy merge over the partition's user
+            // buckets with fairshare offsets read once at pass start (the
+            // pass's own dispatches change fairshare for the *next* pass,
+            // exactly like the old cached order).
+            let mut order = {
+                let q = self.queues.get(&pid).expect("partition");
+                let users = &self.users;
+                let qos_table = &self.qos;
+                let total = self.cluster.total_cores().max(1) as f64;
+                let slope = self.share_slope;
+                PassOrder::build(q, |qos, user| {
+                    let usage = match qos {
+                        QosClass::Normal => users.usage(user),
+                        QosClass::Spot => qos_table.usage(QosClass::Spot, user),
+                    } as f64;
+                    slope * (usage / total).clamp(0.0, 1.0)
+                })
+            };
+            loop {
+                if examined >= scan_limit {
+                    break;
+                }
+                let next = {
+                    let q = self.queues.get(&pid).expect("partition");
+                    order.next(q)
+                };
+                let Some(id) = next else { break };
+                examined += 1;
                 cursor += per_job_cost;
                 // Deferred jobs (requeue hold / auto-preempt retry) are
                 // ineligible: skipped, not blocking.
@@ -545,14 +710,11 @@ impl Scheduler {
                     continue;
                 }
                 // Spot jobs may not consume headroom reserved for deferred
-                // preemptor jobs.
+                // preemptor jobs (the aggregate counter is maintained at
+                // reserve/dispatch/cancel — reservations only ever belong
+                // to pending jobs).
                 if spec.qos == QosClass::Spot {
-                    let reserved: u32 = self
-                        .reservations
-                        .iter()
-                        .filter(|(j, _)| self.jobs.get(j).is_some_and(|jj| jj.state == JobState::Pending))
-                        .map(|(_, &c)| c)
-                        .sum();
+                    let reserved = self.reserved_pending_cores;
                     if reserved > 0
                         && self.cluster.idle_cores() < need_cores.saturating_add(reserved)
                     {
@@ -591,7 +753,7 @@ impl Scheduler {
                         // Backfill: the first blocked Normal job becomes the
                         // head; compute its shadow reservation once.
                         if shadow.is_none() {
-                            shadow = Some(self.shadow_start_for(id));
+                            shadow = Some(self.shadow_start_for(id, &mut end_profile));
                         }
                     }
                     // Backfill continues past blocked jobs.
@@ -600,20 +762,12 @@ impl Scheduler {
         }
         // Resume suspended spot jobs once no interactive demand is pending
         // (their allocations were never released — SUSPEND holds memory).
-        if self.jobs.values().any(|j| j.state == JobState::Suspended) {
-            let any_pending_normal = self
-                .pending
-                .values()
-                .flatten()
-                .any(|id| self.jobs[id].spec.qos == QosClass::Normal);
+        // The suspended set and per-queue Normal counters make the common
+        // "nothing suspended" case O(1) instead of a job-table scan.
+        if !self.suspended.is_empty() {
+            let any_pending_normal = self.queues.values().any(|q| q.normal_pending() > 0);
             if !any_pending_normal {
-                let suspended: Vec<JobId> = self
-                    .jobs
-                    .iter()
-                    .filter(|(_, j)| j.state == JobState::Suspended)
-                    .map(|(&i, _)| i)
-                    .collect();
-                for id in suspended {
+                for id in std::mem::take(&mut self.suspended) {
                     cursor += self.cfg.costs.requeue_transaction; // resume RPC
                     self.resumes += 1; // not logged: keep jobs_signature honest
                     let job = self.jobs.get_mut(&id).expect("suspended job");
@@ -626,46 +780,30 @@ impl Scheduler {
         self.busy_until = self.busy_until.max(cursor);
     }
 
-    /// Compute the priority-sorted order of a partition's pending queue
-    /// (cached between queue mutations).
-    fn scored_order(&mut self, pid: PartitionId) -> Vec<JobId> {
-        if let Some(cached) = self.order_cache.get(&pid) {
-            return cached.clone();
-        }
-        let queue = self.pending.get(&pid).expect("partition").clone();
-        if queue.len() <= 1 {
-            self.order_cache.insert(pid, queue.clone());
-            return queue;
-        }
-        let total_cores = self.cluster.total_cores().max(1) as f32;
-        let factors: Vec<JobFactors> = queue
-            .iter()
-            .map(|id| {
-                let j = &self.jobs[id];
+    /// Static priority key for a newly queued job: its score at age 0 with
+    /// zero fairshare, shifted by the age slope times its queue time so any
+    /// two keys compare exactly like the live (uncapped-age) scores do.
+    ///
+    /// The age-0 score depends only on (qos, cores, requeue_count), so it
+    /// is memoized — a burst of identical specs pays the scorer once.
+    fn static_key(&mut self, id: JobId) -> OrderKey {
+        let j = &self.jobs[&id];
+        let cache_key = (j.spec.qos, j.spec.cores(), j.requeue_count);
+        let qt_hours = j.queue_time.as_secs_f64() / 3600.0;
+        let base = match self.key_score_cache.get(&cache_key).copied() {
+            Some(s) => s,
+            None => {
+                let j = &self.jobs[&id];
                 let qp = self.qos.config(j.spec.qos).priority;
-                // Fairshare: the user's share of currently-allocated cores.
-                let share = match j.spec.qos {
-                    QosClass::Normal => self.users.usage(j.spec.user) as f32 / total_cores,
-                    QosClass::Spot => {
-                        self.qos.usage(QosClass::Spot, j.spec.user) as f32 / total_cores
-                    }
-                };
-                JobFactors::of(j, qp, 0, share, self.clock)
-            })
-            .collect();
-        let scores = self.cfg.scorer.scores(&factors);
-        self.stats.score_batches += 1;
-        self.stats.jobs_scored += queue.len() as u64;
-        let mut idx: Vec<usize> = (0..queue.len()).collect();
-        idx.sort_by(|&a, &b| {
-            scores[b]
-                .partial_cmp(&scores[a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(queue[a].cmp(&queue[b]))
-        });
-        let order: Vec<JobId> = idx.into_iter().map(|i| queue[i]).collect();
-        self.order_cache.insert(pid, order.clone());
-        order
+                let f = JobFactors::of(j, qp, 0, 0.0, j.queue_time);
+                let s = self.cfg.scorer.scores(std::slice::from_ref(&f))[0];
+                self.stats.score_batches += 1;
+                self.stats.jobs_scored += 1;
+                self.key_score_cache.insert(cache_key, s);
+                s
+            }
+        };
+        OrderKey::of_score(base as f64 - self.age_slope * qt_hours)
     }
 
     /// Dispatch a pending job: allocate, charge accounting, emit dispatch
@@ -690,8 +828,8 @@ impl Scheduler {
             QosClass::Normal => self.users.charge(user, cores),
             QosClass::Spot => self.qos.charge(QosClass::Spot, user, cores),
         }
-        // Usage changed: fairshare scores (and hence cached orders) are stale.
-        self.order_cache.clear();
+        // Usage changed — no cache to invalidate: pass orders read live
+        // fairshare offsets per user bucket when they are built.
         cursor += self.cfg.costs.dispatch_cost(dispatches, is_triple);
         if is_triple {
             cursor += self.cfg.costs.triple_mode_setup;
@@ -702,27 +840,43 @@ impl Scheduler {
         self.remove_from_pending(id);
         self.earliest_start.remove(&id);
         self.preempt_requested.remove(&id);
-        self.reservations.remove(&id);
+        self.clear_reservation(id);
         self.events.push(cursor + run_time, Event::JobEnd(id));
         self.stats.dispatches += 1;
         cursor
     }
 
+    /// Drop a job from its partition's pending queue: O(log n) via the
+    /// job→partition index (no scan over partitions or queue positions).
     fn remove_from_pending(&mut self, id: JobId) {
-        for (&pid, q) in self.pending.iter_mut() {
-            if let Some(pos) = q.iter().position(|&j| j == id) {
-                q.remove(pos);
-                self.order_cache.remove(&pid);
-                return;
-            }
+        if let Some(pid) = self.job_partition.remove(&id) {
+            self.queues.get_mut(&pid).expect("partition").remove(id);
         }
     }
 
-    /// Queue a job into its partition's pending queue (invalidates the
-    /// cached priority order).
+    /// Queue a job into its partition's pending queue under a freshly
+    /// computed static priority key.
     fn push_pending(&mut self, pid: PartitionId, id: JobId) {
-        self.pending.get_mut(&pid).expect("partition").push(id);
-        self.order_cache.remove(&pid);
+        let key = self.static_key(id);
+        let (qos, user) = {
+            let j = &self.jobs[&id];
+            (j.spec.qos, j.spec.user)
+        };
+        self.queues.get_mut(&pid).expect("partition").insert(id, qos, user, key);
+        self.job_partition.insert(id, pid);
+    }
+
+    /// Drop a job's headroom reservation, keeping the aggregate counter in
+    /// sync.
+    fn clear_reservation(&mut self, id: JobId) {
+        if let Some(cores) = self.reservations.remove(&id) {
+            self.reserved_pending_cores -= cores;
+        }
+    }
+
+    /// Record a terminal transition for later retirement.
+    fn mark_terminal(&mut self, id: JobId, at: SimTime) {
+        self.retire_heap.push(Reverse((at, id)));
     }
 
     // ---- preemption plumbing (shared by auto / manual / cron) -------------
@@ -765,7 +919,6 @@ impl Scheduler {
                         QosClass::Normal => self.users.credit(user, alloc.cores()),
                         QosClass::Spot => self.qos.credit(QosClass::Spot, user, alloc.cores()),
                     }
-                    self.order_cache.clear(); // fairshare changed
                     let nodes: Vec<NodeId> = alloc.slices.iter().map(|&(n, _)| n).collect();
                     for &n in &nodes {
                         self.cluster_node_mut(n).begin_cleanup();
@@ -780,6 +933,7 @@ impl Scheduler {
                     } else {
                         job.transition(JobState::Cancelled, cursor);
                         self.log.push(cursor, v, LogKind::Ended);
+                        self.mark_terminal(v, cursor);
                     }
                 }
                 PreemptMode::Suspend => {
@@ -788,6 +942,7 @@ impl Scheduler {
                     // This is exactly why the paper rejects SUSPEND.
                     let job = self.jobs.get_mut(&v).expect("victim");
                     job.transition(JobState::Suspended, cursor);
+                    self.suspended.insert(v);
                 }
                 PreemptMode::Gang => {
                     panic!(
@@ -812,12 +967,19 @@ impl Scheduler {
     /// Reserve `cores` of headroom for a deferred preemptor job: spot jobs
     /// cannot allocate into it until the job dispatches or is cancelled.
     pub(crate) fn reserve_for(&mut self, id: JobId, cores: u32) {
-        self.reservations.insert(id, cores);
+        let prev = self.reservations.insert(id, cores).unwrap_or(0);
+        self.reserved_pending_cores = self.reserved_pending_cores + cores - prev;
     }
 
     fn on_requeue_finish(&mut self, id: JobId) {
         let hold = self.cfg.requeue_hold;
-        let job = self.jobs.get_mut(&id).expect("requeue of unknown job");
+        // Tolerate a record retired between the requeue and this event
+        // (cancelled-then-retired under a short grace period); anything
+        // else unknown is a scheduler bug and must stay loud.
+        let Some(job) = self.jobs.get_mut(&id) else {
+            debug_assert!(self.retired_total > 0, "requeue of unknown job {id}");
+            return;
+        };
         if job.state != JobState::Requeued {
             return; // cancelled in between
         }
@@ -840,9 +1002,17 @@ impl Scheduler {
     }
 
     fn on_job_end(&mut self, id: JobId) {
-        let job = self.jobs.get_mut(&id).expect("end of unknown job");
+        // A cancelled job keeps its scheduled JobEnd in the event queue; if
+        // its record was retired before that stale event fires, there is
+        // nothing to do (panicking here would kill a long-lived daemon).
+        // With no retirement in play an unknown id is a scheduler bug and
+        // must stay loud (the seed's fail-loud-in-simulation contract).
+        let Some(job) = self.jobs.get_mut(&id) else {
+            debug_assert!(self.retired_total > 0, "end of unknown job {id}");
+            return;
+        };
         if job.state != JobState::Running {
-            return; // was preempted before its natural end
+            return; // was preempted or cancelled before its natural end
         }
         // Stale-event guard: a suspended/requeued-and-restarted job carries
         // the JobEnd of its *previous* run; only the run that has actually
@@ -855,12 +1025,12 @@ impl Scheduler {
         job.transition(JobState::Completed, self.clock);
         let (user, qos) = (job.spec.user, job.spec.qos);
         self.log.push(self.clock, id, LogKind::Ended);
+        self.mark_terminal(id, self.clock);
         if let Some(alloc) = self.cluster.release(id) {
             match qos {
                 QosClass::Normal => self.users.credit(user, alloc.cores()),
                 QosClass::Spot => self.qos.credit(QosClass::Spot, user, alloc.cores()),
             }
-            self.order_cache.clear(); // fairshare changed
         }
         if self.cfg.event_driven {
             let at = self.clock.max(self.busy_until);
@@ -888,21 +1058,22 @@ impl Scheduler {
             JobState::Pending => {
                 job.transition(JobState::Cancelled, self.clock);
                 self.log.push(self.clock, id, LogKind::Ended);
+                self.mark_terminal(id, self.clock);
                 self.remove_from_pending(id);
                 self.earliest_start.remove(&id);
-                self.reservations.remove(&id);
+                self.clear_reservation(id);
                 true
             }
             JobState::Running => {
                 job.transition(JobState::Cancelled, self.clock);
                 let (user, qos) = (job.spec.user, job.spec.qos);
                 self.log.push(self.clock, id, LogKind::Ended);
+                self.mark_terminal(id, self.clock);
                 if let Some(alloc) = self.cluster.release(id) {
                     match qos {
                         QosClass::Normal => self.users.credit(user, alloc.cores()),
                         QosClass::Spot => self.qos.credit(QosClass::Spot, user, alloc.cores()),
                     }
-                    self.order_cache.clear(); // fairshare changed
                 }
                 if self.cfg.event_driven {
                     let at = self.clock.max(self.busy_until);
@@ -913,18 +1084,28 @@ impl Scheduler {
             JobState::Requeued => {
                 job.transition(JobState::Cancelled, self.clock);
                 self.log.push(self.clock, id, LogKind::Ended);
+                self.mark_terminal(id, self.clock);
                 true
             }
             JobState::Suspended => {
                 job.transition(JobState::Cancelled, self.clock);
                 let (user, qos) = (job.spec.user, job.spec.qos);
                 self.log.push(self.clock, id, LogKind::Ended);
+                self.mark_terminal(id, self.clock);
+                self.suspended.remove(&id);
                 if let Some(alloc) = self.cluster.release(id) {
                     match qos {
                         QosClass::Normal => self.users.credit(user, alloc.cores()),
                         QosClass::Spot => self.qos.credit(QosClass::Spot, user, alloc.cores()),
                     }
-                    self.order_cache.clear(); // fairshare changed
+                }
+                // Bugfix: like the Running branch, cancelling a suspended
+                // job frees its allocation — without a trigger the freed
+                // cores sat idle until the next periodic cycle under
+                // event_driven (regression test below).
+                if self.cfg.event_driven {
+                    let at = self.clock.max(self.busy_until);
+                    self.request_trigger(at);
                 }
                 true
             }
@@ -985,18 +1166,71 @@ impl Scheduler {
                 return Err(format!("spot user accounting mismatch for {user}"));
             }
         }
-        // Pending queues only contain pending jobs, each exactly once.
+        // Pending queues only contain pending jobs, each exactly once; the
+        // job→partition index and per-queue Normal counters stay in sync.
         let mut seen = BTreeSet::new();
-        for q in self.pending.values() {
-            for &id in q {
+        for (&pid, q) in &self.queues {
+            let mut normal = 0usize;
+            for id in q.ids() {
                 if !seen.insert(id) {
                     return Err(format!("{id} queued twice"));
                 }
-                let st = self.jobs[&id].state;
-                if st != JobState::Pending {
-                    return Err(format!("{id} in pending queue with state {st:?}"));
+                let Some(job) = self.jobs.get(&id) else {
+                    return Err(format!("{id} queued but not in the job table"));
+                };
+                if job.state != JobState::Pending {
+                    return Err(format!("{id} in pending queue with state {:?}", job.state));
+                }
+                if job.spec.qos == QosClass::Normal {
+                    normal += 1;
+                }
+                if self.job_partition.get(&id) != Some(&pid) {
+                    return Err(format!("{id} queued in {pid:?} but indexed elsewhere"));
                 }
             }
+            if normal != q.normal_pending() {
+                return Err(format!(
+                    "{pid:?}: normal-pending counter {} vs {normal} queued",
+                    q.normal_pending()
+                ));
+            }
+        }
+        if self.job_partition.len() != seen.len() {
+            return Err(format!(
+                "job→partition index has {} entries for {} queued jobs",
+                self.job_partition.len(),
+                seen.len()
+            ));
+        }
+        // Reservation aggregate matches the table; reservations only ever
+        // belong to pending jobs (the O(1) pass-loop counter relies on it).
+        let reserved_sum: u32 = self.reservations.values().copied().sum();
+        if reserved_sum != self.reserved_pending_cores {
+            return Err(format!(
+                "reservation counter {} vs table sum {reserved_sum}",
+                self.reserved_pending_cores
+            ));
+        }
+        for &id in self.reservations.keys() {
+            let st = self.jobs.get(&id).map(|j| j.state);
+            if st != Some(JobState::Pending) {
+                return Err(format!("reservation held by {id} in state {st:?}"));
+            }
+        }
+        // The suspended set mirrors job states exactly.
+        for &id in &self.suspended {
+            let st = self.jobs.get(&id).map(|j| j.state);
+            if st != Some(JobState::Suspended) {
+                return Err(format!("{id} in suspended set with state {st:?}"));
+            }
+        }
+        let actually_suspended =
+            self.jobs.values().filter(|j| j.state == JobState::Suspended).count();
+        if actually_suspended != self.suspended.len() {
+            return Err(format!(
+                "suspended set has {} entries for {actually_suspended} suspended jobs",
+                self.suspended.len()
+            ));
         }
         Ok(())
     }
@@ -1093,6 +1327,107 @@ mod tests {
         // A job within the limit passes.
         let ok = s.submit(JobSpec::interactive(UserId(1), JobType::Array, 100));
         assert!(s.run_until_dispatched(&[ok], SimTime::from_secs(240)));
+    }
+
+    #[test]
+    fn large_individual_burst_drains_with_invariants() {
+        // The scaling workload in miniature: the queue layer must keep a
+        // multi-thousand-job individual burst consistent end to end.
+        let mut s = baseline_sched();
+        let specs = (0..2000)
+            .map(|i| {
+                JobSpec::interactive(UserId(1 + (i % 4) as u32), JobType::Individual, 1)
+                    .with_run_time(SimTime::from_secs(1))
+            })
+            .collect();
+        let ids = s.submit_burst(specs);
+        assert!(s.run_until_dispatched(&ids, SimTime::from_secs(4 * 3600)));
+        assert_eq!(s.stats().dispatches, 2000);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cancelling_suspended_job_triggers_immediate_pass() {
+        // Regression: cancelling a Suspended job freed its allocation but
+        // never called request_trigger, so freed cores idled until the next
+        // periodic cycle. Periodic cycles are pushed out to make the
+        // event-driven trigger the only dispatch path.
+        let mut costs = SchedCosts::dedicated();
+        costs.main_cycle_period = SimTime::from_secs(1_000_000);
+        costs.backfill_cycle_period = SimTime::from_secs(1_000_000);
+        let cfg = SchedulerConfig::baseline(costs, crate::cluster::PartitionLayout::Dual)
+            .with_approach(crate::preempt::PreemptApproach::AutoScheduler {
+                mode: crate::preempt::PreemptMode::Suspend,
+            });
+        let mut s = Scheduler::new(topology::tx2500(), cfg);
+        let spot = s.submit(JobSpec::spot(UserId(9), JobType::TripleMode, 608));
+        assert!(s.run_until_dispatched(&[spot], SimTime::from_secs(60)));
+        // The preemptor suspends the spot job but cannot use its memory,
+        // and defers itself far into the future (cycle-based retry).
+        let preemptor = s.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 608));
+        s.run_for(SimTime::from_secs(60));
+        assert_eq!(s.job(spot).unwrap().state, JobState::Suspended);
+        // A second interactive job stays eligible but blocked (a suspended
+        // victim is no longer preemptable).
+        let second = s.submit(JobSpec::interactive(UserId(2), JobType::Array, 32));
+        s.run_for(SimTime::from_secs(30));
+        assert_eq!(s.job(second).unwrap().state, JobState::Pending);
+        // Cancelling the suspended job frees 608 cores; the event-driven
+        // trigger must dispatch the blocked job promptly.
+        assert!(s.cancel(spot));
+        assert!(
+            s.run_until_dispatched(&[second], SimTime::from_secs(30)),
+            "freed cores after a suspended-job cancel must trigger a pass"
+        );
+        assert_eq!(s.job(preemptor).unwrap().state, JobState::Pending);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retire_terminal_removes_old_jobs_and_moves_signature() {
+        let mut s = baseline_sched();
+        let id = s.submit(
+            JobSpec::interactive(UserId(1), JobType::Individual, 1)
+                .with_run_time(SimTime::from_secs(1)),
+        );
+        assert!(s.run_until_dispatched(&[id], SimTime::from_secs(60)));
+        s.run_for(SimTime::from_secs(120));
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        let sig = s.jobs_signature();
+        assert!(
+            s.retire_terminal(SimTime::from_secs(100_000)).is_empty(),
+            "grace not elapsed"
+        );
+        let retired = s.retire_terminal(SimTime::from_secs(10));
+        assert_eq!(retired.len(), 1);
+        assert_eq!(retired[0].id, id);
+        assert!(s.job(id).is_none(), "retired job leaves the table");
+        assert_ne!(s.jobs_signature(), sig, "retirement must move the signature");
+        assert_eq!(s.retired_total(), 1);
+        assert!(!s.cancel(id), "retired job cannot be cancelled");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_job_end_after_retirement_is_ignored() {
+        // Regression: a cancelled running job keeps its scheduled JobEnd in
+        // the event queue. If the record is retired before that stale event
+        // fires (run time > grace period), the handler must ignore it, not
+        // panic — a panic here takes down a long-lived daemon.
+        let mut s = baseline_sched();
+        let id = s.submit(
+            JobSpec::interactive(UserId(1), JobType::Individual, 1)
+                .with_run_time(SimTime::from_secs(10_000)),
+        );
+        assert!(s.run_until_dispatched(&[id], SimTime::from_secs(60)));
+        assert!(s.cancel(id)); // JobEnd at ~10_000s stays queued
+        s.run_for(SimTime::from_secs(120));
+        let retired = s.retire_terminal(SimTime::from_secs(10));
+        assert_eq!(retired.len(), 1);
+        // Run far past the stale JobEnd time: must not panic.
+        s.run_for(SimTime::from_secs(20_000));
+        s.check_invariants().unwrap();
+        assert_eq!(s.stats().dispatches, 1);
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Incrementally maintained per-partition pending queues.
+//!
+//! The old queue layer kept a flat `Vec<JobId>` per partition plus a cached
+//! priority order that was **cleared globally** whenever fairshare moved —
+//! i.e. on every dispatch, job end, preemption, and cancel. A burst of N
+//! individual submissions therefore re-scored and re-sorted the full O(N)
+//! queue once per pass, and every dispatch removed from the queue by linear
+//! scan: quadratic on exactly the workload the paper cares about.
+//!
+//! This module replaces it with a structure whose maintenance cost is
+//! O(log n) per queue mutation and O(log u) per job *visited* by a pass
+//! (u = users with pending jobs), built on two observations about the
+//! multifactor score:
+//!
+//! 1. **Age is a common-rate term.** Every pending job's age factor grows at
+//!    the same rate, so the pairwise order of two jobs is invariant over
+//!    time. Each job gets a *static key*: its score at age 0 minus the age
+//!    slope times its queue time — any two static keys compare exactly like
+//!    the live scores do. (The 100 h age-factor cap is deliberately not
+//!    applied to the ordering key: under the cap two >100 h-old jobs stop
+//!    aging relative to *fresher* jobs, which the old per-pass rescore
+//!    honored, but queues that old are outside every modeled workload and
+//!    the uncapped key keeps the order strictly time-invariant.)
+//! 2. **Fairshare is a per-(qos, user) offset.** The fairshare factor is
+//!    identical for all pending jobs of one user in one QoS class, so it
+//!    never reorders jobs *within* a user — only *between* users. Jobs are
+//!    therefore bucketed per (qos, user) and ordered inside the bucket by
+//!    static key alone; a scheduling pass merges the buckets through a heap,
+//!    applying each bucket's current fairshare offset to its head. A
+//!    fairshare change costs nothing at mutation time and O(1) at the next
+//!    pass — no per-job re-scoring, ever.
+//!
+//! Both observations hold for any scorer that is *affine* in the age and
+//! fairshare factors, which covers the native dot-product scorer and the
+//! XLA matvec kernel (the scheduler probes the two slopes once at
+//! construction; see [`crate::sched::Scheduler`]).
+
+use crate::job::{JobId, QosClass, UserId};
+use crate::util::fxhash::FxHashMap;
+use std::collections::{BTreeSet, BinaryHeap};
+use std::cmp::Reverse;
+use std::ops::Bound;
+
+/// Total-ordered encoding of an `f64` priority score, **inverted** so that
+/// ascending `OrderKey` order visits the highest score first (BTreeSet
+/// iteration order == scheduling order). Ties between equal scores are
+/// broken by ascending [`JobId`] wherever the key is paired with one,
+/// matching the old sort's tie-break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OrderKey(u64);
+
+impl OrderKey {
+    /// Encode a score. Uses the standard monotone f64→u64 bit trick (flip
+    /// all bits for negatives, set the sign bit for positives), then
+    /// complements so *larger scores become smaller keys*.
+    pub fn of_score(score: f64) -> Self {
+        let bits = score.to_bits();
+        let monotone = if bits & (1u64 << 63) != 0 {
+            !bits
+        } else {
+            bits | (1u64 << 63)
+        };
+        OrderKey(!monotone)
+    }
+
+    /// Decode back to the score (exact inverse of [`OrderKey::of_score`]).
+    pub fn score(self) -> f64 {
+        let monotone = !self.0;
+        let bits = if monotone & (1u64 << 63) != 0 {
+            monotone ^ (1u64 << 63)
+        } else {
+            !monotone
+        };
+        f64::from_bits(bits)
+    }
+}
+
+/// One user's pending jobs in one QoS class, ordered by static key.
+#[derive(Debug, Default)]
+struct UserBucket {
+    jobs: BTreeSet<(OrderKey, JobId)>,
+}
+
+/// A partition's pending queue: per-(qos, user) buckets plus an O(1) job
+/// index for removal.
+#[derive(Debug, Default)]
+pub struct PendingQueue {
+    buckets: FxHashMap<(QosClass, UserId), UserBucket>,
+    /// job → (qos, user, static key): makes removal O(log) with no scan.
+    index: FxHashMap<JobId, (QosClass, UserId, OrderKey)>,
+    /// Pending Normal-QoS jobs (the suspended-resume gate reads this).
+    normal_pending: usize,
+}
+
+impl PendingQueue {
+    /// Queue a job under its static priority key.
+    pub fn insert(&mut self, id: JobId, qos: QosClass, user: UserId, key: OrderKey) {
+        let prev = self.index.insert(id, (qos, user, key));
+        debug_assert!(prev.is_none(), "{id} queued twice");
+        self.buckets
+            .entry((qos, user))
+            .or_default()
+            .jobs
+            .insert((key, id));
+        if qos == QosClass::Normal {
+            self.normal_pending += 1;
+        }
+    }
+
+    /// Remove a job; returns true when it was queued here.
+    pub fn remove(&mut self, id: JobId) -> bool {
+        let Some((qos, user, key)) = self.index.remove(&id) else {
+            return false;
+        };
+        let bucket = self.buckets.get_mut(&(qos, user)).expect("indexed bucket");
+        let removed = bucket.jobs.remove(&(key, id));
+        debug_assert!(removed, "{id} indexed but not in its bucket");
+        if bucket.jobs.is_empty() {
+            self.buckets.remove(&(qos, user));
+        }
+        if qos == QosClass::Normal {
+            self.normal_pending -= 1;
+        }
+        true
+    }
+
+    /// Queued job count.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when no jobs are queued.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Number of pending Normal-QoS jobs.
+    pub fn normal_pending(&self) -> usize {
+        self.normal_pending
+    }
+
+    /// Whether a job is queued here.
+    pub fn contains(&self, id: JobId) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// All queued job ids (arbitrary order; invariant checks).
+    pub fn ids(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.index.keys().copied()
+    }
+
+    /// The non-empty buckets and their best (key, id) head entries.
+    fn bucket_heads(&self) -> impl Iterator<Item = ((QosClass, UserId), (OrderKey, JobId))> + '_ {
+        self.buckets.iter().map(|(&bu, b)| {
+            let head = *b.jobs.iter().next().expect("buckets are never empty");
+            (bu, head)
+        })
+    }
+
+    /// The entry strictly after `after` within one user's bucket.
+    fn successor(
+        &self,
+        qos: QosClass,
+        user: UserId,
+        after: (OrderKey, JobId),
+    ) -> Option<(OrderKey, JobId)> {
+        self.buckets
+            .get(&(qos, user))?
+            .jobs
+            .range((Bound::Excluded(after), Bound::Unbounded))
+            .next()
+            .copied()
+    }
+}
+
+/// A heap entry of the pass-order merge: effective key (static + frozen
+/// fairshare offset), then job id (global tie-break), then the bucket slot
+/// and static key needed to advance within the bucket.
+type PassEntry = Reverse<(OrderKey, JobId, u32, OrderKey)>;
+
+/// The priority order of one partition for the duration of one scheduling
+/// pass: a lazy k-way merge over the user buckets with each bucket's
+/// fairshare offset *frozen at pass start* (the old cached-order semantics:
+/// fairshare changes made by the pass itself only affect the next pass).
+///
+/// Pulling the next job is O(log u); a Main pass that stops at the first
+/// blocked job therefore does O(u + visited · log u) work instead of
+/// re-scoring and cloning the whole queue.
+pub struct PassOrder {
+    heap: BinaryHeap<PassEntry>,
+    /// Per-slot bucket identity (for successor queries).
+    slots: Vec<(QosClass, UserId, f64)>,
+}
+
+impl PassOrder {
+    /// Build the frozen order. `offset_of` maps (qos, user) to the bucket's
+    /// fairshare score offset at pass start.
+    pub fn build(queue: &PendingQueue, mut offset_of: impl FnMut(QosClass, UserId) -> f64) -> Self {
+        let mut heap = BinaryHeap::with_capacity(queue.buckets.len());
+        let mut slots = Vec::with_capacity(queue.buckets.len());
+        for ((qos, user), (key, id)) in queue.bucket_heads() {
+            let off = offset_of(qos, user);
+            let slot = slots.len() as u32;
+            slots.push((qos, user, off));
+            heap.push(Reverse((
+                OrderKey::of_score(key.score() + off),
+                id,
+                slot,
+                key,
+            )));
+        }
+        PassOrder { heap, slots }
+    }
+
+    /// Pop the next job in priority order. The successor inside the popped
+    /// job's bucket is queued immediately, so the caller is free to remove
+    /// the returned job from `queue` (dispatch) before the next call — the
+    /// pass order stays frozen either way.
+    pub fn next(&mut self, queue: &PendingQueue) -> Option<JobId> {
+        let Reverse((_eff, id, slot, key)) = self.heap.pop()?;
+        let (qos, user, off) = self.slots[slot as usize];
+        if let Some((nk, nid)) = queue.successor(qos, user, (key, id)) {
+            self.heap.push(Reverse((
+                OrderKey::of_score(nk.score() + off),
+                nid,
+                slot,
+                nk,
+            )));
+        }
+        Some(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jid(n: u64) -> JobId {
+        JobId(n)
+    }
+
+    #[test]
+    fn order_key_roundtrips_and_orders() {
+        for s in [-1.5e9, -1.0, -0.0, 0.0, 1.0, 42.25, 1.5e9] {
+            let k = OrderKey::of_score(s);
+            assert_eq!(k.score(), s, "roundtrip of {s}");
+        }
+        // Higher score → smaller key (sorts first).
+        assert!(OrderKey::of_score(10.0) < OrderKey::of_score(1.0));
+        assert!(OrderKey::of_score(1.0) < OrderKey::of_score(-1.0));
+        assert!(OrderKey::of_score(-1.0) < OrderKey::of_score(-10.0));
+    }
+
+    #[test]
+    fn insert_remove_and_counts() {
+        let mut q = PendingQueue::default();
+        q.insert(jid(1), QosClass::Normal, UserId(1), OrderKey::of_score(5.0));
+        q.insert(jid(2), QosClass::Spot, UserId(9), OrderKey::of_score(7.0));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.normal_pending(), 1);
+        assert!(q.contains(jid(1)));
+        assert!(q.remove(jid(1)));
+        assert!(!q.remove(jid(1)), "double remove is a no-op");
+        assert_eq!(q.normal_pending(), 0);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn pass_order_merges_buckets_by_effective_score() {
+        let mut q = PendingQueue::default();
+        // User 1: two jobs at 10 and 8. User 2: one job at 9.
+        q.insert(jid(1), QosClass::Normal, UserId(1), OrderKey::of_score(10.0));
+        q.insert(jid(2), QosClass::Normal, UserId(1), OrderKey::of_score(8.0));
+        q.insert(jid(3), QosClass::Normal, UserId(2), OrderKey::of_score(9.0));
+        let mut order = PassOrder::build(&q, |_, _| 0.0);
+        let got: Vec<JobId> = std::iter::from_fn(|| order.next(&q)).collect();
+        assert_eq!(got, vec![jid(1), jid(3), jid(2)]);
+
+        // A fairshare offset against user 1 reorders across users but
+        // never within a user.
+        let mut order = PassOrder::build(&q, |_, u| if u == UserId(1) { -3.0 } else { 0.0 });
+        let got: Vec<JobId> = std::iter::from_fn(|| order.next(&q)).collect();
+        assert_eq!(got, vec![jid(3), jid(1), jid(2)]);
+    }
+
+    #[test]
+    fn pass_order_ties_break_by_job_id() {
+        let mut q = PendingQueue::default();
+        q.insert(jid(7), QosClass::Normal, UserId(1), OrderKey::of_score(1.0));
+        q.insert(jid(3), QosClass::Normal, UserId(2), OrderKey::of_score(1.0));
+        q.insert(jid(5), QosClass::Normal, UserId(3), OrderKey::of_score(1.0));
+        let mut order = PassOrder::build(&q, |_, _| 0.0);
+        let got: Vec<JobId> = std::iter::from_fn(|| order.next(&q)).collect();
+        assert_eq!(got, vec![jid(3), jid(5), jid(7)]);
+    }
+
+    #[test]
+    fn pass_order_survives_mid_iteration_removal() {
+        let mut q = PendingQueue::default();
+        for i in 1..=4 {
+            q.insert(jid(i), QosClass::Normal, UserId(1), OrderKey::of_score(10.0 - i as f64));
+        }
+        let mut order = PassOrder::build(&q, |_, _| 0.0);
+        let first = order.next(&q).unwrap();
+        assert_eq!(first, jid(1));
+        // Dispatch removes the visited job; iteration continues unharmed.
+        q.remove(first);
+        let rest: Vec<JobId> = std::iter::from_fn(|| order.next(&q)).collect();
+        assert_eq!(rest, vec![jid(2), jid(3), jid(4)]);
+    }
+}

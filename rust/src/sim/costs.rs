@@ -55,6 +55,11 @@ pub struct SchedCosts {
     /// Fixed cost of one backfill pass (shadow map construction), even with
     /// an empty queue.
     pub backfill_pass_base: SimTime,
+    /// Maximum pending candidates one backfill pass examines (Slurm's
+    /// `bf_max_job_test`). Real controllers never walk a 100k-deep queue in
+    /// one backfill cycle; without this cap a large burst makes every
+    /// backfill pass O(queue) in both virtual and wall time.
+    pub bf_max_job_test: usize,
     /// Number of unrelated pending jobs ahead of ours in the production
     /// queue (background load). Zero on a dedicated system.
     pub background_queue_depth: u32,
@@ -120,6 +125,7 @@ impl SchedCosts {
             main_per_job: SimTime::from_micros(500),
             backfill_per_job: SimTime::from_millis(5),
             backfill_pass_base: SimTime::from_millis(300),
+            bf_max_job_test: 1000,
             background_queue_depth: 0,
             per_job_overhead: SimTime::from_millis(2),
             dispatch_per_task: SimTime::from_millis(10),
@@ -149,6 +155,7 @@ impl SchedCosts {
             main_per_job: SimTime::from_millis(1),
             backfill_per_job: SimTime::from_millis(20),
             backfill_pass_base: SimTime::from_secs(1),
+            bf_max_job_test: 1000,
             background_queue_depth: 200,
             per_job_overhead: SimTime::from_millis(2),
             dispatch_per_task: SimTime::from_millis(10),

@@ -25,6 +25,7 @@ fn daemon() -> Arc<Daemon> {
         DaemonConfig {
             speedup: 10_000.0,
             pacer_tick_ms: 1,
+            ..DaemonConfig::default()
         },
     )
 }

@@ -22,6 +22,8 @@ fn spawn_cron_daemon() -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
         DaemonConfig {
             speedup: 5_000.0,
             pacer_tick_ms: 1,
+            // Keep retirement out of the TCP tests (wall-timing coupling).
+            retire_grace_secs: Some(86_400.0),
         },
     );
     let pacer_daemon = Arc::clone(&daemon);
