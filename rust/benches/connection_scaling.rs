@@ -1,0 +1,70 @@
+//! CI bench gate: connection scaling under the epoll reactor (see
+//! `benchkit::connection_scaling`).
+//!
+//! Emits `BENCH_connections.json` (override with `SPOTCLOUD_BENCH_JSON`):
+//! active-request p99 at each idle-connection population (default 100 / 1k
+//! / 5k), the reactor wakeup count over a quiet window, and the
+//! accept-to-first-byte p99. The JSON is written **before** the health
+//! gates run so a regressed run still surfaces its numbers.
+//!
+//! Gates: p99 at the largest idle population ≤ 2× the smallest, zero
+//! request errors, a flat idle wakeup counter, and exactly one reactor
+//! thread. `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke
+//! configuration. Non-Linux targets print a skip note (the reactor — and
+//! so the zero-poll property under test — is Linux-only).
+
+#[cfg(target_os = "linux")]
+fn main() {
+    use spotcloud::benchkit::connection_scaling::{run_connection_scaling, ConnScalingConfig};
+
+    let fast = std::env::var("SPOTCLOUD_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = if fast {
+        ConnScalingConfig::quick()
+    } else {
+        ConnScalingConfig::default()
+    };
+    eprintln!(
+        "connection_scaling: idle levels {:?}, {} active clients x {} requests",
+        cfg.idle_levels, cfg.active_clients, cfg.requests_per_client
+    );
+    let report = run_connection_scaling(&cfg);
+    eprintln!("{}", report.summary());
+
+    let path = std::env::var("SPOTCLOUD_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_connections.json".into());
+    std::fs::write(&path, report.to_json()).expect("writing bench json");
+    println!("wrote {path}");
+
+    // Gates run after the write so the artifact survives a regression.
+    assert!(report.levels.len() >= 2, "need at least two idle levels");
+    assert_eq!(report.reactor_threads, 1, "connections must ride one reactor thread");
+    for l in &report.levels {
+        assert_eq!(l.errors, 0, "requests failed at {} idle conns", l.idle_achieved);
+        assert!(l.requests > 0, "no requests completed at {} idle conns", l.idle_achieved);
+        if l.idle_achieved < l.idle_target {
+            // fd-limit short-fall: report it loudly, gate on what ran.
+            eprintln!(
+                "warning: only {}/{} idle connections established (fd limit?)",
+                l.idle_achieved, l.idle_target
+            );
+        }
+        assert!(
+            l.reactor_wakeups_while_idle <= 10,
+            "{} idle connections woke the reactor {} times — zero-poll broken",
+            l.idle_achieved,
+            l.reactor_wakeups_while_idle
+        );
+    }
+    let ratio = report.p99_ratio();
+    assert!(
+        ratio <= 2.0,
+        "request p99 degraded {ratio:.2}x from {} to {} idle connections",
+        report.levels.first().map(|l| l.idle_achieved).unwrap_or(0),
+        report.levels.last().map(|l| l.idle_achieved).unwrap_or(0),
+    );
+}
+
+#[cfg(not(target_os = "linux"))]
+fn main() {
+    println!("connection_scaling: skipped (the epoll reactor is Linux-only)");
+}

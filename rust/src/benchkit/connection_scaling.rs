@@ -1,0 +1,350 @@
+//! Connection-scaling scenario: N established **idle** connections must not
+//! tax M **active** clients — the CI bench gate for the epoll reactor.
+//!
+//! The paper's front door serves thousands of interactive users, most of
+//! whom are idle between launches. Under the old threadpool server every
+//! idle connection pinned a worker thread and paid a 200 ms poll tick; the
+//! reactor keeps them as one epoll registration plus one timer-wheel entry.
+//! This scenario proves it at three idle populations (default 100 / 1k /
+//! 5k):
+//!
+//! 1. open N connections, complete one `PING` on each, and leave them idle;
+//! 2. watch [`DaemonMetrics::reactor_wakeups`](crate::coordinator::metrics::DaemonMetrics)
+//!    over a quiet window — **zero-poll**: the counter must stay flat, as
+//!    idle sockets produce no readiness events and their idle deadlines are
+//!    far out on the wheel;
+//! 3. run M active mixed clients (submit / squeue / stats / util / ping)
+//!    and record per-request wall latency plus the server's
+//!    accept-to-first-byte histogram.
+//!
+//! The `connection_scaling` bench binary emits `BENCH_connections.json`
+//! and gates: request p99 at the largest idle population within 2× of the
+//! smallest, zero request errors, a flat idle wakeup counter, and exactly
+//! one reactor thread. Linux-only, like the reactor itself.
+
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::api::SqueueFilter;
+use crate::coordinator::{Client, Daemon, DaemonConfig, Server, SubmitSpec};
+use crate::job::{JobType, QosClass};
+use crate::metrics::LogHistogram;
+use crate::sched::SchedulerConfig;
+use crate::sim::SchedCosts;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shape of one connection-scaling run.
+#[derive(Debug, Clone)]
+pub struct ConnScalingConfig {
+    /// Idle-connection populations, measured independently (fresh daemon
+    /// and server per level).
+    pub idle_levels: Vec<usize>,
+    /// Concurrent active clients per level.
+    pub active_clients: usize,
+    /// Requests each active client issues.
+    pub requests_per_client: usize,
+    /// Quiet window over which the reactor wakeup counter must stay flat.
+    pub idle_window: Duration,
+    /// Request-handling worker pool size.
+    pub workers: usize,
+    /// Virtual seconds per wall second for the daemon under test.
+    pub speedup: f64,
+}
+
+impl Default for ConnScalingConfig {
+    fn default() -> Self {
+        Self {
+            idle_levels: vec![100, 1000, 5000],
+            active_clients: 4,
+            requests_per_client: 300,
+            idle_window: Duration::from_millis(500),
+            workers: 4,
+            speedup: 2_000.0,
+        }
+    }
+}
+
+impl ConnScalingConfig {
+    /// Sub-second smoke configuration (unit tests, `SPOTCLOUD_BENCH_FAST`).
+    pub fn quick() -> Self {
+        Self {
+            idle_levels: vec![20, 60],
+            active_clients: 2,
+            requests_per_client: 40,
+            idle_window: Duration::from_millis(150),
+            workers: 2,
+            speedup: 5_000.0,
+        }
+    }
+}
+
+/// What one idle-population level measured.
+#[derive(Debug, Clone)]
+pub struct LevelReport {
+    /// Idle connections requested for this level.
+    pub idle_target: usize,
+    /// Idle connections actually established (short of target only when
+    /// the host's fd limit intervened — reported, and the gate notes it).
+    pub idle_achieved: usize,
+    /// Reactor wakeups during the quiet window (zero-poll: ~0).
+    pub reactor_wakeups_while_idle: u64,
+    /// Per-request wall latency of the active clients (ns).
+    pub request_wall: LogHistogram,
+    /// Active-phase wall time (seconds).
+    pub active_secs: f64,
+    /// Requests completed by the active clients.
+    pub requests: u64,
+    /// p99 of the server's accept-to-first-byte histogram at this level.
+    pub accept_p99_ns: u64,
+    /// Reactor threads that served this level's daemon (measured; the
+    /// single-thread invariant means exactly 1).
+    pub reactor_threads: u64,
+    /// Requests that failed (transport or unexpected response) — 0 in a
+    /// healthy run.
+    pub errors: u64,
+}
+
+/// The whole run: one [`LevelReport`] per idle population.
+#[derive(Debug, Clone)]
+pub struct ConnScalingReport {
+    /// Per-level results, in `idle_levels` order.
+    pub levels: Vec<LevelReport>,
+    /// Most reactor threads any level's daemon ever started — **measured**
+    /// via `DaemonMetrics::reactor_threads_started`, so the CI assertion
+    /// that one thread multiplexes all connections can actually fail.
+    pub reactor_threads: u64,
+    /// Request-handling pool size used.
+    pub workers: usize,
+}
+
+impl ConnScalingReport {
+    /// Active-request p99 at the largest idle population over the smallest
+    /// — the scaling gate (≤ 2.0 in CI).
+    pub fn p99_ratio(&self) -> f64 {
+        let (Some(first), Some(last)) = (self.levels.first(), self.levels.last()) else {
+            return f64::NAN;
+        };
+        last.request_wall.p99().max(1) as f64 / first.request_wall.p99().max(1) as f64
+    }
+
+    /// The machine-readable record CI uploads (`BENCH_connections.json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"bench\": \"connection_scaling\",\n");
+        out.push_str(&format!("  \"reactor_threads\": {},\n", self.reactor_threads));
+        out.push_str(&format!("  \"workers\": {},\n", self.workers));
+        out.push_str(&format!("  \"p99_ratio\": {:.3},\n", self.p99_ratio()));
+        out.push_str("  \"levels\": [\n");
+        for (i, l) in self.levels.iter().enumerate() {
+            out.push_str(&format!(
+                concat!(
+                    "    {{\"idle_conns\": {}, \"idle_achieved\": {}, ",
+                    "\"reactor_wakeups_while_idle\": {}, ",
+                    "\"request_p50_ns\": {}, \"request_p99_ns\": {}, ",
+                    "\"reqs_per_sec\": {:.1}, \"accept_p99_ns\": {}, \"errors\": {}}}{}\n",
+                ),
+                l.idle_target,
+                l.idle_achieved,
+                l.reactor_wakeups_while_idle,
+                l.request_wall.p50(),
+                l.request_wall.p99(),
+                l.requests as f64 / l.active_secs.max(1e-9),
+                l.accept_p99_ns,
+                l.errors,
+                if i + 1 == self.levels.len() { "" } else { "," },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let per_level: Vec<String> = self
+            .levels
+            .iter()
+            .map(|l| {
+                format!(
+                    "{}idle: p99={}ns wakeups={} errs={}",
+                    l.idle_achieved, l.request_wall.p99(), l.reactor_wakeups_while_idle, l.errors
+                )
+            })
+            .collect();
+        format!(
+            "connection_scaling: ratio={:.2} [{}] reactor_threads={}",
+            self.p99_ratio(),
+            per_level.join(" | "),
+            self.reactor_threads
+        )
+    }
+}
+
+/// Run the scenario: one fresh daemon + reactor server per idle level.
+pub fn run_connection_scaling(cfg: &ConnScalingConfig) -> ConnScalingReport {
+    let levels: Vec<LevelReport> = cfg.idle_levels.iter().map(|&n| run_level(n, cfg)).collect();
+    let reactor_threads = levels.iter().map(|l| l.reactor_threads).max().unwrap_or(0);
+    ConnScalingReport {
+        levels,
+        reactor_threads,
+        workers: cfg.workers,
+    }
+}
+
+fn run_level(idle_target: usize, cfg: &ConnScalingConfig) -> LevelReport {
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        DaemonConfig {
+            speedup: cfg.speedup,
+            pacer_tick_ms: 1,
+            ..DaemonConfig::default()
+        },
+    );
+    let pacer = daemon.spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", cfg.workers)
+        .expect("bind")
+        // Idle conns must outlive the whole level.
+        .with_idle_timeout(Duration::from_secs(600));
+    let addr = server.local_addr().expect("addr").to_string();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    // Establish the idle population: one PING each proves the connection
+    // is registered and served, then it goes silent.
+    let mut idle: Vec<Client> = Vec::with_capacity(idle_target);
+    for _ in 0..idle_target {
+        match Client::connect(&addr) {
+            Ok(mut c) => match c.ping() {
+                Ok(()) => idle.push(c),
+                Err(e) => {
+                    eprintln!("idle ping failed at {}: {e}", idle.len());
+                    break;
+                }
+            },
+            Err(e) => {
+                // Most likely the fd limit; measure what we got.
+                eprintln!("idle connect failed at {} (fd limit?): {e}", idle.len());
+                break;
+            }
+        }
+    }
+    let idle_achieved = idle.len();
+
+    // Quiet window: the wakeup counter must not move for idle sockets.
+    std::thread::sleep(Duration::from_millis(100)); // let completions drain
+    let w0 = daemon.metrics.reactor_wakeups.load(Ordering::Relaxed);
+    std::thread::sleep(cfg.idle_window);
+    let reactor_wakeups_while_idle =
+        daemon.metrics.reactor_wakeups.load(Ordering::Relaxed) - w0;
+
+    // Active phase: M clients hammer a launcher-shaped request mix.
+    let wall = Arc::new(Mutex::new(LogHistogram::new()));
+    let errors = Arc::new(AtomicU64::new(0));
+    let requests = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..cfg.active_clients)
+        .map(|t| {
+            let addr = addr.clone();
+            let wall = Arc::clone(&wall);
+            let errors = Arc::clone(&errors);
+            let requests = Arc::clone(&requests);
+            let reqs = cfg.requests_per_client;
+            std::thread::spawn(move || {
+                let mut c = match Client::connect_v2(&addr) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("active client {t} failed to connect: {e}");
+                        errors.fetch_add(reqs as u64, Ordering::Relaxed);
+                        return;
+                    }
+                };
+                let mut local = LogHistogram::new();
+                let user = 100 + t as u32;
+                for i in 0..reqs {
+                    let t1 = Instant::now();
+                    let ok = match i % 8 {
+                        0 => c
+                            .submit(
+                                &SubmitSpec::new(QosClass::Spot, JobType::Individual, 1, user)
+                                    .with_run_secs(30.0),
+                            )
+                            .is_ok(),
+                        1 => c
+                            .squeue(&SqueueFilter {
+                                limit: Some(32),
+                                ..Default::default()
+                            })
+                            .is_ok(),
+                        2 => c.stats().is_ok(),
+                        3 => c.util().is_ok(),
+                        _ => c.ping().is_ok(),
+                    };
+                    local.record(t1.elapsed().as_nanos() as u64);
+                    if ok {
+                        requests.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                wall.lock().expect("bench hist").merge(&local);
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("active client panicked");
+    }
+    let active_secs = t0.elapsed().as_secs_f64();
+    let accept_p99_ns = daemon.metrics.accept_to_first_byte().p99();
+
+    daemon.shutdown();
+    server_thread.join().expect("server thread");
+    pacer.join().expect("pacer");
+    drop(idle);
+
+    let request_wall = wall.lock().expect("bench hist").clone();
+    LevelReport {
+        idle_target,
+        idle_achieved,
+        reactor_wakeups_while_idle,
+        request_wall,
+        active_secs,
+        requests: requests.load(Ordering::Relaxed),
+        accept_p99_ns,
+        reactor_threads: daemon.metrics.reactor_threads_started.load(Ordering::Relaxed),
+        errors: errors.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_connection_scaling_runs_and_reports() {
+        let r = run_connection_scaling(&ConnScalingConfig::quick());
+        assert_eq!(r.levels.len(), 2);
+        assert_eq!(r.reactor_threads, 1);
+        for l in &r.levels {
+            assert_eq!(l.idle_achieved, l.idle_target, "{l:?}");
+            assert_eq!(l.errors, 0, "{l:?}");
+            assert!(l.requests > 0, "{l:?}");
+            assert!(l.request_wall.count() > 0, "{l:?}");
+            // Zero-poll: idle sockets produce no reactor wakeups (tiny
+            // slack for a straggling completion event).
+            assert!(
+                l.reactor_wakeups_while_idle <= 2,
+                "idle connections woke the reactor: {l:?}"
+            );
+        }
+        assert!(r.p99_ratio().is_finite());
+        let json = r.to_json();
+        for key in [
+            "\"reactor_threads\"",
+            "\"p99_ratio\"",
+            "\"request_p99_ns\"",
+            "\"reactor_wakeups_while_idle\"",
+            "\"accept_p99_ns\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(r.summary().contains("connection_scaling"));
+    }
+}

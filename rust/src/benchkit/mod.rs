@@ -6,6 +6,9 @@
 //! group/report API so each paper figure gets one bench binary printing the
 //! same rows the paper plots.
 
+/// Linux-only, like the epoll reactor it measures.
+#[cfg(target_os = "linux")]
+pub mod connection_scaling;
 pub mod coordinator;
 pub mod sched_scaling;
 

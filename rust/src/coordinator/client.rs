@@ -147,6 +147,45 @@ impl Client {
         }
     }
 
+    /// Pipeline several requests over this connection: write every request
+    /// line back-to-back, then read the responses, which the server
+    /// guarantees arrive **in request order**. One round-trip's latency is
+    /// paid once for the whole batch instead of once per request — the
+    /// launcher-loop pattern ("submit, submit, …, stats") without N × RTT.
+    ///
+    /// Unlike the single-request helpers, `ERR` responses come back as
+    /// [`Response::Error`] variants in the result vector (a failed request
+    /// must not hide the responses behind it); transport failures are still
+    /// `Err`. `HELLO` cannot be pipelined — it changes the wire version
+    /// mid-stream, making the remaining responses unparseable.
+    pub fn pipeline(&mut self, reqs: &[Request]) -> ClientResult<Vec<Response>> {
+        if reqs.iter().any(|r| matches!(r, Request::Hello(_))) {
+            return Err(ClientError::Protocol(
+                "HELLO cannot be pipelined (it renegotiates the wire version)".into(),
+            ));
+        }
+        let mut batch = String::new();
+        for req in reqs {
+            batch.push_str(&codec::render_request(req, self.version));
+            batch.push('\n');
+        }
+        self.writer.write_all(batch.as_bytes())?;
+        self.writer.flush()?;
+        let mut out = Vec::with_capacity(reqs.len());
+        for _ in reqs {
+            let raw = self.read_response()?;
+            match codec::parse_response(&raw, self.version) {
+                Ok(resp) => out.push(resp),
+                Err(e) => {
+                    return Err(ClientError::Protocol(format!(
+                        "unparseable response {raw:?}: {e}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// Negotiate the protocol version for this connection.
     pub fn hello(&mut self, version: ProtocolVersion) -> ClientResult<ProtocolVersion> {
         match self.roundtrip(&Request::Hello(version))? {

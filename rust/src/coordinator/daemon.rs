@@ -19,8 +19,11 @@
 //! `WAIT` is subscription-based: a request that cannot complete immediately
 //! becomes a [`WaitTicket`] parked on the [`WaitHub`] completion generation.
 //! In-process callers block on the hub; the TCP server instead detaches the
-//! whole connection into its waiter registry (see [`super::server`]), so
-//! hundreds of concurrent `WAIT`s ride on a handful of worker threads.
+//! whole connection (see [`super::server`]) — on Linux it stays registered
+//! with the epoll reactor, which the hub wakes through an eventfd
+//! ([`Daemon::subscribe_completions`]); elsewhere it moves into a waiter
+//! registry swept by a notifier thread. Either way, hundreds of concurrent
+//! `WAIT`s ride on a handful of worker threads.
 //!
 //! The daemon works entirely in the typed protocol: [`Daemon::handle`] is
 //! `fn(&self, Request) -> Response`; wire rendering lives in
@@ -68,6 +71,12 @@ pub struct DaemonConfig {
     /// listing retired jobs, `SJOB` still answers from history. `None`
     /// never retires.
     pub retire_grace_secs: Option<f64>,
+    /// Cap on the retired-job history side-table. Retirement bounds the
+    /// *published* table; this bounds the daemon's total memory: past the
+    /// cap the oldest retired records are pruned (their event-log entries
+    /// went with retirement), and `SJOB`/`WAIT` on a pruned id return the
+    /// usual typed `not_found`. `None` keeps history forever.
+    pub history_cap: Option<usize>,
 }
 
 impl Default for DaemonConfig {
@@ -76,6 +85,7 @@ impl Default for DaemonConfig {
             speedup: 60.0,
             pacer_tick_ms: 5,
             retire_grace_secs: Some(3600.0),
+            history_cap: Some(100_000),
         }
     }
 }
@@ -136,8 +146,46 @@ pub struct Daemon {
     /// Retired terminal jobs: frozen views written once at retirement (the
     /// write path, amortized O(1) per job over its lifetime) and read by
     /// `SJOB`/`WAIT` after the job left the published table. Never takes
-    /// the scheduler mutex on the read side.
-    history: RwLock<FxHashMap<u64, Arc<JobView>>>,
+    /// the scheduler mutex on the read side. Bounded by
+    /// [`DaemonConfig::history_cap`]: the oldest retirements are pruned
+    /// first (ids retire in end-time order, so eviction follows insertion).
+    history: RwLock<HistoryTable>,
+}
+
+/// The bounded retired-job side-table: id → frozen view, plus the
+/// insertion-order queue the cap evicts from.
+#[derive(Default)]
+struct HistoryTable {
+    views: FxHashMap<u64, Arc<JobView>>,
+    order: std::collections::VecDeque<u64>,
+}
+
+impl HistoryTable {
+    fn get(&self, id: &u64) -> Option<&Arc<JobView>> {
+        self.views.get(id)
+    }
+
+    fn contains_key(&self, id: &u64) -> bool {
+        self.views.contains_key(id)
+    }
+
+    /// Insert a retired view, evicting the oldest records past `cap`.
+    fn insert_capped(&mut self, id: u64, view: Arc<JobView>, cap: Option<usize>) {
+        if self.views.insert(id, view).is_none() {
+            self.order.push_back(id);
+        }
+        if let Some(cap) = cap {
+            while self.views.len() > cap.max(1) {
+                let Some(oldest) = self.order.pop_front() else { break };
+                self.views.remove(&oldest);
+            }
+        }
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.views.len()
+    }
 }
 
 impl Daemon {
@@ -154,7 +202,7 @@ impl Daemon {
             start: Instant::now(),
             cfg,
             tracked: Mutex::new(BTreeSet::new()),
-            history: RwLock::new(FxHashMap::default()),
+            history: RwLock::new(HistoryTable::default()),
         })
     }
 
@@ -234,10 +282,23 @@ impl Daemon {
             if let Some(grace) = self.cfg.retire_grace_secs {
                 let retired = sched.retire_terminal(SimTime::from_secs_f64(grace));
                 if !retired.is_empty() {
-                    let mut history = self.history.write().expect("history poisoned");
-                    for j in &retired {
-                        history.insert(j.id.0, Arc::new(JobView::of(j, sched.log())));
+                    {
+                        // Freeze the views *before* pruning the log — the
+                        // view construction reads the retired jobs' last
+                        // event-log records.
+                        let mut history = self.history.write().expect("history poisoned");
+                        for j in &retired {
+                            history.insert_capped(
+                                j.id.0,
+                                Arc::new(JobView::of(j, sched.log())),
+                                self.cfg.history_cap,
+                            );
+                        }
                     }
+                    // Retired jobs' event-log entries are dead weight from
+                    // here on (everything queryable lives in the frozen
+                    // views): drop their indexes and let the log compact.
+                    sched.prune_retired_log(retired.iter().map(|j| j.id));
                 }
             }
         });
@@ -541,7 +602,13 @@ impl Daemon {
                 }
             }
         }
-        let wv = self.wait_view(&snap, jobs);
+        let (wv, pruned) = self.wait_view(&snap, jobs);
+        if let Some(id) = pruned {
+            // Evicted between the existence check above and this read.
+            return WaitStart::Done(Response::Error(ApiError::not_found(format!(
+                "unknown job {id}"
+            ))));
+        }
         if wv.settled {
             return WaitStart::Done(wait_response(jobs.len(), wv, false));
         }
@@ -557,21 +624,35 @@ impl Daemon {
     /// Evaluate a `WAIT` over the published snapshot **with the history
     /// side-table folded in**, so a job retired mid-wait (or before the
     /// request) still reports its dispatch and true latency instead of
-    /// silently dropping to `dispatched=0`.
-    fn wait_view(&self, snap: &SchedSnapshot, ids: &[u64]) -> WaitView {
+    /// silently dropping to `dispatched=0`. The second value is `Some(id)`
+    /// for an id found in neither place — admission checked existence, so
+    /// mid-wait that means the record was evicted by the history cap.
+    fn wait_view(&self, snap: &SchedSnapshot, ids: &[u64]) -> (WaitView, Option<u64>) {
         let history = self.history.read().expect("history poisoned");
-        wait_view_of(
-            ids.iter()
-                .map(|&id| snap.job(id).or_else(|| history.get(&id).map(Arc::as_ref))),
-        )
+        let mut pruned = None;
+        let wv = wait_view_of(ids.iter().map(|&id| {
+            let view = snap.job(id).or_else(|| history.get(&id).map(Arc::as_ref));
+            if view.is_none() && pruned.is_none() {
+                pruned = Some(id);
+            }
+            view
+        }));
+        (wv, pruned)
     }
 
     /// Poll a parked `WAIT` against the current snapshot: `Some` exactly
     /// once — when it settled, timed out, or the daemon is shutting down.
     pub fn poll_wait(&self, ticket: &WaitTicket) -> Option<Response> {
         let snap = self.snapshot();
-        let wv = self.wait_view(&snap, &ticket.jobs);
-        let resp = if wv.settled {
+        let (wv, pruned) = self.wait_view(&snap, &ticket.jobs);
+        let resp = if let Some(id) = pruned {
+            // The record was evicted by `history_cap` while we waited: its
+            // dispatch facts are gone, so answer the documented typed
+            // not_found rather than a fabricated `dispatched=0`.
+            Response::Error(ApiError::not_found(format!(
+                "job {id} was pruned from history while waiting"
+            )))
+        } else if wv.settled {
             wait_response(ticket.jobs.len(), wv, false)
         } else if Instant::now() >= ticket.deadline {
             wait_response(ticket.jobs.len(), wv, true)
@@ -618,6 +699,20 @@ impl Daemon {
     /// re-computes the nearest deadline).
     pub fn kick_waiters(&self) {
         self.hub.notify();
+    }
+
+    /// Register a completion waker: invoked on every completion notify
+    /// (dispatch/terminal progress, shutdown, kicks). The Linux reactor
+    /// subscribes an eventfd write here so parked-`WAIT` progress wakes
+    /// `epoll_wait` directly — no dedicated waiter thread. The callback
+    /// must be cheap and must not call back into the daemon.
+    pub fn subscribe_completions(&self, f: Box<dyn Fn() + Send + Sync>) -> u64 {
+        self.hub.subscribe(f)
+    }
+
+    /// Remove a waker registered with [`Daemon::subscribe_completions`].
+    pub fn unsubscribe_completions(&self, id: u64) {
+        self.hub.unsubscribe(id)
     }
 
     /// Fail a parked wait without waiting (waiter-registry overflow or a
@@ -1148,5 +1243,73 @@ mod tests {
             Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::NotFound),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn history_cap_prunes_oldest_retired_jobs_and_their_log() {
+        // Three short jobs with staggered run times end (and so retire) in
+        // submission order; a cap of 2 must evict the first-retired record.
+        let d = daemon_with(DaemonConfig {
+            speedup: 10_000.0,
+            pacer_tick_ms: 1,
+            retire_grace_secs: Some(2.0),
+            history_cap: Some(2),
+        });
+        let mut ids = Vec::new();
+        for run in [1.0, 2.0, 3.0] {
+            let ack = match d.handle(Request::Submit(
+                SubmitSpec::new(QosClass::Normal, JobType::TripleMode, 608, 1).with_run_secs(run),
+            )) {
+                Response::SubmitAck(a) => a,
+                other => panic!("{other:?}"),
+            };
+            let wait = match d.handle(Request::Wait {
+                jobs: vec![ack.first],
+                timeout_secs: 10.0,
+            }) {
+                Response::Wait(w) => w,
+                other => panic!("{other:?}"),
+            };
+            assert!(!wait.timed_out);
+            ids.push(ack.first);
+        }
+        // Pace until all three left the published table.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            d.pace();
+            let snap = d.read_snapshot();
+            if ids.iter().all(|&id| snap.job(id).is_none()) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "jobs were never retired");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // The cap held: at most 2 history records, the oldest pruned.
+        assert!(d.history.read().expect("history").len() <= 2);
+        match d.handle(Request::Sjob(ids[0])) {
+            Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::NotFound),
+            other => panic!("pruned job must be not_found: {other:?}"),
+        }
+        match d.handle(Request::Sjob(ids[2])) {
+            Response::Job(detail) => assert_eq!(detail.state, JobState::Completed),
+            other => panic!("{other:?}"),
+        }
+        // WAIT on a pruned id is the same typed not_found.
+        match d.handle(Request::Wait {
+            jobs: vec![ids[0]],
+            timeout_secs: 1.0,
+        }) {
+            Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::NotFound),
+            other => panic!("{other:?}"),
+        }
+        // Retirement pruned the event log's per-job indexes too.
+        d.with_scheduler(|sched| {
+            for &id in &ids {
+                assert!(
+                    sched.log().last(JobId(id), LogKind::DispatchDone).is_none(),
+                    "retired job {id} kept log entries"
+                );
+            }
+        });
     }
 }

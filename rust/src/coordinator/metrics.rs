@@ -32,6 +32,22 @@ pub struct DaemonMetrics {
     /// Equal to [`DaemonMetrics::waits_parked`] once quiescent: every
     /// waiter wakes exactly once.
     pub waits_resumed: AtomicU64,
+    /// Connection-reactor `epoll_wait` returns (events or timer expiry).
+    /// Idle connections contribute **nothing** here — a flat counter while
+    /// N connections sit open is the reactor's zero-poll guarantee, and the
+    /// `connection_scaling` bench gates on it.
+    pub reactor_wakeups: AtomicU64,
+    /// Readiness events delivered across all reactor wakeups.
+    pub reactor_ready_events: AtomicU64,
+    /// Reactor threads that ever entered the serve loop for this daemon —
+    /// the single-threaded-multiplexing invariant, measured (the
+    /// `connection_scaling` gate asserts 1, not a constant).
+    pub reactor_threads_started: AtomicU64,
+    /// Connections accepted by the server front door.
+    pub connections_accepted: AtomicU64,
+    /// `accept(2)` failures (other than would-block). The accept loop backs
+    /// off exponentially on these instead of spinning at a fixed interval.
+    pub accept_errors: AtomicU64,
     /// Per-command request counts, indexed like [`COMMANDS`].
     per_command: [AtomicU64; COMMANDS.len()],
     /// Wall-clock latency of request handling (ns).
@@ -41,6 +57,9 @@ pub struct DaemonMetrics {
     sched_latency: Mutex<LogHistogram>,
     /// Wall time the scheduler write mutex was held per acquisition (ns).
     lock_hold: Mutex<LogHistogram>,
+    /// Wall time from `accept(2)` to the first response byte written on the
+    /// connection (ns) — the front door's launch-visible latency floor.
+    accept_to_first_byte: Mutex<LogHistogram>,
 }
 
 impl DaemonMetrics {
@@ -92,6 +111,29 @@ impl DaemonMetrics {
         self.lock_hold.lock().expect("metrics poisoned").clone()
     }
 
+    /// Record one reactor wakeup delivering `ready_events` events.
+    pub fn record_reactor_wakeup(&self, ready_events: u64) {
+        self.reactor_wakeups.fetch_add(1, Ordering::Relaxed);
+        self.reactor_ready_events
+            .fetch_add(ready_events, Ordering::Relaxed);
+    }
+
+    /// Record a connection's accept-to-first-response-byte latency.
+    pub fn record_accept_to_first_byte(&self, wall_ns: u64) {
+        self.accept_to_first_byte
+            .lock()
+            .expect("metrics poisoned")
+            .record(wall_ns);
+    }
+
+    /// Snapshot of the accept-to-first-byte histogram.
+    pub fn accept_to_first_byte(&self) -> LogHistogram {
+        self.accept_to_first_byte
+            .lock()
+            .expect("metrics poisoned")
+            .clone()
+    }
+
     /// Record a job's virtual scheduling latency.
     pub fn record_sched_latency(&self, sim_ns: u64) {
         self.sched_latency
@@ -114,7 +156,8 @@ impl DaemonMetrics {
     pub fn summary(&self) -> String {
         format!(
             "requests_ok={} requests_err={} jobs_submitted={} read_path={} write_locks={} \
-             waits={}/{} | request_wall: {} | sched_virtual: {} | lock_hold: {}",
+             waits={}/{} conns={} accept_errs={} reactor_wakeups={} reactor_events={} \
+             | request_wall: {} | sched_virtual: {} | lock_hold: {} | accept_to_first_byte: {}",
             self.requests_ok.load(Ordering::Relaxed),
             self.requests_err.load(Ordering::Relaxed),
             self.jobs_submitted.load(Ordering::Relaxed),
@@ -122,9 +165,14 @@ impl DaemonMetrics {
             self.write_locks.load(Ordering::Relaxed),
             self.waits_resumed.load(Ordering::Relaxed),
             self.waits_parked.load(Ordering::Relaxed),
+            self.connections_accepted.load(Ordering::Relaxed),
+            self.accept_errors.load(Ordering::Relaxed),
+            self.reactor_wakeups.load(Ordering::Relaxed),
+            self.reactor_ready_events.load(Ordering::Relaxed),
             self.request_latency().summary_ns(),
             self.sched_latency().summary_ns(),
             self.lock_hold().summary_ns(),
+            self.accept_to_first_byte().summary_ns(),
         )
     }
 }
@@ -159,6 +207,18 @@ mod tests {
         assert_eq!(m.lock_hold().count(), 1);
         assert!(m.summary().contains("read_path=2"));
         assert!(m.summary().contains("write_locks=1"));
+    }
+
+    #[test]
+    fn reactor_counters_accumulate() {
+        let m = DaemonMetrics::default();
+        m.record_reactor_wakeup(3);
+        m.record_reactor_wakeup(0);
+        m.record_accept_to_first_byte(250_000);
+        assert_eq!(m.reactor_wakeups.load(Ordering::Relaxed), 2);
+        assert_eq!(m.reactor_ready_events.load(Ordering::Relaxed), 3);
+        assert_eq!(m.accept_to_first_byte().count(), 1);
+        assert!(m.summary().contains("reactor_wakeups=2"));
     }
 
     #[test]

@@ -18,23 +18,33 @@
 //!   per-request and per-lock-path metrics.
 //! * [`snapshot`] — the published read view and the `WAIT` completion hub
 //!   (condvar keyed by a dispatch/terminal generation).
-//! * [`server`] — TCP listener + connection loop (per-connection protocol
-//!   version, idle-connection expiry, parked-`WAIT` registry so blocked
-//!   waits never pin pool workers).
+//! * [`server`] — the TCP front door. On Linux it is an `epoll` readiness
+//!   **reactor** ([`reactor`], std-only syscall bindings): every socket is
+//!   nonblocking, idle connections cost no thread and no poll tick, accept
+//!   is edge-driven, and parked `WAIT`s wake the reactor through an
+//!   eventfd subscribed to the completion hub. Non-Linux targets keep the
+//!   portable threadpool connection loop (per-connection protocol version,
+//!   idle expiry, parked-`WAIT` registry).
+//! * [`timerwheel`] — hashed timer wheel for the reactor's idle and
+//!   `WAIT`-deadline tracking (O(1) insert, amortized O(1) expiry).
 //! * [`client`] — the blocking typed client for the CLI, examples, and
-//!   tests.
-//! * [`metrics`] — daemon counters (total, per-command, per lock path) and
-//!   latency histograms.
-//! * [`threadpool`] — fixed worker pool substrate.
+//!   tests (round trips and pipelined batches).
+//! * [`metrics`] — daemon counters (total, per-command, per lock path,
+//!   reactor wakeups/ready-events) and latency histograms.
+//! * [`threadpool`] — fixed worker pool substrate (request execution under
+//!   the reactor; whole-connection driving on non-Linux).
 
 pub mod api;
 pub mod client;
 pub mod codec;
 pub mod daemon;
 pub mod metrics;
+#[cfg(target_os = "linux")]
+pub(crate) mod reactor;
 pub mod server;
 pub mod snapshot;
 pub mod threadpool;
+pub mod timerwheel;
 
 pub use api::{
     ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request,

@@ -1,0 +1,1200 @@
+//! The Linux connection reactor: one thread, `epoll`, zero per-connection
+//! polling.
+//!
+//! The threadpool server (kept for non-Linux targets in [`super::server`])
+//! spends a thread per live connection and a 10 ms accept poll; at the
+//! paper's target of thousands of concurrent interactive users that is a
+//! thread pool the size of the user base. This module replaces it on Linux
+//! with a readiness reactor built directly on the `epoll`/`eventfd`
+//! syscalls (declared `extern "C"` — std already links libc, so this adds
+//! **zero dependencies**):
+//!
+//! * **Zero-poll accept** — the listener is registered edge-triggered; the
+//!   reactor drains `accept(2)` to `EWOULDBLOCK` on each readiness edge
+//!   instead of sleeping 10 ms between polls. Accept *errors* back off
+//!   exponentially (1 ms → 1 s) and are counted in
+//!   [`DaemonMetrics::accept_errors`](super::metrics::DaemonMetrics).
+//! * **Per-connection state machines** — every socket is nonblocking;
+//!   partial request lines accumulate in a per-connection read buffer and
+//!   partial responses drain from a write buffer under `EPOLLOUT`
+//!   interest, so a slow or bursty peer never blocks the thread. Requests
+//!   on one connection are answered strictly in order (pipelining).
+//! * **Worker-pool dispatch** — complete request lines are handed to the
+//!   existing small [`ThreadPool`] via
+//!   [`Daemon::handle_line_nonblocking`]; completions come back over a
+//!   queue + eventfd, so the reactor thread never executes scheduler code
+//!   on the I/O path.
+//! * **Native parked `WAIT`s** — a [`LineOutcome::Parked`] wait leaves its
+//!   connection registered but inert; the daemon's completion hub wakes
+//!   the reactor through the same eventfd
+//!   ([`Daemon::subscribe_completions`]), replacing the dedicated waiter
+//!   thread that used to sweep the parked registry.
+//! * **Timer wheel** — idle expiry and `WAIT` deadlines live in a
+//!   [`TimerWheel`]; the reactor sleeps in `epoll_wait` until the nearest
+//!   deadline. An *idle* connection therefore costs one wheel entry and no
+//!   wakeups at all — the invariant the `connection_scaling` bench gates
+//!   on via [`DaemonMetrics::reactor_wakeups`](super::metrics::DaemonMetrics).
+
+use super::daemon::{Daemon, LineOutcome};
+use super::threadpool::ThreadPool;
+use super::timerwheel::TimerWheel;
+use crate::coordinator::api::ProtocolVersion;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::{c_int, c_uint, c_void};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---- raw epoll / eventfd bindings ------------------------------------------
+
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLET: u32 = 1 << 31;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_MOD: c_int = 3;
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+
+/// `struct epoll_event` (packed on x86-64, as in the kernel ABI).
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy, Default)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout_ms: c_int,
+    ) -> c_int;
+    fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+}
+
+/// Owned epoll instance.
+struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    fn new() -> io::Result<Self> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Wait for readiness; `None` sleeps until an event arrives.
+    fn wait(&self, events: &mut [EpollEvent], timeout: Option<Duration>) -> io::Result<usize> {
+        let ms: c_int = match timeout {
+            None => -1,
+            Some(d) if d.is_zero() => 0,
+            // Round up so a timer never fires a hair early and re-sleeps 0ms.
+            Some(d) => (d.as_millis() + 1).min(i32::MAX as u128) as c_int,
+        };
+        loop {
+            let rc =
+                unsafe { epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+/// An eventfd the worker pool (and the WaitHub waker) use to interrupt
+/// `epoll_wait`.
+struct WakeFd {
+    fd: RawFd,
+}
+
+impl WakeFd {
+    fn new() -> io::Result<Self> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { fd })
+    }
+
+    fn wake(&self) {
+        let v: u64 = 1;
+        // A full counter still leaves the fd readable; failure is benign.
+        unsafe { write(self.fd, &v as *const u64 as *const c_void, 8) };
+    }
+
+    fn drain(&self) {
+        let mut v: u64 = 0;
+        loop {
+            let rc = unsafe { read(self.fd, &mut v as *mut u64 as *mut c_void, 8) };
+            if rc != 8 {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+// ---- tokens and the connection slab ----------------------------------------
+
+/// Token of the listening socket.
+const TOKEN_LISTENER: u64 = u64::MAX;
+/// Token of the completion eventfd.
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+fn token(idx: usize, gen: u32) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+fn token_idx(tok: u64) -> usize {
+    (tok & 0xffff_ffff) as usize
+}
+
+fn token_gen(tok: u64) -> u32 {
+    (tok >> 32) as u32
+}
+
+/// One slab slot: the generation invalidates stale epoll events, timer
+/// entries, and completions after the slot is reused.
+struct Slot {
+    gen: u32,
+    conn: Option<Conn>,
+}
+
+/// Index-stable connection storage with O(1) insert/remove.
+#[derive(Default)]
+struct Slab {
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+}
+
+impl Slab {
+    fn insert(&mut self, conn: Conn) -> u64 {
+        if let Some(i) = self.free.pop() {
+            debug_assert!(self.slots[i].conn.is_none());
+            self.slots[i].conn = Some(conn);
+            token(i, self.slots[i].gen)
+        } else {
+            self.slots.push(Slot { gen: 0, conn: Some(conn) });
+            token(self.slots.len() - 1, 0)
+        }
+    }
+
+    /// The connection for `tok`, unless the slot was freed or reused.
+    fn get_mut(&mut self, tok: u64) -> Option<&mut Conn> {
+        let i = token_idx(tok);
+        self.slots
+            .get_mut(i)
+            .filter(|s| s.gen == token_gen(tok))
+            .and_then(|s| s.conn.as_mut())
+    }
+
+    fn remove(&mut self, tok: u64) -> Option<Conn> {
+        let i = token_idx(tok);
+        let slot = self.slots.get_mut(i)?;
+        if slot.gen != token_gen(tok) {
+            return None;
+        }
+        let conn = slot.conn.take();
+        if conn.is_some() {
+            slot.gen = slot.gen.wrapping_add(1);
+            self.free.push(i);
+        }
+        conn
+    }
+
+    /// Tokens of every live connection.
+    fn tokens(&self) -> Vec<u64> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.conn.is_some())
+            .map(|(i, s)| token(i, s.gen))
+            .collect()
+    }
+}
+
+// ---- per-connection state ---------------------------------------------------
+
+/// Cap on buffered unparsed request bytes per connection (a line longer
+/// than this — or a pipelined backlog this deep — closes the connection).
+const MAX_BUFFERED_BYTES: usize = 4 * 1024 * 1024;
+
+/// Cap on unflushed response bytes per connection. A peer that pipelines
+/// requests but never reads its responses stops getting new requests
+/// executed once this much output is queued (the threadpool server got
+/// this backpressure for free from its blocking writes); dispatch resumes
+/// when `EPOLLOUT` drains the backlog. At most one in-flight response can
+/// overshoot the cap, so per-connection memory stays bounded.
+const MAX_WRITE_BACKLOG: usize = 4 * 1024 * 1024;
+
+/// Shrink a drained per-connection buffer back down once its burst-sized
+/// allocation would otherwise be retained for the connection's lifetime.
+const BUF_SHRINK_THRESHOLD: usize = 64 * 1024;
+
+/// One connection's state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Request bytes (partial lines survive readiness boundaries). The
+    /// prefix up to `read_pos` is consumed; it is dropped lazily so a deep
+    /// pipelined backlog does not pay a memmove per extracted line.
+    read_buf: Vec<u8>,
+    /// Consumed prefix of `read_buf`.
+    read_pos: usize,
+    /// Bytes of `read_buf` already scanned for a newline (≥ `read_pos`).
+    scan_pos: usize,
+    /// Rendered-but-unsent response bytes.
+    write_buf: Vec<u8>,
+    /// Bytes of `write_buf` already written.
+    write_pos: usize,
+    /// Negotiated protocol version (`HELLO` upgrades it).
+    version: ProtocolVersion,
+    /// A request line is in flight on the worker pool; further pipelined
+    /// lines wait in `read_buf` so responses stay in order.
+    busy: bool,
+    /// A `WAIT` parked this connection.
+    parked: Option<super::daemon::ParkedWait>,
+    /// Peer is gone; the slot lingers only until in-flight work resolves.
+    dead: bool,
+    /// Peer half-closed (EOF on read). Already-buffered requests still
+    /// execute and their responses still go out; the connection closes
+    /// once everything in flight has drained.
+    peer_eof: bool,
+    /// `EPOLLOUT` interest is armed (write buffer could not fully drain).
+    wants_write: bool,
+    /// Close the connection if nothing happens before this instant.
+    idle_deadline: Instant,
+    /// An idle entry for this connection is in the wheel.
+    idle_timer_armed: bool,
+    /// When `accept(2)` returned this socket (accept-to-first-byte metric).
+    accepted_at: Instant,
+    /// First response byte has been written (metric recorded).
+    first_byte_sent: bool,
+}
+
+impl Conn {
+    /// Unparsed bytes still buffered (what the back-pressure cap bounds).
+    fn buffered_len(&self) -> usize {
+        self.read_buf.len() - self.read_pos
+    }
+
+    /// Extract the next complete line, or `None` (partial bytes stay put).
+    /// Consumption only advances `read_pos`; the prefix is compacted away
+    /// once it dominates the buffer, so extracting N pipelined lines costs
+    /// O(bytes) total, not O(N × backlog).
+    fn take_line(&mut self) -> Option<String> {
+        match self.read_buf[self.scan_pos..].iter().position(|&b| b == b'\n') {
+            None => {
+                self.scan_pos = self.read_buf.len();
+                None
+            }
+            Some(off) => {
+                let nl = self.scan_pos + off;
+                let mut end = nl;
+                while end > self.read_pos && self.read_buf[end - 1] == b'\r' {
+                    end -= 1;
+                }
+                let line =
+                    String::from_utf8_lossy(&self.read_buf[self.read_pos..end]).into_owned();
+                self.read_pos = nl + 1;
+                self.scan_pos = self.read_pos;
+                if self.read_pos == self.read_buf.len() {
+                    self.read_buf.clear();
+                    if self.read_buf.capacity() > BUF_SHRINK_THRESHOLD {
+                        self.read_buf.shrink_to(READ_CHUNK);
+                    }
+                    self.read_pos = 0;
+                    self.scan_pos = 0;
+                } else if self.read_pos >= 4096 && self.read_pos * 2 >= self.read_buf.len() {
+                    self.read_buf.drain(..self.read_pos);
+                    self.scan_pos -= self.read_pos;
+                    self.read_pos = 0;
+                }
+                Some(line)
+            }
+        }
+    }
+}
+
+/// Timer payloads: validated lazily against the slab on expiry.
+enum TimerItem {
+    /// Idle-deadline check for a connection token.
+    Idle(u64),
+    /// A parked `WAIT`'s wall deadline.
+    WaitDeadline(u64),
+    /// Retry `accept(2)` after an error backoff.
+    AcceptRetry,
+}
+
+/// Completed request lines coming back from the worker pool.
+struct Completions {
+    queue: Mutex<Vec<(u64, LineOutcome)>>,
+    inflight: AtomicUsize,
+    waker: WakeFd,
+}
+
+// ---- the reactor ------------------------------------------------------------
+
+const MAX_EVENTS: usize = 256;
+const READ_CHUNK: usize = 16 * 1024;
+/// Wheel granularity / size: 50 ms buckets, 512 slots (25.6 s horizon;
+/// longer deadlines are just re-examined once per revolution).
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(50);
+const WHEEL_SLOTS: usize = 512;
+/// While `WAIT`s are parked the reactor paces virtual time at this cadence
+/// (the role the old waiter thread played); with nothing parked it sleeps
+/// indefinitely.
+const PACE_TICK: Duration = Duration::from_millis(20);
+const ACCEPT_BACKOFF_START: Duration = Duration::from_millis(1);
+const ACCEPT_BACKOFF_CEILING: Duration = Duration::from_secs(1);
+/// Cap on concurrently parked `WAIT`s (same back-pressure rationale as the
+/// threadpool server's registry).
+const MAX_PARKED_WAITS: usize = 4096;
+
+pub(super) struct Reactor<'a> {
+    epoll: Epoll,
+    listener: &'a TcpListener,
+    daemon: Arc<Daemon>,
+    pool: Arc<ThreadPool>,
+    comps: Arc<Completions>,
+    slab: Slab,
+    wheel: TimerWheel<TimerItem>,
+    parked_tokens: Vec<u64>,
+    parked_gauge: Arc<AtomicUsize>,
+    idle_timeout: Duration,
+    accept_backoff: Duration,
+    accept_paused_until: Option<Instant>,
+    shutting_down: bool,
+}
+
+/// Run the reactor until daemon shutdown. Setup failures are reported and
+/// leave the server not serving (they indicate a broken host, not load).
+pub(super) fn serve(
+    listener: &TcpListener,
+    daemon: &Arc<Daemon>,
+    pool: &Arc<ThreadPool>,
+    idle_timeout: Duration,
+    parked_gauge: &Arc<AtomicUsize>,
+) {
+    match Reactor::new(listener, daemon, pool, idle_timeout, parked_gauge) {
+        Ok(mut r) => r.run(),
+        Err(e) => eprintln!("reactor setup failed, server not serving: {e}"),
+    }
+}
+
+impl<'a> Reactor<'a> {
+    fn new(
+        listener: &'a TcpListener,
+        daemon: &Arc<Daemon>,
+        pool: &Arc<ThreadPool>,
+        idle_timeout: Duration,
+        parked_gauge: &Arc<AtomicUsize>,
+    ) -> io::Result<Self> {
+        let epoll = Epoll::new()?;
+        let comps = Arc::new(Completions {
+            queue: Mutex::new(Vec::new()),
+            inflight: AtomicUsize::new(0),
+            waker: WakeFd::new()?,
+        });
+        epoll.ctl(
+            EPOLL_CTL_ADD,
+            listener.as_raw_fd(),
+            EPOLLIN | EPOLLET,
+            TOKEN_LISTENER,
+        )?;
+        epoll.ctl(EPOLL_CTL_ADD, comps.waker.fd, EPOLLIN | EPOLLET, TOKEN_WAKER)?;
+        Ok(Self {
+            epoll,
+            listener,
+            daemon: Arc::clone(daemon),
+            pool: Arc::clone(pool),
+            comps,
+            slab: Slab::default(),
+            wheel: TimerWheel::new(WHEEL_GRANULARITY, WHEEL_SLOTS),
+            parked_tokens: Vec::new(),
+            parked_gauge: Arc::clone(parked_gauge),
+            idle_timeout,
+            accept_backoff: ACCEPT_BACKOFF_START,
+            accept_paused_until: None,
+            shutting_down: false,
+        })
+    }
+
+    fn run(&mut self) {
+        self.daemon
+            .metrics
+            .reactor_threads_started
+            .fetch_add(1, Ordering::Relaxed);
+        // Completion-hub progress (dispatches, terminal transitions,
+        // shutdown) wakes epoll_wait through the eventfd — the reactor
+        // replaces the dedicated waiter thread.
+        let hub_comps = Arc::clone(&self.comps);
+        let sub = self
+            .daemon
+            .subscribe_completions(Box::new(move || hub_comps.waker.wake()));
+        let mut events = [EpollEvent::default(); MAX_EVENTS];
+        loop {
+            self.drain_completions();
+            if !self.daemon.is_running() {
+                break;
+            }
+            if !self.parked_tokens.is_empty() {
+                // Virtual time must advance for parked waits even when no
+                // pacer thread runs (the blocked request used to pace from
+                // its own worker).
+                self.daemon.pace();
+                self.poll_parked();
+            }
+            self.fire_timers();
+            if !self.daemon.is_running() {
+                break;
+            }
+            let timeout = self.next_timeout();
+            let n = match self.epoll.wait(&mut events, timeout) {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("epoll_wait failed: {e}");
+                    break;
+                }
+            };
+            self.daemon.metrics.record_reactor_wakeup(n as u64);
+            for ev in &events[..n] {
+                let tok = ev.data;
+                let flags = ev.events;
+                match tok {
+                    TOKEN_LISTENER => self.drain_accept(),
+                    TOKEN_WAKER => self.comps.waker.drain(),
+                    _ => self.on_conn_event(tok, flags),
+                }
+            }
+        }
+        self.daemon.unsubscribe_completions(sub);
+        self.cleanup();
+    }
+
+    /// How long `epoll_wait` may sleep: until the nearest timer, capped at
+    /// the pace tick while waits are parked; forever when nothing pends.
+    fn next_timeout(&self) -> Option<Duration> {
+        let mut deadline = self.wheel.next_deadline();
+        if !self.parked_tokens.is_empty() {
+            let pace = Instant::now() + PACE_TICK;
+            deadline = Some(deadline.map_or(pace, |d| d.min(pace)));
+        }
+        deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+
+    // ---- accept path -------------------------------------------------------
+
+    fn drain_accept(&mut self) {
+        if self
+            .accept_paused_until
+            .is_some_and(|until| Instant::now() < until)
+        {
+            return; // backing off; the AcceptRetry timer re-drains
+        }
+        self.accept_paused_until = None;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    self.accept_backoff = ACCEPT_BACKOFF_START;
+                    if let Err(e) = self.register_conn(stream) {
+                        eprintln!("connection setup error: {e}");
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    // Transient accept failures (EMFILE, ECONNABORTED, …):
+                    // count, back off exponentially, retry on a timer
+                    // instead of spinning or sleeping a flat interval.
+                    self.daemon
+                        .metrics
+                        .accept_errors
+                        .fetch_add(1, Ordering::Relaxed);
+                    eprintln!("accept error: {e}");
+                    let pause = self.accept_backoff;
+                    self.accept_backoff = (self.accept_backoff * 2).min(ACCEPT_BACKOFF_CEILING);
+                    let until = Instant::now() + pause;
+                    self.accept_paused_until = Some(until);
+                    self.wheel.insert(until, TimerItem::AcceptRetry);
+                    break;
+                }
+            }
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream) -> io::Result<()> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true).ok();
+        let fd = stream.as_raw_fd();
+        let now = Instant::now();
+        let conn = Conn {
+            stream,
+            read_buf: Vec::new(),
+            read_pos: 0,
+            scan_pos: 0,
+            write_buf: Vec::new(),
+            write_pos: 0,
+            version: ProtocolVersion::V1,
+            busy: false,
+            parked: None,
+            dead: false,
+            peer_eof: false,
+            wants_write: false,
+            idle_deadline: now + self.idle_timeout,
+            idle_timer_armed: true,
+            accepted_at: now,
+            first_byte_sent: false,
+        };
+        let tok = self.slab.insert(conn);
+        if let Err(e) = self.epoll.ctl(EPOLL_CTL_ADD, fd, EPOLLIN | EPOLLET, tok) {
+            self.slab.remove(tok);
+            return Err(e);
+        }
+        self.wheel.insert(now + self.idle_timeout, TimerItem::Idle(tok));
+        self.daemon
+            .metrics
+            .connections_accepted
+            .fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    // ---- connection I/O ----------------------------------------------------
+
+    fn on_conn_event(&mut self, tok: u64, flags: u32) {
+        if self.slab.get_mut(tok).is_none() {
+            return; // stale event for a freed slot
+        }
+        if flags & EPOLLOUT != 0 {
+            self.try_flush(tok);
+            self.maybe_close_eof(tok);
+        }
+        if flags & EPOLLIN != 0 {
+            // Read first even under ERR/HUP: final bytes (a last pipelined
+            // request) may still be pending, and read() surfaces the error
+            // itself if there are none.
+            self.on_readable(tok);
+        } else if flags & (EPOLLERR | EPOLLHUP) != 0 {
+            self.close_token(tok);
+        }
+    }
+
+    fn on_readable(&mut self, tok: u64) {
+        let mut buf = [0u8; READ_CHUNK];
+        let mut got_bytes = false;
+        let mut saw_eof = false;
+        let mut closed = false;
+        {
+            let Some(conn) = self.slab.get_mut(tok) else { return };
+            if conn.dead {
+                return;
+            }
+            // Edge-triggered: drain to EWOULDBLOCK so no edge is lost.
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        // Half-close: already-buffered requests still run to
+                        // completion before the connection closes.
+                        conn.peer_eof = true;
+                        saw_eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.read_buf.extend_from_slice(&buf[..n]);
+                        got_bytes = true;
+                        if conn.buffered_len() > MAX_BUFFERED_BYTES {
+                            closed = true; // abusive line length / backlog
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if closed {
+            self.close_token(tok);
+            return;
+        }
+        if got_bytes {
+            self.touch_idle(tok);
+        }
+        if got_bytes || saw_eof {
+            self.maybe_close_eof(tok);
+        }
+    }
+
+    /// Advance the connection, then close it if the peer hit EOF and
+    /// nothing remains in flight or unflushed.
+    fn maybe_close_eof(&mut self, tok: u64) {
+        self.advance_conn(tok);
+        let close = matches!(
+            self.slab.get_mut(tok),
+            Some(c) if c.peer_eof && !c.dead && !c.busy && c.parked.is_none()
+                && c.write_pos >= c.write_buf.len()
+        );
+        if close {
+            self.close_token(tok);
+        }
+    }
+
+    /// Dispatch the next complete, non-empty line (if any) to the worker
+    /// pool. At most one request per connection is in flight, which is what
+    /// keeps pipelined responses in order.
+    fn advance_conn(&mut self, tok: u64) {
+        if self.shutting_down {
+            return;
+        }
+        loop {
+            let line = {
+                let Some(conn) = self.slab.get_mut(tok) else { return };
+                if conn.busy || conn.parked.is_some() || conn.dead {
+                    return;
+                }
+                // Response backpressure: don't execute further pipelined
+                // requests for a peer that is not reading its responses.
+                // The EPOLLOUT flush path re-enters advance_conn when the
+                // backlog drains.
+                if conn.write_buf.len() - conn.write_pos > MAX_WRITE_BACKLOG {
+                    return;
+                }
+                match conn.take_line() {
+                    None => return,
+                    Some(line) => {
+                        if line.is_empty() {
+                            continue; // blank keep-alive line
+                        }
+                        conn.busy = true;
+                        line
+                    }
+                }
+            };
+            let version = match self.slab.get_mut(tok) {
+                Some(conn) => conn.version,
+                None => return,
+            };
+            self.comps.inflight.fetch_add(1, Ordering::SeqCst);
+            let daemon = Arc::clone(&self.daemon);
+            let comps = Arc::clone(&self.comps);
+            self.pool.execute(move || {
+                let outcome = daemon.handle_line_nonblocking(&line, version);
+                comps
+                    .queue
+                    .lock()
+                    .expect("completion queue poisoned")
+                    .push((tok, outcome));
+                // Decrement *after* the push so an observer seeing zero
+                // in-flight knows the queue holds every outcome.
+                comps.inflight.fetch_sub(1, Ordering::SeqCst);
+                comps.waker.wake();
+            });
+            return;
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        loop {
+            let batch: Vec<(u64, LineOutcome)> = {
+                let mut q = self.comps.queue.lock().expect("completion queue poisoned");
+                std::mem::take(&mut *q)
+            };
+            if batch.is_empty() {
+                return;
+            }
+            for (tok, outcome) in batch {
+                self.on_completion(tok, outcome);
+            }
+        }
+    }
+
+    fn on_completion(&mut self, tok: u64, outcome: LineOutcome) {
+        let dead = match self.slab.get_mut(tok) {
+            None => {
+                // Busy slots are pinned, so this should be unreachable; a
+                // parked outcome must still resolve exactly once.
+                if let LineOutcome::Parked(pw) = outcome {
+                    let resp = self
+                        .daemon
+                        .poll_wait(&pw.ticket)
+                        .unwrap_or_else(|| self.daemon.reject_wait(&pw.ticket, "connection closed"));
+                    let _ = self.daemon.finish_wait(&pw, resp);
+                }
+                return;
+            }
+            Some(conn) => {
+                conn.busy = false;
+                conn.dead
+            }
+        };
+        match outcome {
+            LineOutcome::Done(resp, negotiated) => {
+                if let Some(v) = negotiated {
+                    if let Some(conn) = self.slab.get_mut(tok) {
+                        conn.version = v;
+                    }
+                }
+                if dead {
+                    self.maybe_reap(tok);
+                    return;
+                }
+                self.queue_response(tok, &resp);
+                self.touch_idle(tok);
+                self.maybe_close_eof(tok);
+            }
+            LineOutcome::Parked(pw) => {
+                if dead || self.shutting_down || self.parked_tokens.len() >= MAX_PARKED_WAITS {
+                    // Resolve inline, exactly once: peer gone, shutting
+                    // down, or registry back-pressure.
+                    let why = if self.shutting_down {
+                        "daemon is shutting down"
+                    } else {
+                        "too many concurrent WAITs"
+                    };
+                    let resp = self
+                        .daemon
+                        .poll_wait(&pw.ticket)
+                        .unwrap_or_else(|| self.daemon.reject_wait(&pw.ticket, why));
+                    let rendered = self.daemon.finish_wait(&pw, resp);
+                    if dead {
+                        self.maybe_reap(tok);
+                    } else {
+                        self.queue_response(tok, &rendered);
+                        self.touch_idle(tok);
+                        self.maybe_close_eof(tok);
+                    }
+                    return;
+                }
+                let deadline = pw.ticket.deadline;
+                if let Some(conn) = self.slab.get_mut(tok) {
+                    conn.parked = Some(pw);
+                }
+                self.parked_tokens.push(tok);
+                self.parked_gauge
+                    .store(self.parked_tokens.len(), Ordering::Relaxed);
+                self.wheel.insert(deadline, TimerItem::WaitDeadline(tok));
+            }
+        }
+    }
+
+    // ---- parked WAITs ------------------------------------------------------
+
+    fn poll_parked(&mut self) {
+        for tok in self.parked_tokens.clone() {
+            self.resolve_parked(tok);
+        }
+    }
+
+    /// Resolve one parked wait if the daemon can answer it now (settled,
+    /// deadline passed, or shutdown); otherwise leave it parked.
+    fn resolve_parked(&mut self, tok: u64) {
+        let answer = {
+            let Some(conn) = self.slab.get_mut(tok) else {
+                self.forget_parked(tok);
+                return;
+            };
+            let Some(pw) = conn.parked.as_ref() else {
+                self.forget_parked(tok);
+                return;
+            };
+            match self.daemon.poll_wait(&pw.ticket) {
+                None => return, // not answerable yet
+                Some(resp) => {
+                    let pw = conn.parked.take().expect("checked above");
+                    (pw, resp, conn.dead)
+                }
+            }
+        };
+        let (pw, resp, dead) = answer;
+        self.forget_parked(tok);
+        let rendered = self.daemon.finish_wait(&pw, resp);
+        if dead {
+            self.maybe_reap(tok);
+        } else {
+            self.queue_response(tok, &rendered);
+            self.touch_idle(tok);
+            // The connection resumes normal service (pipelined requests
+            // buffered behind the WAIT included).
+            self.maybe_close_eof(tok);
+        }
+    }
+
+    fn forget_parked(&mut self, tok: u64) {
+        if let Some(i) = self.parked_tokens.iter().position(|&t| t == tok) {
+            self.parked_tokens.swap_remove(i);
+            self.parked_gauge
+                .store(self.parked_tokens.len(), Ordering::Relaxed);
+        }
+    }
+
+    // ---- timers ------------------------------------------------------------
+
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        let mut due = Vec::new();
+        self.wheel.expire(now, |item| due.push(item));
+        for item in due {
+            match item {
+                TimerItem::Idle(tok) => self.on_idle_timer(tok, now),
+                TimerItem::WaitDeadline(tok) => self.resolve_parked(tok),
+                TimerItem::AcceptRetry => {
+                    self.accept_paused_until = None;
+                    self.drain_accept();
+                }
+            }
+        }
+    }
+
+    fn on_idle_timer(&mut self, tok: u64, now: Instant) {
+        enum Act {
+            Close,
+            Rearm(Instant),
+            Nothing,
+        }
+        let act = match self.slab.get_mut(tok) {
+            None => Act::Nothing, // slot freed or reused: stale entry
+            Some(conn) => {
+                conn.idle_timer_armed = false;
+                if conn.dead {
+                    Act::Nothing
+                } else if conn.busy || conn.parked.is_some() {
+                    // Handling / parked time is not idle time.
+                    conn.idle_deadline = now + self.idle_timeout;
+                    conn.idle_timer_armed = true;
+                    Act::Rearm(conn.idle_deadline)
+                } else if now < conn.idle_deadline {
+                    conn.idle_timer_armed = true;
+                    Act::Rearm(conn.idle_deadline)
+                } else {
+                    Act::Close
+                }
+            }
+        };
+        match act {
+            Act::Close => self.close_token(tok),
+            Act::Rearm(dl) => self.wheel.insert(dl, TimerItem::Idle(tok)),
+            Act::Nothing => {}
+        }
+    }
+
+    /// Push the idle deadline out; lazily (re-)arm the wheel entry.
+    fn touch_idle(&mut self, tok: u64) {
+        let timeout = self.idle_timeout;
+        let mut arm: Option<Instant> = None;
+        if let Some(conn) = self.slab.get_mut(tok) {
+            conn.idle_deadline = Instant::now() + timeout;
+            if !conn.idle_timer_armed {
+                conn.idle_timer_armed = true;
+                arm = Some(conn.idle_deadline);
+            }
+        }
+        if let Some(dl) = arm {
+            self.wheel.insert(dl, TimerItem::Idle(tok));
+        }
+    }
+
+    // ---- writes and closing ------------------------------------------------
+
+    fn queue_response(&mut self, tok: u64, body: &str) {
+        if let Some(conn) = self.slab.get_mut(tok) {
+            conn.write_buf.extend_from_slice(body.as_bytes());
+            conn.write_buf.extend_from_slice(b"\n\n");
+        }
+        self.try_flush(tok);
+    }
+
+    fn try_flush(&mut self, tok: u64) {
+        enum After {
+            None,
+            Close,
+            ArmOut(RawFd),
+            DisarmOut(RawFd),
+        }
+        let mut after = After::None;
+        let mut first_byte_ns: Option<u64> = None;
+        if let Some(conn) = self.slab.get_mut(tok) {
+            while conn.write_pos < conn.write_buf.len() {
+                match conn.stream.write(&conn.write_buf[conn.write_pos..]) {
+                    Ok(0) => {
+                        after = After::Close;
+                        break;
+                    }
+                    Ok(n) => {
+                        if !conn.first_byte_sent {
+                            conn.first_byte_sent = true;
+                            first_byte_ns = Some(conn.accepted_at.elapsed().as_nanos() as u64);
+                        }
+                        conn.write_pos += n;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        if !conn.wants_write {
+                            conn.wants_write = true;
+                            after = After::ArmOut(conn.stream.as_raw_fd());
+                        }
+                        break;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        after = After::Close;
+                        break;
+                    }
+                }
+            }
+            if matches!(after, After::None) && conn.write_pos >= conn.write_buf.len() {
+                conn.write_buf.clear();
+                if conn.write_buf.capacity() > BUF_SHRINK_THRESHOLD {
+                    conn.write_buf.shrink_to(READ_CHUNK);
+                }
+                conn.write_pos = 0;
+                if conn.wants_write {
+                    conn.wants_write = false;
+                    after = After::DisarmOut(conn.stream.as_raw_fd());
+                }
+            }
+        }
+        if let Some(ns) = first_byte_ns {
+            self.daemon.metrics.record_accept_to_first_byte(ns);
+        }
+        match after {
+            After::None => {}
+            After::Close => self.close_token(tok),
+            After::ArmOut(fd) => {
+                let _ = self
+                    .epoll
+                    .ctl(EPOLL_CTL_MOD, fd, EPOLLIN | EPOLLOUT | EPOLLET, tok);
+            }
+            After::DisarmOut(fd) => {
+                let _ = self.epoll.ctl(EPOLL_CTL_MOD, fd, EPOLLIN | EPOLLET, tok);
+            }
+        }
+    }
+
+    /// Close a connection. Slots with in-flight or parked work linger
+    /// (marked dead) until that work resolves, so completions and wait
+    /// resolutions stay exactly-once; dropping the `TcpStream` closes the
+    /// fd, which also deregisters it from epoll.
+    fn close_token(&mut self, tok: u64) {
+        let defer = match self.slab.get_mut(tok) {
+            None => return,
+            Some(conn) => {
+                if conn.busy || conn.parked.is_some() {
+                    conn.dead = true;
+                    true
+                } else {
+                    false
+                }
+            }
+        };
+        if !defer {
+            self.slab.remove(tok);
+        }
+    }
+
+    /// Reap a dead slot once nothing references it anymore.
+    fn maybe_reap(&mut self, tok: u64) {
+        let reap = matches!(
+            self.slab.get_mut(tok),
+            Some(c) if c.dead && !c.busy && c.parked.is_none()
+        );
+        if reap {
+            self.slab.remove(tok);
+        }
+    }
+
+    // ---- shutdown ----------------------------------------------------------
+
+    fn cleanup(&mut self) {
+        self.shutting_down = true;
+        // Let in-flight requests land so their responses (the SHUTDOWN ack
+        // among them) reach their sockets.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.comps.inflight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.drain_completions();
+        // Resolve still-parked waits exactly once (settled or a typed
+        // shutdown error) so no client hangs on a dead socket.
+        for tok in std::mem::take(&mut self.parked_tokens) {
+            let taken = self.slab.get_mut(tok).and_then(|c| c.parked.take());
+            if let Some(pw) = taken {
+                let resp = self.daemon.poll_wait(&pw.ticket).unwrap_or_else(|| {
+                    self.daemon.reject_wait(&pw.ticket, "daemon is shutting down")
+                });
+                let rendered = self.daemon.finish_wait(&pw, resp);
+                self.queue_response(tok, &rendered);
+            }
+        }
+        self.parked_gauge.store(0, Ordering::Relaxed);
+        // Flush queued responses until they drain or a bounded deadline —
+        // a single nonblocking attempt would drop the SHUTDOWN ack (or a
+        // resolved WAIT's reply) on the floor whenever the socket buffer
+        // pushed back, breaking the "responses are flushed" shutdown
+        // contract. Everything drops (and closes) with self afterwards.
+        let flush_deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let mut pending = false;
+            for tok in self.slab.tokens() {
+                self.try_flush(tok);
+                if let Some(conn) = self.slab.get_mut(tok) {
+                    if !conn.dead && conn.write_pos < conn.write_buf.len() {
+                        pending = true;
+                    }
+                }
+            }
+            if !pending || Instant::now() >= flush_deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_roundtrip() {
+        let t = token(7, 42);
+        assert_eq!(token_idx(t), 7);
+        assert_eq!(token_gen(t), 42);
+        assert_ne!(t, TOKEN_LISTENER);
+        assert_ne!(t, TOKEN_WAKER);
+    }
+
+    #[test]
+    fn slab_generation_invalidates_stale_tokens() {
+        fn conn_stub() -> Conn {
+            // A connected-but-unused socket pair via a loopback listener.
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let stream = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+            let now = Instant::now();
+            Conn {
+                stream,
+                read_buf: Vec::new(),
+                read_pos: 0,
+                scan_pos: 0,
+                write_buf: Vec::new(),
+                write_pos: 0,
+                version: ProtocolVersion::V1,
+                busy: false,
+                parked: None,
+                dead: false,
+                peer_eof: false,
+                wants_write: false,
+                idle_deadline: now,
+                idle_timer_armed: false,
+                accepted_at: now,
+                first_byte_sent: false,
+            }
+        }
+        let mut slab = Slab::default();
+        let t1 = slab.insert(conn_stub());
+        assert!(slab.get_mut(t1).is_some());
+        assert!(slab.remove(t1).is_some());
+        assert!(slab.get_mut(t1).is_none(), "freed token must not resolve");
+        let t2 = slab.insert(conn_stub());
+        assert_eq!(token_idx(t1), token_idx(t2), "slot reused");
+        assert_ne!(t1, t2, "generation must differ");
+        assert!(slab.get_mut(t1).is_none(), "stale token must not resolve");
+        assert!(slab.get_mut(t2).is_some());
+    }
+
+    #[test]
+    fn take_line_handles_partials_and_crlf() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let now = Instant::now();
+        let mut conn = Conn {
+            stream,
+            read_buf: Vec::new(),
+            read_pos: 0,
+            scan_pos: 0,
+            write_buf: Vec::new(),
+            write_pos: 0,
+            version: ProtocolVersion::V1,
+            busy: false,
+            parked: None,
+            dead: false,
+            peer_eof: false,
+            wants_write: false,
+            idle_deadline: now,
+            idle_timer_armed: false,
+            accepted_at: now,
+            first_byte_sent: false,
+        };
+        conn.read_buf.extend_from_slice(b"PI");
+        assert!(conn.take_line().is_none());
+        conn.read_buf.extend_from_slice(b"NG\r\nUT");
+        assert_eq!(conn.take_line().as_deref(), Some("PING"));
+        assert!(conn.take_line().is_none());
+        conn.read_buf.extend_from_slice(b"IL\n");
+        assert_eq!(conn.take_line().as_deref(), Some("UTIL"));
+        assert!(conn.take_line().is_none());
+        assert!(conn.read_buf.is_empty());
+
+        // Deep pipelined backlog: every line extracted intact and the
+        // consumed prefix is compacted away (bounded buffer, no O(N²)).
+        for _ in 0..2000 {
+            conn.read_buf.extend_from_slice(b"PING\n");
+        }
+        let mut n = 0;
+        for _ in 0..1000 {
+            assert_eq!(conn.take_line().as_deref(), Some("PING"));
+            n += 1;
+        }
+        assert!(
+            conn.read_buf.len() < 6_000,
+            "consumed prefix never compacted ({} bytes retained)",
+            conn.read_buf.len()
+        );
+        while let Some(l) = conn.take_line() {
+            assert_eq!(l, "PING");
+            n += 1;
+        }
+        assert_eq!(n, 2000);
+        assert!(conn.read_buf.is_empty());
+    }
+}

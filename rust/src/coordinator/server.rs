@@ -1,41 +1,66 @@
-//! TCP server: line-based request/response over a worker pool.
+//! TCP server: line-based request/response front door.
 //!
 //! Responses may span multiple lines and are terminated by one blank line.
 //! Each connection starts in protocol v1 and may upgrade with `HELLO v2`;
-//! the negotiated version is per-connection state held here. Idle
-//! connections are expired after [`Server::idle_timeout`] so a silent client
-//! cannot pin a worker thread forever.
+//! the negotiated version is per-connection state. Requests on one
+//! connection are answered strictly in order, so clients may **pipeline**
+//! (write several request lines before reading the responses).
 //!
-//! **Blocked `WAIT`s do not pin workers either.** When a `WAIT` cannot
-//! complete immediately the daemon parks it
-//! ([`crate::coordinator::daemon::LineOutcome::Parked`]) and the whole
-//! connection moves into the server's waiter registry; the worker goes back
-//! to the accept queue. A single notifier thread subscribes to the daemon's
-//! completion generation, resolves parked waits as their jobs dispatch
-//! (or their deadlines pass), writes the deferred responses, and hands the
-//! connections back to the pool to keep serving. Hundreds of concurrent
-//! `WAIT`s therefore ride on a pool of two.
+//! On **Linux** the server is a single-threaded `epoll` reactor
+//! ([`super::reactor`]): the listener and every connection are nonblocking
+//! and edge-triggered, idle connections cost no thread and no poll tick,
+//! complete request lines are dispatched to the small worker pool, and
+//! parked `WAIT`s resolve off the daemon's completion hub through an
+//! eventfd. Other targets keep the portable threadpool server below: one
+//! pool worker drives each live connection, blocked `WAIT`s detach into a
+//! waiter registry ([`crate::coordinator::daemon::LineOutcome::Parked`])
+//! so they never pin workers, and a notifier thread resolves them.
+//!
+//! Accept errors on both paths back off exponentially (1 ms → 1 s ceiling,
+//! reset on the next successful accept) and are counted in
+//! [`DaemonMetrics::accept_errors`](super::metrics::DaemonMetrics) — a flat
+//! 50 ms sleep used to hide persistent failures from the metrics entirely.
 
-use super::api::{ProtocolVersion, Response};
-use super::daemon::{Daemon, LineOutcome, ParkedWait};
+use super::daemon::Daemon;
 use super::threadpool::ThreadPool;
 use crate::util::error::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::net::{SocketAddr, TcpListener};
+#[cfg(target_os = "linux")]
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[cfg(not(target_os = "linux"))]
+use {
+    super::api::{ProtocolVersion, Response},
+    super::daemon::{LineOutcome, ParkedWait},
+    std::io::{BufRead, BufReader, Write},
+    std::net::TcpStream,
+    std::sync::atomic::Ordering,
+    std::sync::Mutex,
+    std::time::Instant,
+};
 
 /// Default idle-connection expiry.
 pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
+/// First accept-error backoff step (doubles per consecutive error).
+#[cfg(not(target_os = "linux"))]
+const ACCEPT_BACKOFF_START: Duration = Duration::from_millis(1);
+/// Accept-error backoff ceiling.
+#[cfg(not(target_os = "linux"))]
+const ACCEPT_BACKOFF_CEILING: Duration = Duration::from_secs(1);
+
 /// Longest the notifier thread sleeps between deadline sweeps (a
 /// completion notify ends the sleep early).
+#[cfg(not(target_os = "linux"))]
 const WAITER_TICK: Duration = Duration::from_millis(20);
 
 /// Cap on concurrently parked `WAIT`s. Detaching waits from the worker
 /// pool removed the pool-size back-pressure; without a cap a client could
 /// park an unbounded number of sockets for up to `MAX_WAIT_SECS` each.
 /// Past the cap a `WAIT` fails fast with an `unsupported` error.
+#[cfg(not(target_os = "linux"))]
 const MAX_PARKED_WAITS: usize = 4096;
 
 /// The TCP front-end.
@@ -44,27 +69,35 @@ pub struct Server {
     daemon: Arc<Daemon>,
     pool: Arc<ThreadPool>,
     idle_timeout: Duration,
+    /// Parked-`WAIT` gauge the Linux reactor maintains.
+    #[cfg(target_os = "linux")]
+    parked_gauge: Arc<AtomicUsize>,
+    #[cfg(not(target_os = "linux"))]
     parked: Arc<ParkedWaits>,
 }
 
 impl Server {
     /// Bind to an address (use port 0 for an ephemeral port) with the
-    /// default idle timeout.
+    /// default idle timeout. `workers` sizes the request-handling pool; on
+    /// Linux connections themselves are multiplexed on one reactor thread,
+    /// so the pool only bounds concurrently *executing* requests.
     pub fn bind(daemon: Arc<Daemon>, addr: &str, workers: usize) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        // Non-blocking accept so the loop can observe shutdown.
+        // Non-blocking accept so the serve loop can observe shutdown.
         listener.set_nonblocking(true).context("set_nonblocking")?;
         Ok(Self {
             listener,
             daemon,
             pool: Arc::new(ThreadPool::new(workers.max(1))),
             idle_timeout: DEFAULT_IDLE_TIMEOUT,
+            #[cfg(target_os = "linux")]
+            parked_gauge: Arc::new(AtomicUsize::new(0)),
+            #[cfg(not(target_os = "linux"))]
             parked: Arc::new(ParkedWaits::default()),
         })
     }
 
-    /// Builder: expire connections with no complete request for `d`,
-    /// recycling their worker back into the pool.
+    /// Builder: expire connections with no complete request for `d`.
     pub fn with_idle_timeout(mut self, d: Duration) -> Self {
         self.idle_timeout = d;
         self
@@ -77,28 +110,60 @@ impl Server {
 
     /// Connections currently parked in a blocked `WAIT` (tests/ops).
     pub fn parked_waits(&self) -> usize {
-        self.parked.len()
+        #[cfg(target_os = "linux")]
+        {
+            self.parked_gauge.load(std::sync::atomic::Ordering::Relaxed)
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            self.parked.len()
+        }
     }
 
     /// Serve until the daemon shuts down.
+    #[cfg(target_os = "linux")]
+    pub fn serve(&self) {
+        super::reactor::serve(
+            &self.listener,
+            &self.daemon,
+            &self.pool,
+            self.idle_timeout,
+            &self.parked_gauge,
+        );
+    }
+
+    /// Serve until the daemon shuts down (portable threadpool path).
+    #[cfg(not(target_os = "linux"))]
     pub fn serve(&self) {
         let waiter = self.spawn_waiter();
+        let mut backoff = ACCEPT_BACKOFF_START;
         while self.daemon.is_running() {
             match self.listener.accept() {
-                Ok((stream, _peer)) => match Conn::new(stream, self.idle_timeout) {
-                    Ok(conn) => {
-                        let daemon = Arc::clone(&self.daemon);
-                        let parked = Arc::clone(&self.parked);
-                        self.pool.execute(move || drive_connection(conn, daemon, parked));
+                Ok((stream, _peer)) => {
+                    backoff = ACCEPT_BACKOFF_START;
+                    self.daemon
+                        .metrics
+                        .connections_accepted
+                        .fetch_add(1, Ordering::Relaxed);
+                    match Conn::new(stream, self.idle_timeout) {
+                        Ok(conn) => {
+                            let daemon = Arc::clone(&self.daemon);
+                            let parked = Arc::clone(&self.parked);
+                            self.pool.execute(move || drive_connection(conn, daemon, parked));
+                        }
+                        Err(e) => eprintln!("connection setup error: {e:#}"),
                     }
-                    Err(e) => eprintln!("connection setup error: {e:#}"),
-                },
+                }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(10));
                 }
                 Err(e) => {
+                    // Count and back off exponentially: a persistent accept
+                    // failure (EMFILE, …) should neither spin nor hide.
+                    self.daemon.metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
                     eprintln!("accept error: {e}");
-                    std::thread::sleep(Duration::from_millis(50));
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(ACCEPT_BACKOFF_CEILING);
                 }
             }
         }
@@ -108,6 +173,7 @@ impl Server {
     /// Spawn the waiter/notifier thread: resolves parked `WAIT`s on
     /// completion notifies and deadline sweeps, then recycles their
     /// connections into the worker pool.
+    #[cfg(not(target_os = "linux"))]
     fn spawn_waiter(&self) -> std::thread::JoinHandle<()> {
         let daemon = Arc::clone(&self.daemon);
         let parked = Arc::clone(&self.parked);
@@ -156,11 +222,13 @@ impl Server {
 }
 
 /// The registry of connections blocked in `WAIT`.
+#[cfg(not(target_os = "linux"))]
 #[derive(Default)]
 struct ParkedWaits {
     inner: Mutex<ParkedInner>,
 }
 
+#[cfg(not(target_os = "linux"))]
 #[derive(Default)]
 struct ParkedInner {
     sessions: Vec<ParkedSession>,
@@ -170,11 +238,13 @@ struct ParkedInner {
 }
 
 /// One parked connection: the socket state plus the wait it blocks on.
+#[cfg(not(target_os = "linux"))]
 struct ParkedSession {
     conn: Conn,
     wait: ParkedWait,
 }
 
+#[cfg(not(target_os = "linux"))]
 impl ParkedWaits {
     fn len(&self) -> usize {
         self.inner
@@ -244,6 +314,7 @@ impl ParkedWaits {
 }
 
 /// Per-connection socket state, detachable from its worker thread.
+#[cfg(not(target_os = "linux"))]
 struct Conn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -251,9 +322,12 @@ struct Conn {
     line: String,
     idle_timeout: Duration,
     last_activity: Instant,
+    accepted_at: Instant,
+    first_byte_sent: bool,
 }
 
 /// Why a connection left its serve loop.
+#[cfg(not(target_os = "linux"))]
 enum ConnExit {
     /// Peer gone, idle-expired, or daemon stopped: drop the connection.
     Closed,
@@ -261,6 +335,7 @@ enum ConnExit {
     Parked(ParkedWait),
 }
 
+#[cfg(not(target_os = "linux"))]
 impl Conn {
     fn new(stream: TcpStream, idle_timeout: Duration) -> Result<Self> {
         stream.set_nodelay(true).ok();
@@ -279,6 +354,8 @@ impl Conn {
             line: String::new(),
             idle_timeout,
             last_activity: Instant::now(),
+            accepted_at: Instant::now(),
+            first_byte_sent: false,
         })
     }
 
@@ -305,6 +382,12 @@ impl Conn {
                             }
                             if self.write_response(&resp).is_err() {
                                 return ConnExit::Closed; // peer gone
+                            }
+                            if !self.first_byte_sent {
+                                self.first_byte_sent = true;
+                                daemon.metrics.record_accept_to_first_byte(
+                                    self.accepted_at.elapsed().as_nanos() as u64,
+                                );
                             }
                             // Handling time must not count as idle.
                             self.last_activity = Instant::now();
@@ -339,6 +422,7 @@ impl Conn {
 
 /// Run a connection's serve loop on a pool worker; a parked `WAIT` hands
 /// the connection to the waiter registry and frees the worker.
+#[cfg(not(target_os = "linux"))]
 fn drive_connection(mut conn: Conn, daemon: Arc<Daemon>, parked: Arc<ParkedWaits>) {
     loop {
         match conn.serve(&daemon) {
@@ -373,12 +457,15 @@ fn drive_connection(mut conn: Conn, daemon: Arc<Daemon>, parked: Arc<ParkedWaits
 mod tests {
     use super::*;
     use crate::cluster::{topology, PartitionLayout};
-    use crate::coordinator::api::{SqueueFilter, SubmitSpec};
+    use crate::coordinator::api::{Request, Response, SqueueFilter, SubmitSpec};
     use crate::coordinator::client::Client;
     use crate::coordinator::daemon::DaemonConfig;
     use crate::job::{JobType, QosClass};
     use crate::sched::SchedulerConfig;
     use crate::sim::SchedCosts;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::Instant;
 
     fn spawn_server() -> (Arc<Daemon>, SocketAddr, std::thread::JoinHandle<()>) {
         spawn_server_with(DEFAULT_IDLE_TIMEOUT, 2, 4096)
@@ -399,6 +486,7 @@ mod tests {
                 // Keep retirement out of the server tests (wall-timing
                 // coupling at high speedup).
                 retire_grace_secs: Some(86_400.0),
+                ..DaemonConfig::default()
             },
         );
         let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", workers)
@@ -407,6 +495,21 @@ mod tests {
         let addr = server.local_addr().unwrap();
         let handle = std::thread::spawn(move || server.serve());
         (daemon, addr, handle)
+    }
+
+    /// Read one blank-line-terminated response from a raw socket.
+    fn read_raw_response(reader: &mut BufReader<TcpStream>) -> String {
+        let mut out = String::new();
+        loop {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).expect("read response");
+            assert!(n > 0, "server closed mid-response (got {out:?})");
+            if line == "\n" {
+                break;
+            }
+            out.push_str(&line);
+        }
+        out.trim_end_matches('\n').to_string()
     }
 
     #[test]
@@ -477,7 +580,7 @@ mod tests {
         // Go silent past the idle timeout: the server must close us.
         std::thread::sleep(Duration::from_millis(900));
         assert!(idle.request("PING").is_err(), "idle connection must expire");
-        // The recycled worker serves a fresh connection fine.
+        // A fresh connection is served fine afterwards.
         let mut fresh = Client::connect(&addr.to_string()).unwrap();
         assert_eq!(fresh.request("PING").unwrap(), "OK pong");
         daemon.shutdown();
@@ -487,12 +590,12 @@ mod tests {
     #[test]
     fn parked_waits_do_not_pin_workers() {
         // A 2-worker pool holds 4 concurrent blocked WAITs *and* keeps
-        // serving: blocked waits park in the waiter registry instead of
-        // pinning workers. The waited-on job exceeds the 100-core user
-        // limit, so only the timeout can resolve the waits.
+        // serving: blocked waits park off the pool instead of pinning
+        // workers. The waited-on job exceeds the 100-core user limit, so
+        // only the timeout can resolve the waits.
         let (daemon, addr, handle) = spawn_server_with(DEFAULT_IDLE_TIMEOUT, 2, 100);
         let addr_s = addr.to_string();
-        // Scope the submitter so its (idle) connection does not pin a
+        // Scope the submitter so its (idle) connection does not occupy a
         // worker for the rest of the test.
         let ack = {
             let mut submitter = Client::connect_v2(&addr_s).unwrap();
@@ -582,5 +685,82 @@ mod tests {
         let mut c = Client::connect(&addr.to_string()).unwrap();
         assert!(c.request("SHUTDOWN").unwrap().starts_with("OK"));
         handle.join().unwrap(); // server loop must exit
+    }
+
+    #[test]
+    fn slow_loris_partial_lines_parse_exactly_once() {
+        // One byte per write, with pauses that force the bytes across
+        // separate readiness events: the partially-read line must stay
+        // buffered and yield exactly one parsed request — never a spliced
+        // or dropped line.
+        let (daemon, addr, handle) = spawn_server();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        for b in b"PING\n" {
+            writer.write_all(&[*b]).unwrap();
+            writer.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(read_raw_response(&mut reader), "OK pong");
+        // Now two requests spliced across odd chunk boundaries.
+        for chunk in [b"PI".as_slice(), b"NG\nPI".as_slice(), b"NG\n".as_slice()] {
+            writer.write_all(chunk).unwrap();
+            writer.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(read_raw_response(&mut reader), "OK pong");
+        assert_eq!(read_raw_response(&mut reader), "OK pong");
+        // Exactly three PINGs parsed — no splice, no drop, no duplicate.
+        let pings = daemon
+            .metrics
+            .command_counts()
+            .into_iter()
+            .find(|(cmd, _)| *cmd == "PING")
+            .map(|(_, n)| n)
+            .unwrap();
+        assert_eq!(pings, 3);
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_order() {
+        let (daemon, addr, handle) = spawn_server();
+        let mut c = Client::connect_v2(&addr.to_string()).unwrap();
+        let resps = c
+            .pipeline(&[Request::Ping, Request::Util, Request::Ping])
+            .unwrap();
+        assert_eq!(resps.len(), 3);
+        assert_eq!(resps[0], Response::Pong);
+        assert!(matches!(&resps[1], Response::Util(u) if u.total_cores == 608));
+        assert_eq!(resps[2], Response::Pong);
+        // The connection keeps serving normal round trips afterwards.
+        c.ping().unwrap();
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    /// The reactor's zero-poll guarantee at test scale: established idle
+    /// connections produce no reactor wakeups at all.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn idle_connections_do_not_wake_the_reactor() {
+        use std::sync::atomic::Ordering;
+        let (daemon, addr, handle) = spawn_server();
+        let addr_s = addr.to_string();
+        let mut idle: Vec<Client> = (0..3).map(|_| Client::connect(&addr_s).unwrap()).collect();
+        for c in &mut idle {
+            assert_eq!(c.request("PING").unwrap(), "OK pong");
+        }
+        // Let the last completions drain, then watch the wakeup counter.
+        std::thread::sleep(Duration::from_millis(150));
+        let w0 = daemon.metrics.reactor_wakeups.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(400));
+        let delta = daemon.metrics.reactor_wakeups.load(Ordering::Relaxed) - w0;
+        assert!(delta <= 2, "idle connections woke the reactor {delta} times");
+        daemon.shutdown();
+        handle.join().unwrap();
     }
 }

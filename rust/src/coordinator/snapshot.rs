@@ -139,7 +139,7 @@ pub struct SchedSnapshot {
     /// The scheduler change tick this snapshot reflects.
     pub version: u64,
     /// The job-table signature the `jobs` table reflects (gates rebuilds).
-    jobs_sig: (usize, u64, usize, u64),
+    jobs_sig: (usize, u64, u64, u64),
     /// Scheduler counters.
     pub stats: SchedStats,
     /// Priority scorer backend name.
@@ -310,10 +310,20 @@ pub(crate) fn wait_view_of<'a>(views: impl Iterator<Item = Option<&'a JobView>>)
 /// checking the snapshot makes the protocol lose-free: any publish between
 /// the check and the park moves the generation, so the park returns
 /// immediately.
+///
+/// Besides condvar waiters, the hub carries **wakers**: registered
+/// callbacks invoked on every [`WaitHub::notify`]. The Linux connection
+/// reactor subscribes one that writes its eventfd, so a completion notify
+/// wakes `epoll_wait` directly — no dedicated waiter thread sits between
+/// the publish path and the parked connections. Wakers must be cheap and
+/// lock-free (`notify` runs on the publish path, often with the scheduler
+/// mutex held by the caller).
 #[derive(Default)]
 pub struct WaitHub {
     generation: Mutex<u64>,
     cv: Condvar,
+    wakers: Mutex<Vec<(u64, Box<dyn Fn() + Send + Sync>)>>,
+    next_waker: Mutex<u64>,
 }
 
 impl WaitHub {
@@ -322,11 +332,35 @@ impl WaitHub {
         *self.generation.lock().expect("wait hub poisoned")
     }
 
-    /// Announce progress: bump the generation and wake every parked waiter.
+    /// Register a waker invoked on every notify. Returns an id for
+    /// [`WaitHub::unsubscribe`].
+    pub fn subscribe(&self, f: Box<dyn Fn() + Send + Sync>) -> u64 {
+        let mut next = self.next_waker.lock().expect("wait hub poisoned");
+        let id = *next;
+        *next += 1;
+        drop(next);
+        self.wakers.lock().expect("wait hub poisoned").push((id, f));
+        id
+    }
+
+    /// Remove a waker registered with [`WaitHub::subscribe`].
+    pub fn unsubscribe(&self, id: u64) {
+        self.wakers
+            .lock()
+            .expect("wait hub poisoned")
+            .retain(|(wid, _)| *wid != id);
+    }
+
+    /// Announce progress: bump the generation and wake every parked waiter
+    /// and registered waker.
     pub fn notify(&self) {
         let mut g = self.generation.lock().expect("wait hub poisoned");
         *g = g.wrapping_add(1);
         self.cv.notify_all();
+        drop(g);
+        for (_, waker) in self.wakers.lock().expect("wait hub poisoned").iter() {
+            waker();
+        }
     }
 
     /// Park until the generation moves past `seen` or `timeout` elapses.
@@ -533,5 +567,22 @@ mod tests {
         // A stale `seen` returns immediately (lose-free protocol).
         let g3 = hub.wait_change(seen, Duration::from_secs(5));
         assert_eq!(g3, g2);
+    }
+
+    #[test]
+    fn hub_wakers_fire_per_notify_until_unsubscribed() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let hub = WaitHub::default();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hits);
+        let id = hub.subscribe(Box::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        hub.notify();
+        hub.notify();
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        hub.unsubscribe(id);
+        hub.notify();
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "unsubscribed waker fired");
     }
 }

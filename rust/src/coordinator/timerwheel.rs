@@ -1,0 +1,258 @@
+//! A hashed timer wheel for the connection reactor.
+//!
+//! The reactor tracks one idle deadline per connection plus one deadline per
+//! parked `WAIT`; with thousands of connections a sorted structure would pay
+//! O(log n) per re-arm and the naive "scan everything each tick" is exactly
+//! the per-connection poll cost the reactor exists to remove. The wheel
+//! gives O(1) insertion and amortized O(1) expiry: a deadline hashes into
+//! one of `slots` buckets of width `granularity`; [`TimerWheel::expire`]
+//! drains only the buckets the clock actually crossed. Deadlines further
+//! out than one revolution stay in their bucket and are re-examined once
+//! per revolution (cheap: a comparison), which keeps the structure a single
+//! level instead of a hierarchy.
+//!
+//! Entries are never removed early. The reactor uses **lazy invalidation**:
+//! each entry carries a token + generation, and a fired entry whose
+//! connection has moved on (new deadline, closed slot, reused slot) is
+//! simply dropped or re-inserted by the expiry callback. That makes re-arm
+//! (the per-request hot path) allocation- and search-free.
+
+use std::time::{Duration, Instant};
+
+/// A single-level hashed timer wheel. `T` is the caller's timer payload.
+pub struct TimerWheel<T> {
+    /// All deadlines are stored as whole milliseconds since this origin so
+    /// bucket math is integral.
+    origin: Instant,
+    /// Bucket width in milliseconds.
+    gran_ms: u64,
+    /// `slots[tick % slots.len()]` holds `(deadline_ms, item)` pairs.
+    slots: Vec<Vec<(u64, T)>>,
+    /// Smallest deadline per bucket (`u64::MAX` when empty): lets a sweep
+    /// refresh the global minimum in O(buckets) instead of O(entries) — at
+    /// thousands of idle-connection deadlines, an O(entries) rescan per
+    /// fired timer would put a per-idle-connection cost on the reactor.
+    bucket_min: Vec<u64>,
+    /// Every tick strictly below `cursor` has been drained of due entries.
+    cursor: u64,
+    /// Live entries across all buckets.
+    len: usize,
+    /// Smallest deadline among live entries (`u64::MAX` when empty);
+    /// maintained on insert, refreshed from `bucket_min` after a sweep
+    /// that removed entries.
+    earliest_ms: u64,
+}
+
+impl<T> TimerWheel<T> {
+    /// A wheel of `slots` buckets of `granularity` each. The horizon
+    /// (`slots × granularity`) only bounds how often a far-future entry is
+    /// re-examined, not how far out a deadline may be.
+    pub fn new(granularity: Duration, slots: usize) -> Self {
+        assert!(slots > 0, "wheel needs at least one slot");
+        let gran_ms = granularity.as_millis().max(1) as u64;
+        Self {
+            origin: Instant::now(),
+            gran_ms,
+            slots: (0..slots).map(|_| Vec::new()).collect(),
+            bucket_min: vec![u64::MAX; slots],
+            cursor: 0,
+            len: 0,
+            earliest_ms: u64::MAX,
+        }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// No live entries?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn ms_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.origin).as_millis() as u64
+    }
+
+    /// Schedule `item` at `deadline`. Deadlines in the past fire on the next
+    /// [`TimerWheel::expire`] call.
+    pub fn insert(&mut self, deadline: Instant, item: T) {
+        let ms = self.ms_of(deadline);
+        // A deadline the cursor already passed would land in a drained
+        // bucket and wait a whole revolution; pin it to the cursor tick so
+        // the next sweep sees it.
+        let tick = (ms / self.gran_ms).max(self.cursor);
+        let slot = (tick % self.slots.len() as u64) as usize;
+        self.slots[slot].push((ms, item));
+        self.bucket_min[slot] = self.bucket_min[slot].min(ms);
+        self.len += 1;
+        self.earliest_ms = self.earliest_ms.min(ms);
+    }
+
+    /// The earliest pending deadline (what the reactor sleeps until).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.origin + Duration::from_millis(self.earliest_ms))
+        }
+    }
+
+    /// Pop every entry whose deadline is at or before `now` into `f`,
+    /// advancing the cursor. Entries hashed into a crossed bucket but due
+    /// in a later revolution are kept in place.
+    pub fn expire(&mut self, now: Instant, mut f: impl FnMut(T)) {
+        let now_ms = self.ms_of(now);
+        let now_tick = now_ms / self.gran_ms;
+        if self.len == 0 {
+            self.cursor = now_tick;
+            return;
+        }
+        if now_tick < self.cursor {
+            return; // clock has not crossed into an undrained tick yet
+        }
+        let nslots = self.slots.len() as u64;
+        // One full revolution visits every bucket, so cap the walk there:
+        // after it, anything still stored is due in the future.
+        let last = now_tick.min(self.cursor + nslots - 1);
+        let mut tick = self.cursor;
+        let mut fired_any = false;
+        while tick <= last {
+            let slot = (tick % nslots) as usize;
+            let bucket = &mut self.slots[slot];
+            let mut i = 0;
+            let mut kept_min = u64::MAX;
+            while i < bucket.len() {
+                if bucket[i].0 <= now_ms {
+                    let (_, item) = bucket.swap_remove(i);
+                    self.len -= 1;
+                    fired_any = true;
+                    f(item);
+                } else {
+                    kept_min = kept_min.min(bucket[i].0);
+                    i += 1;
+                }
+            }
+            // We saw every kept entry, so this is the bucket's exact min.
+            self.bucket_min[slot] = kept_min;
+            tick += 1;
+        }
+        // The bucket for `now_tick` may still hold entries due later within
+        // this same tick — leave the cursor *on* it so they are re-checked.
+        self.cursor = now_tick;
+        // Refresh the cached global minimum only when an entry actually
+        // left the wheel (it can only shrink on insert, only grow via
+        // removal), and from the per-bucket minima — O(buckets), never
+        // O(entries), so a fired timer does not pay for every idle
+        // connection's far-out deadline.
+        if fired_any {
+            self.earliest_ms = if self.len == 0 {
+                u64::MAX
+            } else {
+                self.bucket_min.iter().copied().min().unwrap_or(u64::MAX)
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wheel() -> TimerWheel<u32> {
+        TimerWheel::new(Duration::from_millis(10), 16)
+    }
+
+    #[test]
+    fn fires_due_entries_in_any_order() {
+        let mut w = wheel();
+        let now = Instant::now();
+        w.insert(now + Duration::from_millis(5), 1);
+        w.insert(now + Duration::from_millis(25), 2);
+        w.insert(now + Duration::from_millis(500), 3);
+        assert_eq!(w.len(), 3);
+        let mut fired = Vec::new();
+        w.expire(now + Duration::from_millis(30), |x| fired.push(x));
+        fired.sort_unstable();
+        assert_eq!(fired, vec![1, 2]);
+        assert_eq!(w.len(), 1);
+        // The far entry fires once the clock reaches it.
+        let mut fired = Vec::new();
+        w.expire(now + Duration::from_millis(600), |x| fired.push(x));
+        assert_eq!(fired, vec![3]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn past_deadlines_fire_on_next_expire() {
+        let mut w = wheel();
+        let now = Instant::now();
+        w.expire(now + Duration::from_millis(200), |_| {});
+        // Insert behind the cursor: must still fire promptly.
+        w.insert(now, 7);
+        let mut fired = Vec::new();
+        w.expire(now + Duration::from_millis(201), |x| fired.push(x));
+        assert_eq!(fired, vec![7]);
+    }
+
+    #[test]
+    fn beyond_horizon_entries_survive_revolutions() {
+        let mut w = TimerWheel::new(Duration::from_millis(10), 4); // 40ms horizon
+        let now = Instant::now();
+        w.insert(now + Duration::from_millis(95), 9);
+        // Sweep several times inside the horizon: nothing fires, and the
+        // cached minimum survives the no-op sweeps.
+        for step in [10u64, 30, 60, 90] {
+            let mut fired = Vec::new();
+            w.expire(now + Duration::from_millis(step), |x| fired.push(x));
+            assert!(fired.is_empty(), "fired early at +{step}ms");
+            assert!(w.next_deadline().is_some(), "min lost by a no-op sweep");
+        }
+        let mut fired = Vec::new();
+        w.expire(now + Duration::from_millis(120), |x| fired.push(x));
+        assert_eq!(fired, vec![9]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_minimum() {
+        let mut w = wheel();
+        assert!(w.next_deadline().is_none());
+        let now = Instant::now();
+        w.insert(now + Duration::from_millis(80), 1);
+        w.insert(now + Duration::from_millis(20), 2);
+        let nd = w.next_deadline().unwrap();
+        assert!(nd <= now + Duration::from_millis(21), "min not tracked");
+        w.expire(now + Duration::from_millis(40), |_| {});
+        let nd = w.next_deadline().unwrap();
+        assert!(nd >= now + Duration::from_millis(70), "min not recomputed");
+    }
+
+    #[test]
+    fn same_tick_later_entry_is_rechecked() {
+        // An entry due in the same wheel tick as `now` but a few ms later
+        // must not be skipped when the cursor lands on its bucket.
+        let mut w = TimerWheel::new(Duration::from_millis(100), 8);
+        let now = Instant::now();
+        w.insert(now + Duration::from_millis(60), 1);
+        let mut fired = Vec::new();
+        w.expire(now + Duration::from_millis(10), |x| fired.push(x));
+        assert!(fired.is_empty());
+        w.expire(now + Duration::from_millis(70), |x| fired.push(x));
+        assert_eq!(fired, vec![1]);
+    }
+
+    #[test]
+    fn large_population_drains_fully() {
+        let mut w = TimerWheel::new(Duration::from_millis(5), 32);
+        let now = Instant::now();
+        for i in 0..1000u32 {
+            w.insert(now + Duration::from_millis(u64::from(i % 200)), i);
+        }
+        let mut fired = 0usize;
+        w.expire(now + Duration::from_millis(300), |_| fired += 1);
+        assert_eq!(fired, 1000);
+        assert!(w.is_empty());
+        assert!(w.next_deadline().is_none());
+    }
+}

@@ -39,19 +39,48 @@ pub struct LogEntry {
     pub kind: LogKind,
 }
 
-/// Append-only scheduler event log.
+/// Append-mostly scheduler event log.
 ///
 /// Keeps O(1) first/last indexes per (job, kind): the measurement helpers
 /// are called on the simulator's hot path (`run_until_dispatched` polls
 /// them), and a linear scan of the log made large-burst experiments
 /// quadratic (see EXPERIMENTS.md §Perf).
+///
+/// The log is *bounded* for long-lived daemons: once a job is retired its
+/// entries are dead (the coordinator freezes everything queryable into a
+/// history view first), so [`EventLog::remove_job`] drops the job's
+/// indexes and marks its entries for compaction. The entries vector is
+/// compacted only when at least half of it is dead (classic half-dead
+/// amortization: O(1) amortized per entry, never a sweep per retirement).
+/// Monotone facts survive pruning: [`EventLog::appended_total`] counts
+/// every push ever (the job-table signature keys on it — a length that
+/// shrank and regrew could alias), and [`EventLog::count`] keeps counting
+/// entries ever logged per kind (the WAIT completion generation keys on
+/// `count(Ended)`).
 #[derive(Debug, Clone, Default)]
 pub struct EventLog {
     entries: Vec<LogEntry>,
     first_idx: HashMap<(JobId, LogKind), SimTime>,
     last_idx: HashMap<(JobId, LogKind), SimTime>,
     kind_counts: HashMap<LogKind, usize>,
+    /// Entries per still-indexed job (drives exact dead-entry accounting
+    /// and the compaction retain predicate).
+    per_job: HashMap<JobId, u32>,
+    /// Entries in `entries` whose job was removed.
+    dead: usize,
+    /// Total pushes ever (monotone under pruning).
+    appended: u64,
 }
+
+/// Every log-entry kind, for whole-job index removal.
+const ALL_KINDS: [LogKind; 6] = [
+    LogKind::Recognized,
+    LogKind::DispatchDone,
+    LogKind::Preempted,
+    LogKind::Requeued,
+    LogKind::Ended,
+    LogKind::CronPreempted,
+];
 
 /// A scheduling-time measurement over a set of jobs (one submission burst).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -84,16 +113,49 @@ impl EventLog {
         self.first_idx.entry((job, kind)).or_insert(time);
         self.last_idx.insert((job, kind), time);
         *self.kind_counts.entry(kind).or_insert(0) += 1;
+        *self.per_job.entry(job).or_insert(0) += 1;
+        self.appended += 1;
     }
 
-    /// All entries.
+    /// All retained entries (pruned jobs' entries are gone; see
+    /// [`EventLog::remove_job`]).
     pub fn entries(&self) -> &[LogEntry] {
         &self.entries
+    }
+
+    /// Total entries ever pushed — monotone even under pruning, which is
+    /// what makes it a sound change-signature component (a pruned-then-
+    /// regrown `entries().len()` could alias an old value).
+    pub fn appended_total(&self) -> u64 {
+        self.appended
     }
 
     /// Entries about one job.
     pub fn for_job(&self, job: JobId) -> impl Iterator<Item = &LogEntry> {
         self.entries.iter().filter(move |e| e.job == job)
+    }
+
+    /// Drop a retired job from the log: its first/last indexes go
+    /// immediately, its entries are marked dead and reclaimed by the next
+    /// half-dead compaction. Kind counts and [`EventLog::appended_total`]
+    /// stay monotone. Callers must have frozen anything they still need
+    /// (the daemon's history views) first.
+    pub fn remove_job(&mut self, job: JobId) {
+        let Some(n) = self.per_job.remove(&job) else {
+            return; // never logged, or already removed
+        };
+        for kind in ALL_KINDS {
+            self.first_idx.remove(&(job, kind));
+            self.last_idx.remove(&(job, kind));
+        }
+        self.dead += n as usize;
+        // Compact when at least half the vector is dead entries — O(live)
+        // per compaction, amortized O(1) per entry over the log's life.
+        if self.dead * 2 >= self.entries.len() && self.dead > 0 {
+            let per_job = &self.per_job;
+            self.entries.retain(|e| per_job.contains_key(&e.job));
+            self.dead = 0;
+        }
     }
 
     /// First entry of a kind for a job (O(1)).
@@ -106,7 +168,10 @@ impl EventLog {
         self.last_idx.get(&(job, kind)).copied()
     }
 
-    /// Count of entries of a kind (across all jobs, O(1)).
+    /// Count of entries of a kind **ever logged** (across all jobs, O(1)).
+    /// Monotone: pruning a retired job does not decrement it, so the WAIT
+    /// completion generation derived from `count(Ended)` never runs
+    /// backwards.
     pub fn count(&self, kind: LogKind) -> usize {
         self.kind_counts.get(&kind).copied().unwrap_or(0)
     }
@@ -197,6 +262,55 @@ mod tests {
         log.push(SimTime::from_secs(8), j, LogKind::DispatchDone);
         let m = log.measure_from(SimTime::from_secs(2), &[j]).unwrap();
         assert_eq!(m.total_secs, 6.0);
+    }
+
+    #[test]
+    fn remove_job_drops_indexes_and_compacts() {
+        let mut log = EventLog::default();
+        let (a, b) = (JobId(1), JobId(2));
+        log.push(SimTime::from_secs(1), a, LogKind::Recognized);
+        log.push(SimTime::from_secs(2), a, LogKind::DispatchDone);
+        log.push(SimTime::from_secs(3), a, LogKind::Ended);
+        log.push(SimTime::from_secs(4), b, LogKind::Recognized);
+        assert_eq!(log.appended_total(), 4);
+        log.remove_job(a);
+        // Indexes answer nothing for the pruned job…
+        assert!(log.first(a, LogKind::Recognized).is_none());
+        assert!(log.last(a, LogKind::DispatchDone).is_none());
+        assert!(log.measure(&[a]).is_none());
+        // …while the survivor is untouched.
+        assert_eq!(log.first(b, LogKind::Recognized), Some(SimTime::from_secs(4)));
+        // 3 of 4 entries were dead → compaction ran.
+        assert_eq!(log.entries().len(), 1);
+        assert_eq!(log.entries()[0].job, b);
+        // Monotone facts survive the prune.
+        assert_eq!(log.appended_total(), 4);
+        assert_eq!(log.count(LogKind::Ended), 1);
+        assert_eq!(log.count(LogKind::Recognized), 2);
+        // Removing twice (or an unknown job) is a no-op.
+        log.remove_job(a);
+        log.remove_job(JobId(99));
+        assert_eq!(log.entries().len(), 1);
+    }
+
+    #[test]
+    fn compaction_is_deferred_below_half_dead() {
+        let mut log = EventLog::default();
+        for i in 0..10u64 {
+            log.push(SimTime::from_secs(i), JobId(i), LogKind::Recognized);
+        }
+        log.remove_job(JobId(0)); // 1/10 dead: no sweep yet
+        assert_eq!(log.entries().len(), 10);
+        for i in 1..5u64 {
+            log.remove_job(JobId(i));
+        }
+        // 5/10 dead: compaction fires, only live jobs' entries remain.
+        assert_eq!(log.entries().len(), 5);
+        assert!(log.entries().iter().all(|e| e.job.0 >= 5));
+        // Appends keep working after a compaction.
+        log.push(SimTime::from_secs(99), JobId(42), LogKind::Recognized);
+        assert_eq!(log.entries().len(), 6);
+        assert_eq!(log.appended_total(), 11);
     }
 
     #[test]

@@ -273,9 +273,12 @@ impl Scheduler {
     /// adds a job, or bumps the resume counter). Counters and cluster
     /// occupancy are *not* covered — equal signatures across e.g. an empty
     /// scheduling pass let the coordinator share the previous snapshot's
-    /// job table instead of rebuilding it.
-    pub fn jobs_signature(&self) -> (usize, u64, usize, u64) {
-        (self.jobs.len(), self.next_id, self.log.entries().len(), self.resumes)
+    /// job table instead of rebuilding it. The log component is
+    /// [`EventLog::appended_total`], not the retained length: pruning
+    /// shrinks the vector, and a shrunk-then-regrown length could alias an
+    /// old signature and serve a stale table.
+    pub fn jobs_signature(&self) -> (usize, u64, u64, u64) {
+        (self.jobs.len(), self.next_id, self.log.appended_total(), self.resumes)
     }
 
     /// All job records, in ascending id order.
@@ -365,6 +368,18 @@ impl Scheduler {
             self.retired_total += out.len() as u64;
         }
         out
+    }
+
+    /// Drop retired jobs' event-log entries (indexes immediately, storage
+    /// via the log's amortized half-dead compaction). Callers freeze any
+    /// views they still need *before* this — afterwards the log answers
+    /// nothing for these ids. Pruning is invisible to the change signature
+    /// ([`Scheduler::jobs_signature`] keys on the monotone append total)
+    /// and to the WAIT generation (kind counts stay monotone).
+    pub fn prune_retired_log(&mut self, ids: impl IntoIterator<Item = JobId>) {
+        for id in ids {
+            self.log.remove_job(id);
+        }
     }
 
     /// QoS table (read access for tests and the experiments harness).
@@ -1405,6 +1420,33 @@ mod tests {
         assert_ne!(s.jobs_signature(), sig, "retirement must move the signature");
         assert_eq!(s.retired_total(), 1);
         assert!(!s.cancel(id), "retired job cannot be cancelled");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pruned_retired_log_keeps_monotone_facts() {
+        let mut s = baseline_sched();
+        let id = s.submit(
+            JobSpec::interactive(UserId(1), JobType::Individual, 1)
+                .with_run_time(SimTime::from_secs(1)),
+        );
+        assert!(s.run_until_dispatched(&[id], SimTime::from_secs(60)));
+        s.run_for(SimTime::from_secs(120));
+        let retired = s.retire_terminal(SimTime::from_secs(10));
+        assert_eq!(retired.len(), 1);
+        let appended = s.log().appended_total();
+        let ended = s.log().count(LogKind::Ended);
+        let sig = s.jobs_signature();
+        s.prune_retired_log(retired.iter().map(|j| j.id));
+        // The pruned job answers nothing anymore…
+        assert!(s.log().first(id, LogKind::Recognized).is_none());
+        assert!(s.log().last(id, LogKind::DispatchDone).is_none());
+        // …but the monotone facts (and so the signature) are unmoved.
+        assert_eq!(s.log().appended_total(), appended);
+        assert_eq!(s.log().count(LogKind::Ended), ended);
+        assert_eq!(s.jobs_signature(), sig, "pruning must not move the signature");
+        // Running on after a prune must stay sound.
+        s.run_for(SimTime::from_secs(60));
         s.check_invariants().unwrap();
     }
 

@@ -23,6 +23,7 @@ fn spawn_server(workers: usize) -> (Arc<Daemon>, String, std::thread::JoinHandle
             // second; keep retirement out of these protocol tests so
             // listing/wait assertions are not wall-timing coupled.
             retire_grace_secs: Some(86_400.0),
+            ..DaemonConfig::default()
         },
     );
     daemon.spawn_pacer();

@@ -24,6 +24,7 @@ fn spawn_cron_daemon() -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
             pacer_tick_ms: 1,
             // Keep retirement out of the TCP tests (wall-timing coupling).
             retire_grace_secs: Some(86_400.0),
+            ..DaemonConfig::default()
         },
     );
     let pacer_daemon = Arc::clone(&daemon);
