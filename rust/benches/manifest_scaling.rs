@@ -1,0 +1,52 @@
+//! CI bench gate: manifest-admission scaling (see
+//! `benchkit::manifest_scaling`).
+//!
+//! Lands the same N jobs three ways — one N-entry heterogeneous manifest,
+//! one homogeneous `count=N` batch, N per-job RPCs — and emits
+//! `BENCH_manifest.json` (override with `SPOTCLOUD_BENCH_JSON`). The JSON
+//! is written **before** the health asserts run, so a regressed run still
+//! surfaces its numbers in the CI artifact.
+//!
+//! Gate: heterogeneous manifest admission must cost ≤ 1.5× the homogeneous
+//! batch per job (the manifest generalizes the batch path; per-entry
+//! validation and range bookkeeping must not reintroduce a per-job tax).
+//!
+//! `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke configuration.
+
+use spotcloud::benchkit::manifest_scaling::{run_manifest_scaling, ManifestScalingConfig};
+
+fn main() {
+    let fast = std::env::var("SPOTCLOUD_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = if fast {
+        ManifestScalingConfig::quick()
+    } else {
+        ManifestScalingConfig::default()
+    };
+    eprintln!(
+        "manifest_scaling: {} entries (interactive+spot, 3 launch types, {} users), {} iters",
+        cfg.entries, cfg.users, cfg.iters
+    );
+    let report = run_manifest_scaling(&cfg);
+    eprintln!("{}", report.summary());
+
+    let path =
+        std::env::var("SPOTCLOUD_BENCH_JSON").unwrap_or_else(|_| "BENCH_manifest.json".into());
+    std::fs::write(&path, report.to_json()).expect("writing bench json");
+    println!("wrote {path}");
+
+    // Gates run AFTER the JSON write so a regressed run still surfaces its
+    // numbers in the CI artifact.
+    assert!(
+        report.all_accepted,
+        "a manifest entry was rejected: {report:?}"
+    );
+    assert!(
+        report.ids_contiguous,
+        "per-entry id ranges were not contiguous/ordered: {report:?}"
+    );
+    assert!(
+        report.manifest_vs_homog_ratio <= 1.5,
+        "heterogeneous manifest admission costs {:.2}x the homogeneous batch per job (gate 1.5x)",
+        report.manifest_vs_homog_ratio,
+    );
+}

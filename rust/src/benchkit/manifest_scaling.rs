@@ -1,0 +1,261 @@
+//! Manifest-admission scaling scenario — the CI gate for the manifest
+//! submission path.
+//!
+//! Three ways to land the same N jobs on a fresh daemon:
+//!
+//! 1. **manifest** — one `MSUBMIT` carrying an N-entry *heterogeneous*
+//!    manifest (interactive + spot, all three launch types, several
+//!    users; every entry materializes exactly one job).
+//! 2. **homogeneous** — one `SUBMIT count=N` of a single spec (the PR-1
+//!    batch path the manifest generalizes).
+//! 3. **per-RPC** — N individual `SUBMIT` requests (the client-loop
+//!    pattern the paper's launcher had to use).
+//!
+//! Each path runs against its own daemon with pacing disabled
+//! (`speedup = 0`), so the numbers isolate the *admission* cost — parse-
+//! free typed requests, per-entry validation, materialization, one
+//! scheduler lock, snapshot publish — from dispatch work. CI gates on the
+//! manifest's per-job overhead staying within 1.5× of the homogeneous
+//! batch: heterogeneity must not reintroduce a per-job penalty.
+
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::api::{Request, Response, SubmitSpec};
+use crate::coordinator::{Daemon, DaemonConfig};
+use crate::job::{JobType, QosClass};
+use crate::sched::SchedulerConfig;
+use crate::sim::SchedCosts;
+use crate::workload::manifests;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Scenario shape.
+#[derive(Debug, Clone)]
+pub struct ManifestScalingConfig {
+    /// Manifest entries (= jobs per path).
+    pub entries: usize,
+    /// Distinct interactive users in the mixed manifest.
+    pub users: u32,
+    /// Timing repetitions per path (fresh daemon each; minimum wins).
+    pub iters: usize,
+    /// RNG seed for the mixed manifest.
+    pub seed: u64,
+}
+
+impl Default for ManifestScalingConfig {
+    fn default() -> Self {
+        Self {
+            entries: 10_000,
+            users: 5,
+            iters: 3,
+            seed: 0x5107_c10d,
+        }
+    }
+}
+
+impl ManifestScalingConfig {
+    /// Sub-second smoke shape (`SPOTCLOUD_BENCH_FAST=1`, unit tests).
+    pub fn quick() -> Self {
+        Self {
+            entries: 1_000,
+            users: 5,
+            iters: 1,
+            seed: 0x5107_c10d,
+        }
+    }
+}
+
+/// What one run measured.
+#[derive(Debug, Clone)]
+pub struct ManifestScalingReport {
+    /// Entries per manifest (= jobs per path).
+    pub entries: usize,
+    /// Wall seconds for the one-RPC manifest submission (min over iters).
+    pub wall_manifest_s: f64,
+    /// Wall seconds for the one-RPC homogeneous `count=N` submission.
+    pub wall_homog_s: f64,
+    /// Wall seconds for N per-job RPCs.
+    pub wall_per_rpc_s: f64,
+    /// Manifest admission cost per job (µs).
+    pub per_job_manifest_us: f64,
+    /// Homogeneous-batch admission cost per job (µs).
+    pub per_job_homog_us: f64,
+    /// Per-RPC admission cost per job (µs).
+    pub per_job_per_rpc_us: f64,
+    /// per_job_manifest / per_job_homog — the CI gate (≤ 1.5).
+    pub manifest_vs_homog_ratio: f64,
+    /// per_job_per_rpc / per_job_manifest (how much one RPC per job costs).
+    pub per_rpc_vs_manifest_ratio: f64,
+    /// Every manifest entry accepted on every iteration?
+    pub all_accepted: bool,
+    /// Per-entry id ranges contiguous and in order on every iteration?
+    pub ids_contiguous: bool,
+}
+
+impl ManifestScalingReport {
+    /// The machine-readable record CI uploads (`BENCH_manifest.json`).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"manifest_scaling\",\n",
+                "  \"entries\": {},\n",
+                "  \"wall_manifest_s\": {:.6},\n",
+                "  \"wall_homog_s\": {:.6},\n",
+                "  \"wall_per_rpc_s\": {:.6},\n",
+                "  \"per_job_manifest_us\": {:.3},\n",
+                "  \"per_job_homog_us\": {:.3},\n",
+                "  \"per_job_per_rpc_us\": {:.3},\n",
+                "  \"manifest_vs_homog_ratio\": {:.3},\n",
+                "  \"per_rpc_vs_manifest_ratio\": {:.3},\n",
+                "  \"all_accepted\": {},\n",
+                "  \"ids_contiguous\": {}\n",
+                "}}\n",
+            ),
+            self.entries,
+            self.wall_manifest_s,
+            self.wall_homog_s,
+            self.wall_per_rpc_s,
+            self.per_job_manifest_us,
+            self.per_job_homog_us,
+            self.per_job_per_rpc_us,
+            self.manifest_vs_homog_ratio,
+            self.per_rpc_vs_manifest_ratio,
+            self.all_accepted,
+            self.ids_contiguous,
+        )
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "manifest_scaling: {} jobs — manifest {:.2}us/job, homogeneous {:.2}us/job \
+             (ratio {:.2}x, gate 1.5x), per-RPC {:.2}us/job ({:.1}x manifest)",
+            self.entries,
+            self.per_job_manifest_us,
+            self.per_job_homog_us,
+            self.manifest_vs_homog_ratio,
+            self.per_job_per_rpc_us,
+            self.per_rpc_vs_manifest_ratio,
+        )
+    }
+}
+
+/// A fresh admission-only daemon: `speedup = 0` pins virtual time at zero,
+/// so no pacing or dispatch work pollutes the submission timing.
+fn admission_daemon() -> Arc<Daemon> {
+    Daemon::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        DaemonConfig {
+            speedup: 0.0,
+            retire_grace_secs: None,
+            history_cap: None,
+            ..DaemonConfig::default()
+        },
+    )
+}
+
+/// Run the scenario.
+pub fn run_manifest_scaling(cfg: &ManifestScalingConfig) -> ManifestScalingReport {
+    let n = cfg.entries;
+    let mut all_accepted = true;
+    let mut ids_contiguous = true;
+
+    // Path 1: one heterogeneous manifest.
+    let mut wall_manifest_s = f64::INFINITY;
+    for _ in 0..cfg.iters.max(1) {
+        let manifest = manifests::mixed(cfg.seed, n, cfg.users);
+        let d = admission_daemon();
+        let t0 = Instant::now();
+        let resp = d.handle(Request::MSubmit(manifest));
+        wall_manifest_s = wall_manifest_s.min(t0.elapsed().as_secs_f64());
+        match resp {
+            Response::ManifestAck(ack) => {
+                all_accepted &= ack.rejected.is_empty() && ack.accepted.len() == n;
+                let mut next = ack.accepted.first().map(|a| a.first).unwrap_or(1);
+                for acc in &ack.accepted {
+                    ids_contiguous &= acc.first == next && acc.last - acc.first + 1 == acc.count;
+                    next = acc.last + 1;
+                }
+            }
+            other => panic!("manifest submission failed: {other:?}"),
+        }
+        d.with_scheduler(|s| s.check_invariants().expect("invariants after manifest"));
+    }
+
+    // Path 2: one homogeneous count=N batch.
+    let mut wall_homog_s = f64::INFINITY;
+    for _ in 0..cfg.iters.max(1) {
+        let d = admission_daemon();
+        let t0 = Instant::now();
+        let resp = d.handle(Request::Submit(
+            SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, 1)
+                .with_run_secs(600.0)
+                .with_count(n as u32),
+        ));
+        wall_homog_s = wall_homog_s.min(t0.elapsed().as_secs_f64());
+        match resp {
+            Response::SubmitAck(ack) => assert_eq!(ack.count as usize, n),
+            other => panic!("homogeneous submission failed: {other:?}"),
+        }
+    }
+
+    // Path 3: N per-job RPCs (the client-loop pattern).
+    let mut wall_per_rpc_s = f64::INFINITY;
+    for _ in 0..cfg.iters.max(1) {
+        let d = admission_daemon();
+        let t0 = Instant::now();
+        for i in 0..n {
+            let user = 1 + (i as u32 % cfg.users);
+            match d.handle(Request::Submit(
+                SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, user)
+                    .with_run_secs(600.0),
+            )) {
+                Response::SubmitAck(_) => {}
+                other => panic!("per-RPC submission failed: {other:?}"),
+            }
+        }
+        wall_per_rpc_s = wall_per_rpc_s.min(t0.elapsed().as_secs_f64());
+    }
+
+    let per_job = |wall: f64| wall / n as f64 * 1e6;
+    let per_job_manifest_us = per_job(wall_manifest_s);
+    let per_job_homog_us = per_job(wall_homog_s);
+    let per_job_per_rpc_us = per_job(wall_per_rpc_s);
+    ManifestScalingReport {
+        entries: n,
+        wall_manifest_s,
+        wall_homog_s,
+        wall_per_rpc_s,
+        per_job_manifest_us,
+        per_job_homog_us,
+        per_job_per_rpc_us,
+        manifest_vs_homog_ratio: per_job_manifest_us / per_job_homog_us.max(f64::EPSILON),
+        per_rpc_vs_manifest_ratio: per_job_per_rpc_us / per_job_manifest_us.max(f64::EPSILON),
+        all_accepted,
+        ids_contiguous,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_manifest_scaling_runs_and_reports() {
+        let r = run_manifest_scaling(&ManifestScalingConfig::quick());
+        assert!(r.all_accepted, "{r:?}");
+        assert!(r.ids_contiguous, "{r:?}");
+        assert!(r.wall_manifest_s > 0.0 && r.wall_manifest_s.is_finite());
+        let json = r.to_json();
+        for key in [
+            "\"manifest_vs_homog_ratio\"",
+            "\"per_job_manifest_us\"",
+            "\"all_accepted\": true",
+            "\"ids_contiguous\": true",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(r.summary().contains("manifest_scaling"));
+    }
+}

@@ -11,9 +11,11 @@
 //!
 //! See `PROTOCOL.md` at the repository root for the full wire grammar.
 
+use super::manifest::{Manifest, ManifestAck};
 use crate::job::{JobState, JobType, QosClass};
 use std::collections::BTreeMap;
 use std::fmt;
+use std::sync::Arc;
 
 /// Wire protocol versions a connection can speak.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -234,6 +236,9 @@ pub enum Request {
     Hello(ProtocolVersion),
     /// Submit a burst of jobs (batch-first: `count` copies of the spec).
     Submit(SubmitSpec),
+    /// Submit a heterogeneous manifest: per-entry specs, one RPC, one
+    /// scheduler lock, partial-accept semantics (v2 only on the wire).
+    MSubmit(Manifest),
     /// List jobs, optionally filtered.
     Squeue(SqueueFilter),
     /// Detail query for one job.
@@ -259,8 +264,9 @@ pub enum Request {
 }
 
 /// Every command verb, in wire order (per-command metrics index off this).
-pub const COMMANDS: [&str; 10] = [
-    "HELLO", "SUBMIT", "SQUEUE", "SJOB", "SCANCEL", "WAIT", "STATS", "UTIL", "PING", "SHUTDOWN",
+pub const COMMANDS: [&str; 11] = [
+    "HELLO", "SUBMIT", "MSUBMIT", "SQUEUE", "SJOB", "SCANCEL", "WAIT", "STATS", "UTIL", "PING",
+    "SHUTDOWN",
 ];
 
 impl Request {
@@ -269,6 +275,7 @@ impl Request {
         match self {
             Request::Hello(_) => "HELLO",
             Request::Submit(_) => "SUBMIT",
+            Request::MSubmit(_) => "MSUBMIT",
             Request::Squeue(_) => "SQUEUE",
             Request::Sjob(_) => "SJOB",
             Request::Scancel(_) => "SCANCEL",
@@ -309,7 +316,7 @@ impl fmt::Display for SubmitAck {
 }
 
 /// One `SQUEUE` row.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JobSummary {
     /// Job id.
     pub id: u64,
@@ -323,6 +330,9 @@ pub struct JobSummary {
     pub qos: QosClass,
     /// Lifecycle state.
     pub state: JobState,
+    /// Job tag (v2 wire extension: the v1 table is byte-compatible with
+    /// the seed and cannot carry it, so a v1 listing parses as `None`).
+    pub tag: Option<Arc<str>>,
 }
 
 /// Full per-job detail (`SJOB`). Times are virtual seconds since daemon
@@ -358,6 +368,9 @@ pub struct JobDetail {
     /// Virtual scheduling latency in ns (recognized → dispatched), the
     /// paper's per-job metric.
     pub latency_ns: Option<u64>,
+    /// Job tag (flows from the submission manifest through the job table;
+    /// `None` only when the peer predates the field).
+    pub tag: Option<Arc<str>>,
 }
 
 /// Result of a `WAIT`: how many of the requested jobs dispatched, and the
@@ -500,6 +513,8 @@ pub enum Response {
     ShuttingDown,
     /// Submission acknowledged.
     SubmitAck(SubmitAck),
+    /// Manifest submission outcome: per-entry acks and typed rejects.
+    ManifestAck(ManifestAck),
     /// `SQUEUE` listing.
     Jobs(Vec<JobSummary>),
     /// `SJOB` detail.
@@ -636,6 +651,7 @@ mod tests {
         let reqs = [
             Request::Hello(ProtocolVersion::V2),
             Request::Submit(SubmitSpec::new(QosClass::Spot, JobType::Array, 4, 1)),
+            Request::MSubmit(Manifest::default()),
             Request::Squeue(SqueueFilter::default()),
             Request::Sjob(1),
             Request::Scancel(1),

@@ -13,6 +13,7 @@ use super::api::{
     StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::codec;
+use super::manifest::{Manifest, ManifestAck};
 use std::fmt;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -164,6 +165,15 @@ impl Client {
                 "HELLO cannot be pipelined (it renegotiates the wire version)".into(),
             ));
         }
+        for r in reqs {
+            if let Request::MSubmit(m) = r {
+                if let Some((i, tag)) = m.first_unframeable_tag() {
+                    return Err(ClientError::Protocol(format!(
+                        "manifest entry {i} has a tag that cannot be framed on the wire: {tag:?}"
+                    )));
+                }
+            }
+        }
         let mut batch = String::new();
         for req in reqs {
             batch.push_str(&codec::render_request(req, self.version));
@@ -210,6 +220,30 @@ impl Client {
         match self.roundtrip(&Request::Submit(spec.clone()))? {
             Response::SubmitAck(ack) => Ok(ack),
             other => Err(unexpected("SUBMIT", &other)),
+        }
+    }
+
+    /// Submit a heterogeneous manifest in one RPC; returns per-entry job-id
+    /// ranges and typed per-entry rejects (partial accept — a reject does
+    /// not fail the call). Requires a v2 session: the v1 grammar cannot
+    /// express a manifest, and the daemon would answer `unsupported`.
+    pub fn msubmit(&mut self, manifest: &Manifest) -> ClientResult<ManifestAck> {
+        if self.version != ProtocolVersion::V2 {
+            return Err(ClientError::Protocol(
+                "MSUBMIT requires protocol v2 (connect with Client::connect_v2)".into(),
+            ));
+        }
+        // A tag with whitespace/`;`/newline would corrupt the single-line
+        // record framing (a newline would even inject a second request):
+        // refuse before any byte goes out.
+        if let Some((i, tag)) = manifest.first_unframeable_tag() {
+            return Err(ClientError::Protocol(format!(
+                "manifest entry {i} has a tag that cannot be framed on the wire: {tag:?}"
+            )));
+        }
+        match self.roundtrip(&Request::MSubmit(manifest.clone()))? {
+            Response::ManifestAck(ack) => Ok(ack),
+            other => Err(unexpected("MSUBMIT", &other)),
         }
     }
 

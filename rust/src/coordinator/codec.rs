@@ -23,9 +23,18 @@ use super::api::{
     ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
     StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
+use super::manifest::{
+    EntryAck, EntryReject, Manifest, ManifestAck, ManifestEntry, MAX_MANIFEST_ENTRIES,
+};
 use crate::job::{JobState, JobType, QosClass};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Cap on one serialized manifest entry record (bytes). A record is a short
+/// `key=value` list with a ≤64-byte tag; anything longer is hostile input
+/// and is rejected as a whole-request typed error before any admission.
+pub const MAX_ENTRY_RECORD_BYTES: usize = 256;
 
 // ---- shared token helpers --------------------------------------------------
 
@@ -164,6 +173,15 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
         "SUBMIT" => match version {
             ProtocolVersion::V1 => parse_submit_v1(rest),
             ProtocolVersion::V2 => parse_submit_v2(rest),
+        },
+        // The manifest body is `;`-separated records, so it needs the raw
+        // line, not the whitespace tokens. v1 connections get a typed
+        // rejection — a single line, so nothing ever desyncs.
+        "MSUBMIT" => match version {
+            ProtocolVersion::V1 => Err(ApiError::unsupported(
+                "MSUBMIT requires protocol v2 (negotiate with HELLO v2)",
+            )),
+            ProtocolVersion::V2 => parse_msubmit(line),
         },
         "SJOB" => match version {
             ProtocolVersion::V1 => {
@@ -317,6 +335,143 @@ fn parse_submit_v2(rest: &[&str]) -> Result<Request, ApiError> {
     )
 }
 
+// ---- manifest (MSUBMIT) wire body ------------------------------------------
+//
+// One line: `MSUBMIT entries=<n>;<record>;<record>;...` — the header's
+// `entries=` count must match the record count exactly (a truncated or
+// padded body is a typed whole-request error, never a desync: the line
+// framing already bounds the body). Records are `key=value` tokens; tags
+// are whitespace- and `;`-free by charset, so splitting is unambiguous.
+
+/// Parse one manifest entry record (the `key=value` list between `;`
+/// separators; also the line grammar of CLI manifest files). Wire-level
+/// malformation — unknown/duplicate/missing keys, unparseable numbers,
+/// an overlong record — is a typed error; *semantic* validation (zero
+/// tasks, bad tag charset, …) happens at admission, per entry.
+pub fn parse_manifest_entry(record: &str) -> Result<ManifestEntry, ApiError> {
+    if record.len() > MAX_ENTRY_RECORD_BYTES {
+        return Err(ApiError::bad_arg(
+            "manifest entry",
+            &format!("record of {} bytes (cap {MAX_ENTRY_RECORD_BYTES})", record.len()),
+        ));
+    }
+    let tokens: Vec<&str> = record.split_whitespace().collect();
+    if tokens.is_empty() {
+        return Err(ApiError::bad_arg("manifest entry", "<empty record>"));
+    }
+    let mut map: BTreeMap<&str, &str> = BTreeMap::new();
+    for (k, v) in kv_pairs(&tokens, "manifest entry")? {
+        if !["qos", "type", "tasks", "user", "cores_per_task", "run_secs", "count", "tag"]
+            .contains(&k)
+        {
+            return Err(ApiError::bad_arg("manifest entry key", k));
+        }
+        if map.insert(k, v).is_some() {
+            return Err(ApiError::bad_arg("duplicate manifest entry key", k));
+        }
+    }
+    let missing = || {
+        ApiError::bad_arity(
+            "MSUBMIT entry",
+            "qos= type= tasks= user= [cores_per_task=] [run_secs=] [count=] [tag=]",
+        )
+    };
+    let qos_tok = map.get("qos").copied().ok_or_else(missing)?;
+    let type_tok = map.get("type").copied().ok_or_else(missing)?;
+    let tasks_tok = map.get("tasks").copied().ok_or_else(missing)?;
+    let user_tok = map.get("user").copied().ok_or_else(missing)?;
+    let mut entry = ManifestEntry::new(
+        parse_qos(qos_tok).ok_or_else(|| ApiError::bad_arg("qos", qos_tok))?,
+        parse_job_type(type_tok).ok_or_else(|| ApiError::bad_arg("job type", type_tok))?,
+        parse_u32("tasks", tasks_tok)?,
+        parse_u32("user", user_tok)?,
+    );
+    if let Some(&tok) = map.get("cores_per_task") {
+        entry.cores_per_task = parse_u32("cores_per_task", tok)?;
+    }
+    if let Some(&tok) = map.get("run_secs") {
+        entry.run_secs = parse_f64("run_secs", tok)?;
+    }
+    if let Some(&tok) = map.get("count") {
+        entry.count = parse_u32("count", tok)?;
+    }
+    if let Some(&tok) = map.get("tag") {
+        entry.tag = Some(Arc::from(tok));
+    }
+    Ok(entry)
+}
+
+/// Render one manifest entry canonically (inverse of
+/// [`parse_manifest_entry`] for valid entries).
+pub fn render_manifest_entry(e: &ManifestEntry) -> String {
+    let mut s = format!(
+        "qos={} type={} tasks={} user={} cores_per_task={} run_secs={} count={}",
+        e.qos,
+        job_type_arg(e.job_type),
+        e.tasks,
+        e.user,
+        e.cores_per_task,
+        fmt_f64(e.run_secs),
+        e.count,
+    );
+    if let Some(tag) = &e.tag {
+        let _ = write!(s, " tag={tag}");
+    }
+    s
+}
+
+fn parse_msubmit(line: &str) -> Result<Request, ApiError> {
+    // Strip the verb (already matched case-insensitively) from the raw line.
+    let mut parts = line.trim_start().splitn(2, char::is_whitespace);
+    parts.next();
+    let body = parts.next().unwrap_or("").trim();
+    let mut segments = body.split(';');
+    let header = segments.next().unwrap_or("").trim();
+    let declared = match header.strip_prefix("entries=") {
+        Some(tok) => parse_usize("entries", tok)?,
+        None => {
+            return Err(ApiError::bad_arity(
+                "MSUBMIT",
+                "entries=<n>;<entry>;... (one record per declared entry)",
+            ))
+        }
+    };
+    if declared > MAX_MANIFEST_ENTRIES {
+        return Err(ApiError::bad_arg(
+            "entries",
+            &format!("{declared} (cap {MAX_MANIFEST_ENTRIES})"),
+        ));
+    }
+    let mut entries = Vec::with_capacity(declared.min(4096));
+    for segment in segments {
+        if entries.len() >= declared {
+            // More records than declared: padded/hostile body.
+            return Err(ApiError::bad_arity(
+                "MSUBMIT",
+                &format!("entries={declared} but the body carries more records"),
+            ));
+        }
+        entries.push(parse_manifest_entry(segment.trim())?);
+    }
+    if entries.len() != declared {
+        // Fewer records than declared: truncated body.
+        return Err(ApiError::bad_arity(
+            "MSUBMIT",
+            &format!("entries={declared} but the body carries {}", entries.len()),
+        ));
+    }
+    Ok(Request::MSubmit(Manifest { entries }))
+}
+
+fn render_msubmit(m: &Manifest) -> String {
+    let mut s = format!("MSUBMIT entries={}", m.entries.len());
+    for e in &m.entries {
+        s.push(';');
+        s.push_str(&render_manifest_entry(e));
+    }
+    s
+}
+
 // ---- request rendering -----------------------------------------------------
 
 /// Render a request canonically for the given protocol version.
@@ -362,6 +517,9 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
                 }
             }
         }
+        // Canonical in the v2 grammar; v1 cannot express a manifest (the
+        // daemon answers a v1 MSUBMIT with a typed `unsupported`).
+        Request::MSubmit(m) => render_msubmit(m),
         Request::Submit(s) => match version {
             ProtocolVersion::V1 => {
                 let mut line = format!(
@@ -395,7 +553,8 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
 fn detail_kv(d: &JobDetail) -> String {
     format!(
         "id={} type={} tasks={} user={} qos={} state={} submit_secs={} queue_secs={} \
-         start_secs={} end_secs={} requeues={} recognized_secs={} dispatched_secs={} latency_ns={}",
+         start_secs={} end_secs={} requeues={} recognized_secs={} dispatched_secs={} \
+         latency_ns={} tag={}",
         d.id,
         job_type_arg(d.job_type),
         d.tasks,
@@ -410,7 +569,114 @@ fn detail_kv(d: &JobDetail) -> String {
         opt_f64_token(d.recognized_secs),
         opt_f64_token(d.dispatched_secs),
         opt_u64_token(d.latency_ns),
+        d.tag.as_deref().unwrap_or("-"),
     )
+}
+
+fn manifest_ack_head(a: &ManifestAck) -> String {
+    format!(
+        "accepted={} rejected={} jobs={}",
+        a.accepted.len(),
+        a.rejected.len(),
+        a.jobs
+    )
+}
+
+/// Append the per-entry record lines: `acc index=.. first=.. last=..
+/// count=..` and `rej index=.. code=.. msg=<rest of line>`. One record per
+/// line — reject messages may contain spaces (`msg=` is last and greedy)
+/// but never a newline, so the framing holds.
+fn render_manifest_ack_records(body: &mut String, a: &ManifestAck) {
+    for acc in &a.accepted {
+        let _ = write!(
+            body,
+            "\nacc index={} first={} last={} count={}",
+            acc.index, acc.first, acc.last, acc.count
+        );
+    }
+    for rej in &a.rejected {
+        let msg: String = rej
+            .error
+            .message
+            .chars()
+            .map(|c| if c == '\n' || c == '\r' { ' ' } else { c })
+            .collect();
+        let _ = write!(body, "\nrej index={} code={} msg={}", rej.index, rej.error.code, msg);
+    }
+}
+
+/// Parse a manifest ack body: the head `key=value`s plus `acc`/`rej`
+/// record lines (shared by both protocol versions).
+fn parse_manifest_ack(head: &BTreeMap<&str, &str>, tail: &str) -> Result<Response, ApiError> {
+    let declared_acc = take_usize(head, "accepted")?;
+    let declared_rej = take_usize(head, "rejected")?;
+    let jobs = take_u64(head, "jobs")?;
+    let mut ack = ManifestAck {
+        accepted: Vec::with_capacity(declared_acc.min(4096)),
+        rejected: Vec::with_capacity(declared_rej.min(4096)),
+        jobs,
+    };
+    let mut summed = 0u64;
+    for line in tail.lines() {
+        if let Some(rest) = line.strip_prefix("acc ") {
+            let m = kv_map(rest);
+            let acc = EntryAck {
+                index: take_u32(&m, "index")?,
+                first: take_u64(&m, "first")?,
+                last: take_u64(&m, "last")?,
+                count: take_u64(&m, "count")?,
+            };
+            // Range sanity before the record can reach iteration helpers
+            // (EntryAck::ids / ManifestAck::job_ids): a hostile or buggy
+            // peer must not be able to make the client iterate 2^64 ids.
+            // Checked arithmetic: first>last and a full-u64 span both come
+            // out as None rather than wrapping.
+            let span = acc
+                .last
+                .checked_sub(acc.first)
+                .and_then(|d| d.checked_add(1));
+            if span != Some(acc.count) {
+                return Err(ApiError::new(
+                    ErrorCode::Internal,
+                    format!(
+                        "manifest ack record has an inconsistent id range: \
+                         first={} last={} count={}",
+                        acc.first, acc.last, acc.count
+                    ),
+                ));
+            }
+            summed = summed.saturating_add(acc.count);
+            ack.accepted.push(acc);
+        } else if let Some(rest) = line.strip_prefix("rej ") {
+            let (kv, msg) = match rest.split_once(" msg=") {
+                Some((kv, msg)) => (kv, msg),
+                None => (rest, ""),
+            };
+            let m = kv_map(kv);
+            let code = ErrorCode::parse(take(&m, "code")?).unwrap_or(ErrorCode::Internal);
+            ack.rejected.push(EntryReject {
+                index: take_u32(&m, "index")?,
+                error: ApiError::new(code, msg),
+            });
+        }
+    }
+    if ack.accepted.len() != declared_acc || ack.rejected.len() != declared_rej {
+        return Err(ApiError::new(
+            ErrorCode::Internal,
+            format!(
+                "manifest ack declared {declared_acc}+{declared_rej} records, carried {}+{}",
+                ack.accepted.len(),
+                ack.rejected.len()
+            ),
+        ));
+    }
+    if summed != jobs {
+        return Err(ApiError::new(
+            ErrorCode::Internal,
+            format!("manifest ack claims jobs={jobs} but its records sum to {summed}"),
+        ));
+    }
+    Ok(Response::ManifestAck(ack))
 }
 
 fn wait_kv(w: &WaitResult) -> String {
@@ -484,6 +750,13 @@ fn render_response_v1(resp: &Response) -> String {
         Response::Hello(v) => format!("OK proto={v}"),
         Response::ShuttingDown => "OK shutting down".into(),
         Response::SubmitAck(a) => format!("OK jobs={}-{} count={}", a.first, a.last, a.count),
+        Response::ManifestAck(a) => {
+            // Not byte-constrained: MSUBMIT itself is v2-only, but rendering
+            // must be total (and round-trips, for symmetry with v2).
+            let mut body = format!("OK manifest {}", manifest_ack_head(a));
+            render_manifest_ack_records(&mut body, a);
+            body
+        }
         Response::Cancelled(id) => format!("OK cancelled {id}"),
         Response::Jobs(rows) => {
             // Byte-compatible with the seed SQUEUE table.
@@ -537,7 +810,15 @@ fn render_response_v2(resp: &Response) -> String {
                     r.qos,
                     state_token(r.state)
                 );
+                if let Some(tag) = &r.tag {
+                    let _ = write!(body, " tag={tag}");
+                }
             }
+            body
+        }
+        Response::ManifestAck(a) => {
+            let mut body = format!("OK kind=manifest_ack {}", manifest_ack_head(a));
+            render_manifest_ack_records(&mut body, a);
             body
         }
         Response::Job(d) => format!("OK kind=job {}", detail_kv(d)),
@@ -612,7 +893,18 @@ fn parse_jobs_row_v1(line: &str) -> Result<JobSummary, ApiError> {
             .ok_or_else(bad)?,
         qos: parse_qos(tok[4]).ok_or_else(bad)?,
         state: parse_state(tok[5]).ok_or_else(bad)?,
+        // The seed table cannot carry a tag (byte compatibility).
+        tag: None,
     })
+}
+
+/// Optional tag token: absent or `-` parses as `None` (responses from a
+/// pre-tag server still parse).
+fn take_opt_tag(map: &BTreeMap<&str, &str>) -> Option<Arc<str>> {
+    match map.get("tag") {
+        None | Some(&"-") => None,
+        Some(&t) => Some(Arc::from(t)),
+    }
 }
 
 fn parse_detail(map: &BTreeMap<&str, &str>) -> Result<JobDetail, ApiError> {
@@ -631,6 +923,7 @@ fn parse_detail(map: &BTreeMap<&str, &str>) -> Result<JobDetail, ApiError> {
         recognized_secs: take_opt_f64(map, "recognized_secs")?,
         dispatched_secs: take_opt_f64(map, "dispatched_secs")?,
         latency_ns: take_opt_u64(map, "latency_ns")?,
+        tag: take_opt_tag(map),
     })
 }
 
@@ -734,6 +1027,13 @@ fn parse_ok_v1(rest: &str) -> Result<Response, ApiError> {
             let tok = rest.split_whitespace().nth(1).unwrap_or("");
             Ok(Response::Cancelled(parse_u64("job id", tok)?))
         }
+        "manifest" => {
+            let (head, tail) = match rest.split_once('\n') {
+                Some((h, t)) => (h, t),
+                None => (rest, ""),
+            };
+            parse_manifest_ack(&kv_map(head), tail)
+        }
         _ if first.starts_with("proto=") => {
             let v = first.trim_start_matches("proto=");
             ProtocolVersion::parse(v)
@@ -774,6 +1074,7 @@ fn parse_ok_v2(rest: &str) -> Result<Response, ApiError> {
             last: take_u64(&map, "last")?,
             count: take_u64(&map, "count")?,
         })),
+        "manifest_ack" => parse_manifest_ack(&map, tail),
         "cancelled" => Ok(Response::Cancelled(take_u64(&map, "id")?)),
         "job" => Ok(Response::Job(parse_detail(&map)?)),
         "wait" => Ok(Response::Wait(parse_wait(&map)?)),
@@ -793,6 +1094,7 @@ fn parse_ok_v2(rest: &str) -> Result<Response, ApiError> {
                     user: take_u32(&m, "user")?,
                     qos: take_qos(&m, "qos")?,
                     state: take_state(&m, "state")?,
+                    tag: take_opt_tag(&m),
                 });
             }
             Ok(Response::Jobs(rows))
@@ -853,6 +1155,15 @@ mod tests {
         assert_eq!(code("SUBMIT normal"), ErrorCode::BadArity);
         assert_eq!(code("SUBMIT normal warp 1 1"), ErrorCode::BadArg);
         assert_eq!(code("SUBMIT normal array 0 1"), ErrorCode::BadArg);
+        // Degenerate batch count is a typed reject at the wire, both
+        // versions (regression: count=0 must never ack an empty range).
+        assert_eq!(code("SUBMIT normal array 4 1 60 0"), ErrorCode::BadArg);
+        assert_eq!(
+            parse_request("SUBMIT qos=normal type=array tasks=4 user=1 count=0", V2)
+                .unwrap_err()
+                .code,
+            ErrorCode::BadArg
+        );
         assert_eq!(code("SCANCEL x"), ErrorCode::BadArg);
     }
 
@@ -916,6 +1227,191 @@ mod tests {
     }
 
     #[test]
+    fn msubmit_roundtrips_v2() {
+        for line in [
+            "MSUBMIT entries=0",
+            "MSUBMIT entries=1;qos=normal type=triple tasks=608 user=1 cores_per_task=1 \
+             run_secs=600 count=1",
+            "MSUBMIT entries=2;qos=normal type=individual tasks=4 user=1 cores_per_task=1 \
+             run_secs=60 count=2 tag=fig2-live;qos=spot type=array tasks=64 user=9 \
+             cores_per_task=2 run_secs=3600 count=1",
+        ] {
+            // The literal above is wrapped for readability; the wire line
+            // has single spaces.
+            let line = line.split_whitespace().collect::<Vec<_>>().join(" ");
+            let req = parse_request(&line, V2).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(render_request(&req, V2), line, "round-trip of {line:?}");
+        }
+        match parse_request(
+            "MSUBMIT entries=1;qos=spot type=triple tasks=320 user=9 tag=backlog",
+            V2,
+        )
+        .unwrap()
+        {
+            Request::MSubmit(m) => {
+                assert_eq!(m.entries.len(), 1);
+                assert_eq!(m.entries[0].cores_per_task, 1, "defaulted");
+                assert_eq!(m.entries[0].run_secs, 3600.0, "defaulted");
+                assert_eq!(m.entries[0].count, 1, "defaulted");
+                assert_eq!(m.entries[0].tag.as_deref(), Some("backlog"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn msubmit_is_rejected_on_v1_with_typed_unsupported() {
+        let err = parse_request(
+            "MSUBMIT entries=1;qos=normal type=array tasks=4 user=1",
+            V1,
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unsupported);
+        assert!(err.message.contains("HELLO v2"), "{err}");
+    }
+
+    #[test]
+    fn msubmit_hostile_bodies_yield_typed_errors() {
+        let code = |line: &str| parse_request(line, V2).unwrap_err().code;
+        let entry = "qos=normal type=array tasks=4 user=1";
+        // Truncated body: fewer records than declared.
+        assert_eq!(code(&format!("MSUBMIT entries=2;{entry}")), ErrorCode::BadArity);
+        // Padded body: more records than declared.
+        assert_eq!(
+            code(&format!("MSUBMIT entries=1;{entry};{entry}")),
+            ErrorCode::BadArity
+        );
+        // Missing header.
+        assert_eq!(code(&format!("MSUBMIT {entry}")), ErrorCode::BadArity);
+        assert_eq!(code("MSUBMIT"), ErrorCode::BadArity);
+        // Unparseable header count.
+        assert_eq!(code(&format!("MSUBMIT entries=x;{entry}")), ErrorCode::BadArg);
+        // Entry-count cap.
+        assert_eq!(
+            code(&format!("MSUBMIT entries={};{entry}", MAX_MANIFEST_ENTRIES + 1)),
+            ErrorCode::BadArg
+        );
+        // Empty record (trailing separator).
+        assert_eq!(code(&format!("MSUBMIT entries=1;{entry};")), ErrorCode::BadArity);
+        assert_eq!(code("MSUBMIT entries=1;"), ErrorCode::BadArg);
+        // Duplicate key inside one record.
+        assert_eq!(
+            code("MSUBMIT entries=1;qos=normal qos=spot type=array tasks=4 user=1"),
+            ErrorCode::BadArg
+        );
+        // Unknown key.
+        assert_eq!(
+            code("MSUBMIT entries=1;qos=normal type=array tasks=4 user=1 bogus=1"),
+            ErrorCode::BadArg
+        );
+        // Bare (non key=value) token.
+        assert_eq!(
+            code("MSUBMIT entries=1;qos=normal type=array tasks=4 user=1 loose"),
+            ErrorCode::BadArg
+        );
+        // Missing required key.
+        assert_eq!(
+            code("MSUBMIT entries=1;qos=normal type=array tasks=4"),
+            ErrorCode::BadArity
+        );
+        // Unparseable value.
+        assert_eq!(
+            code("MSUBMIT entries=1;qos=normal type=array tasks=many user=1"),
+            ErrorCode::BadArg
+        );
+        // Overlong record.
+        let long = format!(
+            "MSUBMIT entries=1;qos=normal type=array tasks=4 user=1 tag={}",
+            "x".repeat(MAX_ENTRY_RECORD_BYTES)
+        );
+        assert_eq!(code(&long), ErrorCode::BadArg);
+    }
+
+    #[test]
+    fn msubmit_semantic_problems_parse_fine() {
+        // Zero tasks/count parse at the wire level — admission rejects them
+        // per entry (partial accept), not the whole request.
+        match parse_request(
+            "MSUBMIT entries=2;qos=normal type=array tasks=0 user=1;qos=spot type=triple \
+             tasks=64 user=9 count=0",
+            V2,
+        )
+        .unwrap()
+        {
+            Request::MSubmit(m) => {
+                assert_eq!(m.entries[0].tasks, 0);
+                assert_eq!(m.entries[1].count, 0);
+                assert!(m.entries[0].validate().is_err());
+                assert!(m.entries[1].validate().is_err());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_jobs_rows_carry_tags_and_v1_drops_them() {
+        let resp = Response::Jobs(vec![JobSummary {
+            id: 7,
+            job_type: JobType::Array,
+            tasks: 64,
+            user: 1,
+            qos: QosClass::Normal,
+            state: JobState::Running,
+            tag: Some(Arc::from("fig2-live")),
+        }]);
+        let v2 = render_response(&resp, V2);
+        assert!(v2.contains("tag=fig2-live"), "{v2}");
+        assert_eq!(parse_response(&v2, V2).unwrap(), resp);
+        let v1 = render_response(&resp, V1);
+        assert!(!v1.contains("fig2-live"), "{v1}");
+        match parse_response(&v1, V1).unwrap() {
+            Response::Jobs(rows) => assert_eq!(rows[0].tag, None),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_manifest_acks_are_rejected_by_the_client_parser() {
+        // A malicious/buggy server must not be able to hand the client an
+        // ack whose ranges would iterate astronomically or lie about jobs.
+        let huge_range = format!(
+            "OK kind=manifest_ack accepted=1 rejected=0 jobs=1\nacc index=0 first=0 last={} count=1",
+            u64::MAX
+        );
+        for body in [
+            // first > last.
+            "OK kind=manifest_ack accepted=1 rejected=0 jobs=1\nacc index=0 first=5 last=4 count=1",
+            // count disagrees with the range.
+            "OK kind=manifest_ack accepted=1 rejected=0 jobs=2\nacc index=0 first=1 last=1 count=2",
+            // 2^64-sized range.
+            huge_range.as_str(),
+            // jobs= does not match the record sum.
+            "OK kind=manifest_ack accepted=1 rejected=0 jobs=99\nacc index=0 first=1 last=2 count=2",
+            // declared record counts do not match the body.
+            "OK kind=manifest_ack accepted=2 rejected=0 jobs=1\nacc index=0 first=1 last=1 count=1",
+        ] {
+            let err = parse_response(body, V2).expect_err(body);
+            assert_eq!(err.code, ErrorCode::Internal, "{body}");
+        }
+    }
+
+    #[test]
+    fn manifest_ack_reject_message_with_spaces_roundtrips() {
+        let resp = Response::ManifestAck(ManifestAck {
+            accepted: vec![],
+            rejected: vec![EntryReject {
+                index: 3,
+                error: ApiError::bad_arg("run_secs", "not a number at all"),
+            }],
+            jobs: 0,
+        });
+        for v in [V1, V2] {
+            let wire = render_response(&resp, v);
+            assert_eq!(parse_response(&wire, v).unwrap(), resp, "{wire:?}");
+        }
+    }
+
+    #[test]
     fn v2_submit_requires_core_keys() {
         assert_eq!(
             parse_request("SUBMIT qos=normal type=triple tasks=64", V2)
@@ -970,6 +1466,10 @@ mod tests {
                     user: 9,
                     qos: QosClass::Spot,
                     state: JobState::Running,
+                    // None here: the v1 table cannot carry tags, and these
+                    // samples round-trip under BOTH versions. Dedicated
+                    // tests below cover Some(_) on the v2 wire.
+                    tag: None,
                 },
                 JobSummary {
                     id: 4,
@@ -978,6 +1478,7 @@ mod tests {
                     user: 1,
                     qos: QosClass::Normal,
                     state: JobState::Pending,
+                    tag: None,
                 },
             ]),
             Response::Jobs(Vec::new()),
@@ -996,6 +1497,7 @@ mod tests {
                 recognized_secs: Some(1.5),
                 dispatched_secs: Some(2.25),
                 latency_ns: Some(750_000_000),
+                tag: Some(Arc::from("interactive")),
             }),
             Response::Wait(WaitResult {
                 requested: 3,
@@ -1038,6 +1540,28 @@ mod tests {
             }),
             Response::Error(ApiError::not_found("unknown job 42")),
             Response::Error(ApiError::bad_arg("tasks", "0")),
+            Response::ManifestAck(ManifestAck {
+                accepted: vec![
+                    EntryAck {
+                        index: 0,
+                        first: 1,
+                        last: 608,
+                        count: 608,
+                    },
+                    EntryAck {
+                        index: 2,
+                        first: 609,
+                        last: 609,
+                        count: 1,
+                    },
+                ],
+                rejected: vec![EntryReject {
+                    index: 1,
+                    error: ApiError::bad_arg("tasks", "0"),
+                }],
+                jobs: 609,
+            }),
+            Response::ManifestAck(ManifestAck::default()),
         ]
     }
 
@@ -1132,6 +1656,8 @@ mod tests {
             user: 9,
             qos: QosClass::Spot,
             state: JobState::Pending,
+            // A tag must NOT leak into the seed-compatible v1 table.
+            tag: Some(Arc::from("spot-fill")),
         }]);
         assert_eq!(
             render_response(&resp, V1),

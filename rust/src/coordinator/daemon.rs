@@ -34,6 +34,7 @@ use super::api::{
     SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::codec;
+use super::manifest::{EntryAck, EntryReject, Manifest, ManifestAck, MAX_MANIFEST_ENTRIES};
 use super::metrics::DaemonMetrics;
 use super::snapshot::{wait_view_of, JobView, SchedSnapshot, WaitHub, WaitView};
 use crate::cluster::Cluster;
@@ -414,6 +415,7 @@ impl Daemon {
                 Response::ShuttingDown
             }
             Request::Submit(spec) => self.handle_submit(&spec),
+            Request::MSubmit(manifest) => self.handle_msubmit(&manifest),
             Request::Scancel(id) => {
                 if self.with_sched_mut(|sched| sched.cancel(JobId(id))) {
                     Response::Cancelled(id)
@@ -455,6 +457,19 @@ impl Daemon {
     }
 
     fn handle_submit(&self, spec: &SubmitSpec) -> Response {
+        // Degenerate shapes are typed errors at admission, on the typed
+        // path too — not just at the codec (a `tasks=0` array job would
+        // otherwise land unschedulable, and a `count=0` burst would ack an
+        // empty id range as if it had submitted something).
+        if spec.tasks == 0 {
+            return Response::Error(ApiError::bad_arg("tasks", "0"));
+        }
+        if spec.count == 0 {
+            return Response::Error(ApiError::bad_arg("count", "0"));
+        }
+        if !(spec.run_secs.is_finite() && spec.run_secs >= 0.0) {
+            return Response::Error(ApiError::bad_arg("run_secs", &spec.run_secs.to_string()));
+        }
         let expansion = match spec.qos {
             // Individual submissions expand to one job per task.
             QosClass::Normal if spec.job_type == crate::job::JobType::Individual => {
@@ -503,6 +518,91 @@ impl Daemon {
         })
     }
 
+    /// Manifest admission: validate each entry independently, then land
+    /// every accepted entry's jobs **atomically** — one scheduler lock, one
+    /// batched arrival instant ([`Scheduler::submit_batch`]) — and report
+    /// per-entry id ranges plus typed per-entry rejects (partial accept).
+    fn handle_msubmit(&self, manifest: &Manifest) -> Response {
+        if manifest.entries.len() > MAX_MANIFEST_ENTRIES {
+            return Response::Error(ApiError::bad_arg(
+                "entries",
+                &format!("{} (cap {MAX_MANIFEST_ENTRIES})", manifest.entries.len()),
+            ));
+        }
+        let mut rejected = Vec::new();
+        let mut accepted_idx = Vec::new();
+        let mut total_jobs = 0u64;
+        for (i, entry) in manifest.entries.iter().enumerate() {
+            match entry.validate() {
+                Ok(()) => {
+                    total_jobs += entry.jobs();
+                    accepted_idx.push(i);
+                }
+                Err(error) => rejected.push(EntryReject {
+                    index: i as u32,
+                    error,
+                }),
+            }
+        }
+        if total_jobs > MAX_BATCH_JOBS {
+            // The aggregate cap is a whole-request error: silently dropping
+            // the tail of a manifest would be worse than refusing it.
+            return Response::Error(ApiError::bad_arg(
+                "manifest",
+                &format!("materializes {total_jobs} jobs (batch cap {MAX_BATCH_JOBS})"),
+            ));
+        }
+        // Materialize outside the lock; remember each entry's span so the
+        // contiguous id range submit_batch assigns can be split back out.
+        let mut specs = Vec::with_capacity(total_jobs as usize);
+        let mut spans = Vec::with_capacity(accepted_idx.len());
+        for &i in &accepted_idx {
+            let batch = manifest.entries[i].materialize();
+            spans.push((i, specs.len(), batch.len()));
+            specs.extend(batch);
+        }
+        let ids = if specs.is_empty() {
+            Vec::new()
+        } else {
+            self.with_sched_mut(|sched| {
+                // Keep the virtual clock caught up so the whole manifest
+                // lands "now" (computed under the lock, same as SUBMIT).
+                let target = self.target_now();
+                if target > sched.now() {
+                    sched.run_until(target);
+                }
+                sched.submit_batch(specs)
+            })
+        };
+        debug_assert_eq!(ids.len() as u64, total_jobs);
+        self.metrics
+            .jobs_submitted
+            .fetch_add(ids.len() as u64, Ordering::Relaxed);
+        let mut accepted = Vec::with_capacity(spans.len());
+        {
+            let mut tracked = self.tracked.lock().expect("tracked poisoned");
+            for &(i, start, len) in &spans {
+                let entry_ids = &ids[start..start + len];
+                if manifest.entries[i].qos == QosClass::Normal {
+                    // Interactive entries feed the daemon's Figure-2
+                    // latency histogram, like the legacy SUBMIT path.
+                    tracked.extend(entry_ids.iter().copied());
+                }
+                accepted.push(EntryAck {
+                    index: i as u32,
+                    first: entry_ids.first().map(|j| j.0).unwrap_or(0),
+                    last: entry_ids.last().map(|j| j.0).unwrap_or(0),
+                    count: len as u64,
+                });
+            }
+        }
+        Response::ManifestAck(ManifestAck {
+            accepted,
+            rejected,
+            jobs: ids.len() as u64,
+        })
+    }
+
     fn handle_squeue(&self, filter: &SqueueFilter) -> Response {
         let snap = self.read_snapshot();
         let states: Vec<JobState> = match filter.state {
@@ -526,6 +626,7 @@ impl Daemon {
                     user: v.user,
                     qos: v.qos,
                     state: v.state,
+                    tag: Some(Arc::clone(&v.tag)),
                 });
                 if rows.len() >= limit {
                     break 'outer;
@@ -564,6 +665,7 @@ impl Daemon {
             recognized_secs: v.recognized.map(SimTime::as_secs_f64),
             dispatched_secs: v.dispatched.map(SimTime::as_secs_f64),
             latency_ns: v.latency_ns(),
+            tag: Some(Arc::clone(&v.tag)),
         }
     }
 
@@ -801,6 +903,7 @@ fn wait_response(requested: usize, wv: WaitView, timed_out: bool) -> Response {
 mod tests {
     use super::*;
     use crate::cluster::{topology, PartitionLayout};
+    use crate::coordinator::manifest::{ManifestBuilder, ManifestEntry};
     use crate::job::JobType;
     use crate::sim::SchedCosts;
 
@@ -918,6 +1021,184 @@ mod tests {
             SubmitSpec::new(QosClass::Normal, JobType::Individual, 100, 3).with_count(100_000),
         )) {
             Response::Error(e) => assert_eq!(e.code, super::super::api::ErrorCode::BadArg),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn manifest_lands_heterogeneous_entries_atomically_with_per_entry_ids() {
+        // The acceptance workload: a 10k-entry mixed manifest — interactive
+        // AND spot, all three job types, more than three users (the shared
+        // generator in workload::manifests, also what the CI bench gate
+        // drives) — lands in ONE request with per-entry contiguous ranges.
+        let d = daemon();
+        let manifest = crate::workload::manifests::mixed(7, 10_000, 5);
+        assert_eq!(manifest.entries.len(), 10_000);
+        let writes_before = d.metrics.write_locks.load(Ordering::Relaxed);
+        let ack = match d.handle(Request::MSubmit(manifest)) {
+            Response::ManifestAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        // One RPC, one scheduler lock for the whole heterogeneous batch.
+        assert_eq!(d.metrics.write_locks.load(Ordering::Relaxed), writes_before + 1);
+        assert_eq!(ack.rejected.len(), 0, "{:?}", ack.rejected.first());
+        assert_eq!(ack.accepted.len(), 10_000);
+        assert_eq!(ack.jobs, 10_000);
+        assert_eq!(d.metrics.jobs_submitted.load(Ordering::Relaxed), 10_000);
+        // Per-entry ranges are contiguous, in order, and disjoint.
+        let mut next = ack.accepted[0].first;
+        for (k, acc) in ack.accepted.iter().enumerate() {
+            assert_eq!(acc.index as usize, k);
+            assert_eq!(acc.first, next, "entry {k} range not contiguous");
+            assert_eq!(acc.last - acc.first + 1, acc.count);
+            next = acc.last + 1;
+        }
+        d.with_scheduler(|sched| sched.check_invariants().unwrap());
+    }
+
+    #[test]
+    fn manifest_partial_accept_rejects_bad_entries_and_admits_the_rest() {
+        let d = daemon();
+        let manifest = ManifestBuilder::new()
+            .interactive(1, JobType::Array, 64)
+            .entry(ManifestEntry::new(QosClass::Normal, JobType::Array, 0, 1)) // tasks=0
+            .spot(9, JobType::TripleMode, 320)
+            .entry(ManifestEntry::new(QosClass::Spot, JobType::Array, 8, 9).with_count(0))
+            .entry(
+                ManifestEntry::new(QosClass::Normal, JobType::Individual, 4, 2)
+                    .with_cores_per_task(0),
+            )
+            .entry(ManifestEntry::new(QosClass::Spot, JobType::Array, 8, 9).with_tag("bad tag"))
+            .build();
+        let ack = match d.handle(Request::MSubmit(manifest)) {
+            Response::ManifestAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(ack.accepted.len(), 2);
+        assert_eq!(ack.jobs, 2);
+        assert_eq!(
+            ack.rejected.iter().map(|r| r.index).collect::<Vec<_>>(),
+            vec![1, 3, 4, 5]
+        );
+        for r in &ack.rejected {
+            assert_eq!(r.error.code, super::super::api::ErrorCode::BadArg, "{r:?}");
+        }
+        // The accepted entries are live: both jobs are in the queue/table.
+        for acc in &ack.accepted {
+            assert!(matches!(d.handle(Request::Sjob(acc.first)), Response::Job(_)));
+        }
+    }
+
+    #[test]
+    fn empty_manifest_acks_zero_without_locking_the_scheduler() {
+        let d = daemon();
+        let writes_before = d.metrics.write_locks.load(Ordering::Relaxed);
+        match d.handle(Request::MSubmit(Manifest::default())) {
+            Response::ManifestAck(a) => {
+                assert_eq!(a.accepted.len(), 0);
+                assert_eq!(a.jobs, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(d.metrics.write_locks.load(Ordering::Relaxed), writes_before);
+    }
+
+    #[test]
+    fn manifest_aggregate_job_cap_is_a_whole_request_error() {
+        let d = daemon();
+        // Two entries, each under the per-entry cap, together above it.
+        let big = ManifestEntry::new(QosClass::Normal, JobType::Individual, 1, 1)
+            .with_count((MAX_BATCH_JOBS / 2 + 1) as u32);
+        let manifest = ManifestBuilder::new()
+            .entry(big.clone())
+            .entry(big)
+            .build();
+        match d.handle(Request::MSubmit(manifest)) {
+            Response::Error(e) => {
+                assert_eq!(e.code, super::super::api::ErrorCode::BadArg);
+                assert!(e.message.contains("batch cap"), "{e}");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(d.metrics.jobs_submitted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn manifest_tags_flow_to_squeue_and_sjob() {
+        let d = daemon();
+        let manifest = ManifestBuilder::new()
+            .spot(9, JobType::TripleMode, 320)
+            .last(|e| e.with_tag("spot-backlog"))
+            .build();
+        let ack = match d.handle(Request::MSubmit(manifest)) {
+            Response::ManifestAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let id = ack.accepted[0].first;
+        match d.handle(Request::Sjob(id)) {
+            Response::Job(detail) => assert_eq!(detail.tag.as_deref(), Some("spot-backlog")),
+            other => panic!("{other:?}"),
+        }
+        match d.handle(Request::Squeue(SqueueFilter::default())) {
+            Response::Jobs(rows) => {
+                assert_eq!(rows.len(), 1);
+                assert_eq!(rows[0].tag.as_deref(), Some("spot-backlog"));
+            }
+            other => panic!("{other:?}"),
+        }
+        // The v2 wire carries the tag end to end.
+        let (wire, _) = d.handle_line_versioned(&format!("SJOB id={id}"), ProtocolVersion::V2);
+        assert!(wire.contains("tag=spot-backlog"), "{wire}");
+    }
+
+    #[test]
+    fn manifest_interactive_entries_feed_the_latency_histogram() {
+        let d = daemon();
+        let manifest = ManifestBuilder::new()
+            .interactive(1, JobType::TripleMode, 608)
+            .last(|e| e.with_run_secs(60.0).with_tag("fig2-live"))
+            .build();
+        let ack = match d.handle(Request::MSubmit(manifest)) {
+            Response::ManifestAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let wait = match d.handle(Request::Wait {
+            jobs: ack.job_ids(),
+            timeout_secs: 10.0,
+        }) {
+            Response::Wait(w) => w,
+            other => panic!("{other:?}"),
+        };
+        assert!(!wait.timed_out);
+        assert_eq!(wait.dispatched, 1);
+        let h = d.metrics.sched_latency();
+        assert_eq!(h.count(), 1, "manifest submissions must be tracked");
+        assert_eq!(h.max(), wait.latency_ns);
+    }
+
+    #[test]
+    fn degenerate_typed_submits_are_rejected_with_typed_errors() {
+        // Regression: the typed path used to bypass the codec's checks —
+        // tasks=0 landed no-op/unschedulable jobs, count=0 acked nothing.
+        let d = daemon();
+        for spec in [
+            SubmitSpec {
+                tasks: 0,
+                ..SubmitSpec::new(QosClass::Normal, JobType::Array, 1, 1)
+            },
+            SubmitSpec::new(QosClass::Normal, JobType::Array, 64, 1).with_count(0),
+            SubmitSpec::new(QosClass::Spot, JobType::TripleMode, 64, 9).with_run_secs(f64::NAN),
+        ] {
+            match d.handle(Request::Submit(spec.clone())) {
+                Response::Error(e) => {
+                    assert_eq!(e.code, super::super::api::ErrorCode::BadArg, "{spec:?}")
+                }
+                other => panic!("{spec:?} -> {other:?}"),
+            }
+        }
+        assert_eq!(d.metrics.jobs_submitted.load(Ordering::Relaxed), 0);
+        match d.handle(Request::Squeue(SqueueFilter::default())) {
+            Response::Jobs(rows) => assert!(rows.is_empty(), "{rows:?}"),
             other => panic!("{other:?}"),
         }
     }
@@ -1182,6 +1463,7 @@ mod tests {
             speedup: 10_000.0,
             pacer_tick_ms: 1,
             retire_grace_secs: Some(5.0),
+            ..DaemonConfig::default()
         });
         let ack = match d.handle(Request::Submit(
             SubmitSpec::new(QosClass::Normal, JobType::TripleMode, 608, 1).with_run_secs(1.0),

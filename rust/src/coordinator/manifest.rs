@@ -1,0 +1,491 @@
+//! Submission manifests: heterogeneous batch submission as one typed value.
+//!
+//! The legacy `SUBMIT ... count=N` body can only clone one homogeneous spec,
+//! yet every paper-shaped workload is a *mixture* — interactive and spot,
+//! individual/array/triple-mode, several users. A [`Manifest`] carries a
+//! list of per-entry job specs (user, QoS, launch type, tasks, cores per
+//! task, run time, tag, per-entry repeat count) so a whole heterogeneous
+//! burst lands in **one** RPC and one scheduler lock
+//! ([`crate::sched::Scheduler::submit_batch`]).
+//!
+//! Admission is **partial-accept**: each entry is validated independently;
+//! invalid entries come back as typed [`EntryReject`]s while every valid
+//! entry is admitted atomically (all accepted jobs reach the controller at
+//! the same virtual instant). Wire-level malformation (a record that does
+//! not parse) rejects the whole request instead — see
+//! [`super::codec`] and `PROTOCOL.md` §MSUBMIT for the grammar.
+//!
+//! [`ManifestBuilder`] is the client-side construction API used by the CLI,
+//! the workload generators ([`crate::workload::manifests`]), and the live
+//! Figure-2 experiments.
+
+use super::api::ApiError;
+use crate::job::{JobSpec, JobType, QosClass, UserId};
+use crate::sim::SimTime;
+use std::fmt;
+use std::sync::Arc;
+
+/// Cap on entries in one manifest — bounds wire body and admission work
+/// per RPC while staying above the paper's 10k-entry workloads. Sized so a
+/// maximal legal line (each record at the codec's 256-byte cap, plus
+/// separators) stays near 3 MB, comfortably under the server's 4 MB
+/// per-connection buffered-request cap: a protocol-legal manifest must
+/// always get a typed response, never a buffer-overflow connection close.
+pub const MAX_MANIFEST_ENTRIES: usize = 12_000;
+
+/// Cap on tag length (bytes).
+pub const MAX_TAG_LEN: usize = 64;
+
+/// Is `tag` a legal manifest tag? One token of `[A-Za-z0-9._:/-]`, 1 to
+/// [`MAX_TAG_LEN`] bytes — whitespace-free and record-separator-free by
+/// construction, so tags can never desync the wire.
+pub fn tag_is_valid(tag: &str) -> bool {
+    !tag.is_empty()
+        && tag.len() <= MAX_TAG_LEN
+        && tag
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b':' | b'/' | b'-'))
+}
+
+/// One manifest entry: a job spec plus a per-entry repeat count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    /// Submitting user id.
+    pub user: u32,
+    /// QoS class.
+    pub qos: QosClass,
+    /// Launch type.
+    pub job_type: JobType,
+    /// Tasks per job.
+    pub tasks: u32,
+    /// Cores per task (1 throughout the paper's experiments).
+    pub cores_per_task: u32,
+    /// Per-job run time in virtual seconds.
+    pub run_secs: f64,
+    /// Copies of this entry to submit.
+    pub count: u32,
+    /// Optional tag carried through the job table to `SQUEUE`/`SJOB`.
+    pub tag: Option<Arc<str>>,
+}
+
+impl ManifestEntry {
+    /// A single-copy entry with the default one-hour run time.
+    pub fn new(qos: QosClass, job_type: JobType, tasks: u32, user: u32) -> Self {
+        Self {
+            user,
+            qos,
+            job_type,
+            tasks,
+            cores_per_task: 1,
+            run_secs: 3600.0,
+            count: 1,
+            tag: None,
+        }
+    }
+
+    /// Builder: per-job run time (virtual seconds).
+    pub fn with_run_secs(mut self, run_secs: f64) -> Self {
+        self.run_secs = run_secs;
+        self
+    }
+
+    /// Builder: per-entry repeat count.
+    pub fn with_count(mut self, count: u32) -> Self {
+        self.count = count;
+        self
+    }
+
+    /// Builder: cores per task.
+    pub fn with_cores_per_task(mut self, cores: u32) -> Self {
+        self.cores_per_task = cores;
+        self
+    }
+
+    /// Builder: tag.
+    pub fn with_tag(mut self, tag: impl Into<Arc<str>>) -> Self {
+        self.tag = Some(tag.into());
+        self
+    }
+
+    /// Jobs this entry materializes: `count` copies of the paper's
+    /// per-type expansion (an interactive *individual* submission of `T`
+    /// tasks is `T` separate one-task jobs; everything else is one job).
+    pub fn jobs(&self) -> u64 {
+        let per_copy = match (self.qos, self.job_type) {
+            (QosClass::Normal, JobType::Individual) => self.tasks as u64,
+            _ => 1,
+        };
+        self.count as u64 * per_copy
+    }
+
+    /// Semantic validation (degenerate shapes land here as typed errors,
+    /// not as silently-unschedulable jobs; wire-level malformation is the
+    /// codec's problem).
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.tasks == 0 {
+            return Err(ApiError::bad_arg("tasks", "0"));
+        }
+        if self.count == 0 {
+            return Err(ApiError::bad_arg("count", "0"));
+        }
+        if self.cores_per_task == 0 {
+            return Err(ApiError::bad_arg("cores_per_task", "0"));
+        }
+        if !(self.run_secs.is_finite() && self.run_secs >= 0.0) {
+            return Err(ApiError::bad_arg("run_secs", &self.run_secs.to_string()));
+        }
+        if let Some(tag) = &self.tag {
+            if !tag_is_valid(tag) {
+                return Err(ApiError::bad_arg("tag", tag));
+            }
+        }
+        if self.jobs() > super::daemon::MAX_BATCH_JOBS {
+            return Err(ApiError::bad_arg(
+                "count",
+                &format!(
+                    "{} (entry materializes more than {} jobs)",
+                    self.count,
+                    super::daemon::MAX_BATCH_JOBS
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Materialize the entry's job specs, in submission order.
+    pub fn materialize(&self) -> Vec<JobSpec> {
+        let run = SimTime::from_secs_f64(self.run_secs);
+        let mut out = Vec::with_capacity(self.jobs() as usize);
+        for _ in 0..self.count {
+            match (self.qos, self.job_type) {
+                (QosClass::Normal, JobType::Individual) => {
+                    for _ in 0..self.tasks {
+                        out.push(self.spec_of(1, run));
+                    }
+                }
+                _ => out.push(self.spec_of(self.tasks, run)),
+            }
+        }
+        out
+    }
+
+    fn spec_of(&self, tasks: u32, run: SimTime) -> JobSpec {
+        let base = match self.qos {
+            QosClass::Normal => JobSpec::interactive(UserId(self.user), self.job_type, tasks),
+            QosClass::Spot => JobSpec::spot(UserId(self.user), self.job_type, tasks),
+        };
+        let spec = base.with_run_time(run).with_cores_per_task(self.cores_per_task);
+        match &self.tag {
+            // One shared allocation per entry, however many jobs it expands to.
+            Some(tag) => spec.with_tag(Arc::clone(tag)),
+            None => spec,
+        }
+    }
+}
+
+/// A typed submission manifest: an ordered list of entries.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Manifest {
+    /// The entries, in submission order (per-entry acks index into this).
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Total jobs the manifest materializes (before validation).
+    pub fn jobs(&self) -> u64 {
+        self.entries.iter().map(ManifestEntry::jobs).sum()
+    }
+
+    /// The first entry whose tag cannot be framed on the wire (fails
+    /// [`tag_is_valid`]), as `(index, tag)`. A typed builder can hold any
+    /// string; rendering one with whitespace, `;`, or a newline would
+    /// corrupt the record framing (or inject a second request line), so
+    /// the client refuses to send such a manifest — the server never sees
+    /// an unframeable tag from a well-behaved client, and a hostile one
+    /// is caught by the codec/admission checks.
+    pub fn first_unframeable_tag(&self) -> Option<(usize, &str)> {
+        self.entries.iter().enumerate().find_map(|(i, e)| {
+            e.tag
+                .as_deref()
+                .filter(|t| !tag_is_valid(t))
+                .map(|t| (i, t))
+        })
+    }
+}
+
+/// Client-side manifest construction.
+#[derive(Debug, Clone, Default)]
+pub struct ManifestBuilder {
+    entries: Vec<ManifestEntry>,
+}
+
+impl ManifestBuilder {
+    /// An empty builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a fully-specified entry.
+    pub fn entry(mut self, entry: ManifestEntry) -> Self {
+        self.entries.push(entry);
+        self
+    }
+
+    /// Append an interactive (Normal QoS) entry.
+    pub fn interactive(self, user: u32, job_type: JobType, tasks: u32) -> Self {
+        self.entry(ManifestEntry::new(QosClass::Normal, job_type, tasks, user))
+    }
+
+    /// Append a spot entry.
+    pub fn spot(self, user: u32, job_type: JobType, tasks: u32) -> Self {
+        self.entry(ManifestEntry::new(QosClass::Spot, job_type, tasks, user))
+    }
+
+    /// Modify the most recently added entry (builder-style per-entry knobs).
+    pub fn last(mut self, f: impl FnOnce(ManifestEntry) -> ManifestEntry) -> Self {
+        if let Some(e) = self.entries.pop() {
+            self.entries.push(f(e));
+        }
+        self
+    }
+
+    /// Entries added so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// No entries yet?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Finish.
+    pub fn build(self) -> Manifest {
+        Manifest {
+            entries: self.entries,
+        }
+    }
+}
+
+/// One accepted entry: the contiguous job-id range the scheduler assigned
+/// to it (entries are admitted in order under one lock, so each entry's
+/// materialized jobs get consecutive ids).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EntryAck {
+    /// Index into [`Manifest::entries`].
+    pub index: u32,
+    /// First assigned job id.
+    pub first: u64,
+    /// Last assigned job id.
+    pub last: u64,
+    /// Jobs created for this entry.
+    pub count: u64,
+}
+
+impl EntryAck {
+    /// The entry's assigned job ids.
+    pub fn ids(&self) -> impl Iterator<Item = u64> {
+        self.first..=self.last
+    }
+}
+
+/// One rejected entry: its index plus the typed validation error. The rest
+/// of the manifest is unaffected (partial accept).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryReject {
+    /// Index into [`Manifest::entries`].
+    pub index: u32,
+    /// Why admission refused it.
+    pub error: ApiError,
+}
+
+/// The manifest submission outcome: per-entry acks and rejects.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ManifestAck {
+    /// Accepted entries, ascending index order.
+    pub accepted: Vec<EntryAck>,
+    /// Rejected entries, ascending index order.
+    pub rejected: Vec<EntryReject>,
+    /// Total jobs created.
+    pub jobs: u64,
+}
+
+impl ManifestAck {
+    /// Every assigned job id, in submission order. (The capacity hint is
+    /// clamped: `jobs` is wire data, and a hand-built or hostile value
+    /// must not drive a giant allocation — the codec additionally rejects
+    /// acks whose records do not sum to `jobs`.)
+    pub fn job_ids(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity((self.jobs as usize).min(1 << 20));
+        for a in &self.accepted {
+            out.extend(a.ids());
+        }
+        out
+    }
+
+    /// The ack for one manifest entry index, if it was accepted.
+    pub fn entry(&self, index: u32) -> Option<&EntryAck> {
+        self.accepted.iter().find(|a| a.index == index)
+    }
+}
+
+impl fmt::Display for ManifestAck {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "accepted={} rejected={} jobs={}",
+            self.accepted.len(),
+            self.rejected.len(),
+            self.jobs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_expansion_matches_paper_model() {
+        let ind = ManifestEntry::new(QosClass::Normal, JobType::Individual, 8, 1).with_count(3);
+        assert_eq!(ind.jobs(), 24);
+        let specs = ind.materialize();
+        assert_eq!(specs.len(), 24);
+        assert!(specs.iter().all(|s| s.tasks == 1));
+
+        let arr = ManifestEntry::new(QosClass::Normal, JobType::Array, 8, 1).with_count(3);
+        assert_eq!(arr.jobs(), 3);
+        assert_eq!(arr.materialize().len(), 3);
+
+        // Spot individual stays one job of `tasks` tasks (the legacy
+        // SUBMIT expansion rule, kept bit-for-bit).
+        let spot = ManifestEntry::new(QosClass::Spot, JobType::Individual, 8, 9);
+        assert_eq!(spot.jobs(), 1);
+        assert_eq!(spot.materialize()[0].tasks, 8);
+    }
+
+    #[test]
+    fn materialized_specs_carry_tag_and_cores() {
+        let e = ManifestEntry::new(QosClass::Normal, JobType::Individual, 4, 7)
+            .with_cores_per_task(2)
+            .with_run_secs(60.0)
+            .with_tag("fig2-live");
+        let specs = e.materialize();
+        assert_eq!(specs.len(), 4);
+        for s in &specs {
+            assert_eq!(&*s.tag, "fig2-live");
+            assert_eq!(s.cores_per_task, 2);
+            assert_eq!(s.run_time, SimTime::from_secs(60));
+        }
+        // All four jobs share ONE tag allocation.
+        assert!(Arc::ptr_eq(&specs[0].tag, &specs[3].tag));
+    }
+
+    #[test]
+    fn degenerate_entries_fail_validation_with_typed_errors() {
+        use crate::coordinator::api::ErrorCode;
+        let base = || ManifestEntry::new(QosClass::Normal, JobType::Array, 4, 1);
+        for (entry, what) in [
+            (ManifestEntry { tasks: 0, ..base() }, "tasks"),
+            (ManifestEntry { count: 0, ..base() }, "count"),
+            (
+                ManifestEntry {
+                    cores_per_task: 0,
+                    ..base()
+                },
+                "cores_per_task",
+            ),
+            (
+                ManifestEntry {
+                    run_secs: f64::NAN,
+                    ..base()
+                },
+                "run_secs",
+            ),
+            (
+                ManifestEntry {
+                    run_secs: -1.0,
+                    ..base()
+                },
+                "run_secs",
+            ),
+        ] {
+            let err = entry.validate().expect_err(what);
+            assert_eq!(err.code, ErrorCode::BadArg, "{what}: {err}");
+            assert!(err.message.contains(what), "{what}: {err}");
+        }
+        assert!(base().validate().is_ok());
+    }
+
+    #[test]
+    fn tag_charset_is_enforced() {
+        assert!(tag_is_valid("fig2-live"));
+        assert!(tag_is_valid("a.b:c/d_e-9"));
+        assert!(!tag_is_valid(""));
+        assert!(!tag_is_valid("has space"));
+        assert!(!tag_is_valid("semi;colon"));
+        assert!(!tag_is_valid("new\nline"));
+        assert!(!tag_is_valid(&"x".repeat(MAX_TAG_LEN + 1)));
+        let e = ManifestEntry::new(QosClass::Spot, JobType::TripleMode, 8, 1).with_tag("bad tag");
+        assert!(e.validate().is_err());
+    }
+
+    #[test]
+    fn unframeable_tags_are_detected_before_the_wire() {
+        let ok = ManifestBuilder::new()
+            .spot(9, JobType::Array, 8)
+            .last(|e| e.with_tag("fine-tag"))
+            .build();
+        assert_eq!(ok.first_unframeable_tag(), None);
+        let bad = ManifestBuilder::new()
+            .interactive(1, JobType::Array, 8)
+            .spot(9, JobType::Array, 8)
+            .last(|e| e.with_tag("evil\nSHUTDOWN"))
+            .build();
+        assert_eq!(bad.first_unframeable_tag(), Some((1, "evil\nSHUTDOWN")));
+    }
+
+    #[test]
+    fn builder_collects_heterogeneous_entries() {
+        let m = ManifestBuilder::new()
+            .interactive(1, JobType::TripleMode, 608)
+            .last(|e| e.with_run_secs(120.0).with_tag("burst"))
+            .spot(9, JobType::Array, 64)
+            .last(|e| e.with_count(4))
+            .interactive(2, JobType::Individual, 16)
+            .build();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries[0].run_secs, 120.0);
+        assert_eq!(m.entries[1].count, 4);
+        assert_eq!(m.jobs(), 1 + 4 + 16);
+    }
+
+    #[test]
+    fn ack_exposes_per_entry_id_ranges() {
+        let ack = ManifestAck {
+            accepted: vec![
+                EntryAck {
+                    index: 0,
+                    first: 1,
+                    last: 3,
+                    count: 3,
+                },
+                EntryAck {
+                    index: 2,
+                    first: 4,
+                    last: 4,
+                    count: 1,
+                },
+            ],
+            rejected: vec![EntryReject {
+                index: 1,
+                error: ApiError::bad_arg("tasks", "0"),
+            }],
+            jobs: 4,
+        };
+        assert_eq!(ack.job_ids(), vec![1, 2, 3, 4]);
+        assert_eq!(ack.entry(2).unwrap().first, 4);
+        assert!(ack.entry(1).is_none());
+        assert_eq!(ack.to_string(), "accepted=2 rejected=1 jobs=4");
+    }
+}

@@ -43,6 +43,12 @@ pub struct DaemonMetrics {
     /// the single-threaded-multiplexing invariant, measured (the
     /// `connection_scaling` gate asserts 1, not a constant).
     pub reactor_threads_started: AtomicU64,
+    /// Virtual-time pacing passes the reactor offloaded onto the worker
+    /// pool (Linux): pacing for parked `WAIT`s runs off the I/O thread, so
+    /// a loaded scheduler pass can no longer stall accept/read/write for
+    /// the pace duration. The in-flight guard means this also bounds
+    /// concurrent paces to one.
+    pub pace_offloads: AtomicU64,
     /// Connections accepted by the server front door.
     pub connections_accepted: AtomicU64,
     /// `accept(2)` failures (other than would-block). The accept loop backs
@@ -157,6 +163,7 @@ impl DaemonMetrics {
         format!(
             "requests_ok={} requests_err={} jobs_submitted={} read_path={} write_locks={} \
              waits={}/{} conns={} accept_errs={} reactor_wakeups={} reactor_events={} \
+             pace_offloads={} \
              | request_wall: {} | sched_virtual: {} | lock_hold: {} | accept_to_first_byte: {}",
             self.requests_ok.load(Ordering::Relaxed),
             self.requests_err.load(Ordering::Relaxed),
@@ -169,6 +176,7 @@ impl DaemonMetrics {
             self.accept_errors.load(Ordering::Relaxed),
             self.reactor_wakeups.load(Ordering::Relaxed),
             self.reactor_ready_events.load(Ordering::Relaxed),
+            self.pace_offloads.load(Ordering::Relaxed),
             self.request_latency().summary_ns(),
             self.sched_latency().summary_ns(),
             self.lock_hold().summary_ns(),

@@ -10,6 +10,9 @@
 //! * [`codec`] — wire rendering/parsing for both protocol versions: v1 (the
 //!   original line grammar, byte-compatible) and v2 (tagged `key=value`
 //!   records), negotiated per connection via `HELLO v2`. See `PROTOCOL.md`.
+//! * [`manifest`] — typed submission manifests (`MSUBMIT`): heterogeneous
+//!   per-entry job specs in one RPC, partial-accept admission with typed
+//!   per-entry rejects, and the client-side `ManifestBuilder`.
 //! * [`daemon`] — the service core: a **write path** (SUBMIT/SCANCEL/
 //!   pacing) behind the scheduler mutex that publishes an immutable
 //!   [`snapshot::SchedSnapshot`] after every mutation, and a **read path**
@@ -38,6 +41,7 @@ pub mod api;
 pub mod client;
 pub mod codec;
 pub mod daemon;
+pub mod manifest;
 pub mod metrics;
 #[cfg(target_os = "linux")]
 pub(crate) mod reactor;
@@ -52,5 +56,8 @@ pub use api::{
 };
 pub use client::{Client, ClientError};
 pub use daemon::{Daemon, DaemonConfig};
+pub use manifest::{
+    EntryAck, EntryReject, Manifest, ManifestAck, ManifestBuilder, ManifestEntry,
+};
 pub use server::Server;
 pub use snapshot::{JobView, SchedSnapshot, WaitHub};

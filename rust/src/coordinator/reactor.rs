@@ -43,7 +43,7 @@ use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::raw::{c_int, c_uint, c_void};
 use std::os::unix::io::{AsRawFd, RawFd};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -381,8 +381,10 @@ const READ_CHUNK: usize = 16 * 1024;
 /// longer deadlines are just re-examined once per revolution).
 const WHEEL_GRANULARITY: Duration = Duration::from_millis(50);
 const WHEEL_SLOTS: usize = 512;
-/// While `WAIT`s are parked the reactor paces virtual time at this cadence
-/// (the role the old waiter thread played); with nothing parked it sleeps
+/// While `WAIT`s are parked, virtual-time pacing passes are scheduled at
+/// this cadence (the role the old waiter thread played) — on the *worker
+/// pool*, never the reactor thread, with an in-flight guard
+/// ([`Reactor::schedule_pace`]). With nothing parked the reactor sleeps
 /// indefinitely.
 const PACE_TICK: Duration = Duration::from_millis(20);
 const ACCEPT_BACKOFF_START: Duration = Duration::from_millis(1);
@@ -404,6 +406,17 @@ pub(super) struct Reactor<'a> {
     idle_timeout: Duration,
     accept_backoff: Duration,
     accept_paused_until: Option<Instant>,
+    /// A virtual-time pacing pass is running on the worker pool. Pacing for
+    /// parked `WAIT`s used to run inline on the reactor thread — a loaded
+    /// scheduler pass (a 100k-job dispatch burst catching up the clock)
+    /// stalled accept/read/write for the whole pace. The guard keeps at
+    /// most one pace in flight.
+    pace_inflight: Arc<AtomicBool>,
+    /// Earliest instant the next pace may be scheduled: paces run at the
+    /// `PACE_TICK` cadence, not once per reactor wakeup (an unthrottled
+    /// offload would busy-spin the reactor and a worker for the life of
+    /// any parked `WAIT`).
+    next_pace: Instant,
     shutting_down: bool,
 }
 
@@ -456,6 +469,8 @@ impl<'a> Reactor<'a> {
             idle_timeout,
             accept_backoff: ACCEPT_BACKOFF_START,
             accept_paused_until: None,
+            pace_inflight: Arc::new(AtomicBool::new(false)),
+            next_pace: Instant::now(),
             shutting_down: false,
         })
     }
@@ -481,8 +496,9 @@ impl<'a> Reactor<'a> {
             if !self.parked_tokens.is_empty() {
                 // Virtual time must advance for parked waits even when no
                 // pacer thread runs (the blocked request used to pace from
-                // its own worker).
-                self.daemon.pace();
+                // its own worker) — but never on THIS thread: a loaded
+                // scheduler pass would stall all I/O for the pace duration.
+                self.schedule_pace();
                 self.poll_parked();
             }
             self.fire_timers();
@@ -512,12 +528,50 @@ impl<'a> Reactor<'a> {
         self.cleanup();
     }
 
+    /// Offload one virtual-time pacing pass onto the worker pool, at most
+    /// once per `PACE_TICK` and never with a previous pace still in flight
+    /// (back-to-back paces are pointless and would pile the pool up behind
+    /// the scheduler mutex — and an unthrottled reschedule would busy-spin
+    /// reactor + worker for the life of a parked `WAIT`). No completion
+    /// wake is needed: a pace that lands dispatch/terminal progress already
+    /// wakes `epoll_wait` through the completion hub's eventfd
+    /// subscription, and a progress-free pace has nothing to resolve — the
+    /// `next_pace`-capped sleep brings the loop back for the next tick.
+    fn schedule_pace(&mut self) {
+        let now = Instant::now();
+        if now < self.next_pace {
+            return;
+        }
+        // Re-arm the tick before the in-flight check: if a long pace is
+        // still running, the next attempt is a tick away — a stale
+        // `next_pace` would otherwise zero the epoll timeout and spin.
+        self.next_pace = now + PACE_TICK;
+        if self
+            .pace_inflight
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return;
+        }
+        self.daemon
+            .metrics
+            .pace_offloads
+            .fetch_add(1, Ordering::Relaxed);
+        let daemon = Arc::clone(&self.daemon);
+        let flag = Arc::clone(&self.pace_inflight);
+        self.pool.execute(move || {
+            daemon.pace();
+            flag.store(false, Ordering::Release);
+        });
+    }
+
     /// How long `epoll_wait` may sleep: until the nearest timer, capped at
-    /// the pace tick while waits are parked; forever when nothing pends.
+    /// the next pace tick while waits are parked; forever when nothing
+    /// pends.
     fn next_timeout(&self) -> Option<Duration> {
         let mut deadline = self.wheel.next_deadline();
         if !self.parked_tokens.is_empty() {
-            let pace = Instant::now() + PACE_TICK;
+            let pace = self.next_pace.max(Instant::now());
             deadline = Some(deadline.map_or(pace, |d| d.min(pace)));
         }
         deadline.map(|d| d.saturating_duration_since(Instant::now()))

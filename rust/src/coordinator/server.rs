@@ -742,6 +742,47 @@ mod tests {
         handle.join().unwrap();
     }
 
+    /// Pacing for parked WAITs runs on the worker pool, not the reactor
+    /// thread (ROADMAP: a loaded scheduler pass used to stall I/O for the
+    /// pace duration) — and I/O stays served while a wait is parked.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn parked_wait_pacing_is_offloaded_to_the_worker_pool() {
+        use std::sync::atomic::Ordering;
+        let (daemon, addr, handle) = spawn_server_with(DEFAULT_IDLE_TIMEOUT, 2, 100);
+        let addr_s = addr.to_string();
+        let ack = {
+            let mut submitter = Client::connect_v2(&addr_s).unwrap();
+            // Over the 100-core user limit: can only resolve by timeout.
+            submitter
+                .submit(
+                    &SubmitSpec::new(QosClass::Normal, JobType::Array, 200, 1).with_run_secs(60.0),
+                )
+                .unwrap()
+        };
+        let waiter = {
+            let a = addr_s.clone();
+            let id = ack.first;
+            std::thread::spawn(move || {
+                let mut c = Client::connect_v2(&a).unwrap();
+                c.wait(&[id], 2.0).unwrap()
+            })
+        };
+        // While the wait is parked, pacing must be happening (virtual time
+        // advances for it) and the reactor must keep serving requests.
+        std::thread::sleep(Duration::from_millis(500));
+        assert!(
+            daemon.metrics.pace_offloads.load(Ordering::Relaxed) > 0,
+            "no pace was offloaded while a WAIT was parked"
+        );
+        let mut probe = Client::connect(&addr_s).unwrap();
+        assert_eq!(probe.request("PING").unwrap(), "OK pong");
+        let w = waiter.join().unwrap();
+        assert!(w.timed_out, "{w:?}");
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
     /// The reactor's zero-poll guarantee at test scale: established idle
     /// connections produce no reactor wakeups at all.
     #[cfg(target_os = "linux")]

@@ -64,6 +64,8 @@ pub struct JobView {
     pub recognized: Option<SimTime>,
     /// Last `DispatchDone` event-log time.
     pub dispatched: Option<SimTime>,
+    /// Job tag (shared with the spec: capture costs one `Arc` clone).
+    pub tag: Arc<str>,
     /// The job's transition counter at capture: delta capture re-uses the
     /// previous snapshot's view whenever this is unchanged.
     pub revision: u64,
@@ -87,6 +89,7 @@ impl JobView {
             requeues: j.requeue_count,
             recognized: log.first(j.id, LogKind::Recognized),
             dispatched: log.last(j.id, LogKind::DispatchDone),
+            tag: Arc::clone(&j.spec.tag),
             revision: j.revision(),
         }
     }
@@ -405,6 +408,7 @@ mod tests {
         let snap = SchedSnapshot::capture(&s, None);
         let v = snap.job(id.0).expect("submitted job visible");
         assert_eq!(v.state, JobState::Pending);
+        assert_eq!(&*v.tag, "interactive", "tag flows into the published view");
         assert!(!v.settled());
         assert!(s.run_until_dispatched(&[id], SimTime::from_secs(60)));
         let snap2 = SchedSnapshot::capture(&s, Some(&snap));

@@ -10,7 +10,14 @@ use crate::sim::SchedCosts;
 
 const TASKS: u32 = 608;
 
-/// Run the experiment.
+/// Run the experiment **live**: the same workload shapes replayed over TCP
+/// against a running daemon via manifest submission, latencies read from
+/// remote `WAIT` responses (see [`super::live`]).
+pub fn run_live(seed: u64) -> ExpReport {
+    super::live::run(seed)
+}
+
+/// Run the experiment (in-process simulation).
 pub fn run(seed: u64) -> ExpReport {
     let mut rows = Vec::new();
     for jt in JobType::all() {

@@ -1,0 +1,210 @@
+//! **Live** Figure-2 replay: the same workloads as the in-process
+//! experiment harness, submitted as manifests **over TCP against a running
+//! daemon** through the public client API, with the virtual scheduling
+//! latency read back from remote `WAIT` responses.
+//!
+//! The in-process harness ([`super::runner`]) measures the scheduler
+//! directly; this module proves the whole coordinator stack — manifest
+//! codec, admission, batched `submit_batch`, snapshot read path,
+//! subscription `WAIT` — reproduces the paper's Figure-2 curves end to
+//! end. Latency is *virtual* (first `Recognized` → last `DispatchDone`),
+//! so the daemon's wall-clock `speedup` only bounds how long the replay
+//! takes, not what it measures; see `EXPERIMENTS.md` §Live-Fig2 for the
+//! observed in-process-vs-TCP deltas.
+
+use super::{ratio, ExpReport, ExpRow, Expectation};
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::{Client, Daemon, DaemonConfig, Server};
+use crate::job::JobType;
+use crate::preempt::{PreemptApproach, PreemptMode};
+use crate::sched::SchedulerConfig;
+use crate::sim::SchedCosts;
+use crate::workload::manifests;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// TX-2500 development-cluster burst size (as Fig 2a).
+const TASKS: u32 = 608;
+
+/// Virtual seconds per wall second for the replay daemons: high enough
+/// that a multi-hundred-virtual-second preemption case replays in well
+/// under a wall second.
+const SPEEDUP: f64 = 2_000.0;
+
+/// Wall-clock ceiling for one live `WAIT` (the measured latencies resolve
+/// in fractions of a second at [`SPEEDUP`]; this only guards CI hangs).
+const WAIT_TIMEOUT_SECS: f64 = 120.0;
+
+/// Run one live case: spin up a fresh daemon + TCP server, optionally fill
+/// it with spot work (manifest), submit the interactive burst (manifest),
+/// and return the burst's virtual scheduling time as reported by `WAIT`.
+fn run_live_case(
+    layout: PartitionLayout,
+    approach: PreemptApproach,
+    jt: JobType,
+    fill_tasks: u32,
+    seed: u64,
+) -> f64 {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), layout)
+        .with_approach(approach)
+        .with_phase_seed(seed);
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        cfg,
+        DaemonConfig {
+            speedup: SPEEDUP,
+            pacer_tick_ms: 1,
+            // Retirement off the replay path: grace far beyond the horizon.
+            retire_grace_secs: Some(86_400.0),
+            ..DaemonConfig::default()
+        },
+    );
+    let pacer = daemon.spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).expect("bind live daemon");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let server_thread = std::thread::spawn(move || server.serve());
+    let mut client = Client::connect_v2(&addr).expect("connect");
+
+    if fill_tasks > 0 {
+        // Fill with spot work first, as the paper does (one spot job for
+        // Fig 2a–f), then let the system settle 90 virtual seconds — the
+        // same protocol as the in-process runner.
+        let ack = client
+            .msubmit(&manifests::spot_fill(900, fill_tasks, 1))
+            .expect("fill msubmit");
+        assert!(ack.rejected.is_empty(), "{:?}", ack.rejected);
+        let w = client
+            .wait(&ack.job_ids(), WAIT_TIMEOUT_SECS)
+            .expect("fill wait");
+        assert!(!w.timed_out, "spot fill failed to dispatch");
+        let settle_until = client.stats().expect("stats").virtual_now_secs + 90.0;
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while client.stats().expect("stats").virtual_now_secs < settle_until {
+            assert!(Instant::now() < deadline, "virtual clock stalled");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    let ack = client
+        .msubmit(&manifests::fig2_burst(1, jt, TASKS, 3600.0))
+        .expect("burst msubmit");
+    assert!(ack.rejected.is_empty(), "{:?}", ack.rejected);
+    let ids = ack.job_ids();
+    let w = client.wait(&ids, WAIT_TIMEOUT_SECS).expect("burst wait");
+    assert!(
+        !w.timed_out && w.dispatched as usize == ids.len(),
+        "live burst failed to dispatch: {w:?}"
+    );
+    let total_secs = w.latency_ns as f64 / 1e9;
+
+    client.shutdown().ok();
+    server_thread.join().expect("server thread");
+    pacer.join().expect("pacer thread");
+    total_secs
+}
+
+/// Regenerate Figure 2a **live**: baseline vs automatic scheduler
+/// preemption (REQUEUE), single and dual partitions, three job types —
+/// every row measured over TCP. An in-process simulator row for the
+/// triple-mode baseline rides along so the live-vs-sim delta is visible
+/// in the same table.
+pub fn run(seed: u64) -> ExpReport {
+    let mut rows = Vec::new();
+    for jt in JobType::all() {
+        for (series, layout, fill) in [
+            ("baseline", PartitionLayout::Dual, 0u32),
+            ("auto/REQUEUE/single", PartitionLayout::Single, TASKS),
+            ("auto/REQUEUE/dual", PartitionLayout::Dual, TASKS),
+        ] {
+            let approach = if fill > 0 {
+                PreemptApproach::AutoScheduler {
+                    mode: PreemptMode::Requeue,
+                }
+            } else {
+                PreemptApproach::None
+            };
+            let total_secs = run_live_case(layout, approach, jt, fill, seed);
+            rows.push(ExpRow {
+                series: series.to_string(),
+                job_type: jt,
+                tasks: TASKS,
+                total_secs,
+                per_task_secs: total_secs / TASKS as f64,
+            });
+        }
+    }
+    // The in-process reference for the same triple-mode baseline case.
+    let sim = super::run_case(
+        &super::Case::baseline(
+            SchedCosts::dedicated(),
+            topology::tx2500,
+            PartitionLayout::Dual,
+            JobType::TripleMode,
+            TASKS,
+        )
+        .with_seed(seed),
+    );
+    rows.push(ExpRow {
+        series: "baseline (in-process sim)".to_string(),
+        job_type: JobType::TripleMode,
+        tasks: TASKS,
+        total_secs: sim.total_secs,
+        per_task_secs: sim.per_task_secs,
+    });
+
+    let get = |series: &str, jt: JobType| {
+        rows.iter()
+            .find(|r| r.series == series && r.job_type == jt)
+            .expect("row")
+            .clone()
+    };
+    let base_tri = get("baseline", JobType::TripleMode);
+    let base_ind = get("baseline", JobType::Individual);
+    let base_arr = get("baseline", JobType::Array);
+    let tri_single = get("auto/REQUEUE/single", JobType::TripleMode);
+    let tri_dual = get("auto/REQUEUE/dual", JobType::TripleMode);
+    let sim_tri = get("baseline (in-process sim)", JobType::TripleMode);
+    let live_vs_sim = base_tri.per_task_secs / sim_tri.per_task_secs;
+
+    let tri_speedup = ratio(&base_ind, &base_tri).min(ratio(&base_arr, &base_tri));
+    let expectations = vec![
+        Expectation {
+            claim: "live: triple-mode baseline ≥25x faster per task than individual/array",
+            holds: tri_speedup >= 25.0,
+            detail: format!("measured {tri_speedup:.0}x over TCP"),
+        },
+        Expectation {
+            claim: "live: auto preemption slower than baseline (triple-mode, both layouts)",
+            holds: tri_single.per_task_secs > base_tri.per_task_secs
+                && tri_dual.per_task_secs > base_tri.per_task_secs,
+            detail: format!(
+                "single {:.1}x, dual {:.1}x baseline",
+                ratio(&tri_single, &base_tri),
+                ratio(&tri_dual, &base_tri)
+            ),
+        },
+        Expectation {
+            claim: "live latency matches the in-process simulation (virtual metric, ±20x band)",
+            holds: (0.05..=20.0).contains(&live_vs_sim),
+            detail: format!(
+                "live {:.3}s vs sim {:.3}s ({live_vs_sim:.2}x)",
+                base_tri.total_secs, sim_tri.total_secs
+            ),
+        },
+    ];
+    ExpReport {
+        id: "fig2a-live",
+        title: "TX-2500 LIVE over TCP: manifest replay of baseline vs auto-preemption (REQUEUE)",
+        rows,
+        expectations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn live_fig2a_shape_matches_paper_over_tcp() {
+        let report = super::run(1);
+        assert!(report.check(), "\n{}", report.render());
+    }
+}

@@ -14,6 +14,7 @@ pub mod fig2d;
 pub mod fig2e;
 pub mod fig2f;
 pub mod fig2g;
+pub mod live;
 pub mod runner;
 pub mod table1;
 
@@ -290,15 +291,19 @@ pub(crate) fn mode_comparison_panel(
     }
 }
 
-/// All experiment ids, for the CLI.
+/// All experiment ids, for the CLI. `fig2a-live` replays the Figure-2a
+/// workloads over TCP against a real daemon (manifest submission + remote
+/// `WAIT` latencies) instead of driving the simulator in process.
 pub const ALL: &[&str] = &[
-    "fig2a", "fig2b", "fig2c", "fig2d", "fig2e", "fig2f", "fig2g", "table1", "ablations",
+    "fig2a", "fig2a-live", "fig2b", "fig2c", "fig2d", "fig2e", "fig2f", "fig2g", "table1",
+    "ablations",
 ];
 
 /// Run an experiment by id.
 pub fn run_by_id(id: &str, seed: u64) -> Option<ExpReport> {
     match id {
         "fig2a" => Some(fig2a::run(seed)),
+        "fig2a-live" => Some(fig2a::run_live(seed)),
         "fig2b" => Some(fig2b::run(seed)),
         "fig2c" => Some(fig2c::run(seed)),
         "fig2d" => Some(fig2d::run(seed)),

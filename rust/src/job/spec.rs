@@ -14,6 +14,7 @@ use super::qos::QosClass;
 use super::user::UserId;
 use crate::cluster::AllocRequest;
 use crate::sim::SimTime;
+use std::sync::{Arc, OnceLock};
 
 /// The launch type of a submission.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -68,9 +69,21 @@ pub struct JobSpec {
     /// How long the job runs once started (simulation only; the paper
     /// measures scheduling time, not run time).
     pub run_time: SimTime,
-    /// Optional human-readable tag for traces and reports.
-    pub tag: &'static str,
+    /// Human-readable tag for traces, reports, and (since the manifest
+    /// submission path) remote clients: shared, so a 100k-job burst holds
+    /// one allocation per distinct tag, not one per job.
+    pub tag: Arc<str>,
 }
+
+/// The default tags are process-wide shared allocations: constructing a
+/// spec costs an `Arc` clone, never a fresh string, so burst submission
+/// paths stay allocation-free per job.
+fn shared_tag(cell: &'static OnceLock<Arc<str>>, text: &'static str) -> Arc<str> {
+    Arc::clone(cell.get_or_init(|| Arc::from(text)))
+}
+
+static INTERACTIVE_TAG: OnceLock<Arc<str>> = OnceLock::new();
+static SPOT_TAG: OnceLock<Arc<str>> = OnceLock::new();
 
 impl JobSpec {
     /// An interactive (Normal QoS) job.
@@ -82,7 +95,7 @@ impl JobSpec {
             cores_per_task: 1,
             qos: QosClass::Normal,
             run_time: SimTime::from_secs(3600),
-            tag: "interactive",
+            tag: shared_tag(&INTERACTIVE_TAG, "interactive"),
         }
     }
 
@@ -95,7 +108,7 @@ impl JobSpec {
             cores_per_task: 1,
             qos: QosClass::Spot,
             run_time: SimTime::from_secs(24 * 3600),
-            tag: "spot",
+            tag: shared_tag(&SPOT_TAG, "spot"),
         }
     }
 
@@ -105,9 +118,17 @@ impl JobSpec {
         self
     }
 
-    /// Builder: set tag.
-    pub fn with_tag(mut self, tag: &'static str) -> Self {
-        self.tag = tag;
+    /// Builder: set tag. Pass an `Arc<str>` clone to share one allocation
+    /// across a burst (a `&str` allocates once here).
+    pub fn with_tag(mut self, tag: impl Into<Arc<str>>) -> Self {
+        self.tag = tag.into();
+        self
+    }
+
+    /// Builder: set cores per task (1 throughout the paper's experiments;
+    /// manifest entries may override it).
+    pub fn with_cores_per_task(mut self, cores: u32) -> Self {
+        self.cores_per_task = cores;
         self
     }
 
@@ -175,5 +196,30 @@ mod tests {
         let s = JobSpec::spot(UserId(2), JobType::TripleMode, 512);
         assert_eq!(s.qos, QosClass::Spot);
         assert_eq!(s.cores(), 512);
+    }
+
+    #[test]
+    fn default_tags_share_one_allocation() {
+        let a = JobSpec::interactive(UserId(1), JobType::Individual, 1);
+        let b = JobSpec::interactive(UserId(2), JobType::Array, 8);
+        assert_eq!(&*a.tag, "interactive");
+        assert!(Arc::ptr_eq(&a.tag, &b.tag), "default tag must be shared");
+        let s = JobSpec::spot(UserId(9), JobType::TripleMode, 64);
+        assert_eq!(&*s.tag, "spot");
+    }
+
+    #[test]
+    fn with_tag_accepts_str_and_arc() {
+        let shared: Arc<str> = Arc::from("fig2-live");
+        let a = JobSpec::interactive(UserId(1), JobType::Array, 4).with_tag(Arc::clone(&shared));
+        let b = JobSpec::interactive(UserId(1), JobType::Array, 4).with_tag("plain");
+        assert!(Arc::ptr_eq(&a.tag, &shared));
+        assert_eq!(&*b.tag, "plain");
+        assert_eq!(
+            JobSpec::interactive(UserId(1), JobType::Array, 4)
+                .with_cores_per_task(2)
+                .cores(),
+            8
+        );
     }
 }

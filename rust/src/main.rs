@@ -13,7 +13,8 @@
 
 use spotcloud::cluster::{topology, PartitionLayout};
 use spotcloud::coordinator::{
-    api, Client, Daemon, DaemonConfig, Server, SqueueFilter, SubmitSpec,
+    api, codec, Client, Daemon, DaemonConfig, Manifest, ManifestAck, Server, SqueueFilter,
+    SubmitSpec,
 };
 use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
 use spotcloud::sched::SchedulerConfig;
@@ -28,7 +29,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("daemon") => cmd_daemon(&args[1..]),
         Some(
-            c @ ("submit" | "squeue" | "sjob" | "scancel" | "wait" | "stats" | "util"
+            c @ ("submit" | "msubmit" | "squeue" | "sjob" | "scancel" | "wait" | "stats" | "util"
             | "shutdown" | "ping"),
         ) => cmd_client(c, &args[1..]),
         Some("--help") | Some("-h") | None => {
@@ -53,7 +54,9 @@ fn print_usage() {
            experiment <id|all>   regenerate a paper figure ({})\n\
            simulate              run a mixed workload simulation\n\
            daemon                start the coordinator daemon\n\
-           submit|squeue|sjob|scancel|wait|stats|util|ping|shutdown   client commands\n\n\
+           submit|msubmit|squeue|sjob|scancel|wait|stats|util|ping|shutdown   client commands\n\
+           (msubmit <file|->: one manifest entry per line, `qos=.. type=.. tasks=.. user=..\n\
+            [cores_per_task=..] [run_secs=..] [count=..] [tag=..]`; # comments allowed)\n\n\
          run `spotcloud <subcommand> --help` for options",
         spotcloud::experiments::ALL.join(", ")
     );
@@ -236,7 +239,7 @@ fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
         .opt("state", "state filter (squeue)", None)
         .opt("limit", "row limit (squeue)", None)
         .opt("timeout", "wall timeout in seconds (wait)", Some("30"))
-        .positional("arg", "job id(s) for scancel / sjob / wait");
+        .positional("arg", "job id(s) for scancel / sjob / wait; manifest file (msubmit, - = stdin)");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_help(&cmd, e),
@@ -293,6 +296,44 @@ fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
                         .with_count(count),
                 )
                 .map(|ack| ack.to_string())
+        }
+        "msubmit" => {
+            let Some(path) = parsed.positionals.first() else {
+                eprintln!("msubmit needs a manifest file path (or - for stdin)");
+                return 2;
+            };
+            let text = if path == "-" {
+                use std::io::Read as _;
+                let mut buf = String::new();
+                if let Err(e) = std::io::stdin().read_to_string(&mut buf) {
+                    eprintln!("reading stdin: {e}");
+                    return 2;
+                }
+                buf
+            } else {
+                match std::fs::read_to_string(path) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        eprintln!("reading {path}: {e}");
+                        return 2;
+                    }
+                }
+            };
+            let mut entries = Vec::new();
+            for (lineno, line) in text.lines().enumerate() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                match codec::parse_manifest_entry(line) {
+                    Ok(e) => entries.push(e),
+                    Err(e) => {
+                        eprintln!("{path}:{}: {e}", lineno + 1);
+                        return 2;
+                    }
+                }
+            }
+            client.msubmit(&Manifest { entries }).map(render_manifest_ack)
         }
         "squeue" => {
             let mut filter = SqueueFilter::default();
@@ -377,17 +418,39 @@ fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
     }
 }
 
+fn render_manifest_ack(ack: ManifestAck) -> String {
+    let mut out = format!("manifest {ack}");
+    for acc in &ack.accepted {
+        out.push_str(&format!(
+            "\n  entry {}: accepted, jobs {}-{} ({} job{})",
+            acc.index,
+            acc.first,
+            acc.last,
+            acc.count,
+            if acc.count == 1 { "" } else { "s" },
+        ));
+    }
+    for rej in &ack.rejected {
+        out.push_str(&format!(
+            "\n  entry {}: REJECTED [{}] {}",
+            rej.index, rej.error.code, rej.error.message
+        ));
+    }
+    out
+}
+
 fn render_squeue(rows: Vec<spotcloud::coordinator::JobSummary>) -> String {
-    let mut out = String::from("JOBID TYPE TASKS USER QOS STATE");
+    let mut out = String::from("JOBID TYPE TASKS USER QOS STATE TAG");
     for r in &rows {
         out.push_str(&format!(
-            "\n{} {} {} user{} {} {}",
+            "\n{} {} {} user{} {} {} {}",
             r.id,
             r.job_type.label(),
             r.tasks,
             r.user,
             r.qos,
-            api::state_token(r.state)
+            api::state_token(r.state),
+            r.tag.as_deref().unwrap_or("-"),
         ));
     }
     out.push_str(&format!("\n({} jobs)", rows.len()));
@@ -397,7 +460,7 @@ fn render_squeue(rows: Vec<spotcloud::coordinator::JobSummary>) -> String {
 fn render_job(d: spotcloud::coordinator::JobDetail) -> String {
     let opt = |v: Option<f64>| v.map(|x| format!("{x:.3}s")).unwrap_or_else(|| "-".into());
     format!(
-        "job {} {} tasks={} user{} qos={} state={} submitted={:.3}s started={} ended={} \
+        "job {} {} tasks={} user{} qos={} state={} tag={} submitted={:.3}s started={} ended={} \
          requeues={} sched_latency={}",
         d.id,
         d.job_type.label(),
@@ -405,6 +468,7 @@ fn render_job(d: spotcloud::coordinator::JobDetail) -> String {
         d.user,
         d.qos,
         api::state_token(d.state),
+        d.tag.as_deref().unwrap_or("-"),
         d.submit_secs,
         opt(d.start_secs),
         opt(d.end_secs),

@@ -114,12 +114,14 @@ impl WorkloadGen {
 
     /// A spot backlog of `n` triple-mode jobs of `tasks` each.
     pub fn spot_backlog(&mut self, n: usize, tasks: u32) -> Vec<JobSpec> {
+        // One tag allocation for the whole backlog (tags are Arc<str>).
+        let tag: std::sync::Arc<str> = std::sync::Arc::from("spot-backlog");
         (0..n)
             .map(|_| {
                 let user = UserId(100 + self.rng.gen_range(0, 4) as u32);
                 JobSpec::spot(user, JobType::TripleMode, tasks)
                     .with_run_time(SimTime::from_secs(7 * 24 * 3600))
-                    .with_tag("spot-backlog")
+                    .with_tag(std::sync::Arc::clone(&tag))
             })
             .collect()
     }

@@ -1,0 +1,124 @@
+//! The paper's workload shapes as submission manifests.
+//!
+//! [`crate::workload::scenarios`] builds `Vec<JobSpec>` for the in-process
+//! simulator; this module builds the same shapes as typed
+//! [`Manifest`]s so they can be replayed **against a running daemon over
+//! TCP** through the public client (`Client::msubmit`) — the live
+//! Figure-2 mode in [`crate::experiments::live`] and the
+//! `manifest_scaling` bench both draw from here.
+
+use crate::coordinator::manifest::{Manifest, ManifestBuilder, ManifestEntry};
+use crate::job::{JobType, QosClass};
+use crate::util::rng::Xoshiro256;
+
+/// The interactive Figure-2 burst as a one-entry manifest: exactly what
+/// [`crate::workload::interactive_burst`] submits (an *individual* entry
+/// expands daemon-side into `tasks` one-task jobs).
+pub fn fig2_burst(user: u32, job_type: JobType, tasks: u32, run_secs: f64) -> Manifest {
+    ManifestBuilder::new()
+        .entry(
+            ManifestEntry::new(QosClass::Normal, job_type, tasks, user)
+                .with_run_secs(run_secs)
+                .with_tag("fig2-live"),
+        )
+        .build()
+}
+
+/// The spot fill as a manifest: `n_jobs` long triple-mode spot entries
+/// covering `total_tasks` in aggregate (mirrors
+/// [`crate::workload::spot_fill`]).
+pub fn spot_fill(user: u32, total_tasks: u32, n_jobs: u32) -> Manifest {
+    assert!(n_jobs > 0);
+    let per = total_tasks / n_jobs;
+    let mut b = ManifestBuilder::new();
+    let mut remaining = total_tasks;
+    for i in 0..n_jobs {
+        let t = if i + 1 == n_jobs { remaining } else { per };
+        remaining -= t;
+        if t > 0 {
+            b = b.entry(
+                ManifestEntry::new(QosClass::Spot, JobType::TripleMode, t, user)
+                    .with_run_secs(30.0 * 24.0 * 3600.0)
+                    .with_tag("spot-fill"),
+            );
+        }
+    }
+    b.build()
+}
+
+/// A deterministic heterogeneous manifest in the paper's mixture shape:
+/// `entries` entries cycling through all three launch types, interactive
+/// and spot QoS, and `users` distinct users. Every entry materializes
+/// **exactly one job** (individual entries use `tasks=1`), so an
+/// `entries`-entry manifest is directly comparable to a homogeneous
+/// `count=entries` burst — the `manifest_scaling` bench's equivalence.
+pub fn mixed(seed: u64, entries: usize, users: u32) -> Manifest {
+    assert!(users >= 1);
+    let mut rng = Xoshiro256::new(seed);
+    let mut b = ManifestBuilder::new();
+    for i in 0..entries {
+        let user = 1 + rng.gen_range(0, users as u64) as u32;
+        let jt = match i % 3 {
+            0 => JobType::Individual,
+            1 => JobType::Array,
+            _ => JobType::TripleMode,
+        };
+        let tasks = match jt {
+            JobType::Individual => 1,
+            _ => 1 + rng.gen_range(0, 8) as u32,
+        };
+        let entry = if i % 4 == 0 {
+            ManifestEntry::new(QosClass::Spot, jt, tasks, 100 + user)
+                .with_run_secs(86_400.0)
+                .with_tag("mixed-spot")
+        } else {
+            ManifestEntry::new(QosClass::Normal, jt, tasks, user)
+                .with_run_secs(600.0)
+                .with_tag("mixed-interactive")
+        };
+        b = b.entry(entry);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_burst_matches_scenarios_expansion() {
+        let m = fig2_burst(1, JobType::Individual, 608, 600.0);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.jobs(), 608, "individual expands per task");
+        let m = fig2_burst(1, JobType::TripleMode, 4096, 600.0);
+        assert_eq!(m.jobs(), 1);
+        assert!(m.entries.iter().all(|e| e.validate().is_ok()));
+    }
+
+    #[test]
+    fn spot_fill_covers_total_like_scenarios() {
+        let m = spot_fill(900, 4096, 8);
+        assert_eq!(m.entries.len(), 8);
+        assert_eq!(m.entries.iter().map(|e| e.tasks).sum::<u32>(), 4096);
+        assert!(m.entries.iter().all(|e| e.qos == QosClass::Spot));
+        let uneven = spot_fill(900, 100, 3);
+        assert_eq!(uneven.entries.iter().map(|e| e.tasks).sum::<u32>(), 100);
+    }
+
+    #[test]
+    fn mixed_is_deterministic_heterogeneous_and_one_job_per_entry() {
+        let a = mixed(7, 1000, 5);
+        let b = mixed(7, 1000, 5);
+        assert_eq!(a, b, "same seed, same manifest");
+        assert_eq!(a.entries.len(), 1000);
+        assert_eq!(a.jobs(), 1000, "one job per entry");
+        assert!(a.entries.iter().all(|e| e.validate().is_ok()));
+        let types: std::collections::BTreeSet<_> =
+            a.entries.iter().map(|e| e.job_type.label()).collect();
+        assert_eq!(types.len(), 3, "all three launch types present");
+        assert!(a.entries.iter().any(|e| e.qos == QosClass::Spot));
+        assert!(a.entries.iter().any(|e| e.qos == QosClass::Normal));
+        let users: std::collections::BTreeSet<_> = a.entries.iter().map(|e| e.user).collect();
+        assert!(users.len() >= 3, "{users:?}");
+    }
+}

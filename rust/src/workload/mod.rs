@@ -2,6 +2,7 @@
 //! generators for the end-to-end daemon driver.
 
 pub mod gen;
+pub mod manifests;
 pub mod scenarios;
 pub mod sim_mixed;
 pub mod trace;

@@ -50,6 +50,8 @@ pub fn spot_fill(user: UserId, total_tasks: u32, n_jobs: u32) -> Vec<JobSpec> {
     let per = total_tasks / n_jobs;
     let mut out = Vec::with_capacity(n_jobs as usize);
     let mut remaining = total_tasks;
+    // One tag allocation shared by the whole fill (tags are Arc<str>).
+    let tag: std::sync::Arc<str> = std::sync::Arc::from("spot-fill");
     for i in 0..n_jobs {
         let t = if i + 1 == n_jobs { remaining } else { per };
         remaining -= t;
@@ -57,7 +59,7 @@ pub fn spot_fill(user: UserId, total_tasks: u32, n_jobs: u32) -> Vec<JobSpec> {
             out.push(
                 JobSpec::spot(user, JobType::TripleMode, t)
                     .with_run_time(SimTime::from_secs(30 * 24 * 3600))
-                    .with_tag("spot-fill"),
+                    .with_tag(std::sync::Arc::clone(&tag)),
             );
         }
     }

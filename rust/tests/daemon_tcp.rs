@@ -2,7 +2,10 @@
 //! example drives it, in miniature.
 
 use spotcloud::cluster::{topology, PartitionLayout};
-use spotcloud::coordinator::{client::Client, Daemon, DaemonConfig, Server};
+use spotcloud::coordinator::{
+    client::Client, Daemon, DaemonConfig, ErrorCode, ManifestBuilder, ManifestEntry, Server,
+};
+use spotcloud::job::{JobType, QosClass};
 use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
 use spotcloud::sched::SchedulerConfig;
 use spotcloud::sim::SchedCosts;
@@ -33,6 +36,216 @@ fn spawn_cron_daemon() -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
     let addr = server.local_addr().unwrap().to_string();
     let handle = std::thread::spawn(move || server.serve());
     (daemon, addr, handle)
+}
+
+fn spawn_plain_daemon() -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual);
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        cfg,
+        DaemonConfig {
+            speedup: 5_000.0,
+            pacer_tick_ms: 1,
+            retire_grace_secs: Some(86_400.0),
+            ..DaemonConfig::default()
+        },
+    );
+    Arc::clone(&daemon).spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve());
+    (daemon, addr, handle)
+}
+
+#[test]
+fn ten_thousand_entry_mixed_manifest_lands_in_one_rpc_over_tcp() {
+    // The acceptance workload end to end: 10k heterogeneous entries —
+    // interactive + spot, all three launch types, several users (the
+    // shared workload::manifests::mixed generator, same shape as the CI
+    // bench gate) — in ONE MSUBMIT line with per-entry job-id ranges.
+    let (daemon, addr, server) = spawn_plain_daemon();
+    let manifest = spotcloud::workload::manifests::mixed(7, 10_000, 5);
+    let mut c = Client::connect_v2(&addr).unwrap();
+    let ack = c.msubmit(&manifest).unwrap();
+    assert_eq!(ack.rejected.len(), 0, "{:?}", ack.rejected.first());
+    assert_eq!(ack.accepted.len(), 10_000);
+    assert_eq!(ack.jobs, 10_000);
+    let mut next = ack.accepted[0].first;
+    for acc in &ack.accepted {
+        assert_eq!(acc.first, next, "entry {} range not contiguous", acc.index);
+        next = acc.last + 1;
+    }
+    // The tag round-trips to a remote SJOB (entry 1 is interactive in the
+    // mixed shape: every 4th entry is spot, starting at 0).
+    let detail = c.job(ack.accepted[1].first).unwrap();
+    assert_eq!(detail.tag.as_deref(), Some("mixed-interactive"));
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn manifest_partial_accept_over_tcp() {
+    let (daemon, addr, server) = spawn_plain_daemon();
+    let mut c = Client::connect_v2(&addr).unwrap();
+    let manifest = ManifestBuilder::new()
+        .interactive(1, JobType::TripleMode, 608)
+        .entry(ManifestEntry::new(QosClass::Normal, JobType::Array, 0, 1)) // tasks=0
+        .spot(9, JobType::Array, 64)
+        .build();
+    let ack = c.msubmit(&manifest).unwrap();
+    assert_eq!(ack.accepted.len(), 2);
+    assert_eq!(ack.rejected.len(), 1);
+    assert_eq!(ack.rejected[0].index, 1);
+    assert_eq!(ack.rejected[0].error.code, ErrorCode::BadArg);
+    // Accepted jobs are real: WAIT resolves the interactive entry.
+    let ids: Vec<u64> = ack.entry(0).unwrap().ids().collect();
+    let w = c.wait(&ids, 10.0).unwrap();
+    assert!(!w.timed_out);
+    assert_eq!(w.dispatched, 1);
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn v1_msubmit_is_typed_unsupported_and_never_desyncs() {
+    let (daemon, addr, server) = spawn_plain_daemon();
+    let mut c = Client::connect(&addr).unwrap(); // stays on v1
+    let resp = c
+        .request("MSUBMIT entries=1;qos=normal type=array tasks=4 user=1")
+        .unwrap();
+    assert!(resp.starts_with("ERR unsupported"), "{resp}");
+    // The connection is fully usable afterwards — no desync, no close.
+    assert_eq!(c.request("PING").unwrap(), "OK pong");
+    let resp = c.request("SUBMIT normal array 4 1 60").unwrap();
+    assert!(resp.starts_with("OK jobs="), "{resp}");
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn hostile_manifest_bodies_yield_typed_errors_and_keep_the_connection() {
+    let (daemon, addr, server) = spawn_plain_daemon();
+    let mut c = Client::connect_v2(&addr).unwrap();
+    for (line, code) in [
+        // Truncated body (fewer records than declared).
+        ("MSUBMIT entries=3;qos=normal type=array tasks=4 user=1", "bad_arity"),
+        // Padded body.
+        (
+            "MSUBMIT entries=1;qos=normal type=array tasks=4 user=1;qos=spot type=array tasks=4 user=9",
+            "bad_arity",
+        ),
+        // Duplicate key.
+        ("MSUBMIT entries=1;qos=normal qos=spot type=array tasks=4 user=1", "bad_arg"),
+        // Unknown key.
+        ("MSUBMIT entries=1;qos=normal type=array tasks=4 user=1 nope=1", "bad_arg"),
+        // Header missing.
+        ("MSUBMIT qos=normal type=array tasks=4 user=1", "bad_arity"),
+    ] {
+        let resp = c.request(line).unwrap();
+        assert!(
+            resp.starts_with(&format!("ERR code={code}")),
+            "{line} -> {resp}"
+        );
+        // Still in sync after every rejection.
+        let pong = c.request("PING").unwrap();
+        assert_eq!(pong, "OK kind=pong", "after {line}");
+    }
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn spliced_manifest_line_parses_exactly_once() {
+    // Slow-loris-style: one MSUBMIT line delivered across odd chunk
+    // boundaries (mid-record, mid-token) must yield exactly one parsed
+    // request and one ack — never a splice, a desync, or a partial batch.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let (daemon, addr, server) = spawn_plain_daemon();
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let read_response = |reader: &mut BufReader<TcpStream>| -> String {
+        let mut out = String::new();
+        loop {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).expect("read");
+            assert!(n > 0, "server closed mid-response (got {out:?})");
+            if line == "\n" {
+                break;
+            }
+            out.push_str(&line);
+        }
+        out.trim_end_matches('\n').to_string()
+    };
+    writer.write_all(b"HELLO v2\n").unwrap();
+    writer.flush().unwrap();
+    assert_eq!(read_response(&mut reader), "OK kind=hello proto=v2");
+    let line =
+        "MSUBMIT entries=2;qos=normal type=triple tasks=64 user=1 tag=spliced;qos=spot type=array tasks=8 user=9\n";
+    // Split mid-header, mid-record, and mid-token.
+    let bytes = line.as_bytes();
+    for chunk in [&bytes[..9], &bytes[9..20], &bytes[20..57], &bytes[57..90], &bytes[90..]] {
+        writer.write_all(chunk).unwrap();
+        writer.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let resp = read_response(&mut reader);
+    assert!(resp.starts_with("OK kind=manifest_ack accepted=2 rejected=0 jobs=2"), "{resp}");
+    // Exactly one MSUBMIT parsed, and the connection still serves.
+    writer.write_all(b"PING\n").unwrap();
+    writer.flush().unwrap();
+    assert_eq!(read_response(&mut reader), "OK kind=pong");
+    let msubmits = daemon
+        .metrics
+        .command_counts()
+        .into_iter()
+        .find(|(cmd, _)| *cmd == "MSUBMIT")
+        .map(|(_, n)| n)
+        .unwrap();
+    assert_eq!(msubmits, 1);
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn degenerate_submissions_are_typed_errors_over_tcp() {
+    let (daemon, addr, server) = spawn_plain_daemon();
+    // v1 grammar.
+    let mut v1 = Client::connect(&addr).unwrap();
+    for line in [
+        "SUBMIT normal array 0 1",      // tasks=0
+        "SUBMIT normal array 4 1 60 0", // count=0
+    ] {
+        let resp = v1.request(line).unwrap();
+        assert!(resp.starts_with("ERR bad_arg"), "{line} -> {resp}");
+    }
+    // v2 grammar.
+    let mut v2 = Client::connect_v2(&addr).unwrap();
+    for line in [
+        "SUBMIT qos=normal type=array tasks=0 user=1",
+        "SUBMIT qos=normal type=array tasks=4 user=1 count=0",
+        "MSUBMIT entries=1;qos=normal type=array tasks=4 user=1 cores_per_task=0",
+    ] {
+        let resp = v2.request(line).unwrap();
+        // cores_per_task=0 arrives via the manifest path: it parses, then
+        // admission rejects the entry (partial accept of a 1-entry
+        // manifest = zero accepted, one typed reject).
+        if line.starts_with("MSUBMIT") {
+            assert!(
+                resp.contains("accepted=0 rejected=1") && resp.contains("code=bad_arg"),
+                "{line} -> {resp}"
+            );
+        } else {
+            assert!(resp.starts_with("ERR code=bad_arg"), "{line} -> {resp}");
+        }
+    }
+    // Nothing landed.
+    let rows = v2.squeue(&Default::default()).unwrap();
+    assert!(rows.is_empty(), "{rows:?}");
+    daemon.shutdown();
+    server.join().unwrap();
 }
 
 #[test]
