@@ -1,0 +1,51 @@
+//! CI bench gate: durability overhead + recovery replay (see
+//! `benchkit::journal_scaling`).
+//!
+//! Times the same per-RPC admission loop with the journal off and under
+//! each fsync policy, then times cold `Daemon::recover` at two journal
+//! sizes, and emits `BENCH_journal.json` (override with
+//! `SPOTCLOUD_BENCH_JSON`). The JSON is written **before** the health
+//! asserts run, so a regressed run still surfaces its numbers in the CI
+//! artifact.
+//!
+//! Gate: admission p99 under the default `fsync=interval` policy must stay
+//! ≤ 1.5× journal-off — the WAL sits on the ack path of every admission,
+//! so its steady-state cost is one buffered write per record.
+//!
+//! `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke configuration.
+
+use spotcloud::benchkit::journal_scaling::{run_journal_scaling, JournalScalingConfig};
+
+fn main() {
+    let fast = std::env::var("SPOTCLOUD_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = if fast {
+        JournalScalingConfig::quick()
+    } else {
+        JournalScalingConfig::default()
+    };
+    eprintln!(
+        "journal_scaling: {} admissions per policy (off/never/interval/always, {} iters), \
+         recovery at {} and {} records",
+        cfg.jobs, cfg.iters, cfg.recovery_small, cfg.recovery_large
+    );
+    let report = run_journal_scaling(&cfg);
+    eprintln!("{}", report.summary());
+
+    let path =
+        std::env::var("SPOTCLOUD_BENCH_JSON").unwrap_or_else(|_| "BENCH_journal.json".into());
+    std::fs::write(&path, report.to_json()).expect("writing bench json");
+    println!("wrote {path}");
+
+    // Gates run AFTER the JSON write so a regressed run still surfaces its
+    // numbers in the CI artifact.
+    assert!(report.all_acked, "a submission was refused: {report:?}");
+    assert!(
+        report.replay_counts_match,
+        "recovery replayed a different record count than was journaled: {report:?}"
+    );
+    assert!(
+        report.interval_vs_off_ratio <= 1.5,
+        "journaled admission (fsync=interval) costs {:.2}x journal-off at p99 (gate 1.5x)",
+        report.interval_vs_off_ratio,
+    );
+}

@@ -1,0 +1,306 @@
+//! Journal-scaling scenario — the CI gate for the durability subsystem.
+//!
+//! Two questions, one report (`BENCH_journal.json`):
+//!
+//! 1. **What does write-ahead journaling cost at admission?** The same
+//!    per-RPC submission loop runs against four otherwise-identical
+//!    admission-only daemons — journal *off*, `fsync=never`,
+//!    `fsync=interval` (the default), `fsync=always` — and the per-request
+//!    p99 is compared. CI gates on the default policy staying within 1.5×
+//!    of journal-off: the WAL sits on the ack path of *every* admission,
+//!    so its steady-state cost must stay in the noise (one buffered
+//!    `write(2)` per record; the fsync stride amortizes the sync).
+//! 2. **How fast is recovery by replay?** A journal is grown to N admit
+//!    records with checkpointing pushed out of the way, the daemon is
+//!    dropped, and `Daemon::recover` is timed cold — once at the small
+//!    shape (1k records) and once at the large one (100k by default), so
+//!    the replay rate and its scaling are both on record.
+//!
+//! Every daemon here is frozen (`speedup = 0`): admitted jobs never
+//! dispatch, so the timings isolate admission + journaling from pacer
+//! work, exactly like `benchkit::manifest_scaling`.
+
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::api::{Request, Response, SubmitSpec};
+use crate::coordinator::{Daemon, DaemonConfig, DurabilityConfig, FsyncPolicy};
+use crate::job::{JobType, QosClass};
+use crate::metrics::stats::percentile;
+use crate::sched::SchedulerConfig;
+use crate::sim::SchedCosts;
+use crate::testkit::crash::TempDir;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Scenario shape.
+#[derive(Debug, Clone)]
+pub struct JournalScalingConfig {
+    /// Per-RPC admissions timed per fsync policy.
+    pub jobs: usize,
+    /// Timing repetitions per policy (fresh daemon + journal each; the
+    /// best p99 wins, like the min-wall convention elsewhere in benchkit).
+    pub iters: usize,
+    /// Records in the small recovery journal.
+    pub recovery_small: usize,
+    /// Records in the large recovery journal.
+    pub recovery_large: usize,
+}
+
+impl Default for JournalScalingConfig {
+    fn default() -> Self {
+        Self {
+            jobs: 2_000,
+            iters: 2,
+            recovery_small: 1_000,
+            recovery_large: 100_000,
+        }
+    }
+}
+
+impl JournalScalingConfig {
+    /// Sub-second smoke shape (`SPOTCLOUD_BENCH_FAST=1`, unit tests).
+    pub fn quick() -> Self {
+        Self {
+            jobs: 300,
+            iters: 1,
+            recovery_small: 200,
+            recovery_large: 1_000,
+        }
+    }
+}
+
+/// What one run measured.
+#[derive(Debug, Clone)]
+pub struct JournalScalingReport {
+    /// Admissions timed per policy.
+    pub jobs: usize,
+    /// Per-request admission p99 with no journal configured (µs).
+    pub p99_off_us: f64,
+    /// Per-request admission p99 under `fsync=never` (µs).
+    pub p99_never_us: f64,
+    /// Per-request admission p99 under `fsync=interval` (default stride, µs).
+    pub p99_interval_us: f64,
+    /// Per-request admission p99 under `fsync=always` (µs).
+    pub p99_always_us: f64,
+    /// p99_interval / p99_off — the CI gate (≤ 1.5).
+    pub interval_vs_off_ratio: f64,
+    /// Records in the small recovery journal.
+    pub recovery_small_records: usize,
+    /// Cold `Daemon::recover` wall seconds at the small shape.
+    pub recovery_small_wall_s: f64,
+    /// Records in the large recovery journal.
+    pub recovery_large_records: usize,
+    /// Cold `Daemon::recover` wall seconds at the large shape.
+    pub recovery_large_wall_s: f64,
+    /// Replay rate at the large shape (records / second).
+    pub recovery_large_records_per_s: f64,
+    /// Every submission acked on every iteration?
+    pub all_acked: bool,
+    /// Both recoveries replayed exactly the records that were journaled?
+    pub replay_counts_match: bool,
+}
+
+impl JournalScalingReport {
+    /// The machine-readable record CI uploads (`BENCH_journal.json`).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"journal_scaling\",\n",
+                "  \"jobs\": {},\n",
+                "  \"p99_off_us\": {:.3},\n",
+                "  \"p99_never_us\": {:.3},\n",
+                "  \"p99_interval_us\": {:.3},\n",
+                "  \"p99_always_us\": {:.3},\n",
+                "  \"interval_vs_off_ratio\": {:.3},\n",
+                "  \"recovery_small_records\": {},\n",
+                "  \"recovery_small_wall_s\": {:.6},\n",
+                "  \"recovery_large_records\": {},\n",
+                "  \"recovery_large_wall_s\": {:.6},\n",
+                "  \"recovery_large_records_per_s\": {:.1},\n",
+                "  \"all_acked\": {},\n",
+                "  \"replay_counts_match\": {}\n",
+                "}}\n",
+            ),
+            self.jobs,
+            self.p99_off_us,
+            self.p99_never_us,
+            self.p99_interval_us,
+            self.p99_always_us,
+            self.interval_vs_off_ratio,
+            self.recovery_small_records,
+            self.recovery_small_wall_s,
+            self.recovery_large_records,
+            self.recovery_large_wall_s,
+            self.recovery_large_records_per_s,
+            self.all_acked,
+            self.replay_counts_match,
+        )
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "journal_scaling: {} admissions — p99 off {:.2}us, never {:.2}us, \
+             interval {:.2}us (ratio {:.2}x, gate 1.5x), always {:.2}us; \
+             recovery {} rec {:.3}s / {} rec {:.3}s ({:.0} rec/s)",
+            self.jobs,
+            self.p99_off_us,
+            self.p99_never_us,
+            self.p99_interval_us,
+            self.interval_vs_off_ratio,
+            self.p99_always_us,
+            self.recovery_small_records,
+            self.recovery_small_wall_s,
+            self.recovery_large_records,
+            self.recovery_large_wall_s,
+            self.recovery_large_records_per_s,
+        )
+    }
+}
+
+fn sched_cfg() -> SchedulerConfig {
+    SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+}
+
+/// A fresh admission-only daemon: `speedup = 0` pins virtual time at
+/// zero, so no pacing or dispatch work pollutes the per-request timing.
+fn admission_daemon(durability: Option<DurabilityConfig>) -> Arc<Daemon> {
+    Daemon::new(
+        topology::tx2500(),
+        sched_cfg(),
+        DaemonConfig {
+            speedup: 0.0,
+            retire_grace_secs: None,
+            history_cap: None,
+            durability,
+            ..DaemonConfig::default()
+        },
+    )
+}
+
+/// Submit `n` individual jobs one RPC at a time, recording each request's
+/// wall latency. Returns the p99 in microseconds.
+fn admission_p99_us(d: &Daemon, n: usize, all_acked: &mut bool) -> f64 {
+    let mut lat_us = Vec::with_capacity(n);
+    for i in 0..n {
+        let user = 1 + (i as u32 % 5);
+        let t0 = Instant::now();
+        let resp = d.handle(Request::Submit(
+            SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, user).with_run_secs(600.0),
+        ));
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        *all_acked &= matches!(resp, Response::SubmitAck(_));
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    percentile(&lat_us, 0.99)
+}
+
+/// Best (minimum) admission p99 over `iters` fresh daemons under `fsync`
+/// (`None` = journal off). Each journaling iteration gets its own
+/// temporary directory.
+fn policy_p99_us(
+    cfg: &JournalScalingConfig,
+    fsync: Option<FsyncPolicy>,
+    all_acked: &mut bool,
+) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..cfg.iters.max(1) {
+        let tmp;
+        let durability = match fsync {
+            Some(policy) => {
+                tmp = TempDir::new("spotcloud-bench-journal");
+                Some(DurabilityConfig::new(tmp.path()).with_fsync(policy))
+            }
+            None => None,
+        };
+        let d = admission_daemon(durability);
+        best = best.min(admission_p99_us(&d, cfg.jobs, all_acked));
+        d.with_scheduler(|s| s.check_invariants().expect("invariants after admissions"));
+    }
+    best
+}
+
+/// Grow a journal to `records` admit records (checkpointing pushed past
+/// the end so recovery replays every record), drop the daemon, and time
+/// `Daemon::recover` cold. Returns (wall seconds, replayed == records).
+fn recovery_wall_s(records: usize, all_acked: &mut bool) -> (f64, bool) {
+    let tmp = TempDir::new("spotcloud-bench-recovery");
+    let dcfg = DurabilityConfig::new(tmp.path())
+        .with_fsync(FsyncPolicy::Never)
+        .with_checkpoint_every(records as u64 + 1);
+    let cfg = DaemonConfig {
+        speedup: 0.0,
+        retire_grace_secs: None,
+        history_cap: None,
+        durability: Some(dcfg),
+        ..DaemonConfig::default()
+    };
+    {
+        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+        admission_p99_us(&d, records, all_acked);
+        d.shutdown();
+    }
+    let t0 = Instant::now();
+    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+    let wall = t0.elapsed().as_secs_f64();
+    d.with_scheduler(|s| s.check_invariants().expect("invariants after recovery"));
+    (wall, report.admits_replayed == records)
+}
+
+/// Run the scenario.
+pub fn run_journal_scaling(cfg: &JournalScalingConfig) -> JournalScalingReport {
+    let mut all_acked = true;
+
+    let p99_off_us = policy_p99_us(cfg, None, &mut all_acked);
+    let p99_never_us = policy_p99_us(cfg, Some(FsyncPolicy::Never), &mut all_acked);
+    let p99_interval_us = policy_p99_us(cfg, Some(FsyncPolicy::default()), &mut all_acked);
+    let p99_always_us = policy_p99_us(cfg, Some(FsyncPolicy::Always), &mut all_acked);
+
+    let (recovery_small_wall_s, small_match) = recovery_wall_s(cfg.recovery_small, &mut all_acked);
+    let (recovery_large_wall_s, large_match) = recovery_wall_s(cfg.recovery_large, &mut all_acked);
+
+    JournalScalingReport {
+        jobs: cfg.jobs,
+        p99_off_us,
+        p99_never_us,
+        p99_interval_us,
+        p99_always_us,
+        interval_vs_off_ratio: p99_interval_us / p99_off_us.max(f64::EPSILON),
+        recovery_small_records: cfg.recovery_small,
+        recovery_small_wall_s,
+        recovery_large_records: cfg.recovery_large,
+        recovery_large_wall_s,
+        recovery_large_records_per_s: cfg.recovery_large as f64
+            / recovery_large_wall_s.max(f64::EPSILON),
+        all_acked,
+        replay_counts_match: small_match && large_match,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_journal_scaling_runs_and_reports() {
+        let r = run_journal_scaling(&JournalScalingConfig::quick());
+        assert!(r.all_acked, "{r:?}");
+        assert!(r.replay_counts_match, "{r:?}");
+        assert!(r.p99_off_us > 0.0 && r.p99_off_us.is_finite(), "{r:?}");
+        assert!(r.interval_vs_off_ratio > 0.0 && r.interval_vs_off_ratio.is_finite());
+        assert!(r.recovery_large_wall_s > 0.0 && r.recovery_large_wall_s.is_finite());
+        let json = r.to_json();
+        for key in [
+            "\"bench\": \"journal_scaling\"",
+            "\"p99_off_us\"",
+            "\"p99_interval_us\"",
+            "\"interval_vs_off_ratio\"",
+            "\"recovery_large_records_per_s\"",
+            "\"all_acked\": true",
+            "\"replay_counts_match\": true",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(r.summary().contains("journal_scaling"));
+    }
+}

@@ -10,6 +10,7 @@
 #[cfg(target_os = "linux")]
 pub mod connection_scaling;
 pub mod coordinator;
+pub mod journal_scaling;
 pub mod manifest_scaling;
 pub mod sched_scaling;
 

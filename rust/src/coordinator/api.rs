@@ -253,6 +253,23 @@ pub enum Request {
         /// Wall-clock timeout in seconds.
         timeout_secs: f64,
     },
+    /// Per-entry wait: block on "entry `entry` of manifest `manifest`"
+    /// instead of an explicit id list — the daemon resolves the entry's id
+    /// span through its manifest registry (v2 only on the wire; shares the
+    /// `WAIT` verb).
+    WaitEntry {
+        /// Manifest id from the `MSUBMIT` ack.
+        manifest: u64,
+        /// Entry index within that manifest.
+        entry: u32,
+        /// Wall-clock timeout in seconds.
+        timeout_secs: f64,
+    },
+    /// Re-attach to a prior manifest (by tag or id) and learn its
+    /// per-entry settlement, so a client that lost its connection — or a
+    /// daemon crash — collects exactly the not-yet-settled entries
+    /// (v2 only on the wire).
+    Resume(ResumeTarget),
     /// Daemon + scheduler counters.
     Stats,
     /// Cluster utilization snapshot.
@@ -263,10 +280,19 @@ pub enum Request {
     Shutdown,
 }
 
+/// What a `RESUME` re-attaches to.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResumeTarget {
+    /// The latest manifest registered under this tag.
+    Tag(String),
+    /// A specific manifest id (from the `MSUBMIT` ack or a prior resume).
+    Manifest(u64),
+}
+
 /// Every command verb, in wire order (per-command metrics index off this).
-pub const COMMANDS: [&str; 11] = [
-    "HELLO", "SUBMIT", "MSUBMIT", "SQUEUE", "SJOB", "SCANCEL", "WAIT", "STATS", "UTIL", "PING",
-    "SHUTDOWN",
+pub const COMMANDS: [&str; 12] = [
+    "HELLO", "SUBMIT", "MSUBMIT", "SQUEUE", "SJOB", "SCANCEL", "WAIT", "RESUME", "STATS", "UTIL",
+    "PING", "SHUTDOWN",
 ];
 
 impl Request {
@@ -280,6 +306,8 @@ impl Request {
             Request::Sjob(_) => "SJOB",
             Request::Scancel(_) => "SCANCEL",
             Request::Wait { .. } => "WAIT",
+            Request::WaitEntry { .. } => "WAIT",
+            Request::Resume(_) => "RESUME",
             Request::Stats => "STATS",
             Request::Util => "UTIL",
             Request::Ping => "PING",
@@ -469,6 +497,65 @@ pub struct StatsSnapshot {
     pub contention: Option<ContentionStats>,
 }
 
+/// One manifest entry's settlement as `RESUME` reports it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResumeEntry {
+    /// Entry index within the manifest.
+    pub index: u32,
+    /// First job id of the entry's span.
+    pub first: u64,
+    /// Jobs in the span.
+    pub count: u64,
+    /// How many of those jobs are settled (dispatched or terminal —
+    /// including retired/pruned jobs, which can never dispatch again).
+    pub settled: u64,
+    /// The entry's tag, if any.
+    pub tag: Option<Arc<str>>,
+}
+
+impl ResumeEntry {
+    /// Does this entry still have unsettled jobs worth waiting on?
+    pub fn pending(&self) -> bool {
+        self.settled < self.count
+    }
+
+    /// The entry's job ids.
+    pub fn ids(&self) -> impl Iterator<Item = u64> {
+        self.first..self.first + self.count
+    }
+}
+
+/// `RESUME` outcome: the manifest id plus per-entry settlement. A client
+/// resumes by collecting (`WAIT`ing on) exactly the entries with
+/// `settled < count`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResumeInfo {
+    /// The resolved manifest id.
+    pub manifest: u64,
+    /// Accepted entries, ascending index order.
+    pub entries: Vec<ResumeEntry>,
+}
+
+impl ResumeInfo {
+    /// Entries that still have unsettled jobs.
+    pub fn pending_entries(&self) -> impl Iterator<Item = &ResumeEntry> {
+        self.entries.iter().filter(|e| e.pending())
+    }
+}
+
+impl fmt::Display for ResumeInfo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let pending = self.pending_entries().count();
+        write!(
+            f,
+            "manifest={} entries={} pending={}",
+            self.manifest,
+            self.entries.len(),
+            pending
+        )
+    }
+}
+
 /// Cluster utilization snapshot (`UTIL`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct UtilSnapshot {
@@ -523,6 +610,8 @@ pub enum Response {
     Cancelled(u64),
     /// `WAIT` outcome.
     Wait(WaitResult),
+    /// `RESUME` outcome.
+    Resume(ResumeInfo),
     /// `STATS` snapshot.
     Stats(StatsSnapshot),
     /// `UTIL` snapshot.
@@ -659,6 +748,7 @@ mod tests {
                 jobs: vec![1],
                 timeout_secs: 1.0,
             },
+            Request::Resume(ResumeTarget::Tag("burst".into())),
             Request::Stats,
             Request::Util,
             Request::Ping,
@@ -667,5 +757,47 @@ mod tests {
         for (r, name) in reqs.iter().zip(COMMANDS) {
             assert_eq!(r.command_name(), name);
         }
+        // The per-entry wait form shares the WAIT verb (and metrics slot).
+        let we = Request::WaitEntry {
+            manifest: 1,
+            entry: 0,
+            timeout_secs: 1.0,
+        };
+        assert_eq!(we.command_name(), "WAIT");
+        assert_eq!(
+            Request::Resume(ResumeTarget::Manifest(3)).command_name(),
+            "RESUME"
+        );
+    }
+
+    #[test]
+    fn resume_info_pending_entries() {
+        let info = ResumeInfo {
+            manifest: 2,
+            entries: vec![
+                ResumeEntry {
+                    index: 0,
+                    first: 1,
+                    count: 4,
+                    settled: 4,
+                    tag: Some(Arc::from("done")),
+                },
+                ResumeEntry {
+                    index: 1,
+                    first: 5,
+                    count: 3,
+                    settled: 1,
+                    tag: None,
+                },
+            ],
+        };
+        assert!(!info.entries[0].pending());
+        assert!(info.entries[1].pending());
+        assert_eq!(
+            info.pending_entries().map(|e| e.index).collect::<Vec<_>>(),
+            vec![1]
+        );
+        assert_eq!(info.entries[1].ids().collect::<Vec<_>>(), vec![5, 6, 7]);
+        assert_eq!(info.to_string(), "manifest=2 entries=2 pending=1");
     }
 }

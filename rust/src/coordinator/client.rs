@@ -9,11 +9,12 @@
 //! [`ErrorCode`](super::api::ErrorCode), never as `Ok(String)`.
 
 use super::api::{
-    ApiError, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
-    StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    ApiError, JobDetail, JobSummary, ProtocolVersion, Request, Response, ResumeInfo, ResumeTarget,
+    SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::codec;
 use super::manifest::{Manifest, ManifestAck};
+use crate::util::rng::Xoshiro256;
 use std::fmt;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -21,6 +22,83 @@ use std::time::Duration;
 
 /// Default socket read/write timeout.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Retry/backoff schedule for reconnecting to a daemon that is down —
+/// typically one that crashed and is being recovered from its journal.
+///
+/// Delays grow exponentially from `base_delay` (doubling per attempt,
+/// capped at `max_delay`) with multiplicative jitter in `[0.5, 1.0]` so a
+/// fleet of resuming launchers does not reconnect in lockstep. The jitter
+/// stream is seeded deterministically (`seed`), keeping tests reproducible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Total connection attempts (the first try counts; 0 behaves as 1).
+    pub attempts: u32,
+    /// Delay before the second attempt (doubles each retry).
+    pub base_delay: Duration,
+    /// Upper bound on any single delay, pre-jitter.
+    pub max_delay: Duration,
+    /// Jitter seed.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            attempts: 5,
+            base_delay: Duration::from_millis(100),
+            max_delay: Duration::from_secs(5),
+            seed: 0x5eed_cafe,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A no-backoff policy: one attempt, fail fast.
+    pub fn once() -> Self {
+        Self {
+            attempts: 1,
+            ..Self::default()
+        }
+    }
+
+    /// The jittered delay to sleep after failed attempt `attempt`
+    /// (0-based). Exponential: `min(max_delay, base_delay << attempt)`,
+    /// scaled by a jitter factor in `[0.5, 1.0]`.
+    pub fn delay_after(&self, attempt: u32, rng: &mut Xoshiro256) -> Duration {
+        let exp = self
+            .base_delay
+            .saturating_mul(1u32 << attempt.min(16))
+            .min(self.max_delay);
+        exp.mul_f64(0.5 + 0.5 * rng.next_f64())
+    }
+
+    /// Run `connect` until it succeeds or the attempts are exhausted,
+    /// sleeping the jittered backoff between tries. Only transport
+    /// ([`ClientError::Io`]) failures retry: a typed API or protocol error
+    /// means the daemon *is* up and retrying would just repeat it.
+    pub fn run<T>(
+        &self,
+        mut connect: impl FnMut() -> ClientResult<T>,
+    ) -> ClientResult<T> {
+        let mut rng = Xoshiro256::new(self.seed);
+        let attempts = self.attempts.max(1);
+        let mut last = None;
+        for attempt in 0..attempts {
+            match connect() {
+                Ok(v) => return Ok(v),
+                Err(e @ ClientError::Io(_)) => {
+                    last = Some(e);
+                    if attempt + 1 < attempts {
+                        std::thread::sleep(self.delay_after(attempt, &mut rng));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
+    }
+}
 
 /// Client-side failures.
 #[derive(Debug)]
@@ -90,6 +168,17 @@ impl Client {
         let mut c = Self::connect(addr)?;
         c.hello(ProtocolVersion::V2)?;
         Ok(c)
+    }
+
+    /// Connect with retry/backoff — the resume path after a daemon crash:
+    /// keep trying while the daemon restarts and replays its journal.
+    pub fn connect_retry(addr: &str, policy: &RetryPolicy) -> ClientResult<Self> {
+        policy.run(|| Self::connect(addr))
+    }
+
+    /// [`Client::connect_retry`], negotiating protocol v2.
+    pub fn connect_v2_retry(addr: &str, policy: &RetryPolicy) -> ClientResult<Self> {
+        policy.run(|| Self::connect_v2(addr))
     }
 
     /// The protocol version this session speaks.
@@ -299,6 +388,61 @@ impl Client {
         }
     }
 
+    /// Block until one manifest entry's jobs have all dispatched (or the
+    /// timeout elapses) — `WAIT manifest=<id> entry=<k>` on the wire, so
+    /// the client needs only the ack/resume metadata, not the job ids.
+    /// Requires a v2 session.
+    pub fn wait_entry(
+        &mut self,
+        manifest: u64,
+        entry: u32,
+        timeout_secs: f64,
+    ) -> ClientResult<WaitResult> {
+        if self.version != ProtocolVersion::V2 {
+            return Err(ClientError::Protocol(
+                "per-entry WAIT requires protocol v2 (connect with Client::connect_v2)".into(),
+            ));
+        }
+        let io_timeout = Duration::from_secs_f64(timeout_secs.max(0.0) + 30.0);
+        self.writer.set_read_timeout(Some(io_timeout))?;
+        let result = self.roundtrip(&Request::WaitEntry {
+            manifest,
+            entry,
+            timeout_secs,
+        });
+        self.writer.set_read_timeout(Some(DEFAULT_IO_TIMEOUT))?;
+        match result? {
+            Response::Wait(w) => Ok(w),
+            other => Err(unexpected("WAIT", &other)),
+        }
+    }
+
+    /// Re-attach to the latest manifest registered under `tag`: returns its
+    /// per-entry settlement so the caller collects exactly the
+    /// not-yet-settled entries ([`ResumeInfo::pending_entries`]). Requires
+    /// a v2 session.
+    pub fn resume_by_tag(&mut self, tag: &str) -> ClientResult<ResumeInfo> {
+        self.resume(Request::Resume(ResumeTarget::Tag(tag.to_string())))
+    }
+
+    /// Re-attach to a specific manifest id (from a prior `MSUBMIT` ack).
+    /// Requires a v2 session.
+    pub fn resume_by_manifest(&mut self, manifest: u64) -> ClientResult<ResumeInfo> {
+        self.resume(Request::Resume(ResumeTarget::Manifest(manifest)))
+    }
+
+    fn resume(&mut self, req: Request) -> ClientResult<ResumeInfo> {
+        if self.version != ProtocolVersion::V2 {
+            return Err(ClientError::Protocol(
+                "RESUME requires protocol v2 (connect with Client::connect_v2)".into(),
+            ));
+        }
+        match self.roundtrip(&req)? {
+            Response::Resume(info) => Ok(info),
+            other => Err(unexpected("RESUME", &other)),
+        }
+    }
+
     /// Daemon + scheduler counters.
     pub fn stats(&mut self) -> ClientResult<StatsSnapshot> {
         match self.roundtrip(&Request::Stats)? {
@@ -326,4 +470,77 @@ impl Client {
 
 fn unexpected(cmd: &str, resp: &Response) -> ClientError {
     ClientError::Protocol(format!("unexpected response to {cmd}: {resp:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::api::ErrorCode;
+
+    #[test]
+    fn retry_delays_are_exponential_bounded_and_jittered() {
+        let p = RetryPolicy::default();
+        let mut rng = Xoshiro256::new(7);
+        let mut prev_cap = Duration::ZERO;
+        for attempt in 0..12 {
+            let cap = p
+                .base_delay
+                .saturating_mul(1u32 << attempt.min(16))
+                .min(p.max_delay);
+            let d = p.delay_after(attempt, &mut rng);
+            assert!(d <= cap, "attempt {attempt}: {d:?} > {cap:?}");
+            assert!(d >= cap.mul_f64(0.5), "attempt {attempt}: {d:?} < half-cap");
+            assert!(cap >= prev_cap, "caps must be monotone");
+            prev_cap = cap;
+        }
+        // The cap saturates at max_delay.
+        assert_eq!(prev_cap, p.max_delay);
+    }
+
+    #[test]
+    fn retry_runs_until_success_and_gives_up_after_attempts() {
+        let quick = RetryPolicy {
+            attempts: 4,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+            seed: 1,
+        };
+        // Succeeds on the third try.
+        let mut calls = 0;
+        let out = quick.run(|| {
+            calls += 1;
+            if calls < 3 {
+                Err(ClientError::Io(std::io::Error::new(std::io::ErrorKind::Other, "down")))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(out.unwrap(), 3);
+        // Exhausts attempts and surfaces the transport error.
+        let mut calls = 0;
+        let out: ClientResult<()> = quick.run(|| {
+            calls += 1;
+            Err(ClientError::Io(std::io::Error::new(std::io::ErrorKind::Other, "still down")))
+        });
+        assert_eq!(calls, 4);
+        assert!(matches!(out, Err(ClientError::Io(_))));
+    }
+
+    #[test]
+    fn retry_does_not_mask_typed_api_errors() {
+        // An API error means the daemon answered: retrying is wrong.
+        let mut calls = 0;
+        let out: ClientResult<()> = RetryPolicy::default().run(|| {
+            calls += 1;
+            Err(ClientError::Api(ApiError::new(
+                ErrorCode::NotFound,
+                "no manifest tagged x",
+            )))
+        });
+        assert_eq!(calls, 1);
+        match out {
+            Err(ClientError::Api(e)) => assert_eq!(e.code, ErrorCode::NotFound),
+            other => panic!("{other:?}"),
+        }
+    }
 }

@@ -20,8 +20,8 @@
 
 use super::api::{
     job_type_arg, parse_job_type, parse_qos, parse_state, state_token, ApiError, ContentionStats,
-    ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request, Response, SqueueFilter,
-    StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request, Response, ResumeEntry, ResumeInfo,
+    ResumeTarget, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::manifest::{
     EntryAck, EntryReject, Manifest, ManifestAck, ManifestEntry, MAX_MANIFEST_ENTRIES,
@@ -222,6 +222,25 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
             }
             ProtocolVersion::V2 => {
                 let map: BTreeMap<&str, &str> = kv_pairs(rest, "WAIT option")?.into_iter().collect();
+                let timeout_secs = match map.get("timeout") {
+                    Some(tok) => parse_f64("timeout", tok)?,
+                    None => 30.0,
+                };
+                // The per-entry form: `WAIT manifest=<id> entry=<k>` blocks
+                // on every job the manifest entry expanded to.
+                if map.contains_key("manifest") {
+                    if !map.contains_key("entry") {
+                        return Err(ApiError::bad_arity(
+                            "WAIT",
+                            "manifest=<id> entry=<k> timeout=<secs>",
+                        ));
+                    }
+                    return Ok(Request::WaitEntry {
+                        manifest: take_u64(&map, "manifest")?,
+                        entry: take_u32(&map, "entry")?,
+                        timeout_secs,
+                    });
+                }
                 let jobs_tok = take(&map, "jobs")
                     .map_err(|_| ApiError::bad_arity("WAIT", "jobs=<id,..> timeout=<secs>"))?;
                 // An empty `jobs=` is legal: WAIT returns immediately with
@@ -231,11 +250,28 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
                     .filter(|s| !s.is_empty())
                     .map(|tok| parse_u64("job id", tok))
                     .collect::<Result<Vec<u64>, ApiError>>()?;
-                let timeout_secs = match map.get("timeout") {
-                    Some(tok) => parse_f64("timeout", tok)?,
-                    None => 30.0,
-                };
                 Ok(Request::Wait { jobs, timeout_secs })
+            }
+        },
+        // Resume is a durability-era verb: like MSUBMIT it is v2-only, and a
+        // v1 connection gets a single-line typed rejection.
+        "RESUME" => match version {
+            ProtocolVersion::V1 => Err(ApiError::unsupported(
+                "RESUME requires protocol v2 (negotiate with HELLO v2)",
+            )),
+            ProtocolVersion::V2 => {
+                let map: BTreeMap<&str, &str> =
+                    kv_pairs(rest, "RESUME option")?.into_iter().collect();
+                match (map.get("tag"), map.get("manifest")) {
+                    (Some(tag), None) => Ok(Request::Resume(ResumeTarget::Tag(tag.to_string()))),
+                    (None, Some(_)) => Ok(Request::Resume(ResumeTarget::Manifest(take_u64(
+                        &map, "manifest",
+                    )?))),
+                    _ => Err(ApiError::bad_arity(
+                        "RESUME",
+                        "tag=<tag> | manifest=<id> (exactly one)",
+                    )),
+                }
             }
         },
         _ => Err(ApiError::unknown_command(cmd)),
@@ -520,6 +556,18 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
         // Canonical in the v2 grammar; v1 cannot express a manifest (the
         // daemon answers a v1 MSUBMIT with a typed `unsupported`).
         Request::MSubmit(m) => render_msubmit(m),
+        // v2-only verbs (like MSUBMIT, rendering is total in both versions
+        // for symmetry; a v1 daemon answers with a typed `unsupported`).
+        Request::WaitEntry {
+            manifest,
+            entry,
+            timeout_secs,
+        } => format!(
+            "WAIT manifest={manifest} entry={entry} timeout={}",
+            fmt_f64(*timeout_secs)
+        ),
+        Request::Resume(ResumeTarget::Tag(tag)) => format!("RESUME tag={tag}"),
+        Request::Resume(ResumeTarget::Manifest(id)) => format!("RESUME manifest={id}"),
         Request::Submit(s) => match version {
             ProtocolVersion::V1 => {
                 let mut line = format!(
@@ -574,12 +622,19 @@ fn detail_kv(d: &JobDetail) -> String {
 }
 
 fn manifest_ack_head(a: &ManifestAck) -> String {
-    format!(
+    let mut head = format!(
         "accepted={} rejected={} jobs={}",
         a.accepted.len(),
         a.rejected.len(),
         a.jobs
-    )
+    );
+    // Additive extension: the daemon-assigned manifest id (for RESUME and
+    // per-entry WAIT). Omitted when absent so pre-durability parsers that
+    // reject unknown keys never see it.
+    if let Some(id) = a.manifest {
+        let _ = write!(head, " manifest={id}");
+    }
+    head
 }
 
 /// Append the per-entry record lines: `acc index=.. first=.. last=..
@@ -611,10 +666,16 @@ fn parse_manifest_ack(head: &BTreeMap<&str, &str>, tail: &str) -> Result<Respons
     let declared_acc = take_usize(head, "accepted")?;
     let declared_rej = take_usize(head, "rejected")?;
     let jobs = take_u64(head, "jobs")?;
+    // `manifest=` is optional (absent from pre-durability servers).
+    let manifest = match head.get("manifest") {
+        Some(tok) => Some(parse_u64("manifest", tok)?),
+        None => None,
+    };
     let mut ack = ManifestAck {
         accepted: Vec::with_capacity(declared_acc.min(4096)),
         rejected: Vec::with_capacity(declared_rej.min(4096)),
         jobs,
+        manifest,
     };
     let mut summed = 0u64;
     for line in tail.lines() {
@@ -677,6 +738,69 @@ fn parse_manifest_ack(head: &BTreeMap<&str, &str>, tail: &str) -> Result<Respons
         ));
     }
     Ok(Response::ManifestAck(ack))
+}
+
+/// Render the RESUME body: the head `manifest=.. entries=..` plus one
+/// `ent index=.. first=.. count=.. settled=.. tag=..` record line per
+/// manifest entry (shared by both protocol versions).
+fn render_resume_records(body: &mut String, info: &ResumeInfo) {
+    for e in &info.entries {
+        let _ = write!(
+            body,
+            "\nent index={} first={} count={} settled={} tag={}",
+            e.index,
+            e.first,
+            e.count,
+            e.settled,
+            e.tag.as_deref().unwrap_or("-")
+        );
+    }
+}
+
+/// Parse a RESUME body: head `key=value`s plus `ent` record lines (shared
+/// by both protocol versions). Record sanity mirrors the manifest-ack
+/// parser: a hostile peer must not hand the client a record whose id range
+/// would iterate astronomically or whose settled count exceeds its size.
+fn parse_resume(head: &BTreeMap<&str, &str>, tail: &str) -> Result<Response, ApiError> {
+    let manifest = take_u64(head, "manifest")?;
+    let declared = take_usize(head, "entries")?;
+    let mut info = ResumeInfo {
+        manifest,
+        entries: Vec::with_capacity(declared.min(4096)),
+    };
+    for line in tail.lines() {
+        let Some(rest) = line.strip_prefix("ent ") else {
+            continue;
+        };
+        let m = kv_map(rest);
+        let ent = ResumeEntry {
+            index: take_u32(&m, "index")?,
+            first: take_u64(&m, "first")?,
+            count: take_u64(&m, "count")?,
+            settled: take_u64(&m, "settled")?,
+            tag: take_opt_tag(&m),
+        };
+        if ent.first.checked_add(ent.count).is_none() || ent.settled > ent.count {
+            return Err(ApiError::new(
+                ErrorCode::Internal,
+                format!(
+                    "resume record has an inconsistent id range: first={} count={} settled={}",
+                    ent.first, ent.count, ent.settled
+                ),
+            ));
+        }
+        info.entries.push(ent);
+    }
+    if info.entries.len() != declared {
+        return Err(ApiError::new(
+            ErrorCode::Internal,
+            format!(
+                "resume body declared {declared} entries, carried {}",
+                info.entries.len()
+            ),
+        ));
+    }
+    Ok(Response::Resume(info))
 }
 
 fn wait_kv(w: &WaitResult) -> String {
@@ -778,6 +902,17 @@ fn render_response_v1(resp: &Response) -> String {
         }
         Response::Job(d) => format!("OK {}", detail_kv(d)),
         Response::Wait(w) => format!("OK {}", wait_kv(w)),
+        Response::Resume(info) => {
+            // Not byte-constrained: RESUME itself is v2-only, but rendering
+            // must be total (and round-trips, for symmetry with v2).
+            let mut body = format!(
+                "OK resume manifest={} entries={}",
+                info.manifest,
+                info.entries.len()
+            );
+            render_resume_records(&mut body, info);
+            body
+        }
         Response::Stats(s) => format!("OK {}", stats_kv(s, false)),
         Response::Util(u) => format!(
             "OK utilization={:.4} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
@@ -823,6 +958,15 @@ fn render_response_v2(resp: &Response) -> String {
         }
         Response::Job(d) => format!("OK kind=job {}", detail_kv(d)),
         Response::Wait(w) => format!("OK kind=wait {}", wait_kv(w)),
+        Response::Resume(info) => {
+            let mut body = format!(
+                "OK kind=resume manifest={} entries={}",
+                info.manifest,
+                info.entries.len()
+            );
+            render_resume_records(&mut body, info);
+            body
+        }
         Response::Stats(s) => format!("OK kind=stats {}", stats_kv(s, true)),
         Response::Util(u) => format!(
             "OK kind=util utilization={} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
@@ -1034,6 +1178,13 @@ fn parse_ok_v1(rest: &str) -> Result<Response, ApiError> {
             };
             parse_manifest_ack(&kv_map(head), tail)
         }
+        "resume" => {
+            let (head, tail) = match rest.split_once('\n') {
+                Some((h, t)) => (h, t),
+                None => (rest, ""),
+            };
+            parse_resume(&kv_map(head), tail)
+        }
         _ if first.starts_with("proto=") => {
             let v = first.trim_start_matches("proto=");
             ProtocolVersion::parse(v)
@@ -1075,6 +1226,7 @@ fn parse_ok_v2(rest: &str) -> Result<Response, ApiError> {
             count: take_u64(&map, "count")?,
         })),
         "manifest_ack" => parse_manifest_ack(&map, tail),
+        "resume" => parse_resume(&map, tail),
         "cancelled" => Ok(Response::Cancelled(take_u64(&map, "id")?)),
         "job" => Ok(Response::Job(parse_detail(&map)?)),
         "wait" => Ok(Response::Wait(parse_wait(&map)?)),
@@ -1202,6 +1354,9 @@ mod tests {
             "SJOB id=7",
             "SCANCEL id=42",
             "WAIT jobs=1,2,3 timeout=30",
+            "WAIT manifest=7 entry=2 timeout=30",
+            "RESUME tag=nightly-batch",
+            "RESUME manifest=12",
             "STATS",
             "UTIL",
             "PING",
@@ -1257,6 +1412,41 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn v2_wait_entry_and_resume_parse() {
+        assert_eq!(
+            parse_request("WAIT manifest=7 entry=2", V2).unwrap(),
+            Request::WaitEntry {
+                manifest: 7,
+                entry: 2,
+                timeout_secs: 30.0,
+            }
+        );
+        assert_eq!(
+            parse_request("RESUME tag=night/batch:1", V2).unwrap(),
+            Request::Resume(ResumeTarget::Tag("night/batch:1".into()))
+        );
+        assert_eq!(
+            parse_request("RESUME manifest=4", V2).unwrap(),
+            Request::Resume(ResumeTarget::Manifest(4))
+        );
+        let code = |line: &str| parse_request(line, V2).unwrap_err().code;
+        // Exactly one of tag=/manifest= — zero or both are arity errors.
+        assert_eq!(code("RESUME"), ErrorCode::BadArity);
+        assert_eq!(code("RESUME tag=a manifest=1"), ErrorCode::BadArity);
+        assert_eq!(code("RESUME manifest=x"), ErrorCode::BadArg);
+        // The per-entry WAIT needs both keys; a garbled entry is typed.
+        assert_eq!(code("WAIT manifest=7"), ErrorCode::BadArity);
+        assert_eq!(code("WAIT manifest=7 entry=x"), ErrorCode::BadArg);
+    }
+
+    #[test]
+    fn resume_is_rejected_on_v1_with_typed_unsupported() {
+        let err = parse_request("RESUME tag=nightly", V1).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unsupported);
+        assert!(err.message.contains("HELLO v2"), "{err}");
     }
 
     #[test]
@@ -1396,6 +1586,42 @@ mod tests {
     }
 
     #[test]
+    fn hostile_resume_bodies_are_rejected_by_the_client_parser() {
+        let near_max = u64::MAX - 1;
+        let overflow = format!(
+            "OK kind=resume manifest=1 entries=1\nent index=0 first={near_max} count=5 settled=0"
+        );
+        for body in [
+            // settled exceeds the entry size.
+            "OK kind=resume manifest=1 entries=1\nent index=0 first=1 count=2 settled=3",
+            // first+count overflows u64 (astronomical iteration guard).
+            overflow.as_str(),
+            // declared entry count does not match the body.
+            "OK kind=resume manifest=1 entries=2\nent index=0 first=1 count=1 settled=0",
+        ] {
+            let err = parse_response(body, V2).expect_err(body);
+            assert_eq!(err.code, ErrorCode::Internal, "{body}");
+        }
+    }
+
+    #[test]
+    fn manifest_ack_without_manifest_id_still_parses() {
+        // Forward compatibility: an ack from a pre-durability server lacks
+        // the `manifest=` key — it parses as None on both versions.
+        for v in [V1, V2] {
+            let mut ack = ManifestAck::default();
+            ack.manifest = Some(42);
+            let wire = render_response(&Response::ManifestAck(ack), v);
+            assert!(wire.contains("manifest=42"), "{wire}");
+            let stripped = wire.replace(" manifest=42", "");
+            match parse_response(&stripped, v).unwrap() {
+                Response::ManifestAck(back) => assert_eq!(back.manifest, None),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn manifest_ack_reject_message_with_spaces_roundtrips() {
         let resp = Response::ManifestAck(ManifestAck {
             accepted: vec![],
@@ -1404,6 +1630,7 @@ mod tests {
                 error: ApiError::bad_arg("run_secs", "not a number at all"),
             }],
             jobs: 0,
+            manifest: None,
         });
         for v in [V1, V2] {
             let wire = render_response(&resp, v);
@@ -1560,8 +1787,32 @@ mod tests {
                     error: ApiError::bad_arg("tasks", "0"),
                 }],
                 jobs: 609,
+                manifest: Some(3),
             }),
             Response::ManifestAck(ManifestAck::default()),
+            Response::Resume(ResumeInfo {
+                manifest: 3,
+                entries: vec![
+                    ResumeEntry {
+                        index: 0,
+                        first: 1,
+                        count: 608,
+                        settled: 608,
+                        tag: Some(Arc::from("fig2-live")),
+                    },
+                    ResumeEntry {
+                        index: 2,
+                        first: 609,
+                        count: 1,
+                        settled: 0,
+                        tag: None,
+                    },
+                ],
+            }),
+            Response::Resume(ResumeInfo {
+                manifest: 9,
+                entries: Vec::new(),
+            }),
         ]
     }
 

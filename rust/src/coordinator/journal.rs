@@ -1,0 +1,1522 @@
+//! The write-ahead journal behind the daemon's durability guarantee.
+//!
+//! Every admitted submission/manifest/cancel is appended here — and, per
+//! the configured [`FsyncPolicy`], fsync'd — *before* the snapshot publish
+//! that makes the mutation externally visible. An acknowledged RPC is
+//! therefore recoverable: kill the daemon at any point and
+//! `Daemon::recover` rebuilds the scheduler by replaying the newest
+//! checkpoint plus the journal tail (see [`super::recovery`]).
+//!
+//! ## On-disk format
+//!
+//! A journal is a directory of segment files `seg-<seq>.wal`. Each segment
+//! starts with the 8-byte magic [`JOURNAL_MAGIC`], then a sequence of
+//! framed records:
+//!
+//! ```text
+//! [u32 payload_len (LE)] [u32 crc32(payload) (LE)] [payload bytes]
+//! ```
+//!
+//! The first record of every segment is a [`JournalRecord::Checkpoint`]
+//! (a genesis empty-state checkpoint for a fresh journal), so any single
+//! segment is sufficient to rebuild. Checkpointing **rotates**: the new
+//! checkpoint is written to a fresh segment, fsync'd, and only then are the
+//! older segments deleted — that is how the journal stays bounded
+//! (checkpoint-truncation). Segment creation and checkpoints are always
+//! synced regardless of policy; [`FsyncPolicy`] governs per-append syncs
+//! only.
+//!
+//! Recovery scans segments newest-first and picks the first one whose
+//! leading checkpoint is intact (a crash mid-checkpoint leaves a torn
+//! segment that is discarded in favor of its predecessor). A torn final
+//! record — a crash mid-append — is truncated, never fatal.
+//!
+//! ## Crash injection
+//!
+//! [`FaultPlan`] lets the test harness arm one-shot faults at the three
+//! interesting points (after append / before fsync, after fsync / before
+//! publish, mid-checkpoint). A fault poisons the journal and, for the
+//! pre-fsync point, actively truncates the file back to the last durable
+//! byte — faithfully simulating the page-cache loss of a power cut without
+//! killing the test process.
+
+use super::manifest::{ManifestEntry, ManifestSpan, RegisteredManifest};
+use super::snapshot::JobView;
+use crate::job::{JobSpec, JobState, JobType, QosClass, UserId};
+use crate::sched::LogKind;
+use crate::sim::SimTime;
+use std::fmt;
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Leading bytes of every segment file.
+pub const JOURNAL_MAGIC: &[u8; 8] = b"SPOTWAL1";
+
+/// Sanity cap on one record's payload (a maximal manifest checkpoint is
+/// a few MB; anything near this is framing corruption, not data).
+const MAX_RECORD_LEN: usize = 256 << 20;
+
+// ---------------------------------------------------------------- config
+
+/// When appends hit the platter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync after every append: an acked RPC survives power loss.
+    Always,
+    /// fsync every `appends` appends: bounded loss window, near-`Never`
+    /// throughput. An acked RPC survives daemon crash (the bytes are in
+    /// the page cache) but the tail since the last sync can be lost to
+    /// power failure.
+    Interval {
+        /// Appends between syncs (≥ 1; 1 behaves like `Always`).
+        appends: u32,
+    },
+    /// Never fsync appends: acked work survives a daemon crash only.
+    Never,
+}
+
+impl Default for FsyncPolicy {
+    fn default() -> Self {
+        FsyncPolicy::Interval { appends: 64 }
+    }
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI form: `always`, `never`, `interval` (default stride),
+    /// or `interval:<n>`.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        match s {
+            "always" => Some(FsyncPolicy::Always),
+            "never" => Some(FsyncPolicy::Never),
+            "interval" => Some(FsyncPolicy::default()),
+            _ => {
+                let n: u32 = s.strip_prefix("interval:")?.parse().ok()?;
+                (n >= 1).then_some(FsyncPolicy::Interval { appends: n })
+            }
+        }
+    }
+
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Interval { .. } => "interval",
+            FsyncPolicy::Never => "never",
+        }
+    }
+}
+
+/// Where the crash-injection harness can stop the world.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// After the record is written, before it is fsync'd (and therefore
+    /// before the client is acked): the record is *lost* — recovery must
+    /// not resurrect it, and the client never saw an ack for it.
+    AfterAppend,
+    /// After the record is durable, before the publish/ack: the record
+    /// *survives* — recovery resurrects work the client was never acked
+    /// for (the documented at-least-once edge; resume-by-tag is the
+    /// idempotency story).
+    AfterFsync,
+    /// Mid-checkpoint rotation: the new segment is torn; recovery must
+    /// fall back to the previous segment's checkpoint + tail.
+    MidCheckpoint,
+}
+
+/// One-shot fault arms shared between a test and a running daemon's
+/// journal. `Clone` shares the arms (the plan travels inside
+/// `DaemonConfig`, which must stay `Clone`).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    after_append: Arc<AtomicBool>,
+    after_fsync: Arc<AtomicBool>,
+    mid_checkpoint: Arc<AtomicBool>,
+}
+
+impl FaultPlan {
+    /// A plan with every fault disarmed.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn arm_of(&self, point: FaultPoint) -> &Arc<AtomicBool> {
+        match point {
+            FaultPoint::AfterAppend => &self.after_append,
+            FaultPoint::AfterFsync => &self.after_fsync,
+            FaultPoint::MidCheckpoint => &self.mid_checkpoint,
+        }
+    }
+
+    /// Arm a fault: the next time the journal reaches `point` it fails
+    /// (once — firing disarms, so recovery can reuse the same config).
+    pub fn arm(&self, point: FaultPoint) {
+        self.arm_of(point).store(true, Ordering::SeqCst);
+    }
+
+    /// Is the fault currently armed?
+    pub fn armed(&self, point: FaultPoint) -> bool {
+        self.arm_of(point).load(Ordering::SeqCst)
+    }
+
+    /// Fire-and-disarm.
+    fn take(&self, point: FaultPoint) -> bool {
+        self.arm_of(point).swap(false, Ordering::SeqCst)
+    }
+}
+
+/// The `durability` section of `DaemonConfig`.
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// Journal directory (created if absent).
+    pub dir: PathBuf,
+    /// Per-append sync policy.
+    pub fsync: FsyncPolicy,
+    /// Checkpoint (and truncate) after this many appended records.
+    pub checkpoint_every: u64,
+    /// Also checkpoint when the live segment exceeds this size.
+    pub max_segment_bytes: u64,
+    /// Crash-injection arms (disarmed in production).
+    pub faults: FaultPlan,
+}
+
+impl DurabilityConfig {
+    /// Durability at `dir` with default policy (interval fsync, 4096
+    /// records or 64 MB per segment).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            fsync: FsyncPolicy::default(),
+            checkpoint_every: 4096,
+            max_segment_bytes: 64 << 20,
+            faults: FaultPlan::new(),
+        }
+    }
+
+    /// Builder: fsync policy.
+    pub fn with_fsync(mut self, fsync: FsyncPolicy) -> Self {
+        self.fsync = fsync;
+        self
+    }
+
+    /// Builder: checkpoint stride in records.
+    pub fn with_checkpoint_every(mut self, every: u64) -> Self {
+        self.checkpoint_every = every.max(1);
+        self
+    }
+}
+
+// ---------------------------------------------------------------- errors
+
+/// Why a journal operation failed.
+#[derive(Debug)]
+pub enum JournalError {
+    /// Underlying filesystem error.
+    Io(io::Error),
+    /// Framing/decoding corruption beyond what torn-tail truncation heals.
+    Corrupt(String),
+    /// `create` on a directory that already holds segments (recover it).
+    NotEmpty(PathBuf),
+    /// `recover` on a directory with no segments (create instead).
+    Empty(PathBuf),
+    /// A previous error (or injected fault) poisoned this journal handle.
+    Poisoned,
+    /// An injected crash fault fired.
+    Fault(&'static str),
+}
+
+impl fmt::Display for JournalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JournalError::Io(e) => write!(f, "journal I/O error: {e}"),
+            JournalError::Corrupt(what) => write!(f, "journal corrupt: {what}"),
+            JournalError::NotEmpty(p) => {
+                write!(f, "journal directory {} already has segments", p.display())
+            }
+            JournalError::Empty(p) => {
+                write!(f, "journal directory {} has no segments", p.display())
+            }
+            JournalError::Poisoned => write!(f, "journal poisoned by a previous error"),
+            JournalError::Fault(point) => write!(f, "injected crash fault: {point}"),
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+impl From<io::Error> for JournalError {
+    fn from(e: io::Error) -> Self {
+        JournalError::Io(e)
+    }
+}
+
+fn corrupt(what: impl Into<String>) -> JournalError {
+    JournalError::Corrupt(what.into())
+}
+
+// ----------------------------------------------------------------- crc32
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+// --------------------------------------------------------------- records
+
+/// One admitted-entry record inside an [`JournalRecord::Admit`]: the
+/// manifest entry (or the synthesized single entry of a legacy `SUBMIT`)
+/// plus its index in the original manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmitEntry {
+    /// Index into the original manifest (0 for `SUBMIT`).
+    pub index: u32,
+    /// The admitted entry. Id spans are *not* stored: replay re-admits the
+    /// entries in order and the scheduler's deterministic id assignment
+    /// reproduces them (verified against `first_id`/`total_jobs`).
+    pub entry: ManifestEntry,
+}
+
+/// One live job inside a checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointJob {
+    /// Job id.
+    pub id: u64,
+    /// State at capture (recovery re-queues the job as Pending; the
+    /// pre-crash state feeds the `RecoveryReport` breakdown).
+    pub state: JobState,
+    /// Original submission time.
+    pub submit_time: SimTime,
+    /// Preempt+requeue count at capture.
+    pub requeue_count: u32,
+    /// The immutable spec.
+    pub spec: JobSpec,
+    /// The job's event-log entries at capture, oldest first (so SJOB on a
+    /// recovered job still reports its pre-crash recognized/dispatch
+    /// times).
+    pub log: Vec<(SimTime, LogKind)>,
+}
+
+/// A full scheduler-state checkpoint: everything recovery needs that the
+/// tail records cannot re-derive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointState {
+    /// Virtual time at capture.
+    pub vtime: SimTime,
+    /// The scheduler's next job id (covers retired ids that no live job
+    /// or tail record would otherwise reproduce).
+    pub next_id: u64,
+    /// The manifest registry's next id.
+    pub next_manifest_id: u64,
+    /// Live (non-retired) jobs.
+    pub jobs: Vec<CheckpointJob>,
+    /// The daemon's retired-history views, insertion (retirement) order —
+    /// so a recovered daemon answers `SJOB`/`WAIT` on retired pre-crash
+    /// ids with the same history semantics as the live daemon.
+    pub history: Vec<JobView>,
+    /// The manifest registry (resume/wait-entry lookups).
+    pub manifests: Vec<RegisteredManifest>,
+}
+
+impl CheckpointState {
+    /// The empty state a fresh journal starts from.
+    pub fn genesis() -> Self {
+        Self {
+            vtime: SimTime::ZERO,
+            next_id: 1,
+            next_manifest_id: 1,
+            jobs: Vec::new(),
+            history: Vec::new(),
+            manifests: Vec::new(),
+        }
+    }
+}
+
+/// One journal record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalRecord {
+    /// An admitted submission (legacy `SUBMIT` or manifest `MSUBMIT`).
+    Admit {
+        /// Virtual admission time (replay advances the scheduler here
+        /// before re-admitting).
+        vtime: SimTime,
+        /// First job id the scheduler assigned.
+        first_id: u64,
+        /// Total jobs admitted (replay cross-check).
+        total_jobs: u64,
+        /// Registered manifest id, if any (`None` for `SUBMIT`).
+        manifest: Option<u64>,
+        /// Accepted entries, admission order.
+        entries: Vec<AdmitEntry>,
+    },
+    /// An acknowledged `SCANCEL`.
+    Cancel {
+        /// Virtual cancel time.
+        vtime: SimTime,
+        /// The cancelled job id.
+        id: u64,
+    },
+    /// A scheduler-state checkpoint (always the first record of a
+    /// segment).
+    Checkpoint(CheckpointState),
+}
+
+// ------------------------------------------------- binary encode helpers
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        Self { buf: Vec::with_capacity(64) }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn time(&mut self, t: SimTime) {
+        self.u64(t.as_nanos());
+    }
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn opt_str(&mut self, s: Option<&str>) {
+        match s {
+            Some(s) => {
+                self.u8(1);
+                self.str(s);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], JournalError> {
+        if self.buf.len() - self.pos < n {
+            return Err(corrupt(format!("truncated {what}")));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self, what: &str) -> Result<u8, JournalError> {
+        Ok(self.bytes(1, what)?[0])
+    }
+    fn u32(&mut self, what: &str) -> Result<u32, JournalError> {
+        Ok(u32::from_le_bytes(self.bytes(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64, JournalError> {
+        Ok(u64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
+    }
+    fn f64(&mut self, what: &str) -> Result<f64, JournalError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+    fn time(&mut self, what: &str) -> Result<SimTime, JournalError> {
+        Ok(SimTime(self.u64(what)?))
+    }
+    fn opt_u64(&mut self, what: &str) -> Result<Option<u64>, JournalError> {
+        match self.u8(what)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64(what)?)),
+            t => Err(corrupt(format!("bad option tag {t} in {what}"))),
+        }
+    }
+    fn opt_f64(&mut self, what: &str) -> Result<Option<f64>, JournalError> {
+        match self.u8(what)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64(what)?)),
+            t => Err(corrupt(format!("bad option tag {t} in {what}"))),
+        }
+    }
+    fn str(&mut self, what: &str) -> Result<String, JournalError> {
+        let len = self.u32(what)? as usize;
+        if len > MAX_RECORD_LEN {
+            return Err(corrupt(format!("oversized string in {what}")));
+        }
+        let bytes = self.bytes(len, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| corrupt(format!("bad utf-8 in {what}")))
+    }
+    fn opt_str(&mut self, what: &str) -> Result<Option<String>, JournalError> {
+        match self.u8(what)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str(what)?)),
+            t => Err(corrupt(format!("bad option tag {t} in {what}"))),
+        }
+    }
+    fn len(&mut self, what: &str) -> Result<usize, JournalError> {
+        let n = self.u32(what)? as usize;
+        // Each element costs at least one byte; a count beyond the buffer
+        // is corruption and must not drive a giant allocation.
+        if n > self.buf.len() - self.pos {
+            return Err(corrupt(format!("oversized count in {what}")));
+        }
+        Ok(n)
+    }
+    fn finish(self, what: &str) -> Result<(), JournalError> {
+        if self.pos != self.buf.len() {
+            return Err(corrupt(format!("trailing bytes after {what}")));
+        }
+        Ok(())
+    }
+}
+
+// stable one-byte codes for the persisted enums; never renumber, only append
+fn qos_code(q: QosClass) -> u8 {
+    match q {
+        QosClass::Normal => 0,
+        QosClass::Spot => 1,
+    }
+}
+fn qos_from(c: u8) -> Result<QosClass, JournalError> {
+    match c {
+        0 => Ok(QosClass::Normal),
+        1 => Ok(QosClass::Spot),
+        _ => Err(corrupt(format!("bad qos code {c}"))),
+    }
+}
+fn type_code(t: JobType) -> u8 {
+    match t {
+        JobType::Individual => 0,
+        JobType::Array => 1,
+        JobType::TripleMode => 2,
+    }
+}
+fn type_from(c: u8) -> Result<JobType, JournalError> {
+    match c {
+        0 => Ok(JobType::Individual),
+        1 => Ok(JobType::Array),
+        2 => Ok(JobType::TripleMode),
+        _ => Err(corrupt(format!("bad job-type code {c}"))),
+    }
+}
+fn state_code(s: JobState) -> u8 {
+    match s {
+        JobState::Pending => 0,
+        JobState::Running => 1,
+        JobState::Completed => 2,
+        JobState::Requeued => 3,
+        JobState::Cancelled => 4,
+        JobState::Suspended => 5,
+    }
+}
+fn state_from(c: u8) -> Result<JobState, JournalError> {
+    match c {
+        0 => Ok(JobState::Pending),
+        1 => Ok(JobState::Running),
+        2 => Ok(JobState::Completed),
+        3 => Ok(JobState::Requeued),
+        4 => Ok(JobState::Cancelled),
+        5 => Ok(JobState::Suspended),
+        _ => Err(corrupt(format!("bad job-state code {c}"))),
+    }
+}
+
+const TAG_ADMIT: u8 = 1;
+const TAG_CANCEL: u8 = 2;
+const TAG_CHECKPOINT: u8 = 3;
+
+fn enc_manifest_entry(e: &mut Enc, m: &ManifestEntry) {
+    e.u32(m.user);
+    e.u8(qos_code(m.qos));
+    e.u8(type_code(m.job_type));
+    e.u32(m.tasks);
+    e.u32(m.cores_per_task);
+    e.f64(m.run_secs);
+    e.u32(m.count);
+    e.opt_str(m.tag.as_deref());
+}
+
+fn dec_manifest_entry(d: &mut Dec<'_>) -> Result<ManifestEntry, JournalError> {
+    Ok(ManifestEntry {
+        user: d.u32("entry.user")?,
+        qos: qos_from(d.u8("entry.qos")?)?,
+        job_type: type_from(d.u8("entry.type")?)?,
+        tasks: d.u32("entry.tasks")?,
+        cores_per_task: d.u32("entry.cores")?,
+        run_secs: d.f64("entry.run_secs")?,
+        count: d.u32("entry.count")?,
+        tag: d.opt_str("entry.tag")?.map(Arc::from),
+    })
+}
+
+fn enc_spec(e: &mut Enc, s: &JobSpec) {
+    e.u32(s.user.0);
+    e.u8(qos_code(s.qos));
+    e.u8(type_code(s.job_type));
+    e.u32(s.tasks);
+    e.u32(s.cores_per_task);
+    e.time(s.run_time);
+    e.str(&s.tag);
+}
+
+fn dec_spec(d: &mut Dec<'_>) -> Result<JobSpec, JournalError> {
+    Ok(JobSpec {
+        user: UserId(d.u32("spec.user")?),
+        qos: qos_from(d.u8("spec.qos")?)?,
+        job_type: type_from(d.u8("spec.type")?)?,
+        tasks: d.u32("spec.tasks")?,
+        cores_per_task: d.u32("spec.cores")?,
+        run_time: d.time("spec.run_time")?,
+        tag: Arc::from(d.str("spec.tag")?),
+    })
+}
+
+fn enc_view(e: &mut Enc, v: &JobView) {
+    e.u64(v.id);
+    e.u8(type_code(v.job_type));
+    e.u32(v.tasks);
+    e.u32(v.user);
+    e.u8(qos_code(v.qos));
+    e.u8(state_code(v.state));
+    e.f64(v.submit_secs);
+    e.f64(v.queue_secs);
+    e.opt_f64(v.start_secs);
+    e.opt_f64(v.end_secs);
+    e.u32(v.requeues);
+    e.opt_u64(v.recognized.map(SimTime::as_nanos));
+    e.opt_u64(v.dispatched.map(SimTime::as_nanos));
+    e.str(&v.tag);
+    e.u64(v.revision);
+}
+
+fn dec_view(d: &mut Dec<'_>) -> Result<JobView, JournalError> {
+    Ok(JobView {
+        id: d.u64("view.id")?,
+        job_type: type_from(d.u8("view.type")?)?,
+        tasks: d.u32("view.tasks")?,
+        user: d.u32("view.user")?,
+        qos: qos_from(d.u8("view.qos")?)?,
+        state: state_from(d.u8("view.state")?)?,
+        submit_secs: d.f64("view.submit")?,
+        queue_secs: d.f64("view.queue")?,
+        start_secs: d.opt_f64("view.start")?,
+        end_secs: d.opt_f64("view.end")?,
+        requeues: d.u32("view.requeues")?,
+        recognized: d.opt_u64("view.recognized")?.map(SimTime),
+        dispatched: d.opt_u64("view.dispatched")?.map(SimTime),
+        tag: Arc::from(d.str("view.tag")?),
+        revision: d.u64("view.revision")?,
+    })
+}
+
+impl JournalRecord {
+    /// Serialize to the frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            JournalRecord::Admit {
+                vtime,
+                first_id,
+                total_jobs,
+                manifest,
+                entries,
+            } => {
+                e.u8(TAG_ADMIT);
+                e.time(*vtime);
+                e.u64(*first_id);
+                e.u64(*total_jobs);
+                e.opt_u64(*manifest);
+                e.u32(entries.len() as u32);
+                for a in entries {
+                    e.u32(a.index);
+                    enc_manifest_entry(&mut e, &a.entry);
+                }
+            }
+            JournalRecord::Cancel { vtime, id } => {
+                e.u8(TAG_CANCEL);
+                e.time(*vtime);
+                e.u64(*id);
+            }
+            JournalRecord::Checkpoint(cp) => {
+                e.u8(TAG_CHECKPOINT);
+                e.time(cp.vtime);
+                e.u64(cp.next_id);
+                e.u64(cp.next_manifest_id);
+                e.u32(cp.jobs.len() as u32);
+                for j in &cp.jobs {
+                    e.u64(j.id);
+                    e.u8(state_code(j.state));
+                    e.time(j.submit_time);
+                    e.u32(j.requeue_count);
+                    enc_spec(&mut e, &j.spec);
+                    e.u32(j.log.len() as u32);
+                    for &(t, kind) in &j.log {
+                        e.time(t);
+                        e.u8(kind.wire_code());
+                    }
+                }
+                e.u32(cp.history.len() as u32);
+                for v in &cp.history {
+                    enc_view(&mut e, v);
+                }
+                e.u32(cp.manifests.len() as u32);
+                for m in &cp.manifests {
+                    e.u64(m.id);
+                    e.u32(m.spans.len() as u32);
+                    for s in &m.spans {
+                        e.u32(s.index);
+                        e.u64(s.first);
+                        e.u64(s.count);
+                        e.opt_str(s.tag.as_deref());
+                    }
+                }
+            }
+        }
+        e.buf
+    }
+
+    /// Deserialize a frame payload.
+    pub fn decode(buf: &[u8]) -> Result<JournalRecord, JournalError> {
+        let mut d = Dec::new(buf);
+        let rec = match d.u8("record tag")? {
+            TAG_ADMIT => {
+                let vtime = d.time("admit.vtime")?;
+                let first_id = d.u64("admit.first_id")?;
+                let total_jobs = d.u64("admit.total_jobs")?;
+                let manifest = d.opt_u64("admit.manifest")?;
+                let n = d.len("admit.entries")?;
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let index = d.u32("admit.entry.index")?;
+                    entries.push(AdmitEntry {
+                        index,
+                        entry: dec_manifest_entry(&mut d)?,
+                    });
+                }
+                JournalRecord::Admit {
+                    vtime,
+                    first_id,
+                    total_jobs,
+                    manifest,
+                    entries,
+                }
+            }
+            TAG_CANCEL => JournalRecord::Cancel {
+                vtime: d.time("cancel.vtime")?,
+                id: d.u64("cancel.id")?,
+            },
+            TAG_CHECKPOINT => {
+                let vtime = d.time("cp.vtime")?;
+                let next_id = d.u64("cp.next_id")?;
+                let next_manifest_id = d.u64("cp.next_manifest_id")?;
+                let njobs = d.len("cp.jobs")?;
+                let mut jobs = Vec::with_capacity(njobs);
+                for _ in 0..njobs {
+                    let id = d.u64("cp.job.id")?;
+                    let state = state_from(d.u8("cp.job.state")?)?;
+                    let submit_time = d.time("cp.job.submit")?;
+                    let requeue_count = d.u32("cp.job.requeues")?;
+                    let spec = dec_spec(&mut d)?;
+                    let nlog = d.len("cp.job.log")?;
+                    let mut log = Vec::with_capacity(nlog);
+                    for _ in 0..nlog {
+                        let t = d.time("cp.job.log.time")?;
+                        let code = d.u8("cp.job.log.kind")?;
+                        let kind = LogKind::from_wire_code(code)
+                            .ok_or_else(|| corrupt(format!("bad log-kind code {code}")))?;
+                        log.push((t, kind));
+                    }
+                    jobs.push(CheckpointJob {
+                        id,
+                        state,
+                        submit_time,
+                        requeue_count,
+                        spec,
+                        log,
+                    });
+                }
+                let nhist = d.len("cp.history")?;
+                let mut history = Vec::with_capacity(nhist);
+                for _ in 0..nhist {
+                    history.push(dec_view(&mut d)?);
+                }
+                let nman = d.len("cp.manifests")?;
+                let mut manifests = Vec::with_capacity(nman);
+                for _ in 0..nman {
+                    let id = d.u64("cp.manifest.id")?;
+                    let nspans = d.len("cp.manifest.spans")?;
+                    let mut spans = Vec::with_capacity(nspans);
+                    for _ in 0..nspans {
+                        spans.push(ManifestSpan {
+                            index: d.u32("cp.span.index")?,
+                            first: d.u64("cp.span.first")?,
+                            count: d.u64("cp.span.count")?,
+                            tag: d.opt_str("cp.span.tag")?.map(Arc::from),
+                        });
+                    }
+                    let tag = spans.iter().find_map(|s| s.tag.clone());
+                    manifests.push(RegisteredManifest { id, spans, tag });
+                }
+                JournalRecord::Checkpoint(CheckpointState {
+                    vtime,
+                    next_id,
+                    next_manifest_id,
+                    jobs,
+                    history,
+                    manifests,
+                })
+            }
+            t => return Err(corrupt(format!("unknown record tag {t}"))),
+        };
+        d.finish("record")?;
+        Ok(rec)
+    }
+}
+
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+// -------------------------------------------------------------- segments
+
+fn segment_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("seg-{seq:010}.wal"))
+}
+
+fn list_segments(dir: &Path) -> io::Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(seq) = name
+            .strip_prefix("seg-")
+            .and_then(|s| s.strip_suffix(".wal"))
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            out.push((seq, entry.path()));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Does `dir` already hold journal segments? (`false` for a missing or
+/// empty directory — the daemon uses this to pick create vs recover.)
+pub fn dir_has_segments(dir: &Path) -> bool {
+    list_segments(dir).map(|v| !v.is_empty()).unwrap_or(false)
+}
+
+/// Best-effort directory fsync (persists segment create/delete entries).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+struct Scan {
+    records: Vec<JournalRecord>,
+    /// Bytes up to and including the last intact record.
+    valid_len: u64,
+    /// Total file length (torn tail = `file_len - valid_len`).
+    file_len: u64,
+}
+
+/// Scan one segment, stopping at the first torn/corrupt frame. `None` if
+/// the magic itself is missing or torn (the whole segment is unusable).
+fn scan_segment(path: &Path) -> Result<Option<Scan>, JournalError> {
+    let data = fs::read(path)?;
+    let file_len = data.len() as u64;
+    if data.len() < JOURNAL_MAGIC.len() || &data[..JOURNAL_MAGIC.len()] != JOURNAL_MAGIC {
+        return Ok(None);
+    }
+    let mut off = JOURNAL_MAGIC.len();
+    let mut records = Vec::new();
+    loop {
+        if data.len() - off < 8 {
+            break;
+        }
+        let len = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(data[off + 4..off + 8].try_into().unwrap());
+        if len == 0 || len > MAX_RECORD_LEN || data.len() - off - 8 < len {
+            break;
+        }
+        let payload = &data[off + 8..off + 8 + len];
+        if crc32(payload) != crc {
+            break;
+        }
+        match JournalRecord::decode(payload) {
+            Ok(r) => records.push(r),
+            Err(_) => break,
+        }
+        off += 8 + len;
+    }
+    Ok(Some(Scan {
+        records,
+        valid_len: off as u64,
+        file_len,
+    }))
+}
+
+/// What `Journal::recover` found on disk.
+#[derive(Debug)]
+pub struct RecoveredJournal {
+    /// The newest intact checkpoint.
+    pub checkpoint: CheckpointState,
+    /// Records appended after that checkpoint, oldest first.
+    pub tail: Vec<JournalRecord>,
+    /// Torn-tail bytes truncated from the surviving segment.
+    pub torn_bytes: u64,
+    /// Newer segments discarded whole (torn mid-checkpoint rotation).
+    pub segments_discarded: usize,
+}
+
+// --------------------------------------------------------------- journal
+
+/// An open write-ahead journal. All methods poison the handle on error:
+/// once an append fails, nothing else may be acknowledged against it.
+#[derive(Debug)]
+pub struct Journal {
+    dir: PathBuf,
+    file: File,
+    seg_seq: u64,
+    /// Bytes written to the live segment.
+    written_len: u64,
+    /// Bytes covered by the last fsync.
+    durable_len: u64,
+    appends_since_sync: u32,
+    records_since_checkpoint: u64,
+    fsync: FsyncPolicy,
+    faults: FaultPlan,
+    poisoned: bool,
+}
+
+impl Journal {
+    /// Create a fresh journal: one segment holding a genesis (empty-state)
+    /// checkpoint, fsync'd regardless of policy. Fails with
+    /// [`JournalError::NotEmpty`] if segments already exist — recover
+    /// those instead of silently shadowing them.
+    pub fn create(cfg: &DurabilityConfig) -> Result<Journal, JournalError> {
+        fs::create_dir_all(&cfg.dir)?;
+        if !list_segments(&cfg.dir)?.is_empty() {
+            return Err(JournalError::NotEmpty(cfg.dir.clone()));
+        }
+        let seq = 1;
+        let path = segment_path(&cfg.dir, seq);
+        let mut file = OpenOptions::new()
+            .create_new(true)
+            .read(true)
+            .write(true)
+            .open(path)?;
+        file.write_all(JOURNAL_MAGIC)?;
+        let genesis = frame(&JournalRecord::Checkpoint(CheckpointState::genesis()).encode());
+        file.write_all(&genesis)?;
+        file.sync_data()?;
+        sync_dir(&cfg.dir);
+        let written = (JOURNAL_MAGIC.len() + genesis.len()) as u64;
+        Ok(Journal {
+            dir: cfg.dir.clone(),
+            file,
+            seg_seq: seq,
+            written_len: written,
+            durable_len: written,
+            appends_since_sync: 0,
+            records_since_checkpoint: 0,
+            fsync: cfg.fsync,
+            faults: cfg.faults.clone(),
+            poisoned: false,
+        })
+    }
+
+    /// Recover a journal directory: pick the newest segment whose leading
+    /// checkpoint is intact, truncate its torn tail, delete every other
+    /// segment, and return the open journal plus what it held.
+    pub fn recover(cfg: &DurabilityConfig) -> Result<(Journal, RecoveredJournal), JournalError> {
+        let segments = list_segments(&cfg.dir)?;
+        if segments.is_empty() {
+            return Err(JournalError::Empty(cfg.dir.clone()));
+        }
+        let mut chosen: Option<(usize, Scan)> = None;
+        let mut segments_discarded = 0usize;
+        for (i, (_, path)) in segments.iter().enumerate().rev() {
+            match scan_segment(path)? {
+                Some(scan)
+                    if matches!(scan.records.first(), Some(JournalRecord::Checkpoint(_))) =>
+                {
+                    chosen = Some((i, scan));
+                    break;
+                }
+                _ => segments_discarded += 1,
+            }
+        }
+        let Some((idx, scan)) = chosen else {
+            return Err(corrupt("no segment with an intact leading checkpoint"));
+        };
+        for (j, (_, path)) in segments.iter().enumerate() {
+            if j != idx {
+                let _ = fs::remove_file(path);
+            }
+        }
+        let (seq, path) = &segments[idx];
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        file.set_len(scan.valid_len)?;
+        file.sync_all()?;
+        file.seek(SeekFrom::End(0))?;
+        sync_dir(&cfg.dir);
+        let mut records = scan.records.into_iter();
+        let checkpoint = match records.next() {
+            Some(JournalRecord::Checkpoint(cp)) => cp,
+            _ => unreachable!("chosen segment verified to lead with a checkpoint"),
+        };
+        let tail: Vec<JournalRecord> = records.collect();
+        let journal = Journal {
+            dir: cfg.dir.clone(),
+            file,
+            seg_seq: *seq,
+            written_len: scan.valid_len,
+            durable_len: scan.valid_len,
+            appends_since_sync: 0,
+            records_since_checkpoint: tail.len() as u64,
+            fsync: cfg.fsync,
+            faults: cfg.faults.clone(),
+            poisoned: false,
+        };
+        let recovered = RecoveredJournal {
+            checkpoint,
+            torn_bytes: scan.file_len - scan.valid_len,
+            segments_discarded,
+            tail,
+        };
+        Ok((journal, recovered))
+    }
+
+    /// Append one record (and fsync it, per policy). On `Err` the journal
+    /// is poisoned and the caller must not acknowledge the mutation.
+    pub fn append(&mut self, rec: &JournalRecord) -> Result<(), JournalError> {
+        if self.poisoned {
+            return Err(JournalError::Poisoned);
+        }
+        let r = self.append_inner(rec);
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn append_inner(&mut self, rec: &JournalRecord) -> Result<(), JournalError> {
+        let framed = frame(&rec.encode());
+        self.file.write_all(&framed)?;
+        self.written_len += framed.len() as u64;
+        self.appends_since_sync += 1;
+        self.records_since_checkpoint += 1;
+        if self.faults.take(FaultPoint::AfterAppend) {
+            // Power cut before the fsync: everything past the last durable
+            // byte is page cache that never hit the platter. Truncate it
+            // away so the "restarted" daemon sees what a real crash would
+            // leave.
+            let _ = self.file.set_len(self.durable_len);
+            let _ = self.file.sync_all();
+            return Err(JournalError::Fault("after-append"));
+        }
+        let due = match self.fsync {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::Interval { appends } => self.appends_since_sync >= appends,
+            FsyncPolicy::Never => false,
+        };
+        if due {
+            self.sync_inner()?;
+        }
+        if self.faults.take(FaultPoint::AfterFsync) {
+            // The crash lands after durability but before the publish/ack:
+            // force the sync (whatever the policy) so the record is
+            // exactly the documented at-least-once survivor.
+            self.sync_inner()?;
+            return Err(JournalError::Fault("after-fsync"));
+        }
+        Ok(())
+    }
+
+    /// Force an fsync of everything appended so far.
+    pub fn sync(&mut self) -> Result<(), JournalError> {
+        if self.poisoned {
+            return Err(JournalError::Poisoned);
+        }
+        let r = self.sync_inner();
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn sync_inner(&mut self) -> Result<(), JournalError> {
+        if self.durable_len != self.written_len {
+            self.file.sync_data()?;
+            self.durable_len = self.written_len;
+        }
+        self.appends_since_sync = 0;
+        Ok(())
+    }
+
+    /// Should the caller checkpoint now?
+    pub fn checkpoint_due(&self, cfg: &DurabilityConfig) -> bool {
+        self.records_since_checkpoint >= cfg.checkpoint_every
+            || self.written_len >= cfg.max_segment_bytes
+    }
+
+    /// Write `state` as the head of a fresh segment, fsync it, then delete
+    /// the older segments (checkpoint-truncation). Always synced,
+    /// whatever the append policy: history is about to be deleted.
+    pub fn checkpoint(&mut self, state: &CheckpointState) -> Result<(), JournalError> {
+        if self.poisoned {
+            return Err(JournalError::Poisoned);
+        }
+        let r = self.checkpoint_inner(state);
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn checkpoint_inner(&mut self, state: &CheckpointState) -> Result<(), JournalError> {
+        let new_seq = self.seg_seq + 1;
+        let path = segment_path(&self.dir, new_seq);
+        let mut file = OpenOptions::new()
+            .create_new(true)
+            .read(true)
+            .write(true)
+            .open(path)?;
+        file.write_all(JOURNAL_MAGIC)?;
+        let framed = frame(&JournalRecord::Checkpoint(state.clone()).encode());
+        if self.faults.take(FaultPoint::MidCheckpoint) {
+            // Crash halfway through the rotation: the new segment is torn
+            // and the old ones still exist — recovery must fall back.
+            file.write_all(&framed[..framed.len() / 2])?;
+            let _ = file.sync_data();
+            return Err(JournalError::Fault("mid-checkpoint"));
+        }
+        file.write_all(&framed)?;
+        file.sync_data()?;
+        sync_dir(&self.dir);
+        self.file = file;
+        self.seg_seq = new_seq;
+        self.written_len = (JOURNAL_MAGIC.len() + framed.len()) as u64;
+        self.durable_len = self.written_len;
+        self.appends_since_sync = 0;
+        self.records_since_checkpoint = 0;
+        for (seq, path) in list_segments(&self.dir)? {
+            if seq < new_seq {
+                let _ = fs::remove_file(path);
+            }
+        }
+        sync_dir(&self.dir);
+        Ok(())
+    }
+
+    /// Bytes written to the live segment.
+    pub fn segment_bytes(&self) -> u64 {
+        self.written_len
+    }
+
+    /// Bytes of the live segment covered by fsync.
+    pub fn durable_bytes(&self) -> u64 {
+        self.durable_len
+    }
+
+    /// Records appended since the segment's leading checkpoint.
+    pub fn records_since_checkpoint(&self) -> u64 {
+        self.records_since_checkpoint
+    }
+
+    /// Live segment sequence number.
+    pub fn segment_seq(&self) -> u64 {
+        self.seg_seq
+    }
+
+    /// Has a previous error poisoned this handle?
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::crash::{faulty_durability, TempDir};
+
+    fn cfg(dir: &TempDir, fsync: FsyncPolicy) -> DurabilityConfig {
+        DurabilityConfig::new(dir.path()).with_fsync(fsync)
+    }
+
+    fn admit(vtime_secs: u64, first_id: u64, manifest: Option<u64>) -> JournalRecord {
+        let entry = ManifestEntry::new(QosClass::Normal, JobType::Array, 8, 1)
+            .with_count(2)
+            .with_tag("burst");
+        JournalRecord::Admit {
+            vtime: SimTime::from_secs(vtime_secs),
+            first_id,
+            total_jobs: 2,
+            manifest,
+            entries: vec![AdmitEntry { index: 0, entry }],
+        }
+    }
+
+    fn sample_checkpoint() -> CheckpointState {
+        let spec = JobSpec::spot(UserId(9), JobType::TripleMode, 64).with_tag("cp-tag");
+        CheckpointState {
+            vtime: SimTime::from_secs(120),
+            next_id: 42,
+            next_manifest_id: 5,
+            jobs: vec![CheckpointJob {
+                id: 41,
+                state: JobState::Running,
+                submit_time: SimTime::from_secs(100),
+                requeue_count: 1,
+                spec,
+                log: vec![
+                    (SimTime::from_secs(100), LogKind::Recognized),
+                    (SimTime::from_secs(101), LogKind::DispatchDone),
+                ],
+            }],
+            history: vec![JobView {
+                id: 7,
+                job_type: JobType::Individual,
+                tasks: 1,
+                user: 3,
+                qos: QosClass::Normal,
+                state: JobState::Completed,
+                submit_secs: 1.0,
+                queue_secs: 1.0,
+                start_secs: Some(2.0),
+                end_secs: Some(3.0),
+                requeues: 0,
+                recognized: Some(SimTime::from_secs(1)),
+                dispatched: Some(SimTime::from_secs(2)),
+                tag: Arc::from("old"),
+                revision: 4,
+            }],
+            manifests: vec![RegisteredManifest {
+                id: 4,
+                spans: vec![ManifestSpan {
+                    index: 0,
+                    first: 30,
+                    count: 12,
+                    tag: Some(Arc::from("burst")),
+                }],
+                tag: Some(Arc::from("burst")),
+            }],
+        }
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn records_roundtrip() {
+        for rec in [
+            admit(3, 10, Some(2)),
+            admit(0, 1, None),
+            JournalRecord::Cancel {
+                vtime: SimTime::from_secs(9),
+                id: 7,
+            },
+            JournalRecord::Checkpoint(sample_checkpoint()),
+            JournalRecord::Checkpoint(CheckpointState::genesis()),
+        ] {
+            let bytes = rec.encode();
+            let back = JournalRecord::decode(&bytes).expect("decode");
+            assert_eq!(back, rec);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage_and_truncation() {
+        assert!(JournalRecord::decode(&[]).is_err());
+        assert!(JournalRecord::decode(&[99, 0, 0]).is_err());
+        let good = admit(3, 10, Some(2)).encode();
+        for cut in [1, good.len() / 2, good.len() - 1] {
+            assert!(JournalRecord::decode(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing junk after a well-formed record is corruption too.
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(JournalRecord::decode(&padded).is_err());
+    }
+
+    #[test]
+    fn create_append_recover_roundtrip() {
+        let dir = TempDir::new("wal-roundtrip");
+        let c = cfg(&dir, FsyncPolicy::Always);
+        let recs = [
+            admit(1, 1, Some(1)),
+            JournalRecord::Cancel {
+                vtime: SimTime::from_secs(2),
+                id: 1,
+            },
+            admit(3, 3, None),
+        ];
+        {
+            let mut j = Journal::create(&c).expect("create");
+            for r in &recs {
+                j.append(r).expect("append");
+            }
+            assert_eq!(j.records_since_checkpoint(), 3);
+            assert_eq!(j.durable_bytes(), j.segment_bytes());
+        }
+        assert!(dir_has_segments(dir.path()));
+        let (j2, recovered) = Journal::recover(&c).expect("recover");
+        assert_eq!(recovered.checkpoint, CheckpointState::genesis());
+        assert_eq!(recovered.tail, recs);
+        assert_eq!(recovered.torn_bytes, 0);
+        assert_eq!(recovered.segments_discarded, 0);
+        assert_eq!(j2.records_since_checkpoint(), 3);
+    }
+
+    #[test]
+    fn create_refuses_nonempty_and_recover_refuses_empty() {
+        let dir = TempDir::new("wal-guards");
+        let c = cfg(&dir, FsyncPolicy::Always);
+        assert!(matches!(
+            Journal::recover(&c),
+            Err(JournalError::Empty(_))
+        ));
+        drop(Journal::create(&c).expect("create"));
+        assert!(matches!(
+            Journal::create(&c),
+            Err(JournalError::NotEmpty(_))
+        ));
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let dir = TempDir::new("wal-torn");
+        let c = cfg(&dir, FsyncPolicy::Always);
+        {
+            let mut j = Journal::create(&c).expect("create");
+            j.append(&admit(1, 1, None)).expect("append");
+        }
+        // Simulate a crash mid-append: a frame header promising more bytes
+        // than exist, followed by junk.
+        let seg = list_segments(dir.path()).unwrap()[0].1.clone();
+        let mut f = OpenOptions::new().append(true).open(&seg).unwrap();
+        f.write_all(&500u32.to_le_bytes()).unwrap();
+        f.write_all(&0xDEAD_BEEFu32.to_le_bytes()).unwrap();
+        f.write_all(b"torn").unwrap();
+        drop(f);
+        let (mut j2, recovered) = Journal::recover(&c).expect("recover");
+        assert_eq!(recovered.tail, vec![admit(1, 1, None)]);
+        assert_eq!(recovered.torn_bytes, 12);
+        // The journal is usable after truncation: append and recover again.
+        j2.append(&admit(2, 2, None)).expect("append after recover");
+        drop(j2);
+        let (_, again) = Journal::recover(&c).expect("second recover");
+        assert_eq!(again.tail.len(), 2);
+        assert_eq!(again.torn_bytes, 0);
+    }
+
+    #[test]
+    fn corrupted_crc_cuts_the_tail_there() {
+        let dir = TempDir::new("wal-crc");
+        let c = cfg(&dir, FsyncPolicy::Always);
+        {
+            let mut j = Journal::create(&c).expect("create");
+            j.append(&admit(1, 1, None)).expect("append");
+            j.append(&admit(2, 3, None)).expect("append");
+        }
+        // Flip one byte in the LAST record's payload: the scan must keep
+        // the first record and drop the damaged one.
+        let seg = list_segments(dir.path()).unwrap()[0].1.clone();
+        let mut data = fs::read(&seg).unwrap();
+        let last = data.len() - 1;
+        data[last] ^= 0xFF;
+        fs::write(&seg, &data).unwrap();
+        let (_, recovered) = Journal::recover(&c).expect("recover");
+        assert_eq!(recovered.tail, vec![admit(1, 1, None)]);
+        assert!(recovered.torn_bytes > 0);
+    }
+
+    #[test]
+    fn checkpoint_rotates_and_truncates() {
+        let dir = TempDir::new("wal-rotate");
+        let c = cfg(&dir, FsyncPolicy::Always);
+        let cp = sample_checkpoint();
+        {
+            let mut j = Journal::create(&c).expect("create");
+            for i in 0..3 {
+                j.append(&admit(i, i * 2 + 1, None)).expect("append");
+            }
+            j.checkpoint(&cp).expect("checkpoint");
+            assert_eq!(j.segment_seq(), 2);
+            assert_eq!(j.records_since_checkpoint(), 0);
+            j.append(&admit(9, 9, None)).expect("append post-rotate");
+        }
+        let segs = list_segments(dir.path()).unwrap();
+        assert_eq!(segs.len(), 1, "older segments must be deleted");
+        assert_eq!(segs[0].0, 2);
+        let (_, recovered) = Journal::recover(&c).expect("recover");
+        assert_eq!(recovered.checkpoint, cp);
+        assert_eq!(recovered.tail, vec![admit(9, 9, None)]);
+    }
+
+    #[test]
+    fn checkpoint_due_by_records_and_bytes() {
+        let dir = TempDir::new("wal-due");
+        let mut c = cfg(&dir, FsyncPolicy::Never).with_checkpoint_every(2);
+        let mut j = Journal::create(&c).expect("create");
+        assert!(!j.checkpoint_due(&c));
+        j.append(&admit(1, 1, None)).expect("append");
+        assert!(!j.checkpoint_due(&c));
+        j.append(&admit(2, 3, None)).expect("append");
+        assert!(j.checkpoint_due(&c), "record stride reached");
+        c.checkpoint_every = 1_000_000;
+        assert!(!j.checkpoint_due(&c));
+        c.max_segment_bytes = 1;
+        assert!(j.checkpoint_due(&c), "byte cap reached");
+    }
+
+    #[test]
+    fn interval_policy_defers_durability() {
+        let dir = TempDir::new("wal-interval");
+        let c = cfg(&dir, FsyncPolicy::Interval { appends: 2 });
+        let mut j = Journal::create(&c).expect("create");
+        j.append(&admit(1, 1, None)).expect("append");
+        assert!(j.durable_bytes() < j.segment_bytes(), "first append unsynced");
+        j.append(&admit(2, 3, None)).expect("append");
+        assert_eq!(j.durable_bytes(), j.segment_bytes(), "stride hit syncs");
+        j.append(&admit(3, 5, None)).expect("append");
+        j.sync().expect("manual sync");
+        assert_eq!(j.durable_bytes(), j.segment_bytes());
+    }
+
+    #[test]
+    fn fault_after_append_loses_the_unsynced_record() {
+        let dir = TempDir::new("wal-fault-append");
+        let c = faulty_durability(dir.path(), FsyncPolicy::Always, FaultPoint::AfterAppend);
+        let mut j = Journal::create(&c).expect("create");
+        j.append(&admit(1, 1, None)).expect("first append survives");
+        let err = j.append(&admit(2, 3, None)).expect_err("armed fault fires");
+        assert!(matches!(err, JournalError::Fault("after-append")));
+        assert!(j.is_poisoned());
+        assert!(matches!(
+            j.append(&admit(3, 5, None)),
+            Err(JournalError::Poisoned)
+        ));
+        drop(j);
+        let (_, recovered) = Journal::recover(&c).expect("recover");
+        // The un-fsync'd record is gone; the acked one survives. Nothing
+        // torn remains on disk (the fault truncated it, as a power cut
+        // would have).
+        assert_eq!(recovered.tail, vec![admit(1, 1, None)]);
+        assert_eq!(recovered.torn_bytes, 0);
+    }
+
+    #[test]
+    fn fault_after_fsync_keeps_the_unacked_record() {
+        let dir = TempDir::new("wal-fault-fsync");
+        // Policy `Never`: only the fault's forced sync makes it durable.
+        let c = faulty_durability(dir.path(), FsyncPolicy::Never, FaultPoint::AfterFsync);
+        let mut j = Journal::create(&c).expect("create");
+        j.append(&admit(1, 1, None)).expect("append");
+        let err = j.append(&admit(2, 3, None)).expect_err("armed fault fires");
+        assert!(matches!(err, JournalError::Fault("after-fsync")));
+        drop(j);
+        let (_, recovered) = Journal::recover(&c).expect("recover");
+        // Both records durable: the second is the documented at-least-once
+        // resurrection (durable but never acked).
+        assert_eq!(recovered.tail.len(), 2);
+    }
+
+    #[test]
+    fn fault_mid_checkpoint_falls_back_to_previous_segment() {
+        let dir = TempDir::new("wal-fault-cp");
+        let c = faulty_durability(dir.path(), FsyncPolicy::Always, FaultPoint::MidCheckpoint);
+        let mut j = Journal::create(&c).expect("create");
+        j.append(&admit(1, 1, None)).expect("append");
+        let err = j
+            .checkpoint(&sample_checkpoint())
+            .expect_err("armed fault fires");
+        assert!(matches!(err, JournalError::Fault("mid-checkpoint")));
+        // Torn new segment and intact old one coexist on disk.
+        assert_eq!(list_segments(dir.path()).unwrap().len(), 2);
+        drop(j);
+        let (j2, recovered) = Journal::recover(&c).expect("recover");
+        assert_eq!(recovered.segments_discarded, 1);
+        assert_eq!(recovered.checkpoint, CheckpointState::genesis());
+        assert_eq!(recovered.tail, vec![admit(1, 1, None)]);
+        // The torn segment was deleted; the survivor is segment 1.
+        assert_eq!(list_segments(dir.path()).unwrap().len(), 1);
+        assert_eq!(j2.segment_seq(), 1);
+    }
+
+    #[test]
+    fn fsync_policy_parses_cli_forms() {
+        assert_eq!(FsyncPolicy::parse("always"), Some(FsyncPolicy::Always));
+        assert_eq!(FsyncPolicy::parse("never"), Some(FsyncPolicy::Never));
+        assert_eq!(FsyncPolicy::parse("interval"), Some(FsyncPolicy::default()));
+        assert_eq!(
+            FsyncPolicy::parse("interval:8"),
+            Some(FsyncPolicy::Interval { appends: 8 })
+        );
+        for bad in ["", "interval:0", "interval:x", "sometimes"] {
+            assert_eq!(FsyncPolicy::parse(bad), None, "{bad:?}");
+        }
+        assert_eq!(FsyncPolicy::Always.label(), "always");
+        assert_eq!(FsyncPolicy::default().label(), "interval");
+    }
+}

@@ -308,6 +308,11 @@ pub struct ManifestAck {
     pub rejected: Vec<EntryReject>,
     /// Total jobs created.
     pub jobs: u64,
+    /// The daemon-assigned manifest id, used by `RESUME` and the
+    /// `WAIT manifest=<id> entry=<k>` form. `None` when talking to a
+    /// pre-durability peer that does not assign ids (or when every entry
+    /// was rejected, so there is nothing to resume).
+    pub manifest: Option<u64>,
 }
 
 impl ManifestAck {
@@ -338,6 +343,145 @@ impl fmt::Display for ManifestAck {
             self.rejected.len(),
             self.jobs
         )
+    }
+}
+
+/// One accepted entry as the daemon remembers it: the contiguous id span
+/// plus the client-visible tag. This is the minimal state `RESUME` and
+/// `WAIT manifest= entry=` need, so it is what the registry keeps and what
+/// the durability checkpoint persists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestSpan {
+    /// Index into the original manifest's entry list.
+    pub index: u32,
+    /// First assigned job id.
+    pub first: u64,
+    /// Jobs in the span.
+    pub count: u64,
+    /// The entry's tag, if any.
+    pub tag: Option<Arc<str>>,
+}
+
+impl ManifestSpan {
+    /// Job ids covered by this span.
+    pub fn ids(&self) -> impl Iterator<Item = u64> {
+        self.first..self.first + self.count
+    }
+}
+
+/// One registered manifest: its id and accepted-entry spans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisteredManifest {
+    /// Daemon-assigned manifest id (monotonic, starts at 1).
+    pub id: u64,
+    /// Accepted entries, ascending index order. Rejected entries leave no
+    /// span — resume only ever sees work that was actually admitted.
+    pub spans: Vec<ManifestSpan>,
+    /// The submission tag the whole manifest is findable under (the tag of
+    /// its first tagged entry), if any.
+    pub tag: Option<Arc<str>>,
+}
+
+/// The daemon's manifest registry: manifest id → accepted spans, plus a
+/// tag → latest-manifest index for `RESUME tag=`. Registered atomically
+/// with admission (under the scheduler lock) and rebuilt verbatim from the
+/// durability checkpoint + journal tail on recovery.
+#[derive(Debug)]
+pub struct ManifestRegistry {
+    manifests: std::collections::BTreeMap<u64, RegisteredManifest>,
+    by_tag: std::collections::HashMap<Arc<str>, u64>,
+    next_id: u64,
+}
+
+impl Default for ManifestRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ManifestRegistry {
+    /// An empty registry; ids start at 1.
+    pub fn new() -> Self {
+        Self {
+            manifests: std::collections::BTreeMap::new(),
+            by_tag: std::collections::HashMap::new(),
+            next_id: 1,
+        }
+    }
+
+    /// The id the next registered manifest will get (persisted in
+    /// checkpoints so recovery never reuses an id).
+    pub fn next_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Register a freshly admitted manifest; returns its assigned id, or
+    /// `None` if no entry was accepted (nothing to resume). Every tag in
+    /// the manifest points at this id afterwards — "latest manifest wins"
+    /// is the resume-by-tag contract.
+    pub fn register(&mut self, spans: Vec<ManifestSpan>) -> Option<u64> {
+        if spans.is_empty() {
+            return None;
+        }
+        let id = self.next_id;
+        self.insert(id, spans);
+        self.next_id += 1;
+        Some(id)
+    }
+
+    /// Re-insert a manifest with a known id during crash recovery.
+    /// Advances `next_id` past it; later re-registrations of the same tag
+    /// overwrite the tag index exactly as live registration does.
+    pub fn restore(&mut self, id: u64, spans: Vec<ManifestSpan>) {
+        self.insert(id, spans);
+        self.next_id = self.next_id.max(id + 1);
+    }
+
+    /// Force the id counter (from a checkpoint) — `max`, never backwards.
+    pub fn force_next_id(&mut self, next: u64) {
+        self.next_id = self.next_id.max(next);
+    }
+
+    fn insert(&mut self, id: u64, spans: Vec<ManifestSpan>) {
+        debug_assert!(!spans.is_empty());
+        let tag = spans.iter().find_map(|s| s.tag.clone());
+        for span in &spans {
+            if let Some(t) = &span.tag {
+                self.by_tag.insert(Arc::clone(t), id);
+            }
+        }
+        self.manifests.insert(id, RegisteredManifest { id, spans, tag });
+    }
+
+    /// Look up a manifest by id.
+    pub fn get(&self, id: u64) -> Option<&RegisteredManifest> {
+        self.manifests.get(&id)
+    }
+
+    /// Look up the **latest** manifest registered under `tag`.
+    pub fn by_tag(&self, tag: &str) -> Option<&RegisteredManifest> {
+        self.by_tag.get(tag).and_then(|id| self.manifests.get(id))
+    }
+
+    /// The id span for one entry of one manifest.
+    pub fn span(&self, manifest: u64, entry: u32) -> Option<&ManifestSpan> {
+        self.get(manifest)
+            .and_then(|m| m.spans.iter().find(|s| s.index == entry))
+    }
+
+    /// Registered manifests, ascending id order (checkpoint capture).
+    pub fn iter(&self) -> impl Iterator<Item = &RegisteredManifest> {
+        self.manifests.values()
+    }
+
+    /// Number of registered manifests.
+    pub fn len(&self) -> usize {
+        self.manifests.len()
+    }
+
+    /// No manifests registered?
+    pub fn is_empty(&self) -> bool {
+        self.manifests.is_empty()
     }
 }
 
@@ -482,10 +626,59 @@ mod tests {
                 error: ApiError::bad_arg("tasks", "0"),
             }],
             jobs: 4,
+            manifest: Some(7),
         };
         assert_eq!(ack.job_ids(), vec![1, 2, 3, 4]);
         assert_eq!(ack.entry(2).unwrap().first, 4);
         assert!(ack.entry(1).is_none());
         assert_eq!(ack.to_string(), "accepted=2 rejected=1 jobs=4");
+    }
+
+    fn span(index: u32, first: u64, count: u64, tag: Option<&str>) -> ManifestSpan {
+        ManifestSpan {
+            index,
+            first,
+            count,
+            tag: tag.map(Arc::from),
+        }
+    }
+
+    #[test]
+    fn registry_assigns_monotonic_ids_and_latest_tag_wins() {
+        let mut reg = ManifestRegistry::new();
+        assert!(reg.register(vec![]).is_none(), "all-rejected manifest gets no id");
+        let a = reg.register(vec![span(0, 1, 4, Some("burst"))]).unwrap();
+        let b = reg
+            .register(vec![span(0, 5, 2, None), span(1, 7, 1, Some("burst"))])
+            .unwrap();
+        assert_eq!((a, b), (1, 2));
+        assert_eq!(reg.len(), 2);
+        // Latest registration of "burst" wins.
+        assert_eq!(reg.by_tag("burst").unwrap().id, b);
+        assert!(reg.by_tag("missing").is_none());
+        // Per-entry span lookup.
+        assert_eq!(reg.span(b, 1).unwrap().first, 7);
+        assert!(reg.span(b, 9).is_none());
+        assert!(reg.span(99, 0).is_none());
+        assert_eq!(reg.span(a, 0).unwrap().ids().collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn registry_restore_replays_to_identical_state() {
+        let mut live = ManifestRegistry::new();
+        live.register(vec![span(0, 1, 3, Some("t1"))]);
+        live.register(vec![span(0, 4, 2, Some("t1")), span(1, 6, 1, Some("t2"))]);
+
+        let mut rebuilt = ManifestRegistry::new();
+        for m in live.iter() {
+            rebuilt.restore(m.id, m.spans.clone());
+        }
+        assert_eq!(rebuilt.next_id(), live.next_id());
+        assert_eq!(rebuilt.by_tag("t1").unwrap().id, 2);
+        assert_eq!(rebuilt.by_tag("t2").unwrap().id, 2);
+        assert_eq!(rebuilt.get(1).unwrap().spans, live.get(1).unwrap().spans);
+        // New registrations after restore continue the sequence.
+        let next = rebuilt.register(vec![span(0, 7, 1, None)]).unwrap();
+        assert_eq!(next, 3);
     }
 }

@@ -30,8 +30,15 @@
 //!   idle expiry, parked-`WAIT` registry).
 //! * [`timerwheel`] — hashed timer wheel for the reactor's idle and
 //!   `WAIT`-deadline tracking (O(1) insert, amortized O(1) expiry).
+//! * [`journal`] — the durability write-ahead log: length-prefixed
+//!   checksummed records in rotating segments, appended (and fsync'd per
+//!   the configured policy) *before* a submission is acked, bounded by
+//!   checkpoint-truncation.
+//! * [`recovery`] — crash recovery: replay the newest checkpoint plus the
+//!   journal tail into a fresh scheduler, with a typed `RecoveryReport`.
 //! * [`client`] — the blocking typed client for the CLI, examples, and
-//!   tests (round trips and pipelined batches).
+//!   tests (round trips and pipelined batches); `RESUME`-based re-attach
+//!   with retry/backoff.
 //! * [`metrics`] — daemon counters (total, per-command, per lock path,
 //!   reactor wakeups/ready-events) and latency histograms.
 //! * [`threadpool`] — fixed worker pool substrate (request execution under
@@ -41,8 +48,10 @@ pub mod api;
 pub mod client;
 pub mod codec;
 pub mod daemon;
+pub mod journal;
 pub mod manifest;
 pub mod metrics;
+pub mod recovery;
 #[cfg(target_os = "linux")]
 pub(crate) mod reactor;
 pub mod server;
@@ -52,12 +61,18 @@ pub mod timerwheel;
 
 pub use api::{
     ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request,
-    Response, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    Response, ResumeEntry, ResumeInfo, ResumeTarget, SqueueFilter, StatsSnapshot, SubmitAck,
+    SubmitSpec, UtilSnapshot, WaitResult,
 };
-pub use client::{Client, ClientError};
+pub use client::{Client, ClientError, RetryPolicy};
 pub use daemon::{Daemon, DaemonConfig};
+pub use journal::{
+    DurabilityConfig, FaultPlan, FaultPoint, FsyncPolicy, Journal, JournalError,
+};
 pub use manifest::{
     EntryAck, EntryReject, Manifest, ManifestAck, ManifestBuilder, ManifestEntry,
+    ManifestRegistry, ManifestSpan, RegisteredManifest,
 };
+pub use recovery::{RecoveryError, RecoveryReport};
 pub use server::Server;
 pub use snapshot::{JobView, SchedSnapshot, WaitHub};

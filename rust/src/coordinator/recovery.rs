@@ -1,0 +1,408 @@
+//! Crash recovery: rebuild the scheduler, manifest registry, and history
+//! table from a recovered journal (checkpoint + tail replay).
+//!
+//! The journal stores *inputs*, not scheduler state: an [`Admit`] record
+//! carries the manifest entries and the id range the scheduler assigned,
+//! and replay re-materializes and re-submits them in the original order at
+//! the original virtual time. The scheduler's id assignment is
+//! deterministic, so the replayed range must equal the journaled one — any
+//! divergence is a [`RecoveryError::Mismatch`], never a silent re-numbering
+//! (acked ids are a client-visible contract).
+//!
+//! Jobs that were Running/Suspended at the checkpoint are restored as
+//! Pending and re-queued at the checkpoint's virtual time: the simulated
+//! cluster's in-flight placements died with the process, exactly like
+//! requeue-on-preemption, but their pre-crash event-log entries (and so
+//! their first-recognized/dispatch facts) are preserved for `SJOB`/`WAIT`.
+//!
+//! [`Admit`]: JournalRecord::Admit
+
+use super::journal::{CheckpointState, JournalError, JournalRecord, RecoveredJournal};
+use super::manifest::{ManifestRegistry, ManifestSpan};
+use super::snapshot::JobView;
+use crate::cluster::Cluster;
+use crate::job::{JobId, JobState};
+use crate::sched::{Scheduler, SchedulerConfig};
+use std::fmt;
+
+/// Why recovery failed.
+#[derive(Debug)]
+pub enum RecoveryError {
+    /// The journal itself could not be read (I/O or unrecoverable
+    /// corruption).
+    Journal(JournalError),
+    /// Replay diverged from the journaled facts (e.g. the re-admitted id
+    /// range differs from the acked one).
+    Mismatch(String),
+}
+
+impl fmt::Display for RecoveryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecoveryError::Journal(e) => write!(f, "journal: {e}"),
+            RecoveryError::Mismatch(what) => write!(f, "replay mismatch: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for RecoveryError {}
+
+impl From<JournalError> for RecoveryError {
+    fn from(e: JournalError) -> Self {
+        RecoveryError::Journal(e)
+    }
+}
+
+/// What recovery did, typed — the daemon logs it and tests assert on it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryReport {
+    /// Whole newer segments discarded (torn mid-checkpoint rotation).
+    pub segments_discarded: usize,
+    /// Torn-tail bytes truncated from the surviving segment.
+    pub torn_bytes: u64,
+    /// Tail records replayed after the checkpoint.
+    pub records_replayed: usize,
+    /// Of those, admissions.
+    pub admits_replayed: usize,
+    /// Of those, cancellations.
+    pub cancels_replayed: usize,
+    /// Live jobs restored from the checkpoint.
+    pub jobs_restored: usize,
+    /// Checkpoint jobs that were Pending at capture.
+    pub restored_pending: usize,
+    /// Checkpoint jobs that were Running at capture (re-queued).
+    pub restored_running: usize,
+    /// Checkpoint jobs that were Requeued at capture.
+    pub restored_requeued: usize,
+    /// Checkpoint jobs that were Suspended at capture (re-queued).
+    pub restored_suspended: usize,
+    /// Retired-history views restored.
+    pub history_restored: usize,
+    /// Manifests restored (checkpoint + tail).
+    pub manifests_restored: usize,
+    /// Virtual time after replay (seconds).
+    pub recovered_vtime_secs: f64,
+    /// The scheduler's next job id after replay.
+    pub next_id: u64,
+}
+
+impl fmt::Display for RecoveryReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "recovered vtime={:.3}s jobs={} (pending={} running={} requeued={} suspended={}) \
+             history={} manifests={} replayed={} (admits={} cancels={}) torn_bytes={} \
+             segments_discarded={} next_id={}",
+            self.recovered_vtime_secs,
+            self.jobs_restored,
+            self.restored_pending,
+            self.restored_running,
+            self.restored_requeued,
+            self.restored_suspended,
+            self.history_restored,
+            self.manifests_restored,
+            self.records_replayed,
+            self.admits_replayed,
+            self.cancels_replayed,
+            self.torn_bytes,
+            self.segments_discarded,
+            self.next_id,
+        )
+    }
+}
+
+/// Everything [`rebuild`] hands back for the daemon to adopt.
+pub struct RebuiltState {
+    /// The replayed scheduler, advanced to the last journaled instant.
+    pub sched: Scheduler,
+    /// The manifest registry (checkpoint manifests + tail admissions).
+    pub registry: ManifestRegistry,
+    /// Retired-history views, original retirement order (the daemon
+    /// re-inserts them through its capped table so pruning semantics
+    /// match a never-crashed daemon).
+    pub history: Vec<JobView>,
+    /// The typed report.
+    pub report: RecoveryReport,
+}
+
+/// Rebuild scheduler + registry + history from a recovered journal over a
+/// fresh cluster. `cluster`/`sched_cfg` must match the crashed daemon's —
+/// the journal records inputs, not topology.
+pub fn rebuild(
+    cluster: Cluster,
+    sched_cfg: SchedulerConfig,
+    recovered: &RecoveredJournal,
+) -> Result<RebuiltState, RecoveryError> {
+    let cp = &recovered.checkpoint;
+    let mut report = RecoveryReport {
+        segments_discarded: recovered.segments_discarded,
+        torn_bytes: recovered.torn_bytes,
+        records_replayed: recovered.tail.len(),
+        ..RecoveryReport::default()
+    };
+
+    let mut sched = Scheduler::new(cluster, sched_cfg);
+    let mut registry = ManifestRegistry::new();
+    restore_checkpoint(&mut sched, &mut registry, cp, &mut report);
+
+    for rec in &recovered.tail {
+        match rec {
+            JournalRecord::Admit {
+                vtime,
+                first_id,
+                total_jobs,
+                manifest,
+                entries,
+            } => {
+                report.admits_replayed += 1;
+                if *vtime > sched.now() {
+                    sched.run_until(*vtime);
+                }
+                // Re-materialize in admission order; the scheduler's
+                // deterministic id assignment reproduces the acked range.
+                let mut specs = Vec::new();
+                let mut spans: Vec<ManifestSpan> = Vec::with_capacity(entries.len());
+                for ae in entries {
+                    let batch = ae.entry.materialize();
+                    spans.push(ManifestSpan {
+                        index: ae.index,
+                        first: first_id + specs.len() as u64,
+                        count: batch.len() as u64,
+                        tag: ae.entry.tag.clone(),
+                    });
+                    specs.extend(batch);
+                }
+                let ids = sched.submit_batch(specs);
+                let got_first = ids.first().map(|j| j.0).unwrap_or(0);
+                if ids.len() as u64 != *total_jobs || (!ids.is_empty() && got_first != *first_id)
+                {
+                    return Err(RecoveryError::Mismatch(format!(
+                        "admit replay assigned ids {got_first}..+{} but the journal acked \
+                         {first_id}..+{total_jobs}",
+                        ids.len()
+                    )));
+                }
+                if let Some(mid) = manifest {
+                    registry.restore(*mid, spans);
+                }
+            }
+            JournalRecord::Cancel { vtime, id } => {
+                report.cancels_replayed += 1;
+                if *vtime > sched.now() {
+                    sched.run_until(*vtime);
+                }
+                // The cancel was acked pre-crash, so it normally lands; a
+                // job that already ran to completion during replay is fine
+                // (the cancel was a no-op race then, too).
+                let _ = sched.cancel(JobId(*id));
+            }
+            // Segments lead with their checkpoint; the scan strips it, so
+            // a checkpoint in the tail means a corrupted scan.
+            JournalRecord::Checkpoint(_) => {
+                return Err(RecoveryError::Mismatch(
+                    "checkpoint record in the replay tail".into(),
+                ));
+            }
+        }
+    }
+
+    report.recovered_vtime_secs = sched.now().as_secs_f64();
+    report.next_id = sched.jobs_signature().1;
+    report.manifests_restored = registry.len();
+    Ok(RebuiltState {
+        sched,
+        registry,
+        history: cp.history.clone(),
+        report,
+    })
+}
+
+/// Seed the fresh scheduler and registry from the checkpoint.
+fn restore_checkpoint(
+    sched: &mut Scheduler,
+    registry: &mut ManifestRegistry,
+    cp: &CheckpointState,
+    report: &mut RecoveryReport,
+) {
+    sched.force_next_id(cp.next_id);
+    registry.force_next_id(cp.next_manifest_id);
+    for m in &cp.manifests {
+        registry.restore(m.id, m.spans.clone());
+    }
+    report.jobs_restored = cp.jobs.len();
+    report.history_restored = cp.history.len();
+    for job in &cp.jobs {
+        match job.state {
+            JobState::Pending => report.restored_pending += 1,
+            JobState::Running => report.restored_running += 1,
+            JobState::Requeued => report.restored_requeued += 1,
+            JobState::Suspended => report.restored_suspended += 1,
+            // Terminal jobs are never checkpointed live (they retire into
+            // history); tolerate them as plain restores if they appear.
+            JobState::Completed | JobState::Cancelled => {}
+        }
+        sched.restore_job(
+            JobId(job.id),
+            job.spec.clone(),
+            job.submit_time,
+            job.requeue_count,
+            &job.log,
+            cp.vtime,
+        );
+    }
+    // Arrivals are queued at cp.vtime; drain them so the recovered
+    // scheduler's table is live before the tail replays.
+    sched.run_until(cp.vtime);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{topology, PartitionLayout};
+    use crate::coordinator::journal::{AdmitEntry, CheckpointJob};
+    use crate::coordinator::manifest::ManifestEntry;
+    use crate::job::{JobSpec, JobType, QosClass, UserId};
+    use crate::sim::{SchedCosts, SimTime};
+
+    fn sched_cfg() -> SchedulerConfig {
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+    }
+
+    fn recovered(cp: CheckpointState, tail: Vec<JournalRecord>) -> RecoveredJournal {
+        RecoveredJournal {
+            checkpoint: cp,
+            tail,
+            torn_bytes: 0,
+            segments_discarded: 0,
+        }
+    }
+
+    #[test]
+    fn genesis_plus_admit_tail_replays_to_the_acked_ids() {
+        let entry = ManifestEntry::new(QosClass::Spot, JobType::TripleMode, 320, 9)
+            .with_tag("replayed");
+        let tail = vec![JournalRecord::Admit {
+            vtime: SimTime::from_secs(5),
+            first_id: 1,
+            total_jobs: 1,
+            manifest: Some(1),
+            entries: vec![AdmitEntry { index: 0, entry }],
+        }];
+        let rb = rebuild(topology::tx2500(), sched_cfg(), &recovered(
+            CheckpointState::genesis(),
+            tail,
+        ))
+        .unwrap();
+        assert_eq!(rb.report.admits_replayed, 1);
+        assert_eq!(rb.report.jobs_restored, 0);
+        assert!(rb.sched.now() >= SimTime::from_secs(5));
+        let m = rb.registry.by_tag("replayed").expect("manifest restored");
+        assert_eq!(m.spans[0].first, 1);
+        assert_eq!(rb.sched.jobs().count(), 1);
+    }
+
+    #[test]
+    fn admit_id_divergence_is_a_typed_mismatch() {
+        // The journal claims first_id=42 but a fresh scheduler assigns 1.
+        let entry = ManifestEntry::new(QosClass::Spot, JobType::Array, 8, 9);
+        let tail = vec![JournalRecord::Admit {
+            vtime: SimTime::ZERO,
+            first_id: 42,
+            total_jobs: 1,
+            manifest: None,
+            entries: vec![AdmitEntry { index: 0, entry }],
+        }];
+        match rebuild(topology::tx2500(), sched_cfg(), &recovered(
+            CheckpointState::genesis(),
+            tail,
+        )) {
+            Err(RecoveryError::Mismatch(msg)) => assert!(msg.contains("42"), "{msg}"),
+            other => panic!("{:?}", other.map(|r| r.report)),
+        }
+    }
+
+    #[test]
+    fn checkpoint_jobs_restore_with_ids_states_and_log_facts() {
+        let spec = JobSpec::spot(UserId(9), JobType::TripleMode, 320);
+        let cp = CheckpointState {
+            vtime: SimTime::from_secs(100),
+            next_id: 8,
+            next_manifest_id: 3,
+            jobs: vec![CheckpointJob {
+                id: 7,
+                state: JobState::Running,
+                submit_time: SimTime::from_secs(60),
+                requeue_count: 2,
+                spec,
+                log: vec![(SimTime::from_secs(61), crate::sched::LogKind::Recognized)],
+            }],
+            history: Vec::new(),
+            manifests: Vec::new(),
+        };
+        let rb = rebuild(topology::tx2500(), sched_cfg(), &recovered(cp, Vec::new())).unwrap();
+        assert_eq!(rb.report.restored_running, 1);
+        assert_eq!(rb.report.next_id, 8);
+        let job = rb.sched.jobs().find(|j| j.id == JobId(7)).expect("restored");
+        assert_eq!(job.submit_time, SimTime::from_secs(60));
+        assert_eq!(job.requeue_count, 2);
+        assert_eq!(
+            rb.sched
+                .log()
+                .first(JobId(7), crate::sched::LogKind::Recognized),
+            Some(SimTime::from_secs(61)),
+            "pre-crash log facts survive"
+        );
+        // A post-recovery admission continues past the checkpointed id.
+        let mut sched = rb.sched;
+        let ids = sched.submit_batch(vec![JobSpec::spot(UserId(1), JobType::Array, 8)]);
+        assert_eq!(ids[0], JobId(8), "next_id restored from checkpoint");
+    }
+
+    #[test]
+    fn cancel_replay_lands_and_is_tolerant() {
+        let entry = ManifestEntry::new(QosClass::Spot, JobType::Array, 8, 9);
+        let tail = vec![
+            JournalRecord::Admit {
+                vtime: SimTime::ZERO,
+                first_id: 1,
+                total_jobs: 1,
+                manifest: None,
+                entries: vec![AdmitEntry { index: 0, entry }],
+            },
+            JournalRecord::Cancel {
+                vtime: SimTime::from_millis(1),
+                id: 1,
+            },
+            // A second cancel of the same id was impossible to ack live,
+            // but replay must not die on a no-op cancel.
+            JournalRecord::Cancel {
+                vtime: SimTime::from_millis(2),
+                id: 1,
+            },
+        ];
+        let rb = rebuild(topology::tx2500(), sched_cfg(), &recovered(
+            CheckpointState::genesis(),
+            tail,
+        ))
+        .unwrap();
+        assert_eq!(rb.report.cancels_replayed, 2);
+        let job = rb.sched.jobs().find(|j| j.id == JobId(1)).expect("job");
+        assert_eq!(job.state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn report_display_mentions_the_key_counts() {
+        let report = RecoveryReport {
+            jobs_restored: 3,
+            restored_running: 1,
+            admits_replayed: 2,
+            torn_bytes: 17,
+            ..RecoveryReport::default()
+        };
+        let s = report.to_string();
+        assert!(s.contains("jobs=3"), "{s}");
+        assert!(s.contains("running=1"), "{s}");
+        assert!(s.contains("admits=2"), "{s}");
+        assert!(s.contains("torn_bytes=17"), "{s}");
+    }
+}

@@ -13,14 +13,15 @@
 
 use spotcloud::cluster::{topology, PartitionLayout};
 use spotcloud::coordinator::{
-    api, codec, Client, Daemon, DaemonConfig, Manifest, ManifestAck, Server, SqueueFilter,
-    SubmitSpec,
+    api, codec, journal, Client, ClientError, Daemon, DaemonConfig, DurabilityConfig, FsyncPolicy,
+    Manifest, ManifestAck, ResumeInfo, RetryPolicy, Server, SqueueFilter, SubmitSpec,
 };
 use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
 use spotcloud::sched::SchedulerConfig;
 use spotcloud::sim::SchedCosts;
 use spotcloud::util::cli::{CliError, Command};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -29,8 +30,8 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("daemon") => cmd_daemon(&args[1..]),
         Some(
-            c @ ("submit" | "msubmit" | "squeue" | "sjob" | "scancel" | "wait" | "stats" | "util"
-            | "shutdown" | "ping"),
+            c @ ("submit" | "msubmit" | "squeue" | "sjob" | "scancel" | "wait" | "resume"
+            | "stats" | "util" | "shutdown" | "ping"),
         ) => cmd_client(c, &args[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -54,9 +55,13 @@ fn print_usage() {
            experiment <id|all>   regenerate a paper figure ({})\n\
            simulate              run a mixed workload simulation\n\
            daemon                start the coordinator daemon\n\
-           submit|msubmit|squeue|sjob|scancel|wait|stats|util|ping|shutdown   client commands\n\
+                                 (--journal <dir> enables the write-ahead journal; an existing\n\
+                                  journal is replayed on start — crash recovery)\n\
+           submit|msubmit|squeue|sjob|scancel|wait|resume|stats|util|ping|shutdown   client commands\n\
            (msubmit <file|->: one manifest entry per line, `qos=.. type=.. tasks=.. user=..\n\
-            [cores_per_task=..] [run_secs=..] [count=..] [tag=..]`; # comments allowed)\n\n\
+            [cores_per_task=..] [run_secs=..] [count=..] [tag=..]`; # comments allowed)\n\
+           (resume <tag> | resume --manifest <id>: re-attach after a crash or disconnect,\n\
+            then wait out the entries that had not settled)\n\n\
          run `spotcloud <subcommand> --help` for options",
         spotcloud::experiments::ALL.join(", ")
     );
@@ -150,6 +155,9 @@ fn cmd_daemon(args: &[String]) -> i32 {
         .opt("reserve", "idle-node reserve (cron agent)", Some("5"))
         .opt("topology", "tx2500 | txgreen | txgreen-full", Some("tx2500"))
         .opt("config", "slurm.conf-style deployment file (overrides the above)", None)
+        .opt("journal", "write-ahead journal directory (enables durability)", None)
+        .opt("fsync", "journal sync policy: always | interval[:<n>] | never", Some("interval"))
+        .opt("checkpoint-every", "journal records between checkpoints", Some("4096"))
         .switch("xla", "use the XLA-compiled priority scorer (needs artifacts)");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -201,14 +209,57 @@ fn cmd_daemon(args: &[String]) -> i32 {
             }
         }
     }
-    let daemon = Daemon::new(
-        cluster,
-        sched_cfg,
-        DaemonConfig {
-            speedup,
-            ..Default::default()
-        },
-    );
+    let durability = match parsed.get("journal") {
+        Some(dir) => {
+            let fsync_s = parsed.get("fsync").unwrap();
+            let Some(fsync) = FsyncPolicy::parse(fsync_s) else {
+                eprintln!("bad --fsync {fsync_s:?} (always | interval[:<n>] | never)");
+                return 2;
+            };
+            let every: u64 = match parsed.value("checkpoint-every") {
+                Ok(n) => n,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            Some(
+                DurabilityConfig::new(dir)
+                    .with_fsync(fsync)
+                    .with_checkpoint_every(every),
+            )
+        }
+        None => None,
+    };
+    let journal_note = durability
+        .as_ref()
+        .map(|d| format!(", journal {} fsync={}", d.dir.display(), d.fsync.label()))
+        .unwrap_or_default();
+    let cfg = DaemonConfig {
+        speedup,
+        durability,
+        ..Default::default()
+    };
+    // A directory that already holds segments is a crashed (or cleanly
+    // stopped) daemon's journal: replay it instead of refusing to boot.
+    let recovering = cfg
+        .durability
+        .as_ref()
+        .is_some_and(|d| journal::dir_has_segments(&d.dir));
+    let daemon = if recovering {
+        match Daemon::recover(cluster, sched_cfg, cfg) {
+            Ok((daemon, report)) => {
+                println!("{report}");
+                daemon
+            }
+            Err(e) => {
+                eprintln!("journal recovery failed: {e}");
+                return 1;
+            }
+        }
+    } else {
+        Daemon::new(cluster, sched_cfg, cfg)
+    };
     let pacer = daemon.spawn_pacer();
     let server = match Server::bind(Arc::clone(&daemon), &addr, workers) {
         Ok(s) => s,
@@ -218,7 +269,7 @@ fn cmd_daemon(args: &[String]) -> i32 {
         }
     };
     println!(
-        "spotcloud daemon listening on {} (speedup {speedup}x, reserve {reserve} nodes)",
+        "spotcloud daemon listening on {} (speedup {speedup}x, reserve {reserve} nodes{journal_note})",
         server.local_addr().map(|a| a.to_string()).unwrap_or(addr)
     );
     server.serve();
@@ -238,14 +289,36 @@ fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
         .opt("count", "batch count: copies of the spec in one RPC (submit)", Some("1"))
         .opt("state", "state filter (squeue)", None)
         .opt("limit", "row limit (squeue)", None)
-        .opt("timeout", "wall timeout in seconds (wait)", Some("30"))
-        .positional("arg", "job id(s) for scancel / sjob / wait; manifest file (msubmit, - = stdin)");
+        .opt("timeout", "wall timeout in seconds (wait, resume)", Some("30"))
+        .opt("manifest", "manifest id to resume (alternative to a tag)", None)
+        .opt("retries", "connection attempts before giving up (resume)", Some("5"))
+        .opt("retry-base-ms", "backoff base delay in milliseconds (resume)", Some("100"))
+        .positional("arg", "job id(s) for scancel / sjob / wait; manifest file (msubmit, - = stdin); tag (resume)");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(e) => return handle_help(&cmd, e),
     };
     let addr = parsed.get("addr").unwrap();
-    let mut client = match Client::connect_v2(addr) {
+    // `resume` exists to re-attach to a daemon that just crashed — give it
+    // retry/backoff while the daemon restarts and replays its journal.
+    // Every other command fails fast.
+    let policy = if subcmd == "resume" {
+        let (Ok(attempts), Ok(base_ms)) = (
+            parsed.value::<u32>("retries"),
+            parsed.value::<u64>("retry-base-ms"),
+        ) else {
+            eprintln!("bad numeric option");
+            return 2;
+        };
+        RetryPolicy {
+            attempts,
+            base_delay: Duration::from_millis(base_ms),
+            ..RetryPolicy::default()
+        }
+    } else {
+        RetryPolicy::once()
+    };
+    let mut client = match Client::connect_v2_retry(addr, &policy) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("cannot reach daemon at {addr}: {e:#}");
@@ -401,6 +474,31 @@ fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
                 return 2;
             }
         },
+        "resume" => {
+            let timeout: f64 = match parsed.value("timeout") {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let manifest_id = match parsed.value_opt::<u64>("manifest") {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let info = match (manifest_id, parsed.positionals.first()) {
+                (Some(id), None) => client.resume_by_manifest(id),
+                (None, Some(tag)) => client.resume_by_tag(tag),
+                _ => {
+                    eprintln!("resume needs exactly one of <tag> or --manifest <id>");
+                    return 2;
+                }
+            };
+            info.and_then(|info| run_resume(&mut client, &info, timeout))
+        }
         other => {
             eprintln!("unknown client command {other:?}");
             return 2;
@@ -418,8 +516,40 @@ fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
     }
 }
 
+/// Render a resume and wait out the not-yet-settled entries: the crash/
+/// reconnect workflow end to end — re-attach, see what survived, block on
+/// the rest.
+fn run_resume(client: &mut Client, info: &ResumeInfo, timeout: f64) -> Result<String, ClientError> {
+    let mut out = info.to_string();
+    for e in &info.entries {
+        out.push_str(&format!(
+            "\n  entry {}: jobs {}-{} settled {}/{}{}",
+            e.index,
+            e.first,
+            e.first + e.count.saturating_sub(1),
+            e.settled,
+            e.count,
+            e.tag
+                .as_deref()
+                .map(|t| format!(" tag={t}"))
+                .unwrap_or_default(),
+        ));
+    }
+    let pending: Vec<u32> = info.pending_entries().map(|e| e.index).collect();
+    for idx in pending {
+        let w = client.wait_entry(info.manifest, idx, timeout)?;
+        out.push_str(&format!("\n  entry {idx}: {w}"));
+    }
+    Ok(out)
+}
+
 fn render_manifest_ack(ack: ManifestAck) -> String {
     let mut out = format!("manifest {ack}");
+    if let Some(id) = ack.manifest {
+        out.push_str(&format!(
+            " [id {id} — re-attach with `spotcloud resume --manifest {id}`]"
+        ));
+    }
     for acc in &ack.accepted {
         out.push_str(&format!(
             "\n  entry {}: accepted, jobs {}-{} ({} job{})",

@@ -28,6 +28,34 @@ pub enum LogKind {
     CronPreempted,
 }
 
+impl LogKind {
+    /// Stable on-disk code for the durability journal's checkpoint records.
+    /// These are persisted: never renumber an existing kind, only append.
+    pub fn wire_code(self) -> u8 {
+        match self {
+            LogKind::Recognized => 0,
+            LogKind::DispatchDone => 1,
+            LogKind::Preempted => 2,
+            LogKind::Requeued => 3,
+            LogKind::Ended => 4,
+            LogKind::CronPreempted => 5,
+        }
+    }
+
+    /// Inverse of [`LogKind::wire_code`].
+    pub fn from_wire_code(code: u8) -> Option<Self> {
+        Some(match code {
+            0 => LogKind::Recognized,
+            1 => LogKind::DispatchDone,
+            2 => LogKind::Preempted,
+            3 => LogKind::Requeued,
+            4 => LogKind::Ended,
+            5 => LogKind::CronPreempted,
+            _ => return None,
+        })
+    }
+}
+
 /// One log entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LogEntry {
@@ -322,5 +350,15 @@ mod tests {
         assert_eq!(log.count(LogKind::Preempted), 2);
         assert_eq!(log.count(LogKind::Requeued), 1);
         assert_eq!(log.count(LogKind::Ended), 0);
+    }
+
+    #[test]
+    fn wire_codes_roundtrip_and_are_dense() {
+        for (i, kind) in ALL_KINDS.into_iter().enumerate() {
+            let code = kind.wire_code();
+            assert_eq!(code as usize, i, "codes are dense and stable");
+            assert_eq!(LogKind::from_wire_code(code), Some(kind));
+        }
+        assert_eq!(LogKind::from_wire_code(ALL_KINDS.len() as u8), None);
     }
 }

@@ -429,6 +429,42 @@ impl Scheduler {
             .collect()
     }
 
+    /// Force the id counter forward (never backwards) — crash recovery
+    /// uses this to cover ids a checkpoint proves were assigned even when
+    /// no live job or tail record reproduces them (retired jobs).
+    pub fn force_next_id(&mut self, next: u64) {
+        self.version += 1;
+        self.next_id = self.next_id.max(next);
+    }
+
+    /// Re-insert a checkpointed job during crash recovery. The job comes
+    /// back Pending with its *original* submit/queue time (so its age
+    /// priority is preserved) and requeue count, its pre-crash event-log
+    /// entries are restored (so `SJOB` still reports its history), and an
+    /// arrival event is queued at `arrive_at` — the caller then runs the
+    /// clock forward and the normal admission path re-recognizes and
+    /// re-dispatches it, exactly like a preempted-and-requeued job.
+    pub fn restore_job(
+        &mut self,
+        id: JobId,
+        spec: JobSpec,
+        submit_time: SimTime,
+        requeue_count: u32,
+        log_entries: &[(SimTime, LogKind)],
+        arrive_at: SimTime,
+    ) {
+        debug_assert!(!self.jobs.contains_key(&id), "restore of a live id");
+        self.version += 1;
+        self.next_id = self.next_id.max(id.0 + 1);
+        let mut job = Job::new(id, spec, submit_time);
+        job.requeue_count = requeue_count;
+        self.jobs.insert(id, job);
+        for &(t, kind) in log_entries {
+            self.log.push(t, id, kind);
+        }
+        self.events.push(arrive_at.max(self.clock), Event::JobArrival(id));
+    }
+
     // ---- event loop --------------------------------------------------------
 
     /// Process events up to and including `until`, then advance the clock to

@@ -1,0 +1,68 @@
+//! Crash-injection harness for the durability subsystem.
+//!
+//! Real kill-the-process tests are slow and nondeterministic; instead the
+//! journal exposes one-shot [`FaultPoint`] arms
+//! ([`crate::coordinator::FaultPlan`]) that fail the operation *and* leave
+//! the on-disk state exactly as a crash at that point would (the pre-fsync
+//! point truncates unsynced bytes, the mid-checkpoint point leaves a torn
+//! new segment next to the intact old ones). A test then simply drops the
+//! "crashed" daemon and calls `Daemon::recover` on the same directory —
+//! same coverage, milliseconds per case.
+
+use crate::coordinator::{DurabilityConfig, FaultPoint, FsyncPolicy};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A process-unique temporary directory, removed on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl TempDir {
+    /// Create `<tmp>/<prefix>-<pid>-<seq>` (fresh and empty).
+    pub fn new(prefix: &str) -> TempDir {
+        let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "{prefix}-{}-{seq}",
+            std::process::id()
+        ));
+        // A stale run's leftovers must not leak into this test.
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A path inside the directory.
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// A durability config whose fault plan has `point` armed — the next time
+/// the journal reaches that point it "crashes" (fails and poisons). Uses
+/// `fsync` so each fault point can pick the policy that makes its
+/// semantics exact (`AfterAppend` wants `Always` so the durable/lost
+/// boundary is the previous record).
+pub fn faulty_durability(
+    dir: impl Into<PathBuf>,
+    fsync: FsyncPolicy,
+    point: FaultPoint,
+) -> DurabilityConfig {
+    let cfg = DurabilityConfig::new(dir).with_fsync(fsync);
+    cfg.faults.arm(point);
+    cfg
+}

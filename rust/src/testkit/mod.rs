@@ -1,7 +1,10 @@
-//! Testing substrates: a minimal property-based testing harness.
+//! Testing substrates: a minimal property-based testing harness and the
+//! durability crash-injection helpers.
 //!
 //! `proptest` is unavailable offline, so [`prop`] provides the subset the
 //! invariant tests need: seeded generators, a configurable case count, and
-//! greedy input shrinking on failure.
+//! greedy input shrinking on failure. [`crash`] provides temp-dir plumbing
+//! and fault-armed durability configs for the kill-and-recover tests.
 
+pub mod crash;
 pub mod prop;

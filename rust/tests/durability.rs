@@ -1,0 +1,246 @@
+//! Durability end to end: the crash-point matrix over the fault-injection
+//! harness, torn-tail healing, and the kill → recover → `RESUME` workflow
+//! over real TCP.
+//!
+//! The contract under test (see PROTOCOL.md §Durability):
+//!
+//! * **No acked loss** — a submission the client saw an `OK` for exists
+//!   after recovery, whatever the crash point.
+//! * **No unacked resurrection under `fsync=always`** — a submission that
+//!   failed before its record was durable is *gone* after recovery.
+//! * **At-least-once edge** — a crash after the fsync but before the ack
+//!   resurrects work the client never saw acked; `RESUME` is the
+//!   idempotency tool.
+//! * A torn final record (crash mid-write) truncates; it is never fatal.
+
+use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::coordinator::{
+    Client, Daemon, DaemonConfig, DurabilityConfig, ErrorCode, FaultPoint, FsyncPolicy,
+    ManifestBuilder, Request, Response, RetryPolicy, Server, SqueueFilter, SubmitSpec,
+};
+use spotcloud::job::{JobType, QosClass};
+use spotcloud::sched::SchedulerConfig;
+use spotcloud::sim::SchedCosts;
+use spotcloud::testkit::crash::TempDir;
+use std::sync::Arc;
+
+fn sched_cfg() -> SchedulerConfig {
+    SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+}
+
+/// A journaling daemon whose virtual clock is frozen (`speedup: 0`):
+/// admitted jobs stay pending forever, so "what survived the crash" is
+/// exactly "what was admitted".
+fn frozen_cfg(dcfg: DurabilityConfig) -> DaemonConfig {
+    DaemonConfig {
+        speedup: 0.0,
+        pacer_tick_ms: 1,
+        durability: Some(dcfg),
+        ..DaemonConfig::default()
+    }
+}
+
+/// Submit one spot array job; `Ok(first_id)` on ack, `Err(code)` on a
+/// typed refusal.
+fn submit_spot(d: &Daemon, tasks: u32) -> Result<u64, ErrorCode> {
+    match d.handle(Request::Submit(SubmitSpec::new(
+        QosClass::Spot,
+        JobType::Array,
+        tasks,
+        9,
+    ))) {
+        Response::SubmitAck(a) => Ok(a.first),
+        Response::Error(e) => Err(e.code),
+        other => panic!("{other:?}"),
+    }
+}
+
+fn job_count(d: &Daemon) -> usize {
+    match d.handle(Request::Squeue(SqueueFilter::default())) {
+        Response::Jobs(rows) => rows.len(),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn crash_before_fsync_loses_only_the_unacked_submission() {
+    let tmp = TempDir::new("spotcloud-dur-afterappend");
+    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+    let faults = dcfg.faults.clone();
+    let cfg = frozen_cfg(dcfg);
+    let acked;
+    {
+        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+        acked = submit_spot(&d, 8).expect("pre-crash submission acks");
+        // Crash after the record is written but before the fsync: the
+        // record is lost AND the client was never acked.
+        faults.arm(FaultPoint::AfterAppend);
+        let err = submit_spot(&d, 16).expect_err("faulted submission must not ack");
+        assert_eq!(err, ErrorCode::Internal);
+        d.shutdown();
+    }
+    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+    // Exactly the acked admission replays — nothing resurrected.
+    assert_eq!(report.admits_replayed, 1, "{report}");
+    assert_eq!(job_count(&d), 1);
+    match d.handle(Request::Sjob(acked)) {
+        Response::Job(_) => {}
+        other => panic!("acked job lost across recovery: {other:?}"),
+    }
+}
+
+#[test]
+fn crash_after_fsync_resurrects_the_durable_unacked_submission() {
+    let tmp = TempDir::new("spotcloud-dur-afterfsync");
+    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+    let faults = dcfg.faults.clone();
+    let cfg = frozen_cfg(dcfg);
+    {
+        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+        submit_spot(&d, 8).expect("pre-crash submission acks");
+        // Crash after the record is durable but before the ack: the
+        // documented at-least-once edge.
+        faults.arm(FaultPoint::AfterFsync);
+        let err = submit_spot(&d, 16).expect_err("the crash swallowed the ack");
+        assert_eq!(err, ErrorCode::Internal);
+        d.shutdown();
+    }
+    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+    // Both records were durable, so both replay — the unacked one
+    // resurrects (clients dedupe via RESUME, not via the journal).
+    assert_eq!(report.admits_replayed, 2, "{report}");
+    assert_eq!(job_count(&d), 2);
+}
+
+#[test]
+fn crash_mid_checkpoint_falls_back_to_the_previous_segments() {
+    let tmp = TempDir::new("spotcloud-dur-midckpt");
+    let dcfg = DurabilityConfig::new(tmp.path())
+        .with_fsync(FsyncPolicy::Always)
+        .with_checkpoint_every(2);
+    let faults = dcfg.faults.clone();
+    let cfg = frozen_cfg(dcfg);
+    let (a, b);
+    {
+        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+        a = submit_spot(&d, 8).expect("first ack");
+        // The second admission trips the checkpoint stride; the rotation
+        // tears mid-write. The admission itself was already durable and
+        // acked in the old segment.
+        faults.arm(FaultPoint::MidCheckpoint);
+        b = submit_spot(&d, 16).expect("second ack (checkpoint failure is not an admission failure)");
+        // The poisoned journal degrades the daemon to read-only.
+        assert_eq!(submit_spot(&d, 4), Err(ErrorCode::Internal));
+        d.shutdown();
+    }
+    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+    assert!(
+        report.segments_discarded >= 1,
+        "the torn rotation segment must be discarded: {report}"
+    );
+    assert_eq!(report.admits_replayed, 2, "{report}");
+    assert_eq!(job_count(&d), 2);
+    for id in [a, b] {
+        match d.handle(Request::Sjob(id)) {
+            Response::Job(_) => {}
+            other => panic!("acked job {id} lost across recovery: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn torn_final_record_is_truncated_not_fatal() {
+    let tmp = TempDir::new("spotcloud-dur-torn");
+    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+    let cfg = frozen_cfg(dcfg);
+    let acked;
+    {
+        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+        acked = submit_spot(&d, 8).expect("pre-crash submission acks");
+        d.shutdown();
+    }
+    // A crash mid-write leaves a partial frame at the tail of the newest
+    // segment; emulate it with garbage too short to even hold a header.
+    let newest = std::fs::read_dir(tmp.path())
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "wal"))
+        .max()
+        .expect("journal segment exists");
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().append(true).open(&newest).unwrap();
+    f.write_all(&[0xFF; 7]).unwrap();
+    drop(f);
+    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+    assert_eq!(report.torn_bytes, 7, "{report}");
+    match d.handle(Request::Sjob(acked)) {
+        Response::Job(_) => {}
+        other => panic!("acked job lost to a torn tail: {other:?}"),
+    }
+}
+
+#[test]
+fn tcp_kill_recover_resume_collects_exactly_the_unsettled_entries() {
+    // The acceptance workflow end to end: a client submits a tagged
+    // manifest, the daemon "crashes" before anything dispatches, a new
+    // daemon recovers from the journal, and the client re-attaches with
+    // retry/backoff + RESUME, waiting out exactly the entries that had not
+    // settled.
+    let tmp = TempDir::new("spotcloud-dur-tcp");
+    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+    let cfg = frozen_cfg(dcfg); // frozen: nothing settles pre-crash
+    let (manifest_id, acked_spans);
+    {
+        let daemon = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+        let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.serve());
+        let mut c = Client::connect_v2(&addr).unwrap();
+        let m = ManifestBuilder::new()
+            .interactive(1, JobType::TripleMode, 608)
+            .last(|e| e.with_tag("nightly"))
+            .interactive(2, JobType::TripleMode, 608)
+            .build();
+        let ack = c.msubmit(&m).unwrap();
+        manifest_id = ack.manifest.expect("a journaling daemon assigns manifest ids");
+        acked_spans = ack.accepted.clone();
+        daemon.shutdown(); // kill: no drain, no goodbye
+        handle.join().unwrap();
+    }
+    // Recover on the same journal — this time with a live clock.
+    let cfg = DaemonConfig {
+        speedup: 10_000.0,
+        ..cfg
+    };
+    let (daemon, report) =
+        Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+    assert_eq!(report.manifests_restored, 1, "{report}");
+    daemon.spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve());
+    // The resuming client reconnects with backoff, then re-attaches by tag.
+    let mut c = Client::connect_v2_retry(&addr, &RetryPolicy::default()).unwrap();
+    let info = c.resume_by_tag("nightly").unwrap();
+    assert_eq!(info.manifest, manifest_id);
+    assert_eq!(info.entries.len(), acked_spans.len());
+    for (entry, acked) in info.entries.iter().zip(&acked_spans) {
+        assert_eq!(entry.index, acked.index);
+        assert_eq!(entry.first, acked.first, "replay reassigned an acked id");
+        assert_eq!(entry.count, acked.count);
+    }
+    // Nothing settled pre-crash, so every entry is pending; wait each out
+    // through the per-entry form (no job ids needed client-side).
+    let pending: Vec<u32> = info.pending_entries().map(|e| e.index).collect();
+    assert_eq!(pending.len(), info.entries.len());
+    for idx in pending {
+        let w = c.wait_entry(info.manifest, idx, 30.0).unwrap();
+        assert!(!w.timed_out, "entry {idx} never dispatched after recovery");
+        assert_eq!(w.dispatched, 1);
+    }
+    // Exactly-once collection: a second resume has nothing left pending.
+    let again = c.resume_by_manifest(manifest_id).unwrap();
+    assert_eq!(again.pending_entries().count(), 0);
+    daemon.shutdown();
+    handle.join().unwrap();
+}
