@@ -49,6 +49,9 @@ pub struct ConnScalingConfig {
     pub workers: usize,
     /// Virtual seconds per wall second for the daemon under test.
     pub speedup: f64,
+    /// Reactor shards (`SO_REUSEPORT` listeners). 1 preserves the classic
+    /// single-reactor run; the `shards` bench sweeps {1, 2, 4}.
+    pub shards: usize,
 }
 
 impl Default for ConnScalingConfig {
@@ -60,6 +63,7 @@ impl Default for ConnScalingConfig {
             idle_window: Duration::from_millis(500),
             workers: 4,
             speedup: 2_000.0,
+            shards: 1,
         }
     }
 }
@@ -74,6 +78,7 @@ impl ConnScalingConfig {
             idle_window: Duration::from_millis(150),
             workers: 2,
             speedup: 5_000.0,
+            shards: 1,
         }
     }
 }
@@ -96,8 +101,8 @@ pub struct LevelReport {
     pub requests: u64,
     /// p99 of the server's accept-to-first-byte histogram at this level.
     pub accept_p99_ns: u64,
-    /// Reactor threads that served this level's daemon (measured; the
-    /// single-thread invariant means exactly 1).
+    /// Reactor threads that served this level's daemon (measured; equals
+    /// the configured shard count — exactly 1 in the classic run).
     pub reactor_threads: u64,
     /// Requests that failed (transport or unexpected response) — 0 in a
     /// healthy run.
@@ -111,10 +116,12 @@ pub struct ConnScalingReport {
     pub levels: Vec<LevelReport>,
     /// Most reactor threads any level's daemon ever started — **measured**
     /// via `DaemonMetrics::reactor_threads_started`, so the CI assertion
-    /// that one thread multiplexes all connections can actually fail.
+    /// that `shards` threads multiplex all connections can actually fail.
     pub reactor_threads: u64,
     /// Request-handling pool size used.
     pub workers: usize,
+    /// Reactor shards configured.
+    pub shards: usize,
 }
 
 impl ConnScalingReport {
@@ -132,6 +139,7 @@ impl ConnScalingReport {
         let mut out = String::from("{\n  \"bench\": \"connection_scaling\",\n");
         out.push_str(&format!("  \"reactor_threads\": {},\n", self.reactor_threads));
         out.push_str(&format!("  \"workers\": {},\n", self.workers));
+        out.push_str(&format!("  \"shards\": {},\n", self.shards));
         out.push_str(&format!("  \"p99_ratio\": {:.3},\n", self.p99_ratio()));
         out.push_str("  \"levels\": [\n");
         for (i, l) in self.levels.iter().enumerate() {
@@ -186,6 +194,7 @@ pub fn run_connection_scaling(cfg: &ConnScalingConfig) -> ConnScalingReport {
         levels,
         reactor_threads,
         workers: cfg.workers,
+        shards: cfg.shards.max(1),
     }
 }
 
@@ -200,7 +209,7 @@ fn run_level(idle_target: usize, cfg: &ConnScalingConfig) -> LevelReport {
         },
     );
     let pacer = daemon.spawn_pacer();
-    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", cfg.workers)
+    let server = Server::bind_sharded(Arc::clone(&daemon), "127.0.0.1:0", cfg.workers, cfg.shards)
         .expect("bind")
         // Idle conns must outlive the whole level.
         .with_idle_timeout(Duration::from_secs(600));

@@ -13,6 +13,9 @@ pub mod coordinator;
 pub mod journal_scaling;
 pub mod manifest_scaling;
 pub mod sched_scaling;
+/// Linux-only, like the sharded reactor front door it measures.
+#[cfg(target_os = "linux")]
+pub mod shard_scaling;
 
 use crate::metrics::stats::Summary;
 use crate::util::fmt::{fmt_seconds, Table};

@@ -1,0 +1,396 @@
+//! Shard-scaling scenario: the tentpole bench for the sharded front door
+//! and the partition-sharded scheduler back end.
+//!
+//! For each shard count in the sweep (default {1, 2, 4}) the scenario
+//! boots a fresh daemon with `shard_count` scheduler shards behind
+//! [`Server::bind_sharded`]'s `SO_REUSEPORT` reactor shards, then:
+//!
+//! 1. establishes a large **idle** population (default 50k connections,
+//!    fd-limit permitting) and proves **zero-poll per shard**: every
+//!    reactor shard's wakeup counter must stay flat over a quiet window —
+//!    sharding must not introduce cross-shard chatter for idle sockets;
+//! 2. drives a **submit storm**: submitter threads split half `normal`
+//!    (interactive partition → sched shard 0) and half `spot` (spot
+//!    partition → sched shard 1), so on a sharded daemon the two groups
+//!    contend on disjoint scheduler mutexes and disjoint snapshot slots.
+//!
+//! No pacer runs: the virtual clock stays frozen, so the measured wall
+//! time is pure submission-path work (admission, queue insert, EASY
+//! shadow, snapshot publish) rather than simulation progress.
+//!
+//! The `shards` bench binary emits `BENCH_shards.json` and gates:
+//! 2-shard submit throughput ≥ 1.6× the 1-shard figure, 2-shard p99 no
+//! worse than single-shard (with a small noise allowance), zero request
+//! errors, and a flat idle wakeup counter on every shard. Linux-only,
+//! like the reactor itself.
+
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::{Client, Daemon, DaemonConfig, Server, SubmitSpec};
+use crate::job::{JobType, QosClass};
+use crate::metrics::LogHistogram;
+use crate::sched::SchedulerConfig;
+use crate::sim::SchedCosts;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shape of one shard-scaling run.
+#[derive(Debug, Clone)]
+pub struct ShardScalingConfig {
+    /// Shard counts to sweep, ascending; each level gets that many reactor
+    /// shards and asks for that many scheduler shards (the scheduler clamps
+    /// to the partition count — 2 under the Dual layout).
+    pub shard_counts: Vec<usize>,
+    /// Idle connections to establish per level before the storm.
+    pub idle_conns: usize,
+    /// Submitter threads, split evenly between `normal` and `spot` QoS so
+    /// a sharded back end sees both scheduler shards loaded.
+    pub submitters: usize,
+    /// Submissions each submitter issues.
+    pub submits_per_thread: usize,
+    /// Quiet window over which every shard's wakeup counter must stay flat.
+    pub idle_window: Duration,
+    /// Request-handling worker pool size.
+    pub workers: usize,
+}
+
+impl Default for ShardScalingConfig {
+    fn default() -> Self {
+        Self {
+            shard_counts: vec![1, 2, 4],
+            idle_conns: 50_000,
+            submitters: 8,
+            submits_per_thread: 2_000,
+            idle_window: Duration::from_millis(500),
+            workers: 8,
+        }
+    }
+}
+
+impl ShardScalingConfig {
+    /// Sub-second smoke configuration (unit tests, `SPOTCLOUD_BENCH_FAST`).
+    pub fn quick() -> Self {
+        Self {
+            shard_counts: vec![1, 2],
+            idle_conns: 48,
+            submitters: 4,
+            submits_per_thread: 60,
+            idle_window: Duration::from_millis(120),
+            workers: 4,
+        }
+    }
+}
+
+/// What one shard-count level measured.
+#[derive(Debug, Clone)]
+pub struct ShardLevelReport {
+    /// Shard count this level configured (reactor and requested sched).
+    pub shards: usize,
+    /// Reactor shards the server actually ran.
+    pub reactor_shards: usize,
+    /// Scheduler shards the daemon actually ran (clamped to partitions).
+    pub sched_shards: usize,
+    /// Idle connections requested.
+    pub idle_target: usize,
+    /// Idle connections actually established (short of target only when
+    /// the host's fd limit intervened — reported, and the gate notes it).
+    pub idle_achieved: usize,
+    /// Worst per-shard wakeup count over the quiet window (zero-poll: ~0
+    /// on every shard, so the max is the gate).
+    pub idle_wakeups_max_per_shard: u64,
+    /// Per-submit wall latency of the storm (ns).
+    pub submit_wall: LogHistogram,
+    /// Storm wall time (seconds).
+    pub storm_secs: f64,
+    /// Submissions acknowledged.
+    pub submits: u64,
+    /// Submissions that failed — 0 in a healthy run.
+    pub errors: u64,
+}
+
+impl ShardLevelReport {
+    /// Acknowledged submissions per wall second.
+    pub fn throughput(&self) -> f64 {
+        self.submits as f64 / self.storm_secs.max(1e-9)
+    }
+}
+
+/// The whole sweep: one [`ShardLevelReport`] per shard count.
+#[derive(Debug, Clone)]
+pub struct ShardScalingReport {
+    /// Per-level results, in `shard_counts` order.
+    pub levels: Vec<ShardLevelReport>,
+}
+
+impl ShardScalingReport {
+    fn level(&self, shards: usize) -> Option<&ShardLevelReport> {
+        self.levels.iter().find(|l| l.shards == shards)
+    }
+
+    /// 2-shard submit throughput over 1-shard — the ≥ 1.6× CI gate. `NaN`
+    /// when the sweep lacks either level.
+    pub fn throughput_ratio_1_to_2(&self) -> f64 {
+        match (self.level(1), self.level(2)) {
+            (Some(one), Some(two)) => two.throughput() / one.throughput().max(1e-9),
+            _ => f64::NAN,
+        }
+    }
+
+    /// 2-shard submit p99 over 1-shard — the "p99 no worse" CI gate. `NaN`
+    /// when the sweep lacks either level.
+    pub fn p99_ratio_1_to_2(&self) -> f64 {
+        match (self.level(1), self.level(2)) {
+            (Some(one), Some(two)) => {
+                two.submit_wall.p99().max(1) as f64 / one.submit_wall.p99().max(1) as f64
+            }
+            _ => f64::NAN,
+        }
+    }
+
+    /// The machine-readable record CI uploads (`BENCH_shards.json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"bench\": \"shards\",\n");
+        let _ = write!(
+            out,
+            "  \"throughput_ratio_1_to_2\": {:.3},\n  \"p99_ratio_1_to_2\": {:.3},\n",
+            self.throughput_ratio_1_to_2(),
+            self.p99_ratio_1_to_2(),
+        );
+        out.push_str("  \"levels\": [\n");
+        for (i, l) in self.levels.iter().enumerate() {
+            let _ = write!(
+                out,
+                concat!(
+                    "    {{\"shards\": {}, \"reactor_shards\": {}, \"sched_shards\": {}, ",
+                    "\"idle_conns\": {}, \"idle_achieved\": {}, ",
+                    "\"idle_wakeups_max_per_shard\": {}, ",
+                    "\"submit_p50_ns\": {}, \"submit_p99_ns\": {}, ",
+                    "\"submits_per_sec\": {:.1}, \"errors\": {}}}{}\n",
+                ),
+                l.shards,
+                l.reactor_shards,
+                l.sched_shards,
+                l.idle_target,
+                l.idle_achieved,
+                l.idle_wakeups_max_per_shard,
+                l.submit_wall.p50(),
+                l.submit_wall.p99(),
+                l.throughput(),
+                l.errors,
+                if i + 1 == self.levels.len() { "" } else { "," },
+            );
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let per_level: Vec<String> = self
+            .levels
+            .iter()
+            .map(|l| {
+                format!(
+                    "{}sh: {:.0}/s p99={}ns idle_wake={} errs={}",
+                    l.shards,
+                    l.throughput(),
+                    l.submit_wall.p99(),
+                    l.idle_wakeups_max_per_shard,
+                    l.errors
+                )
+            })
+            .collect();
+        format!(
+            "shards: x2_throughput={:.2} x2_p99={:.2} [{}]",
+            self.throughput_ratio_1_to_2(),
+            self.p99_ratio_1_to_2(),
+            per_level.join(" | ")
+        )
+    }
+}
+
+/// Run the sweep: one fresh daemon + sharded server per shard count.
+pub fn run_shard_scaling(cfg: &ShardScalingConfig) -> ShardScalingReport {
+    let levels = cfg.shard_counts.iter().map(|&n| run_level(n, cfg)).collect();
+    ShardScalingReport { levels }
+}
+
+fn run_level(shards: usize, cfg: &ShardScalingConfig) -> ShardLevelReport {
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+            // The storm parks far more jobs per user than the interactive
+            // default admits; per-user fairness is not under test here.
+            .with_user_limit(1_000_000),
+        DaemonConfig {
+            shard_count: shards,
+            ..DaemonConfig::default()
+        },
+    );
+    // Deliberately no pacer: a frozen virtual clock keeps the measurement
+    // pure submission-path work, with no dispatch churn stealing cycles.
+    let sched_shards = daemon.shard_count();
+    let server = Server::bind_sharded(Arc::clone(&daemon), "127.0.0.1:0", cfg.workers, shards)
+        .expect("bind")
+        // Idle conns must outlive the whole level.
+        .with_idle_timeout(Duration::from_secs(600));
+    let reactor_shards = server.reactor_shards();
+    let addr = server.local_addr().expect("addr").to_string();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    // Establish the idle population: one PING each proves the connection
+    // is registered and served, then it goes silent. SO_REUSEPORT spreads
+    // them across shards kernel-side.
+    let mut idle: Vec<Client> = Vec::with_capacity(cfg.idle_conns);
+    for _ in 0..cfg.idle_conns {
+        match Client::connect(&addr) {
+            Ok(mut c) => match c.ping() {
+                Ok(()) => idle.push(c),
+                Err(e) => {
+                    eprintln!("idle ping failed at {}: {e}", idle.len());
+                    break;
+                }
+            },
+            Err(e) => {
+                // Most likely the fd limit; measure what we got.
+                eprintln!("idle connect failed at {} (fd limit?): {e}", idle.len());
+                break;
+            }
+        }
+    }
+    let idle_achieved = idle.len();
+
+    // Quiet window: no shard's wakeup counter may move for idle sockets.
+    std::thread::sleep(Duration::from_millis(100)); // let completions drain
+    let shard_metrics = daemon.metrics.reactor_shards();
+    let w0: Vec<u64> = shard_metrics
+        .iter()
+        .map(|s| s.wakeups.load(Ordering::Relaxed))
+        .collect();
+    std::thread::sleep(cfg.idle_window);
+    let idle_wakeups_max_per_shard = shard_metrics
+        .iter()
+        .zip(&w0)
+        .map(|(s, &before)| s.wakeups.load(Ordering::Relaxed) - before)
+        .max()
+        .unwrap_or(0);
+
+    // Submit storm: even threads hit the interactive partition (normal
+    // QoS), odd threads the spot partition, so a sharded scheduler takes
+    // the two halves on disjoint mutexes.
+    let wall = Arc::new(Mutex::new(LogHistogram::new()));
+    let errors = Arc::new(AtomicU64::new(0));
+    let submits = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..cfg.submitters.max(1))
+        .map(|t| {
+            let addr = addr.clone();
+            let wall = Arc::clone(&wall);
+            let errors = Arc::clone(&errors);
+            let submits = Arc::clone(&submits);
+            let reqs = cfg.submits_per_thread;
+            std::thread::spawn(move || {
+                let mut c = match Client::connect_v2(&addr) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("submitter {t} failed to connect: {e}");
+                        errors.fetch_add(reqs as u64, Ordering::Relaxed);
+                        return;
+                    }
+                };
+                let qos = if t % 2 == 0 { QosClass::Normal } else { QosClass::Spot };
+                // Distinct users per thread keep per-user accounting off
+                // the contended path without sharing a counter.
+                let user = 1_000 + t as u32;
+                let mut local = LogHistogram::new();
+                for _ in 0..reqs {
+                    let spec =
+                        SubmitSpec::new(qos, JobType::Individual, 1, user).with_run_secs(30.0);
+                    let t1 = Instant::now();
+                    let ok = c.submit(&spec).is_ok();
+                    local.record(t1.elapsed().as_nanos() as u64);
+                    if ok {
+                        submits.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                wall.lock().expect("bench hist").merge(&local);
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("submitter panicked");
+    }
+    let storm_secs = t0.elapsed().as_secs_f64();
+
+    daemon.shutdown();
+    server_thread.join().expect("server thread");
+    drop(idle);
+
+    let submit_wall = wall.lock().expect("bench hist").clone();
+    let level = ShardLevelReport {
+        shards,
+        reactor_shards,
+        sched_shards,
+        idle_target: cfg.idle_conns,
+        idle_achieved,
+        idle_wakeups_max_per_shard,
+        submit_wall,
+        storm_secs,
+        submits: submits.load(Ordering::Relaxed),
+        errors: errors.load(Ordering::Relaxed),
+    };
+    eprintln!(
+        "  {} shard(s) ({} reactor / {} sched): {:.0} submits/s, p99={}ns, \
+         idle {}/{} max_wakeups={}",
+        level.shards,
+        level.reactor_shards,
+        level.sched_shards,
+        level.throughput(),
+        level.submit_wall.p99(),
+        level.idle_achieved,
+        level.idle_target,
+        level.idle_wakeups_max_per_shard,
+    );
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_shard_scaling_runs_and_reports() {
+        let r = run_shard_scaling(&ShardScalingConfig::quick());
+        assert_eq!(r.levels.len(), 2);
+        for l in &r.levels {
+            assert_eq!(l.idle_achieved, l.idle_target, "{l:?}");
+            assert_eq!(l.errors, 0, "{l:?}");
+            assert!(l.submits > 0, "{l:?}");
+            assert_eq!(l.reactor_shards, l.shards, "{l:?}");
+            // Zero-poll holds per shard (tiny slack for a straggling
+            // completion event).
+            assert!(
+                l.idle_wakeups_max_per_shard <= 2,
+                "idle connections woke a shard: {l:?}"
+            );
+        }
+        // Dual layout: asking for 2 scheduler shards must yield 2.
+        assert_eq!(r.level(2).unwrap().sched_shards, 2);
+        assert_eq!(r.level(1).unwrap().sched_shards, 1);
+        assert!(r.throughput_ratio_1_to_2().is_finite());
+        let json = r.to_json();
+        for key in [
+            "\"throughput_ratio_1_to_2\"",
+            "\"p99_ratio_1_to_2\"",
+            "\"idle_wakeups_max_per_shard\"",
+            "\"submit_p99_ns\"",
+            "\"sched_shards\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(r.summary().contains("shards:"));
+    }
+}

@@ -26,14 +26,19 @@ pub enum ProtocolVersion {
     V1,
     /// Tagged `key=value` records with typed, self-describing responses.
     V2,
+    /// V2 plus the streaming `MSUBMIT` body: a manifest may arrive as
+    /// `entries=<n> part=<i>/<k>` continuation records, lifting the
+    /// single-line entry cap. Responses render exactly as v2.
+    V21,
 }
 
 impl ProtocolVersion {
-    /// Wire token ("v1" / "v2").
+    /// Wire token ("v1" / "v2" / "v2.1").
     pub fn as_str(self) -> &'static str {
         match self {
             ProtocolVersion::V1 => "v1",
             ProtocolVersion::V2 => "v2",
+            ProtocolVersion::V21 => "v2.1",
         }
     }
 
@@ -42,8 +47,20 @@ impl ProtocolVersion {
         match s.to_ascii_lowercase().as_str() {
             "v1" | "1" => Some(ProtocolVersion::V1),
             "v2" | "2" => Some(ProtocolVersion::V2),
+            "v2.1" | "2.1" => Some(ProtocolVersion::V21),
             _ => None,
         }
+    }
+
+    /// Does this version speak the v2 record grammar? (v2.1 renders and
+    /// parses exactly as v2; it only adds the chunked `MSUBMIT` body.)
+    pub fn is_v2(self) -> bool {
+        matches!(self, ProtocolVersion::V2 | ProtocolVersion::V21)
+    }
+
+    /// May `MSUBMIT` arrive chunked on this connection?
+    pub fn chunked_msubmit(self) -> bool {
+        matches!(self, ProtocolVersion::V21)
     }
 }
 
@@ -239,6 +256,12 @@ pub enum Request {
     /// Submit a heterogeneous manifest: per-entry specs, one RPC, one
     /// scheduler lock, partial-accept semantics (v2 only on the wire).
     MSubmit(Manifest),
+    /// One part of a streaming (chunked) manifest body — v2.1 only. The
+    /// transport assembles consecutive parts into one [`Manifest`] and
+    /// admits it through the normal `MSUBMIT` path when the final part
+    /// lands; intermediate parts are acknowledged with
+    /// [`Response::ChunkAck`].
+    MSubmitChunk(super::manifest::ManifestChunk),
     /// List jobs, optionally filtered.
     Squeue(SqueueFilter),
     /// Detail query for one job.
@@ -302,6 +325,7 @@ impl Request {
             Request::Hello(_) => "HELLO",
             Request::Submit(_) => "SUBMIT",
             Request::MSubmit(_) => "MSUBMIT",
+            Request::MSubmitChunk(_) => "MSUBMIT",
             Request::Squeue(_) => "SQUEUE",
             Request::Sjob(_) => "SJOB",
             Request::Scancel(_) => "SCANCEL",
@@ -455,6 +479,64 @@ pub struct ContentionStats {
     pub lock_hold_max_ns: u64,
 }
 
+/// Which half of the coordinator a [`ShardStats`] row describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardKind {
+    /// A front-door epoll reactor shard (one per reactor thread).
+    Reactor,
+    /// A back-end scheduler shard (one per partition in sharded mode).
+    Sched,
+}
+
+impl ShardKind {
+    /// Wire token.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShardKind::Reactor => "reactor",
+            ShardKind::Sched => "sched",
+        }
+    }
+
+    /// Parse a wire token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reactor" => Some(ShardKind::Reactor),
+            "sched" => Some(ShardKind::Sched),
+            _ => None,
+        }
+    }
+}
+
+/// Per-shard counters carried by `STATS` as an additive **v2 wire
+/// extension** (`shard kind=… index=…` continuation records): one row per
+/// reactor shard and one per scheduler shard. v1 responses omit them and
+/// v2 parsers accept their absence, so old clients and servers
+/// interoperate. Field meaning depends on [`ShardStats::kind`]: reactor
+/// rows count epoll wakeups/ready events/connections/parked `WAIT`s;
+/// sched rows count mutex acquisitions (in `wakeups`), dispatches (in
+/// `events`), queue depth, and the shard mutex hold p99.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStats {
+    /// Reactor or scheduler shard.
+    pub kind: ShardKind,
+    /// Shard index within its kind.
+    pub index: u32,
+    /// Human label (`reactor` / the shard's partition name).
+    pub label: String,
+    /// Reactor: `epoll_wait` returns. Sched: shard-mutex acquisitions.
+    pub wakeups: u64,
+    /// Reactor: readiness events delivered. Sched: dispatches.
+    pub events: u64,
+    /// Reactor: connections currently open. Sched: 0.
+    pub connections: u64,
+    /// Reactor: `WAIT`s currently parked on this shard. Sched: 0.
+    pub parked: u64,
+    /// Reactor: 0. Sched: pending jobs (queue depth) at last publish.
+    pub queue_depth: u64,
+    /// Reactor: 0. Sched: p99 shard-mutex hold (ns).
+    pub lock_hold_p99_ns: u64,
+}
+
 /// Daemon + scheduler counters (`STATS`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StatsSnapshot {
@@ -495,6 +577,9 @@ pub struct StatsSnapshot {
     /// Lock-path contention counters (v2 wire extension; `None` when the
     /// peer spoke v1 or predates the extension).
     pub contention: Option<ContentionStats>,
+    /// Per-shard counters (v2 wire extension; empty when the peer spoke
+    /// v1 or predates sharding).
+    pub shards: Vec<ShardStats>,
 }
 
 /// One manifest entry's settlement as `RESUME` reports it.
@@ -556,6 +641,26 @@ impl fmt::Display for ResumeInfo {
     }
 }
 
+/// One scheduler shard's occupancy as `UTIL` reports it (additive v2
+/// extension, one `shard …` record per scheduler shard; empty on v1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardUtil {
+    /// Shard index.
+    pub index: u32,
+    /// The shard's partition name.
+    pub label: String,
+    /// Allocated-core fraction of the shard's node slice.
+    pub utilization: f64,
+    /// Idle cores in the slice.
+    pub idle_cores: u32,
+    /// Total cores in the slice.
+    pub total_cores: u32,
+    /// Pending jobs queued on the shard.
+    pub pending: usize,
+    /// Running jobs on the shard.
+    pub running: usize,
+}
+
 /// Cluster utilization snapshot (`UTIL`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct UtilSnapshot {
@@ -571,6 +676,10 @@ pub struct UtilSnapshot {
     pub pending: usize,
     /// Running jobs.
     pub running: usize,
+    /// Per-scheduler-shard occupancy (v2 wire extension; empty when the
+    /// peer spoke v1 or the daemon is unsharded… the single shard is the
+    /// whole table above, so no row is emitted).
+    pub shards: Vec<ShardUtil>,
 }
 
 impl fmt::Display for UtilSnapshot {
@@ -602,6 +711,16 @@ pub enum Response {
     SubmitAck(SubmitAck),
     /// Manifest submission outcome: per-entry acks and typed rejects.
     ManifestAck(ManifestAck),
+    /// Intermediate ack for one part of a chunked v2.1 `MSUBMIT` body
+    /// (the final part answers with [`Response::ManifestAck`]).
+    ChunkAck {
+        /// The part just received (1-based).
+        part: u32,
+        /// Total parts the client declared.
+        parts: u32,
+        /// Entries buffered so far across the received parts.
+        received: u64,
+    },
     /// `SQUEUE` listing.
     Jobs(Vec<JobSummary>),
     /// `SJOB` detail.
@@ -682,8 +801,21 @@ mod tests {
 
     #[test]
     fn version_and_code_tokens_roundtrip() {
-        for v in [ProtocolVersion::V1, ProtocolVersion::V2] {
+        for v in [
+            ProtocolVersion::V1,
+            ProtocolVersion::V2,
+            ProtocolVersion::V21,
+        ] {
             assert_eq!(ProtocolVersion::parse(v.as_str()), Some(v));
+        }
+        assert_eq!(ProtocolVersion::parse("2.1"), Some(ProtocolVersion::V21));
+        assert!(!ProtocolVersion::V1.is_v2());
+        assert!(ProtocolVersion::V2.is_v2());
+        assert!(ProtocolVersion::V21.is_v2());
+        assert!(ProtocolVersion::V21.chunked_msubmit());
+        assert!(!ProtocolVersion::V2.chunked_msubmit());
+        for k in [ShardKind::Reactor, ShardKind::Sched] {
+            assert_eq!(ShardKind::parse(k.as_str()), Some(k));
         }
         for c in [
             ErrorCode::Empty,

@@ -2,10 +2,12 @@
 //!
 //! [`Client::connect`] starts a v1 session (wire-compatible with the seed
 //! daemon); [`Client::connect_v2`] negotiates the v2 tagged grammar with
-//! `HELLO v2`. The typed methods ([`Client::submit`], [`Client::squeue`],
-//! [`Client::wait`], …) render requests and parse responses through
-//! [`super::codec`], returning the payload structs from [`super::api`] —
-//! `ERR` responses surface as [`ClientError::Api`] with a typed
+//! `HELLO v2`, and [`Client::connect_v21`] negotiates v2.1, which adds the
+//! chunked `MSUBMIT` stream ([`Client::msubmit_chunked`]). The typed
+//! methods ([`Client::submit`], [`Client::squeue`], [`Client::wait`], …)
+//! render requests and parse responses through [`super::codec`], returning
+//! the payload structs from [`super::api`] — `ERR` responses surface as
+//! [`ClientError::Api`] with a typed
 //! [`ErrorCode`](super::api::ErrorCode), never as `Ok(String)`.
 
 use super::api::{
@@ -13,7 +15,9 @@ use super::api::{
     SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::codec;
-use super::manifest::{Manifest, ManifestAck};
+use super::manifest::{
+    Manifest, ManifestAck, ManifestChunk, MAX_CHUNKED_MANIFEST_ENTRIES, MAX_CHUNK_PARTS,
+};
 use crate::util::rng::Xoshiro256;
 use std::fmt;
 use std::io::{BufRead, BufReader, Write};
@@ -170,6 +174,14 @@ impl Client {
         Ok(c)
     }
 
+    /// Connect and negotiate protocol v2.1 (v2 plus the chunked `MSUBMIT`
+    /// stream, [`Client::msubmit_chunked`]).
+    pub fn connect_v21(addr: &str) -> ClientResult<Self> {
+        let mut c = Self::connect(addr)?;
+        c.hello(ProtocolVersion::V21)?;
+        Ok(c)
+    }
+
     /// Connect with retry/backoff — the resume path after a daemon crash:
     /// keep trying while the daemon restarts and replays its journal.
     pub fn connect_retry(addr: &str, policy: &RetryPolicy) -> ClientResult<Self> {
@@ -179,6 +191,11 @@ impl Client {
     /// [`Client::connect_retry`], negotiating protocol v2.
     pub fn connect_v2_retry(addr: &str, policy: &RetryPolicy) -> ClientResult<Self> {
         policy.run(|| Self::connect_v2(addr))
+    }
+
+    /// [`Client::connect_retry`], negotiating protocol v2.1.
+    pub fn connect_v21_retry(addr: &str, policy: &RetryPolicy) -> ClientResult<Self> {
+        policy.run(|| Self::connect_v21(addr))
     }
 
     /// The protocol version this session speaks.
@@ -317,7 +334,7 @@ impl Client {
     /// not fail the call). Requires a v2 session: the v1 grammar cannot
     /// express a manifest, and the daemon would answer `unsupported`.
     pub fn msubmit(&mut self, manifest: &Manifest) -> ClientResult<ManifestAck> {
-        if self.version != ProtocolVersion::V2 {
+        if !self.version.is_v2() {
             return Err(ClientError::Protocol(
                 "MSUBMIT requires protocol v2 (connect with Client::connect_v2)".into(),
             ));
@@ -334,6 +351,66 @@ impl Client {
             Response::ManifestAck(ack) => Ok(ack),
             other => Err(unexpected("MSUBMIT", &other)),
         }
+    }
+
+    /// Submit a manifest as a chunked v2.1 stream: `entries=<total>
+    /// part=<i>/<k>` continuation records of at most `chunk_size` entries
+    /// each, lifting the single-line entry cap. Intermediate parts are
+    /// acknowledged with `chunk_ack`; the final part admits the assembled
+    /// manifest atomically and returns the normal [`ManifestAck`]. Any
+    /// typed error mid-stream discards the server-side partial manifest —
+    /// the stream is never resumable, re-send from part 1. Requires a
+    /// v2.1 session ([`Client::connect_v21`]).
+    pub fn msubmit_chunked(
+        &mut self,
+        manifest: &Manifest,
+        chunk_size: usize,
+    ) -> ClientResult<ManifestAck> {
+        if !self.version.chunked_msubmit() {
+            return Err(ClientError::Protocol(
+                "chunked MSUBMIT requires protocol v2.1 (connect with Client::connect_v21)".into(),
+            ));
+        }
+        if let Some((i, tag)) = manifest.first_unframeable_tag() {
+            return Err(ClientError::Protocol(format!(
+                "manifest entry {i} has a tag that cannot be framed on the wire: {tag:?}"
+            )));
+        }
+        let total = manifest.entries.len();
+        if total == 0 {
+            // Nothing to chunk — the single-line form already expresses an
+            // empty manifest.
+            return self.msubmit(manifest);
+        }
+        if total > MAX_CHUNKED_MANIFEST_ENTRIES {
+            return Err(ClientError::Protocol(format!(
+                "manifest has {total} entries (chunked cap {MAX_CHUNKED_MANIFEST_ENTRIES})"
+            )));
+        }
+        let chunk_size = chunk_size.max(1);
+        let parts = (total + chunk_size - 1) / chunk_size;
+        if parts > MAX_CHUNK_PARTS as usize {
+            return Err(ClientError::Protocol(format!(
+                "{total} entries at {chunk_size} per part is {parts} parts (cap {MAX_CHUNK_PARTS}) \
+                 — raise chunk_size"
+            )));
+        }
+        for (i, slice) in manifest.entries.chunks(chunk_size).enumerate() {
+            let part = (i + 1) as u32;
+            let chunk = ManifestChunk {
+                entries: total as u32,
+                part,
+                parts: parts as u32,
+                records: slice.to_vec(),
+            };
+            match self.roundtrip(&Request::MSubmitChunk(chunk))? {
+                Response::ManifestAck(ack) if part as usize == parts => return Ok(ack),
+                Response::ChunkAck { part: echoed, .. }
+                    if (part as usize) < parts && echoed == part => {}
+                other => return Err(unexpected("MSUBMIT", &other)),
+            }
+        }
+        unreachable!("the final part returns its ManifestAck")
     }
 
     /// List jobs matching `filter`.
@@ -398,7 +475,7 @@ impl Client {
         entry: u32,
         timeout_secs: f64,
     ) -> ClientResult<WaitResult> {
-        if self.version != ProtocolVersion::V2 {
+        if !self.version.is_v2() {
             return Err(ClientError::Protocol(
                 "per-entry WAIT requires protocol v2 (connect with Client::connect_v2)".into(),
             ));
@@ -432,7 +509,7 @@ impl Client {
     }
 
     fn resume(&mut self, req: Request) -> ClientResult<ResumeInfo> {
-        if self.version != ProtocolVersion::V2 {
+        if !self.version.is_v2() {
             return Err(ClientError::Protocol(
                 "RESUME requires protocol v2 (connect with Client::connect_v2)".into(),
             ));

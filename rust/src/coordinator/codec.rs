@@ -21,10 +21,12 @@
 use super::api::{
     job_type_arg, parse_job_type, parse_qos, parse_state, state_token, ApiError, ContentionStats,
     ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request, Response, ResumeEntry, ResumeInfo,
-    ResumeTarget, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    ResumeTarget, ShardKind, ShardStats, ShardUtil, SqueueFilter, StatsSnapshot, SubmitAck,
+    SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::manifest::{
-    EntryAck, EntryReject, Manifest, ManifestAck, ManifestEntry, MAX_MANIFEST_ENTRIES,
+    EntryAck, EntryReject, Manifest, ManifestAck, ManifestChunk, ManifestEntry,
+    MAX_CHUNKED_MANIFEST_ENTRIES, MAX_CHUNK_PARTS, MAX_MANIFEST_ENTRIES,
 };
 use crate::job::{JobState, JobType, QosClass};
 use std::collections::BTreeMap;
@@ -172,16 +174,19 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
         "SQUEUE" => parse_squeue(rest),
         "SUBMIT" => match version {
             ProtocolVersion::V1 => parse_submit_v1(rest),
-            ProtocolVersion::V2 => parse_submit_v2(rest),
+            ProtocolVersion::V2 | ProtocolVersion::V21 => parse_submit_v2(rest),
         },
         // The manifest body is `;`-separated records, so it needs the raw
         // line, not the whitespace tokens. v1 connections get a typed
-        // rejection — a single line, so nothing ever desyncs.
+        // rejection — a single line, so nothing ever desyncs. On v2.1 the
+        // header may carry `part=<i>/<k>` (a chunked stream record).
         "MSUBMIT" => match version {
             ProtocolVersion::V1 => Err(ApiError::unsupported(
                 "MSUBMIT requires protocol v2 (negotiate with HELLO v2)",
             )),
-            ProtocolVersion::V2 => parse_msubmit(line),
+            ProtocolVersion::V2 | ProtocolVersion::V21 => {
+                parse_msubmit(line, version.chunked_msubmit())
+            }
         },
         "SJOB" => match version {
             ProtocolVersion::V1 => {
@@ -190,7 +195,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
                     .ok_or_else(|| ApiError::bad_arity("SJOB", "<job_id>"))?;
                 Ok(Request::Sjob(parse_u64("job id", tok)?))
             }
-            ProtocolVersion::V2 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 => {
                 let map: BTreeMap<&str, &str> = kv_pairs(rest, "SJOB option")?.into_iter().collect();
                 Ok(Request::Sjob(take_u64(&map, "id")?))
             }
@@ -202,7 +207,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
                     .ok_or_else(|| ApiError::bad_arity("SCANCEL", "<job_id>"))?;
                 Ok(Request::Scancel(parse_u64("job id", tok)?))
             }
-            ProtocolVersion::V2 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 => {
                 let map: BTreeMap<&str, &str> =
                     kv_pairs(rest, "SCANCEL option")?.into_iter().collect();
                 Ok(Request::Scancel(take_u64(&map, "id")?))
@@ -220,7 +225,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
                 let timeout_secs = parse_f64("timeout", rest[rest.len() - 1])?;
                 Ok(Request::Wait { jobs, timeout_secs })
             }
-            ProtocolVersion::V2 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 => {
                 let map: BTreeMap<&str, &str> = kv_pairs(rest, "WAIT option")?.into_iter().collect();
                 let timeout_secs = match map.get("timeout") {
                     Some(tok) => parse_f64("timeout", tok)?,
@@ -259,7 +264,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
             ProtocolVersion::V1 => Err(ApiError::unsupported(
                 "RESUME requires protocol v2 (negotiate with HELLO v2)",
             )),
-            ProtocolVersion::V2 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 => {
                 let map: BTreeMap<&str, &str> =
                     kv_pairs(rest, "RESUME option")?.into_iter().collect();
                 match (map.get("tag"), map.get("manifest")) {
@@ -456,14 +461,40 @@ pub fn render_manifest_entry(e: &ManifestEntry) -> String {
     s
 }
 
-fn parse_msubmit(line: &str) -> Result<Request, ApiError> {
+/// Parse the `part=<i>/<k>` header token of a chunked (v2.1) MSUBMIT.
+fn parse_chunk_part(tok: &str) -> Result<(u32, u32), ApiError> {
+    let (i, k) = tok
+        .split_once('/')
+        .ok_or_else(|| ApiError::bad_arg("part", tok))?;
+    let part = parse_u32("part", i)?;
+    let parts = parse_u32("parts", k)?;
+    // Shape errors die at the codec before any per-connection stream state
+    // exists; the assembler re-checks (it also sees hand-built chunks).
+    if part == 0 || parts == 0 || part > parts || parts > MAX_CHUNK_PARTS {
+        return Err(ApiError::bad_arg("part", tok));
+    }
+    Ok((part, parts))
+}
+
+fn parse_msubmit(line: &str, chunked: bool) -> Result<Request, ApiError> {
     // Strip the verb (already matched case-insensitively) from the raw line.
     let mut parts = line.trim_start().splitn(2, char::is_whitespace);
     parts.next();
     let body = parts.next().unwrap_or("").trim();
     let mut segments = body.split(';');
     let header = segments.next().unwrap_or("").trim();
-    let declared = match header.strip_prefix("entries=") {
+    // The header segment is whitespace-separated: `entries=<n>` plus, on a
+    // v2.1 chunked stream only, `part=<i>/<k>`.
+    let mut head_toks = header.split_whitespace();
+    let entries_tok = head_toks.next().unwrap_or("");
+    let part_tok = head_toks.next();
+    if head_toks.next().is_some() {
+        return Err(ApiError::bad_arity(
+            "MSUBMIT",
+            "entries=<n>[ part=<i>/<k>];<entry>;...",
+        ));
+    }
+    let declared = match entries_tok.strip_prefix("entries=") {
         Some(tok) => parse_usize("entries", tok)?,
         None => {
             return Err(ApiError::bad_arity(
@@ -472,10 +503,31 @@ fn parse_msubmit(line: &str) -> Result<Request, ApiError> {
             ))
         }
     };
-    if declared > MAX_MANIFEST_ENTRIES {
+    let chunk_pos = match part_tok {
+        None => None,
+        Some(tok) => {
+            let val = tok
+                .strip_prefix("part=")
+                .ok_or_else(|| ApiError::bad_arg("MSUBMIT header", tok))?;
+            if !chunked {
+                return Err(ApiError::unsupported(
+                    "chunked MSUBMIT requires protocol v2.1 (negotiate with HELLO v2.1)",
+                ));
+            }
+            Some(parse_chunk_part(val)?)
+        }
+    };
+    // A chunked stream declares the whole manifest up front, so its cap is
+    // the assembled-manifest cap, not the single-line cap.
+    let cap = if chunk_pos.is_some() {
+        MAX_CHUNKED_MANIFEST_ENTRIES
+    } else {
+        MAX_MANIFEST_ENTRIES
+    };
+    if declared > cap {
         return Err(ApiError::bad_arg(
             "entries",
-            &format!("{declared} (cap {MAX_MANIFEST_ENTRIES})"),
+            &format!("{declared} (cap {cap})"),
         ));
     }
     let mut entries = Vec::with_capacity(declared.min(4096));
@@ -488,6 +540,17 @@ fn parse_msubmit(line: &str) -> Result<Request, ApiError> {
             ));
         }
         entries.push(parse_manifest_entry(segment.trim())?);
+    }
+    if let Some((part, parts)) = chunk_pos {
+        // One part carries a slice of the declared total; the assembler
+        // enforces the cross-part count when the final part closes the
+        // stream. The cap check above keeps `declared as u32` lossless.
+        return Ok(Request::MSubmitChunk(ManifestChunk {
+            entries: declared as u32,
+            part,
+            parts,
+            records: entries,
+        }));
     }
     if entries.len() != declared {
         // Fewer records than declared: truncated body.
@@ -502,6 +565,15 @@ fn parse_msubmit(line: &str) -> Result<Request, ApiError> {
 fn render_msubmit(m: &Manifest) -> String {
     let mut s = format!("MSUBMIT entries={}", m.entries.len());
     for e in &m.entries {
+        s.push(';');
+        s.push_str(&render_manifest_entry(e));
+    }
+    s
+}
+
+fn render_msubmit_chunk(c: &ManifestChunk) -> String {
+    let mut s = format!("MSUBMIT entries={} part={}/{}", c.entries, c.part, c.parts);
+    for e in &c.records {
         s.push(';');
         s.push_str(&render_manifest_entry(e));
     }
@@ -536,11 +608,11 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
         }
         Request::Sjob(id) => match version {
             ProtocolVersion::V1 => format!("SJOB {id}"),
-            ProtocolVersion::V2 => format!("SJOB id={id}"),
+            ProtocolVersion::V2 | ProtocolVersion::V21 => format!("SJOB id={id}"),
         },
         Request::Scancel(id) => match version {
             ProtocolVersion::V1 => format!("SCANCEL {id}"),
-            ProtocolVersion::V2 => format!("SCANCEL id={id}"),
+            ProtocolVersion::V2 | ProtocolVersion::V21 => format!("SCANCEL id={id}"),
         },
         Request::Wait { jobs, timeout_secs } => {
             let ids: Vec<String> = jobs.iter().map(|j| j.to_string()).collect();
@@ -548,7 +620,7 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
                 ProtocolVersion::V1 => {
                     format!("WAIT {} {}", ids.join(" "), fmt_f64(*timeout_secs))
                 }
-                ProtocolVersion::V2 => {
+                ProtocolVersion::V2 | ProtocolVersion::V21 => {
                     format!("WAIT jobs={} timeout={}", ids.join(","), fmt_f64(*timeout_secs))
                 }
             }
@@ -556,6 +628,10 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
         // Canonical in the v2 grammar; v1 cannot express a manifest (the
         // daemon answers a v1 MSUBMIT with a typed `unsupported`).
         Request::MSubmit(m) => render_msubmit(m),
+        // Canonical in the v2.1 grammar; rendering is total in the other
+        // versions for symmetry (a v2 daemon answers with a typed
+        // `unsupported`, v1 with its MSUBMIT rejection).
+        Request::MSubmitChunk(c) => render_msubmit_chunk(c),
         // v2-only verbs (like MSUBMIT, rendering is total in both versions
         // for symmetry; a v1 daemon answers with a typed `unsupported`).
         Request::WaitEntry {
@@ -583,7 +659,7 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
                 }
                 line
             }
-            ProtocolVersion::V2 => format!(
+            ProtocolVersion::V2 | ProtocolVersion::V21 => format!(
                 "SUBMIT qos={} type={} tasks={} user={} run_secs={} count={}",
                 s.qos,
                 job_type_arg(s.job_type),
@@ -859,12 +935,37 @@ fn stats_kv(s: &StatsSnapshot, with_contention: bool) -> String {
     out
 }
 
+/// Append the per-shard STATS records, one line per shard: `shard kind=..
+/// index=.. label=.. wakeups=.. events=.. connections=.. parked=..
+/// queue_depth=.. lock_hold_p99_ns=..`. An additive v2 extension: v1 keeps
+/// its key set byte-compatible (no shard lines), and v2 parsers accept
+/// their absence, so mixed versions interoperate.
+fn render_shard_stats_records(body: &mut String, shards: &[ShardStats]) {
+    for sh in shards {
+        let _ = write!(
+            body,
+            "\nshard kind={} index={} label={} wakeups={} events={} connections={} parked={} \
+             queue_depth={} lock_hold_p99_ns={}",
+            sh.kind.as_str(),
+            sh.index,
+            sh.label,
+            sh.wakeups,
+            sh.events,
+            sh.connections,
+            sh.parked,
+            sh.queue_depth,
+            sh.lock_hold_p99_ns,
+        );
+    }
+}
+
 /// Render a response for the given protocol version. The result is the body
-/// only — the transport appends the blank-line terminator.
+/// only — the transport appends the blank-line terminator. (v2.1 responses
+/// render exactly as v2; the version only gates the chunked request body.)
 pub fn render_response(resp: &Response, version: ProtocolVersion) -> String {
     match version {
         ProtocolVersion::V1 => render_response_v1(resp),
-        ProtocolVersion::V2 => render_response_v2(resp),
+        ProtocolVersion::V2 | ProtocolVersion::V21 => render_response_v2(resp),
     }
 }
 
@@ -880,6 +981,15 @@ fn render_response_v1(resp: &Response) -> String {
             let mut body = format!("OK manifest {}", manifest_ack_head(a));
             render_manifest_ack_records(&mut body, a);
             body
+        }
+        Response::ChunkAck {
+            part,
+            parts,
+            received,
+        } => {
+            // Not byte-constrained: chunked MSUBMIT is v2.1-only, but
+            // rendering must be total (and round-trips, for symmetry).
+            format!("OK chunk_ack part={part} parts={parts} received={received}")
         }
         Response::Cancelled(id) => format!("OK cancelled {id}"),
         Response::Jobs(rows) => {
@@ -956,6 +1066,11 @@ fn render_response_v2(resp: &Response) -> String {
             render_manifest_ack_records(&mut body, a);
             body
         }
+        Response::ChunkAck {
+            part,
+            parts,
+            received,
+        } => format!("OK kind=chunk_ack part={part} parts={parts} received={received}"),
         Response::Job(d) => format!("OK kind=job {}", detail_kv(d)),
         Response::Wait(w) => format!("OK kind=wait {}", wait_kv(w)),
         Response::Resume(info) => {
@@ -967,11 +1082,32 @@ fn render_response_v2(resp: &Response) -> String {
             render_resume_records(&mut body, info);
             body
         }
-        Response::Stats(s) => format!("OK kind=stats {}", stats_kv(s, true)),
-        Response::Util(u) => format!(
-            "OK kind=util utilization={} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
-            fmt_f64(u.utilization), u.idle_cores, u.idle_nodes, u.total_cores, u.pending, u.running
-        ),
+        Response::Stats(s) => {
+            let mut body = format!("OK kind=stats {}", stats_kv(s, true));
+            render_shard_stats_records(&mut body, &s.shards);
+            body
+        }
+        Response::Util(u) => {
+            let mut body = format!(
+                "OK kind=util utilization={} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
+                fmt_f64(u.utilization), u.idle_cores, u.idle_nodes, u.total_cores, u.pending, u.running
+            );
+            for sh in &u.shards {
+                let _ = write!(
+                    body,
+                    "\nshard index={} label={} utilization={} idle_cores={} total_cores={} \
+                     pending={} running={}",
+                    sh.index,
+                    sh.label,
+                    fmt_f64(sh.utilization),
+                    sh.idle_cores,
+                    sh.total_cores,
+                    sh.pending,
+                    sh.running
+                );
+            }
+            body
+        }
         Response::Error(e) => format!("ERR code={} msg={}", e.code, e.message),
     }
 }
@@ -993,7 +1129,7 @@ pub fn parse_response(text: &str, version: ProtocolVersion) -> Result<Response, 
     let rest = rest.strip_prefix(' ').unwrap_or(rest);
     match version {
         ProtocolVersion::V1 => parse_ok_v1(rest),
-        ProtocolVersion::V2 => parse_ok_v2(rest),
+        ProtocolVersion::V2 | ProtocolVersion::V21 => parse_ok_v2(rest),
     }
 }
 
@@ -1006,7 +1142,7 @@ fn parse_error_body(body: &str, version: ProtocolVersion) -> ApiError {
             },
             None => ApiError::new(ErrorCode::Internal, body),
         },
-        ProtocolVersion::V2 => {
+        ProtocolVersion::V2 | ProtocolVersion::V21 => {
             let (head, msg) = match body.split_once(" msg=") {
                 Some((head, msg)) => (head, msg),
                 None => (body, ""),
@@ -1080,7 +1216,33 @@ fn parse_wait(map: &BTreeMap<&str, &str>) -> Result<WaitResult, ApiError> {
     })
 }
 
-fn parse_stats(map: &BTreeMap<&str, &str>) -> Result<StatsSnapshot, ApiError> {
+/// Parse the `shard ...` continuation records of a STATS body. Absent
+/// lines (a v1 body, or a pre-sharding v2 server) yield an empty vec.
+fn parse_shard_stats(tail: &str) -> Result<Vec<ShardStats>, ApiError> {
+    let mut shards = Vec::new();
+    for line in tail.lines() {
+        let Some(rest) = line.strip_prefix("shard ") else {
+            continue;
+        };
+        let m = kv_map(rest);
+        let kind_tok = take(&m, "kind")?;
+        shards.push(ShardStats {
+            kind: ShardKind::parse(kind_tok)
+                .ok_or_else(|| ApiError::bad_arg("shard kind", kind_tok))?,
+            index: take_u32(&m, "index")?,
+            label: take(&m, "label")?.to_string(),
+            wakeups: take_u64(&m, "wakeups")?,
+            events: take_u64(&m, "events")?,
+            connections: take_u64(&m, "connections")?,
+            parked: take_u64(&m, "parked")?,
+            queue_depth: take_u64(&m, "queue_depth")?,
+            lock_hold_p99_ns: take_u64(&m, "lock_hold_p99_ns")?,
+        });
+    }
+    Ok(shards)
+}
+
+fn parse_stats(map: &BTreeMap<&str, &str>, tail: &str) -> Result<StatsSnapshot, ApiError> {
     let mut commands = BTreeMap::new();
     for (k, v) in map {
         if let Some(cmd) = k.strip_prefix("cmd_") {
@@ -1122,10 +1284,27 @@ fn parse_stats(map: &BTreeMap<&str, &str>) -> Result<StatsSnapshot, ApiError> {
         sched_latency_p50_ns: take_u64(map, "sched_latency_p50_ns")?,
         commands,
         contention,
+        shards: parse_shard_stats(tail)?,
     })
 }
 
-fn parse_util(map: &BTreeMap<&str, &str>) -> Result<UtilSnapshot, ApiError> {
+fn parse_util(map: &BTreeMap<&str, &str>, tail: &str) -> Result<UtilSnapshot, ApiError> {
+    let mut shards = Vec::new();
+    for line in tail.lines() {
+        let Some(rest) = line.strip_prefix("shard ") else {
+            continue;
+        };
+        let m = kv_map(rest);
+        shards.push(ShardUtil {
+            index: take_u32(&m, "index")?,
+            label: take(&m, "label")?.to_string(),
+            utilization: take_f64(&m, "utilization")?,
+            idle_cores: take_u32(&m, "idle_cores")?,
+            total_cores: take_u32(&m, "total_cores")?,
+            pending: take_usize(&m, "pending")?,
+            running: take_usize(&m, "running")?,
+        });
+    }
     Ok(UtilSnapshot {
         utilization: take_f64(map, "utilization")?,
         idle_cores: take_u32(map, "idle_cores")?,
@@ -1133,6 +1312,7 @@ fn parse_util(map: &BTreeMap<&str, &str>) -> Result<UtilSnapshot, ApiError> {
         total_cores: take_u32(map, "total_cores")?,
         pending: take_usize(map, "pending")?,
         running: take_usize(map, "running")?,
+        shards,
     })
 }
 
@@ -1171,6 +1351,14 @@ fn parse_ok_v1(rest: &str) -> Result<Response, ApiError> {
             let tok = rest.split_whitespace().nth(1).unwrap_or("");
             Ok(Response::Cancelled(parse_u64("job id", tok)?))
         }
+        "chunk_ack" => {
+            let map = kv_map(rest);
+            Ok(Response::ChunkAck {
+                part: take_u32(&map, "part")?,
+                parts: take_u32(&map, "parts")?,
+                received: take_u64(&map, "received")?,
+            })
+        }
         "manifest" => {
             let (head, tail) = match rest.split_once('\n') {
                 Some((h, t)) => (h, t),
@@ -1193,9 +1381,12 @@ fn parse_ok_v1(rest: &str) -> Result<Response, ApiError> {
         }
         _ if first.starts_with("jobs=") => parse_submit_ack_v1(rest),
         _ if first.starts_with("virtual_now_secs=") => {
-            Ok(Response::Stats(parse_stats(&kv_map(rest))?))
+            // v1 STATS is single-line (no shard records).
+            Ok(Response::Stats(parse_stats(&kv_map(rest), "")?))
         }
-        _ if first.starts_with("utilization=") => Ok(Response::Util(parse_util(&kv_map(rest))?)),
+        _ if first.starts_with("utilization=") => {
+            Ok(Response::Util(parse_util(&kv_map(rest), "")?))
+        }
         _ if first.starts_with("requested=") => Ok(Response::Wait(parse_wait(&kv_map(rest))?)),
         _ if first.starts_with("id=") => Ok(Response::Job(parse_detail(&kv_map(rest))?)),
         _ => Err(ApiError::new(
@@ -1226,12 +1417,17 @@ fn parse_ok_v2(rest: &str) -> Result<Response, ApiError> {
             count: take_u64(&map, "count")?,
         })),
         "manifest_ack" => parse_manifest_ack(&map, tail),
+        "chunk_ack" => Ok(Response::ChunkAck {
+            part: take_u32(&map, "part")?,
+            parts: take_u32(&map, "parts")?,
+            received: take_u64(&map, "received")?,
+        }),
         "resume" => parse_resume(&map, tail),
         "cancelled" => Ok(Response::Cancelled(take_u64(&map, "id")?)),
         "job" => Ok(Response::Job(parse_detail(&map)?)),
         "wait" => Ok(Response::Wait(parse_wait(&map)?)),
-        "stats" => Ok(Response::Stats(parse_stats(&map)?)),
-        "util" => Ok(Response::Util(parse_util(&map)?)),
+        "stats" => Ok(Response::Stats(parse_stats(&map, tail)?)),
+        "util" => Ok(Response::Util(parse_util(&map, tail)?)),
         "jobs" => {
             let mut rows = Vec::new();
             for line in tail.lines() {
@@ -1261,7 +1457,7 @@ fn parse_ok_v2(rest: &str) -> Result<Response, ApiError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use ProtocolVersion::{V1, V2};
+    use ProtocolVersion::{V1, V2, V21};
 
     // ---- backward compatibility: the seed grammar, verbatim ----------------
 
@@ -1756,6 +1952,9 @@ mod tests {
                 // so the shared samples (round-tripped under BOTH versions)
                 // must omit it. Dedicated tests below cover Some(_).
                 contention: None,
+                // Empty for the same reason: shard records are v2-only
+                // continuation lines. Dedicated tests below cover them.
+                shards: Vec::new(),
             }),
             Response::Util(UtilSnapshot {
                 utilization: 0.25,
@@ -1764,7 +1963,13 @@ mod tests {
                 total_cores: 608,
                 pending: 3,
                 running: 2,
+                shards: Vec::new(),
             }),
+            Response::ChunkAck {
+                part: 2,
+                parts: 5,
+                received: 24_000,
+            },
             Response::Error(ApiError::not_found("unknown job 42")),
             Response::Error(ApiError::bad_arg("tasks", "0")),
             Response::ManifestAck(ManifestAck {
@@ -1921,5 +2126,242 @@ mod tests {
         let wire = render_response(&Response::Error(ApiError::unknown_command("FROB")), V1);
         assert!(wire.starts_with("ERR "), "{wire}");
         assert!(wire.contains("unknown_command"), "{wire}");
+    }
+
+    // ---- v2.1: chunked MSUBMIT and shard records ----------------------------
+
+    #[test]
+    fn v21_parses_every_v2_form_identically() {
+        for line in [
+            "SUBMIT qos=normal type=triple tasks=4096 user=1 run_secs=600 count=1",
+            "SQUEUE user=1 qos=spot state=pending limit=10",
+            "SJOB id=7",
+            "SCANCEL id=42",
+            "WAIT jobs=1,2,3 timeout=30",
+            "WAIT manifest=7 entry=2 timeout=30",
+            "RESUME tag=nightly-batch",
+            "MSUBMIT entries=1;qos=normal type=array tasks=4 user=1 cores_per_task=1 run_secs=60 count=1",
+            "STATS",
+            "UTIL",
+            "HELLO v2.1",
+        ] {
+            let on_v2 = parse_request(line, V2);
+            let on_v21 = parse_request(line, V21).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(Some(&on_v21), on_v2.as_ref().ok(), "{line}");
+            assert_eq!(render_request(&on_v21, V21), line, "round-trip of {line:?}");
+        }
+    }
+
+    #[test]
+    fn chunked_msubmit_roundtrips_on_v21() {
+        let entry = "qos=normal type=array tasks=4 user=1 cores_per_task=1 run_secs=60 count=1";
+        let line = format!("MSUBMIT entries=5 part=2/3;{entry};{entry}");
+        let req = parse_request(&line, V21).unwrap();
+        match &req {
+            Request::MSubmitChunk(c) => {
+                assert_eq!((c.entries, c.part, c.parts), (5, 2, 3));
+                assert_eq!(c.records.len(), 2);
+                assert_eq!(c.records[0].tasks, 4);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(req.command_name(), "MSUBMIT");
+        assert_eq!(render_request(&req, V21), line);
+    }
+
+    #[test]
+    fn chunked_msubmit_lifts_the_single_line_entry_cap() {
+        // The declared total of a chunked stream may exceed the single-line
+        // cap (the point of chunking); only the assembled cap applies.
+        let entry = "qos=normal type=individual tasks=1 user=1";
+        let over_line_cap = MAX_MANIFEST_ENTRIES + 1;
+        let line = format!("MSUBMIT entries={over_line_cap} part=1/2;{entry}");
+        assert!(matches!(
+            parse_request(&line, V21).unwrap(),
+            Request::MSubmitChunk(_)
+        ));
+        // …but the assembled-manifest cap still binds the declaration.
+        let over_chunk_cap = MAX_CHUNKED_MANIFEST_ENTRIES + 1;
+        let line = format!("MSUBMIT entries={over_chunk_cap} part=1/2;{entry}");
+        assert_eq!(parse_request(&line, V21).unwrap_err().code, ErrorCode::BadArg);
+        // An unchunked line keeps the original cap, even on v2.1.
+        let line = format!("MSUBMIT entries={over_line_cap};{entry}");
+        assert_eq!(parse_request(&line, V21).unwrap_err().code, ErrorCode::BadArg);
+    }
+
+    #[test]
+    fn chunked_msubmit_is_rejected_below_v21() {
+        let line = "MSUBMIT entries=4 part=1/2;qos=normal type=array tasks=4 user=1";
+        let err = parse_request(line, V2).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Unsupported);
+        assert!(err.message.contains("v2.1"), "{err}");
+        // v1 keeps its blanket MSUBMIT rejection.
+        assert_eq!(parse_request(line, V1).unwrap_err().code, ErrorCode::Unsupported);
+    }
+
+    #[test]
+    fn chunked_msubmit_hostile_headers_yield_typed_errors() {
+        let code = |line: &str| parse_request(line, V21).unwrap_err().code;
+        let entry = "qos=normal type=array tasks=4 user=1";
+        // Malformed part tokens.
+        assert_eq!(code(&format!("MSUBMIT entries=4 part=;{entry}")), ErrorCode::BadArg);
+        assert_eq!(code(&format!("MSUBMIT entries=4 part=1;{entry}")), ErrorCode::BadArg);
+        assert_eq!(code(&format!("MSUBMIT entries=4 part=x/2;{entry}")), ErrorCode::BadArg);
+        // Zero / out-of-range positions.
+        assert_eq!(code(&format!("MSUBMIT entries=4 part=0/2;{entry}")), ErrorCode::BadArg);
+        assert_eq!(code(&format!("MSUBMIT entries=4 part=3/2;{entry}")), ErrorCode::BadArg);
+        assert_eq!(code(&format!("MSUBMIT entries=4 part=1/0;{entry}")), ErrorCode::BadArg);
+        // Part count over the stream cap.
+        assert_eq!(
+            code(&format!(
+                "MSUBMIT entries=4 part=1/{};{entry}",
+                MAX_CHUNK_PARTS + 1
+            )),
+            ErrorCode::BadArg
+        );
+        // A stray non-part token in the header.
+        assert_eq!(code(&format!("MSUBMIT entries=4 bogus=1;{entry}")), ErrorCode::BadArg);
+        assert_eq!(
+            code(&format!("MSUBMIT entries=4 part=1/2 extra=1;{entry}")),
+            ErrorCode::BadArity
+        );
+        // A chunk carrying more records than the declared total.
+        assert_eq!(
+            code(&format!("MSUBMIT entries=1 part=1/2;{entry};{entry}")),
+            ErrorCode::BadArity
+        );
+    }
+
+    #[test]
+    fn chunk_ack_roundtrips_both_versions() {
+        let resp = Response::ChunkAck {
+            part: 3,
+            parts: 7,
+            received: 36_000,
+        };
+        for v in [V1, V2, V21] {
+            let wire = render_response(&resp, v);
+            assert!(wire.contains("part=3"), "{wire}");
+            assert!(wire.contains("received=36000"), "{wire}");
+            assert_eq!(parse_response(&wire, v).unwrap(), resp, "{wire:?}");
+        }
+    }
+
+    fn sample_shard_stats() -> Vec<ShardStats> {
+        vec![
+            ShardStats {
+                kind: ShardKind::Reactor,
+                index: 0,
+                label: "reactor".into(),
+                wakeups: 120,
+                events: 340,
+                connections: 9,
+                parked: 2,
+                queue_depth: 0,
+                lock_hold_p99_ns: 0,
+            },
+            ShardStats {
+                kind: ShardKind::Sched,
+                index: 0,
+                label: "interactive".into(),
+                wakeups: 55,
+                events: 48,
+                connections: 0,
+                parked: 0,
+                queue_depth: 3,
+                lock_hold_p99_ns: 84_000,
+            },
+            ShardStats {
+                kind: ShardKind::Sched,
+                index: 1,
+                label: "spot".into(),
+                wakeups: 31,
+                events: 12,
+                connections: 0,
+                parked: 0,
+                queue_depth: 17,
+                lock_hold_p99_ns: 96_500,
+            },
+        ]
+    }
+
+    #[test]
+    fn stats_shard_records_roundtrip_v2_and_drop_on_v1() {
+        let mut s = stats_with_contention();
+        s.shards = sample_shard_stats();
+        let resp = Response::Stats(s.clone());
+        for v in [V2, V21] {
+            let wire = render_response(&resp, v);
+            assert!(wire.contains("\nshard kind=reactor index=0 label=reactor"), "{wire}");
+            assert!(wire.contains("kind=sched index=1 label=spot"), "{wire}");
+            assert!(wire.contains("queue_depth=17"), "{wire}");
+            assert_eq!(parse_response(&wire, v).unwrap(), resp, "{wire:?}");
+        }
+        // v1 keeps its single-line byte-compatible record: no shard lines,
+        // and a v1 parse naturally yields the empty vec.
+        let wire = render_response(&resp, V1);
+        assert!(!wire.contains("shard "), "{wire}");
+        match parse_response(&wire, V1).unwrap() {
+            Response::Stats(back) => assert!(back.shards.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn util_shard_records_roundtrip_v2_and_drop_on_v1() {
+        let resp = Response::Util(UtilSnapshot {
+            utilization: 0.5,
+            idle_cores: 304,
+            idle_nodes: 9,
+            total_cores: 608,
+            pending: 20,
+            running: 5,
+            shards: vec![
+                ShardUtil {
+                    index: 0,
+                    label: "interactive".into(),
+                    utilization: 0.75,
+                    idle_cores: 76,
+                    total_cores: 304,
+                    pending: 2,
+                    running: 4,
+                },
+                ShardUtil {
+                    index: 1,
+                    label: "spot".into(),
+                    utilization: 0.25,
+                    idle_cores: 228,
+                    total_cores: 304,
+                    pending: 18,
+                    running: 1,
+                },
+            ],
+        });
+        for v in [V2, V21] {
+            let wire = render_response(&resp, v);
+            assert!(wire.contains("\nshard index=0 label=interactive"), "{wire}");
+            assert!(wire.contains("label=spot"), "{wire}");
+            assert_eq!(parse_response(&wire, v).unwrap(), resp, "{wire:?}");
+        }
+        let wire = render_response(&resp, V1);
+        assert!(!wire.contains("shard "), "{wire}");
+        match parse_response(&wire, V1).unwrap() {
+            Response::Util(back) => assert!(back.shards.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_stats_without_shard_lines_still_parses() {
+        // Forward compatibility: a pre-sharding v2 server emits no shard
+        // lines — the vec parses empty rather than erroring.
+        let wire = "OK kind=stats virtual_now_secs=1 dispatches=0 preemptions=0 requeues=0 \
+                    cron_passes=0 main_passes=0 backfill_passes=0 triggered_passes=0 \
+                    score_batches=0 jobs_scored=0 scorer=native requests_ok=0 requests_err=0 \
+                    jobs_submitted=0 sched_latency_count=0 sched_latency_p50_ns=0";
+        match parse_response(wire, V2).unwrap() {
+            Response::Stats(s) => assert!(s.shards.is_empty()),
+            other => panic!("{other:?}"),
+        }
     }
 }

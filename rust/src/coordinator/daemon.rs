@@ -31,19 +31,20 @@
 
 use super::api::{
     ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request,
-    Response, ResumeEntry, ResumeInfo, ResumeTarget, SqueueFilter, StatsSnapshot, SubmitAck,
-    SubmitSpec, UtilSnapshot, WaitResult,
+    Response, ResumeEntry, ResumeInfo, ResumeTarget, ShardKind, ShardStats, ShardUtil,
+    SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::codec;
 use super::journal::{
     AdmitEntry, CheckpointJob, CheckpointState, DurabilityConfig, Journal, JournalRecord,
 };
 use super::manifest::{
-    EntryAck, EntryReject, Manifest, ManifestAck, ManifestEntry, ManifestRegistry, ManifestSpan,
-    MAX_MANIFEST_ENTRIES,
+    ChunkAssembler, ChunkOutcome, EntryAck, EntryReject, Manifest, ManifestAck, ManifestEntry,
+    ManifestRegistry, ManifestSpan, MAX_CHUNKED_MANIFEST_ENTRIES, MAX_MANIFEST_ENTRIES,
 };
 use super::metrics::DaemonMetrics;
 use super::recovery::{rebuild, RecoveryError, RecoveryReport};
+use super::shards::SchedShards;
 use super::snapshot::{wait_view_of, JobView, SchedSnapshot, WaitHub, WaitView};
 use crate::cluster::Cluster;
 use crate::job::{JobId, JobSpec, JobState, QosClass, UserId};
@@ -91,6 +92,15 @@ pub struct DaemonConfig {
     /// §Durability); `None` keeps the daemon fully in-memory (the seed
     /// behavior).
     pub durability: Option<DurabilityConfig>,
+    /// Scheduler shard count. `1` (the default) is exactly the unsharded
+    /// daemon: one scheduler mutex over the whole cluster. `> 1` splits the
+    /// back end into one scheduler per partition over disjoint node slices
+    /// (see [`SchedShards`]); the count is clamped to the layout's
+    /// partition count and falls back to `1` when the cluster or layout
+    /// cannot shard. Incompatible with `durability` (the journal's
+    /// id-determinism contract assumes one scheduler) — `Daemon::new`
+    /// panics on that combination rather than silently dropping either.
+    pub shard_count: usize,
 }
 
 impl Default for DaemonConfig {
@@ -101,6 +111,7 @@ impl Default for DaemonConfig {
             retire_grace_secs: Some(3600.0),
             history_cap: Some(100_000),
             durability: None,
+            shard_count: 1,
         }
     }
 }
@@ -147,9 +158,14 @@ pub enum LineOutcome {
 
 /// The daemon: scheduler write path + published read snapshot + WAIT hub.
 pub struct Daemon {
-    sched: Mutex<Scheduler>,
+    /// The scheduler back end: one shard (the unsharded daemon) or one per
+    /// partition ([`DaemonConfig::shard_count`]). Each shard has its own
+    /// mutex; the read path below never takes any of them.
+    shards: SchedShards,
     /// The published read view (see [`SchedSnapshot`]). Swapped, never
-    /// mutated: readers clone the `Arc` under a momentary read lock.
+    /// mutated: readers clone the `Arc` under a momentary read lock. In
+    /// sharded mode this holds the epoch-stamped merge of the per-shard
+    /// snapshot slots.
     snapshot: RwLock<Arc<SchedSnapshot>>,
     hub: WaitHub,
     /// Daemon metrics (public for the e2e driver's reporting).
@@ -229,12 +245,21 @@ impl Daemon {
     /// durability guarantee would be worse than one that failed to boot
     /// (use [`Daemon::recover`] on a non-empty journal directory).
     pub fn new(cluster: Cluster, sched_cfg: SchedulerConfig, cfg: DaemonConfig) -> Arc<Self> {
-        let sched = Scheduler::new(cluster, sched_cfg);
+        assert!(
+            cfg.shard_count <= 1 || cfg.durability.is_none(),
+            "durability requires shard_count = 1 (the journal's id-determinism \
+             contract assumes one scheduler)"
+        );
+        let shards = if cfg.shard_count > 1 {
+            SchedShards::sharded(cluster, sched_cfg, cfg.shard_count)
+        } else {
+            SchedShards::single(cluster, sched_cfg)
+        };
         let journal = cfg
             .durability
             .as_ref()
             .map(|d| Journal::create(d).expect("creating the write-ahead journal"));
-        Self::assemble(sched, cfg, journal, ManifestRegistry::new(), Vec::new())
+        Self::assemble(shards, cfg, journal, ManifestRegistry::new(), Vec::new())
     }
 
     /// Recover a daemon from an existing journal: replay the newest
@@ -256,8 +281,10 @@ impl Daemon {
         let (journal, recovered) = Journal::recover(dcfg)?;
         let rebuilt = rebuild(cluster, sched_cfg, &recovered)?;
         let report = rebuilt.report;
+        // Recovery is single-shard by contract (enforced in `new` for the
+        // daemon that wrote the journal).
         let daemon = Self::assemble(
-            rebuilt.sched,
+            SchedShards::single_from(rebuilt.sched),
             cfg,
             Some(journal),
             rebuilt.registry,
@@ -267,23 +294,28 @@ impl Daemon {
     }
 
     fn assemble(
-        sched: Scheduler,
+        shards: SchedShards,
         cfg: DaemonConfig,
         journal: Option<Journal>,
         registry: ManifestRegistry,
         history_seed: Vec<JobView>,
     ) -> Arc<Self> {
-        let virtual_base = sched.now();
         // Re-arm the latency-harvest bookkeeping for interactive jobs that
         // were admitted but had not dispatched when the state was captured
-        // (no-op on a fresh scheduler).
+        // (no-op on a fresh scheduler). Fresh sharded daemons start empty,
+        // but the sweep stays shard-agnostic for uniformity.
+        let mut virtual_base = SimTime::ZERO;
         let mut tracked = BTreeSet::new();
-        for job in sched.jobs() {
-            if job.spec.qos == QosClass::Normal
-                && !job.state.is_terminal()
-                && sched.log().last(job.id, LogKind::DispatchDone).is_none()
-            {
-                tracked.insert(job.id);
+        for idx in 0..shards.count() {
+            let sched = shards.lock(idx);
+            virtual_base = virtual_base.max(sched.now());
+            for job in sched.jobs() {
+                if job.spec.qos == QosClass::Normal
+                    && !job.state.is_terminal()
+                    && sched.log().last(job.id, LogKind::DispatchDone).is_none()
+                {
+                    tracked.insert(job.id);
+                }
             }
         }
         // Seed the history table through the same capped insert path as
@@ -293,9 +325,13 @@ impl Daemon {
         for v in history_seed {
             history.insert_capped(v.id, Arc::new(v), cfg.history_cap);
         }
-        let snapshot = Arc::new(SchedSnapshot::capture(&sched, None));
+        let snapshot = if shards.is_sharded() {
+            shards.merged_snapshot()
+        } else {
+            shards.shard_snapshot(0)
+        };
         Arc::new(Self {
-            sched: Mutex::new(sched),
+            shards,
             snapshot: RwLock::new(snapshot),
             hub: WaitHub::default(),
             metrics: DaemonMetrics::default(),
@@ -330,19 +366,64 @@ impl Daemon {
 
     // ---- write path --------------------------------------------------------
 
-    /// Run a mutating operation under the scheduler mutex, publish a fresh
-    /// snapshot before releasing it, and account the lock hold time. Every
-    /// scheduler write goes through here or [`Daemon::pace`]; the read path
-    /// never takes this lock.
+    /// Run a mutating operation under shard 0's scheduler mutex (the whole
+    /// scheduler in single-shard mode). Kept as the name every single-shard
+    /// write site uses; sharded call sites route via
+    /// [`Daemon::with_shard_mut`].
     fn with_sched_mut<T>(&self, f: impl FnOnce(&mut Scheduler) -> T) -> T {
-        let mut sched = self.sched.lock().expect("scheduler poisoned");
+        self.with_shard_mut(0, f)
+    }
+
+    /// Run a mutating operation under one shard's scheduler mutex, publish
+    /// a fresh snapshot, and account the lock hold time. Every scheduler
+    /// write goes through here (or the multi-shard `MSUBMIT` path); the
+    /// read path never takes these locks.
+    ///
+    /// Single-shard mode publishes directly under the lock (exactly the
+    /// unsharded daemon). Sharded mode stores the shard's snapshot slot
+    /// under the lock, then merges and swaps the global snapshot *after*
+    /// releasing it — the epoch sequence keeps racing publishes monotone.
+    fn with_shard_mut<T>(&self, idx: usize, f: impl FnOnce(&mut Scheduler) -> T) -> T {
+        let sharded = self.shards.is_sharded();
+        let mut sched = self.shards.lock(idx);
         let t0 = Instant::now(); // hold time, not acquisition wait
         let out = f(&mut sched);
-        self.publish_locked(&sched);
+        if sharded {
+            self.shards.store_snapshot(idx, &sched);
+        } else {
+            self.publish_locked(&sched);
+        }
         let hold_ns = t0.elapsed().as_nanos() as u64;
         drop(sched);
+        self.shards.record_hold(idx, hold_ns);
         self.metrics.record_write_lock(hold_ns);
+        if sharded {
+            self.publish_merged();
+        }
         out
+    }
+
+    /// Sharded publish: merge every shard's snapshot slot into one
+    /// epoch-stamped global view and swap it in if (and only if) it is
+    /// newer than the published one. Called outside the shard mutexes;
+    /// concurrent merges race benignly — the oldest loses the swap.
+    fn publish_merged(&self) {
+        let next = self.shards.merged_snapshot();
+        let prev = Arc::clone(&self.snapshot.read().expect("snapshot poisoned"));
+        if next.version <= prev.version {
+            return;
+        }
+        let progressed =
+            next.stats.dispatches != prev.stats.dispatches || next.ended != prev.ended;
+        {
+            let mut slot = self.snapshot.write().expect("snapshot poisoned");
+            if next.version > slot.version {
+                *slot = next;
+            }
+        }
+        if progressed {
+            self.hub.notify();
+        }
     }
 
     /// Capture + swap the published snapshot. Must be called with the
@@ -437,11 +518,20 @@ impl Daemon {
         }
     }
 
-    /// Advance the scheduler to the current wall-paced virtual time, harvest
-    /// newly dispatched tracked jobs into the metrics, retire old terminal
-    /// jobs into the history side-table, and publish.
+    /// Advance every scheduler shard to the current wall-paced virtual
+    /// time, harvest newly dispatched tracked jobs into the metrics, retire
+    /// old terminal jobs into the history side-table, and publish.
     pub fn pace(&self) {
-        self.with_sched_mut(|sched| {
+        for idx in 0..self.shards.count() {
+            self.pace_shard(idx);
+        }
+    }
+
+    /// Pace one shard. The tracked-job harvest is shard-agnostic: ids that
+    /// live on another shard simply have no `DispatchDone` record in this
+    /// shard's log and stay tracked until their own shard's sweep.
+    fn pace_shard(&self, idx: usize) {
+        self.with_shard_mut(idx, |sched| {
             let target = self.target_now();
             if target > sched.now() {
                 sched.run_until(target);
@@ -546,8 +636,69 @@ impl Daemon {
     /// that cannot complete immediately comes back as
     /// [`LineOutcome::Parked`] for the transport to resume later.
     pub fn handle_line_nonblocking(&self, line: &str, version: ProtocolVersion) -> LineOutcome {
+        self.handle_line_stateful(line, version, None)
+    }
+
+    /// [`Daemon::handle_line_nonblocking`] with connection-level chunked
+    /// `MSUBMIT` state. The transport owns one [`ChunkAssembler`] per
+    /// connection: v2.1 chunk records accumulate in it (intermediate parts
+    /// answer `chunk_ack`, the final part admits the assembled manifest
+    /// atomically), and while a stream is open *any* other line — a
+    /// different verb or even an unparseable one — discards the partial
+    /// manifest with a typed error. A chunked stream is never resumable:
+    /// after any error the client re-sends from part 1.
+    pub fn handle_line_stateful(
+        &self,
+        line: &str,
+        version: ProtocolVersion,
+        assembler: Option<&mut ChunkAssembler>,
+    ) -> LineOutcome {
         let t0 = Instant::now();
-        let (resp, render_version, negotiated) = match codec::parse_request(line, version) {
+        let parsed = codec::parse_request(line, version);
+        let parsed = match (parsed, assembler) {
+            (Ok(Request::MSubmitChunk(chunk)), Some(asm)) => {
+                self.metrics.record_command("MSUBMIT");
+                let resp = match asm.push(chunk) {
+                    Ok(ChunkOutcome::Partial {
+                        part,
+                        parts,
+                        received,
+                    }) => Response::ChunkAck {
+                        part,
+                        parts,
+                        received,
+                    },
+                    Ok(ChunkOutcome::Complete(manifest)) => self.msubmit_assembled(&manifest),
+                    Err(e) => Response::Error(e),
+                };
+                let ok = !matches!(resp, Response::Error(_));
+                self.metrics.record_request(ok, t0.elapsed().as_nanos() as u64);
+                return LineOutcome::Done(codec::render_response(&resp, version), None);
+            }
+            (parsed, Some(asm)) if asm.in_progress() => {
+                asm.abort();
+                if let Ok(req) = &parsed {
+                    self.metrics.record_command(req.command_name());
+                }
+                let resp = Response::Error(ApiError::unsupported(
+                    "a chunked MSUBMIT stream was open: partial manifest discarded \
+                     (re-send from part 1)",
+                ));
+                self.metrics.record_request(false, t0.elapsed().as_nanos() as u64);
+                return LineOutcome::Done(codec::render_response(&resp, version), None);
+            }
+            (parsed, _) => parsed,
+        };
+        self.handle_parsed(parsed, version, t0)
+    }
+
+    fn handle_parsed(
+        &self,
+        parsed: Result<Request, ApiError>,
+        version: ProtocolVersion,
+        t0: Instant,
+    ) -> LineOutcome {
+        let (resp, render_version, negotiated) = match parsed {
             Ok(req) => {
                 self.metrics.record_command(req.command_name());
                 if let Request::Wait { jobs, timeout_secs } = &req {
@@ -613,23 +764,44 @@ impl Daemon {
             }
             Request::Submit(spec) => self.handle_submit(&spec),
             Request::MSubmit(manifest) => self.handle_msubmit(&manifest),
+            Request::MSubmitChunk(chunk) => {
+                // The transport owns the per-connection stream (see
+                // [`super::server`]); a chunk reaching the typed path
+                // directly can only be a complete single-part stream.
+                match ChunkAssembler::new().push(chunk) {
+                    Ok(ChunkOutcome::Complete(m)) => self.msubmit_assembled(&m),
+                    Ok(ChunkOutcome::Partial { .. }) => Response::Error(ApiError::unsupported(
+                        "multi-part MSUBMIT needs a connection-level stream",
+                    )),
+                    Err(e) => Response::Error(e),
+                }
+            }
             Request::Scancel(id) => {
-                let cancelled = self.with_sched_mut(|sched| {
-                    if !sched.cancel(JobId(id)) {
-                        return Ok(false);
+                // Sharded mode cannot route a bare job id (ids are global,
+                // shard-blind), so probe each shard in turn; `cancel` on a
+                // shard that does not own the id is a read-only miss.
+                let mut cancelled = Ok(false);
+                for idx in 0..self.shards.count() {
+                    cancelled = self.with_shard_mut(idx, |sched| {
+                        if !sched.cancel(JobId(id)) {
+                            return Ok(false);
+                        }
+                        // Cancel is mutate-then-append: the scheduler state is
+                        // already changed, so a journal failure here leaves the
+                        // cancel applied but *unacked* — the client retries and
+                        // lands on the tolerant-replay path. This is the
+                        // documented at-least-once edge (see PROTOCOL.md).
+                        self.journal_append(&JournalRecord::Cancel {
+                            vtime: sched.now(),
+                            id,
+                        })?;
+                        self.maybe_checkpoint_locked(sched);
+                        Ok::<_, ApiError>(true)
+                    });
+                    if !matches!(cancelled, Ok(false)) {
+                        break;
                     }
-                    // Cancel is mutate-then-append: the scheduler state is
-                    // already changed, so a journal failure here leaves the
-                    // cancel applied but *unacked* — the client retries and
-                    // lands on the tolerant-replay path. This is the
-                    // documented at-least-once edge (see PROTOCOL.md).
-                    self.journal_append(&JournalRecord::Cancel {
-                        vtime: sched.now(),
-                        id,
-                    })?;
-                    self.maybe_checkpoint_locked(sched);
-                    Ok::<_, ApiError>(true)
-                });
+                }
                 match cancelled {
                     Ok(true) => Response::Cancelled(id),
                     Ok(false) => Response::Error(ApiError::not_found(format!(
@@ -713,13 +885,24 @@ impl Daemon {
         let specs = Self::materialize(spec);
         let batched = spec.count > 1;
         let total_jobs = specs.len() as u64;
-        let ids = self.with_sched_mut(|sched| {
+        // Route by QoS: in sharded mode the submission lands on its
+        // partition's shard; shard 0 (the whole scheduler) otherwise.
+        let shard = self.shards.shard_for(spec.qos);
+        let ids = self.with_shard_mut(shard, |sched| {
             // Keep the virtual clock caught up so submissions land "now"
             // (computed under the lock: a stale target would backdate the
             // submission by the lock-wait time × speedup).
             let target = self.target_now();
             if target > sched.now() {
                 sched.run_until(target);
+            }
+            if self.shards.is_sharded() {
+                // Reserve a contiguous global id range while holding this
+                // shard's mutex (the ordering contract that keeps shard
+                // counters behind the global allocator), and fast-forward
+                // the shard's own counter to it.
+                let first = self.shards.allocate_ids(total_jobs);
+                sched.force_next_id(first);
             }
             if self.journal.is_some() {
                 // Write-ahead: journal the admission (as one synthesized
@@ -775,10 +958,22 @@ impl Daemon {
     /// batched arrival instant ([`Scheduler::submit_batch`]) — and report
     /// per-entry id ranges plus typed per-entry rejects (partial accept).
     fn handle_msubmit(&self, manifest: &Manifest) -> Response {
-        if manifest.entries.len() > MAX_MANIFEST_ENTRIES {
+        self.handle_msubmit_capped(manifest, MAX_MANIFEST_ENTRIES)
+    }
+
+    /// Admit a manifest assembled from a chunked (v2.1) `MSUBMIT` stream:
+    /// the per-line entry cap no longer applies, only the chunked cap and
+    /// the aggregate job cap. The transport calls this when its
+    /// [`ChunkAssembler`] completes.
+    pub fn msubmit_assembled(&self, manifest: &Manifest) -> Response {
+        self.handle_msubmit_capped(manifest, MAX_CHUNKED_MANIFEST_ENTRIES)
+    }
+
+    fn handle_msubmit_capped(&self, manifest: &Manifest, cap: usize) -> Response {
+        if manifest.entries.len() > cap {
             return Response::Error(ApiError::bad_arg(
                 "entries",
-                &format!("{} (cap {MAX_MANIFEST_ENTRIES})", manifest.entries.len()),
+                &format!("{} (cap {cap})", manifest.entries.len()),
             ));
         }
         let mut rejected = Vec::new();
@@ -815,6 +1010,14 @@ impl Daemon {
         }
         let (ids, manifest_id) = if specs.is_empty() {
             (Vec::new(), None)
+        } else if self.shards.is_sharded() {
+            // Cross-partition manifests lock every touched shard and land
+            // as one contiguous global id range — see
+            // [`Daemon::admit_manifest_sharded`].
+            match self.admit_manifest_sharded(manifest, &spans, specs, total_jobs) {
+                Ok(pair) => pair,
+                Err(e) => return Response::Error(e),
+            }
         } else {
             // A manifest with at least one accepted entry gets a registry
             // id; the id is pre-read so the journal record carries it (the
@@ -899,6 +1102,99 @@ impl Daemon {
             jobs: ids.len() as u64,
             manifest: manifest_id,
         })
+    }
+
+    /// Sharded manifest admission. Accepted entries are grouped into
+    /// consecutive same-shard runs (manifest order preserved); every
+    /// touched shard is locked in **ascending index order** (the global
+    /// lock order that keeps cross-partition manifests deadlock-free),
+    /// then ONE contiguous global id range is reserved and split across
+    /// the runs with [`Scheduler::force_next_id`] — so a heterogeneous
+    /// manifest's ids are contiguous and ascending in manifest order even
+    /// when its entries land on different schedulers. Registration happens
+    /// while all touched shards are still locked; the merged snapshot is
+    /// published once, after the locks drop. (A publish racing from
+    /// another writer may momentarily merge a prefix of the touched
+    /// shards' slots — admission itself, the id range, and the ack are
+    /// atomic regardless.)
+    fn admit_manifest_sharded(
+        &self,
+        manifest: &Manifest,
+        spans: &[(usize, usize, usize)],
+        specs: Vec<JobSpec>,
+        total_jobs: u64,
+    ) -> Result<(Vec<JobId>, Option<u64>), ApiError> {
+        debug_assert!(self.journal.is_none(), "durability is single-shard only");
+        // Consecutive same-shard entries collapse into one submit_batch.
+        let mut runs: Vec<(usize, usize)> = Vec::new(); // (shard, jobs)
+        for &(i, _, len) in spans {
+            let shard = self.shards.shard_for(manifest.entries[i].qos);
+            match runs.last_mut() {
+                Some((s, n)) if *s == shard => *n += len,
+                _ => runs.push((shard, len)),
+            }
+        }
+        let mut touched: Vec<usize> = runs.iter().map(|&(s, _)| s).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        let mut guards: Vec<(usize, std::sync::MutexGuard<'_, Scheduler>)> = touched
+            .iter()
+            .map(|&idx| (idx, self.shards.lock(idx)))
+            .collect();
+        let t0 = Instant::now();
+        // Clock catch-up on every touched shard, so the whole manifest
+        // lands at one virtual instant on each of them.
+        let target = self.target_now();
+        for (_, g) in guards.iter_mut() {
+            if target > g.now() {
+                g.run_until(target);
+            }
+        }
+        let first = self.shards.allocate_ids(total_jobs);
+        let mid = self.manifests.read().expect("manifests poisoned").next_id();
+        let mut ids: Vec<JobId> = Vec::with_capacity(total_jobs as usize);
+        let mut spec_iter = specs.into_iter();
+        let mut next = first;
+        for &(shard, n) in &runs {
+            let pos = guards
+                .iter()
+                .position(|&(s, _)| s == shard)
+                .expect("run shard is locked");
+            let g = &mut guards[pos].1;
+            g.force_next_id(next);
+            let run_specs: Vec<JobSpec> = spec_iter.by_ref().take(n).collect();
+            let run_ids = g.submit_batch(run_specs);
+            debug_assert_eq!(run_ids.first().map(|j| j.0), Some(next));
+            ids.extend(run_ids);
+            next += n as u64;
+        }
+        debug_assert_eq!(next, first + total_jobs);
+        let reg_spans = spans
+            .iter()
+            .map(|&(i, start, len)| ManifestSpan {
+                index: i as u32,
+                first: ids[start].0,
+                count: len as u64,
+                tag: manifest.entries[i].tag.clone(),
+            })
+            .collect();
+        let registered = self
+            .manifests
+            .write()
+            .expect("manifests poisoned")
+            .register(reg_spans);
+        debug_assert_eq!(registered, Some(mid));
+        for (idx, g) in guards.iter() {
+            self.shards.store_snapshot(*idx, g);
+        }
+        let hold_ns = t0.elapsed().as_nanos() as u64;
+        drop(guards);
+        for &idx in &touched {
+            self.shards.record_hold(idx, hold_ns);
+        }
+        self.metrics.record_write_lock(hold_ns);
+        self.publish_merged();
+        Ok((ids, Some(mid)))
     }
 
     fn handle_squeue(&self, filter: &SqueueFilter) -> Response {
@@ -1210,7 +1506,45 @@ impl Daemon {
                 .map(|(cmd, n)| (cmd.to_ascii_lowercase(), n))
                 .collect(),
             contention: Some(self.contention_stats()),
+            shards: self.shard_stats(),
         }
+    }
+
+    /// Per-shard stat rows: one `kind=reactor` row per registered reactor
+    /// shard, plus one `kind=sched` row per scheduler shard when the back
+    /// end is sharded. Empty on an unsharded daemon with no reactor (the
+    /// v1-compatible shape).
+    fn shard_stats(&self) -> Vec<ShardStats> {
+        let mut rows = Vec::new();
+        for r in self.metrics.reactor_shards() {
+            rows.push(ShardStats {
+                kind: ShardKind::Reactor,
+                index: r.index as u32,
+                label: "reactor".to_string(),
+                wakeups: r.wakeups.load(Ordering::Relaxed),
+                events: r.ready_events.load(Ordering::Relaxed),
+                connections: r.connections.load(Ordering::Relaxed),
+                parked: r.parked_waits.load(Ordering::Relaxed),
+                queue_depth: 0,
+                lock_hold_p99_ns: 0,
+            });
+        }
+        if self.shards.is_sharded() {
+            for s in self.shards.stats() {
+                rows.push(ShardStats {
+                    kind: ShardKind::Sched,
+                    index: s.index as u32,
+                    label: s.label,
+                    wakeups: s.locks,
+                    events: s.dispatches,
+                    connections: 0,
+                    parked: 0,
+                    queue_depth: s.pending as u64,
+                    lock_hold_p99_ns: s.lock_hold_p99_ns,
+                });
+            }
+        }
+        rows
     }
 
     /// Lock-path contention counters for the STATS v2 extension.
@@ -1230,6 +1564,25 @@ impl Daemon {
 
     fn util_snapshot(&self) -> UtilSnapshot {
         let snap = self.read_snapshot();
+        let shards = if self.shards.is_sharded() {
+            let stats = self.shards.stats();
+            (0..self.shards.count())
+                .map(|idx| {
+                    let s = self.shards.shard_snapshot(idx);
+                    ShardUtil {
+                        index: idx as u32,
+                        label: stats[idx].label.clone(),
+                        utilization: s.cluster.utilization,
+                        idle_cores: s.cluster.idle_cores,
+                        total_cores: s.cluster.total_cores,
+                        pending: s.pending,
+                        running: s.running,
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         UtilSnapshot {
             utilization: snap.cluster.utilization,
             idle_cores: snap.cluster.idle_cores,
@@ -1237,13 +1590,26 @@ impl Daemon {
             total_cores: snap.cluster.total_cores,
             pending: snap.pending,
             running: snap.running,
+            shards,
         }
     }
 
-    /// Lock and inspect the scheduler (tests + e2e reporting).
+    /// Lock and inspect shard 0's scheduler — the whole scheduler on an
+    /// unsharded daemon (tests + e2e reporting).
     pub fn with_scheduler<T>(&self, f: impl FnOnce(&Scheduler) -> T) -> T {
-        let sched = self.sched.lock().expect("scheduler poisoned");
+        let sched = self.shards.lock(0);
         f(&sched)
+    }
+
+    /// Lock and inspect one shard's scheduler (sharded tests).
+    pub fn with_shard<T>(&self, idx: usize, f: impl FnOnce(&Scheduler) -> T) -> T {
+        let sched = self.shards.lock(idx);
+        f(&sched)
+    }
+
+    /// Scheduler shard count (1 on an unsharded daemon).
+    pub fn shard_count(&self) -> usize {
+        self.shards.count()
     }
 }
 
@@ -1894,7 +2260,7 @@ mod tests {
             pacer_tick_ms: 1,
             retire_grace_secs: Some(2.0),
             history_cap: Some(2),
-            durability: None,
+            ..DaemonConfig::default()
         });
         let mut ids = Vec::new();
         for run in [1.0, 2.0, 3.0] {
@@ -2242,6 +2608,225 @@ mod tests {
                 assert!(!w.timed_out, "settled history job must not re-wait");
                 assert_eq!(w.dispatched, 1);
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // ---- scheduler sharding -----------------------------------------------
+
+    /// A two-shard daemon with a frozen clock (admission-focused tests:
+    /// nothing dispatches until `pace` runs at speedup > 0).
+    fn sharded_daemon(speedup: f64) -> Arc<Daemon> {
+        daemon_with(DaemonConfig {
+            speedup,
+            pacer_tick_ms: 1,
+            shard_count: 2,
+            ..DaemonConfig::default()
+        })
+    }
+
+    #[test]
+    fn sharded_daemon_routes_by_qos_and_merges_the_read_view() {
+        let d = sharded_daemon(0.0);
+        assert_eq!(d.shard_count(), 2);
+        let a = match d.handle(Request::Submit(SubmitSpec::new(
+            QosClass::Normal,
+            JobType::Array,
+            8,
+            1,
+        ))) {
+            Response::SubmitAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let b = match d.handle(Request::Submit(SubmitSpec::new(
+            QosClass::Spot,
+            JobType::Array,
+            16,
+            9,
+        ))) {
+            Response::SubmitAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        // Global ids: unique and allocator-ordered across shards.
+        assert_eq!((a.first, b.first), (1, 2));
+        // Each job lives on exactly its partition's shard…
+        assert_eq!(d.with_shard(0, |s| s.jobs().count()), 1, "interactive shard");
+        assert_eq!(d.with_shard(1, |s| s.jobs().count()), 1, "spot shard");
+        d.with_shard(0, |s| assert!(s.job(JobId(1)).is_some()));
+        d.with_shard(1, |s| assert!(s.job(JobId(2)).is_some()));
+        // …while the merged read view shows both, shard-blind.
+        let snap = d.read_snapshot();
+        assert!(snap.job(1).is_some() && snap.job(2).is_some());
+        assert_eq!(snap.pending, 2);
+        match d.handle(Request::Squeue(SqueueFilter::default())) {
+            Response::Jobs(rows) => assert_eq!(rows.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_msubmit_spans_partitions_with_contiguous_ids() {
+        let d = sharded_daemon(0.0);
+        // Interactive / spot / interactive: three runs across two shards.
+        let m = ManifestBuilder::new()
+            .interactive(1, JobType::Array, 8)
+            .spot(9, JobType::Array, 64)
+            .last(|e| e.with_count(2))
+            .interactive(2, JobType::Individual, 3)
+            .build();
+        let ack = match d.handle(Request::MSubmit(m)) {
+            Response::ManifestAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(ack.rejected.len(), 0);
+        assert_eq!(ack.jobs, 1 + 2 + 3);
+        // One contiguous global range, ascending in manifest order.
+        assert_eq!(ack.job_ids(), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(ack.entry(0).unwrap().first, 1);
+        assert_eq!(ack.entry(1).unwrap().ids().collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(ack.entry(2).unwrap().first, 4);
+        // Jobs landed on their partitions' shards, invariants intact.
+        assert_eq!(d.with_shard(0, |s| s.jobs().count()), 4);
+        assert_eq!(d.with_shard(1, |s| s.jobs().count()), 2);
+        for idx in 0..2 {
+            d.with_shard(idx, |s| s.check_invariants().expect("shard invariants"));
+        }
+        // The registry resolves entries for RESUME / per-entry WAIT.
+        match d.handle(Request::Resume(ResumeTarget::Manifest(ack.manifest.unwrap()))) {
+            Response::Resume(info) => assert_eq!(info.entries.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_scancel_finds_the_owning_shard() {
+        let d = sharded_daemon(0.0);
+        d.handle(Request::Submit(SubmitSpec::new(QosClass::Normal, JobType::Array, 8, 1)));
+        d.handle(Request::Submit(SubmitSpec::new(QosClass::Spot, JobType::Array, 16, 9)));
+        // The spot job lives on shard 1 — the probe must find it there.
+        match d.handle(Request::Scancel(2)) {
+            Response::Cancelled(2) => {}
+            other => panic!("{other:?}"),
+        }
+        match d.handle(Request::Sjob(2)) {
+            Response::Job(detail) => assert_eq!(detail.state, JobState::Cancelled),
+            other => panic!("{other:?}"),
+        }
+        // Unknown ids stay typed not_found after probing every shard.
+        match d.handle(Request::Scancel(99)) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::NotFound),
+            other => panic!("{other:?}"),
+        }
+        for idx in 0..2 {
+            d.with_shard(idx, |s| s.check_invariants().expect("shard invariants"));
+        }
+    }
+
+    #[test]
+    fn sharded_wait_resolves_across_shards_exactly_once() {
+        // Real pacing: the spot job dispatches on shard 1 while the WAIT
+        // entered through the shard-agnostic typed path.
+        let d = sharded_daemon(10_000.0);
+        let ack = match d.handle(Request::Submit(SubmitSpec::new(
+            QosClass::Spot,
+            JobType::Array,
+            16,
+            9,
+        ))) {
+            Response::SubmitAck(a) => a,
+            other => panic!("{other:?}"),
+        };
+        match d.handle(Request::Wait {
+            jobs: vec![ack.first],
+            timeout_secs: 10.0,
+        }) {
+            Response::Wait(w) => {
+                assert!(!w.timed_out, "spot dispatch must resolve the wait");
+                assert_eq!(w.dispatched, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(d.metrics.waits_resumed.load(Ordering::Relaxed), 1, "exactly once");
+    }
+
+    #[test]
+    fn sharded_stats_and_util_expose_shard_rows() {
+        let d = sharded_daemon(0.0);
+        d.handle(Request::Submit(SubmitSpec::new(QosClass::Spot, JobType::Array, 16, 9)));
+        let stats = match d.handle(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("{other:?}"),
+        };
+        let sched_rows: Vec<_> = stats
+            .shards
+            .iter()
+            .filter(|s| s.kind == ShardKind::Sched)
+            .collect();
+        assert_eq!(sched_rows.len(), 2);
+        assert_eq!(sched_rows[0].label, "interactive");
+        assert_eq!(sched_rows[1].label, "spot");
+        assert_eq!(sched_rows[1].queue_depth, 1, "spot queue depth from its slot");
+        assert!(sched_rows[1].wakeups >= 1, "submit locked the spot shard");
+        let util = match d.handle(Request::Util) {
+            Response::Util(u) => u,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(util.shards.len(), 2);
+        assert_eq!(
+            util.shards.iter().map(|s| s.total_cores).sum::<u32>(),
+            util.total_cores,
+            "shard slices cover the whole pool"
+        );
+        assert_eq!(util.shards[1].pending, 1);
+        // The unsharded daemon keeps the v1-compatible empty shape.
+        let d1 = daemon();
+        match d1.handle(Request::Util) {
+            Response::Util(u) => assert!(u.shards.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "durability requires shard_count = 1")]
+    fn durability_with_shards_is_rejected_at_boot() {
+        let tmp = crate::testkit::crash::TempDir::new("shards-durability");
+        daemon_with(DaemonConfig {
+            speedup: 0.0,
+            shard_count: 2,
+            durability: Some(DurabilityConfig::new(tmp.path())),
+            ..DaemonConfig::default()
+        });
+    }
+
+    #[test]
+    fn single_part_chunk_admits_through_the_typed_path() {
+        use crate::coordinator::manifest::ManifestChunk;
+        let d = daemon();
+        let chunk = ManifestChunk {
+            entries: 2,
+            part: 1,
+            parts: 1,
+            records: vec![
+                ManifestEntry::new(QosClass::Normal, JobType::Array, 8, 1),
+                ManifestEntry::new(QosClass::Spot, JobType::Array, 16, 9),
+            ],
+        };
+        match d.handle(Request::MSubmitChunk(chunk)) {
+            Response::ManifestAck(a) => {
+                assert_eq!(a.accepted.len(), 2);
+                assert_eq!(a.jobs, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        // A multi-part chunk cannot be assembled without a connection.
+        let partial = ManifestChunk {
+            entries: 4,
+            part: 1,
+            parts: 2,
+            records: vec![ManifestEntry::new(QosClass::Spot, JobType::Array, 8, 9)],
+        };
+        match d.handle(Request::MSubmitChunk(partial)) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::Unsupported),
             other => panic!("{other:?}"),
         }
     }

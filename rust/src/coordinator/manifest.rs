@@ -36,6 +36,19 @@ pub const MAX_MANIFEST_ENTRIES: usize = 12_000;
 /// Cap on tag length (bytes).
 pub const MAX_TAG_LEN: usize = 64;
 
+/// Cap on the *declared* entry total of a chunked (v2.1) `MSUBMIT` stream.
+/// Each part still obeys the per-line limits (so a part can carry at most
+/// [`MAX_MANIFEST_ENTRIES`]-ish records), but the assembled manifest may be
+/// far larger than one line allows. The cap bounds per-connection assembler
+/// memory: at ~100 bytes per buffered entry the worst case stays in the
+/// tens of megabytes, and the daemon's aggregate
+/// [`super::daemon::MAX_BATCH_JOBS`] job cap still applies at admission.
+pub const MAX_CHUNKED_MANIFEST_ENTRIES: usize = 250_000;
+
+/// Cap on parts in one chunked stream (desync and slow-loris bound; with
+/// non-empty parts this is also a floor on per-part progress).
+pub const MAX_CHUNK_PARTS: u32 = 1024;
+
 /// Is `tag` a legal manifest tag? One token of `[A-Za-z0-9._:/-]`, 1 to
 /// [`MAX_TAG_LEN`] bytes — whitespace-free and record-separator-free by
 /// construction, so tags can never desync the wire.
@@ -264,6 +277,169 @@ impl ManifestBuilder {
         Manifest {
             entries: self.entries,
         }
+    }
+}
+
+/// One part of a streaming (chunked) v2.1 `MSUBMIT` body.
+///
+/// The wire form is `MSUBMIT entries=<n> part=<i>/<k>;<record>;...` — the
+/// client declares the manifest's total entry count up front, then streams
+/// the entries across `k` consecutive request lines on one connection. The
+/// declaration is repeated on every part so a desynchronized stream is
+/// detected at the first mismatched part, not at the end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestChunk {
+    /// Total entries the client declared for the whole manifest.
+    pub entries: u32,
+    /// This part's index, 1-based.
+    pub part: u32,
+    /// Total parts the stream will carry.
+    pub parts: u32,
+    /// The entries carried by this part, in manifest order.
+    pub records: Vec<ManifestEntry>,
+}
+
+/// Outcome of feeding one part to a [`ChunkAssembler`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChunkOutcome {
+    /// Intermediate part buffered — answer with `Response::ChunkAck`.
+    Partial {
+        /// The part just received (1-based).
+        part: u32,
+        /// Total parts the client declared.
+        parts: u32,
+        /// Entries buffered so far across the received parts.
+        received: u64,
+    },
+    /// Final part received: the fully assembled manifest, ready for the
+    /// normal `MSUBMIT` admission path (with the chunked entry cap).
+    Complete(Manifest),
+}
+
+#[derive(Debug)]
+struct Assembling {
+    declared: u32,
+    parts: u32,
+    next_part: u32,
+    entries: Vec<ManifestEntry>,
+}
+
+/// Per-connection assembler for chunked `MSUBMIT` bodies.
+///
+/// Strictly sequential: parts must arrive as `1..=k` with identical
+/// `entries=` and `/k` declarations and no other verb in between. Any
+/// violation **discards the partial manifest** and returns a typed error —
+/// the stream cannot resume mid-way, the client restarts from part 1. The
+/// transport owns one assembler per connection ([`super::server`] /
+/// `reactor`); the daemon itself stays connection-state-free.
+#[derive(Debug, Default)]
+pub struct ChunkAssembler {
+    state: Option<Assembling>,
+}
+
+impl ChunkAssembler {
+    /// An idle assembler.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Is a chunked stream mid-assembly on this connection?
+    pub fn in_progress(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Entries buffered so far (0 when idle).
+    pub fn received(&self) -> u64 {
+        self.state.as_ref().map_or(0, |a| a.entries.len() as u64)
+    }
+
+    /// Discard any partial stream (connection close, or an interrupting
+    /// verb). Returns `true` if a stream was actually in progress, so the
+    /// transport can surface a typed error for the abandoned body.
+    pub fn abort(&mut self) -> bool {
+        self.state.take().is_some()
+    }
+
+    /// Feed one part. On success returns [`ChunkOutcome::Partial`] (reply
+    /// `ChunkAck`) or [`ChunkOutcome::Complete`] (admit the manifest). On
+    /// any error the partial stream is discarded and the assembler is idle
+    /// again — errors are never resumable mid-stream.
+    pub fn push(&mut self, chunk: ManifestChunk) -> Result<ChunkOutcome, ApiError> {
+        if let Err(e) = Self::validate_shape(&chunk) {
+            self.state = None;
+            return Err(e);
+        }
+        let mut cur = match self.state.take() {
+            None => {
+                if chunk.part != 1 {
+                    return Err(ApiError::bad_arg(
+                        "part",
+                        &format!("{}/{} (no stream in progress; expected part 1)", chunk.part, chunk.parts),
+                    ));
+                }
+                Assembling {
+                    declared: chunk.entries,
+                    parts: chunk.parts,
+                    next_part: 1,
+                    entries: Vec::with_capacity((chunk.entries as usize).min(MAX_CHUNKED_MANIFEST_ENTRIES)),
+                }
+            }
+            Some(cur) => {
+                if chunk.part != cur.next_part || chunk.parts != cur.parts || chunk.entries != cur.declared {
+                    return Err(ApiError::bad_arg(
+                        "part",
+                        &format!(
+                            "entries={} part={}/{} (stream expected entries={} part={}/{}; partial manifest discarded)",
+                            chunk.entries, chunk.part, chunk.parts, cur.declared, cur.next_part, cur.parts
+                        ),
+                    ));
+                }
+                cur
+            }
+        };
+        cur.entries.extend(chunk.records);
+        if cur.entries.len() as u64 > u64::from(cur.declared) {
+            return Err(ApiError::bad_arg(
+                "entries",
+                &format!("{} received, {} declared (partial manifest discarded)", cur.entries.len(), cur.declared),
+            ));
+        }
+        if chunk.part == cur.parts {
+            if cur.entries.len() as u64 != u64::from(cur.declared) {
+                return Err(ApiError::bad_arg(
+                    "entries",
+                    &format!("final part closed the stream at {} entries, {} declared", cur.entries.len(), cur.declared),
+                ));
+            }
+            return Ok(ChunkOutcome::Complete(Manifest { entries: cur.entries }));
+        }
+        cur.next_part = chunk.part + 1;
+        let out = ChunkOutcome::Partial {
+            part: chunk.part,
+            parts: cur.parts,
+            received: cur.entries.len() as u64,
+        };
+        self.state = Some(cur);
+        Ok(out)
+    }
+
+    fn validate_shape(chunk: &ManifestChunk) -> Result<(), ApiError> {
+        if chunk.parts == 0 || chunk.parts > MAX_CHUNK_PARTS {
+            return Err(ApiError::bad_arg("parts", &chunk.parts.to_string()));
+        }
+        if chunk.part == 0 || chunk.part > chunk.parts {
+            return Err(ApiError::bad_arg(
+                "part",
+                &format!("{}/{}", chunk.part, chunk.parts),
+            ));
+        }
+        if chunk.entries == 0 || chunk.entries as usize > MAX_CHUNKED_MANIFEST_ENTRIES {
+            return Err(ApiError::bad_arg("entries", &chunk.entries.to_string()));
+        }
+        if chunk.records.is_empty() {
+            return Err(ApiError::bad_arg("records", "empty part"));
+        }
+        Ok(())
     }
 }
 
@@ -680,5 +856,119 @@ mod tests {
         // New registrations after restore continue the sequence.
         let next = rebuilt.register(vec![span(0, 7, 1, None)]).unwrap();
         assert_eq!(next, 3);
+    }
+
+    fn chunk(entries: u32, part: u32, parts: u32, users: &[u32]) -> ManifestChunk {
+        ManifestChunk {
+            entries,
+            part,
+            parts,
+            records: users
+                .iter()
+                .map(|&u| ManifestEntry::new(QosClass::Normal, JobType::Array, 4, u))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn assembler_streams_in_order_parts_into_one_manifest() {
+        let mut asm = ChunkAssembler::new();
+        assert!(!asm.in_progress());
+        assert_eq!(
+            asm.push(chunk(5, 1, 3, &[1, 2])).unwrap(),
+            ChunkOutcome::Partial { part: 1, parts: 3, received: 2 }
+        );
+        assert!(asm.in_progress());
+        assert_eq!(asm.received(), 2);
+        assert_eq!(
+            asm.push(chunk(5, 2, 3, &[3, 4])).unwrap(),
+            ChunkOutcome::Partial { part: 2, parts: 3, received: 4 }
+        );
+        let ChunkOutcome::Complete(m) = asm.push(chunk(5, 3, 3, &[5])).unwrap() else {
+            panic!("final part must complete the stream");
+        };
+        // Entry order is manifest order across parts.
+        assert_eq!(m.entries.iter().map(|e| e.user).collect::<Vec<_>>(), vec![1, 2, 3, 4, 5]);
+        assert!(!asm.in_progress(), "assembler idle after completion");
+        assert_eq!(asm.received(), 0);
+    }
+
+    #[test]
+    fn single_part_stream_completes_immediately() {
+        let mut asm = ChunkAssembler::new();
+        let ChunkOutcome::Complete(m) = asm.push(chunk(2, 1, 1, &[7, 8])).unwrap() else {
+            panic!("1/1 part must complete");
+        };
+        assert_eq!(m.entries.len(), 2);
+        assert!(!asm.in_progress());
+    }
+
+    #[test]
+    fn desynchronized_streams_discard_and_error() {
+        use crate::coordinator::api::ErrorCode;
+        // Starting mid-stream.
+        let mut asm = ChunkAssembler::new();
+        let err = asm.push(chunk(4, 2, 2, &[1])).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadArg);
+        assert!(!asm.in_progress());
+
+        // Mismatched declaration mid-stream discards the partial body.
+        asm.push(chunk(4, 1, 2, &[1, 2])).unwrap();
+        let err = asm.push(chunk(9, 2, 2, &[3, 4])).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadArg);
+        assert!(err.message.contains("discarded"), "{err}");
+        assert!(!asm.in_progress(), "partial manifest discarded on desync");
+
+        // Repeated part is a desync too.
+        asm.push(chunk(4, 1, 2, &[1, 2])).unwrap();
+        assert!(asm.push(chunk(4, 1, 2, &[1, 2])).is_err());
+        assert!(!asm.in_progress());
+
+        // A fresh part 1 after an error starts cleanly.
+        asm.push(chunk(2, 1, 2, &[1])).unwrap();
+        assert!(matches!(
+            asm.push(chunk(2, 2, 2, &[2])).unwrap(),
+            ChunkOutcome::Complete(_)
+        ));
+    }
+
+    #[test]
+    fn assembler_enforces_shape_and_count_caps() {
+        use crate::coordinator::api::ErrorCode;
+        let mut asm = ChunkAssembler::new();
+        for bad in [
+            chunk(0, 1, 2, &[1]),                                   // zero declared
+            chunk(MAX_CHUNKED_MANIFEST_ENTRIES as u32 + 1, 1, 2, &[1]), // over cap
+            chunk(4, 0, 2, &[1]),                                   // part 0
+            chunk(4, 3, 2, &[1]),                                   // part > parts
+            chunk(4, 1, 0, &[1]),                                   // zero parts
+            chunk(4, 1, MAX_CHUNK_PARTS + 1, &[1]),                 // parts over cap
+            chunk(4, 1, 2, &[]),                                    // empty part
+        ] {
+            let err = asm.push(bad).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadArg);
+            assert!(!asm.in_progress());
+        }
+
+        // Overflowing the declaration discards the stream.
+        asm.push(chunk(2, 1, 3, &[1, 2])).unwrap();
+        assert!(asm.push(chunk(2, 2, 3, &[3])).is_err());
+        assert!(!asm.in_progress());
+
+        // Closing short of the declaration is an error.
+        asm.push(chunk(5, 1, 2, &[1, 2])).unwrap();
+        let err = asm.push(chunk(5, 2, 2, &[3])).unwrap_err();
+        assert!(err.message.contains("5 declared"), "{err}");
+        assert!(!asm.in_progress());
+    }
+
+    #[test]
+    fn abort_discards_partial_state() {
+        let mut asm = ChunkAssembler::new();
+        assert!(!asm.abort(), "idle abort is a no-op");
+        asm.push(chunk(4, 1, 2, &[1, 2])).unwrap();
+        assert!(asm.abort(), "abort reports an in-progress stream");
+        assert!(!asm.in_progress());
+        assert_eq!(asm.received(), 0);
     }
 }

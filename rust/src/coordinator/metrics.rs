@@ -11,7 +11,52 @@
 use super::api::COMMANDS;
 use crate::metrics::LogHistogram;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+/// Per-reactor-shard counters. Each reactor thread owns one (registered
+/// via [`DaemonMetrics::register_reactor_shard`]) and records into it *in
+/// addition to* the daemon-wide roll-up counters, so the existing
+/// aggregate gates (`reactor_wakeups`, zero-idle-wakeup) keep meaning
+/// "across all shards" while `STATS` v2 can break the numbers out per
+/// shard.
+#[derive(Debug)]
+pub struct ReactorShardMetrics {
+    /// Shard index (registration order; shard 0 is the accept thread in
+    /// single-shard mode).
+    pub index: usize,
+    /// `epoll_wait` returns on this shard.
+    pub wakeups: AtomicU64,
+    /// Readiness events delivered across this shard's wakeups.
+    pub ready_events: AtomicU64,
+    /// Connections this shard accepted over its lifetime.
+    pub accepted: AtomicU64,
+    /// Connections currently open on this shard.
+    pub connections: AtomicU64,
+    /// `WAIT`s currently parked on this shard's connections.
+    pub parked_waits: AtomicU64,
+    /// Timer-wheel entries expired on this shard.
+    pub timers_fired: AtomicU64,
+}
+
+impl ReactorShardMetrics {
+    fn new(index: usize) -> Self {
+        ReactorShardMetrics {
+            index,
+            wakeups: AtomicU64::new(0),
+            ready_events: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            parked_waits: AtomicU64::new(0),
+            timers_fired: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one `epoll_wait` return delivering `ready_events` events.
+    pub fn record_wakeup(&self, ready_events: u64) {
+        self.wakeups.fetch_add(1, Ordering::Relaxed);
+        self.ready_events.fetch_add(ready_events, Ordering::Relaxed);
+    }
+}
 
 /// Thread-safe daemon metrics.
 #[derive(Default)]
@@ -66,6 +111,9 @@ pub struct DaemonMetrics {
     /// Wall time from `accept(2)` to the first response byte written on the
     /// connection (ns) — the front door's launch-visible latency floor.
     accept_to_first_byte: Mutex<LogHistogram>,
+    /// Per-reactor-shard counters, registration order. Empty until a
+    /// server binds; one entry per reactor thread after that.
+    reactor_shards: Mutex<Vec<Arc<ReactorShardMetrics>>>,
 }
 
 impl DaemonMetrics {
@@ -122,6 +170,23 @@ impl DaemonMetrics {
         self.reactor_wakeups.fetch_add(1, Ordering::Relaxed);
         self.reactor_ready_events
             .fetch_add(ready_events, Ordering::Relaxed);
+    }
+
+    /// Register one reactor shard's counter block. Returns the shard's
+    /// handle; the index is the registration order.
+    pub fn register_reactor_shard(&self) -> Arc<ReactorShardMetrics> {
+        let mut shards = self.reactor_shards.lock().expect("metrics poisoned");
+        let m = Arc::new(ReactorShardMetrics::new(shards.len()));
+        shards.push(Arc::clone(&m));
+        m
+    }
+
+    /// Handles of every registered reactor shard, index order.
+    pub fn reactor_shards(&self) -> Vec<Arc<ReactorShardMetrics>> {
+        self.reactor_shards
+            .lock()
+            .expect("metrics poisoned")
+            .clone()
     }
 
     /// Record a connection's accept-to-first-response-byte latency.
@@ -227,6 +292,26 @@ mod tests {
         assert_eq!(m.reactor_ready_events.load(Ordering::Relaxed), 3);
         assert_eq!(m.accept_to_first_byte().count(), 1);
         assert!(m.summary().contains("reactor_wakeups=2"));
+    }
+
+    #[test]
+    fn reactor_shard_registry_indexes_and_counts() {
+        let m = DaemonMetrics::default();
+        assert!(m.reactor_shards().is_empty());
+        let a = m.register_reactor_shard();
+        let b = m.register_reactor_shard();
+        assert_eq!((a.index, b.index), (0, 1));
+        a.record_wakeup(2);
+        a.record_wakeup(0);
+        b.record_wakeup(5);
+        let shards = m.reactor_shards();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].wakeups.load(Ordering::Relaxed), 2);
+        assert_eq!(shards[0].ready_events.load(Ordering::Relaxed), 2);
+        assert_eq!(shards[1].wakeups.load(Ordering::Relaxed), 1);
+        assert_eq!(shards[1].ready_events.load(Ordering::Relaxed), 5);
+        // The registry hands out the same blocks it aggregates.
+        assert!(Arc::ptr_eq(&a, &shards[0]));
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   per-request and per-lock-path metrics.
 //! * [`snapshot`] — the published read view and the `WAIT` completion hub
 //!   (condvar keyed by a dispatch/terminal generation).
+//! * [`shards`] — the partition-sharded scheduler back end: per-partition
+//!   scheduler shards (own mutex, queues, snapshot delta) over disjoint
+//!   node slices, one global id allocator, and an epoch/merge protocol on
+//!   the publish path so readers still see one coherent snapshot
+//!   (`shard_count = 1` is exactly the unsharded daemon).
 //! * [`server`] — the TCP front door. On Linux it is an `epoll` readiness
 //!   **reactor** ([`reactor`], std-only syscall bindings): every socket is
 //!   nonblocking, idle connections cost no thread and no poll tick, accept
@@ -55,14 +60,15 @@ pub mod recovery;
 #[cfg(target_os = "linux")]
 pub(crate) mod reactor;
 pub mod server;
+pub mod shards;
 pub mod snapshot;
 pub mod threadpool;
 pub mod timerwheel;
 
 pub use api::{
     ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request,
-    Response, ResumeEntry, ResumeInfo, ResumeTarget, SqueueFilter, StatsSnapshot, SubmitAck,
-    SubmitSpec, UtilSnapshot, WaitResult,
+    Response, ResumeEntry, ResumeInfo, ResumeTarget, ShardKind, ShardStats, ShardUtil,
+    SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 pub use client::{Client, ClientError, RetryPolicy};
 pub use daemon::{Daemon, DaemonConfig};
@@ -70,9 +76,11 @@ pub use journal::{
     DurabilityConfig, FaultPlan, FaultPoint, FsyncPolicy, Journal, JournalError,
 };
 pub use manifest::{
-    EntryAck, EntryReject, Manifest, ManifestAck, ManifestBuilder, ManifestEntry,
-    ManifestRegistry, ManifestSpan, RegisteredManifest,
+    ChunkAssembler, ChunkOutcome, EntryAck, EntryReject, Manifest, ManifestAck,
+    ManifestBuilder, ManifestChunk, ManifestEntry, ManifestRegistry, ManifestSpan,
+    RegisteredManifest,
 };
 pub use recovery::{RecoveryError, RecoveryReport};
 pub use server::Server;
+pub use shards::{SchedShardStat, SchedShards};
 pub use snapshot::{JobView, SchedSnapshot, WaitHub};

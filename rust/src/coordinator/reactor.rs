@@ -34,15 +34,26 @@
 //!   deadline. An *idle* connection therefore costs one wheel entry and no
 //!   wakeups at all — the invariant the `connection_scaling` bench gates
 //!   on via [`DaemonMetrics::reactor_wakeups`](super::metrics::DaemonMetrics).
+//! * **Reactor shards** — [`super::server::Server::bind_sharded`] opens N
+//!   `SO_REUSEPORT` listeners on one address ([`reuseport_listeners`]); the
+//!   kernel spreads accepts across them and each shard runs this reactor on
+//!   its own thread with its own epoll, timer wheel, wake eventfd, and
+//!   [`ReactorShardMetrics`] block. A connection's whole lifetime (state
+//!   machine, parked `WAIT`s, idle timer, chunked `MSUBMIT` assembly) stays
+//!   on the shard that accepted it; shards share only the worker pool and
+//!   the daemon. Shard counters record *in addition to* the daemon-wide
+//!   roll-ups, so aggregate gates keep meaning "across all shards".
 
 use super::daemon::{Daemon, LineOutcome};
+use super::manifest::ChunkAssembler;
+use super::metrics::ReactorShardMetrics;
 use super::threadpool::ThreadPool;
 use super::timerwheel::TimerWheel;
 use crate::coordinator::api::ProtocolVersion;
 use std::io::{self, Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Ipv4Addr, SocketAddrV4, TcpListener, TcpStream};
 use std::os::raw::{c_int, c_uint, c_void};
-use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::io::{AsRawFd, FromRawFd, RawFd};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -71,6 +82,25 @@ struct EpollEvent {
     data: u64,
 }
 
+// ---- raw socket bindings for SO_REUSEPORT listeners -------------------------
+
+const AF_INET: c_int = 2;
+const SOCK_STREAM: c_int = 1;
+const SOCK_CLOEXEC: c_int = 0o2000000;
+const SOL_SOCKET: c_int = 1;
+const SO_REUSEADDR: c_int = 2;
+const SO_REUSEPORT: c_int = 15;
+const LISTEN_BACKLOG: c_int = 1024;
+
+/// `struct sockaddr_in` (kernel ABI; port and address in network order).
+#[repr(C)]
+struct SockaddrIn {
+    sin_family: u16,
+    sin_port: u16,
+    sin_addr: u32,
+    sin_zero: [u8; 8],
+}
+
 extern "C" {
     fn epoll_create1(flags: c_int) -> c_int;
     fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
@@ -84,6 +114,78 @@ extern "C" {
     fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
     fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
     fn close(fd: c_int) -> c_int;
+    fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+    fn setsockopt(
+        fd: c_int,
+        level: c_int,
+        optname: c_int,
+        optval: *const c_void,
+        optlen: c_uint,
+    ) -> c_int;
+    fn bind(fd: c_int, addr: *const SockaddrIn, addrlen: c_uint) -> c_int;
+    fn listen(fd: c_int, backlog: c_int) -> c_int;
+}
+
+/// One nonblocking IPv4 listener with `SO_REUSEADDR` + `SO_REUSEPORT` set
+/// *before* `bind(2)` (std's `TcpListener::bind` cannot, which is why this
+/// goes through the raw syscalls). The fd is owned by the returned
+/// `TcpListener` from the moment it exists, so every error path closes it.
+fn reuseport_listener(ip: Ipv4Addr, port: u16) -> io::Result<TcpListener> {
+    let fd = unsafe { socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let listener = unsafe { TcpListener::from_raw_fd(fd) };
+    let one: c_int = 1;
+    for opt in [SO_REUSEADDR, SO_REUSEPORT] {
+        let rc = unsafe {
+            setsockopt(
+                fd,
+                SOL_SOCKET,
+                opt,
+                &one as *const c_int as *const c_void,
+                std::mem::size_of::<c_int>() as c_uint,
+            )
+        };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    let sa = SockaddrIn {
+        sin_family: AF_INET as u16,
+        sin_port: port.to_be(),
+        sin_addr: u32::from(ip).to_be(),
+        sin_zero: [0; 8],
+    };
+    let rc = unsafe { bind(fd, &sa, std::mem::size_of::<SockaddrIn>() as c_uint) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if unsafe { listen(fd, LISTEN_BACKLOG) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    listener.set_nonblocking(true)?;
+    Ok(listener)
+}
+
+/// `n` listeners sharing one address via `SO_REUSEPORT` — the kernel hashes
+/// incoming connections across them, giving each reactor shard its own
+/// accept queue with no user-space balancing. Port 0 resolves on the first
+/// listener; the rest bind the resolved port so all shards share it.
+pub(super) fn reuseport_listeners(addr: SocketAddrV4, n: usize) -> io::Result<Vec<TcpListener>> {
+    let mut out = Vec::with_capacity(n.max(1));
+    let mut port = addr.port();
+    for _ in 0..n.max(1) {
+        let listener = reuseport_listener(*addr.ip(), port)?;
+        if port == 0 {
+            port = match listener.local_addr()? {
+                std::net::SocketAddr::V4(sa) => sa.port(),
+                std::net::SocketAddr::V6(sa) => sa.port(),
+            };
+        }
+        out.push(listener);
+    }
+    Ok(out)
 }
 
 /// Owned epoll instance.
@@ -289,6 +391,10 @@ struct Conn {
     write_pos: usize,
     /// Negotiated protocol version (`HELLO` upgrades it).
     version: ProtocolVersion,
+    /// Chunked-`MSUBMIT` assembly state (v2.1). Shared with the worker
+    /// executing this connection's in-flight line; `busy` guarantees at
+    /// most one such worker, so the mutex is for `Send`, not contention.
+    chunks: Arc<Mutex<ChunkAssembler>>,
     /// A request line is in flight on the worker pool; further pipelined
     /// lines wait in `read_buf` so responses stay in order.
     busy: bool,
@@ -403,6 +509,8 @@ pub(super) struct Reactor<'a> {
     wheel: TimerWheel<TimerItem>,
     parked_tokens: Vec<u64>,
     parked_gauge: Arc<AtomicUsize>,
+    /// This shard's counter block (also rolled up in the daemon metrics).
+    shard: Arc<ReactorShardMetrics>,
     idle_timeout: Duration,
     accept_backoff: Duration,
     accept_paused_until: Option<Instant>,
@@ -428,8 +536,9 @@ pub(super) fn serve(
     pool: &Arc<ThreadPool>,
     idle_timeout: Duration,
     parked_gauge: &Arc<AtomicUsize>,
+    shard: &Arc<ReactorShardMetrics>,
 ) {
-    match Reactor::new(listener, daemon, pool, idle_timeout, parked_gauge) {
+    match Reactor::new(listener, daemon, pool, idle_timeout, parked_gauge, shard) {
         Ok(mut r) => r.run(),
         Err(e) => eprintln!("reactor setup failed, server not serving: {e}"),
     }
@@ -442,6 +551,7 @@ impl<'a> Reactor<'a> {
         pool: &Arc<ThreadPool>,
         idle_timeout: Duration,
         parked_gauge: &Arc<AtomicUsize>,
+        shard: &Arc<ReactorShardMetrics>,
     ) -> io::Result<Self> {
         let epoll = Epoll::new()?;
         let comps = Arc::new(Completions {
@@ -466,6 +576,7 @@ impl<'a> Reactor<'a> {
             wheel: TimerWheel::new(WHEEL_GRANULARITY, WHEEL_SLOTS),
             parked_tokens: Vec::new(),
             parked_gauge: Arc::clone(parked_gauge),
+            shard: Arc::clone(shard),
             idle_timeout,
             accept_backoff: ACCEPT_BACKOFF_START,
             accept_paused_until: None,
@@ -514,6 +625,7 @@ impl<'a> Reactor<'a> {
                 }
             };
             self.daemon.metrics.record_reactor_wakeup(n as u64);
+            self.shard.record_wakeup(n as u64);
             for ev in &events[..n] {
                 let tok = ev.data;
                 let flags = ev.events;
@@ -629,6 +741,7 @@ impl<'a> Reactor<'a> {
             write_buf: Vec::new(),
             write_pos: 0,
             version: ProtocolVersion::V1,
+            chunks: Arc::new(Mutex::new(ChunkAssembler::new())),
             busy: false,
             parked: None,
             dead: false,
@@ -649,7 +762,25 @@ impl<'a> Reactor<'a> {
             .metrics
             .connections_accepted
             .fetch_add(1, Ordering::Relaxed);
+        self.shard.accepted.fetch_add(1, Ordering::Relaxed);
+        self.shard.connections.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Free a slab slot and keep the shard's live-connection gauge honest
+    /// (every removal funnels through here).
+    fn remove_conn(&mut self, tok: u64) {
+        if self.slab.remove(tok).is_some() {
+            self.shard.connections.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Publish the parked-`WAIT` count to the server gauge and this
+    /// shard's counter block.
+    fn sync_parked_gauge(&self) {
+        let n = self.parked_tokens.len();
+        self.parked_gauge.store(n, Ordering::Relaxed);
+        self.shard.parked_waits.store(n as u64, Ordering::Relaxed);
     }
 
     // ---- connection I/O ----------------------------------------------------
@@ -766,15 +897,18 @@ impl<'a> Reactor<'a> {
                     }
                 }
             };
-            let version = match self.slab.get_mut(tok) {
-                Some(conn) => conn.version,
+            let (version, chunks) = match self.slab.get_mut(tok) {
+                Some(conn) => (conn.version, Arc::clone(&conn.chunks)),
                 None => return,
             };
             self.comps.inflight.fetch_add(1, Ordering::SeqCst);
             let daemon = Arc::clone(&self.daemon);
             let comps = Arc::clone(&self.comps);
             self.pool.execute(move || {
-                let outcome = daemon.handle_line_nonblocking(&line, version);
+                let outcome = {
+                    let mut asm = chunks.lock().expect("chunk assembler poisoned");
+                    daemon.handle_line_stateful(&line, version, Some(&mut asm))
+                };
                 comps
                     .queue
                     .lock()
@@ -866,8 +1000,7 @@ impl<'a> Reactor<'a> {
                     conn.parked = Some(pw);
                 }
                 self.parked_tokens.push(tok);
-                self.parked_gauge
-                    .store(self.parked_tokens.len(), Ordering::Relaxed);
+                self.sync_parked_gauge();
                 self.wheel.insert(deadline, TimerItem::WaitDeadline(tok));
             }
         }
@@ -918,8 +1051,7 @@ impl<'a> Reactor<'a> {
     fn forget_parked(&mut self, tok: u64) {
         if let Some(i) = self.parked_tokens.iter().position(|&t| t == tok) {
             self.parked_tokens.swap_remove(i);
-            self.parked_gauge
-                .store(self.parked_tokens.len(), Ordering::Relaxed);
+            self.sync_parked_gauge();
         }
     }
 
@@ -929,6 +1061,11 @@ impl<'a> Reactor<'a> {
         let now = Instant::now();
         let mut due = Vec::new();
         self.wheel.expire(now, |item| due.push(item));
+        if !due.is_empty() {
+            self.shard
+                .timers_fired
+                .fetch_add(due.len() as u64, Ordering::Relaxed);
+        }
         for item in due {
             match item {
                 TimerItem::Idle(tok) => self.on_idle_timer(tok, now),
@@ -1082,7 +1219,7 @@ impl<'a> Reactor<'a> {
             }
         };
         if !defer {
-            self.slab.remove(tok);
+            self.remove_conn(tok);
         }
     }
 
@@ -1093,7 +1230,7 @@ impl<'a> Reactor<'a> {
             Some(c) if c.dead && !c.busy && c.parked.is_none()
         );
         if reap {
-            self.slab.remove(tok);
+            self.remove_conn(tok);
         }
     }
 
@@ -1120,7 +1257,7 @@ impl<'a> Reactor<'a> {
                 self.queue_response(tok, &rendered);
             }
         }
-        self.parked_gauge.store(0, Ordering::Relaxed);
+        self.sync_parked_gauge();
         // Flush queued responses until they drain or a bounded deadline —
         // a single nonblocking attempt would drop the SHUTDOWN ack (or a
         // resolved WAIT's reply) on the floor whenever the socket buffer
@@ -1150,6 +1287,38 @@ mod tests {
     use super::*;
 
     #[test]
+    fn reuseport_listeners_share_one_port_and_accept() {
+        let ls = reuseport_listeners(SocketAddrV4::new(Ipv4Addr::LOCALHOST, 0), 3).unwrap();
+        assert_eq!(ls.len(), 3);
+        let port = ls[0].local_addr().unwrap().port();
+        assert_ne!(port, 0, "port 0 must resolve on the first listener");
+        for l in &ls {
+            assert_eq!(l.local_addr().unwrap().port(), port);
+        }
+        // The kernel picks the shard per connection; drain across all
+        // listeners until every connection has been accepted somewhere.
+        let n_conns = 8;
+        let _streams: Vec<_> = (0..n_conns)
+            .map(|_| TcpStream::connect(("127.0.0.1", port)).unwrap())
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut accepted = 0;
+        while accepted < n_conns && Instant::now() < deadline {
+            let mut any = false;
+            for l in &ls {
+                while l.accept().is_ok() {
+                    accepted += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        assert_eq!(accepted, n_conns, "every connection reaches some shard");
+    }
+
+    #[test]
     fn tokens_roundtrip() {
         let t = token(7, 42);
         assert_eq!(token_idx(t), 7);
@@ -1173,6 +1342,7 @@ mod tests {
                 write_buf: Vec::new(),
                 write_pos: 0,
                 version: ProtocolVersion::V1,
+                chunks: Arc::new(Mutex::new(ChunkAssembler::new())),
                 busy: false,
                 parked: None,
                 dead: false,
@@ -1209,6 +1379,7 @@ mod tests {
             write_buf: Vec::new(),
             write_pos: 0,
             version: ProtocolVersion::V1,
+            chunks: Arc::new(Mutex::new(ChunkAssembler::new())),
             busy: false,
             parked: None,
             dead: false,

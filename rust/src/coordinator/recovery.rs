@@ -172,7 +172,22 @@ pub fn rebuild(
                     });
                     specs.extend(batch);
                 }
-                let ids = sched.submit_batch(specs);
+                // Re-space arrivals exactly as the live admission path did.
+                // A single-entry, count=1, non-manifest record is the plain
+                // `SUBMIT` shape, which the daemon admits via `submit_burst`
+                // (one submit-RPC of client-loop serialization between each
+                // materialized job); everything else landed as one batched
+                // arrival instant. Replaying a burst as a batch kept the ids
+                // exact but collapsed the inter-RPC pacing, so post-recovery
+                // age/fairshare state diverged from the pre-crash queue.
+                let client_loop_burst = manifest.is_none()
+                    && entries.len() == 1
+                    && entries[0].entry.count == 1;
+                let ids = if client_loop_burst {
+                    sched.submit_burst(specs)
+                } else {
+                    sched.submit_batch(specs)
+                };
                 let got_first = ids.first().map(|j| j.0).unwrap_or(0);
                 if ids.len() as u64 != *total_jobs || (!ids.is_empty() && got_first != *first_id)
                 {
@@ -356,6 +371,84 @@ mod tests {
         let mut sched = rb.sched;
         let ids = sched.submit_batch(vec![JobSpec::spot(UserId(1), JobType::Array, 8)]);
         assert_eq!(ids[0], JobId(8), "next_id restored from checkpoint");
+    }
+
+    #[test]
+    fn burst_replay_preserves_client_loop_arrival_pacing() {
+        // Regression (durability follow-on): a plain `SUBMIT` of an
+        // interactive individual spec expands into one job per task and is
+        // admitted live via `submit_burst` — one submit RPC of client-loop
+        // serialization between consecutive jobs. Replay used to land the
+        // whole record as one batched instant: ids stayed exact but every
+        // job's arrival (and so its age/fairshare state and queue order)
+        // was wrong. Replay must reproduce the live spacing.
+        let entry = ManifestEntry::new(QosClass::Normal, JobType::Individual, 4, 1)
+            .with_run_secs(60.0);
+        let vtime = SimTime::from_secs(5);
+
+        // The live admission path, for the expected arrival schedule.
+        let mut live = Scheduler::new(topology::tx2500(), sched_cfg());
+        live.run_until(vtime);
+        let live_ids = live.submit_burst(entry.materialize());
+        assert_eq!(live_ids.len(), 4, "individual tasks=4 expands to 4 jobs");
+
+        let tail = vec![JournalRecord::Admit {
+            vtime,
+            first_id: live_ids[0].0,
+            total_jobs: 4,
+            manifest: None,
+            entries: vec![AdmitEntry { index: 0, entry }],
+        }];
+        let rb = rebuild(topology::tx2500(), sched_cfg(), &recovered(
+            CheckpointState::genesis(),
+            tail,
+        ))
+        .unwrap();
+
+        let live_times: Vec<SimTime> = live_ids
+            .iter()
+            .map(|&id| live.job(id).expect("live job").submit_time)
+            .collect();
+        let replay_times: Vec<SimTime> = live_ids
+            .iter()
+            .map(|&id| rb.sched.job(id).expect("replayed job").submit_time)
+            .collect();
+        assert_eq!(
+            live_times, replay_times,
+            "replayed arrival pacing diverged from the live client-loop burst"
+        );
+        // The sentinel the old code failed: arrivals are *spaced*, not one
+        // batched instant (queue order between bursts depends on this).
+        assert!(
+            replay_times.windows(2).all(|w| w[0] < w[1]),
+            "burst arrivals collapsed to a batch: {replay_times:?}"
+        );
+    }
+
+    #[test]
+    fn batched_records_still_replay_as_one_arrival_instant() {
+        // count>1 (batch SUBMIT) and manifest records keep the batched
+        // replay: one RPC, one arrival instant — same as live admission.
+        let entry = ManifestEntry::new(QosClass::Spot, JobType::Array, 8, 9).with_count(3);
+        let tail = vec![JournalRecord::Admit {
+            vtime: SimTime::ZERO,
+            first_id: 1,
+            total_jobs: 3,
+            manifest: None,
+            entries: vec![AdmitEntry { index: 0, entry }],
+        }];
+        let rb = rebuild(topology::tx2500(), sched_cfg(), &recovered(
+            CheckpointState::genesis(),
+            tail,
+        ))
+        .unwrap();
+        let times: Vec<SimTime> = (1..=3)
+            .map(|id| rb.sched.job(JobId(id)).expect("job").submit_time)
+            .collect();
+        assert!(
+            times.windows(2).all(|w| w[0] == w[1]),
+            "batched record must land at one instant: {times:?}"
+        );
     }
 
     #[test]

@@ -6,15 +6,20 @@
 //! connection are answered strictly in order, so clients may **pipeline**
 //! (write several request lines before reading the responses).
 //!
-//! On **Linux** the server is a single-threaded `epoll` reactor
-//! ([`super::reactor`]): the listener and every connection are nonblocking
-//! and edge-triggered, idle connections cost no thread and no poll tick,
-//! complete request lines are dispatched to the small worker pool, and
-//! parked `WAIT`s resolve off the daemon's completion hub through an
-//! eventfd. Other targets keep the portable threadpool server below: one
-//! pool worker drives each live connection, blocked `WAIT`s detach into a
-//! waiter registry ([`crate::coordinator::daemon::LineOutcome::Parked`])
-//! so they never pin workers, and a notifier thread resolves them.
+//! On **Linux** the server is an `epoll` reactor ([`super::reactor`]): the
+//! listener and every connection are nonblocking and edge-triggered, idle
+//! connections cost no thread and no poll tick, complete request lines are
+//! dispatched to the small worker pool, and parked `WAIT`s resolve off the
+//! daemon's completion hub through an eventfd. [`Server::bind_sharded`]
+//! scales the front door out to N reactor **shards** on `SO_REUSEPORT`
+//! listeners sharing one address: the kernel spreads accepts, each shard
+//! thread owns its connections end to end (state machines, timer wheel,
+//! wake eventfd, per-shard metrics), and the shards share only the worker
+//! pool and the daemon. Other targets keep the portable threadpool server
+//! below (always one shard): one pool worker drives each live connection,
+//! blocked `WAIT`s detach into a waiter registry
+//! ([`crate::coordinator::daemon::LineOutcome::Parked`]) so they never pin
+//! workers, and a notifier thread resolves them.
 //!
 //! Accept errors on both paths back off exponentially (1 ms → 1 s ceiling,
 //! reset on the next successful accept) and are counted in
@@ -34,6 +39,7 @@ use std::time::Duration;
 use {
     super::api::{ProtocolVersion, Response},
     super::daemon::{LineOutcome, ParkedWait},
+    super::manifest::ChunkAssembler,
     std::io::{BufRead, BufReader, Write},
     std::net::TcpStream,
     std::sync::atomic::Ordering,
@@ -69,18 +75,24 @@ pub struct Server {
     daemon: Arc<Daemon>,
     pool: Arc<ThreadPool>,
     idle_timeout: Duration,
-    /// Parked-`WAIT` gauge the Linux reactor maintains.
+    /// Parked-`WAIT` gauge shard 0's reactor maintains.
     #[cfg(target_os = "linux")]
     parked_gauge: Arc<AtomicUsize>,
+    /// Reactor shards beyond shard 0: each is an `SO_REUSEPORT` listener
+    /// on the same address, served by its own reactor thread, with its own
+    /// parked-`WAIT` gauge ([`Self::parked_waits`] sums them).
+    #[cfg(target_os = "linux")]
+    extra_shards: Vec<(TcpListener, Arc<AtomicUsize>)>,
     #[cfg(not(target_os = "linux"))]
     parked: Arc<ParkedWaits>,
 }
 
 impl Server {
     /// Bind to an address (use port 0 for an ephemeral port) with the
-    /// default idle timeout. `workers` sizes the request-handling pool; on
-    /// Linux connections themselves are multiplexed on one reactor thread,
-    /// so the pool only bounds concurrently *executing* requests.
+    /// default idle timeout and a single reactor shard. `workers` sizes
+    /// the request-handling pool; on Linux connections themselves are
+    /// multiplexed on the reactor thread(s), so the pool only bounds
+    /// concurrently *executing* requests.
     pub fn bind(daemon: Arc<Daemon>, addr: &str, workers: usize) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         // Non-blocking accept so the serve loop can observe shutdown.
@@ -92,9 +104,48 @@ impl Server {
             idle_timeout: DEFAULT_IDLE_TIMEOUT,
             #[cfg(target_os = "linux")]
             parked_gauge: Arc::new(AtomicUsize::new(0)),
+            #[cfg(target_os = "linux")]
+            extra_shards: Vec::new(),
             #[cfg(not(target_os = "linux"))]
             parked: Arc::new(ParkedWaits::default()),
         })
+    }
+
+    /// Bind `shards` reactor shards to one address. On Linux each shard is
+    /// an `SO_REUSEPORT` listener (the kernel spreads accepts across them)
+    /// served by its own reactor thread; a connection's whole lifetime
+    /// stays on the shard that accepted it. Requires an IPv4 address
+    /// literal (`host:port`). `shards <= 1` — and every non-Linux target,
+    /// where the portable server has no reactor to shard — is exactly
+    /// [`Server::bind`].
+    pub fn bind_sharded(
+        daemon: Arc<Daemon>,
+        addr: &str,
+        workers: usize,
+        shards: usize,
+    ) -> Result<Self> {
+        #[cfg(target_os = "linux")]
+        if shards > 1 {
+            let sa: std::net::SocketAddrV4 = addr
+                .parse()
+                .with_context(|| format!("sharded bind needs an IPv4 addr literal, got {addr}"))?;
+            let mut listeners = super::reactor::reuseport_listeners(sa, shards)
+                .with_context(|| format!("binding {shards} SO_REUSEPORT shards on {addr}"))?;
+            let listener = listeners.remove(0);
+            return Ok(Self {
+                listener,
+                daemon,
+                pool: Arc::new(ThreadPool::new(workers.max(1))),
+                idle_timeout: DEFAULT_IDLE_TIMEOUT,
+                parked_gauge: Arc::new(AtomicUsize::new(0)),
+                extra_shards: listeners
+                    .into_iter()
+                    .map(|l| (l, Arc::new(AtomicUsize::new(0))))
+                    .collect(),
+            });
+        }
+        let _ = shards;
+        Self::bind(daemon, addr, workers)
     }
 
     /// Builder: expire connections with no complete request for `d`.
@@ -108,11 +159,31 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Connections currently parked in a blocked `WAIT` (tests/ops).
+    /// How many reactor shards will serve (1 unless [`Server::bind_sharded`]
+    /// created more; always 1 on non-Linux targets).
+    pub fn reactor_shards(&self) -> usize {
+        #[cfg(target_os = "linux")]
+        {
+            1 + self.extra_shards.len()
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            1
+        }
+    }
+
+    /// Connections currently parked in a blocked `WAIT`, across all shards
+    /// (tests/ops).
     pub fn parked_waits(&self) -> usize {
         #[cfg(target_os = "linux")]
         {
-            self.parked_gauge.load(std::sync::atomic::Ordering::Relaxed)
+            use std::sync::atomic::Ordering;
+            self.parked_gauge.load(Ordering::Relaxed)
+                + self
+                    .extra_shards
+                    .iter()
+                    .map(|(_, g)| g.load(Ordering::Relaxed))
+                    .sum::<usize>()
         }
         #[cfg(not(target_os = "linux"))]
         {
@@ -120,16 +191,41 @@ impl Server {
         }
     }
 
-    /// Serve until the daemon shuts down.
+    /// Serve until the daemon shuts down. Shard 0 runs on the calling
+    /// thread; extra shards (from [`Server::bind_sharded`]) each get their
+    /// own thread, joined before this returns — shutdown therefore drains
+    /// every shard (each reactor's completion-hub subscription wakes it to
+    /// observe the stop, flush queued responses, and resolve parked
+    /// `WAIT`s exactly once).
     #[cfg(target_os = "linux")]
     pub fn serve(&self) {
-        super::reactor::serve(
-            &self.listener,
-            &self.daemon,
-            &self.pool,
-            self.idle_timeout,
-            &self.parked_gauge,
-        );
+        let shard0 = self.daemon.metrics.register_reactor_shard();
+        let extra_metrics: Vec<_> = self
+            .extra_shards
+            .iter()
+            .map(|_| self.daemon.metrics.register_reactor_shard())
+            .collect();
+        std::thread::scope(|s| {
+            for ((listener, gauge), shard) in self.extra_shards.iter().zip(&extra_metrics) {
+                let daemon = &self.daemon;
+                let pool = &self.pool;
+                let idle = self.idle_timeout;
+                std::thread::Builder::new()
+                    .name(format!("spotcloud-reactor-{}", shard.index))
+                    .spawn_scoped(s, move || {
+                        super::reactor::serve(listener, daemon, pool, idle, gauge, shard)
+                    })
+                    .expect("spawning reactor shard");
+            }
+            super::reactor::serve(
+                &self.listener,
+                &self.daemon,
+                &self.pool,
+                self.idle_timeout,
+                &self.parked_gauge,
+                &shard0,
+            );
+        });
     }
 
     /// Serve until the daemon shuts down (portable threadpool path).
@@ -319,6 +415,9 @@ struct Conn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     version: ProtocolVersion,
+    /// Chunked-`MSUBMIT` assembly state (v2.1); follows the connection when
+    /// a parked `WAIT` detaches it from its worker.
+    chunks: ChunkAssembler,
     line: String,
     idle_timeout: Duration,
     last_activity: Instant,
@@ -351,6 +450,7 @@ impl Conn {
             writer,
             // Every connection starts in v1; HELLO upgrades it.
             version: ProtocolVersion::V1,
+            chunks: ChunkAssembler::new(),
             line: String::new(),
             idle_timeout,
             last_activity: Instant::now(),
@@ -375,7 +475,8 @@ impl Conn {
                     if trimmed.is_empty() {
                         continue;
                     }
-                    match daemon.handle_line_nonblocking(&trimmed, self.version) {
+                    match daemon.handle_line_stateful(&trimmed, self.version, Some(&mut self.chunks))
+                    {
                         LineOutcome::Done(resp, negotiated) => {
                             if let Some(v) = negotiated {
                                 self.version = v;
@@ -471,12 +572,8 @@ mod tests {
         spawn_server_with(DEFAULT_IDLE_TIMEOUT, 2, 4096)
     }
 
-    fn spawn_server_with(
-        idle: Duration,
-        workers: usize,
-        user_limit: u32,
-    ) -> (Arc<Daemon>, SocketAddr, std::thread::JoinHandle<()>) {
-        let daemon = Daemon::new(
+    fn test_daemon(user_limit: u32) -> Arc<Daemon> {
+        Daemon::new(
             topology::tx2500(),
             SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
                 .with_user_limit(user_limit),
@@ -488,7 +585,15 @@ mod tests {
                 retire_grace_secs: Some(86_400.0),
                 ..DaemonConfig::default()
             },
-        );
+        )
+    }
+
+    fn spawn_server_with(
+        idle: Duration,
+        workers: usize,
+        user_limit: u32,
+    ) -> (Arc<Daemon>, SocketAddr, std::thread::JoinHandle<()>) {
+        let daemon = test_daemon(user_limit);
         let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", workers)
             .unwrap()
             .with_idle_timeout(idle);
@@ -740,6 +845,121 @@ mod tests {
         c.ping().unwrap();
         daemon.shutdown();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn chunked_msubmit_streams_a_manifest_over_tcp() {
+        use crate::coordinator::manifest::ManifestBuilder;
+        let (daemon, addr, handle) = spawn_server();
+        let mut c = Client::connect_v21(&addr.to_string()).unwrap();
+        let mut b = ManifestBuilder::new();
+        for u in 0..25 {
+            b = b.interactive(u % 5, JobType::Array, 1);
+        }
+        // 25 entries in chunks of 10: parts 1 and 2 draw chunk acks, part 3
+        // admits the whole manifest atomically.
+        let ack = c.msubmit_chunked(&b.build(), 10).unwrap();
+        assert_eq!(ack.accepted.len(), 25);
+        assert_eq!(ack.jobs, 25);
+        assert!(ack.rejected.is_empty(), "{:?}", ack.rejected);
+        let first = ack.accepted.first().unwrap().first;
+        let last = ack.accepted.last().unwrap().last;
+        assert_eq!(last - first + 1, 25, "one contiguous id range across parts");
+        // The connection keeps serving after the stream completes.
+        c.ping().unwrap();
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn interrupting_a_chunked_stream_discards_the_partial_manifest() {
+        let (daemon, addr, handle) = spawn_server();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writer.write_all(b"HELLO v2.1\n").unwrap();
+        writer.flush().unwrap();
+        assert_eq!(read_raw_response(&mut reader), "OK kind=hello proto=v2.1");
+        writer
+            .write_all(b"MSUBMIT entries=2 part=1/2;qos=normal type=array tasks=1 user=7\n")
+            .unwrap();
+        writer.flush().unwrap();
+        assert_eq!(
+            read_raw_response(&mut reader),
+            "OK kind=chunk_ack part=1 parts=2 received=1"
+        );
+        // A different command mid-stream: typed error, partial discarded,
+        // and the interrupting request is NOT executed.
+        writer.write_all(b"PING\n").unwrap();
+        writer.flush().unwrap();
+        let resp = read_raw_response(&mut reader);
+        assert!(resp.starts_with("ERR"), "{resp}");
+        assert!(resp.contains("discarded"), "{resp}");
+        {
+            let mut probe = Client::connect_v2(&addr.to_string()).unwrap();
+            assert!(
+                probe.squeue(&SqueueFilter::default()).unwrap().is_empty(),
+                "no partial manifest may be admitted"
+            );
+        }
+        // The same connection restarts the stream from part 1.
+        writer
+            .write_all(b"MSUBMIT entries=2 part=1/2;qos=normal type=array tasks=1 user=7\n")
+            .unwrap();
+        writer
+            .write_all(b"MSUBMIT entries=2 part=2/2;qos=normal type=array tasks=1 user=7\n")
+            .unwrap();
+        writer.flush().unwrap();
+        assert_eq!(
+            read_raw_response(&mut reader),
+            "OK kind=chunk_ack part=1 parts=2 received=1"
+        );
+        let fin = read_raw_response(&mut reader);
+        assert!(fin.starts_with("OK kind=manifest_ack"), "{fin}");
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn chunked_msubmit_requires_v21_over_tcp() {
+        let (daemon, addr, handle) = spawn_server();
+        let mut c = Client::connect_v2(&addr.to_string()).unwrap();
+        let resp = c
+            .request("MSUBMIT entries=2 part=1/2;qos=normal type=array tasks=1 user=7")
+            .unwrap();
+        assert!(resp.starts_with("ERR"), "{resp}");
+        assert!(resp.contains("v2.1"), "{resp}");
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    /// The sharded front door: two `SO_REUSEPORT` reactor shards serve one
+    /// address, their counter blocks register per shard, and shutdown
+    /// joins (drains) every shard thread.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn sharded_server_serves_and_drains_all_shards() {
+        use std::sync::atomic::Ordering;
+        let daemon = test_daemon(4096);
+        let server = Server::bind_sharded(Arc::clone(&daemon), "127.0.0.1:0", 4, 2).unwrap();
+        assert_eq!(server.reactor_shards(), 2);
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || server.serve());
+        let addr_s = addr.to_string();
+        // Distinct source ports, so the kernel's REUSEPORT hash spreads
+        // connections; every one must be served wherever it lands.
+        let mut clients: Vec<Client> =
+            (0..16).map(|_| Client::connect(&addr_s).unwrap()).collect();
+        for c in &mut clients {
+            assert_eq!(c.request("PING").unwrap(), "OK pong");
+        }
+        let shards = daemon.metrics.reactor_shards();
+        assert_eq!(shards.len(), 2, "one counter block per reactor shard");
+        let accepted: u64 = shards.iter().map(|s| s.accepted.load(Ordering::Relaxed)).sum();
+        assert_eq!(accepted, 16, "every accept attributed to a shard");
+        drop(clients);
+        daemon.shutdown();
+        handle.join().unwrap(); // joins shard threads => all shards drained
     }
 
     /// Pacing for parked WAITs runs on the worker pool, not the reactor

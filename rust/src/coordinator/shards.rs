@@ -1,0 +1,419 @@
+//! Partition-sharded scheduler: the daemon's back-end shard layer.
+//!
+//! The unsharded coordinator funnels every mutation through one scheduler
+//! mutex — the collapse mode the node-based-scheduling literature observes
+//! at high volumes of short jobs. This module splits the scheduler along
+//! the cluster's existing partition model: with `shard_count > 1`, each
+//! partition gets its **own** [`Scheduler`] (own mutex, own priority
+//! buckets, own EASY shadow, own snapshot delta) over a disjoint slice of
+//! the node pool, so submissions to disjoint partitions never contend.
+//!
+//! Cross-shard concerns go through an **epoch/sequence protocol on the
+//! publish path** rather than a cross-shard lock:
+//!
+//! * **Global job ids.** Ids come from one global atomic allocator
+//!   ([`SchedShards::allocate_ids`], called under the target shard's
+//!   mutex); each shard's internal counter is fast-forwarded with
+//!   [`Scheduler::force_next_id`] before the submit, so ids stay globally
+//!   unique and a single RPC's ids stay contiguous — even when the RPC
+//!   spans shards (cross-partition `MSUBMIT` locks every touched shard in
+//!   ascending index order, then allocates one contiguous range).
+//! * **One coherent snapshot.** Every shard keeps a per-shard
+//!   [`SchedSnapshot`] slot, captured under its own mutex with the usual
+//!   delta sharing. A publish takes the next **epoch** from a global
+//!   sequence and k-way-merges the slots into one id-sorted global
+//!   snapshot ([`SchedSnapshot::merged`]); the daemon swaps it in only if
+//!   the epoch is newer than the published one, so concurrent per-shard
+//!   publishes can race and readers still observe a monotone, internally
+//!   consistent view. Readers (`SQUEUE`/`SJOB`/`STATS`/`UTIL`/`WAIT`)
+//!   never learn that shards exist.
+//! * **Fairshare / preemption.** Each shard enforces fairshare and
+//!   preemption over its own partition and node slice; the merged
+//!   snapshot aggregates the counters. With the paper's dual layout the
+//!   spot partition owns its slice outright, so cross-pool preemption
+//!   does not arise in sharded mode — the trade the ROADMAP's sharding
+//!   direction calls out, and why `shard_count = 1` (exactly the
+//!   unsharded daemon, byte-for-byte) remains the default.
+//!
+//! Durability is a single-shard feature: the write-ahead journal's
+//! id-determinism contract assumes one scheduler, so
+//! [`SchedShards::sharded`] is rejected by the daemon when a journal is
+//! configured.
+
+use super::snapshot::SchedSnapshot;
+use crate::cluster::{Cluster, PartitionId, PartitionLayout};
+use crate::job::QosClass;
+use crate::metrics::LogHistogram;
+use crate::sched::{Scheduler, SchedulerConfig};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+
+/// One scheduler shard: a full [`Scheduler`] over a slice of the cluster,
+/// plus its published per-shard snapshot slot and lock metrics.
+struct ShardSlot {
+    /// Partition this shard owns (shard 0 owns partition 0, …). In
+    /// single-shard mode the one slot owns every partition and this is
+    /// partition 0.
+    partition: PartitionId,
+    /// Partition name (`interactive`, `spot`, `shared`) for STATS/UTIL.
+    label: &'static str,
+    sched: Mutex<Scheduler>,
+    /// Latest snapshot captured under this shard's mutex (delta-shared
+    /// with its predecessor). The merge path reads these slots.
+    snapshot: RwLock<Arc<SchedSnapshot>>,
+    /// Mutex acquisitions on this shard.
+    locks: AtomicU64,
+    /// Hold-time histogram for this shard's mutex (ns).
+    lock_hold: Mutex<LogHistogram>,
+}
+
+/// A point-in-time stat row for one scheduler shard (feeds the `STATS` v2
+/// `shard kind=sched` records and the shard bench).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedShardStat {
+    /// Shard index.
+    pub index: usize,
+    /// Partition name this shard owns.
+    pub label: String,
+    /// Mutex acquisitions so far.
+    pub locks: u64,
+    /// p99 mutex hold (ns).
+    pub lock_hold_p99_ns: u64,
+    /// Max mutex hold (ns).
+    pub lock_hold_max_ns: u64,
+    /// Pending jobs in this shard's latest snapshot (queue depth).
+    pub pending: usize,
+    /// Running jobs in this shard's latest snapshot.
+    pub running: usize,
+    /// Dispatches this shard performed.
+    pub dispatches: u64,
+}
+
+/// The shard set. `shard_count = 1` is the unsharded daemon: one scheduler
+/// over the whole cluster, ids allocated by the scheduler itself, and the
+/// daemon publishes the shard-0 snapshot directly (no merge, no epoch).
+pub struct SchedShards {
+    shards: Vec<ShardSlot>,
+    /// Global id allocator (sharded mode): the next job id to hand out.
+    /// Matches the scheduler's own initial counter (ids start at 1).
+    next_id: AtomicU64,
+    /// Global publish sequence (sharded mode): each merged snapshot gets
+    /// the next epoch, and the daemon only swaps forward.
+    epoch: AtomicU64,
+    layout: PartitionLayout,
+}
+
+impl SchedShards {
+    /// One shard over the whole cluster — exactly the unsharded daemon.
+    pub fn single(cluster: Cluster, cfg: SchedulerConfig) -> Self {
+        let layout = cfg.layout;
+        let label = layout.partitions()[0].name;
+        let sched = Scheduler::new(cluster, cfg);
+        Self::from_scheds(vec![(PartitionId(0), label, sched)], layout)
+    }
+
+    /// Wrap an already-built scheduler (crash recovery rebuilds one
+    /// scheduler and hands it over; recovery is single-shard by contract).
+    pub fn single_from(sched: Scheduler) -> Self {
+        let layout = sched.config().layout;
+        let label = layout.partitions()[0].name;
+        Self::from_scheds(vec![(PartitionId(0), label, sched)], layout)
+    }
+
+    /// One shard per partition, each over a proportional slice of the node
+    /// pool. Falls back to [`SchedShards::single`] when the layout has one
+    /// partition, when `count <= 1`, or when the cluster is too small to
+    /// give every shard at least one node. `count` beyond the partition
+    /// count is clamped — the partition model is the sharding model.
+    pub fn sharded(cluster: Cluster, cfg: SchedulerConfig, count: usize) -> Self {
+        let partitions = cfg.layout.partitions();
+        let want = count.min(partitions.len());
+        let nodes = cluster.node_count();
+        if want <= 1 || (nodes as usize) < want {
+            return Self::single(cluster, cfg);
+        }
+        let layout = cfg.layout;
+        let cores = cluster.cores_per_node();
+        let base = nodes / want as u32;
+        let rem = (nodes % want as u32) as usize;
+        let mut scheds = Vec::with_capacity(want);
+        for (i, p) in partitions.into_iter().take(want).enumerate() {
+            let n = base + u32::from(i < rem);
+            let slice = Cluster::homogeneous(n, cores);
+            scheds.push((p.id, p.name, Scheduler::new(slice, cfg.clone())));
+        }
+        Self::from_scheds(scheds, layout)
+    }
+
+    fn from_scheds(
+        scheds: Vec<(PartitionId, &'static str, Scheduler)>,
+        layout: PartitionLayout,
+    ) -> Self {
+        let shards = scheds
+            .into_iter()
+            .map(|(partition, label, sched)| {
+                let snapshot = Arc::new(SchedSnapshot::capture(&sched, None));
+                ShardSlot {
+                    partition,
+                    label,
+                    sched: Mutex::new(sched),
+                    snapshot: RwLock::new(snapshot),
+                    locks: AtomicU64::new(0),
+                    lock_hold: Mutex::new(LogHistogram::default()),
+                }
+            })
+            .collect();
+        Self {
+            shards,
+            next_id: AtomicU64::new(1),
+            epoch: AtomicU64::new(0),
+            layout,
+        }
+    }
+
+    /// Number of scheduler shards.
+    pub fn count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// More than one shard?
+    pub fn is_sharded(&self) -> bool {
+        self.shards.len() > 1
+    }
+
+    /// The partition a shard owns (sharded mode: shard index ↔ partition).
+    pub fn partition(&self, idx: usize) -> PartitionId {
+        self.shards[idx].partition
+    }
+
+    /// The shard a submission of this QoS routes to.
+    pub fn shard_for(&self, qos: QosClass) -> usize {
+        if !self.is_sharded() {
+            return 0;
+        }
+        let target = self.layout.route(qos);
+        self.shards
+            .iter()
+            .position(|s| s.partition == target)
+            .unwrap_or(0)
+    }
+
+    /// Lock one shard's scheduler and count the acquisition. The caller
+    /// times the hold and reports it via [`SchedShards::record_hold`].
+    pub fn lock(&self, idx: usize) -> MutexGuard<'_, Scheduler> {
+        self.shards[idx].locks.fetch_add(1, Ordering::Relaxed);
+        self.shards[idx].sched.lock().expect("shard scheduler poisoned")
+    }
+
+    /// Record one lock hold on shard `idx` (ns).
+    pub fn record_hold(&self, idx: usize, hold_ns: u64) {
+        self.shards[idx]
+            .lock_hold
+            .lock()
+            .expect("shard metrics poisoned")
+            .record(hold_ns);
+    }
+
+    /// Reserve `n` globally-unique, contiguous job ids (sharded mode).
+    /// Must be called with the target shard's mutex held — that is what
+    /// keeps a shard's internal counter from running ahead of the global
+    /// allocator (the reservation is applied with `force_next_id` before
+    /// any other reservation against the same shard can land).
+    pub fn allocate_ids(&self, n: u64) -> u64 {
+        self.next_id.fetch_add(n, Ordering::SeqCst)
+    }
+
+    /// The global id watermark (next id to be allocated). Sharded mode
+    /// only; feeds the merged snapshot's signature.
+    pub fn next_id(&self) -> u64 {
+        self.next_id.load(Ordering::SeqCst)
+    }
+
+    /// Capture shard `idx`'s snapshot under its (held) mutex, delta-shared
+    /// with the previous slot value, and store it.
+    pub fn store_snapshot(&self, idx: usize, sched: &Scheduler) {
+        let slot = &self.shards[idx];
+        let prev = Arc::clone(&slot.snapshot.read().expect("shard snapshot poisoned"));
+        let next = Arc::new(SchedSnapshot::capture(sched, Some(&prev)));
+        *slot.snapshot.write().expect("shard snapshot poisoned") = next;
+    }
+
+    /// One shard's latest published snapshot.
+    pub fn shard_snapshot(&self, idx: usize) -> Arc<SchedSnapshot> {
+        Arc::clone(&self.shards[idx].snapshot.read().expect("shard snapshot poisoned"))
+    }
+
+    /// Merge every shard's slot into one global snapshot stamped with the
+    /// next epoch. Slots are read lock-free of the shard mutexes; a slot
+    /// read concurrently with another shard's publish yields either its
+    /// old or new value — both internally consistent — and the epoch
+    /// ordering at the swap site keeps the published view monotone.
+    pub fn merged_snapshot(&self) -> Arc<SchedSnapshot> {
+        let slots: Vec<Arc<SchedSnapshot>> = self
+            .shards
+            .iter()
+            .map(|s| Arc::clone(&s.snapshot.read().expect("shard snapshot poisoned")))
+            .collect();
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        Arc::new(SchedSnapshot::merged(&slots, epoch, self.next_id()))
+    }
+
+    /// Per-shard stat rows (STATS v2 `shard kind=sched` records).
+    pub fn stats(&self) -> Vec<SchedShardStat> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(index, s)| {
+                let hold = s.lock_hold.lock().expect("shard metrics poisoned").clone();
+                let snap = s.snapshot.read().expect("shard snapshot poisoned");
+                SchedShardStat {
+                    index,
+                    label: s.label.to_string(),
+                    locks: s.locks.load(Ordering::Relaxed),
+                    lock_hold_p99_ns: hold.p99(),
+                    lock_hold_max_ns: hold.max(),
+                    pending: snap.pending,
+                    running: snap.running,
+                    dispatches: snap.stats.dispatches,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology;
+    use crate::job::{JobSpec, JobType, UserId};
+    use crate::sim::{SchedCosts, SimTime};
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+    }
+
+    #[test]
+    fn single_mode_is_one_shard_over_the_whole_cluster() {
+        let s = SchedShards::single(topology::tx2500(), cfg());
+        assert_eq!(s.count(), 1);
+        assert!(!s.is_sharded());
+        assert_eq!(s.shard_for(QosClass::Normal), 0);
+        assert_eq!(s.shard_for(QosClass::Spot), 0);
+        let total = s.lock(0).cluster().total_cores();
+        assert_eq!(total, topology::tx2500().total_cores());
+    }
+
+    #[test]
+    fn sharded_dual_splits_nodes_and_routes_by_qos() {
+        let full = topology::tx2500();
+        let (nodes, cores) = (full.node_count(), full.cores_per_node());
+        let s = SchedShards::sharded(full, cfg(), 2);
+        assert_eq!(s.count(), 2);
+        assert!(s.is_sharded());
+        assert_eq!(s.shard_for(QosClass::Normal), 0, "interactive → shard 0");
+        assert_eq!(s.shard_for(QosClass::Spot), 1, "spot → shard 1");
+        let n0 = s.lock(0).cluster().node_count();
+        let n1 = s.lock(1).cluster().node_count();
+        assert_eq!(n0 + n1, nodes, "shards cover the whole node pool");
+        assert!(n0.abs_diff(n1) <= 1, "split is proportional");
+        assert_eq!(s.lock(0).cluster().cores_per_node(), cores);
+    }
+
+    #[test]
+    fn oversized_or_degenerate_counts_fall_back_to_single() {
+        // More shards than partitions: clamped to the partition count.
+        assert_eq!(SchedShards::sharded(topology::tx2500(), cfg(), 8).count(), 2);
+        // Single-partition layout cannot shard.
+        let single_cfg =
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Single);
+        assert_eq!(SchedShards::sharded(topology::tx2500(), single_cfg, 4).count(), 1);
+        // count <= 1 is the unsharded daemon.
+        assert_eq!(SchedShards::sharded(topology::tx2500(), cfg(), 1).count(), 1);
+        // A one-node cluster cannot give two shards a node each.
+        let tiny = Cluster::homogeneous(1, 32);
+        assert_eq!(SchedShards::sharded(tiny, cfg(), 2).count(), 1);
+    }
+
+    #[test]
+    fn global_ids_stay_unique_and_contiguous_across_shards() {
+        let s = SchedShards::sharded(topology::tx2500(), cfg(), 2);
+        // Interleave allocations against both shards, the way concurrent
+        // SUBMITs land.
+        let mut all = Vec::new();
+        for round in 0..3 {
+            for idx in 0..2 {
+                let mut sched = s.lock(idx);
+                let first = s.allocate_ids(2);
+                sched.force_next_id(first);
+                let spec = if idx == 0 {
+                    JobSpec::interactive(UserId(round), JobType::TripleMode, 32)
+                } else {
+                    JobSpec::spot(UserId(9), JobType::Array, 16)
+                };
+                let ids = sched.submit_batch(vec![spec.clone(), spec]);
+                assert_eq!(ids[0].0, first, "reservation is the assignment");
+                assert_eq!(ids[1].0, first + 1, "reservation is contiguous");
+                all.extend(ids.into_iter().map(|j| j.0));
+            }
+        }
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len(), "ids are globally unique");
+        assert_eq!(sorted, (1..=12).collect::<Vec<u64>>(), "no holes");
+        assert_eq!(s.next_id(), 13);
+    }
+
+    #[test]
+    fn merged_snapshot_covers_both_shards_with_monotone_epochs() {
+        let s = SchedShards::sharded(topology::tx2500(), cfg(), 2);
+        {
+            let mut sched = s.lock(0);
+            let first = s.allocate_ids(1);
+            sched.force_next_id(first);
+            sched.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 32));
+            sched.run_until(SimTime::from_secs(30));
+            s.store_snapshot(0, &sched);
+        }
+        {
+            let mut sched = s.lock(1);
+            let first = s.allocate_ids(1);
+            sched.force_next_id(first);
+            sched.submit(JobSpec::spot(UserId(9), JobType::Array, 16));
+            sched.run_until(SimTime::from_secs(30));
+            s.store_snapshot(1, &sched);
+        }
+        let m1 = s.merged_snapshot();
+        assert_eq!(m1.jobs().len(), 2, "both shards' jobs visible");
+        assert!(m1.job(1).is_some() && m1.job(2).is_some());
+        let m2 = s.merged_snapshot();
+        assert!(m2.version > m1.version, "epochs are monotone");
+        // Occupancy sums to the full pool.
+        assert_eq!(
+            m1.cluster.total_cores,
+            topology::tx2500().total_cores(),
+            "merged occupancy covers the whole cluster"
+        );
+    }
+
+    #[test]
+    fn shard_stats_report_locks_and_depth() {
+        let s = SchedShards::sharded(topology::tx2500(), cfg(), 2);
+        {
+            let mut sched = s.lock(1);
+            let first = s.allocate_ids(1);
+            sched.force_next_id(first);
+            sched.submit(JobSpec::spot(UserId(9), JobType::Array, 16));
+            s.store_snapshot(1, &sched);
+        }
+        s.record_hold(1, 5_000);
+        let rows = s.stats();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].label, "interactive");
+        assert_eq!(rows[1].label, "spot");
+        assert_eq!(rows[1].locks, 1);
+        assert_eq!(rows[1].pending, 1, "queue depth from the shard snapshot");
+        assert!(rows[1].lock_hold_max_ns >= 5_000);
+        assert_eq!(rows[0].locks, 0, "untouched shard records nothing");
+    }
+}

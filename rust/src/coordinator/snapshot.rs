@@ -244,6 +244,99 @@ impl SchedSnapshot {
         }
     }
 
+    /// Merge per-shard snapshots into one coherent global view — the
+    /// sharded coordinator's epoch publish path. Each input is internally
+    /// consistent (captured under its own shard's mutex), and job ids are
+    /// globally unique (the shard layer allocates every id from one global
+    /// counter), so an id-ordered k-way merge of the shard tables yields
+    /// one id-sorted global table; the per-job `Arc<JobView>`s are shared
+    /// with the shard snapshots, so the merge allocates one `Vec`, not new
+    /// views. `epoch` is the cross-shard publish sequence (monotone over
+    /// every shard's publishes — it plays the role a single scheduler's
+    /// `change_version` plays in the unsharded daemon) and `next_id` is the
+    /// global allocator watermark; readers therefore observe a version and
+    /// signature that move exactly when any shard moved.
+    pub(crate) fn merged(
+        shards: &[Arc<SchedSnapshot>],
+        epoch: u64,
+        next_id: u64,
+    ) -> SchedSnapshot {
+        assert!(!shards.is_empty(), "merged() needs at least one shard");
+        let mut stats = SchedStats::default();
+        let (mut idle_cores, mut idle_nodes, mut total_cores) = (0u32, 0u32, 0u32);
+        let (mut pending, mut running, mut ended) = (0usize, 0usize, 0usize);
+        let (mut sig_len, mut sig_log, mut sig_resumes) = (0usize, 0u64, 0u64);
+        let mut virtual_now = SimTime::ZERO;
+        for s in shards.iter().map(Arc::as_ref) {
+            stats.main_passes += s.stats.main_passes;
+            stats.backfill_passes += s.stats.backfill_passes;
+            stats.triggered_passes += s.stats.triggered_passes;
+            stats.dispatches += s.stats.dispatches;
+            stats.preemptions += s.stats.preemptions;
+            stats.requeues += s.stats.requeues;
+            stats.cron_passes += s.stats.cron_passes;
+            stats.score_batches += s.stats.score_batches;
+            stats.jobs_scored += s.stats.jobs_scored;
+            idle_cores += s.cluster.idle_cores;
+            idle_nodes += s.cluster.idle_nodes;
+            total_cores += s.cluster.total_cores;
+            pending += s.pending;
+            running += s.running;
+            ended += s.ended;
+            sig_len += s.jobs_sig.0;
+            sig_log += s.jobs_sig.2;
+            sig_resumes += s.jobs_sig.3;
+            virtual_now = virtual_now.max(s.virtual_now);
+        }
+        let utilization = if total_cores == 0 {
+            0.0
+        } else {
+            1.0 - f64::from(idle_cores) / f64::from(total_cores)
+        };
+        let jobs = if shards.len() == 1 {
+            Arc::clone(&shards[0].jobs)
+        } else {
+            let mut cursors: Vec<(usize, &[Arc<JobView>])> = shards
+                .iter()
+                .map(|s| (0usize, s.jobs.as_slice()))
+                .collect();
+            let mut out: Vec<Arc<JobView>> = Vec::with_capacity(sig_len);
+            loop {
+                let mut best: Option<(usize, u64)> = None;
+                for (k, &(i, table)) in cursors.iter().enumerate() {
+                    if i < table.len() {
+                        let id = table[i].id;
+                        if best.map_or(true, |(_, bid)| id < bid) {
+                            best = Some((k, id));
+                        }
+                    }
+                }
+                let Some((k, _)) = best else { break };
+                let (i, table) = cursors[k];
+                out.push(Arc::clone(&table[i]));
+                cursors[k].0 += 1;
+            }
+            Arc::new(out)
+        };
+        SchedSnapshot {
+            virtual_now,
+            version: epoch,
+            jobs_sig: (sig_len, next_id, sig_log, sig_resumes),
+            stats,
+            scorer: Arc::clone(&shards[0].scorer),
+            cluster: ClusterView {
+                utilization,
+                idle_cores,
+                idle_nodes,
+                total_cores,
+            },
+            pending,
+            running,
+            ended,
+            jobs,
+        }
+    }
+
     /// The job table, ascending id order.
     pub fn jobs(&self) -> &[Arc<JobView>] {
         &self.jobs
@@ -522,6 +615,66 @@ mod tests {
         assert_ne!(s.jobs_signature(), sig_suspended, "resume must move the signature");
         let snap_resumed = SchedSnapshot::capture(&s, Some(&snap_suspended));
         assert_eq!(snap_resumed.job(spot.0).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn merged_snapshot_interleaves_shard_tables_and_sums_counters() {
+        let mut a = sched();
+        let mut b = sched();
+        // Interleave globally-unique ids across the two shards, the way the
+        // shard layer's global allocator hands them out.
+        a.force_next_id(10);
+        let a1 = a.submit(JobSpec::interactive(UserId(1), JobType::TripleMode, 32));
+        b.force_next_id(11);
+        let b1 = b.submit(JobSpec::spot(UserId(9), JobType::Array, 16));
+        a.force_next_id(12);
+        let a2 = a.submit(JobSpec::interactive(UserId(2), JobType::TripleMode, 32));
+        assert_eq!((a1.0, b1.0, a2.0), (10, 11, 12));
+        assert!(a.run_until_dispatched(&[a1, a2], SimTime::from_secs(60)));
+        b.run_until(SimTime::from_secs(60));
+        let sa = Arc::new(SchedSnapshot::capture(&a, None));
+        let sb = Arc::new(SchedSnapshot::capture(&b, None));
+        let m = SchedSnapshot::merged(&[Arc::clone(&sa), Arc::clone(&sb)], 41, 13);
+        assert_eq!(m.version, 41, "merged version is the publish epoch");
+        let ids: Vec<u64> = m.jobs().iter().map(|v| v.id).collect();
+        assert_eq!(ids, vec![10, 11, 12], "k-way merge is id-sorted");
+        // Views are shared with the shard snapshots, not rebuilt.
+        assert!(Arc::ptr_eq(&m.jobs()[0], &sa.jobs()[0]));
+        assert!(Arc::ptr_eq(&m.jobs()[1], &sb.jobs()[0]));
+        assert!(Arc::ptr_eq(&m.jobs()[2], &sa.jobs()[1]));
+        // Counters and occupancy are sums across shards.
+        assert_eq!(m.running, sa.running + sb.running);
+        assert_eq!(m.pending, sa.pending + sb.pending);
+        assert_eq!(m.ended, sa.ended + sb.ended);
+        assert_eq!(
+            m.stats.dispatches,
+            sa.stats.dispatches + sb.stats.dispatches
+        );
+        assert_eq!(
+            m.cluster.total_cores,
+            sa.cluster.total_cores + sb.cluster.total_cores
+        );
+        assert_eq!(
+            m.cluster.idle_cores,
+            sa.cluster.idle_cores + sb.cluster.idle_cores
+        );
+        assert_eq!(m.virtual_now, SimTime::from_secs(60));
+        // The merged table answers point lookups like any snapshot.
+        assert_eq!(m.job(11).unwrap().qos, QosClass::Spot);
+        let wv = m.wait_view(&[10, 12]);
+        assert_eq!(wv.dispatched, 2);
+        assert!(wv.settled);
+    }
+
+    #[test]
+    fn merged_single_shard_shares_the_table_arc() {
+        let mut s = sched();
+        s.submit(JobSpec::spot(UserId(9), JobType::Array, 16));
+        let snap = Arc::new(SchedSnapshot::capture(&s, None));
+        let m = SchedSnapshot::merged(&[Arc::clone(&snap)], 7, 2);
+        assert!(Arc::ptr_eq(&m.jobs, &snap.jobs), "one shard: no copy");
+        assert_eq!(m.version, 7);
+        assert_eq!(m.pending, snap.pending);
     }
 
     #[test]

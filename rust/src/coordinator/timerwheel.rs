@@ -16,6 +16,11 @@
 //! connection has moved on (new deadline, closed slot, reused slot) is
 //! simply dropped or re-inserted by the expiry callback. That makes re-arm
 //! (the per-request hot path) allocation- and search-free.
+//!
+//! The wheel is deliberately single-threaded: under a sharded front door
+//! ([`super::server::Server::bind_sharded`]) each reactor shard owns its
+//! own wheel for its own connections, so timer state needs no locking and
+//! shard counts scale the timer load linearly.
 
 use std::time::{Duration, Instant};
 

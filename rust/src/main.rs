@@ -151,6 +151,8 @@ fn cmd_daemon(args: &[String]) -> i32 {
     let cmd = Command::new("spotcloud daemon", "start the coordinator daemon")
         .opt("addr", "bind address", Some("127.0.0.1:7461"))
         .opt("workers", "connection worker threads", Some("4"))
+        .opt("shards", "reactor shards (SO_REUSEPORT listeners; Linux)", Some("1"))
+        .opt("sched-shards", "partition scheduler shards (incompatible with --journal)", Some("1"))
         .opt("speedup", "virtual seconds per wall second", Some("60"))
         .opt("reserve", "idle-node reserve (cron agent)", Some("5"))
         .opt("topology", "tx2500 | txgreen | txgreen-full", Some("tx2500"))
@@ -165,6 +167,13 @@ fn cmd_daemon(args: &[String]) -> i32 {
     };
     let addr: String = parsed.get("addr").unwrap().to_string();
     let workers: usize = parsed.value("workers").unwrap();
+    let (Ok(shards), Ok(sched_shards)) = (
+        parsed.value::<usize>("shards"),
+        parsed.value::<usize>("sched-shards"),
+    ) else {
+        eprintln!("bad numeric option");
+        return 2;
+    };
     let speedup: f64 = parsed.value("speedup").unwrap();
     let reserve: u32 = parsed.value("reserve").unwrap();
     let (cluster, mut sched_cfg) = if let Some(path) = parsed.get("config") {
@@ -231,6 +240,13 @@ fn cmd_daemon(args: &[String]) -> i32 {
         }
         None => None,
     };
+    if durability.is_some() && sched_shards > 1 {
+        eprintln!(
+            "--sched-shards > 1 is incompatible with --journal \
+             (durability requires a single scheduler shard)"
+        );
+        return 2;
+    }
     let journal_note = durability
         .as_ref()
         .map(|d| format!(", journal {} fsync={}", d.dir.display(), d.fsync.label()))
@@ -238,6 +254,7 @@ fn cmd_daemon(args: &[String]) -> i32 {
     let cfg = DaemonConfig {
         speedup,
         durability,
+        shard_count: sched_shards.max(1),
         ..Default::default()
     };
     // A directory that already holds segments is a crashed (or cleanly
@@ -261,7 +278,7 @@ fn cmd_daemon(args: &[String]) -> i32 {
         Daemon::new(cluster, sched_cfg, cfg)
     };
     let pacer = daemon.spawn_pacer();
-    let server = match Server::bind(Arc::clone(&daemon), &addr, workers) {
+    let server = match Server::bind_sharded(Arc::clone(&daemon), &addr, workers, shards.max(1)) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("failed to bind {addr}: {e:#}");
@@ -269,8 +286,11 @@ fn cmd_daemon(args: &[String]) -> i32 {
         }
     };
     println!(
-        "spotcloud daemon listening on {} (speedup {speedup}x, reserve {reserve} nodes{journal_note})",
-        server.local_addr().map(|a| a.to_string()).unwrap_or(addr)
+        "spotcloud daemon listening on {} (speedup {speedup}x, reserve {reserve} nodes, \
+         {} reactor shard(s), {} sched shard(s){journal_note})",
+        server.local_addr().map(|a| a.to_string()).unwrap_or(addr),
+        server.reactor_shards(),
+        sched_shards.max(1),
     );
     server.serve();
     pacer.join().ok();
@@ -634,11 +654,31 @@ fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
             )
         })
         .unwrap_or_default();
+    let shards = if s.shards.is_empty() {
+        String::new()
+    } else {
+        let mut t = String::from("\nshards: KIND IDX LABEL WAKEUPS EVENTS CONNS PARKED QDEPTH P99NS");
+        for sh in &s.shards {
+            t.push_str(&format!(
+                "\n  {} {} {} {} {} {} {} {} {}",
+                sh.kind.as_str(),
+                sh.index,
+                sh.label,
+                sh.wakeups,
+                sh.events,
+                sh.connections,
+                sh.parked,
+                sh.queue_depth,
+                sh.lock_hold_p99_ns,
+            ));
+        }
+        t
+    };
     format!(
         "virtual_now={:.1}s dispatches={} preemptions={} requeues={} cron_passes={} \
          main_passes={} backfill_passes={} triggered_passes={} scorer={}\n\
          requests: ok={} err={} jobs_submitted={} | sched latency: n={} p50={:.3}s\n\
-         commands: {commands}{contention}",
+         commands: {commands}{contention}{shards}",
         s.virtual_now_secs,
         s.dispatches,
         s.preemptions,

@@ -4,6 +4,7 @@
 use spotcloud::cluster::{topology, PartitionLayout};
 use spotcloud::coordinator::{
     client::Client, Daemon, DaemonConfig, ErrorCode, ManifestBuilder, ManifestEntry, Server,
+    SubmitSpec,
 };
 use spotcloud::job::{JobType, QosClass};
 use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
@@ -294,6 +295,219 @@ fn stats_reflect_scheduler_activity() {
     assert!(stats.contains("scorer=native"), "{stats}");
     let _ = c.request("SHUTDOWN");
     server.join().unwrap();
+}
+
+/// A daemon with `shards` scheduler shards behind a `bind_sharded` server
+/// asking for the same number of reactor shards (non-Linux builds fall
+/// back to the portable server; the scheduler sharding still applies).
+fn spawn_sharded_daemon(shards: usize) -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        // The cross-shard tests queue hundreds of jobs per user; per-user
+        // admission caps are not what they exercise.
+        .with_user_limit(100_000);
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        cfg,
+        DaemonConfig {
+            speedup: 5_000.0,
+            pacer_tick_ms: 1,
+            retire_grace_secs: Some(86_400.0),
+            shard_count: shards,
+            ..DaemonConfig::default()
+        },
+    );
+    Arc::clone(&daemon).spawn_pacer();
+    let server = Server::bind_sharded(Arc::clone(&daemon), "127.0.0.1:0", 4, shards).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve());
+    (daemon, addr, handle)
+}
+
+#[test]
+fn multi_partition_manifest_is_atomic_and_contiguous_across_shards() {
+    // One MSUBMIT whose entries alternate between the interactive and spot
+    // partitions — i.e. between the two scheduler shards. The global id
+    // allocator must still hand out one contiguous run across the whole
+    // manifest, and the ack must cover every entry exactly once.
+    let (daemon, addr, server) = spawn_sharded_daemon(2);
+    assert_eq!(daemon.shard_count(), 2);
+    let mut b = ManifestBuilder::new();
+    for i in 0..40u32 {
+        b = if i % 2 == 0 {
+            b.interactive(1 + i % 5, JobType::Individual, 2)
+        } else {
+            b.spot(50 + i % 3, JobType::Individual, 2)
+        };
+    }
+    let mut c = Client::connect_v2(&addr).unwrap();
+    let ack = c.msubmit(&b.build()).unwrap();
+    assert_eq!(ack.rejected.len(), 0, "{:?}", ack.rejected.first());
+    assert_eq!(ack.accepted.len(), 40);
+    assert_eq!(ack.jobs, 80);
+    let mut next = ack.accepted[0].first;
+    for acc in &ack.accepted {
+        assert_eq!(acc.first, next, "entry {} range not contiguous", acc.index);
+        assert_eq!(acc.count, 2, "entry {}", acc.index);
+        next = acc.last + 1;
+    }
+    // Both shards really took their halves, and each job answers SJOB.
+    let first_detail = c.job(ack.accepted[0].first).unwrap();
+    assert_eq!(first_detail.user, 1);
+    let second_detail = c.job(ack.accepted[1].first).unwrap();
+    assert_eq!(second_detail.user, 51);
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn wait_parked_on_the_front_door_resolves_from_the_spot_shard_exactly_once() {
+    // More spot jobs than the spot shard has cores: the WAIT must park on
+    // whichever reactor shard owns the connection and resolve only when
+    // scheduler shard 1 (spot) has dispatched every job — then exactly
+    // once, which the parked/resumed counter balance proves.
+    let (daemon, addr, server) = spawn_sharded_daemon(2);
+    let mut c = Client::connect_v2(&addr).unwrap();
+    let ack = c
+        .submit(&SubmitSpec::new(QosClass::Spot, JobType::Array, 400, 9).with_run_secs(5.0))
+        .unwrap();
+    assert_eq!(ack.count, 400);
+    let ids: Vec<u64> = ack.ids().collect();
+    let w = c.wait(&ids, 30.0).unwrap();
+    assert!(!w.timed_out, "{w:?}");
+    assert_eq!(w.dispatched, 400, "{w:?}");
+    // The work landed on the spot shard, not shard 0.
+    let spot_dispatches = daemon.with_shard(1, |s| s.stats().dispatches);
+    assert!(spot_dispatches >= 400, "spot shard dispatched {spot_dispatches}");
+    // Exactly-once wake: quiesce, then the counters must balance.
+    std::thread::sleep(Duration::from_millis(100));
+    let parked = daemon.metrics.waits_parked.load(std::sync::atomic::Ordering::Relaxed);
+    let resumed = daemon.metrics.waits_resumed.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(parked, resumed, "a parked WAIT was lost or woken twice");
+    // The connection survives its parked WAIT.
+    c.ping().unwrap();
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn scancel_races_cross_shard_activity_without_breaking_invariants() {
+    // Cancellers hammer the spot shard's jobs from their own connections
+    // while a submitter loads the interactive shard — cancellation racing
+    // dispatch/completion on one shard and admission on the other. Every
+    // shard's scheduler must hold its invariants afterwards.
+    let (daemon, addr, server) = spawn_sharded_daemon(2);
+    let mut c = Client::connect_v2(&addr).unwrap();
+    let ack = c
+        .submit(&SubmitSpec::new(QosClass::Spot, JobType::Array, 300, 9).with_run_secs(600.0))
+        .unwrap();
+    let ids: Vec<u64> = ack.ids().collect();
+    let cancellers: Vec<_> = ids
+        .chunks(100)
+        .map(|chunk| {
+            let addr = addr.clone();
+            let chunk = chunk.to_vec();
+            std::thread::spawn(move || {
+                let mut c = Client::connect_v2(&addr).unwrap();
+                for id in chunk {
+                    // Racing a completion/requeue: an already-terminal job
+                    // is a typed error, never a dead connection.
+                    let _ = c.cancel(id);
+                }
+                c.ping().unwrap();
+            })
+        })
+        .collect();
+    let submit_addr = addr.clone();
+    let submitter = std::thread::spawn(move || {
+        let mut c = Client::connect_v2(&submit_addr).unwrap();
+        for i in 0..120u32 {
+            c.submit(&SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, 1 + i % 4))
+                .unwrap();
+        }
+        c.ping().unwrap();
+    });
+    for t in cancellers {
+        t.join().unwrap();
+    }
+    submitter.join().unwrap();
+    for idx in 0..daemon.shard_count() {
+        daemon.with_shard(idx, |s| s.check_invariants())
+            .unwrap_or_else(|e| panic!("shard {idx} invariants violated: {e}"));
+    }
+    c.ping().unwrap();
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+/// Shutdown with WAITs parked across multiple reactor shards: every shard
+/// drains — each parked waiter gets a final answer (or an orderly close),
+/// the counters balance, and `serve` returns. Linux-only because the
+/// per-shard parked gauges live on the reactor.
+#[cfg(target_os = "linux")]
+#[test]
+fn shutdown_drains_parked_waits_on_every_reactor_shard() {
+    // No pacer: the virtual clock is frozen, so a queued job can never
+    // dispatch and the WAITs below stay parked until shutdown.
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_user_limit(100_000);
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        cfg,
+        DaemonConfig {
+            shard_count: 2,
+            ..DaemonConfig::default()
+        },
+    );
+    let server = Server::bind_sharded(Arc::clone(&daemon), "127.0.0.1:0", 4, 2).unwrap();
+    assert_eq!(server.reactor_shards(), 2);
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    // One spot job over capacity-one-core semantics doesn't matter — with
+    // no pacer nothing dispatches, so any WAIT on it parks forever.
+    let mut c = Client::connect_v2(&addr).unwrap();
+    let ack = c
+        .submit(&SubmitSpec::new(QosClass::Spot, JobType::Individual, 1, 9).with_run_secs(60.0))
+        .unwrap();
+    let id = ack.first;
+    let waiters: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut w = Client::connect_v2(&addr).unwrap();
+                // Resolved by shutdown, not by time: the result (timeout
+                // response or orderly close) only has to arrive.
+                let _ = w.wait(&[id], 120.0);
+            })
+        })
+        .collect();
+
+    // Wait until all six are parked on the reactors (whichever shards the
+    // kernel spread them across).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let parked: u64 = daemon
+            .metrics
+            .reactor_shards()
+            .iter()
+            .map(|s| s.parked_waits.load(std::sync::atomic::Ordering::Relaxed))
+            .sum();
+        if parked >= 6 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "waiters never parked (saw {parked})");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    daemon.shutdown();
+    server_thread.join().unwrap();
+    // Shutdown drained every shard: all waiter connections got unblocked.
+    for w in waiters {
+        w.join().unwrap();
+    }
+    let parked = daemon.metrics.waits_parked.load(std::sync::atomic::Ordering::Relaxed);
+    let resumed = daemon.metrics.waits_resumed.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(parked, resumed, "a parked WAIT was dropped at shutdown");
 }
 
 #[test]
