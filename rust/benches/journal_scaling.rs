@@ -2,15 +2,21 @@
 //! `benchkit::journal_scaling`).
 //!
 //! Times the same per-RPC admission loop with the journal off and under
-//! each fsync policy, then times cold `Daemon::recover` at two journal
-//! sizes, and emits `BENCH_journal.json` (override with
-//! `SPOTCLOUD_BENCH_JSON`). The JSON is written **before** the health
+//! each fsync policy, a concurrent 4-writer loop for the group-commit
+//! rows, then times cold `Daemon::recover` at two flat journal sizes and
+//! one sharded (2-shard) one, and emits `BENCH_journal.json` (override
+//! with `SPOTCLOUD_BENCH_JSON`). The JSON is written **before** the health
 //! asserts run, so a regressed run still surfaces its numbers in the CI
 //! artifact.
 //!
-//! Gate: admission p99 under the default `fsync=interval` policy must stay
-//! ≤ 1.5× journal-off — the WAL sits on the ack path of every admission,
-//! so its steady-state cost is one buffered write per record.
+//! Gates:
+//! * admission p99 under the default `fsync=interval` policy ≤ 1.5×
+//!   journal-off — the WAL sits on the ack path of every admission, so its
+//!   steady-state cost is one buffered write per record;
+//! * concurrent `fsync=always` + group commit p99 ≤ 3× journal-off at the
+//!   same concurrency — full durability batches, it does not serialize;
+//! * the sharded 100k-record recovery replays the writer's job ids
+//!   identically.
 //!
 //! `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke configuration.
 
@@ -47,5 +53,14 @@ fn main() {
         report.interval_vs_off_ratio <= 1.5,
         "journaled admission (fsync=interval) costs {:.2}x journal-off at p99 (gate 1.5x)",
         report.interval_vs_off_ratio,
+    );
+    assert!(
+        report.gc_vs_off_ratio <= 3.0,
+        "group-committed fsync=always costs {:.2}x journal-off at concurrent p99 (gate 3x)",
+        report.gc_vs_off_ratio,
+    );
+    assert!(
+        report.recovery_sharded_ids_match,
+        "sharded recovery did not reproduce the writer's job ids: {report:?}"
     );
 }

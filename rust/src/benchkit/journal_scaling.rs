@@ -10,11 +10,20 @@
 //!    of journal-off: the WAL sits on the ack path of *every* admission,
 //!    so its steady-state cost must stay in the noise (one buffered
 //!    `write(2)` per record; the fsync stride amortizes the sync).
-//! 2. **How fast is recovery by replay?** A journal is grown to N admit
+//! 2. **What does group commit buy back?** `fsync=always` is the honest
+//!    policy but the expensive one; with several writers in flight the
+//!    daemon batches their acks into shared fsyncs. A 4-thread concurrent
+//!    admission loop runs once with the journal off and once under
+//!    `fsync=always` + group commit; CI gates the ratio at ≤ 3× — the
+//!    whole point of the parked-writer protocol is that full durability
+//!    under concurrency costs a small multiple, not an fsync per ack.
+//! 3. **How fast is recovery by replay?** A journal is grown to N admit
 //!    records with checkpointing pushed out of the way, the daemon is
 //!    dropped, and `Daemon::recover` is timed cold — once at the small
-//!    shape (1k records) and once at the large one (100k by default), so
-//!    the replay rate and its scaling are both on record.
+//!    shape (1k records), once at the large one (100k by default), and
+//!    once sharded (2 scheduler shards, admissions alternating qos so both
+//!    per-shard journals grow; replay must reproduce the writer's job ids
+//!    exactly), so the replay rate and its scaling are both on record.
 //!
 //! Every daemon here is frozen (`speedup = 0`): admitted jobs never
 //! dispatch, so the timings isolate admission + journaling from pacer
@@ -43,6 +52,8 @@ pub struct JournalScalingConfig {
     pub recovery_small: usize,
     /// Records in the large recovery journal.
     pub recovery_large: usize,
+    /// Concurrent writer threads for the group-commit rows.
+    pub gc_threads: usize,
 }
 
 impl Default for JournalScalingConfig {
@@ -52,6 +63,7 @@ impl Default for JournalScalingConfig {
             iters: 2,
             recovery_small: 1_000,
             recovery_large: 100_000,
+            gc_threads: 4,
         }
     }
 }
@@ -64,6 +76,7 @@ impl JournalScalingConfig {
             iters: 1,
             recovery_small: 200,
             recovery_large: 1_000,
+            gc_threads: 4,
         }
     }
 }
@@ -83,6 +96,15 @@ pub struct JournalScalingReport {
     pub p99_always_us: f64,
     /// p99_interval / p99_off — the CI gate (≤ 1.5).
     pub interval_vs_off_ratio: f64,
+    /// Concurrent (4-thread) admission p99 with no journal configured (µs).
+    pub p99_off_concurrent_us: f64,
+    /// Concurrent admission p99 under `fsync=always` + group commit (µs).
+    pub p99_always_gc_us: f64,
+    /// p99_always_gc / p99_off_concurrent — the CI gate (≤ 3.0).
+    pub gc_vs_off_ratio: f64,
+    /// Leader fsyncs the group-commit run performed (fewer than acks ⇒
+    /// batching happened).
+    pub group_commit_batches: u64,
     /// Records in the small recovery journal.
     pub recovery_small_records: usize,
     /// Cold `Daemon::recover` wall seconds at the small shape.
@@ -93,6 +115,13 @@ pub struct JournalScalingReport {
     pub recovery_large_wall_s: f64,
     /// Replay rate at the large shape (records / second).
     pub recovery_large_records_per_s: f64,
+    /// Records in the sharded (2-shard) recovery journal.
+    pub recovery_sharded_records: usize,
+    /// Cold sharded `Daemon::recover` wall seconds.
+    pub recovery_sharded_wall_s: f64,
+    /// Sharded replay reproduced the writer's job ids exactly (count +
+    /// sampled id identity across both shards)?
+    pub recovery_sharded_ids_match: bool,
     /// Every submission acked on every iteration?
     pub all_acked: bool,
     /// Both recoveries replayed exactly the records that were journaled?
@@ -112,11 +141,18 @@ impl JournalScalingReport {
                 "  \"p99_interval_us\": {:.3},\n",
                 "  \"p99_always_us\": {:.3},\n",
                 "  \"interval_vs_off_ratio\": {:.3},\n",
+                "  \"p99_off_concurrent_us\": {:.3},\n",
+                "  \"p99_always_gc_us\": {:.3},\n",
+                "  \"gc_vs_off_ratio\": {:.3},\n",
+                "  \"group_commit_batches\": {},\n",
                 "  \"recovery_small_records\": {},\n",
                 "  \"recovery_small_wall_s\": {:.6},\n",
                 "  \"recovery_large_records\": {},\n",
                 "  \"recovery_large_wall_s\": {:.6},\n",
                 "  \"recovery_large_records_per_s\": {:.1},\n",
+                "  \"recovery_sharded_records\": {},\n",
+                "  \"recovery_sharded_wall_s\": {:.6},\n",
+                "  \"recovery_sharded_ids_match\": {},\n",
                 "  \"all_acked\": {},\n",
                 "  \"replay_counts_match\": {}\n",
                 "}}\n",
@@ -127,11 +163,18 @@ impl JournalScalingReport {
             self.p99_interval_us,
             self.p99_always_us,
             self.interval_vs_off_ratio,
+            self.p99_off_concurrent_us,
+            self.p99_always_gc_us,
+            self.gc_vs_off_ratio,
+            self.group_commit_batches,
             self.recovery_small_records,
             self.recovery_small_wall_s,
             self.recovery_large_records,
             self.recovery_large_wall_s,
             self.recovery_large_records_per_s,
+            self.recovery_sharded_records,
+            self.recovery_sharded_wall_s,
+            self.recovery_sharded_ids_match,
             self.all_acked,
             self.replay_counts_match,
         )
@@ -142,18 +185,25 @@ impl JournalScalingReport {
         format!(
             "journal_scaling: {} admissions — p99 off {:.2}us, never {:.2}us, \
              interval {:.2}us (ratio {:.2}x, gate 1.5x), always {:.2}us; \
-             recovery {} rec {:.3}s / {} rec {:.3}s ({:.0} rec/s)",
+             group commit always {:.2}us vs off {:.2}us (ratio {:.2}x, gate 3x, {} batches); \
+             recovery {} rec {:.3}s / {} rec {:.3}s ({:.0} rec/s) / sharded {} rec {:.3}s",
             self.jobs,
             self.p99_off_us,
             self.p99_never_us,
             self.p99_interval_us,
             self.interval_vs_off_ratio,
             self.p99_always_us,
+            self.p99_always_gc_us,
+            self.p99_off_concurrent_us,
+            self.gc_vs_off_ratio,
+            self.group_commit_batches,
             self.recovery_small_records,
             self.recovery_small_wall_s,
             self.recovery_large_records,
             self.recovery_large_wall_s,
             self.recovery_large_records_per_s,
+            self.recovery_sharded_records,
+            self.recovery_sharded_wall_s,
         )
     }
 }
@@ -220,6 +270,73 @@ fn policy_p99_us(
     best
 }
 
+/// Concurrent per-RPC admissions from `threads` writers against one
+/// daemon; p99 across every request (µs). This is the group-commit shape:
+/// with several acks in flight under `fsync=always`, the parked-writer
+/// protocol batches them into shared leader fsyncs.
+fn concurrent_p99_us(d: &Arc<Daemon>, n: usize, threads: usize, all_acked: &mut bool) -> f64 {
+    let per = (n / threads.max(1)).max(1);
+    let mut handles = Vec::new();
+    for t in 0..threads.max(1) {
+        let d = Arc::clone(d);
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::with_capacity(per);
+            let mut ok = true;
+            for i in 0..per {
+                let user = 1 + ((t * per + i) as u32 % 5);
+                let t0 = Instant::now();
+                let resp = d.handle(Request::Submit(
+                    SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, user)
+                        .with_run_secs(600.0),
+                ));
+                lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                ok &= matches!(resp, Response::SubmitAck(_));
+            }
+            (lat, ok)
+        }));
+    }
+    let mut lat_us = Vec::new();
+    for h in handles {
+        let (lat, ok) = h.join().expect("writer thread");
+        lat_us.extend(lat);
+        *all_acked &= ok;
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    percentile(&lat_us, 0.99)
+}
+
+/// Best concurrent p99 over `iters` fresh daemons; for journaling runs,
+/// also the realized group-commit batch count of the best iteration (via
+/// the `STATS` journal block, so the wire plumbing is exercised too).
+fn gc_policy_p99_us(
+    cfg: &JournalScalingConfig,
+    journaled: bool,
+    all_acked: &mut bool,
+) -> (f64, u64) {
+    let mut best = f64::INFINITY;
+    let mut batches = 0u64;
+    for _ in 0..cfg.iters.max(1) {
+        let tmp;
+        let durability = if journaled {
+            tmp = TempDir::new("spotcloud-bench-journal-gc");
+            Some(DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always))
+        } else {
+            None
+        };
+        let d = admission_daemon(durability);
+        let p99 = concurrent_p99_us(&d, cfg.jobs, cfg.gc_threads, all_acked);
+        if p99 < best {
+            best = p99;
+            batches = match d.handle(Request::Stats) {
+                Response::Stats(s) => s.journal.map(|j| j.group_commits).unwrap_or(0),
+                _ => 0,
+            };
+        }
+        d.with_scheduler(|s| s.check_invariants().expect("invariants after admissions"));
+    }
+    (best, batches)
+}
+
 /// Grow a journal to `records` admit records (checkpointing pushed past
 /// the end so recovery replays every record), drop the daemon, and time
 /// `Daemon::recover` cold. Returns (wall seconds, replayed == records).
@@ -247,6 +364,54 @@ fn recovery_wall_s(records: usize, all_acked: &mut bool) -> (f64, bool) {
     (wall, report.admits_replayed == records)
 }
 
+/// Sharded variant: two scheduler shards (per-shard journals + alloc.log),
+/// admissions alternating qos so *both* journals grow, recovery timed
+/// cold. Beyond the count, replay must reproduce the writer's job ids
+/// *identically* — a sample of the acked ids is probed across both shards.
+fn sharded_recovery_wall_s(records: usize, all_acked: &mut bool) -> (f64, bool) {
+    let tmp = TempDir::new("spotcloud-bench-recovery-sharded");
+    let dcfg = DurabilityConfig::new(tmp.path())
+        .with_fsync(FsyncPolicy::Never)
+        .with_checkpoint_every(records as u64 + 1);
+    let cfg = DaemonConfig {
+        speedup: 0.0,
+        retire_grace_secs: None,
+        history_cap: None,
+        durability: Some(dcfg),
+        shard_count: 2,
+        ..DaemonConfig::default()
+    };
+    let mut writer_ids = Vec::with_capacity(records);
+    {
+        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+        for i in 0..records {
+            let qos = if i % 2 == 0 {
+                QosClass::Normal
+            } else {
+                QosClass::Spot
+            };
+            let user = 1 + (i as u32 % 5);
+            match d.handle(Request::Submit(
+                SubmitSpec::new(qos, JobType::Individual, 1, user).with_run_secs(600.0),
+            )) {
+                Response::SubmitAck(a) => writer_ids.push(a.first),
+                _ => *all_acked = false,
+            }
+        }
+        d.shutdown();
+    }
+    let t0 = Instant::now();
+    let (d, report) =
+        Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("sharded recovery");
+    let wall = t0.elapsed().as_secs_f64();
+    let mut ids_match = report.admits_replayed == records;
+    let step = (records / 64).max(1);
+    for &id in writer_ids.iter().step_by(step) {
+        ids_match &= matches!(d.handle(Request::Sjob(id)), Response::Job(_));
+    }
+    (wall, ids_match)
+}
+
 /// Run the scenario.
 pub fn run_journal_scaling(cfg: &JournalScalingConfig) -> JournalScalingReport {
     let mut all_acked = true;
@@ -256,8 +421,13 @@ pub fn run_journal_scaling(cfg: &JournalScalingConfig) -> JournalScalingReport {
     let p99_interval_us = policy_p99_us(cfg, Some(FsyncPolicy::default()), &mut all_acked);
     let p99_always_us = policy_p99_us(cfg, Some(FsyncPolicy::Always), &mut all_acked);
 
+    let (p99_off_concurrent_us, _) = gc_policy_p99_us(cfg, false, &mut all_acked);
+    let (p99_always_gc_us, group_commit_batches) = gc_policy_p99_us(cfg, true, &mut all_acked);
+
     let (recovery_small_wall_s, small_match) = recovery_wall_s(cfg.recovery_small, &mut all_acked);
     let (recovery_large_wall_s, large_match) = recovery_wall_s(cfg.recovery_large, &mut all_acked);
+    let (recovery_sharded_wall_s, recovery_sharded_ids_match) =
+        sharded_recovery_wall_s(cfg.recovery_large, &mut all_acked);
 
     JournalScalingReport {
         jobs: cfg.jobs,
@@ -266,12 +436,19 @@ pub fn run_journal_scaling(cfg: &JournalScalingConfig) -> JournalScalingReport {
         p99_interval_us,
         p99_always_us,
         interval_vs_off_ratio: p99_interval_us / p99_off_us.max(f64::EPSILON),
+        p99_off_concurrent_us,
+        p99_always_gc_us,
+        gc_vs_off_ratio: p99_always_gc_us / p99_off_concurrent_us.max(f64::EPSILON),
+        group_commit_batches,
         recovery_small_records: cfg.recovery_small,
         recovery_small_wall_s,
         recovery_large_records: cfg.recovery_large,
         recovery_large_wall_s,
         recovery_large_records_per_s: cfg.recovery_large as f64
             / recovery_large_wall_s.max(f64::EPSILON),
+        recovery_sharded_records: cfg.recovery_large,
+        recovery_sharded_wall_s,
+        recovery_sharded_ids_match,
         all_acked,
         replay_counts_match: small_match && large_match,
     }
@@ -286,8 +463,14 @@ mod tests {
         let r = run_journal_scaling(&JournalScalingConfig::quick());
         assert!(r.all_acked, "{r:?}");
         assert!(r.replay_counts_match, "{r:?}");
+        assert!(r.recovery_sharded_ids_match, "{r:?}");
         assert!(r.p99_off_us > 0.0 && r.p99_off_us.is_finite(), "{r:?}");
         assert!(r.interval_vs_off_ratio > 0.0 && r.interval_vs_off_ratio.is_finite());
+        assert!(r.gc_vs_off_ratio > 0.0 && r.gc_vs_off_ratio.is_finite());
+        assert!(
+            r.group_commit_batches > 0,
+            "fsync=always group commit never synced: {r:?}"
+        );
         assert!(r.recovery_large_wall_s > 0.0 && r.recovery_large_wall_s.is_finite());
         let json = r.to_json();
         for key in [
@@ -295,7 +478,10 @@ mod tests {
             "\"p99_off_us\"",
             "\"p99_interval_us\"",
             "\"interval_vs_off_ratio\"",
+            "\"p99_always_gc_us\"",
+            "\"gc_vs_off_ratio\"",
             "\"recovery_large_records_per_s\"",
+            "\"recovery_sharded_ids_match\": true",
             "\"all_acked\": true",
             "\"replay_counts_match\": true",
         ] {

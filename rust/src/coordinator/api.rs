@@ -537,6 +537,24 @@ pub struct ShardStats {
     pub lock_hold_p99_ns: u64,
 }
 
+/// Write-ahead-journal counters carried by `STATS` as an additive **v2
+/// wire extension** (`journal_*` keys): present only when the daemon runs
+/// with durability enabled, absent on journal-off daemons and v1 peers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JournalStats {
+    /// Journal records appended (admissions, manifests, cancels).
+    pub appends: u64,
+    /// Appends whose acks waited for a covering `fsync` (equals `appends`
+    /// under `fsync=always`; with group commit many acks ride one fsync).
+    pub synced_appends: u64,
+    /// Group-commit leader fsyncs. `synced_appends / group_commits` is the
+    /// realized batching factor.
+    pub group_commits: u64,
+    /// Journal/allocator-log poison transitions; nonzero means some
+    /// admissions were applied but not durably acked.
+    pub poisoned: u64,
+}
+
 /// Daemon + scheduler counters (`STATS`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StatsSnapshot {
@@ -580,6 +598,9 @@ pub struct StatsSnapshot {
     /// Per-shard counters (v2 wire extension; empty when the peer spoke
     /// v1 or predates sharding).
     pub shards: Vec<ShardStats>,
+    /// Write-ahead-journal counters (v2 wire extension; `None` on
+    /// journal-off daemons and when the peer spoke v1).
+    pub journal: Option<JournalStats>,
 }
 
 /// One manifest entry's settlement as `RESUME` reports it.

@@ -20,7 +20,8 @@
 
 use super::api::{
     job_type_arg, parse_job_type, parse_qos, parse_state, state_token, ApiError, ContentionStats,
-    ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request, Response, ResumeEntry, ResumeInfo,
+    ErrorCode, JobDetail, JobSummary, JournalStats, ProtocolVersion, Request, Response,
+    ResumeEntry, ResumeInfo,
     ResumeTarget, ShardKind, ShardStats, ShardUtil, SqueueFilter, StatsSnapshot, SubmitAck,
     SubmitSpec, UtilSnapshot, WaitResult,
 };
@@ -928,6 +929,16 @@ fn stats_kv(s: &StatsSnapshot, with_contention: bool) -> String {
                 c.lock_hold_max_ns,
             );
         }
+        // Journal keys ride the same v2-only extension train: present only
+        // when the daemon journals, optional to parsers either way.
+        if let Some(j) = &s.journal {
+            let _ = write!(
+                out,
+                " journal_appends={} journal_synced_appends={} journal_group_commits={} \
+                 journal_poisoned={}",
+                j.appends, j.synced_appends, j.group_commits, j.poisoned,
+            );
+        }
     }
     for (cmd, n) in &s.commands {
         let _ = write!(out, " cmd_{cmd}={n}");
@@ -1265,6 +1276,19 @@ fn parse_stats(map: &BTreeMap<&str, &str>, tail: &str) -> Result<StatsSnapshot, 
     } else {
         None
     };
+    // Journal keys are likewise optional as a block (keyed on
+    // `journal_appends`): journal-off daemons and pre-durability servers
+    // simply omit them.
+    let journal = if map.contains_key("journal_appends") {
+        Some(JournalStats {
+            appends: take_u64(map, "journal_appends")?,
+            synced_appends: take_u64(map, "journal_synced_appends")?,
+            group_commits: take_u64(map, "journal_group_commits")?,
+            poisoned: take_u64(map, "journal_poisoned")?,
+        })
+    } else {
+        None
+    };
     Ok(StatsSnapshot {
         virtual_now_secs: take_f64(map, "virtual_now_secs")?,
         dispatches: take_u64(map, "dispatches")?,
@@ -1285,6 +1309,7 @@ fn parse_stats(map: &BTreeMap<&str, &str>, tail: &str) -> Result<StatsSnapshot, 
         commands,
         contention,
         shards: parse_shard_stats(tail)?,
+        journal,
     })
 }
 
@@ -1955,6 +1980,8 @@ mod tests {
                 // Empty for the same reason: shard records are v2-only
                 // continuation lines. Dedicated tests below cover them.
                 shards: Vec::new(),
+                // None for the same reason again: journal keys are v2-only.
+                journal: None,
             }),
             Response::Util(UtilSnapshot {
                 utilization: 0.25,
@@ -2099,6 +2126,36 @@ mod tests {
         let wire = render_response(&Response::Stats(s.clone()), V2);
         match parse_response(&wire, V2).unwrap() {
             Response::Stats(back) => assert_eq!(back, s),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_journal_extension_roundtrips_v2_and_drops_on_v1() {
+        let mut s = stats_with_contention();
+        s.journal = Some(JournalStats {
+            appends: 32,
+            synced_appends: 32,
+            group_commits: 5,
+            poisoned: 0,
+        });
+        let resp = Response::Stats(s.clone());
+        let wire = render_response(&resp, V2);
+        for key in [
+            "journal_appends=32",
+            "journal_synced_appends=32",
+            "journal_group_commits=5",
+            "journal_poisoned=0",
+        ] {
+            assert!(wire.contains(key), "missing {key} in {wire}");
+        }
+        assert_eq!(parse_response(&wire, V2).unwrap(), resp);
+        // v1 keeps its original key set byte-compatible: no journal keys on
+        // the wire, and a v1 parse naturally yields None.
+        let v1 = render_response(&resp, V1);
+        assert!(!v1.contains("journal_appends="), "{v1}");
+        match parse_response(&v1, V1).unwrap() {
+            Response::Stats(back) => assert_eq!(back.journal, None),
             other => panic!("{other:?}"),
         }
     }

@@ -30,21 +30,22 @@
 //! [`super::codec`] and is reached through [`Daemon::handle_line_versioned`].
 
 use super::api::{
-    ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request,
-    Response, ResumeEntry, ResumeInfo, ResumeTarget, ShardKind, ShardStats, ShardUtil,
+    ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, JournalStats, ProtocolVersion,
+    Request, Response, ResumeEntry, ResumeInfo, ResumeTarget, ShardKind, ShardStats, ShardUtil,
     SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 use super::codec;
 use super::journal::{
-    AdmitEntry, CheckpointJob, CheckpointState, DurabilityConfig, Journal, JournalRecord,
+    self, AdmitEntry, AdmitRun, AllocLease, AllocLog, CheckpointJob, CheckpointState,
+    DurabilityConfig, FsyncPolicy, Journal, JournalError, JournalRecord,
 };
 use super::manifest::{
     ChunkAssembler, ChunkOutcome, EntryAck, EntryReject, Manifest, ManifestAck, ManifestEntry,
     ManifestRegistry, ManifestSpan, MAX_CHUNKED_MANIFEST_ENTRIES, MAX_MANIFEST_ENTRIES,
 };
 use super::metrics::DaemonMetrics;
-use super::recovery::{rebuild, RecoveryError, RecoveryReport};
-use super::shards::SchedShards;
+use super::recovery::{rebuild, rebuild_sharded, RecoveryError, RecoveryReport};
+use super::shards::{shard_plan, SchedShards};
 use super::snapshot::{wait_view_of, JobView, SchedSnapshot, WaitHub, WaitView};
 use crate::cluster::Cluster;
 use crate::job::{JobId, JobSpec, JobState, QosClass, UserId};
@@ -52,8 +53,9 @@ use crate::sched::{LogKind, Scheduler, SchedulerConfig};
 use crate::sim::SimTime;
 use crate::util::fxhash::FxHashMap;
 use std::collections::BTreeSet;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Upper bound on jobs created by one batched `SUBMIT` (keeps a typo'd
@@ -97,9 +99,10 @@ pub struct DaemonConfig {
     /// back end into one scheduler per partition over disjoint node slices
     /// (see [`SchedShards`]); the count is clamped to the layout's
     /// partition count and falls back to `1` when the cluster or layout
-    /// cannot shard. Incompatible with `durability` (the journal's
-    /// id-determinism contract assumes one scheduler) — `Daemon::new`
-    /// panics on that combination rather than silently dropping either.
+    /// cannot shard. Composes with `durability`: a sharded daemon keeps
+    /// one journal per shard under its own mutex, plus the allocator log
+    /// that makes recovered ids globally deterministic (see `PROTOCOL.md`
+    /// §Durability).
     pub shard_count: usize,
 }
 
@@ -115,6 +118,52 @@ impl Default for DaemonConfig {
         }
     }
 }
+
+/// A boot configuration the daemon refuses, typed — the CLI prints it and
+/// exits nonzero instead of unwinding with a panic backtrace
+/// ([`Daemon::try_new`] / [`Daemon::recover`]).
+#[derive(Debug)]
+pub enum ConfigError {
+    /// A fresh boot (`Daemon::new`) pointed at a journal directory that
+    /// already holds journal state — recover it instead of silently
+    /// shadowing it.
+    JournalExists(PathBuf),
+    /// The journal directory could not be created or written at boot.
+    JournalIo(PathBuf, String),
+    /// The on-disk journal layout does not match the boot configuration:
+    /// flat segments with `--sched-shards > 1`, a sharded layout with a
+    /// single-shard boot, or a shard-directory set that does not match
+    /// the shard plan.
+    ShardLayoutMismatch {
+        /// Journal root directory.
+        dir: PathBuf,
+        /// What specifically mismatched.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::JournalExists(dir) => write!(
+                f,
+                "journal directory {} already holds journal state; \
+                 recover it (or point --journal elsewhere)",
+                dir.display()
+            ),
+            ConfigError::JournalIo(dir, e) => {
+                write!(f, "journal directory {} is unusable: {e}", dir.display())
+            }
+            ConfigError::ShardLayoutMismatch { dir, detail } => write!(
+                f,
+                "journal layout at {} does not match the boot config: {detail}",
+                dir.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A blocked `WAIT`, waiting for its jobs' completion events.
 #[derive(Debug, Clone)]
@@ -176,10 +225,11 @@ pub struct Daemon {
     /// resumes from the recovered instant, it never rewinds).
     virtual_base: SimTime,
     cfg: DaemonConfig,
-    /// The write-ahead journal, when durability is on. Locked strictly
-    /// *inside* the scheduler mutex (admission appends under it, before
-    /// the snapshot publish that would make the mutation visible).
-    journal: Option<Mutex<Journal>>,
+    /// The durable store, when durability is on: one journal per
+    /// scheduler shard (each locked strictly *inside* its shard's
+    /// scheduler mutex), the allocator log in sharded mode, and the
+    /// group-commit parking lot.
+    journal: Option<DurableStore>,
     /// Registered manifests (RESUME / per-entry WAIT lookups). Written on
     /// admission under the scheduler mutex; read lock-free of it.
     manifests: RwLock<ManifestRegistry>,
@@ -238,28 +288,166 @@ impl HistoryTable {
     }
 }
 
+/// The durable half of a (possibly sharded) daemon.
+struct DurableStore {
+    /// One slot per scheduler shard, index-aligned with [`SchedShards`].
+    /// A single-shard daemon has exactly one slot (the flat layout).
+    slots: Vec<JournalSlot>,
+    /// The id-allocator log (sharded mode only): every reserved id range
+    /// is leased here, fsync'd per policy, *before* any part of the
+    /// admission lands in a shard journal — recovery's id watermark.
+    alloc: Option<Mutex<AllocLog>>,
+    /// Lease sequence: the last lease number issued (0 = none yet).
+    lease_seq: AtomicU64,
+    /// Checkpoint capture sequence: orders per-shard checkpoints by
+    /// registry freshness (see [`CheckpointState::global_seq`]). Taken
+    /// under the manifest-registry read lock so a higher seq always
+    /// carries a superset registry.
+    global_seq: AtomicU64,
+    /// Batch concurrent `fsync = always` acks into shared syncs (the
+    /// parked-writer group commit).
+    group_commit: bool,
+}
+
+impl DurableStore {
+    fn new(
+        journals: Vec<JournalSlot>,
+        alloc: Option<AllocLog>,
+        dcfg: &DurabilityConfig,
+        lease_seq: u64,
+        global_seq: u64,
+    ) -> Self {
+        Self {
+            slots: journals,
+            alloc: alloc.map(Mutex::new),
+            lease_seq: AtomicU64::new(lease_seq),
+            global_seq: AtomicU64::new(global_seq),
+            group_commit: dcfg.group_commit && dcfg.fsync == FsyncPolicy::Always,
+        }
+    }
+}
+
+/// One scheduler shard's journal plus its group-commit state.
+struct JournalSlot {
+    /// The shard's write-ahead journal. Locked inside the shard's
+    /// scheduler mutex on the append path; the group-commit leader locks
+    /// it *without* the scheduler mutex (sync only, no appends).
+    journal: Mutex<Journal>,
+    /// Highest lease this shard has applied (updated under the shard's
+    /// scheduler mutex after the mutation; read at checkpoint capture so
+    /// `applied_lease >= L` certifies the checkpoint absorbed lease L).
+    applied_lease: AtomicU64,
+    /// Group-commit parking lot (meaningful when
+    /// [`DurableStore::group_commit`] is on).
+    gc: GroupCommit,
+}
+
+impl JournalSlot {
+    fn new(journal: Journal, applied_lease: u64) -> Self {
+        Self {
+            journal: Mutex::new(journal),
+            applied_lease: AtomicU64::new(applied_lease),
+            gc: GroupCommit::default(),
+        }
+    }
+}
+
+/// The parked-writer protocol: concurrent `fsync = always` admissions
+/// append deferred (under the shard+journal locks), then park here until
+/// some writer — the elected leader — performs ONE fsync that covers every
+/// parked record. Writers whose record an earlier sync already covered
+/// return without ever syncing; the rest elect exactly one leader at a
+/// time and the others wait on the condvar (with a short self-promotion
+/// timeout so a record can never be stranded un-synced).
+#[derive(Default)]
+struct GroupCommit {
+    state: Mutex<GcState>,
+    cv: Condvar,
+}
+
+/// Shared group-commit state, under [`GroupCommit::state`].
+#[derive(Default)]
+struct GcState {
+    /// Mirror of the journal's synced append sequence, updated by each
+    /// leader (may lag the journal after a checkpoint rotation syncs
+    /// everything — the next leader's no-op sync refreshes it).
+    synced: u64,
+    /// A leader is currently inside the fsync.
+    leader: bool,
+    /// A group sync failed: the journal is poisoned and every parked
+    /// writer (and every later one) fails its ack.
+    poisoned: bool,
+}
+
+/// How long a parked group-commit writer waits for the leader before
+/// self-promoting (a liveness backstop, not the batching window — the
+/// leader syncs immediately and batching comes from appends landing while
+/// an fsync is in flight).
+const GROUP_COMMIT_PARK: Duration = Duration::from_millis(2);
+
 impl Daemon {
-    /// Create a daemon over a fresh scheduler. When durability is
-    /// configured this creates a fresh journal and panics if one already
-    /// exists or cannot be written — a daemon that silently dropped its
-    /// durability guarantee would be worse than one that failed to boot
-    /// (use [`Daemon::recover`] on a non-empty journal directory).
+    /// Create a daemon over a fresh scheduler, panicking on an invalid
+    /// boot configuration — a daemon that silently dropped its durability
+    /// guarantee would be worse than one that failed to boot. The CLI
+    /// uses [`Daemon::try_new`] for a typed refusal instead.
     pub fn new(cluster: Cluster, sched_cfg: SchedulerConfig, cfg: DaemonConfig) -> Arc<Self> {
-        assert!(
-            cfg.shard_count <= 1 || cfg.durability.is_none(),
-            "durability requires shard_count = 1 (the journal's id-determinism \
-             contract assumes one scheduler)"
-        );
+        Self::try_new(cluster, sched_cfg, cfg)
+            .unwrap_or_else(|e| panic!("creating the write-ahead journal: {e}"))
+    }
+
+    /// Create a daemon over a fresh scheduler, returning a typed
+    /// [`ConfigError`] when the boot configuration is invalid (journal
+    /// directory already holds state, or cannot be created/written). When
+    /// durability is configured this creates a fresh journal per
+    /// scheduler shard — plus the allocator log in sharded mode (use
+    /// [`Daemon::recover`] on a non-empty journal directory).
+    pub fn try_new(
+        cluster: Cluster,
+        sched_cfg: SchedulerConfig,
+        cfg: DaemonConfig,
+    ) -> Result<Arc<Self>, ConfigError> {
         let shards = if cfg.shard_count > 1 {
             SchedShards::sharded(cluster, sched_cfg, cfg.shard_count)
         } else {
             SchedShards::single(cluster, sched_cfg)
         };
-        let journal = cfg
-            .durability
-            .as_ref()
-            .map(|d| Journal::create(d).expect("creating the write-ahead journal"));
-        Self::assemble(shards, cfg, journal, ManifestRegistry::new(), Vec::new())
+        let journal = match &cfg.durability {
+            Some(d) => Some(Self::create_store(d, shards.count())?),
+            None => None,
+        };
+        Ok(Self::assemble(
+            shards,
+            cfg,
+            journal,
+            ManifestRegistry::new(),
+            Vec::new(),
+        ))
+    }
+
+    /// Build the durable store for a fresh boot: the flat single-shard
+    /// journal, or (sharded) the allocator log plus one journal per
+    /// shard. Refuses typed when the directory already holds journal
+    /// state in either layout, or cannot be written.
+    fn create_store(d: &DurabilityConfig, nshards: usize) -> Result<DurableStore, ConfigError> {
+        let io = |e: JournalError| match e {
+            JournalError::NotEmpty(p) => ConfigError::JournalExists(p),
+            other => ConfigError::JournalIo(d.dir.clone(), other.to_string()),
+        };
+        if journal::dir_has_segments(&d.dir) {
+            return Err(ConfigError::JournalExists(d.dir.clone()));
+        }
+        if nshards > 1 {
+            let alloc = AllocLog::create(d).map_err(io)?;
+            let mut slots = Vec::with_capacity(nshards);
+            for idx in 0..nshards {
+                let j = Journal::create(&d.for_shard(idx)).map_err(io)?;
+                slots.push(JournalSlot::new(j, 0));
+            }
+            Ok(DurableStore::new(slots, Some(alloc), d, 0, 0))
+        } else {
+            let j = Journal::create(d).map_err(io)?;
+            Ok(DurableStore::new(vec![JournalSlot::new(j, 0)], None, d, 0, 0))
+        }
     }
 
     /// Recover a daemon from an existing journal: replay the newest
@@ -277,26 +465,164 @@ impl Daemon {
         let dcfg = cfg
             .durability
             .as_ref()
-            .ok_or_else(|| RecoveryError::Mismatch("recover() without durability config".into()))?;
-        let (journal, recovered) = Journal::recover(dcfg)?;
+            .ok_or_else(|| RecoveryError::Mismatch("recover() without durability config".into()))?
+            .clone();
+        if journal::dir_has_shard_layout(&dcfg.dir) {
+            return Self::recover_sharded(cluster, sched_cfg, cfg, &dcfg);
+        }
+        // Flat (single-shard) layout — refuse a sharded boot over it
+        // rather than replaying one shard's contract into many.
+        if cfg.shard_count > 1 && shard_plan(&cluster, &sched_cfg, cfg.shard_count).len() > 1 {
+            return Err(ConfigError::ShardLayoutMismatch {
+                dir: dcfg.dir.clone(),
+                detail: format!(
+                    "journal is single-shard but the boot config asks for {} scheduler shards",
+                    cfg.shard_count
+                ),
+            }
+            .into());
+        }
+        let (journal, recovered) = Journal::recover(&dcfg)?;
         let rebuilt = rebuild(cluster, sched_cfg, &recovered)?;
         let report = rebuilt.report;
-        // Recovery is single-shard by contract (enforced in `new` for the
-        // daemon that wrote the journal).
+        let applied = recovered.checkpoint.applied_lease;
+        let global_seq = recovered.checkpoint.global_seq;
+        let store = DurableStore::new(
+            vec![JournalSlot::new(journal, applied)],
+            None,
+            &dcfg,
+            applied,
+            global_seq,
+        );
         let daemon = Self::assemble(
             SchedShards::single_from(rebuilt.sched),
             cfg,
-            Some(journal),
+            Some(store),
             rebuilt.registry,
             rebuilt.history,
         );
+        daemon.compact_after_recovery();
         Ok((daemon, report))
+    }
+
+    /// Recover a sharded daemon: replay the allocator log and every
+    /// shard's journal ([`rebuild_sharded`] — the lease completeness rule
+    /// keeps cross-shard manifests atomic), then resume journaling on the
+    /// same per-shard directories. The boot config's shard plan must
+    /// match the writer's layout.
+    fn recover_sharded(
+        cluster: Cluster,
+        sched_cfg: SchedulerConfig,
+        cfg: DaemonConfig,
+        dcfg: &DurabilityConfig,
+    ) -> Result<(Arc<Self>, RecoveryReport), RecoveryError> {
+        let plan = shard_plan(&cluster, &sched_cfg, cfg.shard_count);
+        if plan.len() <= 1 {
+            return Err(ConfigError::ShardLayoutMismatch {
+                dir: dcfg.dir.clone(),
+                detail: format!(
+                    "journal is sharded but the boot config (shard_count {}) \
+                     resolves to a single scheduler shard",
+                    cfg.shard_count
+                ),
+            }
+            .into());
+        }
+        let found: Vec<usize> = journal::list_shard_dirs(&dcfg.dir)
+            .into_iter()
+            .map(|(i, _)| i)
+            .collect();
+        if found != (0..plan.len()).collect::<Vec<_>>() {
+            return Err(ConfigError::ShardLayoutMismatch {
+                dir: dcfg.dir.clone(),
+                detail: format!(
+                    "journal shard directories {found:?} do not match the {}-shard plan",
+                    plan.len()
+                ),
+            }
+            .into());
+        }
+        let (alloc, _leases) = AllocLog::recover(dcfg)?;
+        let mut journals = Vec::with_capacity(plan.len());
+        let mut recs = Vec::with_capacity(plan.len());
+        for idx in 0..plan.len() {
+            let (j, rec) = Journal::recover(&dcfg.for_shard(idx))?;
+            journals.push(j);
+            recs.push(rec);
+        }
+        let rebuilt = rebuild_sharded(&plan, sched_cfg.clone(), &recs, alloc.watermark_id())?;
+        // Restart the lease and checkpoint sequences past everything ever
+        // issued — torn leases included: reusing a torn lease number could
+        // alias an old dropped part with a new admission.
+        let mut lease_seq = alloc.watermark_lease();
+        let mut global_seq = 0u64;
+        for rec in &recs {
+            lease_seq = lease_seq.max(rec.checkpoint.applied_lease);
+            global_seq = global_seq.max(rec.checkpoint.global_seq);
+            for r in &rec.tail {
+                if let JournalRecord::ShardAdmit { lease, .. } = r {
+                    lease_seq = lease_seq.max(*lease);
+                }
+            }
+        }
+        let slots: Vec<JournalSlot> = journals
+            .into_iter()
+            .zip(rebuilt.applied_leases.iter())
+            .map(|(j, &applied)| JournalSlot::new(j, applied))
+            .collect();
+        let store = DurableStore::new(slots, Some(alloc), dcfg, lease_seq, global_seq);
+        let shards = SchedShards::sharded_from(
+            plan.iter()
+                .zip(rebuilt.scheds)
+                .map(|(&(pid, label, _), sched)| (pid, label, sched))
+                .collect(),
+            sched_cfg.layout,
+            rebuilt.next_id,
+        );
+        let report = rebuilt.report;
+        let daemon = Self::assemble(shards, cfg, Some(store), rebuilt.registry, rebuilt.history);
+        daemon.compact_after_recovery();
+        Ok((daemon, report))
+    }
+
+    /// Post-recovery compaction: write a fresh checkpoint into every
+    /// shard's journal (rotating the replayed segments away) and rewrite
+    /// the allocator log down to its watermark record, so each restart
+    /// begins from a checkpoint instead of replaying an ever-growing
+    /// tail. A failure poisons that journal (the daemon degrades to
+    /// read-only, same as a live checkpoint failure) but never loses
+    /// recovered state — the old segments stay until rotation succeeds.
+    fn compact_after_recovery(&self) {
+        let Some(store) = &self.journal else {
+            return;
+        };
+        for idx in 0..self.shards.count() {
+            let sched = self.shards.lock(idx);
+            let state = self.capture_checkpoint_locked(idx, &sched);
+            let mut j = store.slots[idx].journal.lock().expect("journal lock poisoned");
+            if j.is_poisoned() {
+                continue;
+            }
+            if let Err(e) = j.checkpoint(&state) {
+                self.note_journal_failure(&e);
+                eprintln!(
+                    "spotcloud: post-recovery checkpoint failed (journal now read-only): {e}"
+                );
+            }
+        }
+        if let Some(alloc) = &store.alloc {
+            let mut a = alloc.lock().expect("alloc log poisoned");
+            if let Err(e) = a.compact() {
+                self.note_journal_failure(&e);
+                eprintln!("spotcloud: allocator-log compaction failed: {e}");
+            }
+        }
     }
 
     fn assemble(
         shards: SchedShards,
         cfg: DaemonConfig,
-        journal: Option<Journal>,
+        journal: Option<DurableStore>,
         registry: ManifestRegistry,
         history_seed: Vec<JobView>,
     ) -> Arc<Self> {
@@ -339,7 +665,7 @@ impl Daemon {
             start: Instant::now(),
             virtual_base,
             cfg,
-            journal: journal.map(Mutex::new),
+            journal,
             manifests: RwLock::new(registry),
             tracked: Mutex::new(tracked),
             history: RwLock::new(history),
@@ -443,51 +769,236 @@ impl Daemon {
         }
     }
 
-    /// Append one record to the journal (fsync'd per policy inside). Call
-    /// with the scheduler mutex held, *before* the mutation the record
-    /// describes — on `Err` the caller must neither mutate nor ack, so an
-    /// acknowledged action always exists on disk first. A poisoned journal
-    /// fails every subsequent admission the same way: the daemon degrades
-    /// to read-only rather than silently dropping durability.
-    fn journal_append(&self, rec: &JournalRecord) -> Result<(), ApiError> {
-        let Some(journal) = &self.journal else {
-            return Ok(());
-        };
-        let mut j = journal.lock().expect("journal lock poisoned");
-        j.append(rec).map_err(|e| {
-            ApiError::new(
-                ErrorCode::Internal,
-                format!("write-ahead journal append failed (request not acked): {e}"),
-            )
-        })
+    /// Count a journal-layer failure into the metrics: the first error on
+    /// a journal is the poison transition ([`JournalError::Poisoned`] is
+    /// the already-poisoned rejection, not a new transition).
+    fn note_journal_failure(&self, e: &JournalError) {
+        if !matches!(e, JournalError::Poisoned) {
+            self.metrics.journal_poisoned.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
-    /// Checkpoint-truncate the journal when due. Called with the scheduler
-    /// mutex held, after a successful admission. Checkpoint failure poisons
-    /// the journal (subsequent admissions fail typed) but the admission
-    /// that triggered it was already durable in the old segment, so nothing
-    /// acked is lost.
-    fn maybe_checkpoint_locked(&self, sched: &Scheduler) {
-        let (Some(journal), Some(dcfg)) = (&self.journal, &self.cfg.durability) else {
+    /// Map a journal error into the typed admission failure (and count the
+    /// poison transition).
+    fn journal_error(&self, e: JournalError) -> ApiError {
+        self.note_journal_failure(&e);
+        ApiError::new(
+            ErrorCode::Internal,
+            format!("write-ahead journal append failed (request not acked): {e}"),
+        )
+    }
+
+    /// Append one record to shard `idx`'s journal. Call with that shard's
+    /// scheduler mutex held, *before* the mutation the record describes —
+    /// on `Err` the caller must neither mutate nor ack, so an
+    /// acknowledged action always exists on disk first. A poisoned
+    /// journal fails every subsequent admission the same way: the daemon
+    /// degrades to read-only rather than silently dropping durability.
+    ///
+    /// Under group commit (`fsync = always` with
+    /// [`DurabilityConfig::group_commit`]) the append is *deferred*:
+    /// `Ok(Some(seq))` means the record is written but not yet synced —
+    /// the caller must [`Daemon::group_sync_wait`] on `seq` *after*
+    /// releasing the scheduler mutex and before acking the client.
+    /// `Ok(None)` means the append already satisfied its fsync policy.
+    fn journal_append(&self, idx: usize, rec: &JournalRecord) -> Result<Option<u64>, ApiError> {
+        let Some(store) = &self.journal else {
+            return Ok(None);
+        };
+        let mut j = store.slots[idx].journal.lock().expect("journal lock poisoned");
+        let out = if store.group_commit {
+            j.append_deferred(rec).map(Some)
+        } else {
+            j.append(rec).map(|()| None)
+        };
+        drop(j);
+        match out {
+            Ok(seq) => {
+                self.metrics.journal_appends.fetch_add(1, Ordering::Relaxed);
+                if seq.is_none()
+                    && self.cfg.durability.as_ref().map(|d| d.fsync) == Some(FsyncPolicy::Always)
+                {
+                    // Strict mode: this ack waited for its own fsync.
+                    self.metrics.journal_synced_appends.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(seq)
+            }
+            Err(e) => Err(self.journal_error(e)),
+        }
+    }
+
+    /// Lease a freshly reserved global id range in the allocator log
+    /// (sharded durability only). The lease record is fsync'd per policy
+    /// *before* any shard journal sees a part referencing it — recovery's
+    /// id watermark can then never run behind an id that reached a shard
+    /// journal. Call with the touched shard mutexes held, before any
+    /// scheduler mutation: on `Err` nothing was mutated and nothing is
+    /// acked (the reserved ids are burned, which is harmless — ids are
+    /// unique, not dense).
+    fn lease_ids(&self, first: u64, count: u64) -> Result<u64, ApiError> {
+        let store = self.journal.as_ref().expect("lease without a journal");
+        let alloc = store
+            .alloc
+            .as_ref()
+            .expect("lease on a single-shard journal");
+        let lease = store.lease_seq.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut a = alloc.lock().expect("alloc log poisoned");
+        a.append(AllocLease {
+            lease,
+            first,
+            count,
+        })
+        .map_err(|e| self.journal_error(e))?;
+        Ok(lease)
+    }
+
+    /// Record that shard `idx` applied lease `lease` (call under that
+    /// shard's scheduler mutex, after the mutation): checkpoint captures
+    /// read this watermark under the same mutex, so a checkpoint claiming
+    /// `applied_lease >= L` always contains lease `L`'s local effects.
+    fn note_applied_lease(&self, idx: usize, lease: u64) {
+        if let Some(store) = &self.journal {
+            store.slots[idx].applied_lease.fetch_max(lease, Ordering::SeqCst);
+        }
+    }
+
+    /// Park until shard `idx`'s journal has synced through append `seq`
+    /// (the group-commit parked-writer protocol). Call *without* the
+    /// scheduler mutex. Whichever parked writer finds no sync in flight
+    /// becomes the leader and performs one fsync covering every record
+    /// appended so far; the rest wait on the condvar and re-check (with a
+    /// short self-promotion timeout as a liveness backstop). A failed
+    /// group sync poisons the journal and fails every parked ack — the
+    /// admission is applied-but-unacked, the same documented
+    /// at-least-once class as `SCANCEL`'s mutate-then-append divergence.
+    fn group_sync_wait(&self, idx: usize, seq: u64) -> Result<(), ApiError> {
+        let store = self.journal.as_ref().expect("group sync without a journal");
+        let slot = &store.slots[idx];
+        let mut st = slot.gc.state.lock().expect("group-commit state poisoned");
+        loop {
+            if st.synced >= seq {
+                self.metrics.journal_synced_appends.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+            if st.poisoned {
+                return Err(ApiError::new(
+                    ErrorCode::Internal,
+                    "write-ahead journal group sync failed (admission applied but not acked)"
+                        .to_string(),
+                ));
+            }
+            if !st.leader {
+                st.leader = true;
+                drop(st);
+                let result = {
+                    let mut j = slot.journal.lock().expect("journal lock poisoned");
+                    j.group_sync()
+                };
+                st = slot.gc.state.lock().expect("group-commit state poisoned");
+                st.leader = false;
+                match result {
+                    Ok(synced) => {
+                        st.synced = st.synced.max(synced);
+                        self.metrics.journal_group_commits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        st.poisoned = true;
+                        self.note_journal_failure(&e);
+                        slot.gc.cv.notify_all();
+                        return Err(ApiError::new(
+                            ErrorCode::Internal,
+                            format!(
+                                "write-ahead journal group sync failed \
+                                 (admission applied but not acked): {e}"
+                            ),
+                        ));
+                    }
+                }
+                slot.gc.cv.notify_all();
+                // Loop: the sync we just led covers our own seq.
+            } else {
+                let (guard, _) = slot
+                    .gc
+                    .cv
+                    .wait_timeout(st, GROUP_COMMIT_PARK)
+                    .expect("group-commit state poisoned");
+                st = guard;
+                // Timeout path re-checks and may self-promote (the loop).
+            }
+        }
+    }
+
+    /// Checkpoint-truncate shard `idx`'s journal when due. Called with
+    /// that shard's scheduler mutex held, after a successful admission.
+    /// Checkpoint failure poisons the journal (subsequent admissions fail
+    /// typed) but the admission that triggered it was already durable in
+    /// the old segment, so nothing acked is lost.
+    fn maybe_checkpoint_locked(&self, idx: usize, sched: &Scheduler) {
+        let (Some(store), Some(dcfg)) = (&self.journal, &self.cfg.durability) else {
             return;
         };
-        let mut j = journal.lock().expect("journal lock poisoned");
+        let slot = &store.slots[idx];
+        let mut j = slot.journal.lock().expect("journal lock poisoned");
         if j.is_poisoned() || !j.checkpoint_due(dcfg) {
             return;
         }
-        let state = self.capture_checkpoint_locked(sched);
+        if store.group_commit {
+            // Make the deferred tail durable *before* history rotates: a
+            // torn rotation must never take unsynced acks down with it —
+            // with the tail synced first, a checkpoint failure still lets
+            // every parked writer (including the admission that tripped the
+            // stride) ack off the old segment.
+            match j.group_sync() {
+                Ok(synced) => {
+                    let mut st = slot.gc.state.lock().expect("group-commit state poisoned");
+                    st.synced = st.synced.max(synced);
+                    self.metrics.journal_group_commits.fetch_add(1, Ordering::Relaxed);
+                    drop(st);
+                    slot.gc.cv.notify_all();
+                }
+                Err(e) => {
+                    self.note_journal_failure(&e);
+                    eprintln!("spotcloud: journal sync before checkpoint failed: {e}");
+                    return;
+                }
+            }
+        }
+        let state = self.capture_checkpoint_locked(idx, sched);
         if let Err(e) = j.checkpoint(&state) {
+            self.note_journal_failure(&e);
             eprintln!("spotcloud: journal checkpoint failed (journal now read-only): {e}");
         }
     }
 
-    /// Capture the full durable state under the scheduler mutex. Live
-    /// terminal jobs (ended but not yet retired) are captured as history
-    /// views, not as live jobs — recovery re-queues every live job, and
-    /// re-running a completed job would violate exactly-once.
-    fn capture_checkpoint_locked(&self, sched: &Scheduler) -> CheckpointState {
+    /// Capture shard `idx`'s full durable state under its scheduler
+    /// mutex. Live terminal jobs (ended but not yet retired) are captured
+    /// as history views, not as live jobs — recovery re-queues every live
+    /// job, and re-running a completed job would violate exactly-once.
+    ///
+    /// Sharded captures carry the *global* manifest registry and history
+    /// (stamped with `global_seq` so recovery keeps the newest registry
+    /// authoritative), this shard's live jobs, the global id-allocator
+    /// value as `next_id`, and the shard's applied-lease watermark. The
+    /// watermark is read under the same mutex that orders lease
+    /// applications, so `applied_lease >= L` certifies this checkpoint's
+    /// registry and job table absorbed lease `L`'s local part.
+    fn capture_checkpoint_locked(&self, idx: usize, sched: &Scheduler) -> CheckpointState {
         let registry = self.manifests.read().expect("manifests poisoned");
         let history = self.history.read().expect("history poisoned");
+        let (global_seq, applied_lease) = match &self.journal {
+            // Sequenced under the registry read lock: a checkpoint with a
+            // higher global_seq always carries a superset registry.
+            Some(store) => (
+                store.global_seq.fetch_add(1, Ordering::SeqCst) + 1,
+                store.slots[idx].applied_lease.load(Ordering::SeqCst),
+            ),
+            None => (0, 0),
+        };
+        let next_id = if self.shards.is_sharded() {
+            self.shards.next_id()
+        } else {
+            sched.jobs_signature().1
+        };
         let mut jobs = Vec::new();
         let mut views = history.ordered_views();
         for job in sched.jobs() {
@@ -510,11 +1021,13 @@ impl Daemon {
         }
         CheckpointState {
             vtime: sched.now(),
-            next_id: sched.jobs_signature().1,
+            next_id,
             next_manifest_id: registry.next_id(),
             jobs,
             history: views,
             manifests: registry.iter().cloned().collect(),
+            global_seq,
+            applied_lease,
         }
     }
 
@@ -779,32 +1292,43 @@ impl Daemon {
             Request::Scancel(id) => {
                 // Sharded mode cannot route a bare job id (ids are global,
                 // shard-blind), so probe each shard in turn; `cancel` on a
-                // shard that does not own the id is a read-only miss.
-                let mut cancelled = Ok(false);
+                // shard that does not own the id is a read-only miss. The
+                // cancel record lands in the *owning* shard's journal.
+                let mut cancelled = Ok((false, None));
                 for idx in 0..self.shards.count() {
                     cancelled = self.with_shard_mut(idx, |sched| {
                         if !sched.cancel(JobId(id)) {
-                            return Ok(false);
+                            return Ok((false, None));
                         }
                         // Cancel is mutate-then-append: the scheduler state is
                         // already changed, so a journal failure here leaves the
                         // cancel applied but *unacked* — the client retries and
                         // lands on the tolerant-replay path. This is the
                         // documented at-least-once edge (see PROTOCOL.md).
-                        self.journal_append(&JournalRecord::Cancel {
-                            vtime: sched.now(),
-                            id,
-                        })?;
-                        self.maybe_checkpoint_locked(sched);
-                        Ok::<_, ApiError>(true)
+                        let pending = self.journal_append(
+                            idx,
+                            &JournalRecord::Cancel {
+                                vtime: sched.now(),
+                                id,
+                            },
+                        )?;
+                        self.maybe_checkpoint_locked(idx, sched);
+                        Ok::<_, ApiError>((true, pending.map(|seq| (idx, seq))))
                     });
-                    if !matches!(cancelled, Ok(false)) {
+                    if !matches!(cancelled, Ok((false, _))) {
                         break;
                     }
                 }
                 match cancelled {
-                    Ok(true) => Response::Cancelled(id),
-                    Ok(false) => Response::Error(ApiError::not_found(format!(
+                    Ok((true, pending)) => {
+                        if let Some((idx, seq)) = pending {
+                            if let Err(e) = self.group_sync_wait(idx, seq) {
+                                return Response::Error(e);
+                            }
+                        }
+                        Response::Cancelled(id)
+                    }
+                    Ok((false, _)) => Response::Error(ApiError::not_found(format!(
                         "unknown or finished job {id}"
                     ))),
                     Err(e) => Response::Error(e),
@@ -888,7 +1412,7 @@ impl Daemon {
         // Route by QoS: in sharded mode the submission lands on its
         // partition's shard; shard 0 (the whole scheduler) otherwise.
         let shard = self.shards.shard_for(spec.qos);
-        let ids = self.with_shard_mut(shard, |sched| {
+        let result = self.with_shard_mut(shard, |sched| {
             // Keep the virtual clock caught up so submissions land "now"
             // (computed under the lock: a stale target would backdate the
             // submission by the lock-wait time × speedup).
@@ -896,14 +1420,18 @@ impl Daemon {
             if target > sched.now() {
                 sched.run_until(target);
             }
-            if self.shards.is_sharded() {
+            let sharded = self.shards.is_sharded();
+            let mut first_id = sched.jobs_signature().1;
+            if sharded {
                 // Reserve a contiguous global id range while holding this
                 // shard's mutex (the ordering contract that keeps shard
                 // counters behind the global allocator), and fast-forward
                 // the shard's own counter to it.
-                let first = self.shards.allocate_ids(total_jobs);
-                sched.force_next_id(first);
+                first_id = self.shards.allocate_ids(total_jobs);
+                sched.force_next_id(first_id);
             }
+            let mut pending = None;
+            let mut lease = None;
             if self.journal.is_some() {
                 // Write-ahead: journal the admission (as one synthesized
                 // manifest entry — replay re-materializes the identical
@@ -914,13 +1442,39 @@ impl Daemon {
                 let entry = ManifestEntry::new(spec.qos, spec.job_type, spec.tasks, spec.user)
                     .with_run_secs(spec.run_secs)
                     .with_count(spec.count);
-                self.journal_append(&JournalRecord::Admit {
-                    vtime: sched.now(),
-                    first_id: sched.jobs_signature().1,
-                    total_jobs,
-                    manifest: None,
-                    entries: vec![AdmitEntry { index: 0, entry }],
-                })?;
+                if sharded {
+                    // Lease the id range in the allocator log first, then
+                    // land the (single-part) sharded admission record in
+                    // this shard's journal.
+                    let l = self.lease_ids(first_id, total_jobs)?;
+                    lease = Some(l);
+                    pending = self.journal_append(
+                        shard,
+                        &JournalRecord::ShardAdmit {
+                            vtime: sched.now(),
+                            lease: l,
+                            lease_first: first_id,
+                            lease_total: total_jobs,
+                            shards: vec![shard as u32],
+                            manifest: None,
+                            runs: vec![AdmitRun {
+                                first_id,
+                                entries: vec![AdmitEntry { index: 0, entry }],
+                            }],
+                        },
+                    )?;
+                } else {
+                    pending = self.journal_append(
+                        shard,
+                        &JournalRecord::Admit {
+                            vtime: sched.now(),
+                            first_id,
+                            total_jobs,
+                            manifest: None,
+                            entries: vec![AdmitEntry { index: 0, entry }],
+                        },
+                    )?;
+                }
             }
             let ids = if batched {
                 // Batched: the whole burst arrives in this one RPC.
@@ -930,13 +1484,23 @@ impl Daemon {
                 // launcher loop submits (one submit RPC apart).
                 sched.submit_burst(specs)
             };
-            self.maybe_checkpoint_locked(sched);
-            Ok::<_, ApiError>(ids)
+            if let Some(l) = lease {
+                self.note_applied_lease(shard, l);
+            }
+            self.maybe_checkpoint_locked(shard, sched);
+            Ok::<_, ApiError>((ids, pending))
         });
-        let ids = match ids {
-            Ok(ids) => ids,
+        let (ids, pending) = match result {
+            Ok(v) => v,
             Err(e) => return Response::Error(e),
         };
+        if let Some(seq) = pending {
+            // Group commit: the ack still waits for the fsync covering its
+            // record — batched with every other writer parked here.
+            if let Err(e) = self.group_sync_wait(shard, seq) {
+                return Response::Error(e);
+            }
+        }
         self.metrics
             .jobs_submitted
             .fetch_add(ids.len() as u64, Ordering::Relaxed);
@@ -1031,6 +1595,7 @@ impl Daemon {
                     sched.run_until(target);
                 }
                 let mid = self.manifests.read().expect("manifests poisoned").next_id();
+                let mut pending = None;
                 if self.journal.is_some() {
                     // Write-ahead, same contract as SUBMIT: the record
                     // lands durably before the scheduler or registry
@@ -1042,13 +1607,16 @@ impl Daemon {
                             entry: manifest.entries[i].clone(),
                         })
                         .collect();
-                    self.journal_append(&JournalRecord::Admit {
-                        vtime: sched.now(),
-                        first_id: sched.jobs_signature().1,
-                        total_jobs,
-                        manifest: Some(mid),
-                        entries,
-                    })?;
+                    pending = self.journal_append(
+                        0,
+                        &JournalRecord::Admit {
+                            vtime: sched.now(),
+                            first_id: sched.jobs_signature().1,
+                            total_jobs,
+                            manifest: Some(mid),
+                            entries,
+                        },
+                    )?;
                 }
                 let ids = sched.submit_batch(specs);
                 let reg_spans = spans
@@ -1066,11 +1634,18 @@ impl Daemon {
                     .expect("manifests poisoned")
                     .register(reg_spans);
                 debug_assert_eq!(registered, Some(mid));
-                self.maybe_checkpoint_locked(sched);
-                Ok::<_, ApiError>((ids, Some(mid)))
+                self.maybe_checkpoint_locked(0, sched);
+                Ok::<_, ApiError>((ids, Some(mid), pending))
             });
             match result {
-                Ok(pair) => pair,
+                Ok((ids, mid, pending)) => {
+                    if let Some(seq) = pending {
+                        if let Err(e) = self.group_sync_wait(0, seq) {
+                            return Response::Error(e);
+                        }
+                    }
+                    (ids, mid)
+                }
                 Err(e) => return Response::Error(e),
             }
         };
@@ -1124,17 +1699,31 @@ impl Daemon {
         specs: Vec<JobSpec>,
         total_jobs: u64,
     ) -> Result<(Vec<JobId>, Option<u64>), ApiError> {
-        debug_assert!(self.journal.is_none(), "durability is single-shard only");
-        // Consecutive same-shard entries collapse into one submit_batch.
-        let mut runs: Vec<(usize, usize)> = Vec::new(); // (shard, jobs)
-        for &(i, _, len) in spans {
+        // Consecutive same-shard entries collapse into one submit_batch
+        // run; each run remembers its entry indices so the per-shard
+        // journal parts can carry exactly their own runs.
+        struct Run {
+            shard: usize,
+            jobs: usize,
+            /// Indices into `spans` (manifest order preserved).
+            entries: Vec<usize>,
+        }
+        let mut runs: Vec<Run> = Vec::new();
+        for (k, &(i, _, len)) in spans.iter().enumerate() {
             let shard = self.shards.shard_for(manifest.entries[i].qos);
             match runs.last_mut() {
-                Some((s, n)) if *s == shard => *n += len,
-                _ => runs.push((shard, len)),
+                Some(r) if r.shard == shard => {
+                    r.jobs += len;
+                    r.entries.push(k);
+                }
+                _ => runs.push(Run {
+                    shard,
+                    jobs: len,
+                    entries: vec![k],
+                }),
             }
         }
-        let mut touched: Vec<usize> = runs.iter().map(|&(s, _)| s).collect();
+        let mut touched: Vec<usize> = runs.iter().map(|r| r.shard).collect();
         touched.sort_unstable();
         touched.dedup();
         let mut guards: Vec<(usize, std::sync::MutexGuard<'_, Scheduler>)> = touched
@@ -1152,23 +1741,81 @@ impl Daemon {
         }
         let first = self.shards.allocate_ids(total_jobs);
         let mid = self.manifests.read().expect("manifests poisoned").next_id();
+        // Each run's first id: one contiguous global range split in
+        // manifest order.
+        let mut run_first = Vec::with_capacity(runs.len());
+        {
+            let mut next = first;
+            for r in &runs {
+                run_first.push(next);
+                next += r.jobs as u64;
+            }
+            debug_assert_eq!(next, first + total_jobs);
+        }
+        // Write-ahead, sharded: lease the id range in the allocator log,
+        // then append one `ShardAdmit` part per touched shard (ascending
+        // index order), each carrying the full lease header plus that
+        // shard's runs. A failure at any point aborts before any
+        // scheduler mutates — parts already appended become a torn lease
+        // recovery drops whole (the client was never acked).
+        let mut lease = None;
+        let mut pending: Vec<(usize, u64)> = Vec::new();
+        if self.journal.is_some() {
+            let l = self.lease_ids(first, total_jobs)?;
+            lease = Some(l);
+            let declared: Vec<u32> = touched.iter().map(|&s| s as u32).collect();
+            for (pos, &shard) in touched.iter().enumerate() {
+                let part_runs: Vec<AdmitRun> = runs
+                    .iter()
+                    .zip(&run_first)
+                    .filter(|(r, _)| r.shard == shard)
+                    .map(|(r, &rf)| AdmitRun {
+                        first_id: rf,
+                        entries: r
+                            .entries
+                            .iter()
+                            .map(|&k| {
+                                let (i, _, _) = spans[k];
+                                AdmitEntry {
+                                    index: i as u32,
+                                    entry: manifest.entries[i].clone(),
+                                }
+                            })
+                            .collect(),
+                    })
+                    .collect();
+                let vtime = guards[pos].1.now();
+                if let Some(seq) = self.journal_append(
+                    shard,
+                    &JournalRecord::ShardAdmit {
+                        vtime,
+                        lease: l,
+                        lease_first: first,
+                        lease_total: total_jobs,
+                        shards: declared.clone(),
+                        manifest: Some(mid),
+                        runs: part_runs,
+                    },
+                )? {
+                    pending.push((shard, seq));
+                }
+            }
+        }
         let mut ids: Vec<JobId> = Vec::with_capacity(total_jobs as usize);
         let mut spec_iter = specs.into_iter();
-        let mut next = first;
-        for &(shard, n) in &runs {
+        for (r, &rf) in runs.iter().zip(&run_first) {
             let pos = guards
                 .iter()
-                .position(|&(s, _)| s == shard)
+                .position(|&(s, _)| s == r.shard)
                 .expect("run shard is locked");
             let g = &mut guards[pos].1;
-            g.force_next_id(next);
-            let run_specs: Vec<JobSpec> = spec_iter.by_ref().take(n).collect();
+            g.force_next_id(rf);
+            let run_specs: Vec<JobSpec> = spec_iter.by_ref().take(r.jobs).collect();
             let run_ids = g.submit_batch(run_specs);
-            debug_assert_eq!(run_ids.first().map(|j| j.0), Some(next));
+            debug_assert_eq!(run_ids.first().map(|j| j.0), Some(rf));
             ids.extend(run_ids);
-            next += n as u64;
         }
-        debug_assert_eq!(next, first + total_jobs);
+        debug_assert_eq!(ids.len() as u64, total_jobs);
         let reg_spans = spans
             .iter()
             .map(|&(i, start, len)| ManifestSpan {
@@ -1184,7 +1831,16 @@ impl Daemon {
             .expect("manifests poisoned")
             .register(reg_spans);
         debug_assert_eq!(registered, Some(mid));
+        // The applied-lease watermark moves only after the registry holds
+        // the manifest and every run landed, so a checkpoint claiming
+        // `applied_lease >= L` always carries lease L's full effects.
+        if let Some(l) = lease {
+            for &shard in &touched {
+                self.note_applied_lease(shard, l);
+            }
+        }
         for (idx, g) in guards.iter() {
+            self.maybe_checkpoint_locked(*idx, g);
             self.shards.store_snapshot(*idx, g);
         }
         let hold_ns = t0.elapsed().as_nanos() as u64;
@@ -1194,6 +1850,11 @@ impl Daemon {
         }
         self.metrics.record_write_lock(hold_ns);
         self.publish_merged();
+        // Group commit: the ack waits for every touched shard's covering
+        // sync, after the scheduler locks drop.
+        for (shard, seq) in pending {
+            self.group_sync_wait(shard, seq)?;
+        }
         Ok((ids, Some(mid)))
     }
 
@@ -1507,6 +2168,12 @@ impl Daemon {
                 .collect(),
             contention: Some(self.contention_stats()),
             shards: self.shard_stats(),
+            journal: self.journal.as_ref().map(|_| JournalStats {
+                appends: self.metrics.journal_appends.load(Ordering::Relaxed),
+                synced_appends: self.metrics.journal_synced_appends.load(Ordering::Relaxed),
+                group_commits: self.metrics.journal_group_commits.load(Ordering::Relaxed),
+                poisoned: self.metrics.journal_poisoned.load(Ordering::Relaxed),
+            }),
         }
     }
 
@@ -2787,15 +3454,254 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "durability requires shard_count = 1")]
-    fn durability_with_shards_is_rejected_at_boot() {
-        let tmp = crate::testkit::crash::TempDir::new("shards-durability");
-        daemon_with(DaemonConfig {
+    fn durability_with_shards_boots_per_shard_journals() {
+        let tmp = TempDir::new("shards-durability");
+        let cfg = DaemonConfig {
             speedup: 0.0,
             shard_count: 2,
-            durability: Some(DurabilityConfig::new(tmp.path())),
+            durability: Some(DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Never)),
             ..DaemonConfig::default()
-        });
+        };
+        let (normal_id, spot_id, mid);
+        {
+            let d = daemon_with(cfg.clone());
+            assert_eq!(d.shard_count(), 2);
+            // The sharded layout exists on disk: alloc log + shard dirs.
+            assert!(crate::coordinator::journal::dir_has_shard_layout(tmp.path()));
+            assert_eq!(
+                crate::coordinator::journal::list_shard_dirs(tmp.path()).len(),
+                2
+            );
+            let ack = match d.handle(Request::Submit(SubmitSpec::new(
+                QosClass::Normal,
+                JobType::Array,
+                8,
+                1,
+            ))) {
+                Response::SubmitAck(a) => a,
+                other => panic!("{other:?}"),
+            };
+            normal_id = ack.first;
+            let ack = match d.handle(Request::Submit(SubmitSpec::new(
+                QosClass::Spot,
+                JobType::Array,
+                16,
+                9,
+            ))) {
+                Response::SubmitAck(a) => a,
+                other => panic!("{other:?}"),
+            };
+            spot_id = ack.first;
+            // A cross-shard manifest: one interactive + one spot entry.
+            let m = ManifestBuilder::new()
+                .interactive(2, JobType::Array, 8)
+                .last(|e| e.with_tag("xshard"))
+                .spot(9, JobType::Array, 32)
+                .build();
+            let mack = match d.handle(Request::MSubmit(m)) {
+                Response::ManifestAck(a) => a,
+                other => panic!("{other:?}"),
+            };
+            mid = mack.manifest.expect("manifest id");
+            match d.handle(Request::Scancel(spot_id)) {
+                Response::Cancelled(id) => assert_eq!(id, spot_id),
+                other => panic!("{other:?}"),
+            }
+            match d.handle(Request::Stats) {
+                Response::Stats(s) => {
+                    let j = s.journal.expect("journaling daemon reports journal stats");
+                    assert!(j.appends >= 4, "two submits + two manifest parts: {j:?}");
+                    assert_eq!(j.poisoned, 0);
+                }
+                other => panic!("{other:?}"),
+            }
+            d.shutdown();
+        }
+        // Kill (drop) and recover at the same shard count: acked ids are
+        // identical, cross-shard manifest intact, cancel replayed.
+        let (d, report) = Daemon::recover(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+            cfg,
+        )
+        .expect("sharded recovery");
+        assert_eq!(d.shard_count(), 2);
+        assert!(report.admits_replayed >= 1, "{report}");
+        assert_eq!(report.leases_skipped_torn, 0);
+        match d.handle(Request::Sjob(normal_id)) {
+            Response::Job(detail) => assert_eq!(detail.qos, QosClass::Normal),
+            other => panic!("{other:?}"),
+        }
+        match d.handle(Request::Sjob(spot_id)) {
+            Response::Job(detail) => assert_eq!(detail.state, JobState::Cancelled),
+            other => panic!("{other:?}"),
+        }
+        let info = match d.handle(Request::Resume(ResumeTarget::Manifest(mid))) {
+            Response::Resume(info) => info,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(info.entries.len(), 2, "cross-shard manifest survived whole");
+        for idx in 0..2 {
+            d.with_shard(idx, |s| s.check_invariants().expect("shard invariants"));
+        }
+    }
+
+    #[test]
+    fn try_new_refuses_existing_journal_state_typed() {
+        let tmp = TempDir::new("config-error-exists");
+        let cfg = DaemonConfig {
+            speedup: 0.0,
+            durability: Some(DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Never)),
+            ..DaemonConfig::default()
+        };
+        {
+            let d = daemon_with(cfg.clone());
+            d.handle(Request::Submit(SubmitSpec::new(QosClass::Spot, JobType::Array, 8, 9)));
+            d.shutdown();
+        }
+        // A fresh boot over live journal state is a typed refusal, not a
+        // silent shadow (and `new` still panics for embedders).
+        match Daemon::try_new(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+            cfg.clone(),
+        ) {
+            Err(ConfigError::JournalExists(dir)) => assert_eq!(dir, tmp.path()),
+            other => panic!("expected JournalExists: {:?}", other.err()),
+        }
+        // Same refusal for the sharded layout.
+        let tmp2 = TempDir::new("config-error-exists-sharded");
+        let cfg2 = DaemonConfig {
+            speedup: 0.0,
+            shard_count: 2,
+            durability: Some(DurabilityConfig::new(tmp2.path()).with_fsync(FsyncPolicy::Never)),
+            ..DaemonConfig::default()
+        };
+        {
+            daemon_with(cfg2.clone()).shutdown();
+        }
+        assert!(matches!(
+            Daemon::try_new(
+                topology::tx2500(),
+                SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+                cfg2,
+            ),
+            Err(ConfigError::JournalExists(_))
+        ));
+    }
+
+    #[test]
+    fn recover_refuses_layout_mismatch_typed() {
+        // Flat journal written by a single-shard daemon, recovered with a
+        // sharded boot config: a typed ShardLayoutMismatch, never a guess.
+        let tmp = TempDir::new("config-error-layout");
+        let flat = DaemonConfig {
+            speedup: 0.0,
+            durability: Some(DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Never)),
+            ..DaemonConfig::default()
+        };
+        {
+            let d = daemon_with(flat.clone());
+            d.handle(Request::Submit(SubmitSpec::new(QosClass::Spot, JobType::Array, 8, 9)));
+            d.shutdown();
+        }
+        let sharded_boot = DaemonConfig {
+            shard_count: 2,
+            ..flat.clone()
+        };
+        match Daemon::recover(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+            sharded_boot,
+        ) {
+            Err(RecoveryError::Config(ConfigError::ShardLayoutMismatch { .. })) => {}
+            other => panic!("expected ShardLayoutMismatch: {:?}", other.err()),
+        }
+        // And the converse: a sharded journal with a single-shard boot.
+        let tmp2 = TempDir::new("config-error-layout-rev");
+        let sharded = DaemonConfig {
+            speedup: 0.0,
+            shard_count: 2,
+            durability: Some(DurabilityConfig::new(tmp2.path()).with_fsync(FsyncPolicy::Never)),
+            ..DaemonConfig::default()
+        };
+        {
+            daemon_with(sharded.clone()).shutdown();
+        }
+        let single_boot = DaemonConfig {
+            shard_count: 1,
+            ..sharded
+        };
+        match Daemon::recover(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+            single_boot,
+        ) {
+            Err(RecoveryError::Config(ConfigError::ShardLayoutMismatch { .. })) => {}
+            other => panic!("expected ShardLayoutMismatch: {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn group_commit_ack_waits_for_a_covering_sync() {
+        // fsync=always with group commit on: concurrent submits batch
+        // into shared fsyncs, every ack is durable, and the group-commit
+        // counters move.
+        let tmp = TempDir::new("group-commit-daemon");
+        let cfg = DaemonConfig {
+            speedup: 0.0,
+            durability: Some(
+                DurabilityConfig::new(tmp.path())
+                    .with_fsync(FsyncPolicy::Always)
+                    .with_group_commit(true),
+            ),
+            ..DaemonConfig::default()
+        };
+        let d = daemon_with(cfg.clone());
+        let threads: Vec<_> = (0..4)
+            .map(|u| {
+                let d = Arc::clone(&d);
+                std::thread::spawn(move || {
+                    for _ in 0..8 {
+                        match d.handle(Request::Submit(SubmitSpec::new(
+                            QosClass::Spot,
+                            JobType::Array,
+                            8,
+                            u,
+                        ))) {
+                            Response::SubmitAck(_) => {}
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().expect("submitter");
+        }
+        let stats = match d.handle(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("{other:?}"),
+        };
+        let j = stats.journal.expect("journal stats");
+        assert_eq!(j.appends, 32);
+        assert_eq!(j.synced_appends, 32, "every ack waited for a covering sync");
+        assert!(
+            j.group_commits >= 1 && j.group_commits <= 32,
+            "syncs batched: {}",
+            j.group_commits
+        );
+        d.shutdown();
+        drop(d);
+        // Every acked admission is on disk.
+        let (d, report) = Daemon::recover(
+            topology::tx2500(),
+            SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+            cfg,
+        )
+        .expect("recovery");
+        assert_eq!(report.admits_replayed, 32);
+        d.with_scheduler(|s| assert_eq!(s.jobs().count(), 32));
     }
 
     #[test]

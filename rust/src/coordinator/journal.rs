@@ -31,14 +31,43 @@
 //! segment that is discarded in favor of its predecessor). A torn final
 //! record — a crash mid-append — is truncated, never fatal.
 //!
+//! ## Sharded layout
+//!
+//! A single-shard daemon journals into a flat directory of `seg-*.wal`
+//! files (the layout above, byte-for-byte the original format). A sharded
+//! daemon (`shard_count > 1`) instead keeps **one journal per scheduler
+//! shard** under `shard-<i>/seg-*.wal`, appended under that shard's mutex,
+//! plus a small **allocator log** `alloc.log` ([`AllocLog`]) of id-range
+//! lease records: every sharded admission first appends the lease
+//! (`lease seq → [first, first+count)`) there, then one
+//! [`JournalRecord::ShardAdmit`] *part* per touched shard. Each part
+//! redundantly carries the whole lease header (seq, id range, the touched
+//! shard set), so recovery can reconcile a cross-shard manifest from any
+//! shard's journal: a lease is replayed only when every touched shard
+//! either has the part in its tail or checkpointed past the lease
+//! (`applied_lease`); anything else is a torn, never-acked admission and
+//! is dropped whole. The two layouts never mix in one directory.
+//!
+//! ## Group commit
+//!
+//! Under `fsync = always`, concurrent admissions would pay one fsync per
+//! RPC. [`Journal::append_deferred`] + [`Journal::group_sync`] let the
+//! daemon batch them: writers append (no sync) under the journal lock,
+//! release it, and then one leader syncs everything appended so far while
+//! the rest park (see the daemon's parked-writer protocol). The ack still
+//! waits for the fsync covering its record, so the no-acked-loss contract
+//! holds.
+//!
 //! ## Crash injection
 //!
-//! [`FaultPlan`] lets the test harness arm one-shot faults at the three
+//! [`FaultPlan`] lets the test harness arm countdown faults at the
 //! interesting points (after append / before fsync, after fsync / before
-//! publish, mid-checkpoint). A fault poisons the journal and, for the
-//! pre-fsync point, actively truncates the file back to the last durable
-//! byte — faithfully simulating the page-cache loss of a power cut without
-//! killing the test process.
+//! publish, mid-checkpoint, mid-allocator-log-append). A fault poisons the
+//! journal and, for the pre-fsync point, actively truncates the file back
+//! to the last durable byte — faithfully simulating the page-cache loss of
+//! a power cut without killing the test process. [`FaultPlan::arm_after`]
+//! skips the first `n` hits, which is how a test crashes *between* shard
+//! A's append and shard B's append of one cross-shard manifest.
 
 use super::manifest::{ManifestEntry, ManifestSpan, RegisteredManifest};
 use super::snapshot::JobView;
@@ -49,7 +78,7 @@ use std::fmt;
 use std::fs::{self, File, OpenOptions};
 use std::io::{self, Seek, SeekFrom, Write as _};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Arc;
 
 /// Leading bytes of every segment file.
@@ -124,46 +153,82 @@ pub enum FaultPoint {
     /// Mid-checkpoint rotation: the new segment is torn; recovery must
     /// fall back to the previous segment's checkpoint + tail.
     MidCheckpoint,
+    /// Mid-append on the allocator log (sharded mode): the lease record is
+    /// torn — recovery must truncate it and drop any shard-journal part
+    /// that was never appended under it.
+    AllocAppend,
 }
 
-/// One-shot fault arms shared between a test and a running daemon's
+/// Countdown fault arms shared between a test and a running daemon's
 /// journal. `Clone` shares the arms (the plan travels inside
-/// `DaemonConfig`, which must stay `Clone`).
-#[derive(Debug, Clone, Default)]
+/// `DaemonConfig`, which must stay `Clone`). Each point holds a countdown:
+/// `-1` disarmed, `0` fires on the next hit, `n > 0` lets `n` hits pass
+/// first — which is how a test crashes between shard A's and shard B's
+/// append of one cross-shard admission.
+#[derive(Debug, Clone)]
 pub struct FaultPlan {
-    after_append: Arc<AtomicBool>,
-    after_fsync: Arc<AtomicBool>,
-    mid_checkpoint: Arc<AtomicBool>,
+    after_append: Arc<AtomicI64>,
+    after_fsync: Arc<AtomicI64>,
+    mid_checkpoint: Arc<AtomicI64>,
+    alloc_append: Arc<AtomicI64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        // A derived Default would zero the countdowns — i.e. every fault
+        // armed to fire on first hit. Disarmed is -1.
+        Self::new()
+    }
 }
 
 impl FaultPlan {
     /// A plan with every fault disarmed.
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            after_append: Arc::new(AtomicI64::new(-1)),
+            after_fsync: Arc::new(AtomicI64::new(-1)),
+            mid_checkpoint: Arc::new(AtomicI64::new(-1)),
+            alloc_append: Arc::new(AtomicI64::new(-1)),
+        }
     }
 
-    fn arm_of(&self, point: FaultPoint) -> &Arc<AtomicBool> {
+    fn arm_of(&self, point: FaultPoint) -> &Arc<AtomicI64> {
         match point {
             FaultPoint::AfterAppend => &self.after_append,
             FaultPoint::AfterFsync => &self.after_fsync,
             FaultPoint::MidCheckpoint => &self.mid_checkpoint,
+            FaultPoint::AllocAppend => &self.alloc_append,
         }
     }
 
     /// Arm a fault: the next time the journal reaches `point` it fails
     /// (once — firing disarms, so recovery can reuse the same config).
     pub fn arm(&self, point: FaultPoint) {
-        self.arm_of(point).store(true, Ordering::SeqCst);
+        self.arm_of(point).store(0, Ordering::SeqCst);
     }
 
-    /// Is the fault currently armed?
+    /// Arm a fault that lets the first `skip` hits pass and fires on hit
+    /// `skip + 1`. `arm_after(p, 0)` is `arm(p)`.
+    pub fn arm_after(&self, point: FaultPoint, skip: u32) {
+        self.arm_of(point).store(skip as i64, Ordering::SeqCst);
+    }
+
+    /// Is the fault currently armed (counting down or about to fire)?
     pub fn armed(&self, point: FaultPoint) -> bool {
-        self.arm_of(point).load(Ordering::SeqCst)
+        self.arm_of(point).load(Ordering::SeqCst) >= 0
     }
 
-    /// Fire-and-disarm.
+    /// Count down one hit; `true` exactly when the countdown reaches its
+    /// firing point (which disarms it).
     fn take(&self, point: FaultPoint) -> bool {
-        self.arm_of(point).swap(false, Ordering::SeqCst)
+        self.arm_of(point)
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| match v {
+                -1 => None,        // disarmed
+                0 => Some(-1),     // fire and disarm
+                n => Some(n - 1),  // let this hit pass
+            })
+            .map(|prev| prev == 0)
+            .unwrap_or(false)
     }
 }
 
@@ -178,19 +243,28 @@ pub struct DurabilityConfig {
     pub checkpoint_every: u64,
     /// Also checkpoint when the live segment exceeds this size.
     pub max_segment_bytes: u64,
+    /// Batch concurrent `fsync = always` admissions into one sync (the
+    /// parked-writer group commit; no effect under other policies, which
+    /// already amortize). On: an ack still waits for the fsync covering
+    /// its record, but a failed group sync leaves the admission
+    /// applied-but-unacked (the same class as `SCANCEL`'s documented
+    /// mutate-then-append divergence). Off restores strict
+    /// append-sync-then-mutate per RPC.
+    pub group_commit: bool,
     /// Crash-injection arms (disarmed in production).
     pub faults: FaultPlan,
 }
 
 impl DurabilityConfig {
     /// Durability at `dir` with default policy (interval fsync, 4096
-    /// records or 64 MB per segment).
+    /// records or 64 MB per segment, group commit on).
     pub fn new(dir: impl Into<PathBuf>) -> Self {
         Self {
             dir: dir.into(),
             fsync: FsyncPolicy::default(),
             checkpoint_every: 4096,
             max_segment_bytes: 64 << 20,
+            group_commit: true,
             faults: FaultPlan::new(),
         }
     }
@@ -205,6 +279,21 @@ impl DurabilityConfig {
     pub fn with_checkpoint_every(mut self, every: u64) -> Self {
         self.checkpoint_every = every.max(1);
         self
+    }
+
+    /// Builder: group commit on/off.
+    pub fn with_group_commit(mut self, on: bool) -> Self {
+        self.group_commit = on;
+        self
+    }
+
+    /// The same config re-rooted at a scheduler shard's journal directory
+    /// (`<dir>/shard-<idx>`); the fault plan stays shared, so one armed
+    /// countdown spans every shard's journal.
+    pub fn for_shard(&self, idx: usize) -> DurabilityConfig {
+        let mut cfg = self.clone();
+        cfg.dir = shard_journal_dir(&self.dir, idx);
+        cfg
     }
 }
 
@@ -339,6 +428,18 @@ pub struct CheckpointState {
     pub history: Vec<JobView>,
     /// The manifest registry (resume/wait-entry lookups).
     pub manifests: Vec<RegisteredManifest>,
+    /// Daemon-global capture sequence (sharded mode; 0 unsharded).
+    /// Allocated under the registry lock at capture, so across shards the
+    /// max-`global_seq` checkpoint holds the freshest registry + history —
+    /// recovery restores those global tables from it alone.
+    pub global_seq: u64,
+    /// Highest allocator-log lease whose part this shard had applied when
+    /// the checkpoint was captured (sharded mode; 0 unsharded). Monotone
+    /// per shard: lease seqs are allocated inside the shard-lock critical
+    /// sections. Recovery's torn-lease reconciliation counts a shard as
+    /// covering lease `L` when its part is in the tail *or*
+    /// `applied_lease >= L` (the part was absorbed by this checkpoint).
+    pub applied_lease: u64,
 }
 
 impl CheckpointState {
@@ -351,6 +452,8 @@ impl CheckpointState {
             jobs: Vec::new(),
             history: Vec::new(),
             manifests: Vec::new(),
+            global_seq: 0,
+            applied_lease: 0,
         }
     }
 }
@@ -382,6 +485,47 @@ pub enum JournalRecord {
     /// A scheduler-state checkpoint (always the first record of a
     /// segment).
     Checkpoint(CheckpointState),
+    /// One shard's part of a sharded admission. The lease header (seq, id
+    /// range, touched-shard set) is carried redundantly in *every* part,
+    /// so recovery can reconcile a cross-shard manifest from whichever
+    /// journals survive: the lease replays only when every shard in
+    /// `shards` is covered (part in tail, or checkpointed past the lease).
+    ShardAdmit {
+        /// Virtual admission time on this shard.
+        vtime: SimTime,
+        /// The allocator-log lease this admission's ids came from.
+        lease: u64,
+        /// First id of the whole lease (all shards).
+        lease_first: u64,
+        /// Total jobs of the whole lease (all shards).
+        lease_total: u64,
+        /// Every shard index the lease touched, ascending.
+        shards: Vec<u32>,
+        /// Registered manifest id, if any.
+        manifest: Option<u64>,
+        /// This shard's consecutive-entry runs. Each run carries its own
+        /// explicit first id: one lease's runs on one shard need not be
+        /// contiguous (other shards' runs interleave in manifest order),
+        /// and explicit ids keep replay exact even when another lease in
+        /// between was dropped as torn.
+        runs: Vec<AdmitRun>,
+    },
+}
+
+/// One consecutive-entry run inside a [`JournalRecord::ShardAdmit`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmitRun {
+    /// First job id of the run (replay `force_next_id`s to it).
+    pub first_id: u64,
+    /// The run's admitted entries, manifest order.
+    pub entries: Vec<AdmitEntry>,
+}
+
+impl AdmitRun {
+    /// Jobs this run materializes.
+    pub fn jobs(&self) -> u64 {
+        self.entries.iter().map(|a| a.entry.jobs()).sum()
+    }
 }
 
 // ------------------------------------------------- binary encode helpers
@@ -574,6 +718,7 @@ fn state_from(c: u8) -> Result<JobState, JournalError> {
 const TAG_ADMIT: u8 = 1;
 const TAG_CANCEL: u8 = 2;
 const TAG_CHECKPOINT: u8 = 3;
+const TAG_SHARD_ADMIT: u8 = 4;
 
 fn enc_manifest_entry(e: &mut Enc, m: &ManifestEntry) {
     e.u32(m.user);
@@ -720,6 +865,37 @@ impl JournalRecord {
                         e.opt_str(s.tag.as_deref());
                     }
                 }
+                e.u64(cp.global_seq);
+                e.u64(cp.applied_lease);
+            }
+            JournalRecord::ShardAdmit {
+                vtime,
+                lease,
+                lease_first,
+                lease_total,
+                shards,
+                manifest,
+                runs,
+            } => {
+                e.u8(TAG_SHARD_ADMIT);
+                e.time(*vtime);
+                e.u64(*lease);
+                e.u64(*lease_first);
+                e.u64(*lease_total);
+                e.u32(shards.len() as u32);
+                for &s in shards {
+                    e.u32(s);
+                }
+                e.opt_u64(*manifest);
+                e.u32(runs.len() as u32);
+                for run in runs {
+                    e.u64(run.first_id);
+                    e.u32(run.entries.len() as u32);
+                    for a in &run.entries {
+                        e.u32(a.index);
+                        enc_manifest_entry(&mut e, &a.entry);
+                    }
+                }
             }
         }
         e.buf
@@ -807,6 +983,8 @@ impl JournalRecord {
                     let tag = spans.iter().find_map(|s| s.tag.clone());
                     manifests.push(RegisteredManifest { id, spans, tag });
                 }
+                let global_seq = d.u64("cp.global_seq")?;
+                let applied_lease = d.u64("cp.applied_lease")?;
                 JournalRecord::Checkpoint(CheckpointState {
                     vtime,
                     next_id,
@@ -814,7 +992,45 @@ impl JournalRecord {
                     jobs,
                     history,
                     manifests,
+                    global_seq,
+                    applied_lease,
                 })
+            }
+            TAG_SHARD_ADMIT => {
+                let vtime = d.time("sadmit.vtime")?;
+                let lease = d.u64("sadmit.lease")?;
+                let lease_first = d.u64("sadmit.lease_first")?;
+                let lease_total = d.u64("sadmit.lease_total")?;
+                let nshards = d.len("sadmit.shards")?;
+                let mut shards = Vec::with_capacity(nshards);
+                for _ in 0..nshards {
+                    shards.push(d.u32("sadmit.shard")?);
+                }
+                let manifest = d.opt_u64("sadmit.manifest")?;
+                let nruns = d.len("sadmit.runs")?;
+                let mut runs = Vec::with_capacity(nruns);
+                for _ in 0..nruns {
+                    let first_id = d.u64("sadmit.run.first_id")?;
+                    let n = d.len("sadmit.run.entries")?;
+                    let mut entries = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let index = d.u32("sadmit.run.entry.index")?;
+                        entries.push(AdmitEntry {
+                            index,
+                            entry: dec_manifest_entry(&mut d)?,
+                        });
+                    }
+                    runs.push(AdmitRun { first_id, entries });
+                }
+                JournalRecord::ShardAdmit {
+                    vtime,
+                    lease,
+                    lease_first,
+                    lease_total,
+                    shards,
+                    manifest,
+                    runs,
+                }
             }
             t => return Err(corrupt(format!("unknown record tag {t}"))),
         };
@@ -855,10 +1071,46 @@ fn list_segments(dir: &Path) -> io::Result<Vec<(u64, PathBuf)>> {
     Ok(out)
 }
 
-/// Does `dir` already hold journal segments? (`false` for a missing or
-/// empty directory — the daemon uses this to pick create vs recover.)
+/// Directory holding shard `idx`'s segments under a sharded journal root.
+pub fn shard_journal_dir(dir: &Path, idx: usize) -> PathBuf {
+    dir.join(format!("shard-{idx}"))
+}
+
+/// Path of the id-allocator log under a sharded journal root.
+pub fn alloc_log_path(dir: &Path) -> PathBuf {
+    dir.join("alloc.log")
+}
+
+/// Shard subdirectories (`shard-<i>/`) present under `dir`, ascending.
+/// Empty for a missing dir or a flat (single-shard) layout.
+pub fn list_shard_dirs(dir: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out = Vec::new();
+    if let Ok(rd) = fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(idx) = name.strip_prefix("shard-").and_then(|s| s.parse::<usize>().ok()) {
+                if entry.path().is_dir() {
+                    out.push((idx, entry.path()));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Does `dir` hold a *sharded* journal layout (an allocator log or any
+/// `shard-<i>/` subdirectory)?
+pub fn dir_has_shard_layout(dir: &Path) -> bool {
+    alloc_log_path(dir).exists() || !list_shard_dirs(dir).is_empty()
+}
+
+/// Does `dir` already hold journal state — flat segments, an allocator
+/// log, or per-shard segment directories? (`false` for a missing or empty
+/// directory — the daemon uses this to pick create vs recover.)
 pub fn dir_has_segments(dir: &Path) -> bool {
-    list_segments(dir).map(|v| !v.is_empty()).unwrap_or(false)
+    list_segments(dir).map(|v| !v.is_empty()).unwrap_or(false) || dir_has_shard_layout(dir)
 }
 
 /// Best-effort directory fsync (persists segment create/delete entries).
@@ -940,6 +1192,11 @@ pub struct Journal {
     durable_len: u64,
     appends_since_sync: u32,
     records_since_checkpoint: u64,
+    /// Monotone count of records appended via any path (group-commit
+    /// waiters compare their append's sequence against `synced_seq`).
+    append_seq: u64,
+    /// `append_seq` value covered by the last fsync.
+    synced_seq: u64,
     fsync: FsyncPolicy,
     faults: FaultPlan,
     poisoned: bool,
@@ -976,6 +1233,8 @@ impl Journal {
             durable_len: written,
             appends_since_sync: 0,
             records_since_checkpoint: 0,
+            append_seq: 0,
+            synced_seq: 0,
             fsync: cfg.fsync,
             faults: cfg.faults.clone(),
             poisoned: false,
@@ -1031,6 +1290,8 @@ impl Journal {
             durable_len: scan.valid_len,
             appends_since_sync: 0,
             records_since_checkpoint: tail.len() as u64,
+            append_seq: 0,
+            synced_seq: 0,
             fsync: cfg.fsync,
             faults: cfg.faults.clone(),
             poisoned: false,
@@ -1063,6 +1324,7 @@ impl Journal {
         self.written_len += framed.len() as u64;
         self.appends_since_sync += 1;
         self.records_since_checkpoint += 1;
+        self.append_seq += 1;
         if self.faults.take(FaultPoint::AfterAppend) {
             // Power cut before the fsync: everything past the last durable
             // byte is page cache that never hit the platter. Truncate it
@@ -1090,6 +1352,71 @@ impl Journal {
         Ok(())
     }
 
+    /// Append one record **without** the per-record policy sync: the
+    /// group-commit path. Returns the record's append sequence; the caller
+    /// must not acknowledge until [`Journal::synced_seq`] reaches it (via
+    /// [`Journal::group_sync`], typically run by a leader writer batching
+    /// several waiters into one fsync). On `Err` the journal is poisoned.
+    pub fn append_deferred(&mut self, rec: &JournalRecord) -> Result<u64, JournalError> {
+        if self.poisoned {
+            return Err(JournalError::Poisoned);
+        }
+        let r = self.append_deferred_inner(rec);
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn append_deferred_inner(&mut self, rec: &JournalRecord) -> Result<u64, JournalError> {
+        let framed = frame(&rec.encode());
+        self.file.write_all(&framed)?;
+        self.written_len += framed.len() as u64;
+        self.appends_since_sync += 1;
+        self.records_since_checkpoint += 1;
+        self.append_seq += 1;
+        if self.faults.take(FaultPoint::AfterAppend) {
+            // Same power-cut model as `append_inner`: drop the page-cache
+            // bytes so the restarted daemon sees what a crash would leave.
+            let _ = self.file.set_len(self.durable_len);
+            let _ = self.file.sync_all();
+            return Err(JournalError::Fault("after-append"));
+        }
+        Ok(self.append_seq)
+    }
+
+    /// Fsync everything appended so far on behalf of a group of deferred
+    /// writers, returning the new [`Journal::synced_seq`]. The AfterFsync
+    /// fault fires here (post-durability, pre-ack), matching `append`.
+    pub fn group_sync(&mut self) -> Result<u64, JournalError> {
+        if self.poisoned {
+            return Err(JournalError::Poisoned);
+        }
+        let r = self.group_sync_inner();
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn group_sync_inner(&mut self) -> Result<u64, JournalError> {
+        self.sync_inner()?;
+        if self.faults.take(FaultPoint::AfterFsync) {
+            return Err(JournalError::Fault("after-fsync"));
+        }
+        Ok(self.synced_seq)
+    }
+
+    /// Sequence of the last appended record (deferred or not).
+    pub fn append_seq(&self) -> u64 {
+        self.append_seq
+    }
+
+    /// Highest append sequence covered by an fsync.
+    pub fn synced_seq(&self) -> u64 {
+        self.synced_seq
+    }
+
     /// Force an fsync of everything appended so far.
     pub fn sync(&mut self) -> Result<(), JournalError> {
         if self.poisoned {
@@ -1108,6 +1435,7 @@ impl Journal {
             self.durable_len = self.written_len;
         }
         self.appends_since_sync = 0;
+        self.synced_seq = self.append_seq;
         Ok(())
     }
 
@@ -1157,6 +1485,8 @@ impl Journal {
         self.durable_len = self.written_len;
         self.appends_since_sync = 0;
         self.records_since_checkpoint = 0;
+        // Rotation absorbs every prior append into the durable checkpoint.
+        self.synced_seq = self.append_seq;
         for (seq, path) in list_segments(&self.dir)? {
             if seq < new_seq {
                 let _ = fs::remove_file(path);
@@ -1184,6 +1514,265 @@ impl Journal {
     /// Live segment sequence number.
     pub fn segment_seq(&self) -> u64 {
         self.seg_seq
+    }
+
+    /// Has a previous error poisoned this handle?
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+}
+
+// ------------------------------------------------------------- alloc log
+
+/// Leading bytes of the allocator log.
+pub const ALLOC_MAGIC: &[u8; 8] = b"SPOTALC1";
+
+/// One id-range lease: the allocator handed `[first, first + count)` to a
+/// sharded admission under lease sequence `lease`. Fsync'd before any of
+/// those ids appears in a shard journal, so recovery's id watermark is
+/// always ahead of every id a shard journal can mention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocLease {
+    /// Lease sequence (monotone; allocated under the admission's shard
+    /// locks).
+    pub lease: u64,
+    /// First job id in the leased range.
+    pub first: u64,
+    /// Number of ids leased.
+    pub count: u64,
+}
+
+impl AllocLease {
+    fn encode(&self) -> [u8; 24] {
+        let mut out = [0u8; 24];
+        out[..8].copy_from_slice(&self.lease.to_le_bytes());
+        out[8..16].copy_from_slice(&self.first.to_le_bytes());
+        out[16..24].copy_from_slice(&self.count.to_le_bytes());
+        out
+    }
+
+    fn decode(buf: &[u8]) -> Result<AllocLease, JournalError> {
+        if buf.len() != 24 {
+            return Err(corrupt(format!("alloc lease payload len {}", buf.len())));
+        }
+        Ok(AllocLease {
+            lease: u64::from_le_bytes(buf[..8].try_into().unwrap()),
+            first: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            count: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+        })
+    }
+}
+
+/// The id-allocator log of a sharded journal: a single append-only file of
+/// [`AllocLease`] records (same frame format as the WAL, magic
+/// [`ALLOC_MAGIC`]). Appends fsync inline per the configured policy — the
+/// log is tiny (24-byte payloads) and written once per admission, so it
+/// does not join the group-commit protocol. Poisons like [`Journal`].
+#[derive(Debug)]
+pub struct AllocLog {
+    path: PathBuf,
+    file: File,
+    written_len: u64,
+    durable_len: u64,
+    appends_since_sync: u32,
+    fsync: FsyncPolicy,
+    faults: FaultPlan,
+    poisoned: bool,
+    /// Highest `first + count` across every lease ever appended (including
+    /// the compaction watermark record).
+    watermark_id: u64,
+    /// Highest lease sequence ever appended.
+    watermark_lease: u64,
+}
+
+impl AllocLog {
+    /// Create a fresh allocator log at `alloc.log` under `dir`.
+    pub fn create(cfg: &DurabilityConfig) -> Result<AllocLog, JournalError> {
+        fs::create_dir_all(&cfg.dir)?;
+        let path = alloc_log_path(&cfg.dir);
+        let mut file = OpenOptions::new()
+            .create_new(true)
+            .read(true)
+            .write(true)
+            .open(&path)?;
+        file.write_all(ALLOC_MAGIC)?;
+        file.sync_data()?;
+        sync_dir(&cfg.dir);
+        let written = ALLOC_MAGIC.len() as u64;
+        Ok(AllocLog {
+            path,
+            file,
+            written_len: written,
+            durable_len: written,
+            appends_since_sync: 0,
+            fsync: cfg.fsync,
+            faults: cfg.faults.clone(),
+            poisoned: false,
+            watermark_id: 0,
+            watermark_lease: 0,
+        })
+    }
+
+    /// Recover the allocator log: scan intact lease frames, truncate any
+    /// torn tail, and return the open log plus the surviving leases
+    /// (oldest first).
+    pub fn recover(cfg: &DurabilityConfig) -> Result<(AllocLog, Vec<AllocLease>), JournalError> {
+        let path = alloc_log_path(&cfg.dir);
+        let data = fs::read(&path)?;
+        if data.len() < ALLOC_MAGIC.len() || &data[..ALLOC_MAGIC.len()] != ALLOC_MAGIC {
+            return Err(corrupt("allocator log magic missing or torn"));
+        }
+        let mut off = ALLOC_MAGIC.len();
+        let mut leases = Vec::new();
+        loop {
+            if data.len() - off < 8 {
+                break;
+            }
+            let len = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(data[off + 4..off + 8].try_into().unwrap());
+            if len == 0 || len > MAX_RECORD_LEN || data.len() - off - 8 < len {
+                break;
+            }
+            let payload = &data[off + 8..off + 8 + len];
+            if crc32(payload) != crc {
+                break;
+            }
+            match AllocLease::decode(payload) {
+                Ok(l) => leases.push(l),
+                Err(_) => break,
+            }
+            off += 8 + len;
+        }
+        let valid_len = off as u64;
+        let mut file = OpenOptions::new().read(true).write(true).open(&path)?;
+        file.set_len(valid_len)?;
+        file.sync_all()?;
+        file.seek(SeekFrom::End(0))?;
+        let watermark_id = leases.iter().map(|l| l.first + l.count).max().unwrap_or(0);
+        let watermark_lease = leases.iter().map(|l| l.lease).max().unwrap_or(0);
+        let log = AllocLog {
+            path,
+            file,
+            written_len: valid_len,
+            durable_len: valid_len,
+            appends_since_sync: 0,
+            fsync: cfg.fsync,
+            faults: cfg.faults.clone(),
+            poisoned: false,
+            watermark_id,
+            watermark_lease,
+        };
+        Ok((log, leases))
+    }
+
+    /// Append one lease (and fsync per policy). On `Err` the log is
+    /// poisoned and the admission must abort before any shard-journal
+    /// append or scheduler mutation.
+    pub fn append(&mut self, lease: AllocLease) -> Result<(), JournalError> {
+        if self.poisoned {
+            return Err(JournalError::Poisoned);
+        }
+        let r = self.append_inner(lease);
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn append_inner(&mut self, lease: AllocLease) -> Result<(), JournalError> {
+        let framed = frame(&lease.encode());
+        if self.faults.take(FaultPoint::AllocAppend) {
+            // Torn lease: half the frame hits the file, then the "machine
+            // dies". Recovery must truncate it and treat the admission as
+            // never having happened.
+            self.file.write_all(&framed[..framed.len() / 2])?;
+            let _ = self.file.sync_data();
+            return Err(JournalError::Fault("alloc-append"));
+        }
+        self.file.write_all(&framed)?;
+        self.written_len += framed.len() as u64;
+        self.appends_since_sync += 1;
+        self.watermark_id = self.watermark_id.max(lease.first + lease.count);
+        self.watermark_lease = self.watermark_lease.max(lease.lease);
+        let due = match self.fsync {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::Interval { appends } => self.appends_since_sync >= appends,
+            FsyncPolicy::Never => false,
+        };
+        if due {
+            self.sync_inner()?;
+        }
+        Ok(())
+    }
+
+    /// Force an fsync of everything appended so far.
+    pub fn sync(&mut self) -> Result<(), JournalError> {
+        if self.poisoned {
+            return Err(JournalError::Poisoned);
+        }
+        let r = self.sync_inner();
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn sync_inner(&mut self) -> Result<(), JournalError> {
+        if self.durable_len != self.written_len {
+            self.file.sync_data()?;
+            self.durable_len = self.written_len;
+        }
+        self.appends_since_sync = 0;
+        Ok(())
+    }
+
+    /// Compact: rewrite the log as magic + one watermark record covering
+    /// everything seen so far, fsync'd. Safe any time the shard journals
+    /// have checkpointed/replayed past the dropped leases — recovery only
+    /// needs the watermark to stay ahead of every journaled id.
+    pub fn compact(&mut self) -> Result<(), JournalError> {
+        if self.poisoned {
+            return Err(JournalError::Poisoned);
+        }
+        let r = self.compact_inner();
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn compact_inner(&mut self) -> Result<(), JournalError> {
+        let watermark = AllocLease {
+            lease: self.watermark_lease,
+            first: self.watermark_id,
+            count: 0,
+        };
+        let framed = frame(&watermark.encode());
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.set_len(0)?;
+        self.file.write_all(ALLOC_MAGIC)?;
+        self.file.write_all(&framed)?;
+        self.file.sync_data()?;
+        self.written_len = (ALLOC_MAGIC.len() + framed.len()) as u64;
+        self.durable_len = self.written_len;
+        self.appends_since_sync = 0;
+        Ok(())
+    }
+
+    /// Highest `first + count` over every appended lease: the id
+    /// watermark recovery floors `next_id` at.
+    pub fn watermark_id(&self) -> u64 {
+        self.watermark_id
+    }
+
+    /// Highest lease sequence appended.
+    pub fn watermark_lease(&self) -> u64 {
+        self.watermark_lease
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
     }
 
     /// Has a previous error poisoned this handle?
@@ -1258,6 +1847,26 @@ mod tests {
                 }],
                 tag: Some(Arc::from("burst")),
             }],
+            global_seq: 3,
+            applied_lease: 2,
+        }
+    }
+
+    fn shard_admit(lease: u64, shards: Vec<u32>) -> JournalRecord {
+        let entry = ManifestEntry::new(QosClass::High, JobType::Array, 4, 1)
+            .with_count(3)
+            .with_tag("xshard");
+        JournalRecord::ShardAdmit {
+            vtime: SimTime::from_secs(lease),
+            lease,
+            lease_first: 100,
+            lease_total: 6,
+            shards,
+            manifest: Some(9),
+            runs: vec![AdmitRun {
+                first_id: 100,
+                entries: vec![AdmitEntry { index: 2, entry }],
+            }],
         }
     }
 
@@ -1278,6 +1887,8 @@ mod tests {
             },
             JournalRecord::Checkpoint(sample_checkpoint()),
             JournalRecord::Checkpoint(CheckpointState::genesis()),
+            shard_admit(5, vec![0, 1]),
+            shard_admit(6, vec![1]),
         ] {
             let bytes = rec.encode();
             let back = JournalRecord::decode(&bytes).expect("decode");
@@ -1518,5 +2129,139 @@ mod tests {
         }
         assert_eq!(FsyncPolicy::Always.label(), "always");
         assert_eq!(FsyncPolicy::default().label(), "interval");
+    }
+
+    #[test]
+    fn countdown_fault_skips_then_fires_once() {
+        let plan = FaultPlan::new();
+        assert!(!plan.take(FaultPoint::AfterAppend), "disarmed never fires");
+        plan.arm_after(FaultPoint::AfterAppend, 2);
+        assert!(plan.armed(FaultPoint::AfterAppend));
+        assert!(!plan.take(FaultPoint::AfterAppend), "hit 1 passes");
+        assert!(!plan.take(FaultPoint::AfterAppend), "hit 2 passes");
+        assert!(plan.take(FaultPoint::AfterAppend), "hit 3 fires");
+        assert!(!plan.armed(FaultPoint::AfterAppend), "firing disarms");
+        assert!(!plan.take(FaultPoint::AfterAppend));
+        plan.arm(FaultPoint::AllocAppend);
+        assert!(plan.take(FaultPoint::AllocAppend), "arm = fire on next hit");
+    }
+
+    #[test]
+    fn shard_layout_helpers_detect_both_layouts() {
+        let dir = TempDir::new("wal-layout");
+        assert!(!dir_has_segments(dir.path()));
+        assert!(!dir_has_shard_layout(dir.path()));
+        let shard_cfg = DurabilityConfig::new(dir.path()).for_shard(1);
+        assert_eq!(shard_cfg.dir, shard_journal_dir(dir.path(), 1));
+        drop(Journal::create(&shard_cfg).expect("create shard journal"));
+        assert!(dir_has_shard_layout(dir.path()));
+        assert!(dir_has_segments(dir.path()), "sharded layout counts");
+        assert_eq!(list_shard_dirs(dir.path()), vec![(1, shard_journal_dir(dir.path(), 1))]);
+        // Flat layout: only seg files, no alloc log / shard dirs.
+        let flat = TempDir::new("wal-layout-flat");
+        drop(Journal::create(&DurabilityConfig::new(flat.path())).expect("create"));
+        assert!(dir_has_segments(flat.path()));
+        assert!(!dir_has_shard_layout(flat.path()));
+    }
+
+    #[test]
+    fn alloc_log_roundtrips_and_truncates_torn_tail() {
+        let dir = TempDir::new("alloc-roundtrip");
+        let c = cfg(&dir, FsyncPolicy::Always);
+        let leases = [
+            AllocLease { lease: 1, first: 1, count: 4 },
+            AllocLease { lease: 2, first: 5, count: 2 },
+        ];
+        {
+            let mut a = AllocLog::create(&c).expect("create");
+            for l in &leases {
+                a.append(*l).expect("append");
+            }
+            assert_eq!(a.watermark_id(), 7);
+            assert_eq!(a.watermark_lease(), 2);
+        }
+        // Torn half-frame at the tail must truncate cleanly.
+        {
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(alloc_log_path(dir.path()))
+                .unwrap();
+            f.write_all(&[24, 0, 0, 0, 0xAA]).unwrap();
+        }
+        let (a2, back) = AllocLog::recover(&c).expect("recover");
+        assert_eq!(back, leases);
+        assert_eq!(a2.watermark_id(), 7);
+        assert_eq!(a2.watermark_lease(), 2);
+    }
+
+    #[test]
+    fn alloc_log_fault_tears_the_lease() {
+        let dir = TempDir::new("alloc-fault");
+        let c = faulty_durability(dir.path(), FsyncPolicy::Always, FaultPoint::AllocAppend);
+        let mut a = AllocLog::create(&c).expect("create");
+        a.append(AllocLease { lease: 1, first: 1, count: 3 })
+            .expect("first append survives");
+        let err = a
+            .append(AllocLease { lease: 2, first: 4, count: 3 })
+            .expect_err("armed fault fires");
+        assert!(matches!(err, JournalError::Fault("alloc-append")));
+        assert!(a.is_poisoned());
+        drop(a);
+        let (a2, back) = AllocLog::recover(&c).expect("recover");
+        assert_eq!(back, vec![AllocLease { lease: 1, first: 1, count: 3 }]);
+        assert_eq!(a2.watermark_id(), 4, "torn lease never raises the watermark");
+    }
+
+    #[test]
+    fn alloc_log_compact_preserves_watermarks() {
+        let dir = TempDir::new("alloc-compact");
+        let c = cfg(&dir, FsyncPolicy::Never);
+        let mut a = AllocLog::create(&c).expect("create");
+        for i in 0..50u64 {
+            a.append(AllocLease { lease: i + 1, first: i * 10 + 1, count: 10 })
+                .expect("append");
+        }
+        let before = fs::metadata(a.path()).unwrap().len();
+        a.compact().expect("compact");
+        let after = fs::metadata(a.path()).unwrap().len();
+        assert!(after < before, "compaction must shrink the log");
+        drop(a);
+        let (a2, back) = AllocLog::recover(&c).expect("recover");
+        assert_eq!(back.len(), 1, "one watermark record survives");
+        assert_eq!(a2.watermark_id(), 491);
+        assert_eq!(a2.watermark_lease(), 50);
+    }
+
+    #[test]
+    fn deferred_appends_batch_into_one_group_sync() {
+        let dir = TempDir::new("wal-group");
+        let c = cfg(&dir, FsyncPolicy::Always);
+        let mut j = Journal::create(&c).expect("create");
+        let s1 = j.append_deferred(&admit(1, 1, None)).expect("defer 1");
+        let s2 = j.append_deferred(&admit(2, 3, None)).expect("defer 2");
+        assert_eq!((s1, s2), (1, 2));
+        assert_eq!(j.synced_seq(), 0, "deferred appends do not sync");
+        assert!(j.durable_bytes() < j.segment_bytes());
+        let synced = j.group_sync().expect("group sync");
+        assert_eq!(synced, 2, "one fsync covers both writers");
+        assert_eq!(j.synced_seq(), j.append_seq());
+        assert_eq!(j.durable_bytes(), j.segment_bytes());
+        drop(j);
+        let (_, recovered) = Journal::recover(&c).expect("recover");
+        assert_eq!(recovered.tail.len(), 2);
+    }
+
+    #[test]
+    fn group_sync_fault_fires_after_durability() {
+        let dir = TempDir::new("wal-group-fault");
+        let c = faulty_durability(dir.path(), FsyncPolicy::Never, FaultPoint::AfterFsync);
+        let mut j = Journal::create(&c).expect("create");
+        j.append_deferred(&admit(1, 1, None)).expect("defer");
+        let err = j.group_sync().expect_err("armed fault fires");
+        assert!(matches!(err, JournalError::Fault("after-fsync")));
+        assert!(j.is_poisoned());
+        drop(j);
+        let (_, recovered) = Journal::recover(&c).expect("recover");
+        assert_eq!(recovered.tail.len(), 1, "record is durable but unacked");
     }
 }

@@ -618,6 +618,21 @@ impl ManifestRegistry {
         self.next_id = self.next_id.max(next);
     }
 
+    /// Restore a manifest only if no manifest with this id is present —
+    /// `true` if it was inserted. Sharded recovery uses this to merge
+    /// per-shard checkpoints and tail replays: the checkpoint with the
+    /// newest registry (highest `global_seq`) restores first and stays
+    /// authoritative; parts replayed from other shard journals only fill
+    /// ids it had not yet captured.
+    pub fn restore_if_absent(&mut self, id: u64, spans: Vec<ManifestSpan>) -> bool {
+        if self.manifests.contains_key(&id) {
+            self.next_id = self.next_id.max(id + 1);
+            return false;
+        }
+        self.restore(id, spans);
+        true
+    }
+
     fn insert(&mut self, id: u64, spans: Vec<ManifestSpan>) {
         debug_assert!(!spans.is_empty());
         let tag = spans.iter().find_map(|s| s.tag.clone());

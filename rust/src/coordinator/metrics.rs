@@ -94,6 +94,22 @@ pub struct DaemonMetrics {
     /// the pace duration. The in-flight guard means this also bounds
     /// concurrent paces to one.
     pub pace_offloads: AtomicU64,
+    /// Journal records appended (admissions, manifests, cancels,
+    /// checkpoints excluded). Zero unless the daemon runs with `--journal`.
+    pub journal_appends: AtomicU64,
+    /// Journal appends whose acks waited for a covering `fsync` — equal to
+    /// [`DaemonMetrics::journal_appends`] under `fsync=always`, zero under
+    /// `interval`/`never`. With group commit, many acks can ride one fsync;
+    /// `journal_group_commits` counts the fsyncs.
+    pub journal_synced_appends: AtomicU64,
+    /// Group-commit leader fsyncs. `journal_synced_appends /
+    /// journal_group_commits` is the realized batching factor.
+    pub journal_group_commits: AtomicU64,
+    /// Journal/allocator-log poison *transitions* (first I/O or fault
+    /// failure per journal; later rejections of an already-poisoned journal
+    /// do not count). Anything nonzero means some admissions were not
+    /// acked durably.
+    pub journal_poisoned: AtomicU64,
     /// Connections accepted by the server front door.
     pub connections_accepted: AtomicU64,
     /// `accept(2)` failures (other than would-block). The accept loop backs
@@ -228,7 +244,7 @@ impl DaemonMetrics {
         format!(
             "requests_ok={} requests_err={} jobs_submitted={} read_path={} write_locks={} \
              waits={}/{} conns={} accept_errs={} reactor_wakeups={} reactor_events={} \
-             pace_offloads={} \
+             pace_offloads={} journal={}/{}s/{}gc/{}poisoned \
              | request_wall: {} | sched_virtual: {} | lock_hold: {} | accept_to_first_byte: {}",
             self.requests_ok.load(Ordering::Relaxed),
             self.requests_err.load(Ordering::Relaxed),
@@ -242,6 +258,10 @@ impl DaemonMetrics {
             self.reactor_wakeups.load(Ordering::Relaxed),
             self.reactor_ready_events.load(Ordering::Relaxed),
             self.pace_offloads.load(Ordering::Relaxed),
+            self.journal_appends.load(Ordering::Relaxed),
+            self.journal_synced_appends.load(Ordering::Relaxed),
+            self.journal_group_commits.load(Ordering::Relaxed),
+            self.journal_poisoned.load(Ordering::Relaxed),
             self.request_latency().summary_ns(),
             self.sched_latency().summary_ns(),
             self.lock_hold().summary_ns(),

@@ -38,9 +38,13 @@
 //! * [`journal`] — the durability write-ahead log: length-prefixed
 //!   checksummed records in rotating segments, appended (and fsync'd per
 //!   the configured policy) *before* a submission is acked, bounded by
-//!   checkpoint-truncation.
+//!   checkpoint-truncation. Shard-aware: each scheduler shard owns a
+//!   journal under `shard-<i>/`, id-range leases go through the allocator
+//!   log (`alloc.log`), and `fsync=always` acks ride group commits.
 //! * [`recovery`] — crash recovery: replay the newest checkpoint plus the
-//!   journal tail into a fresh scheduler, with a typed `RecoveryReport`.
+//!   journal tail into a fresh scheduler (per shard in sharded layouts,
+//!   reconciling cross-shard manifests via lease completeness), with a
+//!   typed `RecoveryReport`.
 //! * [`client`] — the blocking typed client for the CLI, examples, and
 //!   tests (round trips and pipelined batches); `RESUME`-based re-attach
 //!   with retry/backoff.
@@ -66,14 +70,15 @@ pub mod threadpool;
 pub mod timerwheel;
 
 pub use api::{
-    ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, ProtocolVersion, Request,
-    Response, ResumeEntry, ResumeInfo, ResumeTarget, ShardKind, ShardStats, ShardUtil,
+    ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, JournalStats, ProtocolVersion,
+    Request, Response, ResumeEntry, ResumeInfo, ResumeTarget, ShardKind, ShardStats, ShardUtil,
     SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
 };
 pub use client::{Client, ClientError, RetryPolicy};
-pub use daemon::{Daemon, DaemonConfig};
+pub use daemon::{ConfigError, Daemon, DaemonConfig};
 pub use journal::{
-    DurabilityConfig, FaultPlan, FaultPoint, FsyncPolicy, Journal, JournalError,
+    AllocLease, AllocLog, DurabilityConfig, FaultPlan, FaultPoint, FsyncPolicy, Journal,
+    JournalError,
 };
 pub use manifest::{
     ChunkAssembler, ChunkOutcome, EntryAck, EntryReject, Manifest, ManifestAck,

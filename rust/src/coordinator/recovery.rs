@@ -17,12 +17,14 @@
 //!
 //! [`Admit`]: JournalRecord::Admit
 
+use super::daemon::ConfigError;
 use super::journal::{CheckpointState, JournalError, JournalRecord, RecoveredJournal};
 use super::manifest::{ManifestRegistry, ManifestSpan};
 use super::snapshot::JobView;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, PartitionId};
 use crate::job::{JobId, JobState};
 use crate::sched::{Scheduler, SchedulerConfig};
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
 /// Why recovery failed.
@@ -34,6 +36,9 @@ pub enum RecoveryError {
     /// Replay diverged from the journaled facts (e.g. the re-admitted id
     /// range differs from the acked one).
     Mismatch(String),
+    /// The boot configuration does not match the on-disk journal (wrong
+    /// shard layout, unreadable directory, …).
+    Config(ConfigError),
 }
 
 impl fmt::Display for RecoveryError {
@@ -41,6 +46,7 @@ impl fmt::Display for RecoveryError {
         match self {
             RecoveryError::Journal(e) => write!(f, "journal: {e}"),
             RecoveryError::Mismatch(what) => write!(f, "replay mismatch: {what}"),
+            RecoveryError::Config(e) => write!(f, "config: {e}"),
         }
     }
 }
@@ -50,6 +56,12 @@ impl std::error::Error for RecoveryError {}
 impl From<JournalError> for RecoveryError {
     fn from(e: JournalError) -> Self {
         RecoveryError::Journal(e)
+    }
+}
+
+impl From<ConfigError> for RecoveryError {
+    fn from(e: ConfigError) -> Self {
+        RecoveryError::Config(e)
     }
 }
 
@@ -82,8 +94,13 @@ pub struct RecoveryReport {
     pub manifests_restored: usize,
     /// Virtual time after replay (seconds).
     pub recovered_vtime_secs: f64,
-    /// The scheduler's next job id after replay.
+    /// The scheduler's next job id after replay (sharded: the global
+    /// allocator watermark).
     pub next_id: u64,
+    /// Sharded recovery only: cross-shard id-range leases dropped because
+    /// a touched shard had neither the tail part nor a checkpoint past the
+    /// lease — a torn, never-acked admission.
+    pub leases_skipped_torn: usize,
 }
 
 impl fmt::Display for RecoveryReport {
@@ -107,7 +124,11 @@ impl fmt::Display for RecoveryReport {
             self.torn_bytes,
             self.segments_discarded,
             self.next_id,
-        )
+        )?;
+        if self.leases_skipped_torn > 0 {
+            write!(f, " torn_leases={}", self.leases_skipped_torn)?;
+        }
+        Ok(())
     }
 }
 
@@ -218,6 +239,12 @@ pub fn rebuild(
                     "checkpoint record in the replay tail".into(),
                 ));
             }
+            // Tag-4 parts only ever land in per-shard journals.
+            JournalRecord::ShardAdmit { lease, .. } => {
+                return Err(RecoveryError::Mismatch(format!(
+                    "sharded admit part (lease {lease}) in a single-shard journal"
+                )));
+            }
         }
     }
 
@@ -232,6 +259,252 @@ pub fn rebuild(
     })
 }
 
+/// Everything [`rebuild_sharded`] hands back.
+pub struct RebuiltShardedState {
+    /// One replayed scheduler per shard-plan slice, same order.
+    pub scheds: Vec<Scheduler>,
+    /// The merged manifest registry (newest checkpoint + tail leases).
+    pub registry: ManifestRegistry,
+    /// Merged retired-history views.
+    pub history: Vec<JobView>,
+    /// The recovered global id-allocator watermark (the next id the
+    /// allocator must hand out).
+    pub next_id: u64,
+    /// Per-shard applied-lease watermark: `max(checkpoint.applied_lease,
+    /// highest lease replayed from that shard's tail)`. Torn leases are
+    /// excluded — counting a dropped lease as applied would falsely mark
+    /// it checkpoint-absorbed on the *next* recovery. The daemon seeds
+    /// each journal slot's counter from this, so fresh checkpoints carry
+    /// a truthful watermark.
+    pub applied_leases: Vec<u64>,
+    /// The typed report (aggregated across shards).
+    pub report: RecoveryReport,
+}
+
+/// Rebuild a sharded daemon from every shard's recovered journal plus the
+/// allocator-log id watermark. `plan` must be the writer's
+/// [`super::shards::shard_plan`] — the slices are what make per-shard id
+/// replay deterministic. `recovered[i]` is shard `i`'s journal.
+///
+/// Cross-shard admissions replay under the **lease completeness rule**: a
+/// lease is replayed iff every shard in its touched set either has its
+/// part in the tail or checkpointed past the lease (`applied_lease`).
+/// Anything else was torn mid-admission — the client was never acked (the
+/// ack waits for every append) — and every surviving part is dropped, so
+/// cross-shard manifests stay atomic: fully admitted or fully absent.
+pub fn rebuild_sharded(
+    plan: &[(PartitionId, &'static str, Cluster)],
+    sched_cfg: SchedulerConfig,
+    recovered: &[RecoveredJournal],
+    alloc_watermark_id: u64,
+) -> Result<RebuiltShardedState, RecoveryError> {
+    if plan.len() != recovered.len() {
+        return Err(RecoveryError::Mismatch(format!(
+            "shard plan has {} slices but {} shard journals were recovered",
+            plan.len(),
+            recovered.len()
+        )));
+    }
+    let nshards = plan.len();
+    let mut report = RecoveryReport {
+        segments_discarded: recovered.iter().map(|r| r.segments_discarded).sum(),
+        torn_bytes: recovered.iter().map(|r| r.torn_bytes).sum(),
+        records_replayed: recovered.iter().map(|r| r.tail.len()).sum(),
+        ..RecoveryReport::default()
+    };
+
+    // Pass 1: index every lease's surviving parts and declared shard set.
+    let mut lease_present: BTreeMap<u64, BTreeSet<u32>> = BTreeMap::new();
+    let mut lease_declared: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    for (idx, rec) in recovered.iter().enumerate() {
+        for r in &rec.tail {
+            if let JournalRecord::ShardAdmit { lease, shards, .. } = r {
+                for &s in shards {
+                    if s as usize >= nshards {
+                        return Err(RecoveryError::Mismatch(format!(
+                            "lease {lease} touches shard {s} but the plan has {nshards} shards"
+                        )));
+                    }
+                }
+                if let Some(prev) = lease_declared.get(lease) {
+                    if prev != shards {
+                        return Err(RecoveryError::Mismatch(format!(
+                            "lease {lease} parts disagree on the touched shard set"
+                        )));
+                    }
+                } else {
+                    lease_declared.insert(*lease, shards.clone());
+                }
+                lease_present.entry(*lease).or_default().insert(idx as u32);
+            }
+        }
+    }
+    let complete = |lease: u64| -> bool {
+        let declared = &lease_declared[&lease];
+        let present = &lease_present[&lease];
+        declared.iter().all(|&s| {
+            present.contains(&s) || recovered[s as usize].checkpoint.applied_lease >= lease
+        })
+    };
+    let torn: BTreeSet<u64> = lease_declared
+        .keys()
+        .filter(|&&l| !complete(l))
+        .copied()
+        .collect();
+    report.leases_skipped_torn = torn.len();
+
+    // Pass 2: registry + history from the checkpoint with the newest
+    // captured registry (highest global_seq — captures are sequenced under
+    // the registry lock, and the registry only grows), then fill ids the
+    // older checkpoints saw that it did not (only possible across the
+    // checkpoints' capture skew; `restore_if_absent` keeps the newest
+    // authoritative).
+    let newest = (0..nshards)
+        .max_by_key(|&i| recovered[i].checkpoint.global_seq)
+        .unwrap_or(0);
+    let mut registry = ManifestRegistry::new();
+    let mut history: Vec<JobView> = Vec::new();
+    {
+        let cp = &recovered[newest].checkpoint;
+        registry.force_next_id(cp.next_manifest_id);
+        for m in &cp.manifests {
+            registry.restore(m.id, m.spans.clone());
+        }
+        history.extend(cp.history.iter().cloned());
+    }
+    for (i, rec) in recovered.iter().enumerate() {
+        if i == newest {
+            continue;
+        }
+        let cp = &rec.checkpoint;
+        registry.force_next_id(cp.next_manifest_id);
+        for m in &cp.manifests {
+            registry.restore_if_absent(m.id, m.spans.clone());
+        }
+        let seen: BTreeSet<u64> = history.iter().map(|v| v.id).collect();
+        history.extend(cp.history.iter().filter(|v| !seen.contains(&v.id)).cloned());
+    }
+    report.history_restored = history.len();
+
+    // Pass 3: seed each shard's scheduler from its own checkpoint, then
+    // replay its tail, skipping parts of torn leases. Cross-shard manifest
+    // spans are accumulated from every replayed part and registered after
+    // the per-shard replays (a checkpoint that absorbed the lease already
+    // carries the manifest; `restore_if_absent` keeps it authoritative).
+    let mut scheds = Vec::with_capacity(nshards);
+    let mut applied_leases = Vec::with_capacity(nshards);
+    let mut tail_manifests: BTreeMap<u64, Vec<ManifestSpan>> = BTreeMap::new();
+    let mut max_run_end = 0u64;
+    for (idx, ((_, _, slice), rec)) in plan.iter().zip(recovered).enumerate() {
+        let mut sched = Scheduler::new(slice.clone(), sched_cfg.clone());
+        let mut applied = rec.checkpoint.applied_lease;
+        restore_checkpoint_jobs(&mut sched, &rec.checkpoint, &mut report);
+        for r in &rec.tail {
+            match r {
+                JournalRecord::ShardAdmit {
+                    vtime,
+                    lease,
+                    manifest,
+                    runs,
+                    ..
+                } => {
+                    if torn.contains(lease) {
+                        continue;
+                    }
+                    applied = applied.max(*lease);
+                    report.admits_replayed += 1;
+                    if *vtime > sched.now() {
+                        sched.run_until(*vtime);
+                    }
+                    // The plain-`SUBMIT` shape replays as a client-loop
+                    // burst, same as the single-shard path.
+                    let client_loop_burst = manifest.is_none()
+                        && runs.len() == 1
+                        && runs[0].entries.len() == 1
+                        && runs[0].entries[0].entry.count == 1;
+                    for run in runs {
+                        sched.force_next_id(run.first_id);
+                        let mut specs = Vec::new();
+                        let mut spans: Vec<ManifestSpan> = Vec::with_capacity(run.entries.len());
+                        for ae in &run.entries {
+                            let batch = ae.entry.materialize();
+                            spans.push(ManifestSpan {
+                                index: ae.index,
+                                first: run.first_id + specs.len() as u64,
+                                count: batch.len() as u64,
+                                tag: ae.entry.tag.clone(),
+                            });
+                            specs.extend(batch);
+                        }
+                        let total = specs.len() as u64;
+                        let ids = if client_loop_burst {
+                            sched.submit_burst(specs)
+                        } else {
+                            sched.submit_batch(specs)
+                        };
+                        let got_first = ids.first().map(|j| j.0).unwrap_or(0);
+                        if ids.len() as u64 != total
+                            || (!ids.is_empty() && got_first != run.first_id)
+                        {
+                            return Err(RecoveryError::Mismatch(format!(
+                                "shard {idx} replay of lease {lease} assigned ids \
+                                 {got_first}..+{} but the journal acked {}..+{total}",
+                                ids.len(),
+                                run.first_id
+                            )));
+                        }
+                        max_run_end = max_run_end.max(run.first_id + total);
+                        if let Some(mid) = manifest {
+                            tail_manifests.entry(*mid).or_default().extend(spans);
+                        }
+                    }
+                }
+                JournalRecord::Cancel { vtime, id } => {
+                    report.cancels_replayed += 1;
+                    if *vtime > sched.now() {
+                        sched.run_until(*vtime);
+                    }
+                    let _ = sched.cancel(JobId(*id));
+                }
+                JournalRecord::Checkpoint(_) => {
+                    return Err(RecoveryError::Mismatch(format!(
+                        "checkpoint record in shard {idx}'s replay tail"
+                    )));
+                }
+                // Tag-1 records never land in a sharded journal.
+                JournalRecord::Admit { first_id, .. } => {
+                    return Err(RecoveryError::Mismatch(format!(
+                        "single-shard admit (first_id {first_id}) in shard {idx}'s journal"
+                    )));
+                }
+            }
+        }
+        scheds.push(sched);
+        applied_leases.push(applied);
+    }
+    for (mid, mut spans) in tail_manifests {
+        spans.sort_by_key(|s| s.index);
+        registry.restore_if_absent(mid, spans);
+    }
+
+    let cp_next_id = recovered.iter().map(|r| r.checkpoint.next_id).max().unwrap_or(1);
+    let next_id = alloc_watermark_id.max(cp_next_id).max(max_run_end).max(1);
+    report.next_id = next_id;
+    report.recovered_vtime_secs = scheds
+        .iter()
+        .map(|s| s.now().as_secs_f64())
+        .fold(0.0, f64::max);
+    report.manifests_restored = registry.len();
+    Ok(RebuiltShardedState {
+        scheds,
+        registry,
+        history,
+        next_id,
+        applied_leases,
+        report,
+    })
+}
+
 /// Seed the fresh scheduler and registry from the checkpoint.
 fn restore_checkpoint(
     sched: &mut Scheduler,
@@ -239,13 +512,20 @@ fn restore_checkpoint(
     cp: &CheckpointState,
     report: &mut RecoveryReport,
 ) {
-    sched.force_next_id(cp.next_id);
     registry.force_next_id(cp.next_manifest_id);
     for m in &cp.manifests {
         registry.restore(m.id, m.spans.clone());
     }
-    report.jobs_restored = cp.jobs.len();
     report.history_restored = cp.history.len();
+    restore_checkpoint_jobs(sched, cp, report);
+}
+
+/// The job half of a checkpoint restore (sharded recovery seeds each
+/// shard's scheduler from its own checkpoint but merges registry/history
+/// separately).
+fn restore_checkpoint_jobs(sched: &mut Scheduler, cp: &CheckpointState, report: &mut RecoveryReport) {
+    sched.force_next_id(cp.next_id);
+    report.jobs_restored += cp.jobs.len();
     for job in &cp.jobs {
         match job.state {
             JobState::Pending => report.restored_pending += 1,
@@ -353,6 +633,8 @@ mod tests {
             }],
             history: Vec::new(),
             manifests: Vec::new(),
+            global_seq: 0,
+            applied_lease: 0,
         };
         let rb = rebuild(topology::tx2500(), sched_cfg(), &recovered(cp, Vec::new())).unwrap();
         assert_eq!(rb.report.restored_running, 1);
@@ -490,6 +772,7 @@ mod tests {
             restored_running: 1,
             admits_replayed: 2,
             torn_bytes: 17,
+            leases_skipped_torn: 1,
             ..RecoveryReport::default()
         };
         let s = report.to_string();
@@ -497,5 +780,170 @@ mod tests {
         assert!(s.contains("running=1"), "{s}");
         assert!(s.contains("admits=2"), "{s}");
         assert!(s.contains("torn_bytes=17"), "{s}");
+        assert!(s.contains("torn_leases=1"), "{s}");
+    }
+
+    // ----------------------------------------------------------- sharded
+
+    use crate::coordinator::journal::AdmitRun;
+    use crate::coordinator::manifest::RegisteredManifest;
+    use crate::coordinator::shards::shard_plan;
+
+    fn dual_plan() -> Vec<(PartitionId, &'static str, Cluster)> {
+        shard_plan(&topology::tx2500(), &sched_cfg(), 2)
+    }
+
+    /// One cross-shard lease: 2 interactive jobs on shard 0, 1 spot job on
+    /// shard 1, manifest id 1.
+    fn lease_parts() -> (JournalRecord, JournalRecord) {
+        let e0 = ManifestEntry::new(QosClass::Normal, JobType::Array, 8, 1)
+            .with_count(2)
+            .with_tag("xshard");
+        let e1 = ManifestEntry::new(QosClass::Spot, JobType::Array, 8, 9).with_tag("xshard");
+        let header = |runs| JournalRecord::ShardAdmit {
+            vtime: SimTime::from_secs(1),
+            lease: 1,
+            lease_first: 1,
+            lease_total: 3,
+            shards: vec![0, 1],
+            manifest: Some(1),
+            runs,
+        };
+        (
+            header(vec![AdmitRun {
+                first_id: 1,
+                entries: vec![AdmitEntry { index: 0, entry: e0 }],
+            }]),
+            header(vec![AdmitRun {
+                first_id: 3,
+                entries: vec![AdmitEntry { index: 1, entry: e1 }],
+            }]),
+        )
+    }
+
+    #[test]
+    fn sharded_complete_lease_replays_across_shards() {
+        let (part0, part1) = lease_parts();
+        let rec = vec![
+            recovered(CheckpointState::genesis(), vec![part0]),
+            recovered(CheckpointState::genesis(), vec![part1]),
+        ];
+        let rb = rebuild_sharded(&dual_plan(), sched_cfg(), &rec, 4).unwrap();
+        assert_eq!(rb.report.admits_replayed, 2, "both parts replay");
+        assert_eq!(rb.report.leases_skipped_torn, 0);
+        let mut ids0: Vec<u64> = rb.scheds[0].jobs().map(|j| j.id.0).collect();
+        let mut ids1: Vec<u64> = rb.scheds[1].jobs().map(|j| j.id.0).collect();
+        ids0.sort_unstable();
+        ids1.sort_unstable();
+        assert_eq!(ids0, vec![1, 2], "shard 0 reproduces its acked ids");
+        assert_eq!(ids1, vec![3], "shard 1 reproduces its acked id");
+        assert_eq!(rb.next_id, 4, "allocator resumes past the lease");
+        let m = rb.registry.get(1).expect("cross-shard manifest restored");
+        assert_eq!(m.spans.len(), 2, "spans from both shards' parts");
+        assert_eq!((m.spans[0].index, m.spans[0].first, m.spans[0].count), (0, 1, 2));
+        assert_eq!((m.spans[1].index, m.spans[1].first, m.spans[1].count), (1, 3, 1));
+        assert!(rb.registry.by_tag("xshard").is_some());
+    }
+
+    #[test]
+    fn torn_lease_drops_every_part() {
+        // Shard 0's part survived; shard 1 crashed before its append and
+        // never checkpointed past the lease. The admission was never acked
+        // (the ack waits for every shard's append), so recovery must drop
+        // shard 0's part too — cross-shard manifests are atomic.
+        let (part0, _) = lease_parts();
+        let rec = vec![
+            recovered(CheckpointState::genesis(), vec![part0]),
+            recovered(CheckpointState::genesis(), Vec::new()),
+        ];
+        let rb = rebuild_sharded(&dual_plan(), sched_cfg(), &rec, 4).unwrap();
+        assert_eq!(rb.report.leases_skipped_torn, 1);
+        assert_eq!(rb.report.admits_replayed, 0);
+        assert_eq!(rb.scheds[0].jobs().count(), 0, "dropped whole");
+        assert_eq!(rb.scheds[1].jobs().count(), 0);
+        assert!(rb.registry.get(1).is_none(), "no partial manifest");
+        assert_eq!(rb.next_id, 4, "the leased ids stay burned (watermark)");
+    }
+
+    #[test]
+    fn checkpoint_absorbed_part_completes_the_lease() {
+        // Shard 1 checkpointed *after* applying its part (applied_lease =
+        // 1) and the rotation truncated the part from its tail; shard 0
+        // still has its part in the tail. The lease is complete: shard 0
+        // replays, shard 1 restores from its checkpoint.
+        let (part0, _) = lease_parts();
+        let spot_cp = CheckpointState {
+            vtime: SimTime::from_secs(2),
+            next_id: 4,
+            next_manifest_id: 2,
+            jobs: vec![CheckpointJob {
+                id: 3,
+                state: JobState::Pending,
+                submit_time: SimTime::from_secs(1),
+                requeue_count: 0,
+                spec: JobSpec::spot(UserId(9), JobType::Array, 8),
+                log: Vec::new(),
+            }],
+            history: Vec::new(),
+            manifests: vec![RegisteredManifest {
+                id: 1,
+                spans: vec![
+                    ManifestSpan {
+                        index: 0,
+                        first: 1,
+                        count: 2,
+                        tag: Some(std::sync::Arc::from("xshard")),
+                    },
+                    ManifestSpan {
+                        index: 1,
+                        first: 3,
+                        count: 1,
+                        tag: Some(std::sync::Arc::from("xshard")),
+                    },
+                ],
+                tag: Some(std::sync::Arc::from("xshard")),
+            }],
+            global_seq: 5,
+            applied_lease: 1,
+        };
+        let rec = vec![
+            recovered(CheckpointState::genesis(), vec![part0]),
+            recovered(spot_cp, Vec::new()),
+        ];
+        let rb = rebuild_sharded(&dual_plan(), sched_cfg(), &rec, 4).unwrap();
+        assert_eq!(rb.report.leases_skipped_torn, 0, "checkpoint absorbs the part");
+        assert_eq!(rb.report.admits_replayed, 1, "only shard 0 replays from tail");
+        let mut ids0: Vec<u64> = rb.scheds[0].jobs().map(|j| j.id.0).collect();
+        let ids1: Vec<u64> = rb.scheds[1].jobs().map(|j| j.id.0).collect();
+        ids0.sort_unstable();
+        assert_eq!(ids0, vec![1, 2]);
+        assert_eq!(ids1, vec![3], "restored from the checkpoint, not the tail");
+        let m = rb.registry.get(1).expect("manifest from the newest checkpoint");
+        assert_eq!(m.spans.len(), 2, "checkpoint registry is authoritative");
+        assert_eq!(rb.next_id, 4);
+    }
+
+    #[test]
+    fn single_shard_record_in_sharded_journal_is_mismatch() {
+        let entry = ManifestEntry::new(QosClass::Normal, JobType::Array, 8, 1);
+        let rec = vec![
+            recovered(
+                CheckpointState::genesis(),
+                vec![JournalRecord::Admit {
+                    vtime: SimTime::ZERO,
+                    first_id: 1,
+                    total_jobs: 1,
+                    manifest: None,
+                    entries: vec![AdmitEntry { index: 0, entry }],
+                }],
+            ),
+            recovered(CheckpointState::genesis(), Vec::new()),
+        ];
+        match rebuild_sharded(&dual_plan(), sched_cfg(), &rec, 1) {
+            Err(RecoveryError::Mismatch(msg)) => {
+                assert!(msg.contains("single-shard admit"), "{msg}")
+            }
+            other => panic!("{:?}", other.map(|r| r.report)),
+        }
     }
 }

@@ -35,10 +35,12 @@
 //!   direction calls out, and why `shard_count = 1` (exactly the
 //!   unsharded daemon, byte-for-byte) remains the default.
 //!
-//! Durability is a single-shard feature: the write-ahead journal's
-//! id-determinism contract assumes one scheduler, so
-//! [`SchedShards::sharded`] is rejected by the daemon when a journal is
-//! configured.
+//! Durability composes with sharding (PR 8): each shard owns a journal
+//! under `shard-<i>/` and the global id allocator persists id-range
+//! leases in an allocator log, so recovery can rebuild the same shard
+//! layout ([`shard_plan`] is deterministic in `(cluster, cfg, count)`),
+//! replay every shard journal, and re-seat the global allocator at the
+//! lease watermark ([`SchedShards::sharded_from`]).
 
 use super::snapshot::SchedSnapshot;
 use crate::cluster::{Cluster, PartitionId, PartitionLayout};
@@ -89,6 +91,37 @@ pub struct SchedShardStat {
     pub dispatches: u64,
 }
 
+/// The deterministic shard layout for `(cluster, cfg, count)`: which
+/// partition each shard owns and the node slice it gets. One entry (the
+/// whole cluster) when sharding degenerates — single partition,
+/// `count <= 1`, or fewer nodes than shards. Both [`SchedShards::sharded`]
+/// and crash recovery build from this, so a recovered daemon reproduces
+/// the writer's slices exactly (the id-determinism contract per shard).
+pub fn shard_plan(
+    cluster: &Cluster,
+    cfg: &SchedulerConfig,
+    count: usize,
+) -> Vec<(PartitionId, &'static str, Cluster)> {
+    let partitions = cfg.layout.partitions();
+    let want = count.min(partitions.len());
+    let nodes = cluster.node_count();
+    if want <= 1 || (nodes as usize) < want {
+        return vec![(PartitionId(0), partitions[0].name, cluster.clone())];
+    }
+    let cores = cluster.cores_per_node();
+    let base = nodes / want as u32;
+    let rem = (nodes % want as u32) as usize;
+    partitions
+        .into_iter()
+        .take(want)
+        .enumerate()
+        .map(|(i, p)| {
+            let n = base + u32::from(i < rem);
+            (p.id, p.name, Cluster::homogeneous(n, cores))
+        })
+        .collect()
+}
+
 /// The shard set. `shard_count = 1` is the unsharded daemon: one scheduler
 /// over the whole cluster, ids allocated by the scheduler itself, and the
 /// daemon publishes the shard-0 snapshot directly (no merge, no epoch).
@@ -126,23 +159,31 @@ impl SchedShards {
     /// give every shard at least one node. `count` beyond the partition
     /// count is clamped — the partition model is the sharding model.
     pub fn sharded(cluster: Cluster, cfg: SchedulerConfig, count: usize) -> Self {
-        let partitions = cfg.layout.partitions();
-        let want = count.min(partitions.len());
-        let nodes = cluster.node_count();
-        if want <= 1 || (nodes as usize) < want {
+        let plan = shard_plan(&cluster, &cfg, count);
+        if plan.len() <= 1 {
             return Self::single(cluster, cfg);
         }
         let layout = cfg.layout;
-        let cores = cluster.cores_per_node();
-        let base = nodes / want as u32;
-        let rem = (nodes % want as u32) as usize;
-        let mut scheds = Vec::with_capacity(want);
-        for (i, p) in partitions.into_iter().take(want).enumerate() {
-            let n = base + u32::from(i < rem);
-            let slice = Cluster::homogeneous(n, cores);
-            scheds.push((p.id, p.name, Scheduler::new(slice, cfg.clone())));
-        }
+        let scheds = plan
+            .into_iter()
+            .map(|(id, name, slice)| (id, name, Scheduler::new(slice, cfg.clone())))
+            .collect();
         Self::from_scheds(scheds, layout)
+    }
+
+    /// Rebuild a sharded set from recovery: pre-replayed schedulers (one
+    /// per [`shard_plan`] slice, same order) plus the recovered global id
+    /// watermark. The caller guarantees `scheds` matches the plan the
+    /// writer ran with — [`shard_plan`] is deterministic in
+    /// `(cluster, cfg, count)`, which is how the guarantee is met.
+    pub fn sharded_from(
+        scheds: Vec<(PartitionId, &'static str, Scheduler)>,
+        layout: PartitionLayout,
+        next_id: u64,
+    ) -> Self {
+        let s = Self::from_scheds(scheds, layout);
+        s.next_id.store(next_id.max(1), Ordering::SeqCst);
+        s
     }
 
     fn from_scheds(
@@ -394,6 +435,31 @@ mod tests {
             topology::tx2500().total_cores(),
             "merged occupancy covers the whole cluster"
         );
+    }
+
+    #[test]
+    fn shard_plan_is_deterministic_and_feeds_recovery() {
+        let full = topology::tx2500();
+        let p1 = shard_plan(&full, &cfg(), 2);
+        let p2 = shard_plan(&full, &cfg(), 2);
+        assert_eq!(p1.len(), 2);
+        for ((id_a, name_a, c_a), (id_b, name_b, c_b)) in p1.iter().zip(&p2) {
+            assert_eq!(id_a, id_b);
+            assert_eq!(name_a, name_b);
+            assert_eq!(c_a.node_count(), c_b.node_count(), "slices reproduce");
+        }
+        // Degenerate plans collapse to one whole-cluster entry.
+        assert_eq!(shard_plan(&Cluster::homogeneous(1, 32), &cfg(), 2).len(), 1);
+        // The recovery constructor re-seats the global allocator.
+        let layout = cfg().layout;
+        let scheds = p1
+            .into_iter()
+            .map(|(id, name, slice)| (id, name, Scheduler::new(slice, cfg())))
+            .collect();
+        let s = SchedShards::sharded_from(scheds, layout, 57);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.next_id(), 57);
+        assert_eq!(s.allocate_ids(3), 57, "allocation continues at the watermark");
     }
 
     #[test]

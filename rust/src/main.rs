@@ -152,7 +152,7 @@ fn cmd_daemon(args: &[String]) -> i32 {
         .opt("addr", "bind address", Some("127.0.0.1:7461"))
         .opt("workers", "connection worker threads", Some("4"))
         .opt("shards", "reactor shards (SO_REUSEPORT listeners; Linux)", Some("1"))
-        .opt("sched-shards", "partition scheduler shards (incompatible with --journal)", Some("1"))
+        .opt("sched-shards", "partition scheduler shards (composes with --journal: one journal per shard)", Some("1"))
         .opt("speedup", "virtual seconds per wall second", Some("60"))
         .opt("reserve", "idle-node reserve (cron agent)", Some("5"))
         .opt("topology", "tx2500 | txgreen | txgreen-full", Some("tx2500"))
@@ -160,6 +160,7 @@ fn cmd_daemon(args: &[String]) -> i32 {
         .opt("journal", "write-ahead journal directory (enables durability)", None)
         .opt("fsync", "journal sync policy: always | interval[:<n>] | never", Some("interval"))
         .opt("checkpoint-every", "journal records between checkpoints", Some("4096"))
+        .switch("no-group-commit", "fsync=always: sync each append alone (no batched fsync)")
         .switch("xla", "use the XLA-compiled priority scorer (needs artifacts)");
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -235,18 +236,12 @@ fn cmd_daemon(args: &[String]) -> i32 {
             Some(
                 DurabilityConfig::new(dir)
                     .with_fsync(fsync)
-                    .with_checkpoint_every(every),
+                    .with_checkpoint_every(every)
+                    .with_group_commit(!parsed.flag("no-group-commit")),
             )
         }
         None => None,
     };
-    if durability.is_some() && sched_shards > 1 {
-        eprintln!(
-            "--sched-shards > 1 is incompatible with --journal \
-             (durability requires a single scheduler shard)"
-        );
-        return 2;
-    }
     let journal_note = durability
         .as_ref()
         .map(|d| format!(", journal {} fsync={}", d.dir.display(), d.fsync.label()))
@@ -275,7 +270,15 @@ fn cmd_daemon(args: &[String]) -> i32 {
             }
         }
     } else {
-        Daemon::new(cluster, sched_cfg, cfg)
+        // try_new surfaces boot-config problems (journal dir already holds
+        // state, unusable dir) as a typed error instead of a panic.
+        match Daemon::try_new(cluster, sched_cfg, cfg) {
+            Ok(daemon) => daemon,
+            Err(e) => {
+                eprintln!("bad daemon config: {e}");
+                return 2;
+            }
+        }
     };
     let pacer = daemon.spawn_pacer();
     let server = match Server::bind_sharded(Arc::clone(&daemon), &addr, workers, shards.max(1)) {
@@ -654,6 +657,15 @@ fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
             )
         })
         .unwrap_or_default();
+    let journal = s
+        .journal
+        .map(|j| {
+            format!(
+                "\njournal: appends={} synced={} group_commits={} poisoned={}",
+                j.appends, j.synced_appends, j.group_commits, j.poisoned,
+            )
+        })
+        .unwrap_or_default();
     let shards = if s.shards.is_empty() {
         String::new()
     } else {
@@ -678,7 +690,7 @@ fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
         "virtual_now={:.1}s dispatches={} preemptions={} requeues={} cron_passes={} \
          main_passes={} backfill_passes={} triggered_passes={} scorer={}\n\
          requests: ok={} err={} jobs_submitted={} | sched latency: n={} p50={:.3}s\n\
-         commands: {commands}{contention}{shards}",
+         commands: {commands}{contention}{journal}{shards}",
         s.virtual_now_secs,
         s.dispatches,
         s.preemptions,

@@ -1,12 +1,18 @@
 //! Crash-injection harness for the durability subsystem.
 //!
 //! Real kill-the-process tests are slow and nondeterministic; instead the
-//! journal exposes one-shot [`FaultPoint`] arms
-//! ([`crate::coordinator::FaultPlan`]) that fail the operation *and* leave
-//! the on-disk state exactly as a crash at that point would (the pre-fsync
+//! journal exposes countdown [`FaultPoint`] arms
+//! ([`crate::coordinator::FaultPlan`]): arm a point to fire on its next
+//! hit, or `arm_after(point, n)` to let `n` hits pass first — which is how
+//! a test crashes *between* shard A's and shard B's append of one
+//! cross-shard manifest. Firing fails the operation *and* leaves the
+//! on-disk state exactly as a crash at that point would (the pre-fsync
 //! point truncates unsynced bytes, the mid-checkpoint point leaves a torn
-//! new segment next to the intact old ones). A test then simply drops the
-//! "crashed" daemon and calls `Daemon::recover` on the same directory —
+//! new segment next to the intact old ones, the allocator point tears
+//! `alloc.log`). A sharded daemon clones the plan into every shard's
+//! journal ([`DurabilityConfig::for_shard`] shares the arms), so one
+//! countdown spans all shards in admission order. A test then simply drops
+//! the "crashed" daemon and calls `Daemon::recover` on the same directory —
 //! same coverage, milliseconds per case.
 
 use crate::coordinator::{DurabilityConfig, FaultPoint, FsyncPolicy};

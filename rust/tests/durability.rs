@@ -1,28 +1,39 @@
 //! Durability end to end: the crash-point matrix over the fault-injection
-//! harness, torn-tail healing, and the kill → recover → `RESUME` workflow
-//! over real TCP.
+//! harness (at **both** shard counts), torn-tail healing, the torn
+//! allocator log, the cross-shard mid-manifest crash, a truncation fuzz
+//! sweep over the recovery scanner, and the kill → recover → `RESUME`
+//! workflow over real TCP.
 //!
 //! The contract under test (see PROTOCOL.md §Durability):
 //!
 //! * **No acked loss** — a submission the client saw an `OK` for exists
-//!   after recovery, whatever the crash point.
+//!   after recovery, whatever the crash point or shard count.
 //! * **No unacked resurrection under `fsync=always`** — a submission that
-//!   failed before its record was durable is *gone* after recovery.
+//!   failed before its record was durable is *gone* after recovery. In
+//!   sharded layouts this extends to whole id-range leases: a cross-shard
+//!   manifest whose parts did not all land is dropped atomically.
 //! * **At-least-once edge** — a crash after the fsync but before the ack
 //!   resurrects work the client never saw acked; `RESUME` is the
 //!   idempotency tool.
-//! * A torn final record (crash mid-write) truncates; it is never fatal.
+//! * A torn final record (crash mid-write) truncates; it is never fatal —
+//!   at any byte boundary, in any shard's journal, and in `alloc.log`.
 
 use spotcloud::cluster::{topology, PartitionLayout};
+use spotcloud::coordinator::journal::JournalRecord;
 use spotcloud::coordinator::{
-    Client, Daemon, DaemonConfig, DurabilityConfig, ErrorCode, FaultPoint, FsyncPolicy,
+    Client, Daemon, DaemonConfig, DurabilityConfig, ErrorCode, FaultPoint, FsyncPolicy, Journal,
     ManifestBuilder, Request, Response, RetryPolicy, Server, SqueueFilter, SubmitSpec,
 };
 use spotcloud::job::{JobType, QosClass};
 use spotcloud::sched::SchedulerConfig;
 use spotcloud::sim::SchedCosts;
 use spotcloud::testkit::crash::TempDir;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// The shard counts every crash-matrix case runs at: the flat layout and
+/// the smallest genuinely sharded one (per-shard journals + alloc.log).
+const SHARD_COUNTS: [usize; 2] = [1, 2];
 
 fn sched_cfg() -> SchedulerConfig {
     SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
@@ -31,11 +42,12 @@ fn sched_cfg() -> SchedulerConfig {
 /// A journaling daemon whose virtual clock is frozen (`speedup: 0`):
 /// admitted jobs stay pending forever, so "what survived the crash" is
 /// exactly "what was admitted".
-fn frozen_cfg(dcfg: DurabilityConfig) -> DaemonConfig {
+fn frozen_cfg(dcfg: DurabilityConfig, shards: usize) -> DaemonConfig {
     DaemonConfig {
         speedup: 0.0,
         pacer_tick_ms: 1,
         durability: Some(dcfg),
+        shard_count: shards,
         ..DaemonConfig::default()
     }
 }
@@ -62,120 +74,281 @@ fn job_count(d: &Daemon) -> usize {
     }
 }
 
+/// Every `*.wal` segment under `root`, shard-layout-aware (flat layouts
+/// keep segments in `root`, sharded ones under `root/shard-<i>/`).
+fn all_segments(root: &Path) -> Vec<PathBuf> {
+    let mut segs = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let Ok(rd) = std::fs::read_dir(&dir) else {
+            continue;
+        };
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "wal") {
+                segs.push(p);
+            }
+        }
+    }
+    segs
+}
+
 #[test]
 fn crash_before_fsync_loses_only_the_unacked_submission() {
-    let tmp = TempDir::new("spotcloud-dur-afterappend");
-    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
-    let faults = dcfg.faults.clone();
-    let cfg = frozen_cfg(dcfg);
-    let acked;
-    {
-        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
-        acked = submit_spot(&d, 8).expect("pre-crash submission acks");
-        // Crash after the record is written but before the fsync: the
-        // record is lost AND the client was never acked.
-        faults.arm(FaultPoint::AfterAppend);
-        let err = submit_spot(&d, 16).expect_err("faulted submission must not ack");
-        assert_eq!(err, ErrorCode::Internal);
-        d.shutdown();
-    }
-    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
-    // Exactly the acked admission replays — nothing resurrected.
-    assert_eq!(report.admits_replayed, 1, "{report}");
-    assert_eq!(job_count(&d), 1);
-    match d.handle(Request::Sjob(acked)) {
-        Response::Job(_) => {}
-        other => panic!("acked job lost across recovery: {other:?}"),
+    for shards in SHARD_COUNTS {
+        let tmp = TempDir::new("spotcloud-dur-afterappend");
+        let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+        let faults = dcfg.faults.clone();
+        let cfg = frozen_cfg(dcfg, shards);
+        let acked;
+        {
+            let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+            acked = submit_spot(&d, 8).expect("pre-crash submission acks");
+            // Crash after the record is written but before the fsync: the
+            // record is lost AND the client was never acked.
+            faults.arm(FaultPoint::AfterAppend);
+            let err = submit_spot(&d, 16).expect_err("faulted submission must not ack");
+            assert_eq!(err, ErrorCode::Internal, "shards={shards}");
+            d.shutdown();
+        }
+        let (d, report) =
+            Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+        // Exactly the acked admission replays — nothing resurrected.
+        assert_eq!(report.admits_replayed, 1, "shards={shards}: {report}");
+        assert_eq!(job_count(&d), 1, "shards={shards}");
+        match d.handle(Request::Sjob(acked)) {
+            Response::Job(_) => {}
+            other => panic!("shards={shards}: acked job lost across recovery: {other:?}"),
+        }
     }
 }
 
 #[test]
 fn crash_after_fsync_resurrects_the_durable_unacked_submission() {
-    let tmp = TempDir::new("spotcloud-dur-afterfsync");
-    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
-    let faults = dcfg.faults.clone();
-    let cfg = frozen_cfg(dcfg);
-    {
-        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
-        submit_spot(&d, 8).expect("pre-crash submission acks");
-        // Crash after the record is durable but before the ack: the
-        // documented at-least-once edge.
-        faults.arm(FaultPoint::AfterFsync);
-        let err = submit_spot(&d, 16).expect_err("the crash swallowed the ack");
-        assert_eq!(err, ErrorCode::Internal);
-        d.shutdown();
+    for shards in SHARD_COUNTS {
+        let tmp = TempDir::new("spotcloud-dur-afterfsync");
+        let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+        let faults = dcfg.faults.clone();
+        let cfg = frozen_cfg(dcfg, shards);
+        {
+            let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+            submit_spot(&d, 8).expect("pre-crash submission acks");
+            // Crash after the record is durable but before the ack: the
+            // documented at-least-once edge.
+            faults.arm(FaultPoint::AfterFsync);
+            let err = submit_spot(&d, 16).expect_err("the crash swallowed the ack");
+            assert_eq!(err, ErrorCode::Internal, "shards={shards}");
+            d.shutdown();
+        }
+        let (d, report) =
+            Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+        // Both records were durable, so both replay — the unacked one
+        // resurrects (clients dedupe via RESUME, not via the journal).
+        assert_eq!(report.admits_replayed, 2, "shards={shards}: {report}");
+        assert_eq!(job_count(&d), 2, "shards={shards}");
     }
-    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
-    // Both records were durable, so both replay — the unacked one
-    // resurrects (clients dedupe via RESUME, not via the journal).
-    assert_eq!(report.admits_replayed, 2, "{report}");
-    assert_eq!(job_count(&d), 2);
 }
 
 #[test]
 fn crash_mid_checkpoint_falls_back_to_the_previous_segments() {
-    let tmp = TempDir::new("spotcloud-dur-midckpt");
-    let dcfg = DurabilityConfig::new(tmp.path())
-        .with_fsync(FsyncPolicy::Always)
-        .with_checkpoint_every(2);
-    let faults = dcfg.faults.clone();
-    let cfg = frozen_cfg(dcfg);
-    let (a, b);
-    {
-        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
-        a = submit_spot(&d, 8).expect("first ack");
-        // The second admission trips the checkpoint stride; the rotation
-        // tears mid-write. The admission itself was already durable and
-        // acked in the old segment.
-        faults.arm(FaultPoint::MidCheckpoint);
-        b = submit_spot(&d, 16).expect("second ack (checkpoint failure is not an admission failure)");
-        // The poisoned journal degrades the daemon to read-only.
-        assert_eq!(submit_spot(&d, 4), Err(ErrorCode::Internal));
-        d.shutdown();
-    }
-    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
-    assert!(
-        report.segments_discarded >= 1,
-        "the torn rotation segment must be discarded: {report}"
-    );
-    assert_eq!(report.admits_replayed, 2, "{report}");
-    assert_eq!(job_count(&d), 2);
-    for id in [a, b] {
-        match d.handle(Request::Sjob(id)) {
-            Response::Job(_) => {}
-            other => panic!("acked job {id} lost across recovery: {other:?}"),
+    for shards in SHARD_COUNTS {
+        let tmp = TempDir::new("spotcloud-dur-midckpt");
+        let dcfg = DurabilityConfig::new(tmp.path())
+            .with_fsync(FsyncPolicy::Always)
+            .with_checkpoint_every(2);
+        let faults = dcfg.faults.clone();
+        let cfg = frozen_cfg(dcfg, shards);
+        let (a, b);
+        {
+            let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+            a = submit_spot(&d, 8).expect("first ack");
+            // The second admission trips the checkpoint stride; the rotation
+            // tears mid-write. The admission itself was already durable and
+            // acked in the old segment (group commit syncs the deferred
+            // tail before any rotation).
+            faults.arm(FaultPoint::MidCheckpoint);
+            b = submit_spot(&d, 16)
+                .expect("second ack (checkpoint failure is not an admission failure)");
+            // The poisoned journal degrades the daemon to read-only.
+            assert_eq!(submit_spot(&d, 4), Err(ErrorCode::Internal), "shards={shards}");
+            d.shutdown();
+        }
+        let (d, report) =
+            Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+        assert!(
+            report.segments_discarded >= 1,
+            "shards={shards}: the torn rotation segment must be discarded: {report}"
+        );
+        assert_eq!(report.admits_replayed, 2, "shards={shards}: {report}");
+        assert_eq!(job_count(&d), 2, "shards={shards}");
+        for id in [a, b] {
+            match d.handle(Request::Sjob(id)) {
+                Response::Job(_) => {}
+                other => panic!("shards={shards}: acked job {id} lost across recovery: {other:?}"),
+            }
         }
     }
 }
 
 #[test]
 fn torn_final_record_is_truncated_not_fatal() {
-    let tmp = TempDir::new("spotcloud-dur-torn");
+    for shards in SHARD_COUNTS {
+        let tmp = TempDir::new("spotcloud-dur-torn");
+        let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+        let cfg = frozen_cfg(dcfg, shards);
+        let acked;
+        {
+            let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+            acked = submit_spot(&d, 8).expect("pre-crash submission acks");
+            d.shutdown();
+        }
+        // A crash mid-write leaves a partial frame at the tail of the
+        // newest segment; emulate it with garbage too short to even hold a
+        // header. `all_segments` finds the shard-layout segment too.
+        let newest = all_segments(tmp.path())
+            .into_iter()
+            .max()
+            .expect("journal segment exists");
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&newest).unwrap();
+        f.write_all(&[0xFF; 7]).unwrap();
+        drop(f);
+        let (d, report) =
+            Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+        assert_eq!(report.torn_bytes, 7, "shards={shards}: {report}");
+        match d.handle(Request::Sjob(acked)) {
+            Response::Job(_) => {}
+            other => panic!("shards={shards}: acked job lost to a torn tail: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn torn_alloc_log_fails_the_admission_and_recovery_survives_it() {
+    // The allocator log is the sharded layout's id authority: a crash
+    // while appending a lease record must fail the admission unacked, and
+    // recovery must replay everything acked before it — with fresh ids
+    // provably past the torn lease.
+    let tmp = TempDir::new("spotcloud-dur-allocappend");
     let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
-    let cfg = frozen_cfg(dcfg);
+    let faults = dcfg.faults.clone();
+    let cfg = frozen_cfg(dcfg, 2);
     let acked;
     {
         let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
         acked = submit_spot(&d, 8).expect("pre-crash submission acks");
+        faults.arm(FaultPoint::AllocAppend);
+        let err = submit_spot(&d, 16).expect_err("a torn lease record must not ack");
+        assert_eq!(err, ErrorCode::Internal);
         d.shutdown();
     }
-    // A crash mid-write leaves a partial frame at the tail of the newest
-    // segment; emulate it with garbage too short to even hold a header.
-    let newest = std::fs::read_dir(tmp.path())
-        .unwrap()
-        .filter_map(|e| e.ok().map(|e| e.path()))
-        .filter(|p| p.extension().is_some_and(|x| x == "wal"))
-        .max()
-        .expect("journal segment exists");
-    use std::io::Write as _;
-    let mut f = std::fs::OpenOptions::new().append(true).open(&newest).unwrap();
-    f.write_all(&[0xFF; 7]).unwrap();
-    drop(f);
-    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
-    assert_eq!(report.torn_bytes, 7, "{report}");
+    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg)
+        .expect("recovery survives a torn alloc.log");
+    assert_eq!(report.admits_replayed, 1, "{report}");
+    assert_eq!(job_count(&d), 1);
     match d.handle(Request::Sjob(acked)) {
         Response::Job(_) => {}
-        other => panic!("acked job lost to a torn tail: {other:?}"),
+        other => panic!("acked job lost across recovery: {other:?}"),
+    }
+    // Post-recovery admissions allocate past everything ever leased —
+    // including the torn lease — so ids never alias.
+    let next = submit_spot(&d, 4).expect("post-recovery admission");
+    assert!(next > acked, "fresh id {next} must clear the acked id {acked}");
+}
+
+#[test]
+fn crash_between_shard_appends_drops_the_whole_cross_shard_lease() {
+    // One manifest spanning both shards is one id-range lease with a part
+    // in each shard journal. The countdown fault lets the first shard's
+    // part land and "crashes" before the second's: the client is never
+    // acked, and recovery must drop the lease *atomically* — replaying
+    // shard A's part alone would resurrect half a manifest.
+    let tmp = TempDir::new("spotcloud-dur-xshard");
+    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+    let faults = dcfg.faults.clone();
+    let cfg = frozen_cfg(dcfg, 2);
+    {
+        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+        submit_spot(&d, 8).expect("pre-crash submission acks");
+        faults.arm_after(FaultPoint::AfterAppend, 1);
+        let m = ManifestBuilder::new()
+            .interactive(1, JobType::Array, 8)
+            .spot(9, JobType::Array, 16)
+            .build();
+        match d.handle(Request::MSubmit(m)) {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::Internal),
+            other => panic!("the half-journaled manifest must fail unacked: {other:?}"),
+        }
+        d.shutdown();
+    }
+    let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+    assert_eq!(report.leases_skipped_torn, 1, "{report}");
+    assert_eq!(
+        report.admits_replayed, 1,
+        "only the acked submission replays: {report}"
+    );
+    assert_eq!(report.manifests_restored, 0, "{report}");
+    assert_eq!(job_count(&d), 1);
+}
+
+#[test]
+fn every_truncation_prefix_of_a_segment_recovers_cleanly() {
+    // A crash can land on any byte boundary. Sweep the recovery scanner
+    // over every prefix of a real segment (plus a few bit flips): it must
+    // never panic — each case either replays a prefix of the admissions or
+    // fails with a typed error. This is the fuzz floor under every other
+    // test in this file.
+    let tmp = TempDir::new("spotcloud-dur-fuzz-src");
+    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+    let cfg = frozen_cfg(dcfg, 1);
+    {
+        let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg);
+        for _ in 0..3 {
+            submit_spot(&d, 4).expect("ack");
+        }
+        d.shutdown();
+    }
+    let seg = all_segments(tmp.path())
+        .into_iter()
+        .max()
+        .expect("journal segment exists");
+    let name = seg.file_name().unwrap().to_owned();
+    let bytes = std::fs::read(&seg).unwrap();
+    let case = TempDir::new("spotcloud-dur-fuzz-case");
+    let recovered_admits = |dir: &Path| -> Option<usize> {
+        match Journal::recover(&DurabilityConfig::new(dir)) {
+            Ok((_, rec)) => Some(
+                rec.tail
+                    .iter()
+                    .filter(|r| matches!(r, JournalRecord::Admit { .. }))
+                    .count(),
+            ),
+            // Typed failure (empty dir, torn magic, …) is a clean outcome
+            // for a mangled journal; panicking is the only wrong answer.
+            Err(_) => None,
+        }
+    };
+    let mut last = 0usize;
+    for cut in 0..=bytes.len() {
+        std::fs::write(case.join(name.to_str().unwrap()), &bytes[..cut]).unwrap();
+        if let Some(admits) = recovered_admits(case.path()) {
+            assert!(admits <= 3, "cut={cut}: {admits} admissions from thin air");
+            // Longer prefixes only ever complete more frames.
+            assert!(admits >= last, "cut={cut}: replay went backwards");
+            last = admits;
+        }
+    }
+    assert_eq!(last, 3, "the full segment replays every admission");
+    // Bit flips inside frames must fail the checksum, not fabricate state.
+    for off in [8usize, 12, 20, bytes.len() - 1] {
+        let mut mangled = bytes.clone();
+        mangled[off] ^= 0x40;
+        std::fs::write(case.join(name.to_str().unwrap()), &mangled).unwrap();
+        if let Some(admits) = recovered_admits(case.path()) {
+            assert!(admits < 3, "off={off}: a flipped bit passed the crc");
+        }
     }
 }
 
@@ -185,62 +358,67 @@ fn tcp_kill_recover_resume_collects_exactly_the_unsettled_entries() {
     // manifest, the daemon "crashes" before anything dispatches, a new
     // daemon recovers from the journal, and the client re-attaches with
     // retry/backoff + RESUME, waiting out exactly the entries that had not
-    // settled.
-    let tmp = TempDir::new("spotcloud-dur-tcp");
-    let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
-    let cfg = frozen_cfg(dcfg); // frozen: nothing settles pre-crash
-    let (manifest_id, acked_spans);
-    {
-        let daemon = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+    // settled. Runs at both shard counts: the sharded pass exercises the
+    // per-shard journals + allocator log behind the same wire contract.
+    for shards in SHARD_COUNTS {
+        let tmp = TempDir::new("spotcloud-dur-tcp");
+        let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
+        let cfg = frozen_cfg(dcfg, shards); // frozen: nothing settles pre-crash
+        let (manifest_id, acked_spans);
+        {
+            let daemon = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
+            let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
+            let addr = server.local_addr().unwrap().to_string();
+            let handle = std::thread::spawn(move || server.serve());
+            let mut c = Client::connect_v2(&addr).unwrap();
+            let m = ManifestBuilder::new()
+                .interactive(1, JobType::TripleMode, 608)
+                .last(|e| e.with_tag("nightly"))
+                .interactive(2, JobType::TripleMode, 608)
+                .build();
+            let ack = c.msubmit(&m).unwrap();
+            manifest_id = ack.manifest.expect("a journaling daemon assigns manifest ids");
+            acked_spans = ack.accepted.clone();
+            daemon.shutdown(); // kill: no drain, no goodbye
+            handle.join().unwrap();
+        }
+        // Recover on the same journal — this time with a live clock.
+        let cfg = DaemonConfig {
+            speedup: 10_000.0,
+            ..cfg
+        };
+        let (daemon, report) =
+            Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
+        assert_eq!(report.manifests_restored, 1, "shards={shards}: {report}");
+        daemon.spawn_pacer();
         let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
         let addr = server.local_addr().unwrap().to_string();
         let handle = std::thread::spawn(move || server.serve());
-        let mut c = Client::connect_v2(&addr).unwrap();
-        let m = ManifestBuilder::new()
-            .interactive(1, JobType::TripleMode, 608)
-            .last(|e| e.with_tag("nightly"))
-            .interactive(2, JobType::TripleMode, 608)
-            .build();
-        let ack = c.msubmit(&m).unwrap();
-        manifest_id = ack.manifest.expect("a journaling daemon assigns manifest ids");
-        acked_spans = ack.accepted.clone();
-        daemon.shutdown(); // kill: no drain, no goodbye
+        // The resuming client reconnects with backoff, then re-attaches by
+        // tag.
+        let mut c = Client::connect_v2_retry(&addr, &RetryPolicy::default()).unwrap();
+        let info = c.resume_by_tag("nightly").unwrap();
+        assert_eq!(info.manifest, manifest_id);
+        assert_eq!(info.entries.len(), acked_spans.len());
+        for (entry, acked) in info.entries.iter().zip(&acked_spans) {
+            assert_eq!(entry.index, acked.index);
+            assert_eq!(entry.first, acked.first, "replay reassigned an acked id");
+            assert_eq!(entry.count, acked.count);
+        }
+        // Nothing settled pre-crash, so every entry is pending; wait each
+        // out through the per-entry form (no job ids needed client-side).
+        let pending: Vec<u32> = info.pending_entries().map(|e| e.index).collect();
+        assert_eq!(pending.len(), info.entries.len());
+        for idx in pending {
+            let w = c.wait_entry(info.manifest, idx, 30.0).unwrap();
+            assert!(!w.timed_out, "entry {idx} never dispatched after recovery");
+            assert_eq!(w.dispatched, 1);
+        }
+        // Exactly-once collection: a second resume has nothing left
+        // pending.
+        let again = c.resume_by_manifest(manifest_id).unwrap();
+        assert_eq!(again.pending_entries().count(), 0);
+        daemon.shutdown();
         handle.join().unwrap();
     }
-    // Recover on the same journal — this time with a live clock.
-    let cfg = DaemonConfig {
-        speedup: 10_000.0,
-        ..cfg
-    };
-    let (daemon, report) =
-        Daemon::recover(topology::tx2500(), sched_cfg(), cfg).expect("recovery");
-    assert_eq!(report.manifests_restored, 1, "{report}");
-    daemon.spawn_pacer();
-    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
-    let addr = server.local_addr().unwrap().to_string();
-    let handle = std::thread::spawn(move || server.serve());
-    // The resuming client reconnects with backoff, then re-attaches by tag.
-    let mut c = Client::connect_v2_retry(&addr, &RetryPolicy::default()).unwrap();
-    let info = c.resume_by_tag("nightly").unwrap();
-    assert_eq!(info.manifest, manifest_id);
-    assert_eq!(info.entries.len(), acked_spans.len());
-    for (entry, acked) in info.entries.iter().zip(&acked_spans) {
-        assert_eq!(entry.index, acked.index);
-        assert_eq!(entry.first, acked.first, "replay reassigned an acked id");
-        assert_eq!(entry.count, acked.count);
-    }
-    // Nothing settled pre-crash, so every entry is pending; wait each out
-    // through the per-entry form (no job ids needed client-side).
-    let pending: Vec<u32> = info.pending_entries().map(|e| e.index).collect();
-    assert_eq!(pending.len(), info.entries.len());
-    for idx in pending {
-        let w = c.wait_entry(info.manifest, idx, 30.0).unwrap();
-        assert!(!w.timed_out, "entry {idx} never dispatched after recovery");
-        assert_eq!(w.dispatched, 1);
-    }
-    // Exactly-once collection: a second resume has nothing left pending.
-    let again = c.resume_by_manifest(manifest_id).unwrap();
-    assert_eq!(again.pending_entries().count(), 0);
-    daemon.shutdown();
-    handle.join().unwrap();
 }
