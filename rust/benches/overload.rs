@@ -1,0 +1,72 @@
+//! CI bench gate: interactive latency under a batch flood (see
+//! `benchkit::overload`).
+//!
+//! Times the interactive submit+WAIT loop over real TCP against an idle
+//! daemon and again under a sustained batch flood from a rate-limited
+//! user, and emits `BENCH_overload.json` (override with
+//! `SPOTCLOUD_BENCH_JSON`). The JSON is written **before** the gates run,
+//! so a regressed run still surfaces its numbers in the CI artifact.
+//!
+//! Gates:
+//! * flooded interactive WAIT p99 ≤ 3× unflooded — a batch flood cannot
+//!   buy batch throughput with interactive latency;
+//! * zero interactive sheds — load shedding refuses the flood, never the
+//!   interactive user inside its own budget;
+//! * shed batch requests > 0 — the flood was actually refused with the
+//!   typed `overloaded`, not silently absorbed;
+//! * the daemon reported `shedding` over HEALTH while the flood was hot
+//!   and recovered to `healthy` once it stopped.
+//!
+//! `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke configuration.
+
+use spotcloud::benchkit::overload::{run_overload, OverloadBenchConfig};
+
+fn main() {
+    let fast = std::env::var("SPOTCLOUD_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = if fast {
+        OverloadBenchConfig::quick()
+    } else {
+        OverloadBenchConfig::default()
+    };
+    eprintln!(
+        "overload: {} interactive ops per phase, {} flood conns × count={} \
+         (target {} jobs), user bucket {}/s burst {}",
+        cfg.interactive_ops,
+        cfg.flood_conns,
+        cfg.flood_count_per_req,
+        cfg.flood_target_jobs,
+        cfg.user_rate,
+        cfg.user_burst,
+    );
+    let report = run_overload(&cfg);
+    eprintln!("{}", report.summary());
+
+    let path =
+        std::env::var("SPOTCLOUD_BENCH_JSON").unwrap_or_else(|_| "BENCH_overload.json".into());
+    std::fs::write(&path, report.to_json()).expect("writing bench json");
+    println!("wrote {path}");
+
+    // Gates run AFTER the JSON write so a regressed run still surfaces its
+    // numbers in the CI artifact.
+    assert_eq!(
+        report.interactive_sheds, 0,
+        "the interactive user was shed: {report:?}"
+    );
+    assert!(
+        report.shed_batch_requests > 0,
+        "the batch flood was never shed: {report:?}"
+    );
+    assert!(
+        report.flooded_vs_unflooded_ratio <= 3.0,
+        "flooded interactive WAIT p99 is {:.2}x unflooded (gate 3x): {report:?}",
+        report.flooded_vs_unflooded_ratio,
+    );
+    assert!(
+        report.observed_shedding,
+        "daemon never reported `shedding` under the flood: {report:?}"
+    );
+    assert!(
+        report.recovered_healthy,
+        "daemon never recovered to `healthy` after the flood: {report:?}"
+    );
+}

@@ -12,6 +12,7 @@ pub mod connection_scaling;
 pub mod coordinator;
 pub mod journal_scaling;
 pub mod manifest_scaling;
+pub mod overload;
 pub mod sched_scaling;
 /// Linux-only, like the sharded reactor front door it measures.
 #[cfg(target_os = "linux")]

@@ -1,0 +1,347 @@
+//! Overload scenario — the CI gate for the admission control plane.
+//!
+//! The best-of-both-worlds claim under pressure: a batch flood must not be
+//! able to buy batch throughput with interactive latency. One report
+//! (`BENCH_overload.json`) answers three questions:
+//!
+//! 1. **What does a batch flood cost the interactive path?** The same
+//!    submit-then-WAIT interactive loop is timed over real TCP twice — once
+//!    against an idle daemon, once while flooder connections hammer batch
+//!    submissions from a rate-limited user. CI gates the flooded
+//!    interactive WAIT p99 at ≤ 3× the unflooded one.
+//! 2. **Does shedding stay where it belongs?** The flood must shed
+//!    (typed `overloaded` + retry hint — `shed_batch_requests > 0`) while
+//!    the interactive user, inside its own token bucket, is never refused
+//!    (`interactive_sheds == 0`).
+//! 3. **Does the health surface tell the truth?** While the flood is hot
+//!    the daemon must report `shedding` over the `HEALTH` verb, and once
+//!    the flood stops it must recover to `healthy` within a probe interval
+//!    (both recorded as booleans and gated).
+//!
+//! Interactive and batch ride different partitions (`Dual` layout), so the
+//! gate isolates *control-plane* interference — queue depth, admission
+//! locks, reactor backlog — exactly the coupling the overload plane exists
+//! to bound.
+
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::{
+    Client, ClientError, Daemon, DaemonConfig, ErrorCode, HealthState, OverloadConfig, Server,
+    SubmitSpec,
+};
+use crate::job::{JobType, QosClass};
+use crate::metrics::stats::percentile;
+use crate::sched::SchedulerConfig;
+use crate::sim::SchedCosts;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Scenario shape.
+#[derive(Debug, Clone)]
+pub struct OverloadBenchConfig {
+    /// Interactive submit+WAIT round trips timed per phase. Must stay
+    /// below `user_burst` so the interactive user never exhausts its own
+    /// bucket — the zero-interactive-sheds gate is then a statement about
+    /// isolation, not about the interactive user's arrival rate.
+    pub interactive_ops: usize,
+    /// Flooder connections.
+    pub flood_conns: usize,
+    /// Jobs per flood submission (`count=`): the flood attempts
+    /// `flood_target_jobs` and keeps flooding until the interactive loop
+    /// finishes, whichever is longer.
+    pub flood_count_per_req: u32,
+    /// Minimum jobs the flood must attempt (50k by default).
+    pub flood_target_jobs: u64,
+    /// Per-user token refill (jobs' worth of requests per second).
+    pub user_rate: f64,
+    /// Per-user burst capacity.
+    pub user_burst: f64,
+}
+
+impl Default for OverloadBenchConfig {
+    fn default() -> Self {
+        Self {
+            interactive_ops: 150,
+            flood_conns: 2,
+            flood_count_per_req: 25,
+            flood_target_jobs: 50_000,
+            user_rate: 50.0,
+            user_burst: 200.0,
+        }
+    }
+}
+
+impl OverloadBenchConfig {
+    /// Sub-second smoke shape (`SPOTCLOUD_BENCH_FAST=1`, unit tests).
+    pub fn quick() -> Self {
+        Self {
+            interactive_ops: 25,
+            flood_conns: 2,
+            flood_count_per_req: 25,
+            flood_target_jobs: 2_000,
+            user_rate: 50.0,
+            user_burst: 200.0,
+        }
+    }
+}
+
+/// What one run measured.
+#[derive(Debug, Clone)]
+pub struct OverloadReport {
+    /// Interactive round trips per phase.
+    pub interactive_ops: usize,
+    /// Interactive WAIT p99 against the idle daemon (µs).
+    pub p99_unflooded_us: f64,
+    /// Interactive WAIT p99 under the batch flood (µs).
+    pub p99_flooded_us: f64,
+    /// p99_flooded / p99_unflooded — the CI gate (≤ 3.0).
+    pub flooded_vs_unflooded_ratio: f64,
+    /// Jobs the flood attempted (requests × count).
+    pub flood_jobs_attempted: u64,
+    /// Flood requests admitted (inside the batch user's budget).
+    pub flood_requests_admitted: u64,
+    /// Flood requests shed with the typed `overloaded` — the CI gate
+    /// (> 0: the flood was actually refused, not absorbed).
+    pub shed_batch_requests: u64,
+    /// Interactive submissions refused — the CI gate (must be 0).
+    pub interactive_sheds: u64,
+    /// The daemon reported `shedding` over HEALTH while the flood was hot.
+    pub observed_shedding: bool,
+    /// The daemon recovered to `healthy` after the flood stopped.
+    pub recovered_healthy: bool,
+}
+
+impl OverloadReport {
+    /// The machine-readable record CI uploads (`BENCH_overload.json`).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"overload\",\n",
+                "  \"interactive_ops\": {},\n",
+                "  \"p99_unflooded_us\": {:.3},\n",
+                "  \"p99_flooded_us\": {:.3},\n",
+                "  \"flooded_vs_unflooded_ratio\": {:.3},\n",
+                "  \"flood_jobs_attempted\": {},\n",
+                "  \"flood_requests_admitted\": {},\n",
+                "  \"shed_batch_requests\": {},\n",
+                "  \"interactive_sheds\": {},\n",
+                "  \"observed_shedding\": {},\n",
+                "  \"recovered_healthy\": {}\n",
+                "}}\n",
+            ),
+            self.interactive_ops,
+            self.p99_unflooded_us,
+            self.p99_flooded_us,
+            self.flooded_vs_unflooded_ratio,
+            self.flood_jobs_attempted,
+            self.flood_requests_admitted,
+            self.shed_batch_requests,
+            self.interactive_sheds,
+            self.observed_shedding,
+            self.recovered_healthy,
+        )
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "overload: {} interactive ops — WAIT p99 unflooded {:.0}us, flooded {:.0}us \
+             (ratio {:.2}x, gate 3x); flood attempted {} jobs, admitted {} reqs, \
+             shed {} reqs; interactive sheds {} (gate 0); \
+             shedding observed={} recovered={}",
+            self.interactive_ops,
+            self.p99_unflooded_us,
+            self.p99_flooded_us,
+            self.flooded_vs_unflooded_ratio,
+            self.flood_jobs_attempted,
+            self.flood_requests_admitted,
+            self.shed_batch_requests,
+            self.interactive_sheds,
+            self.observed_shedding,
+            self.recovered_healthy,
+        )
+    }
+}
+
+/// A TCP daemon with the overload plane armed: per-user buckets sized so
+/// the interactive loop fits inside its burst while the flood does not.
+fn spawn_daemon(cfg: &OverloadBenchConfig) -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
+    let sched = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        .with_user_limit(1_000_000);
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        sched,
+        DaemonConfig {
+            speedup: 5_000.0,
+            pacer_tick_ms: 1,
+            retire_grace_secs: Some(86_400.0),
+            overload: OverloadConfig {
+                user_rate: cfg.user_rate,
+                user_burst: cfg.user_burst,
+                ..OverloadConfig::default()
+            },
+            ..DaemonConfig::default()
+        },
+    );
+    Arc::clone(&daemon).spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || server.serve());
+    (daemon, addr, handle)
+}
+
+/// The interactive loop: submit one 1-task job and WAIT it out, timing the
+/// WAIT round trip. Returns the p99 (µs); shed submissions are counted
+/// instead of panicking so the gate can report them.
+fn interactive_p99_us(addr: &str, ops: usize, sheds: &mut u64) -> f64 {
+    let mut c = Client::connect_v2(addr).expect("interactive connect");
+    let mut lat_us = Vec::with_capacity(ops);
+    for _ in 0..ops {
+        let ack = match c.submit(
+            &SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, 1).with_run_secs(1.0),
+        ) {
+            Ok(ack) => ack,
+            Err(ClientError::Api(e)) if e.code == ErrorCode::Overloaded => {
+                *sheds += 1;
+                continue;
+            }
+            Err(e) => panic!("interactive submit failed: {e}"),
+        };
+        let ids: Vec<u64> = ack.ids().collect();
+        let t0 = Instant::now();
+        let w = c.wait(&ids, 30.0).expect("interactive WAIT");
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        assert!(!w.timed_out, "interactive WAIT timed out under load");
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    percentile(&lat_us, 0.99)
+}
+
+/// Poll HEALTH until `want` (or the deadline); true when observed.
+fn poll_health(c: &mut Client, want: HealthState, deadline: Duration) -> bool {
+    let until = Instant::now() + deadline;
+    while Instant::now() < until {
+        if c.health().map_or(false, |h| h.state == want) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    false
+}
+
+/// Run the scenario.
+pub fn run_overload(cfg: &OverloadBenchConfig) -> OverloadReport {
+    // Phase 1: idle daemon, baseline interactive WAIT p99.
+    let mut interactive_sheds = 0u64;
+    let p99_unflooded_us = {
+        let (daemon, addr, server) = spawn_daemon(cfg);
+        let p99 = interactive_p99_us(&addr, cfg.interactive_ops, &mut interactive_sheds);
+        daemon.shutdown();
+        server.join().expect("server thread");
+        p99
+    };
+
+    // Phase 2: fresh daemon, the flood hot for the whole measurement.
+    let (daemon, addr, server) = spawn_daemon(cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let admitted = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let attempted_reqs = Arc::new(AtomicU64::new(0));
+    let per_conn_target = cfg.flood_target_jobs / (cfg.flood_count_per_req as u64)
+        / (cfg.flood_conns as u64).max(1)
+        + 1;
+    let flooders: Vec<_> = (0..cfg.flood_conns.max(1))
+        .map(|_| {
+            let addr = addr.clone();
+            let stop = Arc::clone(&stop);
+            let admitted = Arc::clone(&admitted);
+            let shed = Arc::clone(&shed);
+            let attempted_reqs = Arc::clone(&attempted_reqs);
+            let count = cfg.flood_count_per_req;
+            std::thread::spawn(move || {
+                let mut c = Client::connect_v2(&addr).expect("flood connect");
+                let mut sent = 0u64;
+                // Run until the target is met AND the interactive loop is
+                // done — the pressure must span the whole measurement.
+                while sent < per_conn_target || !stop.load(Ordering::Relaxed) {
+                    sent += 1;
+                    attempted_reqs.fetch_add(1, Ordering::Relaxed);
+                    match c.submit(
+                        &SubmitSpec::new(QosClass::Spot, JobType::Individual, 1, 9)
+                            .with_run_secs(600.0)
+                            .with_count(count),
+                    ) {
+                        Ok(_) => {
+                            admitted.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ClientError::Api(e)) if e.code == ErrorCode::Overloaded => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("flood connection failed: {e}"),
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let p99_flooded_us = interactive_p99_us(&addr, cfg.interactive_ops, &mut interactive_sheds);
+    // The flood is still hot: the daemon must be reporting `shedding`.
+    let mut probe = Client::connect_v2(&addr).expect("probe connect");
+    let observed_shedding = poll_health(&mut probe, HealthState::Shedding, Duration::from_secs(5));
+    stop.store(true, Ordering::Relaxed);
+    for f in flooders {
+        f.join().expect("flooder thread");
+    }
+    // Flood gone: recovery to `healthy` within a probe interval (the
+    // deadline is generous; the probe rides the pacer every ~100ms).
+    let recovered_healthy = poll_health(&mut probe, HealthState::Healthy, Duration::from_secs(5));
+    daemon.shutdown();
+    server.join().expect("server thread");
+
+    let flood_jobs_attempted =
+        attempted_reqs.load(Ordering::Relaxed) * cfg.flood_count_per_req as u64;
+    OverloadReport {
+        interactive_ops: cfg.interactive_ops,
+        p99_unflooded_us,
+        p99_flooded_us,
+        flooded_vs_unflooded_ratio: p99_flooded_us / p99_unflooded_us.max(f64::EPSILON),
+        flood_jobs_attempted,
+        flood_requests_admitted: admitted.load(Ordering::Relaxed),
+        shed_batch_requests: shed.load(Ordering::Relaxed),
+        interactive_sheds,
+        observed_shedding,
+        recovered_healthy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_overload_runs_and_reports() {
+        let r = run_overload(&OverloadBenchConfig::quick());
+        assert_eq!(r.interactive_sheds, 0, "{r:?}");
+        assert!(r.shed_batch_requests > 0, "{r:?}");
+        assert!(r.flood_jobs_attempted >= 2_000, "{r:?}");
+        assert!(r.p99_unflooded_us > 0.0 && r.p99_unflooded_us.is_finite(), "{r:?}");
+        assert!(r.p99_flooded_us > 0.0 && r.p99_flooded_us.is_finite(), "{r:?}");
+        assert!(r.observed_shedding, "{r:?}");
+        assert!(r.recovered_healthy, "{r:?}");
+        let json = r.to_json();
+        for key in [
+            "\"bench\": \"overload\"",
+            "\"p99_unflooded_us\"",
+            "\"p99_flooded_us\"",
+            "\"flooded_vs_unflooded_ratio\"",
+            "\"shed_batch_requests\"",
+            "\"interactive_sheds\": 0",
+            "\"observed_shedding\": true",
+            "\"recovered_healthy\": true",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(r.summary().contains("overload"));
+    }
+}

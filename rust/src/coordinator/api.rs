@@ -87,6 +87,15 @@ pub enum ErrorCode {
     Unsupported,
     /// The daemon failed internally.
     Internal,
+    /// The daemon refused the request to protect itself (rate limit,
+    /// inflight budget, shedding, or an expired deadline budget). The
+    /// request was **not** admitted; retry after backing off — v2 errors
+    /// carry a `retry_after_ms` hint.
+    Overloaded,
+    /// The daemon is in the read-only degraded state (poisoned journal):
+    /// mutations are refused because they could not be made durable, but
+    /// reads (`SQUEUE`/`SJOB`/`WAIT`/`STATS`) still serve.
+    ReadOnly,
 }
 
 impl ErrorCode {
@@ -100,6 +109,8 @@ impl ErrorCode {
             ErrorCode::NotFound => "not_found",
             ErrorCode::Unsupported => "unsupported",
             ErrorCode::Internal => "internal",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::ReadOnly => "read_only",
         }
     }
 
@@ -113,6 +124,8 @@ impl ErrorCode {
             "not_found" => Some(ErrorCode::NotFound),
             "unsupported" => Some(ErrorCode::Unsupported),
             "internal" => Some(ErrorCode::Internal),
+            "overloaded" => Some(ErrorCode::Overloaded),
+            "read_only" => Some(ErrorCode::ReadOnly),
             _ => None,
         }
     }
@@ -131,6 +144,10 @@ pub struct ApiError {
     pub code: ErrorCode,
     /// Single-line human-readable detail.
     pub message: String,
+    /// Backoff hint for [`ErrorCode::Overloaded`]: how long the client
+    /// should wait before retrying. Additive v2 wire key
+    /// (`retry_after_ms=`); v1 peers never see it and parse `None`.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ApiError {
@@ -139,6 +156,7 @@ impl ApiError {
         ApiError {
             code,
             message: message.into(),
+            retry_after_ms: None,
         }
     }
 
@@ -171,6 +189,20 @@ impl ApiError {
     pub fn unsupported(what: impl Into<String>) -> Self {
         Self::new(ErrorCode::Unsupported, what)
     }
+
+    /// Admission refused under overload, with a backoff hint.
+    pub fn overloaded(what: impl Into<String>, retry_after_ms: u64) -> Self {
+        ApiError {
+            code: ErrorCode::Overloaded,
+            message: what.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// Mutation refused because the daemon is read-only (poisoned journal).
+    pub fn read_only(what: impl Into<String>) -> Self {
+        Self::new(ErrorCode::ReadOnly, what)
+    }
 }
 
 impl fmt::Display for ApiError {
@@ -180,6 +212,77 @@ impl fmt::Display for ApiError {
 }
 
 impl std::error::Error for ApiError {}
+
+/// Daemon health, as the overload control plane reports it. Ordered by
+/// severity: `Healthy < Shedding < ReadOnly`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum HealthState {
+    /// All admission gates open.
+    #[default]
+    Healthy,
+    /// The daemon is refusing some cheap-to-refuse work (new
+    /// `SUBMIT`/`MSUBMIT`) to protect interactive latency; reads and
+    /// `WAIT` always serve.
+    Shedding,
+    /// The write-ahead journal is poisoned: every mutation is refused
+    /// (typed `read_only`), reads still serve. Sticky until restart.
+    ReadOnly,
+}
+
+impl HealthState {
+    /// Wire token.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Shedding => "shedding",
+            HealthState::ReadOnly => "read_only",
+        }
+    }
+
+    /// Parse a wire token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "healthy" => Some(HealthState::Healthy),
+            "shedding" => Some(HealthState::Shedding),
+            "read_only" => Some(HealthState::ReadOnly),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for HealthState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The `HEALTH` verb's payload: current state plus the shed counters that
+/// explain it. Also carried by `STATS` as an additive **v2 wire
+/// extension** (`health_*` / `shed_*` keys); v1 responses omit it.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct HealthReport {
+    /// Current state.
+    pub state: HealthState,
+    /// Seconds (wall) since the state last changed.
+    pub since_secs: f64,
+    /// Requests currently admitted and executing.
+    pub inflight: u64,
+    /// Global inflight-admission budget (0 = unlimited).
+    pub inflight_budget: u64,
+    /// `SUBMIT`s refused by the control plane.
+    pub shed_submits: u64,
+    /// `MSUBMIT`s (including chunked bodies) refused by the control plane.
+    pub shed_msubmits: u64,
+    /// Requests refused by a per-connection or per-user token bucket.
+    pub rate_limited: u64,
+    /// Requests dropped because their `deadline_ms=` budget expired
+    /// before execution.
+    pub deadline_expired: u64,
+    /// Slow-consumer connections evicted by the reactor.
+    pub conns_evicted: u64,
+    /// Journal poison transitions (nonzero forces `ReadOnly`).
+    pub journal_poisoned: u64,
+}
 
 /// A submission: one spec, optionally repeated `count` times so a whole
 /// burst (e.g. 10,000 individual jobs) lands in a single RPC.
@@ -297,6 +400,10 @@ pub enum Request {
     Stats,
     /// Cluster utilization snapshot.
     Util,
+    /// Daemon health: overload state machine + shed counters. Served off
+    /// atomics (never touches the scheduler lock) and allowed in every
+    /// protocol version and every health state.
+    Health,
     /// Liveness check.
     Ping,
     /// Stop the daemon.
@@ -313,9 +420,9 @@ pub enum ResumeTarget {
 }
 
 /// Every command verb, in wire order (per-command metrics index off this).
-pub const COMMANDS: [&str; 12] = [
+pub const COMMANDS: [&str; 13] = [
     "HELLO", "SUBMIT", "MSUBMIT", "SQUEUE", "SJOB", "SCANCEL", "WAIT", "RESUME", "STATS", "UTIL",
-    "PING", "SHUTDOWN",
+    "HEALTH", "PING", "SHUTDOWN",
 ];
 
 impl Request {
@@ -334,6 +441,7 @@ impl Request {
             Request::Resume(_) => "RESUME",
             Request::Stats => "STATS",
             Request::Util => "UTIL",
+            Request::Health => "HEALTH",
             Request::Ping => "PING",
             Request::Shutdown => "SHUTDOWN",
         }
@@ -601,6 +709,9 @@ pub struct StatsSnapshot {
     /// Write-ahead-journal counters (v2 wire extension; `None` on
     /// journal-off daemons and when the peer spoke v1).
     pub journal: Option<JournalStats>,
+    /// Overload-control-plane state + shed counters (v2 wire extension;
+    /// `None` when the peer spoke v1 or predates the extension).
+    pub health: Option<HealthReport>,
 }
 
 /// One manifest entry's settlement as `RESUME` reports it.
@@ -756,6 +867,8 @@ pub enum Response {
     Stats(StatsSnapshot),
     /// `UTIL` snapshot.
     Util(UtilSnapshot),
+    /// `HEALTH` report.
+    Health(HealthReport),
     /// Any failure.
     Error(ApiError),
 }
@@ -846,9 +959,24 @@ mod tests {
             ErrorCode::NotFound,
             ErrorCode::Unsupported,
             ErrorCode::Internal,
+            ErrorCode::Overloaded,
+            ErrorCode::ReadOnly,
         ] {
             assert_eq!(ErrorCode::parse(c.as_str()), Some(c));
         }
+        for h in [
+            HealthState::Healthy,
+            HealthState::Shedding,
+            HealthState::ReadOnly,
+        ] {
+            assert_eq!(HealthState::parse(h.as_str()), Some(h));
+        }
+        assert!(HealthState::Healthy < HealthState::Shedding);
+        assert!(HealthState::Shedding < HealthState::ReadOnly);
+        let e = ApiError::overloaded("busy", 250);
+        assert_eq!(e.code, ErrorCode::Overloaded);
+        assert_eq!(e.retry_after_ms, Some(250));
+        assert_eq!(ApiError::read_only("wal down").retry_after_ms, None);
     }
 
     #[test]
@@ -904,6 +1032,7 @@ mod tests {
             Request::Resume(ResumeTarget::Tag("burst".into())),
             Request::Stats,
             Request::Util,
+            Request::Health,
             Request::Ping,
             Request::Shutdown,
         ];

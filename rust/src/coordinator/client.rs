@@ -11,8 +11,9 @@
 //! [`ErrorCode`](super::api::ErrorCode), never as `Ok(String)`.
 
 use super::api::{
-    ApiError, JobDetail, JobSummary, ProtocolVersion, Request, Response, ResumeInfo, ResumeTarget,
-    SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    ApiError, ErrorCode, HealthReport, JobDetail, JobSummary, ProtocolVersion, Request, Response,
+    ResumeInfo, ResumeTarget, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot,
+    WaitResult,
 };
 use super::codec;
 use super::manifest::{
@@ -78,9 +79,12 @@ impl RetryPolicy {
     }
 
     /// Run `connect` until it succeeds or the attempts are exhausted,
-    /// sleeping the jittered backoff between tries. Only transport
-    /// ([`ClientError::Io`]) failures retry: a typed API or protocol error
-    /// means the daemon *is* up and retrying would just repeat it.
+    /// sleeping the jittered backoff between tries. Transport
+    /// ([`ClientError::Io`]) failures retry, as does the typed
+    /// [`ErrorCode::Overloaded`] shed response — sleeping the daemon's
+    /// `retry_after_ms` hint when it carries one, the jittered backoff
+    /// otherwise. Any other typed API or protocol error means the daemon
+    /// *is* up and deliberately refused: retrying would just repeat it.
     pub fn run<T>(
         &self,
         mut connect: impl FnMut() -> ClientResult<T>,
@@ -89,15 +93,22 @@ impl RetryPolicy {
         let attempts = self.attempts.max(1);
         let mut last = None;
         for attempt in 0..attempts {
-            match connect() {
+            let hint = match connect() {
                 Ok(v) => return Ok(v),
                 Err(e @ ClientError::Io(_)) => {
                     last = Some(e);
-                    if attempt + 1 < attempts {
-                        std::thread::sleep(self.delay_after(attempt, &mut rng));
-                    }
+                    None
+                }
+                Err(ClientError::Api(e)) if e.code == ErrorCode::Overloaded => {
+                    let hint = e.retry_after_ms.map(Duration::from_millis);
+                    last = Some(ClientError::Api(e));
+                    hint
                 }
                 Err(e) => return Err(e),
+            };
+            if attempt + 1 < attempts {
+                let delay = hint.unwrap_or_else(|| self.delay_after(attempt, &mut rng));
+                std::thread::sleep(delay);
             }
         }
         Err(last.expect("at least one attempt ran"))
@@ -536,6 +547,15 @@ impl Client {
         }
     }
 
+    /// Daemon overload/health state (`HEALTH`): current state, pressure
+    /// counters, and how long the state has held.
+    pub fn health(&mut self) -> ClientResult<HealthReport> {
+        match self.roundtrip(&Request::Health)? {
+            Response::Health(h) => Ok(h),
+            other => Err(unexpected("HEALTH", &other)),
+        }
+    }
+
     /// Ask the daemon to stop.
     pub fn shutdown(&mut self) -> ClientResult<()> {
         match self.roundtrip(&Request::Shutdown)? {
@@ -601,6 +621,49 @@ mod tests {
         });
         assert_eq!(calls, 4);
         assert!(matches!(out, Err(ClientError::Io(_))));
+    }
+
+    #[test]
+    fn retry_honors_overloaded_shed_and_its_retry_hint() {
+        let quick = RetryPolicy {
+            attempts: 4,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+            seed: 1,
+        };
+        // A shed daemon answers `overloaded` with a retry hint; the
+        // policy sleeps the hint and tries again until admitted.
+        let mut calls = 0;
+        let started = std::time::Instant::now();
+        let out = quick.run(|| {
+            calls += 1;
+            if calls < 3 {
+                Err(ClientError::Api(ApiError::overloaded(
+                    "admission budget exhausted",
+                    5,
+                )))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(out.unwrap(), 3);
+        // Two refusals, each hinting 5ms: the elapsed time shows the
+        // hint was honored rather than the (sub-hint) jittered backoff.
+        assert!(started.elapsed() >= Duration::from_millis(10));
+        // Exhausting attempts surfaces the typed shed, not a panic.
+        let mut calls = 0;
+        let out: ClientResult<()> = quick.run(|| {
+            calls += 1;
+            Err(ClientError::Api(ApiError::overloaded("still shedding", 1)))
+        });
+        assert_eq!(calls, 4);
+        match out {
+            Err(ClientError::Api(e)) => {
+                assert_eq!(e.code, ErrorCode::Overloaded);
+                assert_eq!(e.retry_after_ms, Some(1));
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -20,8 +20,8 @@
 
 use super::api::{
     job_type_arg, parse_job_type, parse_qos, parse_state, state_token, ApiError, ContentionStats,
-    ErrorCode, JobDetail, JobSummary, JournalStats, ProtocolVersion, Request, Response,
-    ResumeEntry, ResumeInfo,
+    ErrorCode, HealthReport, HealthState, JobDetail, JobSummary, JournalStats, ProtocolVersion,
+    Request, Response, ResumeEntry, ResumeInfo,
     ResumeTarget, ShardKind, ShardStats, ShardUtil, SqueueFilter, StatsSnapshot, SubmitAck,
     SubmitSpec, UtilSnapshot, WaitResult,
 };
@@ -150,6 +150,36 @@ fn opt_u64_token(v: Option<u64>) -> String {
 
 // ---- request parsing -------------------------------------------------------
 
+/// Split the optional `deadline_ms=<n>` line-prefix token off a request
+/// line (v2+ only; v1 lines pass through untouched — the token was never
+/// part of the v1 grammar). The deadline is a *transport*-level budget:
+/// the caller stamps it against the request's arrival clock before the
+/// verb even parses, so a request whose budget expired while queued is
+/// dropped without ever taking a scheduler lock. It is a prefix rather
+/// than a trailing key because the `MSUBMIT` body grammar owns the rest
+/// of its line.
+pub fn split_deadline(
+    line: &str,
+    version: ProtocolVersion,
+) -> Result<(Option<u64>, &str), ApiError> {
+    if !version.is_v2() {
+        return Ok((None, line));
+    }
+    let trimmed = line.trim_start();
+    let Some(rest) = trimmed.strip_prefix("deadline_ms=") else {
+        return Ok((None, line));
+    };
+    let (tok, tail) = match rest.split_once(char::is_whitespace) {
+        Some((tok, tail)) => (tok, tail),
+        None => (rest, ""),
+    };
+    let ms = parse_u64("deadline_ms", tok)?;
+    if ms == 0 {
+        return Err(ApiError::bad_arg("deadline_ms", tok));
+    }
+    Ok((Some(ms), tail.trim_start()))
+}
+
 /// Parse one request line under the given protocol version.
 pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, ApiError> {
     let tokens: Vec<&str> = line.split_whitespace().collect();
@@ -161,6 +191,9 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
         "PING" => Ok(Request::Ping),
         "STATS" => Ok(Request::Stats),
         "UTIL" => Ok(Request::Util),
+        // HEALTH is deliberately version-blind (like PING): an operator
+        // must be able to probe a drowning daemon without negotiating.
+        "HEALTH" => Ok(Request::Health),
         "SHUTDOWN" => Ok(Request::Shutdown),
         "HELLO" => {
             let tok = rest
@@ -589,6 +622,7 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
         Request::Ping => "PING".into(),
         Request::Stats => "STATS".into(),
         Request::Util => "UTIL".into(),
+        Request::Health => "HEALTH".into(),
         Request::Shutdown => "SHUTDOWN".into(),
         Request::Hello(v) => format!("HELLO {v}"),
         Request::Squeue(f) => {
@@ -887,6 +921,41 @@ fn wait_kv(w: &WaitResult) -> String {
     )
 }
 
+/// Render the HEALTH body (shared by both protocol versions — the verb is
+/// version-blind, like PING).
+fn health_kv(h: &HealthReport) -> String {
+    format!(
+        "state={} since_secs={} inflight={} inflight_budget={} shed_submits={} shed_msubmits={} \
+         rate_limited={} deadline_expired={} conns_evicted={} journal_poisoned={}",
+        h.state.as_str(),
+        fmt_f64(h.since_secs),
+        h.inflight,
+        h.inflight_budget,
+        h.shed_submits,
+        h.shed_msubmits,
+        h.rate_limited,
+        h.deadline_expired,
+        h.conns_evicted,
+        h.journal_poisoned,
+    )
+}
+
+fn parse_health(map: &BTreeMap<&str, &str>) -> Result<HealthReport, ApiError> {
+    let tok = take(map, "state")?;
+    Ok(HealthReport {
+        state: HealthState::parse(tok).ok_or_else(|| ApiError::bad_arg("health state", tok))?,
+        since_secs: take_f64(map, "since_secs")?,
+        inflight: take_u64(map, "inflight")?,
+        inflight_budget: take_u64(map, "inflight_budget")?,
+        shed_submits: take_u64(map, "shed_submits")?,
+        shed_msubmits: take_u64(map, "shed_msubmits")?,
+        rate_limited: take_u64(map, "rate_limited")?,
+        deadline_expired: take_u64(map, "deadline_expired")?,
+        conns_evicted: take_u64(map, "conns_evicted")?,
+        journal_poisoned: take_u64(map, "journal_poisoned")?,
+    })
+}
+
 /// Render the STATS body. `with_contention` appends the v2-only contention
 /// extension keys (v1 keeps the original key set byte-compatible; v2
 /// parsers treat the keys as optional, so mixed versions interoperate).
@@ -937,6 +1006,28 @@ fn stats_kv(s: &StatsSnapshot, with_contention: bool) -> String {
                 " journal_appends={} journal_synced_appends={} journal_group_commits={} \
                  journal_poisoned={}",
                 j.appends, j.synced_appends, j.group_commits, j.poisoned,
+            );
+        }
+        // Overload-control-plane keys: same additive pattern, keyed on
+        // `health_state` as a block. The health-namespaced spelling keeps
+        // `journal_poisoned` (the journal block's key) collision-free.
+        if let Some(h) = &s.health {
+            let _ = write!(
+                out,
+                " health_state={} health_since_secs={} health_inflight={} \
+                 health_inflight_budget={} shed_submits={} shed_msubmits={} \
+                 shed_rate_limited={} shed_deadline_expired={} shed_conns_evicted={} \
+                 health_journal_poisoned={}",
+                h.state.as_str(),
+                fmt_f64(h.since_secs),
+                h.inflight,
+                h.inflight_budget,
+                h.shed_submits,
+                h.shed_msubmits,
+                h.rate_limited,
+                h.deadline_expired,
+                h.conns_evicted,
+                h.journal_poisoned,
             );
         }
     }
@@ -1039,6 +1130,11 @@ fn render_response_v1(resp: &Response) -> String {
             "OK utilization={:.4} idle_cores={} idle_nodes={} total_cores={} pending={} running={}",
             u.utilization, u.idle_cores, u.idle_nodes, u.total_cores, u.pending, u.running
         ),
+        // Not byte-constrained: HEALTH is a new verb, so v1 renders the
+        // same record behind a `health` discriminator token.
+        Response::Health(h) => format!("OK health {}", health_kv(h)),
+        // The v1 grammar predates retry hints; the hint is dropped (a v1
+        // client backs off on its own schedule).
         Response::Error(e) => format!("ERR {}: {}", e.code, e.message),
     }
 }
@@ -1119,7 +1215,17 @@ fn render_response_v2(resp: &Response) -> String {
             }
             body
         }
-        Response::Error(e) => format!("ERR code={} msg={}", e.code, e.message),
+        Response::Health(h) => format!("OK kind=health {}", health_kv(h)),
+        Response::Error(e) => {
+            // `retry_after_ms=` renders BEFORE `msg=`: the message is the
+            // greedy last field, so every machine key must precede it.
+            let mut body = format!("ERR code={}", e.code);
+            if let Some(ms) = e.retry_after_ms {
+                let _ = write!(body, " retry_after_ms={ms}");
+            }
+            let _ = write!(body, " msg={}", e.message);
+            body
+        }
     }
 }
 
@@ -1163,7 +1269,14 @@ fn parse_error_body(body: &str, version: ProtocolVersion) -> ApiError {
                 .get("code")
                 .and_then(|c| ErrorCode::parse(c))
                 .unwrap_or(ErrorCode::Internal);
-            ApiError::new(code, msg)
+            let mut err = ApiError::new(code, msg);
+            // Optional backoff hint (absent from pre-overload servers; a
+            // malformed value parses as absent rather than failing the
+            // whole error body).
+            err.retry_after_ms = map
+                .get("retry_after_ms")
+                .and_then(|tok| tok.parse().ok());
+            err
         }
     }
 }
@@ -1289,6 +1402,26 @@ fn parse_stats(map: &BTreeMap<&str, &str>, tail: &str) -> Result<StatsSnapshot, 
     } else {
         None
     };
+    // Health keys are the overload plane's block (keyed on `health_state`):
+    // absent from v1 bodies and pre-overload servers.
+    let health = if map.contains_key("health_state") {
+        let tok = take(map, "health_state")?;
+        Some(HealthReport {
+            state: HealthState::parse(tok)
+                .ok_or_else(|| ApiError::bad_arg("health state", tok))?,
+            since_secs: take_f64(map, "health_since_secs")?,
+            inflight: take_u64(map, "health_inflight")?,
+            inflight_budget: take_u64(map, "health_inflight_budget")?,
+            shed_submits: take_u64(map, "shed_submits")?,
+            shed_msubmits: take_u64(map, "shed_msubmits")?,
+            rate_limited: take_u64(map, "shed_rate_limited")?,
+            deadline_expired: take_u64(map, "shed_deadline_expired")?,
+            conns_evicted: take_u64(map, "shed_conns_evicted")?,
+            journal_poisoned: take_u64(map, "health_journal_poisoned")?,
+        })
+    } else {
+        None
+    };
     Ok(StatsSnapshot {
         virtual_now_secs: take_f64(map, "virtual_now_secs")?,
         dispatches: take_u64(map, "dispatches")?,
@@ -1310,6 +1443,7 @@ fn parse_stats(map: &BTreeMap<&str, &str>, tail: &str) -> Result<StatsSnapshot, 
         contention,
         shards: parse_shard_stats(tail)?,
         journal,
+        health,
     })
 }
 
@@ -1372,6 +1506,7 @@ fn parse_ok_v1(rest: &str) -> Result<Response, ApiError> {
     match first {
         "pong" => Ok(Response::Pong),
         "shutting" => Ok(Response::ShuttingDown),
+        "health" => Ok(Response::Health(parse_health(&kv_map(rest))?)),
         "cancelled" => {
             let tok = rest.split_whitespace().nth(1).unwrap_or("");
             Ok(Response::Cancelled(parse_u64("job id", tok)?))
@@ -1453,6 +1588,7 @@ fn parse_ok_v2(rest: &str) -> Result<Response, ApiError> {
         "wait" => Ok(Response::Wait(parse_wait(&map)?)),
         "stats" => Ok(Response::Stats(parse_stats(&map, tail)?)),
         "util" => Ok(Response::Util(parse_util(&map, tail)?)),
+        "health" => Ok(Response::Health(parse_health(&map)?)),
         "jobs" => {
             let mut rows = Vec::new();
             for line in tail.lines() {
@@ -1556,6 +1692,7 @@ mod tests {
             "WAIT 9 0.5",
             "STATS",
             "UTIL",
+            "HEALTH",
             "PING",
             "SHUTDOWN",
             "HELLO v2",
@@ -1580,6 +1717,7 @@ mod tests {
             "RESUME manifest=12",
             "STATS",
             "UTIL",
+            "HEALTH",
             "PING",
             "SHUTDOWN",
             "HELLO v2",
@@ -1982,6 +2120,20 @@ mod tests {
                 shards: Vec::new(),
                 // None for the same reason again: journal keys are v2-only.
                 journal: None,
+                // And the health block is v2-only too.
+                health: None,
+            }),
+            Response::Health(HealthReport {
+                state: HealthState::Shedding,
+                since_secs: 1.5,
+                inflight: 12,
+                inflight_budget: 64,
+                shed_submits: 7,
+                shed_msubmits: 2,
+                rate_limited: 5,
+                deadline_expired: 1,
+                conns_evicted: 1,
+                journal_poisoned: 0,
             }),
             Response::Util(UtilSnapshot {
                 utilization: 0.25,
@@ -2406,6 +2558,132 @@ mod tests {
             Response::Util(back) => assert!(back.shards.is_empty()),
             other => panic!("{other:?}"),
         }
+    }
+
+    // ---- overload control plane: errors, health, deadlines ------------------
+
+    #[test]
+    fn overloaded_error_retry_hint_roundtrips_v2_and_drops_on_v1() {
+        let resp = Response::Error(ApiError::overloaded("admission budget exhausted", 250));
+        let wire = render_response(&resp, V2);
+        // Machine keys precede the greedy msg= field.
+        assert_eq!(
+            wire,
+            "ERR code=overloaded retry_after_ms=250 msg=admission budget exhausted"
+        );
+        assert_eq!(parse_response(&wire, V2).unwrap(), resp);
+        // v1 renders the plain seed-shaped error; the hint parses as None.
+        let v1 = render_response(&resp, V1);
+        assert_eq!(v1, "ERR overloaded: admission budget exhausted");
+        match parse_response(&v1, V1).unwrap() {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrorCode::Overloaded);
+                assert_eq!(e.retry_after_ms, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // An error without the hint keeps the pre-overload v2 shape.
+        let plain = Response::Error(ApiError::read_only("journal poisoned"));
+        assert_eq!(
+            render_response(&plain, V2),
+            "ERR code=read_only msg=journal poisoned"
+        );
+        assert_eq!(parse_response("ERR code=read_only msg=journal poisoned", V2).unwrap(), plain);
+    }
+
+    #[test]
+    fn stats_health_extension_roundtrips_v2_and_drops_on_v1() {
+        let mut s = stats_with_contention();
+        s.health = Some(HealthReport {
+            state: HealthState::Shedding,
+            since_secs: 0.25,
+            inflight: 3,
+            inflight_budget: 64,
+            shed_submits: 11,
+            shed_msubmits: 4,
+            rate_limited: 9,
+            deadline_expired: 2,
+            conns_evicted: 1,
+            journal_poisoned: 0,
+        });
+        let resp = Response::Stats(s.clone());
+        let wire = render_response(&resp, V2);
+        for key in [
+            "health_state=shedding",
+            "health_since_secs=0.25",
+            "health_inflight=3",
+            "health_inflight_budget=64",
+            "shed_submits=11",
+            "shed_msubmits=4",
+            "shed_rate_limited=9",
+            "shed_deadline_expired=2",
+            "shed_conns_evicted=1",
+            "health_journal_poisoned=0",
+        ] {
+            assert!(wire.contains(key), "missing {key} in {wire}");
+        }
+        assert_eq!(parse_response(&wire, V2).unwrap(), resp);
+        // v1 keeps its original key set byte-compatible.
+        let v1 = render_response(&resp, V1);
+        assert!(!v1.contains("health_state="), "{v1}");
+        assert!(!v1.contains("shed_submits="), "{v1}");
+        match parse_response(&v1, V1).unwrap() {
+            Response::Stats(back) => assert_eq!(back.health, None),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn health_verb_parses_in_every_version() {
+        for v in [V1, V2, V21] {
+            assert_eq!(parse_request("HEALTH", v).unwrap(), Request::Health);
+            assert_eq!(parse_request("health", v).unwrap(), Request::Health);
+        }
+    }
+
+    #[test]
+    fn deadline_prefix_splits_on_v2_and_passes_through_on_v1() {
+        // v2: the prefix strips and the remainder is the verb line.
+        let (ms, rest) = split_deadline("deadline_ms=250 WAIT jobs=1 timeout=5", V2).unwrap();
+        assert_eq!(ms, Some(250));
+        assert_eq!(rest, "WAIT jobs=1 timeout=5");
+        assert!(matches!(
+            parse_request(rest, V2).unwrap(),
+            Request::Wait { .. }
+        ));
+        // Lines without the prefix pass through untouched.
+        let (ms, rest) = split_deadline("STATS", V2).unwrap();
+        assert_eq!((ms, rest), (None, "STATS"));
+        // v1 never grew the token: the line passes through verbatim (and
+        // the verb parser then rejects it as an unknown command).
+        let line = "deadline_ms=250 PING";
+        let (ms, rest) = split_deadline(line, V1).unwrap();
+        assert_eq!((ms, rest), (None, line));
+        assert_eq!(
+            parse_request(line, V1).unwrap_err().code,
+            ErrorCode::UnknownCommand
+        );
+        // Hostile values are typed errors.
+        assert_eq!(
+            split_deadline("deadline_ms=x PING", V2).unwrap_err().code,
+            ErrorCode::BadArg
+        );
+        assert_eq!(
+            split_deadline("deadline_ms=0 PING", V2).unwrap_err().code,
+            ErrorCode::BadArg
+        );
+        // A bare deadline with no verb is an empty request downstream.
+        let (ms, rest) = split_deadline("deadline_ms=10", V2).unwrap();
+        assert_eq!((ms, rest), (Some(10), ""));
+        assert_eq!(parse_request(rest, V2).unwrap_err().code, ErrorCode::Empty);
+        // Chunked MSUBMIT keeps its body grammar intact after the strip.
+        let line = "deadline_ms=50 MSUBMIT entries=4 part=1/2;qos=normal type=array tasks=4 user=1";
+        let (ms, rest) = split_deadline(line, V21).unwrap();
+        assert_eq!(ms, Some(50));
+        assert!(matches!(
+            parse_request(rest, V21).unwrap(),
+            Request::MSubmitChunk(_)
+        ));
     }
 
     #[test]

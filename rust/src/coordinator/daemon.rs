@@ -30,9 +30,10 @@
 //! [`super::codec`] and is reached through [`Daemon::handle_line_versioned`].
 
 use super::api::{
-    ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, JournalStats, ProtocolVersion,
-    Request, Response, ResumeEntry, ResumeInfo, ResumeTarget, ShardKind, ShardStats, ShardUtil,
-    SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    ApiError, ContentionStats, ErrorCode, HealthReport, HealthState, JobDetail, JobSummary,
+    JournalStats, ProtocolVersion, Request, Response, ResumeEntry, ResumeInfo, ResumeTarget,
+    ShardKind, ShardStats, ShardUtil, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec,
+    UtilSnapshot, WaitResult,
 };
 use super::codec;
 use super::journal::{
@@ -104,6 +105,11 @@ pub struct DaemonConfig {
     /// that makes recovered ids globally deterministic (see `PROTOCOL.md`
     /// §Durability).
     pub shard_count: usize,
+    /// Overload control plane: admission rate limits, the global
+    /// inflight budget, and health-probe tuning (see [`OverloadConfig`]).
+    /// The default disables every limit, so existing deployments see no
+    /// behavior change until they opt in.
+    pub overload: OverloadConfig,
 }
 
 impl Default for DaemonConfig {
@@ -115,6 +121,114 @@ impl Default for DaemonConfig {
             history_cap: Some(100_000),
             durability: None,
             shard_count: 1,
+            overload: OverloadConfig::default(),
+        }
+    }
+}
+
+/// Overload-control parameters (see `PROTOCOL.md` §Overload & health).
+/// Rate limits and the inflight budget apply only to *sheddable* work —
+/// new `SUBMIT`/`MSUBMIT` admissions. Reads (`SQUEUE`/`SJOB`/`STATS`) and
+/// `WAIT` are never shed: they serve off snapshots and cost no scheduler
+/// lock, so refusing them would save nothing.
+#[derive(Debug, Clone)]
+pub struct OverloadConfig {
+    /// Per-connection request-line rate (lines/second, enforced by the
+    /// transport before the line reaches a worker). `0.0` disables.
+    pub conn_rate: f64,
+    /// Per-connection burst allowance (bucket capacity, lines).
+    pub conn_burst: f64,
+    /// Per-user sheddable-request rate (submissions/second, keyed on the
+    /// submitting user id). `0.0` disables.
+    pub user_rate: f64,
+    /// Per-user burst allowance (bucket capacity, requests).
+    pub user_burst: f64,
+    /// Global cap on concurrently *executing* sheddable requests. An
+    /// admission arriving with the gauge at the cap is refused with a
+    /// typed `overloaded` before any scheduler lock. `0` = unlimited.
+    pub inflight_budget: u64,
+    /// Write-lock hold p99 (nanoseconds) above which the health probe
+    /// reports `Shedding`. `0` disables the signal.
+    pub lock_p99_shed_ns: u64,
+    /// Health-probe cadence (milliseconds). The probe rides the pacer
+    /// tick and the request path, throttled to this interval.
+    pub probe_interval_ms: u64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        Self {
+            conn_rate: 0.0,
+            conn_burst: 0.0,
+            user_rate: 0.0,
+            user_burst: 0.0,
+            inflight_budget: 0,
+            lock_p99_shed_ns: 0,
+            probe_interval_ms: 100,
+        }
+    }
+}
+
+/// Retry hint handed to clients refused by the inflight budget: long
+/// enough to drain a burst, short enough that a polite retry loop still
+/// feels interactive.
+const SHED_RETRY_MS: u64 = 50;
+
+/// A standard token bucket over wall-clock time (std-only: refill is
+/// computed lazily from the elapsed interval, no timer thread). Used for
+/// the per-user admission limit here and the per-connection line limit in
+/// the transports.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    capacity: f64,
+    rate: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A bucket refilling at `rate` tokens/second with `burst` capacity
+    /// (clamped to at least one token so a positive rate can ever admit),
+    /// starting full.
+    pub fn new(rate: f64, burst: f64, now: Instant) -> Self {
+        let capacity = burst.max(1.0);
+        Self {
+            capacity,
+            rate: rate.max(0.0),
+            tokens: capacity,
+            last: now,
+        }
+    }
+
+    /// Take one token, or report how many milliseconds until one will be
+    /// available (the `retry_after_ms` hint; at least 1).
+    pub fn try_take(&mut self, now: Instant) -> Result<(), u64> {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.capacity);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            return Ok(());
+        }
+        let need = 1.0 - self.tokens;
+        let ms = if self.rate > 0.0 {
+            (need / self.rate * 1000.0).ceil() as u64
+        } else {
+            // A zero-rate bucket never refills: the hint is "much later".
+            60_000
+        };
+        Err(ms.max(1))
+    }
+}
+
+/// RAII decrement for the sheddable-inflight gauge: admission increments,
+/// drop (after the request executes, parks, or errors) decrements.
+struct InflightGuard<'a>(Option<&'a AtomicU64>);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(gauge) = self.0 {
+            gauge.fetch_sub(1, Ordering::Relaxed);
         }
     }
 }
@@ -241,6 +355,25 @@ pub struct Daemon {
     /// [`DaemonConfig::history_cap`]: the oldest retirements are pruned
     /// first (ids retire in end-time order, so eviction follows insertion).
     history: RwLock<HistoryTable>,
+    /// Per-user admission token buckets ([`OverloadConfig::user_rate`]).
+    /// Touched only on the sheddable write path, before any scheduler
+    /// lock; the read path never sees it.
+    user_buckets: Mutex<FxHashMap<u32, TokenBucket>>,
+    /// Concurrently executing sheddable requests (the inflight-budget
+    /// gauge; see [`InflightGuard`]).
+    inflight: AtomicU64,
+    /// Encoded [`HealthState`]: 0 healthy, 1 shedding, 2 read-only.
+    /// `ReadOnly` is sticky — a poisoned journal never un-poisons.
+    health: AtomicU64,
+    /// Milliseconds since `start` at the last health *transition*
+    /// (`HEALTH`'s `since_secs`).
+    health_since_ms: AtomicU64,
+    /// Milliseconds since `start` at the last health probe (throttle).
+    last_probe_ms: AtomicU64,
+    /// Shed events since the last probe: the probe drains this to decide
+    /// `Healthy` vs `Shedding`, so the state recovers within one probe
+    /// interval of the pressure stopping.
+    sheds_since_probe: AtomicU64,
 }
 
 /// The bounded retired-job side-table: id → frozen view, plus the
@@ -669,6 +802,12 @@ impl Daemon {
             manifests: RwLock::new(registry),
             tracked: Mutex::new(tracked),
             history: RwLock::new(history),
+            user_buckets: Mutex::new(FxHashMap::default()),
+            inflight: AtomicU64::new(0),
+            health: AtomicU64::new(0),
+            health_since_ms: AtomicU64::new(0),
+            last_probe_ms: AtomicU64::new(0),
+            sheds_since_probe: AtomicU64::new(0),
         })
     }
 
@@ -769,21 +908,27 @@ impl Daemon {
         }
     }
 
-    /// Count a journal-layer failure into the metrics: the first error on
-    /// a journal is the poison transition ([`JournalError::Poisoned`] is
-    /// the already-poisoned rejection, not a new transition).
+    /// Count a journal-layer failure into the metrics and pin the health
+    /// state at `ReadOnly`: the first error on a journal is the poison
+    /// transition ([`JournalError::Poisoned`] is the already-poisoned
+    /// rejection, not a new transition), and a poisoned journal never
+    /// un-poisons, so the state is sticky and observable (`HEALTH`,
+    /// `STATS`) instead of the former silent per-request degradation.
     fn note_journal_failure(&self, e: &JournalError) {
         if !matches!(e, JournalError::Poisoned) {
             self.metrics.journal_poisoned.fetch_add(1, Ordering::Relaxed);
         }
+        self.set_health(HealthState::ReadOnly);
     }
 
     /// Map a journal error into the typed admission failure (and count the
-    /// poison transition).
+    /// poison transition). `read_only`, not `internal`: the client can tell
+    /// "this daemon lost its journal and refuses writes" apart from a bug,
+    /// and knows reads and `WAIT` still serve.
     fn journal_error(&self, e: JournalError) -> ApiError {
         self.note_journal_failure(&e);
         ApiError::new(
-            ErrorCode::Internal,
+            ErrorCode::ReadOnly,
             format!("write-ahead journal append failed (request not acked): {e}"),
         )
     }
@@ -882,7 +1027,7 @@ impl Daemon {
             }
             if st.poisoned {
                 return Err(ApiError::new(
-                    ErrorCode::Internal,
+                    ErrorCode::ReadOnly,
                     "write-ahead journal group sync failed (admission applied but not acked)"
                         .to_string(),
                 ));
@@ -906,7 +1051,7 @@ impl Daemon {
                         self.note_journal_failure(&e);
                         slot.gc.cv.notify_all();
                         return Err(ApiError::new(
-                            ErrorCode::Internal,
+                            ErrorCode::ReadOnly,
                             format!(
                                 "write-ahead journal group sync failed \
                                  (admission applied but not acked): {e}"
@@ -1035,6 +1180,10 @@ impl Daemon {
     /// time, harvest newly dispatched tracked jobs into the metrics, retire
     /// old terminal jobs into the history side-table, and publish.
     pub fn pace(&self) {
+        // The health probe rides the pacer tick so the state machine
+        // advances (and recovers) even on an idle daemon with no request
+        // traffic to piggyback on.
+        self.maybe_probe_health();
         for idx in 0..self.shards.count() {
             self.pace_shard(idx);
         }
@@ -1118,6 +1267,200 @@ impl Daemon {
         Arc::clone(&self.snapshot.read().expect("snapshot poisoned"))
     }
 
+    // ---- overload control plane --------------------------------------------
+
+    /// The overload-control configuration (the transports read the
+    /// per-connection limits from here).
+    pub fn overload_config(&self) -> &OverloadConfig {
+        &self.cfg.overload
+    }
+
+    /// Current health state (decoded from the atomic).
+    pub fn health_state(&self) -> HealthState {
+        match self.health.load(Ordering::Relaxed) {
+            2 => HealthState::ReadOnly,
+            1 => HealthState::Shedding,
+            _ => HealthState::Healthy,
+        }
+    }
+
+    /// Transition the health state, stamping `since` on change.
+    /// `ReadOnly` is sticky: once the journal poisoned, no probe outcome
+    /// downgrades the state (the journal never un-poisons).
+    fn set_health(&self, next: HealthState) {
+        let code = match next {
+            HealthState::Healthy => 0,
+            HealthState::Shedding => 1,
+            HealthState::ReadOnly => 2,
+        };
+        let now_ms = self.start.elapsed().as_millis() as u64;
+        let prev = self
+            .health
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                if cur == 2 || cur == code {
+                    None
+                } else {
+                    Some(code)
+                }
+            });
+        if prev.is_ok() {
+            self.health_since_ms.store(now_ms, Ordering::Relaxed);
+        }
+    }
+
+    /// Probe the health state if a probe interval elapsed since the last
+    /// one (rides the pacer tick and the request path; a CAS keeps
+    /// concurrent callers from double-probing).
+    fn maybe_probe_health(&self) {
+        let interval = self.cfg.overload.probe_interval_ms;
+        let now_ms = self.start.elapsed().as_millis() as u64;
+        let last = self.last_probe_ms.load(Ordering::Relaxed);
+        if now_ms.saturating_sub(last) < interval.max(1) {
+            return;
+        }
+        if self
+            .last_probe_ms
+            .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        self.probe_health();
+    }
+
+    /// One health probe: measured signals only. `ReadOnly` when the
+    /// journal poisoned (sticky); `Shedding` while admission pressure is
+    /// observable — sheds since the last probe, the inflight gauge at the
+    /// budget, or the write-lock hold p99 over its threshold — `Healthy`
+    /// otherwise. Recovery is therefore bounded by one probe interval
+    /// after the pressure stops.
+    pub fn probe_health(&self) {
+        if self.metrics.journal_poisoned.load(Ordering::Relaxed) > 0 {
+            self.set_health(HealthState::ReadOnly);
+            return;
+        }
+        let ov = &self.cfg.overload;
+        let sheds = self.sheds_since_probe.swap(0, Ordering::Relaxed);
+        let at_budget =
+            ov.inflight_budget > 0 && self.inflight.load(Ordering::Relaxed) >= ov.inflight_budget;
+        let slow_locks =
+            ov.lock_p99_shed_ns > 0 && self.metrics.lock_hold().p99() > ov.lock_p99_shed_ns;
+        if sheds > 0 || at_budget || slow_locks {
+            self.set_health(HealthState::Shedding);
+        } else {
+            self.set_health(HealthState::Healthy);
+        }
+    }
+
+    /// Count one shed event toward the next probe's `Shedding` decision.
+    fn note_shed(&self) {
+        self.sheds_since_probe.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The `HEALTH` response (also embedded in v2 `STATS`).
+    pub fn health_report(&self) -> HealthReport {
+        let now_ms = self.start.elapsed().as_millis() as u64;
+        let since_ms = self.health_since_ms.load(Ordering::Relaxed);
+        HealthReport {
+            state: self.health_state(),
+            since_secs: now_ms.saturating_sub(since_ms) as f64 / 1000.0,
+            inflight: self.inflight.load(Ordering::Relaxed),
+            inflight_budget: self.cfg.overload.inflight_budget,
+            shed_submits: self.metrics.shed_submits.load(Ordering::Relaxed),
+            shed_msubmits: self.metrics.shed_msubmits.load(Ordering::Relaxed),
+            rate_limited: self.metrics.shed_rate_limited.load(Ordering::Relaxed),
+            deadline_expired: self.metrics.deadline_expired.load(Ordering::Relaxed),
+            conns_evicted: self.metrics.conns_evicted.load(Ordering::Relaxed),
+            journal_poisoned: self.metrics.journal_poisoned.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Admission gate, run before any scheduler lock. Total over every
+    /// request: a deadline budget already spent drops the request typed;
+    /// sheddable verbs (`SUBMIT`/`MSUBMIT`) then pass the per-user rate
+    /// limit and the global inflight budget. Everything else — reads,
+    /// `WAIT`, control verbs — is never shed (`Ok` with no gauge hold).
+    fn gate(&self, req: &Request, expires: Option<Instant>) -> Result<InflightGuard<'_>, ApiError> {
+        if let Some(at) = expires {
+            if Instant::now() >= at {
+                self.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                return Err(ApiError::overloaded(
+                    "deadline budget exhausted before execution (request dropped unexecuted)",
+                    0,
+                ));
+            }
+        }
+        match req {
+            Request::Submit(spec) => {
+                self.admit_sheddable(Some(spec.user), &self.metrics.shed_submits)
+            }
+            Request::MSubmit(m) => self.admit_sheddable(
+                m.entries.first().map(|e| e.user),
+                &self.metrics.shed_msubmits,
+            ),
+            // A chunk reaching the typed path is a complete single-part
+            // stream (see [`Daemon::handle`]); transports with an
+            // assembler gate the *assembled* admission instead.
+            Request::MSubmitChunk(_) => self.admit_sheddable(None, &self.metrics.shed_msubmits),
+            _ => Ok(InflightGuard(None)),
+        }
+    }
+
+    /// Admit one sheddable request or refuse it cheaply: read-only
+    /// refusal first (no lock, no journal attempt), then the user's token
+    /// bucket, then the global inflight budget. Refusals carry
+    /// `retry_after_ms` so a well-behaved client backs off exactly as
+    /// long as needed.
+    fn admit_sheddable<'a>(
+        &'a self,
+        user: Option<u32>,
+        shed_counter: &AtomicU64,
+    ) -> Result<InflightGuard<'a>, ApiError> {
+        if self.health_state() == HealthState::ReadOnly {
+            shed_counter.fetch_add(1, Ordering::Relaxed);
+            return Err(ApiError::read_only(
+                "write-ahead journal poisoned: daemon is read-only \
+                 (submissions refused; reads and WAIT still serve)",
+            ));
+        }
+        let ov = &self.cfg.overload;
+        if ov.user_rate > 0.0 {
+            if let Some(u) = user {
+                let now = Instant::now();
+                let mut buckets = self.user_buckets.lock().expect("user buckets poisoned");
+                let bucket = buckets
+                    .entry(u)
+                    .or_insert_with(|| TokenBucket::new(ov.user_rate, ov.user_burst, now));
+                if let Err(retry_ms) = bucket.try_take(now) {
+                    drop(buckets);
+                    self.metrics.shed_rate_limited.fetch_add(1, Ordering::Relaxed);
+                    self.note_shed();
+                    return Err(ApiError::overloaded(
+                        format!("user {u} submission rate limit exceeded"),
+                        retry_ms,
+                    ));
+                }
+            }
+        }
+        if ov.inflight_budget > 0 {
+            let prev = self.inflight.fetch_add(1, Ordering::Relaxed);
+            if prev >= ov.inflight_budget {
+                self.inflight.fetch_sub(1, Ordering::Relaxed);
+                shed_counter.fetch_add(1, Ordering::Relaxed);
+                self.note_shed();
+                return Err(ApiError::overloaded(
+                    format!(
+                        "admission budget exhausted ({prev} requests inflight, budget {})",
+                        ov.inflight_budget
+                    ),
+                    SHED_RETRY_MS,
+                ));
+            }
+            return Ok(InflightGuard(Some(&self.inflight)));
+        }
+        Ok(InflightGuard(None))
+    }
+
     // ---- wire front door ---------------------------------------------------
 
     /// Handle one v1 request line; returns the rendered response body.
@@ -1166,23 +1509,73 @@ impl Daemon {
         version: ProtocolVersion,
         assembler: Option<&mut ChunkAssembler>,
     ) -> LineOutcome {
+        self.handle_line_at(line, version, assembler, Instant::now())
+    }
+
+    /// [`Daemon::handle_line_stateful`] with an explicit arrival instant:
+    /// the transports stamp `arrived` when the line is read off the
+    /// socket, so a v2 `deadline_ms=` budget covers worker-pool queueing —
+    /// a request that expired while queued is dropped here, before any
+    /// scheduler lock, instead of wasting the worker turn executing it.
+    pub fn handle_line_at(
+        &self,
+        line: &str,
+        version: ProtocolVersion,
+        assembler: Option<&mut ChunkAssembler>,
+        arrived: Instant,
+    ) -> LineOutcome {
         let t0 = Instant::now();
+        self.maybe_probe_health();
+        let (deadline_ms, line) = match codec::split_deadline(line, version) {
+            Ok(split) => split,
+            Err(e) => {
+                self.metrics.record_request(false, t0.elapsed().as_nanos() as u64);
+                let resp = Response::Error(e);
+                return LineOutcome::Done(codec::render_response(&resp, version), None);
+            }
+        };
+        let expires = deadline_ms.map(|ms| arrived + Duration::from_millis(ms));
         let parsed = codec::parse_request(line, version);
         let parsed = match (parsed, assembler) {
             (Ok(Request::MSubmitChunk(chunk)), Some(asm)) => {
                 self.metrics.record_command("MSUBMIT");
-                let resp = match asm.push(chunk) {
-                    Ok(ChunkOutcome::Partial {
-                        part,
-                        parts,
-                        received,
-                    }) => Response::ChunkAck {
-                        part,
-                        parts,
-                        received,
-                    },
-                    Ok(ChunkOutcome::Complete(manifest)) => self.msubmit_assembled(&manifest),
-                    Err(e) => Response::Error(e),
+                // The budget spans the whole part sequence: the earliest
+                // deadline any part carried binds the assembled admission.
+                if let Some(at) = expires {
+                    asm.note_deadline(at);
+                }
+                let resp = if asm.deadline().map_or(false, |d| Instant::now() >= d) {
+                    asm.abort();
+                    self.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                    Response::Error(ApiError::overloaded(
+                        "deadline budget exhausted mid-stream \
+                         (partial manifest discarded, re-send from part 1)",
+                        0,
+                    ))
+                } else {
+                    match asm.push(chunk) {
+                        Ok(ChunkOutcome::Partial {
+                            part,
+                            parts,
+                            received,
+                        }) => Response::ChunkAck {
+                            part,
+                            parts,
+                            received,
+                        },
+                        Ok(ChunkOutcome::Complete(manifest)) => {
+                            asm.clear_deadline();
+                            let user = manifest.entries.first().map(|e| e.user);
+                            match self.admit_sheddable(user, &self.metrics.shed_msubmits) {
+                                Ok(_inflight) => self.msubmit_assembled(&manifest),
+                                Err(e) => Response::Error(e),
+                            }
+                        }
+                        Err(e) => {
+                            asm.clear_deadline();
+                            Response::Error(e)
+                        }
+                    }
                 };
                 let ok = !matches!(resp, Response::Error(_));
                 self.metrics.record_request(ok, t0.elapsed().as_nanos() as u64);
@@ -1202,7 +1595,7 @@ impl Daemon {
             }
             (parsed, _) => parsed,
         };
-        self.handle_parsed(parsed, version, t0)
+        self.handle_parsed(parsed, version, t0, expires)
     }
 
     fn handle_parsed(
@@ -1210,42 +1603,50 @@ impl Daemon {
         parsed: Result<Request, ApiError>,
         version: ProtocolVersion,
         t0: Instant,
+        expires: Option<Instant>,
     ) -> LineOutcome {
         let (resp, render_version, negotiated) = match parsed {
             Ok(req) => {
                 self.metrics.record_command(req.command_name());
-                if let Request::Wait { jobs, timeout_secs } = &req {
-                    match self.begin_wait(jobs, *timeout_secs) {
-                        WaitStart::Done(resp) => (resp, version, None),
-                        WaitStart::Parked(ticket) => {
-                            return LineOutcome::Parked(ParkedWait { ticket, version });
+                match self.gate(&req, expires) {
+                    Err(e) => (Response::Error(e), version, None),
+                    // The guard spans the `handle` call below: the gauge
+                    // counts requests while they *execute*.
+                    Ok(_inflight) => {
+                        if let Request::Wait { jobs, timeout_secs } = &req {
+                            match self.begin_wait(jobs, *timeout_secs) {
+                                WaitStart::Done(resp) => (resp, version, None),
+                                WaitStart::Parked(ticket) => {
+                                    return LineOutcome::Parked(ParkedWait { ticket, version });
+                                }
+                            }
+                        } else if let Request::WaitEntry {
+                            manifest,
+                            entry,
+                            timeout_secs,
+                        } = &req
+                        {
+                            // Per-entry WAIT parks exactly like a job-list WAIT —
+                            // the manifest/entry pair resolves to its id span
+                            // first, so resolution errors come back immediately.
+                            match self.resolve_entry_jobs(*manifest, *entry) {
+                                Ok(jobs) => match self.begin_wait(&jobs, *timeout_secs) {
+                                    WaitStart::Done(resp) => (resp, version, None),
+                                    WaitStart::Parked(ticket) => {
+                                        return LineOutcome::Parked(ParkedWait { ticket, version });
+                                    }
+                                },
+                                Err(e) => (Response::Error(e), version, None),
+                            }
+                        } else {
+                            let negotiated = match &req {
+                                Request::Hello(v) => Some(*v),
+                                _ => None,
+                            };
+                            let resp = self.handle(req);
+                            (resp, negotiated.unwrap_or(version), negotiated)
                         }
                     }
-                } else if let Request::WaitEntry {
-                    manifest,
-                    entry,
-                    timeout_secs,
-                } = &req
-                {
-                    // Per-entry WAIT parks exactly like a job-list WAIT —
-                    // the manifest/entry pair resolves to its id span
-                    // first, so resolution errors come back immediately.
-                    match self.resolve_entry_jobs(*manifest, *entry) {
-                        Ok(jobs) => match self.begin_wait(&jobs, *timeout_secs) {
-                            WaitStart::Done(resp) => (resp, version, None),
-                            WaitStart::Parked(ticket) => {
-                                return LineOutcome::Parked(ParkedWait { ticket, version });
-                            }
-                        },
-                        Err(e) => (Response::Error(e), version, None),
-                    }
-                } else {
-                    let negotiated = match &req {
-                        Request::Hello(v) => Some(*v),
-                        _ => None,
-                    };
-                    let resp = self.handle(req);
-                    (resp, negotiated.unwrap_or(version), negotiated)
                 }
             }
             Err(e) => (Response::Error(e), version, None),
@@ -1354,6 +1755,7 @@ impl Daemon {
             Request::Resume(target) => self.handle_resume(&target),
             Request::Stats => Response::Stats(self.stats_snapshot()),
             Request::Util => Response::Util(self.util_snapshot()),
+            Request::Health => Response::Health(self.health_report()),
         }
     }
 
@@ -2174,6 +2576,7 @@ impl Daemon {
                 group_commits: self.metrics.journal_group_commits.load(Ordering::Relaxed),
                 poisoned: self.metrics.journal_poisoned.load(Ordering::Relaxed),
             }),
+            health: Some(self.health_report()),
         }
     }
 
@@ -3158,9 +3561,17 @@ mod tests {
             8,
             9,
         ))) {
-            Response::Error(e) => assert_eq!(e.code, ErrorCode::Internal),
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::ReadOnly),
             other => panic!("a journal fault must fail the admission: {other:?}"),
         }
+        // The degradation is an observable state, not just per-request
+        // errors: HEALTH pins at read_only and the poison count surfaces.
+        let h = d.health_report();
+        assert_eq!(h.state, HealthState::ReadOnly);
+        assert_eq!(h.journal_poisoned, 1);
+        // No probe outcome un-poisons a journal: ReadOnly is sticky.
+        d.probe_health();
+        assert_eq!(d.health_state(), HealthState::ReadOnly);
         // Write-ahead means no scheduler mutation happened.
         let snap = d.read_snapshot();
         assert_eq!(snap.pending + snap.running, 0, "nothing was admitted");
@@ -3172,11 +3583,130 @@ mod tests {
             8,
             9,
         ))) {
-            Response::Error(e) => assert_eq!(e.code, ErrorCode::Internal),
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::ReadOnly),
             other => panic!("{other:?}"),
         }
         // Reads still serve.
         assert_eq!(d.handle(Request::Ping), Response::Pong);
+    }
+
+    // ---- overload control plane --------------------------------------------
+
+    #[test]
+    fn token_bucket_admits_burst_then_hints_retry() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 2.0, t0);
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_ok());
+        let retry = b.try_take(t0).expect_err("burst spent");
+        // 10/s refill: the next token is ~100ms away.
+        assert!((1..=200).contains(&retry), "{retry}");
+        // After enough elapsed time the bucket admits again (and caps at
+        // its burst: a long idle stretch does not bank unlimited tokens).
+        let later = t0 + Duration::from_secs(10);
+        assert!(b.try_take(later).is_ok());
+        assert!(b.try_take(later).is_ok());
+        assert!(b.try_take(later).is_err(), "capacity is the burst, not the idle time");
+    }
+
+    #[test]
+    fn user_rate_limit_sheds_typed_and_isolates_users() {
+        let d = daemon_with(DaemonConfig {
+            speedup: 0.0,
+            overload: OverloadConfig {
+                user_rate: 0.001, // effectively one request per bucket lifetime
+                user_burst: 1.0,
+                ..OverloadConfig::default()
+            },
+            ..DaemonConfig::default()
+        });
+        let submit = |user| {
+            d.handle_line_versioned(
+                &format!("SUBMIT qos=spot type=array tasks=8 user={user}"),
+                ProtocolVersion::V2,
+            )
+            .0
+        };
+        assert!(submit(9).starts_with("OK kind=submit_ack"), "burst token admits");
+        let refused = submit(9);
+        assert!(
+            refused.starts_with("ERR code=overloaded retry_after_ms="),
+            "second request exceeds user 9's bucket: {refused}"
+        );
+        // Another user's bucket is untouched: no cross-user starvation.
+        assert!(submit(10).starts_with("OK kind=submit_ack"), "user 10 unaffected");
+        assert_eq!(d.metrics.shed_rate_limited.load(Ordering::Relaxed), 1);
+        // The shed event drives one probe to Shedding; a quiet probe
+        // after it recovers to Healthy (bounded by one interval).
+        d.probe_health();
+        assert_eq!(d.health_state(), HealthState::Shedding);
+        d.probe_health();
+        assert_eq!(d.health_state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn expired_deadline_drops_before_execution() {
+        let d = daemon();
+        // Fresh budget: executes normally.
+        match d.handle_line_at("deadline_ms=60000 PING", ProtocolVersion::V2, None, Instant::now())
+        {
+            LineOutcome::Done(resp, _) => assert_eq!(resp, "OK pong"),
+            LineOutcome::Parked(_) => panic!("PING cannot park"),
+        }
+        // A budget already spent while queued: dropped typed, unexecuted.
+        let arrived = Instant::now() - Duration::from_millis(50);
+        let before = d.read_snapshot();
+        match d.handle_line_at(
+            "deadline_ms=10 SUBMIT qos=spot type=array tasks=8 user=9",
+            ProtocolVersion::V2,
+            None,
+            arrived,
+        ) {
+            LineOutcome::Done(resp, _) => assert!(
+                resp.starts_with("ERR code=overloaded retry_after_ms=0"),
+                "{resp}"
+            ),
+            LineOutcome::Parked(_) => panic!("expired request cannot park"),
+        }
+        assert_eq!(d.metrics.deadline_expired.load(Ordering::Relaxed), 1);
+        let after = d.read_snapshot();
+        assert_eq!(
+            after.pending + after.running,
+            before.pending + before.running,
+            "the expired SUBMIT never reached the scheduler"
+        );
+        // v1 has no deadline extension: the prefix is not stripped, the
+        // line is simply not a v1 command.
+        match d.handle_line_at(
+            "deadline_ms=10 PING",
+            ProtocolVersion::V1,
+            None,
+            Instant::now(),
+        ) {
+            LineOutcome::Done(resp, _) => assert!(resp.starts_with("ERR "), "{resp}"),
+            LineOutcome::Parked(_) => panic!("cannot park"),
+        }
+    }
+
+    #[test]
+    fn health_verb_reports_state_and_stats_carry_the_block() {
+        let d = daemon();
+        let line = d.handle_line("HEALTH");
+        assert!(line.starts_with("OK health state=healthy"), "{line}");
+        match d.handle(Request::Health) {
+            Response::Health(h) => {
+                assert_eq!(h.state, HealthState::Healthy);
+                assert_eq!(h.inflight, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        match d.handle(Request::Stats) {
+            Response::Stats(s) => {
+                let h = s.health.expect("stats embed the health block");
+                assert_eq!(h.state, HealthState::Healthy);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -3196,6 +3726,7 @@ mod tests {
                     .with_fsync(FsyncPolicy::Never)
                     .with_checkpoint_every(1),
             ),
+            ..DaemonConfig::default()
         };
         let mut ids = Vec::new();
         {

@@ -163,14 +163,30 @@ pub enum FaultPoint {
 /// journal. `Clone` shares the arms (the plan travels inside
 /// `DaemonConfig`, which must stay `Clone`). Each point holds a countdown:
 /// `-1` disarmed, `0` fires on the next hit, `n > 0` lets `n` hits pass
-/// first — which is how a test crashes between shard A's and shard B's
-/// append of one cross-shard admission.
+/// first.
+///
+/// Arms may additionally be *targeted* at one scheduler shard's journal
+/// with [`FaultPlan::arm_for_shard`]: the shared `target` cell names the
+/// shard index the arm applies to, and each shard journal's plan clone
+/// carries its own (non-shared) `scope` stamped by
+/// [`DurabilityConfig::for_shard`]. A hit from any other shard passes
+/// through without even decrementing the countdown — which is how a test
+/// crashes shard 1's append of a cross-shard admission regardless of which
+/// shard the scheduler happens to append first.
 #[derive(Debug, Clone)]
 pub struct FaultPlan {
     after_append: Arc<AtomicI64>,
     after_fsync: Arc<AtomicI64>,
     mid_checkpoint: Arc<AtomicI64>,
     alloc_append: Arc<AtomicI64>,
+    /// Shard index the current arms are confined to; `-1` = any hitter.
+    /// Shared, so one `arm_for_shard` call from the test side is seen by
+    /// every shard journal's clone.
+    target: Arc<AtomicI64>,
+    /// Which shard's journal *this clone* belongs to. Deliberately not
+    /// behind an `Arc`: `for_shard` stamps the clone it hands to shard
+    /// `idx`, while the root plan (and the allocator log's) stay `None`.
+    scope: Option<usize>,
 }
 
 impl Default for FaultPlan {
@@ -189,6 +205,8 @@ impl FaultPlan {
             after_fsync: Arc::new(AtomicI64::new(-1)),
             mid_checkpoint: Arc::new(AtomicI64::new(-1)),
             alloc_append: Arc::new(AtomicI64::new(-1)),
+            target: Arc::new(AtomicI64::new(-1)),
+            scope: None,
         }
     }
 
@@ -203,14 +221,29 @@ impl FaultPlan {
 
     /// Arm a fault: the next time the journal reaches `point` it fails
     /// (once — firing disarms, so recovery can reuse the same config).
+    /// Clears any shard targeting: the arm applies to whichever journal
+    /// hits the point first.
     pub fn arm(&self, point: FaultPoint) {
+        self.target.store(-1, Ordering::SeqCst);
         self.arm_of(point).store(0, Ordering::SeqCst);
     }
 
     /// Arm a fault that lets the first `skip` hits pass and fires on hit
-    /// `skip + 1`. `arm_after(p, 0)` is `arm(p)`.
+    /// `skip + 1`. `arm_after(p, 0)` is `arm(p)`. Untargeted, like `arm`.
     pub fn arm_after(&self, point: FaultPoint, skip: u32) {
+        self.target.store(-1, Ordering::SeqCst);
         self.arm_of(point).store(skip as i64, Ordering::SeqCst);
+    }
+
+    /// Arm a fault confined to scheduler shard `shard`'s journal: hits
+    /// from every other shard pass through without consuming the
+    /// countdown, and shard `shard`'s next hit of `point` fires. This
+    /// pins down *which* WAL of a cross-shard operation crashes, where
+    /// `arm_after(point, n)` could only count global hits and so depended
+    /// on shard append order.
+    pub fn arm_for_shard(&self, shard: usize, point: FaultPoint) {
+        self.target.store(shard as i64, Ordering::SeqCst);
+        self.arm_of(point).store(0, Ordering::SeqCst);
     }
 
     /// Is the fault currently armed (counting down or about to fire)?
@@ -219,16 +252,28 @@ impl FaultPlan {
     }
 
     /// Count down one hit; `true` exactly when the countdown reaches its
-    /// firing point (which disarms it).
+    /// firing point (which disarms it). A hit from outside the targeted
+    /// shard (when one is set) is invisible: no fire, no decrement.
     fn take(&self, point: FaultPoint) -> bool {
-        self.arm_of(point)
+        let target = self.target.load(Ordering::SeqCst);
+        if target >= 0 && self.scope != Some(target as usize) {
+            return false;
+        }
+        let fired = self
+            .arm_of(point)
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| match v {
                 -1 => None,        // disarmed
                 0 => Some(-1),     // fire and disarm
                 n => Some(n - 1),  // let this hit pass
             })
             .map(|prev| prev == 0)
-            .unwrap_or(false)
+            .unwrap_or(false);
+        if fired {
+            // Firing disarms the targeting too, so a later untargeted
+            // `arm` on the same shared plan behaves as documented.
+            self.target.store(-1, Ordering::SeqCst);
+        }
+        fired
     }
 }
 
@@ -288,11 +333,14 @@ impl DurabilityConfig {
     }
 
     /// The same config re-rooted at a scheduler shard's journal directory
-    /// (`<dir>/shard-<idx>`); the fault plan stays shared, so one armed
-    /// countdown spans every shard's journal.
+    /// (`<dir>/shard-<idx>`); the fault plan's arms stay shared, so one
+    /// armed countdown spans every shard's journal — but the clone is
+    /// stamped with the shard index, which is what lets
+    /// [`FaultPlan::arm_for_shard`] confine a fault to this shard's WAL.
     pub fn for_shard(&self, idx: usize) -> DurabilityConfig {
         let mut cfg = self.clone();
         cfg.dir = shard_journal_dir(&self.dir, idx);
+        cfg.faults.scope = Some(idx);
         cfg
     }
 }
@@ -2144,6 +2192,27 @@ mod tests {
         assert!(!plan.take(FaultPoint::AfterAppend));
         plan.arm(FaultPoint::AllocAppend);
         assert!(plan.take(FaultPoint::AllocAppend), "arm = fire on next hit");
+    }
+
+    #[test]
+    fn shard_targeted_fault_ignores_other_shards_hits() {
+        let dir = TempDir::new("wal-targeted-fault");
+        let root = DurabilityConfig::new(dir.path());
+        let shard0 = root.for_shard(0).faults;
+        let shard1 = root.for_shard(1).faults;
+        root.faults.arm_for_shard(1, FaultPoint::AfterAppend);
+        assert!(shard0.armed(FaultPoint::AfterAppend), "arms are shared");
+        // Shard 0 can hammer the point: the countdown is not consumed.
+        for _ in 0..3 {
+            assert!(!shard0.take(FaultPoint::AfterAppend), "wrong shard passes");
+        }
+        assert!(shard1.armed(FaultPoint::AfterAppend));
+        assert!(shard1.take(FaultPoint::AfterAppend), "targeted shard fires");
+        assert!(!shard1.armed(FaultPoint::AfterAppend), "firing disarms");
+        // Firing also cleared the target: a plain `arm` now fires for any
+        // hitter, shard-scoped clone or not.
+        root.faults.arm(FaultPoint::AfterAppend);
+        assert!(shard0.take(FaultPoint::AfterAppend), "untargeted again");
     }
 
     #[test]

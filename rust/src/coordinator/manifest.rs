@@ -24,6 +24,7 @@ use crate::job::{JobSpec, JobType, QosClass, UserId};
 use crate::sim::SimTime;
 use std::fmt;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Cap on entries in one manifest — bounds wire body and admission work
 /// per RPC while staying above the paper's 10k-entry workloads. Sized so a
@@ -335,6 +336,10 @@ struct Assembling {
 #[derive(Debug, Default)]
 pub struct ChunkAssembler {
     state: Option<Assembling>,
+    /// The tightest `deadline_ms=` budget seen across the stream's parts
+    /// (a deadline on any part binds the whole manifest — the final part's
+    /// admission checks it before taking a scheduler lock).
+    deadline: Option<Instant>,
 }
 
 impl ChunkAssembler {
@@ -353,10 +358,29 @@ impl ChunkAssembler {
         self.state.as_ref().map_or(0, |a| a.entries.len() as u64)
     }
 
+    /// Tighten the stream's deadline budget (min across parts).
+    pub fn note_deadline(&mut self, at: Instant) {
+        self.deadline = Some(match self.deadline {
+            Some(cur) => cur.min(at),
+            None => at,
+        });
+    }
+
+    /// The stream's effective deadline, if any part carried one.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Drop the deadline budget (stream completed, errored, or aborted).
+    pub fn clear_deadline(&mut self) {
+        self.deadline = None;
+    }
+
     /// Discard any partial stream (connection close, or an interrupting
     /// verb). Returns `true` if a stream was actually in progress, so the
     /// transport can surface a typed error for the abandoned body.
     pub fn abort(&mut self) -> bool {
+        self.deadline = None;
         self.state.take().is_some()
     }
 

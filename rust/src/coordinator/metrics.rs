@@ -36,6 +36,9 @@ pub struct ReactorShardMetrics {
     pub parked_waits: AtomicU64,
     /// Timer-wheel entries expired on this shard.
     pub timers_fired: AtomicU64,
+    /// Slow-consumer connections this shard evicted (pinned at the write
+    /// backlog cap past the eviction grace deadline).
+    pub evictions: AtomicU64,
 }
 
 impl ReactorShardMetrics {
@@ -48,6 +51,7 @@ impl ReactorShardMetrics {
             connections: AtomicU64::new(0),
             parked_waits: AtomicU64::new(0),
             timers_fired: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -110,6 +114,19 @@ pub struct DaemonMetrics {
     /// do not count). Anything nonzero means some admissions were not
     /// acked durably.
     pub journal_poisoned: AtomicU64,
+    /// `SUBMIT`s refused by the overload control plane (rate limit,
+    /// inflight budget, or read-only journal).
+    pub shed_submits: AtomicU64,
+    /// `MSUBMIT`s (including chunked bodies) refused by the overload
+    /// control plane.
+    pub shed_msubmits: AtomicU64,
+    /// Requests refused by a per-connection or per-user token bucket.
+    pub shed_rate_limited: AtomicU64,
+    /// Requests dropped because their `deadline_ms=` budget expired while
+    /// queued — counted *instead of* executing, never after.
+    pub deadline_expired: AtomicU64,
+    /// Slow-consumer connections the reactor evicted (across all shards).
+    pub conns_evicted: AtomicU64,
     /// Connections accepted by the server front door.
     pub connections_accepted: AtomicU64,
     /// `accept(2)` failures (other than would-block). The accept loop backs
@@ -245,6 +262,7 @@ impl DaemonMetrics {
             "requests_ok={} requests_err={} jobs_submitted={} read_path={} write_locks={} \
              waits={}/{} conns={} accept_errs={} reactor_wakeups={} reactor_events={} \
              pace_offloads={} journal={}/{}s/{}gc/{}poisoned \
+             shed={}sub/{}msub/{}rate/{}deadline/{}evicted \
              | request_wall: {} | sched_virtual: {} | lock_hold: {} | accept_to_first_byte: {}",
             self.requests_ok.load(Ordering::Relaxed),
             self.requests_err.load(Ordering::Relaxed),
@@ -262,6 +280,11 @@ impl DaemonMetrics {
             self.journal_synced_appends.load(Ordering::Relaxed),
             self.journal_group_commits.load(Ordering::Relaxed),
             self.journal_poisoned.load(Ordering::Relaxed),
+            self.shed_submits.load(Ordering::Relaxed),
+            self.shed_msubmits.load(Ordering::Relaxed),
+            self.shed_rate_limited.load(Ordering::Relaxed),
+            self.deadline_expired.load(Ordering::Relaxed),
+            self.conns_evicted.load(Ordering::Relaxed),
             self.request_latency().summary_ns(),
             self.sched_latency().summary_ns(),
             self.lock_hold().summary_ns(),

@@ -70,12 +70,13 @@ pub mod threadpool;
 pub mod timerwheel;
 
 pub use api::{
-    ApiError, ContentionStats, ErrorCode, JobDetail, JobSummary, JournalStats, ProtocolVersion,
-    Request, Response, ResumeEntry, ResumeInfo, ResumeTarget, ShardKind, ShardStats, ShardUtil,
-    SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec, UtilSnapshot, WaitResult,
+    ApiError, ContentionStats, ErrorCode, HealthReport, HealthState, JobDetail, JobSummary,
+    JournalStats, ProtocolVersion, Request, Response, ResumeEntry, ResumeInfo, ResumeTarget,
+    ShardKind, ShardStats, ShardUtil, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec,
+    UtilSnapshot, WaitResult,
 };
 pub use client::{Client, ClientError, RetryPolicy};
-pub use daemon::{ConfigError, Daemon, DaemonConfig};
+pub use daemon::{ConfigError, Daemon, DaemonConfig, OverloadConfig, TokenBucket};
 pub use journal::{
     AllocLease, AllocLog, DurabilityConfig, FaultPlan, FaultPoint, FsyncPolicy, Journal,
     JournalError,

@@ -44,12 +44,13 @@
 //!   the daemon. Shard counters record *in addition to* the daemon-wide
 //!   roll-ups, so aggregate gates keep meaning "across all shards".
 
-use super::daemon::{Daemon, LineOutcome};
+use super::codec;
+use super::daemon::{Daemon, LineOutcome, TokenBucket};
 use super::manifest::ChunkAssembler;
 use super::metrics::ReactorShardMetrics;
 use super::threadpool::ThreadPool;
 use super::timerwheel::TimerWheel;
-use crate::coordinator::api::ProtocolVersion;
+use crate::coordinator::api::{ApiError, ProtocolVersion, Response};
 use std::io::{self, Read, Write};
 use std::net::{Ipv4Addr, SocketAddrV4, TcpListener, TcpStream};
 use std::os::raw::{c_int, c_uint, c_void};
@@ -370,6 +371,13 @@ const MAX_BUFFERED_BYTES: usize = 4 * 1024 * 1024;
 /// overshoot the cap, so per-connection memory stays bounded.
 const MAX_WRITE_BACKLOG: usize = 4 * 1024 * 1024;
 
+/// How long a connection may stay pinned at [`MAX_WRITE_BACKLOG`] before
+/// the reactor evicts it. Backpressure alone caps the *per-connection*
+/// memory but lets a peer that never reads hold its buffered responses
+/// forever; past this grace the connection is closed and counted
+/// ([`ReactorShardMetrics::evictions`]), freeing the backlog.
+const EVICT_GRACE: Duration = Duration::from_secs(5);
+
 /// Shrink a drained per-connection buffer back down once its burst-sized
 /// allocation would otherwise be retained for the connection's lifetime.
 const BUF_SHRINK_THRESHOLD: usize = 64 * 1024;
@@ -416,6 +424,14 @@ struct Conn {
     accepted_at: Instant,
     /// First response byte has been written (metric recorded).
     first_byte_sent: bool,
+    /// Per-connection request-line token bucket
+    /// ([`super::daemon::OverloadConfig::conn_rate`]); `None` when the
+    /// limit is disabled. Refusals are rendered directly on the reactor
+    /// thread — an over-rate line never costs a worker turn.
+    bucket: Option<TokenBucket>,
+    /// A slow-consumer eviction deadline is in the wheel (armed when the
+    /// write backlog pins at [`MAX_WRITE_BACKLOG`]; the timer re-checks).
+    evict_armed: bool,
 }
 
 impl Conn {
@@ -470,6 +486,9 @@ enum TimerItem {
     WaitDeadline(u64),
     /// Retry `accept(2)` after an error backoff.
     AcceptRetry,
+    /// Slow-consumer check: still pinned at the write-backlog cap when
+    /// this fires → evict the connection.
+    EvictDeadline(u64),
 }
 
 /// Completed request lines coming back from the worker pool.
@@ -733,6 +752,12 @@ impl<'a> Reactor<'a> {
         stream.set_nodelay(true).ok();
         let fd = stream.as_raw_fd();
         let now = Instant::now();
+        let ov = self.daemon.overload_config();
+        let bucket = if ov.conn_rate > 0.0 {
+            Some(TokenBucket::new(ov.conn_rate, ov.conn_burst, now))
+        } else {
+            None
+        };
         let conn = Conn {
             stream,
             read_buf: Vec::new(),
@@ -751,6 +776,8 @@ impl<'a> Reactor<'a> {
             idle_timer_armed: true,
             accepted_at: now,
             first_byte_sent: false,
+            bucket,
+            evict_armed: false,
         };
         let tok = self.slab.insert(conn);
         if let Err(e) = self.epoll.ctl(EPOLL_CTL_ADD, fd, EPOLLIN | EPOLLET, tok) {
@@ -874,7 +901,7 @@ impl<'a> Reactor<'a> {
             return;
         }
         loop {
-            let line = {
+            let (line, refused) = {
                 let Some(conn) = self.slab.get_mut(tok) else { return };
                 if conn.busy || conn.parked.is_some() || conn.dead {
                     return;
@@ -882,8 +909,16 @@ impl<'a> Reactor<'a> {
                 // Response backpressure: don't execute further pipelined
                 // requests for a peer that is not reading its responses.
                 // The EPOLLOUT flush path re-enters advance_conn when the
-                // backlog drains.
+                // backlog drains. A peer that *stays* pinned here is a
+                // slow consumer: arm the eviction deadline — the timer
+                // re-checks, and a backlog still at the cap closes the
+                // connection and frees its buffered responses.
                 if conn.write_buf.len() - conn.write_pos > MAX_WRITE_BACKLOG {
+                    if !conn.evict_armed {
+                        conn.evict_armed = true;
+                        self.wheel
+                            .insert(Instant::now() + EVICT_GRACE, TimerItem::EvictDeadline(tok));
+                    }
                     return;
                 }
                 match conn.take_line() {
@@ -892,11 +927,40 @@ impl<'a> Reactor<'a> {
                         if line.is_empty() {
                             continue; // blank keep-alive line
                         }
-                        conn.busy = true;
-                        line
+                        // Per-connection rate limit: an over-rate line is
+                        // refused right here on the reactor thread — no
+                        // worker turn, no scheduler lock, just a rendered
+                        // `overloaded` with the bucket's retry hint.
+                        let refused = match conn.bucket.as_mut() {
+                            Some(bucket) => bucket.try_take(Instant::now()).err(),
+                            None => None,
+                        };
+                        if refused.is_none() {
+                            conn.busy = true;
+                        }
+                        (line, refused)
                     }
                 }
             };
+            if let Some(retry_ms) = refused {
+                self.daemon
+                    .metrics
+                    .shed_rate_limited
+                    .fetch_add(1, Ordering::Relaxed);
+                let (version, _) = match self.slab.get_mut(tok) {
+                    Some(conn) => (conn.version, ()),
+                    None => return,
+                };
+                let resp = codec::render_response(
+                    &Response::Error(ApiError::overloaded(
+                        "connection request rate limit exceeded",
+                        retry_ms,
+                    )),
+                    version,
+                );
+                self.queue_response(tok, &resp);
+                continue; // the next pipelined line may be in budget later
+            }
             let (version, chunks) = match self.slab.get_mut(tok) {
                 Some(conn) => (conn.version, Arc::clone(&conn.chunks)),
                 None => return,
@@ -904,10 +968,13 @@ impl<'a> Reactor<'a> {
             self.comps.inflight.fetch_add(1, Ordering::SeqCst);
             let daemon = Arc::clone(&self.daemon);
             let comps = Arc::clone(&self.comps);
+            // Stamped before the pool queue so a `deadline_ms=` budget
+            // covers worker-queue time (see [`Daemon::handle_line_at`]).
+            let arrived = Instant::now();
             self.pool.execute(move || {
                 let outcome = {
                     let mut asm = chunks.lock().expect("chunk assembler poisoned");
-                    daemon.handle_line_stateful(&line, version, Some(&mut asm))
+                    daemon.handle_line_at(&line, version, Some(&mut asm), arrived)
                 };
                 comps
                     .queue
@@ -1074,7 +1141,30 @@ impl<'a> Reactor<'a> {
                     self.accept_paused_until = None;
                     self.drain_accept();
                 }
+                TimerItem::EvictDeadline(tok) => self.on_evict_timer(tok),
             }
+        }
+    }
+
+    /// The eviction deadline fired: a connection still pinned at the
+    /// write-backlog cap is a slow consumer — close it, count it, and let
+    /// the drop free its buffered responses. A backlog that drained in
+    /// the meantime just disarms (a later pin re-arms a fresh grace).
+    fn on_evict_timer(&mut self, tok: u64) {
+        let evict = match self.slab.get_mut(tok) {
+            None => return, // slot freed or reused: stale entry
+            Some(conn) => {
+                conn.evict_armed = false;
+                !conn.dead && conn.write_buf.len() - conn.write_pos > MAX_WRITE_BACKLOG
+            }
+        };
+        if evict {
+            self.daemon
+                .metrics
+                .conns_evicted
+                .fetch_add(1, Ordering::Relaxed);
+            self.shard.evictions.fetch_add(1, Ordering::Relaxed);
+            self.close_token(tok);
         }
     }
 
@@ -1352,6 +1442,8 @@ mod tests {
                 idle_timer_armed: false,
                 accepted_at: now,
                 first_byte_sent: false,
+                bucket: None,
+                evict_armed: false,
             }
         }
         let mut slab = Slab::default();
@@ -1389,6 +1481,8 @@ mod tests {
             idle_timer_armed: false,
             accepted_at: now,
             first_byte_sent: false,
+            bucket: None,
+            evict_armed: false,
         };
         conn.read_buf.extend_from_slice(b"PI");
         assert!(conn.take_line().is_none());

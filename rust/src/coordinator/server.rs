@@ -37,8 +37,9 @@ use std::time::Duration;
 
 #[cfg(not(target_os = "linux"))]
 use {
-    super::api::{ProtocolVersion, Response},
-    super::daemon::{LineOutcome, ParkedWait},
+    super::api::{ApiError, ProtocolVersion, Response},
+    super::codec,
+    super::daemon::{LineOutcome, ParkedWait, TokenBucket},
     super::manifest::ChunkAssembler,
     std::io::{BufRead, BufReader, Write},
     std::net::TcpStream,
@@ -241,7 +242,13 @@ impl Server {
                         .metrics
                         .connections_accepted
                         .fetch_add(1, Ordering::Relaxed);
-                    match Conn::new(stream, self.idle_timeout) {
+                    let ov = self.daemon.overload_config();
+                    let bucket = if ov.conn_rate > 0.0 {
+                        Some(TokenBucket::new(ov.conn_rate, ov.conn_burst, Instant::now()))
+                    } else {
+                        None
+                    };
+                    match Conn::new(stream, self.idle_timeout, bucket) {
                         Ok(conn) => {
                             let daemon = Arc::clone(&self.daemon);
                             let parked = Arc::clone(&self.parked);
@@ -423,6 +430,10 @@ struct Conn {
     last_activity: Instant,
     accepted_at: Instant,
     first_byte_sent: bool,
+    /// Per-connection request-line token bucket
+    /// ([`super::daemon::OverloadConfig::conn_rate`]); `None` when the
+    /// limit is disabled.
+    bucket: Option<TokenBucket>,
 }
 
 /// Why a connection left its serve loop.
@@ -436,7 +447,7 @@ enum ConnExit {
 
 #[cfg(not(target_os = "linux"))]
 impl Conn {
-    fn new(stream: TcpStream, idle_timeout: Duration) -> Result<Self> {
+    fn new(stream: TcpStream, idle_timeout: Duration, bucket: Option<TokenBucket>) -> Result<Self> {
         stream.set_nodelay(true).ok();
         // Short poll timeout so idle connections observe daemon shutdown
         // (and their own idle expiry) promptly — a long blocking read would
@@ -456,6 +467,7 @@ impl Conn {
             last_activity: Instant::now(),
             accepted_at: Instant::now(),
             first_byte_sent: false,
+            bucket,
         })
     }
 
@@ -469,14 +481,40 @@ impl Conn {
             match self.reader.read_line(&mut self.line) {
                 Ok(0) => return ConnExit::Closed, // peer closed
                 Ok(_) => {
-                    self.last_activity = Instant::now();
+                    let arrived = Instant::now();
+                    self.last_activity = arrived;
                     let trimmed = self.line.trim_end_matches(['\n', '\r']).to_string();
                     self.line.clear();
                     if trimmed.is_empty() {
                         continue;
                     }
-                    match daemon.handle_line_stateful(&trimmed, self.version, Some(&mut self.chunks))
-                    {
+                    // Per-connection rate limit: an over-rate line is
+                    // refused before it reaches the daemon.
+                    if let Some(bucket) = self.bucket.as_mut() {
+                        if let Err(retry_ms) = bucket.try_take(arrived) {
+                            daemon
+                                .metrics
+                                .shed_rate_limited
+                                .fetch_add(1, Ordering::Relaxed);
+                            let resp = codec::render_response(
+                                &Response::Error(ApiError::overloaded(
+                                    "connection request rate limit exceeded",
+                                    retry_ms,
+                                )),
+                                self.version,
+                            );
+                            if self.write_response(&resp).is_err() {
+                                return ConnExit::Closed; // peer gone
+                            }
+                            continue;
+                        }
+                    }
+                    match daemon.handle_line_at(
+                        &trimmed,
+                        self.version,
+                        Some(&mut self.chunks),
+                        arrived,
+                    ) {
                         LineOutcome::Done(resp, negotiated) => {
                             if let Some(v) = negotiated {
                                 self.version = v;

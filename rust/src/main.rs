@@ -31,7 +31,7 @@ fn main() {
         Some("daemon") => cmd_daemon(&args[1..]),
         Some(
             c @ ("submit" | "msubmit" | "squeue" | "sjob" | "scancel" | "wait" | "resume"
-            | "stats" | "util" | "shutdown" | "ping"),
+            | "stats" | "util" | "health" | "shutdown" | "ping"),
         ) => cmd_client(c, &args[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -57,7 +57,7 @@ fn print_usage() {
            daemon                start the coordinator daemon\n\
                                  (--journal <dir> enables the write-ahead journal; an existing\n\
                                   journal is replayed on start — crash recovery)\n\
-           submit|msubmit|squeue|sjob|scancel|wait|resume|stats|util|ping|shutdown   client commands\n\
+           submit|msubmit|squeue|sjob|scancel|wait|resume|stats|util|health|ping|shutdown   client commands\n\
            (msubmit <file|->: one manifest entry per line, `qos=.. type=.. tasks=.. user=..\n\
             [cores_per_task=..] [run_secs=..] [count=..] [tag=..]`; # comments allowed)\n\
            (resume <tag> | resume --manifest <id>: re-attach after a crash or disconnect,\n\
@@ -365,6 +365,7 @@ fn cmd_client(subcmd: &str, args: &[String]) -> i32 {
         "shutdown" => client.shutdown().map(|()| "shutting down".to_string()),
         "stats" => client.stats().map(render_stats),
         "util" => client.util().map(|u| u.to_string()),
+        "health" => client.health().map(render_health),
         "submit" => {
             let qos = parsed.get("qos").unwrap_or("normal");
             let Some(qos) = api::parse_qos(qos) else {
@@ -632,6 +633,28 @@ fn render_job(d: spotcloud::coordinator::JobDetail) -> String {
     )
 }
 
+fn render_health(h: spotcloud::coordinator::HealthReport) -> String {
+    format!(
+        "state={} since={:.1}s inflight={}/{}\n\
+         shed: submits={} msubmits={} rate_limited={} deadline_expired={} conns_evicted={}\n\
+         journal_poisoned={}",
+        h.state,
+        h.since_secs,
+        h.inflight,
+        if h.inflight_budget == 0 {
+            "unbounded".to_string()
+        } else {
+            h.inflight_budget.to_string()
+        },
+        h.shed_submits,
+        h.shed_msubmits,
+        h.rate_limited,
+        h.deadline_expired,
+        h.conns_evicted,
+        h.journal_poisoned,
+    )
+}
+
 fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
     let commands = s
         .commands
@@ -666,6 +689,22 @@ fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
             )
         })
         .unwrap_or_default();
+    let health = s
+        .health
+        .map(|h| {
+            format!(
+                "\nhealth: state={} inflight={} shed_submits={} shed_msubmits={} \
+                 rate_limited={} deadline_expired={} conns_evicted={}",
+                h.state,
+                h.inflight,
+                h.shed_submits,
+                h.shed_msubmits,
+                h.rate_limited,
+                h.deadline_expired,
+                h.conns_evicted,
+            )
+        })
+        .unwrap_or_default();
     let shards = if s.shards.is_empty() {
         String::new()
     } else {
@@ -690,7 +729,7 @@ fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
         "virtual_now={:.1}s dispatches={} preemptions={} requeues={} cron_passes={} \
          main_passes={} backfill_passes={} triggered_passes={} scorer={}\n\
          requests: ok={} err={} jobs_submitted={} | sched latency: n={} p50={:.3}s\n\
-         commands: {commands}{contention}{journal}{shards}",
+         commands: {commands}{contention}{journal}{health}{shards}",
         s.virtual_now_secs,
         s.dispatches,
         s.preemptions,

@@ -3,8 +3,8 @@
 
 use spotcloud::cluster::{topology, PartitionLayout};
 use spotcloud::coordinator::{
-    client::Client, Daemon, DaemonConfig, ErrorCode, ManifestBuilder, ManifestEntry, Server,
-    SubmitSpec,
+    client::Client, Daemon, DaemonConfig, ErrorCode, HealthState, ManifestBuilder, ManifestEntry,
+    OverloadConfig, Server, SubmitSpec,
 };
 use spotcloud::job::{JobType, QosClass};
 use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
@@ -508,6 +508,241 @@ fn shutdown_drains_parked_waits_on_every_reactor_shard() {
     let parked = daemon.metrics.waits_parked.load(std::sync::atomic::Ordering::Relaxed);
     let resumed = daemon.metrics.waits_resumed.load(std::sync::atomic::Ordering::Relaxed);
     assert_eq!(parked, resumed, "a parked WAIT was dropped at shutdown");
+}
+
+// ---- overload control plane ------------------------------------------------
+
+/// A daemon with the overload control plane armed (per-user token buckets,
+/// admission budget, health probe riding the pacer).
+fn spawn_overload_daemon(ov: OverloadConfig) -> (Arc<Daemon>, String, std::thread::JoinHandle<()>) {
+    let cfg = SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual)
+        // Shedding is what these tests exercise, not per-user admission caps.
+        .with_user_limit(100_000);
+    let daemon = Daemon::new(
+        topology::tx2500(),
+        cfg,
+        DaemonConfig {
+            speedup: 5_000.0,
+            pacer_tick_ms: 1,
+            retire_grace_secs: Some(86_400.0),
+            overload: ov,
+            ..DaemonConfig::default()
+        },
+    );
+    Arc::clone(&daemon).spawn_pacer();
+    let server = Server::bind(Arc::clone(&daemon), "127.0.0.1:0", 2).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve());
+    (daemon, addr, handle)
+}
+
+#[test]
+fn batch_flood_sheds_typed_while_interactive_waits_resolve() {
+    let (daemon, addr, server) = spawn_overload_daemon(OverloadConfig {
+        user_rate: 0.001,
+        user_burst: 3.0,
+        ..OverloadConfig::default()
+    });
+    // Interactive session on its own connection and user.
+    let mut interactive = Client::connect_v2(&addr).unwrap();
+    let ack = interactive
+        .submit(&SubmitSpec::new(QosClass::Normal, JobType::Individual, 1, 1).with_run_secs(1.0))
+        .unwrap();
+    // Batch flood: user 9 burns its burst, then every further submission
+    // sheds with the typed `overloaded` + retry hint on the wire.
+    let mut flood = Client::connect_v2(&addr).unwrap();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for _ in 0..40 {
+        let resp = flood.request("SUBMIT qos=spot type=array tasks=4 user=9").unwrap();
+        if resp.starts_with("OK kind=submit_ack") {
+            ok += 1;
+        } else {
+            assert!(resp.starts_with("ERR code=overloaded retry_after_ms="), "{resp}");
+            shed += 1;
+        }
+    }
+    assert_eq!(ok, 3, "the burst admits, the flood sheds");
+    assert_eq!(shed, 37);
+    // The flood never touched the interactive path: the WAIT resolves.
+    let ids: Vec<u64> = ack.ids().collect();
+    let w = interactive.wait(&ids, 10.0).unwrap();
+    assert!(!w.timed_out, "{w:?}");
+    // Keep the pressure on until a probe reports it — `shedding` is a
+    // derived observation, so the flood must still be hot when it lands.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while interactive.health().unwrap().state != HealthState::Shedding {
+        let resp = flood.request("SUBMIT qos=spot type=array tasks=4 user=9").unwrap();
+        assert!(resp.starts_with("ERR code=overloaded"), "{resp}");
+        shed += 1;
+        assert!(Instant::now() < deadline, "daemon never reported shedding");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let h = interactive.health().unwrap();
+    assert!(h.rate_limited >= shed, "{h:?}");
+    // Flood gone: the daemon recovers to healthy within a probe interval.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while interactive.health().unwrap().state != HealthState::Healthy {
+        assert!(Instant::now() < deadline, "daemon never recovered to healthy");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn rate_limited_user_cannot_starve_another_user() {
+    let (daemon, addr, server) = spawn_overload_daemon(OverloadConfig {
+        user_rate: 0.001,
+        user_burst: 8.0,
+        ..OverloadConfig::default()
+    });
+    let mut hog = Client::connect_v2(&addr).unwrap();
+    let mut victim = Client::connect_v2(&addr).unwrap();
+    let mut hog_shed = 0u64;
+    for i in 0..24u32 {
+        let r = hog.request("SUBMIT qos=spot type=array tasks=8 user=9").unwrap();
+        if !r.starts_with("OK kind=submit_ack") {
+            assert!(r.starts_with("ERR code=overloaded retry_after_ms="), "{r}");
+            hog_shed += 1;
+        }
+        // Interleaved: user 1 spends its own, independent budget.
+        if i % 4 == 0 {
+            let r = victim
+                .request("SUBMIT qos=normal type=individual tasks=1 user=1")
+                .unwrap();
+            assert!(r.starts_with("OK kind=submit_ack"), "user 1 starved: {r}");
+        }
+    }
+    assert_eq!(hog_shed, 16, "user 9: 8 admitted on the burst, 16 shed");
+    // STATS carries the shed block for operators.
+    let stats = victim.stats().unwrap();
+    let h = stats.health.expect("stats health block");
+    assert!(h.rate_limited >= 16, "{h:?}");
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn expired_deadline_mid_stream_never_reaches_the_scheduler() {
+    // A chunked MSUBMIT whose deadline budget runs out between parts: the
+    // next part is refused with the typed `overloaded` (retry_after_ms=0 —
+    // retrying won't help, the budget is spent), the partial manifest is
+    // discarded, and the scheduler never sees a job. Counter-asserted.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let (daemon, addr, server) = spawn_overload_daemon(OverloadConfig::default());
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let read_response = |reader: &mut BufReader<TcpStream>| -> String {
+        let mut out = String::new();
+        loop {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).expect("read");
+            assert!(n > 0, "server closed mid-response (got {out:?})");
+            if line == "\n" {
+                break;
+            }
+            out.push_str(&line);
+        }
+        out.trim_end_matches('\n').to_string()
+    };
+    writer.write_all(b"HELLO v2.1\n").unwrap();
+    writer.flush().unwrap();
+    assert_eq!(read_response(&mut reader), "OK kind=hello proto=v2.1");
+    writer
+        .write_all(
+            b"deadline_ms=50 MSUBMIT entries=2 part=1/2;qos=normal type=array tasks=4 user=1\n",
+        )
+        .unwrap();
+    writer.flush().unwrap();
+    let resp = read_response(&mut reader);
+    assert!(resp.starts_with("OK kind=chunk_ack part=1"), "{resp}");
+    // Burn the budget, then deliver part 2.
+    std::thread::sleep(Duration::from_millis(200));
+    writer
+        .write_all(b"MSUBMIT entries=2 part=2/2;qos=spot type=array tasks=8 user=9\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let resp = read_response(&mut reader);
+    assert!(resp.starts_with("ERR code=overloaded retry_after_ms=0"), "{resp}");
+    // Nothing reached the scheduler, and the drop was counted.
+    assert_eq!(
+        daemon.metrics.deadline_expired.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    let mut c = Client::connect_v2(&addr).unwrap();
+    assert!(c.squeue(&Default::default()).unwrap().is_empty());
+    let h = c.health().unwrap();
+    assert_eq!(h.deadline_expired, 1, "{h:?}");
+    // The connection is still in sync: a fresh stream from part 1 lands.
+    writer
+        .write_all(b"MSUBMIT entries=1 part=1/1;qos=normal type=array tasks=4 user=1\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let resp = read_response(&mut reader);
+    assert!(resp.starts_with("OK kind=manifest_ack accepted=1"), "{resp}");
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+/// A connection that stops reading while pinned over the write-backlog cap
+/// is evicted after the grace period — counted, closed, memory freed.
+/// Linux-only: eviction lives on the reactor's timer wheel.
+#[cfg(target_os = "linux")]
+#[test]
+fn slow_consumer_is_evicted_and_its_connection_closed() {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    let (daemon, addr, server) = spawn_overload_daemon(OverloadConfig::default());
+    // Enough queued jobs that one SQUEUE response is megabytes of rows.
+    let mut c = Client::connect_v2(&addr).unwrap();
+    c.submit(
+        &SubmitSpec::new(QosClass::Spot, JobType::Individual, 1, 9)
+            .with_run_secs(86_400.0)
+            .with_count(30_000),
+    )
+    .unwrap();
+    // The slow consumer: pipeline SQUEUEs and never read a byte. Kernel
+    // buffers absorb a few responses; the rest pins the reactor-side
+    // write backlog over MAX_WRITE_BACKLOG.
+    let mut slow = TcpStream::connect(&addr).unwrap();
+    slow.set_nodelay(true).unwrap();
+    for _ in 0..16 {
+        slow.write_all(b"SQUEUE\n").unwrap();
+    }
+    slow.flush().unwrap();
+    // The eviction timer fires after the grace period (5s): the counter
+    // moves and the socket is closed under the reader.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while daemon.metrics.conns_evicted.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "slow consumer never evicted");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // Drain until EOF: a closed connection, not a hung one. (The kernel
+    // still delivers what was buffered before the close.)
+    slow.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        match slow.read(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) => panic!("evicted socket should EOF, not {e}"),
+        }
+    }
+    // The reactor shard counted it too.
+    let shard_evictions: u64 = daemon
+        .metrics
+        .reactor_shards()
+        .iter()
+        .map(|s| s.evictions.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert!(shard_evictions >= 1);
+    // Healthy daemon throughout: a well-behaved client still serves.
+    c.ping().unwrap();
+    daemon.shutdown();
+    server.join().unwrap();
 }
 
 #[test]

@@ -110,7 +110,7 @@ fn crash_before_fsync_loses_only_the_unacked_submission() {
             // record is lost AND the client was never acked.
             faults.arm(FaultPoint::AfterAppend);
             let err = submit_spot(&d, 16).expect_err("faulted submission must not ack");
-            assert_eq!(err, ErrorCode::Internal, "shards={shards}");
+            assert_eq!(err, ErrorCode::ReadOnly, "shards={shards}");
             d.shutdown();
         }
         let (d, report) =
@@ -139,7 +139,7 @@ fn crash_after_fsync_resurrects_the_durable_unacked_submission() {
             // documented at-least-once edge.
             faults.arm(FaultPoint::AfterFsync);
             let err = submit_spot(&d, 16).expect_err("the crash swallowed the ack");
-            assert_eq!(err, ErrorCode::Internal, "shards={shards}");
+            assert_eq!(err, ErrorCode::ReadOnly, "shards={shards}");
             d.shutdown();
         }
         let (d, report) =
@@ -172,7 +172,7 @@ fn crash_mid_checkpoint_falls_back_to_the_previous_segments() {
             b = submit_spot(&d, 16)
                 .expect("second ack (checkpoint failure is not an admission failure)");
             // The poisoned journal degrades the daemon to read-only.
-            assert_eq!(submit_spot(&d, 4), Err(ErrorCode::Internal), "shards={shards}");
+            assert_eq!(submit_spot(&d, 4), Err(ErrorCode::ReadOnly), "shards={shards}");
             d.shutdown();
         }
         let (d, report) =
@@ -241,7 +241,7 @@ fn torn_alloc_log_fails_the_admission_and_recovery_survives_it() {
         acked = submit_spot(&d, 8).expect("pre-crash submission acks");
         faults.arm(FaultPoint::AllocAppend);
         let err = submit_spot(&d, 16).expect_err("a torn lease record must not ack");
-        assert_eq!(err, ErrorCode::Internal);
+        assert_eq!(err, ErrorCode::ReadOnly);
         d.shutdown();
     }
     let (d, report) = Daemon::recover(topology::tx2500(), sched_cfg(), cfg)
@@ -261,10 +261,11 @@ fn torn_alloc_log_fails_the_admission_and_recovery_survives_it() {
 #[test]
 fn crash_between_shard_appends_drops_the_whole_cross_shard_lease() {
     // One manifest spanning both shards is one id-range lease with a part
-    // in each shard journal. The countdown fault lets the first shard's
-    // part land and "crashes" before the second's: the client is never
-    // acked, and recovery must drop the lease *atomically* — replaying
-    // shard A's part alone would resurrect half a manifest.
+    // in each shard journal. The shard-targeted fault lets shard 0's part
+    // land and "crashes" shard 1's append — regardless of which shard the
+    // scheduler appends first: the client is never acked, and recovery
+    // must drop the lease *atomically* — replaying shard 0's part alone
+    // would resurrect half a manifest.
     let tmp = TempDir::new("spotcloud-dur-xshard");
     let dcfg = DurabilityConfig::new(tmp.path()).with_fsync(FsyncPolicy::Always);
     let faults = dcfg.faults.clone();
@@ -272,13 +273,13 @@ fn crash_between_shard_appends_drops_the_whole_cross_shard_lease() {
     {
         let d = Daemon::new(topology::tx2500(), sched_cfg(), cfg.clone());
         submit_spot(&d, 8).expect("pre-crash submission acks");
-        faults.arm_after(FaultPoint::AfterAppend, 1);
+        faults.arm_for_shard(1, FaultPoint::AfterAppend);
         let m = ManifestBuilder::new()
             .interactive(1, JobType::Array, 8)
             .spot(9, JobType::Array, 16)
             .build();
         match d.handle(Request::MSubmit(m)) {
-            Response::Error(e) => assert_eq!(e.code, ErrorCode::Internal),
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::ReadOnly),
             other => panic!("the half-journaled manifest must fail unacked: {other:?}"),
         }
         d.shutdown();
