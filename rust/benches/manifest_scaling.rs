@@ -7,9 +7,11 @@
 //! is written **before** the health asserts run, so a regressed run still
 //! surfaces its numbers in the CI artifact.
 //!
-//! Gate: heterogeneous manifest admission must cost ≤ 1.5× the homogeneous
+//! Gates: heterogeneous manifest admission must cost ≤ 1.5× the homogeneous
 //! batch per job (the manifest generalizes the batch path; per-entry
-//! validation and range bookkeeping must not reintroduce a per-job tax).
+//! validation and range bookkeeping must not reintroduce a per-job tax),
+//! and the v3 binary manifest codec must parse ≥ 2× the v2 text entry
+//! throughput with zero errors (the wire fast path has to pay for itself).
 //!
 //! `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke configuration.
 
@@ -28,6 +30,7 @@ fn main() {
     );
     let report = run_manifest_scaling(&cfg);
     eprintln!("{}", report.summary());
+    eprintln!("{}", report.parse_summary());
 
     let path =
         std::env::var("SPOTCLOUD_BENCH_JSON").unwrap_or_else(|_| "BENCH_manifest.json".into());
@@ -48,5 +51,15 @@ fn main() {
         report.manifest_vs_homog_ratio <= 1.5,
         "heterogeneous manifest admission costs {:.2}x the homogeneous batch per job (gate 1.5x)",
         report.manifest_vs_homog_ratio,
+    );
+    assert_eq!(
+        report.v3_parse_errors, 0,
+        "v3 binary parse errored or round-tripped unequal: {report:?}"
+    );
+    assert!(
+        report.v3_vs_v2_parse_ratio >= 2.0,
+        "v3 binary parse is only {:.2}x v2 text throughput (gate 2x): {}",
+        report.v3_vs_v2_parse_ratio,
+        report.parse_summary(),
     );
 }

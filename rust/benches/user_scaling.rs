@@ -1,0 +1,53 @@
+//! CI bench gate: user-cardinality scaling (see `benchkit::user_scaling`).
+//!
+//! Drives Zipf-distributed submissions from 1k → 100k → 1M distinct users
+//! through the public `MSUBMIT` admission path and emits
+//! `BENCH_users.json` (override with `SPOTCLOUD_BENCH_JSON`). The JSON is
+//! written **before** the health asserts run, so a regressed run still
+//! surfaces its numbers in the CI artifact.
+//!
+//! Gate: per-job admission cost at the largest level must stay ≤ 2× the
+//! smallest level's — the per-(qos,user) bucket design promises near-flat
+//! cost in user count, and this is where that promise is held.
+//!
+//! `SPOTCLOUD_BENCH_FAST=1` switches to the sub-second smoke configuration.
+
+use spotcloud::benchkit::user_scaling::{run_user_scaling, UserScalingConfig};
+
+fn main() {
+    let fast = std::env::var("SPOTCLOUD_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = if fast {
+        UserScalingConfig::quick()
+    } else {
+        UserScalingConfig::default()
+    };
+    eprintln!(
+        "user_scaling: levels {:?} distinct users (Zipf s={}), {} iters",
+        cfg.levels, cfg.exponent, cfg.iters
+    );
+    let report = run_user_scaling(&cfg);
+    eprintln!("{}", report.summary());
+
+    let path = std::env::var("SPOTCLOUD_BENCH_JSON").unwrap_or_else(|_| "BENCH_users.json".into());
+    std::fs::write(&path, report.to_json()).expect("writing bench json");
+    println!("wrote {path}");
+
+    // Gates run AFTER the JSON write so a regressed run still surfaces its
+    // numbers in the CI artifact.
+    assert!(
+        report.all_accepted,
+        "a user-scaling entry was rejected: {report:?}"
+    );
+    assert!(
+        report.gauges_cover_users,
+        "STATS user gauges under-counted a level: {report:?}"
+    );
+    assert!(
+        report.cost_ratio_max_vs_min <= 2.0,
+        "per-job admission at {} users costs {:.2}x the {}-user level (gate 2x): {}",
+        report.levels.last().map(|l| l.users).unwrap_or(0),
+        report.cost_ratio_max_vs_min,
+        report.levels.first().map(|l| l.users).unwrap_or(0),
+        report.summary(),
+    );
+}

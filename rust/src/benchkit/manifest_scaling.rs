@@ -17,9 +17,17 @@
 //! scheduler lock, snapshot publish — from dispatch work. CI gates on the
 //! manifest's per-job overhead staying within 1.5× of the homogeneous
 //! batch: heterogeneity must not reintroduce a per-job penalty.
+//!
+//! A fourth section races the **codecs** head-to-head on the same
+//! manifest's wire bytes: one v2 `MSUBMIT` text line through
+//! [`codec::parse_request`] vs one v3 binary frame payload through
+//! [`codec::parse_msubmit_v3`]. CI gates v3 parsing at ≥ 2× the v2
+//! entry throughput with zero parse errors — the varint record format
+//! has to actually buy its keep before a client defaults to it.
 
 use crate::cluster::{topology, PartitionLayout};
-use crate::coordinator::api::{Request, Response, SubmitSpec};
+use crate::coordinator::api::{ProtocolVersion, Request, Response, SubmitSpec};
+use crate::coordinator::codec;
 use crate::coordinator::{Daemon, DaemonConfig};
 use crate::job::{JobType, QosClass};
 use crate::sched::SchedulerConfig;
@@ -89,6 +97,14 @@ pub struct ManifestScalingReport {
     pub all_accepted: bool,
     /// Per-entry id ranges contiguous and in order on every iteration?
     pub ids_contiguous: bool,
+    /// v2 text `MSUBMIT` line parse throughput (entries/s, best rep).
+    pub v2_parse_entries_per_sec: f64,
+    /// v3 binary frame payload parse throughput (entries/s, best rep).
+    pub v3_parse_entries_per_sec: f64,
+    /// v3 / v2 parse throughput — the CI gate (≥ 2).
+    pub v3_vs_v2_parse_ratio: f64,
+    /// v3 parses that errored or round-tripped unequal — the CI gate (0).
+    pub v3_parse_errors: u64,
 }
 
 impl ManifestScalingReport {
@@ -108,7 +124,11 @@ impl ManifestScalingReport {
                 "  \"manifest_vs_homog_ratio\": {:.3},\n",
                 "  \"per_rpc_vs_manifest_ratio\": {:.3},\n",
                 "  \"all_accepted\": {},\n",
-                "  \"ids_contiguous\": {}\n",
+                "  \"ids_contiguous\": {},\n",
+                "  \"v2_parse_entries_per_sec\": {:.0},\n",
+                "  \"v3_parse_entries_per_sec\": {:.0},\n",
+                "  \"v3_vs_v2_parse_ratio\": {:.3},\n",
+                "  \"v3_parse_errors\": {}\n",
                 "}}\n",
             ),
             self.entries,
@@ -122,6 +142,10 @@ impl ManifestScalingReport {
             self.per_rpc_vs_manifest_ratio,
             self.all_accepted,
             self.ids_contiguous,
+            self.v2_parse_entries_per_sec,
+            self.v3_parse_entries_per_sec,
+            self.v3_vs_v2_parse_ratio,
+            self.v3_parse_errors,
         )
     }
 
@@ -136,6 +160,18 @@ impl ManifestScalingReport {
             self.manifest_vs_homog_ratio,
             self.per_job_per_rpc_us,
             self.per_rpc_vs_manifest_ratio,
+        )
+    }
+
+    /// One-line human summary of the codec head-to-head.
+    pub fn parse_summary(&self) -> String {
+        format!(
+            "codec: v3 binary {:.0} entries/s vs v2 text {:.0} entries/s \
+             (ratio {:.2}x, gate 2x; {} parse errors)",
+            self.v3_parse_entries_per_sec,
+            self.v2_parse_entries_per_sec,
+            self.v3_vs_v2_parse_ratio,
+            self.v3_parse_errors,
         )
     }
 }
@@ -218,10 +254,38 @@ pub fn run_manifest_scaling(cfg: &ManifestScalingConfig) -> ManifestScalingRepor
         wall_per_rpc_s = wall_per_rpc_s.min(t0.elapsed().as_secs_f64());
     }
 
+    // Path 4: codec head-to-head — the same manifest's wire bytes parsed
+    // as one v2 text MSUBMIT line vs one v3 binary frame payload. No
+    // daemon involved: this isolates pure parse cost.
+    let manifest = manifests::mixed(cfg.seed, n, cfg.users);
+    let v2_line = codec::render_request(&Request::MSubmit(manifest.clone()), ProtocolVersion::V2);
+    let v3_payload = codec::render_msubmit_v3(&manifest);
+    let mut wall_v2_s = f64::INFINITY;
+    let mut wall_v3_s = f64::INFINITY;
+    let mut v3_parse_errors = 0u64;
+    for _ in 0..cfg.iters.max(1) {
+        let t0 = Instant::now();
+        let parsed = codec::parse_request(std::hint::black_box(&v2_line), ProtocolVersion::V2);
+        wall_v2_s = wall_v2_s.min(t0.elapsed().as_secs_f64());
+        match parsed {
+            Ok(Request::MSubmit(m)) if m.entries.len() == n => {}
+            other => panic!("v2 text re-parse failed: {other:?}"),
+        }
+        let t0 = Instant::now();
+        let parsed = codec::parse_msubmit_v3(std::hint::black_box(&v3_payload));
+        wall_v3_s = wall_v3_s.min(t0.elapsed().as_secs_f64());
+        match parsed {
+            Ok(m) if m == manifest => {}
+            _ => v3_parse_errors += 1,
+        }
+    }
+
     let per_job = |wall: f64| wall / n as f64 * 1e6;
     let per_job_manifest_us = per_job(wall_manifest_s);
     let per_job_homog_us = per_job(wall_homog_s);
     let per_job_per_rpc_us = per_job(wall_per_rpc_s);
+    let v2_parse_entries_per_sec = n as f64 / wall_v2_s.max(f64::EPSILON);
+    let v3_parse_entries_per_sec = n as f64 / wall_v3_s.max(f64::EPSILON);
     ManifestScalingReport {
         entries: n,
         wall_manifest_s,
@@ -234,6 +298,10 @@ pub fn run_manifest_scaling(cfg: &ManifestScalingConfig) -> ManifestScalingRepor
         per_rpc_vs_manifest_ratio: per_job_per_rpc_us / per_job_manifest_us.max(f64::EPSILON),
         all_accepted,
         ids_contiguous,
+        v2_parse_entries_per_sec,
+        v3_parse_entries_per_sec,
+        v3_vs_v2_parse_ratio: v3_parse_entries_per_sec / v2_parse_entries_per_sec.max(f64::EPSILON),
+        v3_parse_errors,
     }
 }
 
@@ -253,9 +321,15 @@ mod tests {
             "\"per_job_manifest_us\"",
             "\"all_accepted\": true",
             "\"ids_contiguous\": true",
+            "\"v3_vs_v2_parse_ratio\"",
+            "\"v3_parse_errors\": 0",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
+        assert_eq!(r.v3_parse_errors, 0, "{r:?}");
+        assert!(r.v2_parse_entries_per_sec > 0.0);
+        assert!(r.v3_parse_entries_per_sec > 0.0);
         assert!(r.summary().contains("manifest_scaling"));
+        assert!(r.parse_summary().contains("v3 binary"));
     }
 }

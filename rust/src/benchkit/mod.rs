@@ -14,6 +14,7 @@ pub mod journal_scaling;
 pub mod manifest_scaling;
 pub mod overload;
 pub mod sched_scaling;
+pub mod user_scaling;
 /// Linux-only, like the sharded reactor front door it measures.
 #[cfg(target_os = "linux")]
 pub mod shard_scaling;

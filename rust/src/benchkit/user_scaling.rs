@@ -1,0 +1,260 @@
+//! User-cardinality scaling scenario — the CI gate for million-user
+//! fairshare.
+//!
+//! Every other bench submits as ~10 distinct users; production launchers
+//! fan out over *millions*. This scenario drives Zipf-distributed
+//! submissions from 1k → 100k → 1M distinct users through the public
+//! `MSUBMIT` admission path (chunked ≤12k-entry manifests from
+//! [`crate::workload::manifests::user_scaling_manifests`], every user
+//! guaranteed present) against a pacing-disabled daemon, and measures the
+//! per-job admission cost at each level. The per-(qos,user) bucket design
+//! makes a queue pass O(log u) per visited job, so cost should be nearly
+//! flat in user count: CI gates the largest level's per-job cost within
+//! 2× of the smallest. The `STATS` user-scale gauges are captured per
+//! level, pinning the O(1) snapshot aggregation and making bucket-map
+//! growth visible in the uploaded JSON.
+
+use crate::cluster::{topology, PartitionLayout};
+use crate::coordinator::api::{Request, Response};
+use crate::coordinator::{Daemon, DaemonConfig};
+use crate::sched::SchedulerConfig;
+use crate::sim::SchedCosts;
+use crate::workload::manifests;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Scenario shape.
+#[derive(Debug, Clone)]
+pub struct UserScalingConfig {
+    /// Distinct-user levels, ascending (the gate compares last vs first).
+    pub levels: Vec<u64>,
+    /// Zipf exponent for the hot-extra draw.
+    pub exponent: f64,
+    /// Timing repetitions per level (fresh daemon each; minimum wins).
+    pub iters: usize,
+    /// RNG seed for the workload.
+    pub seed: u64,
+}
+
+impl Default for UserScalingConfig {
+    fn default() -> Self {
+        Self {
+            levels: vec![1_000, 100_000, 1_000_000],
+            exponent: 1.1,
+            iters: 1,
+            seed: 0x05e7_ca1e,
+        }
+    }
+}
+
+impl UserScalingConfig {
+    /// Sub-second smoke shape (`SPOTCLOUD_BENCH_FAST=1`, unit tests).
+    pub fn quick() -> Self {
+        Self {
+            levels: vec![200, 2_000],
+            exponent: 1.1,
+            iters: 1,
+            seed: 0x05e7_ca1e,
+        }
+    }
+}
+
+/// What one level measured.
+#[derive(Debug, Clone)]
+pub struct UserScalingLevel {
+    /// Distinct users at this level.
+    pub users: u64,
+    /// Jobs submitted (one per entry: users + users/4 hot extras).
+    pub jobs: u64,
+    /// Manifest chunks submitted.
+    pub chunks: usize,
+    /// Submission wall seconds (min over iters).
+    pub wall_s: f64,
+    /// Admission cost per job (µs).
+    pub per_job_us: f64,
+    /// `STATS` gauge after submission: fairshare entries with usage.
+    pub users_active: u64,
+    /// `STATS` gauge: active + live pending (qos, user) buckets.
+    pub users_tracked: u64,
+    /// `STATS` gauge: admission token buckets live.
+    pub buckets_live: u64,
+}
+
+/// What the whole sweep measured.
+#[derive(Debug, Clone)]
+pub struct UserScalingReport {
+    /// Zipf exponent used.
+    pub exponent: f64,
+    /// Per-level rows, ascending user count.
+    pub levels: Vec<UserScalingLevel>,
+    /// per_job(largest level) / per_job(smallest level) — the CI gate (≤ 2).
+    pub cost_ratio_max_vs_min: f64,
+    /// Every entry accepted at every level?
+    pub all_accepted: bool,
+    /// `users_tracked` ≥ distinct users at every level (gauges are live)?
+    pub gauges_cover_users: bool,
+}
+
+impl UserScalingReport {
+    /// The machine-readable record CI uploads (`BENCH_users.json`).
+    pub fn to_json(&self) -> String {
+        let mut rows = String::new();
+        for (i, l) in self.levels.iter().enumerate() {
+            let sep = if i + 1 == self.levels.len() { "" } else { "," };
+            rows.push_str(&format!(
+                concat!(
+                    "    {{ \"users\": {}, \"jobs\": {}, \"chunks\": {}, ",
+                    "\"wall_s\": {:.6}, \"per_job_us\": {:.3}, ",
+                    "\"users_active\": {}, \"users_tracked\": {}, ",
+                    "\"buckets_live\": {} }}{}\n",
+                ),
+                l.users,
+                l.jobs,
+                l.chunks,
+                l.wall_s,
+                l.per_job_us,
+                l.users_active,
+                l.users_tracked,
+                l.buckets_live,
+                sep,
+            ));
+        }
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"user_scaling\",\n",
+                "  \"exponent\": {:.2},\n",
+                "  \"levels\": [\n{}  ],\n",
+                "  \"cost_ratio_max_vs_min\": {:.3},\n",
+                "  \"all_accepted\": {},\n",
+                "  \"gauges_cover_users\": {}\n",
+                "}}\n",
+            ),
+            self.exponent,
+            rows,
+            self.cost_ratio_max_vs_min,
+            self.all_accepted,
+            self.gauges_cover_users,
+        )
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let per_level: Vec<String> = self
+            .levels
+            .iter()
+            .map(|l| format!("{}u {:.2}us/job", l.users, l.per_job_us))
+            .collect();
+        format!(
+            "user_scaling: {} (ratio {:.2}x, gate 2x)",
+            per_level.join(", "),
+            self.cost_ratio_max_vs_min,
+        )
+    }
+}
+
+/// A fresh admission-only daemon (same shape as `manifest_scaling`):
+/// `speedup = 0` pins virtual time, isolating submission cost.
+fn admission_daemon() -> Arc<Daemon> {
+    Daemon::new(
+        topology::tx2500(),
+        SchedulerConfig::baseline(SchedCosts::dedicated(), PartitionLayout::Dual),
+        DaemonConfig {
+            speedup: 0.0,
+            retire_grace_secs: None,
+            history_cap: None,
+            ..DaemonConfig::default()
+        },
+    )
+}
+
+/// Run the scenario.
+pub fn run_user_scaling(cfg: &UserScalingConfig) -> UserScalingReport {
+    assert!(!cfg.levels.is_empty());
+    let mut levels = Vec::with_capacity(cfg.levels.len());
+    let mut all_accepted = true;
+    let mut gauges_cover_users = true;
+
+    for &users in &cfg.levels {
+        let manifests = manifests::user_scaling_manifests(cfg.seed, users, cfg.exponent);
+        let jobs: u64 = manifests.iter().map(|m| m.jobs()).sum();
+        let chunks = manifests.len();
+
+        let mut wall_s = f64::INFINITY;
+        let mut gauges = None;
+        for _ in 0..cfg.iters.max(1) {
+            let batch = manifests.clone();
+            let d = admission_daemon();
+            let t0 = Instant::now();
+            for m in batch {
+                let want = m.entries.len();
+                match d.handle(Request::MSubmit(m)) {
+                    Response::ManifestAck(ack) => {
+                        all_accepted &= ack.rejected.is_empty() && ack.accepted.len() == want;
+                    }
+                    other => panic!("user-scaling submission failed: {other:?}"),
+                }
+            }
+            wall_s = wall_s.min(t0.elapsed().as_secs_f64());
+            match d.handle(Request::Stats) {
+                Response::Stats(snap) => {
+                    let u = snap.users.expect("stats snapshot carries user gauges");
+                    gauges_cover_users &= u.users_tracked >= users;
+                    gauges = Some(u);
+                }
+                other => panic!("STATS failed: {other:?}"),
+            }
+            d.with_scheduler(|s| s.check_invariants().expect("invariants after submission"));
+        }
+
+        let g = gauges.expect("at least one iteration");
+        levels.push(UserScalingLevel {
+            users,
+            jobs,
+            chunks,
+            wall_s,
+            per_job_us: wall_s / jobs.max(1) as f64 * 1e6,
+            users_active: g.users_active,
+            users_tracked: g.users_tracked,
+            buckets_live: g.buckets_live,
+        });
+    }
+
+    let per_job_first = levels.first().map(|l| l.per_job_us).unwrap_or(0.0);
+    let per_job_last = levels.last().map(|l| l.per_job_us).unwrap_or(0.0);
+    UserScalingReport {
+        exponent: cfg.exponent,
+        levels,
+        cost_ratio_max_vs_min: per_job_last / per_job_first.max(f64::EPSILON),
+        all_accepted,
+        gauges_cover_users,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_user_scaling_runs_and_reports() {
+        let r = run_user_scaling(&UserScalingConfig::quick());
+        assert!(r.all_accepted, "{r:?}");
+        assert!(r.gauges_cover_users, "{r:?}");
+        assert_eq!(r.levels.len(), 2);
+        for l in &r.levels {
+            assert_eq!(l.jobs, l.users + l.users / 4, "one job per entry");
+            assert!(l.wall_s > 0.0 && l.wall_s.is_finite());
+            assert!(l.users_tracked >= l.users, "{l:?}");
+        }
+        let json = r.to_json();
+        for key in [
+            "\"bench\": \"user_scaling\"",
+            "\"cost_ratio_max_vs_min\"",
+            "\"users_tracked\"",
+            "\"all_accepted\": true",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(r.summary().contains("user_scaling"));
+    }
+}

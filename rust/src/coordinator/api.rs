@@ -30,15 +30,23 @@ pub enum ProtocolVersion {
     /// `entries=<n> part=<i>/<k>` continuation records, lifting the
     /// single-line entry cap. Responses render exactly as v2.
     V21,
+    /// Binary framing. After the (text) `HELLO v3` acknowledgement the
+    /// connection switches to length-prefixed `[u32 LE len][opcode][body]`
+    /// frames; text-opcode bodies carry the v2.1 line grammar verbatim, and
+    /// `MSUBMIT` gains a varint-packed binary opcode parsed without
+    /// per-entry text tokenization. Strict opt-in — v1/v2/v2.1 bytes are
+    /// untouched. See PROTOCOL.md §v3.
+    V3,
 }
 
 impl ProtocolVersion {
-    /// Wire token ("v1" / "v2" / "v2.1").
+    /// Wire token ("v1" / "v2" / "v2.1" / "v3").
     pub fn as_str(self) -> &'static str {
         match self {
             ProtocolVersion::V1 => "v1",
             ProtocolVersion::V2 => "v2",
             ProtocolVersion::V21 => "v2.1",
+            ProtocolVersion::V3 => "v3",
         }
     }
 
@@ -48,19 +56,30 @@ impl ProtocolVersion {
             "v1" | "1" => Some(ProtocolVersion::V1),
             "v2" | "2" => Some(ProtocolVersion::V2),
             "v2.1" | "2.1" => Some(ProtocolVersion::V21),
+            "v3" | "3" => Some(ProtocolVersion::V3),
             _ => None,
         }
     }
 
     /// Does this version speak the v2 record grammar? (v2.1 renders and
-    /// parses exactly as v2; it only adds the chunked `MSUBMIT` body.)
+    /// parses exactly as v2; it only adds the chunked `MSUBMIT` body. v3's
+    /// text-opcode bodies and rendered responses are also exactly v2.)
     pub fn is_v2(self) -> bool {
-        matches!(self, ProtocolVersion::V2 | ProtocolVersion::V21)
+        matches!(
+            self,
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3
+        )
     }
 
     /// May `MSUBMIT` arrive chunked on this connection?
     pub fn chunked_msubmit(self) -> bool {
-        matches!(self, ProtocolVersion::V21)
+        matches!(self, ProtocolVersion::V21 | ProtocolVersion::V3)
+    }
+
+    /// Does this connection exchange length-prefixed binary frames after
+    /// negotiation (v3) instead of newline-terminated text?
+    pub fn binary_frames(self) -> bool {
+        matches!(self, ProtocolVersion::V3)
     }
 }
 
@@ -712,6 +731,22 @@ pub struct StatsSnapshot {
     /// Overload-control-plane state + shed counters (v2 wire extension;
     /// `None` when the peer spoke v1 or predates the extension).
     pub health: Option<HealthReport>,
+    /// User-cardinality gauges (v2 wire extension; `None` when the peer
+    /// spoke v1 or predates the extension). Makes bucket-map growth
+    /// observable: a leak shows up as `users_tracked`/`buckets_live`
+    /// climbing while `users_active` stays flat.
+    pub users: Option<UserScaleStats>,
+}
+
+/// Live per-user state sizes (`STATS` v2 extension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UserScaleStats {
+    /// Distinct (qos, user) fairshare entries with nonzero charged usage.
+    pub users_active: u64,
+    /// `users_active` plus live pending-queue (qos, user) buckets.
+    pub users_tracked: u64,
+    /// Entries in the admission-control per-user token-bucket map.
+    pub buckets_live: u64,
 }
 
 /// One manifest entry's settlement as `RESUME` reports it.
@@ -939,15 +974,24 @@ mod tests {
             ProtocolVersion::V1,
             ProtocolVersion::V2,
             ProtocolVersion::V21,
+            ProtocolVersion::V3,
         ] {
             assert_eq!(ProtocolVersion::parse(v.as_str()), Some(v));
         }
         assert_eq!(ProtocolVersion::parse("2.1"), Some(ProtocolVersion::V21));
+        assert_eq!(ProtocolVersion::parse("3"), Some(ProtocolVersion::V3));
         assert!(!ProtocolVersion::V1.is_v2());
         assert!(ProtocolVersion::V2.is_v2());
         assert!(ProtocolVersion::V21.is_v2());
         assert!(ProtocolVersion::V21.chunked_msubmit());
         assert!(!ProtocolVersion::V2.chunked_msubmit());
+        // v3 text-opcode bodies speak the full v2.1 grammar; only v3
+        // exchanges binary frames.
+        assert!(ProtocolVersion::V3.is_v2());
+        assert!(ProtocolVersion::V3.chunked_msubmit());
+        assert!(ProtocolVersion::V3.binary_frames());
+        assert!(!ProtocolVersion::V21.binary_frames());
+        assert!(!ProtocolVersion::V1.binary_frames());
         for k in [ShardKind::Reactor, ShardKind::Sched] {
             assert_eq!(ShardKind::parse(k.as_str()), Some(k));
         }

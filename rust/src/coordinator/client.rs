@@ -2,8 +2,11 @@
 //!
 //! [`Client::connect`] starts a v1 session (wire-compatible with the seed
 //! daemon); [`Client::connect_v2`] negotiates the v2 tagged grammar with
-//! `HELLO v2`, and [`Client::connect_v21`] negotiates v2.1, which adds the
-//! chunked `MSUBMIT` stream ([`Client::msubmit_chunked`]). The typed
+//! `HELLO v2`, [`Client::connect_v21`] negotiates v2.1, which adds the
+//! chunked `MSUBMIT` stream ([`Client::msubmit_chunked`]), and
+//! [`Client::connect_v3`] negotiates the v3 binary framing: requests and
+//! responses travel in length-prefixed frames, and `MSUBMIT` manifests go
+//! out varint-packed instead of as text records. The typed
 //! methods ([`Client::submit`], [`Client::squeue`], [`Client::wait`], …)
 //! render requests and parse responses through [`super::codec`], returning
 //! the payload structs from [`super::api`] — `ERR` responses surface as
@@ -21,7 +24,7 @@ use super::manifest::{
 };
 use crate::util::rng::Xoshiro256;
 use std::fmt;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
@@ -193,6 +196,15 @@ impl Client {
         Ok(c)
     }
 
+    /// Connect and negotiate protocol v3: the `HELLO`/ack exchange happens
+    /// in text, then every subsequent request and response travels in
+    /// length-prefixed binary frames ([`super::codec::decode_frame_header`]).
+    pub fn connect_v3(addr: &str) -> ClientResult<Self> {
+        let mut c = Self::connect(addr)?;
+        c.hello(ProtocolVersion::V3)?;
+        Ok(c)
+    }
+
     /// Connect with retry/backoff — the resume path after a daemon crash:
     /// keep trying while the daemon restarts and replays its journal.
     pub fn connect_retry(addr: &str, policy: &RetryPolicy) -> ClientResult<Self> {
@@ -209,6 +221,11 @@ impl Client {
         policy.run(|| Self::connect_v21(addr))
     }
 
+    /// [`Client::connect_retry`], negotiating protocol v3.
+    pub fn connect_v3_retry(addr: &str, policy: &RetryPolicy) -> ClientResult<Self> {
+        policy.run(|| Self::connect_v3(addr))
+    }
+
     /// The protocol version this session speaks.
     pub fn version(&self) -> ProtocolVersion {
         self.version
@@ -223,13 +240,57 @@ impl Client {
     }
 
     fn send_line(&mut self, line: &str) -> ClientResult<()> {
+        if self.version.binary_frames() {
+            return self.send_frame(codec::OP_TEXT_REQ, line.as_bytes());
+        }
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         Ok(())
     }
 
+    /// Write one v3 frame: `[len][opcode][payload]`.
+    fn send_frame(&mut self, opcode: u8, payload: &[u8]) -> ClientResult<()> {
+        self.writer.write_all(&codec::v3_frame(opcode, payload))?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read one v3 frame, returning `(opcode, payload)`.
+    fn read_frame(&mut self) -> ClientResult<(u8, Vec<u8>)> {
+        let mut header = [0u8; codec::FRAME_HEADER_BYTES];
+        self.reader.read_exact(&mut header)?;
+        let len = match codec::decode_frame_header(&header) {
+            Ok(Some(len)) => len,
+            Ok(None) => {
+                return Err(ClientError::Protocol("short frame header from server".into()));
+            }
+            Err(e) => {
+                return Err(ClientError::Protocol(format!(
+                    "bad frame length from server: {e}"
+                )));
+            }
+        };
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body)?;
+        let payload = body.split_off(1);
+        Ok((body[0], payload))
+    }
+
     fn read_response(&mut self) -> ClientResult<String> {
+        if self.version.binary_frames() {
+            // One frame is one response; the length prefix replaces the
+            // blank-line terminator.
+            let (opcode, payload) = self.read_frame()?;
+            if opcode != codec::OP_TEXT_RESP {
+                return Err(ClientError::Protocol(format!(
+                    "unexpected frame opcode {opcode:#04x} (wanted a text response)"
+                )));
+            }
+            return String::from_utf8(payload).map_err(|_| {
+                ClientError::Protocol("text response frame is not UTF-8".into())
+            });
+        }
         let mut out = String::new();
         loop {
             let mut buf = String::new();
@@ -291,12 +352,17 @@ impl Client {
                 }
             }
         }
-        let mut batch = String::new();
+        let mut batch = Vec::new();
         for req in reqs {
-            batch.push_str(&codec::render_request(req, self.version));
-            batch.push('\n');
+            let line = codec::render_request(req, self.version);
+            if self.version.binary_frames() {
+                batch.extend_from_slice(&codec::v3_frame(codec::OP_TEXT_REQ, line.as_bytes()));
+            } else {
+                batch.extend_from_slice(line.as_bytes());
+                batch.push(b'\n');
+            }
         }
-        self.writer.write_all(batch.as_bytes())?;
+        self.writer.write_all(&batch)?;
         self.writer.flush()?;
         let mut out = Vec::with_capacity(reqs.len());
         for _ in reqs {
@@ -350,6 +416,9 @@ impl Client {
                 "MSUBMIT requires protocol v2 (connect with Client::connect_v2)".into(),
             ));
         }
+        if self.version.binary_frames() {
+            return self.msubmit_frame(manifest);
+        }
         // A tag with whitespace/`;`/newline would corrupt the single-line
         // record framing (a newline would even inject a second request):
         // refuse before any byte goes out.
@@ -361,6 +430,33 @@ impl Client {
         match self.roundtrip(&Request::MSubmit(manifest.clone()))? {
             Response::ManifestAck(ack) => Ok(ack),
             other => Err(unexpected("MSUBMIT", &other)),
+        }
+    }
+
+    /// Binary v3 `MSUBMIT`: the manifest goes out as one varint-packed
+    /// frame and the ack comes back packed ([`codec::parse_manifest_ack_v3`])
+    /// or as a framed typed error. Tag framing restrictions do not apply —
+    /// binary records are length-delimited, so any tag the manifest
+    /// validator accepts survives the wire unescaped.
+    fn msubmit_frame(&mut self, manifest: &Manifest) -> ClientResult<ManifestAck> {
+        self.send_frame(codec::OP_MSUBMIT, &codec::render_msubmit_v3(manifest))?;
+        let (opcode, payload) = self.read_frame()?;
+        match opcode {
+            codec::OP_MANIFEST_ACK => codec::parse_manifest_ack_v3(&payload)
+                .map_err(|e| ClientError::Protocol(format!("unparseable manifest ack: {e}"))),
+            codec::OP_TEXT_RESP => {
+                let raw = String::from_utf8_lossy(&payload).into_owned();
+                match codec::parse_response(&raw, ProtocolVersion::V3) {
+                    Ok(Response::Error(e)) => Err(ClientError::Api(e)),
+                    Ok(resp) => Err(unexpected("MSUBMIT", &resp)),
+                    Err(e) => Err(ClientError::Protocol(format!(
+                        "unparseable response {raw:?}: {e}"
+                    ))),
+                }
+            }
+            other => Err(ClientError::Protocol(format!(
+                "unexpected frame opcode {other:#04x}"
+            ))),
         }
     }
 

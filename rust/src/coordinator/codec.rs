@@ -23,7 +23,7 @@ use super::api::{
     ErrorCode, HealthReport, HealthState, JobDetail, JobSummary, JournalStats, ProtocolVersion,
     Request, Response, ResumeEntry, ResumeInfo,
     ResumeTarget, ShardKind, ShardStats, ShardUtil, SqueueFilter, StatsSnapshot, SubmitAck,
-    SubmitSpec, UtilSnapshot, WaitResult,
+    SubmitSpec, UserScaleStats, UtilSnapshot, WaitResult,
 };
 use super::manifest::{
     EntryAck, EntryReject, Manifest, ManifestAck, ManifestChunk, ManifestEntry,
@@ -208,7 +208,9 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
         "SQUEUE" => parse_squeue(rest),
         "SUBMIT" => match version {
             ProtocolVersion::V1 => parse_submit_v1(rest),
-            ProtocolVersion::V2 | ProtocolVersion::V21 => parse_submit_v2(rest),
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
+                parse_submit_v2(rest)
+            }
         },
         // The manifest body is `;`-separated records, so it needs the raw
         // line, not the whitespace tokens. v1 connections get a typed
@@ -218,7 +220,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
             ProtocolVersion::V1 => Err(ApiError::unsupported(
                 "MSUBMIT requires protocol v2 (negotiate with HELLO v2)",
             )),
-            ProtocolVersion::V2 | ProtocolVersion::V21 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
                 parse_msubmit(line, version.chunked_msubmit())
             }
         },
@@ -229,7 +231,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
                     .ok_or_else(|| ApiError::bad_arity("SJOB", "<job_id>"))?;
                 Ok(Request::Sjob(parse_u64("job id", tok)?))
             }
-            ProtocolVersion::V2 | ProtocolVersion::V21 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
                 let map: BTreeMap<&str, &str> = kv_pairs(rest, "SJOB option")?.into_iter().collect();
                 Ok(Request::Sjob(take_u64(&map, "id")?))
             }
@@ -241,7 +243,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
                     .ok_or_else(|| ApiError::bad_arity("SCANCEL", "<job_id>"))?;
                 Ok(Request::Scancel(parse_u64("job id", tok)?))
             }
-            ProtocolVersion::V2 | ProtocolVersion::V21 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
                 let map: BTreeMap<&str, &str> =
                     kv_pairs(rest, "SCANCEL option")?.into_iter().collect();
                 Ok(Request::Scancel(take_u64(&map, "id")?))
@@ -259,7 +261,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
                 let timeout_secs = parse_f64("timeout", rest[rest.len() - 1])?;
                 Ok(Request::Wait { jobs, timeout_secs })
             }
-            ProtocolVersion::V2 | ProtocolVersion::V21 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
                 let map: BTreeMap<&str, &str> = kv_pairs(rest, "WAIT option")?.into_iter().collect();
                 let timeout_secs = match map.get("timeout") {
                     Some(tok) => parse_f64("timeout", tok)?,
@@ -298,7 +300,7 @@ pub fn parse_request(line: &str, version: ProtocolVersion) -> Result<Request, Ap
             ProtocolVersion::V1 => Err(ApiError::unsupported(
                 "RESUME requires protocol v2 (negotiate with HELLO v2)",
             )),
-            ProtocolVersion::V2 | ProtocolVersion::V21 => {
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
                 let map: BTreeMap<&str, &str> =
                     kv_pairs(rest, "RESUME option")?.into_iter().collect();
                 match (map.get("tag"), map.get("manifest")) {
@@ -643,11 +645,15 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
         }
         Request::Sjob(id) => match version {
             ProtocolVersion::V1 => format!("SJOB {id}"),
-            ProtocolVersion::V2 | ProtocolVersion::V21 => format!("SJOB id={id}"),
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
+                format!("SJOB id={id}")
+            }
         },
         Request::Scancel(id) => match version {
             ProtocolVersion::V1 => format!("SCANCEL {id}"),
-            ProtocolVersion::V2 | ProtocolVersion::V21 => format!("SCANCEL id={id}"),
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
+                format!("SCANCEL id={id}")
+            }
         },
         Request::Wait { jobs, timeout_secs } => {
             let ids: Vec<String> = jobs.iter().map(|j| j.to_string()).collect();
@@ -655,7 +661,7 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
                 ProtocolVersion::V1 => {
                     format!("WAIT {} {}", ids.join(" "), fmt_f64(*timeout_secs))
                 }
-                ProtocolVersion::V2 | ProtocolVersion::V21 => {
+                ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
                     format!("WAIT jobs={} timeout={}", ids.join(","), fmt_f64(*timeout_secs))
                 }
             }
@@ -694,7 +700,7 @@ pub fn render_request(req: &Request, version: ProtocolVersion) -> String {
                 }
                 line
             }
-            ProtocolVersion::V2 | ProtocolVersion::V21 => format!(
+            ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => format!(
                 "SUBMIT qos={} type={} tasks={} user={} run_secs={} count={}",
                 s.qos,
                 job_type_arg(s.job_type),
@@ -1030,6 +1036,15 @@ fn stats_kv(s: &StatsSnapshot, with_contention: bool) -> String {
                 h.journal_poisoned,
             );
         }
+        // User-cardinality gauges: same additive v2-only pattern, keyed on
+        // `users_active` as a block.
+        if let Some(u) = &s.users {
+            let _ = write!(
+                out,
+                " users_active={} users_tracked={} buckets_live={}",
+                u.users_active, u.users_tracked, u.buckets_live,
+            );
+        }
     }
     for (cmd, n) in &s.commands {
         let _ = write!(out, " cmd_{cmd}={n}");
@@ -1067,7 +1082,9 @@ fn render_shard_stats_records(body: &mut String, shards: &[ShardStats]) {
 pub fn render_response(resp: &Response, version: ProtocolVersion) -> String {
     match version {
         ProtocolVersion::V1 => render_response_v1(resp),
-        ProtocolVersion::V2 | ProtocolVersion::V21 => render_response_v2(resp),
+        ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
+            render_response_v2(resp)
+        }
     }
 }
 
@@ -1246,7 +1263,7 @@ pub fn parse_response(text: &str, version: ProtocolVersion) -> Result<Response, 
     let rest = rest.strip_prefix(' ').unwrap_or(rest);
     match version {
         ProtocolVersion::V1 => parse_ok_v1(rest),
-        ProtocolVersion::V2 | ProtocolVersion::V21 => parse_ok_v2(rest),
+        ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => parse_ok_v2(rest),
     }
 }
 
@@ -1259,7 +1276,7 @@ fn parse_error_body(body: &str, version: ProtocolVersion) -> ApiError {
             },
             None => ApiError::new(ErrorCode::Internal, body),
         },
-        ProtocolVersion::V2 | ProtocolVersion::V21 => {
+        ProtocolVersion::V2 | ProtocolVersion::V21 | ProtocolVersion::V3 => {
             let (head, msg) = match body.split_once(" msg=") {
                 Some((head, msg)) => (head, msg),
                 None => (body, ""),
@@ -1422,6 +1439,17 @@ fn parse_stats(map: &BTreeMap<&str, &str>, tail: &str) -> Result<StatsSnapshot, 
     } else {
         None
     };
+    // User-cardinality gauges (keyed on `users_active`): absent from v1
+    // bodies and pre-extension servers.
+    let users = if map.contains_key("users_active") {
+        Some(UserScaleStats {
+            users_active: take_u64(map, "users_active")?,
+            users_tracked: take_u64(map, "users_tracked")?,
+            buckets_live: take_u64(map, "buckets_live")?,
+        })
+    } else {
+        None
+    };
     Ok(StatsSnapshot {
         virtual_now_secs: take_f64(map, "virtual_now_secs")?,
         dispatches: take_u64(map, "dispatches")?,
@@ -1444,6 +1472,7 @@ fn parse_stats(map: &BTreeMap<&str, &str>, tail: &str) -> Result<StatsSnapshot, 
         shards: parse_shard_stats(tail)?,
         journal,
         health,
+        users,
     })
 }
 
@@ -1615,10 +1644,417 @@ fn parse_ok_v2(rest: &str) -> Result<Response, ApiError> {
     }
 }
 
+// ---- v3 binary framing ------------------------------------------------------
+//
+// After the text `HELLO v3` acknowledgement the connection switches to
+// length-prefixed binary frames:
+//
+//     frame = len:u32le  opcode:u8  payload:[u8; len-1]
+//
+// `len` counts the opcode byte plus the payload, so an empty payload frames
+// as `len=1`. Every verb except `MSUBMIT` rides in `OP_TEXT_REQ` frames
+// carrying exactly one v2.1-grammar request line (including the optional
+// `deadline_ms=` prefix); responses come back in `OP_TEXT_RESP` frames
+// carrying the v2-rendered body with no trailing blank line — the frame is
+// the delimiter. `MSUBMIT` alone gets a packed binary encoding
+// (`OP_MSUBMIT` / `OP_MANIFEST_ACK`): it is the only verb whose body scales
+// with entry count, and its text parse dominated the v2 wire path. See
+// `PROTOCOL.md` §v3 for the normative grammar.
+
+/// v3 opcode: a UTF-8 request line in the v2.1 text grammar.
+pub const OP_TEXT_REQ: u8 = 0x01;
+/// v3 opcode: a packed binary `MSUBMIT` manifest.
+pub const OP_MSUBMIT: u8 = 0x02;
+/// v3 opcode: a v2-rendered response body.
+pub const OP_TEXT_RESP: u8 = 0x81;
+/// v3 opcode: a packed binary manifest ack.
+pub const OP_MANIFEST_ACK: u8 = 0x82;
+
+/// Cap on one v3 frame body (`len` field), matching the reactor's
+/// per-connection buffered-request cap: a protocol-legal frame always gets
+/// a typed response, never a buffer-overflow connection close. A peer that
+/// declares a longer frame is desynchronized beyond recovery — the server
+/// answers with one typed error and closes.
+pub const MAX_FRAME_BYTES: usize = 4 << 20;
+
+/// Bytes in the v3 frame header (the little-endian `len` prefix).
+pub const FRAME_HEADER_BYTES: usize = 4;
+
+/// Decode a v3 frame header from the front of `buf`. `Ok(None)` means more
+/// bytes are needed; `Ok(Some(len))` means the frame body (opcode +
+/// payload) is `len` bytes starting at [`FRAME_HEADER_BYTES`]; `Err` means
+/// the peer declared an illegal length (zero or over [`MAX_FRAME_BYTES`]).
+pub fn decode_frame_header(buf: &[u8]) -> Result<Option<usize>, ApiError> {
+    if buf.len() < FRAME_HEADER_BYTES {
+        return Ok(None);
+    }
+    let mut le = [0u8; 4];
+    le.copy_from_slice(&buf[..FRAME_HEADER_BYTES]);
+    let len = u32::from_le_bytes(le) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(ApiError::new(
+            ErrorCode::BadArity,
+            format!("v3 frame length {len} outside 1..={MAX_FRAME_BYTES}"),
+        ));
+    }
+    Ok(Some(len))
+}
+
+/// Frame one v3 opcode + payload: `[len:u32le][opcode][payload]`.
+pub fn v3_frame(opcode: u8, payload: &[u8]) -> Vec<u8> {
+    let len = payload.len() + 1;
+    debug_assert!(len <= MAX_FRAME_BYTES, "frame body over MAX_FRAME_BYTES");
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + len);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.push(opcode);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Append an unsigned LEB128 varint (7 value bits per byte, low group
+/// first, high bit = continuation).
+pub fn write_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Bounds-checked cursor over one v3 payload: truncation and overlong
+/// varints come back as typed errors, never a panic or a wrap.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn truncated(what: &str) -> ApiError {
+        ApiError::new(
+            ErrorCode::BadArity,
+            format!("binary payload truncated in {what}"),
+        )
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, ApiError> {
+        let b = *self.buf.get(self.pos).ok_or_else(|| Self::truncated(what))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn bytes(&mut self, len: usize, what: &str) -> Result<&'a [u8], ApiError> {
+        if self.remaining() < len {
+            return Err(Self::truncated(what));
+        }
+        let out = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(out)
+    }
+
+    /// Unsigned LEB128, at most 10 bytes; a value over `u64::MAX` (or a
+    /// tenth byte above 1) is a typed `BadArg`, not silent wraparound.
+    fn uvarint(&mut self, what: &str) -> Result<u64, ApiError> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8(what)?;
+            if shift >= 64 || (shift == 63 && (b & 0x7f) > 1) {
+                return Err(ApiError::bad_arg(what, "varint overflows u64"));
+            }
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn uvarint_u32(&mut self, what: &str) -> Result<u32, ApiError> {
+        let v = self.uvarint(what)?;
+        u32::try_from(v).map_err(|_| ApiError::bad_arg(what, &v.to_string()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, ApiError> {
+        let mut le = [0u8; 8];
+        le.copy_from_slice(self.bytes(8, what)?);
+        Ok(f64::from_le_bytes(le))
+    }
+
+    /// The payload must be fully consumed — trailing bytes mean the peer
+    /// and codec disagree about the record grammar (desync risk).
+    fn done(&self, what: &str) -> Result<(), ApiError> {
+        if self.pos != self.buf.len() {
+            return Err(ApiError::new(
+                ErrorCode::BadArity,
+                format!("{} trailing bytes after {what}", self.remaining()),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn qos_byte(q: QosClass) -> u8 {
+    match q {
+        QosClass::Normal => 0,
+        QosClass::Spot => 1,
+    }
+}
+
+fn qos_from_byte(b: u8) -> Result<QosClass, ApiError> {
+    match b {
+        0 => Ok(QosClass::Normal),
+        1 => Ok(QosClass::Spot),
+        other => Err(ApiError::bad_arg("qos", &other.to_string())),
+    }
+}
+
+fn job_type_byte(t: JobType) -> u8 {
+    match t {
+        JobType::Individual => 0,
+        JobType::Array => 1,
+        JobType::TripleMode => 2,
+    }
+}
+
+fn job_type_from_byte(b: u8) -> Result<JobType, ApiError> {
+    match b {
+        0 => Ok(JobType::Individual),
+        1 => Ok(JobType::Array),
+        2 => Ok(JobType::TripleMode),
+        other => Err(ApiError::bad_arg("type", &other.to_string())),
+    }
+}
+
+fn error_code_byte(c: ErrorCode) -> u8 {
+    match c {
+        ErrorCode::Empty => 0,
+        ErrorCode::UnknownCommand => 1,
+        ErrorCode::BadArity => 2,
+        ErrorCode::BadArg => 3,
+        ErrorCode::NotFound => 4,
+        ErrorCode::Unsupported => 5,
+        ErrorCode::Internal => 6,
+        ErrorCode::Overloaded => 7,
+        ErrorCode::ReadOnly => 8,
+    }
+}
+
+/// Unknown bytes parse as `Internal`, mirroring the text parser's
+/// forward-compatibility rule for unrecognized `code=` tokens.
+fn error_code_from_byte(b: u8) -> ErrorCode {
+    match b {
+        0 => ErrorCode::Empty,
+        1 => ErrorCode::UnknownCommand,
+        2 => ErrorCode::BadArity,
+        3 => ErrorCode::BadArg,
+        4 => ErrorCode::NotFound,
+        5 => ErrorCode::Unsupported,
+        7 => ErrorCode::Overloaded,
+        8 => ErrorCode::ReadOnly,
+        _ => ErrorCode::Internal,
+    }
+}
+
+/// Render a manifest as a v3 `OP_MSUBMIT` payload: a varint entry count,
+/// then one packed record per entry — varint `user`, `qos` byte, `type`
+/// byte, varint `tasks`, varint `cores_per_task`, `run_secs` as 8 raw
+/// little-endian f64 bytes, varint `count`, varint tag length plus the tag
+/// bytes (length 0 = no tag).
+pub fn render_msubmit_v3(m: &Manifest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + m.entries.len() * 16);
+    write_uvarint(&mut out, m.entries.len() as u64);
+    for e in &m.entries {
+        write_uvarint(&mut out, u64::from(e.user));
+        out.push(qos_byte(e.qos));
+        out.push(job_type_byte(e.job_type));
+        write_uvarint(&mut out, u64::from(e.tasks));
+        write_uvarint(&mut out, u64::from(e.cores_per_task));
+        out.extend_from_slice(&e.run_secs.to_le_bytes());
+        write_uvarint(&mut out, u64::from(e.count));
+        match &e.tag {
+            Some(tag) => {
+                write_uvarint(&mut out, tag.len() as u64);
+                out.extend_from_slice(tag.as_bytes());
+            }
+            None => out.push(0),
+        }
+    }
+    out
+}
+
+/// Parse a v3 `OP_MSUBMIT` payload into a typed [`Manifest`]. Reads
+/// straight off the input slice — no per-entry line splitting or `String`
+/// allocation (tags intern directly from the payload bytes). Wire-level
+/// malformation rejects the whole request with a typed error, exactly like
+/// the text grammar; semantic validation still happens per entry at
+/// admission. `run_secs` carries raw f64 bits with no finiteness check —
+/// the text grammar accepts `run_secs=NaN` too, and both are caught by
+/// [`ManifestEntry::validate`].
+pub fn parse_msubmit_v3(payload: &[u8]) -> Result<Manifest, ApiError> {
+    let mut r = ByteReader::new(payload);
+    let declared = r.uvarint("entries")?;
+    if declared == 0 || declared > MAX_MANIFEST_ENTRIES as u64 {
+        return Err(ApiError::bad_arg("entries", &declared.to_string()));
+    }
+    // A packed record is at least 15 bytes (five 1-byte varints, two
+    // discriminant bytes, the 8-byte f64): a declared count the payload
+    // cannot possibly carry is rejected before the entry Vec is sized.
+    if declared.saturating_mul(15) > r.remaining() as u64 {
+        return Err(ApiError::bad_arg(
+            "entries",
+            &format!("{declared} declared, {} payload bytes", r.remaining()),
+        ));
+    }
+    let mut entries = Vec::with_capacity(declared as usize);
+    for _ in 0..declared {
+        let user = r.uvarint_u32("user")?;
+        let qos = qos_from_byte(r.u8("qos")?)?;
+        let job_type = job_type_from_byte(r.u8("type")?)?;
+        let tasks = r.uvarint_u32("tasks")?;
+        let cores_per_task = r.uvarint_u32("cores_per_task")?;
+        let run_secs = r.f64("run_secs")?;
+        let count = r.uvarint_u32("count")?;
+        let tag_len = r.uvarint("tag")?;
+        if tag_len > MAX_ENTRY_RECORD_BYTES as u64 {
+            return Err(ApiError::bad_arg("tag", &format!("{tag_len} bytes")));
+        }
+        let tag = if tag_len == 0 {
+            None
+        } else {
+            let raw = r.bytes(tag_len as usize, "tag")?;
+            let s = std::str::from_utf8(raw)
+                .map_err(|_| ApiError::bad_arg("tag", "invalid utf-8"))?;
+            Some(Arc::from(s))
+        };
+        entries.push(ManifestEntry {
+            user,
+            qos,
+            job_type,
+            tasks,
+            cores_per_task,
+            run_secs,
+            count,
+            tag,
+        });
+    }
+    r.done("manifest")?;
+    Ok(Manifest { entries })
+}
+
+/// Render a manifest ack as a v3 `OP_MANIFEST_ACK` payload: varint
+/// accepted/rejected counts, varint `jobs`, a has-manifest byte (1 =
+/// varint id follows), then the accepted records (varint index/first/
+/// last/count) and rejected records (varint index, error-code byte, varint
+/// message length + UTF-8 message bytes).
+pub fn render_manifest_ack_v3(a: &ManifestAck) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + a.accepted.len() * 8 + a.rejected.len() * 24);
+    write_uvarint(&mut out, a.accepted.len() as u64);
+    write_uvarint(&mut out, a.rejected.len() as u64);
+    write_uvarint(&mut out, a.jobs);
+    match a.manifest {
+        Some(id) => {
+            out.push(1);
+            write_uvarint(&mut out, id);
+        }
+        None => out.push(0),
+    }
+    for acc in &a.accepted {
+        write_uvarint(&mut out, u64::from(acc.index));
+        write_uvarint(&mut out, acc.first);
+        write_uvarint(&mut out, acc.last);
+        write_uvarint(&mut out, acc.count);
+    }
+    for rej in &a.rejected {
+        write_uvarint(&mut out, u64::from(rej.index));
+        out.push(error_code_byte(rej.error.code));
+        write_uvarint(&mut out, rej.error.message.len() as u64);
+        out.extend_from_slice(rej.error.message.as_bytes());
+    }
+    out
+}
+
+/// Parse a v3 `OP_MANIFEST_ACK` payload, applying the same range sanity
+/// checks as the text parser: per-record `last-first+1 == count` (checked
+/// arithmetic) and records summing to the declared `jobs`, so a hostile or
+/// buggy peer can never make the client iterate 2^64 job ids.
+pub fn parse_manifest_ack_v3(payload: &[u8]) -> Result<ManifestAck, ApiError> {
+    let mut r = ByteReader::new(payload);
+    let n_acc = r.uvarint("accepted")?;
+    let n_rej = r.uvarint("rejected")?;
+    let jobs = r.uvarint("jobs")?;
+    let manifest = match r.u8("manifest")? {
+        0 => None,
+        1 => Some(r.uvarint("manifest")?),
+        other => return Err(ApiError::bad_arg("manifest", &other.to_string())),
+    };
+    let mut ack = ManifestAck {
+        accepted: Vec::with_capacity((n_acc as usize).min(4096)),
+        rejected: Vec::with_capacity((n_rej as usize).min(4096)),
+        jobs,
+        manifest,
+    };
+    let mut summed = 0u64;
+    for _ in 0..n_acc {
+        let acc = EntryAck {
+            index: r.uvarint_u32("index")?,
+            first: r.uvarint("first")?,
+            last: r.uvarint("last")?,
+            count: r.uvarint("count")?,
+        };
+        let span = acc
+            .last
+            .checked_sub(acc.first)
+            .and_then(|d| d.checked_add(1));
+        if span != Some(acc.count) {
+            return Err(ApiError::new(
+                ErrorCode::Internal,
+                format!(
+                    "manifest ack record has an inconsistent id range: \
+                     first={} last={} count={}",
+                    acc.first, acc.last, acc.count
+                ),
+            ));
+        }
+        summed = summed.saturating_add(acc.count);
+        ack.accepted.push(acc);
+    }
+    for _ in 0..n_rej {
+        let index = r.uvarint_u32("index")?;
+        let code = error_code_from_byte(r.u8("code")?);
+        let msg_len = r.uvarint("msg")?;
+        let msg = std::str::from_utf8(r.bytes(msg_len as usize, "msg")?)
+            .map_err(|_| ApiError::bad_arg("msg", "invalid utf-8"))?;
+        ack.rejected.push(EntryReject {
+            index,
+            error: ApiError::new(code, msg),
+        });
+    }
+    r.done("manifest ack")?;
+    if summed != jobs {
+        return Err(ApiError::new(
+            ErrorCode::Internal,
+            format!("manifest ack claims jobs={jobs} but its records sum to {summed}"),
+        ));
+    }
+    Ok(ack)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use ProtocolVersion::{V1, V2, V21};
+    use ProtocolVersion::{V1, V2, V21, V3};
 
     // ---- backward compatibility: the seed grammar, verbatim ----------------
 
@@ -2122,6 +2558,8 @@ mod tests {
                 journal: None,
                 // And the health block is v2-only too.
                 health: None,
+                // And the user-scale gauges.
+                users: None,
             }),
             Response::Health(HealthReport {
                 state: HealthState::Shedding,
@@ -2634,8 +3072,42 @@ mod tests {
     }
 
     #[test]
+    fn stats_users_extension_roundtrips_v2_and_drops_on_v1() {
+        let mut s = stats_with_contention();
+        s.users = Some(UserScaleStats {
+            users_active: 250_000,
+            users_tracked: 1_000_000,
+            buckets_live: 4_096,
+        });
+        let resp = Response::Stats(s.clone());
+        for v in [V2, V21, V3] {
+            let wire = render_response(&resp, v);
+            for key in [
+                "users_active=250000",
+                "users_tracked=1000000",
+                "buckets_live=4096",
+            ] {
+                assert!(wire.contains(key), "missing {key} in {wire}");
+            }
+            assert_eq!(parse_response(&wire, v).unwrap(), resp, "{wire:?}");
+        }
+        // v1 keeps its original key set byte-compatible; a v2 body from an
+        // older server (no users keys) parses as None.
+        let v1 = render_response(&resp, V1);
+        assert!(!v1.contains("users_active="), "{v1}");
+        match parse_response(&v1, V1).unwrap() {
+            Response::Stats(back) => assert_eq!(back.users, None),
+            other => panic!("{other:?}"),
+        }
+        let mut without = stats_with_contention();
+        without.users = None;
+        let wire = render_response(&Response::Stats(without.clone()), V2);
+        assert_eq!(parse_response(&wire, V2).unwrap(), Response::Stats(without));
+    }
+
+    #[test]
     fn health_verb_parses_in_every_version() {
-        for v in [V1, V2, V21] {
+        for v in [V1, V2, V21, V3] {
             assert_eq!(parse_request("HEALTH", v).unwrap(), Request::Health);
             assert_eq!(parse_request("health", v).unwrap(), Request::Health);
         }
@@ -2698,5 +3170,306 @@ mod tests {
             Response::Stats(s) => assert!(s.shards.is_empty()),
             other => panic!("{other:?}"),
         }
+    }
+
+    // ---- v3 binary framing --------------------------------------------------
+
+    #[test]
+    fn v3_text_bodies_are_exactly_v2() {
+        // Every text-opcode body parses and renders byte-identically to the
+        // v2.1 grammar: the binary dialect changes framing, never grammar.
+        for line in [
+            "PING",
+            "STATS",
+            "HEALTH",
+            "UTIL",
+            "SHUTDOWN",
+            "HELLO v2",
+            "SQUEUE qos=spot",
+            "SUBMIT qos=normal type=triple tasks=4096 user=1 run_secs=600 count=2",
+            "SJOB id=7",
+            "SCANCEL id=3",
+            "WAIT jobs=3 timeout=5",
+            "MSUBMIT qos=normal type=array tasks=8 user=1;qos=spot type=individual tasks=4 \
+             user=9 tag=t1",
+        ] {
+            let v3 = parse_request(line, V3).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(v3, parse_request(line, V2).unwrap(), "{line}");
+            assert_eq!(render_request(&v3, V3), render_request(&v3, V2), "{line}");
+        }
+        // The chunked MSUBMIT body is v2.1 grammar; v3 keeps it verbatim.
+        let chunked = "MSUBMIT entries=4 part=1/2;qos=normal type=array tasks=4 user=1";
+        let v3 = parse_request(chunked, V3).unwrap();
+        assert_eq!(v3, parse_request(chunked, V21).unwrap());
+        assert_eq!(render_request(&v3, V3), render_request(&v3, V21));
+        // Response bodies render exactly as v2 and round-trip under V3.
+        for resp in sample_responses() {
+            let wire = render_response(&resp, V3);
+            assert_eq!(wire, render_response(&resp, V2));
+            assert_eq!(parse_response(&wire, V3).unwrap(), resp, "{wire:?}");
+        }
+    }
+
+    #[test]
+    fn v3_frame_header_roundtrips_and_guards_length() {
+        let frame = v3_frame(OP_TEXT_REQ, b"PING");
+        assert_eq!(frame.len(), FRAME_HEADER_BYTES + 5);
+        assert_eq!(decode_frame_header(&frame).unwrap(), Some(5));
+        assert_eq!(frame[FRAME_HEADER_BYTES], OP_TEXT_REQ);
+        assert_eq!(&frame[FRAME_HEADER_BYTES + 1..], b"PING");
+        // Empty payload frames as len=1 (the opcode byte).
+        assert_eq!(decode_frame_header(&v3_frame(OP_TEXT_RESP, b"")).unwrap(), Some(1));
+        // A partial header asks for more bytes.
+        assert_eq!(decode_frame_header(&frame[..3]).unwrap(), None);
+        assert_eq!(decode_frame_header(&[]).unwrap(), None);
+        // Zero and oversized lengths are typed errors (desync → close).
+        assert_eq!(
+            decode_frame_header(&0u32.to_le_bytes()).unwrap_err().code,
+            ErrorCode::BadArity
+        );
+        let over = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes();
+        assert!(decode_frame_header(&over).is_err());
+        let max = (MAX_FRAME_BYTES as u32).to_le_bytes();
+        assert_eq!(decode_frame_header(&max).unwrap(), Some(MAX_FRAME_BYTES));
+    }
+
+    #[test]
+    fn uvarints_roundtrip_and_reject_overlong_encodings() {
+        for v in [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, 1 << 63, u64::MAX] {
+            let mut buf = Vec::new();
+            write_uvarint(&mut buf, v);
+            assert!(buf.len() <= 10, "{v}");
+            let mut r = ByteReader::new(&buf);
+            assert_eq!(r.uvarint("v").unwrap(), v);
+            r.done("v").unwrap();
+        }
+        // A 10th byte above 1 would overflow u64.
+        let mut r = ByteReader::new(&[0xff; 10]);
+        assert_eq!(r.uvarint("v").unwrap_err().code, ErrorCode::BadArg);
+        // An 11-byte encoding overflows regardless of its bits.
+        let eleven = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x01];
+        let mut r = ByteReader::new(&eleven);
+        assert_eq!(r.uvarint("v").unwrap_err().code, ErrorCode::BadArg);
+        // A dangling continuation bit is truncation, not silence.
+        let mut r = ByteReader::new(&[0x80]);
+        assert_eq!(r.uvarint("v").unwrap_err().code, ErrorCode::BadArity);
+    }
+
+    fn random_manifest(rng: &mut crate::util::rng::Xoshiro256, entries: usize) -> Manifest {
+        let mut m = Manifest::default();
+        for i in 0..entries {
+            let qos = if rng.gen_range(0, 2) == 0 {
+                QosClass::Normal
+            } else {
+                QosClass::Spot
+            };
+            let job_type = match rng.gen_range(0, 3) {
+                0 => JobType::Individual,
+                1 => JobType::Array,
+                _ => JobType::TripleMode,
+            };
+            let tag = match rng.gen_range(0, 3) {
+                0 => None,
+                1 => Some(Arc::from("fig2-live")),
+                _ => Some(Arc::from(format!("u{i}-tag.x/y:z"))),
+            };
+            m.entries.push(ManifestEntry {
+                user: rng.gen_range(0, 1 << 20) as u32,
+                qos,
+                job_type,
+                tasks: rng.gen_range(1, 4097) as u32,
+                cores_per_task: rng.gen_range(1, 5) as u32,
+                run_secs: rng.gen_range(1, 7200) as f64 * 0.5,
+                count: rng.gen_range(1, 9) as u32,
+                tag,
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn v3_msubmit_roundtrips_random_manifests_and_matches_text() {
+        let mut rng = crate::util::rng::Xoshiro256::new(0xb13a_57ee);
+        for entries in [1usize, 2, 7, 64, 500] {
+            let m = random_manifest(&mut rng, entries);
+            let payload = render_msubmit_v3(&m);
+            let back = parse_msubmit_v3(&payload).unwrap_or_else(|e| panic!("{entries}: {e}"));
+            assert_eq!(back, m, "binary round-trip at {entries} entries");
+            // The binary parse admits exactly what the text parse admits.
+            let line = render_request(&Request::MSubmit(m.clone()), V2);
+            match parse_request(&line, V2).unwrap() {
+                Request::MSubmit(text) => assert_eq!(text, back, "{entries} entries"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn v3_msubmit_carries_raw_f64_bits() {
+        // The text grammar accepts `run_secs=NaN`; the binary record carries
+        // the raw bits the same way. Both are refused later by semantic
+        // validation, never by the codec.
+        let entry =
+            ManifestEntry::new(QosClass::Spot, JobType::Array, 4, 1).with_run_secs(f64::NAN);
+        let m = Manifest {
+            entries: vec![entry],
+        };
+        let back = parse_msubmit_v3(&render_msubmit_v3(&m)).unwrap();
+        assert!(back.entries[0].run_secs.is_nan());
+        assert!(back.entries[0].validate().is_err());
+    }
+
+    #[test]
+    fn hostile_v3_msubmit_payloads_are_typed_errors() {
+        let mut m = Manifest::default();
+        m.entries.push(ManifestEntry::new(QosClass::Normal, JobType::Array, 8, 3));
+        let good = render_msubmit_v3(&m);
+        parse_msubmit_v3(&good).unwrap();
+
+        // Truncated mid-record.
+        for cut in 1..good.len() {
+            let err = parse_msubmit_v3(&good[..cut]).expect_err("truncation must error");
+            assert!(
+                matches!(err.code, ErrorCode::BadArity | ErrorCode::BadArg),
+                "cut at {cut}: {err}"
+            );
+        }
+        // Trailing bytes after the declared entries.
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert_eq!(parse_msubmit_v3(&trailing).unwrap_err().code, ErrorCode::BadArity);
+        // Zero declared entries.
+        assert_eq!(parse_msubmit_v3(&[0x00]).unwrap_err().code, ErrorCode::BadArg);
+        // Declared count over the manifest cap.
+        let mut over = Vec::new();
+        write_uvarint(&mut over, MAX_MANIFEST_ENTRIES as u64 + 1);
+        assert_eq!(parse_msubmit_v3(&over).unwrap_err().code, ErrorCode::BadArg);
+        // A declared count the payload cannot possibly carry is refused
+        // before any allocation.
+        let mut impossible = Vec::new();
+        write_uvarint(&mut impossible, 100);
+        assert_eq!(parse_msubmit_v3(&impossible).unwrap_err().code, ErrorCode::BadArg);
+        // Unknown discriminant bytes. Record layout for a sub-128 user:
+        // [n][user][qos][type]... — qos at offset 2, type at offset 3.
+        let mut bad_qos = good.clone();
+        bad_qos[2] = 7;
+        let err = parse_msubmit_v3(&bad_qos).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadArg);
+        assert!(err.message.contains("qos"), "{err}");
+        let mut bad_type = good.clone();
+        bad_type[3] = 9;
+        let err = parse_msubmit_v3(&bad_type).unwrap_err();
+        assert!(err.message.contains("type"), "{err}");
+        // A varint entry count that overflows u64.
+        assert_eq!(parse_msubmit_v3(&[0xff; 10]).unwrap_err().code, ErrorCode::BadArg);
+        // The final byte of `good` is the tag-length varint (0 = no tag):
+        // an oversized declared tag is refused before reading tag bytes...
+        let mut big_tag = good[..good.len() - 1].to_vec();
+        write_uvarint(&mut big_tag, MAX_ENTRY_RECORD_BYTES as u64 + 44);
+        let err = parse_msubmit_v3(&big_tag).unwrap_err();
+        assert!(err.message.contains("tag"), "{err}");
+        // ...and tag bytes must be UTF-8.
+        let mut bad_utf8 = good[..good.len() - 1].to_vec();
+        bad_utf8.extend_from_slice(&[0x02, 0xff, 0xfe]);
+        let err = parse_msubmit_v3(&bad_utf8).unwrap_err();
+        assert!(err.message.contains("utf-8"), "{err}");
+    }
+
+    #[test]
+    fn v3_manifest_ack_roundtrips() {
+        let acks = [
+            ManifestAck::default(),
+            ManifestAck {
+                accepted: vec![
+                    EntryAck {
+                        index: 0,
+                        first: 1,
+                        last: 608,
+                        count: 608,
+                    },
+                    EntryAck {
+                        index: 2,
+                        first: 609,
+                        last: 609,
+                        count: 1,
+                    },
+                ],
+                rejected: vec![EntryReject {
+                    index: 1,
+                    error: ApiError::bad_arg("run_secs", "not a number at all"),
+                }],
+                jobs: 609,
+                manifest: Some(3),
+            },
+            ManifestAck {
+                accepted: vec![],
+                rejected: vec![EntryReject {
+                    index: 0,
+                    error: ApiError::new(ErrorCode::Overloaded, ""),
+                }],
+                jobs: 0,
+                manifest: None,
+            },
+        ];
+        for ack in acks {
+            let payload = render_manifest_ack_v3(&ack);
+            assert_eq!(parse_manifest_ack_v3(&payload).unwrap(), ack);
+        }
+    }
+
+    #[test]
+    fn hostile_v3_manifest_acks_are_rejected_by_the_client_parser() {
+        fn ack_head(n_acc: u64, n_rej: u64, jobs: u64) -> Vec<u8> {
+            let mut out = Vec::new();
+            write_uvarint(&mut out, n_acc);
+            write_uvarint(&mut out, n_rej);
+            write_uvarint(&mut out, jobs);
+            out.push(0);
+            out
+        }
+        // Inconsistent id range (first > last).
+        let mut bad_range = ack_head(1, 0, 5);
+        for v in [0u64, 10, 5, 5] {
+            write_uvarint(&mut bad_range, v);
+        }
+        let err = parse_manifest_ack_v3(&bad_range).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Internal);
+        assert!(err.message.contains("inconsistent"), "{err}");
+        // A full-u64 span must not wrap into plausibility.
+        let mut wrap = ack_head(1, 0, 5);
+        for v in [0u64, u64::MAX - 1] {
+            write_uvarint(&mut wrap, v);
+        }
+        write_uvarint(&mut wrap, 3);
+        write_uvarint(&mut wrap, 5);
+        assert_eq!(parse_manifest_ack_v3(&wrap).unwrap_err().code, ErrorCode::Internal);
+        // Records must sum to the declared jobs.
+        let mut short = ack_head(1, 0, 7);
+        for v in [0u64, 1, 5, 5] {
+            write_uvarint(&mut short, v);
+        }
+        let err = parse_manifest_ack_v3(&short).unwrap_err();
+        assert!(err.message.contains("sum"), "{err}");
+        // Unknown has-manifest discriminant.
+        let mut bad_flag = Vec::new();
+        for v in [0u64, 0, 0] {
+            write_uvarint(&mut bad_flag, v);
+        }
+        bad_flag.push(9);
+        assert_eq!(parse_manifest_ack_v3(&bad_flag).unwrap_err().code, ErrorCode::BadArg);
+        // Trailing bytes after the declared records.
+        let mut trailing = render_manifest_ack_v3(&ManifestAck::default());
+        trailing.push(0);
+        assert_eq!(parse_manifest_ack_v3(&trailing).unwrap_err().code, ErrorCode::BadArity);
+        // An unknown reject-code byte parses as Internal (forward compat),
+        // mirroring the text parser's unknown-token rule.
+        let mut unknown_code = ack_head(0, 1, 0);
+        write_uvarint(&mut unknown_code, 4);
+        unknown_code.push(0xee);
+        write_uvarint(&mut unknown_code, 2);
+        unknown_code.extend_from_slice(b"hm");
+        let ack = parse_manifest_ack_v3(&unknown_code).unwrap();
+        assert_eq!(ack.rejected[0].error.code, ErrorCode::Internal);
+        assert_eq!(ack.rejected[0].error.message, "hm");
     }
 }

@@ -33,7 +33,7 @@ use super::api::{
     ApiError, ContentionStats, ErrorCode, HealthReport, HealthState, JobDetail, JobSummary,
     JournalStats, ProtocolVersion, Request, Response, ResumeEntry, ResumeInfo, ResumeTarget,
     ShardKind, ShardStats, ShardUtil, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec,
-    UtilSnapshot, WaitResult,
+    UserScaleStats, UtilSnapshot, WaitResult,
 };
 use super::codec;
 use super::journal::{
@@ -174,6 +174,17 @@ impl Default for OverloadConfig {
 /// feels interactive.
 const SHED_RETRY_MS: u64 = 50;
 
+/// Per-user admission-bucket map size that arms the first idle-bucket
+/// sweep. Below this the map is too small to be worth scanning.
+const USER_BUCKET_SWEEP_MIN: usize = 8_192;
+
+/// Hard cap on live per-user admission buckets. A sweep that cannot get
+/// under it by retiring refill-saturated buckets (a coordinated burst
+/// wider than the cap inside one refill window) evicts the least-recently
+/// touched buckets down to half the cap — those users simply get a fresh,
+/// full bucket on their next submission, an error toward admitting only.
+const USER_BUCKET_HARD_CAP: usize = 131_072;
+
 /// A standard token bucket over wall-clock time (std-only: refill is
 /// computed lazily from the elapsed interval, no timer thread). Used for
 /// the per-user admission limit here and the per-connection line limit in
@@ -218,6 +229,16 @@ impl TokenBucket {
             60_000
         };
         Err(ms.max(1))
+    }
+
+    /// Would a refill at `now` fill the bucket back to capacity? A
+    /// saturated bucket is state-identical to the fresh bucket
+    /// [`TokenBucket::new`] hands out (buckets start full), so the owner
+    /// can drop it without changing any future admission decision. Pure
+    /// projection — the bucket is not mutated.
+    pub fn is_saturated(&self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens + dt * self.rate >= self.capacity
     }
 }
 
@@ -357,8 +378,15 @@ pub struct Daemon {
     history: RwLock<HistoryTable>,
     /// Per-user admission token buckets ([`OverloadConfig::user_rate`]).
     /// Touched only on the sheddable write path, before any scheduler
-    /// lock; the read path never sees it.
+    /// lock; the read path never sees it. Bounded: idle (refill-saturated)
+    /// buckets are retired by a watermark-armed sweep so a million distinct
+    /// users cannot grow the map without bound (see
+    /// [`USER_BUCKET_HARD_CAP`]).
     user_buckets: Mutex<FxHashMap<u32, TokenBucket>>,
+    /// Bucket-map size that arms the next idle-bucket sweep (GC-style
+    /// watermark: reset to twice the post-sweep size, so the O(n) retain
+    /// amortizes to O(1) per admission).
+    user_bucket_sweep_at: AtomicU64,
     /// Concurrently executing sheddable requests (the inflight-budget
     /// gauge; see [`InflightGuard`]).
     inflight: AtomicU64,
@@ -803,6 +831,7 @@ impl Daemon {
             tracked: Mutex::new(tracked),
             history: RwLock::new(history),
             user_buckets: Mutex::new(FxHashMap::default()),
+            user_bucket_sweep_at: AtomicU64::new(USER_BUCKET_SWEEP_MIN as u64),
             inflight: AtomicU64::new(0),
             health: AtomicU64::new(0),
             health_since_ms: AtomicU64::new(0),
@@ -1440,6 +1469,13 @@ impl Daemon {
                         retry_ms,
                     ));
                 }
+                if buckets.len() as u64 >= self.user_bucket_sweep_at.load(Ordering::Relaxed) {
+                    Self::retire_idle_buckets(&mut buckets, now);
+                    let next = (buckets.len().max(USER_BUCKET_SWEEP_MIN) as u64)
+                        .saturating_mul(2)
+                        .min(USER_BUCKET_HARD_CAP as u64);
+                    self.user_bucket_sweep_at.store(next, Ordering::Relaxed);
+                }
             }
         }
         if ov.inflight_budget > 0 {
@@ -1459,6 +1495,33 @@ impl Daemon {
             return Ok(InflightGuard(Some(&self.inflight)));
         }
         Ok(InflightGuard(None))
+    }
+
+    /// Bound the per-user admission-bucket map. Retiring a refill-saturated
+    /// bucket is lossless — the user's next submission re-creates an
+    /// identical fresh bucket — so the sweep changes no admission decision
+    /// unless the *hard* cap forces out mid-refill buckets (and that only
+    /// ever errs toward admitting).
+    fn retire_idle_buckets(buckets: &mut FxHashMap<u32, TokenBucket>, now: Instant) {
+        buckets.retain(|_, b| !b.is_saturated(now));
+        if buckets.len() <= USER_BUCKET_HARD_CAP {
+            return;
+        }
+        // Rare: more distinct mid-refill users than the hard cap inside one
+        // refill window. Evict the least-recently-touched down to half the
+        // cap (O(n log n), amortized away by the sweep watermark).
+        let mut by_age: Vec<(Instant, u32)> = buckets.iter().map(|(&u, b)| (b.last, u)).collect();
+        by_age.sort_unstable();
+        let excess = buckets.len() - USER_BUCKET_HARD_CAP / 2;
+        for &(_, u) in by_age.iter().take(excess) {
+            buckets.remove(&u);
+        }
+    }
+
+    /// Live per-user admission token buckets (the `STATS` `buckets_live`
+    /// gauge; also pinned by the eviction regression tests).
+    pub fn user_bucket_count(&self) -> usize {
+        self.user_buckets.lock().expect("user buckets poisoned").len()
     }
 
     // ---- wire front door ---------------------------------------------------
@@ -1606,6 +1669,20 @@ impl Daemon {
         expires: Option<Instant>,
     ) -> LineOutcome {
         let (resp, render_version, negotiated) = match parsed {
+            // A binary-framed connection negotiated once, at text HELLO
+            // time; renegotiating mid-stream would have to re-frame the
+            // transport under the client's feet, so it is a typed refusal.
+            Ok(Request::Hello(_)) if version.binary_frames() => {
+                self.metrics.record_command("HELLO");
+                (
+                    Response::Error(ApiError::unsupported(
+                        "connection already speaks v3 binary framing \
+                         (HELLO renegotiation inside a frame is not allowed)",
+                    )),
+                    version,
+                    None,
+                )
+            }
             Ok(req) => {
                 self.metrics.record_command(req.command_name());
                 match self.gate(&req, expires) {
@@ -1663,6 +1740,53 @@ impl Daemon {
         self.metrics
             .record_request(ok, parked.ticket.started.elapsed().as_nanos() as u64);
         codec::render_response(&resp, parked.version)
+    }
+
+    /// Execute one v3 binary `MSUBMIT` frame and render the complete
+    /// response frame bytes. The transport parses the payload zero-copy on
+    /// its reader thread ([`codec::parse_msubmit_v3`] straight off the
+    /// connection buffer — no per-entry `String` ever exists) and ships the
+    /// typed result here on a worker; admission gating, metrics, and the
+    /// open-chunk-stream interlock match the text `MSUBMIT` path exactly.
+    /// Success frames a binary `OP_MANIFEST_ACK`; every error frames an
+    /// `OP_TEXT_RESP` carrying the v2 `ERR` body.
+    pub fn handle_msubmit_frame(
+        &self,
+        parsed: Result<Manifest, ApiError>,
+        assembler: Option<&mut ChunkAssembler>,
+    ) -> Vec<u8> {
+        let t0 = Instant::now();
+        self.maybe_probe_health();
+        self.metrics.record_command("MSUBMIT");
+        let aborted_stream = assembler.map_or(false, |asm| asm.abort());
+        let resp = if aborted_stream {
+            Response::Error(ApiError::unsupported(
+                "a chunked MSUBMIT stream was open: partial manifest discarded \
+                 (re-send from part 1)",
+            ))
+        } else {
+            match parsed {
+                Ok(m) => {
+                    let user = m.entries.first().map(|e| e.user);
+                    match self.admit_sheddable(user, &self.metrics.shed_msubmits) {
+                        Ok(_inflight) => self.msubmit_assembled(&m),
+                        Err(e) => Response::Error(e),
+                    }
+                }
+                Err(e) => Response::Error(e),
+            }
+        };
+        let ok = !matches!(resp, Response::Error(_));
+        self.metrics.record_request(ok, t0.elapsed().as_nanos() as u64);
+        match resp {
+            Response::ManifestAck(ack) => {
+                codec::v3_frame(codec::OP_MANIFEST_ACK, &codec::render_manifest_ack_v3(&ack))
+            }
+            other => {
+                let body = codec::render_response(&other, ProtocolVersion::V3);
+                codec::v3_frame(codec::OP_TEXT_RESP, body.as_bytes())
+            }
+        }
     }
 
     /// Handle one typed request. Total: failures come back as
@@ -2577,6 +2701,11 @@ impl Daemon {
                 poisoned: self.metrics.journal_poisoned.load(Ordering::Relaxed),
             }),
             health: Some(self.health_report()),
+            users: Some(UserScaleStats {
+                users_active: snap.users_active as u64,
+                users_tracked: snap.users_tracked as u64,
+                buckets_live: self.user_bucket_count() as u64,
+            }),
         }
     }
 
@@ -3645,12 +3774,128 @@ mod tests {
     }
 
     #[test]
+    fn idle_user_buckets_are_retired_at_scale() {
+        let d = daemon_with(DaemonConfig {
+            speedup: 0.0,
+            overload: OverloadConfig {
+                // High refill: a bucket saturates within a microsecond of
+                // its one admission, so the sweep can always retire it.
+                user_rate: 1_000_000.0,
+                user_burst: 4.0,
+                ..OverloadConfig::default()
+            },
+            ..DaemonConfig::default()
+        });
+        // 100k distinct users, one admission each — the PR-9 map grew one
+        // bucket per user forever; the watermark sweep now retires
+        // refill-saturated buckets, so the map stays bounded far below the
+        // user cardinality.
+        for u in 0..100_000u32 {
+            let admitted = d.admit_sheddable(Some(u), &d.metrics.shed_msubmits);
+            assert!(admitted.is_ok(), "user {u} must admit on a fresh bucket");
+        }
+        let live = d.user_bucket_count();
+        assert!(
+            live <= USER_BUCKET_SWEEP_MIN * 2,
+            "bucket map tracks ~active users, not all 100k seen: {live}"
+        );
+        assert_eq!(d.metrics.shed_rate_limited.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn bucket_sweep_is_lossless_and_hard_cap_evicts_oldest() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(2.0, 4.0, t0);
+        assert!(b.is_saturated(t0), "fresh buckets start full");
+        b.try_take(t0).unwrap();
+        assert!(!b.is_saturated(t0), "one token out: mid-refill");
+        assert!(
+            b.is_saturated(t0 + Duration::from_secs(1)),
+            "2 tokens/s re-fills the spent token well within a second"
+        );
+        // Hard-cap pressure: every bucket mid-refill, oldest evicted first.
+        let mut map = FxHashMap::default();
+        for u in 0..(USER_BUCKET_HARD_CAP as u32 + 10) {
+            let at = t0 + Duration::from_nanos(u64::from(u));
+            let mut bucket = TokenBucket::new(0.0001, 1.0, at);
+            bucket.try_take(at).unwrap();
+            map.insert(u, bucket);
+        }
+        Daemon::retire_idle_buckets(&mut map, t0 + Duration::from_millis(1));
+        assert_eq!(map.len(), USER_BUCKET_HARD_CAP / 2);
+        let newest = USER_BUCKET_HARD_CAP as u32 + 9;
+        assert!(map.contains_key(&newest), "most recently touched survives");
+        assert!(!map.contains_key(&0), "least recently touched goes first");
+    }
+
+    #[test]
+    fn stats_exposes_user_scale_gauges() {
+        let d = daemon();
+        let (resp, _) = d.handle_line_versioned("STATS", ProtocolVersion::V2);
+        assert!(resp.contains("users_active="), "{resp}");
+        assert!(resp.contains("users_tracked="), "{resp}");
+        assert!(resp.contains("buckets_live=0"), "{resp}");
+        // v1 keeps its original key set byte-compatible.
+        let (v1, _) = d.handle_line_versioned("STATS", ProtocolVersion::V1);
+        assert!(!v1.contains("users_active="), "{v1}");
+    }
+
+    #[test]
+    fn v3_binary_msubmit_frames_execute_and_interlock_with_chunk_streams() {
+        let d = daemon();
+        let m = ManifestBuilder::new()
+            .interactive(1, JobType::Array, 8)
+            .spot(9, JobType::Array, 64)
+            .build();
+        let payload = codec::render_msubmit_v3(&m);
+        let frame = d.handle_msubmit_frame(codec::parse_msubmit_v3(&payload), None);
+        let len = codec::decode_frame_header(&frame).unwrap().unwrap();
+        assert_eq!(frame.len(), codec::FRAME_HEADER_BYTES + len);
+        assert_eq!(frame[codec::FRAME_HEADER_BYTES], codec::OP_MANIFEST_ACK);
+        let ack = codec::parse_manifest_ack_v3(&frame[codec::FRAME_HEADER_BYTES + 1..]).unwrap();
+        assert_eq!(ack.accepted.len(), 2);
+        assert_eq!(ack.jobs, 2);
+        assert!(ack.manifest.is_some());
+        // A wire-malformed payload answers with a typed ERR text frame on
+        // the same connection — no desync, no close.
+        let bad = d.handle_msubmit_frame(codec::parse_msubmit_v3(&[0x00]), None);
+        assert_eq!(bad[codec::FRAME_HEADER_BYTES], codec::OP_TEXT_RESP);
+        let body = std::str::from_utf8(&bad[codec::FRAME_HEADER_BYTES + 1..]).unwrap();
+        assert!(body.starts_with("ERR code=bad_arg"), "{body}");
+        // A binary MSUBMIT landing while a chunked text stream is open
+        // discards the partial manifest, mirroring the text interlock.
+        let mut asm = ChunkAssembler::new();
+        let chunk = "MSUBMIT entries=2 part=1/2;qos=normal type=array tasks=4 user=1";
+        match d.handle_line_stateful(chunk, ProtocolVersion::V3, Some(&mut asm)) {
+            LineOutcome::Done(resp, _) => {
+                assert!(resp.starts_with("OK kind=chunk_ack"), "{resp}")
+            }
+            LineOutcome::Parked(_) => panic!("chunk ack cannot park"),
+        }
+        let out = d.handle_msubmit_frame(codec::parse_msubmit_v3(&payload), Some(&mut asm));
+        let body = std::str::from_utf8(&out[codec::FRAME_HEADER_BYTES + 1..]).unwrap();
+        assert!(body.starts_with("ERR code=unsupported"), "{body}");
+        assert!(!asm.in_progress(), "partial stream discarded");
+    }
+
+    #[test]
+    fn hello_renegotiation_is_refused_inside_v3_frames() {
+        let d = daemon();
+        let (resp, negotiated) = d.handle_line_versioned("HELLO v2", ProtocolVersion::V3);
+        assert!(resp.starts_with("ERR code=unsupported"), "{resp}");
+        assert_eq!(negotiated, None);
+        // Every other verb rides v3 text frames as plain v2.1 grammar.
+        let (resp, _) = d.handle_line_versioned("PING", ProtocolVersion::V3);
+        assert_eq!(resp, "OK kind=pong");
+    }
+
+    #[test]
     fn expired_deadline_drops_before_execution() {
         let d = daemon();
         // Fresh budget: executes normally.
         match d.handle_line_at("deadline_ms=60000 PING", ProtocolVersion::V2, None, Instant::now())
         {
-            LineOutcome::Done(resp, _) => assert_eq!(resp, "OK pong"),
+            LineOutcome::Done(resp, _) => assert_eq!(resp, "OK kind=pong"),
             LineOutcome::Parked(_) => panic!("PING cannot park"),
         }
         // A budget already spent while queued: dropped typed, unexecuted.

@@ -7,9 +7,11 @@
 //! * [`api`] — the typed protocol core: `Request` / `Response` enums,
 //!   payload structs (`SubmitAck`, `JobSummary`, `StatsSnapshot`, …), and
 //!   typed `ErrorCode`s.
-//! * [`codec`] — wire rendering/parsing for both protocol versions: v1 (the
-//!   original line grammar, byte-compatible) and v2 (tagged `key=value`
-//!   records), negotiated per connection via `HELLO v2`. See `PROTOCOL.md`.
+//! * [`codec`] — wire rendering/parsing for every protocol dialect: v1 (the
+//!   original line grammar, byte-compatible), v2/v2.1 (tagged `key=value`
+//!   records, chunked manifests), and v3 (length-prefixed binary frames
+//!   with varint-packed manifest records), negotiated per connection via
+//!   `HELLO`. See `PROTOCOL.md`.
 //! * [`manifest`] — typed submission manifests (`MSUBMIT`): heterogeneous
 //!   per-entry job specs in one RPC, partial-accept admission with typed
 //!   per-entry rejects, and the client-side `ManifestBuilder`.
@@ -73,7 +75,7 @@ pub use api::{
     ApiError, ContentionStats, ErrorCode, HealthReport, HealthState, JobDetail, JobSummary,
     JournalStats, ProtocolVersion, Request, Response, ResumeEntry, ResumeInfo, ResumeTarget,
     ShardKind, ShardStats, ShardUtil, SqueueFilter, StatsSnapshot, SubmitAck, SubmitSpec,
-    UtilSnapshot, WaitResult,
+    UserScaleStats, UtilSnapshot, WaitResult,
 };
 pub use client::{Client, ClientError, RetryPolicy};
 pub use daemon::{ConfigError, Daemon, DaemonConfig, OverloadConfig, TokenBucket};

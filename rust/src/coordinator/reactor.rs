@@ -34,6 +34,15 @@
 //!   deadline. An *idle* connection therefore costs one wheel entry and no
 //!   wakeups at all — the invariant the `connection_scaling` bench gates
 //!   on via [`DaemonMetrics::reactor_wakeups`](super::metrics::DaemonMetrics).
+//! * **v3 binary frames** — once a connection negotiates `HELLO v3` its
+//!   byte stream switches from newline-delimited text to length-prefixed
+//!   frames ([`codec::decode_frame_header`]). `MSUBMIT` frames are parsed
+//!   *on the reactor thread, straight out of the read buffer* — no
+//!   intermediate text line, no per-entry `String` — and the typed result
+//!   is what crosses to the worker pool
+//!   ([`Daemon::handle_msubmit_frame`]); responses come back as
+//!   ready-to-send frame bytes. Framed text requests reuse the ordinary
+//!   line path with the response wrapped in an `OP_TEXT_RESP` frame.
 //! * **Reactor shards** — [`super::server::Server::bind_sharded`] opens N
 //!   `SO_REUSEPORT` listeners on one address ([`reuseport_listeners`]); the
 //!   kernel spreads accepts across them and each shard runs this reactor on
@@ -46,7 +55,7 @@
 
 use super::codec;
 use super::daemon::{Daemon, LineOutcome, TokenBucket};
-use super::manifest::ChunkAssembler;
+use super::manifest::{ChunkAssembler, Manifest};
 use super::metrics::ReactorShardMetrics;
 use super::threadpool::ThreadPool;
 use super::timerwheel::TimerWheel;
@@ -476,6 +485,61 @@ impl Conn {
             }
         }
     }
+
+    /// Locate the next complete v3 frame without consuming it:
+    /// `Ok(Some((opcode, payload_start, frame_end)))` as offsets into
+    /// `read_buf`, `Ok(None)` while bytes are still in flight. The payload
+    /// stays in place so `MSUBMIT` bodies parse zero-copy out of the read
+    /// buffer. A malformed length prefix is `Err` — the stream cannot be
+    /// resynced and the connection must close after a typed error.
+    fn peek_frame(&self) -> Result<Option<(u8, usize, usize)>, ApiError> {
+        let avail = &self.read_buf[self.read_pos..];
+        let len = match codec::decode_frame_header(avail)? {
+            None => return Ok(None),
+            Some(len) => len,
+        };
+        if avail.len() < codec::FRAME_HEADER_BYTES + len {
+            return Ok(None);
+        }
+        let start = self.read_pos + codec::FRAME_HEADER_BYTES;
+        Ok(Some((self.read_buf[start], start + 1, start + len)))
+    }
+
+    /// Consume a peeked frame (everything before `end`), compacting the
+    /// buffer on the same policy as [`Conn::take_line`].
+    fn consume_to(&mut self, end: usize) {
+        self.read_pos = end;
+        self.scan_pos = self.read_pos;
+        if self.read_pos == self.read_buf.len() {
+            self.read_buf.clear();
+            if self.read_buf.capacity() > BUF_SHRINK_THRESHOLD {
+                self.read_buf.shrink_to(READ_CHUNK);
+            }
+            self.read_pos = 0;
+            self.scan_pos = 0;
+        } else if self.read_pos >= 4096 && self.read_pos * 2 >= self.read_buf.len() {
+            self.read_buf.drain(..self.read_pos);
+            self.scan_pos -= self.read_pos;
+            self.read_pos = 0;
+        }
+    }
+}
+
+/// What the extraction step found on a connection's read buffer — the
+/// text and v3-frame dialects converge here so dispatch is shared.
+enum NextReq {
+    /// Nothing complete buffered (or backpressured): stop advancing.
+    None,
+    /// The per-connection rate limit refused the request (retry hint ms).
+    Refused(u64),
+    /// A text request line — from a bare line or an `OP_TEXT_REQ` frame.
+    Line(String),
+    /// An `OP_MSUBMIT` frame, already parsed on the reactor thread.
+    Manifest(Result<Manifest, ApiError>),
+    /// A frame with an opcode this server does not dispatch.
+    BadOpcode(u8),
+    /// The length prefix itself is invalid; the stream cannot resync.
+    FrameError(ApiError),
 }
 
 /// Timer payloads: validated lazily against the slab on expiry.
@@ -491,9 +555,17 @@ enum TimerItem {
     EvictDeadline(u64),
 }
 
-/// Completed request lines coming back from the worker pool.
+/// One finished request coming back from the worker pool.
+enum Completion {
+    /// A text-path outcome (response body or parked `WAIT`).
+    Line(LineOutcome),
+    /// Ready-to-send v3 frame bytes (binary `MSUBMIT` path).
+    Frame(Vec<u8>),
+}
+
+/// Completed requests coming back from the worker pool.
 struct Completions {
-    queue: Mutex<Vec<(u64, LineOutcome)>>,
+    queue: Mutex<Vec<(u64, Completion)>>,
     inflight: AtomicUsize,
     waker: WakeFd,
 }
@@ -840,6 +912,14 @@ impl<'a> Reactor<'a> {
             if conn.dead {
                 return;
             }
+            // A v3 connection must be able to buffer one maximum-size frame
+            // on top of the pipelined backlog the text cap allows; a text
+            // connection keeps the original line-length bound.
+            let buffer_cap = if conn.version.binary_frames() {
+                MAX_BUFFERED_BYTES + codec::MAX_FRAME_BYTES
+            } else {
+                MAX_BUFFERED_BYTES
+            };
             // Edge-triggered: drain to EWOULDBLOCK so no edge is lost.
             loop {
                 match conn.stream.read(&mut buf) {
@@ -853,7 +933,7 @@ impl<'a> Reactor<'a> {
                     Ok(n) => {
                         conn.read_buf.extend_from_slice(&buf[..n]);
                         got_bytes = true;
-                        if conn.buffered_len() > MAX_BUFFERED_BYTES {
+                        if conn.buffered_len() > buffer_cap {
                             closed = true; // abusive line length / backlog
                             break;
                         }
@@ -893,15 +973,85 @@ impl<'a> Reactor<'a> {
         }
     }
 
-    /// Dispatch the next complete, non-empty line (if any) to the worker
-    /// pool. At most one request per connection is in flight, which is what
-    /// keeps pipelined responses in order.
+    /// Extract the next complete text request line, applying the blank
+    /// keep-alive skip and the per-connection rate limit. Marks the
+    /// connection busy when a line is handed out for dispatch.
+    fn next_line(conn: &mut Conn) -> NextReq {
+        loop {
+            match conn.take_line() {
+                None => return NextReq::None,
+                Some(line) => {
+                    if line.is_empty() {
+                        continue; // blank keep-alive line
+                    }
+                    // Per-connection rate limit: an over-rate line is
+                    // refused right here on the reactor thread — no
+                    // worker turn, no scheduler lock, just a rendered
+                    // `overloaded` with the bucket's retry hint.
+                    let refused = match conn.bucket.as_mut() {
+                        Some(bucket) => bucket.try_take(Instant::now()).err(),
+                        None => None,
+                    };
+                    match refused {
+                        Some(retry_ms) => return NextReq::Refused(retry_ms),
+                        None => {
+                            conn.busy = true;
+                            return NextReq::Line(line);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Extract the next complete v3 frame. `OP_MSUBMIT` payloads are parsed
+    /// here, zero-copy out of the read buffer, so the worker pool receives
+    /// a typed manifest instead of re-tokenizing text. The rate limit
+    /// charges per frame, exactly as the text path charges per line.
+    fn next_frame(conn: &mut Conn) -> NextReq {
+        let (opcode, payload_start, end) = match conn.peek_frame() {
+            Err(e) => return NextReq::FrameError(e),
+            Ok(None) => return NextReq::None,
+            Ok(Some(found)) => found,
+        };
+        let refused = match conn.bucket.as_mut() {
+            Some(bucket) => bucket.try_take(Instant::now()).err(),
+            None => None,
+        };
+        if let Some(retry_ms) = refused {
+            conn.consume_to(end);
+            return NextReq::Refused(retry_ms);
+        }
+        match opcode {
+            codec::OP_TEXT_REQ => {
+                let line =
+                    String::from_utf8_lossy(&conn.read_buf[payload_start..end]).into_owned();
+                conn.consume_to(end);
+                conn.busy = true;
+                NextReq::Line(line)
+            }
+            codec::OP_MSUBMIT => {
+                let parsed = codec::parse_msubmit_v3(&conn.read_buf[payload_start..end]);
+                conn.consume_to(end);
+                conn.busy = true;
+                NextReq::Manifest(parsed)
+            }
+            other => {
+                conn.consume_to(end);
+                NextReq::BadOpcode(other)
+            }
+        }
+    }
+
+    /// Dispatch the next complete request (if any) to the worker pool. At
+    /// most one request per connection is in flight, which is what keeps
+    /// pipelined responses in order — for framed and text dialects alike.
     fn advance_conn(&mut self, tok: u64) {
         if self.shutting_down {
             return;
         }
         loop {
-            let (line, refused) = {
+            let next = {
                 let Some(conn) = self.slab.get_mut(tok) else { return };
                 if conn.busy || conn.parked.is_some() || conn.dead {
                     return;
@@ -921,78 +1071,122 @@ impl<'a> Reactor<'a> {
                     }
                     return;
                 }
-                match conn.take_line() {
-                    None => return,
-                    Some(line) => {
-                        if line.is_empty() {
-                            continue; // blank keep-alive line
-                        }
-                        // Per-connection rate limit: an over-rate line is
-                        // refused right here on the reactor thread — no
-                        // worker turn, no scheduler lock, just a rendered
-                        // `overloaded` with the bucket's retry hint.
-                        let refused = match conn.bucket.as_mut() {
-                            Some(bucket) => bucket.try_take(Instant::now()).err(),
-                            None => None,
-                        };
-                        if refused.is_none() {
-                            conn.busy = true;
-                        }
-                        (line, refused)
-                    }
+                if conn.version.binary_frames() {
+                    Self::next_frame(conn)
+                } else {
+                    Self::next_line(conn)
                 }
             };
-            if let Some(retry_ms) = refused {
-                self.daemon
-                    .metrics
-                    .shed_rate_limited
-                    .fetch_add(1, Ordering::Relaxed);
-                let (version, _) = match self.slab.get_mut(tok) {
-                    Some(conn) => (conn.version, ()),
-                    None => return,
-                };
-                let resp = codec::render_response(
-                    &Response::Error(ApiError::overloaded(
-                        "connection request rate limit exceeded",
-                        retry_ms,
-                    )),
-                    version,
-                );
-                self.queue_response(tok, &resp);
-                continue; // the next pipelined line may be in budget later
+            match next {
+                NextReq::None => return,
+                NextReq::Refused(retry_ms) => {
+                    self.daemon
+                        .metrics
+                        .shed_rate_limited
+                        .fetch_add(1, Ordering::Relaxed);
+                    let version = match self.slab.get_mut(tok) {
+                        Some(conn) => conn.version,
+                        None => return,
+                    };
+                    let resp = codec::render_response(
+                        &Response::Error(ApiError::overloaded(
+                            "connection request rate limit exceeded",
+                            retry_ms,
+                        )),
+                        version,
+                    );
+                    self.queue_body(tok, &resp);
+                    continue; // the next pipelined request may be in budget
+                }
+                NextReq::BadOpcode(op) => {
+                    let resp = codec::render_response(
+                        &Response::Error(ApiError::unsupported(format!(
+                            "unknown v3 frame opcode {op:#04x}"
+                        ))),
+                        ProtocolVersion::V3,
+                    );
+                    self.queue_body(tok, &resp);
+                    continue; // frame boundaries survive a bad opcode
+                }
+                NextReq::FrameError(e) => {
+                    // The length prefix is garbage: everything after it is
+                    // unframeable, so answer typed and hang up.
+                    let resp =
+                        codec::render_response(&Response::Error(e), ProtocolVersion::V3);
+                    self.queue_body(tok, &resp);
+                    self.close_token(tok);
+                    return;
+                }
+                NextReq::Line(line) => {
+                    self.dispatch_line(tok, line);
+                    return;
+                }
+                NextReq::Manifest(parsed) => {
+                    self.dispatch_msubmit_frame(tok, parsed);
+                    return;
+                }
             }
-            let (version, chunks) = match self.slab.get_mut(tok) {
-                Some(conn) => (conn.version, Arc::clone(&conn.chunks)),
-                None => return,
-            };
-            self.comps.inflight.fetch_add(1, Ordering::SeqCst);
-            let daemon = Arc::clone(&self.daemon);
-            let comps = Arc::clone(&self.comps);
-            // Stamped before the pool queue so a `deadline_ms=` budget
-            // covers worker-queue time (see [`Daemon::handle_line_at`]).
-            let arrived = Instant::now();
-            self.pool.execute(move || {
-                let outcome = {
-                    let mut asm = chunks.lock().expect("chunk assembler poisoned");
-                    daemon.handle_line_at(&line, version, Some(&mut asm), arrived)
-                };
-                comps
-                    .queue
-                    .lock()
-                    .expect("completion queue poisoned")
-                    .push((tok, outcome));
-                // Decrement *after* the push so an observer seeing zero
-                // in-flight knows the queue holds every outcome.
-                comps.inflight.fetch_sub(1, Ordering::SeqCst);
-                comps.waker.wake();
-            });
-            return;
         }
+    }
+
+    /// Hand a request line to the worker pool; the outcome comes back
+    /// through the completion queue.
+    fn dispatch_line(&mut self, tok: u64, line: String) {
+        let (version, chunks) = match self.slab.get_mut(tok) {
+            Some(conn) => (conn.version, Arc::clone(&conn.chunks)),
+            None => return,
+        };
+        self.comps.inflight.fetch_add(1, Ordering::SeqCst);
+        let daemon = Arc::clone(&self.daemon);
+        let comps = Arc::clone(&self.comps);
+        // Stamped before the pool queue so a `deadline_ms=` budget
+        // covers worker-queue time (see [`Daemon::handle_line_at`]).
+        let arrived = Instant::now();
+        self.pool.execute(move || {
+            let outcome = {
+                let mut asm = chunks.lock().expect("chunk assembler poisoned");
+                daemon.handle_line_at(&line, version, Some(&mut asm), arrived)
+            };
+            comps
+                .queue
+                .lock()
+                .expect("completion queue poisoned")
+                .push((tok, Completion::Line(outcome)));
+            // Decrement *after* the push so an observer seeing zero
+            // in-flight knows the queue holds every outcome.
+            comps.inflight.fetch_sub(1, Ordering::SeqCst);
+            comps.waker.wake();
+        });
+    }
+
+    /// Hand a reactor-parsed binary `MSUBMIT` to the worker pool; the
+    /// response comes back as ready-to-send frame bytes.
+    fn dispatch_msubmit_frame(&mut self, tok: u64, parsed: Result<Manifest, ApiError>) {
+        let chunks = match self.slab.get_mut(tok) {
+            Some(conn) => Arc::clone(&conn.chunks),
+            None => return,
+        };
+        self.comps.inflight.fetch_add(1, Ordering::SeqCst);
+        let daemon = Arc::clone(&self.daemon);
+        let comps = Arc::clone(&self.comps);
+        self.pool.execute(move || {
+            let frame = {
+                let mut asm = chunks.lock().expect("chunk assembler poisoned");
+                daemon.handle_msubmit_frame(parsed, Some(&mut asm))
+            };
+            comps
+                .queue
+                .lock()
+                .expect("completion queue poisoned")
+                .push((tok, Completion::Frame(frame)));
+            comps.inflight.fetch_sub(1, Ordering::SeqCst);
+            comps.waker.wake();
+        });
     }
 
     fn drain_completions(&mut self) {
         loop {
-            let batch: Vec<(u64, LineOutcome)> = {
+            let batch: Vec<(u64, Completion)> = {
                 let mut q = self.comps.queue.lock().expect("completion queue poisoned");
                 std::mem::take(&mut *q)
             };
@@ -1005,12 +1199,12 @@ impl<'a> Reactor<'a> {
         }
     }
 
-    fn on_completion(&mut self, tok: u64, outcome: LineOutcome) {
+    fn on_completion(&mut self, tok: u64, comp: Completion) {
         let dead = match self.slab.get_mut(tok) {
             None => {
                 // Busy slots are pinned, so this should be unreachable; a
                 // parked outcome must still resolve exactly once.
-                if let LineOutcome::Parked(pw) = outcome {
+                if let Completion::Line(LineOutcome::Parked(pw)) = comp {
                     let resp = self
                         .daemon
                         .poll_wait(&pw.ticket)
@@ -1024,8 +1218,31 @@ impl<'a> Reactor<'a> {
                 conn.dead
             }
         };
+        let outcome = match comp {
+            Completion::Frame(bytes) => {
+                // Binary responses arrive ready to send; nothing to render
+                // and no negotiation can ride on a frame.
+                if dead {
+                    self.maybe_reap(tok);
+                    return;
+                }
+                self.queue_frame(tok, &bytes);
+                self.touch_idle(tok);
+                self.maybe_close_eof(tok);
+                return;
+            }
+            Completion::Line(outcome) => outcome,
+        };
         match outcome {
             LineOutcome::Done(resp, negotiated) => {
+                // Whether this response gets framed is decided by the wire
+                // dialect the request arrived under — the `HELLO v3` ack
+                // itself still goes out as text; only bytes *after* the
+                // upgrade are framed.
+                let framed = matches!(
+                    self.slab.get_mut(tok),
+                    Some(c) if c.version.binary_frames()
+                );
                 if let Some(v) = negotiated {
                     if let Some(conn) = self.slab.get_mut(tok) {
                         conn.version = v;
@@ -1035,7 +1252,11 @@ impl<'a> Reactor<'a> {
                     self.maybe_reap(tok);
                     return;
                 }
-                self.queue_response(tok, &resp);
+                if framed {
+                    self.queue_frame(tok, &codec::v3_frame(codec::OP_TEXT_RESP, resp.as_bytes()));
+                } else {
+                    self.queue_response(tok, &resp);
+                }
                 self.touch_idle(tok);
                 self.maybe_close_eof(tok);
             }
@@ -1056,7 +1277,7 @@ impl<'a> Reactor<'a> {
                     if dead {
                         self.maybe_reap(tok);
                     } else {
-                        self.queue_response(tok, &rendered);
+                        self.queue_body(tok, &rendered);
                         self.touch_idle(tok);
                         self.maybe_close_eof(tok);
                     }
@@ -1107,7 +1328,7 @@ impl<'a> Reactor<'a> {
         if dead {
             self.maybe_reap(tok);
         } else {
-            self.queue_response(tok, &rendered);
+            self.queue_body(tok, &rendered);
             self.touch_idle(tok);
             // The connection resumes normal service (pipelined requests
             // buffered behind the WAIT included).
@@ -1224,6 +1445,32 @@ impl<'a> Reactor<'a> {
             conn.write_buf.extend_from_slice(b"\n\n");
         }
         self.try_flush(tok);
+    }
+
+    /// Queue ready-to-send v3 frame bytes. No terminator: the length
+    /// prefix is the delimiter.
+    fn queue_frame(&mut self, tok: u64, frame: &[u8]) {
+        if let Some(conn) = self.slab.get_mut(tok) {
+            conn.write_buf.extend_from_slice(frame);
+        }
+        self.try_flush(tok);
+    }
+
+    /// Queue a rendered response body in the connection's wire dialect:
+    /// framed (`OP_TEXT_RESP`) after a v3 upgrade, blank-line-terminated
+    /// text before. Used wherever a response is produced away from the
+    /// request that triggered it (rate refusals, parked `WAIT`
+    /// resolutions, shutdown notices).
+    fn queue_body(&mut self, tok: u64, body: &str) {
+        let framed = matches!(
+            self.slab.get_mut(tok),
+            Some(c) if c.version.binary_frames()
+        );
+        if framed {
+            self.queue_frame(tok, &codec::v3_frame(codec::OP_TEXT_RESP, body.as_bytes()));
+        } else {
+            self.queue_response(tok, body);
+        }
     }
 
     fn try_flush(&mut self, tok: u64) {
@@ -1344,7 +1591,7 @@ impl<'a> Reactor<'a> {
                     self.daemon.reject_wait(&pw.ticket, "daemon is shutting down")
                 });
                 let rendered = self.daemon.finish_wait(&pw, resp);
-                self.queue_response(tok, &rendered);
+                self.queue_body(tok, &rendered);
             }
         }
         self.sync_parked_gauge();
@@ -1515,5 +1762,72 @@ mod tests {
         }
         assert_eq!(n, 2000);
         assert!(conn.read_buf.is_empty());
+    }
+
+    fn v3_conn_stub() -> Conn {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let now = Instant::now();
+        Conn {
+            stream,
+            read_buf: Vec::new(),
+            read_pos: 0,
+            scan_pos: 0,
+            write_buf: Vec::new(),
+            write_pos: 0,
+            version: ProtocolVersion::V3,
+            chunks: Arc::new(Mutex::new(ChunkAssembler::new())),
+            busy: false,
+            parked: None,
+            dead: false,
+            peer_eof: false,
+            wants_write: false,
+            idle_deadline: now,
+            idle_timer_armed: false,
+            accepted_at: now,
+            first_byte_sent: false,
+            bucket: None,
+            evict_armed: false,
+        }
+    }
+
+    #[test]
+    fn frame_extraction_peeks_consumes_and_rejects_bad_prefixes() {
+        let mut conn = v3_conn_stub();
+        // A frame arriving in dribbles is not extractable until complete.
+        let frame = codec::v3_frame(codec::OP_TEXT_REQ, b"PING");
+        conn.read_buf.extend_from_slice(&frame[..3]);
+        assert!(matches!(conn.peek_frame(), Ok(None)));
+        conn.read_buf.extend_from_slice(&frame[3..frame.len() - 1]);
+        assert!(matches!(conn.peek_frame(), Ok(None)));
+        conn.read_buf.extend_from_slice(&frame[frame.len() - 1..]);
+        let (opcode, start, end) = conn.peek_frame().unwrap().unwrap();
+        assert_eq!(opcode, codec::OP_TEXT_REQ);
+        assert_eq!(&conn.read_buf[start..end], b"PING");
+        conn.consume_to(end);
+        assert!(conn.read_buf.is_empty(), "fully consumed buffer resets");
+
+        // Two pipelined frames extract in order, each exactly once.
+        conn.read_buf
+            .extend_from_slice(&codec::v3_frame(codec::OP_MSUBMIT, b"\x01"));
+        conn.read_buf
+            .extend_from_slice(&codec::v3_frame(codec::OP_TEXT_REQ, b"UTIL"));
+        let (op1, s1, e1) = conn.peek_frame().unwrap().unwrap();
+        assert_eq!(op1, codec::OP_MSUBMIT);
+        assert_eq!(&conn.read_buf[s1..e1], b"\x01");
+        conn.consume_to(e1);
+        let (op2, s2, e2) = conn.peek_frame().unwrap().unwrap();
+        assert_eq!(op2, codec::OP_TEXT_REQ);
+        assert_eq!(&conn.read_buf[s2..e2], b"UTIL");
+        conn.consume_to(e2);
+        assert!(conn.read_buf.is_empty());
+
+        // A zero or oversized length prefix can never resync: typed error.
+        conn.read_buf.extend_from_slice(&0u32.to_le_bytes());
+        assert!(conn.peek_frame().is_err());
+        conn.read_buf.clear();
+        let huge = (codec::MAX_FRAME_BYTES as u32) + 1;
+        conn.read_buf.extend_from_slice(&huge.to_le_bytes());
+        assert!(conn.peek_frame().is_err());
     }
 }

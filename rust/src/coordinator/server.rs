@@ -4,7 +4,10 @@
 //! Each connection starts in protocol v1 and may upgrade with `HELLO v2`;
 //! the negotiated version is per-connection state. Requests on one
 //! connection are answered strictly in order, so clients may **pipeline**
-//! (write several request lines before reading the responses).
+//! (write several request lines before reading the responses). A `HELLO
+//! v3` upgrade switches the connection's byte stream to length-prefixed
+//! binary frames (see `PROTOCOL.md`); both server paths speak the framed
+//! dialect after the text ack.
 //!
 //! On **Linux** the server is an `epoll` reactor ([`super::reactor`]): the
 //! listener and every connection are nonblocking and edge-triggered, idle
@@ -41,7 +44,7 @@ use {
     super::codec,
     super::daemon::{LineOutcome, ParkedWait, TokenBucket},
     super::manifest::ChunkAssembler,
-    std::io::{BufRead, BufReader, Write},
+    std::io::{BufRead, BufReader, Read, Write},
     std::net::TcpStream,
     std::sync::atomic::Ordering,
     std::sync::Mutex,
@@ -426,6 +429,8 @@ struct Conn {
     /// a parked `WAIT` detaches it from its worker.
     chunks: ChunkAssembler,
     line: String,
+    /// Buffered unparsed bytes while the connection speaks v3 frames.
+    frame_buf: Vec<u8>,
     idle_timeout: Duration,
     last_activity: Instant,
     accepted_at: Instant,
@@ -463,6 +468,7 @@ impl Conn {
             version: ProtocolVersion::V1,
             chunks: ChunkAssembler::new(),
             line: String::new(),
+            frame_buf: Vec::new(),
             idle_timeout,
             last_activity: Instant::now(),
             accepted_at: Instant::now(),
@@ -474,6 +480,11 @@ impl Conn {
     /// Serve requests until the peer closes, the connection idles out, the
     /// daemon stops, or a `WAIT` parks the connection.
     fn serve(&mut self, daemon: &Daemon) -> ConnExit {
+        // A connection resuming after a parked `WAIT` may already have
+        // upgraded to the framed dialect.
+        if self.version.binary_frames() {
+            return self.serve_frames(daemon);
+        }
         loop {
             // Note: on a poll timeout, any partially-read bytes stay in
             // `self.line` and the next read_line continues appending — no
@@ -519,17 +530,18 @@ impl Conn {
                             if let Some(v) = negotiated {
                                 self.version = v;
                             }
-                            if self.write_response(&resp).is_err() {
+                            // A HELLO v3 ack itself still goes out in text;
+                            // only bytes after the upgrade are framed.
+                            if self.write_text_response(&resp).is_err() {
                                 return ConnExit::Closed; // peer gone
                             }
-                            if !self.first_byte_sent {
-                                self.first_byte_sent = true;
-                                daemon.metrics.record_accept_to_first_byte(
-                                    self.accepted_at.elapsed().as_nanos() as u64,
-                                );
-                            }
+                            self.note_first_byte(daemon);
                             // Handling time must not count as idle.
                             self.last_activity = Instant::now();
+                            if self.version.binary_frames() {
+                                // HELLO v3 just landed: switch dialects.
+                                return self.serve_frames(daemon);
+                            }
                         }
                         LineOutcome::Parked(wait) => return ConnExit::Parked(wait),
                     }
@@ -552,10 +564,167 @@ impl Conn {
         }
     }
 
+    /// Serve length-prefixed v3 frames until the peer closes, the
+    /// connection idles out, the daemon stops, or a `WAIT` parks it.
+    /// `OP_MSUBMIT` payloads are decoded straight from the buffered bytes
+    /// ([`codec::parse_msubmit_v3`]) — no intermediate text line.
+    fn serve_frames(&mut self, daemon: &Daemon) -> ConnExit {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            // Handle every complete frame already buffered.
+            loop {
+                let (opcode, payload_start, end) = match codec::decode_frame_header(&self.frame_buf)
+                {
+                    Err(e) => {
+                        // The length prefix is garbage: everything after it
+                        // is unframeable — answer typed and hang up.
+                        let resp =
+                            codec::render_response(&Response::Error(e), ProtocolVersion::V3);
+                        let _ = self.write_frame(codec::OP_TEXT_RESP, resp.as_bytes());
+                        return ConnExit::Closed;
+                    }
+                    Ok(None) => break,
+                    Ok(Some(len)) => {
+                        if self.frame_buf.len() < codec::FRAME_HEADER_BYTES + len {
+                            break; // frame still in flight
+                        }
+                        let start = codec::FRAME_HEADER_BYTES;
+                        (self.frame_buf[start], start + 1, start + len)
+                    }
+                };
+                let arrived = Instant::now();
+                self.last_activity = arrived;
+                // The rate limit charges per frame, as the text path
+                // charges per line.
+                if let Some(bucket) = self.bucket.as_mut() {
+                    if let Err(retry_ms) = bucket.try_take(arrived) {
+                        daemon
+                            .metrics
+                            .shed_rate_limited
+                            .fetch_add(1, Ordering::Relaxed);
+                        let resp = codec::render_response(
+                            &Response::Error(ApiError::overloaded(
+                                "connection request rate limit exceeded",
+                                retry_ms,
+                            )),
+                            ProtocolVersion::V3,
+                        );
+                        self.frame_buf.drain(..end);
+                        if self.write_frame(codec::OP_TEXT_RESP, resp.as_bytes()).is_err() {
+                            return ConnExit::Closed;
+                        }
+                        continue;
+                    }
+                }
+                match opcode {
+                    codec::OP_TEXT_REQ => {
+                        let line = String::from_utf8_lossy(&self.frame_buf[payload_start..end])
+                            .into_owned();
+                        self.frame_buf.drain(..end);
+                        let outcome = daemon.handle_line_at(
+                            &line,
+                            ProtocolVersion::V3,
+                            Some(&mut self.chunks),
+                            arrived,
+                        );
+                        match outcome {
+                            LineOutcome::Done(resp, _) => {
+                                if self.write_frame(codec::OP_TEXT_RESP, resp.as_bytes()).is_err()
+                                {
+                                    return ConnExit::Closed;
+                                }
+                                self.note_first_byte(daemon);
+                                self.last_activity = Instant::now();
+                            }
+                            LineOutcome::Parked(wait) => return ConnExit::Parked(wait),
+                        }
+                    }
+                    codec::OP_MSUBMIT => {
+                        let parsed = codec::parse_msubmit_v3(&self.frame_buf[payload_start..end]);
+                        self.frame_buf.drain(..end);
+                        let frame = daemon.handle_msubmit_frame(parsed, Some(&mut self.chunks));
+                        if self.write_raw(&frame).is_err() {
+                            return ConnExit::Closed;
+                        }
+                        self.note_first_byte(daemon);
+                        self.last_activity = Instant::now();
+                    }
+                    other => {
+                        // Frame boundaries survive a bad opcode: typed
+                        // error, keep serving.
+                        self.frame_buf.drain(..end);
+                        let resp = codec::render_response(
+                            &Response::Error(ApiError::unsupported(format!(
+                                "unknown v3 frame opcode {other:#04x}"
+                            ))),
+                            ProtocolVersion::V3,
+                        );
+                        if self.write_frame(codec::OP_TEXT_RESP, resp.as_bytes()).is_err() {
+                            return ConnExit::Closed;
+                        }
+                    }
+                }
+                if !daemon.is_running() {
+                    return ConnExit::Closed;
+                }
+            }
+            if !daemon.is_running() {
+                return ConnExit::Closed;
+            }
+            // Read more bytes; the 200 ms poll timeout doubles as the
+            // idle/shutdown tick, exactly like the text loop.
+            match self.reader.read(&mut chunk) {
+                Ok(0) => return ConnExit::Closed, // peer closed
+                Ok(n) => {
+                    self.frame_buf.extend_from_slice(&chunk[..n]);
+                    self.last_activity = Instant::now();
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if self.last_activity.elapsed() >= self.idle_timeout {
+                        return ConnExit::Closed;
+                    }
+                }
+                Err(_) => return ConnExit::Closed, // peer gone
+            }
+        }
+    }
+
+    /// Write a response in the connection's wire dialect — framed after a
+    /// v3 upgrade, blank-line-terminated text before. The waiter thread
+    /// resolves parked `WAIT`s through this, so a framed connection's wait
+    /// answers arrive framed too.
     fn write_response(&mut self, resp: &str) -> std::io::Result<()> {
+        if self.version.binary_frames() {
+            return self.write_frame(codec::OP_TEXT_RESP, resp.as_bytes());
+        }
+        self.write_text_response(resp)
+    }
+
+    fn write_text_response(&mut self, resp: &str) -> std::io::Result<()> {
         self.writer.write_all(resp.as_bytes())?;
         self.writer.write_all(b"\n\n")?;
         self.writer.flush()
+    }
+
+    fn write_frame(&mut self, opcode: u8, payload: &[u8]) -> std::io::Result<()> {
+        self.write_raw(&codec::v3_frame(opcode, payload))
+    }
+
+    fn write_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.writer.write_all(bytes)?;
+        self.writer.flush()
+    }
+
+    fn note_first_byte(&mut self, daemon: &Daemon) {
+        if !self.first_byte_sent {
+            self.first_byte_sent = true;
+            daemon
+                .metrics
+                .record_accept_to_first_byte(self.accepted_at.elapsed().as_nanos() as u64);
+        }
     }
 }
 
@@ -596,7 +765,7 @@ fn drive_connection(mut conn: Conn, daemon: Arc<Daemon>, parked: Arc<ParkedWaits
 mod tests {
     use super::*;
     use crate::cluster::{topology, PartitionLayout};
-    use crate::coordinator::api::{Request, Response, SqueueFilter, SubmitSpec};
+    use crate::coordinator::api::{ProtocolVersion, Request, Response, SqueueFilter, SubmitSpec};
     use crate::coordinator::client::Client;
     use crate::coordinator::daemon::DaemonConfig;
     use crate::job::{JobType, QosClass};
@@ -954,6 +1123,33 @@ mod tests {
         );
         let fin = read_raw_response(&mut reader);
         assert!(fin.starts_with("OK kind=manifest_ack"), "{fin}");
+        daemon.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn v3_binary_session_over_tcp() {
+        use crate::coordinator::manifest::ManifestBuilder;
+        let (daemon, addr, handle) = spawn_server();
+        let mut c = Client::connect_v3(&addr.to_string()).unwrap();
+        assert_eq!(c.version(), ProtocolVersion::V3);
+        // Framed text round trips.
+        c.ping().unwrap();
+        let util = c.util().unwrap();
+        assert_eq!(util.total_cores, 608);
+        // Binary manifest submission: varint-packed out, packed ack back.
+        let mut b = ManifestBuilder::new();
+        for u in 0..25 {
+            b = b.interactive(u % 5, JobType::Array, 1);
+        }
+        let ack = c.msubmit(&b.build()).unwrap();
+        assert_eq!(ack.accepted.len(), 25);
+        assert_eq!(ack.jobs, 25);
+        assert!(ack.rejected.is_empty(), "{:?}", ack.rejected);
+        // The session keeps serving typed round trips after the binary
+        // exchange — framing stayed in sync.
+        let rows = c.squeue(&SqueueFilter::default()).unwrap();
+        assert_eq!(rows.len(), 25);
         daemon.shutdown();
         handle.join().unwrap();
     }

@@ -156,6 +156,14 @@ pub struct SchedSnapshot {
     /// Terminal transitions so far (`Ended` log records) — with
     /// `stats.dispatches`, the completion generation WAIT subscribers key on.
     pub ended: usize,
+    /// Distinct (qos, user) fairshare entries with nonzero charged usage.
+    /// Read from the scheduler's incrementally maintained tables at capture
+    /// (O(partitions), never a per-user walk), so publishing stays O(1) in
+    /// user cardinality.
+    pub users_active: usize,
+    /// `users_active` plus live pending-queue (qos, user) buckets — the
+    /// total per-user state the scheduler is holding right now.
+    pub users_tracked: usize,
     /// Job table, ascending id order. The outer `Arc` is shared with the
     /// previous snapshot whenever [`Scheduler::jobs_signature`] says no job
     /// changed; the per-job `Arc<JobView>`s are shared for every job whose
@@ -188,6 +196,7 @@ impl SchedSnapshot {
             idle_nodes: c.idle_node_count(),
             total_cores: c.total_cores(),
         };
+        let (users_active, users_tracked) = sched.user_scale();
         if let Some(p) = prev {
             if p.jobs_sig == jobs_sig {
                 return SchedSnapshot {
@@ -200,6 +209,8 @@ impl SchedSnapshot {
                     pending: p.pending,
                     running: p.running,
                     ended: p.ended,
+                    users_active,
+                    users_tracked,
                     jobs: Arc::clone(&p.jobs),
                 };
             }
@@ -240,6 +251,8 @@ impl SchedSnapshot {
             pending,
             running,
             ended: log.count(LogKind::Ended),
+            users_active,
+            users_tracked,
             jobs: Arc::new(jobs),
         }
     }
@@ -265,6 +278,7 @@ impl SchedSnapshot {
         let mut stats = SchedStats::default();
         let (mut idle_cores, mut idle_nodes, mut total_cores) = (0u32, 0u32, 0u32);
         let (mut pending, mut running, mut ended) = (0usize, 0usize, 0usize);
+        let (mut users_active, mut users_tracked) = (0usize, 0usize);
         let (mut sig_len, mut sig_log, mut sig_resumes) = (0usize, 0u64, 0u64);
         let mut virtual_now = SimTime::ZERO;
         for s in shards.iter().map(Arc::as_ref) {
@@ -283,6 +297,8 @@ impl SchedSnapshot {
             pending += s.pending;
             running += s.running;
             ended += s.ended;
+            users_active += s.users_active;
+            users_tracked += s.users_tracked;
             sig_len += s.jobs_sig.0;
             sig_log += s.jobs_sig.2;
             sig_resumes += s.jobs_sig.3;
@@ -333,6 +349,8 @@ impl SchedSnapshot {
             pending,
             running,
             ended,
+            users_active,
+            users_tracked,
             jobs,
         }
     }

@@ -6,6 +6,7 @@
 //! keep the idle-node reserve free (paper Section II.B).
 
 use super::user::UserId;
+use crate::util::fxhash::FxHashMap;
 use std::collections::BTreeMap;
 
 /// QoS classes relevant to the paper.
@@ -50,11 +51,15 @@ pub struct QosConfig {
 }
 
 /// The QoS table: configuration plus per-user usage accounting.
+///
+/// Per-user usage keys on the compact `(QosClass, UserId)` pair and retires
+/// entries at zero, so the table tracks users with cores *currently* charged
+/// under the class — not every user the daemon has ever admitted.
 #[derive(Debug, Clone)]
 pub struct QosTable {
     normal: QosConfig,
     spot: QosConfig,
-    usage: BTreeMap<(QosClass, UserId), u32>,
+    usage: FxHashMap<(QosClass, UserId), u32>,
     total_usage: BTreeMap<QosClass, u32>,
 }
 
@@ -81,7 +86,7 @@ impl QosTable {
                 max_tres_per_user: None,
                 max_tres_total: None,
             },
-            usage: BTreeMap::new(),
+            usage: FxHashMap::default(),
             total_usage: BTreeMap::new(),
         }
     }
@@ -135,13 +140,22 @@ impl QosTable {
         *self.total_usage.entry(class).or_default() += cores;
     }
 
-    /// Record a job end/preemption.
+    /// Record a job end/preemption. Zeroed per-user entries are removed so
+    /// the table stays sized to users currently charged.
     pub fn credit(&mut self, class: QosClass, user: UserId, cores: u32) {
         let u = self.usage.get_mut(&(class, user)).expect("credit without charge");
         assert!(*u >= cores, "crediting more than charged");
         *u -= cores;
+        if *u == 0 {
+            self.usage.remove(&(class, user));
+        }
         let t = self.total_usage.get_mut(&class).expect("credit without charge");
         *t -= cores;
+    }
+
+    /// (class, user) pairs with nonzero charged usage (the live table size).
+    pub fn tracked(&self) -> usize {
+        self.usage.len()
     }
 }
 
@@ -203,5 +217,19 @@ mod tests {
     fn unlimited_by_default() {
         let t = QosTable::new();
         assert!(t.admits(QosClass::Spot, UserId(1), u32::MAX / 2));
+    }
+
+    #[test]
+    fn usage_table_retires_zeroed_pairs() {
+        let mut t = QosTable::new();
+        for u in 0..5_000u32 {
+            t.charge(QosClass::Spot, UserId(u), 2);
+        }
+        assert_eq!(t.tracked(), 5_000);
+        for u in 0..5_000u32 {
+            t.credit(QosClass::Spot, UserId(u), 2);
+        }
+        assert_eq!(t.tracked(), 0);
+        assert_eq!(t.total_usage(QosClass::Spot), 0);
     }
 }

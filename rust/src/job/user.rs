@@ -6,9 +6,14 @@
 //! limit so *any* single user's next interactive job fits without preemption
 //! on the submit path.
 
+use crate::util::fxhash::FxHashMap;
 use std::collections::BTreeMap;
 
 /// User identifier.
+///
+/// Deliberately a compact interned `u32` (not a name string): the fairshare
+/// tables and queue buckets key on it millions of times per scaling run, so
+/// lookups hash one word and the tables stay cache-dense at 10⁶ users.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct UserId(pub u32);
 
@@ -33,11 +38,16 @@ impl Default for UserLimits {
 }
 
 /// Tracks interactive-core usage per user against limits.
+///
+/// The usage table holds **only users with nonzero charged cores**: entries
+/// are retired the moment their usage returns to zero, so a heavy-tail
+/// million-user submission history costs memory proportional to the users
+/// *currently running*, not every user ever seen.
 #[derive(Debug, Clone, Default)]
 pub struct UserAccounting {
     limits: BTreeMap<UserId, UserLimits>,
     default_limits: UserLimits,
-    usage: BTreeMap<UserId, u32>,
+    usage: FxHashMap<UserId, u32>,
 }
 
 impl UserAccounting {
@@ -74,11 +84,20 @@ impl UserAccounting {
         *self.usage.entry(user).or_default() += cores;
     }
 
-    /// Credit usage at job end.
+    /// Credit usage at job end. Entries are removed when they hit zero so
+    /// the table never accumulates dead users.
     pub fn credit(&mut self, user: UserId, cores: u32) {
         let u = self.usage.get_mut(&user).expect("credit without charge");
         assert!(*u >= cores, "crediting more than charged");
         *u -= cores;
+        if *u == 0 {
+            self.usage.remove(&user);
+        }
+    }
+
+    /// Users with nonzero charged usage (the live table size).
+    pub fn tracked(&self) -> usize {
+        self.usage.len()
     }
 }
 
@@ -110,5 +129,21 @@ mod tests {
         acc.set_limit(UserId(2), UserLimits { max_cores: 10 });
         assert!(acc.admits(UserId(1), 100));
         assert!(!acc.admits(UserId(2), 11));
+    }
+
+    #[test]
+    fn usage_table_retires_zeroed_users() {
+        let mut acc = UserAccounting::default();
+        for u in 0..10_000u32 {
+            acc.charge(UserId(u), 4);
+        }
+        assert_eq!(acc.tracked(), 10_000);
+        for u in 0..10_000u32 {
+            acc.credit(UserId(u), 4);
+        }
+        // Every user drained back to zero: the table must be empty, not a
+        // graveyard of zero entries.
+        assert_eq!(acc.tracked(), 0);
+        assert_eq!(acc.usage(UserId(42)), 0);
     }
 }

@@ -705,6 +705,15 @@ fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
             )
         })
         .unwrap_or_default();
+    let users = s
+        .users
+        .map(|u| {
+            format!(
+                "\nusers: active={} tracked={} buckets_live={}",
+                u.users_active, u.users_tracked, u.buckets_live,
+            )
+        })
+        .unwrap_or_default();
     let shards = if s.shards.is_empty() {
         String::new()
     } else {
@@ -729,7 +738,7 @@ fn render_stats(s: spotcloud::coordinator::StatsSnapshot) -> String {
         "virtual_now={:.1}s dispatches={} preemptions={} requeues={} cron_passes={} \
          main_passes={} backfill_passes={} triggered_passes={} scorer={}\n\
          requests: ok={} err={} jobs_submitted={} | sched latency: n={} p50={:.3}s\n\
-         commands: {commands}{contention}{journal}{health}{shards}",
+         commands: {commands}{contention}{journal}{health}{users}{shards}",
         s.virtual_now_secs,
         s.dispatches,
         s.preemptions,

@@ -161,6 +161,10 @@ pub struct Scheduler {
     /// identical individual jobs costs one scorer invocation, not N, which
     /// keeps the batched XLA scorer viable on the enqueue path.
     key_score_cache: FxHashMap<(QosClass, u32, u32), f32>,
+    /// Reusable pass-order merge state: at high user cardinality the k-way
+    /// heap reaches millions of entries, so passes refill this one
+    /// allocation (O(u) heapify) instead of growing a fresh heap each time.
+    pass_order_scratch: PassOrder,
 }
 
 impl Scheduler {
@@ -238,6 +242,7 @@ impl Scheduler {
             retire_heap: BinaryHeap::new(),
             retired_total: 0,
             key_score_cache: FxHashMap::default(),
+            pass_order_scratch: PassOrder::default(),
         }
     }
 
@@ -264,6 +269,18 @@ impl Scheduler {
     /// occupancy. The clock may still have advanced.
     pub fn change_version(&self) -> u64 {
         self.version
+    }
+
+    /// User-cardinality gauges, O(partitions) to read: `(active, tracked)`
+    /// where *active* counts fairshare-table entries with nonzero charged
+    /// usage (normal + per-qos) and *tracked* additionally counts live
+    /// pending-queue (qos, user) buckets. Both tables retire entries at
+    /// zero, so these measure current load — a million-user submission
+    /// history that has drained reads as (0, 0).
+    pub fn user_scale(&self) -> (usize, usize) {
+        let active = self.users.tracked() + self.qos.tracked();
+        let queued: usize = self.queues.values().map(|q| q.bucket_count()).sum();
+        (active, active + queued)
     }
 
     /// O(1) signature of the externally visible **job table**: job states,
@@ -710,6 +727,10 @@ impl Scheduler {
         // partitions (matching the SchedCosts::bf_max_job_test contract).
         let mut examined = 0usize;
         let partition_ids: Vec<PartitionId> = self.partitions.iter().map(|p| p.id).collect();
+        // Borrow the reusable merge state for the duration of the pass; it
+        // is refilled per partition and handed back (with its capacity)
+        // below.
+        let mut order = std::mem::take(&mut self.pass_order_scratch);
         for pid in partition_ids {
             // EASY backfill: once a Normal job blocks, later candidates may
             // only start if they finish before the head's shadow time.
@@ -718,20 +739,20 @@ impl Scheduler {
             // buckets with fairshare offsets read once at pass start (the
             // pass's own dispatches change fairshare for the *next* pass,
             // exactly like the old cached order).
-            let mut order = {
+            {
                 let q = self.queues.get(&pid).expect("partition");
                 let users = &self.users;
                 let qos_table = &self.qos;
                 let total = self.cluster.total_cores().max(1) as f64;
                 let slope = self.share_slope;
-                PassOrder::build(q, |qos, user| {
+                order.rebuild(q, |qos, user| {
                     let usage = match qos {
                         QosClass::Normal => users.usage(user),
                         QosClass::Spot => qos_table.usage(QosClass::Spot, user),
                     } as f64;
                     slope * (usage / total).clamp(0.0, 1.0)
-                })
-            };
+                });
+            }
             loop {
                 if examined >= scan_limit {
                     break;
@@ -811,6 +832,7 @@ impl Scheduler {
                 }
             }
         }
+        self.pass_order_scratch = order;
         // Resume suspended spot jobs once no interactive demand is pending
         // (their allocations were never released — SUSPEND holds memory).
         // The suspended set and per-queue Normal counters make the common

@@ -168,6 +168,106 @@ impl Xoshiro256 {
     }
 }
 
+/// Zipf-distributed ranks on `{1, …, n}` with `P(k) ∝ k^-s` — the
+/// heavy-tail user-popularity shape the million-user scaling scenario
+/// draws submitters from.
+///
+/// Uses Hörmann & Derflinger's rejection-inversion for monotone discrete
+/// distributions: O(1) setup (no O(n) cumulative table, which matters at
+/// n = 10⁶) and ~1 uniform per sample with a rejection rate bounded far
+/// below 1 for every `s > 0`.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    /// `H(1.5) - 1` — the upper end of the inversion interval.
+    h_x1: f64,
+    /// `H(n + 0.5)` — the lower end of the inversion interval.
+    h_n: f64,
+    /// Acceptance shortcut threshold (`2 - H⁻¹(H(2.5) - h(2))`).
+    guard: f64,
+}
+
+impl Zipf {
+    /// A sampler over ranks `1..=n` with exponent `s`. Panics on `n == 0`
+    /// or a non-positive/non-finite exponent.
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1, "Zipf: n must be at least 1");
+        assert!(s > 0.0 && s.is_finite(), "Zipf: exponent must be positive");
+        let mut z = Self {
+            n,
+            s,
+            h_x1: 0.0,
+            h_n: 0.0,
+            guard: 0.0,
+        };
+        z.h_x1 = z.h_integral(1.5) - 1.0;
+        z.h_n = z.h_integral(n as f64 + 0.5);
+        z.guard = 2.0 - z.h_integral_inverse(z.h_integral(2.5) - z.h(2.0));
+        z
+    }
+
+    /// Number of ranks.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Draw one rank in `1..=n`.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
+        loop {
+            let u = self.h_n + rng.next_f64() * (self.h_x1 - self.h_n);
+            let x = self.h_integral_inverse(u);
+            // Round to the nearest rank and clamp into range (fp drift at
+            // the interval ends can land a hair outside).
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if k - x <= self.guard || u >= self.h_integral(k + 0.5) - self.h(k) {
+                return k as u64;
+            }
+        }
+    }
+
+    /// `h(x) = x^-s`, the pmf kernel.
+    fn h(&self, x: f64) -> f64 {
+        (-self.s * x.ln()).exp()
+    }
+
+    /// `H(x) = ∫ x^-s dx = (x^(1-s) - 1)/(1-s)`, continuously extended
+    /// through `s = 1` (where it is `ln x`) via `(e^y - 1)/y`.
+    fn h_integral(&self, x: f64) -> f64 {
+        let log_x = x.ln();
+        expm1_over_x((1.0 - self.s) * log_x) * log_x
+    }
+
+    /// `H⁻¹(y) = (1 + y(1-s))^(1/(1-s))`, same continuous extension.
+    fn h_integral_inverse(&self, y: f64) -> f64 {
+        let mut t = y * (1.0 - self.s);
+        // Guard fp drift past the pole so ln_1p stays defined.
+        if t < -1.0 {
+            t = -1.0;
+        }
+        (ln1p_over_x(t) * y).exp()
+    }
+}
+
+/// `(e^x - 1)/x`, with the removable singularity at 0 filled in.
+fn expm1_over_x(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        // Two-term Taylor expansion: 1 + x/2 + O(x²).
+        1.0 + x * 0.5
+    }
+}
+
+/// `ln(1+x)/x`, with the removable singularity at 0 filled in.
+fn ln1p_over_x(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * 0.5
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,5 +362,48 @@ mod tests {
     fn gen_range_empty_panics() {
         let mut r = Xoshiro256::new(1);
         r.gen_range(5, 5);
+    }
+
+    #[test]
+    fn zipf_ranks_in_range_and_deterministic() {
+        let z = Zipf::new(1_000_000, 1.1);
+        let mut a = Xoshiro256::new(31);
+        let mut b = Xoshiro256::new(31);
+        let va: Vec<u64> = (0..1_000).map(|_| z.sample(&mut a)).collect();
+        let vb: Vec<u64> = (0..1_000).map(|_| z.sample(&mut b)).collect();
+        assert_eq!(va, vb, "same seed, same ranks");
+        assert!(va.iter().all(|&k| (1..=1_000_000).contains(&k)));
+        assert!(va.iter().any(|&k| k > 1_000), "tail ranks should appear");
+    }
+
+    #[test]
+    fn zipf_degenerate_n1_always_one() {
+        let z = Zipf::new(1, 2.0);
+        let mut r = Xoshiro256::new(5);
+        assert!((0..1_000).all(|_| z.sample(&mut r) == 1));
+    }
+
+    #[test]
+    fn zipf_matches_exact_head_probabilities() {
+        let n = 100u64;
+        let s = 1.1;
+        let z = Zipf::new(n, s);
+        let mut r = Xoshiro256::new(77);
+        let samples = 200_000;
+        let mut counts = vec![0u64; n as usize + 1];
+        for _ in 0..samples {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // Exact pmf from the normalizing harmonic sum.
+        let h: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        for k in [1u64, 2, 3, 10] {
+            let want = (k as f64).powf(-s) / h;
+            let got = counts[k as usize] as f64 / samples as f64;
+            assert!(
+                (got - want).abs() < 0.01,
+                "rank {k}: got {got:.4}, want {want:.4}"
+            );
+        }
+        assert!(counts[1] > counts[2] && counts[2] > counts[10], "head-heavy");
     }
 }

@@ -7,9 +7,11 @@
 //! Figure-2 mode in [`crate::experiments::live`] and the
 //! `manifest_scaling` bench both draw from here.
 
-use crate::coordinator::manifest::{Manifest, ManifestBuilder, ManifestEntry};
+use std::sync::Arc;
+
+use crate::coordinator::manifest::{Manifest, ManifestBuilder, ManifestEntry, MAX_MANIFEST_ENTRIES};
 use crate::job::{JobType, QosClass};
-use crate::util::rng::Xoshiro256;
+use crate::util::rng::{Xoshiro256, Zipf};
 
 /// The interactive Figure-2 burst as a one-entry manifest: exactly what
 /// [`crate::workload::interactive_burst`] submits (an *individual* entry
@@ -81,6 +83,129 @@ pub fn mixed(seed: u64, entries: usize, users: u32) -> Manifest {
     b.build()
 }
 
+/// Everything about a manifest entry *except* the submitting user: the
+/// reusable half of a trace record. A replay supplies the user per
+/// instantiation — [`zipf_user_manifests`] stamps templates with
+/// Zipf-sampled users, a recorded trace would stamp them with the users
+/// it captured.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestTemplate {
+    /// QoS class every instantiation carries.
+    pub qos: QosClass,
+    /// Launch type every instantiation carries.
+    pub job_type: JobType,
+    /// Task count per instantiation.
+    pub tasks: u32,
+    /// Requested runtime in seconds.
+    pub run_secs: f64,
+    /// Optional correlation tag shared by all instantiations.
+    pub tag: Option<Arc<str>>,
+}
+
+impl ManifestTemplate {
+    /// A template with no tag; chain [`Self::with_tag`] to add one.
+    pub fn new(qos: QosClass, job_type: JobType, tasks: u32, run_secs: f64) -> Self {
+        Self {
+            qos,
+            job_type,
+            tasks,
+            run_secs,
+            tag: None,
+        }
+    }
+
+    /// Attach a correlation tag.
+    pub fn with_tag(mut self, tag: impl Into<Arc<str>>) -> Self {
+        self.tag = Some(tag.into());
+        self
+    }
+
+    /// The interactive probe shape: one `Normal` individual task, ten
+    /// minutes. Exactly one job per instantiation, so entry counts and
+    /// job counts stay interchangeable in scaling benches.
+    pub fn interactive_probe() -> Self {
+        Self::new(QosClass::Normal, JobType::Individual, 1, 600.0).with_tag("user-probe")
+    }
+
+    /// The spot filler shape: one long `Spot` triple-mode entry (which
+    /// also materializes exactly one job regardless of `tasks`).
+    pub fn spot_filler() -> Self {
+        Self::new(QosClass::Spot, JobType::TripleMode, 4, 86_400.0).with_tag("user-filler")
+    }
+
+    /// Stamp the template with a user, yielding a concrete entry.
+    pub fn instantiate(&self, user: u32) -> ManifestEntry {
+        let e = ManifestEntry::new(self.qos, self.job_type, self.tasks, user)
+            .with_run_secs(self.run_secs);
+        match &self.tag {
+            Some(t) => e.with_tag(Arc::clone(t)),
+            None => e,
+        }
+    }
+}
+
+/// Pack a stream of entries into wire-submittable manifests of at most
+/// [`MAX_MANIFEST_ENTRIES`] entries each.
+fn chunked(entries: impl Iterator<Item = ManifestEntry>) -> Vec<Manifest> {
+    let mut out = Vec::new();
+    let mut b = ManifestBuilder::new();
+    for e in entries {
+        b = b.entry(e);
+        if b.len() == MAX_MANIFEST_ENTRIES {
+            out.push(std::mem::replace(&mut b, ManifestBuilder::new()).build());
+        }
+    }
+    if !b.is_empty() {
+        out.push(b.build());
+    }
+    out
+}
+
+/// A heavy-tail replay trace: `entries` template instantiations whose
+/// users are Zipf(`exponent`)-distributed ranks over `1..=users`,
+/// cycling through `templates`, packed into ≤[`MAX_MANIFEST_ENTRIES`]
+/// manifests. Deterministic in `seed`.
+pub fn zipf_user_manifests(
+    seed: u64,
+    users: u64,
+    entries: usize,
+    exponent: f64,
+    templates: &[ManifestTemplate],
+) -> Vec<Manifest> {
+    assert!(!templates.is_empty(), "zipf_user_manifests: no templates");
+    let zipf = Zipf::new(users, exponent);
+    let mut rng = Xoshiro256::new(seed);
+    chunked((0..entries).map(|i| {
+        let user = zipf.sample(&mut rng) as u32;
+        templates[i % templates.len()].instantiate(user)
+    }))
+}
+
+/// The user-cardinality scaling workload: one entry from **every** user
+/// `1..=users` (so the level's distinct-user count is exact, not a
+/// sampling accident) followed by `users / 4` Zipf-sampled hot extras
+/// that concentrate repeat traffic on low ranks the way production
+/// submitters do. Templates alternate interactive probe / spot filler,
+/// both of which materialize exactly one job per entry, so per-job and
+/// per-entry costs coincide. Deterministic in `seed`.
+pub fn user_scaling_manifests(seed: u64, users: u64, exponent: f64) -> Vec<Manifest> {
+    assert!(users >= 1 && users <= u32::MAX as u64);
+    let templates = [
+        ManifestTemplate::interactive_probe(),
+        ManifestTemplate::spot_filler(),
+    ];
+    let zipf = Zipf::new(users, exponent);
+    let mut rng = Xoshiro256::new(seed);
+    let extras = (users / 4) as usize;
+    let sweep = (0..users as usize).map(|i| (i as u32 + 1, i));
+    let hot = (0..extras).map(move |i| (zipf.sample(&mut rng) as u32, users as usize + i));
+    chunked(
+        sweep
+            .chain(hot)
+            .map(move |(user, i)| templates[i % templates.len()].instantiate(user)),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +245,64 @@ mod tests {
         assert!(a.entries.iter().any(|e| e.qos == QosClass::Normal));
         let users: std::collections::BTreeSet<_> = a.entries.iter().map(|e| e.user).collect();
         assert!(users.len() >= 3, "{users:?}");
+    }
+
+    #[test]
+    fn template_instantiation_is_valid_and_one_job() {
+        for t in [
+            ManifestTemplate::interactive_probe(),
+            ManifestTemplate::spot_filler(),
+        ] {
+            let e = t.instantiate(42);
+            assert_eq!(e.user, 42);
+            assert_eq!(e.jobs(), 1, "scaling templates are one job per entry");
+            assert!(e.validate().is_ok(), "{e:?}");
+            assert!(e.tag.is_some());
+        }
+        let bare = ManifestTemplate::new(QosClass::Normal, JobType::Array, 3, 60.0);
+        assert!(bare.instantiate(1).tag.is_none());
+    }
+
+    #[test]
+    fn zipf_user_manifests_chunk_and_replay_deterministically() {
+        let templates = [ManifestTemplate::interactive_probe()];
+        let a = zipf_user_manifests(9, 500, 30_000, 1.1, &templates);
+        let b = zipf_user_manifests(9, 500, 30_000, 1.1, &templates);
+        assert_eq!(a, b, "same seed, same trace");
+        assert_eq!(a.len(), 3, "30k entries pack into 12k/12k/6k");
+        assert_eq!(a[0].entries.len(), MAX_MANIFEST_ENTRIES);
+        assert_eq!(a[2].entries.len(), 6_000);
+        assert_eq!(a.iter().map(|m| m.entries.len()).sum::<usize>(), 30_000);
+        // Heavy tail: rank 1 dominates any deep rank.
+        let hits = |user: u32| -> usize {
+            a.iter()
+                .flat_map(|m| &m.entries)
+                .filter(|e| e.user == user)
+                .count()
+        };
+        assert!(hits(1) > hits(400) * 4, "rank 1 should dominate rank 400");
+        assert!(a
+            .iter()
+            .flat_map(|m| &m.entries)
+            .all(|e| e.validate().is_ok()));
+    }
+
+    #[test]
+    fn user_scaling_manifests_cover_every_user_exactly() {
+        let users = 25_000u64;
+        let ms = user_scaling_manifests(3, users, 1.1);
+        let total: usize = ms.iter().map(|m| m.entries.len()).sum();
+        assert_eq!(total, users as usize + users as usize / 4);
+        assert!(ms.iter().all(|m| m.entries.len() <= MAX_MANIFEST_ENTRIES));
+        let distinct: std::collections::BTreeSet<u32> =
+            ms.iter().flat_map(|m| &m.entries).map(|e| e.user).collect();
+        assert_eq!(distinct.len(), users as usize, "sweep covers every user");
+        assert_eq!(distinct.iter().next_back(), Some(&(users as u32)));
+        let jobs: u64 = ms.iter().map(|m| m.jobs()).sum();
+        assert_eq!(jobs, total as u64, "one job per entry at every level");
+        assert!(ms
+            .iter()
+            .flat_map(|m| &m.entries)
+            .any(|e| e.qos == QosClass::Spot));
     }
 }

@@ -746,6 +746,134 @@ fn slow_consumer_is_evicted_and_its_connection_closed() {
 }
 
 #[test]
+fn v3_binary_msubmit_end_to_end_over_tcp() {
+    // The full v3 binary session against the real server: HELLO v3
+    // upgrade, framed text verbs, a 1000-entry binary MSUBMIT (varint
+    // records, no text rendering), typed reads of what landed, and the
+    // mixed-traffic STATS gauges the new dialect reports.
+    let (daemon, addr, server) = spawn_plain_daemon();
+    let mut c = Client::connect_v3(&addr).unwrap();
+    assert_eq!(c.version(), spotcloud::coordinator::ProtocolVersion::V3);
+    c.ping().unwrap();
+    let manifest = spotcloud::workload::manifests::mixed(7, 1_000, 5);
+    let ack = c.msubmit(&manifest).unwrap();
+    assert_eq!(ack.rejected.len(), 0, "{:?}", ack.rejected.first());
+    assert_eq!(ack.accepted.len(), 1_000);
+    assert_eq!(ack.jobs, 1_000);
+    let mut next = ack.accepted[0].first;
+    for acc in &ack.accepted {
+        assert_eq!(acc.first, next, "entry {} range not contiguous", acc.index);
+        next = acc.last + 1;
+    }
+    // Tags interned straight from the binary payload round-trip to SJOB.
+    let detail = c.job(ack.accepted[1].first).unwrap();
+    assert_eq!(detail.tag.as_deref(), Some("mixed-interactive"));
+    // WAIT resolutions are framed too (the parked path).
+    let w = c.wait(&[ack.accepted[1].first], 10.0).unwrap();
+    assert!(!w.timed_out);
+    // STATS carries the user gauges over the framed transport.
+    let stats = c.stats().unwrap();
+    let users = stats.users.expect("v3 STATS carries user gauges");
+    assert!(users.users_tracked >= 1, "{users:?}");
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
+fn v3_hostile_frames_recover_typed_or_close_without_desync() {
+    use spotcloud::coordinator::codec;
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    let (daemon, addr, server) = spawn_plain_daemon();
+
+    let read_frame = |reader: &mut BufReader<TcpStream>| -> (u8, Vec<u8>) {
+        let mut header = [0u8; 4];
+        reader.read_exact(&mut header).expect("frame header");
+        let len = u32::from_le_bytes(header) as usize;
+        assert!(len >= 1, "zero-length frame from server");
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).expect("frame body");
+        let payload = body.split_off(1);
+        (body[0], payload)
+    };
+
+    // Session 1: in-frame garbage is a typed error, the connection lives.
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"HELLO v3\n").unwrap();
+    writer.flush().unwrap();
+    let mut hello = String::new();
+    reader.read_line(&mut hello).unwrap();
+    assert_eq!(hello, "OK kind=hello proto=v3\n");
+    let mut blank = String::new();
+    reader.read_line(&mut blank).unwrap();
+    assert_eq!(blank, "\n", "the HELLO ack itself is still text");
+
+    // Unknown opcode: typed unsupported, then the conn still serves.
+    writer.write_all(&codec::v3_frame(0x7f, b"")).unwrap();
+    writer.flush().unwrap();
+    let (op, payload) = read_frame(&mut reader);
+    assert_eq!(op, codec::OP_TEXT_RESP);
+    let body = String::from_utf8(payload).unwrap();
+    assert!(body.starts_with("ERR code=unsupported"), "{body}");
+
+    // A corrupt MSUBMIT payload: typed error, no desync.
+    writer.write_all(&codec::v3_frame(codec::OP_MSUBMIT, &[0xff; 6])).unwrap();
+    writer.flush().unwrap();
+    let (op, payload) = read_frame(&mut reader);
+    assert_eq!(op, codec::OP_TEXT_RESP);
+    let body = String::from_utf8(payload).unwrap();
+    assert!(body.starts_with("ERR code="), "{body}");
+
+    // Renegotiating from inside a frame is refused, typed.
+    writer.write_all(&codec::v3_frame(codec::OP_TEXT_REQ, b"HELLO v2")).unwrap();
+    writer.flush().unwrap();
+    let (op, payload) = read_frame(&mut reader);
+    assert_eq!(op, codec::OP_TEXT_RESP);
+    let body = String::from_utf8(payload).unwrap();
+    assert!(body.starts_with("ERR code=unsupported"), "{body}");
+
+    // After all that abuse, a framed PING still answers.
+    writer.write_all(&codec::v3_frame(codec::OP_TEXT_REQ, b"PING")).unwrap();
+    writer.flush().unwrap();
+    let (op, payload) = read_frame(&mut reader);
+    assert_eq!(op, codec::OP_TEXT_RESP);
+    assert_eq!(String::from_utf8(payload).unwrap(), "OK kind=pong");
+
+    // Session 2: an oversized length prefix is unrecoverable — typed
+    // error frame, then close (the stream position is unknowable).
+    let stream2 = TcpStream::connect(&addr).unwrap();
+    stream2.set_nodelay(true).unwrap();
+    let mut writer2 = stream2.try_clone().unwrap();
+    let mut reader2 = BufReader::new(stream2);
+    writer2.write_all(b"HELLO v3\n").unwrap();
+    writer2.flush().unwrap();
+    let mut hello2 = String::new();
+    reader2.read_line(&mut hello2).unwrap();
+    assert_eq!(hello2, "OK kind=hello proto=v3\n");
+    let mut blank2 = String::new();
+    reader2.read_line(&mut blank2).unwrap();
+    let huge = ((codec::MAX_FRAME_BYTES as u32) + 2).to_le_bytes();
+    writer2.write_all(&huge).unwrap();
+    writer2.flush().unwrap();
+    let (op, payload) = read_frame(&mut reader2);
+    assert_eq!(op, codec::OP_TEXT_RESP);
+    let body = String::from_utf8(payload).unwrap();
+    assert!(body.starts_with("ERR code="), "{body}");
+    let mut rest = Vec::new();
+    reader2.read_to_end(&mut rest).expect("read to EOF");
+    assert!(rest.is_empty(), "server must close after a bad length prefix");
+
+    // The daemon is unharmed: a well-behaved v3 client still works.
+    let mut c = Client::connect_v3(&addr).unwrap();
+    c.ping().unwrap();
+    daemon.shutdown();
+    server.join().unwrap();
+}
+
+#[test]
 fn malformed_requests_do_not_kill_the_connection() {
     let (_daemon, addr, server) = spawn_cron_daemon();
     let mut c = Client::connect(&addr).unwrap();

@@ -2,12 +2,16 @@
 //! in-crate `testkit::prop` harness (proptest is unavailable offline).
 
 use spotcloud::cluster::{AllocRequest, Cluster, PartitionLayout};
-use spotcloud::job::{JobId, JobSpec, JobState, JobType, UserId};
+use spotcloud::coordinator::api::{ErrorCode, ProtocolVersion, Request, SqueueFilter, SubmitSpec};
+use spotcloud::coordinator::codec;
+use spotcloud::coordinator::manifest::{EntryAck, EntryReject, Manifest, ManifestAck, ManifestEntry};
+use spotcloud::coordinator::{ApiError, ResumeTarget};
+use spotcloud::job::{JobId, JobSpec, JobState, JobType, QosClass, UserId};
 use spotcloud::preempt::lifo::{self, Demand, Order, Victim};
 use spotcloud::preempt::{CronAgentConfig, PreemptApproach, PreemptMode};
 use spotcloud::sched::{Scheduler, SchedulerConfig};
 use spotcloud::sim::{SchedCosts, SimTime};
-use spotcloud::testkit::prop::Prop;
+use spotcloud::testkit::prop::{Gen, Prop};
 
 #[test]
 fn prop_cluster_never_oversubscribes() {
@@ -178,6 +182,224 @@ fn prop_scheduler_invariants_under_random_mixed_load() {
             sched.jobs_in_state(JobState::Requeued).is_empty(),
             "requeued jobs must re-enter the queue"
         );
+    });
+}
+
+// ---- v3 binary wire ⇄ typed ⇄ v2 text equivalence --------------------------
+
+const TAG_CHARS: &[char] = &[
+    'a', 'b', 'k', 'z', 'A', 'Z', '0', '5', '9', '.', '_', ':', '/', '-',
+];
+
+fn gen_tag(g: &mut Gen) -> String {
+    (0..g.usize(1, 16)).map(|_| *g.pick(TAG_CHARS)).collect()
+}
+
+fn gen_entry(g: &mut Gen) -> ManifestEntry {
+    let qos = if g.bool(0.5) {
+        QosClass::Normal
+    } else {
+        QosClass::Spot
+    };
+    let job_type = *g.pick(&[JobType::Individual, JobType::Array, JobType::TripleMode]);
+    let tasks = g.u64(1, 1_000_000) as u32;
+    let user = g.u64(0, u32::MAX as u64) as u32;
+    let mut e = ManifestEntry::new(qos, job_type, tasks, user)
+        .with_run_secs(g.f64(0.0, 1.0e7))
+        .with_count(g.u64(1, 10_000) as u32)
+        .with_cores_per_task(g.u64(1, 64) as u32);
+    if g.bool(0.4) {
+        e = e.with_tag(gen_tag(g));
+    }
+    e
+}
+
+#[test]
+fn prop_v3_manifest_codec_matches_v2_text() {
+    Prop::new("v3 binary manifest codec == v2 text, typed").cases(40).run(|g| {
+        let m = Manifest {
+            entries: (0..g.usize(1, 40)).map(|_| gen_entry(g)).collect(),
+        };
+
+        // Binary round trip is exact (run_secs carries raw f64 bits).
+        let payload = codec::render_msubmit_v3(&m);
+        let from_v3 = codec::parse_msubmit_v3(&payload).expect("v3 binary parse");
+        assert_eq!(from_v3, m);
+
+        // The v2 text line parses to the same typed manifest (Display
+        // renders the shortest exactly-round-tripping f64), and the text
+        // grammar is identical across v2 / v2.1 / v3 — a v3 TEXT_REQ
+        // frame carries byte-for-byte v2 text.
+        let line = codec::render_request(&Request::MSubmit(m.clone()), ProtocolVersion::V2);
+        for v in [ProtocolVersion::V2, ProtocolVersion::V21, ProtocolVersion::V3] {
+            assert_eq!(
+                codec::render_request(&Request::MSubmit(m.clone()), v),
+                line,
+                "MSUBMIT text must not vary by dialect"
+            );
+            match codec::parse_request(&line, v).expect("text parse") {
+                Request::MSubmit(from_text) => assert_eq!(from_text, m, "{v:?}"),
+                other => panic!("MSUBMIT parsed as {other:?}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_v3_text_grammar_is_v2_for_every_verb() {
+    Prop::new("v3 renders/parses every verb exactly as v2").cases(80).run(|g| {
+        let req = match g.usize(0, 10) {
+            0 => Request::Ping,
+            1 => Request::Stats,
+            2 => Request::Util,
+            3 => Request::Health,
+            4 => Request::Shutdown,
+            5 => Request::Sjob(g.u64(1, 1 << 40)),
+            6 => Request::Scancel(g.u64(1, 1 << 40)),
+            7 => Request::Wait {
+                jobs: (0..g.usize(1, 5)).map(|_| g.u64(1, 1 << 32)).collect(),
+                timeout_secs: g.f64(0.0, 600.0),
+            },
+            8 => Request::Squeue(SqueueFilter {
+                user: g.bool(0.5).then(|| g.u64(1, 1 << 20) as u32),
+                qos: g.bool(0.5).then(|| {
+                    if g.bool(0.5) {
+                        QosClass::Normal
+                    } else {
+                        QosClass::Spot
+                    }
+                }),
+                state: None,
+                limit: g.bool(0.5).then(|| g.usize(1, 10_000)),
+            }),
+            9 => {
+                if g.bool(0.5) {
+                    Request::Resume(ResumeTarget::Tag(gen_tag(g)))
+                } else {
+                    Request::Resume(ResumeTarget::Manifest(g.u64(1, 1 << 40)))
+                }
+            }
+            _ => Request::Submit(
+                SubmitSpec::new(
+                    if g.bool(0.5) {
+                        QosClass::Normal
+                    } else {
+                        QosClass::Spot
+                    },
+                    *g.pick(&[JobType::Individual, JobType::Array, JobType::TripleMode]),
+                    g.u64(1, 4096) as u32,
+                    g.u64(1, 1 << 20) as u32,
+                )
+                .with_run_secs(g.f64(0.0, 1.0e6))
+                .with_count(g.u64(1, 1000) as u32),
+            ),
+        };
+        let v2_line = codec::render_request(&req, ProtocolVersion::V2);
+        let v3_line = codec::render_request(&req, ProtocolVersion::V3);
+        assert_eq!(v2_line, v3_line, "v3 TEXT_REQ bodies are v2 text, byte-identical");
+        assert_eq!(
+            codec::parse_request(&v3_line, ProtocolVersion::V3).expect("v3 parse"),
+            req,
+            "typed round trip under the v3 dialect"
+        );
+        assert_eq!(
+            codec::parse_request(&v2_line, ProtocolVersion::V2).expect("v2 parse"),
+            req,
+            "typed round trip under the v2 dialect"
+        );
+    });
+}
+
+#[test]
+fn prop_v3_manifest_ack_round_trips_and_rejects_bad_totals() {
+    Prop::new("v3 manifest ack codec round trip").cases(40).run(|g| {
+        let mut next_id = 1u64;
+        let mut jobs = 0u64;
+        let n_acc = g.usize(0, 6);
+        let mut accepted = Vec::with_capacity(n_acc);
+        for i in 0..n_acc {
+            let count = g.u64(1, 1000);
+            let first = next_id;
+            next_id += count + g.u64(0, 5);
+            jobs += count;
+            accepted.push(EntryAck {
+                index: i as u32,
+                first,
+                last: first + count - 1,
+                count,
+            });
+        }
+        let rejected: Vec<EntryReject> = (0..g.usize(0, 4))
+            .map(|i| EntryReject {
+                index: (n_acc + i) as u32,
+                error: ApiError::new(
+                    *g.pick(&[
+                        ErrorCode::BadArg,
+                        ErrorCode::Overloaded,
+                        ErrorCode::Unsupported,
+                        ErrorCode::ReadOnly,
+                    ]),
+                    "entry refused",
+                ),
+            })
+            .collect();
+        let ack = ManifestAck {
+            accepted,
+            rejected,
+            jobs,
+            manifest: g.bool(0.5).then(|| g.u64(1, 1 << 40)),
+        };
+        let payload = codec::render_manifest_ack_v3(&ack);
+        assert_eq!(
+            codec::parse_manifest_ack_v3(&payload).expect("ack parse"),
+            ack
+        );
+
+        // A jobs total its records don't sum to must be refused (the
+        // client iterates those ranges; a lying peer can't inflate them).
+        let mut bad = ack.clone();
+        bad.jobs = bad.jobs.wrapping_add(1);
+        assert!(codec::parse_manifest_ack_v3(&codec::render_manifest_ack_v3(&bad)).is_err());
+    });
+}
+
+#[test]
+fn prop_hostile_v3_payloads_error_without_panicking() {
+    Prop::new("hostile v3 frames yield typed errors").cases(80).run(|g| {
+        // Arbitrary junk: parsers must return, never panic or overread.
+        let junk: Vec<u8> = (0..g.usize(0, 200)).map(|_| g.u64(0, 255) as u8).collect();
+        let _ = codec::parse_msubmit_v3(&junk);
+        let _ = codec::parse_manifest_ack_v3(&junk);
+
+        // Every strict truncation of a valid manifest payload errors: the
+        // parse is a deterministic prefix read, so a cut can only starve it.
+        let m = Manifest {
+            entries: (0..g.usize(1, 8)).map(|_| gen_entry(g)).collect(),
+        };
+        let payload = codec::render_msubmit_v3(&m);
+        let cut = g.usize(0, payload.len() - 1);
+        assert!(
+            codec::parse_msubmit_v3(&payload[..cut]).is_err(),
+            "truncated frame parsed at {cut}/{}",
+            payload.len()
+        );
+
+        // Trailing bytes after the declared records error (desync guard).
+        let mut extended = payload.clone();
+        extended.push(g.u64(0, 255) as u8);
+        assert!(codec::parse_msubmit_v3(&extended).is_err());
+
+        // Length prefixes: zero and oversized refuse, short headers ask
+        // for more bytes, a rendered frame's header measures its body.
+        assert!(codec::decode_frame_header(&0u32.to_le_bytes()).is_err());
+        let oversized = (codec::MAX_FRAME_BYTES as u32 + 1).to_le_bytes();
+        assert!(codec::decode_frame_header(&oversized).is_err());
+        assert!(matches!(codec::decode_frame_header(&[1, 2, 3]), Ok(None)));
+        let frame = codec::v3_frame(codec::OP_MSUBMIT, &payload);
+        match codec::decode_frame_header(&frame) {
+            Ok(Some(len)) => assert_eq!(len, 1 + payload.len()),
+            other => panic!("frame header misread: {other:?}"),
+        }
     });
 }
 
